@@ -1,0 +1,45 @@
+//! Auto-tuner example (paper §8 future work): find the minimal
+//! (l_k, l_v) configuration that keeps ≥90 % of the float recall score,
+//! using monotone bisection instead of the paper's exhaustive testing.
+//!
+//!   cargo run --release --example autotune [artifacts/small]
+
+use std::sync::Arc;
+
+use asymkv::engine::Engine;
+use asymkv::evals;
+use asymkv::quant::QuantPolicy;
+use asymkv::runtime::Runtime;
+use asymkv::search;
+use asymkv::workload::tasks;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::args().nth(1).unwrap_or("artifacts/small".into());
+    let rt = Arc::new(Runtime::load(&dir)?);
+    let engine = Engine::new(rt, 1 << 30)?;
+    let n = engine.manifest().n_layers;
+    let suite = tasks::recall_suite(0x7A, 16, 12);
+
+    let float_score =
+        evals::recall_accuracy(&engine, &QuantPolicy::float32(n), &suite)?;
+    let target = 0.9 * float_score;
+    println!("float score {float_score:.3}; target {target:.3} (90 %)\n");
+
+    let result = search::find_min_config(n, target, 2, 1, |p| {
+        let s = evals::recall_accuracy(&engine, p, &suite).unwrap_or(0.0);
+        println!("  probe {:<14} → {s:.3}", p.to_string());
+        s
+    });
+    match result {
+        Some(r) => {
+            let grid = (n + 1) * (n + 1);
+            println!(
+                "\nminimal config AsymKV-{}/{} (score {:.3}) in {} probes \
+                 (exhaustive grid: {grid})",
+                r.l_k, r.l_v, r.score, r.probes.len()
+            );
+        }
+        None => println!("\ntarget unreachable even at full 2-bit"),
+    }
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Domain example: quality-vs-memory frontier of AsymKV on the recall task.
+//!
+//! Sweeps l_k with 1-bit tails and prints accuracy next to the exact cache
+//! bytes per sequence — the engineering trade-off the paper's Tables 1/3 +
+//! Fig. 4 describe, on one screen.
+//!
+//!   cargo run --release --example recall_eval [artifacts/small]
+
+use std::sync::Arc;
+
+use asymkv::engine::Engine;
+use asymkv::evals;
+use asymkv::quant::QuantPolicy;
+use asymkv::runtime::Runtime;
+use asymkv::workload::tasks;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::args().nth(1).unwrap_or("artifacts/small".into());
+    let rt = Arc::new(Runtime::load(&dir)?);
+    let engine = Engine::new(rt, 1 << 30)?;
+    let n = engine.manifest().n_layers;
+    let suite = tasks::recall_suite(0xEE, 16, 12);
+
+    let cache_bytes = |p: &QuantPolicy| -> anyhow::Result<usize> {
+        let id = engine.create_seq(p)?;
+        let b = engine.with_seq(id, |s| s.capacity_bytes())?;
+        engine.free_seq(id)?;
+        Ok(b)
+    };
+
+    let float_acc = evals::recall_accuracy(&engine, &QuantPolicy::float32(n),
+                                           &suite)?;
+    println!("float accuracy {float_acc:.3}\n");
+    println!("{:<14} {:>9} {:>12} {:>7}", "policy", "accuracy", "cache/seq",
+             "≥90%?");
+    for policy in [
+        QuantPolicy::kivi(n, 2),
+        QuantPolicy::asymkv21(n, n, 0),
+        QuantPolicy::asymkv21(n, n * 3 / 4, 0),
+        QuantPolicy::asymkv21(n, n / 2, 0),
+        QuantPolicy::asymkv21(n, n / 4, 0),
+        QuantPolicy::asymkv21(n, 0, n * 3 / 4),
+        QuantPolicy::kivi(n, 1),
+    ] {
+        let acc = evals::recall_accuracy(&engine, &policy, &suite)?;
+        let kb = cache_bytes(&policy)? as f64 / 1024.0;
+        println!(
+            "{:<14} {:>9.3} {:>9.1} KiB {:>7}",
+            policy.to_string(),
+            acc,
+            kb,
+            if evals::meets_90pct(acc, float_acc) { "yes" } else { "no" }
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Serving demo: boots the full stack (engine → coordinator → TCP server)
+//! in-process, fires a burst of concurrent client requests with mixed
+//! policies, and prints the serving metrics.
+//!
+//!   cargo run --release --example serve_demo [artifacts/small]
+
+use std::sync::Arc;
+
+use asymkv::coordinator::{Coordinator, CoordinatorConfig};
+use asymkv::engine::Engine;
+use asymkv::runtime::Runtime;
+use asymkv::server::{Client, Server};
+use asymkv::util::json::Value;
+use asymkv::util::rng::SplitMix;
+use asymkv::workload::tasks;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::args().nth(1).unwrap_or("artifacts/small".into());
+    let rt = Arc::new(Runtime::load(&dir)?);
+    let engine = Arc::new(Engine::new(rt, 1 << 30)?);
+    let coord = Coordinator::start(engine, CoordinatorConfig::default());
+    let server = Arc::new(Server::bind(coord, "127.0.0.1:0")?);
+    let addr = server.local_addr();
+    let stop = server.stop_flag();
+    {
+        let srv = server.clone();
+        std::thread::spawn(move || srv.serve());
+    }
+    println!("server on {addr}\n");
+
+    // 8 concurrent clients, alternating policies
+    let mut joins = Vec::new();
+    for i in 0..8u64 {
+        let addr = addr.clone();
+        joins.push(std::thread::spawn(move || -> anyhow::Result<String> {
+            let mut client = Client::connect(&addr)?;
+            let ep = tasks::recall_episode(&mut SplitMix::new(100 + i), 12);
+            let policy = if i % 2 == 0 { "asymkv-6/0" } else { "kivi-2" };
+            let reply = client.call(&Value::obj(vec![
+                ("op", Value::str_of("generate")),
+                ("prompt", Value::str_of(String::from_utf8_lossy(&ep.prompt))),
+                ("n_gen", Value::num(6.0)),
+                ("policy", Value::str_of(policy)),
+            ]))?;
+            Ok(format!(
+                "req {i} [{policy:>10}] answer={} got={:<8} ttft={:.0}ms total={:.0}ms",
+                ep.answer,
+                reply.get("text").as_str().unwrap_or("?"),
+                reply.get("ttft_s").as_f64().unwrap_or(0.0) * 1e3,
+                reply.get("total_s").as_f64().unwrap_or(0.0) * 1e3,
+            ))
+        }));
+    }
+    for j in joins {
+        println!("{}", j.join().unwrap()?);
+    }
+
+    let mut client = Client::connect(&addr)?;
+    let stats = client.call(&Value::obj(vec![("op", Value::str_of("stats"))]))?;
+    println!("\nserving metrics: {stats}");
+    let pool = client.call(&Value::obj(vec![("op", Value::str_of("pool"))]))?;
+    println!("cache pool    : {pool}");
+
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    Ok(())
+}

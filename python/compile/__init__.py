@@ -1,0 +1,3 @@
+"""Build-time Python package for AsymKV: L1 Pallas kernels, the L2 JAX model,
+tiny-corpus pretraining, and the AOT lowering pipeline that emits the HLO-text
+artifacts the Rust runtime serves. Never imported at request time."""

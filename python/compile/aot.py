@@ -1,0 +1,330 @@
+"""AOT lowering: JAX step functions → HLO-text artifacts + manifest.
+
+Run once at build time (``make artifacts``):
+
+    cd python && python -m compile.aot --out ../artifacts [--models small,…]
+
+Per model directory it emits:
+  * ``manifest.json``  — model geometry + per-artifact ABI (ordered arg
+    names/shapes/dtypes and output specs) the Rust runtime loads;
+  * ``*.hlo.txt``      — HLO **text** (xla_extension 0.5.1 rejects jax≥0.5
+    serialized protos with 64-bit ids; the text parser reassigns ids);
+  * ``weights.bin``    — pretrained parameters (training cached per model);
+  * ``golden.json``    — cross-language test vectors: quant/pack cases, a
+    full decode-layer execution, corpus/recall-task samples, and a greedy
+    decode trace, all consumed by ``cargo test``.
+
+Artifact inventory per model (B = static batch, C = chunk len, T = max_ctx):
+  embed_b{B}_c{C}, head_b{B}_c{C}                      C ∈ {1, chunk}
+  layer_b{B}_c{C}_k{kb}_v{vb}                          (kb,vb) ∈ grid
+  fold_k_b{B}_bits{n}, fold_v_b{B}_bits{n}             n ∈ quant bits used
+  probe_b1, stage_mse_bits{n}_b1                        analysis taps
+"""
+
+import argparse
+import base64
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as data_mod
+from . import model as M
+from . import train as T
+from .configs import CONFIGS, DEFAULT_GRID, FULL_GRID, ModelConfig, manifest_dict
+from .kernels import quant as Q
+from .kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Per-artifact arg-spec builders (the ABI)
+# ---------------------------------------------------------------------------
+
+def cache_arg_specs(cfg: ModelConfig, b: int, kb: int, vb: int):
+    """The 10 cache/mask args of layer_fwd, in ABI order, with names."""
+    h, t, dh, r = cfg.n_heads, cfg.max_ctx, cfg.d_head, cfg.quant.residual
+    g = cfg.quant.group
+    g2 = min(g, dh)
+    args = []
+    if kb > 0:
+        args += [
+            ("k_packed", spec((b, h, t * kb // 8, dh), jnp.uint8)),
+            ("k_scale", spec((b, h, t // g, dh))),
+            ("k_zero", spec((b, h, t // g, dh))),
+        ]
+    else:
+        args += [
+            ("k_f32", spec((b, h, t, dh))),
+            ("k_scale_dummy", spec((b, h, 1, 1))),
+            ("k_zero_dummy", spec((b, h, 1, 1))),
+        ]
+    if vb > 0:
+        args += [
+            ("v_packed", spec((b, h, t, dh * vb // 8), jnp.uint8)),
+            ("v_scale", spec((b, h, t, dh // g2))),
+            ("v_zero", spec((b, h, t, dh // g2))),
+        ]
+    else:
+        args += [
+            ("v_f32", spec((b, h, t, dh))),
+            ("v_scale_dummy", spec((b, h, 1, 1))),
+            ("v_zero_dummy", spec((b, h, 1, 1))),
+        ]
+    args += [
+        ("k_res", spec((b, h, r, dh))),
+        ("v_res", spec((b, h, r, dh))),
+        ("mask_q", spec((b, t))),
+        ("mask_r", spec((b, r))),
+    ]
+    return args
+
+
+def layer_arg_specs(cfg: ModelConfig, b: int, c: int, kb: int, vb: int):
+    shapes = M.layer_param_shapes(cfg)
+    args = [(n, spec(shapes[n])) for n in M.LAYER_PARAM_NAMES]
+    args += [("x", spec((b, c, cfg.d_model))), ("pos", spec((b,), jnp.int32))]
+    args += cache_arg_specs(cfg, b, kb, vb)
+    return args
+
+
+def build_artifacts(cfg: ModelConfig, grid):
+    """Yields (name, fn, [(argname, ShapeDtypeStruct)], [outname])."""
+    d, v = cfg.d_model, cfg.vocab
+    h, t, dh, r = cfg.n_heads, cfg.max_ctx, cfg.d_head, cfg.quant.residual
+    g = cfg.quant.group
+    bits_used = sorted({x for kv in grid for x in kv if x > 0})
+
+    for b in cfg.batch_sizes:
+        for c in (1, cfg.chunk):
+            yield (
+                f"embed_b{b}_c{c}",
+                lambda embed, tokens: (M.embed_fwd(embed, tokens),),
+                [("embed", spec((v, d))), ("tokens", spec((b, c), jnp.int32))],
+                ["x"],
+            )
+            yield (
+                f"head_b{b}_c{c}",
+                lambda rms_f, wout, x: (M.head_fwd(rms_f, wout, x, cfg.norm_eps),),
+                [("rms_f", spec((d,))), ("wout", spec((d, v))),
+                 ("x", spec((b, c, d)))],
+                ["logits"],
+            )
+            for kb, vb in grid:
+                fn = functools.partial(M.layer_fwd, cfg=cfg, k_bits=kb, v_bits=vb)
+                yield (
+                    f"layer_b{b}_c{c}_k{kb}_v{vb}",
+                    fn,
+                    layer_arg_specs(cfg, b, c, kb, vb),
+                    ["x_out", "k_chunk", "v_chunk"],
+                )
+        for bits in bits_used:
+            yield (
+                f"fold_k_b{b}_bits{bits}",
+                functools.partial(Q.fold_k, bits=bits),
+                [("k_group", spec((b, h, g, dh)))],
+                ["packed", "scale", "zero"],
+            )
+            yield (
+                f"fold_v_b{b}_bits{bits}",
+                functools.partial(Q.fold_v, bits=bits, group=g),
+                [("v_group", spec((b, h, g, dh)))],
+                ["packed", "scale", "zero"],
+            )
+
+    # analysis taps (B=1)
+    yield (
+        "probe_b1",
+        functools.partial(M.probe_fwd, cfg=cfg),
+        [(n, spec(M.layer_param_shapes(cfg)[n])) for n in M.LAYER_PARAM_NAMES]
+        + [("x", spec((1, 1, d))), ("pos", spec((1,), jnp.int32)),
+           ("k_f32", spec((1, h, t, dh))), ("v_f32", spec((1, h, t, dh))),
+           ("mask", spec((1, t)))],
+        ["x_out", "k", "v", "xq"],
+    )
+    for bits in sorted({x for kv in grid for x in kv if x > 0}):
+        yield (
+            f"stage_mse_bits{bits}_b1",
+            functools.partial(M.stage_mse, bits=bits, group=g),
+            [("xq", spec((1, h, dh))), ("k_f32", spec((1, h, t, dh))),
+             ("v_f32", spec((1, h, t, dh))), ("mask", spec((1, t)))],
+        ["mse_k", "mse_v", "err_k", "err_v"],
+        )
+
+
+def lower_artifact(fn, arg_specs):
+    # keep_unused: the float-path variants carry dummy scale/zero args so
+    # every (kb, vb) variant shares one ABI — jit must not prune them.
+    lowered = jax.jit(fn, keep_unused=True).lower(*[s for _, s in arg_specs])
+    return to_hlo_text(lowered), lowered
+
+
+# ---------------------------------------------------------------------------
+# Golden cross-language test vectors
+# ---------------------------------------------------------------------------
+
+def _flat(a):
+    return [float(x) for x in np.asarray(a, np.float32).ravel()]
+
+
+def _flat_u8(a):
+    return base64.b64encode(np.asarray(a, np.uint8).tobytes()).decode()
+
+
+def make_golden(cfg: ModelConfig, params) -> dict:
+    rng = np.random.default_rng(42)
+    g, dh, h = cfg.quant.group, cfg.d_head, cfg.n_heads
+    golden = {"model": cfg.name}
+
+    # 1. quantize/pack vectors (rust/src/quant must match bit-exactly)
+    kgrp = rng.normal(size=(1, 2, g, dh)).astype(np.float32)
+    for bits in (1, 2, 4):
+        pk, s, z = ref.fold_k_ref(jnp.asarray(kgrp), bits)
+        pv, sv, zv = ref.fold_v_ref(jnp.asarray(kgrp), bits, g)
+        golden[f"fold_k_bits{bits}"] = {
+            "input": _flat(kgrp), "shape": list(kgrp.shape),
+            "packed": _flat_u8(pk), "scale": _flat(s), "zero": _flat(z),
+        }
+        golden[f"fold_v_bits{bits}"] = {
+            "input": _flat(kgrp), "shape": list(kgrp.shape),
+            "packed": _flat_u8(pv), "scale": _flat(sv), "zero": _flat(zv),
+        }
+
+    # 2. corpus / task samples (rust/src/workload must match byte-exactly)
+    smx = data_mod.SplitMix(7)
+    golden["splitmix_seed7_first8"] = [smx.next_u64() % 2**32
+                                       for _ in range(8)]
+    doc = data_mod.gen_document(data_mod.SplitMix(123), 256)
+    golden["document_seed123_len256"] = base64.b64encode(doc).decode()
+    prompt, ans = data_mod.make_recall_task(data_mod.SplitMix(99), 5)
+    golden["recall_seed99"] = {
+        "prompt": base64.b64encode(prompt).decode(), "answer": ans}
+    prompt, ans = data_mod.make_recall_task(
+        data_mod.SplitMix(77), 0, filler_sentences=30, needle_at=0.5)
+    golden["needle_seed77"] = {
+        "prompt": base64.b64encode(prompt).decode(), "answer": ans}
+
+    # 3. greedy decode trace with the real weights (float path): the rust
+    # engine must reproduce these logits step by step.
+    prompt_txt = b"## QRX:5821 ## QRX:"
+    toks = np.frombuffer(prompt_txt, np.uint8).astype(np.int32)
+    n_gen = 12
+    seq = list(toks)
+    logits_trace = []
+    for _ in range(n_gen):
+        arr = jnp.asarray(np.array(seq, np.int32)[None, :])
+        logits = M.forward_train(params, arr, cfg)[0, -1]
+        logits_trace.append(_flat(logits))
+        seq.append(int(np.argmax(np.asarray(logits))))
+    golden["decode_trace"] = {
+        "prompt": base64.b64encode(prompt_txt).decode(),
+        "generated": seq[len(toks):],
+        "logits": logits_trace,
+    }
+    return golden
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+def weights_for(cfg: ModelConfig, out_root: str, train_steps: dict):
+    """Load cached weights or train. `small`/`small-long` share weights."""
+    base = "small" if cfg.name.startswith("small") else cfg.name
+    path = os.path.join(out_root, f"weights_{base}.bin")
+    if os.path.exists(path):
+        return T.load_weights(path)
+    steps = train_steps.get(base, 60)
+    base_cfg = CONFIGS[base]
+    print(f"[aot] training {base} for {steps} steps…", flush=True)
+    params, hist = T.train(base_cfg, steps=steps,
+                           batch=8 if base == "small" else 8)
+    ppl = T.evaluate_ppl(params, base_cfg)
+    print(f"[aot] {base}: final loss {hist[-1]:.4f}, held-out ppl {ppl:.2f}")
+    save_loss_curve(out_root, base, hist, ppl)
+    T.save_weights(path, params)
+    return params
+
+
+def save_loss_curve(out_root, name, hist, ppl):
+    os.makedirs(out_root, exist_ok=True)
+    with open(os.path.join(out_root, f"train_log_{name}.json"), "w") as f:
+        json.dump({"loss": hist, "held_out_ppl": ppl}, f)
+
+
+def emit_model(cfg: ModelConfig, out_root: str, grid, params):
+    out_dir = os.path.join(out_root, cfg.name)
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = manifest_dict(cfg, grid)
+    manifest["artifacts"] = {}
+
+    for name, fn, arg_specs, out_names in build_artifacts(cfg, grid):
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        t0 = time.time()
+        text, lowered = lower_artifact(fn, arg_specs)
+        with open(path, "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *[s for _, s in arg_specs])
+        if not isinstance(outs, (tuple, list)):
+            outs = (outs,)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "args": [
+                {"name": n, "shape": list(s.shape), "dtype": str(s.dtype)}
+                for n, s in arg_specs
+            ],
+            "outs": [
+                {"name": on, "shape": list(o.shape), "dtype": str(o.dtype)}
+                for on, o in zip(out_names, outs)
+            ],
+        }
+        print(f"[aot] {cfg.name}/{name}: {len(text)//1024} KiB "
+              f"({time.time()-t0:.1f}s)", flush=True)
+
+    # weights + golden
+    T.save_weights(os.path.join(out_dir, "weights.bin"), params)
+    with open(os.path.join(out_dir, "golden.json"), "w") as f:
+        json.dump(make_golden(cfg, params), f)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {out_dir}/manifest.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="tiny,small,small-long")
+    ap.add_argument("--small-grid", action="store_true",
+                    help="skip the 4-bit variants (faster lowering)")
+    ap.add_argument("--train-steps-small", type=int, default=400)
+    ap.add_argument("--train-steps-tiny", type=int, default=50)
+    args = ap.parse_args()
+
+    grid = DEFAULT_GRID if args.small_grid else FULL_GRID
+    train_steps = {"small": args.train_steps_small,
+                   "tiny": args.train_steps_tiny}
+    for name in args.models.split(","):
+        cfg = CONFIGS[name]
+        params = weights_for(cfg, args.out, train_steps)
+        emit_model(cfg, args.out, grid, params)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,131 @@
+"""Model / quantization configurations shared across the build pipeline.
+
+Everything the AOT artifacts bake in statically lives here: model sizes,
+context lengths, quantization group geometry, batch-size variants. The Rust
+side reads the same values from ``artifacts/<name>/manifest.json`` — this
+module is the single source of truth at build time.
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass(frozen=True)
+class QuantConfig:
+    """Geometry of the KIVI-style quantization scheme (paper §5.1 / §A.1).
+
+    ``group``: group size G — per-channel groups of G *tokens* for K,
+    per-token groups of G *channels* for V (KIVI layout, G=32).
+    ``residual``: R — the most recent R tokens stay in fp32; a full group of
+    G tokens is folded into the packed cache when the window fills.
+    """
+
+    group: int = 32
+    residual: int = 64
+
+    def __post_init__(self):
+        assert self.residual % self.group == 0, "residual must be a multiple of group"
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Llama-style decoder geometry.
+
+    The paper evaluates Llama-2-7b/13b; the sandbox substitution (DESIGN.md
+    §1) is a structurally identical decoder — RMSNorm, RoPE, MHA, SwiGLU —
+    small enough to pretrain on CPU at build time.
+    """
+
+    name: str = "small"
+    vocab: int = 256  # byte-level
+    n_layers: int = 8
+    d_model: int = 128
+    n_heads: int = 4
+    d_head: int = 32
+    d_ff: int = 344
+    max_ctx: int = 256  # T: static KV length in the artifacts
+    train_ctx: int = 512
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    quant: QuantConfig = field(default_factory=QuantConfig)
+    # static batch sizes to lower artifacts for
+    batch_sizes: tuple = (1, 4)
+    # prefill chunk length (C); decode uses C=1
+    chunk: int = 64
+
+    @property
+    def d_qkv(self) -> int:
+        return self.n_heads * self.d_head
+
+    def __post_init__(self):
+        assert self.d_qkv == self.d_model, "MHA with d_model = H * Dh assumed"
+        assert self.max_ctx % self.quant.group == 0
+        assert self.d_head % min(self.quant.group, self.d_head) == 0
+
+
+# Bit-width grid for the layer-step artifact variants. 0 = float (no
+# quantization); 1/2 are AsymKV's low/high settings; 4 validates the
+# "e.g. a 4-bit strategy" generality claim from the paper's §1.
+BIT_VARIANTS = (0, 1, 2, 4)
+
+# Default grid actually lowered (3x3 + the 4-bit row/col used by ablations).
+DEFAULT_GRID = [(kb, vb) for kb in (0, 1, 2) for vb in (0, 1, 2)]
+FULL_GRID = [(kb, vb) for kb in BIT_VARIANTS for vb in BIT_VARIANTS]
+
+
+TINY = ModelConfig(
+    name="tiny",
+    n_layers=2,
+    d_model=64,
+    n_heads=2,
+    d_head=32,
+    d_ff=172,
+    max_ctx=128,
+    train_ctx=128,
+    batch_sizes=(1, 2),
+    chunk=32,
+    quant=QuantConfig(group=32, residual=64),
+)
+
+# `small` is sized for the single-CPU training budget: induction heads (the
+# circuit behind the recall evals) need ≥1e7 training tokens to form, which
+# at ~120 GFLOP/s bounds the parameter count — d=64 × 8 layers (~0.45 M
+# params) trains through the phase transition in ~25 min. Eight layers are
+# kept deliberately: the AsymKV sweeps are over the LAYER axis.
+SMALL = ModelConfig(
+    name="small",
+    n_layers=8,
+    d_model=64,
+    n_heads=2,
+    d_head=32,
+    d_ff=172,
+    max_ctx=256,
+    train_ctx=256,
+    batch_sizes=(1, 4),
+    chunk=64,
+)
+
+# Long-context variant: same weights as `small`, larger static cache.
+# (Trained at 256; a short length-extension pass at 512 runs at the end of
+# training so RoPE behaves at the long-eval range.)
+SMALL_LONG = ModelConfig(
+    name="small-long",
+    n_layers=8,
+    d_model=64,
+    n_heads=2,
+    d_head=32,
+    d_ff=172,
+    max_ctx=512,
+    train_ctx=256,
+    batch_sizes=(1, 4),
+    chunk=64,
+)
+
+CONFIGS = {c.name: c for c in (TINY, SMALL, SMALL_LONG)}
+
+
+def manifest_dict(cfg: ModelConfig, grid) -> dict:
+    """The JSON manifest the Rust runtime loads artifacts from."""
+    d = asdict(cfg)
+    d["grid"] = [list(g) for g in grid]
+    d["format_version"] = 1
+    return d

@@ -1,0 +1,188 @@
+"""Synthetic corpus + evaluation tasks (DESIGN.md §1 substitutions).
+
+Byte-level (vocab 256). The training distribution mixes three structured
+document types so that the pretrained model acquires both a language-model
+component (for perplexity evals) and attention-addressing skills (for the
+recall/needle evals that stand in for CoQA/LongBench):
+
+  * ``patterned text`` — sentences from a seeded template grammar;
+  * ``recall blocks``  — "k=XYZ v=1234" pair lists followed by queries,
+    training retrieval *through attention* (quantized K corrupts where the
+    model looks; quantized V corrupts what it copies — the paper's §3
+    mechanism made directly measurable);
+  * ``copy runs``      — "copy: <seq> | <seq>" induction material.
+
+The Rust workload generator (rust/src/workload) re-implements the *eval*
+side of this format byte-for-byte (same grammar constants, same PRNG
+algorithm) so benches run without Python; `aot.py` emits golden samples so
+cargo tests can assert the two implementations agree.
+"""
+
+import numpy as np
+
+WORDS = [
+    "the", "ox", "crow", "lark", "vole", "fox", "hart", "wren", "asp",
+    "moss", "fern", "reed", "sage", "thorn", "briar", "ash", "elm", "oak",
+    "runs", "sings", "hides", "leaps", "rests", "hunts", "calls", "waits",
+    "red", "dun", "grey", "pale", "dark", "swift", "still", "old", "young",
+    "by", "near", "under", "over", "past", "at", "in",
+    "dawn", "dusk", "noon", "night", "rain", "frost", "mist", "wind",
+]
+
+KEY_ALPHA = "ABCDEFGHIJKLMNOPQRSTUVWXYZ"
+VAL_ALPHA = "0123456789"
+KEY_LEN = 3
+VAL_LEN = 4
+
+
+# A tiny deterministic PRNG that is trivial to mirror in Rust: SplitMix64.
+class SplitMix:
+    def __init__(self, seed: int):
+        self.state = seed & 0xFFFFFFFFFFFFFFFF
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & 0xFFFFFFFFFFFFFFFF
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & 0xFFFFFFFFFFFFFFFF
+        return z ^ (z >> 31)
+
+    def below(self, n: int) -> int:
+        return self.next_u64() % n
+
+    def choice(self, seq):
+        return seq[self.below(len(seq))]
+
+
+def gen_sentence(rng: SplitMix) -> str:
+    n = 3 + rng.below(5)
+    return " ".join(rng.choice(WORDS) for _ in range(n)) + ". "
+
+
+def gen_kv_pair(rng: SplitMix):
+    key = "".join(rng.choice(KEY_ALPHA) for _ in range(KEY_LEN))
+    val = "".join(rng.choice(VAL_ALPHA) for _ in range(VAL_LEN))
+    return key, val
+
+
+def gen_recall_block(rng: SplitMix, n_pairs: int) -> str:
+    """Pair list + one query over a random pair. The model must copy the
+    queried value — pure attention addressing.
+
+    Format "KEY:VALUE … ## KEY:" puts the answer IMMEDIATELY after the
+    re-matched key, so retrieval is solvable by a plain induction circuit
+    (match the 3-char key + ':' and copy what followed) — learnable within
+    the 1-CPU token budget, unlike indirection formats (see DESIGN.md §1).
+    """
+    pairs = [gen_kv_pair(rng) for _ in range(n_pairs)]
+    body = " ".join(f"{k}:{v}" for k, v in pairs)
+    qk, qv = pairs[rng.below(n_pairs)]
+    return f"## {body} ## {qk}:{qv} . "
+
+
+def gen_copy_run(rng: SplitMix) -> str:
+    n = 4 + rng.below(8)
+    seq = "".join(rng.choice(KEY_ALPHA + VAL_ALPHA) for _ in range(n))
+    return f"copy: {seq} | {seq} . "
+
+
+def gen_document(rng: SplitMix, length: int) -> bytes:
+    """One training document of exactly ``length`` bytes.
+
+    Mix: 30 % sentences / 50 % recall blocks / 20 % copy runs — recall-heavy
+    so the attention-addressing skill the evals depend on emerges within the
+    small CPU training budget. MUST stay in sync with
+    rust/src/workload/mod.rs::gen_document (same PRNG draws, same branches).
+    """
+    parts = []
+    total = 0
+    while total < length + 64:
+        r = rng.below(10)
+        if r < 3:
+            s = gen_sentence(rng)
+        elif r < 8:
+            s = gen_recall_block(rng, 1 + rng.below(5))
+        else:
+            s = gen_copy_run(rng)
+        parts.append(s)
+        total += len(s)
+    return "".join(parts).encode("ascii")[:length]
+
+
+def gen_repeat_run(rng: SplitMix) -> str:
+    """Repeated-segment text — the strongest induction-head former; used in
+    the TRAINING distribution only (eval generators stay mirrored in Rust)."""
+    n = 5 + rng.below(14)
+    seg = "".join(rng.choice(KEY_ALPHA + VAL_ALPHA) for _ in range(n))
+    reps = 2 + rng.below(4)
+    return (" ".join([seg] * reps)) + " . "
+
+
+def gen_training_document(rng: SplitMix, length: int) -> bytes:
+    """Training-only curriculum: repetition-heavy so induction (the circuit
+    behind the recall/needle evals) emerges within the CPU token budget.
+
+    Mix: 35 % repeated segments, 35 % recall blocks, 20 % copy, 10 % prose.
+    This is a superset of the (Rust-mirrored) eval distribution
+    :func:`gen_document`; perplexity evals keep using the latter.
+    """
+    parts = []
+    total = 0
+    while total < length + 64:
+        r = rng.below(20)
+        if r < 7:
+            s = gen_repeat_run(rng)
+        elif r < 14:
+            s = gen_recall_block(rng, 1 + rng.below(4))
+        elif r < 18:
+            s = gen_copy_run(rng)
+        else:
+            s = gen_sentence(rng)
+        parts.append(s)
+        total += len(s)
+    return "".join(parts).encode("ascii")[:length]
+
+
+def training_batch(seed: int, batch: int, ctx: int) -> np.ndarray:
+    """[batch, ctx] int32 token ids; seeded, stateless per (seed, batch, ctx)."""
+    out = np.empty((batch, ctx), np.int32)
+    for i in range(batch):
+        rng = SplitMix((seed << 20) ^ (i * 0x5851F42D4C957F2D))
+        doc = gen_training_document(rng, ctx)
+        out[i] = np.frombuffer(doc, np.uint8).astype(np.int32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Evaluation tasks
+# ---------------------------------------------------------------------------
+
+def make_recall_task(rng: SplitMix, n_pairs: int, filler_sentences: int = 0,
+                     needle_at: float = -1.0):
+    """Build one recall episode.
+
+    Returns (prompt_bytes, answer_str). ``needle_at`` in [0, 1] places a
+    single pair at a relative depth inside filler text (the long-context
+    needle task); -1 interleaves pairs normally (normal-context recall).
+    """
+    if needle_at >= 0.0:
+        filler = [gen_sentence(rng) for _ in range(filler_sentences)]
+        k, v = gen_kv_pair(rng)
+        idx = min(int(needle_at * len(filler)), max(len(filler) - 1, 0))
+        filler.insert(idx, f"{k}:{v} ")
+        prompt = "## " + "".join(filler) + f"## {k}:"
+        return prompt.encode("ascii"), v
+    pairs = [gen_kv_pair(rng) for _ in range(n_pairs)]
+    body = " ".join(f"{k}:{v}" for k, v in pairs)
+    qk, qv = pairs[rng.below(n_pairs)]
+    prompt = f"## {body} ## {qk}:"
+    return prompt.encode("ascii"), qv
+
+
+def eval_docs(seed: int, n: int, ctx: int) -> np.ndarray:
+    """Held-out documents for perplexity (disjoint seed space from training)."""
+    out = np.empty((n, ctx), np.int32)
+    for i in range(n):
+        rng = SplitMix(0xE7A1 ^ (seed << 24) ^ (i * 0x9E3779B97F4A7C15))
+        out[i] = np.frombuffer(gen_document(rng, ctx), np.uint8).astype(np.int32)
+    return out

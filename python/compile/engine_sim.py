@@ -1,0 +1,236 @@
+"""Pure-Python simulation of the Rust generation engine.
+
+This mirrors, step for step, the protocol rust/src/engine implements over
+the AOT artifacts — same chunked prefill, same residual-window fold policy,
+same masks — but calls the jitted step functions eagerly. It serves two
+purposes:
+
+  1. protocol oracle: pytest proves that running the model through the
+     cache/fold state machine (float path) is numerically equivalent to the
+     plain full-attention forward, and that the quantized paths degrade
+     monotonically with fewer bits;
+  2. experiment prototyping: the quality sweeps (Tables 1-4) can be
+     cross-checked in Python against the Rust benches.
+
+Fold policy (shared ABI with rust/src/kvcache):
+  * residual window holds at most R tokens; before appending C new tokens,
+    fold the OLDEST G tokens into the packed cache while n_res + C > R;
+  * K folds per-channel (one scale/zero per channel per group of G tokens),
+    V folds per-token; packed groups are appended at slot n_q (multiples
+    of G tokens);
+  * attention order is [quantized | residual | current], which is sound
+    because softmax attention is permutation-invariant given RoPE'd keys.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .configs import ModelConfig
+from .kernels import ref
+
+NEG = -1e9
+
+
+class AsymKvPolicy:
+    """Per-layer bit assignment: first l_k layers keep K at `high` bits,
+    the rest at `low`; independently l_v for V. 0 = fp32 (no quantization)."""
+
+    def __init__(self, n_layers, l_k, l_v, high=2, low=1):
+        self.k_bits = [high if i < l_k else low for i in range(n_layers)]
+        self.v_bits = [high if i < l_v else low for i in range(n_layers)]
+
+    @classmethod
+    def float_(cls, n_layers):
+        p = cls(n_layers, 0, 0)
+        p.k_bits = [0] * n_layers
+        p.v_bits = [0] * n_layers
+        return p
+
+    @classmethod
+    def kivi(cls, n_layers, bits=2):
+        return cls(n_layers, n_layers, n_layers, high=bits, low=bits)
+
+
+class LayerCacheSim:
+    """One layer's cache for one batch of sequences (lists of numpy)."""
+
+    def __init__(self, cfg: ModelConfig, batch: int, k_bits: int, v_bits: int):
+        self.cfg, self.b = cfg, batch
+        self.k_bits, self.v_bits = k_bits, v_bits
+        h, t, dh = cfg.n_heads, cfg.max_ctx, cfg.d_head
+        g = cfg.quant.group
+        g2 = min(g, dh)
+        self.n_q = 0  # quantized tokens (multiple of G)
+        if k_bits > 0:
+            self.k_pk = np.zeros((batch, h, t * k_bits // 8, dh), np.uint8)
+            self.k_sc = np.zeros((batch, h, t // g, dh), np.float32)
+            self.k_zp = np.zeros((batch, h, t // g, dh), np.float32)
+        else:
+            self.k_f32 = np.zeros((batch, h, t, dh), np.float32)
+        if v_bits > 0:
+            self.v_pk = np.zeros((batch, h, t, dh * v_bits // 8), np.uint8)
+            self.v_sc = np.zeros((batch, h, t, dh // g2), np.float32)
+            self.v_zp = np.zeros((batch, h, t, dh // g2), np.float32)
+        else:
+            self.v_f32 = np.zeros((batch, h, t, dh), np.float32)
+        # residual window: [B, H, n_res, Dh] grown by appends
+        self.k_res = np.zeros((batch, h, 0, dh), np.float32)
+        self.v_res = np.zeros((batch, h, 0, dh), np.float32)
+
+    @property
+    def n_res(self):
+        return self.k_res.shape[2]
+
+    def fold_oldest_group(self):
+        """Quantize the oldest G residual tokens into the packed cache."""
+        cfg = self.cfg
+        g = cfg.quant.group
+        kg = jnp.asarray(self.k_res[:, :, :g])
+        vg = jnp.asarray(self.v_res[:, :, :g])
+        gi = self.n_q // g  # group index
+        if self.k_bits > 0:
+            pk, s, z = ref.fold_k_ref(kg, self.k_bits)
+            bpg = g * self.k_bits // 8
+            self.k_pk[:, :, gi * bpg : (gi + 1) * bpg] = np.asarray(pk)
+            self.k_sc[:, :, gi : gi + 1] = np.asarray(s)
+            self.k_zp[:, :, gi : gi + 1] = np.asarray(z)
+        else:
+            self.k_f32[:, :, self.n_q : self.n_q + g] = np.asarray(kg)
+        if self.v_bits > 0:
+            pv, sv, zv = ref.fold_v_ref(vg, self.v_bits, g)
+            self.v_pk[:, :, self.n_q : self.n_q + g] = np.asarray(pv)
+            self.v_sc[:, :, self.n_q : self.n_q + g] = np.asarray(sv)
+            self.v_zp[:, :, self.n_q : self.n_q + g] = np.asarray(zv)
+        else:
+            self.v_f32[:, :, self.n_q : self.n_q + g] = np.asarray(vg)
+        self.k_res = self.k_res[:, :, g:]
+        self.v_res = self.v_res[:, :, g:]
+        self.n_q += g
+
+    def append(self, k_chunk, v_chunk):
+        """Append [B, H, C, Dh] new tokens, folding to respect capacity R."""
+        c = k_chunk.shape[2]
+        r = self.cfg.quant.residual
+        while self.n_res + c > r:
+            self.fold_oldest_group()
+        self.k_res = np.concatenate([self.k_res, np.asarray(k_chunk)], axis=2)
+        self.v_res = np.concatenate([self.v_res, np.asarray(v_chunk)], axis=2)
+
+    def args(self):
+        """Cache args in layer_fwd ABI order (padded residual + masks)."""
+        cfg = self.cfg
+        b, h, dh = self.b, cfg.n_heads, cfg.d_head
+        t, r = cfg.max_ctx, cfg.quant.residual
+        kres = np.zeros((b, h, r, dh), np.float32)
+        vres = np.zeros((b, h, r, dh), np.float32)
+        kres[:, :, : self.n_res] = self.k_res
+        vres[:, :, : self.n_res] = self.v_res
+        mask_q = np.where(np.arange(t)[None, :] < self.n_q, 0.0, NEG)
+        mask_q = np.broadcast_to(mask_q, (b, t)).astype(np.float32)
+        mask_r = np.where(np.arange(r)[None, :] < self.n_res, 0.0, NEG)
+        mask_r = np.broadcast_to(mask_r, (b, r)).astype(np.float32)
+        dummy = np.zeros((b, h, 1, 1), np.float32)
+        if self.k_bits > 0:
+            kargs = [self.k_pk, self.k_sc, self.k_zp]
+        else:
+            kargs = [self.k_f32, dummy, dummy]
+        if self.v_bits > 0:
+            vargs = [self.v_pk, self.v_sc, self.v_zp]
+        else:
+            vargs = [self.v_f32, dummy, dummy]
+        return [jnp.asarray(a) for a in
+                kargs + vargs + [kres, vres, mask_q, mask_r]]
+
+
+class EngineSim:
+    """Batched generation over the layer-step protocol (greedy sampling)."""
+
+    def __init__(self, cfg: ModelConfig, params, policy: AsymKvPolicy,
+                 batch: int = 1):
+        self.cfg, self.params, self.policy, self.b = cfg, params, policy, batch
+        self.caches = [
+            LayerCacheSim(cfg, batch, policy.k_bits[i], policy.v_bits[i])
+            for i in range(cfg.n_layers)
+        ]
+        self.pos = 0
+        self._fns = {}
+
+    def _layer_fn(self, kb, vb, c):
+        key = (kb, vb, c)
+        if key not in self._fns:
+            self._fns[key] = jax.jit(functools.partial(
+                M.layer_fwd, cfg=self.cfg, k_bits=kb, v_bits=vb))
+        return self._fns[key]
+
+    def _forward_chunk(self, tokens):
+        """tokens [B, C] → logits [B, C, V]; appends the chunk to caches."""
+        p, cfg = self.params, self.cfg
+        c = tokens.shape[1]
+        x = M.embed_fwd(p["embed"], jnp.asarray(tokens))
+        pos = jnp.full((self.b,), self.pos, jnp.int32)
+        for i, cache in enumerate(self.caches):
+            # fold-before-append must happen BEFORE building args
+            r = cfg.quant.residual
+            while cache.n_res + c > r:
+                cache.fold_oldest_group()
+            fn = self._layer_fn(cache.k_bits, cache.v_bits, c)
+            x, k, v = fn(*M.layer_params(p, i), x, pos, *cache.args())
+            cache.k_res = np.concatenate([cache.k_res, np.asarray(k)], 2)
+            cache.v_res = np.concatenate([cache.v_res, np.asarray(v)], 2)
+        self.pos += c
+        return M.head_fwd(p["rms_f"], p["wout"], x, cfg.norm_eps)
+
+    def prefill(self, tokens):
+        """tokens [B, T0] — runs in chunks; returns last-position logits."""
+        t0 = tokens.shape[1]
+        c = self.cfg.chunk
+        logits = None
+        for s in range(0, t0, c):
+            chunk = tokens[:, s : s + c]
+            if chunk.shape[1] < c:  # pad the tail chunk
+                pad = np.zeros((self.b, c - chunk.shape[1]), np.int32)
+                full = np.concatenate([chunk, pad], axis=1)
+                logits = self._forward_chunk_partial(full, chunk.shape[1])
+            else:
+                logits = np.asarray(self._forward_chunk(chunk))[:, -1]
+        return logits
+
+    def _forward_chunk_partial(self, tokens, n_valid):
+        """Pad-tail chunk: only the first n_valid tokens enter the cache."""
+        p, cfg = self.params, self.cfg
+        c = tokens.shape[1]
+        x = M.embed_fwd(p["embed"], jnp.asarray(tokens))
+        pos = jnp.full((self.b,), self.pos, jnp.int32)
+        for i, cache in enumerate(self.caches):
+            r = cfg.quant.residual
+            while cache.n_res + n_valid > r:
+                cache.fold_oldest_group()
+            fn = self._layer_fn(cache.k_bits, cache.v_bits, c)
+            x, k, v = fn(*M.layer_params(p, i), x, pos, *cache.args())
+            cache.k_res = np.concatenate(
+                [cache.k_res, np.asarray(k)[:, :, :n_valid]], 2)
+            cache.v_res = np.concatenate(
+                [cache.v_res, np.asarray(v)[:, :, :n_valid]], 2)
+        self.pos += n_valid
+        logits = M.head_fwd(p["rms_f"], p["wout"], x, cfg.norm_eps)
+        return np.asarray(logits)[:, n_valid - 1]
+
+    def decode_step(self, tokens):
+        """tokens [B] → next-token logits [B, V]."""
+        logits = self._forward_chunk(np.asarray(tokens, np.int32)[:, None])
+        return np.asarray(logits)[:, 0]
+
+    def generate(self, prompt_tokens, n_gen: int):
+        """Greedy generation. prompt [B, T0] → generated ids [B, n_gen]."""
+        logits = self.prefill(np.asarray(prompt_tokens, np.int32))
+        out = np.zeros((self.b, n_gen), np.int32)
+        cur = logits.argmax(-1).astype(np.int32)
+        for j in range(n_gen):
+            out[:, j] = cur
+            logits = self.decode_step(cur)
+            cur = logits.argmax(-1).astype(np.int32)
+        return out

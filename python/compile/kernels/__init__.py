@@ -1,0 +1,4 @@
+"""L1 kernels: Pallas quantize/pack + fused dequant attention, with a pure-jnp
+oracle in :mod:`ref` used by the build-time test suite."""
+
+from . import attention, quant, ref  # noqa: F401

@@ -1,0 +1,275 @@
+"""Pallas kernel: fused unpack→dequant→attention over the quantized KV cache.
+
+This is the paper's compute hot-spot (KIVI-style fused kernel, re-thought for
+the TPU memory hierarchy — DESIGN.md §2): during decode, the query of the
+current token attends over
+
+    [ packed quantized tokens | fp32 residual window | current token ]
+
+in one kernel, so the packed cache is never materialized as fp32 in HBM:
+
+  * grid = (batch, head); each program owns one head's tiles in VMEM:
+    packed K [T·b/8, Dh] u8, its scale/zero [T/G, Dh], packed V
+    [T, Dh·b/8] u8 + [T, Dh/G] scales, fp residual [R, Dh] ×2.
+    For T=512, b=2, Dh=32 that is ~21 KiB of u8 + 12 KiB fp32 per program —
+    comfortably inside a TPU core's VMEM budget.
+  * unpack is a VPU shift/mask over u8 sub-lanes (the CUDA per-thread idiom,
+    vectorized); dequant fuses the group scale/zero multiply ahead of the
+    contraction, which feeds the MXU (``jnp.dot``).
+  * the three-segment masked softmax is computed in-register; the current
+    token's (k, v) arrive as fp32 operands and are always attended, so the
+    kernel never sees an all-masked row.
+
+``k_bits``/``v_bits`` = 0 selects the fp32 path for that operand (the cache
+tensor is then the raw [B, H, T, Dh] floats) — this yields the 3×3 variant
+grid of layer artifacts plus the K-only / V-only ablations of Fig. 1/2.
+
+Run with ``interpret=True`` on this sandbox (no Mosaic on CPU PJRT).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .quant import INTERPRET, unpack_dequant_k, unpack_dequant_v
+
+
+def _attn_kernel(
+    xq_ref, kq_ref, ks_ref, kz_ref, vq_ref, vs_ref, vz_ref,
+    kres_ref, vres_ref, kcur_ref, vcur_ref, mq_ref, mr_ref,
+    out_ref, *, k_bits, v_bits, group,
+):
+    xq = xq_ref[0, 0]          # [1, Dh]
+    kcur = kcur_ref[0, 0]      # [1, Dh]
+    vcur = vcur_ref[0, 0]      # [1, Dh]
+    kres = kres_ref[0, 0]      # [R, Dh]
+    vres = vres_ref[0, 0]      # [R, Dh]
+    mq = mq_ref[0]             # [1, T]
+    mr = mr_ref[0]             # [1, R]
+    dh = xq.shape[-1]
+    inv = 1.0 / np.sqrt(dh)
+
+    if k_bits == 0:
+        kdeq = kq_ref[0, 0]    # [T, Dh]
+    else:
+        kdeq = unpack_dequant_k(kq_ref[0, 0], ks_ref[0, 0], kz_ref[0, 0],
+                                bits=k_bits, group=group)
+    if v_bits == 0:
+        vdeq = vq_ref[0, 0]
+    else:
+        vdeq = unpack_dequant_v(vq_ref[0, 0], vs_ref[0, 0], vz_ref[0, 0],
+                                bits=v_bits, group=group)
+
+    # scores over the three segments (MXU contractions)
+    s_q = jnp.dot(xq, kdeq.T) * inv + mq          # [1, T]
+    s_r = jnp.dot(xq, kres.T) * inv + mr          # [1, R]
+    s_c = jnp.dot(xq, kcur.T) * inv               # [1, 1]
+
+    m = jnp.maximum(jnp.maximum(s_q.max(), s_r.max()), s_c.max())
+    p_q = jnp.exp(s_q - m)
+    p_r = jnp.exp(s_r - m)
+    p_c = jnp.exp(s_c - m)
+    denom = p_q.sum() + p_r.sum() + p_c.sum()
+
+    out = (jnp.dot(p_q, vdeq) + jnp.dot(p_r, vres) + p_c * vcur) / denom
+    out_ref[0, 0] = out        # [1, Dh]
+
+
+def attn_decode(
+    xq,                    # [B, H, Dh]
+    kq_pk, k_sc, k_zp,     # packed K cache (or [B,H,T,Dh] fp32 if k_bits=0)
+    vq_pk, v_sc, v_zp,     # packed V cache (or fp32 if v_bits=0)
+    kres, vres,            # [B, H, R, Dh]
+    kcur, vcur,            # [B, H, Dh]
+    mask_q, mask_r,        # [B, T], [B, R] additive
+    *, k_bits: int, v_bits: int, group: int,
+):
+    """Fused decode attention; returns [B, H, Dh]. Mirrors ref.attn_decode_ref."""
+    b, h, dh = xq.shape
+    r = kres.shape[2]
+    t = mask_q.shape[1]
+
+    def bh(*shape):  # per-(b,h) tile
+        return pl.BlockSpec((1, 1) + shape, lambda i, j: (i, j) + (0,) * len(shape))
+
+    def bonly(n):  # per-b tile (mask rows), broadcast over heads
+        return pl.BlockSpec((1, n), lambda i, j: (i, 0))
+
+    in_specs = [
+        bh(1, dh),                                  # xq
+        bh(*kq_pk.shape[2:]),                       # kq_pk (packed or fp32)
+        bh(*k_sc.shape[2:]), bh(*k_zp.shape[2:]),   # k scale/zero
+        bh(*vq_pk.shape[2:]),
+        bh(*v_sc.shape[2:]), bh(*v_zp.shape[2:]),
+        bh(r, dh), bh(r, dh),                       # residual
+        bh(1, dh), bh(1, dh),                       # current k/v
+        bonly(t), bonly(r),                         # masks
+    ]
+    kern = functools.partial(_attn_kernel, k_bits=k_bits, v_bits=v_bits, group=group)
+    out = pl.pallas_call(
+        kern,
+        grid=(b, h),
+        in_specs=in_specs,
+        out_specs=bh(1, dh),
+        out_shape=jax.ShapeDtypeStruct((b, h, 1, dh), jnp.float32),
+        interpret=INTERPRET,
+    )(
+        xq[:, :, None, :], kq_pk, k_sc, k_zp, vq_pk, v_sc, v_zp,
+        kres, vres, kcur[:, :, None, :], vcur[:, :, None, :], mask_q, mask_r,
+    )
+    return out[:, :, 0, :]
+
+
+def _prefill_kernel(
+    xq_ref, kq_ref, ks_ref, kz_ref, vq_ref, vs_ref, vz_ref,
+    kres_ref, vres_ref, kch_ref, vch_ref, mq_ref, mr_ref,
+    out_ref, *, k_bits, v_bits, group,
+):
+    """One (b, h) program of the fused chunked-prefill attention.
+
+    C query rows attend over [packed cache | fp residual | chunk-causal] in
+    one pass: this is the MXU-feeding shape ([C,Dh]·[Dh,T] contractions) —
+    decode (C=1) uses the dedicated vector kernel above. On real TPU the
+    score matrix [C, T] would be tiled flash-style over T; at the lowered
+    sizes here (C=64, T≤512 → ≤128 KiB fp32) a single VMEM-resident tile
+    per program is within budget (DESIGN.md §Perf L1 analysis).
+    """
+    xq = xq_ref[0, 0]      # [C, Dh]
+    kch = kch_ref[0, 0]    # [C, Dh]
+    vch = vch_ref[0, 0]
+    kres = kres_ref[0, 0]  # [R, Dh]
+    vres = vres_ref[0, 0]
+    mq = mq_ref[0]         # [1, T]
+    mr = mr_ref[0]         # [1, R]
+    c, dh = xq.shape
+    inv = 1.0 / np.sqrt(dh)
+
+    if k_bits == 0:
+        kdeq = kq_ref[0, 0]
+    else:
+        kdeq = unpack_dequant_k(kq_ref[0, 0], ks_ref[0, 0], kz_ref[0, 0],
+                                bits=k_bits, group=group)
+    if v_bits == 0:
+        vdeq = vq_ref[0, 0]
+    else:
+        vdeq = unpack_dequant_v(vq_ref[0, 0], vs_ref[0, 0], vz_ref[0, 0],
+                                bits=v_bits, group=group)
+
+    s_q = jnp.dot(xq, kdeq.T) * inv + mq          # [C, T]
+    s_r = jnp.dot(xq, kres.T) * inv + mr          # [C, R]
+    causal = jnp.where(
+        jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+        >= jax.lax.broadcasted_iota(jnp.int32, (c, c), 1),
+        0.0, -1e9)
+    s_c = jnp.dot(xq, kch.T) * inv + causal       # [C, C]
+
+    m = jnp.maximum(
+        jnp.maximum(s_q.max(axis=-1), s_r.max(axis=-1)), s_c.max(axis=-1)
+    )[:, None]
+    p_q = jnp.exp(s_q - m)
+    p_r = jnp.exp(s_r - m)
+    p_c = jnp.exp(s_c - m)
+    denom = (p_q.sum(-1) + p_r.sum(-1) + p_c.sum(-1))[:, None]
+    out = (jnp.dot(p_q, vdeq) + jnp.dot(p_r, vres) + jnp.dot(p_c, vch)) / denom
+    out_ref[0, 0] = out
+
+
+def attn_prefill_chunk(
+    xq,                    # [B, H, C, Dh] chunk queries (RoPE applied)
+    kq_pk, k_sc, k_zp, vq_pk, v_sc, v_zp,
+    kres, vres,            # [B, H, R, Dh]
+    kchunk, vchunk,        # [B, H, C, Dh] this chunk's keys/values
+    mask_q, mask_r,        # [B, T], [B, R]
+    *, k_bits: int, v_bits: int, group: int,
+):
+    """Fused chunked-prefill attention (Pallas): causal within the chunk +
+    full cache. Same segment layout as decode but with C query rows.
+    Returns [B, H, C, Dh]. Mirrors :func:`attn_prefill_chunk_ref`.
+    """
+    b, h, c, dh = xq.shape
+    r = kres.shape[2]
+    t = mask_q.shape[1]
+
+    def bh(*shape):
+        return pl.BlockSpec((1, 1) + shape, lambda i, j: (i, j) + (0,) * len(shape))
+
+    def bonly(n):
+        return pl.BlockSpec((1, n), lambda i, j: (i, 0))
+
+    in_specs = [
+        bh(c, dh),
+        bh(*kq_pk.shape[2:]),
+        bh(*k_sc.shape[2:]), bh(*k_zp.shape[2:]),
+        bh(*vq_pk.shape[2:]),
+        bh(*v_sc.shape[2:]), bh(*v_zp.shape[2:]),
+        bh(r, dh), bh(r, dh),
+        bh(c, dh), bh(c, dh),
+        bonly(t), bonly(r),
+    ]
+    kern = functools.partial(_prefill_kernel, k_bits=k_bits, v_bits=v_bits,
+                             group=group)
+    return pl.pallas_call(
+        kern,
+        grid=(b, h),
+        in_specs=in_specs,
+        out_specs=bh(c, dh),
+        out_shape=jax.ShapeDtypeStruct((b, h, c, dh), jnp.float32),
+        interpret=INTERPRET,
+    )(
+        xq, kq_pk, k_sc, k_zp, vq_pk, v_sc, v_zp,
+        kres, vres, kchunk, vchunk, mask_q, mask_r,
+    )
+
+
+def attn_prefill_chunk_ref(
+    xq,                    # [B, H, C, Dh] chunk queries (RoPE applied)
+    kq_pk, k_sc, k_zp, vq_pk, v_sc, v_zp,
+    kres, vres,            # [B, H, R, Dh]
+    kchunk, vchunk,        # [B, H, C, Dh] this chunk's keys/values
+    mask_q, mask_r,        # [B, T], [B, R]
+    *, k_bits: int, v_bits: int, group: int,
+):
+    """Pure-jnp oracle for :func:`attn_prefill_chunk`.
+
+    Same segment layout as decode but with C query rows and an in-chunk
+    causal mask. Returns [B, H, C, Dh].
+    """
+    b, h, c, dh = xq.shape
+    r = kres.shape[2]
+    t = mask_q.shape[1]
+    inv = 1.0 / np.sqrt(dh)
+
+    def deq(pk, s, z, bits, per_channel):
+        if bits == 0:
+            return pk
+        fn = unpack_dequant_k if per_channel else unpack_dequant_v
+        flat = pk.reshape((-1,) + pk.shape[2:])
+        sf = s.reshape((-1,) + s.shape[2:])
+        zf = z.reshape((-1,) + z.shape[2:])
+        out = jax.vmap(lambda a, b_, c_: fn(a, b_, c_, bits=bits, group=group))(flat, sf, zf)
+        return out.reshape((b, h) + out.shape[1:])
+
+    kdeq = deq(kq_pk, k_sc, k_zp, k_bits, True)   # [B,H,T,Dh]
+    vdeq = deq(vq_pk, v_sc, v_zp, v_bits, False)
+
+    s_q = jnp.einsum("bhcd,bhtd->bhct", xq, kdeq) * inv + mask_q[:, None, None, :]
+    s_r = jnp.einsum("bhcd,bhrd->bhcr", xq, kres) * inv + mask_r[:, None, None, :]
+    causal = jnp.where(
+        jnp.arange(c)[:, None] >= jnp.arange(c)[None, :], 0.0, -1e9
+    )
+    s_c = jnp.einsum("bhcd,bhkd->bhck", xq, kchunk) * inv + causal[None, None]
+
+    alls = jnp.concatenate([s_q, s_r, s_c], axis=-1)
+    m = alls.max(axis=-1, keepdims=True)
+    p = jnp.exp(alls - m)
+    denom = p.sum(axis=-1, keepdims=True)
+    p_q, p_r, p_c = p[..., :t], p[..., t : t + r], p[..., t + r :]
+    out = (
+        jnp.einsum("bhct,bhtd->bhcd", p_q, vdeq)
+        + jnp.einsum("bhcr,bhrd->bhcd", p_r, vres)
+        + jnp.einsum("bhck,bhkd->bhcd", p_c, vchunk)
+    ) / denom
+    return out

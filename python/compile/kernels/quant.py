@@ -1,0 +1,148 @@
+"""Pallas kernels: group RTN quantize + bit-pack ("fold") for the KV cache.
+
+These are the build-time-compiled hot paths that fold a full fp32 group of
+G tokens out of the residual window into the packed cache:
+
+  * ``fold_k``: per-CHANNEL quantization — one (scale, zero) per channel for
+    the G tokens of the group; packed along the token axis (KIVI layout).
+  * ``fold_v``: per-TOKEN quantization — one (scale, zero) per group of G
+    channels of each token; packed along the channel axis.
+
+TPU mapping (DESIGN.md §2): grid over (batch, head); each program owns one
+[G, Dh] fp32 tile in VMEM (G=32, Dh=32 → 4 KiB), reduces min/max on the VPU,
+and emits the packed u8 tile plus scale/zero vectors. The pack is a shifted
+sum over the 8/bits sub-lanes — pure VPU integer work, no MXU involvement.
+On this sandbox they run with ``interpret=True`` (lowered to plain HLO).
+
+All kernels mirror ``ref.py`` exactly; pytest/hypothesis enforce equality.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # CPU PJRT cannot execute Mosaic custom-calls; see DESIGN.md
+
+
+def _qparams(x, bits, axis):
+    """min/max → (scale, zero) with the zero-span guard, matching ref.py."""
+    zero = x.min(axis=axis, keepdims=True)
+    span = x.max(axis=axis, keepdims=True) - zero
+    qmax = float(2**bits - 1)
+    scale = span / qmax
+    safe = jnp.where(scale > 0, scale, 1.0)
+    return safe, zero, qmax
+
+
+def _fold_k_kernel(kg_ref, pk_ref, s_ref, z_ref, *, bits):
+    """One (b, h) program: kg [G, Dh] → packed [G*bits/8, Dh], s/z [1, Dh]."""
+    kg = kg_ref[0, 0]  # [G, Dh]
+    s, z, qmax = _qparams(kg, bits, axis=0)
+    q = jnp.clip(jnp.round((kg - z) / s), 0.0, qmax).astype(jnp.uint32)
+    vpb = 8 // bits
+    g = kg.shape[0]
+    # pack along tokens: [G, Dh] -> [G/vpb, vpb, Dh] -> shifted sum -> u8
+    qg = q.reshape(g // vpb, vpb, kg.shape[1])
+    shifts = (jnp.arange(vpb, dtype=jnp.uint32) * bits)[None, :, None]
+    pk_ref[0, 0] = (qg << shifts).sum(axis=1).astype(jnp.uint8)
+    s_ref[0, 0] = s
+    z_ref[0, 0] = z
+
+
+def _fold_v_kernel(vg_ref, pk_ref, s_ref, z_ref, *, bits, group):
+    """One (b, h) program: vg [G, Dh] → packed [G, Dh*bits/8], s/z [G, Dh/g]."""
+    vg = vg_ref[0, 0]  # [G, Dh]
+    g2 = min(group, vg.shape[1])
+    t, dh = vg.shape
+    vgg = vg.reshape(t, dh // g2, g2)
+    s, z, qmax = _qparams(vgg, bits, axis=-1)
+    q = jnp.clip(jnp.round((vgg - z) / s), 0.0, qmax).astype(jnp.uint32)
+    vpb = 8 // bits
+    # pack along channels: [T, DG, g2] -> [T, DG, g2/vpb, vpb]
+    qg = q.reshape(t, dh // g2, g2 // vpb, vpb)
+    shifts = (jnp.arange(vpb, dtype=jnp.uint32) * bits)[None, None, None, :]
+    packed = (qg << shifts).sum(axis=-1).astype(jnp.uint8)
+    pk_ref[0, 0] = packed.reshape(t, dh * bits // 8)
+    s_ref[0, 0] = s.squeeze(-1)
+    z_ref[0, 0] = z.squeeze(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def fold_k(kg, *, bits: int):
+    """Quantize+pack one K group. kg: [B, H, G, Dh] fp32.
+
+    Returns (packed [B,H,G*bits/8,Dh] u8, scale [B,H,1,Dh], zero [B,H,1,Dh]).
+    """
+    b, h, g, dh = kg.shape
+    grid = (b, h)
+    spec = lambda *shape: pl.BlockSpec((1, 1) + shape, lambda i, j: (i, j, 0, 0))
+    return pl.pallas_call(
+        functools.partial(_fold_k_kernel, bits=bits),
+        grid=grid,
+        in_specs=[spec(g, dh)],
+        out_specs=[spec(g * bits // 8, dh), spec(1, dh), spec(1, dh)],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, g * bits // 8, dh), jnp.uint8),
+            jax.ShapeDtypeStruct((b, h, 1, dh), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, 1, dh), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(kg)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group"))
+def fold_v(vg, *, bits: int, group: int):
+    """Quantize+pack one V group. vg: [B, H, G, Dh] fp32.
+
+    Returns (packed [B,H,G,Dh*bits/8] u8, scale [B,H,G,Dh/g], zero)."""
+    b, h, g, dh = vg.shape
+    g2 = min(group, dh)
+    grid = (b, h)
+    spec = lambda *shape: pl.BlockSpec((1, 1) + shape, lambda i, j: (i, j, 0, 0))
+    return pl.pallas_call(
+        functools.partial(_fold_v_kernel, bits=bits, group=group),
+        grid=grid,
+        in_specs=[spec(g, dh)],
+        out_specs=[spec(g, dh * bits // 8), spec(g, dh // g2), spec(g, dh // g2)],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, g, dh * bits // 8), jnp.uint8),
+            jax.ShapeDtypeStruct((b, h, g, dh // g2), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, g, dh // g2), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(vg)
+
+
+# ---------------------------------------------------------------------------
+# In-kernel unpack+dequant helpers, shared with attention.py
+# ---------------------------------------------------------------------------
+
+def unpack_dequant_k(kq_pk, k_sc, k_zp, *, bits, group):
+    """[T_pk, Dh] u8 + [T/G, Dh] scale/zero → [T, Dh] fp32 (token-packed)."""
+    vpb = 8 // bits
+    t_pk, dh = kq_pk.shape
+    shifts = (jnp.arange(vpb, dtype=jnp.uint32) * bits)[None, :, None]
+    mask = jnp.uint32(2**bits - 1)
+    vals = (kq_pk.astype(jnp.uint32)[:, None, :] >> shifts) & mask
+    vals = vals.reshape(t_pk * vpb, dh).astype(jnp.float32)  # [T, Dh]
+    ng = k_sc.shape[0]
+    g = (t_pk * vpb) // ng
+    vg = vals.reshape(ng, g, dh)
+    return (vg * k_sc[:, None, :] + k_zp[:, None, :]).reshape(t_pk * vpb, dh)
+
+
+def unpack_dequant_v(vq_pk, v_sc, v_zp, *, bits, group):
+    """[T, Dh_pk] u8 + [T, Dh/g] scale/zero → [T, Dh] fp32 (channel-packed)."""
+    vpb = 8 // bits
+    t, dh_pk = vq_pk.shape
+    dh = dh_pk * vpb
+    shifts = (jnp.arange(vpb, dtype=jnp.uint32) * bits)[None, None, :]
+    mask = jnp.uint32(2**bits - 1)
+    vals = (vq_pk.astype(jnp.uint32)[:, :, None] >> shifts) & mask
+    vals = vals.reshape(t, dh).astype(jnp.float32)
+    dg = v_sc.shape[1]
+    g2 = dh // dg
+    vg = vals.reshape(t, dg, g2)
+    return (vg * v_sc[:, :, None] + v_zp[:, :, None]).reshape(t, dh)

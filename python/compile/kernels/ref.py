@@ -1,0 +1,204 @@
+"""Pure-jnp reference oracle for the L1 kernels.
+
+Everything here is deliberately written in the most transparent way possible
+(no fusion, no packing tricks) so that it can serve as the ground truth for:
+
+  * the Pallas kernels in ``quant.py`` / ``attention.py`` (pytest +
+    hypothesis in ``python/tests/``),
+  * the Rust RTN mirror in ``rust/src/quant`` (golden vectors emitted by
+    ``aot.py`` into the manifest directory).
+
+Quantization scheme (paper Equ. 4-6, KIVI layout):
+
+  z = min(x)  over the group
+  s = (max(x) - min(x)) / (2^b - 1)
+  q = round((x - z) / s)           # round-half-to-even, clipped to [0, 2^b-1]
+  x* = q * s + z
+
+Note the paper's Equ. 5/6 as printed double-subtracts ``z`` and then adds it
+back pre-scale; that is a typo (it would not invert). We implement the
+standard asymmetric RTN above, which matches the KIVI reference
+implementation the paper builds on.
+
+Layout (must match rust/src/quant exactly):
+  * K: per-CHANNEL groups — G consecutive *tokens* per (…, channel) share
+    (s, z). Packed along the token axis.
+  * V: per-TOKEN groups — G consecutive *channels* per (…, token) share
+    (s, z). Packed along the channel axis.
+  * Bit-packing: value i of a group of 8/b values occupies bits
+    [i*b, (i+1)*b) of its byte (little-endian within the byte).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+_NEG = -1e9  # additive mask value
+
+
+# ---------------------------------------------------------------------------
+# Group-wise RTN quantize / dequantize (no packing)
+# ---------------------------------------------------------------------------
+
+def rtn_quantize(x, bits: int, group: int, axis: int):
+    """Group-wise asymmetric RTN along ``axis``.
+
+    Returns ``(q, scale, zero)`` where ``q`` is uint32 codes with the same
+    shape as ``x`` and scale/zero have the grouped axis reduced by ``group``.
+    """
+    axis = axis % x.ndim
+    n = x.shape[axis]
+    assert n % group == 0, f"axis len {n} not divisible by group {group}"
+    # move grouped axis last, reshape to (…, n_groups, group)
+    xm = jnp.moveaxis(x, axis, -1)
+    gshape = xm.shape[:-1] + (n // group, group)
+    xg = xm.reshape(gshape)
+    zero = xg.min(axis=-1, keepdims=True)
+    span = xg.max(axis=-1, keepdims=True) - zero
+    qmax = float(2**bits - 1)
+    scale = span / qmax
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round((xg - zero) / safe), 0.0, qmax).astype(jnp.uint32)
+    # scale/zero keep one entry per group
+    scale = jnp.moveaxis(safe.squeeze(-1), -1, axis if axis < x.ndim - 1 else -1)
+    zero_ = jnp.moveaxis(zero.squeeze(-1), -1, axis if axis < x.ndim - 1 else -1)
+    q = jnp.moveaxis(q.reshape(xm.shape), -1, axis)
+    return q, scale, zero_
+
+
+def rtn_dequantize(q, scale, zero, group: int, axis: int):
+    """Inverse of :func:`rtn_quantize` — ``x* = q * s + z``."""
+    axis = axis % q.ndim
+    qm = jnp.moveaxis(q.astype(jnp.float32), axis, -1)
+    gshape = qm.shape[:-1] + (qm.shape[-1] // group, group)
+    qg = qm.reshape(gshape)
+    s = jnp.moveaxis(scale, axis if axis < q.ndim - 1 else -1, -1)[..., None]
+    z = jnp.moveaxis(zero, axis if axis < q.ndim - 1 else -1, -1)[..., None]
+    x = qg * s + z
+    return jnp.moveaxis(x.reshape(qm.shape), -1, axis)
+
+
+# ---------------------------------------------------------------------------
+# Bit packing
+# ---------------------------------------------------------------------------
+
+def pack_bits(q, bits: int, axis: int):
+    """Pack uint codes (< 2^bits) into u8 along ``axis``.
+
+    Value i of each byte-sized run of 8/bits values sits at bit offset i*bits
+    (little-endian within the byte). The packed axis shrinks by 8/bits.
+    """
+    assert bits in (1, 2, 4, 8)
+    vpb = 8 // bits
+    axis = axis % q.ndim
+    n = q.shape[axis]
+    assert n % vpb == 0
+    qm = jnp.moveaxis(q.astype(jnp.uint32), axis, -1)
+    qg = qm.reshape(qm.shape[:-1] + (n // vpb, vpb))
+    shifts = jnp.arange(vpb, dtype=jnp.uint32) * bits
+    packed = (qg << shifts).sum(axis=-1).astype(jnp.uint8)
+    return jnp.moveaxis(packed, -1, axis)
+
+
+def unpack_bits(packed, bits: int, axis: int):
+    """Inverse of :func:`pack_bits`; returns uint32 codes."""
+    assert bits in (1, 2, 4, 8)
+    vpb = 8 // bits
+    axis = axis % packed.ndim
+    pm = jnp.moveaxis(packed.astype(jnp.uint32), axis, -1)
+    shifts = jnp.arange(vpb, dtype=jnp.uint32) * bits
+    mask = jnp.uint32(2**bits - 1)
+    vals = (pm[..., None] >> shifts) & mask
+    vals = vals.reshape(pm.shape[:-1] + (pm.shape[-1] * vpb,))
+    return jnp.moveaxis(vals, -1, axis)
+
+
+# ---------------------------------------------------------------------------
+# K / V cache quantization (KIVI layout), shapes [..., T, Dh]
+# ---------------------------------------------------------------------------
+
+def quant_k(k, bits: int, group: int):
+    """Per-channel quantize K: groups of ``group`` tokens along axis -2.
+
+    Returns (packed [..., T*bits/8, Dh] u8, scale [..., T/G, Dh], zero)."""
+    q, s, z = rtn_quantize(k, bits, group, axis=-2)
+    return pack_bits(q, bits, axis=-2), s, z
+
+
+def dequant_k(packed, scale, zero, bits: int, group: int):
+    t = packed.shape[-2] * (8 // bits)
+    q = unpack_bits(packed, bits, axis=-2)
+    assert q.shape[-2] == t
+    return rtn_dequantize(q, scale, zero, group, axis=-2)
+
+
+def quant_v(v, bits: int, group: int):
+    """Per-token quantize V: groups of ``group`` channels along axis -1.
+
+    Returns (packed [..., T, Dh*bits/8] u8, scale [..., T, Dh/G], zero)."""
+    g = min(group, v.shape[-1])
+    q, s, z = rtn_quantize(v, bits, g, axis=-1)
+    return pack_bits(q, bits, axis=-1), s, z
+
+
+def dequant_v(packed, scale, zero, bits: int, group: int):
+    g = min(group, packed.shape[-1] * (8 // bits))
+    q = unpack_bits(packed, bits, axis=-1)
+    return rtn_dequantize(q, scale, zero, g, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Reference fused decode attention over (packed cache | fp residual | current)
+# ---------------------------------------------------------------------------
+
+def attn_decode_ref(
+    xq,        # [B, H, Dh]   query for the current token (RoPE applied)
+    kq_pk, k_sc, k_zp,   # packed K cache + group scale/zero (or None if float)
+    vq_pk, v_sc, v_zp,   # packed V cache + group scale/zero (or None if float)
+    kres, vres,          # [B, H, R, Dh] fp residual window
+    kcur, vcur,          # [B, H, Dh]    current token K/V (always attended)
+    mask_q,              # [B, T] additive (0 / -1e9) over quantized tokens
+    mask_r,              # [B, R] additive over residual slots
+    k_bits: int, v_bits: int, group: int,
+):
+    """Oracle for the fused decode-attention kernel.
+
+    ``k_bits``/``v_bits`` == 0 means the corresponding cache is fp32 and
+    ``kq_pk``/``vq_pk`` is the raw [B, H, T, Dh] float tensor (scales unused).
+    """
+    dh = xq.shape[-1]
+    inv = 1.0 / np.sqrt(dh)
+
+    kdeq = kq_pk if k_bits == 0 else dequant_k(kq_pk, k_sc, k_zp, k_bits, group)
+    vdeq = vq_pk if v_bits == 0 else dequant_v(vq_pk, v_sc, v_zp, v_bits, group)
+
+    s_q = jnp.einsum("bhd,bhtd->bht", xq, kdeq) * inv + mask_q[:, None, :]
+    s_r = jnp.einsum("bhd,bhrd->bhr", xq, kres) * inv + mask_r[:, None, :]
+    s_c = jnp.einsum("bhd,bhd->bh", xq, kcur)[..., None] * inv  # [B,H,1]
+
+    alls = jnp.concatenate([s_q, s_r, s_c], axis=-1)
+    m = alls.max(axis=-1, keepdims=True)
+    p = jnp.exp(alls - m)
+    denom = p.sum(axis=-1, keepdims=True)
+    t = s_q.shape[-1]
+    r = s_r.shape[-1]
+    p_q, p_r, p_c = p[..., :t], p[..., t : t + r], p[..., t + r :]
+    out = (
+        jnp.einsum("bht,bhtd->bhd", p_q, vdeq)
+        + jnp.einsum("bhr,bhrd->bhd", p_r, vres)
+        + p_c * vcur
+    ) / denom
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Reference fold (quantize one full group of tokens out of the residual ring)
+# ---------------------------------------------------------------------------
+
+def fold_k_ref(kg, bits: int):
+    """kg: [B, H, G, Dh] → (packed [B,H,G*bits/8,Dh], s [B,H,1,Dh], z)."""
+    return quant_k(kg, bits, group=kg.shape[-2])
+
+
+def fold_v_ref(vg, bits: int, group: int):
+    """vg: [B, H, G, Dh] → (packed [B,H,G,Dh*bits/8], s [B,H,G,Dh/g], z)."""
+    return quant_v(vg, bits, group)

@@ -1,0 +1,275 @@
+"""L2: the Llama-style decoder, exposed as composable step functions.
+
+The Rust engine executes the model *layer-wise* so that each decoder layer
+can run under its own (k_bits, v_bits) quantization variant — that is the
+AsymKV mechanism. Every function here is AOT-lowered to one HLO-text
+artifact by ``aot.py``; arguments are positional and their order is part of
+the artifact ABI recorded in the manifest.
+
+Step functions (C = chunk length; C=1 is the decode path):
+
+  * ``embed_fwd``    tokens [B,C] i32                     → x [B,C,d]
+  * ``layer_fwd``    (9 layer params, x, pos, caches, masks) →
+                     (x' [B,C,d], k_chunk [B,H,C,Dh], v_chunk [B,H,C,Dh])
+    variants: (k_bits, v_bits) ∈ grid; 0 = fp32 cache for that operand.
+    C=1 uses the fused Pallas decode kernel; C>1 the chunked-prefill path.
+  * ``head_fwd``     x [B,C,d]                            → logits [B,C,V]
+  * ``probe_fwd``    float layer_fwd that additionally returns the RoPE'd
+                     query xq [B,H,Dh] (drives the Fig. 1/2 analysis).
+  * ``stage_mse``    in-graph reproduction of the paper's §3 observation:
+                     quantizes K-only and V-only at ``bits`` and reports the
+                     MSE at each attention stage (Equ. 6 → 1 → 2 → 3) plus
+                     the output-error samples for the Fig. 2 histograms.
+
+``forward_train`` is the plain fp32 training-time forward (no cache).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig
+from .kernels.attention import attn_decode, attn_prefill_chunk
+
+LAYER_PARAM_NAMES = ("rms1", "wq", "wk", "wv", "wo", "rms2", "wg", "wu", "wd")
+
+
+# ---------------------------------------------------------------------------
+# Parameter init / shapes
+# ---------------------------------------------------------------------------
+
+def layer_param_shapes(cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "rms1": (d,), "wq": (d, d), "wk": (d, d), "wv": (d, d), "wo": (d, d),
+        "rms2": (d,), "wg": (d, f), "wu": (d, f), "wd": (f, d),
+    }
+
+
+def param_shapes(cfg: ModelConfig):
+    shapes = {"embed": (cfg.vocab, cfg.d_model), "rms_f": (cfg.d_model,),
+              "wout": (cfg.d_model, cfg.vocab)}
+    for i in range(cfg.n_layers):
+        for name, s in layer_param_shapes(cfg).items():
+            shapes[f"layer{i}.{name}"] = s
+    return shapes
+
+
+def init_params(cfg: ModelConfig, key):
+    params = {}
+    for name, shape in param_shapes(cfg).items():
+        key, sub = jax.random.split(key)
+        if name.endswith(("rms1", "rms2", "rms_f")):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[0]
+            params[name] = (jax.random.normal(sub, shape, jnp.float32)
+                            / np.sqrt(fan_in))
+    return params
+
+
+def layer_params(params, i):
+    return [params[f"layer{i}.{n}"] for n in LAYER_PARAM_NAMES]
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, w, eps=1e-5):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope(x, pos, theta=10000.0):
+    """Rotary embedding, GPT-NeoX half-split layout.
+
+    x: [..., Dh]; pos: integer array broadcastable to x.shape[:-1]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos.astype(jnp.float32)[..., None] * freqs  # [..., half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def swiglu(x, wg, wu, wd):
+    return (jax.nn.silu(x @ wg) * (x @ wu)) @ wd
+
+
+def _qkv(x, wq, wk, wv, n_heads, d_head, pos_grid, theta):
+    """Project + split heads + RoPE. x: [B,C,d] → q,k,v: [B,H,C,Dh]."""
+    b, c, _ = x.shape
+
+    def split(y):
+        return y.reshape(b, c, n_heads, d_head).transpose(0, 2, 1, 3)
+
+    q = rope(split(x @ wq), pos_grid[:, None, :], theta)
+    k = rope(split(x @ wk), pos_grid[:, None, :], theta)
+    v = split(x @ wv)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Step functions (artifact bodies)
+# ---------------------------------------------------------------------------
+
+def embed_fwd(embed, tokens):
+    return embed[tokens]
+
+
+def head_fwd(rms_f, wout, x, eps=1e-5):
+    return rmsnorm(x, rms_f, eps) @ wout
+
+
+def layer_fwd(
+    rms1, wq, wk, wv, wo, rms2, wg, wu, wd,       # layer params
+    x,            # [B, C, d]
+    pos,          # [B] i32 — start position of this chunk per sequence
+    kq_pk, k_sc, k_zp,   # K cache (packed u8 + scale/zero, or fp32 + dummies)
+    vq_pk, v_sc, v_zp,   # V cache
+    kres, vres,          # [B, H, R, Dh] fp residual window
+    mask_q, mask_r,      # [B, T], [B, R] additive masks
+    *, cfg: ModelConfig, k_bits: int, v_bits: int,
+):
+    b, c, d = x.shape
+    pos_grid = pos[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]  # [B,C]
+    xn = rmsnorm(x, rms1, cfg.norm_eps)
+    q, k, v = _qkv(xn, wq, wk, wv, cfg.n_heads, cfg.d_head, pos_grid,
+                   cfg.rope_theta)
+    kw = dict(k_bits=k_bits, v_bits=v_bits, group=cfg.quant.group)
+    if c == 1:
+        attn = attn_decode(
+            q[:, :, 0, :], kq_pk, k_sc, k_zp, vq_pk, v_sc, v_zp,
+            kres, vres, k[:, :, 0, :], v[:, :, 0, :], mask_q, mask_r, **kw,
+        )[:, :, None, :]  # [B,H,1,Dh]
+    else:
+        attn = attn_prefill_chunk(
+            q, kq_pk, k_sc, k_zp, vq_pk, v_sc, v_zp,
+            kres, vres, k, v, mask_q, mask_r, **kw,
+        )
+    attn = attn.transpose(0, 2, 1, 3).reshape(b, c, d)
+    h = x + attn @ wo
+    out = h + swiglu(rmsnorm(h, rms2, cfg.norm_eps), wg, wu, wd)
+    return out, k, v
+
+
+def probe_fwd(
+    rms1, wq, wk, wv, wo, rms2, wg, wu, wd,
+    x, pos, kcache, vcache, mask, *, cfg: ModelConfig,
+):
+    """Float decode layer (C=1, fp32 cache) that also exposes the RoPE'd
+    query — the instrumentation tap for the Fig. 1/2 error analysis."""
+    b = x.shape[0]
+    r = kcache.shape[2] - 0
+    dummy_s = jnp.zeros((b, cfg.n_heads, 1, 1), jnp.float32)
+    # reuse layer_fwd with the cache presented as the "residual" segment
+    # emptied and the full fp cache as the quantized-slot fp32 tensor
+    zero_res = jnp.zeros((b, cfg.n_heads, cfg.quant.group, cfg.d_head),
+                         jnp.float32)
+    mask_r = jnp.full((b, cfg.quant.group), -1e9, jnp.float32)
+    out, k, v = layer_fwd(
+        rms1, wq, wk, wv, wo, rms2, wg, wu, wd, x, pos,
+        kcache, dummy_s, dummy_s, vcache, dummy_s, dummy_s,
+        zero_res, zero_res, mask, mask_r, cfg=cfg, k_bits=0, v_bits=0,
+    )
+    pos_grid = pos[:, None] + jnp.arange(1, dtype=jnp.int32)[None, :]
+    xn = rmsnorm(x, rms1, cfg.norm_eps)
+    q, _, _ = _qkv(xn, wq, wk, wv, cfg.n_heads, cfg.d_head, pos_grid,
+                   cfg.rope_theta)
+    return out, k, v, q[:, :, 0, :]
+
+
+# ---------------------------------------------------------------------------
+# §3 analysis: stage-wise MSE of K-only vs V-only quantization (Fig. 1/2)
+# ---------------------------------------------------------------------------
+
+def stage_mse(xq, kcache, vcache, mask, *, bits: int, group: int):
+    """Reproduces the paper's §3 measurement in-graph.
+
+    xq [B,H,Dh]; kcache/vcache [B,H,T,Dh] fp32 real activations; mask [B,T].
+    Quantizes K-only (per-channel) and V-only (per-token) at ``bits`` and
+    returns:
+      mse_k, mse_v: [4] — MSE at stages (Equ.6 dequant, Equ.1 scores,
+                     Equ.2 softmax, Equ.3 output); value stages 1-2 are 0
+                     by construction (V enters only at Equ. 3).
+      err_k, err_v: [B,H,Dh] — output-error samples (Fig. 2 histograms).
+    """
+    from .kernels import ref
+
+    dh = xq.shape[-1]
+    inv = 1.0 / np.sqrt(dh)
+    kq, ks, kz = ref.quant_k(kcache, bits, group)
+    kdeq = ref.dequant_k(kq, ks, kz, bits, group)
+    vq, vs, vz = ref.quant_v(vcache, bits, group)
+    vdeq = ref.dequant_v(vq, vs, vz, bits, group)
+
+    valid = (mask > -1.0).astype(jnp.float32)  # [B,T] 1 for real tokens
+
+    def mse_t(a, b, tok_axis):
+        """MSE over valid tokens; tok_axis is the token axis of a/b."""
+        v = valid[:, None, :] if tok_axis == -1 else valid[:, None, :, None]
+        d = ((a - b) ** 2) * v
+        n = valid.sum() * (a.size // valid.size)  # elements per token × tokens
+        return d.sum() / jnp.maximum(n, 1)
+
+    def scores(kmat):
+        return jnp.einsum("bhd,bhtd->bht", xq, kmat) * inv + mask[:, None, :]
+
+    def smax(s):
+        m = s.max(axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        return p / p.sum(axis=-1, keepdims=True)
+
+    s0, sk = scores(kcache), scores(kdeq)
+    p0, pk = smax(s0), smax(sk)
+    o0 = jnp.einsum("bht,bhtd->bhd", p0, vcache)
+    ok = jnp.einsum("bht,bhtd->bhd", pk, vcache)
+    ov = jnp.einsum("bht,bhtd->bhd", p0, vdeq)
+
+    # stage 0: element MSE of the dequantized matrices themselves
+    mse_k0 = mse_t(kdeq, kcache, -2)
+    mse_v0 = mse_t(vdeq, vcache, -2)
+    mse_k = jnp.stack([mse_k0, mse_t(sk, s0, -1), mse_t(pk, p0, -1),
+                       jnp.mean((ok - o0) ** 2)])
+    mse_v = jnp.stack([mse_v0, jnp.float32(0), jnp.float32(0),
+                       jnp.mean((ov - o0) ** 2)])
+    return mse_k, mse_v, ok - o0, ov - o0
+
+
+# ---------------------------------------------------------------------------
+# Training-time forward (plain fp32, no cache)
+# ---------------------------------------------------------------------------
+
+def forward_train(params, tokens, cfg: ModelConfig):
+    """tokens [B,T] i32 → logits [B,T,V]; standard causal attention."""
+    b, t = tokens.shape
+    x = params["embed"][tokens]
+    pos = jnp.arange(t, dtype=jnp.int32)[None, :].repeat(b, 0)
+    causal = jnp.where(jnp.arange(t)[:, None] >= jnp.arange(t)[None, :],
+                       0.0, -1e9)
+    inv = 1.0 / np.sqrt(cfg.d_head)
+    for i in range(cfg.n_layers):
+        rms1, wq, wk, wv, wo, rms2, wg, wu, wd = layer_params(params, i)
+        xn = rmsnorm(x, rms1, cfg.norm_eps)
+        q, k, v = _qkv(xn, wq, wk, wv, cfg.n_heads, cfg.d_head, pos,
+                       cfg.rope_theta)
+        s = jnp.einsum("bhqd,bhkd->bhqk", q, k) * inv + causal[None, None]
+        p = jax.nn.softmax(s, axis=-1)
+        attn = jnp.einsum("bhqk,bhkd->bhqd", p, v)
+        attn = attn.transpose(0, 2, 1, 3).reshape(b, t, cfg.d_model)
+        h = x + attn @ wo
+        x = h + swiglu(rmsnorm(h, rms2, cfg.norm_eps), wg, wu, wd)
+    return head_fwd(params["rms_f"], params["wout"], x, cfg.norm_eps)
+
+
+def loss_fn(params, tokens, cfg: ModelConfig):
+    """Next-token cross entropy, mean over all positions."""
+    logits = forward_train(params, tokens, cfg)
+    tgt = tokens[:, 1:]
+    lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+    return nll.mean()

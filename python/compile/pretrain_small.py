@@ -1,0 +1,32 @@
+"""Build-time driver: pretrain `small` + length-extension (see train.py).
+
+    cd python && python -m compile.pretrain_small
+"""
+
+import json
+import time
+
+from . import train as T
+from .configs import SMALL
+
+
+def main():
+    t0 = time.time()
+    params, hist = T.train(SMALL, steps=2200, batch=16, seed=5, log_every=100,
+                           ckpt_path="../artifacts/weights_small.bin")
+    print(f"main phase done in {(time.time()-t0)/60:.1f} min", flush=True)
+    # length extension so RoPE behaves at the long-context eval range
+    params, hist2 = T.train(SMALL, steps=150, batch=8, seed=6, ctx=512,
+                            init=params, peak_lr=3e-4, log_every=50)
+    ppl = T.evaluate_ppl(params, SMALL)
+    acc = T.recall_accuracy(params, SMALL, n_eps=24)
+    print(f"FINAL loss {hist2[-1]:.4f} ppl {ppl:.2f} recall {acc:.3f}",
+          flush=True)
+    T.save_weights("../artifacts/weights_small.bin", params)
+    json.dump({"loss": hist + hist2, "held_out_ppl": ppl, "recall": acc},
+              open("../artifacts/train_log_small.json", "w"))
+    print("saved weights", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Refresh weights.bin + golden.json inside already-lowered artifact dirs
+(the HLO text takes weights as runtime arguments, so retraining only
+invalidates these two files).
+
+    cd python && python -m compile.refresh_weights --models small,small-long
+"""
+
+import argparse
+import json
+import os
+
+from . import aot
+from . import train as T
+from .configs import CONFIGS
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="small,small-long")
+    args = ap.parse_args()
+    for name in args.models.split(","):
+        cfg = CONFIGS[name]
+        base = "small" if name.startswith("small") else name
+        params = T.load_weights(os.path.join(args.out, f"weights_{base}.bin"))
+        out_dir = os.path.join(args.out, cfg.name)
+        T.save_weights(os.path.join(out_dir, "weights.bin"), params)
+        with open(os.path.join(out_dir, "golden.json"), "w") as f:
+            json.dump(aot.make_golden(cfg, params), f)
+        print(f"refreshed {out_dir}/weights.bin + golden.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,177 @@
+"""Build-time pretraining of the substitute model (DESIGN.md §1).
+
+Trains the ``small`` decoder on the synthetic corpus with hand-rolled AdamW
+(the sandbox vendors no optax) and writes ``weights.bin`` in the custom
+binary format the Rust loader reads (rust/src/model/weights.rs):
+
+    magic  b"AKVW" | version u32 | n_tensors u32
+    per tensor: name_len u16 | name utf-8 | ndim u32 | dims u32[] | f32 LE[]
+
+Training is cached: ``aot.py`` only invokes this when weights.bin is absent.
+"""
+
+import struct
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data
+from .configs import ModelConfig
+from .model import init_params, loss_fn
+
+MAGIC = b"AKVW"
+VERSION = 1
+
+
+def save_weights(path, params):
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", VERSION, len(params)))
+        for name in sorted(params):
+            arr = np.asarray(params[name], np.float32)
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", arr.ndim))
+            f.write(struct.pack(f"<{arr.ndim}I", *arr.shape))
+            f.write(arr.tobytes())
+
+
+def load_weights(path):
+    params = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, "bad magic"
+        version, n = struct.unpack("<II", f.read(8))
+        assert version == VERSION
+        for _ in range(n):
+            (ln,) = struct.unpack("<H", f.read(2))
+            name = f.read(ln).decode()
+            (nd,) = struct.unpack("<I", f.read(4))
+            dims = struct.unpack(f"<{nd}I", f.read(4 * nd))
+            count = int(np.prod(dims)) if nd else 1
+            arr = np.frombuffer(f.read(4 * count), np.float32).reshape(dims)
+            params[name] = jnp.asarray(arr)
+    return params
+
+
+def adamw_update(params, grads, m, v, step, lr, b1=0.9, b2=0.95,
+                 eps=1e-8, wd=0.01):
+    new_p, new_m, new_v = {}, {}, {}
+    bc1 = 1.0 - b1**step
+    bc2 = 1.0 - b2**step
+    for k in params:
+        g = grads[k]
+        m_k = b1 * m[k] + (1 - b1) * g
+        v_k = b2 * v[k] + (1 - b2) * g * g
+        upd = (m_k / bc1) / (jnp.sqrt(v_k / bc2) + eps)
+        decay = 0.0 if k.endswith(("rms1", "rms2", "rms_f")) else wd
+        new_p[k] = params[k] - lr * (upd + decay * params[k])
+        new_m[k], new_v[k] = m_k, v_k
+    return new_p, new_m, new_v
+
+
+def cosine_lr(step, total, peak=3e-3, warmup=20, floor=1e-4):
+    if step < warmup:
+        return peak * step / warmup
+    t = (step - warmup) / max(total - warmup, 1)
+    return floor + 0.5 * (peak - floor) * (1 + np.cos(np.pi * t))
+
+
+def recall_accuracy(params, cfg: ModelConfig, n_eps: int = 16, seed: int = 9,
+                    n_pairs: int = 3):
+    """Greedy exact-match probe on recall episodes (full-recompute decode —
+    slow but training-time only)."""
+    from .model import forward_train
+
+    hits = 0.0
+    for i in range(n_eps):
+        rng = data.SplitMix(0xACC ^ (seed << 16) ^ (i * 0x9E3779B9))
+        prompt, ans = data.make_recall_task(rng, n_pairs)
+        seq = list(np.frombuffer(prompt, np.uint8).astype(np.int32))
+        ok = 0
+        for ch in ans.encode():
+            logits = forward_train(
+                params, jnp.asarray(np.array(seq, np.int32)[None]), cfg)
+            tok = int(np.argmax(np.asarray(logits)[0, -1]))
+            if tok != ch:
+                break
+            ok += 1
+            seq.append(tok)
+        hits += ok / len(ans)
+    return hits / n_eps
+
+
+def train(cfg: ModelConfig, steps: int = 400, batch: int = 8,
+          seed: int = 0, log_every: int = 25, ctx: int | None = None,
+          init: dict | None = None, peak_lr: float = 3e-3,
+          ckpt_path: str | None = None):
+    """Returns (params, loss_history). ``init`` resumes from saved params."""
+    ctx = ctx or cfg.train_ctx
+    params = init or init_params(cfg, jax.random.PRNGKey(seed))
+    m = {k: jnp.zeros_like(p) for k, p in params.items()}
+    v = {k: jnp.zeros_like(p) for k, p in params.items()}
+
+    grad_fn = jax.jit(jax.value_and_grad(lambda p, t: loss_fn(p, t, cfg)))
+    update = jax.jit(adamw_update, static_argnames=())
+
+    history = []
+    t0 = time.time()
+    for step in range(1, steps + 1):
+        tokens = jnp.asarray(data.training_batch(seed * 100_000 + step,
+                                                 batch, ctx))
+        loss, grads = grad_fn(params, tokens)
+        lr = cosine_lr(step, steps, peak=peak_lr)
+        params, m, v = update(params, grads, m, v, step, lr)
+        history.append(float(loss))
+        if step % log_every == 0 or step == 1:
+            print(f"step {step:4d}  loss {float(loss):.4f}  "
+                  f"lr {lr:.2e}  {time.time()-t0:.0f}s", flush=True)
+        if step % (log_every * 4) == 0:
+            acc = recall_accuracy(params, cfg, n_eps=8)
+            print(f"step {step:4d}  recall probe {acc:.2f}", flush=True)
+            if ckpt_path:
+                save_weights(ckpt_path, params)
+    return params, history
+
+
+def main():
+    """CLI: (re)train a model, optionally resuming from existing weights.
+
+    cd python && python -m compile.train --model small --steps 600 \
+        --resume ../artifacts/weights_small.bin --peak-lr 1.5e-3
+    """
+    import argparse
+
+    from .configs import CONFIGS
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="small")
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=1)
+    ap.add_argument("--resume", default="")
+    ap.add_argument("--peak-lr", type=float, default=3e-3)
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+    cfg = CONFIGS[args.model]
+    init = load_weights(args.resume) if args.resume else None
+    params, hist = train(cfg, steps=args.steps, batch=args.batch,
+                         seed=args.seed, init=init, peak_lr=args.peak_lr)
+    ppl = evaluate_ppl(params, cfg)
+    acc = recall_accuracy(params, cfg)
+    print(f"final loss {hist[-1]:.4f}  held-out ppl {ppl:.2f}  recall {acc:.2f}")
+    out = args.out or f"../artifacts/weights_{args.model}.bin"
+    save_weights(out, params)
+    print(f"saved {out}")
+
+
+if __name__ == "__main__":
+    main()
+
+
+def evaluate_ppl(params, cfg: ModelConfig, n_docs: int = 8, seed: int = 1):
+    docs = jnp.asarray(data.eval_docs(seed, n_docs, cfg.train_ctx))
+    loss = float(loss_fn(params, docs, cfg))
+    return float(np.exp(loss))

@@ -1,0 +1,178 @@
+"""Fused Pallas decode attention + chunked prefill vs the oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, ref
+
+G = 32
+
+
+def build_case(rng, b, h, t, r, dh, kb, vb, nq, nr):
+    K = jnp.asarray(rng.normal(size=(b, h, t, dh)).astype(np.float32))
+    V = jnp.asarray(rng.normal(size=(b, h, t, dh)).astype(np.float32))
+    dummy = jnp.zeros((b, h, 1, 1), jnp.float32)
+    if kb > 0:
+        kq, ks, kz = ref.quant_k(K, kb, G)
+    else:
+        kq, ks, kz = K, dummy, dummy
+    if vb > 0:
+        vq, vs, vz = ref.quant_v(V, vb, G)
+    else:
+        vq, vs, vz = V, dummy, dummy
+    xq = jnp.asarray(rng.normal(size=(b, h, dh)).astype(np.float32))
+    kres = jnp.asarray(rng.normal(size=(b, h, r, dh)).astype(np.float32))
+    vres = jnp.asarray(rng.normal(size=(b, h, r, dh)).astype(np.float32))
+    kcur = jnp.asarray(rng.normal(size=(b, h, dh)).astype(np.float32))
+    vcur = jnp.asarray(rng.normal(size=(b, h, dh)).astype(np.float32))
+    mask_q = jnp.where(jnp.arange(t)[None, :] < jnp.asarray(nq)[:, None],
+                       0.0, -1e9).astype(jnp.float32)
+    mask_r = jnp.where(jnp.arange(r)[None, :] < jnp.asarray(nr)[:, None],
+                       0.0, -1e9).astype(jnp.float32)
+    return (xq, kq, ks, kz, vq, vs, vz, kres, vres, kcur, vcur,
+            mask_q, mask_r)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    kb=st.sampled_from((0, 1, 2, 4)),
+    vb=st.sampled_from((0, 1, 2, 4)),
+    b=st.integers(1, 3),
+    h=st.integers(1, 2),
+    seed=st.integers(0, 2**31),
+)
+def test_attn_decode_matches_ref(kb, vb, b, h, seed):
+    rng = np.random.default_rng(seed)
+    t, r, dh = 64, 32, 32
+    nq = rng.integers(0, t + 1, size=b)
+    nr = rng.integers(0, r + 1, size=b)
+    args = build_case(rng, b, h, t, r, dh, kb, vb, nq, nr)
+    out = attention.attn_decode(*args, k_bits=kb, v_bits=vb, group=G)
+    out_r = ref.attn_decode_ref(*args, kb, vb, G)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_r),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_attn_decode_empty_cache():
+    """nq = nr = 0: attention must fall back to the current token only."""
+    rng = np.random.default_rng(0)
+    b, h, t, r, dh = 2, 2, 64, 32, 32
+    args = build_case(rng, b, h, t, r, dh, 2, 2, np.zeros(b, int),
+                      np.zeros(b, int))
+    out = attention.attn_decode(*args, k_bits=2, v_bits=2, group=G)
+    vcur = args[10]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(vcur),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_attn_decode_quant_error_ordering():
+    """More bits on K must give output closer to the float-cache result
+    (averaged over several random instances — the paper's premise)."""
+    errs = {kb: 0.0 for kb in (1, 2, 4)}
+    for seed in range(8):
+        rng = np.random.default_rng(seed)
+        b, h, t, r, dh = 1, 2, 64, 32, 32
+        nq = np.full(b, t)
+        nr = np.full(b, r)
+        base = build_case(rng, b, h, t, r, dh, 0, 0, nq, nr)
+        out_f = np.asarray(
+            ref.attn_decode_ref(*base, 0, 0, G))
+        K = base[1]
+        for kb in (1, 2, 4):
+            kq, ks, kz = ref.quant_k(K, kb, G)
+            args = list(base)
+            args[1], args[2], args[3] = kq, ks, kz
+            out_q = np.asarray(ref.attn_decode_ref(*args, kb, 0, G))
+            errs[kb] += float(((out_q - out_f) ** 2).mean())
+    assert errs[1] > errs[2] > errs[4]
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    kb=st.sampled_from((0, 1, 2)),
+    vb=st.sampled_from((0, 1, 2)),
+    seed=st.integers(0, 2**31),
+)
+def test_prefill_chunk_matches_decode_composition(kb, vb, seed):
+    """Running a C-token chunk must equal running C decode steps where each
+    step sees the previous chunk tokens as extra residual entries."""
+    rng = np.random.default_rng(seed)
+    b, h, t, r, dh, c = 1, 2, 64, 32, 32, 4
+    nq, nr = np.full(b, t), np.full(b, 16)
+    base = build_case(rng, b, h, t, r, dh, kb, vb, nq, nr)
+    (xq, kq, ks, kz, vq, vs, vz, kres, vres, _, _, mask_q, mask_r) = base
+    xqc = jnp.asarray(rng.normal(size=(b, h, c, dh)).astype(np.float32))
+    kch = jnp.asarray(rng.normal(size=(b, h, c, dh)).astype(np.float32))
+    vch = jnp.asarray(rng.normal(size=(b, h, c, dh)).astype(np.float32))
+
+    out_chunk = attention.attn_prefill_chunk(
+        xqc, kq, ks, kz, vq, vs, vz, kres, vres, kch, vch, mask_q, mask_r,
+        k_bits=kb, v_bits=vb, group=G)
+
+    # decode composition: step j attends over cache + residual augmented
+    # with chunk tokens < j, current = chunk token j
+    for j in range(c):
+        r_aug = int(nr[0]) + j
+        kres_j = jnp.concatenate([kres[:, :, :int(nr[0])], kch[:, :, :j],
+                                  kres[:, :, : r - r_aug] * 0], axis=2)[:, :, :r]
+        vres_j = jnp.concatenate([vres[:, :, :int(nr[0])], vch[:, :, :j],
+                                  vres[:, :, : r - r_aug] * 0], axis=2)[:, :, :r]
+        mask_r_j = jnp.where(jnp.arange(r)[None, :] < r_aug, 0.0, -1e9)
+        out_j = ref.attn_decode_ref(
+            xqc[:, :, j], kq, ks, kz, vq, vs, vz, kres_j, vres_j,
+            kch[:, :, j], vch[:, :, j], mask_q,
+            mask_r_j.astype(jnp.float32), kb, vb, G)
+        np.testing.assert_allclose(np.asarray(out_chunk[:, :, j]),
+                                   np.asarray(out_j), rtol=2e-4, atol=2e-4)
+
+
+def test_prefill_causality():
+    """Changing chunk token j must not affect outputs at positions < j."""
+    rng = np.random.default_rng(5)
+    b, h, t, r, dh, c = 1, 1, 64, 32, 32, 8
+    base = build_case(rng, b, h, t, r, dh, 0, 0, np.full(b, 0), np.full(b, 0))
+    (_, kq, ks, kz, vq, vs, vz, kres, vres, _, _, mask_q, mask_r) = base
+    xqc = jnp.asarray(rng.normal(size=(b, h, c, dh)).astype(np.float32))
+    kch = jnp.asarray(rng.normal(size=(b, h, c, dh)).astype(np.float32))
+    vch = jnp.asarray(rng.normal(size=(b, h, c, dh)).astype(np.float32))
+    out1 = attention.attn_prefill_chunk(
+        xqc, kq, ks, kz, vq, vs, vz, kres, vres, kch, vch, mask_q, mask_r,
+        k_bits=0, v_bits=0, group=G)
+    kch2 = kch.at[:, :, -1].set(99.0)
+    vch2 = vch.at[:, :, -1].set(-99.0)
+    out2 = attention.attn_prefill_chunk(
+        xqc, kq, ks, kz, vq, vs, vz, kres, vres, kch2, vch2, mask_q, mask_r,
+        k_bits=0, v_bits=0, group=G)
+    np.testing.assert_allclose(np.asarray(out1[:, :, :-1]),
+                               np.asarray(out2[:, :, :-1]), rtol=1e-5)
+    assert not np.allclose(np.asarray(out1[:, :, -1]),
+                           np.asarray(out2[:, :, -1]))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    kb=st.sampled_from((0, 1, 2)),
+    vb=st.sampled_from((0, 1, 2)),
+    c=st.sampled_from((4, 8)),
+    seed=st.integers(0, 2**31),
+)
+def test_prefill_pallas_matches_jnp_oracle(kb, vb, c, seed):
+    """The fused Pallas prefill kernel must equal the pure-jnp oracle."""
+    rng = np.random.default_rng(seed)
+    b, h, t, r, dh = 2, 2, 64, 32, 32
+    nq = rng.integers(0, t + 1, size=b)
+    nr = rng.integers(0, r + 1, size=b)
+    base = build_case(rng, b, h, t, r, dh, kb, vb, nq, nr)
+    (_, kq, ks, kz, vq, vs, vz, kres, vres, _, _, mask_q, mask_r) = base
+    xqc = jnp.asarray(rng.normal(size=(b, h, c, dh)).astype(np.float32))
+    kch = jnp.asarray(rng.normal(size=(b, h, c, dh)).astype(np.float32))
+    vch = jnp.asarray(rng.normal(size=(b, h, c, dh)).astype(np.float32))
+    kw = dict(k_bits=kb, v_bits=vb, group=G)
+    got = attention.attn_prefill_chunk(
+        xqc, kq, ks, kz, vq, vs, vz, kres, vres, kch, vch, mask_q, mask_r, **kw)
+    want = attention.attn_prefill_chunk_ref(
+        xqc, kq, ks, kz, vq, vs, vz, kres, vres, kch, vch, mask_q, mask_r, **kw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)

@@ -1,0 +1,153 @@
+"""L2 model: shapes, cache-protocol equivalence, asymmetric sensitivity."""
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile.configs import TINY
+from compile.engine_sim import AsymKvPolicy, EngineSim
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(TINY, jax.random.PRNGKey(7))
+
+
+def test_forward_train_shapes(params):
+    toks = jnp.asarray(np.random.default_rng(0).integers(
+        0, 255, size=(2, 48)).astype(np.int32))
+    logits = M.forward_train(params, toks, TINY)
+    assert logits.shape == (2, 48, TINY.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_loss_finite_and_near_uniform_at_init(params):
+    toks = jnp.asarray(np.random.default_rng(1).integers(
+        0, 255, size=(2, 64)).astype(np.int32))
+    loss = float(M.loss_fn(params, toks, TINY))
+    assert np.isfinite(loss)
+    assert abs(loss - np.log(256)) < 1.5
+
+
+def test_engine_float_matches_full_forward(params):
+    """The cache state machine (chunked prefill + decode, float path) must
+    reproduce plain full attention exactly (same math, different schedule).
+
+    This is the protocol-correctness anchor: folding windows, masks, RoPE
+    positions and the [quantized | residual | current] segmenting all have
+    to line up or this diverges."""
+    rng = np.random.default_rng(2)
+    t0, n_steps = 70, 6  # t0 deliberately not a multiple of chunk (pad path)
+    toks = rng.integers(0, 255, size=(1, t0)).astype(np.int32)
+
+    eng = EngineSim(TINY, params, AsymKvPolicy.float_(TINY.n_layers), batch=1)
+    logits_pref = eng.prefill(toks)
+
+    full = M.forward_train(params, jnp.asarray(toks), TINY)
+    np.testing.assert_allclose(logits_pref[0], np.asarray(full)[0, -1],
+                               rtol=2e-4, atol=2e-4)
+
+    # a few decode steps, still compared against full recompute
+    seq = list(toks[0])
+    cur = int(np.argmax(logits_pref[0]))
+    for _ in range(n_steps):
+        seq.append(cur)
+        step_logits = eng.decode_step(np.array([cur]))
+        full = M.forward_train(params, jnp.asarray(np.array(seq)[None]), TINY)
+        np.testing.assert_allclose(step_logits[0], np.asarray(full)[0, -1],
+                                   rtol=3e-4, atol=3e-4)
+        cur = int(np.argmax(step_logits[0]))
+
+
+def test_engine_folding_crosses_residual_boundary(params):
+    """Prefill long enough to force folds (t0 > R) stays correct (float)."""
+    rng = np.random.default_rng(3)
+    t0 = TINY.quant.residual + TINY.quant.group + 9  # forces ≥2 folds
+    toks = rng.integers(0, 255, size=(1, t0)).astype(np.int32)
+    eng = EngineSim(TINY, params, AsymKvPolicy.float_(TINY.n_layers), batch=1)
+    logits = eng.prefill(toks)
+    full = M.forward_train(params, jnp.asarray(toks), TINY)
+    np.testing.assert_allclose(logits[0], np.asarray(full)[0, -1],
+                               rtol=3e-4, atol=3e-4)
+    assert eng.caches[0].n_q > 0  # folding actually happened
+
+
+@pytest.mark.parametrize("l_k,l_v", [(2, 0), (0, 2), (2, 2), (1, 1)])
+def test_engine_quantized_runs_and_stays_finite(params, l_k, l_v):
+    rng = np.random.default_rng(4)
+    toks = rng.integers(0, 255, size=(2, 80)).astype(np.int32)
+    eng = EngineSim(TINY, params, AsymKvPolicy(TINY.n_layers, l_k, l_v),
+                    batch=2)
+    logits = eng.prefill(toks)
+    assert np.all(np.isfinite(logits))
+    out = eng.generate(toks, 4)
+    assert out.shape == (2, 4)
+
+
+def test_quantized_logits_error_monotone_in_bits(params):
+    """KIVI-b sweeps: logits MSE vs float must shrink as bits grow."""
+    rng = np.random.default_rng(5)
+    toks = rng.integers(0, 255, size=(1, 96)).astype(np.int32)
+    ref_eng = EngineSim(TINY, params, AsymKvPolicy.float_(TINY.n_layers))
+    ref_logits = ref_eng.prefill(toks)
+    errs = []
+    for bits in (1, 2, 4):
+        eng = EngineSim(TINY, params, AsymKvPolicy.kivi(TINY.n_layers, bits))
+        logits = eng.prefill(toks)
+        errs.append(float(((logits - ref_logits) ** 2).mean()))
+    assert errs[0] > errs[1] > errs[2]
+
+
+def test_stage_mse_key_amplification():
+    """The paper's §3 observation: with equal matrix-level quantization
+    error, the OUTPUT error from K-quantization exceeds V-quantization
+    (amplified by the x_q matmul + softmax). Checked on aggregate over
+    random attention instances.
+
+    The amplification scales with how peaked the attention is: with iid
+    N(0,1) queries the softmax is near-uniform and the ratio hovers ~1;
+    trained models have large query norms (peaked attention), modeled here
+    with a ×3 query scale. The Fig. 1 bench measures the same quantity on
+    REAL trained activations via the stage_mse artifact."""
+    ratios = []
+    for seed in range(6):
+        rng = np.random.default_rng(seed)
+        h, t, dh = 2, 64, 32
+        xq = jnp.asarray(3.0 * rng.normal(size=(1, h, dh)).astype(np.float32))
+        K = jnp.asarray(rng.normal(size=(1, h, t, dh)).astype(np.float32))
+        V = jnp.asarray(rng.normal(size=(1, h, t, dh)).astype(np.float32))
+        mask = jnp.zeros((1, t), jnp.float32)
+        mse_k, mse_v, _, _ = M.stage_mse(xq, K, V, mask, bits=2, group=32)
+        # comparable matrix-level error (stage 0) …
+        assert 0.2 < float(mse_k[0] / mse_v[0]) < 5.0
+        ratios.append(float(mse_k[3] / mse_v[3]))
+    # … but amplified output error for K on average
+    assert np.mean(ratios) > 1.5
+
+
+def test_probe_matches_layer_fwd(params):
+    """probe_fwd must equal the float layer_fwd while exposing xq."""
+    rng = np.random.default_rng(6)
+    cfg = TINY
+    b, h, t, dh = 1, cfg.n_heads, cfg.max_ctx, cfg.d_head
+    lp = M.layer_params(params, 0)
+    x = jnp.asarray(rng.normal(size=(b, 1, cfg.d_model)).astype(np.float32))
+    pos = jnp.asarray(np.array([t // 2], np.int32))
+    K = jnp.asarray(rng.normal(size=(b, h, t, dh)).astype(np.float32))
+    V = jnp.asarray(rng.normal(size=(b, h, t, dh)).astype(np.float32))
+    mask = jnp.where(jnp.arange(t)[None, :] < t // 2, 0.0, -1e9).astype(
+        jnp.float32)
+    x_probe, k_p, v_p, xq = M.probe_fwd(*lp, x, pos, K, V, mask, cfg=cfg)
+    assert xq.shape == (b, h, dh)
+
+    dummy = jnp.zeros((b, h, 1, 1), jnp.float32)
+    zero_res = jnp.zeros((b, h, cfg.quant.residual, dh), jnp.float32)
+    mask_r = jnp.full((b, cfg.quant.residual), -1e9, jnp.float32)
+    x_ref, k_r, v_r = M.layer_fwd(
+        *lp, x, pos, K, dummy, dummy, V, dummy, dummy, zero_res, zero_res,
+        mask, mask_r, cfg=cfg, k_bits=0, v_bits=0)
+    np.testing.assert_allclose(np.asarray(x_probe), np.asarray(x_ref),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(k_p), np.asarray(k_r), rtol=1e-5)

@@ -1,0 +1,151 @@
+"""L1 quantization kernels vs the pure-jnp oracle (hypothesis sweeps)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quant, ref
+
+BITS = (1, 2, 4)
+
+
+def randf(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32) * scale)
+
+
+# ---------------------------------------------------------------------------
+# oracle self-properties
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(
+    bits=st.sampled_from(BITS),
+    group=st.sampled_from((8, 16, 32)),
+    ngroups=st.integers(1, 4),
+    rows=st.integers(1, 5),
+    seed=st.integers(0, 2**31),
+)
+def test_rtn_roundtrip_error_bound(bits, group, ngroups, rows, seed):
+    """|x - dequant(quant(x))| <= scale/2 element-wise (RTN guarantee)."""
+    rng = np.random.default_rng(seed)
+    x = randf(rng, rows, ngroups * group, scale=3.0)
+    q, s, z = ref.rtn_quantize(x, bits, group, axis=-1)
+    x2 = ref.rtn_dequantize(q, s, z, group, axis=-1)
+    bound = np.repeat(np.asarray(s), group, axis=-1) * 0.5 + 1e-5
+    assert np.all(np.abs(np.asarray(x2 - x)) <= bound)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    bits=st.sampled_from(BITS),
+    n=st.sampled_from((8, 16, 32, 64)),
+    rows=st.integers(1, 6),
+    seed=st.integers(0, 2**31),
+)
+def test_pack_unpack_inverse(bits, n, rows, seed):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.integers(0, 2**bits, size=(rows, n)).astype(np.uint32))
+    packed = ref.pack_bits(q, bits, axis=-1)
+    assert packed.shape == (rows, n * bits // 8)
+    un = ref.unpack_bits(packed, bits, axis=-1)
+    np.testing.assert_array_equal(np.asarray(un), np.asarray(q))
+
+
+def test_pack_layout_is_little_endian_within_byte():
+    # values [1, 0, 1, 0, 1, 1, 0, 1] at 1 bit -> byte 0b10110101 = 0xB5
+    q = jnp.asarray(np.array([[1, 0, 1, 0, 1, 1, 0, 1]], np.uint32))
+    packed = ref.pack_bits(q, 1, axis=-1)
+    assert int(np.asarray(packed)[0, 0]) == 0b10110101
+    # 2-bit: [3, 0, 2, 1] -> 0b01_10_00_11 = 0x63
+    q2 = jnp.asarray(np.array([[3, 0, 2, 1]], np.uint32))
+    assert int(np.asarray(ref.pack_bits(q2, 2, axis=-1))[0, 0]) == 0b01100011
+
+
+def test_constant_group_quantizes_exactly():
+    """A constant group has span 0 -> scale guard 1.0, q=0, x* == x."""
+    x = jnp.full((2, 32), 0.73, jnp.float32)
+    q, s, z = ref.rtn_quantize(x, 2, 32, axis=-1)
+    assert np.all(np.asarray(q) == 0)
+    x2 = ref.rtn_dequantize(q, s, z, 32, axis=-1)
+    np.testing.assert_allclose(np.asarray(x2), 0.73, rtol=1e-6)
+
+
+def test_mse_decreases_with_bits():
+    rng = np.random.default_rng(0)
+    k = randf(rng, 2, 4, 64, 32)
+    errs = []
+    for bits in BITS:
+        pk, s, z = ref.quant_k(k, bits, 32)
+        kd = ref.dequant_k(pk, s, z, bits, 32)
+        errs.append(float(jnp.mean((kd - k) ** 2)))
+    assert errs[0] > errs[1] > errs[2]
+
+
+# ---------------------------------------------------------------------------
+# Pallas fold kernels vs oracle
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    bits=st.sampled_from(BITS),
+    b=st.integers(1, 3),
+    h=st.integers(1, 3),
+    seed=st.integers(0, 2**31),
+    scale=st.sampled_from((0.1, 1.0, 50.0)),
+)
+def test_fold_k_matches_ref(bits, b, h, seed, scale):
+    rng = np.random.default_rng(seed)
+    kg = randf(rng, b, h, 32, 32, scale=scale)
+    pk, s, z = quant.fold_k(kg, bits=bits)
+    pk_r, s_r, z_r = ref.fold_k_ref(kg, bits)
+    np.testing.assert_array_equal(np.asarray(pk), np.asarray(pk_r))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_r), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(z_r), rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    bits=st.sampled_from(BITS),
+    b=st.integers(1, 3),
+    h=st.integers(1, 3),
+    seed=st.integers(0, 2**31),
+    scale=st.sampled_from((0.1, 1.0, 50.0)),
+)
+def test_fold_v_matches_ref(bits, b, h, seed, scale):
+    rng = np.random.default_rng(seed)
+    vg = randf(rng, b, h, 32, 32, scale=scale)
+    pv, s, z = quant.fold_v(vg, bits=bits, group=32)
+    pv_r, s_r, z_r = ref.fold_v_ref(vg, bits, 32)
+    np.testing.assert_array_equal(np.asarray(pv), np.asarray(pv_r))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_r), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(z_r), rtol=1e-6)
+
+
+def test_fold_k_then_dequant_k_roundtrip():
+    """fold_k output must be consumable by the dequant layout used in the
+    attention kernel (scale layout compatibility across modules)."""
+    rng = np.random.default_rng(3)
+    kg = randf(rng, 1, 2, 32, 32)
+    for bits in BITS:
+        pk, s, z = quant.fold_k(kg, bits=bits)
+        kd = ref.dequant_k(pk, s, z, bits, 32)
+        bound = np.max(np.asarray(s)) * 0.5 + 1e-5
+        assert float(jnp.max(jnp.abs(kd - kg))) <= bound
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_unpack_dequant_helpers_match_ref(bits):
+    rng = np.random.default_rng(11)
+    k = randf(rng, 64, 32)  # [T, Dh]
+    pk, s, z = ref.quant_k(k, bits, 32)
+    out = quant.unpack_dequant_k(pk, s, z, bits=bits, group=32)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.dequant_k(pk, s, z, bits, 32)),
+        rtol=1e-6)
+    v = randf(rng, 64, 32)
+    pv, sv, zv = ref.quant_v(v, bits, 32)
+    out_v = quant.unpack_dequant_v(pv, sv, zv, bits=bits, group=32)
+    np.testing.assert_allclose(
+        np.asarray(out_v), np.asarray(ref.dequant_v(pv, sv, zv, bits, 32)),
+        rtol=1e-6)

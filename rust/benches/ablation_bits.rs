@@ -1,0 +1,82 @@
+//! Ablation: the high/low bit pair of the asymmetric scheme.
+//!
+//! The paper fixes (high, low) = (2, 1) but motivates "e.g. a 4-bit
+//! strategy" for the high tier (§1/§4). This sweep varies the pair at a
+//! fixed l_k = L/2, l_v = 0 and reports quality vs exact cache bytes —
+//! validating that (2,1) sits at the knee the paper claims, plus the
+//! sensitivity-ordered allocation extension at matched budgets.
+
+use std::sync::Arc;
+
+use asymkv::engine::Engine;
+use asymkv::evals;
+use asymkv::quant::QuantPolicy;
+use asymkv::runtime::Runtime;
+use asymkv::search;
+use asymkv::util::bench::{note, Table};
+use asymkv::workload::tasks;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::var("ASYMKV_ARTIFACTS").unwrap_or("artifacts/small".into());
+    let rt = Arc::new(Runtime::load(&dir)?);
+    let engine = Engine::new(rt, 1 << 30)?;
+    let m = engine.manifest();
+    let n = m.n_layers;
+    let suite = tasks::recall_suite(0xAB17, 20, 12);
+
+    let cache_kib = |p: &QuantPolicy| -> anyhow::Result<f64> {
+        let id = engine.create_seq(p)?;
+        let b = engine.with_seq(id, |s| s.capacity_bytes())?;
+        engine.free_seq(id)?;
+        Ok(b as f64 / 1024.0)
+    };
+
+    note("ablation_bits", &format!(
+        "\nBit-pair ablation — model {}, l_k = {} of {n}, l_v = 0",
+        m.name, n / 2));
+    let float_acc =
+        evals::recall_accuracy(&engine, &QuantPolicy::float32(n), &suite)?;
+    let mut t = Table::new(
+        "high:low ablation at fixed (l_k, l_v)",
+        &["pair", "recall acc", "cache KiB", "frac of float"],
+    );
+    for (high, low) in [(2u8, 1u8), (4, 1), (4, 2), (2, 2), (1, 1)] {
+        let p = QuantPolicy::asymkv(n, n / 2, 0, high, low);
+        let acc = evals::recall_accuracy(&engine, &p, &suite)?;
+        t.row(vec![
+            format!("{high}:{low}"),
+            format!("{acc:.3}"),
+            format!("{:.1}", cache_kib(&p)?),
+            format!("{:.2}", acc / float_acc.max(1e-9)),
+        ]);
+    }
+    t.emit("ablation_bits");
+
+    // --- sensitivity-ordered allocation vs the paper's prefix scheme ---
+    note("ablation_bits",
+         "\nExtension: per-slot sensitivity allocation vs prefix-l_k at \
+          equal memory budgets (2·L+1 probe evaluations).");
+    let probe_suite = tasks::recall_suite(0xAB18, 10, 12);
+    let sens = search::measure_sensitivities(n, 2, 1, |p| {
+        evals::recall_accuracy(&engine, p, &probe_suite).unwrap_or(0.0)
+    });
+    let mut t2 = Table::new(
+        "sensitivity allocation vs prefix (same high-slot budget)",
+        &["budget", "prefix policy", "prefix acc", "sens acc"],
+    );
+    for budget in [n / 2, n, n + n / 2] {
+        let prefix = QuantPolicy::asymkv21(n, budget.min(n),
+                                           budget.saturating_sub(n));
+        let sens_p = search::sensitivity_allocate(&sens, n, budget, 2, 1);
+        let pa = evals::recall_accuracy(&engine, &prefix, &suite)?;
+        let sa = evals::recall_accuracy(&engine, &sens_p, &suite)?;
+        t2.row(vec![
+            budget.to_string(),
+            prefix.name.clone(),
+            format!("{pa:.3}"),
+            format!("{sa:.3}"),
+        ]);
+    }
+    t2.emit("ablation_bits");
+    Ok(())
+}

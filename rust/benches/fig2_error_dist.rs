@@ -1,0 +1,97 @@
+//! Fig. 2 — Distribution of the attention-output error from K-quantization
+//! vs V-quantization, for three decoder layers.
+//!
+//! Paper: the key-quantization error distribution is "more sparse around 0"
+//! (heavier tails) than the value-quantization error, hence the larger MSE.
+//! Here: histograms of the per-element output error on real activations of
+//! the pretrained `small` model, plus the fraction of mass near zero.
+
+use std::sync::Arc;
+
+use asymkv::analysis;
+use asymkv::engine::Engine;
+use asymkv::model::ByteTokenizer;
+use asymkv::runtime::Runtime;
+use asymkv::util::bench::{note, Table};
+use asymkv::util::rng::SplitMix;
+use asymkv::util::stats::variance;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::var("ASYMKV_ARTIFACTS").unwrap_or("artifacts/small".into());
+    let rt = Arc::new(Runtime::load(&dir)?);
+    let engine = Engine::new(rt, 1 << 30)?;
+    let m = engine.manifest();
+
+    let tok = ByteTokenizer;
+    // aggregate several prompts for enough error samples per layer
+    let mut per_layer_k: Vec<Vec<f32>> = vec![vec![]; m.n_layers];
+    let mut per_layer_v: Vec<Vec<f32>> = vec![vec![]; m.n_layers];
+    for seed in 0..6u64 {
+        let mut rng = SplitMix::new(0xF162 + seed);
+        // retrieval positions (see fig1_mse_stages for why)
+        let ep = asymkv::workload::tasks::recall_episode(&mut rng, 18);
+        let acts = analysis::collect_activations(&engine, &tok.encode(&ep.prompt))?;
+        for a in &acts {
+            let s = analysis::stage_mse(&engine, a, 2)?;
+            per_layer_k[a.layer].extend(&s.err_k);
+            per_layer_v[a.layer].extend(&s.err_v);
+        }
+    }
+
+    // pick three layers like the paper (early / middle / late)
+    let picks = [0, m.n_layers / 2, m.n_layers - 1];
+    note("fig2_error_dist", &format!(
+        "\nFig. 2 reproduction — output-error distributions, model {}, \
+         2-bit, layers {:?} (paper: 3 Llama-2 layers)", m.name, picks));
+
+    let mut t = Table::new(
+        "Fig.2: error-distribution summary (K vs V quantization)",
+        &["layer", "source", "variance", "frac |e| < σ/2", "frac |e| > 2σ"],
+    );
+    for &l in &picks {
+        for (name, errs) in [("K", &per_layer_k[l]), ("V", &per_layer_v[l])] {
+            let var = variance(errs);
+            let sd = var.sqrt();
+            let n = errs.len() as f64;
+            let near = errs.iter().filter(|e| (e.abs() as f64) < sd / 2.0).count()
+                as f64 / n;
+            let tail = errs.iter().filter(|e| (e.abs() as f64) > 2.0 * sd).count()
+                as f64 / n;
+            t.row(vec![
+                l.to_string(),
+                name.to_string(),
+                format!("{var:.3e}"),
+                format!("{near:.3}"),
+                format!("{tail:.3}"),
+            ]);
+        }
+    }
+    t.emit("fig2_error_dist");
+
+    // full histogram for the middle layer
+    let l = picks[1];
+    let s = analysis::StageMse {
+        layer: l,
+        bits: 2,
+        mse_k: [0.0; 4],
+        mse_v: [0.0; 4],
+        err_k: per_layer_k[l].clone(),
+        err_v: per_layer_v[l].clone(),
+    };
+    let (hk, hv) = analysis::error_histograms(&s, 15);
+    note("fig2_error_dist", &format!("\nlayer {l} K-quant error histogram:"));
+    note("fig2_error_dist", &hk.render(40));
+    note("fig2_error_dist", &format!("layer {l} V-quant error histogram:"));
+    note("fig2_error_dist", &hv.render(40));
+
+    let vk: f64 = picks.iter().map(|&l| variance(&per_layer_k[l])).sum();
+    let vv: f64 = picks.iter().map(|&l| variance(&per_layer_v[l])).sum();
+    note("fig2_error_dist", &format!(
+        "\nK-error variance / V-error variance = {:.2}. The paper measures \
+         >1 on Llama (diffuse attention); our retrieval-trained substitute \
+         is in the peaked regime where K noise is either absorbed or flips \
+         the match outright — see the attention-flip metric in \
+         fig1_mse_stages for the regime-independent form of the asymmetry.",
+        vk / vv.max(1e-30)));
+    Ok(())
+}

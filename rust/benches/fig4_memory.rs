@@ -1,0 +1,161 @@
+//! Fig. 4 — Memory variation of AsymKV.
+//!
+//! Paper: peak GPU memory at batch 48 (7b) / 36 (13b), generation length
+//! 4096, while ramping l_k from 0→L with l_v = 0, then l_v from 0→L with
+//! l_k = L. Memory grows ~linearly; the quality-parity AsymKV point saves
+//! 6-10.4 GB vs KIVI-2bit.
+//!
+//! Here: EXACT bytes from the bit-packed cache pool (packed data + group
+//! scales/zeros + fp32 residual window) for a batch of sequences filled to
+//! the full context — measured by allocation, not modelled. The same ramp,
+//! plus the quality-parity points from the Table 1/2 benches.
+
+use std::sync::Arc;
+
+use asymkv::engine::Engine;
+use asymkv::quant::QuantPolicy;
+use asymkv::runtime::Runtime;
+use asymkv::util::bench::{note, Table};
+use asymkv::util::rng::SplitMix;
+
+fn fill_and_measure(
+    engine: &Engine,
+    policy: &QuantPolicy,
+    batch: usize,
+) -> anyhow::Result<(usize, usize)> {
+    // allocate `batch` sequences and stream tokens to full context so the
+    // packed regions + residual windows are genuinely populated
+    let m = engine.manifest();
+    let (h, dh) = (m.n_heads, m.d_head);
+    let total = m.max_ctx + m.residual - 1;
+    let mut rng = SplitMix::new(0xF164);
+    let mut ids = Vec::new();
+    for _ in 0..batch {
+        ids.push(engine.create_seq(policy)?);
+    }
+    for &id in &ids {
+        engine.with_seq(id, |seq| {
+            let k: Vec<f32> = rng.normal_f32_vec(h * dh);
+            let v: Vec<f32> = rng.normal_f32_vec(h * dh);
+            for layer in &mut seq.layers {
+                for _ in 0..total {
+                    layer.append_token(&k, &v);
+                }
+            }
+        })?;
+    }
+    let used: usize = ids
+        .iter()
+        .map(|&id| engine.with_seq(id, |s| s.used_bytes()).unwrap())
+        .sum();
+    let cap = engine.pool.stats().in_use_bytes;
+    for id in ids {
+        engine.free_seq(id)?;
+    }
+    Ok((used, cap))
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::var("ASYMKV_ARTIFACTS").unwrap_or("artifacts/small".into());
+    let rt = Arc::new(Runtime::load(&dir)?);
+    let engine = Engine::new(rt, 8 << 30)?;
+    let m = engine.manifest();
+    let n = m.n_layers;
+    let batch = 8; // paper: 48/36 on 80 GB; scaled to this testbed
+
+    note("fig4_memory", &format!(
+        "\nFig. 4 reproduction — exact packed-cache bytes, batch {batch}, \
+         cache filled to {} tokens, model {} \
+         (paper: batch 48/36, gen 4096, A800 80 GB)",
+        m.max_ctx + m.residual - 1, m.name));
+
+    let mut t = Table::new(
+        "Fig.4: cache memory vs (l_k, l_v) ramp",
+        &["config", "used MiB", "alloc MiB", "vs KIVI-2bit"],
+    );
+    let mib = |b: usize| b as f64 / (1024.0 * 1024.0);
+    let (kivi_used, _) =
+        fill_and_measure(&engine, &QuantPolicy::kivi(n, 2), batch)?;
+
+    let mut ramp = Vec::new();
+    for lk in 0..=n {
+        ramp.push(QuantPolicy::asymkv21(n, lk, 0));
+    }
+    for lv in 1..=n {
+        ramp.push(QuantPolicy::asymkv21(n, n, lv));
+    }
+    let mut used_series = Vec::new();
+    for p in &ramp {
+        let (used, cap) = fill_and_measure(&engine, p, batch)?;
+        used_series.push(used);
+        t.row(vec![
+            p.name.clone(),
+            format!("{:.2}", mib(used)),
+            format!("{:.2}", mib(cap)),
+            format!("{:+.1}%", (used as f64 / kivi_used as f64 - 1.0) * 100.0),
+        ]);
+    }
+    let (float_used, _) =
+        fill_and_measure(&engine, &QuantPolicy::float32(n), batch)?;
+    t.row(vec!["float".into(), format!("{:.2}", mib(float_used)),
+               "-".into(),
+               format!("{:+.1}%", (float_used as f64 / kivi_used as f64 - 1.0) * 100.0)]);
+    t.emit("fig4_memory");
+
+    // linearity + the paper's savings claim at the quality-parity points
+    let monotone = used_series.windows(2).all(|w| w[1] >= w[0]);
+    let parity_normal = QuantPolicy::asymkv21(n, n / 2, 0); // Tab.1 parity
+    let (parity_used, _) = fill_and_measure(&engine, &parity_normal, batch)?;
+    note("fig4_memory", &format!(
+        "\nPaper shape: ramp is monotone ({}), endpoint = KIVI-2bit \
+         ({:.2} vs {:.2} MiB), and the Tab.1 quality-parity point \
+         ({}) saves {:.2} MiB ({:.0}%) of cache vs KIVI-2bit \
+         (paper: 9.0/10.4 GB at Llama scale).",
+        if monotone { "yes" } else { "NO" },
+        mib(*used_series.last().unwrap()),
+        mib(kivi_used),
+        parity_normal.name,
+        mib(kivi_used.saturating_sub(parity_used)),
+        (1.0 - parity_used as f64 / kivi_used as f64) * 100.0));
+
+    // ---- the paper's ABSOLUTE numbers, analytically at Llama geometry ----
+    // Our byte accounting, evaluated at the paper's exact setup: Llama-2-7b
+    // (32 layers, 32 heads × 128) batch 48 and Llama-2-13b (40 layers,
+    // 40 × 128) batch 36, generation length 4096 (paper §5.2.3 / §A.1).
+    let gib = |b: f64| b / (1024.0 * 1024.0 * 1024.0);
+    let mut t3 = Table::new(
+        "Fig.4 at paper scale (analytic, our byte accounting)",
+        &["model", "config", "cache GiB", "saving vs KIVI-2bit"],
+    );
+    for (name, layers, heads, dh, bsz, parity_lk) in [
+        ("Llama-2-7b", 32usize, 32usize, 128usize, 48usize, 16usize),
+        ("Llama-2-13b", 40, 40, 128, 36, 20),
+    ] {
+        let tokens = 4096usize;
+        let bytes = |p: &QuantPolicy| -> f64 {
+            (p.bytes_per_token(heads, dh, m.group) * tokens * bsz) as f64
+        };
+        let kivi = bytes(&QuantPolicy::kivi(layers, 2));
+        for p in [
+            QuantPolicy::float32(layers),
+            QuantPolicy::kivi(layers, 2),
+            QuantPolicy::asymkv21(layers, parity_lk, 0), // Tab.1 parity
+            QuantPolicy::asymkv21(layers, layers, 0),    // Tab.2 parity
+            QuantPolicy::kivi(layers, 1),
+        ] {
+            let b = bytes(&p);
+            t3.row(vec![
+                name.into(),
+                p.name.clone(),
+                format!("{:.2}", gib(b)),
+                format!("{:.2} GiB", gib(kivi - b)),
+            ]);
+        }
+    }
+    t3.emit("fig4_memory");
+    note("fig4_memory",
+         "\nPaper reports: 7b saves 9.0 GB (normal-ctx parity) / 6.0 GB \
+          (long-ctx parity); 13b saves 10.4 / 7.0 GB vs KIVI-2bit. Compare \
+          with the analytic rows above (same ordering, same magnitude).");
+    Ok(())
+}

@@ -1,0 +1,146 @@
+//! Hot-path microbenchmarks: per-component timings of the decode step —
+//! the instrument for the §Perf optimization loop (EXPERIMENTS.md §Perf).
+//!
+//! Components: RTN fold (quantize+pack), cache gather (batch assembly),
+//! literal construction, artifact execution (per layer variant), and the
+//! end-to-end decode step.
+
+use std::sync::Arc;
+
+use asymkv::engine::{Engine, SamplingParams};
+use asymkv::kvcache::{CacheGeometry, SeqCache};
+use asymkv::model::ByteTokenizer;
+use asymkv::quant::{rtn, QuantPolicy};
+use asymkv::runtime::Runtime;
+use asymkv::util::bench::{fmt_duration, note, time_fn, Table};
+use asymkv::util::rng::SplitMix;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::var("ASYMKV_ARTIFACTS").unwrap_or("artifacts/small".into());
+    let rt = Arc::new(Runtime::load(&dir)?);
+    let engine = Engine::new(rt, 1 << 30)?;
+    let m = engine.manifest();
+    let n = m.n_layers;
+    let geo = CacheGeometry {
+        n_heads: m.n_heads,
+        max_ctx: m.max_ctx,
+        d_head: m.d_head,
+        group: m.group,
+        residual: m.residual,
+    };
+
+    note("perf_microbench", &format!(
+        "\nDecode hot-path microbench — model {}, T={}, H={}, Dh={}",
+        m.name, m.max_ctx, m.n_heads, m.d_head));
+    let mut t = Table::new(
+        "component timings",
+        &["component", "p50", "min", "per-token note"],
+    );
+
+    // 1. RTN fold of one K group (quantize + pack, per head)
+    let mut rng = SplitMix::new(1);
+    let kg: Vec<f32> = rng.normal_f32_vec(m.group * m.d_head);
+    let mut packed = vec![0u8; rtn::packed_len(m.group, 2) * m.d_head];
+    let mut params =
+        vec![rtn::GroupParams { scale: 0.0, zero: 0.0 }; m.d_head];
+    let tm = time_fn(10, 200, || {
+        rtn::fold_k_group(&kg, m.group, m.d_head, 2, &mut packed, &mut params);
+    });
+    t.row(vec!["rtn fold_k_group (1 head, G=32, 2b)".into(),
+               fmt_duration(tm.p50()), fmt_duration(tm.min()),
+               "amortized over G tokens".into()]);
+
+    // 2. cache gather: batch assembly for one layer at B=4
+    let policy = QuantPolicy::kivi(n, 2);
+    let mut seqs: Vec<SeqCache> =
+        (0..4).map(|_| SeqCache::new(geo, &policy)).collect();
+    let hd = m.n_heads * m.d_head;
+    for s in &mut seqs {
+        let k: Vec<f32> = rng.normal_f32_vec(hd);
+        for layer in &mut s.layers {
+            for _ in 0..(m.max_ctx / 2) {
+                layer.append_token(&k, &k);
+            }
+        }
+    }
+    let ggeo = asymkv::engine::gather::GatherGeo {
+        b_art: 4,
+        n_heads: m.n_heads,
+        max_ctx: m.max_ctx,
+        d_head: m.d_head,
+        group: m.group,
+        residual: m.residual,
+    };
+    let tm = time_fn(5, 100, || {
+        let mut refs: Vec<&mut SeqCache> = seqs.iter_mut().collect();
+        let args = asymkv::engine::gather::gather_layer_args(&ggeo, &refs.as_mut_slice(), 0);
+        std::hint::black_box(&args);
+    });
+    t.row(vec!["gather_layer_args (B=4, 2-bit)".into(),
+               fmt_duration(tm.p50()), fmt_duration(tm.min()),
+               "×L per decode step".into()]);
+
+    // 3. artifact execution per layer variant (B=4, C=1)
+    let tokc = ByteTokenizer;
+    for (kb, vb) in [(0u8, 0u8), (2, 2), (2, 1), (1, 1)] {
+        let policy = match (kb, vb) {
+            (0, 0) => QuantPolicy::float32(n),
+            (a, b) => QuantPolicy::asymkv(n, n, n, a, b),
+        };
+        let mut p2 = policy.clone();
+        p2.k_bits = vec![kb; n];
+        p2.v_bits = vec![vb; n];
+        let ids: Vec<u64> = (0..4)
+            .map(|_| engine.create_seq(&p2).unwrap())
+            .collect();
+        let prompts: Vec<Vec<i32>> = (0..4)
+            .map(|i| {
+                let mut r = SplitMix::new(50 + i);
+                tokc.encode(&asymkv::workload::gen_document(&mut r, 100))
+            })
+            .collect();
+        engine.prefill(&ids, &prompts)?;
+        let toks = [65i32, 66, 67, 68];
+        let tm = time_fn(3, 30, || {
+            engine.decode(&ids, &toks).unwrap();
+        });
+        t.row(vec![
+            format!("decode step (B=4, k{kb}_v{vb}, all layers + head)"),
+            fmt_duration(tm.p50()),
+            fmt_duration(tm.min()),
+            format!("{:.1} tok/s at B=4", 4.0 / tm.p50()),
+        ]);
+        for id in ids {
+            engine.free_seq(id)?;
+        }
+    }
+
+    // 4. single-sequence decode (B=1 artifact)
+    let id = engine.create_seq(&QuantPolicy::asymkv21(n, n / 2, 0))?;
+    let mut r = SplitMix::new(99);
+    engine.prefill(&[id],
+                   &[tokc.encode(&asymkv::workload::gen_document(&mut r, 100))])?;
+    let tm = time_fn(3, 30, || {
+        engine.decode(&[id], &[65]).unwrap();
+    });
+    t.row(vec!["decode step (B=1, AsymKV-l/0)".into(),
+               fmt_duration(tm.p50()), fmt_duration(tm.min()),
+               format!("{:.1} tok/s", 1.0 / tm.p50())]);
+    engine.free_seq(id)?;
+
+    // 5. generation end to end
+    let tm = time_fn(1, 5, || {
+        let id = engine.create_seq(&QuantPolicy::asymkv21(n, n / 2, 0)).unwrap();
+        let mut r = SplitMix::new(7);
+        let p = tokc.encode(&asymkv::workload::gen_document(&mut r, 100));
+        engine
+            .generate(&[id], &[p], 8, &SamplingParams::greedy(), 0)
+            .unwrap();
+        engine.free_seq(id).unwrap();
+    });
+    t.row(vec!["generate (prefill 100 + 8 tokens, B=1)".into(),
+               fmt_duration(tm.p50()), fmt_duration(tm.min()), "".into()]);
+
+    t.emit("perf_microbench");
+    Ok(())
+}

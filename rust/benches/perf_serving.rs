@@ -1,0 +1,124 @@
+//! Serving performance: end-to-end throughput/latency of the coordinator
+//! under a request trace, across quantization policies and batching
+//! ablations. (Not a paper table — the paper's system-side claim is memory;
+//! this bench backs the §Perf deliverable and the batching design choices.)
+
+use std::sync::Arc;
+
+use asymkv::coordinator::{Coordinator, CoordinatorConfig, Request};
+use asymkv::engine::Engine;
+use asymkv::model::ByteTokenizer;
+use asymkv::quant::QuantPolicy;
+use asymkv::runtime::Runtime;
+use asymkv::util::bench::{note, Table};
+use asymkv::workload::trace::{generate_trace, TraceConfig};
+
+fn run_trace(
+    engine: Arc<Engine>,
+    cfg: CoordinatorConfig,
+    policy: &QuantPolicy,
+    n_requests: usize,
+) -> (f64, f64, f64) {
+    let coord = Coordinator::start(engine, cfg);
+    let tok = ByteTokenizer;
+    let trace = generate_trace(&TraceConfig {
+        n_requests,
+        rate: 0.0, // offline: all arrive at once (throughput measurement)
+        n_pairs: 12,
+        n_gen: 8,
+        seed: 0xBEEF,
+    });
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = trace
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            coord.submit(Request::greedy(
+                i as u64,
+                tok.encode(&r.episode.prompt),
+                r.n_gen,
+                policy.clone(),
+            ))
+        })
+        .collect();
+    let mut total_tokens = 0usize;
+    for h in handles {
+        let resp = h.wait();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        total_tokens += resp.tokens.len();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = coord.metrics();
+    coord.shutdown();
+    (total_tokens as f64 / wall, m.ttft_p50_s, m.total_p95_s)
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::var("ASYMKV_ARTIFACTS").unwrap_or("artifacts/small".into());
+    let rt = Arc::new(Runtime::load(&dir)?);
+    let engine = Arc::new(Engine::new(rt, 2 << 30)?);
+    let n = engine.manifest().n_layers;
+    let n_req = 16;
+
+    note("perf_serving", &format!(
+        "\nServing bench — offline trace of {n_req} recall requests \
+         (8 gen tokens each), model {}", engine.manifest().name));
+
+    // --- policy comparison at the default batching config ---
+    let mut t = Table::new(
+        "serving throughput by policy (default batching)",
+        &["policy", "tok/s", "TTFT p50", "total p95"],
+    );
+    for policy in [
+        QuantPolicy::float32(n),
+        QuantPolicy::kivi(n, 2),
+        QuantPolicy::asymkv21(n, n / 2, 0),
+        QuantPolicy::kivi(n, 1),
+    ] {
+        // warm-up pass compiles this policy's artifact variants outside the
+        // measured window (lazy PJRT compilation would otherwise dominate)
+        run_trace(engine.clone(), CoordinatorConfig::default(), &policy, 2);
+        let (tput, ttft, p95) = run_trace(
+            engine.clone(),
+            CoordinatorConfig::default(),
+            &policy,
+            n_req,
+        );
+        t.row(vec![
+            policy.name.clone(),
+            format!("{tput:.1}"),
+            format!("{:.0} ms", ttft * 1e3),
+            format!("{:.0} ms", p95 * 1e3),
+        ]);
+    }
+    t.emit("perf_serving");
+
+    // --- batching ablation (the coordinator's own design choice) ---
+    let mut t2 = Table::new(
+        "batching ablation (AsymKV-l/0 policy)",
+        &["max_batch", "tok/s", "TTFT p50", "total p95"],
+    );
+    let policy = QuantPolicy::asymkv21(n, n / 2, 0);
+    run_trace(engine.clone(), CoordinatorConfig::default(), &policy, 2);
+    for max_batch in [1usize, 2, 4, 8] {
+        let cfg = CoordinatorConfig {
+            max_active: 16,
+            max_batch,
+            batch_window: std::time::Duration::from_millis(2),
+            prefix_cache_bytes: 0,
+        };
+        let (tput, ttft, p95) = run_trace(engine.clone(), cfg, &policy, n_req);
+        t2.row(vec![
+            max_batch.to_string(),
+            format!("{tput:.1}"),
+            format!("{:.0} ms", ttft * 1e3),
+            format!("{:.0} ms", p95 * 1e3),
+        ]);
+    }
+    t2.emit("perf_serving");
+    note("perf_serving",
+         "\nExpected: batched decode amortizes per-call PJRT overhead — \
+          throughput rises with max_batch until the artifact batch size \
+          saturates.");
+    Ok(())
+}

@@ -1,0 +1,260 @@
+//! Error-propagation analysis (paper §3, Fig. 1 and Fig. 2).
+//!
+//! Pipeline: run a FLOAT-policy engine over a real prompt (so the caches
+//! hold true activations), tap each layer's RoPE'd query via the `probe_b1`
+//! artifact, then feed (xq, K, V, mask) to the `stage_mse_bits{b}_b1`
+//! artifact which quantizes K-only / V-only in-graph and reports the MSE at
+//! every attention stage (Equ. 6 dequant → Equ. 1 scores → Equ. 2 softmax →
+//! Equ. 3 output) plus raw output-error samples for the histograms.
+
+use anyhow::{bail, Result};
+
+use crate::engine::Engine;
+use crate::quant::QuantPolicy;
+use crate::runtime::{lit_f32, lit_i32, to_f32_vec};
+use crate::util::stats::Histogram;
+
+/// Real activations captured at one decode position for one layer.
+pub struct LayerActs {
+    pub layer: usize,
+    /// [H, Dh] RoPE'd query of the probe token
+    pub xq: Vec<f32>,
+    /// [H, n, Dh] true (float) K cache at the probe position
+    pub k: Vec<f32>,
+    /// [H, n, Dh] true V cache
+    pub v: Vec<f32>,
+    pub n_tokens: usize,
+}
+
+/// Stage-wise MSE for one layer at one bit-width.
+#[derive(Debug, Clone)]
+pub struct StageMse {
+    pub layer: usize,
+    pub bits: u8,
+    /// MSE at [dequant, scores, softmax, output] for K-only quantization
+    pub mse_k: [f64; 4],
+    /// same for V-only (stages 1-2 are structurally 0)
+    pub mse_v: [f64; 4],
+    /// output error samples (flattened [H·Dh]) for the Fig. 2 histograms
+    pub err_k: Vec<f32>,
+    pub err_v: Vec<f32>,
+}
+
+impl StageMse {
+    /// The paper's headline ratio: output-stage K error / V error.
+    pub fn output_ratio(&self) -> f64 {
+        self.mse_k[3] / self.mse_v[3].max(1e-30)
+    }
+}
+
+/// Run a float-policy engine over `prompt`, then capture per-layer
+/// activations while decoding one probe token.
+pub fn collect_activations(engine: &Engine, prompt: &[i32]) -> Result<Vec<LayerActs>> {
+    let m = engine.manifest();
+    if prompt.len() < 2 {
+        bail!("prompt too short for analysis");
+    }
+    let policy = QuantPolicy::float32(m.n_layers);
+    let id = engine.create_seq(&policy)?;
+    let logits = engine.prefill(&[id], &[prompt.to_vec()])?;
+    let probe_token = crate::engine::argmax(&logits[0]);
+
+    // snapshot float caches per layer (exact under the float policy)
+    let (h, dh, d) = (m.n_heads, m.d_head, m.d_model);
+    let mut caches: Vec<(Vec<f32>, Vec<f32>, usize)> = Vec::new();
+    engine.with_seq(id, |seq| {
+        for lc in &seq.layers {
+            caches.push((lc.dequant_k_full(), lc.dequant_v_full(), lc.n_tokens()));
+        }
+        seq.pos
+    })?;
+    let pos = engine.with_seq(id, |seq| seq.pos)?;
+
+    // embed the probe token (host lookup through the engine's weights)
+    let emb = engine.weights().get("embed")?;
+    let tok = probe_token as usize;
+    let mut x = vec![0f32; d];
+    x.copy_from_slice(&emb.data[tok * d..(tok + 1) * d]);
+
+    // drive the probe artifact layer by layer
+    let probe = engine.rt.executable("probe_b1")?;
+    let t_ctx = m.max_ctx;
+    let mut acts = Vec::with_capacity(m.n_layers);
+    let mut x_lit = lit_f32(&[1, 1, d], &x)?;
+    let pos_lit = lit_i32(&[1], &[pos as i32])?;
+    for layer in 0..m.n_layers {
+        let (k, v, n) = &caches[layer];
+        // pad cache to [1, H, T, Dh] + mask [1, T]
+        let mut k_pad = vec![0f32; h * t_ctx * dh];
+        let mut v_pad = vec![0f32; h * t_ctx * dh];
+        for head in 0..h {
+            let src = head * n * dh;
+            let dst = head * t_ctx * dh;
+            k_pad[dst..dst + n * dh].copy_from_slice(&k[src..src + n * dh]);
+            v_pad[dst..dst + n * dh].copy_from_slice(&v[src..src + n * dh]);
+        }
+        let mask: Vec<f32> = (0..t_ctx)
+            .map(|i| if i < *n { 0.0 } else { -1e9 })
+            .collect();
+        let mut call: Vec<&xla::Literal> = Vec::new();
+        let weights: Vec<xla::Literal> = engine
+            .weights()
+            .layer_tensors(layer)?
+            .iter()
+            .map(|t| lit_f32(&t.shape, &t.data))
+            .collect::<Result<_>>()?;
+        let k_lit = lit_f32(&[1, h, t_ctx, dh], &k_pad)?;
+        let v_lit = lit_f32(&[1, h, t_ctx, dh], &v_pad)?;
+        let m_lit = lit_f32(&[1, t_ctx], &mask)?;
+        call.extend(weights.iter());
+        call.push(&x_lit);
+        call.push(&pos_lit);
+        call.push(&k_lit);
+        call.push(&v_lit);
+        call.push(&m_lit);
+        let outs = probe.run(&call)?;
+        let xq = to_f32_vec(&outs[3])?;
+        acts.push(LayerActs {
+            layer,
+            xq,
+            k: k.clone(),
+            v: v.clone(),
+            n_tokens: *n,
+        });
+        x_lit = outs[0].clone();
+    }
+    engine.free_seq(id)?;
+    Ok(acts)
+}
+
+/// Run the in-graph stage-MSE measurement for one layer's activations.
+pub fn stage_mse(engine: &Engine, acts: &LayerActs, bits: u8) -> Result<StageMse> {
+    let m = engine.manifest();
+    let (h, dh, t_ctx) = (m.n_heads, m.d_head, m.max_ctx);
+    let n = acts.n_tokens;
+    let exe = engine.rt.executable(&format!("stage_mse_bits{bits}_b1"))?;
+    // pad to T like collect_activations
+    let mut k_pad = vec![0f32; h * t_ctx * dh];
+    let mut v_pad = vec![0f32; h * t_ctx * dh];
+    for head in 0..h {
+        let src = head * n * dh;
+        let dst = head * t_ctx * dh;
+        k_pad[dst..dst + n * dh].copy_from_slice(&acts.k[src..src + n * dh]);
+        v_pad[dst..dst + n * dh].copy_from_slice(&acts.v[src..src + n * dh]);
+    }
+    let mask: Vec<f32> = (0..t_ctx)
+        .map(|i| if i < n { 0.0 } else { -1e9 })
+        .collect();
+    let outs = exe.run(&[
+        lit_f32(&[1, h, dh], &acts.xq)?,
+        lit_f32(&[1, h, t_ctx, dh], &k_pad)?,
+        lit_f32(&[1, h, t_ctx, dh], &v_pad)?,
+        lit_f32(&[1, t_ctx], &mask)?,
+    ])?;
+    let mk = to_f32_vec(&outs[0])?;
+    let mv = to_f32_vec(&outs[1])?;
+    Ok(StageMse {
+        layer: acts.layer,
+        bits,
+        mse_k: [mk[0] as f64, mk[1] as f64, mk[2] as f64, mk[3] as f64],
+        mse_v: [mv[0] as f64, mv[1] as f64, mv[2] as f64, mv[3] as f64],
+        err_k: to_f32_vec(&outs[2])?,
+        err_v: to_f32_vec(&outs[3])?,
+    })
+}
+
+/// Build Fig. 2-style histograms of the output errors.
+pub fn error_histograms(s: &StageMse, bins: usize) -> (Histogram, Histogram) {
+    let span = s
+        .err_k
+        .iter()
+        .chain(&s.err_v)
+        .fold(0f32, |a, &b| a.max(b.abs()))
+        .max(1e-9);
+    let mut hk = Histogram::new(-(span as f64), span as f64, bins);
+    let mut hv = Histogram::new(-(span as f64), span as f64, bins);
+    hk.add_all(&s.err_k);
+    hv.add_all(&s.err_v);
+    (hk, hv)
+}
+
+/// Attention-addressing corruption: fraction of probed (head) attention
+/// distributions whose ARGMAX moves when K (resp. V) is quantized at
+/// `bits`. V-quantization cannot move attention (V enters after the
+/// softmax), so its flip rate is structurally 0 — the asymmetry of §3
+/// expressed in the metric that predicts task failure for peaked
+/// (retrieval-heavy) attention, where plain output-MSE under-counts key
+/// damage (a preserved match has ~0 error; a flipped match is fatal).
+pub fn attention_flip_rate(
+    acts: &[LayerActs],
+    n_heads: usize,
+    d_head: usize,
+    group: usize,
+    bits: u8,
+) -> (f64, f64) {
+    use crate::quant::rtn;
+    let mut flips = 0usize;
+    let mut total = 0usize;
+    let mut margin_sum = 0.0f64;
+    for a in acts {
+        let n = a.n_tokens;
+        let nq = (n / group) * group; // quantizable region (rest = residual)
+        for head in 0..n_heads {
+            let xq = &a.xq[head * d_head..(head + 1) * d_head];
+            let k = &a.k[head * n * d_head..(head + 1) * n * d_head];
+            // float scores + argmax
+            let score = |krow: &[f32]| -> f32 {
+                xq.iter().zip(krow).map(|(a, b)| a * b).sum::<f32>()
+                    / (d_head as f32).sqrt()
+            };
+            let mut best = 0usize;
+            let mut best_s = f32::NEG_INFINITY;
+            let mut second = f32::NEG_INFINITY;
+            for t in 0..n {
+                let s = score(&k[t * d_head..(t + 1) * d_head]);
+                if s > best_s {
+                    second = best_s;
+                    best_s = s;
+                    best = t;
+                } else if s > second {
+                    second = s;
+                }
+            }
+            margin_sum += (best_s - second) as f64;
+            // quantize K per-channel over full groups (runtime layout)
+            let mut kq = k.to_vec();
+            for gi in 0..nq / group {
+                let mut kg = vec![0f32; group * d_head];
+                for t in 0..group {
+                    kg[t * d_head..(t + 1) * d_head].copy_from_slice(
+                        &k[(gi * group + t) * d_head..(gi * group + t + 1) * d_head],
+                    );
+                }
+                let mut packed = vec![0u8; rtn::packed_len(group, bits) * d_head];
+                let mut params =
+                    vec![rtn::GroupParams { scale: 0.0, zero: 0.0 }; d_head];
+                rtn::fold_k_group(&kg, group, d_head, bits, &mut packed, &mut params);
+                let mut back = vec![0f32; group * d_head];
+                rtn::unfold_k_group(&packed, group, d_head, bits, &params, &mut back);
+                for t in 0..group {
+                    kq[(gi * group + t) * d_head..(gi * group + t + 1) * d_head]
+                        .copy_from_slice(&back[t * d_head..(t + 1) * d_head]);
+                }
+            }
+            let mut qbest = 0usize;
+            let mut qbest_s = f32::NEG_INFINITY;
+            for t in 0..n {
+                let s = score(&kq[t * d_head..(t + 1) * d_head]);
+                if s > qbest_s {
+                    qbest_s = s;
+                    qbest = t;
+                }
+            }
+            if qbest != best {
+                flips += 1;
+            }
+            total += 1;
+        }
+    }
+    (flips as f64 / total.max(1) as f64, margin_sum / total.max(1) as f64)
+}

@@ -1,0 +1,150 @@
+//! Serving metrics: counters + latency reservoirs, exported as JSON by the
+//! server's /stats verb and printed by the perf benches.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::Value;
+use crate::util::stats::percentile;
+
+#[derive(Default)]
+struct Inner {
+    started: Option<Instant>,
+    requests_completed: u64,
+    requests_failed: u64,
+    tokens_generated: u64,
+    prefill_tokens: u64,
+    batch_sizes: Vec<f64>,
+    queue_s: Vec<f64>,
+    ttft_s: Vec<f64>,
+    total_s: Vec<f64>,
+    decode_step_s: Vec<f64>,
+}
+
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+impl Metrics {
+    pub fn start_clock(&self) {
+        let mut m = self.inner.lock().unwrap();
+        if m.started.is_none() {
+            m.started = Some(Instant::now());
+        }
+    }
+
+    pub fn record_completion(&self, timing: &super::request::Timing, n_tokens: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.requests_completed += 1;
+        m.tokens_generated += n_tokens as u64;
+        m.queue_s.push(timing.queue_s);
+        m.ttft_s.push(timing.ttft_s);
+        m.total_s.push(timing.total_s);
+    }
+
+    pub fn record_failure(&self) {
+        self.inner.lock().unwrap().requests_failed += 1;
+    }
+
+    pub fn record_prefill(&self, tokens: usize) {
+        self.inner.lock().unwrap().prefill_tokens += tokens as u64;
+    }
+
+    pub fn record_decode_step(&self, batch: usize, dt_s: f64) {
+        let mut m = self.inner.lock().unwrap();
+        m.batch_sizes.push(batch as f64);
+        m.decode_step_s.push(dt_s);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let m = self.inner.lock().unwrap();
+        let elapsed = m.started.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
+        MetricsSnapshot {
+            elapsed_s: elapsed,
+            requests_completed: m.requests_completed,
+            requests_failed: m.requests_failed,
+            tokens_generated: m.tokens_generated,
+            prefill_tokens: m.prefill_tokens,
+            throughput_tok_s: if elapsed > 0.0 {
+                m.tokens_generated as f64 / elapsed
+            } else {
+                0.0
+            },
+            mean_batch: crate::util::stats::percentile(&m.batch_sizes, 50.0),
+            queue_p50_s: percentile(&m.queue_s, 50.0),
+            ttft_p50_s: percentile(&m.ttft_s, 50.0),
+            ttft_p95_s: percentile(&m.ttft_s, 95.0),
+            total_p50_s: percentile(&m.total_s, 50.0),
+            total_p95_s: percentile(&m.total_s, 95.0),
+            decode_step_p50_s: percentile(&m.decode_step_s, 50.0),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MetricsSnapshot {
+    pub elapsed_s: f64,
+    pub requests_completed: u64,
+    pub requests_failed: u64,
+    pub tokens_generated: u64,
+    pub prefill_tokens: u64,
+    pub throughput_tok_s: f64,
+    pub mean_batch: f64,
+    pub queue_p50_s: f64,
+    pub ttft_p50_s: f64,
+    pub ttft_p95_s: f64,
+    pub total_p50_s: f64,
+    pub total_p95_s: f64,
+    pub decode_step_p50_s: f64,
+}
+
+impl MetricsSnapshot {
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("elapsed_s", Value::num(self.elapsed_s)),
+            ("requests_completed", Value::num(self.requests_completed as f64)),
+            ("requests_failed", Value::num(self.requests_failed as f64)),
+            ("tokens_generated", Value::num(self.tokens_generated as f64)),
+            ("prefill_tokens", Value::num(self.prefill_tokens as f64)),
+            ("throughput_tok_s", Value::num(self.throughput_tok_s)),
+            ("mean_batch", Value::num(self.mean_batch)),
+            ("queue_p50_s", Value::num(self.queue_p50_s)),
+            ("ttft_p50_s", Value::num(self.ttft_p50_s)),
+            ("ttft_p95_s", Value::num(self.ttft_p95_s)),
+            ("total_p50_s", Value::num(self.total_p50_s)),
+            ("total_p95_s", Value::num(self.total_p95_s)),
+            ("decode_step_p50_s", Value::num(self.decode_step_p50_s)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Timing;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::default();
+        m.start_clock();
+        m.record_completion(
+            &Timing { queue_s: 0.1, ttft_s: 0.2, total_s: 0.5, decode_steps: 3 },
+            3,
+        );
+        m.record_completion(
+            &Timing { queue_s: 0.3, ttft_s: 0.4, total_s: 0.7, decode_steps: 3 },
+            3,
+        );
+        m.record_failure();
+        m.record_decode_step(4, 0.01);
+        let s = m.snapshot();
+        assert_eq!(s.requests_completed, 2);
+        assert_eq!(s.requests_failed, 1);
+        assert_eq!(s.tokens_generated, 6);
+        assert!((s.queue_p50_s - 0.2).abs() < 1e-9);
+        assert!(s.throughput_tok_s > 0.0);
+        let j = s.to_json();
+        assert_eq!(j.get("requests_completed").as_i64(), Some(2));
+    }
+}

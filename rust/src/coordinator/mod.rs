@@ -1,0 +1,108 @@
+//! The serving coordinator: the L3 system contribution — request routing,
+//! policy-aware dynamic batching, a continuous-batching scheduler over the
+//! AsymKV engine, and serving metrics.
+//!
+//! ```text
+//! clients → Coordinator::submit → RequestQueue (priority, FIFO)
+//!                                     │  policy-homogeneous groups
+//!                              scheduler thread
+//!                prefill batch ─► Engine ─► decode steps (continuous)
+//!                                     │
+//!                              ResponseHandle ◄ tokens + timing
+//! ```
+
+pub mod metrics;
+pub mod queue;
+pub mod request;
+pub mod scheduler;
+
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::engine::Engine;
+
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use request::{Request, Response, ResponseHandle, Timing};
+pub use scheduler::CoordinatorConfig;
+
+use queue::RequestQueue;
+use request::InFlight;
+use scheduler::{run_scheduler, Shared};
+
+pub struct Coordinator {
+    shared: Arc<Shared>,
+    worker: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl Coordinator {
+    /// Spawn the scheduler thread over `engine`.
+    pub fn start(engine: Arc<Engine>, cfg: CoordinatorConfig) -> Arc<Self> {
+        let prefix_cache = (cfg.prefix_cache_bytes > 0)
+            .then(|| crate::kvcache::PrefixCache::new(cfg.prefix_cache_bytes));
+        let shared = Arc::new(Shared {
+            engine,
+            queue: Mutex::new(RequestQueue::default()),
+            cv: Condvar::new(),
+            shutdown: std::sync::atomic::AtomicBool::new(false),
+            metrics: Metrics::default(),
+            cfg,
+            prefix_cache,
+        });
+        shared.metrics.start_clock();
+        let worker = {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("asymkv-sched".into())
+                .spawn(move || run_scheduler(shared))
+                .expect("spawning scheduler")
+        };
+        Arc::new(Self { shared, worker: Mutex::new(Some(worker)) })
+    }
+
+    /// Submit a request; returns immediately with a completion handle.
+    pub fn submit(&self, req: Request) -> ResponseHandle {
+        let handle = ResponseHandle::new();
+        let inf = InFlight::new(req, handle.clone());
+        self.shared.queue.lock().unwrap().push(inf);
+        self.shared.cv.notify_all();
+        handle
+    }
+
+    /// Submit and block until completion.
+    pub fn submit_wait(&self, req: Request) -> Response {
+        self.submit(req).wait()
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.shared.metrics.snapshot()
+    }
+
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.shared.engine
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.shared.queue.lock().unwrap().len()
+    }
+
+    /// Prefix-cache statistics (None when disabled).
+    pub fn prefix_stats(&self) -> Option<crate::kvcache::PrefixStats> {
+        self.shared.prefix_cache.as_ref().map(|p| p.stats())
+    }
+
+    /// Graceful shutdown: finish in-flight work, then join the scheduler.
+    pub fn shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        if let Some(h) = self.worker.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}

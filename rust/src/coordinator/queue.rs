@@ -1,0 +1,123 @@
+//! Admission queue: priority buckets with FIFO order inside each bucket,
+//! plus policy-aware batch extraction (batches must be policy-homogeneous
+//! because the layer artifacts are compiled per (k_bits, v_bits) variant).
+
+use std::collections::{BTreeMap, VecDeque};
+
+use super::request::InFlight;
+
+#[derive(Default)]
+pub struct RequestQueue {
+    /// priority → FIFO; iterated highest priority first
+    buckets: BTreeMap<i32, VecDeque<InFlight>>,
+    len: usize,
+}
+
+impl RequestQueue {
+    pub fn push(&mut self, inf: InFlight) {
+        self.buckets
+            .entry(inf.req.priority)
+            .or_default()
+            .push_back(inf);
+        self.len += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Peek the policy of the front-most (highest-priority, oldest) request.
+    pub fn front_policy(&self) -> Option<&crate::quant::QuantPolicy> {
+        self.buckets
+            .iter()
+            .rev()
+            .find_map(|(_, q)| q.front())
+            .map(|inf| &inf.req.policy)
+    }
+
+    /// Pop up to `max` requests whose policy NAME matches `policy_name`,
+    /// scanning priority buckets from high to low but preserving FIFO order
+    /// within a bucket (non-matching requests are left in place).
+    pub fn pop_matching(&mut self, policy_name: &str, max: usize) -> Vec<InFlight> {
+        let mut out = Vec::new();
+        for (_, q) in self.buckets.iter_mut().rev() {
+            let mut i = 0;
+            while i < q.len() && out.len() < max {
+                if q[i].req.policy.name == policy_name {
+                    out.push(q.remove(i).unwrap());
+                } else {
+                    i += 1;
+                }
+            }
+            if out.len() >= max {
+                break;
+            }
+        }
+        self.len -= out.len();
+        out
+    }
+
+    /// Drain everything (shutdown path).
+    pub fn drain(&mut self) -> Vec<InFlight> {
+        let mut out = Vec::new();
+        for (_, q) in self.buckets.iter_mut().rev() {
+            out.extend(q.drain(..));
+        }
+        self.len = 0;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::{Request, ResponseHandle};
+    use crate::quant::QuantPolicy;
+
+    fn inf(id: u64, prio: i32, policy: QuantPolicy) -> InFlight {
+        let mut r = Request::greedy(id, vec![1], 1, policy);
+        r.priority = prio;
+        InFlight::new(r, ResponseHandle::new())
+    }
+
+    #[test]
+    fn priority_then_fifo() {
+        let mut q = RequestQueue::default();
+        let p = QuantPolicy::float32(2);
+        q.push(inf(1, 0, p.clone()));
+        q.push(inf(2, 5, p.clone()));
+        q.push(inf(3, 0, p.clone()));
+        let got = q.pop_matching("float", 10);
+        let ids: Vec<u64> = got.iter().map(|i| i.req.id).collect();
+        assert_eq!(ids, vec![2, 1, 3]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn policy_filtering_leaves_others() {
+        let mut q = RequestQueue::default();
+        q.push(inf(1, 0, QuantPolicy::float32(2)));
+        q.push(inf(2, 0, QuantPolicy::kivi(2, 2)));
+        q.push(inf(3, 0, QuantPolicy::float32(2)));
+        let got = q.pop_matching("float", 10);
+        assert_eq!(got.len(), 2);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.front_policy().unwrap().name, "KIVI-2bit");
+    }
+
+    #[test]
+    fn max_respected() {
+        let mut q = RequestQueue::default();
+        let p = QuantPolicy::float32(2);
+        for i in 0..5 {
+            q.push(inf(i, 0, p.clone()));
+        }
+        let got = q.pop_matching("float", 2);
+        assert_eq!(got.len(), 2);
+        assert_eq!(q.len(), 3);
+    }
+}

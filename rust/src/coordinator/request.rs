@@ -1,0 +1,185 @@
+//! Request/response types and the completion handle.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use crate::engine::SamplingParams;
+use crate::quant::QuantPolicy;
+
+/// Callback invoked as each token is produced (streaming transports).
+pub type TokenSink = Arc<dyn Fn(u64, i32) + Send + Sync>;
+
+#[derive(Clone)]
+pub struct Request {
+    /// caller-supplied id (echoed in the response)
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub n_gen: usize,
+    pub policy: QuantPolicy,
+    pub sampling: SamplingParams,
+    /// stop early when this token is produced (e.g. b'.'), if set
+    pub stop_token: Option<i32>,
+    /// scheduling priority; higher runs first
+    pub priority: i32,
+    pub seed: u64,
+    /// per-token streaming callback (None = only the final response)
+    pub on_token: Option<TokenSink>,
+}
+
+impl std::fmt::Debug for Request {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Request")
+            .field("id", &self.id)
+            .field("prompt_len", &self.prompt.len())
+            .field("n_gen", &self.n_gen)
+            .field("policy", &self.policy.name)
+            .field("streaming", &self.on_token.is_some())
+            .finish()
+    }
+}
+
+impl Request {
+    pub fn greedy(id: u64, prompt: Vec<i32>, n_gen: usize, policy: QuantPolicy) -> Self {
+        Self {
+            id,
+            prompt,
+            n_gen,
+            policy,
+            sampling: SamplingParams::greedy(),
+            stop_token: None,
+            priority: 0,
+            seed: id,
+            on_token: None,
+        }
+    }
+}
+
+/// Per-request timing, all in seconds.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Timing {
+    pub queue_s: f64,
+    /// time to first token (from submission)
+    pub ttft_s: f64,
+    pub total_s: f64,
+    pub decode_steps: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub timing: Timing,
+    pub error: Option<String>,
+}
+
+/// Blocking completion handle.
+#[derive(Clone)]
+pub struct ResponseHandle {
+    inner: Arc<(Mutex<Option<Response>>, Condvar)>,
+}
+
+impl ResponseHandle {
+    pub fn new() -> Self {
+        Self { inner: Arc::new((Mutex::new(None), Condvar::new())) }
+    }
+
+    pub fn fulfill(&self, resp: Response) {
+        let (lock, cv) = &*self.inner;
+        *lock.lock().unwrap() = Some(resp);
+        cv.notify_all();
+    }
+
+    pub fn wait(&self) -> Response {
+        let (lock, cv) = &*self.inner;
+        let mut guard = lock.lock().unwrap();
+        while guard.is_none() {
+            guard = cv.wait(guard).unwrap();
+        }
+        guard.clone().unwrap()
+    }
+
+    pub fn try_get(&self) -> Option<Response> {
+        self.inner.0.lock().unwrap().clone()
+    }
+}
+
+impl Default for ResponseHandle {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Internal: a request in flight through the scheduler.
+pub struct InFlight {
+    pub req: Request,
+    pub handle: ResponseHandle,
+    pub submitted: Instant,
+    /// engine sequence id once admitted
+    pub seq_id: Option<u64>,
+    pub generated: Vec<i32>,
+    /// next token to feed (set after prefill / each decode step)
+    pub cur_token: Option<i32>,
+    pub first_token_at: Option<Instant>,
+    pub rng: crate::util::rng::SplitMix,
+}
+
+impl InFlight {
+    pub fn new(req: Request, handle: ResponseHandle) -> Self {
+        let seed = req.seed;
+        Self {
+            req,
+            handle,
+            submitted: Instant::now(),
+            seq_id: None,
+            generated: Vec::new(),
+            cur_token: None,
+            first_token_at: None,
+            rng: crate::util::rng::SplitMix::new(seed),
+        }
+    }
+
+    pub fn done(&self) -> bool {
+        self.generated.len() >= self.req.n_gen
+            || (self.req.stop_token.is_some()
+                && self.generated.last() == self.req.stop_token.as_ref())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handle_fulfill_wait() {
+        let h = ResponseHandle::new();
+        let h2 = h.clone();
+        std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            h2.fulfill(Response {
+                id: 7,
+                tokens: vec![1, 2],
+                timing: Timing::default(),
+                error: None,
+            });
+        });
+        let r = h.wait();
+        assert_eq!(r.id, 7);
+        assert_eq!(r.tokens, vec![1, 2]);
+        assert!(h.try_get().is_some());
+    }
+
+    #[test]
+    fn inflight_done_conditions() {
+        let req = Request::greedy(1, vec![65], 2, QuantPolicy::float32(1));
+        let mut inf = InFlight::new(req, ResponseHandle::new());
+        assert!(!inf.done());
+        inf.generated = vec![10, 11];
+        assert!(inf.done());
+
+        let mut req2 = Request::greedy(2, vec![65], 10, QuantPolicy::float32(1));
+        req2.stop_token = Some(46);
+        let mut inf2 = InFlight::new(req2, ResponseHandle::new());
+        inf2.generated = vec![9, 46];
+        assert!(inf2.done());
+    }
+}

@@ -1,0 +1,286 @@
+//! The continuous-batching scheduler: admits requests from the priority
+//! queue (policy-homogeneous prefill batches), interleaves one decode step
+//! per iteration across all active sequences (grouped by policy, since the
+//! layer artifacts are compiled per bit-variant), retires finished requests
+//! and applies cache-pool backpressure.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::engine::{sample, Engine};
+use crate::kvcache::PoolError;
+
+use super::metrics::Metrics;
+use super::queue::RequestQueue;
+use super::request::{InFlight, Response, Timing};
+
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// cap on concurrently active sequences (admission control)
+    pub max_active: usize,
+    /// cap on sequences stepped per decode call per policy group
+    pub max_batch: usize,
+    /// linger before prefilling a lone arrival, to give the batcher a
+    /// chance to group requests (ablated in the perf bench)
+    pub batch_window: Duration,
+    /// byte budget for the KV prefix cache (0 disables prefix reuse)
+    pub prefix_cache_bytes: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            max_active: 16,
+            max_batch: 8,
+            batch_window: Duration::from_millis(2),
+            prefix_cache_bytes: 0,
+        }
+    }
+}
+
+pub(super) struct Shared {
+    pub engine: Arc<Engine>,
+    pub queue: Mutex<RequestQueue>,
+    pub cv: Condvar,
+    pub shutdown: AtomicBool,
+    pub metrics: Metrics,
+    pub cfg: CoordinatorConfig,
+    pub prefix_cache: Option<crate::kvcache::PrefixCache>,
+}
+
+pub(super) fn run_scheduler(shared: Arc<Shared>) {
+    let mut active: Vec<InFlight> = Vec::new();
+    loop {
+        // ---- wait for work ----
+        if active.is_empty() {
+            let mut q = shared.queue.lock().unwrap();
+            while q.is_empty() && !shared.shutdown.load(Ordering::SeqCst) {
+                let (guard, _) = shared
+                    .cv
+                    .wait_timeout(q, Duration::from_millis(50))
+                    .unwrap();
+                q = guard;
+            }
+            if q.is_empty() && shared.shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            drop(q);
+            // batching window: let near-simultaneous arrivals pile up
+            if !shared.cfg.batch_window.is_zero() {
+                std::thread::sleep(shared.cfg.batch_window);
+            }
+        }
+
+        // ---- admit + prefill (policy-homogeneous groups) ----
+        loop {
+            let group = {
+                let mut q = shared.queue.lock().unwrap();
+                let free = shared.cfg.max_active.saturating_sub(active.len());
+                if free == 0 || q.is_empty() {
+                    Vec::new()
+                } else {
+                    let pname = q.front_policy().unwrap().name.clone();
+                    q.pop_matching(&pname, free)
+                }
+            };
+            if group.is_empty() {
+                break;
+            }
+            let (mut admitted, requeue) = prefill_group(&shared, group);
+            let blocked = !requeue.is_empty();
+            if blocked {
+                let mut q = shared.queue.lock().unwrap();
+                for inf in requeue {
+                    q.push(inf);
+                }
+            }
+            let made_progress = !admitted.is_empty();
+            active.append(&mut admitted);
+            if blocked || !made_progress {
+                break; // backpressure: stop admitting this round
+            }
+        }
+
+        // nothing running but work is queued (all bounced by backpressure):
+        // don't busy-spin against the pool
+        if active.is_empty() {
+            if shared.shutdown.load(Ordering::SeqCst) {
+                // shutting down and nothing can be admitted: fail the rest
+                for mut inf in shared.queue.lock().unwrap().drain() {
+                    fail(&shared, &mut inf, "shutdown with backpressure");
+                }
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+            continue;
+        }
+
+        // ---- one decode step per policy group ----
+        let mut groups: Vec<Vec<usize>> = Vec::new();
+        for (i, inf) in active.iter().enumerate() {
+            match groups.iter_mut().find(|g| {
+                active[g[0]].req.policy.name == inf.req.policy.name
+                    && g.len() < shared.cfg.max_batch
+            }) {
+                Some(g) => g.push(i),
+                None => groups.push(vec![i]),
+            }
+        }
+        for group in groups {
+            let ids: Vec<u64> =
+                group.iter().map(|&i| active[i].seq_id.unwrap()).collect();
+            let toks: Vec<i32> =
+                group.iter().map(|&i| active[i].cur_token.unwrap()).collect();
+            let t0 = Instant::now();
+            match shared.engine.decode(&ids, &toks) {
+                Ok(logits) => {
+                    shared
+                        .metrics
+                        .record_decode_step(ids.len(), t0.elapsed().as_secs_f64());
+                    for (&i, l) in group.iter().zip(&logits) {
+                        let inf = &mut active[i];
+                        let tok = sample(l, &inf.req.sampling, &mut inf.rng);
+                        let emitted = inf.cur_token.unwrap();
+                        inf.generated.push(emitted);
+                        if let Some(sink) = &inf.req.on_token {
+                            sink(inf.req.id, emitted);
+                        }
+                        inf.cur_token = Some(tok);
+                    }
+                }
+                Err(e) => {
+                    for &i in &group {
+                        fail(&shared, &mut active[i], &format!("decode failed: {e}"));
+                        active[i].generated = vec![]; // mark failed via handle
+                    }
+                }
+            }
+        }
+
+        // ---- retire ----
+        let mut i = 0;
+        while i < active.len() {
+            if active[i].done() || active[i].handle.try_get().is_some() {
+                let inf = active.swap_remove(i);
+                if inf.handle.try_get().is_none() {
+                    complete(&shared, inf);
+                } else if let Some(id) = inf.seq_id {
+                    let _ = shared.engine.free_seq(id);
+                }
+            } else {
+                i += 1;
+            }
+        }
+
+        if shared.shutdown.load(Ordering::SeqCst)
+            && active.is_empty()
+            && shared.queue.lock().unwrap().is_empty()
+        {
+            return;
+        }
+    }
+}
+
+/// Prefill a policy-homogeneous group. Returns `(active, requeue)`: requests
+/// that were admitted + prefilled, and requests bounced by pool
+/// backpressure (to be requeued by the caller).
+fn prefill_group(
+    shared: &Arc<Shared>,
+    group: Vec<InFlight>,
+) -> (Vec<InFlight>, Vec<InFlight>) {
+    // allocate sequences; on budget exhaustion, requeue the tail
+    let mut admitted: Vec<InFlight> = Vec::new();
+    let mut requeue: Vec<InFlight> = Vec::new();
+    for mut inf in group {
+        if !requeue.is_empty() {
+            requeue.push(inf); // preserve order behind the first bounce
+            continue;
+        }
+        match shared.engine.create_seq(&inf.req.policy) {
+            Ok(id) => {
+                inf.seq_id = Some(id);
+                admitted.push(inf);
+            }
+            Err(e) => {
+                match e.downcast_ref::<PoolError>() {
+                    // transient: waiting will free capacity
+                    Some(PoolError::BudgetExceeded { requested, budget, .. })
+                        if requested <= budget =>
+                    {
+                        requeue.push(inf);
+                    }
+                    // permanent: this request can never fit — fail it
+                    _ => fail(shared, &mut inf, &format!("admission failed: {e}")),
+                }
+            }
+        }
+    }
+    if admitted.is_empty() {
+        return (Vec::new(), requeue);
+    }
+
+    let ids: Vec<u64> = admitted.iter().map(|i| i.seq_id.unwrap()).collect();
+    let prompts: Vec<Vec<i32>> =
+        admitted.iter().map(|i| i.req.prompt.clone()).collect();
+    let n_prompt: usize = prompts.iter().map(|p| p.len()).sum();
+    let prefill_result = match &shared.prefix_cache {
+        Some(pc) => shared.engine.prefill_cached(&ids, &prompts, pc),
+        None => shared.engine.prefill(&ids, &prompts),
+    };
+    match prefill_result {
+        Ok(logits) => {
+            shared.metrics.record_prefill(n_prompt);
+            let now = Instant::now();
+            for (inf, l) in admitted.iter_mut().zip(&logits) {
+                let tok = sample(l, &inf.req.sampling, &mut inf.rng);
+                inf.cur_token = Some(tok);
+                inf.first_token_at = Some(now);
+            }
+            (admitted, requeue)
+        }
+        Err(e) => {
+            for mut inf in admitted.drain(..) {
+                fail(shared, &mut inf, &format!("prefill failed: {e}"));
+            }
+            (Vec::new(), requeue)
+        }
+    }
+}
+
+fn complete(shared: &Arc<Shared>, inf: InFlight) {
+    let total = inf.submitted.elapsed().as_secs_f64();
+    let ttft = inf
+        .first_token_at
+        .map(|t| t.duration_since(inf.submitted).as_secs_f64())
+        .unwrap_or(total);
+    let timing = Timing {
+        queue_s: ttft, // queueing dominates TTFT in this single-device setup
+        ttft_s: ttft,
+        total_s: total,
+        decode_steps: inf.generated.len(),
+    };
+    shared.metrics.record_completion(&timing, inf.generated.len());
+    if let Some(id) = inf.seq_id {
+        let _ = shared.engine.free_seq(id);
+    }
+    inf.handle.fulfill(Response {
+        id: inf.req.id,
+        tokens: inf.generated.clone(),
+        timing,
+        error: None,
+    });
+}
+
+fn fail(shared: &Arc<Shared>, inf: &mut InFlight, msg: &str) {
+    shared.metrics.record_failure();
+    if let Some(id) = inf.seq_id.take() {
+        let _ = shared.engine.free_seq(id);
+    }
+    inf.handle.fulfill(Response {
+        id: inf.req.id,
+        tokens: inf.generated.clone(),
+        timing: Timing::default(),
+        error: Some(msg.to_string()),
+    });
+}

@@ -1,0 +1,198 @@
+//! Batched input assembly: scatter per-sequence cache state into the flat
+//! row-major buffers the layer artifacts consume ([B, H, …] layouts).
+//!
+//! Per-sequence caches are stored in exactly the artifact's per-batch-slot
+//! layout, so each gather is one contiguous memcpy per tensor per sequence;
+//! padded batch slots stay zero (their mask rows are fully masked and their
+//! outputs are discarded).
+
+use crate::kvcache::{LayerCache, SeqCache};
+
+pub const NEG: f32 = -1e9;
+
+/// Flat buffers for one layer call at batch size `b_art`.
+pub struct LayerArgs {
+    pub k_main: Vec<u8>,     // packed K, or bit-cast fp32 K when k_bits = 0
+    pub k_main_f32: Vec<f32>,
+    pub k_scales: Vec<f32>,
+    pub k_zeros: Vec<f32>,
+    pub v_main: Vec<u8>,
+    pub v_main_f32: Vec<f32>,
+    pub v_scales: Vec<f32>,
+    pub v_zeros: Vec<f32>,
+    pub k_res: Vec<f32>,
+    pub v_res: Vec<f32>,
+    pub mask_q: Vec<f32>,
+    pub mask_r: Vec<f32>,
+    pub k_bits: u8,
+    pub v_bits: u8,
+}
+
+/// Geometry snapshot used for sizing.
+pub struct GatherGeo {
+    pub b_art: usize,
+    pub n_heads: usize,
+    pub max_ctx: usize,
+    pub d_head: usize,
+    pub group: usize,
+    pub residual: usize,
+}
+
+impl GatherGeo {
+    fn g2(&self) -> usize {
+        self.group.min(self.d_head)
+    }
+}
+
+/// Assemble the 10 cache/mask args of layer `layer_idx` for the given
+/// sequences (real sequences first; slots beyond `seqs.len()` are padding).
+pub fn gather_layer_args(
+    geo: &GatherGeo,
+    seqs: &[&mut SeqCache],
+    layer_idx: usize,
+) -> LayerArgs {
+    let (b, h, t, dh, r) = (
+        geo.b_art, geo.n_heads, geo.max_ctx, geo.d_head, geo.residual,
+    );
+    let g = geo.group;
+    let g2 = geo.g2();
+    let first: &LayerCache = &seqs[0].layers[layer_idx];
+    let (k_bits, v_bits) = (first.k_bits, first.v_bits);
+
+    let mut a = LayerArgs {
+        k_main: vec![],
+        k_main_f32: vec![],
+        k_scales: vec![],
+        k_zeros: vec![],
+        v_main: vec![],
+        v_main_f32: vec![],
+        v_scales: vec![],
+        v_zeros: vec![],
+        k_res: vec![0.0; b * h * r * dh],
+        v_res: vec![0.0; b * h * r * dh],
+        mask_q: vec![NEG; b * t],
+        mask_r: vec![NEG; b * r],
+        k_bits,
+        v_bits,
+    };
+    if k_bits > 0 {
+        let t_pk = t * k_bits as usize / 8;
+        a.k_main = vec![0u8; b * h * t_pk * dh];
+        a.k_scales = vec![0.0; b * h * (t / g) * dh];
+        a.k_zeros = vec![0.0; b * h * (t / g) * dh];
+    } else {
+        a.k_main_f32 = vec![0.0; b * h * t * dh];
+        a.k_scales = vec![0.0; b * h];
+        a.k_zeros = vec![0.0; b * h];
+    }
+    if v_bits > 0 {
+        let dh_pk = dh * v_bits as usize / 8;
+        a.v_main = vec![0u8; b * h * t * dh_pk];
+        a.v_scales = vec![0.0; b * h * t * (dh / g2)];
+        a.v_zeros = vec![0.0; b * h * t * (dh / g2)];
+    } else {
+        a.v_main_f32 = vec![0.0; b * h * t * dh];
+        a.v_scales = vec![0.0; b * h];
+        a.v_zeros = vec![0.0; b * h];
+    }
+
+    for (slot, seq) in seqs.iter().enumerate() {
+        let lc = &seq.layers[layer_idx];
+        debug_assert_eq!(lc.k_bits, k_bits, "mixed-policy batch");
+        debug_assert_eq!(lc.v_bits, v_bits, "mixed-policy batch");
+        // main cache region: contiguous per-slot copy
+        if k_bits > 0 {
+            let n = lc.k_pk.len();
+            a.k_main[slot * n..(slot + 1) * n].copy_from_slice(&lc.k_pk);
+            let np = lc.k_scales.len();
+            a.k_scales[slot * np..(slot + 1) * np].copy_from_slice(&lc.k_scales);
+            a.k_zeros[slot * np..(slot + 1) * np].copy_from_slice(&lc.k_zeros);
+        } else {
+            let n = lc.k_f32.len();
+            a.k_main_f32[slot * n..(slot + 1) * n].copy_from_slice(&lc.k_f32);
+        }
+        if v_bits > 0 {
+            let n = lc.v_pk.len();
+            a.v_main[slot * n..(slot + 1) * n].copy_from_slice(&lc.v_pk);
+            let np = lc.v_scales.len();
+            a.v_scales[slot * np..(slot + 1) * np].copy_from_slice(&lc.v_scales);
+            a.v_zeros[slot * np..(slot + 1) * np].copy_from_slice(&lc.v_zeros);
+        } else {
+            let n = lc.v_f32.len();
+            a.v_main_f32[slot * n..(slot + 1) * n].copy_from_slice(&lc.v_f32);
+        }
+        // residual ring (compacted)
+        let hrd = h * r * dh;
+        lc.gather_residual(
+            &mut a.k_res[slot * hrd..(slot + 1) * hrd],
+            &mut a.v_res[slot * hrd..(slot + 1) * hrd],
+        );
+        // masks
+        for i in 0..lc.n_q {
+            a.mask_q[slot * t + i] = 0.0;
+        }
+        for i in 0..lc.n_res() {
+            a.mask_r[slot * r + i] = 0.0;
+        }
+    }
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::{CacheGeometry, SeqCache};
+    use crate::quant::QuantPolicy;
+
+    fn mk_geo() -> (CacheGeometry, GatherGeo) {
+        let cg = CacheGeometry {
+            n_heads: 2, max_ctx: 64, d_head: 32, group: 32, residual: 32,
+        };
+        let gg = GatherGeo {
+            b_art: 2, n_heads: 2, max_ctx: 64, d_head: 32, group: 32, residual: 32,
+        };
+        (cg, gg)
+    }
+
+    #[test]
+    fn padded_slot_fully_masked() {
+        let (cg, gg) = mk_geo();
+        let p = QuantPolicy::kivi(1, 2);
+        let mut s = SeqCache::new(cg, &p);
+        let hd = 2 * 32;
+        for i in 0..5 {
+            s.layers[0].append_token(&vec![i as f32; hd], &vec![0.5; hd]);
+        }
+        let mut seqs = [&mut s];
+        let a = gather_layer_args(&gg, &seqs.as_mut_slice(), 0);
+        // slot 0: first 5 residual positions unmasked
+        assert_eq!(a.mask_r[0..5], [0.0; 5]);
+        assert_eq!(a.mask_r[5], NEG);
+        // slot 1 (padding): everything masked
+        assert!(a.mask_q[64..128].iter().all(|&m| m == NEG));
+        assert!(a.mask_r[32..64].iter().all(|&m| m == NEG));
+        // padded main cache is zero
+        assert!(a.k_main[a.k_main.len() / 2..].iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn residual_gathered_into_slot_layout() {
+        let (cg, gg) = mk_geo();
+        let p = QuantPolicy::float32(1);
+        let mut s0 = SeqCache::new(cg, &p);
+        let mut s1 = SeqCache::new(cg, &p);
+        let hd = 2 * 32;
+        s0.layers[0].append_token(&vec![7.0; hd], &vec![8.0; hd]);
+        s1.layers[0].append_token(&vec![9.0; hd], &vec![10.0; hd]);
+        let mut binding = [&mut s0, &mut s1];
+        let a = gather_layer_args(&gg, binding.as_mut_slice(), 0);
+        let hrd = 2 * 32 * 32;
+        assert_eq!(a.k_res[0], 7.0);
+        assert_eq!(a.v_res[0], 8.0);
+        assert_eq!(a.k_res[hrd], 9.0);
+        assert_eq!(a.v_res[hrd], 10.0);
+        // fp32 main path populated, packed path empty
+        assert!(a.k_main.is_empty());
+        assert_eq!(a.k_main_f32.len(), 2 * 2 * 64 * 32);
+    }
+}

@@ -1,0 +1,555 @@
+//! The generation engine: drives the per-layer AOT artifact pipeline over
+//! bit-packed KV caches under a layer-wise AsymKV policy.
+//!
+//! A forward step for a batch is: embed (host table lookup) → for each
+//! layer, gather that layer's packed cache + residual + masks into flat
+//! buffers, execute the `layer_b{B}_c{C}_k{kb}_v{vb}` artifact, thread the
+//! hidden-state literal straight into the next layer (no host round-trip),
+//! and append the returned per-token K/V to the residual window (folding
+//! the oldest group through the RTN kernels whenever the window would
+//! overflow) → head artifact → logits.
+//!
+//! Batches must be policy-homogeneous (the artifact grid is static); the
+//! coordinator groups requests accordingly. Prompts of unequal length are
+//! handled by per-sequence valid counts within padded chunks.
+
+pub mod gather;
+pub mod sampling;
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
+use xla::Literal;
+
+use crate::kvcache::{CachePool, SeqCache};
+use crate::model::Weights;
+use crate::quant::QuantPolicy;
+use crate::runtime::{lit_f32, lit_i32, lit_u8, to_f32_vec, Runtime};
+use crate::util::rng::SplitMix;
+use gather::{gather_layer_args, GatherGeo};
+pub use sampling::{argmax, sample, SamplingParams};
+
+/// `ASYMKV_NAIVE=1` switches the decode hot path back to the
+/// pre-optimization implementation (per-layer folds + mask rebuilds, no
+/// zero-copy single-sequence path) — the A/B lever for EXPERIMENTS.md §Perf.
+pub fn naive_mode() -> bool {
+    static NAIVE: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *NAIVE.get_or_init(|| {
+        std::env::var("ASYMKV_NAIVE").map(|v| v == "1").unwrap_or(false)
+    })
+}
+
+/// Engine statistics (exposed through the server /stats endpoint).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EngineStats {
+    pub decode_steps: u64,
+    pub prefill_chunks: u64,
+    pub folds: u64,
+    pub tokens_generated: u64,
+}
+
+pub struct Engine {
+    pub rt: Arc<Runtime>,
+    pub pool: Arc<CachePool>,
+    weights: Weights,
+    /// 9 weight literals per layer, in layer_fwd ABI order.
+    layer_lits: Vec<Vec<Literal>>,
+    head_lits: [Literal; 2], // rms_f, wout
+    embed: Vec<f32>,         // [V, d] host copy for the embed lookup
+    stats: Mutex<EngineStats>,
+}
+
+// SAFETY: Literals are host-side buffers only read (never mutated) after
+// construction; Runtime/CachePool are individually Sync. See runtime/mod.rs.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    /// Load weights + build weight literals for the runtime's model.
+    pub fn new(rt: Arc<Runtime>, pool_budget_bytes: usize) -> Result<Self> {
+        let m = &rt.manifest;
+        let weights = Weights::load(m.dir.join("weights.bin"))?;
+        let mut layer_lits = Vec::with_capacity(m.n_layers);
+        for i in 0..m.n_layers {
+            let ts = weights.layer_tensors(i)?;
+            let lits: Vec<Literal> = ts
+                .iter()
+                .map(|t| lit_f32(&t.shape, &t.data))
+                .collect::<Result<_>>()?;
+            layer_lits.push(lits);
+        }
+        let rms_f = weights.get("rms_f")?;
+        let wout = weights.get("wout")?;
+        let head_lits = [lit_f32(&rms_f.shape, &rms_f.data)?,
+                         lit_f32(&wout.shape, &wout.data)?];
+        let embed = weights.get("embed")?.data.clone();
+        let pool = Arc::new(CachePool::new(m.geometry(), pool_budget_bytes));
+        Ok(Self {
+            rt,
+            pool,
+            weights,
+            layer_lits,
+            head_lits,
+            embed,
+            stats: Mutex::new(EngineStats::default()),
+        })
+    }
+
+    pub fn manifest(&self) -> &crate::model::Manifest {
+        &self.rt.manifest
+    }
+
+    pub fn weights(&self) -> &Weights {
+        &self.weights
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        *self.stats.lock().unwrap()
+    }
+
+    /// Create a sequence under `policy` (validated against the artifact grid).
+    pub fn create_seq(&self, policy: &QuantPolicy) -> Result<u64> {
+        self.rt.manifest.supports_policy(policy)?;
+        Ok(self.pool.allocate(policy)?)
+    }
+
+    pub fn free_seq(&self, id: u64) -> Result<()> {
+        Ok(self.pool.free(id)?)
+    }
+
+    // -----------------------------------------------------------------
+    // forward passes
+    // -----------------------------------------------------------------
+
+    /// One decode step: `tokens[i]` is the current token of `ids[i]`.
+    /// Returns next-token logits per sequence.
+    pub fn decode(&self, ids: &[u64], tokens: &[i32]) -> Result<Vec<Vec<f32>>> {
+        assert_eq!(ids.len(), tokens.len());
+        let mut out = Vec::with_capacity(ids.len());
+        let max_b = *self.rt.manifest.batch_sizes.iter().max().unwrap();
+        for (idc, tkc) in ids.chunks(max_b).zip(tokens.chunks(max_b)) {
+            let toks: Vec<Vec<i32>> = tkc.iter().map(|&t| vec![t]).collect();
+            let logits = self.forward_chunk(idc, &toks, 1)?;
+            out.extend(logits.into_iter().map(|mut l| l.pop().unwrap()));
+        }
+        self.stats.lock().unwrap().decode_steps += 1;
+        Ok(out)
+    }
+
+    /// Prefill prompts (chunked); returns last-position logits per sequence.
+    pub fn prefill(&self, ids: &[u64], prompts: &[Vec<i32>]) -> Result<Vec<Vec<f32>>> {
+        Ok(self
+            .prefill_all_logits(ids, prompts)?
+            .into_iter()
+            .map(|mut per_pos| per_pos.pop().unwrap())
+            .collect())
+    }
+
+    /// Prefill returning logits at EVERY prompt position (perplexity evals).
+    pub fn prefill_all_logits(
+        &self,
+        ids: &[u64],
+        prompts: &[Vec<i32>],
+    ) -> Result<Vec<Vec<Vec<f32>>>> {
+        assert_eq!(ids.len(), prompts.len());
+        let m = &self.rt.manifest;
+        let chunk = m.chunk;
+        let max_len = prompts.iter().map(|p| p.len()).max().unwrap_or(0);
+        if max_len == 0 {
+            bail!("empty prompt");
+        }
+        let total = |id: u64| -> Result<usize> {
+            Ok(self.pool.with_seq(id, |s| s.pos)?)
+        };
+        for (&id, p) in ids.iter().zip(prompts) {
+            if total(id)? + p.len() + 1 > m.max_ctx + m.residual {
+                bail!(
+                    "prompt of {} tokens exceeds context budget (T={} R={})",
+                    p.len(), m.max_ctx, m.residual
+                );
+            }
+        }
+        let max_b = *m.batch_sizes.iter().max().unwrap();
+        let mut results: Vec<Vec<Vec<f32>>> = prompts.iter().map(|_| vec![]).collect();
+        for (ci, idc) in ids.chunks(max_b).enumerate() {
+            let pbatch = &prompts[ci * max_b..ci * max_b + idc.len()];
+            let mut offset = 0;
+            while offset < max_len {
+                let toks: Vec<Vec<i32>> = pbatch
+                    .iter()
+                    .map(|p| {
+                        p[offset.min(p.len())..(offset + chunk).min(p.len())].to_vec()
+                    })
+                    .collect();
+                if toks.iter().all(|t| t.is_empty()) {
+                    break;
+                }
+                let logits = self.forward_chunk(idc, &toks, chunk)?;
+                for (i, l) in logits.into_iter().enumerate() {
+                    results[ci * max_b + i].extend(l);
+                }
+                offset += chunk;
+                self.stats.lock().unwrap().prefill_chunks += 1;
+            }
+        }
+        Ok(results)
+    }
+
+    /// Prefill with KV-prefix reuse: sequences whose prompt starts with a
+    /// snapshotted prefix restore the packed cache state and only prefill
+    /// the remainder; full prompts are snapshotted afterwards.
+    pub fn prefill_cached(
+        &self,
+        ids: &[u64],
+        prompts: &[Vec<i32>],
+        pcache: &crate::kvcache::PrefixCache,
+    ) -> Result<Vec<Vec<f32>>> {
+        use crate::kvcache::PrefixEntry;
+        assert_eq!(ids.len(), prompts.len());
+
+        // restore hits + compute remainders
+        let mut remainders: Vec<Vec<i32>> = Vec::with_capacity(ids.len());
+        let mut cached_logits: Vec<Option<Vec<f32>>> = Vec::with_capacity(ids.len());
+        for (&id, prompt) in ids.iter().zip(prompts) {
+            let pname = self.pool.with_seq(id, |s| {
+                // policy identity = per-layer bits (names may differ)
+                s.layers
+                    .iter()
+                    .map(|l| format!("{}:{}", l.k_bits, l.v_bits))
+                    .collect::<Vec<_>>()
+                    .join(",")
+            })?;
+            match pcache.lookup(&pname, prompt) {
+                Some(hit) => {
+                    self.pool.with_seq(id, |s| {
+                        debug_assert_eq!(
+                            s.capacity_bytes(),
+                            hit.cache.capacity_bytes(),
+                            "snapshot/policy geometry mismatch"
+                        );
+                        *s = hit.cache.clone();
+                    })?;
+                    cached_logits.push(if hit.tokens.len() == prompt.len() {
+                        Some(hit.last_logits.clone())
+                    } else {
+                        None
+                    });
+                    remainders.push(prompt[hit.tokens.len()..].to_vec());
+                }
+                None => {
+                    cached_logits.push(None);
+                    remainders.push(prompt.clone());
+                }
+            }
+        }
+
+        // batched prefill of the remainders (exact hits ride along empty)
+        let mut out: Vec<Vec<f32>> = vec![Vec::new(); ids.len()];
+        let need: Vec<usize> = (0..ids.len())
+            .filter(|&i| !remainders[i].is_empty())
+            .collect();
+        if !need.is_empty() {
+            let sub_ids: Vec<u64> = need.iter().map(|&i| ids[i]).collect();
+            let sub_prompts: Vec<Vec<i32>> =
+                need.iter().map(|&i| remainders[i].clone()).collect();
+            let logits = self.prefill(&sub_ids, &sub_prompts)?;
+            for (&i, l) in need.iter().zip(logits) {
+                out[i] = l;
+            }
+        }
+        for i in 0..ids.len() {
+            if out[i].is_empty() {
+                out[i] = cached_logits[i]
+                    .clone()
+                    .expect("exact hit must carry logits");
+            }
+        }
+
+        // snapshot full prompts for future reuse
+        for (&id, prompt) in ids.iter().zip(prompts) {
+            let (pname, cache) = self.pool.with_seq(id, |s| {
+                (
+                    s.layers
+                        .iter()
+                        .map(|l| format!("{}:{}", l.k_bits, l.v_bits))
+                        .collect::<Vec<_>>()
+                        .join(","),
+                    s.clone(),
+                )
+            })?;
+            let idx = ids.iter().position(|&x| x == id).unwrap();
+            pcache.insert(PrefixEntry {
+                policy: pname,
+                tokens: prompt.clone(),
+                cache,
+                last_logits: out[idx].clone(),
+            });
+        }
+        Ok(out)
+    }
+
+    /// Greedy/sampled generation: prefill + n_gen decode steps.
+    pub fn generate(
+        &self,
+        ids: &[u64],
+        prompts: &[Vec<i32>],
+        n_gen: usize,
+        params: &SamplingParams,
+        seed: u64,
+    ) -> Result<Vec<Vec<i32>>> {
+        let logits = self.prefill(ids, prompts)?;
+        let mut rng = SplitMix::new(seed);
+        let mut cur: Vec<i32> =
+            logits.iter().map(|l| sample(l, params, &mut rng)).collect();
+        let mut out: Vec<Vec<i32>> = ids.iter().map(|_| Vec::new()).collect();
+        for _ in 0..n_gen {
+            for (o, &c) in out.iter_mut().zip(&cur) {
+                o.push(c);
+            }
+            let logits = self.decode(ids, &cur)?;
+            cur = logits.iter().map(|l| sample(l, params, &mut rng)).collect();
+        }
+        let mut st = self.stats.lock().unwrap();
+        st.tokens_generated += (n_gen * ids.len()) as u64;
+        Ok(out)
+    }
+
+    // -----------------------------------------------------------------
+    // core: one padded chunk through all layers
+    // -----------------------------------------------------------------
+
+    /// `tokens[i]` = the valid tokens of sequence i for this chunk
+    /// (possibly empty → the slot rides along fully padded).
+    /// Returns per-sequence logits at each of its valid positions.
+    fn forward_chunk(
+        &self,
+        ids: &[u64],
+        tokens: &[Vec<i32>],
+        c: usize,
+    ) -> Result<Vec<Vec<Vec<f32>>>> {
+        let m = &self.rt.manifest;
+        let b_art = m.pick_batch(ids.len());
+        let (h, t_ctx, dh, d, r) =
+            (m.n_heads, m.max_ctx, m.d_head, m.d_model, m.residual);
+        let n_valid: Vec<usize> = tokens.iter().map(|t| t.len()).collect();
+
+        // --- embed (host lookup) + positions ---
+        let mut x = vec![0f32; b_art * c * d];
+        let mut pos = vec![0i32; b_art];
+        self.pool.with_seqs(ids, |seqs| {
+            for (slot, seq) in seqs.iter().enumerate() {
+                pos[slot] = seq.pos as i32;
+                for (j, &tok) in tokens[slot].iter().enumerate() {
+                    let src = tok as usize * d;
+                    x[(slot * c + j) * d..(slot * c + j + 1) * d]
+                        .copy_from_slice(&self.embed[src..src + d]);
+                }
+            }
+        })?;
+        let mut x_lit = lit_f32(&[b_art, c, d], &x)?;
+        let pos_lit = lit_i32(&[b_art], &pos)?;
+
+        let geo = GatherGeo {
+            b_art,
+            n_heads: h,
+            max_ctx: t_ctx,
+            d_head: dh,
+            group: m.group,
+            residual: r,
+        };
+        let naive = naive_mode();
+
+        // PERF (hoisted folds + masks): fold counts depend only on
+        // (n_res, n_valid), which evolve identically across layers, so we
+        // fold ALL layers up front and build the masks/residual-count state
+        // once per step instead of once per layer.
+        let mut fold_count = 0u64;
+        let (mask_q, mask_r) = self.pool.with_seqs(ids, |seqs| {
+            if !naive {
+                for (slot, seq) in seqs.iter_mut().enumerate() {
+                    for lc in &mut seq.layers {
+                        while lc.n_res() + n_valid[slot] > r {
+                            lc.fold_oldest_group();
+                            fold_count += 1;
+                        }
+                    }
+                }
+            }
+            let mut mask_q = vec![gather::NEG; b_art * t_ctx];
+            let mut mask_r = vec![gather::NEG; b_art * r];
+            for (slot, seq) in seqs.iter().enumerate() {
+                let lc = &seq.layers[0];
+                for i in 0..lc.n_q {
+                    mask_q[slot * t_ctx + i] = 0.0;
+                }
+                for i in 0..lc.n_res() {
+                    mask_r[slot * r + i] = 0.0;
+                }
+            }
+            (mask_q, mask_r)
+        })?;
+        let mask_q_lit = lit_f32(&[b_art, t_ctx], &mask_q)?;
+        let mask_r_lit = lit_f32(&[b_art, r], &mask_r)?;
+
+        for layer in 0..m.n_layers {
+            // (naive mode folds per layer, as the first implementation did)
+            let args = self.pool.with_seqs(ids, |seqs| {
+                if naive {
+                    for (slot, seq) in seqs.iter_mut().enumerate() {
+                        let lc = &mut seq.layers[layer];
+                        while lc.n_res() + n_valid[slot] > r {
+                            lc.fold_oldest_group();
+                            fold_count += 1;
+                        }
+                    }
+                }
+                // PERF (zero-copy single-sequence path): with one sequence
+                // and no padding, the per-seq cache buffers ARE the
+                // artifact's slot layout — build literals straight from
+                // them instead of gathering into scratch.
+                if !naive && ids.len() == 1 && b_art == 1 {
+                    None
+                } else {
+                    Some(gather_layer_args(&geo, seqs, layer))
+                }
+            })?;
+
+            let (kb, vb) = match &args {
+                Some(a) => (a.k_bits, a.v_bits),
+                None => self.pool.with_seq(ids[0], |s| {
+                    (s.layers[layer].k_bits, s.layers[layer].v_bits)
+                })?,
+            };
+            let art = m.layer_artifact_name(b_art, c, kb, vb);
+            let exe = self.rt.executable(&art)?;
+
+            // cache literals in ABI order
+            let t_pk = t_ctx * kb as usize / 8;
+            let dh_pk = dh * vb as usize / 8;
+            let g2 = m.group.min(dh);
+            let ks_dims: Vec<usize> =
+                if kb > 0 { vec![b_art, h, t_ctx / m.group, dh] } else { vec![b_art, h, 1, 1] };
+            let vs_dims: Vec<usize> =
+                if vb > 0 { vec![b_art, h, t_ctx, dh / g2] } else { vec![b_art, h, 1, 1] };
+            let lits: Vec<Literal> = match &args {
+                Some(args) => {
+                    let k_main = if kb > 0 {
+                        lit_u8(&[b_art, h, t_pk, dh], &args.k_main)?
+                    } else {
+                        lit_f32(&[b_art, h, t_ctx, dh], &args.k_main_f32)?
+                    };
+                    let v_main = if vb > 0 {
+                        lit_u8(&[b_art, h, t_ctx, dh_pk], &args.v_main)?
+                    } else {
+                        lit_f32(&[b_art, h, t_ctx, dh], &args.v_main_f32)?
+                    };
+                    let mut ls = vec![
+                        k_main,
+                        lit_f32(&ks_dims, &args.k_scales)?,
+                        lit_f32(&ks_dims, &args.k_zeros)?,
+                        v_main,
+                        lit_f32(&vs_dims, &args.v_scales)?,
+                        lit_f32(&vs_dims, &args.v_zeros)?,
+                        lit_f32(&[b_art, h, r, dh], &args.k_res)?,
+                        lit_f32(&[b_art, h, r, dh], &args.v_res)?,
+                    ];
+                    if naive {
+                        // naive mode folds per layer, so the masks must be
+                        // rebuilt per layer from the gathered state
+                        ls.push(lit_f32(&[b_art, t_ctx], &args.mask_q)?);
+                        ls.push(lit_f32(&[b_art, r], &args.mask_r)?);
+                    }
+                    ls
+                }
+                None => self.pool.with_seq(ids[0], |seq| -> Result<Vec<Literal>> {
+                    let lc = &seq.layers[layer];
+                    let k_main = if kb > 0 {
+                        lit_u8(&[1, h, t_pk, dh], &lc.k_pk)?
+                    } else {
+                        lit_f32(&[1, h, t_ctx, dh], &lc.k_f32)?
+                    };
+                    let v_main = if vb > 0 {
+                        lit_u8(&[1, h, t_ctx, dh_pk], &lc.v_pk)?
+                    } else {
+                        lit_f32(&[1, h, t_ctx, dh], &lc.v_f32)?
+                    };
+                    // scales/zeros buffers already hold the dummy [H] shape
+                    // (size h) on the float path — see LayerCache::new
+                    let hrd = h * r * dh;
+                    let mut k_res = vec![0f32; hrd];
+                    let mut v_res = vec![0f32; hrd];
+                    lc.gather_residual(&mut k_res, &mut v_res);
+                    Ok(vec![
+                        k_main,
+                        lit_f32(&ks_dims, &lc.k_scales)?,
+                        lit_f32(&ks_dims, &lc.k_zeros)?,
+                        v_main,
+                        lit_f32(&vs_dims, &lc.v_scales)?,
+                        lit_f32(&vs_dims, &lc.v_zeros)?,
+                        lit_f32(&[1, h, r, dh], &k_res)?,
+                        lit_f32(&[1, h, r, dh], &v_res)?,
+                    ])
+                })??,
+            };
+            let mut call: Vec<&Literal> = Vec::with_capacity(21);
+            call.extend(self.layer_lits[layer].iter());
+            call.push(&x_lit);
+            call.push(&pos_lit);
+            call.extend(lits.iter());
+            if !naive || args.is_none() {
+                call.push(&mask_q_lit);
+                call.push(&mask_r_lit);
+            }
+            let outs = exe.run(&call)?;
+            let [x_out, k_chunk, v_chunk]: [Literal; 3] =
+                outs.try_into().map_err(|_| anyhow::anyhow!("bad outs"))?;
+
+            // append new K/V (only the valid tokens of each slot)
+            let k_host = to_f32_vec(&k_chunk)?; // [B, H, C, Dh]
+            let v_host = to_f32_vec(&v_chunk)?;
+            self.pool.with_seqs(ids, |seqs| {
+                let mut k_tok = vec![0f32; h * dh];
+                let mut v_tok = vec![0f32; h * dh];
+                for (slot, seq) in seqs.iter_mut().enumerate() {
+                    for j in 0..n_valid[slot] {
+                        for head in 0..h {
+                            let src = ((slot * h + head) * c + j) * dh;
+                            k_tok[head * dh..(head + 1) * dh]
+                                .copy_from_slice(&k_host[src..src + dh]);
+                            v_tok[head * dh..(head + 1) * dh]
+                                .copy_from_slice(&v_host[src..src + dh]);
+                        }
+                        seq.layers[layer].append_token(&k_tok, &v_tok);
+                    }
+                }
+            })?;
+            x_lit = x_out;
+        }
+        self.stats.lock().unwrap().folds += fold_count;
+
+        // --- head ---
+        let head = self.rt.executable(&format!("head_b{b_art}_c{c}"))?;
+        let outs = head.run(&[&self.head_lits[0], &self.head_lits[1], &x_lit])?;
+        let logits = to_f32_vec(&outs[0])?; // [B, C, V]
+        let v = m.vocab;
+
+        // advance positions + extract per-sequence valid logits
+        self.pool.with_seqs(ids, |seqs| {
+            for (slot, seq) in seqs.iter_mut().enumerate() {
+                seq.pos += n_valid[slot];
+            }
+        })?;
+        Ok((0..ids.len())
+            .map(|slot| {
+                (0..n_valid[slot])
+                    .map(|j| logits[(slot * c + j) * v..(slot * c + j + 1) * v].to_vec())
+                    .collect()
+            })
+            .collect())
+    }
+
+    /// Direct cache access for analysis tooling.
+    pub fn with_seq<R>(&self, id: u64, f: impl FnOnce(&mut SeqCache) -> R) -> Result<R> {
+        Ok(self.pool.with_seq(id, f)?)
+    }
+}

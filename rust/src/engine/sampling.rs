@@ -1,0 +1,107 @@
+//! Token sampling: greedy, temperature and top-k over logits.
+
+use crate::util::rng::SplitMix;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SamplingParams {
+    /// 0.0 = greedy argmax.
+    pub temperature: f32,
+    /// 0 = no truncation.
+    pub top_k: usize,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        Self { temperature: 0.0, top_k: 0 }
+    }
+}
+
+impl SamplingParams {
+    pub fn greedy() -> Self {
+        Self::default()
+    }
+}
+
+pub fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &x) in logits.iter().enumerate() {
+        if x > logits[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// Sample one token id from logits under `params`.
+pub fn sample(logits: &[f32], params: &SamplingParams, rng: &mut SplitMix) -> i32 {
+    if params.temperature <= 0.0 {
+        return argmax(logits);
+    }
+    // candidate set: top-k (or everything)
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    if params.top_k > 0 && params.top_k < logits.len() {
+        idx.sort_unstable_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+        idx.truncate(params.top_k);
+    }
+    let inv_t = 1.0 / params.temperature;
+    let m = idx.iter().map(|&i| logits[i]).fold(f32::NEG_INFINITY, f32::max);
+    let weights: Vec<f64> = idx
+        .iter()
+        .map(|&i| (((logits[i] - m) * inv_t) as f64).exp())
+        .collect();
+    let total: f64 = weights.iter().sum();
+    let mut u = rng.f64() * total;
+    for (w, &i) in weights.iter().zip(&idx) {
+        u -= w;
+        if u <= 0.0 {
+            return i as i32;
+        }
+    }
+    *idx.last().unwrap() as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max() {
+        assert_eq!(argmax(&[0.1, 3.0, -2.0]), 1);
+        let mut rng = SplitMix::new(0);
+        assert_eq!(sample(&[0.1, 3.0, -2.0], &SamplingParams::greedy(), &mut rng), 1);
+    }
+
+    #[test]
+    fn temperature_sampling_covers_support() {
+        let mut rng = SplitMix::new(1);
+        let params = SamplingParams { temperature: 1.0, top_k: 0 };
+        let logits = [1.0f32, 1.0, 1.0];
+        let mut seen = [false; 3];
+        for _ in 0..200 {
+            seen[sample(&logits, &params, &mut rng) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn top_k_truncates() {
+        let mut rng = SplitMix::new(2);
+        let params = SamplingParams { temperature: 2.0, top_k: 2 };
+        let logits = [5.0f32, 4.0, -100.0, -100.0];
+        for _ in 0..100 {
+            let t = sample(&logits, &params, &mut rng);
+            assert!(t == 0 || t == 1, "sampled outside top-k: {t}");
+        }
+    }
+
+    #[test]
+    fn low_temperature_concentrates() {
+        let mut rng = SplitMix::new(3);
+        let params = SamplingParams { temperature: 0.05, top_k: 0 };
+        let logits = [2.0f32, 1.0];
+        let hits = (0..100)
+            .filter(|_| sample(&logits, &params, &mut rng) == 0)
+            .count();
+        assert!(hits > 95);
+    }
+}

@@ -1,0 +1,91 @@
+//! Evaluation harness shared by the benches, examples and the config
+//! auto-tuner: task accuracy and perplexity of a policy on the synthetic
+//! benchmark suites (the paper's Tables 1-4 metrics, DESIGN.md §1).
+
+use anyhow::Result;
+
+use crate::engine::{Engine, SamplingParams};
+use crate::model::ByteTokenizer;
+use crate::quant::QuantPolicy;
+use crate::workload::tasks::{grade, Episode, ANSWER_LEN};
+
+/// Exact-match recall accuracy of `policy` over `episodes` (greedy).
+/// Episodes are batched up to the engine's max artifact batch.
+pub fn recall_accuracy(
+    engine: &Engine,
+    policy: &QuantPolicy,
+    episodes: &[Episode],
+) -> Result<f64> {
+    let tok = ByteTokenizer;
+    let max_b = *engine.manifest().batch_sizes.iter().max().unwrap();
+    let mut total = 0.0;
+    for chunk in episodes.chunks(max_b) {
+        let ids: Vec<u64> = chunk
+            .iter()
+            .map(|_| engine.create_seq(policy))
+            .collect::<Result<_>>()?;
+        let prompts: Vec<Vec<i32>> =
+            chunk.iter().map(|e| tok.encode(&e.prompt)).collect();
+        let outs = engine.generate(&ids, &prompts, ANSWER_LEN,
+                                   &SamplingParams::greedy(), 0)?;
+        for (ep, out) in chunk.iter().zip(&outs) {
+            total += grade(&ep.answer, &tok.decode(out));
+        }
+        for id in ids {
+            engine.free_seq(id)?;
+        }
+    }
+    Ok(total / episodes.len() as f64)
+}
+
+/// Perplexity of `policy` on documents (byte-level, teacher-forced through
+/// the cached prefill path so quantization affects the prediction of every
+/// position exactly as it would during generation).
+pub fn perplexity(
+    engine: &Engine,
+    policy: &QuantPolicy,
+    docs: &[Vec<u8>],
+) -> Result<f64> {
+    let tok = ByteTokenizer;
+    let mut nll = 0.0f64;
+    let mut count = 0usize;
+    for doc in docs {
+        let ids = [engine.create_seq(policy)?];
+        let tokens = tok.encode(doc);
+        let all = engine.prefill_all_logits(&ids, &[tokens.clone()])?;
+        engine.free_seq(ids[0])?;
+        // next-token NLL at every position
+        for (pos, logits) in all[0].iter().enumerate() {
+            if pos + 1 >= tokens.len() {
+                break;
+            }
+            let target = tokens[pos + 1] as usize;
+            let m = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let lse: f64 = logits
+                .iter()
+                .map(|&x| ((x - m) as f64).exp())
+                .sum::<f64>()
+                .ln()
+                + m as f64;
+            nll += lse - logits[target] as f64;
+            count += 1;
+        }
+    }
+    Ok((nll / count as f64).exp())
+}
+
+/// "≥ 90 % of float" bookkeeping used in the paper's table annotations.
+pub fn meets_90pct(score: f64, float_score: f64) -> bool {
+    score >= 0.9 * float_score
+}
+
+/// Standard policy rows for a table: float, KIVI-2bit, and the AsymKV
+/// pair (l/0 vs 0/l) at the given l.
+pub fn table_policies(n_layers: usize, l: usize) -> Vec<QuantPolicy> {
+    vec![
+        QuantPolicy::float32(n_layers),
+        QuantPolicy::kivi(n_layers, 2),
+        QuantPolicy::asymkv21(n_layers, 0, l),
+        QuantPolicy::asymkv21(n_layers, l, 0),
+    ]
+}

@@ -1,0 +1,501 @@
+//! Per-(sequence, layer) KV cache: packed quantized region + fp32 residual
+//! ring, in exactly the memory layout the AOT layer artifacts consume, so
+//! batch assembly is a straight memcpy per tensor.
+//!
+//! Layouts (row-major):
+//!   packed K   [H, T·kb/8, Dh] u8      scales/zeros [H, T/G, Dh] f32
+//!   packed V   [H, T, Dh·vb/8] u8      scales/zeros [H, T, Dh/G2] f32
+//!   residual   [R, H, Dh] f32 ring (token-major so an append is one
+//!              contiguous row write); materialized to [H, R, Dh] on gather
+//!
+//! Fold policy (ABI shared with python/compile/engine_sim.py): before
+//! appending C tokens, fold the OLDEST group of G residual tokens into the
+//! packed region while n_res + C > R. Folding runs the same RTN math as the
+//! fold artifacts (bit-exact; asserted against golden.json).
+
+use crate::quant::rtn::{self, GroupParams};
+use crate::quant::Bits;
+
+/// Geometry shared by every layer cache of a model.
+#[derive(Debug, Clone, Copy)]
+pub struct CacheGeometry {
+    pub n_heads: usize,
+    pub max_ctx: usize,   // T
+    pub d_head: usize,    // Dh
+    pub group: usize,     // G
+    pub residual: usize,  // R
+}
+
+impl CacheGeometry {
+    pub fn g2(&self) -> usize {
+        self.group.min(self.d_head)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct LayerCache {
+    pub geo: CacheGeometry,
+    pub k_bits: Bits,
+    pub v_bits: Bits,
+    /// quantized token count (multiple of G)
+    pub n_q: usize,
+    // --- K side (packed when k_bits > 0, fp32 otherwise) ---
+    pub k_pk: Vec<u8>,
+    pub k_f32: Vec<f32>,
+    pub k_scales: Vec<f32>,
+    pub k_zeros: Vec<f32>,
+    // --- V side ---
+    pub v_pk: Vec<u8>,
+    pub v_f32: Vec<f32>,
+    pub v_scales: Vec<f32>,
+    pub v_zeros: Vec<f32>,
+    // --- fp32 residual ring, [R, H, Dh] token-major ---
+    res_k: Vec<f32>,
+    res_v: Vec<f32>,
+    res_start: usize,
+    res_len: usize,
+}
+
+impl LayerCache {
+    pub fn new(geo: CacheGeometry, k_bits: Bits, v_bits: Bits) -> Self {
+        let (h, t, dh, g) = (geo.n_heads, geo.max_ctx, geo.d_head, geo.group);
+        let g2 = geo.g2();
+        let (k_pk, k_f32, k_scales, k_zeros) = if k_bits > 0 {
+            (
+                vec![0u8; h * rtn::packed_len(t, k_bits) * dh],
+                vec![],
+                vec![0f32; h * (t / g) * dh],
+                vec![0f32; h * (t / g) * dh],
+            )
+        } else {
+            (vec![], vec![0f32; h * t * dh], vec![0f32; h], vec![0f32; h])
+        };
+        let (v_pk, v_f32, v_scales, v_zeros) = if v_bits > 0 {
+            (
+                vec![0u8; h * t * rtn::packed_len(dh, v_bits)],
+                vec![],
+                vec![0f32; h * t * (dh / g2)],
+                vec![0f32; h * t * (dh / g2)],
+            )
+        } else {
+            (vec![], vec![0f32; h * t * dh], vec![0f32; h], vec![0f32; h])
+        };
+        Self {
+            geo,
+            k_bits,
+            v_bits,
+            n_q: 0,
+            k_pk,
+            k_f32,
+            k_scales,
+            k_zeros,
+            v_pk,
+            v_f32,
+            v_scales,
+            v_zeros,
+            res_k: vec![0f32; geo.residual * h * dh],
+            res_v: vec![0f32; geo.residual * h * dh],
+            res_start: 0,
+            res_len: 0,
+        }
+    }
+
+    pub fn n_res(&self) -> usize {
+        self.res_len
+    }
+
+    /// Total cached tokens (quantized + residual).
+    pub fn n_tokens(&self) -> usize {
+        self.n_q + self.res_len
+    }
+
+    /// Append one token's K/V ([H, Dh] row-major each), folding if needed.
+    /// Returns the number of folds performed (engine metrics).
+    pub fn append_token(&mut self, k: &[f32], v: &[f32]) -> usize {
+        let hd = self.geo.n_heads * self.geo.d_head;
+        debug_assert_eq!(k.len(), hd);
+        debug_assert_eq!(v.len(), hd);
+        let mut folds = 0;
+        while self.res_len + 1 > self.geo.residual {
+            self.fold_oldest_group();
+            folds += 1;
+        }
+        let slot = (self.res_start + self.res_len) % self.geo.residual;
+        self.res_k[slot * hd..(slot + 1) * hd].copy_from_slice(k);
+        self.res_v[slot * hd..(slot + 1) * hd].copy_from_slice(v);
+        self.res_len += 1;
+        folds
+    }
+
+    /// Fold the oldest G residual tokens into the packed/quantized region.
+    pub fn fold_oldest_group(&mut self) {
+        let geo = self.geo;
+        let (h, dh, g) = (geo.n_heads, geo.d_head, geo.group);
+        assert!(self.res_len >= g, "fold needs at least one full group");
+        assert!(self.n_q + g <= geo.max_ctx, "quantized region full");
+        let hd = h * dh;
+
+        // gather oldest G tokens per head into [G, Dh] scratch
+        let mut kg = vec![0f32; g * dh];
+        let mut vg = vec![0f32; g * dh];
+        let gi = self.n_q / g; // destination group index
+        for head in 0..h {
+            for t in 0..g {
+                let slot = (self.res_start + t) % geo.residual;
+                let src = slot * hd + head * dh;
+                kg[t * dh..(t + 1) * dh]
+                    .copy_from_slice(&self.res_k[src..src + dh]);
+                vg[t * dh..(t + 1) * dh]
+                    .copy_from_slice(&self.res_v[src..src + dh]);
+            }
+            self.fold_k_head(head, gi, &kg);
+            self.fold_v_head(head, gi, &vg);
+        }
+        self.res_start = (self.res_start + g) % geo.residual;
+        self.res_len -= g;
+        self.n_q += g;
+    }
+
+    fn fold_k_head(&mut self, head: usize, gi: usize, kg: &[f32]) {
+        let geo = self.geo;
+        let (t, dh, g) = (geo.max_ctx, geo.d_head, geo.group);
+        if self.k_bits == 0 {
+            let base = head * t * dh + self.n_q * dh;
+            self.k_f32[base..base + g * dh].copy_from_slice(kg);
+            return;
+        }
+        let bits = self.k_bits;
+        let rows_pk = rtn::packed_len(g, bits); // bytes along token axis
+        let t_pk = rtn::packed_len(t, bits);
+        let mut params = vec![GroupParams { scale: 0.0, zero: 0.0 }; dh];
+        let dst = head * t_pk * dh + gi * rows_pk * dh;
+        rtn::fold_k_group(kg, g, dh, bits,
+                          &mut self.k_pk[dst..dst + rows_pk * dh], &mut params);
+        let ng = t / g;
+        let pbase = head * ng * dh + gi * dh;
+        for d in 0..dh {
+            self.k_scales[pbase + d] = params[d].scale;
+            self.k_zeros[pbase + d] = params[d].zero;
+        }
+    }
+
+    fn fold_v_head(&mut self, head: usize, _gi: usize, vg: &[f32]) {
+        let geo = self.geo;
+        let (t, dh, g) = (geo.max_ctx, geo.d_head, geo.group);
+        let g2 = geo.g2();
+        if self.v_bits == 0 {
+            let base = head * t * dh + self.n_q * dh;
+            self.v_f32[base..base + g * dh].copy_from_slice(vg);
+            return;
+        }
+        let bits = self.v_bits;
+        let bpt = rtn::packed_len(dh, bits); // bytes per token
+        let dg = dh / g2;
+        let mut params = vec![GroupParams { scale: 0.0, zero: 0.0 }; g * dg];
+        let dst = head * t * bpt + self.n_q * bpt;
+        rtn::fold_v_group(vg, g, dh, g2, bits,
+                          &mut self.v_pk[dst..dst + g * bpt], &mut params);
+        let pbase = head * t * dg + self.n_q * dg;
+        for i in 0..g * dg {
+            self.v_scales[pbase + i] = params[i].scale;
+            self.v_zeros[pbase + i] = params[i].zero;
+        }
+    }
+
+    /// Write the residual window into `out` laid out [H, R, Dh] (artifact
+    /// layout), compacting the ring so occupied slots are [0, n_res).
+    pub fn gather_residual(&self, out_k: &mut [f32], out_v: &mut [f32]) {
+        let geo = self.geo;
+        let (h, dh, r) = (geo.n_heads, geo.d_head, geo.residual);
+        let hd = h * dh;
+        debug_assert_eq!(out_k.len(), h * r * dh);
+        for slot in 0..self.res_len {
+            let src_row = ((self.res_start + slot) % r) * hd;
+            for head in 0..h {
+                let src = src_row + head * dh;
+                let dst = head * r * dh + slot * dh;
+                out_k[dst..dst + dh]
+                    .copy_from_slice(&self.res_k[src..src + dh]);
+                out_v[dst..dst + dh]
+                    .copy_from_slice(&self.res_v[src..src + dh]);
+            }
+        }
+    }
+
+    /// Reconstruct the full fp32 K cache [H, n_tokens, Dh] (analysis tools;
+    /// dequantizes the packed region through the same rtn kernels).
+    pub fn dequant_k_full(&self) -> Vec<f32> {
+        self.dequant_full(true)
+    }
+
+    pub fn dequant_v_full(&self) -> Vec<f32> {
+        self.dequant_full(false)
+    }
+
+    fn dequant_full(&self, is_k: bool) -> Vec<f32> {
+        let geo = self.geo;
+        let (h, t, dh, g) = (geo.n_heads, geo.max_ctx, geo.d_head, geo.group);
+        let g2 = geo.g2();
+        let n = self.n_tokens();
+        let mut out = vec![0f32; h * n * dh];
+        let bits = if is_k { self.k_bits } else { self.v_bits };
+        for head in 0..h {
+            // quantized region
+            for gi in 0..self.n_q / g {
+                let mut buf = vec![0f32; g * dh];
+                if bits == 0 {
+                    let src = head * t * dh + gi * g * dh;
+                    let f32s = if is_k { &self.k_f32 } else { &self.v_f32 };
+                    buf.copy_from_slice(&f32s[src..src + g * dh]);
+                } else if is_k {
+                    let rows_pk = rtn::packed_len(g, bits);
+                    let t_pk = rtn::packed_len(t, bits);
+                    let src = head * t_pk * dh + gi * rows_pk * dh;
+                    let ng = t / g;
+                    let pbase = head * ng * dh + gi * dh;
+                    let params: Vec<GroupParams> = (0..dh)
+                        .map(|d| GroupParams {
+                            scale: self.k_scales[pbase + d],
+                            zero: self.k_zeros[pbase + d],
+                        })
+                        .collect();
+                    rtn::unfold_k_group(&self.k_pk[src..src + rows_pk * dh],
+                                        g, dh, bits, &params, &mut buf);
+                } else {
+                    let bpt = rtn::packed_len(dh, bits);
+                    let dg = dh / g2;
+                    let src = head * t * bpt + gi * g * bpt;
+                    let pbase = head * t * dg + gi * g * dg;
+                    let params: Vec<GroupParams> = (0..g * dg)
+                        .map(|i| GroupParams {
+                            scale: self.v_scales[pbase + i],
+                            zero: self.v_zeros[pbase + i],
+                        })
+                        .collect();
+                    rtn::unfold_v_group(&self.v_pk[src..src + g * bpt],
+                                        g, dh, g2, bits, &params, &mut buf);
+                }
+                let dst = head * n * dh + gi * g * dh;
+                out[dst..dst + g * dh].copy_from_slice(&buf);
+            }
+            // residual region
+            let hd = h * dh;
+            for slot in 0..self.res_len {
+                let src_row = ((self.res_start + slot) % geo.residual) * hd;
+                let res = if is_k { &self.res_k } else { &self.res_v };
+                let dst = head * n * dh + (self.n_q + slot) * dh;
+                out[dst..dst + dh]
+                    .copy_from_slice(&res[src_row + head * dh..src_row + head * dh + dh]);
+            }
+        }
+        out
+    }
+
+    /// Bytes actually used by cached tokens (packed data + params + residual).
+    pub fn used_bytes(&self) -> usize {
+        let geo = self.geo;
+        let (h, dh, g) = (geo.n_heads, geo.d_head, geo.group);
+        let g2 = geo.g2();
+        let mut total = 0usize;
+        // K side
+        if self.k_bits > 0 {
+            total += h * rtn::packed_len(self.n_q, self.k_bits) * dh;
+            total += 2 * h * (self.n_q / g) * dh * 4;
+        } else {
+            total += h * self.n_q * dh * 4;
+        }
+        // V side
+        if self.v_bits > 0 {
+            total += h * self.n_q * rtn::packed_len(dh, self.v_bits);
+            total += 2 * h * self.n_q * (dh / g2) * 4;
+        } else {
+            total += h * self.n_q * dh * 4;
+        }
+        // residual fp32 (both K and V)
+        total += 2 * self.res_len * h * dh * 4;
+        total
+    }
+
+    /// Full allocation footprint (static shapes; what the artifacts see).
+    pub fn capacity_bytes(&self) -> usize {
+        self.k_pk.len()
+            + self.v_pk.len()
+            + 4 * (self.k_f32.len()
+                + self.v_f32.len()
+                + self.k_scales.len()
+                + self.k_zeros.len()
+                + self.v_scales.len()
+                + self.v_zeros.len()
+                + self.res_k.len()
+                + self.res_v.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    fn geo() -> CacheGeometry {
+        CacheGeometry { n_heads: 2, max_ctx: 128, d_head: 32, group: 32, residual: 64 }
+    }
+
+    fn tok(g: &mut Gen, hd: usize) -> (Vec<f32>, Vec<f32>) {
+        (g.vec_normal(hd, 1.0), g.vec_normal(hd, 1.0))
+    }
+
+    #[test]
+    fn append_fold_counts() {
+        let mut c = LayerCache::new(geo(), 2, 1);
+        let mut g = Gen { rng: crate::util::rng::SplitMix::new(1) };
+        let hd = 2 * 32;
+        for i in 0..64 {
+            let (k, v) = tok(&mut g, hd);
+            assert_eq!(c.append_token(&k, &v), 0, "no fold before R at {i}");
+        }
+        assert_eq!(c.n_res(), 64);
+        assert_eq!(c.n_q, 0);
+        let (k, v) = tok(&mut g, hd);
+        assert_eq!(c.append_token(&k, &v), 1); // first fold
+        assert_eq!(c.n_q, 32);
+        assert_eq!(c.n_res(), 33);
+        assert_eq!(c.n_tokens(), 65);
+    }
+
+    #[test]
+    fn float_path_is_lossless() {
+        let mut c = LayerCache::new(geo(), 0, 0);
+        let mut g = Gen { rng: crate::util::rng::SplitMix::new(2) };
+        let hd = 2 * 32;
+        let mut ks = vec![];
+        for _ in 0..100 {
+            let (k, v) = tok(&mut g, hd);
+            ks.push(k.clone());
+            c.append_token(&k, &v);
+        }
+        let full = c.dequant_k_full(); // [H, 100, Dh]
+        for (t, k) in ks.iter().enumerate() {
+            for head in 0..2 {
+                let got = &full[head * 100 * 32 + t * 32..][..32];
+                let want = &k[head * 32..(head + 1) * 32];
+                assert_eq!(got, want, "token {t} head {head}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_path_error_bounded_prop() {
+        check("cache_quant_bound", 10, |g: &mut Gen| {
+            let bits = *g.pick(&[1u8, 2, 4]);
+            let mut c = LayerCache::new(geo(), bits, bits);
+            let hd = 2 * 32;
+            let n = g.usize_in(70, 120);
+            let mut ks = vec![];
+            for _ in 0..n {
+                let (k, v) = tok(g, hd);
+                ks.push(k.clone());
+                c.append_token(&k, &v);
+            }
+            let full = c.dequant_k_full();
+            let nt = c.n_tokens();
+            if nt != n {
+                return Err(format!("token count {nt} != {n}"));
+            }
+            // max error over quantized region bounded by max scale/2
+            let max_scale = c
+                .k_scales
+                .iter()
+                .fold(0f32, |a, &b| a.max(b));
+            for t in 0..c.n_q {
+                for head in 0..2 {
+                    for d in 0..32 {
+                        let got = full[head * nt * 32 + t * 32 + d];
+                        let want = ks[t][head * 32 + d];
+                        if (got - want).abs() > max_scale * 0.5 + 1e-4 {
+                            return Err(format!(
+                                "err at t={t} h={head} d={d}: {got} vs {want}"
+                            ));
+                        }
+                    }
+                }
+            }
+            // residual region must be exact
+            for t in c.n_q..nt {
+                for head in 0..2 {
+                    let got = &full[head * nt * 32 + t * 32..][..32];
+                    let want = &ks[t][head * 32..(head + 1) * 32];
+                    if got != want {
+                        return Err(format!("residual not exact at {t}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn used_bytes_monotone_and_below_capacity() {
+        let mut c = LayerCache::new(geo(), 2, 2);
+        let mut g = Gen { rng: crate::util::rng::SplitMix::new(3) };
+        let hd = 2 * 32;
+        let first = {
+            let (k, v) = tok(&mut g, hd);
+            c.append_token(&k, &v);
+            c.used_bytes()
+        };
+        let mut prev = first;
+        for _ in 0..99 {
+            let (k, v) = tok(&mut g, hd);
+            let folds = c.append_token(&k, &v);
+            let used = c.used_bytes();
+            // between folds usage grows strictly; a fold converts 32 fp32
+            // residual tokens into packed form, which may shrink usage
+            if folds == 0 {
+                assert!(used > prev, "usage must grow on plain append");
+            }
+            prev = used;
+            assert!(used <= c.capacity_bytes());
+        }
+        assert!(prev > first);
+    }
+
+    #[test]
+    fn bits_ordering_in_used_bytes() {
+        // same token stream: 1-bit cache uses less memory than 2-bit than fp
+        let mut g = Gen { rng: crate::util::rng::SplitMix::new(4) };
+        let hd = 2 * 32;
+        let toks: Vec<(Vec<f32>, Vec<f32>)> = (0..100).map(|_| tok(&mut g, hd)).collect();
+        let mut used = vec![];
+        for bits in [1u8, 2, 0] {
+            let mut c = LayerCache::new(geo(), bits, bits);
+            for (k, v) in &toks {
+                c.append_token(k, v);
+            }
+            used.push(c.used_bytes());
+        }
+        assert!(used[0] < used[1] && used[1] < used[2]);
+    }
+
+    #[test]
+    fn gather_residual_compacts_ring() {
+        let mut c = LayerCache::new(geo(), 2, 2);
+        let hd = 2 * 32;
+        // push 70 tokens with identifiable values
+        for i in 0..70 {
+            let k = vec![i as f32; hd];
+            let v = vec![-(i as f32); hd];
+            c.append_token(&k, &v);
+        }
+        // 70 = 32 folded + 38 residual; oldest residual token is #32
+        assert_eq!(c.n_q, 32);
+        assert_eq!(c.n_res(), 38);
+        let (h, r, dh) = (2, 64, 32);
+        let mut out_k = vec![0f32; h * r * dh];
+        let mut out_v = vec![0f32; h * r * dh];
+        c.gather_residual(&mut out_k, &mut out_v);
+        for slot in 0..38 {
+            assert_eq!(out_k[slot * dh], (32 + slot) as f32, "slot {slot}");
+            assert_eq!(out_v[slot * dh], -((32 + slot) as f32));
+        }
+    }
+}

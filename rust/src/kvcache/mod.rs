@@ -1,0 +1,10 @@
+//! KV-cache memory substrate: bit-packed per-layer caches with fp32
+//! residual windows (KIVI layout) and a budgeted pool with peak tracking.
+
+pub mod layer;
+pub mod pool;
+pub mod prefix;
+
+pub use layer::{CacheGeometry, LayerCache};
+pub use pool::{CachePool, PoolError, PoolStats, SeqCache};
+pub use prefix::{PrefixCache, PrefixEntry, PrefixStats};

@@ -1,0 +1,190 @@
+//! Prefix cache: reuse prefilled (possibly quantized) KV state across
+//! requests that share a prompt prefix — the KV-cache-reuse optimization
+//! every production server ships (vLLM "automatic prefix caching"),
+//! here operating directly on AsymKV's bit-packed caches: a snapshot stores
+//! the packed groups + scales/zeros + fp residual ring as-is, so restoring
+//! costs one memcpy per tensor and no requantization.
+//!
+//! Snapshots are keyed by (policy name, full prompt tokens); a lookup
+//! returns the LONGEST entry whose tokens are a prefix of the new prompt.
+//! Entries carry the last-position logits so an exact-match request skips
+//! prefill entirely. Byte-budgeted with LRU eviction.
+
+use std::sync::{Arc, Mutex};
+
+use super::pool::SeqCache;
+
+pub struct PrefixEntry {
+    pub policy: String,
+    pub tokens: Vec<i32>,
+    pub cache: SeqCache,
+    /// logits at the last prompt position (exact-hit fast path)
+    pub last_logits: Vec<f32>,
+}
+
+struct Inner {
+    /// most-recently-used last
+    entries: Vec<Arc<PrefixEntry>>,
+    used_bytes: usize,
+    hits: u64,
+    misses: u64,
+}
+
+pub struct PrefixCache {
+    budget_bytes: usize,
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PrefixStats {
+    pub entries: usize,
+    pub used_bytes: usize,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl PrefixCache {
+    pub fn new(budget_bytes: usize) -> Self {
+        Self {
+            budget_bytes,
+            inner: Mutex::new(Inner {
+                entries: Vec::new(),
+                used_bytes: 0,
+                hits: 0,
+                misses: 0,
+            }),
+        }
+    }
+
+    /// Longest stored prefix of `prompt` under `policy` (and bumps LRU).
+    pub fn lookup(&self, policy: &str, prompt: &[i32]) -> Option<Arc<PrefixEntry>> {
+        let mut inner = self.inner.lock().unwrap();
+        let mut best: Option<usize> = None;
+        for (i, e) in inner.entries.iter().enumerate() {
+            if e.policy == policy
+                && e.tokens.len() <= prompt.len()
+                && prompt[..e.tokens.len()] == e.tokens[..]
+                && best.is_none_or(|b| inner.entries[b].tokens.len() < e.tokens.len())
+            {
+                best = Some(i);
+            }
+        }
+        match best {
+            Some(i) => {
+                let e = inner.entries.remove(i);
+                inner.entries.push(e.clone()); // MRU
+                inner.hits += 1;
+                Some(e)
+            }
+            None => {
+                inner.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Store a snapshot (evicting LRU entries to honour the byte budget).
+    /// Duplicate (policy, tokens) keys replace the old entry.
+    pub fn insert(&self, entry: PrefixEntry) {
+        let bytes = entry.cache.used_bytes() + entry.tokens.len() * 4;
+        if bytes > self.budget_bytes {
+            return; // would never fit
+        }
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(i) = inner
+            .entries
+            .iter()
+            .position(|e| e.policy == entry.policy && e.tokens == entry.tokens)
+        {
+            let old = inner.entries.remove(i);
+            inner.used_bytes -= old.cache.used_bytes() + old.tokens.len() * 4;
+        }
+        while inner.used_bytes + bytes > self.budget_bytes && !inner.entries.is_empty() {
+            let old = inner.entries.remove(0);
+            inner.used_bytes -= old.cache.used_bytes() + old.tokens.len() * 4;
+        }
+        inner.used_bytes += bytes;
+        inner.entries.push(Arc::new(entry));
+    }
+
+    pub fn stats(&self) -> PrefixStats {
+        let inner = self.inner.lock().unwrap();
+        PrefixStats {
+            entries: inner.entries.len(),
+            used_bytes: inner.used_bytes,
+            hits: inner.hits,
+            misses: inner.misses,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::layer::CacheGeometry;
+    use crate::quant::QuantPolicy;
+
+    fn geo() -> CacheGeometry {
+        CacheGeometry { n_heads: 1, max_ctx: 64, d_head: 32, group: 32, residual: 32 }
+    }
+
+    fn entry(policy: &str, tokens: Vec<i32>) -> PrefixEntry {
+        PrefixEntry {
+            policy: policy.into(),
+            tokens,
+            cache: SeqCache::new(geo(), &QuantPolicy::kivi(1, 2)),
+            last_logits: vec![0.0; 4],
+        }
+    }
+
+    #[test]
+    fn lookup_longest_matching_prefix() {
+        let pc = PrefixCache::new(1 << 20);
+        pc.insert(entry("kivi", vec![1, 2]));
+        pc.insert(entry("kivi", vec![1, 2, 3]));
+        pc.insert(entry("float", vec![1, 2, 3, 4]));
+        let hit = pc.lookup("kivi", &[1, 2, 3, 4, 5]).unwrap();
+        assert_eq!(hit.tokens, vec![1, 2, 3]); // longest kivi prefix
+        assert!(pc.lookup("kivi", &[9, 9]).is_none());
+        // policy must match
+        assert_eq!(pc.lookup("float", &[1, 2, 3, 4]).unwrap().tokens.len(), 4);
+        let s = pc.stats();
+        assert_eq!(s.hits, 2);
+        assert_eq!(s.misses, 1);
+    }
+
+    #[test]
+    fn lru_eviction_respects_budget() {
+        let one = entry("p", vec![1]).cache.used_bytes() + 4;
+        let pc = PrefixCache::new(one * 2 + one / 2);
+        pc.insert(entry("p", vec![1]));
+        pc.insert(entry("p", vec![2]));
+        // touch [1] so [2] becomes LRU
+        assert!(pc.lookup("p", &[1, 5]).is_some());
+        pc.insert(entry("p", vec![3]));
+        assert_eq!(pc.stats().entries, 2);
+        assert!(pc.lookup("p", &[2, 5]).is_none(), "LRU entry evicted");
+        assert!(pc.lookup("p", &[1, 5]).is_some());
+        assert!(pc.lookup("p", &[3, 5]).is_some());
+    }
+
+    #[test]
+    fn duplicate_key_replaces() {
+        let pc = PrefixCache::new(1 << 20);
+        pc.insert(entry("p", vec![1, 2]));
+        let mut e = entry("p", vec![1, 2]);
+        e.last_logits = vec![9.0; 4];
+        pc.insert(e);
+        assert_eq!(pc.stats().entries, 1);
+        assert_eq!(pc.lookup("p", &[1, 2]).unwrap().last_logits[0], 9.0);
+    }
+
+    #[test]
+    fn oversized_entry_ignored() {
+        // an empty snapshot still costs tokens.len()·4 bytes; a budget of
+        // 2 bytes cannot hold even that
+        let pc = PrefixCache::new(2);
+        pc.insert(entry("p", vec![1]));
+        assert_eq!(pc.stats().entries, 0);
+    }
+}

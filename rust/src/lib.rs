@@ -1,0 +1,30 @@
+//! # AsymKV
+//!
+//! Production-shaped reproduction of *"AsymKV: Enabling 1-Bit Quantization
+//! of KV Cache with Layer-Wise Asymmetric Quantization Configurations"*
+//! (COLING 2025) as a three-layer Rust + JAX + Pallas serving stack.
+//!
+//! * Layer 1 (build time): Pallas kernels — group RTN quantize/pack and
+//!   fused unpack→dequant→attention (`python/compile/kernels/`).
+//! * Layer 2 (build time): a Llama-style decoder lowered per-layer to HLO
+//!   text, one artifact per (k_bits, v_bits) variant (`python/compile/`).
+//! * Layer 3 (this crate): the serving coordinator — PJRT runtime,
+//!   bit-packed KV-cache pools, the AsymKV layer-wise policy engine,
+//!   dynamic batching, scheduling, a TCP server, analysis tooling and the
+//!   bench harnesses that regenerate every table and figure of the paper.
+//!
+//! Start with [`engine::Engine`] for single-process generation or
+//! [`coordinator::Coordinator`] for the batched serving front end.
+
+pub mod analysis;
+pub mod coordinator;
+pub mod engine;
+pub mod evals;
+pub mod kvcache;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod search;
+pub mod server;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,205 @@
+//! `asymkv` — the leader binary: launcher / CLI for the serving stack.
+//!
+//! Subcommands (first positional arg):
+//!   serve     start the TCP serving front end
+//!   generate  one-shot generation from the command line
+//!   info      print the artifact manifest summary
+//!   analyze   quick §3 stage-MSE report (Fig. 1 shape) on real activations
+//!   search    auto-tune minimal (l_k, l_v) for a recall-quality target
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use asymkv::coordinator::{Coordinator, CoordinatorConfig, Request};
+use asymkv::engine::Engine;
+use asymkv::model::ByteTokenizer;
+use asymkv::quant::QuantPolicy;
+use asymkv::runtime::Runtime;
+use asymkv::server::Server;
+use asymkv::util::cli::Cli;
+use asymkv::workload::tasks;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn cli() -> Cli {
+    Cli::new(
+        "asymkv",
+        "AsymKV serving stack (COLING 2025 reproduction). \
+         Subcommands: serve | generate | info | analyze | search",
+    )
+    .opt("artifacts", "artifacts/small", "artifact directory (manifest.json)")
+    .opt("addr", "127.0.0.1:7071", "serve: listen address")
+    .opt("policy", "asymkv-6/0", "quantization policy (float|kivi-N|asymkv-LK/LV[@H:L])")
+    .opt("prompt", "", "generate: prompt text (default: a recall episode)")
+    .opt("n-gen", "16", "generate: tokens to generate")
+    .opt("budget-mb", "4096", "KV-cache pool budget in MiB")
+    .opt("max-active", "16", "scheduler: max concurrent sequences")
+    .opt("max-batch", "8", "scheduler: max sequences per decode step")
+    .opt("prefix-cache-mb", "0", "KV prefix-cache budget in MiB (0 = off)")
+    .opt("target", "0.9", "search: quality target (fraction of float score)")
+    .opt("episodes", "20", "search/analyze: episodes per evaluation")
+    .opt("bits", "2", "analyze: quantization bits for the stage-MSE probe")
+}
+
+fn build_engine(args: &asymkv::util::cli::Args) -> Result<Arc<Engine>> {
+    let rt = Arc::new(Runtime::load(args.get("artifacts"))?);
+    let budget = args.get_usize("budget-mb") * 1024 * 1024;
+    Ok(Arc::new(Engine::new(rt, budget)?))
+}
+
+fn run() -> Result<()> {
+    let args = cli().parse_env();
+    let cmd = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("info");
+    match cmd {
+        "info" => info(&args),
+        "serve" => serve(&args),
+        "generate" => generate(&args),
+        "analyze" => analyze(&args),
+        "search" => search(&args),
+        other => bail!("unknown subcommand '{other}' (try --help)"),
+    }
+}
+
+fn info(args: &asymkv::util::cli::Args) -> Result<()> {
+    let m = asymkv::model::Manifest::load(args.get("artifacts"))?;
+    println!("model        {}", m.name);
+    println!("layers       {}", m.n_layers);
+    println!("d_model      {}   heads {} × dh {}", m.d_model, m.n_heads, m.d_head);
+    println!("max_ctx      {}   chunk {}", m.max_ctx, m.chunk);
+    println!("quant        group {} residual {}", m.group, m.residual);
+    println!("batch sizes  {:?}", m.batch_sizes);
+    println!("bit grid     {:?}", m.grid);
+    println!("artifacts    {}", m.artifacts.len());
+    let w = asymkv::model::Weights::load(m.dir.join("weights.bin"))?;
+    println!("parameters   {}", w.total_params());
+    Ok(())
+}
+
+fn serve(args: &asymkv::util::cli::Args) -> Result<()> {
+    let engine = build_engine(args)?;
+    let cfg = CoordinatorConfig {
+        max_active: args.get_usize("max-active"),
+        max_batch: args.get_usize("max-batch"),
+        prefix_cache_bytes: args.get_usize("prefix-cache-mb") * 1024 * 1024,
+        ..Default::default()
+    };
+    let coord = Coordinator::start(engine, cfg);
+    let server = Arc::new(Server::bind(coord, args.get("addr"))?);
+    println!("asymkv serving on {}", server.local_addr());
+    println!("protocol: one JSON object per line; see rust/src/server/mod.rs");
+    server.serve()
+}
+
+fn generate(args: &asymkv::util::cli::Args) -> Result<()> {
+    let engine = build_engine(args)?;
+    let tok = ByteTokenizer;
+    let n_layers = engine.manifest().n_layers;
+    let policy = QuantPolicy::parse(args.get("policy"), n_layers)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let prompt_text = if args.get("prompt").is_empty() {
+        let mut rng = asymkv::util::rng::SplitMix::new(42);
+        let ep = tasks::recall_episode(&mut rng, 12);
+        println!("(no --prompt; using a recall episode, answer = {})", ep.answer);
+        String::from_utf8_lossy(&ep.prompt).into_owned()
+    } else {
+        args.get("prompt").to_string()
+    };
+    let coord = Coordinator::start(engine, CoordinatorConfig::default());
+    let resp = coord.submit_wait(Request::greedy(
+        1,
+        tok.encode_str(&prompt_text),
+        args.get_usize("n-gen"),
+        policy,
+    ));
+    if let Some(e) = resp.error {
+        bail!("generation failed: {e}");
+    }
+    println!("prompt : {prompt_text}");
+    println!("output : {}", tok.decode_lossy(&resp.tokens));
+    println!(
+        "ttft {:.1} ms, total {:.1} ms, {} tokens",
+        resp.timing.ttft_s * 1e3,
+        resp.timing.total_s * 1e3,
+        resp.tokens.len()
+    );
+    coord.shutdown();
+    Ok(())
+}
+
+fn analyze(args: &asymkv::util::cli::Args) -> Result<()> {
+    let engine = build_engine(args)?;
+    let bits: u8 = args.get_usize("bits") as u8;
+    let mut rng = asymkv::util::rng::SplitMix::new(7);
+    let doc = asymkv::workload::gen_document(&mut rng, engine.manifest().max_ctx / 2);
+    let tok = ByteTokenizer;
+    let acts = asymkv::analysis::collect_activations(&engine, &tok.encode(&doc))
+        .context("collecting activations")?;
+    println!("layer  stage:   dequant      scores     softmax      output   K/V ratio");
+    for a in &acts {
+        let s = asymkv::analysis::stage_mse(&engine, a, bits)?;
+        println!(
+            "{:>5}  K: {:>10.3e} {:>10.3e} {:>10.3e} {:>10.3e}   ×{:.1}",
+            a.layer, s.mse_k[0], s.mse_k[1], s.mse_k[2], s.mse_k[3],
+            s.output_ratio()
+        );
+        println!(
+            "       V: {:>10.3e} {:>10} {:>10} {:>10.3e}",
+            s.mse_v[0], "-", "-", s.mse_v[3]
+        );
+    }
+    Ok(())
+}
+
+fn search(args: &asymkv::util::cli::Args) -> Result<()> {
+    let engine = build_engine(args)?;
+    let n_layers = engine.manifest().n_layers;
+    let episodes = args.get_usize("episodes");
+    let suite = tasks::recall_suite(11, episodes, 12);
+    let tok = ByteTokenizer;
+
+    let eval = |policy: &QuantPolicy| -> f64 {
+        let mut total = 0.0;
+        for ep in &suite {
+            let id = engine.create_seq(policy).expect("alloc");
+            let out = engine
+                .generate(
+                    &[id],
+                    &[tok.encode(&ep.prompt)],
+                    tasks::ANSWER_LEN,
+                    &asymkv::engine::SamplingParams::greedy(),
+                    0,
+                )
+                .expect("generate");
+            engine.free_seq(id).ok();
+            total += tasks::grade(&ep.answer, &tok.decode(&out[0]));
+        }
+        total / suite.len() as f64
+    };
+
+    let float_score = eval(&QuantPolicy::float32(n_layers));
+    let target = float_score * args.get_f64("target");
+    println!("float score {float_score:.3}; target {target:.3}");
+    match asymkv::search::find_min_config(n_layers, target, 2, 1, eval) {
+        Some(r) => {
+            println!(
+                "minimal config: AsymKV-{}/{} (score {:.3}, {} probes)",
+                r.l_k, r.l_v, r.score, r.probes.len()
+            );
+            for (lk, lv, s) in &r.probes {
+                println!("  probe l_k={lk:<3} l_v={lv:<3} → {s:.3}");
+            }
+        }
+        None => println!("target unreachable even at full 2-bit"),
+    }
+    Ok(())
+}

@@ -1,0 +1,265 @@
+//! `manifest.json` loader — the artifact ABI contract emitted by
+//! `python/compile/aot.py`. Everything the runtime needs to build inputs
+//! for an artifact (ordered arg names/shapes/dtypes) lives here; the Rust
+//! side never hard-codes shapes.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U8,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            "uint8" => Ok(DType::U8),
+            other => bail!("unsupported dtype in manifest: {other}"),
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::U8 => 1,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elem_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+    pub fn byte_len(&self) -> usize {
+        self.elem_count() * self.dtype.size()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub args: Vec<TensorSpec>,
+    pub outs: Vec<TensorSpec>,
+}
+
+impl ArtifactSpec {
+    pub fn arg_index(&self, name: &str) -> Option<usize> {
+        self.args.iter().position(|a| a.name == name)
+    }
+}
+
+/// Parsed manifest: model geometry + artifact inventory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub name: String,
+    pub vocab: usize,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub max_ctx: usize,
+    pub chunk: usize,
+    pub group: usize,
+    pub residual: usize,
+    pub rope_theta: f64,
+    pub norm_eps: f64,
+    pub batch_sizes: Vec<usize>,
+    /// (k_bits, v_bits) layer variants that were lowered
+    pub grid: Vec<(u8, u8)>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+
+        let req_usize = |key: &str| -> Result<usize> {
+            v.get(key)
+                .as_usize()
+                .ok_or_else(|| anyhow!("manifest missing numeric '{key}'"))
+        };
+        let quant = v.get("quant");
+
+        let mut artifacts = BTreeMap::new();
+        let arts = v
+            .get("artifacts")
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?;
+        for (name, spec) in arts {
+            let parse_tensors = |key: &str| -> Result<Vec<TensorSpec>> {
+                spec.get(key)
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("artifact {name} missing '{key}'"))?
+                    .iter()
+                    .map(|t| {
+                        Ok(TensorSpec {
+                            name: t
+                                .get("name")
+                                .as_str()
+                                .ok_or_else(|| anyhow!("tensor missing name"))?
+                                .to_string(),
+                            shape: t
+                                .get("shape")
+                                .usize_vec()
+                                .ok_or_else(|| anyhow!("tensor missing shape"))?,
+                            dtype: DType::parse(
+                                t.get("dtype").as_str().unwrap_or("float32"),
+                            )?,
+                        })
+                    })
+                    .collect()
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    file: spec
+                        .get("file")
+                        .as_str()
+                        .ok_or_else(|| anyhow!("artifact {name} missing file"))?
+                        .to_string(),
+                    args: parse_tensors("args")?,
+                    outs: parse_tensors("outs")?,
+                },
+            );
+        }
+
+        Ok(Self {
+            dir,
+            name: v.get("name").as_str().unwrap_or("?").to_string(),
+            vocab: req_usize("vocab")?,
+            n_layers: req_usize("n_layers")?,
+            d_model: req_usize("d_model")?,
+            n_heads: req_usize("n_heads")?,
+            d_head: req_usize("d_head")?,
+            d_ff: req_usize("d_ff")?,
+            max_ctx: req_usize("max_ctx")?,
+            chunk: req_usize("chunk")?,
+            group: quant
+                .get("group")
+                .as_usize()
+                .ok_or_else(|| anyhow!("manifest missing quant.group"))?,
+            residual: quant
+                .get("residual")
+                .as_usize()
+                .ok_or_else(|| anyhow!("manifest missing quant.residual"))?,
+            rope_theta: v.get("rope_theta").as_f64().unwrap_or(10000.0),
+            norm_eps: v.get("norm_eps").as_f64().unwrap_or(1e-5),
+            batch_sizes: v
+                .get("batch_sizes")
+                .usize_vec()
+                .ok_or_else(|| anyhow!("manifest missing batch_sizes"))?,
+            grid: v
+                .get("grid")
+                .as_arr()
+                .ok_or_else(|| anyhow!("manifest missing grid"))?
+                .iter()
+                .map(|g| {
+                    Ok((
+                        g.idx(0).as_usize().ok_or_else(|| anyhow!("bad grid"))? as u8,
+                        g.idx(1).as_usize().ok_or_else(|| anyhow!("bad grid"))? as u8,
+                    ))
+                })
+                .collect::<Result<_>>()?,
+            artifacts,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest ({})", self.name))
+    }
+
+    pub fn artifact_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.artifact(name)?.file))
+    }
+
+    /// Largest lowered batch size ≥ `n`, or the max available.
+    pub fn pick_batch(&self, n: usize) -> usize {
+        let mut sizes = self.batch_sizes.clone();
+        sizes.sort_unstable();
+        for &b in &sizes {
+            if b >= n {
+                return b;
+            }
+        }
+        *sizes.last().expect("manifest has no batch sizes")
+    }
+
+    pub fn layer_artifact_name(&self, b: usize, c: usize, kb: u8, vb: u8) -> String {
+        format!("layer_b{b}_c{c}_k{kb}_v{vb}")
+    }
+
+    pub fn geometry(&self) -> crate::kvcache::CacheGeometry {
+        crate::kvcache::CacheGeometry {
+            n_heads: self.n_heads,
+            max_ctx: self.max_ctx,
+            d_head: self.d_head,
+            group: self.group,
+            residual: self.residual,
+        }
+    }
+
+    /// Validate that a policy only uses lowered (kb, vb) variants.
+    pub fn supports_policy(&self, p: &crate::quant::QuantPolicy) -> Result<()> {
+        for i in 0..p.n_layers() {
+            let pair = (p.k_bits[i], p.v_bits[i]);
+            if !self.grid.contains(&pair) {
+                bail!(
+                    "policy '{}' needs layer variant k{}_v{} which was not \
+                     lowered (grid: {:?}); re-run aot.py with --full-grid",
+                    p.name, pair.0, pair.1, self.grid
+                );
+            }
+        }
+        if p.n_layers() != self.n_layers {
+            bail!("policy has {} layers, model has {}", p.n_layers(), self.n_layers);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(DType::parse("float32").unwrap(), DType::F32);
+        assert_eq!(DType::parse("uint8").unwrap().size(), 1);
+        assert!(DType::parse("complex64").is_err());
+    }
+
+    #[test]
+    fn tensor_spec_sizes() {
+        let t = TensorSpec {
+            name: "x".into(),
+            shape: vec![2, 3, 4],
+            dtype: DType::F32,
+        };
+        assert_eq!(t.elem_count(), 24);
+        assert_eq!(t.byte_len(), 96);
+    }
+}

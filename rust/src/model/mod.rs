@@ -1,0 +1,9 @@
+//! Model substrate: manifest (artifact ABI), weights loader, tokenizer.
+
+pub mod manifest;
+pub mod tokenizer;
+pub mod weights;
+
+pub use manifest::{ArtifactSpec, DType, Manifest, TensorSpec};
+pub use tokenizer::ByteTokenizer;
+pub use weights::{Tensor, Weights};

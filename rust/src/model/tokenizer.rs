@@ -1,0 +1,44 @@
+//! Byte-level tokenizer (vocab 256) — the model is trained on raw ASCII
+//! bytes, so encode/decode are identity maps with UTF-8-lossy display.
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub const VOCAB: usize = 256;
+
+    pub fn encode(&self, text: &[u8]) -> Vec<i32> {
+        text.iter().map(|&b| b as i32).collect()
+    }
+
+    pub fn encode_str(&self, text: &str) -> Vec<i32> {
+        self.encode(text.as_bytes())
+    }
+
+    pub fn decode(&self, tokens: &[i32]) -> Vec<u8> {
+        tokens.iter().map(|&t| (t.clamp(0, 255)) as u8).collect()
+    }
+
+    pub fn decode_lossy(&self, tokens: &[i32]) -> String {
+        String::from_utf8_lossy(&self.decode(tokens)).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let t = ByteTokenizer;
+        let ids = t.encode_str("k=ABC v=0123");
+        assert_eq!(ids.len(), 12);
+        assert_eq!(t.decode_lossy(&ids), "k=ABC v=0123");
+    }
+
+    #[test]
+    fn clamps_out_of_range() {
+        let t = ByteTokenizer;
+        assert_eq!(t.decode(&[-5, 300]), vec![0u8, 255]);
+    }
+}

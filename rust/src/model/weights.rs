@@ -1,0 +1,147 @@
+//! `weights.bin` loader — mirror of `python/compile/train.py::save_weights`.
+//!
+//! Format: magic "AKVW" | version u32 | n u32 | per tensor:
+//! name_len u16 | name | ndim u32 | dims u32[] | f32 LE data.
+
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+#[derive(Debug)]
+pub struct Weights {
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl Weights {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let mut buf = Vec::new();
+        f.read_to_end(&mut buf)?;
+        Self::parse(&buf)
+    }
+
+    pub fn parse(buf: &[u8]) -> Result<Self> {
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+            if *pos + n > buf.len() {
+                bail!("weights.bin truncated at byte {}", *pos);
+            }
+            let s = &buf[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        let read_u16 = |pos: &mut usize| -> Result<u16> {
+            Ok(u16::from_le_bytes(take(pos, 2)?.try_into().unwrap()))
+        };
+        let read_u32 = |pos: &mut usize| -> Result<u32> {
+            Ok(u32::from_le_bytes(take(pos, 4)?.try_into().unwrap()))
+        };
+
+        if take(&mut pos, 4)? != b"AKVW" {
+            bail!("bad weights magic");
+        }
+        let version = read_u32(&mut pos)?;
+        if version != 1 {
+            bail!("unsupported weights version {version}");
+        }
+        let n = read_u32(&mut pos)? as usize;
+        let mut tensors = BTreeMap::new();
+        for _ in 0..n {
+            let name_len = read_u16(&mut pos)? as usize;
+            let name = std::str::from_utf8(take(&mut pos, name_len)?)
+                .context("tensor name not utf-8")?
+                .to_string();
+            let ndim = read_u32(&mut pos)? as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(read_u32(&mut pos)? as usize);
+            }
+            let count: usize = shape.iter().product();
+            let raw = take(&mut pos, count * 4)?;
+            let data: Vec<f32> = raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            tensors.insert(name, Tensor { shape, data });
+        }
+        if pos != buf.len() {
+            bail!("trailing {} bytes in weights.bin", buf.len() - pos);
+        }
+        Ok(Self { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing weight tensor '{name}'"))
+    }
+
+    /// The 9 per-layer tensors in layer_fwd ABI order.
+    pub fn layer_tensors(&self, layer: usize) -> Result<Vec<&Tensor>> {
+        const NAMES: [&str; 9] =
+            ["rms1", "wq", "wk", "wv", "wo", "rms2", "wg", "wu", "wd"];
+        NAMES
+            .iter()
+            .map(|n| self.get(&format!("layer{layer}.{n}")))
+            .collect()
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.tensors.values().map(|t| t.data.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_bin() -> Vec<u8> {
+        // one tensor "a" of shape [2, 2]
+        let mut b = Vec::new();
+        b.extend_from_slice(b"AKVW");
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&1u16.to_le_bytes());
+        b.extend_from_slice(b"a");
+        b.extend_from_slice(&2u32.to_le_bytes());
+        b.extend_from_slice(&2u32.to_le_bytes());
+        b.extend_from_slice(&2u32.to_le_bytes());
+        for x in [1.0f32, 2.0, 3.0, 4.0] {
+            b.extend_from_slice(&x.to_le_bytes());
+        }
+        b
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let w = Weights::parse(&sample_bin()).unwrap();
+        let t = w.get("a").unwrap();
+        assert_eq!(t.shape, vec![2, 2]);
+        assert_eq!(t.data, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(w.total_params(), 4);
+        assert!(w.get("missing").is_err());
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let mut b = sample_bin();
+        b[0] = b'X';
+        assert!(Weights::parse(&b).is_err());
+        let mut b2 = sample_bin();
+        b2.truncate(b2.len() - 2);
+        assert!(Weights::parse(&b2).is_err());
+        let mut b3 = sample_bin();
+        b3.extend_from_slice(&[0, 0]);
+        assert!(Weights::parse(&b3).is_err());
+    }
+}

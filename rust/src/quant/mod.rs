@@ -1,0 +1,7 @@
+//! Quantization substrate: the RTN kernel mirror and AsymKV policies.
+
+pub mod policy;
+pub mod rtn;
+
+pub use policy::{Bits, QuantPolicy};
+pub use rtn::GroupParams;

@@ -1,0 +1,234 @@
+//! AsymKV quantization policies: layer-wise asymmetric bit assignment.
+//!
+//! The paper's mechanism (§4): two knobs `l_k` and `l_v` — the first `l_k`
+//! decoder layers keep the KEY cache at `high` bits, the rest drop to `low`;
+//! independently `l_v` for the VALUE cache. `l_k > l_v` is the winning
+//! region because key-quantization error is amplified by the query matmul
+//! and the softmax (§3).
+
+use std::fmt;
+
+/// Bit-width of one cache side in one layer. 0 = fp32 (unquantized).
+pub type Bits = u8;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct QuantPolicy {
+    /// Per-layer K-cache bits (len = n_layers; 0 = fp32).
+    pub k_bits: Vec<Bits>,
+    /// Per-layer V-cache bits.
+    pub v_bits: Vec<Bits>,
+    /// Human-readable name (table row label).
+    pub name: String,
+}
+
+impl QuantPolicy {
+    /// AsymKV-l_k/l_v: first `l_k` layers at `high` bits for K (rest `low`),
+    /// first `l_v` at `high` for V.
+    pub fn asymkv(n_layers: usize, l_k: usize, l_v: usize, high: Bits, low: Bits) -> Self {
+        assert!(l_k <= n_layers && l_v <= n_layers);
+        Self {
+            k_bits: (0..n_layers).map(|i| if i < l_k { high } else { low }).collect(),
+            v_bits: (0..n_layers).map(|i| if i < l_v { high } else { low }).collect(),
+            name: format!("AsymKV-{l_k}/{l_v}"),
+        }
+    }
+
+    /// Default paper configuration: high = 2 bits, low = 1 bit.
+    pub fn asymkv21(n_layers: usize, l_k: usize, l_v: usize) -> Self {
+        Self::asymkv(n_layers, l_k, l_v, 2, 1)
+    }
+
+    /// Unquantized fp32 baseline ("float" rows of the tables).
+    pub fn float32(n_layers: usize) -> Self {
+        Self {
+            k_bits: vec![0; n_layers],
+            v_bits: vec![0; n_layers],
+            name: "float".to_string(),
+        }
+    }
+
+    /// KIVI baseline: uniform `bits` everywhere (paper compares KIVI-2bit).
+    pub fn kivi(n_layers: usize, bits: Bits) -> Self {
+        Self {
+            k_bits: vec![bits; n_layers],
+            v_bits: vec![bits; n_layers],
+            name: format!("KIVI-{bits}bit"),
+        }
+    }
+
+    /// K-only / V-only quantization (the Fig. 1/2 ablations).
+    pub fn k_only(n_layers: usize, bits: Bits) -> Self {
+        Self {
+            k_bits: vec![bits; n_layers],
+            v_bits: vec![0; n_layers],
+            name: format!("Konly-{bits}bit"),
+        }
+    }
+
+    pub fn v_only(n_layers: usize, bits: Bits) -> Self {
+        Self {
+            k_bits: vec![0; n_layers],
+            v_bits: vec![bits; n_layers],
+            name: format!("Vonly-{bits}bit"),
+        }
+    }
+
+    /// Arbitrary per-layer bit assignment (the sensitivity-ordered
+    /// allocation of `search::sensitivity_allocate` — an extension beyond
+    /// the paper's prefix-l_k scheme).
+    pub fn custom(name: impl Into<String>, k_bits: Vec<Bits>, v_bits: Vec<Bits>) -> Self {
+        assert_eq!(k_bits.len(), v_bits.len());
+        Self { k_bits, v_bits, name: name.into() }
+    }
+
+    /// Number of (layer, side) slots at `high` bits — the memory knob the
+    /// sweeps vary; two policies with equal counts use equal cache bytes.
+    pub fn high_slots(&self, high: Bits) -> usize {
+        self.k_bits.iter().filter(|&&b| b == high).count()
+            + self.v_bits.iter().filter(|&&b| b == high).count()
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.k_bits.len()
+    }
+
+    /// Parse "float", "kivi-2", "asymkv-6/0", "asymkv-6/2@4:1" (high:low).
+    pub fn parse(s: &str, n_layers: usize) -> Result<Self, String> {
+        let low = s.to_ascii_lowercase();
+        if low == "float" || low == "fp32" {
+            return Ok(Self::float32(n_layers));
+        }
+        if let Some(b) = low.strip_prefix("kivi-") {
+            let bits: Bits = b.trim_end_matches("bit")
+                .parse()
+                .map_err(|_| format!("bad kivi bits in '{s}'"))?;
+            return Ok(Self::kivi(n_layers, bits));
+        }
+        if let Some(rest) = low.strip_prefix("asymkv-") {
+            let (lkv, hl) = match rest.split_once('@') {
+                Some((a, b)) => (a, Some(b)),
+                None => (rest, None),
+            };
+            let (lk, lv) = lkv
+                .split_once('/')
+                .ok_or_else(|| format!("expected asymkv-<lk>/<lv> in '{s}'"))?;
+            let l_k = lk.parse().map_err(|_| format!("bad l_k in '{s}'"))?;
+            let l_v = lv.parse().map_err(|_| format!("bad l_v in '{s}'"))?;
+            let (high, low_b) = match hl {
+                Some(b) => {
+                    let (h, l) = b
+                        .split_once(':')
+                        .ok_or_else(|| format!("expected @high:low in '{s}'"))?;
+                    (h.parse().map_err(|_| "bad high bits".to_string())?,
+                     l.parse().map_err(|_| "bad low bits".to_string())?)
+                }
+                None => (2, 1),
+            };
+            if l_k > n_layers || l_v > n_layers {
+                return Err(format!(
+                    "l_k/l_v out of range for {n_layers} layers in '{s}'"
+                ));
+            }
+            return Ok(Self::asymkv(n_layers, l_k, l_v, high, low_b));
+        }
+        Err(format!("unknown policy '{s}' (float | kivi-N | asymkv-LK/LV[@H:L])"))
+    }
+
+    /// KV-cache bytes per token per layer-side under this policy, for the
+    /// given head geometry (exact packed accounting; see kvcache::layout).
+    pub fn bytes_per_token(&self, n_heads: usize, d_head: usize, group: usize) -> usize {
+        let mut total = 0usize;
+        for i in 0..self.n_layers() {
+            total += side_bytes_per_token(self.k_bits[i], n_heads, d_head, group, true);
+            total += side_bytes_per_token(self.v_bits[i], n_heads, d_head, group, false);
+        }
+        total
+    }
+}
+
+/// Exact bytes/token for one side of one layer: packed data + amortized
+/// scale/zero overhead. K groups span `group` tokens per channel (so the
+/// scale/zero f32 pair amortizes across the group); V carries one pair per
+/// channel-group per token.
+pub fn side_bytes_per_token(
+    bits: Bits,
+    n_heads: usize,
+    d_head: usize,
+    group: usize,
+    per_channel: bool,
+) -> usize {
+    let ch = n_heads * d_head;
+    if bits == 0 {
+        return ch * 4;
+    }
+    let data = ch * bits as usize / 8;
+    let overhead = if per_channel {
+        // one (s, z) pair per channel per G tokens
+        (ch * 8).div_ceil(group)
+    } else {
+        // one (s, z) pair per channel-group per token
+        (ch / group.min(d_head)) * 8
+    };
+    data + overhead
+}
+
+impl fmt::Display for QuantPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn asymkv_layout() {
+        let p = QuantPolicy::asymkv21(8, 6, 2);
+        assert_eq!(p.k_bits, vec![2, 2, 2, 2, 2, 2, 1, 1]);
+        assert_eq!(p.v_bits, vec![2, 2, 1, 1, 1, 1, 1, 1]);
+        assert_eq!(p.name, "AsymKV-6/2");
+    }
+
+    #[test]
+    fn parse_all_forms() {
+        assert_eq!(QuantPolicy::parse("float", 4).unwrap(),
+                   QuantPolicy::float32(4));
+        assert_eq!(QuantPolicy::parse("kivi-2", 4).unwrap(),
+                   QuantPolicy::kivi(4, 2));
+        assert_eq!(QuantPolicy::parse("KIVI-2bit", 4).unwrap(),
+                   QuantPolicy::kivi(4, 2));
+        assert_eq!(QuantPolicy::parse("asymkv-3/1", 4).unwrap(),
+                   QuantPolicy::asymkv21(4, 3, 1));
+        let p = QuantPolicy::parse("asymkv-2/2@4:2", 4).unwrap();
+        assert_eq!(p.k_bits, vec![4, 4, 2, 2]);
+        assert!(QuantPolicy::parse("asymkv-9/0", 4).is_err());
+        assert!(QuantPolicy::parse("bogus", 4).is_err());
+    }
+
+    #[test]
+    fn memory_ordering_asym_below_kivi2() {
+        // the headline memory claim: AsymKV-l/0 << KIVI-2bit << float
+        let n = 32;
+        let float = QuantPolicy::float32(n).bytes_per_token(32, 128, 32);
+        let kivi2 = QuantPolicy::kivi(n, 2).bytes_per_token(32, 128, 32);
+        let asym = QuantPolicy::asymkv21(n, 16, 0).bytes_per_token(32, 128, 32);
+        let ones = QuantPolicy::kivi(n, 1).bytes_per_token(32, 128, 32);
+        assert!(ones < asym && asym < kivi2 && kivi2 < float);
+        // fp32 is 16x the pure-2bit data size; scale/zero overhead halves
+        // that at this geometry (exactly 8x); keep a conservative margin
+        assert!(float > kivi2 * 6);
+    }
+
+    #[test]
+    fn k_v_equal_l_symmetric_memory() {
+        // AsymKV-l/0 and AsymKV-0/l occupy (nearly) the same memory — the
+        // paper's "same space, different quality" comparison. K overhead
+        // amortizes over the group, V overhead is per token; with G=32 and
+        // Dh=32 they coincide.
+        let n = 8;
+        let a = QuantPolicy::asymkv21(n, 6, 0).bytes_per_token(4, 32, 32);
+        let b = QuantPolicy::asymkv21(n, 0, 6).bytes_per_token(4, 32, 32);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,43 @@
+//! Literal construction/extraction helpers over the `xla` crate.
+
+use anyhow::{Context, Result};
+use xla::{ElementType, Literal};
+
+fn as_bytes<T: Copy>(data: &[T]) -> &[u8] {
+    // SAFETY: plain-old-data reinterpretation for upload only.
+    unsafe {
+        std::slice::from_raw_parts(
+            data.as_ptr() as *const u8,
+            std::mem::size_of_val(data),
+        )
+    }
+}
+
+/// f32 literal with the given dims (row-major).
+pub fn lit_f32(dims: &[usize], data: &[f32]) -> Result<Literal> {
+    debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+    Literal::create_from_shape_and_untyped_data(ElementType::F32, dims, as_bytes(data))
+        .context("creating f32 literal")
+}
+
+/// i32 literal.
+pub fn lit_i32(dims: &[usize], data: &[i32]) -> Result<Literal> {
+    debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+    Literal::create_from_shape_and_untyped_data(ElementType::S32, dims, as_bytes(data))
+        .context("creating i32 literal")
+}
+
+/// u8 literal (packed quantized caches).
+pub fn lit_u8(dims: &[usize], data: &[u8]) -> Result<Literal> {
+    debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+    Literal::create_from_shape_and_untyped_data(ElementType::U8, dims, data)
+        .context("creating u8 literal")
+}
+
+pub fn to_f32_vec(lit: &Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().context("extracting f32 data")
+}
+
+pub fn to_u8_vec(lit: &Literal) -> Result<Vec<u8>> {
+    lit.to_vec::<u8>().context("extracting u8 data")
+}

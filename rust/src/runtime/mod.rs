@@ -1,0 +1,154 @@
+//! PJRT runtime: loads `artifacts/<model>/*.hlo.txt`, compiles them on the
+//! CPU PJRT client (lazily, cached), and executes them from the serving hot
+//! path. This is the only module that talks to the `xla` crate.
+//!
+//! Interchange is HLO *text* — `HloModuleProto::from_text_file` reassigns
+//! instruction ids, which sidesteps the jax≥0.5 64-bit-id protos that
+//! xla_extension 0.5.1 rejects (see DESIGN.md and /opt/xla-example).
+
+pub mod literal;
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::model::{ArtifactSpec, DType, Manifest};
+
+pub use literal::{lit_f32, lit_i32, lit_u8, to_f32_vec, to_u8_vec};
+
+/// A compiled artifact plus its ABI spec.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: PjRtLoadedExecutable,
+}
+
+// SAFETY: the underlying PJRT CPU client and loaded executables are
+// thread-safe (XLA guarantees concurrent Execute on PjRtLoadedExecutable);
+// the `xla` crate merely forgets to mark its opaque pointers Send/Sync.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Executable {
+    /// Execute with shape-checked literal inputs; returns the flattened
+    /// output tuple (the AOT pipeline lowers with return_tuple=True).
+    /// Accepts owned literals or references (weights are passed by ref).
+    pub fn run<L: std::borrow::Borrow<Literal>>(&self, args: &[L]) -> Result<Vec<Literal>> {
+        self.check_args(args)?;
+        let buffers = self
+            .exe
+            .execute::<L>(args)
+            .with_context(|| format!("executing {}", self.spec.file))?;
+        let result = buffers[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let outs = result.to_tuple().context("decomposing output tuple")?;
+        if outs.len() != self.spec.outs.len() {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.spec.file,
+                self.spec.outs.len(),
+                outs.len()
+            );
+        }
+        Ok(outs)
+    }
+
+    fn check_args<L: std::borrow::Borrow<Literal>>(&self, args: &[L]) -> Result<()> {
+        if args.len() != self.spec.args.len() {
+            bail!(
+                "{}: expected {} args, got {}",
+                self.spec.file,
+                self.spec.args.len(),
+                args.len()
+            );
+        }
+        for (i, (lit, spec)) in args.iter().zip(&self.spec.args).enumerate() {
+            let n = lit.borrow().element_count();
+            if n != spec.elem_count() {
+                bail!(
+                    "{}: arg {i} ('{}') has {} elements, expected {} {:?}",
+                    self.spec.file, spec.name, n, spec.elem_count(), spec.shape
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The runtime: one PJRT client + lazily compiled executables per artifact.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: PjRtClient,
+    cache: Mutex<BTreeMap<String, Arc<Executable>>>,
+}
+
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    pub fn load(artifact_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { manifest, client, cache: Mutex::new(BTreeMap::new()) })
+    }
+
+    /// Fetch (compiling on first use) the named artifact.
+    pub fn executable(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.artifact(name)?.clone();
+        let path = self.manifest.artifact_path(name)?;
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let arc = Arc::new(Executable { spec, exe });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), arc.clone());
+        Ok(arc)
+    }
+
+    /// Convenience: compile + run in one call.
+    pub fn run(&self, name: &str, args: &[Literal]) -> Result<Vec<Literal>> {
+        self.executable(name)?.run(args)
+    }
+
+    /// Pre-compile a set of artifacts (startup warm-up; avoids first-request
+    /// compile latency).
+    pub fn warm_up(&self, names: &[String]) -> Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Build a literal matching an artifact's arg spec from raw bytes.
+    pub fn literal_for(&self, spec: &crate::model::TensorSpec, bytes: &[u8])
+        -> Result<Literal> {
+        if bytes.len() != spec.byte_len() {
+            bail!(
+                "literal for '{}': got {} bytes, expected {}",
+                spec.name, bytes.len(), spec.byte_len()
+            );
+        }
+        let ty = match spec.dtype {
+            DType::F32 => xla::ElementType::F32,
+            DType::I32 => xla::ElementType::S32,
+            DType::U8 => xla::ElementType::U8,
+        };
+        Literal::create_from_shape_and_untyped_data(ty, &spec.shape, bytes)
+            .with_context(|| format!("creating literal '{}'", spec.name))
+    }
+}

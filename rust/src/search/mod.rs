@@ -1,0 +1,268 @@
+//! Configuration auto-tuner — the paper's §8 limitation ("it still depends
+//! on exhaustive testing to identify the optimal configurations … a
+//! potential future direction could involve efficiently identifying the
+//! optimal configurations") implemented as a first-class feature.
+//!
+//! Quality is monotone non-decreasing in both `l_k` and `l_v` (more
+//! higher-bit layers never hurt — validated empirically by the Table 3/4
+//! sweeps), so the minimal configuration meeting a quality budget can be
+//! found with two bisection passes instead of an O(L²) grid: first the
+//! minimal l_k with l_v = 0 (keys matter more, §3), then the minimal l_v
+//! given that l_k. Each probe is one evaluation of the policy.
+
+use crate::quant::QuantPolicy;
+
+/// Result of an auto-tuning run.
+#[derive(Debug, Clone)]
+pub struct SearchResult {
+    pub l_k: usize,
+    pub l_v: usize,
+    pub score: f64,
+    /// (l_k, l_v, score) of every probe, in evaluation order
+    pub probes: Vec<(usize, usize, f64)>,
+}
+
+/// Find the minimal (l_k, l_v) whose score reaches `target`.
+///
+/// `eval(policy)` returns the quality metric (higher is better). `high`/
+/// `low` are the two bit-widths of the asymmetric scheme (paper: 2/1).
+/// Returns None if even the full-high configuration misses the target.
+pub fn find_min_config(
+    n_layers: usize,
+    target: f64,
+    high: u8,
+    low: u8,
+    mut eval: impl FnMut(&QuantPolicy) -> f64,
+) -> Option<SearchResult> {
+    let mut probes: Vec<(usize, usize, f64)> = Vec::new();
+    let probe = |l_k: usize, l_v: usize, probes: &mut Vec<(usize, usize, f64)>,
+                     eval: &mut dyn FnMut(&QuantPolicy) -> f64| {
+        let p = QuantPolicy::asymkv(n_layers, l_k, l_v, high, low);
+        let s = eval(&p);
+        probes.push((l_k, l_v, s));
+        s
+    };
+
+    // feasibility: all-high must reach the target
+    if probe(n_layers, n_layers, &mut probes, &mut eval) < target {
+        return None;
+    }
+
+    // bisection over a monotone predicate: smallest x in [0, n] with
+    // pred(x) true (pred(n) must be known true by the caller)
+    #[allow(unused_mut)]
+    let mut bisect = |fixed_is_k: bool, fixed: usize,
+                      probes: &mut Vec<(usize, usize, f64)>,
+                      eval: &mut dyn FnMut(&QuantPolicy) -> f64| {
+        let mut lo = 0usize;
+        let mut hi = n_layers;
+        let run = |x: usize, probes: &mut Vec<(usize, usize, f64)>,
+                       eval: &mut dyn FnMut(&QuantPolicy) -> f64| {
+            if fixed_is_k {
+                probe(fixed, x, probes, eval)
+            } else {
+                probe(x, fixed, probes, eval)
+            }
+        };
+        if run(0, probes, eval) >= target {
+            return 0;
+        }
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if run(mid, probes, eval) >= target {
+                hi = mid;
+            } else {
+                lo = mid + 1;
+            }
+        }
+        hi
+    };
+
+    // pass 1: minimal l_k with l_v = 0 (keys matter more, §3 — most
+    // configurations resolve here with zero value layers)
+    let (l_k, l_v);
+    let lk0 = bisect(false, 0, &mut probes, &mut eval);
+    if probes
+        .iter()
+        .any(|&(k, v, s)| k == lk0 && v == 0 && s >= target)
+    {
+        l_k = lk0;
+        l_v = 0;
+    } else {
+        // even l_k = n_layers with l_v = 0 missed the target: fix l_k at
+        // the full key budget and bisect the value axis
+        l_k = n_layers;
+        l_v = bisect(true, n_layers, &mut probes, &mut eval);
+    }
+
+    let score = probes
+        .iter()
+        .rev()
+        .find(|&&(k, v, _)| k == l_k && v == l_v)
+        .map(|&(_, _, s)| s)
+        .unwrap_or_else(|| probe(l_k, l_v, &mut probes, &mut eval));
+    Some(SearchResult { l_k, l_v, score, probes })
+}
+
+// ---------------------------------------------------------------------------
+// Sensitivity-ordered allocation (extension beyond the paper)
+// ---------------------------------------------------------------------------
+
+/// Per-(layer, side) sensitivity: how much the end metric degrades when
+/// ONLY that slot drops from `high` to `low` bits (all else at `high`).
+#[derive(Debug, Clone)]
+pub struct SlotSensitivity {
+    pub layer: usize,
+    pub is_key: bool,
+    pub degradation: f64,
+}
+
+/// Measure per-slot sensitivities with 2·L probes.
+pub fn measure_sensitivities(
+    n_layers: usize,
+    high: u8,
+    low: u8,
+    mut eval: impl FnMut(&QuantPolicy) -> f64,
+) -> Vec<SlotSensitivity> {
+    let base = eval(&QuantPolicy::kivi(n_layers, high));
+    let mut out = Vec::with_capacity(2 * n_layers);
+    for layer in 0..n_layers {
+        for is_key in [true, false] {
+            let mut k = vec![high; n_layers];
+            let mut v = vec![high; n_layers];
+            if is_key {
+                k[layer] = low;
+            } else {
+                v[layer] = low;
+            }
+            let p = QuantPolicy::custom(
+                format!("probe-L{layer}{}", if is_key { "K" } else { "V" }),
+                k, v,
+            );
+            out.push(SlotSensitivity {
+                layer,
+                is_key,
+                degradation: base - eval(&p),
+            });
+        }
+    }
+    out
+}
+
+/// Build a policy with exactly `budget` high-bit slots, assigning them to
+/// the most sensitive (layer, side) slots first. Compare against the
+/// paper's prefix scheme at the same budget (equal memory) — if layer-wise
+/// sensitivity is informative, this should match or beat AsymKV-l_k/l_v.
+pub fn sensitivity_allocate(
+    sens: &[SlotSensitivity],
+    n_layers: usize,
+    budget: usize,
+    high: u8,
+    low: u8,
+) -> QuantPolicy {
+    let mut order: Vec<&SlotSensitivity> = sens.iter().collect();
+    order.sort_by(|a, b| b.degradation.partial_cmp(&a.degradation).unwrap());
+    let mut k = vec![low; n_layers];
+    let mut v = vec![low; n_layers];
+    for s in order.into_iter().take(budget) {
+        if s.is_key {
+            k[s.layer] = high;
+        } else {
+            v[s.layer] = high;
+        }
+    }
+    QuantPolicy::custom(format!("Sens-{budget}"), k, v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// synthetic monotone quality surface: keys weigh 3x values (the §3
+    /// asymmetry), saturating at 1.0
+    fn surface(p: &QuantPolicy) -> f64 {
+        let l = p.n_layers() as f64;
+        let lk = p.k_bits.iter().filter(|&&b| b == 2).count() as f64;
+        let lv = p.v_bits.iter().filter(|&&b| b == 2).count() as f64;
+        (0.2 + 0.6 * (lk / l) + 0.2 * (lv / l)).min(1.0)
+    }
+
+    #[test]
+    fn finds_minimal_config() {
+        // target 0.649 (not 0.65 — 0.2 + 0.6·0.75 rounds just below 0.65
+        // in f64): need 0.2 + 0.6·(lk/32) ≥ target → lk = 24 with lv = 0
+        let r = find_min_config(32, 0.649, 2, 1, surface).unwrap();
+        assert_eq!(r.l_k, 24);
+        assert_eq!(r.l_v, 0);
+        assert!(r.score >= 0.649);
+        // bisection: far fewer probes than the 33×33 grid
+        assert!(r.probes.len() <= 16, "{} probes", r.probes.len());
+    }
+
+    #[test]
+    fn needs_value_layers_when_keys_insufficient() {
+        let r = find_min_config(32, 0.9, 2, 1, surface).unwrap();
+        assert_eq!(r.l_k, 32);
+        // 0.2 + 0.6 + 0.2·(lv/32) ≥ 0.9 → lv = 16
+        assert_eq!(r.l_v, 16);
+    }
+
+    #[test]
+    fn infeasible_target() {
+        assert!(find_min_config(8, 1.5, 2, 1, surface).is_none());
+    }
+
+    #[test]
+    fn trivial_target_gives_zero_config() {
+        let r = find_min_config(8, 0.1, 2, 1, surface).unwrap();
+        assert_eq!((r.l_k, r.l_v), (0, 0));
+    }
+
+    /// surface where early layers matter more AND keys matter more: slot
+    /// weight = (3 if key else 1) · (L − layer)
+    fn weighted_surface(p: &QuantPolicy) -> f64 {
+        let l = p.n_layers();
+        let mut s = 0.0;
+        for i in 0..l {
+            if p.k_bits[i] >= 2 {
+                s += 3.0 * (l - i) as f64;
+            }
+            if p.v_bits[i] >= 2 {
+                s += (l - i) as f64;
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn sensitivity_measurement_ranks_keys_and_early_layers() {
+        let sens = measure_sensitivities(4, 2, 1, weighted_surface);
+        assert_eq!(sens.len(), 8);
+        let find = |layer, is_key| {
+            sens.iter()
+                .find(|s| s.layer == layer && s.is_key == is_key)
+                .unwrap()
+                .degradation
+        };
+        assert!(find(0, true) > find(0, false), "keys more sensitive");
+        assert!(find(0, true) > find(3, true), "early layers more sensitive");
+    }
+
+    #[test]
+    fn sensitivity_allocation_beats_prefix_at_equal_budget() {
+        let n = 8;
+        let sens = measure_sensitivities(n, 2, 1, weighted_surface);
+        for budget in [4usize, 8, 12] {
+            let p = sensitivity_allocate(&sens, n, budget, 2, 1);
+            assert_eq!(p.high_slots(2), budget);
+            // prefix policy with the same number of high slots
+            let prefix = QuantPolicy::asymkv21(n, budget.min(n),
+                                               budget.saturating_sub(n));
+            assert_eq!(prefix.high_slots(2), budget);
+            assert!(
+                weighted_surface(&p) >= weighted_surface(&prefix),
+                "budget {budget}"
+            );
+        }
+    }
+}

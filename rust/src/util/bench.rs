@@ -1,0 +1,175 @@
+//! Bench harness (no `criterion` in the offline vendor set).
+//!
+//! Every `rust/benches/*.rs` target is a `harness = false` binary built on
+//! this module: it times closures with warmup + repeated samples, prints
+//! aligned tables mirroring the paper's tables/figures, and appends results
+//! to `bench_out/<name>.txt` so EXPERIMENTS.md can quote them.
+
+use std::time::Instant;
+
+use super::stats::percentile;
+
+/// Timing result over n samples (seconds).
+#[derive(Debug, Clone)]
+pub struct Timing {
+    pub samples: Vec<f64>,
+}
+
+impl Timing {
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len().max(1) as f64
+    }
+    pub fn p50(&self) -> f64 {
+        percentile(&self.samples, 50.0)
+    }
+    pub fn p95(&self) -> f64 {
+        percentile(&self.samples, 95.0)
+    }
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs then `samples` measured runs.
+pub fn time_fn<F: FnMut()>(warmup: usize, samples: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        out.push(t0.elapsed().as_secs_f64());
+    }
+    Timing { samples: out }
+}
+
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.1} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{:.2} s", secs)
+    }
+}
+
+/// An aligned text table; also serializes to the bench_out file.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut s = format!("\n=== {} ===\n", self.title);
+        let line = |cells: &[String], w: &[usize]| -> String {
+            let mut out = String::new();
+            for i in 0..ncol {
+                out.push_str(&format!("{:<w$}  ", cells[i], w = w[i]));
+            }
+            out.trim_end().to_string() + "\n"
+        };
+        s.push_str(&line(&self.headers, &widths));
+        s.push_str(&format!(
+            "{}\n",
+            widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  ")
+        ));
+        for row in &self.rows {
+            s.push_str(&line(row, &widths));
+        }
+        s
+    }
+
+    /// Print to stdout and append to `bench_out/<file>.txt`.
+    pub fn emit(&self, file: &str) {
+        let text = self.render();
+        println!("{text}");
+        let dir = std::path::Path::new("bench_out");
+        let _ = std::fs::create_dir_all(dir);
+        use std::io::Write;
+        if let Ok(mut f) = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(dir.join(format!("{file}.txt")))
+        {
+            let _ = writeln!(f, "{text}");
+        }
+    }
+}
+
+/// Free-form note accompanying a bench table (assumptions, workload params).
+pub fn note(file: &str, text: &str) {
+    println!("{text}");
+    let dir = std::path::Path::new("bench_out");
+    let _ = std::fs::create_dir_all(dir);
+    use std::io::Write;
+    if let Ok(mut f) = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(dir.join(format!("{file}.txt")))
+    {
+        let _ = writeln!(f, "{text}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_stats() {
+        let t = Timing { samples: vec![1.0, 2.0, 3.0, 4.0] };
+        assert!((t.mean() - 2.5).abs() < 1e-9);
+        assert!((t.min() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_fn_runs_expected_count() {
+        let mut n = 0;
+        let t = time_fn(2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(t.samples.len(), 5);
+    }
+
+    #[test]
+    fn table_render_aligned() {
+        let mut t = Table::new("t", &["a", "metric"]);
+        t.row(vec!["x".into(), "1.0".into()]);
+        t.row(vec!["longer".into(), "2.0".into()]);
+        let r = t.render();
+        assert!(r.contains("=== t ==="));
+        assert!(r.contains("longer"));
+    }
+
+    #[test]
+    fn fmt_duration_ranges() {
+        assert!(fmt_duration(2e-9).ends_with("ns"));
+        assert!(fmt_duration(2e-6).ends_with("µs"));
+        assert!(fmt_duration(2e-3).ends_with("ms"));
+        assert!(fmt_duration(2.0).ends_with(" s"));
+    }
+}

@@ -1,0 +1,224 @@
+//! Hand-rolled CLI argument parser (no `clap` in the offline vendor set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args, with
+//! typed accessors, defaults and a generated `--help` text.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+impl std::error::Error for CliError {}
+
+pub struct Cli {
+    pub program: &'static str,
+    pub about: &'static str,
+    pub specs: Vec<ArgSpec>,
+}
+
+impl Cli {
+    pub fn new(program: &'static str, about: &'static str) -> Self {
+        Self { program, about, specs: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str,
+               help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, help, default: Some(default), is_flag: false });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, help, default: None, is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for spec in &self.specs {
+            let head = if spec.is_flag {
+                format!("  --{}", spec.name)
+            } else {
+                format!("  --{} <v>", spec.name)
+            };
+            let def = match spec.default {
+                Some(d) if !d.is_empty() => format!(" [default: {d}]"),
+                Some(_) => String::new(),
+                None if spec.is_flag => String::new(),
+                None => " [required]".to_string(),
+            };
+            s.push_str(&format!("{head:<28}{}{def}\n", spec.help));
+        }
+        s
+    }
+
+    /// Parse an iterator of args (exclusive of argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(&self, argv: I)
+        -> Result<Args, CliError> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if arg == "--help" || arg == "-h" {
+                return Err(CliError(self.help_text()));
+            }
+            if let Some(body) = arg.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| CliError(format!("unknown option --{name}")))?;
+                if spec.is_flag {
+                    if inline.is_some() {
+                        return Err(CliError(format!("--{name} takes no value")));
+                    }
+                    out.flags.push(name);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| CliError(format!("--{name} needs a value")))?,
+                    };
+                    out.values.insert(name, v);
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        // defaults + required check
+        for spec in &self.specs {
+            if spec.is_flag || out.values.contains_key(spec.name) {
+                continue;
+            }
+            match spec.default {
+                Some(d) => {
+                    out.values.insert(spec.name.to_string(), d.to_string());
+                }
+                None => return Err(CliError(format!("missing required --{}", spec.name))),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse `std::env::args()` and exit with help/error text on failure.
+    pub fn parse_env(&self) -> Args {
+        match self.parse(std::env::args().skip(1)) {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("{e}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values.get(name).map(|s| s.as_str()).unwrap_or("")
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name).parse().unwrap_or_else(|_| {
+            eprintln!("--{name}: expected integer, got '{}'", self.get(name));
+            std::process::exit(2);
+        })
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name).parse().unwrap_or_else(|_| {
+            eprintln!("--{name}: expected number, got '{}'", self.get(name));
+            std::process::exit(2);
+        })
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Comma-separated list accessor.
+    pub fn get_list(&self, name: &str) -> Vec<String> {
+        let v = self.get(name);
+        if v.is_empty() {
+            vec![]
+        } else {
+            v.split(',').map(|s| s.trim().to_string()).collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("model", "small", "model name")
+            .opt("steps", "10", "step count")
+            .flag("verbose", "chatty")
+            .req("out", "output path")
+    }
+
+    fn parse(args: &[&str]) -> Result<Args, CliError> {
+        cli().parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = parse(&["--out", "x"]).unwrap();
+        assert_eq!(a.get("model"), "small");
+        assert_eq!(a.get_usize("steps"), 10);
+        assert!(!a.has_flag("verbose"));
+        assert!(parse(&[]).is_err()); // missing --out
+    }
+
+    #[test]
+    fn inline_equals_and_flags() {
+        let a = parse(&["--out=y", "--steps=99", "--verbose", "pos1"]).unwrap();
+        assert_eq!(a.get("out"), "y");
+        assert_eq!(a.get_usize("steps"), 99);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(parse(&["--out", "x", "--nope"]).is_err());
+    }
+
+    #[test]
+    fn list_accessor() {
+        let a = cli()
+            .parse(["--out".to_string(), "x".into(), "--model".into(),
+                    "a, b,c".into()])
+            .unwrap();
+        assert_eq!(a.get_list("model"), vec!["a", "b", "c"]);
+    }
+}

@@ -1,0 +1,10 @@
+//! Substrate utilities built from scratch for the offline sandbox (no serde,
+//! clap, criterion or proptest in the vendor set): JSON, CLI parsing, PRNG,
+//! statistics, bench harness and a mini property-testing framework.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,105 @@
+//! Mini property-testing harness (no `proptest` in the offline vendor set).
+//!
+//! Provides seeded generators over the project's own [`SplitMix`] PRNG and a
+//! `check` runner with shrinking-free but *reproducible* failure reports
+//! (the failing case number + seed is printed, so a failure replays with
+//! `PROP_SEED=<seed> PROP_CASE=<n>`). Used throughout the kvcache,
+//! coordinator and quant invariant tests.
+
+use super::rng::SplitMix;
+
+pub struct Gen {
+    pub rng: SplitMix,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (self.rng.f64() as f32) * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.below(2) == 1
+    }
+
+    pub fn vec_f32(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn vec_normal(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| self.rng.normal() as f32 * scale).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        self.rng.choice(items)
+    }
+}
+
+/// Run `cases` property checks. The property returns `Result<(), String>`;
+/// on failure the case index and seed are reported in the panic message.
+pub fn check<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let base_seed: u64 = std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xA5A5_0001);
+    let only_case: Option<usize> =
+        std::env::var("PROP_CASE").ok().and_then(|s| s.parse().ok());
+    for case in 0..cases {
+        if let Some(oc) = only_case {
+            if case != oc {
+                continue;
+            }
+        }
+        let seed = base_seed.wrapping_add((case as u64).wrapping_mul(0x9E3779B9));
+        let mut g = Gen { rng: SplitMix::new(seed) };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed at case {case} \
+                 (replay: PROP_SEED={base_seed} PROP_CASE={case}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generators_in_bounds() {
+        check("bounds", 200, |g| {
+            let n = g.usize_in(3, 9);
+            if !(3..=9).contains(&n) {
+                return Err(format!("usize_in out of range: {n}"));
+            }
+            let f = g.f32_in(-1.0, 1.0);
+            if !(-1.0..=1.0).contains(&f) {
+                return Err(format!("f32_in out of range: {f}"));
+            }
+            let v = g.vec_f32(n, 0.0, 5.0);
+            if v.len() != n {
+                return Err("vec len".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failure_reports_case() {
+        check("fails", 10, |g| {
+            if g.usize_in(0, 100) > 1 {
+                Err("too big".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+}

@@ -1,0 +1,155 @@
+//! Small statistics helpers: summary stats, percentiles, histograms.
+//! Used by the analysis module (Fig. 2 error distributions), the metrics
+//! registry and the bench harness.
+
+/// Mean of a slice (0.0 for empty input).
+pub fn mean(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance.
+pub fn variance(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / xs.len() as f64
+}
+
+/// Mean squared difference between two equal-length slices.
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| ((x - y) as f64).powi(2))
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+/// Linear-interpolation percentile (p in [0, 100]) over unsorted data.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (v[hi] - v[lo]) * (rank - lo as f64)
+    }
+}
+
+/// Fixed-range histogram with `bins` equal-width buckets over [lo, hi].
+/// Out-of-range samples clamp into the edge buckets (they are still real
+/// observations — the Fig. 2 tails matter).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+    pub n: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0);
+        Self { lo, hi, counts: vec![0; bins], n: 0 }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        let bins = self.counts.len();
+        let t = (x - self.lo) / (self.hi - self.lo);
+        let idx = ((t * bins as f64).floor() as i64).clamp(0, bins as i64 - 1);
+        self.counts[idx as usize] += 1;
+        self.n += 1;
+    }
+
+    pub fn add_all(&mut self, xs: &[f32]) {
+        for &x in xs {
+            self.add(x as f64);
+        }
+    }
+
+    /// Fraction of samples inside [a, b).
+    pub fn frac_between(&self, a: f64, b: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let bins = self.counts.len() as f64;
+        let width = (self.hi - self.lo) / bins;
+        let mut total = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            let left = self.lo + i as f64 * width;
+            if left >= a && left + width <= b {
+                total += c;
+            }
+        }
+        total as f64 / self.n as f64
+    }
+
+    /// Render an ASCII sparkline-style row per bucket (bench output).
+    pub fn render(&self, width: usize) -> String {
+        let max = self.counts.iter().copied().max().unwrap_or(1).max(1);
+        let bins = self.counts.len();
+        let bw = (self.hi - self.lo) / bins as f64;
+        let mut out = String::new();
+        for (i, &c) in self.counts.iter().enumerate() {
+            let bar = "#".repeat((c as usize * width).div_ceil(max as usize).min(width));
+            out.push_str(&format!(
+                "  [{:+8.4},{:+8.4}) {:>8} {}\n",
+                self.lo + i as f64 * bw,
+                self.lo + (i + 1) as f64 * bw,
+                c,
+                bar
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_variance() {
+        let xs = [1.0f32, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-9);
+        assert!((variance(&xs) - 1.25).abs() < 1e-9);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn mse_basic() {
+        assert!((mse(&[1.0, 2.0], &[1.0, 4.0]) - 2.0).abs() < 1e-9);
+        assert_eq!(mse(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn percentile_interp() {
+        let xs = [4.0, 1.0, 3.0, 2.0];
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-9);
+        assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-9);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_counts_and_clamping() {
+        let mut h = Histogram::new(0.0, 1.0, 4);
+        h.add_all(&[0.1, 0.3, 0.6, 0.9, -5.0, 5.0]);
+        assert_eq!(h.n, 6);
+        assert_eq!(h.counts[0], 2); // 0.1 and clamped -5.0
+        assert_eq!(h.counts[3], 2); // 0.9 and clamped 5.0
+        assert!((h.frac_between(0.0, 0.5) - 3.0 / 6.0).abs() < 1e-9);
+    }
+}

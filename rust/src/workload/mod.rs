@@ -1,0 +1,143 @@
+//! Workload generation: byte-exact Rust mirror of the Python corpus
+//! (`python/compile/data.py`) plus evaluation-task and request-trace
+//! generators used by the benches.
+//!
+//! The generators must match Python exactly (same SplitMix64 stream, same
+//! grammar constants) so that the benches evaluate the model on the same
+//! distribution it was trained on; `golden.json` pins this in `cargo test`.
+
+pub mod tasks;
+pub mod trace;
+
+use crate::util::rng::SplitMix;
+
+/// Word bank — must stay identical to `data.py::WORDS` (order matters: the
+/// PRNG stream indexes into it).
+pub const WORDS: [&str; 50] = [
+    "the", "ox", "crow", "lark", "vole", "fox", "hart", "wren", "asp",
+    "moss", "fern", "reed", "sage", "thorn", "briar", "ash", "elm", "oak",
+    "runs", "sings", "hides", "leaps", "rests", "hunts", "calls", "waits",
+    "red", "dun", "grey", "pale", "dark", "swift", "still", "old", "young",
+    "by", "near", "under", "over", "past", "at", "in",
+    "dawn", "dusk", "noon", "night", "rain", "frost", "mist", "wind",
+];
+
+pub const KEY_ALPHA: &[u8] = b"ABCDEFGHIJKLMNOPQRSTUVWXYZ";
+pub const VAL_ALPHA: &[u8] = b"0123456789";
+pub const KEY_LEN: usize = 3;
+pub const VAL_LEN: usize = 4;
+
+pub fn gen_sentence(rng: &mut SplitMix) -> String {
+    let n = 3 + rng.below(5);
+    let mut words = Vec::with_capacity(n);
+    for _ in 0..n {
+        words.push(*rng.choice(&WORDS));
+    }
+    words.join(" ") + ". "
+}
+
+pub fn gen_kv_pair(rng: &mut SplitMix) -> (String, String) {
+    let key: String = (0..KEY_LEN)
+        .map(|_| *rng.choice(KEY_ALPHA) as char)
+        .collect();
+    let val: String = (0..VAL_LEN)
+        .map(|_| *rng.choice(VAL_ALPHA) as char)
+        .collect();
+    (key, val)
+}
+
+pub fn gen_recall_block(rng: &mut SplitMix, n_pairs: usize) -> String {
+    // "KEY:VALUE … ## KEY:VALUE" — answer immediately follows the
+    // re-matched key (pure-induction retrieval; see data.py docstring)
+    let pairs: Vec<(String, String)> =
+        (0..n_pairs).map(|_| gen_kv_pair(rng)).collect();
+    let body: Vec<String> = pairs.iter().map(|(k, v)| format!("{k}:{v}")).collect();
+    let (qk, qv) = &pairs[rng.below(n_pairs)];
+    format!("## {} ## {qk}:{qv} . ", body.join(" "))
+}
+
+pub fn gen_copy_run(rng: &mut SplitMix) -> String {
+    let n = 4 + rng.below(8);
+    let alpha: Vec<u8> = KEY_ALPHA.iter().chain(VAL_ALPHA).copied().collect();
+    let seq: String = (0..n).map(|_| *rng.choice(&alpha) as char).collect();
+    format!("copy: {seq} | {seq} . ")
+}
+
+/// One training/eval document of exactly `length` bytes (mirror of
+/// `data.gen_document`).
+pub fn gen_document(rng: &mut SplitMix, length: usize) -> Vec<u8> {
+    let mut parts = String::new();
+    while parts.len() < length + 64 {
+        let r = rng.below(10);
+        let s = if r < 3 {
+            gen_sentence(rng)
+        } else if r < 8 {
+            // draw n_pairs BEFORE the block body (python evaluation order —
+            // the PRNG streams must stay aligned)
+            let n_pairs = 1 + rng.below(5);
+            gen_recall_block(rng, n_pairs)
+        } else {
+            gen_copy_run(rng)
+        };
+        parts.push_str(&s);
+    }
+    parts.into_bytes()[..length].to_vec()
+}
+
+/// Held-out eval documents (mirror of `data.eval_docs` seeding).
+pub fn eval_doc(seed: u64, index: u64, ctx: usize) -> Vec<u8> {
+    let s = 0xE7A1u64
+        ^ (seed << 24)
+        ^ index.wrapping_mul(0x9E3779B97F4A7C15);
+    gen_document(&mut SplitMix::new(s), ctx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sentence_terminated() {
+        let mut rng = SplitMix::new(1);
+        let s = gen_sentence(&mut rng);
+        assert!(s.ends_with(". "));
+        assert!(s.split_whitespace().count() >= 3);
+    }
+
+    #[test]
+    fn kv_pair_shapes() {
+        let mut rng = SplitMix::new(2);
+        let (k, v) = gen_kv_pair(&mut rng);
+        assert_eq!(k.len(), KEY_LEN);
+        assert_eq!(v.len(), VAL_LEN);
+        assert!(k.bytes().all(|b| b.is_ascii_uppercase()));
+        assert!(v.bytes().all(|b| b.is_ascii_digit()));
+    }
+
+    #[test]
+    fn document_exact_length_ascii() {
+        for seed in [1u64, 7, 123] {
+            let doc = gen_document(&mut SplitMix::new(seed), 300);
+            assert_eq!(doc.len(), 300);
+            assert!(doc.iter().all(|&b| (32..127).contains(&b)));
+        }
+    }
+
+    #[test]
+    fn recall_block_contains_answer() {
+        let mut rng = SplitMix::new(3);
+        let block = gen_recall_block(&mut rng, 4);
+        // the trailing "## KEY:VALUE . " repeats a pair from the body
+        let tail = block.rfind("## ").unwrap();
+        let key = &block[tail + 3..tail + 3 + KEY_LEN];
+        let ans = &block[tail + 4 + KEY_LEN..tail + 4 + KEY_LEN + VAL_LEN];
+        assert!(block[..tail].contains(&format!("{key}:{ans}")));
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let a = gen_document(&mut SplitMix::new(5), 200);
+        let b = gen_document(&mut SplitMix::new(5), 200);
+        assert_eq!(a, b);
+    }
+}

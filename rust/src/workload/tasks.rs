@@ -1,0 +1,187 @@
+//! Evaluation tasks (the paper's benchmark substitutions, DESIGN.md §1):
+//!
+//! * recall QA (↔ CoQA/TruthfulQA): a list of KEY:VALUE pairs + one
+//!   re-queried key; exact-match of the generated value.
+//!   Attention-addressing-bound.
+//! * needle recall (↔ LongBench): one pair buried in filler text at a
+//!   controlled depth; same scoring at long context.
+//! * perplexity on held-out corpus documents.
+
+use crate::util::rng::SplitMix;
+
+use super::{gen_kv_pair, gen_sentence, KEY_LEN, VAL_LEN};
+
+/// One evaluation episode: prompt bytes + expected answer string.
+#[derive(Debug, Clone)]
+pub struct Episode {
+    pub prompt: Vec<u8>,
+    pub answer: String,
+}
+
+/// Mirror of `data.make_recall_task(rng, n_pairs)` (normal-context recall).
+pub fn recall_episode(rng: &mut SplitMix, n_pairs: usize) -> Episode {
+    let pairs: Vec<(String, String)> =
+        (0..n_pairs).map(|_| gen_kv_pair(rng)).collect();
+    let body: Vec<String> =
+        pairs.iter().map(|(k, v)| format!("{k}:{v}")).collect();
+    let (qk, qv) = &pairs[rng.below(n_pairs)];
+    Episode {
+        prompt: format!("## {} ## {qk}:", body.join(" ")).into_bytes(),
+        answer: qv.clone(),
+    }
+}
+
+/// Mirror of `data.make_recall_task(rng, 0, filler, needle_at)`:
+/// one needle pair at relative depth `needle_at` ∈ [0, 1] in filler text.
+pub fn needle_episode(
+    rng: &mut SplitMix,
+    filler_sentences: usize,
+    needle_at: f64,
+) -> Episode {
+    let mut filler: Vec<String> =
+        (0..filler_sentences).map(|_| gen_sentence(rng)).collect();
+    let (k, v) = gen_kv_pair(rng);
+    let idx = ((needle_at * filler.len() as f64) as usize)
+        .min(filler.len().saturating_sub(1));
+    filler.insert(idx, format!("{k}:{v} "));
+    Episode {
+        prompt: format!("## {}## {k}:", filler.join("")).into_bytes(),
+        answer: v,
+    }
+}
+
+/// Grade a generation against the episode's answer: fraction of the
+/// `VAL_LEN` answer characters produced correctly before divergence
+/// (exact-match accuracy when all match).
+pub fn grade(expected: &str, generated: &[u8]) -> f64 {
+    let want = expected.as_bytes();
+    let mut ok = 0;
+    for i in 0..want.len() {
+        if generated.get(i) == Some(&want[i]) {
+            ok += 1;
+        } else {
+            break;
+        }
+    }
+    ok as f64 / want.len() as f64
+}
+
+/// A batch of episodes for a benchmark table row.
+pub fn recall_suite(seed: u64, n_episodes: usize, n_pairs: usize) -> Vec<Episode> {
+    (0..n_episodes)
+        .map(|i| {
+            let mut rng = SplitMix::new(seed ^ (i as u64).wrapping_mul(0xD1B54A32D192ED03));
+            recall_episode(&mut rng, n_pairs)
+        })
+        .collect()
+}
+
+pub fn needle_suite(
+    seed: u64,
+    n_episodes: usize,
+    filler_sentences: usize,
+) -> Vec<Episode> {
+    (0..n_episodes)
+        .map(|i| {
+            let mut rng = SplitMix::new(seed ^ (i as u64).wrapping_mul(0xD1B54A32D192ED03));
+            // sweep depth across episodes (paper-style depth coverage)
+            let depth = (i as f64 + 0.5) / n_episodes as f64;
+            needle_episode(&mut rng, filler_sentences, depth)
+        })
+        .collect()
+}
+
+/// Byte-budgeted needle episode: filler accumulates sentences until
+/// `target_bytes`, so prompts never overflow the context budget regardless
+/// of sentence-length variance (needle_episode counts sentences instead —
+/// kept for the golden.json parity with python).
+pub fn needle_episode_bytes(
+    rng: &mut SplitMix,
+    target_bytes: usize,
+    needle_at: f64,
+) -> Episode {
+    let mut filler: Vec<String> = Vec::new();
+    let mut total = 0usize;
+    while total < target_bytes {
+        let s = gen_sentence(rng);
+        total += s.len();
+        filler.push(s);
+    }
+    let (k, v) = gen_kv_pair(rng);
+    let idx = ((needle_at * filler.len() as f64) as usize)
+        .min(filler.len().saturating_sub(1));
+    filler.insert(idx, format!("{k}:{v} "));
+    Episode {
+        prompt: format!("## {}## {k}:", filler.join("")).into_bytes(),
+        answer: v,
+    }
+}
+
+/// Depth-swept byte-budgeted needle suite (the long-context benches).
+pub fn needle_suite_bytes(
+    seed: u64,
+    n_episodes: usize,
+    target_bytes: usize,
+) -> Vec<Episode> {
+    (0..n_episodes)
+        .map(|i| {
+            let mut rng = SplitMix::new(seed ^ (i as u64).wrapping_mul(0xD1B54A32D192ED03));
+            let depth = (i as f64 + 0.5) / n_episodes as f64;
+            needle_episode_bytes(&mut rng, target_bytes, depth)
+        })
+        .collect()
+}
+
+pub const ANSWER_LEN: usize = VAL_LEN;
+pub const _KEY_LEN: usize = KEY_LEN;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recall_prompt_contains_answer() {
+        let mut rng = SplitMix::new(1);
+        let e = recall_episode(&mut rng, 5);
+        let text = String::from_utf8(e.prompt.clone()).unwrap();
+        assert!(text.contains(&format!(":{}", e.answer)));
+        assert!(text.ends_with(':'));
+    }
+
+    #[test]
+    fn needle_prompt_contains_answer_once() {
+        let mut rng = SplitMix::new(2);
+        let e = needle_episode(&mut rng, 30, 0.5);
+        let text = String::from_utf8(e.prompt.clone()).unwrap();
+        assert_eq!(text.matches(&format!(":{}", e.answer)).count(), 1);
+    }
+
+    #[test]
+    fn grade_prefix_match() {
+        assert_eq!(grade("1234", b"1234xx"), 1.0);
+        assert_eq!(grade("1234", b"12xx"), 0.5);
+        assert_eq!(grade("1234", b"x234"), 0.0);
+        assert_eq!(grade("1234", b""), 0.0);
+    }
+
+    #[test]
+    fn suites_deterministic_and_distinct() {
+        let a = recall_suite(7, 5, 4);
+        let b = recall_suite(7, 5, 4);
+        assert_eq!(a.len(), 5);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+        }
+        assert_ne!(a[0].prompt, a[1].prompt);
+    }
+
+    #[test]
+    fn needle_depth_sweeps() {
+        let suite = needle_suite(3, 4, 40);
+        let depth = |e: &Episode| {
+            let t = String::from_utf8(e.prompt.clone()).unwrap();
+            t.find(&format!(":{}", e.answer)).unwrap() as f64 / t.len() as f64
+        };
+        assert!(depth(&suite[0]) < depth(&suite[3]));
+    }
+}

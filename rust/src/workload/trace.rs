@@ -1,0 +1,80 @@
+//! Request traces for the serving benches: Poisson arrivals with
+//! configurable prompt/generation length distributions.
+
+use crate::util::rng::SplitMix;
+
+use super::tasks::{recall_episode, Episode};
+
+#[derive(Debug, Clone)]
+pub struct TraceRequest {
+    /// arrival offset from trace start, seconds
+    pub arrival_s: f64,
+    pub episode: Episode,
+    pub n_gen: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    pub seed: u64,
+    pub n_requests: usize,
+    /// mean arrival rate (requests/second); 0 = all arrive at t=0 (offline)
+    pub rate: f64,
+    pub n_pairs: usize,
+    pub n_gen: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        Self { seed: 0xC0FFEE, n_requests: 32, rate: 0.0, n_pairs: 12, n_gen: 8 }
+    }
+}
+
+pub fn generate_trace(cfg: &TraceConfig) -> Vec<TraceRequest> {
+    let mut rng = SplitMix::new(cfg.seed);
+    let mut t = 0.0f64;
+    (0..cfg.n_requests)
+        .map(|_| {
+            if cfg.rate > 0.0 {
+                t += rng.exp(cfg.rate);
+            }
+            TraceRequest {
+                arrival_s: t,
+                episode: recall_episode(&mut rng, cfg.n_pairs),
+                n_gen: cfg.n_gen,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn offline_trace_all_at_zero() {
+        let tr = generate_trace(&TraceConfig { rate: 0.0, ..Default::default() });
+        assert!(tr.iter().all(|r| r.arrival_s == 0.0));
+        assert_eq!(tr.len(), 32);
+    }
+
+    #[test]
+    fn online_trace_monotone_arrivals() {
+        let tr = generate_trace(&TraceConfig {
+            rate: 10.0,
+            n_requests: 50,
+            ..Default::default()
+        });
+        for w in tr.windows(2) {
+            assert!(w[1].arrival_s >= w[0].arrival_s);
+        }
+        let mean_gap = tr.last().unwrap().arrival_s / 49.0;
+        assert!((mean_gap - 0.1).abs() < 0.05, "mean gap {mean_gap}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = generate_trace(&TraceConfig::default());
+        let b = generate_trace(&TraceConfig::default());
+        assert_eq!(a[5].episode.prompt, b[5].episode.prompt);
+    }
+}

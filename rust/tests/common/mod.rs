@@ -1,0 +1,36 @@
+//! Shared helpers for integration tests: artifact discovery + engine setup.
+#![allow(dead_code)] // each test binary uses a subset of these helpers
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use asymkv::engine::Engine;
+use asymkv::runtime::Runtime;
+
+/// Locate `artifacts/<model>` from the workspace root; None if not built.
+pub fn artifact_dir(model: &str) -> Option<PathBuf> {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts")
+        .join(model);
+    p.join("manifest.json").exists().then_some(p)
+}
+
+/// Skip (returning None) with a notice when artifacts are missing.
+pub fn engine_for(model: &str) -> Option<Arc<Engine>> {
+    let dir = match artifact_dir(model) {
+        Some(d) => d,
+        None => {
+            eprintln!("SKIP: artifacts/{model} not built (run `make artifacts`)");
+            return None;
+        }
+    };
+    let rt = Arc::new(Runtime::load(dir).expect("loading runtime"));
+    Some(Arc::new(Engine::new(rt, 1 << 30).expect("building engine")))
+}
+
+/// Load golden.json for a model.
+pub fn golden(model: &str) -> Option<asymkv::util::json::Value> {
+    let dir = artifact_dir(model)?;
+    let text = std::fs::read_to_string(dir.join("golden.json")).ok()?;
+    Some(asymkv::util::json::parse(&text).expect("parsing golden.json"))
+}

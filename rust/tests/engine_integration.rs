@@ -1,0 +1,314 @@
+//! End-to-end engine tests over the tiny AOT artifacts: the Rust engine
+//! (PJRT runtime + packed caches + fold protocol) must reproduce the
+//! Python float forward, degrade gracefully under quantization, and keep
+//! its memory accounting consistent.
+
+mod common;
+
+use asymkv::engine::SamplingParams;
+use asymkv::model::ByteTokenizer;
+use asymkv::quant::QuantPolicy;
+use asymkv::util::json::base64_decode;
+
+/// The anchor test: greedy decode under the FLOAT policy must reproduce
+/// the Python-side logits trace (same weights, same math, different
+/// execution path: chunked prefill + cache decode vs full recompute).
+#[test]
+fn float_decode_matches_python_trace() {
+    let Some(engine) = common::engine_for("tiny") else { return };
+    let g = common::golden("tiny").unwrap();
+    let trace = g.get("decode_trace");
+    let prompt = base64_decode(trace.get("prompt").as_str().unwrap()).unwrap();
+    let want_tokens: Vec<i32> = trace
+        .get("generated")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_i64().unwrap() as i32)
+        .collect();
+    let want_logits = trace.get("logits").as_arr().unwrap();
+
+    let tok = ByteTokenizer;
+    let policy = QuantPolicy::float32(engine.manifest().n_layers);
+    let id = engine.create_seq(&policy).unwrap();
+    let mut logits = engine
+        .prefill(&[id], &[tok.encode(&prompt)])
+        .unwrap()
+        .remove(0);
+
+    for (step, want_tok) in want_tokens.iter().enumerate() {
+        let want = want_logits[step].f32_vec().unwrap();
+        let max_abs = want.iter().fold(0f32, |a, &b| a.max(b.abs()));
+        for (i, (&got, &w)) in logits.iter().zip(&want).enumerate() {
+            assert!(
+                (got - w).abs() < 2e-3 * max_abs.max(1.0),
+                "step {step} logit {i}: rust {got} vs python {w}"
+            );
+        }
+        let got_tok = asymkv::engine::argmax(&logits);
+        assert_eq!(got_tok, *want_tok, "argmax diverged at step {step}");
+        logits = engine.decode(&[id], &[got_tok]).unwrap().remove(0);
+    }
+    engine.free_seq(id).unwrap();
+}
+
+#[test]
+fn all_grid_policies_run_and_stay_finite() {
+    let Some(engine) = common::engine_for("tiny") else { return };
+    let n = engine.manifest().n_layers;
+    let mut rng = asymkv::util::rng::SplitMix::new(3);
+    let doc = asymkv::workload::gen_document(&mut rng, 100);
+    let tok = ByteTokenizer;
+    for policy in [
+        QuantPolicy::float32(n),
+        QuantPolicy::kivi(n, 1),
+        QuantPolicy::kivi(n, 2),
+        QuantPolicy::asymkv21(n, n / 2, 0),
+        QuantPolicy::asymkv21(n, 0, n / 2),
+        QuantPolicy::k_only(n, 2),
+        QuantPolicy::v_only(n, 1),
+    ] {
+        let id = engine.create_seq(&policy).unwrap();
+        let out = engine
+            .generate(&[id], &[tok.encode(&doc)], 4,
+                      &SamplingParams::greedy(), 0)
+            .unwrap();
+        assert_eq!(out[0].len(), 4, "{policy}");
+        let logits = engine.decode(&[id], &[out[0][3]]).unwrap();
+        assert!(
+            logits[0].iter().all(|x| x.is_finite()),
+            "non-finite logits under {policy}"
+        );
+        engine.free_seq(id).unwrap();
+    }
+}
+
+#[test]
+fn quantized_logits_error_monotone_in_bits() {
+    let Some(engine) = common::engine_for("tiny") else { return };
+    let n = engine.manifest().n_layers;
+    let mut rng = asymkv::util::rng::SplitMix::new(11);
+    // long enough to force folding (past the residual window)
+    let doc = asymkv::workload::gen_document(&mut rng, 120);
+    let tok = ByteTokenizer;
+    let run = |policy: &QuantPolicy| -> Vec<f32> {
+        let id = engine.create_seq(policy).unwrap();
+        let l = engine
+            .prefill(&[id], &[tok.encode(&doc)])
+            .unwrap()
+            .remove(0);
+        engine.free_seq(id).unwrap();
+        l
+    };
+    let float = run(&QuantPolicy::float32(n));
+    let mut errs = Vec::new();
+    for bits in [1u8, 2, 4] {
+        let q = run(&QuantPolicy::kivi(n, bits));
+        let mse: f64 = float
+            .iter()
+            .zip(&q)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / float.len() as f64;
+        errs.push(mse);
+    }
+    assert!(
+        errs[0] > errs[1] && errs[1] > errs[2],
+        "logits error must shrink with bits: {errs:?}"
+    );
+}
+
+#[test]
+fn batched_prefill_matches_single() {
+    let Some(engine) = common::engine_for("tiny") else { return };
+    let n = engine.manifest().n_layers;
+    let tok = ByteTokenizer;
+    let mut rng = asymkv::util::rng::SplitMix::new(5);
+    // different lengths exercise the padded-chunk path
+    let p1 = tok.encode(&asymkv::workload::gen_document(&mut rng, 90));
+    let p2 = tok.encode(&asymkv::workload::gen_document(&mut rng, 40));
+    let policy = QuantPolicy::kivi(n, 2);
+
+    let id1 = engine.create_seq(&policy).unwrap();
+    let id2 = engine.create_seq(&policy).unwrap();
+    let batched = engine
+        .prefill(&[id1, id2], &[p1.clone(), p2.clone()])
+        .unwrap();
+    engine.free_seq(id1).unwrap();
+    engine.free_seq(id2).unwrap();
+
+    for (p, want) in [(p1, &batched[0]), (p2, &batched[1])] {
+        let id = engine.create_seq(&policy).unwrap();
+        let single = engine.prefill(&[id], &[p]).unwrap().remove(0);
+        engine.free_seq(id).unwrap();
+        let max_abs = single.iter().fold(0f32, |a, &b| a.max(b.abs()));
+        for (a, b) in single.iter().zip(want.iter()) {
+            assert!(
+                (a - b).abs() < 3e-3 * max_abs.max(1.0),
+                "batched vs single prefill diverged: {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn memory_accounting_tracks_policy() {
+    let Some(engine) = common::engine_for("tiny") else { return };
+    let n = engine.manifest().n_layers;
+    let mut caps = Vec::new();
+    for policy in [
+        QuantPolicy::kivi(n, 1),
+        QuantPolicy::kivi(n, 2),
+        QuantPolicy::float32(n),
+    ] {
+        let id = engine.create_seq(&policy).unwrap();
+        caps.push(engine.with_seq(id, |s| s.capacity_bytes()).unwrap());
+        engine.free_seq(id).unwrap();
+    }
+    assert!(caps[0] < caps[1] && caps[1] < caps[2], "{caps:?}");
+    assert_eq!(engine.pool.stats().n_seqs, 0);
+    assert!(engine.pool.stats().peak_bytes >= caps[2]);
+}
+
+#[test]
+fn context_budget_enforced() {
+    let Some(engine) = common::engine_for("tiny") else { return };
+    let m = engine.manifest();
+    let policy = QuantPolicy::kivi(m.n_layers, 2);
+    let id = engine.create_seq(&policy).unwrap();
+    let too_long = vec![65i32; m.max_ctx + m.residual + 10];
+    assert!(engine.prefill(&[id], &[too_long]).is_err());
+    engine.free_seq(id).unwrap();
+}
+
+#[test]
+fn engine_stats_progress() {
+    let Some(engine) = common::engine_for("tiny") else { return };
+    let n = engine.manifest().n_layers;
+    let tok = ByteTokenizer;
+    let mut rng = asymkv::util::rng::SplitMix::new(8);
+    let doc = asymkv::workload::gen_document(&mut rng, 100); // > residual
+    let id = engine.create_seq(&QuantPolicy::kivi(n, 2)).unwrap();
+    engine
+        .generate(&[id], &[tok.encode(&doc)], 3, &SamplingParams::greedy(), 0)
+        .unwrap();
+    engine.free_seq(id).unwrap();
+    let st = engine.stats();
+    assert!(st.prefill_chunks > 0);
+    assert!(st.decode_steps > 0);
+    assert!(st.folds > 0, "a 100-token prompt must fold past R=64");
+    assert_eq!(st.tokens_generated, 3);
+}
+
+#[test]
+fn runtime_rejects_malformed_calls() {
+    let Some(engine) = common::engine_for("tiny") else { return };
+    let exe = engine.rt.executable("embed_b1_c1").unwrap();
+    // wrong arg count
+    assert!(exe.run(&[asymkv::runtime::lit_i32(&[1, 1], &[0]).unwrap()]).is_err());
+    // wrong shape for tokens
+    let m = engine.manifest();
+    let embed = asymkv::runtime::lit_f32(
+        &[m.vocab, m.d_model],
+        &vec![0.0; m.vocab * m.d_model],
+    )
+    .unwrap();
+    let bad_tokens = asymkv::runtime::lit_i32(&[1, 7], &[0; 7]).unwrap();
+    assert!(exe.run(&[embed, bad_tokens]).is_err());
+    // unknown artifact name
+    assert!(engine.rt.executable("layer_b9_c9_k7_v7").is_err());
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    let Some(engine) = common::engine_for("tiny") else { return };
+    let before = engine.rt.compiled_count();
+    engine.rt.executable("head_b1_c1").unwrap();
+    engine.rt.executable("head_b1_c1").unwrap();
+    engine.rt.executable("head_b1_c1").unwrap();
+    assert_eq!(engine.rt.compiled_count(), before + 1);
+}
+
+/// Interleaved decode across sequences created at different times — the
+/// continuous-batching pattern at the engine level.
+#[test]
+fn interleaved_multi_sequence_decode() {
+    let Some(engine) = common::engine_for("tiny") else { return };
+    let n = engine.manifest().n_layers;
+    let tok = ByteTokenizer;
+    let policy = QuantPolicy::asymkv21(n, n / 2, 0);
+
+    let a = engine.create_seq(&policy).unwrap();
+    let prompt_a = tok.encode_str("## AAA:1111 ## AAA:");
+    let len_a = prompt_a.len();
+    engine.prefill(&[a], &[prompt_a]).unwrap();
+    engine.decode(&[a], &[b'1' as i32]).unwrap();
+    // b joins later; decode them together afterwards
+    let b = engine.create_seq(&policy).unwrap();
+    engine.prefill(&[b], &[tok.encode_str("the crow sings. ")]).unwrap();
+    let logits = engine.decode(&[a, b], &[b'1' as i32, b't' as i32]).unwrap();
+    assert_eq!(logits.len(), 2);
+    assert!(logits.iter().all(|l| l.iter().all(|x| x.is_finite())));
+    // positions advanced independently
+    let pa = engine.with_seq(a, |s| s.pos).unwrap();
+    let pb = engine.with_seq(b, |s| s.pos).unwrap();
+    assert_eq!(pa, len_a + 2);
+    assert_eq!(pb, 16 + 1);
+    engine.free_seq(a).unwrap();
+    engine.free_seq(b).unwrap();
+}
+
+#[test]
+fn prefix_cache_reuse_matches_cold_prefill() {
+    let Some(engine) = common::engine_for("tiny") else { return };
+    let n = engine.manifest().n_layers;
+    let tok = ByteTokenizer;
+    let policy = QuantPolicy::kivi(n, 2);
+    let pcache = asymkv::kvcache::PrefixCache::new(64 << 20);
+
+    let base = tok.encode_str("## ABC:1234 XYZ:5678 ##");
+    let full_a = tok.encode_str("## ABC:1234 XYZ:5678 ## ABC:");
+    let full_b = tok.encode_str("## ABC:1234 XYZ:5678 ## XYZ:");
+
+    // cold prefill of the shared base populates the cache
+    let id0 = engine.create_seq(&policy).unwrap();
+    engine.prefill_cached(&[id0], &[base.clone()], &pcache).unwrap();
+    engine.free_seq(id0).unwrap();
+    assert_eq!(pcache.stats().entries, 1);
+
+    // warm path: full_a extends the cached base
+    let id1 = engine.create_seq(&policy).unwrap();
+    let warm = engine
+        .prefill_cached(&[id1], &[full_a.clone()], &pcache)
+        .unwrap()
+        .remove(0);
+    engine.free_seq(id1).unwrap();
+    assert!(pcache.stats().hits >= 1);
+
+    // cold reference without the cache
+    let id2 = engine.create_seq(&policy).unwrap();
+    let cold = engine.prefill(&[id2], &[full_a.clone()]).unwrap().remove(0);
+    engine.free_seq(id2).unwrap();
+
+    let max_abs = cold.iter().fold(0f32, |a, &b| a.max(b.abs()));
+    for (w, c) in warm.iter().zip(&cold) {
+        assert!((w - c).abs() < 3e-3 * max_abs.max(1.0),
+                "warm {w} vs cold {c}");
+    }
+
+    // exact-hit fast path: same prompt again → logits from the snapshot
+    let id3 = engine.create_seq(&policy).unwrap();
+    let exact = engine
+        .prefill_cached(&[id3], &[full_a.clone()], &pcache)
+        .unwrap()
+        .remove(0);
+    engine.free_seq(id3).unwrap();
+    assert_eq!(exact, warm);
+
+    // a different continuation also reuses the base
+    let hits_before = pcache.stats().hits;
+    let id4 = engine.create_seq(&policy).unwrap();
+    engine.prefill_cached(&[id4], &[full_b], &pcache).unwrap();
+    engine.free_seq(id4).unwrap();
+    assert!(pcache.stats().hits > hits_before);
+}

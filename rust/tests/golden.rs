@@ -1,0 +1,132 @@
+//! Cross-language golden tests: the Rust quantization kernels and workload
+//! generators must match the Python reference bit-for-bit / byte-for-byte.
+
+mod common;
+
+use asymkv::quant::rtn;
+use asymkv::util::json::{base64_decode, Value};
+use asymkv::util::rng::SplitMix;
+use asymkv::workload;
+
+fn f32s(v: &Value) -> Vec<f32> {
+    v.f32_vec().expect("float array")
+}
+
+#[test]
+fn fold_k_matches_python_bit_exact() {
+    let Some(g) = common::golden("tiny") else { return };
+    for bits in [1u8, 2, 4] {
+        let case = g.get(&format!("fold_k_bits{bits}"));
+        let input = f32s(case.get("input"));
+        let shape = case.get("shape").usize_vec().unwrap(); // [1, 2, G, Dh]
+        let (b, h, gg, dh) = (shape[0], shape[1], shape[2], shape[3]);
+        let want_packed = base64_decode(case.get("packed").as_str().unwrap()).unwrap();
+        let want_scale = f32s(case.get("scale"));
+        let want_zero = f32s(case.get("zero"));
+        let rows_pk = rtn::packed_len(gg, bits);
+        let mut got_packed = vec![0u8; b * h * rows_pk * dh];
+        let mut got_scale = vec![0f32; b * h * dh];
+        let mut got_zero = vec![0f32; b * h * dh];
+        for bh in 0..b * h {
+            let kg = &input[bh * gg * dh..(bh + 1) * gg * dh];
+            let mut params =
+                vec![rtn::GroupParams { scale: 0.0, zero: 0.0 }; dh];
+            rtn::fold_k_group(
+                kg, gg, dh, bits,
+                &mut got_packed[bh * rows_pk * dh..(bh + 1) * rows_pk * dh],
+                &mut params,
+            );
+            for d in 0..dh {
+                got_scale[bh * dh + d] = params[d].scale;
+                got_zero[bh * dh + d] = params[d].zero;
+            }
+        }
+        assert_eq!(got_packed, want_packed, "K packed bytes diverge at {bits}b");
+        assert_eq!(got_scale, want_scale, "K scales diverge at {bits}b");
+        assert_eq!(got_zero, want_zero, "K zeros diverge at {bits}b");
+    }
+}
+
+#[test]
+fn fold_v_matches_python_bit_exact() {
+    let Some(g) = common::golden("tiny") else { return };
+    for bits in [1u8, 2, 4] {
+        let case = g.get(&format!("fold_v_bits{bits}"));
+        let input = f32s(case.get("input"));
+        let shape = case.get("shape").usize_vec().unwrap();
+        let (b, h, gg, dh) = (shape[0], shape[1], shape[2], shape[3]);
+        let g2 = 32usize.min(dh);
+        let dg = dh / g2;
+        let want_packed = base64_decode(case.get("packed").as_str().unwrap()).unwrap();
+        let want_scale = f32s(case.get("scale"));
+        let bpt = rtn::packed_len(dh, bits);
+        let mut got_packed = vec![0u8; b * h * gg * bpt];
+        let mut got_scale = vec![0f32; b * h * gg * dg];
+        for bh in 0..b * h {
+            let vg = &input[bh * gg * dh..(bh + 1) * gg * dh];
+            let mut params =
+                vec![rtn::GroupParams { scale: 0.0, zero: 0.0 }; gg * dg];
+            rtn::fold_v_group(
+                vg, gg, dh, g2, bits,
+                &mut got_packed[bh * gg * bpt..(bh + 1) * gg * bpt],
+                &mut params,
+            );
+            for i in 0..gg * dg {
+                got_scale[bh * gg * dg + i] = params[i].scale;
+            }
+        }
+        assert_eq!(got_packed, want_packed, "V packed bytes diverge at {bits}b");
+        assert_eq!(got_scale, want_scale, "V scales diverge at {bits}b");
+    }
+}
+
+#[test]
+fn splitmix_stream_matches_python() {
+    let Some(g) = common::golden("tiny") else { return };
+    let want: Vec<u64> = g
+        .get("splitmix_seed7_first8")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as u64)
+        .collect();
+    let mut rng = SplitMix::new(7);
+    let got: Vec<u64> = (0..8).map(|_| rng.next_u64() % (1 << 32)).collect();
+    assert_eq!(got, want);
+}
+
+#[test]
+fn corpus_document_matches_python_byte_exact() {
+    let Some(g) = common::golden("tiny") else { return };
+    let want = base64_decode(g.get("document_seed123_len256").as_str().unwrap())
+        .unwrap();
+    let got = workload::gen_document(&mut SplitMix::new(123), 256);
+    assert_eq!(
+        String::from_utf8_lossy(&got),
+        String::from_utf8_lossy(&want),
+        "corpus generators diverged — update the rust mirror of data.py"
+    );
+}
+
+#[test]
+fn recall_task_matches_python() {
+    let Some(g) = common::golden("tiny") else { return };
+    let case = g.get("recall_seed99");
+    let want_prompt = base64_decode(case.get("prompt").as_str().unwrap()).unwrap();
+    let want_answer = case.get("answer").as_str().unwrap();
+    let ep = asymkv::workload::tasks::recall_episode(&mut SplitMix::new(99), 5);
+    assert_eq!(String::from_utf8_lossy(&ep.prompt),
+               String::from_utf8_lossy(&want_prompt));
+    assert_eq!(ep.answer, want_answer);
+}
+
+#[test]
+fn needle_task_matches_python() {
+    let Some(g) = common::golden("tiny") else { return };
+    let case = g.get("needle_seed77");
+    let want_prompt = base64_decode(case.get("prompt").as_str().unwrap()).unwrap();
+    let ep = asymkv::workload::tasks::needle_episode(&mut SplitMix::new(77), 30, 0.5);
+    assert_eq!(String::from_utf8_lossy(&ep.prompt),
+               String::from_utf8_lossy(&want_prompt));
+    assert_eq!(ep.answer, case.get("answer").as_str().unwrap());
+}

@@ -1,0 +1,352 @@
+//! Full-stack test: TCP server → coordinator → engine → artifacts.
+
+mod common;
+
+use std::sync::Arc;
+
+use asymkv::coordinator::{Coordinator, CoordinatorConfig, Request};
+use asymkv::model::ByteTokenizer;
+use asymkv::quant::QuantPolicy;
+use asymkv::server::{Client, Server};
+use asymkv::util::json::Value;
+
+#[test]
+fn coordinator_roundtrip_and_batching() {
+    let Some(engine) = common::engine_for("tiny") else { return };
+    let n = engine.manifest().n_layers;
+    let coord = Coordinator::start(
+        engine,
+        CoordinatorConfig {
+            max_active: 8,
+            max_batch: 4,
+            batch_window: std::time::Duration::from_millis(5),
+            prefix_cache_bytes: 0,
+        },
+    );
+    let tok = ByteTokenizer;
+    // several concurrent requests with mixed policies — the scheduler must
+    // group policy-homogeneous batches and still answer everyone
+    let mut handles = Vec::new();
+    for i in 0..6u64 {
+        let policy = if i % 2 == 0 {
+            QuantPolicy::kivi(n, 2)
+        } else {
+            QuantPolicy::float32(n)
+        };
+        let mut rng = asymkv::util::rng::SplitMix::new(i);
+        let ep = asymkv::workload::tasks::recall_episode(&mut rng, 3);
+        handles.push(coord.submit(Request::greedy(
+            i,
+            tok.encode(&ep.prompt),
+            5,
+            policy,
+        )));
+    }
+    for (i, h) in handles.into_iter().enumerate() {
+        let resp = h.wait();
+        assert!(resp.error.is_none(), "req {i}: {:?}", resp.error);
+        assert_eq!(resp.tokens.len(), 5);
+        assert!(resp.timing.total_s > 0.0);
+    }
+    let m = coord.metrics();
+    assert_eq!(m.requests_completed, 6);
+    assert_eq!(m.requests_failed, 0);
+    assert!(m.tokens_generated >= 30);
+    coord.shutdown();
+}
+
+#[test]
+fn stop_token_terminates_early() {
+    let Some(engine) = common::engine_for("tiny") else { return };
+    let n = engine.manifest().n_layers;
+    let coord = Coordinator::start(engine, CoordinatorConfig::default());
+    let tok = ByteTokenizer;
+    let mut req = Request::greedy(
+        1,
+        tok.encode_str("the ox runs. "),
+        64,
+        QuantPolicy::float32(n),
+    );
+    // stop on space — guaranteed to appear early in this corpus
+    req.stop_token = Some(b' ' as i32);
+    let resp = coord.submit_wait(req);
+    assert!(resp.error.is_none());
+    assert!(resp.tokens.len() < 64, "stop token must cut generation short");
+    assert_eq!(*resp.tokens.last().unwrap(), b' ' as i32);
+    coord.shutdown();
+}
+
+#[test]
+fn tcp_server_end_to_end() {
+    let Some(engine) = common::engine_for("tiny") else { return };
+    let coord = Coordinator::start(engine, CoordinatorConfig::default());
+    let server = Arc::new(Server::bind(coord, "127.0.0.1:0").unwrap());
+    let addr = server.local_addr();
+    let stop = server.stop_flag();
+    let srv = server.clone();
+    let t = std::thread::spawn(move || srv.serve());
+
+    let mut client = Client::connect(&addr).unwrap();
+    // ping
+    let pong = client
+        .call(&Value::obj(vec![("op", Value::str_of("ping"))]))
+        .unwrap();
+    assert_eq!(pong.get("ok").as_bool(), Some(true));
+    // generate
+    let reply = client
+        .call(&Value::obj(vec![
+            ("op", Value::str_of("generate")),
+            ("prompt", Value::str_of("## ABC:1234 ## ABC:")),
+            ("n_gen", Value::num(4.0)),
+            ("policy", Value::str_of("kivi-2")),
+        ]))
+        .unwrap();
+    assert!(reply.get("error").as_str().is_none(), "{reply}");
+    assert_eq!(reply.get("tokens").as_arr().unwrap().len(), 4);
+    assert!(reply.get("total_s").as_f64().unwrap() > 0.0);
+    // stats + pool introspection
+    let stats = client
+        .call(&Value::obj(vec![("op", Value::str_of("stats"))]))
+        .unwrap();
+    assert!(stats.get("requests_completed").as_i64().unwrap() >= 1);
+    let pool = client
+        .call(&Value::obj(vec![("op", Value::str_of("pool"))]))
+        .unwrap();
+    assert!(pool.get("peak_bytes").as_f64().unwrap() > 0.0);
+    // malformed line → error object, connection stays usable
+    let err = client.call(&Value::str_of("not an object")).unwrap();
+    assert!(err.get("error").as_str().is_some());
+    let pong2 = client
+        .call(&Value::obj(vec![("op", Value::str_of("ping"))]))
+        .unwrap();
+    assert_eq!(pong2.get("ok").as_bool(), Some(true));
+
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    let _ = t.join().unwrap();
+}
+
+#[test]
+fn unsupported_policy_rejected_cleanly() {
+    let Some(engine) = common::engine_for("tiny") else { return };
+    let n = engine.manifest().n_layers;
+    let coord = Coordinator::start(engine, CoordinatorConfig::default());
+    // 8-bit variants were never lowered — must fail the request, not wedge
+    let resp = coord.submit_wait(Request::greedy(
+        1,
+        vec![65, 66],
+        2,
+        QuantPolicy::kivi(n, 8),
+    ));
+    assert!(resp.error.is_some());
+    let m = coord.metrics();
+    assert_eq!(m.requests_failed, 1);
+    coord.shutdown();
+}
+
+#[test]
+fn backpressure_under_tiny_pool_budget() {
+    // pool sized for ~2 float sequences: 8 concurrent requests must still
+    // all complete via queueing + requeue on BudgetExceeded
+    let Some(dir) = common::artifact_dir("tiny") else { return };
+    let rt = Arc::new(asymkv::runtime::Runtime::load(dir).unwrap());
+    let probe = asymkv::engine::Engine::new(rt.clone(), usize::MAX).unwrap();
+    let n = probe.manifest().n_layers;
+    let one = {
+        let id = probe
+            .create_seq(&QuantPolicy::float32(n))
+            .unwrap();
+        let b = probe.with_seq(id, |s| s.capacity_bytes()).unwrap();
+        probe.free_seq(id).unwrap();
+        b
+    };
+    drop(probe);
+    let engine =
+        Arc::new(asymkv::engine::Engine::new(rt, one * 2 + one / 2).unwrap());
+    let coord = Coordinator::start(
+        engine,
+        CoordinatorConfig {
+            max_active: 8,
+            max_batch: 4,
+            batch_window: std::time::Duration::from_millis(1),
+            prefix_cache_bytes: 0,
+        },
+    );
+    let tok = ByteTokenizer;
+    let handles: Vec<_> = (0..8u64)
+        .map(|i| {
+            let mut rng = asymkv::util::rng::SplitMix::new(i);
+            let ep = asymkv::workload::tasks::recall_episode(&mut rng, 2);
+            coord.submit(Request::greedy(
+                i,
+                tok.encode(&ep.prompt),
+                3,
+                QuantPolicy::float32(n),
+            ))
+        })
+        .collect();
+    for h in handles {
+        let r = h.wait();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(r.tokens.len(), 3);
+    }
+    assert_eq!(coord.metrics().requests_completed, 8);
+    // all caches released
+    assert_eq!(coord.engine().pool.stats().n_seqs, 0);
+    coord.shutdown();
+}
+
+#[test]
+fn priority_ordering_respected() {
+    let Some(engine) = common::engine_for("tiny") else { return };
+    let n = engine.manifest().n_layers;
+    // single-slot coordinator: strictly serial execution exposes ordering
+    let coord = Coordinator::start(
+        engine,
+        CoordinatorConfig {
+            max_active: 1,
+            max_batch: 1,
+            batch_window: std::time::Duration::from_millis(30),
+            prefix_cache_bytes: 0,
+        },
+    );
+    let tok = ByteTokenizer;
+    let order = Arc::new(std::sync::Mutex::new(Vec::new()));
+    let mut handles = vec![];
+    // submit low-priority first, then high — within the batch window both
+    // are queued, and the high-priority one must run first
+    for (id, prio) in [(1u64, 0i32), (2, 5), (3, 5), (4, 0)] {
+        let mut req = Request::greedy(
+            id,
+            tok.encode_str("the ox runs. the"),
+            2,
+            QuantPolicy::float32(n),
+        );
+        req.priority = prio;
+        let h = coord.submit(req);
+        let order = order.clone();
+        handles.push(std::thread::spawn(move || {
+            let r = h.wait();
+            assert!(r.error.is_none());
+            order.lock().unwrap().push(id);
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let got = order.lock().unwrap().clone();
+    // high-priority ids (2, 3) complete before low-priority (1, 4)
+    let pos = |id: u64| got.iter().position(|&x| x == id).unwrap();
+    assert!(pos(2) < pos(1) && pos(2) < pos(4), "order {got:?}");
+    assert!(pos(3) < pos(1) && pos(3) < pos(4), "order {got:?}");
+    coord.shutdown();
+}
+
+#[test]
+fn shutdown_drains_in_flight_work() {
+    let Some(engine) = common::engine_for("tiny") else { return };
+    let n = engine.manifest().n_layers;
+    let coord = Coordinator::start(engine, CoordinatorConfig::default());
+    let tok = ByteTokenizer;
+    let h = coord.submit(Request::greedy(
+        1,
+        tok.encode_str("## AAB:1290 ## AAB:"),
+        4,
+        QuantPolicy::kivi(n, 2),
+    ));
+    coord.shutdown(); // must not drop the in-flight request
+    let r = h.wait();
+    assert!(r.error.is_none());
+    assert_eq!(r.tokens.len(), 4);
+}
+
+#[test]
+fn oversized_request_fails_fast_not_livelock() {
+    // a request whose cache alone exceeds the TOTAL budget must be failed,
+    // not requeued forever
+    let Some(dir) = common::artifact_dir("tiny") else { return };
+    let rt = Arc::new(asymkv::runtime::Runtime::load(dir).unwrap());
+    let engine = Arc::new(asymkv::engine::Engine::new(rt, 1024).unwrap()); // 1 KiB
+    let n = engine.manifest().n_layers;
+    let coord = Coordinator::start(engine, CoordinatorConfig::default());
+    let resp = coord.submit_wait(Request::greedy(
+        1,
+        vec![65, 66, 67],
+        2,
+        QuantPolicy::float32(n),
+    ));
+    assert!(resp.error.is_some(), "must fail, not hang");
+    assert!(resp.error.unwrap().contains("admission failed"));
+    coord.shutdown();
+}
+
+#[test]
+fn streaming_generate_emits_token_lines() {
+    let Some(engine) = common::engine_for("tiny") else { return };
+    let coord = Coordinator::start(engine, CoordinatorConfig::default());
+    let server = Arc::new(Server::bind(coord, "127.0.0.1:0").unwrap());
+    let addr = server.local_addr();
+    let stop = server.stop_flag();
+    {
+        let srv = server.clone();
+        std::thread::spawn(move || srv.serve());
+    }
+    // raw client: one request line, then read until "done":true
+    use std::io::{BufRead, BufReader, Write};
+    let stream = std::net::TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut w = stream;
+    writeln!(
+        w,
+        r#"{{"op":"generate","prompt":"the ox runs. ","n_gen":5,"stream":true,"policy":"kivi-2"}}"#
+    )
+    .unwrap();
+    let mut pieces = Vec::new();
+    let mut final_tokens = None;
+    for _ in 0..64 {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let v = asymkv::util::json::parse(line.trim()).unwrap();
+        if v.get("done").as_bool() == Some(true) {
+            assert!(v.get("error").as_str().is_none(), "{v}");
+            final_tokens = Some(v.get("tokens").as_arr().unwrap().len());
+            break;
+        }
+        pieces.push(v.get("token").as_i64().unwrap());
+    }
+    assert_eq!(final_tokens, Some(5));
+    assert_eq!(pieces.len(), 5, "one streamed line per token");
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+}
+
+#[test]
+fn prefix_cache_accelerates_shared_prompts() {
+    let Some(engine) = common::engine_for("tiny") else { return };
+    let n = engine.manifest().n_layers;
+    let coord = Coordinator::start(
+        engine,
+        CoordinatorConfig {
+            prefix_cache_bytes: 64 << 20,
+            ..Default::default()
+        },
+    );
+    let tok = ByteTokenizer;
+    let prompt = "## AAB:1290 ZZT:4456 ## ZZT:";
+    // same prompt three times: 2nd/3rd hit the snapshot
+    let mut outs = Vec::new();
+    for i in 0..3u64 {
+        let r = coord.submit_wait(Request::greedy(
+            i,
+            tok.encode_str(prompt),
+            4,
+            QuantPolicy::kivi(n, 2),
+        ));
+        assert!(r.error.is_none());
+        outs.push(r.tokens);
+    }
+    assert_eq!(outs[0], outs[1]);
+    assert_eq!(outs[1], outs[2]);
+    let ps = coord.prefix_stats().unwrap();
+    assert!(ps.hits >= 2, "prefix stats {ps:?}");
+    assert!(ps.entries >= 1);
+    coord.shutdown();
+}
