@@ -58,5 +58,33 @@ fn main() -> anyhow::Result<()> {
     println!("\nNote the asymmetry: AsymKV-k/0 (high-bit KEYS) answers like the");
     println!("float model while AsymKV-0/k (high-bit VALUES) degrades — §3's");
     println!("key-error amplification, at identical cache size.");
+
+    // Multi-turn KV retention (what the server's session API is built on):
+    // a pinned sequence keeps its cache across calls, so the second turn
+    // prefills only the new tokens instead of the whole history.
+    let policy = QuantPolicy::float32(n);
+    let id = engine.create_session_seq(&policy)?;
+    let base = engine.stats().prefill_chunks;
+    engine.generate(
+        &[id],
+        &[tok.encode_str("## ABC:1234 ## ")],
+        2,
+        &SamplingParams::greedy(),
+        0,
+    )?;
+    let turn1 = engine.stats().prefill_chunks - base;
+    engine.generate(
+        &[id],
+        &[tok.encode_str("ABC:")],
+        8,
+        &SamplingParams::greedy(),
+        0,
+    )?;
+    let turn2 = engine.stats().prefill_chunks - base - turn1;
+    println!(
+        "\nsession-style reuse: turn 1 prefilled {turn1} chunk(s); turn 2 \
+         only {turn2} — the history stayed resident in the KV cache."
+    );
+    engine.release_session_seq(id)?;
     Ok(())
 }

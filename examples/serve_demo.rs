@@ -1,16 +1,18 @@
 //! Serving demo: boots the full stack (engine → coordinator → TCP server)
-//! in-process, fires a burst of concurrent client requests with mixed
-//! policies, and prints the serving metrics.
+//! in-process and exercises the typed v2 API: a burst of concurrent
+//! generates with mixed policies, a one-line batch submit, a multi-turn
+//! session (KV reuse across turns), policy listing and the metrics ops.
 //!
 //!   cargo run --release --example serve_demo [artifacts/small]
 
 use std::sync::Arc;
 
+use asymkv::api::{ApiRequest, GenerateSpec};
 use asymkv::coordinator::{Coordinator, CoordinatorConfig};
 use asymkv::engine::Engine;
+use asymkv::quant::QuantPolicy;
 use asymkv::runtime::Runtime;
 use asymkv::server::{Client, Server};
-use asymkv::util::json::Value;
 use asymkv::util::rng::SplitMix;
 use asymkv::workload::tasks;
 
@@ -18,15 +20,15 @@ fn main() -> anyhow::Result<()> {
     let dir = std::env::args().nth(1).unwrap_or("artifacts/small".into());
     let rt = Arc::new(Runtime::load(&dir)?);
     let engine = Arc::new(Engine::new(rt, 1 << 30)?);
+    let n = engine.manifest().n_layers;
     let coord = Coordinator::start(engine, CoordinatorConfig::default());
     let server = Arc::new(Server::bind(coord, "127.0.0.1:0")?);
     let addr = server.local_addr();
-    let stop = server.stop_flag();
     {
         let srv = server.clone();
         std::thread::spawn(move || srv.serve());
     }
-    println!("server on {addr}\n");
+    println!("server on {addr} (typed v2 protocol + v1 compat; see docs/API.md)\n");
 
     // 8 concurrent clients, alternating policies
     let mut joins = Vec::new();
@@ -36,12 +38,14 @@ fn main() -> anyhow::Result<()> {
             let mut client = Client::connect(&addr)?;
             let ep = tasks::recall_episode(&mut SplitMix::new(100 + i), 12);
             let policy = if i % 2 == 0 { "asymkv-6/0" } else { "kivi-2" };
-            let reply = client.call(&Value::obj(vec![
-                ("op", Value::str_of("generate")),
-                ("prompt", Value::str_of(String::from_utf8_lossy(&ep.prompt))),
-                ("n_gen", Value::num(6.0)),
-                ("policy", Value::str_of(policy)),
-            ]))?;
+            let reply = client.send(&ApiRequest::Generate(GenerateSpec {
+                prompt: String::from_utf8_lossy(&ep.prompt).into_owned(),
+                n_gen: 6,
+                policy: Some(
+                    QuantPolicy::parse(policy, n).map_err(|e| anyhow::anyhow!(e))?,
+                ),
+                ..Default::default()
+            }))?;
             Ok(format!(
                 "req {i} [{policy:>10}] answer={} got={:<8} ttft={:.0}ms total={:.0}ms",
                 ep.answer,
@@ -56,11 +60,46 @@ fn main() -> anyhow::Result<()> {
     }
 
     let mut client = Client::connect(&addr)?;
-    let stats = client.call(&Value::obj(vec![("op", Value::str_of("stats"))]))?;
+
+    // one line, N prompts: the coordinator batches policy-homogeneous items
+    let items: Vec<GenerateSpec> = (0..4u64)
+        .map(|i| GenerateSpec {
+            prompt: String::from_utf8_lossy(
+                &tasks::recall_episode(&mut SplitMix::new(500 + i), 10).prompt,
+            )
+            .into_owned(),
+            n_gen: 4,
+            policy: Some(QuantPolicy::asymkv21(n, n * 3 / 4, 0)),
+            ..Default::default()
+        })
+        .collect();
+    let batch = client.send(&ApiRequest::BatchGenerate { items })?;
+    println!("\nbatch submit ({} items): {batch}", batch.get("n"));
+
+    // a multi-turn session: turn 2 reuses the turn-1 KV state (no
+    // re-prefill of the history)
+    let opened = client.send(&ApiRequest::SessionOpen {
+        policy: Some(QuantPolicy::kivi(n, 2)),
+    })?;
+    println!("\nsession opened: {opened}");
+    let session = opened.get("session").as_i64().unwrap_or(0) as u64;
+    for prompt in ["## AAB:1290 ZZT:4456 ## ", "ZZT:"] {
+        let turn = client.send(&ApiRequest::SessionAppend {
+            session,
+            spec: GenerateSpec { prompt: prompt.into(), n_gen: 4, ..Default::default() },
+        })?;
+        println!("  turn: {turn}");
+    }
+    let closed = client.send(&ApiRequest::SessionClose { session })?;
+    println!("session closed: {closed}");
+
+    let policies = client.send(&ApiRequest::Policies { policy: None })?;
+    println!("\nsupported policies: {policies}");
+    let stats = client.send(&ApiRequest::Stats)?;
     println!("\nserving metrics: {stats}");
-    let pool = client.call(&Value::obj(vec![("op", Value::str_of("pool"))]))?;
+    let pool = client.send(&ApiRequest::Pool)?;
     println!("cache pool    : {pool}");
 
-    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    server.request_stop();
     Ok(())
 }

@@ -1,0 +1,770 @@
+//! Wire codecs for the typed protocol: hand-rolled `from_value`/`to_value`
+//! over `util::json` (the offline vendor set has no serde).
+//!
+//! Two framings share the type layer:
+//!
+//! * **v2** (`"v":2` on every line) — strict: `op` is required, unknown
+//!   fields are rejected, numbers must be integral where an integer is
+//!   expected, and every failure carries a stable [`ErrorCode`]. All ops
+//!   are available.
+//! * **v1** (no `v` field, or `"v":1`) — the legacy lenient framing kept as
+//!   a compat shim: a missing `op` falls through to `generate`, unknown
+//!   fields are ignored, and errors flatten to `{"error":"<message>"}`
+//!   strings. Only the original `ping`/`stats`/`pool`/`generate` surface
+//!   exists; the multi-turn/batch/policy ops require v2. One deliberate
+//!   behavior change applies to v1 too: `stop` is matched as a whole
+//!   multi-byte sequence and an empty `stop` is rejected (the old server
+//!   truncated it to its first byte and ignored empty ones).
+//!
+//! See `docs/API.md` for the full wire specification.
+
+use std::collections::BTreeMap;
+
+use crate::engine::SamplingParams;
+use crate::quant::QuantPolicy;
+use crate::util::json::{self, Value};
+
+use super::error::{ApiError, ErrorCode};
+use super::types::{
+    ApiRequest, ApiResponse, GenerateSpec, GenerationResult, PolicyReport,
+    PoolReport, SessionTurn,
+};
+
+/// Protocol framing of one line (decides both leniency and reply shape).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Proto {
+    V1,
+    V2,
+}
+
+/// Wire protocol version advertised by v2 lines.
+pub const PROTOCOL_VERSION: u64 = 2;
+
+// ---------------------------------------------------------------------------
+// request decoding
+// ---------------------------------------------------------------------------
+
+/// A rejected line: the framing the error reply must use, the typed error,
+/// and whether the line asked for streaming (so the transport can
+/// `"done"`-tag the error reply and streaming clients reading until the
+/// terminator never hang).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecodeError {
+    pub proto: Proto,
+    pub error: ApiError,
+    pub wants_stream: bool,
+}
+
+/// Decode one protocol line into a typed request. Errors carry the framing
+/// the reply must use (v1 lines get v1-shaped errors).
+pub fn decode_request(
+    line: &str,
+    n_layers: usize,
+) -> Result<(Proto, ApiRequest), DecodeError> {
+    let msg = match json::parse(line) {
+        Ok(m) => m,
+        Err(e) => {
+            return Err(DecodeError {
+                proto: Proto::V1,
+                error: ApiError::bad_json(format!("bad json: {e}")),
+                wants_stream: false,
+            })
+        }
+    };
+    // any present, non-false value counts: a malformed `"stream":1` line
+    // still expects a done-tagged terminator on its error reply
+    let wants_stream =
+        !matches!(msg.get("stream"), Value::Null | Value::Bool(false));
+    let proto = match msg.get("v") {
+        Value::Null => Proto::V1,
+        Value::Num(f) if *f == 1.0 => Proto::V1,
+        Value::Num(f) if *f == 2.0 => Proto::V2,
+        other => {
+            return Err(DecodeError {
+                proto: Proto::V2,
+                error: ApiError::new(
+                    ErrorCode::BadVersion,
+                    format!("unsupported protocol version {other} (this server speaks v1 and v2)"),
+                ),
+                wants_stream,
+            })
+        }
+    };
+    let req = match proto {
+        Proto::V1 => decode_v1(&msg, n_layers),
+        Proto::V2 => decode_v2(&msg, n_layers),
+    };
+    match req {
+        Ok(r) => Ok((proto, r)),
+        Err(error) => Err(DecodeError { proto, error, wants_stream }),
+    }
+}
+
+/// Legacy lenient decode — mirrors the pre-v2 server's defaults exactly.
+fn decode_v1(msg: &Value, n_layers: usize) -> Result<ApiRequest, ApiError> {
+    match msg.get("op").as_str().unwrap_or("generate") {
+        "ping" => Ok(ApiRequest::Ping),
+        "stats" => Ok(ApiRequest::Stats),
+        "pool" => Ok(ApiRequest::Pool),
+        "generate" => {
+            let prompt = msg
+                .get("prompt")
+                .as_str()
+                .ok_or_else(|| ApiError::missing_field("prompt"))?
+                .to_string();
+            // empty prompts are rejected on v1 too: the engine cannot
+            // prefill zero tokens and a zero-length sequence riding in a
+            // batch would panic the scheduler
+            if prompt.is_empty() {
+                return Err(ApiError::bad_field("prompt", "must be non-empty"));
+            }
+            let policy = QuantPolicy::parse(
+                msg.get("policy").as_str().unwrap_or("float"),
+                n_layers,
+            )
+            .map_err(|e| ApiError::new(ErrorCode::BadPolicy, e))?;
+            let stop = match msg.get("stop").as_str() {
+                Some("") => return Err(ApiError::empty_stop()),
+                Some(s) => Some(s.to_string()),
+                None => None,
+            };
+            Ok(ApiRequest::Generate(GenerateSpec {
+                prompt,
+                n_gen: msg.get("n_gen").as_usize().unwrap_or(16),
+                policy: Some(policy),
+                sampling: SamplingParams {
+                    temperature: msg.get("temperature").as_f64().unwrap_or(0.0) as f32,
+                    top_k: msg.get("top_k").as_usize().unwrap_or(0),
+                },
+                stop,
+                priority: msg.get("priority").as_i64().unwrap_or(0) as i32,
+                stream: msg.get("stream").as_bool().unwrap_or(false),
+            }))
+        }
+        other => Err(ApiError::unknown_op(other)),
+    }
+}
+
+/// Strict v2 decode: required `op`, typed fields, no unknown fields.
+fn decode_v2(msg: &Value, n_layers: usize) -> Result<ApiRequest, ApiError> {
+    let o = msg
+        .as_obj()
+        .ok_or_else(|| ApiError::bad_json("protocol line must be a JSON object"))?;
+    let op = str_field(o, "op")?.ok_or_else(|| ApiError::missing_field("op"))?;
+    match op {
+        "ping" | "stats" | "pool" => {
+            check_fields(o, &["v", "op"])?;
+            Ok(match op {
+                "ping" => ApiRequest::Ping,
+                "stats" => ApiRequest::Stats,
+                _ => ApiRequest::Pool,
+            })
+        }
+        "policies" => {
+            check_fields(o, &["v", "op", "policy"])?;
+            Ok(ApiRequest::Policies {
+                policy: str_field(o, "policy")?.map(str::to_string),
+            })
+        }
+        "generate" => {
+            check_fields(o, &GENERATE_FIELDS)?;
+            Ok(ApiRequest::Generate(decode_spec(o, n_layers, true, true)?))
+        }
+        "batch_generate" => {
+            check_fields(o, &["v", "op", "items"])?;
+            let items = match o.get("items") {
+                Some(Value::Arr(a)) if !a.is_empty() => a,
+                Some(Value::Arr(_)) => {
+                    return Err(ApiError::new(
+                        ErrorCode::EmptyBatch,
+                        "'items' must contain at least one request",
+                    ))
+                }
+                Some(_) => return Err(ApiError::bad_field("items", "must be an array")),
+                None => return Err(ApiError::missing_field("items")),
+            };
+            let mut specs = Vec::with_capacity(items.len());
+            for (i, item) in items.iter().enumerate() {
+                let io = item.as_obj().ok_or_else(|| {
+                    ApiError::bad_field("items", "entries must be objects")
+                })?;
+                check_fields(io, &BATCH_ITEM_FIELDS).map_err(|e| {
+                    ApiError::new(e.code, format!("items[{i}]: {}", e.message))
+                })?;
+                specs.push(decode_spec(io, n_layers, true, false).map_err(|e| {
+                    ApiError::new(e.code, format!("items[{i}]: {}", e.message))
+                })?);
+            }
+            Ok(ApiRequest::BatchGenerate { items: specs })
+        }
+        "session_open" => {
+            check_fields(o, &["v", "op", "policy"])?;
+            let policy = match str_field(o, "policy")? {
+                Some(s) => Some(
+                    QuantPolicy::parse(s, n_layers)
+                        .map_err(|e| ApiError::new(ErrorCode::BadPolicy, e))?,
+                ),
+                None => None,
+            };
+            Ok(ApiRequest::SessionOpen { policy })
+        }
+        "session_append" => {
+            check_fields(o, &SESSION_APPEND_FIELDS)?;
+            let session = uint_field(o, "session")?
+                .ok_or_else(|| ApiError::missing_field("session"))?;
+            Ok(ApiRequest::SessionAppend {
+                session,
+                spec: decode_spec(o, n_layers, false, false)?,
+            })
+        }
+        "session_close" => {
+            check_fields(o, &["v", "op", "session"])?;
+            let session = uint_field(o, "session")?
+                .ok_or_else(|| ApiError::missing_field("session"))?;
+            Ok(ApiRequest::SessionClose { session })
+        }
+        other => Err(ApiError::unknown_op(other)),
+    }
+}
+
+const GENERATE_FIELDS: [&str; 10] = [
+    "v", "op", "prompt", "n_gen", "policy", "temperature", "top_k", "priority",
+    "stop", "stream",
+];
+// "stream"/"policy" stay in the allowed sets where they are *rejected with
+// a targeted message* by decode_spec (e.g. "fixed at session_open") rather
+// than a generic unknown-field error from check_fields.
+const BATCH_ITEM_FIELDS: [&str; 8] = [
+    "prompt", "n_gen", "policy", "temperature", "top_k", "priority", "stop",
+    "stream",
+];
+const SESSION_APPEND_FIELDS: [&str; 11] = [
+    "v", "op", "session", "prompt", "n_gen", "policy", "temperature", "top_k",
+    "priority", "stop", "stream",
+];
+
+/// Decode the generation fields of an (already field-checked) object.
+fn decode_spec(
+    o: &BTreeMap<String, Value>,
+    n_layers: usize,
+    allow_policy: bool,
+    allow_stream: bool,
+) -> Result<GenerateSpec, ApiError> {
+    let prompt = str_field(o, "prompt")?
+        .ok_or_else(|| ApiError::missing_field("prompt"))?;
+    if prompt.is_empty() {
+        return Err(ApiError::bad_field("prompt", "must be non-empty"));
+    }
+    let n_gen = uint_field(o, "n_gen")?.unwrap_or(16) as usize;
+    if n_gen == 0 {
+        return Err(ApiError::bad_field("n_gen", "must be >= 1"));
+    }
+    let policy = match str_field(o, "policy")? {
+        Some(_) if !allow_policy => {
+            return Err(ApiError::bad_field(
+                "policy",
+                "fixed at session_open; not allowed per turn",
+            ))
+        }
+        Some(s) => Some(
+            QuantPolicy::parse(s, n_layers)
+                .map_err(|e| ApiError::new(ErrorCode::BadPolicy, e))?,
+        ),
+        None => None,
+    };
+    let temperature = f64_field(o, "temperature")?.unwrap_or(0.0);
+    if temperature.is_nan() || temperature < 0.0 {
+        return Err(ApiError::bad_field("temperature", "must be >= 0"));
+    }
+    let stop = match str_field(o, "stop")? {
+        Some("") => return Err(ApiError::empty_stop()),
+        Some(s) => Some(s.to_string()),
+        None => None,
+    };
+    let stream = bool_field(o, "stream")?.unwrap_or(false);
+    if stream && !allow_stream {
+        return Err(ApiError::bad_field(
+            "stream",
+            "only supported on 'generate'",
+        ));
+    }
+    Ok(GenerateSpec {
+        prompt: prompt.to_string(),
+        n_gen,
+        policy,
+        sampling: SamplingParams {
+            temperature: temperature as f32,
+            top_k: uint_field(o, "top_k")?.unwrap_or(0) as usize,
+        },
+        stop,
+        priority: int_field(o, "priority")?.unwrap_or(0) as i32,
+        stream,
+    })
+}
+
+// --- strict field accessors (missing = Ok(None); wrong type = BadField) ---
+
+fn check_fields(
+    o: &BTreeMap<String, Value>,
+    allowed: &[&str],
+) -> Result<(), ApiError> {
+    for k in o.keys() {
+        if !allowed.contains(&k.as_str()) {
+            return Err(ApiError::bad_field(k, "unknown field"));
+        }
+    }
+    Ok(())
+}
+
+fn str_field<'a>(
+    o: &'a BTreeMap<String, Value>,
+    key: &str,
+) -> Result<Option<&'a str>, ApiError> {
+    match o.get(key) {
+        None | Some(Value::Null) => Ok(None),
+        Some(Value::Str(s)) => Ok(Some(s)),
+        Some(_) => Err(ApiError::bad_field(key, "must be a string")),
+    }
+}
+
+fn uint_field(o: &BTreeMap<String, Value>, key: &str) -> Result<Option<u64>, ApiError> {
+    match o.get(key) {
+        None | Some(Value::Null) => Ok(None),
+        Some(Value::Num(f)) if f.fract() == 0.0 && *f >= 0.0 && *f < 9e15 => {
+            Ok(Some(*f as u64))
+        }
+        Some(_) => Err(ApiError::bad_field(key, "must be a non-negative integer")),
+    }
+}
+
+fn int_field(o: &BTreeMap<String, Value>, key: &str) -> Result<Option<i64>, ApiError> {
+    match o.get(key) {
+        None | Some(Value::Null) => Ok(None),
+        Some(Value::Num(f)) if f.fract() == 0.0 && f.abs() < 9e15 => Ok(Some(*f as i64)),
+        Some(_) => Err(ApiError::bad_field(key, "must be an integer")),
+    }
+}
+
+fn f64_field(o: &BTreeMap<String, Value>, key: &str) -> Result<Option<f64>, ApiError> {
+    match o.get(key) {
+        None | Some(Value::Null) => Ok(None),
+        Some(Value::Num(f)) => Ok(Some(*f)),
+        Some(_) => Err(ApiError::bad_field(key, "must be a number")),
+    }
+}
+
+fn bool_field(o: &BTreeMap<String, Value>, key: &str) -> Result<Option<bool>, ApiError> {
+    match o.get(key) {
+        None | Some(Value::Null) => Ok(None),
+        Some(Value::Bool(b)) => Ok(Some(*b)),
+        Some(_) => Err(ApiError::bad_field(key, "must be a boolean")),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// request encoding (typed clients emit canonical v2 lines)
+// ---------------------------------------------------------------------------
+
+/// Encode a typed request as a canonical v2 wire line.
+pub fn encode_request(req: &ApiRequest) -> Value {
+    let mut fields: Vec<(&str, Value)> = vec![
+        ("v", Value::num(PROTOCOL_VERSION as f64)),
+        ("op", Value::str_of(req.op())),
+    ];
+    match req {
+        ApiRequest::Ping | ApiRequest::Stats | ApiRequest::Pool => {}
+        ApiRequest::Policies { policy } => {
+            if let Some(p) = policy {
+                fields.push(("policy", Value::str_of(p.clone())));
+            }
+        }
+        ApiRequest::Generate(spec) => {
+            push_spec_fields(&mut fields, spec, true, true)
+        }
+        ApiRequest::BatchGenerate { items } => {
+            let arr = items
+                .iter()
+                .map(|spec| {
+                    let mut f: Vec<(&str, Value)> = Vec::new();
+                    push_spec_fields(&mut f, spec, true, false);
+                    Value::obj(f)
+                })
+                .collect();
+            fields.push(("items", Value::Arr(arr)));
+        }
+        ApiRequest::SessionOpen { policy } => {
+            if let Some(p) = policy {
+                fields.push(("policy", Value::str_of(p.name.clone())));
+            }
+        }
+        ApiRequest::SessionAppend { session, spec } => {
+            fields.push(("session", Value::num(*session as f64)));
+            // policy/stream are rejected on appends — never emit them
+            push_spec_fields(&mut fields, spec, false, false);
+        }
+        ApiRequest::SessionClose { session } => {
+            fields.push(("session", Value::num(*session as f64)));
+        }
+    }
+    Value::obj(fields)
+}
+
+fn push_spec_fields(
+    fields: &mut Vec<(&str, Value)>,
+    spec: &GenerateSpec,
+    with_policy: bool,
+    with_stream: bool,
+) {
+    fields.push(("prompt", Value::str_of(spec.prompt.clone())));
+    fields.push(("n_gen", Value::num(spec.n_gen as f64)));
+    match &spec.policy {
+        Some(p) if with_policy => {
+            fields.push(("policy", Value::str_of(p.name.clone())))
+        }
+        _ => {}
+    }
+    if spec.sampling.temperature != 0.0 {
+        fields.push(("temperature", Value::num(spec.sampling.temperature as f64)));
+    }
+    if spec.sampling.top_k != 0 {
+        fields.push(("top_k", Value::num(spec.sampling.top_k as f64)));
+    }
+    if spec.priority != 0 {
+        fields.push(("priority", Value::num(spec.priority as f64)));
+    }
+    if let Some(s) = &spec.stop {
+        fields.push(("stop", Value::str_of(s.clone())));
+    }
+    if with_stream && spec.stream {
+        fields.push(("stream", Value::Bool(true)));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// response encoding
+// ---------------------------------------------------------------------------
+
+/// Encode a typed response for the given framing.
+pub fn encode_response(resp: &ApiResponse, proto: Proto) -> Value {
+    let v = match resp {
+        ApiResponse::Pong => Value::obj(vec![("ok", Value::Bool(true))]),
+        ApiResponse::Stats(snap) => snap.to_json(),
+        ApiResponse::Pool(report) => pool_value(report),
+        ApiResponse::Policies(report) => policies_value(report),
+        ApiResponse::Generation(g) => generation_value(g, proto),
+        ApiResponse::Batch(items) => Value::obj(vec![
+            ("n", Value::num(items.len() as f64)),
+            (
+                "results",
+                Value::arr(items.iter().map(|g| generation_value(g, proto)).collect()),
+            ),
+        ]),
+        ApiResponse::SessionOpened { session, policy } => Value::obj(vec![
+            ("session", Value::num(*session as f64)),
+            ("policy", Value::str_of(policy.clone())),
+        ]),
+        ApiResponse::SessionResult(turn) => session_turn_value(turn, proto),
+        ApiResponse::SessionClosed { session, turns, pos } => Value::obj(vec![
+            ("session", Value::num(*session as f64)),
+            ("turns", Value::num(*turns as f64)),
+            ("pos", Value::num(*pos as f64)),
+            ("closed", Value::Bool(true)),
+        ]),
+        ApiResponse::Error(e) => Value::obj(vec![("error", error_value(e, proto))]),
+    };
+    with_version(v, proto)
+}
+
+fn with_version(mut v: Value, proto: Proto) -> Value {
+    if proto == Proto::V2 {
+        if let Value::Obj(o) = &mut v {
+            o.insert("v".to_string(), Value::num(PROTOCOL_VERSION as f64));
+        }
+    }
+    v
+}
+
+fn error_value(e: &ApiError, proto: Proto) -> Value {
+    match proto {
+        // legacy framing: errors are plain strings
+        Proto::V1 => Value::str_of(e.message.clone()),
+        Proto::V2 => Value::obj(vec![
+            ("code", Value::str_of(e.code.as_str())),
+            ("message", Value::str_of(e.message.clone())),
+        ]),
+    }
+}
+
+/// A generation result object (no `v` key — the caller adds framing).
+pub fn generation_value(g: &GenerationResult, proto: Proto) -> Value {
+    let mut fields = vec![("id", Value::num(g.id as f64))];
+    match &g.error {
+        Some(e) => fields.push(("error", error_value(e, proto))),
+        None => {
+            fields.push(("text", Value::str_of(g.text.clone())));
+            fields.push((
+                "tokens",
+                Value::arr(g.tokens.iter().map(|&t| Value::num(t as f64)).collect()),
+            ));
+            fields.push(("ttft_s", Value::num(g.ttft_s)));
+            fields.push(("total_s", Value::num(g.total_s)));
+        }
+    }
+    Value::obj(fields)
+}
+
+fn session_turn_value(t: &SessionTurn, proto: Proto) -> Value {
+    let mut v = generation_value(&t.result, proto);
+    if let Value::Obj(o) = &mut v {
+        o.insert("session".to_string(), Value::num(t.session as f64));
+        o.insert("turn".to_string(), Value::num(t.turn as f64));
+        o.insert("pos".to_string(), Value::num(t.pos as f64));
+    }
+    v
+}
+
+fn pool_value(r: &PoolReport) -> Value {
+    let s = &r.pool;
+    let mut fields = vec![
+        ("n_seqs", Value::num(s.n_seqs as f64)),
+        ("pinned_seqs", Value::num(s.pinned_seqs as f64)),
+        ("sessions", Value::num(r.sessions as f64)),
+        ("in_use_bytes", Value::num(s.in_use_bytes as f64)),
+        ("used_bytes", Value::num(s.used_bytes as f64)),
+        ("peak_bytes", Value::num(s.peak_bytes as f64)),
+        ("budget_bytes", Value::num(s.budget_bytes as f64)),
+    ];
+    if let Some(ps) = &r.prefix {
+        fields.push(("prefix_entries", Value::num(ps.entries as f64)));
+        fields.push(("prefix_hits", Value::num(ps.hits as f64)));
+        fields.push(("prefix_misses", Value::num(ps.misses as f64)));
+        fields.push(("prefix_bytes", Value::num(ps.used_bytes as f64)));
+    }
+    Value::obj(fields)
+}
+
+fn policies_value(r: &PolicyReport) -> Value {
+    let grid = r
+        .grid
+        .iter()
+        .map(|&(k, v)| {
+            Value::arr(vec![Value::num(k as f64), Value::num(v as f64)])
+        })
+        .collect();
+    let policies = r
+        .policies
+        .iter()
+        .map(|p| {
+            Value::obj(vec![
+                ("name", Value::str_of(p.name.clone())),
+                (
+                    "k_bits",
+                    Value::arr(p.k_bits.iter().map(|&b| Value::num(b as f64)).collect()),
+                ),
+                (
+                    "v_bits",
+                    Value::arr(p.v_bits.iter().map(|&b| Value::num(b as f64)).collect()),
+                ),
+                ("bytes_per_token", Value::num(p.bytes_per_token as f64)),
+            ])
+        })
+        .collect();
+    Value::obj(vec![
+        ("n_layers", Value::num(r.n_layers as f64)),
+        ("grid", Value::Arr(grid)),
+        (
+            "specs",
+            Value::arr(r.specs.iter().map(|s| Value::str_of(s.clone())).collect()),
+        ),
+        ("policies", Value::Arr(policies)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::error::ErrorCode;
+
+    const N: usize = 4;
+
+    fn decode_ok(line: &str) -> (Proto, ApiRequest) {
+        decode_request(line, N).expect("decode")
+    }
+
+    fn decode_err(line: &str) -> (Proto, ApiError) {
+        let de = decode_request(line, N).expect_err("expected decode error");
+        (de.proto, de.error)
+    }
+
+    #[test]
+    fn v1_lenient_defaults_preserved() {
+        // the exact line today's clients send, no "v": still accepted
+        let (proto, req) = decode_ok(r#"{"op":"generate","prompt":"hi"}"#);
+        assert_eq!(proto, Proto::V1);
+        match req {
+            ApiRequest::Generate(spec) => {
+                assert_eq!(spec.prompt, "hi");
+                assert_eq!(spec.n_gen, 16);
+                assert_eq!(spec.policy.as_ref().unwrap().name, "float");
+            }
+            other => panic!("wrong request {other:?}"),
+        }
+        // a missing op still falls through to generate on v1
+        let (_, req) = decode_ok(r#"{"prompt":"x","n_gen":2}"#);
+        assert!(matches!(req, ApiRequest::Generate(_)));
+        // unknown fields are ignored on v1
+        let (_, req) = decode_ok(r#"{"op":"ping","bogus":1}"#);
+        assert_eq!(req, ApiRequest::Ping);
+        // ...but empty prompts are rejected even on v1 (engine safety)
+        let (proto, e) = decode_err(r#"{"op":"generate","prompt":""}"#);
+        assert_eq!(proto, Proto::V1);
+        assert_eq!(e.code, ErrorCode::BadField);
+    }
+
+    #[test]
+    fn v2_strict_errors_are_distinct_codes() {
+        let (_, e) = decode_err(r#"{"v":2,"op":"noop"}"#);
+        assert_eq!(e.code, ErrorCode::UnknownOp);
+        let (_, e) = decode_err(r#"{"v":2,"op":"generate"}"#);
+        assert_eq!(e.code, ErrorCode::MissingField);
+        let (_, e) = decode_err(r#"{"v":2,"op":"generate","prompt":"x","policy":"wat"}"#);
+        assert_eq!(e.code, ErrorCode::BadPolicy);
+        let (_, e) = decode_err(r#"{"v":2,"op":"generate","prompt":"x","bogus":1}"#);
+        assert_eq!(e.code, ErrorCode::BadField);
+        let (_, e) = decode_err(r#"{"v":2,"op":"generate","prompt":"x","stop":""}"#);
+        assert_eq!(e.code, ErrorCode::EmptyStop);
+        let (_, e) = decode_err(r#"{"v":2,"op":"generate","prompt":"x","n_gen":0}"#);
+        assert_eq!(e.code, ErrorCode::BadField);
+        let (_, e) = decode_err(r#"{"v":2,"op":"generate","prompt":"x","n_gen":1.5}"#);
+        assert_eq!(e.code, ErrorCode::BadField);
+        let (_, e) = decode_err(r#"{"v":2}"#);
+        assert_eq!(e.code, ErrorCode::MissingField);
+        let (_, e) = decode_err(r#"{"v":3,"op":"ping"}"#);
+        assert_eq!(e.code, ErrorCode::BadVersion);
+        let (_, e) = decode_err("not json at all");
+        assert_eq!(e.code, ErrorCode::BadJson);
+        let (_, e) = decode_err(r#"{"v":2,"op":"batch_generate","items":[]}"#);
+        assert_eq!(e.code, ErrorCode::EmptyBatch);
+        let (_, e) = decode_err(
+            r#"{"v":2,"op":"session_append","session":1,"prompt":"x","policy":"float"}"#,
+        );
+        assert_eq!(e.code, ErrorCode::BadField);
+        let (_, e) = decode_err(r#"{"v":2,"op":"session_append","prompt":"x"}"#);
+        assert_eq!(e.code, ErrorCode::MissingField);
+    }
+
+    #[test]
+    fn v2_batch_decodes_items() {
+        let (proto, req) = decode_ok(
+            r#"{"v":2,"op":"batch_generate","items":[
+                {"prompt":"a","n_gen":2},
+                {"prompt":"b","policy":"kivi-2","priority":3}]}"#,
+        );
+        assert_eq!(proto, Proto::V2);
+        match req {
+            ApiRequest::BatchGenerate { items } => {
+                assert_eq!(items.len(), 2);
+                assert_eq!(items[0].prompt, "a");
+                assert_eq!(items[0].n_gen, 2);
+                assert_eq!(items[1].policy.as_ref().unwrap().name, "KIVI-2bit");
+                assert_eq!(items[1].priority, 3);
+            }
+            other => panic!("wrong request {other:?}"),
+        }
+    }
+
+    #[test]
+    fn v2_session_ops_decode() {
+        let (_, req) = decode_ok(r#"{"v":2,"op":"session_open","policy":"kivi-2"}"#);
+        match req {
+            ApiRequest::SessionOpen { policy } => {
+                assert_eq!(policy.unwrap().name, "KIVI-2bit")
+            }
+            other => panic!("{other:?}"),
+        }
+        let (_, req) =
+            decode_ok(r#"{"v":2,"op":"session_append","session":7,"prompt":"x"}"#);
+        assert!(
+            matches!(req, ApiRequest::SessionAppend { session: 7, .. }),
+            "{req:?}"
+        );
+        let (_, req) = decode_ok(r#"{"v":2,"op":"session_close","session":7}"#);
+        assert_eq!(req, ApiRequest::SessionClose { session: 7 });
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let reqs = vec![
+            ApiRequest::Ping,
+            ApiRequest::Stats,
+            ApiRequest::Pool,
+            ApiRequest::Policies { policy: Some("kivi-2".into()) },
+            ApiRequest::Generate(GenerateSpec {
+                prompt: "hello".into(),
+                n_gen: 8,
+                policy: Some(QuantPolicy::kivi(N, 2)),
+                sampling: SamplingParams { temperature: 0.5, top_k: 4 },
+                stop: Some(". ".into()),
+                priority: -2,
+                stream: true,
+            }),
+            ApiRequest::BatchGenerate {
+                items: vec![
+                    GenerateSpec { prompt: "a".into(), ..Default::default() },
+                    GenerateSpec {
+                        prompt: "b".into(),
+                        policy: Some(QuantPolicy::float32(N)),
+                        ..Default::default()
+                    },
+                ],
+            },
+            ApiRequest::SessionOpen { policy: Some(QuantPolicy::asymkv21(N, 3, 1)) },
+            ApiRequest::SessionAppend {
+                session: 42,
+                spec: GenerateSpec { prompt: "turn".into(), ..Default::default() },
+            },
+            ApiRequest::SessionClose { session: 42 },
+        ];
+        for req in reqs {
+            let wire = encode_request(&req).to_string();
+            let (proto, back) = decode_request(&wire, N)
+                .unwrap_or_else(|de| panic!("{wire}: {}", de.error));
+            assert_eq!(proto, Proto::V2, "{wire}");
+            assert_eq!(back, req, "{wire}");
+        }
+    }
+
+    #[test]
+    fn error_framing_per_proto() {
+        let e = ApiError::missing_field("prompt");
+        let v1 = encode_response(&ApiResponse::Error(e.clone()), Proto::V1);
+        assert_eq!(v1.get("error").as_str(), Some("missing 'prompt'"));
+        assert!(v1.get("v").as_f64().is_none());
+        let v2 = encode_response(&ApiResponse::Error(e), Proto::V2);
+        assert_eq!(v2.get("v").as_i64(), Some(2));
+        assert_eq!(v2.get("error").get("code").as_str(), Some("missing_field"));
+        assert_eq!(
+            v2.get("error").get("message").as_str(),
+            Some("missing 'prompt'")
+        );
+    }
+
+    #[test]
+    fn generation_framing_per_proto() {
+        let g = GenerationResult {
+            id: 3,
+            text: "ab".into(),
+            tokens: vec![97, 98],
+            ttft_s: 0.1,
+            total_s: 0.2,
+            error: None,
+        };
+        let v1 = encode_response(&ApiResponse::Generation(g.clone()), Proto::V1);
+        assert_eq!(v1.get("id").as_i64(), Some(3));
+        assert_eq!(v1.get("text").as_str(), Some("ab"));
+        assert_eq!(v1.get("tokens").as_arr().unwrap().len(), 2);
+        assert!(v1.get("v").as_f64().is_none(), "v1 replies carry no version");
+        let v2 = encode_response(&ApiResponse::Generation(g), Proto::V2);
+        assert_eq!(v2.get("v").as_i64(), Some(2));
+    }
+}

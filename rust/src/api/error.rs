@@ -1,0 +1,139 @@
+//! Structured API error taxonomy.
+//!
+//! Every failure the serving front end can report maps to a stable
+//! [`ErrorCode`] string plus a human-readable message. v2 clients receive
+//! `{"error":{"code":...,"message":...}}`; the v1 compat shim flattens the
+//! same error to the legacy `{"error":"<message>"}` string form.
+
+use std::fmt;
+
+/// Stable machine-readable error codes of the v2 wire protocol.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// The line was not valid JSON (or not a JSON object).
+    BadJson,
+    /// The `v` field named a protocol version this server does not speak.
+    BadVersion,
+    /// The `op` field named no known operation.
+    UnknownOp,
+    /// A required field is absent.
+    MissingField,
+    /// A field is present but has the wrong type, range, or is unknown.
+    BadField,
+    /// A policy string failed to parse.
+    BadPolicy,
+    /// A policy parsed but names bit variants outside the artifact grid.
+    UnsupportedPolicy,
+    /// A `stop` sequence was present but empty.
+    EmptyStop,
+    /// A batch submit carried no items.
+    EmptyBatch,
+    /// The named session does not exist (never opened, closed, or evicted).
+    UnknownSession,
+    /// The session already has a turn in flight.
+    SessionBusy,
+    /// A server-side capacity limit (session table, cache pool) was hit.
+    Capacity,
+    /// The engine/coordinator failed while executing the request.
+    Engine,
+    /// Anything that should not happen.
+    Internal,
+}
+
+impl ErrorCode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ErrorCode::BadJson => "bad_json",
+            ErrorCode::BadVersion => "bad_version",
+            ErrorCode::UnknownOp => "unknown_op",
+            ErrorCode::MissingField => "missing_field",
+            ErrorCode::BadField => "bad_field",
+            ErrorCode::BadPolicy => "bad_policy",
+            ErrorCode::UnsupportedPolicy => "unsupported_policy",
+            ErrorCode::EmptyStop => "empty_stop",
+            ErrorCode::EmptyBatch => "empty_batch",
+            ErrorCode::UnknownSession => "unknown_session",
+            ErrorCode::SessionBusy => "session_busy",
+            ErrorCode::Capacity => "capacity",
+            ErrorCode::Engine => "engine",
+            ErrorCode::Internal => "internal",
+        }
+    }
+}
+
+impl fmt::Display for ErrorCode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// A typed protocol error: stable code + human-readable message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ApiError {
+    pub code: ErrorCode,
+    pub message: String,
+}
+
+impl ApiError {
+    pub fn new(code: ErrorCode, message: impl Into<String>) -> Self {
+        Self { code, message: message.into() }
+    }
+
+    pub fn bad_json(message: impl Into<String>) -> Self {
+        Self::new(ErrorCode::BadJson, message)
+    }
+
+    pub fn unknown_op(op: &str) -> Self {
+        Self::new(ErrorCode::UnknownOp, format!("unknown op '{op}'"))
+    }
+
+    pub fn missing_field(name: &str) -> Self {
+        Self::new(ErrorCode::MissingField, format!("missing '{name}'"))
+    }
+
+    pub fn bad_field(name: &str, why: &str) -> Self {
+        Self::new(ErrorCode::BadField, format!("field '{name}': {why}"))
+    }
+
+    pub fn empty_stop() -> Self {
+        Self::new(ErrorCode::EmptyStop, "stop sequence must be non-empty")
+    }
+
+    pub fn unknown_session(id: u64) -> Self {
+        Self::new(ErrorCode::UnknownSession, format!("unknown session {id}"))
+    }
+
+    pub fn session_busy(id: u64) -> Self {
+        Self::new(
+            ErrorCode::SessionBusy,
+            format!("session {id} has a turn in flight"),
+        )
+    }
+
+    pub fn engine(message: impl Into<String>) -> Self {
+        Self::new(ErrorCode::Engine, message)
+    }
+}
+
+impl fmt::Display for ApiError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.code, self.message)
+    }
+}
+
+impl std::error::Error for ApiError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_are_stable_strings() {
+        assert_eq!(ErrorCode::BadJson.as_str(), "bad_json");
+        assert_eq!(ErrorCode::UnknownSession.as_str(), "unknown_session");
+        assert_eq!(
+            ApiError::missing_field("prompt").to_string(),
+            "missing_field: missing 'prompt'"
+        );
+    }
+}

@@ -1,0 +1,33 @@
+//! The typed, versioned serving API.
+//!
+//! This module defines the client-facing protocol as Rust types and owns
+//! every conversion between those types and the JSON-lines wire form:
+//!
+//! * [`types`] — [`ApiRequest`] / [`ApiResponse`] enums with one variant
+//!   per operation, plus the structured result/report types.
+//! * [`error`] — the [`ApiError`] taxonomy with stable [`ErrorCode`]s
+//!   (unknown op, missing prompt, bad policy, … are distinct codes, never
+//!   silent defaults).
+//! * [`codec`] — strict v2 decode/encode plus the lenient v1 compat shim;
+//!   hand-rolled over `util::json` (no serde in the vendor set).
+//! * [`session`] — multi-turn sessions holding a pinned `SeqCache` across
+//!   requests (KV reuse instead of re-prefill, with idle eviction).
+//!
+//! The TCP front end in [`crate::server`] is a thin transport over this
+//! module. Wire-level documentation lives in `docs/API.md`.
+
+pub mod codec;
+pub mod error;
+pub mod session;
+pub mod types;
+
+pub use codec::{
+    decode_request, encode_request, encode_response, DecodeError, Proto,
+    PROTOCOL_VERSION,
+};
+pub use error::{ApiError, ErrorCode};
+pub use session::{SessionConfig, SessionManager};
+pub use types::{
+    ApiRequest, ApiResponse, GenerateSpec, GenerationResult, PolicyInfo,
+    PolicyReport, PoolReport, SessionTurn,
+};

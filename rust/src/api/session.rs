@@ -1,0 +1,235 @@
+//! Multi-turn sessions: a live, pinned `SeqCache` held across requests so a
+//! conversation's second turn only prefills the new tokens instead of
+//! re-prefilling the whole history (the serving payoff KIVI and "Cache Me
+//! If You Must" frame KV-cache quantization around).
+//!
+//! A session owns one pinned pool sequence for its whole life. Each
+//! `session_append` submits a normal coordinator request that *reuses* that
+//! sequence (`Request::session_seq`), so turns batch with ordinary traffic
+//! under the policy-homogeneous scheduler. Idle sessions are evicted
+//! lazily — the server sweeps the table on EVERY request, session or not —
+//! so an abandoned conversation cannot pin cache budget forever as long as
+//! any traffic flows. A failed turn evicts its session: the retained KV
+//! state is indeterminate after a mid-turn engine error, and a retry
+//! against it would condition later turns on duplicated history.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::Coordinator;
+use crate::quant::QuantPolicy;
+
+use super::error::{ApiError, ErrorCode};
+use super::types::{GenerateSpec, GenerationResult, SessionTurn};
+
+#[derive(Debug, Clone)]
+pub struct SessionConfig {
+    /// Sessions idle this long are evicted (their cache freed). Zero
+    /// disables eviction.
+    pub idle_timeout: Duration,
+    /// Hard cap on concurrently open sessions.
+    pub max_sessions: usize,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        Self { idle_timeout: Duration::from_secs(300), max_sessions: 64 }
+    }
+}
+
+struct SessionState {
+    seq_id: u64,
+    policy: QuantPolicy,
+    turns: usize,
+    last_used: Instant,
+    /// A turn is in flight; concurrent appends are rejected and the
+    /// eviction sweep must not free the sequence under the scheduler.
+    busy: bool,
+}
+
+pub struct SessionManager {
+    coord: Arc<Coordinator>,
+    cfg: SessionConfig,
+    next_id: AtomicU64,
+    inner: Mutex<BTreeMap<u64, SessionState>>,
+}
+
+impl SessionManager {
+    pub fn new(coord: Arc<Coordinator>, cfg: SessionConfig) -> Self {
+        Self {
+            coord,
+            cfg,
+            next_id: AtomicU64::new(1),
+            inner: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Live session count.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Open a session under `policy` (default float), allocating + pinning
+    /// its pool sequence. Returns (session id, resolved policy name).
+    pub fn open(&self, policy: Option<QuantPolicy>) -> Result<(u64, String), ApiError> {
+        let engine = self.coord.engine();
+        let policy = policy.unwrap_or_else(|| {
+            QuantPolicy::float32(engine.manifest().n_layers)
+        });
+        engine
+            .manifest()
+            .supports_policy(&policy)
+            .map_err(|e| ApiError::new(ErrorCode::UnsupportedPolicy, format!("{e:#}")))?;
+        let seq_id = engine
+            .create_session_seq(&policy)
+            .map_err(|e| ApiError::new(ErrorCode::Capacity, format!("{e:#}")))?;
+        // cap check and insert under ONE lock acquisition: a check-then-
+        // insert race would let concurrent opens exceed the hard cap
+        let session = {
+            let mut m = self.inner.lock().unwrap();
+            if m.len() >= self.cfg.max_sessions {
+                drop(m);
+                let _ = engine.release_session_seq(seq_id);
+                return Err(ApiError::new(
+                    ErrorCode::Capacity,
+                    format!("session table full ({} max)", self.cfg.max_sessions),
+                ));
+            }
+            let session = self.next_id.fetch_add(1, Ordering::SeqCst);
+            m.insert(
+                session,
+                SessionState {
+                    seq_id,
+                    policy: policy.clone(),
+                    turns: 0,
+                    last_used: Instant::now(),
+                    busy: false,
+                },
+            );
+            session
+        };
+        self.coord.note_session_opened();
+        Ok((session, policy.name))
+    }
+
+    /// Run one turn: prefill only `spec.prompt` on the retained sequence,
+    /// then decode `n_gen` tokens. Blocks until the turn completes.
+    pub fn append(
+        &self,
+        session: u64,
+        req_id: u64,
+        spec: &GenerateSpec,
+    ) -> Result<SessionTurn, ApiError> {
+        // validate before taking the busy flag: in-process callers can
+        // bypass the wire codec's own empty-stop rejection
+        if spec.stop.as_deref() == Some("") {
+            return Err(ApiError::empty_stop());
+        }
+        let (seq_id, policy) = {
+            let mut m = self.inner.lock().unwrap();
+            let st = m
+                .get_mut(&session)
+                .ok_or_else(|| ApiError::unknown_session(session))?;
+            if st.busy {
+                return Err(ApiError::session_busy(session));
+            }
+            st.busy = true;
+            st.last_used = Instant::now();
+            (st.seq_id, st.policy.clone())
+        };
+
+        // policy was grid-validated at session_open; no re-check needed
+        let mut req = spec.to_request(req_id, policy);
+        req.session_seq = Some(seq_id);
+        let resp = self.coord.submit_wait(req);
+
+        if let Some(msg) = &resp.error {
+            // a failed turn leaves the retained KV state indeterminate
+            // (the prompt may be partially resident), so the session
+            // cannot safely continue — evict it rather than let retries
+            // condition later turns on duplicated history
+            let seq = {
+                let mut m = self.inner.lock().unwrap();
+                m.remove(&session).map(|st| st.seq_id)
+            };
+            if let Some(seq) = seq {
+                let _ = self.coord.engine().release_session_seq(seq);
+                self.coord.note_session_evicted();
+            }
+            return Err(ApiError::engine(format!(
+                "turn failed (session {session} closed): {msg}"
+            )));
+        }
+        let pos = self.coord.engine().seq_pos(seq_id).unwrap_or(0);
+
+        let turn = {
+            let mut m = self.inner.lock().unwrap();
+            match m.get_mut(&session) {
+                Some(st) => {
+                    st.busy = false;
+                    st.turns += 1;
+                    st.last_used = Instant::now();
+                    st.turns
+                }
+                // unreachable: busy sessions are never evicted/closed
+                None => 0,
+            }
+        };
+        Ok(SessionTurn {
+            session,
+            turn,
+            pos,
+            result: GenerationResult::from_response(resp),
+        })
+    }
+
+    /// Close a session, unpinning and freeing its sequence.
+    /// Returns (turns served, final cache position).
+    pub fn close(&self, session: u64) -> Result<(usize, usize), ApiError> {
+        let st = {
+            let mut m = self.inner.lock().unwrap();
+            match m.get(&session) {
+                None => return Err(ApiError::unknown_session(session)),
+                Some(s) if s.busy => return Err(ApiError::session_busy(session)),
+                Some(_) => m.remove(&session).unwrap(),
+            }
+        };
+        let pos = self.coord.engine().seq_pos(st.seq_id).unwrap_or(0);
+        let _ = self.coord.engine().release_session_seq(st.seq_id);
+        self.coord.note_session_closed();
+        Ok((st.turns, pos))
+    }
+
+    /// Evict sessions idle past the configured timeout. Lazy: the server
+    /// invokes this once per request it handles (the single sweep point —
+    /// open/append don't re-sweep), so any traffic reclaims abandoned
+    /// sessions without a background thread. In-process users driving the
+    /// manager directly should call it themselves on their own cadence.
+    pub fn sweep_idle(&self) {
+        let ttl = self.cfg.idle_timeout;
+        if ttl.is_zero() {
+            return;
+        }
+        let victims: Vec<u64> = {
+            let mut m = self.inner.lock().unwrap();
+            let dead: Vec<u64> = m
+                .iter()
+                .filter(|(_, s)| !s.busy && s.last_used.elapsed() >= ttl)
+                .map(|(&id, _)| id)
+                .collect();
+            dead.into_iter()
+                .map(|id| m.remove(&id).unwrap().seq_id)
+                .collect()
+        };
+        for seq_id in victims {
+            let _ = self.coord.engine().release_session_seq(seq_id);
+            self.coord.note_session_evicted();
+        }
+    }
+}

@@ -1,0 +1,191 @@
+//! The serving protocol as Rust types.
+//!
+//! [`ApiRequest`] / [`ApiResponse`] are the single source of truth for what
+//! the server understands; the wire form (JSON-lines, v1 and v2 framings)
+//! lives entirely in [`super::codec`]. Nothing outside `api` should poke at
+//! raw `util::json::Value` fields of a protocol line.
+
+use crate::coordinator::{MetricsSnapshot, Request, Response};
+use crate::engine::SamplingParams;
+use crate::kvcache::{PoolStats, PrefixStats};
+use crate::model::ByteTokenizer;
+use crate::quant::QuantPolicy;
+
+use super::error::ApiError;
+
+/// One generation work item: shared by `generate`, `batch_generate` items
+/// and `session_append` (where `policy`/`stream` are not allowed).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GenerateSpec {
+    pub prompt: String,
+    pub n_gen: usize,
+    /// None = server default (`float`); fixed per session for appends.
+    pub policy: Option<QuantPolicy>,
+    pub sampling: SamplingParams,
+    /// Multi-byte stop sequence (validated non-empty by the codec).
+    pub stop: Option<String>,
+    pub priority: i32,
+    /// Stream one token line per produced token (only on `generate`).
+    pub stream: bool,
+}
+
+impl Default for GenerateSpec {
+    fn default() -> Self {
+        Self {
+            prompt: String::new(),
+            n_gen: 16,
+            policy: None,
+            sampling: SamplingParams::greedy(),
+            stop: None,
+            priority: 0,
+            stream: false,
+        }
+    }
+}
+
+impl GenerateSpec {
+    /// Lower to a coordinator [`Request`]: tokenize the prompt, encode the
+    /// stop sequence, carry sampling/priority. The single lowering shared
+    /// by the one-shot, batch and session paths — policy resolution and
+    /// validation stay with the caller (sessions fix theirs at open).
+    pub fn to_request(&self, id: u64, policy: QuantPolicy) -> Request {
+        let tok = ByteTokenizer;
+        let mut req =
+            Request::greedy(id, tok.encode_str(&self.prompt), self.n_gen, policy);
+        req.sampling = self.sampling;
+        req.priority = self.priority;
+        if let Some(s) = &self.stop {
+            req.stop_seq = tok.encode_str(s);
+        }
+        req
+    }
+}
+
+/// Every operation a client can request, fully decoded and validated.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ApiRequest {
+    Ping,
+    Stats,
+    Pool,
+    /// List supported policy specs, or validate one (`policy` probe).
+    Policies { policy: Option<String> },
+    Generate(GenerateSpec),
+    BatchGenerate { items: Vec<GenerateSpec> },
+    SessionOpen { policy: Option<QuantPolicy> },
+    SessionAppend { session: u64, spec: GenerateSpec },
+    SessionClose { session: u64 },
+}
+
+impl ApiRequest {
+    /// Canonical op name (the `"op"` wire field).
+    pub fn op(&self) -> &'static str {
+        match self {
+            ApiRequest::Ping => "ping",
+            ApiRequest::Stats => "stats",
+            ApiRequest::Pool => "pool",
+            ApiRequest::Policies { .. } => "policies",
+            ApiRequest::Generate(_) => "generate",
+            ApiRequest::BatchGenerate { .. } => "batch_generate",
+            ApiRequest::SessionOpen { .. } => "session_open",
+            ApiRequest::SessionAppend { .. } => "session_append",
+            ApiRequest::SessionClose { .. } => "session_close",
+        }
+    }
+}
+
+/// Outcome of one generation (also the per-item shape of a batch reply).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GenerationResult {
+    pub id: u64,
+    pub text: String,
+    pub tokens: Vec<i32>,
+    pub ttft_s: f64,
+    pub total_s: f64,
+    /// Set when this item failed; the success fields are then empty/zero.
+    pub error: Option<ApiError>,
+}
+
+impl GenerationResult {
+    pub fn failed(id: u64, error: ApiError) -> Self {
+        Self {
+            id,
+            text: String::new(),
+            tokens: Vec::new(),
+            ttft_s: 0.0,
+            total_s: 0.0,
+            error: Some(error),
+        }
+    }
+
+    /// Lift a coordinator [`Response`] into the API result type.
+    pub fn from_response(resp: Response) -> Self {
+        if let Some(msg) = resp.error {
+            return Self::failed(resp.id, ApiError::engine(msg));
+        }
+        let tok = ByteTokenizer;
+        Self {
+            id: resp.id,
+            text: tok.decode_lossy(&resp.tokens),
+            tokens: resp.tokens,
+            ttft_s: resp.timing.ttft_s,
+            total_s: resp.timing.total_s,
+            error: None,
+        }
+    }
+}
+
+/// One completed session turn.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionTurn {
+    pub session: u64,
+    /// 1-based turn counter.
+    pub turn: usize,
+    /// Tokens held in the session's KV cache after this turn.
+    pub pos: usize,
+    pub result: GenerationResult,
+}
+
+/// Cache-pool introspection (the `pool` op).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PoolReport {
+    pub pool: PoolStats,
+    pub prefix: Option<PrefixStats>,
+    /// Live sessions currently pinning a sequence.
+    pub sessions: usize,
+}
+
+/// One supported policy, expanded server-side (the `policies` op).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PolicyInfo {
+    pub name: String,
+    pub k_bits: Vec<u8>,
+    pub v_bits: Vec<u8>,
+    pub bytes_per_token: usize,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct PolicyReport {
+    pub n_layers: usize,
+    /// (k_bits, v_bits) layer variants lowered into the artifact grid.
+    pub grid: Vec<(u8, u8)>,
+    /// Accepted policy spec grammars.
+    pub specs: Vec<String>,
+    /// Expanded, grid-validated policies (all of them for a listing; the
+    /// single probed one for a `policy` validation probe).
+    pub policies: Vec<PolicyInfo>,
+}
+
+/// Every reply the server can emit (one JSON line each, see the codec).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ApiResponse {
+    Pong,
+    Stats(MetricsSnapshot),
+    Pool(PoolReport),
+    Policies(PolicyReport),
+    Generation(GenerationResult),
+    Batch(Vec<GenerationResult>),
+    SessionOpened { session: u64, policy: String },
+    SessionResult(SessionTurn),
+    SessionClosed { session: u64, turns: usize, pos: usize },
+    Error(ApiError),
+}

@@ -14,6 +14,11 @@ struct Inner {
     requests_failed: u64,
     tokens_generated: u64,
     prefill_tokens: u64,
+    batch_requests: u64,
+    batch_items: u64,
+    sessions_opened: u64,
+    sessions_closed: u64,
+    sessions_evicted: u64,
     batch_sizes: Vec<f64>,
     queue_s: Vec<f64>,
     ttft_s: Vec<f64>,
@@ -51,6 +56,25 @@ impl Metrics {
         self.inner.lock().unwrap().prefill_tokens += tokens as u64;
     }
 
+    /// One `batch_generate` submit of `items` work items.
+    pub fn record_batch_submit(&self, items: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.batch_requests += 1;
+        m.batch_items += items as u64;
+    }
+
+    pub fn record_session_opened(&self) {
+        self.inner.lock().unwrap().sessions_opened += 1;
+    }
+
+    pub fn record_session_closed(&self) {
+        self.inner.lock().unwrap().sessions_closed += 1;
+    }
+
+    pub fn record_session_evicted(&self) {
+        self.inner.lock().unwrap().sessions_evicted += 1;
+    }
+
     pub fn record_decode_step(&self, batch: usize, dt_s: f64) {
         let mut m = self.inner.lock().unwrap();
         m.batch_sizes.push(batch as f64);
@@ -66,6 +90,11 @@ impl Metrics {
             requests_failed: m.requests_failed,
             tokens_generated: m.tokens_generated,
             prefill_tokens: m.prefill_tokens,
+            batch_requests: m.batch_requests,
+            batch_items: m.batch_items,
+            sessions_opened: m.sessions_opened,
+            sessions_closed: m.sessions_closed,
+            sessions_evicted: m.sessions_evicted,
             throughput_tok_s: if elapsed > 0.0 {
                 m.tokens_generated as f64 / elapsed
             } else {
@@ -82,13 +111,18 @@ impl Metrics {
     }
 }
 
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct MetricsSnapshot {
     pub elapsed_s: f64,
     pub requests_completed: u64,
     pub requests_failed: u64,
     pub tokens_generated: u64,
     pub prefill_tokens: u64,
+    pub batch_requests: u64,
+    pub batch_items: u64,
+    pub sessions_opened: u64,
+    pub sessions_closed: u64,
+    pub sessions_evicted: u64,
     pub throughput_tok_s: f64,
     pub mean_batch: f64,
     pub queue_p50_s: f64,
@@ -107,6 +141,11 @@ impl MetricsSnapshot {
             ("requests_failed", Value::num(self.requests_failed as f64)),
             ("tokens_generated", Value::num(self.tokens_generated as f64)),
             ("prefill_tokens", Value::num(self.prefill_tokens as f64)),
+            ("batch_requests", Value::num(self.batch_requests as f64)),
+            ("batch_items", Value::num(self.batch_items as f64)),
+            ("sessions_opened", Value::num(self.sessions_opened as f64)),
+            ("sessions_closed", Value::num(self.sessions_closed as f64)),
+            ("sessions_evicted", Value::num(self.sessions_evicted as f64)),
             ("throughput_tok_s", Value::num(self.throughput_tok_s)),
             ("mean_batch", Value::num(self.mean_batch)),
             ("queue_p50_s", Value::num(self.queue_p50_s)),
@@ -138,10 +177,19 @@ mod tests {
         );
         m.record_failure();
         m.record_decode_step(4, 0.01);
+        m.record_batch_submit(3);
+        m.record_session_opened();
+        m.record_session_opened();
+        m.record_session_closed();
+        m.record_session_evicted();
         let s = m.snapshot();
         assert_eq!(s.requests_completed, 2);
         assert_eq!(s.requests_failed, 1);
         assert_eq!(s.tokens_generated, 6);
+        assert_eq!((s.batch_requests, s.batch_items), (1, 3));
+        assert_eq!(s.sessions_opened, 2);
+        assert_eq!(s.sessions_closed, 1);
+        assert_eq!(s.sessions_evicted, 1);
         assert!((s.queue_p50_s - 0.2).abs() < 1e-9);
         assert!(s.throughput_tok_s > 0.0);
         let j = s.to_json();

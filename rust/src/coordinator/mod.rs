@@ -78,6 +78,25 @@ impl Coordinator {
         self.shared.metrics.snapshot()
     }
 
+    // Serving-layer counters (recorded by the api subsystem, which owns
+    // batch fan-out and the session table but not the metrics registry).
+
+    pub fn note_batch_submit(&self, items: usize) {
+        self.shared.metrics.record_batch_submit(items);
+    }
+
+    pub fn note_session_opened(&self) {
+        self.shared.metrics.record_session_opened();
+    }
+
+    pub fn note_session_closed(&self) {
+        self.shared.metrics.record_session_closed();
+    }
+
+    pub fn note_session_evicted(&self) {
+        self.shared.metrics.record_session_evicted();
+    }
+
     pub fn engine(&self) -> &Arc<Engine> {
         &self.shared.engine
     }

@@ -17,11 +17,17 @@ pub struct Request {
     pub n_gen: usize,
     pub policy: QuantPolicy,
     pub sampling: SamplingParams,
-    /// stop early when this token is produced (e.g. b'.'), if set
-    pub stop_token: Option<i32>,
+    /// stop early once the generated tail equals this token sequence
+    /// (empty = never); multi-byte stop strings arrive here whole
+    pub stop_seq: Vec<i32>,
     /// scheduling priority; higher runs first
     pub priority: i32,
     pub seed: u64,
+    /// pre-allocated (pinned) pool sequence to generate on. Set for
+    /// session turns: the scheduler skips allocation, prefills only this
+    /// request's prompt on top of the retained KV state, and does NOT free
+    /// the sequence on completion.
+    pub session_seq: Option<u64>,
     /// per-token streaming callback (None = only the final response)
     pub on_token: Option<TokenSink>,
 }
@@ -46,9 +52,10 @@ impl Request {
             n_gen,
             policy,
             sampling: SamplingParams::greedy(),
-            stop_token: None,
+            stop_seq: Vec::new(),
             priority: 0,
             seed: id,
+            session_seq: None,
             on_token: None,
         }
     }
@@ -140,8 +147,8 @@ impl InFlight {
 
     pub fn done(&self) -> bool {
         self.generated.len() >= self.req.n_gen
-            || (self.req.stop_token.is_some()
-                && self.generated.last() == self.req.stop_token.as_ref())
+            || (!self.req.stop_seq.is_empty()
+                && self.generated.ends_with(&self.req.stop_seq))
     }
 }
 
@@ -176,10 +183,13 @@ mod tests {
         inf.generated = vec![10, 11];
         assert!(inf.done());
 
+        // multi-token stop sequence: only the exact tail terminates
         let mut req2 = Request::greedy(2, vec![65], 10, QuantPolicy::float32(1));
-        req2.stop_token = Some(46);
+        req2.stop_seq = vec![10, 46];
         let mut inf2 = InFlight::new(req2, ResponseHandle::new());
         inf2.generated = vec![9, 46];
+        assert!(!inf2.done(), "suffix mismatch must not stop");
+        inf2.generated = vec![9, 10, 46];
         assert!(inf2.done());
     }
 }

@@ -166,7 +166,9 @@ pub(super) fn run_scheduler(shared: Arc<Shared>) {
                 if inf.handle.try_get().is_none() {
                     complete(&shared, inf);
                 } else if let Some(id) = inf.seq_id {
-                    let _ = shared.engine.free_seq(id);
+                    if inf.req.session_seq.is_none() {
+                        let _ = shared.engine.free_seq(id);
+                    }
                 }
             } else {
                 i += 1;
@@ -197,6 +199,46 @@ fn prefill_group(
             requeue.push(inf); // preserve order behind the first bounce
             continue;
         }
+        // Context-budget admission check for EVERY request: a request
+        // appends prompt + n_gen tokens (prefill + one per decode step)
+        // and the engine has no decode-time bound — admitting an
+        // over-budget request would panic the scheduler on "quantized
+        // region full" mid-decode. Sessions make this routine (history
+        // accumulates across turns); huge n_gen makes it reachable even
+        // on a fresh sequence.
+        let held = match inf.req.session_seq {
+            Some(id) => match shared.engine.seq_pos(id) {
+                Ok(pos) => pos,
+                Err(_) => {
+                    fail(shared, &mut inf, &format!("unknown session sequence {id}"));
+                    continue;
+                }
+            },
+            None => 0,
+        };
+        let m = shared.engine.manifest();
+        // max(1) keeps this at least as strict as the engine's own
+        // prefill check (held + len + 1), which bails whole batches
+        let need = inf.req.prompt.len() + inf.req.n_gen.max(1);
+        if held + need > m.max_ctx + m.residual {
+            fail(
+                shared,
+                &mut inf,
+                &format!(
+                    "context budget exhausted: {held} held + {need} for this \
+                     request exceed T={} R={}",
+                    m.max_ctx, m.residual
+                ),
+            );
+            continue;
+        }
+        // session turns ride on a pre-allocated pinned sequence: no
+        // allocation, no backpressure, and never freed by the scheduler
+        if let Some(id) = inf.req.session_seq {
+            inf.seq_id = Some(id);
+            admitted.push(inf);
+            continue;
+        }
         match shared.engine.create_seq(&inf.req.policy) {
             Ok(id) => {
                 inf.seq_id = Some(id);
@@ -220,30 +262,64 @@ fn prefill_group(
         return (Vec::new(), requeue);
     }
 
-    let ids: Vec<u64> = admitted.iter().map(|i| i.seq_id.unwrap()).collect();
+    // Session turns are isolated from ordinary requests: (a) the prefix
+    // cache must never see them — a turn's prompt is only the delta text,
+    // so a restore would clobber the retained KV history and a snapshot
+    // would poison the cache — and (b) the engine fails a prefill batch
+    // as a whole, so one oversized ordinary prompt must not sink (and
+    // thereby evict) an innocent session. Mixed groups therefore always
+    // prefill in two engine calls, cache or no cache. Session-vs-session
+    // interference within the session half is pre-empted by the context
+    // check at admission above.
+    let any_session = admitted.iter().any(|i| i.req.session_seq.is_some());
+    let all_session = admitted.iter().all(|i| i.req.session_seq.is_some());
+    if any_session && !all_session {
+        let (sess_group, other_group): (Vec<InFlight>, Vec<InFlight>) = admitted
+            .into_iter()
+            .partition(|i| i.req.session_seq.is_some());
+        let mut done = prefill_subset(shared, sess_group, false);
+        done.extend(prefill_subset(shared, other_group, true));
+        return (done, requeue);
+    }
+    let use_cache = !any_session;
+    (prefill_subset(shared, admitted, use_cache), requeue)
+}
+
+/// Prefill one policy-homogeneous group with a single engine call,
+/// assigning each request its first token. On engine error only THIS
+/// group's requests are failed. Returns the survivors.
+fn prefill_subset(
+    shared: &Arc<Shared>,
+    mut group: Vec<InFlight>,
+    use_cache: bool,
+) -> Vec<InFlight> {
+    if group.is_empty() {
+        return group;
+    }
+    let ids: Vec<u64> = group.iter().map(|i| i.seq_id.unwrap()).collect();
     let prompts: Vec<Vec<i32>> =
-        admitted.iter().map(|i| i.req.prompt.clone()).collect();
+        group.iter().map(|i| i.req.prompt.clone()).collect();
     let n_prompt: usize = prompts.iter().map(|p| p.len()).sum();
-    let prefill_result = match &shared.prefix_cache {
-        Some(pc) => shared.engine.prefill_cached(&ids, &prompts, pc),
-        None => shared.engine.prefill(&ids, &prompts),
+    let result = match &shared.prefix_cache {
+        Some(pc) if use_cache => shared.engine.prefill_cached(&ids, &prompts, pc),
+        _ => shared.engine.prefill(&ids, &prompts),
     };
-    match prefill_result {
+    match result {
         Ok(logits) => {
             shared.metrics.record_prefill(n_prompt);
             let now = Instant::now();
-            for (inf, l) in admitted.iter_mut().zip(&logits) {
+            for (inf, l) in group.iter_mut().zip(&logits) {
                 let tok = sample(l, &inf.req.sampling, &mut inf.rng);
                 inf.cur_token = Some(tok);
                 inf.first_token_at = Some(now);
             }
-            (admitted, requeue)
+            group
         }
         Err(e) => {
-            for mut inf in admitted.drain(..) {
+            for mut inf in group {
                 fail(shared, &mut inf, &format!("prefill failed: {e}"));
             }
-            (Vec::new(), requeue)
+            Vec::new()
         }
     }
 }
@@ -262,7 +338,10 @@ fn complete(shared: &Arc<Shared>, inf: InFlight) {
     };
     shared.metrics.record_completion(&timing, inf.generated.len());
     if let Some(id) = inf.seq_id {
-        let _ = shared.engine.free_seq(id);
+        // session sequences outlive the request (freed by session close)
+        if inf.req.session_seq.is_none() {
+            let _ = shared.engine.free_seq(id);
+        }
     }
     inf.handle.fulfill(Response {
         id: inf.req.id,
@@ -275,7 +354,9 @@ fn complete(shared: &Arc<Shared>, inf: InFlight) {
 fn fail(shared: &Arc<Shared>, inf: &mut InFlight, msg: &str) {
     shared.metrics.record_failure();
     if let Some(id) = inf.seq_id.take() {
-        let _ = shared.engine.free_seq(id);
+        if inf.req.session_seq.is_none() {
+            let _ = shared.engine.free_seq(id);
+        }
     }
     inf.handle.fulfill(Response {
         id: inf.req.id,

@@ -117,6 +117,27 @@ impl Engine {
         Ok(self.pool.free(id)?)
     }
 
+    /// Create a *pinned* sequence that outlives individual requests: the
+    /// scheduler's per-request free paths cannot reclaim it, so its KV
+    /// state accumulates across turns (the session substrate). Release
+    /// with [`Engine::release_session_seq`].
+    pub fn create_session_seq(&self, policy: &QuantPolicy) -> Result<u64> {
+        let id = self.create_seq(policy)?;
+        self.pool.pin(id)?;
+        Ok(id)
+    }
+
+    /// Unpin and free a session sequence.
+    pub fn release_session_seq(&self, id: u64) -> Result<()> {
+        self.pool.unpin(id)?;
+        Ok(self.pool.free(id)?)
+    }
+
+    /// Absolute position (tokens held) of a live sequence.
+    pub fn seq_pos(&self, id: u64) -> Result<usize> {
+        Ok(self.pool.with_seq(id, |s| s.pos)?)
+    }
+
     // -----------------------------------------------------------------
     // forward passes
     // -----------------------------------------------------------------

@@ -2,7 +2,7 @@
 //! budget, and tracks peak usage — the measurement substrate behind the
 //! paper's Fig. 4 (peak GPU memory vs quantization configuration).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Mutex;
 
 use super::layer::{CacheGeometry, LayerCache};
@@ -38,6 +38,8 @@ impl SeqCache {
 pub enum PoolError {
     BudgetExceeded { requested: usize, in_use: usize, budget: usize },
     UnknownSeq(u64),
+    /// The sequence is pinned (a live session holds it) and cannot be freed.
+    Pinned(u64),
 }
 
 impl std::fmt::Display for PoolError {
@@ -48,6 +50,9 @@ impl std::fmt::Display for PoolError {
                 "cache budget exceeded: requested {requested}B, in use {in_use}B, budget {budget}B"
             ),
             PoolError::UnknownSeq(id) => write!(f, "unknown sequence {id}"),
+            PoolError::Pinned(id) => {
+                write!(f, "sequence {id} is pinned (unpin before freeing)")
+            }
         }
     }
 }
@@ -66,6 +71,8 @@ pub struct CachePool {
 
 struct PoolInner {
     seqs: BTreeMap<u64, SeqCache>,
+    /// Sequences that refuse `free` until unpinned (session retention).
+    pinned: BTreeSet<u64>,
     next_id: u64,
     in_use: usize,
     peak: usize,
@@ -76,6 +83,7 @@ struct PoolInner {
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PoolStats {
     pub n_seqs: usize,
+    pub pinned_seqs: usize,
     pub in_use_bytes: usize,
     pub used_bytes: usize,
     pub peak_bytes: usize,
@@ -91,6 +99,7 @@ impl CachePool {
             budget_bytes,
             inner: Mutex::new(PoolInner {
                 seqs: BTreeMap::new(),
+                pinned: BTreeSet::new(),
                 next_id: 1,
                 in_use: 0,
                 peak: 0,
@@ -125,12 +134,38 @@ impl CachePool {
         Ok(id)
     }
 
-    /// Free a sequence's cache.
+    /// Free a sequence's cache. Pinned sequences are refused — unpin first.
     pub fn free(&self, id: u64) -> Result<(), PoolError> {
         let mut inner = self.inner.lock().unwrap();
-        let cache = inner.seqs.remove(&id).ok_or(PoolError::UnknownSeq(id))?;
+        if !inner.seqs.contains_key(&id) {
+            return Err(PoolError::UnknownSeq(id));
+        }
+        if inner.pinned.contains(&id) {
+            return Err(PoolError::Pinned(id));
+        }
+        let cache = inner.seqs.remove(&id).unwrap();
         inner.in_use -= cache.capacity_bytes();
         inner.total_frees += 1;
+        Ok(())
+    }
+
+    /// Pin a sequence: `free` will refuse it until `unpin`. Guards session
+    /// caches against the scheduler's per-request release paths.
+    pub fn pin(&self, id: u64) -> Result<(), PoolError> {
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.seqs.contains_key(&id) {
+            return Err(PoolError::UnknownSeq(id));
+        }
+        inner.pinned.insert(id);
+        Ok(())
+    }
+
+    pub fn unpin(&self, id: u64) -> Result<(), PoolError> {
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.seqs.contains_key(&id) {
+            return Err(PoolError::UnknownSeq(id));
+        }
+        inner.pinned.remove(&id);
         Ok(())
     }
 
@@ -175,6 +210,7 @@ impl CachePool {
         let inner = self.inner.lock().unwrap();
         PoolStats {
             n_seqs: inner.seqs.len(),
+            pinned_seqs: inner.pinned.len(),
             in_use_bytes: inner.in_use,
             used_bytes: inner.seqs.values().map(|c| c.used_bytes()).sum(),
             peak_bytes: inner.peak,
@@ -237,6 +273,27 @@ mod tests {
         // T=128 here), so the full 16x data ratio is diluted at this
         // tiny geometry; at the bench geometry (T>>R) the gap widens.
         assert!(cap_1 < cap_f / 2, "1-bit cache should be well below fp32");
+    }
+
+    #[test]
+    fn pinned_seq_refuses_free_until_unpinned() {
+        let pool = CachePool::new(geo(), usize::MAX);
+        let p = QuantPolicy::kivi(2, 2);
+        let id = pool.allocate(&p).unwrap();
+        pool.pin(id).unwrap();
+        assert_eq!(pool.stats().pinned_seqs, 1);
+        match pool.free(id) {
+            Err(PoolError::Pinned(got)) => assert_eq!(got, id),
+            other => panic!("expected Pinned, got {other:?}"),
+        }
+        // still allocated and accessible
+        assert_eq!(pool.stats().n_seqs, 1);
+        pool.with_seq(id, |c| c.pos).unwrap();
+        pool.unpin(id).unwrap();
+        assert_eq!(pool.stats().pinned_seqs, 0);
+        pool.free(id).unwrap();
+        assert_eq!(pool.stats().n_seqs, 0);
+        assert!(pool.pin(id).is_err(), "pin of freed seq must fail");
     }
 
     #[test]

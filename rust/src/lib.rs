@@ -13,10 +13,13 @@
 //!   dynamic batching, scheduling, a TCP server, analysis tooling and the
 //!   bench harnesses that regenerate every table and figure of the paper.
 //!
-//! Start with [`engine::Engine`] for single-process generation or
-//! [`coordinator::Coordinator`] for the batched serving front end.
+//! Start with [`engine::Engine`] for single-process generation,
+//! [`coordinator::Coordinator`] for the batched serving core, or
+//! [`server::Server`] + the typed [`api`] protocol (sessions, batch
+//! submit, policy management) for the network front end.
 
 pub mod analysis;
+pub mod api;
 pub mod coordinator;
 pub mod engine;
 pub mod evals;

@@ -96,7 +96,7 @@ fn serve(args: &asymkv::util::cli::Args) -> Result<()> {
     let coord = Coordinator::start(engine, cfg);
     let server = Arc::new(Server::bind(coord, args.get("addr"))?);
     println!("asymkv serving on {}", server.local_addr());
-    println!("protocol: one JSON object per line; see rust/src/server/mod.rs");
+    println!("protocol: JSON lines — typed v2 ops + v1 compat; see docs/API.md");
     server.serve()
 }
 

@@ -26,10 +26,17 @@ impl QuantPolicy {
     /// first `l_v` at `high` for V.
     pub fn asymkv(n_layers: usize, l_k: usize, l_v: usize, high: Bits, low: Bits) -> Self {
         assert!(l_k <= n_layers && l_v <= n_layers);
+        // non-default bit pairs are encoded in the name so that every
+        // constructor name re-parses to an equal policy (see prop test)
+        let name = if (high, low) == (2, 1) {
+            format!("AsymKV-{l_k}/{l_v}")
+        } else {
+            format!("AsymKV-{l_k}/{l_v}@{high}:{low}")
+        };
         Self {
             k_bits: (0..n_layers).map(|i| if i < l_k { high } else { low }).collect(),
             v_bits: (0..n_layers).map(|i| if i < l_v { high } else { low }).collect(),
-            name: format!("AsymKV-{l_k}/{l_v}"),
+            name,
         }
     }
 
@@ -92,7 +99,9 @@ impl QuantPolicy {
         self.k_bits.len()
     }
 
-    /// Parse "float", "kivi-2", "asymkv-6/0", "asymkv-6/2@4:1" (high:low).
+    /// Parse "float", "kivi-2", "konly-2", "vonly-2", "asymkv-6/0",
+    /// "asymkv-6/2@4:1" (high:low). Every constructor's `name` re-parses
+    /// to an equal policy.
     pub fn parse(s: &str, n_layers: usize) -> Result<Self, String> {
         let low = s.to_ascii_lowercase();
         if low == "float" || low == "fp32" {
@@ -103,6 +112,18 @@ impl QuantPolicy {
                 .parse()
                 .map_err(|_| format!("bad kivi bits in '{s}'"))?;
             return Ok(Self::kivi(n_layers, bits));
+        }
+        if let Some(b) = low.strip_prefix("konly-") {
+            let bits: Bits = b.trim_end_matches("bit")
+                .parse()
+                .map_err(|_| format!("bad konly bits in '{s}'"))?;
+            return Ok(Self::k_only(n_layers, bits));
+        }
+        if let Some(b) = low.strip_prefix("vonly-") {
+            let bits: Bits = b.trim_end_matches("bit")
+                .parse()
+                .map_err(|_| format!("bad vonly bits in '{s}'"))?;
+            return Ok(Self::v_only(n_layers, bits));
         }
         if let Some(rest) = low.strip_prefix("asymkv-") {
             let (lkv, hl) = match rest.split_once('@') {
@@ -131,7 +152,9 @@ impl QuantPolicy {
             }
             return Ok(Self::asymkv(n_layers, l_k, l_v, high, low_b));
         }
-        Err(format!("unknown policy '{s}' (float | kivi-N | asymkv-LK/LV[@H:L])"))
+        Err(format!(
+            "unknown policy '{s}' (float | kivi-N | konly-N | vonly-N | asymkv-LK/LV[@H:L])"
+        ))
     }
 
     /// KV-cache bytes per token per layer-side under this policy, for the
@@ -200,8 +223,13 @@ mod tests {
                    QuantPolicy::kivi(4, 2));
         assert_eq!(QuantPolicy::parse("asymkv-3/1", 4).unwrap(),
                    QuantPolicy::asymkv21(4, 3, 1));
+        assert_eq!(QuantPolicy::parse("konly-2", 4).unwrap(),
+                   QuantPolicy::k_only(4, 2));
+        assert_eq!(QuantPolicy::parse("Vonly-2bit", 4).unwrap(),
+                   QuantPolicy::v_only(4, 2));
         let p = QuantPolicy::parse("asymkv-2/2@4:2", 4).unwrap();
         assert_eq!(p.k_bits, vec![4, 4, 2, 2]);
+        assert_eq!(p.name, "AsymKV-2/2@4:2");
         assert!(QuantPolicy::parse("asymkv-9/0", 4).is_err());
         assert!(QuantPolicy::parse("bogus", 4).is_err());
     }
@@ -221,6 +249,15 @@ mod tests {
     }
 
     #[test]
+    fn asymkv_nondefault_bits_named_explicitly() {
+        let p = QuantPolicy::asymkv(8, 6, 2, 4, 2);
+        assert_eq!(p.name, "AsymKV-6/2@4:2");
+        assert_eq!(QuantPolicy::parse(&p.name, 8).unwrap(), p);
+        // default 2:1 stays in the short form used across the paper tables
+        assert_eq!(QuantPolicy::asymkv21(8, 6, 2).name, "AsymKV-6/2");
+    }
+
+    #[test]
     fn k_v_equal_l_symmetric_memory() {
         // AsymKV-l/0 and AsymKV-0/l occupy (nearly) the same memory — the
         // paper's "same space, different quality" comparison. K overhead
@@ -230,5 +267,63 @@ mod tests {
         let a = QuantPolicy::asymkv21(n, 6, 0).bytes_per_token(4, 32, 32);
         let b = QuantPolicy::asymkv21(n, 0, 6).bytes_per_token(4, 32, 32);
         assert_eq!(a, b);
+    }
+}
+
+#[cfg(test)]
+mod prop_tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    const BITS: [Bits; 5] = [1, 2, 3, 4, 8];
+
+    #[test]
+    fn constructor_names_reparse_to_equal_policy() {
+        check("policy_name_roundtrip", 400, |g| {
+            let n = g.usize_in(1, 16);
+            let p = match g.usize_in(0, 4) {
+                0 => QuantPolicy::float32(n),
+                1 => QuantPolicy::kivi(n, *g.pick(&BITS)),
+                2 => QuantPolicy::k_only(n, *g.pick(&BITS)),
+                3 => QuantPolicy::v_only(n, *g.pick(&BITS)),
+                _ => {
+                    let l_k = g.usize_in(0, n);
+                    let l_v = g.usize_in(0, n);
+                    let (high, low) =
+                        *g.pick(&[(2u8, 1u8), (4, 2), (4, 1), (8, 4), (3, 2)]);
+                    QuantPolicy::asymkv(n, l_k, l_v, high, low)
+                }
+            };
+            match QuantPolicy::parse(&p.name, n) {
+                Ok(back) if back == p => Ok(()),
+                Ok(back) => Err(format!(
+                    "'{}' reparsed to '{}' (k {:?} v {:?} vs k {:?} v {:?})",
+                    p.name, back.name, back.k_bits, back.v_bits, p.k_bits, p.v_bits
+                )),
+                Err(e) => Err(format!("'{}' failed to reparse: {e}", p.name)),
+            }
+        });
+    }
+
+    #[test]
+    fn parse_rejects_bad_bits_and_out_of_range_layers() {
+        check("policy_parse_rejections", 200, |g| {
+            let n = g.usize_in(1, 12);
+            let over = n + g.usize_in(1, 5);
+            for s in [format!("asymkv-{over}/0"), format!("asymkv-0/{over}")] {
+                if QuantPolicy::parse(&s, n).is_ok() {
+                    return Err(format!("'{s}' accepted with n_layers={n}"));
+                }
+            }
+            for s in [
+                "kivi-", "kivi-x", "konly-", "vonly-nope", "asymkv-1",
+                "asymkv-a/b", "asymkv-1/1@x:1", "asymkv-1/1@2", "bogus-2",
+            ] {
+                if QuantPolicy::parse(s, n).is_ok() {
+                    return Err(format!("malformed '{s}' accepted"));
+                }
+            }
+            Ok(())
+        });
     }
 }

@@ -2,13 +2,24 @@
 //! vendor set has no tokio; a thread-per-connection model is appropriate at
 //! this scale and keeps the hot path allocation-free of async machinery).
 //!
-//! Protocol — one JSON object per line:
-//!   → {"op":"generate","prompt":"## ABC:1234 ## ABC:","n_gen":8,
-//!      "policy":"asymkv-6/0","temperature":0.0,"top_k":0}
-//!   ← {"id":1,"text":"1234 . …","tokens":[…],"ttft_s":…,"total_s":…}
-//!   → {"op":"stats"}            ← serving metrics snapshot
-//!   → {"op":"pool"}             ← cache pool stats (Fig. 4 live view)
-//!   → {"op":"ping"}             ← {"ok":true}
+//! The server is a thin transport over the typed [`crate::api`] subsystem:
+//! every line is decoded into an [`ApiRequest`], handled, and the
+//! [`ApiResponse`] encoded back — there is no raw `Value` field-poking
+//! here. Two framings are accepted (see `docs/API.md` for the full wire
+//! specification):
+//!
+//!   v2 (strict, `"v":2`):
+//!   → {"v":2,"op":"generate","prompt":"## ABC:1234 ## ABC:","n_gen":8,
+//!      "policy":"asymkv-6/0"}
+//!   ← {"v":2,"id":1,"text":"1234 . …","tokens":[…],"ttft_s":…,"total_s":…}
+//!   → {"v":2,"op":"batch_generate","items":[{"prompt":"a"},{"prompt":"b"}]}
+//!   → {"v":2,"op":"session_open","policy":"kivi-2"}   ← {"v":2,"session":1,…}
+//!   → {"v":2,"op":"session_append","session":1,"prompt":"turn text"}
+//!   → {"v":2,"op":"session_close","session":1}
+//!   → {"v":2,"op":"policies"} | {"op":"stats"} | {"op":"pool"} | {"op":"ping"}
+//!
+//!   v1 (legacy compat, no `"v"` field): the original lenient
+//!   ping/stats/pool/generate surface, answered in the original shapes.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -17,28 +28,43 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
+use crate::api::{
+    self, ApiError, ApiRequest, ApiResponse, ErrorCode, GenerateSpec,
+    GenerationResult, PolicyInfo, PolicyReport, PoolReport, Proto,
+    SessionConfig, SessionManager,
+};
 use crate::coordinator::{Coordinator, Request};
-use crate::engine::SamplingParams;
 use crate::model::ByteTokenizer;
 use crate::quant::QuantPolicy;
-use crate::util::json::{self, Value};
+use crate::util::json::Value;
 
 pub struct Server {
     pub coord: Arc<Coordinator>,
     listener: TcpListener,
     next_id: AtomicU64,
     stop: Arc<AtomicBool>,
+    sessions: SessionManager,
 }
 
 impl Server {
     pub fn bind(coord: Arc<Coordinator>, addr: &str) -> Result<Self> {
+        Self::bind_with(coord, addr, SessionConfig::default())
+    }
+
+    pub fn bind_with(
+        coord: Arc<Coordinator>,
+        addr: &str,
+        sessions: SessionConfig,
+    ) -> Result<Self> {
         let listener = TcpListener::bind(addr)
             .with_context(|| format!("binding {addr}"))?;
+        let sessions = SessionManager::new(coord.clone(), sessions);
         Ok(Self {
             coord,
             listener,
             next_id: AtomicU64::new(1),
             stop: Arc::new(AtomicBool::new(false)),
+            sessions,
         })
     }
 
@@ -49,28 +75,53 @@ impl Server {
             .unwrap_or_default()
     }
 
-    pub fn stop_flag(&self) -> Arc<AtomicBool> {
-        self.stop.clone()
+    /// Ask the accept loop to exit. Safe from any thread: sets the stop
+    /// flag, then self-connects to wake the blocking `accept`.
+    pub fn request_stop(&self) {
+        use std::net::{IpAddr, Ipv4Addr, Ipv6Addr};
+        self.stop.store(true, Ordering::SeqCst);
+        if let Ok(mut addr) = self.listener.local_addr() {
+            // a wildcard bind (0.0.0.0 / ::) is not connectable as-is —
+            // wake through the matching loopback instead
+            if addr.ip().is_unspecified() {
+                addr.set_ip(match addr.ip() {
+                    IpAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
+                    IpAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
+                });
+            }
+            // the wakeup connection is accepted and dropped; if it cannot
+            // be made the loop still exits on the next inbound connection,
+            // but that is worth a warning — the old poll loop always woke
+            if let Err(e) = TcpStream::connect(addr) {
+                eprintln!(
+                    "asymkv-server: stop wakeup connect to {addr} failed ({e}); \
+                     accept loop will exit on the next inbound connection"
+                );
+            }
+        }
     }
 
-    /// Accept loop (blocks). One thread per connection.
+    /// Accept loop (blocks). One thread per connection. The listener stays
+    /// in blocking mode — no poll/sleep cycle burning idle CPU; shutdown is
+    /// a self-connect from [`Server::request_stop`].
     pub fn serve(self: &Arc<Self>) -> Result<()> {
-        self.listener.set_nonblocking(true)?;
         loop {
-            if self.stop.load(Ordering::SeqCst) {
-                return Ok(());
-            }
             match self.listener.accept() {
                 Ok((stream, _)) => {
+                    if self.stop.load(Ordering::SeqCst) {
+                        return Ok(()); // wakeup connection; drop it
+                    }
                     let srv = self.clone();
                     std::thread::spawn(move || {
                         let _ = srv.handle_conn(stream);
                     });
                 }
-                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    std::thread::sleep(std::time::Duration::from_millis(10));
+                Err(e) => {
+                    if self.stop.load(Ordering::SeqCst) {
+                        return Ok(());
+                    }
+                    return Err(e.into());
                 }
-                Err(e) => return Err(e.into()),
             }
         }
     }
@@ -89,179 +140,284 @@ impl Server {
             if trimmed.is_empty() {
                 continue;
             }
-            // streaming generate writes multiple lines; everything else is
-            // strict one-line-in / one-line-out
-            if let Ok(msg) = json::parse(trimmed) {
-                if msg.get("op").as_str() == Some("generate")
-                    && msg.get("stream").as_bool() == Some(true)
-                {
-                    self.generate_streaming(&msg, &mut out)?;
-                    continue;
+            let n_layers = self.coord.engine().manifest().n_layers;
+            match api::decode_request(trimmed, n_layers) {
+                // streaming generate writes multiple lines; everything else
+                // is strict one-line-in / one-line-out
+                Ok((proto, ApiRequest::Generate(spec))) if spec.stream => {
+                    self.generate_streaming(proto, spec, &mut out)?;
+                }
+                Ok((proto, req)) => {
+                    let resp = self.handle(req);
+                    writeln!(out, "{}", api::encode_response(&resp, proto))?;
+                }
+                Err(de) => {
+                    let mut v = api::encode_response(
+                        &ApiResponse::Error(de.error),
+                        de.proto,
+                    );
+                    // a request that asked for streaming gets its error
+                    // done-tagged so clients reading until "done" never hang
+                    if de.wants_stream {
+                        v = mark_done(v);
+                    }
+                    writeln!(out, "{v}")?;
                 }
             }
-            let reply = self.dispatch(trimmed);
-            writeln!(out, "{reply}")?;
         }
+    }
+
+    /// Handle one protocol line; always returns an encoded JSON value.
+    /// (Single-line entry point for tests and non-socket callers; streaming
+    /// requests are answered with their final response only.)
+    pub fn dispatch(&self, line: &str) -> Value {
+        let n_layers = self.coord.engine().manifest().n_layers;
+        match api::decode_request(line, n_layers) {
+            Ok((proto, req)) => api::encode_response(&self.handle(req), proto),
+            Err(de) => {
+                api::encode_response(&ApiResponse::Error(de.error), de.proto)
+            }
+        }
+    }
+
+    /// Execute a typed request. Pure protocol logic — no wire concerns.
+    pub fn handle(&self, req: ApiRequest) -> ApiResponse {
+        // idle-session eviction piggybacks on ALL traffic (not just
+        // session ops), so abandoned sessions can't pin cache budget
+        // forever under generate-only load
+        self.sessions.sweep_idle();
+        match req {
+            ApiRequest::Ping => ApiResponse::Pong,
+            ApiRequest::Stats => ApiResponse::Stats(self.coord.metrics()),
+            ApiRequest::Pool => ApiResponse::Pool(PoolReport {
+                pool: self.coord.engine().pool.stats(),
+                prefix: self.coord.prefix_stats(),
+                sessions: self.sessions.len(),
+            }),
+            ApiRequest::Policies { policy } => self.policies(policy),
+            ApiRequest::Generate(spec) => {
+                ApiResponse::Generation(self.run_generate(&spec, None))
+            }
+            ApiRequest::BatchGenerate { items } => self.run_batch(items),
+            ApiRequest::SessionOpen { policy } => {
+                match self.sessions.open(policy) {
+                    Ok((session, policy)) => {
+                        ApiResponse::SessionOpened { session, policy }
+                    }
+                    Err(e) => ApiResponse::Error(e),
+                }
+            }
+            ApiRequest::SessionAppend { session, spec } => {
+                let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+                match self.sessions.append(session, id, &spec) {
+                    Ok(turn) => ApiResponse::SessionResult(turn),
+                    Err(e) => ApiResponse::Error(e),
+                }
+            }
+            ApiRequest::SessionClose { session } => {
+                match self.sessions.close(session) {
+                    Ok((turns, pos)) => {
+                        ApiResponse::SessionClosed { session, turns, pos }
+                    }
+                    Err(e) => ApiResponse::Error(e),
+                }
+            }
+        }
+    }
+
+    /// Build a coordinator [`Request`] from a validated spec. The policy is
+    /// resolved (default float) and checked against the artifact grid here,
+    /// so unsupported policies fail with a typed error before submission.
+    fn build_request(
+        &self,
+        id: u64,
+        spec: &GenerateSpec,
+        on_token: Option<crate::coordinator::request::TokenSink>,
+    ) -> Result<Request, ApiError> {
+        let m = self.coord.engine().manifest();
+        let policy = match &spec.policy {
+            Some(p) => p.clone(),
+            None => QuantPolicy::float32(m.n_layers),
+        };
+        m.supports_policy(&policy).map_err(|e| {
+            ApiError::new(ErrorCode::UnsupportedPolicy, format!("{e:#}"))
+        })?;
+        if spec.stop.as_deref() == Some("") {
+            return Err(ApiError::empty_stop()); // codec enforces; belt-and-braces
+        }
+        let mut req = spec.to_request(id, policy);
+        req.on_token = on_token;
+        Ok(req)
+    }
+
+    fn run_generate(
+        &self,
+        spec: &GenerateSpec,
+        on_token: Option<crate::coordinator::request::TokenSink>,
+    ) -> GenerationResult {
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        match self.build_request(id, spec, on_token) {
+            Ok(req) => GenerationResult::from_response(self.coord.submit_wait(req)),
+            Err(e) => GenerationResult::failed(id, e),
+        }
+    }
+
+    /// Submit every batch item up front (the coordinator groups
+    /// policy-homogeneous prefill/decode batches), then collect in order.
+    fn run_batch(&self, items: Vec<GenerateSpec>) -> ApiResponse {
+        self.coord.note_batch_submit(items.len());
+        let pending: Vec<_> = items
+            .iter()
+            .map(|spec| {
+                let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+                (id, self.build_request(id, spec, None).map(|r| self.coord.submit(r)))
+            })
+            .collect();
+        ApiResponse::Batch(
+            pending
+                .into_iter()
+                .map(|(id, handle)| match handle {
+                    Ok(h) => GenerationResult::from_response(h.wait()),
+                    Err(e) => GenerationResult::failed(id, e),
+                })
+                .collect(),
+        )
+    }
+
+    /// The `policies` op: list the supported policy surface, or expand and
+    /// grid-validate a single probed spec server-side.
+    fn policies(&self, probe: Option<String>) -> ApiResponse {
+        let m = self.coord.engine().manifest();
+        let specs = vec![
+            "float".to_string(),
+            "kivi-<bits>".to_string(),
+            "asymkv-<l_k>/<l_v>[@<high>:<low>]".to_string(),
+            "konly-<bits>".to_string(),
+            "vonly-<bits>".to_string(),
+        ];
+        let expand = |p: &QuantPolicy| PolicyInfo {
+            name: p.name.clone(),
+            k_bits: p.k_bits.clone(),
+            v_bits: p.v_bits.clone(),
+            bytes_per_token: p.bytes_per_token(m.n_heads, m.d_head, m.group),
+        };
+        let policies = match &probe {
+            Some(s) => {
+                let p = match QuantPolicy::parse(s, m.n_layers) {
+                    Ok(p) => p,
+                    Err(e) => {
+                        return ApiResponse::Error(ApiError::new(
+                            ErrorCode::BadPolicy,
+                            e,
+                        ))
+                    }
+                };
+                if let Err(e) = m.supports_policy(&p) {
+                    return ApiResponse::Error(ApiError::new(
+                        ErrorCode::UnsupportedPolicy,
+                        format!("{e:#}"),
+                    ));
+                }
+                vec![expand(&p)]
+            }
+            None => {
+                // canonical examples per family, filtered by the grid
+                let n = m.n_layers;
+                let mut candidates = vec![QuantPolicy::float32(n)];
+                for b in [1u8, 2, 4, 8] {
+                    candidates.push(QuantPolicy::kivi(n, b));
+                    candidates.push(QuantPolicy::k_only(n, b));
+                    candidates.push(QuantPolicy::v_only(n, b));
+                }
+                candidates.push(QuantPolicy::asymkv21(n, n * 3 / 4, 0));
+                candidates.push(QuantPolicy::asymkv21(n, n / 2, n / 2));
+                candidates
+                    .iter()
+                    .filter(|p| m.supports_policy(p).is_ok())
+                    .map(expand)
+                    .collect()
+            }
+        };
+        ApiResponse::Policies(PolicyReport {
+            n_layers: m.n_layers,
+            grid: m.grid.clone(),
+            specs,
+            policies,
+        })
     }
 
     /// Streaming generation: one `{"token":…,"piece":…}` line per produced
     /// token, terminated by the standard final response object with
     /// `"done":true`.
-    fn generate_streaming(&self, msg: &Value, out: &mut TcpStream) -> Result<()> {
+    fn generate_streaming(
+        &self,
+        proto: Proto,
+        spec: GenerateSpec,
+        out: &mut TcpStream,
+    ) -> Result<()> {
         let (tx, rx) = std::sync::mpsc::channel::<i32>();
         let sink: crate::coordinator::request::TokenSink =
             Arc::new(move |_id, tok| {
                 let _ = tx.send(tok);
             });
-        let handle = match self.build_request(msg, Some(sink)) {
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        let handle = match self.build_request(id, &spec, Some(sink)) {
             Ok(req) => self.coord.submit(req),
             Err(e) => {
-                writeln!(out, "{}", Value::obj(vec![
-                    ("error", Value::str_of(format!("{e:#}"))),
-                    ("done", Value::Bool(true)),
-                ]))?;
+                let v = api::encode_response(&ApiResponse::Error(e), proto);
+                writeln!(out, "{}", mark_done(v))?;
                 return Ok(());
             }
         };
         let tok = ByteTokenizer;
+        let emit = |out: &mut TcpStream, t: i32| -> Result<()> {
+            writeln!(out, "{}", Value::obj(vec![
+                ("token", Value::num(t as f64)),
+                ("piece", Value::str_of(tok.decode_lossy(&[t]))),
+            ]))?;
+            Ok(())
+        };
         loop {
             match rx.recv_timeout(std::time::Duration::from_millis(20)) {
-                Ok(t) => {
-                    writeln!(out, "{}", Value::obj(vec![
-                        ("token", Value::num(t as f64)),
-                        ("piece", Value::str_of(tok.decode_lossy(&[t]))),
-                    ]))?;
-                }
+                Ok(t) => emit(out, t)?,
                 Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
                     if let Some(resp) = handle.try_get() {
                         // drain any raced tokens first
                         while let Ok(t) = rx.try_recv() {
-                            writeln!(out, "{}", Value::obj(vec![
-                                ("token", Value::num(t as f64)),
-                                ("piece", Value::str_of(tok.decode_lossy(&[t]))),
-                            ]))?;
+                            emit(out, t)?;
                         }
-                        writeln!(out, "{}", self.final_response(resp))?;
+                        let g = GenerationResult::from_response(resp);
+                        let v = api::encode_response(
+                            &ApiResponse::Generation(g),
+                            proto,
+                        );
+                        writeln!(out, "{}", mark_done(v))?;
                         return Ok(());
                     }
                 }
                 Err(_) => {
-                    let resp = handle.wait();
-                    writeln!(out, "{}", self.final_response(resp))?;
+                    let g = GenerationResult::from_response(handle.wait());
+                    let v =
+                        api::encode_response(&ApiResponse::Generation(g), proto);
+                    writeln!(out, "{}", mark_done(v))?;
                     return Ok(());
                 }
             }
         }
     }
-
-    fn final_response(&self, resp: crate::coordinator::Response) -> Value {
-        let tok = ByteTokenizer;
-        if let Some(err) = resp.error {
-            return Value::obj(vec![
-                ("id", Value::num(resp.id as f64)),
-                ("error", Value::str_of(err)),
-                ("done", Value::Bool(true)),
-            ]);
-        }
-        Value::obj(vec![
-            ("id", Value::num(resp.id as f64)),
-            ("text", Value::str_of(tok.decode_lossy(&resp.tokens))),
-            (
-                "tokens",
-                Value::arr(resp.tokens.iter().map(|&t| Value::num(t as f64)).collect()),
-            ),
-            ("ttft_s", Value::num(resp.timing.ttft_s)),
-            ("total_s", Value::num(resp.timing.total_s)),
-            ("done", Value::Bool(true)),
-        ])
-    }
-
-    /// Handle one protocol line; always returns a JSON value.
-    pub fn dispatch(&self, line: &str) -> Value {
-        match self.dispatch_inner(line) {
-            Ok(v) => v,
-            Err(e) => Value::obj(vec![("error", Value::str_of(format!("{e:#}")))]),
-        }
-    }
-
-    fn dispatch_inner(&self, line: &str) -> Result<Value> {
-        let msg = json::parse(line).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
-        match msg.get("op").as_str().unwrap_or("generate") {
-            "ping" => Ok(Value::obj(vec![("ok", Value::Bool(true))])),
-            "stats" => Ok(self.coord.metrics().to_json()),
-            "pool" => {
-                let s = self.coord.engine().pool.stats();
-                let mut fields = vec![
-                    ("n_seqs", Value::num(s.n_seqs as f64)),
-                    ("in_use_bytes", Value::num(s.in_use_bytes as f64)),
-                    ("used_bytes", Value::num(s.used_bytes as f64)),
-                    ("peak_bytes", Value::num(s.peak_bytes as f64)),
-                    ("budget_bytes", Value::num(s.budget_bytes as f64)),
-                ];
-                if let Some(ps) = self.coord.prefix_stats() {
-                    fields.push(("prefix_entries", Value::num(ps.entries as f64)));
-                    fields.push(("prefix_hits", Value::num(ps.hits as f64)));
-                    fields.push(("prefix_misses", Value::num(ps.misses as f64)));
-                    fields.push(("prefix_bytes", Value::num(ps.used_bytes as f64)));
-                }
-                Ok(Value::obj(fields))
-            }
-            "generate" => self.generate(&msg),
-            other => anyhow::bail!("unknown op '{other}'"),
-        }
-    }
-
-    /// Parse a generate message into a [`Request`].
-    fn build_request(
-        &self,
-        msg: &Value,
-        on_token: Option<crate::coordinator::request::TokenSink>,
-    ) -> Result<Request> {
-        let tok = ByteTokenizer;
-        let n_layers = self.coord.engine().manifest().n_layers;
-        let prompt_text = msg
-            .get("prompt")
-            .as_str()
-            .ok_or_else(|| anyhow::anyhow!("missing 'prompt'"))?;
-        let policy = QuantPolicy::parse(
-            msg.get("policy").as_str().unwrap_or("float"),
-            n_layers,
-        )
-        .map_err(|e| anyhow::anyhow!(e))?;
-        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
-        let mut req = Request::greedy(
-            id,
-            tok.encode_str(prompt_text),
-            msg.get("n_gen").as_usize().unwrap_or(16),
-            policy,
-        );
-        req.sampling = SamplingParams {
-            temperature: msg.get("temperature").as_f64().unwrap_or(0.0) as f32,
-            top_k: msg.get("top_k").as_usize().unwrap_or(0),
-        };
-        if let Some(p) = msg.get("priority").as_i64() {
-            req.priority = p as i32;
-        }
-        if let Some(s) = msg.get("stop").as_str() {
-            req.stop_token = s.bytes().next().map(|b| b as i32);
-        }
-        req.on_token = on_token;
-        Ok(req)
-    }
-
-    fn generate(&self, msg: &Value) -> Result<Value> {
-        let req = self.build_request(msg, None)?;
-        let resp = self.coord.submit_wait(req);
-        let mut v = self.final_response(resp);
-        // non-streaming replies don't carry the "done" marker
-        if let Value::Obj(ref mut o) = v {
-            o.remove("done");
-        }
-        Ok(v)
-    }
 }
 
-/// Minimal blocking client for tests/examples.
+/// Tag a streaming final line with `"done":true`.
+fn mark_done(mut v: Value) -> Value {
+    if let Value::Obj(o) = &mut v {
+        o.insert("done".to_string(), Value::Bool(true));
+    }
+    v
+}
+
+/// Minimal blocking client for tests/examples. Requests go out through the
+/// typed [`ApiRequest`] codec ([`Client::send`]); `call` remains for raw
+/// lines (v1 compat tests).
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
@@ -274,11 +430,18 @@ impl Client {
         Ok(Self { reader: BufReader::new(stream.try_clone()?), writer: stream })
     }
 
+    /// Send a typed request as a canonical v2 line; returns the reply value.
+    pub fn send(&mut self, req: &ApiRequest) -> Result<Value> {
+        self.call(&api::encode_request(req))
+    }
+
+    /// Send a raw JSON value as one line; returns the reply value.
     pub fn call(&mut self, msg: &Value) -> Result<Value> {
         writeln!(self.writer, "{msg}")?;
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
-        json::parse(line.trim()).map_err(|e| anyhow::anyhow!("bad reply: {e}"))
+        crate::util::json::parse(line.trim())
+            .map_err(|e| anyhow::anyhow!("bad reply: {e}"))
     }
 }
 
@@ -287,11 +450,22 @@ mod tests {
     use super::*;
 
     #[test]
-    fn protocol_shapes() {
-        // dispatch-level checks that don't need a live engine: bad json
-        // and unknown ops produce error objects (see rust/tests/ for the
-        // full server integration test with a real engine).
-        let v = json::parse(r#"{"op":"ping"}"#).unwrap();
-        assert_eq!(v.get("op").as_str(), Some("ping"));
+    fn client_lines_are_canonical_v2() {
+        // the typed client emits v2 lines the strict decoder accepts
+        let req = ApiRequest::Generate(GenerateSpec {
+            prompt: "hi".into(),
+            n_gen: 4,
+            ..Default::default()
+        });
+        let wire = api::encode_request(&req).to_string();
+        let (proto, back) = api::decode_request(&wire, 4).unwrap();
+        assert_eq!(proto, Proto::V2);
+        assert_eq!(back, req);
+    }
+
+    #[test]
+    fn done_marker_applied_to_final_lines() {
+        let v = mark_done(Value::obj(vec![("id", Value::num(1.0))]));
+        assert_eq!(v.get("done").as_bool(), Some(true));
     }
 }
