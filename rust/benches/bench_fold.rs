@@ -1,0 +1,286 @@
+//! Fold/unfold hot-path bench: per-channel K and per-token V group
+//! quantize+pack (and the inverse), scalar vs wordpack, plus the batched
+//! `append_tokens` prefill path vs per-token appends. Pure-Rust (no
+//! artifacts), runs everywhere. Emits the `fold_*`, `unfold_*` and
+//! `append_*` records of `BENCH_kernels.json` — the scalar-vs-wordpack
+//! speedup trajectory the CI bench-smoke job publishes.
+
+use asymkv::kvcache::{CacheGeometry, LayerCache};
+use asymkv::quant::kernels::{self, GroupParams, KernelMode};
+use asymkv::util::bench::{self, fmt_duration, fmt_throughput, time_fn, JsonReport, Table};
+use asymkv::util::json::Value;
+use asymkv::util::rng::SplitMix;
+
+const MODES: [(KernelMode, &str); 2] =
+    [(KernelMode::Scalar, "scalar"), (KernelMode::Wordpack, "wordpack")];
+
+// One iteration folds/unfolds HEADS groups of [G, DH] — a full layer's
+// fold work for one group boundary at an 8-head model.
+const G: usize = 32;
+const DH: usize = 128;
+const G2: usize = 32;
+const HEADS: usize = 8;
+
+fn cfg(bits: u8, imp: &str) -> Value {
+    Value::obj(vec![
+        ("bits", Value::num(bits as f64)),
+        ("impl", Value::str_of(imp)),
+        ("g", Value::num(G as f64)),
+        ("dh", Value::num(DH as f64)),
+        ("g2", Value::num(G2 as f64)),
+        ("heads", Value::num(HEADS as f64)),
+    ])
+}
+
+fn main() {
+    let reps = bench::samples(300);
+    let warm = bench::warmup(20);
+    let mut rng = SplitMix::new(0xF07D);
+    let kg: Vec<f32> = rng.normal_f32_vec(HEADS * G * DH);
+    let bytes = HEADS * G * DH * 4; // f32 input traffic per iteration
+
+    bench::note(
+        "bench_fold",
+        &format!(
+            "\nFold/unfold kernels — {HEADS} heads × [G={G}, Dh={DH}], g2={G2}, {reps} samples"
+        ),
+    );
+    let mut t = Table::new(
+        "fold / unfold (per call over all heads)",
+        &["op", "bits", "impl", "p50", "throughput", "speedup"],
+    );
+    let mut report = JsonReport::at_root("BENCH_kernels.json");
+
+    for bits in [1u8, 2, 4, 8] {
+        let rows_pk = kernels::packed_len(G, bits);
+        let bpt = kernels::packed_len(DH, bits);
+        let dg = DH / G2;
+        let mut packed_k = vec![0u8; HEADS * rows_pk * DH];
+        let mut params_k = vec![GroupParams { scale: 0.0, zero: 0.0 }; HEADS * DH];
+        let mut packed_v = vec![0u8; HEADS * G * bpt];
+        let mut params_v = vec![GroupParams { scale: 0.0, zero: 0.0 }; HEADS * G * dg];
+        let mut out = vec![0f32; HEADS * G * DH];
+
+        // fold_k, unfold_k, fold_v, unfold_v, fold_unfold_k, fold_unfold_v
+        let mut scalar_mean = [0f64; 6];
+        for (mode, name) in MODES {
+            // fold K
+            let tm = time_fn(warm, reps, || {
+                for h in 0..HEADS {
+                    kernels::fold_k_group_with(
+                        mode,
+                        &kg[h * G * DH..(h + 1) * G * DH],
+                        G,
+                        DH,
+                        bits,
+                        &mut packed_k[h * rows_pk * DH..(h + 1) * rows_pk * DH],
+                        &mut params_k[h * DH..(h + 1) * DH],
+                    );
+                }
+                std::hint::black_box(&packed_k);
+            });
+            emit(&mut t, &mut report, "fold_k", bits, name, &tm, bytes, &mut scalar_mean[0]);
+
+            // unfold K
+            let tm = time_fn(warm, reps, || {
+                for h in 0..HEADS {
+                    kernels::unfold_k_group_with(
+                        mode,
+                        &packed_k[h * rows_pk * DH..(h + 1) * rows_pk * DH],
+                        G,
+                        DH,
+                        bits,
+                        &params_k[h * DH..(h + 1) * DH],
+                        &mut out[h * G * DH..(h + 1) * G * DH],
+                    );
+                }
+                std::hint::black_box(&out);
+            });
+            emit(&mut t, &mut report, "unfold_k", bits, name, &tm, bytes, &mut scalar_mean[1]);
+
+            // fold V
+            let tm = time_fn(warm, reps, || {
+                for h in 0..HEADS {
+                    kernels::fold_v_group_with(
+                        mode,
+                        &kg[h * G * DH..(h + 1) * G * DH],
+                        G,
+                        DH,
+                        G2,
+                        bits,
+                        &mut packed_v[h * G * bpt..(h + 1) * G * bpt],
+                        &mut params_v[h * G * dg..(h + 1) * G * dg],
+                    );
+                }
+                std::hint::black_box(&packed_v);
+            });
+            emit(&mut t, &mut report, "fold_v", bits, name, &tm, bytes, &mut scalar_mean[2]);
+
+            // unfold V
+            let tm = time_fn(warm, reps, || {
+                for h in 0..HEADS {
+                    kernels::unfold_v_group_with(
+                        mode,
+                        &packed_v[h * G * bpt..(h + 1) * G * bpt],
+                        G,
+                        DH,
+                        G2,
+                        bits,
+                        &params_v[h * G * dg..(h + 1) * G * dg],
+                        &mut out[h * G * DH..(h + 1) * G * DH],
+                    );
+                }
+                std::hint::black_box(&out);
+            });
+            emit(&mut t, &mut report, "unfold_v", bits, name, &tm, bytes, &mut scalar_mean[3]);
+
+            // the fold/unfold PATH: quantize+pack then unpack+dequantize —
+            // the roundtrip every cached token pays, and the headline
+            // scalar-vs-wordpack comparison of the perf trajectory
+            let tm = time_fn(warm, reps, || {
+                for h in 0..HEADS {
+                    kernels::fold_k_group_with(
+                        mode,
+                        &kg[h * G * DH..(h + 1) * G * DH],
+                        G,
+                        DH,
+                        bits,
+                        &mut packed_k[h * rows_pk * DH..(h + 1) * rows_pk * DH],
+                        &mut params_k[h * DH..(h + 1) * DH],
+                    );
+                    kernels::unfold_k_group_with(
+                        mode,
+                        &packed_k[h * rows_pk * DH..(h + 1) * rows_pk * DH],
+                        G,
+                        DH,
+                        bits,
+                        &params_k[h * DH..(h + 1) * DH],
+                        &mut out[h * G * DH..(h + 1) * G * DH],
+                    );
+                }
+                std::hint::black_box(&out);
+            });
+            emit(&mut t, &mut report, "fold_unfold_k", bits, name, &tm, bytes * 2,
+                 &mut scalar_mean[4]);
+
+            let tm = time_fn(warm, reps, || {
+                for h in 0..HEADS {
+                    kernels::fold_v_group_with(
+                        mode,
+                        &kg[h * G * DH..(h + 1) * G * DH],
+                        G,
+                        DH,
+                        G2,
+                        bits,
+                        &mut packed_v[h * G * bpt..(h + 1) * G * bpt],
+                        &mut params_v[h * G * dg..(h + 1) * G * dg],
+                    );
+                    kernels::unfold_v_group_with(
+                        mode,
+                        &packed_v[h * G * bpt..(h + 1) * G * bpt],
+                        G,
+                        DH,
+                        G2,
+                        bits,
+                        &params_v[h * G * dg..(h + 1) * G * dg],
+                        &mut out[h * G * DH..(h + 1) * G * DH],
+                    );
+                }
+                std::hint::black_box(&out);
+            });
+            emit(&mut t, &mut report, "fold_unfold_v", bits, name, &tm, bytes * 2,
+                 &mut scalar_mean[5]);
+        }
+    }
+
+    // batched vs per-token append (2-bit K / 2-bit V, active kernel mode)
+    let geo = CacheGeometry { n_heads: HEADS, max_ctx: 512, d_head: DH, group: G, residual: 64 };
+    let hd = HEADS * DH;
+    let count = 256;
+    let ks: Vec<f32> = rng.normal_f32_vec(count * hd);
+    let vs: Vec<f32> = rng.normal_f32_vec(count * hd);
+    let app_bytes = count * hd * 4 * 2;
+
+    let tm = time_fn(bench::warmup(3), bench::samples(50), || {
+        let mut c = LayerCache::new(geo, 2, 2);
+        for t in 0..count {
+            c.append_token(&ks[t * hd..(t + 1) * hd], &vs[t * hd..(t + 1) * hd]);
+        }
+        std::hint::black_box(c.n_tokens());
+    });
+    t.row(vec![
+        "append per-token".into(),
+        "2".into(),
+        "dispatch".into(),
+        fmt_duration(tm.p50()),
+        fmt_throughput(app_bytes as f64 / tm.mean()),
+        String::new(),
+    ]);
+    report.add(
+        &format!("append_per_token_{count}toks"),
+        &tm,
+        app_bytes,
+        cfg(2, "dispatch"),
+    );
+    let per_token_mean = tm.mean();
+
+    let tm = time_fn(bench::warmup(3), bench::samples(50), || {
+        let mut c = LayerCache::new(geo, 2, 2);
+        c.append_tokens(count, &ks, &vs);
+        std::hint::black_box(c.n_tokens());
+    });
+    t.row(vec![
+        "append batched".into(),
+        "2".into(),
+        "dispatch".into(),
+        fmt_duration(tm.p50()),
+        fmt_throughput(app_bytes as f64 / tm.mean()),
+        format!("{:.2}x", per_token_mean / tm.mean()),
+    ]);
+    report.add(
+        &format!("append_batched_{count}toks"),
+        &tm,
+        app_bytes,
+        cfg(2, "dispatch"),
+    );
+
+    t.emit("bench_fold");
+    report.write().expect("write BENCH_kernels.json");
+    println!("wrote BENCH_kernels.json (fold_*/unfold_*/append_* records)");
+}
+
+/// Table row + JSON record; stashes the scalar mean so the wordpack row of
+/// the same op can print and record its speedup.
+#[allow(clippy::too_many_arguments)]
+fn emit(
+    t: &mut Table,
+    report: &mut JsonReport,
+    op: &str,
+    bits: u8,
+    imp: &str,
+    tm: &asymkv::util::bench::Timing,
+    bytes: usize,
+    scalar_mean: &mut f64,
+) {
+    let speedup = if imp == "scalar" {
+        *scalar_mean = tm.mean();
+        String::new()
+    } else {
+        format!("{:.2}x", *scalar_mean / tm.mean())
+    };
+    t.row(vec![
+        op.into(),
+        bits.to_string(),
+        imp.into(),
+        fmt_duration(tm.p50()),
+        fmt_throughput(bytes as f64 / tm.mean()),
+        speedup,
+    ]);
+    let mut config = cfg(bits, imp);
+    if imp != "scalar" {
+        if let asymkv::util::json::Value::Obj(o) = &mut config {
+            o.insert("speedup_vs_scalar".into(), Value::num(*scalar_mean / tm.mean()));
+        }
+    }
+    report.add(&format!("{op}_{bits}bit_{imp}"), tm, bytes, config);
+}

@@ -1,0 +1,115 @@
+//! Batch-assembly bench: `gather_layer_args` (the per-layer scatter of
+//! packed caches + residual rings + masks into artifact-shaped buffers)
+//! and full-cache dequantization through the dispatched kernels.
+//! Pure-Rust (no artifacts), runs everywhere. Emits the `gather_*` and
+//! `dequant_*` records of `BENCH_kernels.json`.
+
+use asymkv::engine::gather::{gather_layer_args, GatherGeo};
+use asymkv::kvcache::{CacheGeometry, SeqCache};
+use asymkv::quant::QuantPolicy;
+use asymkv::util::bench::{self, fmt_duration, fmt_throughput, time_fn, JsonReport, Table};
+use asymkv::util::json::Value;
+use asymkv::util::rng::SplitMix;
+
+const B: usize = 4;
+const LAYERS: usize = 2;
+
+fn main() {
+    let geo = CacheGeometry { n_heads: 8, max_ctx: 256, d_head: 64, group: 32, residual: 64 };
+    let ggeo = GatherGeo {
+        b_art: B,
+        n_heads: geo.n_heads,
+        max_ctx: geo.max_ctx,
+        d_head: geo.d_head,
+        group: geo.group,
+        residual: geo.residual,
+    };
+    let reps = bench::samples(100);
+    let warm = bench::warmup(10);
+    let mut rng = SplitMix::new(0x9A7E);
+    let hd = geo.n_heads * geo.d_head;
+
+    bench::note(
+        "bench_gather",
+        &format!(
+            "\nBatch assembly — B={B}, H={}, T={}, Dh={}, half-full caches, {reps} samples",
+            geo.n_heads, geo.max_ctx, geo.d_head
+        ),
+    );
+    let mut t = Table::new(
+        "gather_layer_args / dequant_full",
+        &["op", "policy", "p50", "throughput"],
+    );
+    let mut report = JsonReport::at_root("BENCH_kernels.json");
+
+    for (pname, policy) in [
+        ("1bit", QuantPolicy::kivi(LAYERS, 1)),
+        ("2bit", QuantPolicy::kivi(LAYERS, 2)),
+        ("float", QuantPolicy::float32(LAYERS)),
+    ] {
+        let mut seqs: Vec<SeqCache> =
+            (0..B).map(|_| SeqCache::new(geo, &policy)).collect();
+        let fill = geo.max_ctx / 2;
+        for s in &mut seqs {
+            for layer in &mut s.layers {
+                let ks: Vec<f32> = rng.normal_f32_vec(fill * hd);
+                let vs: Vec<f32> = rng.normal_f32_vec(fill * hd);
+                layer.append_tokens(fill, &ks, &vs);
+            }
+        }
+        // bytes actually moved per gather: every slot's cache + params +
+        // residual buffers
+        let bytes: usize = seqs.iter().map(|s| s.layers[0].used_bytes()).sum();
+
+        let tm = time_fn(warm, reps, || {
+            let mut refs: Vec<&mut SeqCache> = seqs.iter_mut().collect();
+            let args = gather_layer_args(&ggeo, refs.as_mut_slice(), 0);
+            std::hint::black_box(&args);
+        });
+        t.row(vec![
+            "gather".into(),
+            pname.into(),
+            fmt_duration(tm.p50()),
+            fmt_throughput(bytes as f64 / tm.mean()),
+        ]);
+        report.add(
+            &format!("gather_b{B}_{pname}"),
+            &tm,
+            bytes,
+            gather_cfg(&geo, pname),
+        );
+
+        // full dequant of one layer cache through the dispatched kernels
+        let dq_bytes = geo.n_heads * seqs[0].layers[0].n_tokens() * geo.d_head * 4;
+        let tm = time_fn(warm, reps, || {
+            let full = seqs[0].layers[0].dequant_k_full();
+            std::hint::black_box(&full);
+        });
+        t.row(vec![
+            "dequant_k_full".into(),
+            pname.into(),
+            fmt_duration(tm.p50()),
+            fmt_throughput(dq_bytes as f64 / tm.mean()),
+        ]);
+        report.add(
+            &format!("dequant_k_full_{pname}"),
+            &tm,
+            dq_bytes,
+            gather_cfg(&geo, pname),
+        );
+    }
+
+    t.emit("bench_gather");
+    report.write().expect("write BENCH_kernels.json");
+    println!("wrote BENCH_kernels.json (gather_*/dequant_* records)");
+}
+
+fn gather_cfg(geo: &CacheGeometry, pname: &str) -> Value {
+    Value::obj(vec![
+        ("b", Value::num(B as f64)),
+        ("heads", Value::num(geo.n_heads as f64)),
+        ("max_ctx", Value::num(geo.max_ctx as f64)),
+        ("dh", Value::num(geo.d_head as f64)),
+        ("policy", Value::str_of(pname)),
+    ])
+}

@@ -1,0 +1,119 @@
+//! Kernel microbench: contiguous quantize / pack / unpack, scalar vs
+//! wordpack, across bits ∈ {1, 2, 4, 8}. Pure-Rust (no artifacts needed),
+//! so it runs everywhere including CI's bench-smoke job. Emits the
+//! `rtn_*` records of `BENCH_kernels.json` (schema: docs/BENCH.md).
+
+use asymkv::quant::kernels::{self, KernelMode};
+use asymkv::util::bench::{self, fmt_duration, fmt_throughput, time_fn, JsonReport, Table};
+use asymkv::util::json::Value;
+use asymkv::util::rng::SplitMix;
+
+const MODES: [(KernelMode, &str); 2] =
+    [(KernelMode::Scalar, "scalar"), (KernelMode::Wordpack, "wordpack")];
+
+fn main() {
+    let n: usize = if bench::smoke() { 4096 } else { 1 << 16 };
+    let reps = bench::samples(300);
+    let warm = bench::warmup(20);
+    let mut rng = SplitMix::new(0xBE9C);
+    let xs: Vec<f32> = rng.normal_f32_vec(n);
+
+    bench::note(
+        "bench_rtn",
+        &format!("\nRTN contiguous kernels — n={n} values, {reps} samples"),
+    );
+    let mut t = Table::new(
+        "quantize / pack / unpack (per call over n values)",
+        &["op", "bits", "impl", "p50", "throughput"],
+    );
+    let mut report = JsonReport::at_root("BENCH_kernels.json");
+
+    for bits in [1u8, 2, 4, 8] {
+        let codes: Vec<u8> =
+            (0..n).map(|_| (rng.next_u64() & ((1 << bits) - 1)) as u8).collect();
+        let mut packed = vec![0u8; kernels::packed_len(n, bits)];
+        let mut out_codes = vec![0u8; n];
+        let mut out_f32 = vec![0f32; n];
+
+        // quantize (shared min-max + rounding path; mode-dispatched)
+        for (mode, name) in MODES {
+            let tm = time_fn(warm, reps, || {
+                let p = kernels::quantize_group_with(mode, &xs, bits, &mut out_codes);
+                std::hint::black_box(p);
+            });
+            let cfg = config(bits, name, n);
+            t.row(vec![
+                "quantize".into(),
+                bits.to_string(),
+                name.into(),
+                fmt_duration(tm.p50()),
+                fmt_throughput(n as f64 * 4.0 / tm.mean()),
+            ]);
+            report.add(&format!("rtn_quantize_bits{bits}_{name}"), &tm, n * 4, cfg);
+        }
+
+        // pack
+        for (mode, name) in MODES {
+            let tm = time_fn(warm, reps, || {
+                kernels::pack_bits_with(mode, &codes, bits, &mut packed);
+                std::hint::black_box(&packed);
+            });
+            t.row(vec![
+                "pack".into(),
+                bits.to_string(),
+                name.into(),
+                fmt_duration(tm.p50()),
+                fmt_throughput(n as f64 / tm.mean()),
+            ]);
+            report.add(&format!("rtn_pack_bits{bits}_{name}"), &tm, n, config(bits, name, n));
+        }
+
+        // unpack
+        for (mode, name) in MODES {
+            let tm = time_fn(warm, reps, || {
+                kernels::unpack_bits_with(mode, &packed, bits, &mut out_codes);
+                std::hint::black_box(&out_codes);
+            });
+            t.row(vec![
+                "unpack".into(),
+                bits.to_string(),
+                name.into(),
+                fmt_duration(tm.p50()),
+                fmt_throughput(n as f64 / tm.mean()),
+            ]);
+            report.add(&format!("rtn_unpack_bits{bits}_{name}"), &tm, n, config(bits, name, n));
+        }
+
+        // dequantize (identical code both modes; one record)
+        let p = kernels::quantize_group(&xs, bits, &mut out_codes);
+        let tm = time_fn(warm, reps, || {
+            kernels::dequantize_group(&out_codes, p, &mut out_f32);
+            std::hint::black_box(&out_f32);
+        });
+        t.row(vec![
+            "dequantize".into(),
+            bits.to_string(),
+            "shared".into(),
+            fmt_duration(tm.p50()),
+            fmt_throughput(n as f64 * 4.0 / tm.mean()),
+        ]);
+        report.add(
+            &format!("rtn_dequantize_bits{bits}"),
+            &tm,
+            n * 4,
+            config(bits, "shared", n),
+        );
+    }
+
+    t.emit("bench_rtn");
+    report.write().expect("write BENCH_kernels.json");
+    println!("wrote BENCH_kernels.json (rtn_* records)");
+}
+
+fn config(bits: u8, imp: &str, n: usize) -> Value {
+    Value::obj(vec![
+        ("bits", Value::num(bits as f64)),
+        ("impl", Value::str_of(imp)),
+        ("n", Value::num(n as f64)),
+    ])
+}

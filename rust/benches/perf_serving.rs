@@ -55,7 +55,16 @@ fn run_trace(
 
 fn main() -> anyhow::Result<()> {
     let dir = std::env::var("ASYMKV_ARTIFACTS").unwrap_or("artifacts/small".into());
-    let rt = Arc::new(Runtime::load(&dir)?);
+    // CI's bench-smoke job runs without AOT artifacts: prove the target
+    // executes end-to-end where possible, skip cleanly where not
+    let rt = match Runtime::load(&dir) {
+        Ok(rt) => Arc::new(rt),
+        Err(e) if asymkv::util::bench::smoke() => {
+            println!("[bench-smoke] artifacts unavailable ({e}); skipping");
+            return Ok(());
+        }
+        Err(e) => return Err(e),
+    };
     let engine = Arc::new(Engine::new(rt, 2 << 30)?);
     let n = engine.manifest().n_layers;
     let n_req = 16;

@@ -19,7 +19,16 @@ use asymkv::workload::{self, tasks};
 
 fn main() -> anyhow::Result<()> {
     let dir = std::env::var("ASYMKV_ARTIFACTS").unwrap_or("artifacts/small".into());
-    let rt = Arc::new(Runtime::load(&dir)?);
+    // CI's bench-smoke job runs without AOT artifacts: prove the target
+    // executes end-to-end where possible, skip cleanly where not
+    let rt = match Runtime::load(&dir) {
+        Ok(rt) => Arc::new(rt),
+        Err(e) if asymkv::util::bench::smoke() => {
+            println!("[bench-smoke] artifacts unavailable ({e}); skipping");
+            return Ok(());
+        }
+        Err(e) => return Err(e),
+    };
     let engine = Engine::new(rt, 1 << 30)?;
     let m = engine.manifest();
     let n = m.n_layers;

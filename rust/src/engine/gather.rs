@@ -7,6 +7,7 @@
 //! outputs are discarded).
 
 use crate::kvcache::{LayerCache, SeqCache};
+use crate::quant::kernels;
 
 pub const NEG: f32 = -1e9;
 
@@ -76,7 +77,7 @@ pub fn gather_layer_args(
         v_bits,
     };
     if k_bits > 0 {
-        let t_pk = t * k_bits as usize / 8;
+        let t_pk = kernels::packed_len(t, k_bits);
         a.k_main = vec![0u8; b * h * t_pk * dh];
         a.k_scales = vec![0.0; b * h * (t / g) * dh];
         a.k_zeros = vec![0.0; b * h * (t / g) * dh];
@@ -86,7 +87,7 @@ pub fn gather_layer_args(
         a.k_zeros = vec![0.0; b * h];
     }
     if v_bits > 0 {
-        let dh_pk = dh * v_bits as usize / 8;
+        let dh_pk = kernels::packed_len(dh, v_bits);
         a.v_main = vec![0u8; b * h * t * dh_pk];
         a.v_scales = vec![0.0; b * h * t * (dh / g2)];
         a.v_zeros = vec![0.0; b * h * t * (dh / g2)];
@@ -98,8 +99,11 @@ pub fn gather_layer_args(
 
     for (slot, seq) in seqs.iter().enumerate() {
         let lc = &seq.layers[layer_idx];
-        debug_assert_eq!(lc.k_bits, k_bits, "mixed-policy batch");
-        debug_assert_eq!(lc.v_bits, v_bits, "mixed-policy batch");
+        // a mixed-policy batch would scatter into wrongly-sized packed
+        // buffers — corrupting cache state, not just wasting work — so this
+        // must hold in release builds too
+        assert_eq!(lc.k_bits, k_bits, "mixed-policy batch");
+        assert_eq!(lc.v_bits, v_bits, "mixed-policy batch");
         // main cache region: contiguous per-slot copy
         if k_bits > 0 {
             let n = lc.k_pk.len();

@@ -445,8 +445,8 @@ impl Engine {
             let exe = self.rt.executable(&art)?;
 
             // cache literals in ABI order
-            let t_pk = t_ctx * kb as usize / 8;
-            let dh_pk = dh * vb as usize / 8;
+            let t_pk = crate::quant::kernels::packed_len(t_ctx, kb);
+            let dh_pk = crate::quant::kernels::packed_len(dh, vb);
             let g2 = m.group.min(dh);
             let ks_dims: Vec<usize> =
                 if kb > 0 { vec![b_art, h, t_ctx / m.group, dh] } else { vec![b_art, h, 1, 1] };
@@ -525,23 +525,34 @@ impl Engine {
             let [x_out, k_chunk, v_chunk]: [Literal; 3] =
                 outs.try_into().map_err(|_| anyhow::anyhow!("bad outs"))?;
 
-            // append new K/V (only the valid tokens of each slot)
+            // append new K/V (only the valid tokens of each slot): transpose
+            // [H, C, Dh] → token-major [C, H, Dh] rows and hand the whole
+            // chunk to the batched append, which folds group-at-a-time
+            // through the kernels instead of churning the ring per token
             let k_host = to_f32_vec(&k_chunk)?; // [B, H, C, Dh]
             let v_host = to_f32_vec(&v_chunk)?;
             self.pool.with_seqs(ids, |seqs| {
-                let mut k_tok = vec![0f32; h * dh];
-                let mut v_tok = vec![0f32; h * dh];
+                let mut k_rows = vec![0f32; c * h * dh];
+                let mut v_rows = vec![0f32; c * h * dh];
                 for (slot, seq) in seqs.iter_mut().enumerate() {
-                    for j in 0..n_valid[slot] {
+                    let nv = n_valid[slot];
+                    if nv == 0 {
+                        continue;
+                    }
+                    for j in 0..nv {
                         for head in 0..h {
                             let src = ((slot * h + head) * c + j) * dh;
-                            k_tok[head * dh..(head + 1) * dh]
+                            k_rows[(j * h + head) * dh..(j * h + head + 1) * dh]
                                 .copy_from_slice(&k_host[src..src + dh]);
-                            v_tok[head * dh..(head + 1) * dh]
+                            v_rows[(j * h + head) * dh..(j * h + head + 1) * dh]
                                 .copy_from_slice(&v_host[src..src + dh]);
                         }
-                        seq.layers[layer].append_token(&k_tok, &v_tok);
                     }
+                    seq.layers[layer].append_tokens(
+                        nv,
+                        &k_rows[..nv * h * dh],
+                        &v_rows[..nv * h * dh],
+                    );
                 }
             })?;
             x_lit = x_out;

@@ -13,7 +13,8 @@
 //! packed region while n_res + C > R. Folding runs the same RTN math as the
 //! fold artifacts (bit-exact; asserted against golden.json).
 
-use crate::quant::rtn::{self, GroupParams};
+use crate::quant::kernels as rtn;
+use crate::quant::kernels::GroupParams;
 use crate::quant::Bits;
 
 /// Geometry shared by every layer cache of a model.
@@ -113,8 +114,8 @@ impl LayerCache {
     /// Returns the number of folds performed (engine metrics).
     pub fn append_token(&mut self, k: &[f32], v: &[f32]) -> usize {
         let hd = self.geo.n_heads * self.geo.d_head;
-        debug_assert_eq!(k.len(), hd);
-        debug_assert_eq!(v.len(), hd);
+        assert_eq!(k.len(), hd, "append_token: K row is not [H, Dh]");
+        assert_eq!(v.len(), hd, "append_token: V row is not [H, Dh]");
         let mut folds = 0;
         while self.res_len + 1 > self.geo.residual {
             self.fold_oldest_group();
@@ -153,6 +154,87 @@ impl LayerCache {
         }
         self.res_start = (self.res_start + g) % geo.residual;
         self.res_len -= g;
+        self.n_q += g;
+    }
+
+    /// Append `count` tokens in one call (`ks`/`vs` are token-major
+    /// [count, H, Dh] rows — `count` stacked [`LayerCache::append_token`]
+    /// rows). Groups that must fold are folded straight from the combined
+    /// ring + batch stream, so a prefill chunk performs its folds without
+    /// routing every token through the residual ring first. Semantically
+    /// identical to `count` sequential `append_token` calls (byte-identical
+    /// packed state and residual contents; prop-tested). Returns the number
+    /// of folds performed.
+    pub fn append_tokens(&mut self, count: usize, ks: &[f32], vs: &[f32]) -> usize {
+        let geo = self.geo;
+        let (h, dh, g, r) = (geo.n_heads, geo.d_head, geo.group, geo.residual);
+        let hd = h * dh;
+        assert_eq!(ks.len(), count * hd, "append_tokens: K rows are not [count, H, Dh]");
+        assert_eq!(vs.len(), count * hd, "append_tokens: V rows are not [count, H, Dh]");
+        // sequential appends fold as late as possible: ceil(overflow / G)
+        let folds = (self.res_len + count).saturating_sub(r).div_ceil(g);
+        assert!(self.n_q + folds * g <= geo.max_ctx, "quantized region full");
+        let mut consumed = 0; // batch tokens already folded
+        for _ in 0..folds {
+            if self.res_len >= g {
+                self.fold_oldest_group();
+            } else {
+                // the group spans the ring remainder plus the batch head
+                let from_ring = self.res_len;
+                let take = g - from_ring;
+                let mut kt = vec![0f32; g * hd];
+                let mut vt = vec![0f32; g * hd];
+                for t in 0..from_ring {
+                    let slot = (self.res_start + t) % r;
+                    kt[t * hd..(t + 1) * hd]
+                        .copy_from_slice(&self.res_k[slot * hd..(slot + 1) * hd]);
+                    vt[t * hd..(t + 1) * hd]
+                        .copy_from_slice(&self.res_v[slot * hd..(slot + 1) * hd]);
+                }
+                kt[from_ring * hd..].copy_from_slice(&ks[consumed * hd..(consumed + take) * hd]);
+                vt[from_ring * hd..].copy_from_slice(&vs[consumed * hd..(consumed + take) * hd]);
+                self.fold_group_rows(&kt, &vt);
+                self.res_start = (self.res_start + from_ring) % r;
+                self.res_len = 0;
+                consumed += take;
+            }
+        }
+        // bulk-append the remaining batch tokens into the ring, in
+        // contiguous runs up to the wrap point
+        let mut t = consumed;
+        while t < count {
+            let slot = (self.res_start + self.res_len + (t - consumed)) % r;
+            let run = (count - t).min(r - slot);
+            self.res_k[slot * hd..(slot + run) * hd]
+                .copy_from_slice(&ks[t * hd..(t + run) * hd]);
+            self.res_v[slot * hd..(slot + run) * hd]
+                .copy_from_slice(&vs[t * hd..(t + run) * hd]);
+            t += run;
+        }
+        self.res_len += count - consumed;
+        debug_assert!(self.res_len <= r);
+        folds
+    }
+
+    /// Fold one group given token-major [G, H, Dh] rows (shared by the
+    /// batched append path; the ring fold gathers per head directly).
+    fn fold_group_rows(&mut self, kt: &[f32], vt: &[f32]) {
+        let geo = self.geo;
+        let (h, dh, g) = (geo.n_heads, geo.d_head, geo.group);
+        assert!(self.n_q + g <= geo.max_ctx, "quantized region full");
+        let hd = h * dh;
+        let gi = self.n_q / g;
+        let mut kg = vec![0f32; g * dh];
+        let mut vg = vec![0f32; g * dh];
+        for head in 0..h {
+            for t in 0..g {
+                let src = t * hd + head * dh;
+                kg[t * dh..(t + 1) * dh].copy_from_slice(&kt[src..src + dh]);
+                vg[t * dh..(t + 1) * dh].copy_from_slice(&vt[src..src + dh]);
+            }
+            self.fold_k_head(head, gi, &kg);
+            self.fold_v_head(head, gi, &vg);
+        }
         self.n_q += g;
     }
 
@@ -474,6 +556,75 @@ mod tests {
             used.push(c.used_bytes());
         }
         assert!(used[0] < used[1] && used[1] < used[2]);
+    }
+
+    #[test]
+    fn append_tokens_matches_sequential_prop() {
+        check("append_tokens_eq", 20, |g: &mut Gen| {
+            let bits = *g.pick(&[0u8, 1, 2, 4]);
+            let mut seq = LayerCache::new(geo(), bits, bits);
+            let mut bat = LayerCache::new(geo(), bits, bits);
+            let hd = 2 * 32;
+            let mut total = 0usize;
+            let mut folds_seq = 0;
+            let mut folds_bat = 0;
+            // several batches of varying size, including ones larger than R
+            for _ in 0..g.usize_in(1, 4) {
+                let count = g.usize_in(0, 90);
+                if total + count > 128 {
+                    break;
+                }
+                total += count;
+                let ks = g.vec_normal(count * hd, 1.0);
+                let vs = g.vec_normal(count * hd, 1.0);
+                for t in 0..count {
+                    folds_seq +=
+                        seq.append_token(&ks[t * hd..(t + 1) * hd], &vs[t * hd..(t + 1) * hd]);
+                }
+                folds_bat += bat.append_tokens(count, &ks, &vs);
+            }
+            if folds_seq != folds_bat {
+                return Err(format!("fold count diverges: {folds_seq} vs {folds_bat}"));
+            }
+            if seq.n_q != bat.n_q || seq.n_res() != bat.n_res() {
+                return Err(format!(
+                    "state diverges: n_q {} vs {}, n_res {} vs {}",
+                    seq.n_q, bat.n_q, seq.n_res(), bat.n_res()
+                ));
+            }
+            if seq.k_pk != bat.k_pk || seq.v_pk != bat.v_pk {
+                return Err("packed bytes diverge".into());
+            }
+            if seq.k_scales != bat.k_scales || seq.v_scales != bat.v_scales
+                || seq.k_zeros != bat.k_zeros || seq.v_zeros != bat.v_zeros
+            {
+                return Err("group params diverge".into());
+            }
+            // residual ring contents must agree after compaction
+            if seq.dequant_k_full() != bat.dequant_k_full()
+                || seq.dequant_v_full() != bat.dequant_v_full()
+            {
+                return Err("reconstructed cache diverges".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn append_tokens_batch_larger_than_ring() {
+        // one call appending far more tokens than R must fold straight from
+        // the batch without ever overfilling the ring
+        let mut c = LayerCache::new(geo(), 2, 2);
+        let mut g = Gen { rng: crate::util::rng::SplitMix::new(9) };
+        let hd = 2 * 32;
+        let count = 128; // R = 64, G = 32
+        let ks = g.vec_normal(count * hd, 1.0);
+        let vs = g.vec_normal(count * hd, 1.0);
+        let folds = c.append_tokens(count, &ks, &vs);
+        assert_eq!(folds, 2);
+        assert_eq!(c.n_q, 64);
+        assert_eq!(c.n_res(), 64);
+        assert_eq!(c.n_tokens(), 128);
     }
 
     #[test]

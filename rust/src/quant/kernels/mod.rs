@@ -1,0 +1,488 @@
+//! RTN quantize / pack / unpack / dequantize kernel subsystem.
+//!
+//! Two interchangeable implementations behind one dispatching API:
+//!
+//! * [`scalar`] — the bit-exact reference (one value per operation; the
+//!   original `quant/rtn.rs` code, asserted against `golden.json`).
+//! * [`wordpack`] — the fast path: 64 bits of packed codes per `u64`
+//!   operation (8–64 values per word at bits ∈ {1, 2, 4, 8}), contiguous
+//!   strip processing, and a single-pass vectorizable min-max scan.
+//!
+//! The two are prop-tested to produce **byte-identical** packed output and
+//! identical `GroupParams`, so dispatch is purely a performance choice.
+//! Every public entry point takes the mode from [`active_mode`] (wordpack
+//! unless overridden) or explicitly via the `*_with` variants; the
+//! force-scalar escape hatch for debugging is `ASYMKV_KERNELS=scalar` (or
+//! the shorthand `ASYMKV_FORCE_SCALAR=1`).
+//!
+//! Scheme (paper Equ. 4-6, with the standard fix of the printed typo):
+//!   z = min(group), s = (max - min) / (2^b - 1)  [guarded: s=1 if span=0]
+//!   q = clip(round_ties_even((x - z) / s), 0, 2^b - 1)
+//!   x* = q * s + z
+//!
+//! Packing: value i of each run of 8/b values occupies bits [i·b, (i+1)·b)
+//! of its byte (little-endian within the byte).
+//!
+//! Size validation lives here, as real `assert!`s: the packed cache region
+//! is shared with the AOT artifacts, so a silent short write in `--release`
+//! (the old `debug_assert!`/`take(n)` behavior) could corrupt live cache
+//! memory instead of failing fast.
+
+pub mod scalar;
+pub mod wordpack;
+
+/// Quantization parameters for one group.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GroupParams {
+    pub scale: f32,
+    pub zero: f32,
+}
+
+/// Which kernel implementation a call should use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelMode {
+    /// Process-default: [`active_mode`] (wordpack unless overridden by env).
+    Auto,
+    /// Bit-exact scalar reference.
+    Scalar,
+    /// Word-parallel fast path.
+    Wordpack,
+}
+
+/// Process-wide kernel selection: `ASYMKV_KERNELS=scalar|wordpack`, or
+/// `ASYMKV_FORCE_SCALAR=1` as the debugging escape hatch; wordpack
+/// otherwise. Read once.
+pub fn active_mode() -> KernelMode {
+    static MODE: std::sync::OnceLock<KernelMode> = std::sync::OnceLock::new();
+    *MODE.get_or_init(|| {
+        if std::env::var("ASYMKV_FORCE_SCALAR").map(|v| v == "1").unwrap_or(false) {
+            return KernelMode::Scalar;
+        }
+        match std::env::var("ASYMKV_KERNELS").as_deref() {
+            Ok("scalar") => KernelMode::Scalar,
+            _ => KernelMode::Wordpack,
+        }
+    })
+}
+
+#[inline]
+fn resolve(mode: KernelMode) -> KernelMode {
+    match mode {
+        KernelMode::Auto => active_mode(),
+        m => m,
+    }
+}
+
+/// Number of packed bytes for `n` values at `bits`.
+pub fn packed_len(n: usize, bits: u8) -> usize {
+    n * bits as usize / 8
+}
+
+#[inline]
+fn check_bits(bits: u8) {
+    assert!(
+        matches!(bits, 1 | 2 | 4 | 8),
+        "kernel bits must be 1, 2, 4 or 8 (got {bits}; 0 = fp32 never reaches the kernels)"
+    );
+}
+
+/// Quantize one group of values; returns codes (as u8 values, unpacked).
+pub fn quantize_group(xs: &[f32], bits: u8, out: &mut [u8]) -> GroupParams {
+    quantize_group_with(KernelMode::Auto, xs, bits, out)
+}
+
+pub fn quantize_group_with(
+    mode: KernelMode,
+    xs: &[f32],
+    bits: u8,
+    out: &mut [u8],
+) -> GroupParams {
+    check_bits(bits);
+    assert_eq!(xs.len(), out.len(), "quantize_group: codes buffer length mismatch");
+    match resolve(mode) {
+        KernelMode::Scalar => scalar::quantize_group(xs, bits, out),
+        _ => wordpack::quantize_group(xs, bits, out),
+    }
+}
+
+/// Dequantize codes with group params: x* = q·s + z.
+pub fn dequantize_group(codes: &[u8], p: GroupParams, out: &mut [f32]) {
+    dequantize_group_with(KernelMode::Auto, codes, p, out)
+}
+
+pub fn dequantize_group_with(mode: KernelMode, codes: &[u8], p: GroupParams, out: &mut [f32]) {
+    assert_eq!(codes.len(), out.len(), "dequantize_group: output length mismatch");
+    match resolve(mode) {
+        KernelMode::Scalar => scalar::dequantize_group(codes, p, out),
+        _ => wordpack::dequantize_group(codes, p, out),
+    }
+}
+
+/// Pack `codes` (< 2^bits each) into bytes; `codes.len()` must be a
+/// multiple of 8/bits and `out` must hold the packed length. Returns the
+/// number of bytes written.
+pub fn pack_bits(codes: &[u8], bits: u8, out: &mut [u8]) -> usize {
+    pack_bits_with(KernelMode::Auto, codes, bits, out)
+}
+
+pub fn pack_bits_with(mode: KernelMode, codes: &[u8], bits: u8, out: &mut [u8]) -> usize {
+    check_bits(bits);
+    let vpb = (8 / bits) as usize;
+    assert_eq!(
+        codes.len() % vpb,
+        0,
+        "pack_bits: {} codes do not fill whole bytes at {bits}-bit",
+        codes.len()
+    );
+    let nbytes = codes.len() / vpb;
+    assert!(
+        out.len() >= nbytes,
+        "pack_bits: output holds {} bytes, need {nbytes}",
+        out.len()
+    );
+    match resolve(mode) {
+        KernelMode::Scalar => scalar::pack_bits(codes, bits, out),
+        _ => wordpack::pack_bits(codes, bits, out),
+    }
+}
+
+/// Unpack bytes into codes; inverse of [`pack_bits`].
+pub fn unpack_bits(packed: &[u8], bits: u8, out: &mut [u8]) {
+    unpack_bits_with(KernelMode::Auto, packed, bits, out)
+}
+
+pub fn unpack_bits_with(mode: KernelMode, packed: &[u8], bits: u8, out: &mut [u8]) {
+    check_bits(bits);
+    let vpb = (8 / bits) as usize;
+    assert!(
+        out.len() >= packed.len() * vpb,
+        "unpack_bits: output holds {} codes, need {}",
+        out.len(),
+        packed.len() * vpb
+    );
+    match resolve(mode) {
+        KernelMode::Scalar => scalar::unpack_bits(packed, bits, out),
+        _ => wordpack::unpack_bits(packed, bits, out),
+    }
+}
+
+/// Quantize + pack a [G, Dh] row-major K group *per channel* (one
+/// scale/zero per channel d across the G tokens). Outputs: packed
+/// [G·bits/8, Dh] row-major, params[d] per channel.
+pub fn fold_k_group(
+    kg: &[f32],
+    g: usize,
+    dh: usize,
+    bits: u8,
+    packed: &mut [u8],
+    params: &mut [GroupParams],
+) {
+    fold_k_group_with(KernelMode::Auto, kg, g, dh, bits, packed, params)
+}
+
+pub fn fold_k_group_with(
+    mode: KernelMode,
+    kg: &[f32],
+    g: usize,
+    dh: usize,
+    bits: u8,
+    packed: &mut [u8],
+    params: &mut [GroupParams],
+) {
+    check_bits(bits);
+    let vpb = (8 / bits) as usize;
+    assert_eq!(kg.len(), g * dh, "fold_k_group: input is not [G={g}, Dh={dh}]");
+    assert_eq!(g % vpb, 0, "fold_k_group: G={g} not a multiple of {vpb} at {bits}-bit");
+    assert_eq!(
+        packed.len(),
+        packed_len(g, bits) * dh,
+        "fold_k_group: packed region size mismatch"
+    );
+    assert_eq!(params.len(), dh, "fold_k_group: params length != Dh");
+    match resolve(mode) {
+        KernelMode::Scalar => scalar::fold_k_group(kg, g, dh, bits, packed, params),
+        _ => wordpack::fold_k_group(kg, g, dh, bits, packed, params),
+    }
+}
+
+/// Dequantize a packed K region back to [G, Dh] floats.
+pub fn unfold_k_group(
+    packed: &[u8],
+    g: usize,
+    dh: usize,
+    bits: u8,
+    params: &[GroupParams],
+    out: &mut [f32],
+) {
+    unfold_k_group_with(KernelMode::Auto, packed, g, dh, bits, params, out)
+}
+
+pub fn unfold_k_group_with(
+    mode: KernelMode,
+    packed: &[u8],
+    g: usize,
+    dh: usize,
+    bits: u8,
+    params: &[GroupParams],
+    out: &mut [f32],
+) {
+    check_bits(bits);
+    let vpb = (8 / bits) as usize;
+    assert_eq!(g % vpb, 0, "unfold_k_group: G={g} not a multiple of {vpb} at {bits}-bit");
+    assert_eq!(
+        packed.len(),
+        packed_len(g, bits) * dh,
+        "unfold_k_group: packed region size mismatch"
+    );
+    assert_eq!(params.len(), dh, "unfold_k_group: params length != Dh");
+    assert_eq!(out.len(), g * dh, "unfold_k_group: output is not [G={g}, Dh={dh}]");
+    match resolve(mode) {
+        KernelMode::Scalar => scalar::unfold_k_group(packed, g, dh, bits, params, out),
+        _ => wordpack::unfold_k_group(packed, g, dh, bits, params, out),
+    }
+}
+
+/// Quantize + pack a [G, Dh] V group *per token* (groups of g2 channels per
+/// token). Outputs packed [G, Dh·bits/8] row-major, params[t * dg + gi].
+pub fn fold_v_group(
+    vg: &[f32],
+    g: usize,
+    dh: usize,
+    g2: usize,
+    bits: u8,
+    packed: &mut [u8],
+    params: &mut [GroupParams],
+) {
+    fold_v_group_with(KernelMode::Auto, vg, g, dh, g2, bits, packed, params)
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn fold_v_group_with(
+    mode: KernelMode,
+    vg: &[f32],
+    g: usize,
+    dh: usize,
+    g2: usize,
+    bits: u8,
+    packed: &mut [u8],
+    params: &mut [GroupParams],
+) {
+    check_v_shape(dh, g2, bits);
+    assert_eq!(vg.len(), g * dh, "fold_v_group: input is not [G={g}, Dh={dh}]");
+    assert_eq!(
+        packed.len(),
+        g * packed_len(dh, bits),
+        "fold_v_group: packed region size mismatch"
+    );
+    assert_eq!(params.len(), g * (dh / g2), "fold_v_group: params length != G*Dh/g2");
+    match resolve(mode) {
+        KernelMode::Scalar => scalar::fold_v_group(vg, g, dh, g2, bits, packed, params),
+        _ => wordpack::fold_v_group(vg, g, dh, g2, bits, packed, params),
+    }
+}
+
+/// Dequantize a packed V region back to [G, Dh] floats.
+pub fn unfold_v_group(
+    packed: &[u8],
+    g: usize,
+    dh: usize,
+    g2: usize,
+    bits: u8,
+    params: &[GroupParams],
+    out: &mut [f32],
+) {
+    unfold_v_group_with(KernelMode::Auto, packed, g, dh, g2, bits, params, out)
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn unfold_v_group_with(
+    mode: KernelMode,
+    packed: &[u8],
+    g: usize,
+    dh: usize,
+    g2: usize,
+    bits: u8,
+    params: &[GroupParams],
+    out: &mut [f32],
+) {
+    check_v_shape(dh, g2, bits);
+    assert_eq!(
+        packed.len(),
+        g * packed_len(dh, bits),
+        "unfold_v_group: packed region size mismatch"
+    );
+    assert_eq!(params.len(), g * (dh / g2), "unfold_v_group: params length != G*Dh/g2");
+    assert_eq!(out.len(), g * dh, "unfold_v_group: output is not [G={g}, Dh={dh}]");
+    match resolve(mode) {
+        KernelMode::Scalar => scalar::unfold_v_group(packed, g, dh, g2, bits, params, out),
+        _ => wordpack::unfold_v_group(packed, g, dh, g2, bits, params, out),
+    }
+}
+
+#[inline]
+fn check_v_shape(dh: usize, g2: usize, bits: u8) {
+    check_bits(bits);
+    let vpb = (8 / bits) as usize;
+    assert!(g2 > 0 && dh % g2 == 0, "V kernel: Dh={dh} not a multiple of g2={g2}");
+    assert_eq!(g2 % vpb, 0, "V kernel: g2={g2} not a multiple of {vpb} at {bits}-bit");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    #[test]
+    fn pack_layout_little_endian() {
+        // 1-bit: [1,0,1,0,1,1,0,1] -> 0b10110101 (mirrors the python test)
+        let codes = [1u8, 0, 1, 0, 1, 1, 0, 1];
+        for mode in [KernelMode::Scalar, KernelMode::Wordpack] {
+            let mut out = [0u8; 1];
+            assert_eq!(pack_bits_with(mode, &codes, 1, &mut out), 1);
+            assert_eq!(out[0], 0b1011_0101);
+            // 2-bit: [3,0,2,1] -> 0b01_10_00_11
+            let mut out2 = [0u8; 1];
+            pack_bits_with(mode, &[3, 0, 2, 1], 2, &mut out2);
+            assert_eq!(out2[0], 0b0110_0011);
+        }
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_prop() {
+        check("pack_unpack", 200, |g: &mut Gen| {
+            let bits = *g.pick(&[1u8, 2, 4, 8]);
+            let mode = *g.pick(&[KernelMode::Scalar, KernelMode::Wordpack]);
+            let vpb = (8 / bits) as usize;
+            let n = g.usize_in(1, 16) * vpb;
+            let codes: Vec<u8> = (0..n)
+                .map(|_| g.usize_in(0, (1usize << bits) - 1) as u8)
+                .collect();
+            let mut packed = vec![0u8; packed_len(n, bits)];
+            pack_bits_with(mode, &codes, bits, &mut packed);
+            let mut un = vec![0u8; n];
+            unpack_bits_with(mode, &packed, bits, &mut un);
+            if un != codes {
+                return Err(format!("roundtrip mismatch bits={bits} n={n} mode={mode:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn quantize_error_bound_prop() {
+        check("rtn_bound", 200, |g: &mut Gen| {
+            let bits = *g.pick(&[1u8, 2, 4]);
+            let n = g.usize_in(2, 64);
+            let xs = g.vec_normal(n, 3.0);
+            let mut codes = vec![0u8; n];
+            let p = quantize_group(&xs, bits, &mut codes);
+            let mut deq = vec![0f32; n];
+            dequantize_group(&codes, p, &mut deq);
+            for (x, d) in xs.iter().zip(&deq) {
+                if (x - d).abs() > p.scale * 0.5 + 1e-5 {
+                    return Err(format!("|{x} - {d}| > s/2 = {}", p.scale * 0.5));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn constant_group_exact() {
+        let xs = [0.73f32; 32];
+        let mut codes = [0u8; 32];
+        let p = quantize_group(&xs, 2, &mut codes);
+        assert!(codes.iter().all(|&c| c == 0));
+        assert_eq!(p.scale, 1.0);
+        let mut deq = [0f32; 32];
+        dequantize_group(&codes, p, &mut deq);
+        assert!(deq.iter().all(|&d| (d - 0.73).abs() < 1e-6));
+    }
+
+    #[test]
+    fn fold_unfold_k_roundtrip_prop() {
+        check("fold_k", 60, |g: &mut Gen| {
+            let bits = *g.pick(&[1u8, 2, 4]);
+            let mode = *g.pick(&[KernelMode::Scalar, KernelMode::Wordpack]);
+            let (gg, dh) = (32usize, 32usize);
+            let kg = g.vec_normal(gg * dh, 2.0);
+            let mut packed = vec![0u8; packed_len(gg, bits) * dh];
+            let mut params = vec![GroupParams { scale: 0.0, zero: 0.0 }; dh];
+            fold_k_group_with(mode, &kg, gg, dh, bits, &mut packed, &mut params);
+            let mut out = vec![0f32; gg * dh];
+            unfold_k_group_with(mode, &packed, gg, dh, bits, &params, &mut out);
+            for d in 0..dh {
+                for t in 0..gg {
+                    let (x, y) = (kg[t * dh + d], out[t * dh + d]);
+                    if (x - y).abs() > params[d].scale * 0.5 + 1e-5 {
+                        return Err(format!("k fold err d={d} t={t}: {x} vs {y}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fold_unfold_v_roundtrip_prop() {
+        check("fold_v", 60, |g: &mut Gen| {
+            let bits = *g.pick(&[1u8, 2, 4]);
+            let mode = *g.pick(&[KernelMode::Scalar, KernelMode::Wordpack]);
+            let (gg, dh, g2) = (32usize, 32usize, 32usize);
+            let vg = g.vec_normal(gg * dh, 2.0);
+            let mut packed = vec![0u8; gg * packed_len(dh, bits)];
+            let mut params =
+                vec![GroupParams { scale: 0.0, zero: 0.0 }; gg * (dh / g2)];
+            fold_v_group_with(mode, &vg, gg, dh, g2, bits, &mut packed, &mut params);
+            let mut out = vec![0f32; gg * dh];
+            unfold_v_group_with(mode, &packed, gg, dh, g2, bits, &params, &mut out);
+            for i in 0..gg * dh {
+                let s = params[i / dh].scale;
+                if (vg[i] - out[i]).abs() > s * 0.5 + 1e-5 {
+                    return Err(format!("v fold err at {i}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let mut g = Gen { rng: crate::util::rng::SplitMix::new(5) };
+        let xs = g.vec_normal(64, 1.0);
+        let mut errs = vec![];
+        for bits in [1u8, 2, 4, 8] {
+            let mut codes = vec![0u8; 64];
+            let p = quantize_group(&xs, bits, &mut codes);
+            let mut deq = vec![0f32; 64];
+            dequantize_group(&codes, p, &mut deq);
+            errs.push(crate::util::stats::mse(&xs, &deq));
+        }
+        assert!(errs[0] > errs[1] && errs[1] > errs[2] && errs[2] > errs[3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "pack_bits: output holds")]
+    fn pack_bits_short_output_fails_fast() {
+        // the old reference silently truncated via `take(nbytes)` — a short
+        // destination must now fail loudly in release builds too
+        let codes = [1u8; 16];
+        let mut out = [0u8; 1]; // needs 2 bytes at 1-bit
+        pack_bits(&codes, 1, &mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a multiple")]
+    fn pack_bits_partial_byte_fails_fast() {
+        let codes = [1u8; 7]; // 7 one-bit codes do not fill a byte
+        let mut out = [0u8; 1];
+        pack_bits(&codes, 1, &mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "kernel bits must be")]
+    fn bits_zero_rejected() {
+        let mut out = [0u8; 4];
+        pack_bits(&[0u8; 4], 0, &mut out);
+    }
+}

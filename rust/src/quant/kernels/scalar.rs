@@ -1,0 +1,192 @@
+//! Scalar reference kernels: one value at a time, per-bit shifts.
+//!
+//! This is the original `quant/rtn.rs` implementation, kept verbatim as the
+//! bit-exact reference (golden vectors from `golden.json` are asserted
+//! against it in `rust/tests/golden.rs`, and `wordpack` is prop-tested for
+//! byte-identical output against it). Argument validation lives in the
+//! dispatch layer ([`super`]); these bodies assume well-formed sizes.
+
+use super::GroupParams;
+
+/// Quantize one group of values; returns codes (as u8 values, unpacked).
+pub fn quantize_group(xs: &[f32], bits: u8, out: &mut [u8]) -> GroupParams {
+    let qmax = ((1u32 << bits) - 1) as f32;
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &x in xs {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    let span = hi - lo;
+    let scale = if span > 0.0 { span / qmax } else { 1.0 };
+    for (o, &x) in out.iter_mut().zip(xs) {
+        // round-half-to-even matches jnp.round
+        let q = ((x - lo) / scale).round_ties_even().clamp(0.0, qmax);
+        *o = q as u8;
+    }
+    GroupParams { scale, zero: lo }
+}
+
+/// Dequantize codes with group params: x* = q·s + z.
+pub fn dequantize_group(codes: &[u8], p: GroupParams, out: &mut [f32]) {
+    for (o, &q) in out.iter_mut().zip(codes) {
+        *o = q as f32 * p.scale + p.zero;
+    }
+}
+
+/// Pack `codes` (< 2^bits each) into bytes. Returns number of bytes written.
+pub fn pack_bits(codes: &[u8], bits: u8, out: &mut [u8]) -> usize {
+    let vpb = (8 / bits) as usize;
+    let nbytes = codes.len() / vpb;
+    for (i, byte) in out.iter_mut().take(nbytes).enumerate() {
+        let mut b = 0u8;
+        for j in 0..vpb {
+            b |= codes[i * vpb + j] << (j as u8 * bits);
+        }
+        *byte = b;
+    }
+    nbytes
+}
+
+/// Unpack bytes into codes; inverse of [`pack_bits`].
+pub fn unpack_bits(packed: &[u8], bits: u8, out: &mut [u8]) {
+    let vpb = (8 / bits) as usize;
+    let mask = ((1u16 << bits) - 1) as u8;
+    for (i, &byte) in packed.iter().enumerate() {
+        for j in 0..vpb {
+            out[i * vpb + j] = (byte >> (j as u8 * bits)) & mask;
+        }
+    }
+}
+
+/// Quantize + pack a [G, Dh] row-major K group *per channel*.
+pub fn fold_k_group(
+    kg: &[f32],
+    g: usize,
+    dh: usize,
+    bits: u8,
+    packed: &mut [u8],
+    params: &mut [GroupParams],
+) {
+    let vpb = (8 / bits) as usize;
+    let rows_pk = g / vpb;
+    let qmax = ((1u32 << bits) - 1) as f32;
+    for d in 0..dh {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for t in 0..g {
+            let x = kg[t * dh + d];
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        let span = hi - lo;
+        let scale = if span > 0.0 { span / qmax } else { 1.0 };
+        params[d] = GroupParams { scale, zero: lo };
+        // pack along tokens: token t sits at byte t/vpb, bit (t%vpb)*bits
+        for bp in 0..rows_pk {
+            let mut byte = 0u8;
+            for j in 0..vpb {
+                let t = bp * vpb + j;
+                let q = ((kg[t * dh + d] - lo) / scale)
+                    .round_ties_even()
+                    .clamp(0.0, qmax) as u8;
+                byte |= q << (j as u8 * bits);
+            }
+            packed[bp * dh + d] = byte;
+        }
+    }
+}
+
+/// Dequantize a packed K region back to [G, Dh] floats.
+pub fn unfold_k_group(
+    packed: &[u8],
+    g: usize,
+    dh: usize,
+    bits: u8,
+    params: &[GroupParams],
+    out: &mut [f32],
+) {
+    let vpb = (8 / bits) as usize;
+    let mask = ((1u16 << bits) - 1) as u8;
+    for d in 0..dh {
+        let p = params[d];
+        for bp in 0..g / vpb {
+            let byte = packed[bp * dh + d];
+            for j in 0..vpb {
+                let t = bp * vpb + j;
+                let q = (byte >> (j as u8 * bits)) & mask;
+                out[t * dh + d] = q as f32 * p.scale + p.zero;
+            }
+        }
+    }
+}
+
+/// Quantize + pack a [G, Dh] V group *per token* (groups of g2 channels).
+pub fn fold_v_group(
+    vg: &[f32],
+    g: usize,
+    dh: usize,
+    g2: usize,
+    bits: u8,
+    packed: &mut [u8],
+    params: &mut [GroupParams],
+) {
+    let dg = dh / g2;
+    let bytes_per_tok = dh * bits as usize / 8;
+    let vpb = (8 / bits) as usize;
+    let qmax = ((1u32 << bits) - 1) as f32;
+    for t in 0..g {
+        let row = &vg[t * dh..(t + 1) * dh];
+        for gi in 0..dg {
+            let seg = &row[gi * g2..(gi + 1) * g2];
+            let mut lo = f32::INFINITY;
+            let mut hi = f32::NEG_INFINITY;
+            for &x in seg {
+                lo = lo.min(x);
+                hi = hi.max(x);
+            }
+            let span = hi - lo;
+            let scale = if span > 0.0 { span / qmax } else { 1.0 };
+            params[t * dg + gi] = GroupParams { scale, zero: lo };
+            for bp in 0..g2 / vpb {
+                let mut byte = 0u8;
+                for j in 0..vpb {
+                    let q = ((seg[bp * vpb + j] - lo) / scale)
+                        .round_ties_even()
+                        .clamp(0.0, qmax) as u8;
+                    byte |= q << (j as u8 * bits);
+                }
+                packed[t * bytes_per_tok + gi * (g2 / vpb) + bp] = byte;
+            }
+        }
+    }
+}
+
+/// Dequantize a packed V region back to [G, Dh] floats.
+pub fn unfold_v_group(
+    packed: &[u8],
+    g: usize,
+    dh: usize,
+    g2: usize,
+    bits: u8,
+    params: &[GroupParams],
+    out: &mut [f32],
+) {
+    let dg = dh / g2;
+    let bytes_per_tok = dh * bits as usize / 8;
+    let vpb = (8 / bits) as usize;
+    let mask = ((1u16 << bits) - 1) as u8;
+    for t in 0..g {
+        for gi in 0..dg {
+            let p = params[t * dg + gi];
+            for bp in 0..g2 / vpb {
+                let byte = packed[t * bytes_per_tok + gi * (g2 / vpb) + bp];
+                for j in 0..vpb {
+                    let q = (byte >> (j as u8 * bits)) & mask;
+                    out[t * dh + gi * g2 + bp * vpb + j] =
+                        q as f32 * p.scale + p.zero;
+                }
+            }
+        }
+    }
+}

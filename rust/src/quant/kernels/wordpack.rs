@@ -1,0 +1,556 @@
+//! Word-parallel kernels: 64 bits of packed codes per `u64` operation.
+//!
+//! Bit-exact with [`super::scalar`] (prop-tested for byte-identical packed
+//! output and identical `GroupParams`; golden-tested through the dispatch
+//! layer). Three ideas make this the fast path:
+//!
+//! 1. **Contiguous strips.** The K-side min-max scan and quantization walk
+//!    token rows (stride 1) with per-channel accumulator arrays instead of
+//!    scanning each channel down the token axis (stride Dh), so the whole
+//!    hot loop autovectorizes; V-side rows were already contiguous.
+//! 2. **u64 pack/unpack.** Codes occupy bits [j·b, (j+1)·b) of their byte
+//!    (little-endian), so 8 bytes of codes form one `u64` whose lanes can
+//!    be combined with log2(8/b) shift/OR folds — 8–64 values move per word
+//!    operation instead of one value per shift.
+//! 3. **Magic-number rounding.** `(x + 2^23) - 2^23` is exact
+//!    round-half-to-even for f32 in [0, 2^23), which covers the quantizer
+//!    domain [0, qmax]; unlike `round_ties_even` it lowers to plain adds
+//!    on every target, so the quantize loop vectorizes on baseline x86-64.
+
+use super::GroupParams;
+
+/// 2^23: f32 spacing is 1.0 in [2^23, 2^24), so `(x + MAGIC) - MAGIC`
+/// performs IEEE round-to-nearest-even of `x` for 0 <= x < 2^23.
+const MAGIC: f32 = 8_388_608.0;
+
+/// `0x4B000000 | q` is the bit pattern of `2^23 + q` for 0 <= q < 2^23:
+/// subtracting [`MAGIC`] recovers `q as f32` with float ops only, so the
+/// dequant sweep carries no int→float conversion instruction.
+const MAGIC_BITS: u32 = 0x4B00_0000;
+
+/// Exact round-half-to-even on the quantizer domain [0, qmax] (NaN
+/// propagates, matching `f32::round_ties_even`).
+#[inline(always)]
+fn rte(x: f32) -> f32 {
+    (x + MAGIC) - MAGIC
+}
+
+/// Clamp the rounded value into [0, qmax] with branch-free selects and
+/// truncate to the code. Bit-identical to the reference
+/// `.clamp(0.0, qmax) as u8` for every input including NaN (the second
+/// select turns NaN into 0, exactly like the saturating cast), but unlike
+/// `f32::clamp` it compiles to min/max selects the autovectorizer handles.
+#[inline(always)]
+fn code_of(q: f32, qmax: f32) -> u8 {
+    let q = if q > qmax { qmax } else { q };
+    let q = if q > 0.0 { q } else { 0.0 };
+    q as u8
+}
+
+/// Low `bits` of every byte lane set (the per-lane code mask).
+#[inline(always)]
+fn lane_mask(bits: u8) -> u64 {
+    match bits {
+        1 => 0x0101_0101_0101_0101,
+        2 => 0x0303_0303_0303_0303,
+        4 => 0x0f0f_0f0f_0f0f_0f0f,
+        _ => u64::MAX,
+    }
+}
+
+/// Compress 8 code bytes (one per lane of `w`, low `bits` bits used) into
+/// `bits` packed output bytes, returned in the low lanes of the result.
+///
+/// Each shift moves a lane's code next to its neighbour without crossing
+/// byte boundaries (code < 2^b and j·b + b <= 8), so one fold halves the
+/// number of partially-packed lanes.
+#[inline(always)]
+fn compress8(w: u64, bits: u8) -> u64 {
+    match bits {
+        1 => {
+            let w = w | (w >> 7);
+            let w = w | (w >> 14);
+            (w | (w >> 28)) & 0xff
+        }
+        2 => {
+            let w = w | (w >> 6);
+            let w = w | (w >> 12);
+            (w & 0xff) | (((w >> 32) & 0xff) << 8)
+        }
+        4 => {
+            let w = w | (w >> 4);
+            (w & 0xff)
+                | (((w >> 16) & 0xff) << 8)
+                | (((w >> 32) & 0xff) << 16)
+                | (((w >> 48) & 0xff) << 24)
+        }
+        _ => w,
+    }
+}
+
+/// Inverse of [`compress8`]: spread `bits` packed bytes (low lanes of `p`)
+/// into 8 code bytes, one per lane.
+#[inline(always)]
+fn spread8(p: u64, bits: u8) -> u64 {
+    match bits {
+        1 => {
+            let w = (p | (p << 28)) & 0x0000_000f_0000_000f;
+            let w = (w | (w << 14)) & 0x0003_0003_0003_0003;
+            (w | (w << 7)) & 0x0101_0101_0101_0101
+        }
+        2 => {
+            let w = (p & 0xff) | ((p & 0xff00) << 24);
+            let w = (w | (w << 12)) & 0x000f_000f_000f_000f;
+            (w | (w << 6)) & 0x0303_0303_0303_0303
+        }
+        4 => {
+            let w = (p & 0xff)
+                | ((p & 0xff00) << 8)
+                | ((p & 0x00ff_0000) << 16)
+                | ((p & 0xff00_0000) << 24);
+            (w | (w << 4)) & 0x0f0f_0f0f_0f0f_0f0f
+        }
+        _ => p,
+    }
+}
+
+#[inline(always)]
+fn load8(bytes: &[u8]) -> u64 {
+    u64::from_le_bytes(bytes[..8].try_into().unwrap())
+}
+
+/// Contiguous min/max scan. Comparison-selects instead of `f32::min`/`max`:
+/// same result for every input (both forms keep the accumulator when `x` is
+/// NaN), but selects vectorize on the baseline target where the
+/// NaN-symmetric builtins do not.
+#[inline]
+fn minmax(xs: &[f32]) -> (f32, f32) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &x in xs {
+        lo = if x < lo { x } else { lo };
+        hi = if x > hi { x } else { hi };
+    }
+    (lo, hi)
+}
+
+/// Quantize a contiguous run against one (zero, scale) pair.
+#[inline]
+fn quantize_run(xs: &[f32], lo: f32, scale: f32, qmax: f32, out: &mut [u8]) {
+    for (o, &x) in out.iter_mut().zip(xs) {
+        *o = code_of(rte((x - lo) / scale), qmax);
+    }
+}
+
+/// Quantize one group of values; returns codes (as u8 values, unpacked).
+pub fn quantize_group(xs: &[f32], bits: u8, out: &mut [u8]) -> GroupParams {
+    let qmax = ((1u32 << bits) - 1) as f32;
+    let (lo, hi) = minmax(xs);
+    let span = hi - lo;
+    let scale = if span > 0.0 { span / qmax } else { 1.0 };
+    quantize_run(xs, lo, scale, qmax, out);
+    GroupParams { scale, zero: lo }
+}
+
+/// Dequantize codes with group params: x* = q·s + z.
+pub fn dequantize_group(codes: &[u8], p: GroupParams, out: &mut [f32]) {
+    for (o, &q) in out.iter_mut().zip(codes) {
+        *o = q as f32 * p.scale + p.zero;
+    }
+}
+
+/// Pack contiguous `codes` into bytes, 8 code bytes per `u64` step.
+pub fn pack_bits(codes: &[u8], bits: u8, out: &mut [u8]) -> usize {
+    let vpb = (8 / bits) as usize;
+    let nbytes = codes.len() / vpb;
+    if bits == 8 {
+        out[..nbytes].copy_from_slice(codes);
+        return nbytes;
+    }
+    let ob = bits as usize; // packed bytes produced per 8 codes
+    let full = codes.len() / 8;
+    for i in 0..full {
+        let packed = compress8(load8(&codes[i * 8..]), bits);
+        out[i * ob..i * ob + ob].copy_from_slice(&packed.to_le_bytes()[..ob]);
+    }
+    // scalar tail: codes.len() is a multiple of vpb but not of 8
+    let (mut ci, mut oi) = (full * 8, full * ob);
+    while ci < codes.len() {
+        let mut b = 0u8;
+        for j in 0..vpb {
+            b |= codes[ci + j] << (j as u8 * bits);
+        }
+        out[oi] = b;
+        oi += 1;
+        ci += vpb;
+    }
+    nbytes
+}
+
+/// Unpack bytes into codes; inverse of [`pack_bits`].
+pub fn unpack_bits(packed: &[u8], bits: u8, out: &mut [u8]) {
+    let vpb = (8 / bits) as usize;
+    if bits == 8 {
+        out[..packed.len()].copy_from_slice(packed);
+        return;
+    }
+    let ib = bits as usize; // packed bytes consumed per 8 codes
+    let full = packed.len() / ib;
+    for i in 0..full {
+        let mut buf = [0u8; 8];
+        buf[..ib].copy_from_slice(&packed[i * ib..i * ib + ib]);
+        let w = spread8(u64::from_le_bytes(buf), bits);
+        out[i * 8..i * 8 + 8].copy_from_slice(&w.to_le_bytes());
+    }
+    let mask = ((1u16 << bits) - 1) as u8;
+    let (mut pi, mut oi) = (full * ib, full * 8);
+    while pi < packed.len() {
+        let byte = packed[pi];
+        for j in 0..vpb {
+            out[oi + j] = (byte >> (j as u8 * bits)) & mask;
+        }
+        oi += vpb;
+        pi += 1;
+    }
+}
+
+/// Quantize + pack a [G, Dh] row-major K group *per channel*.
+///
+/// Single row-major pass for the min/max scan (per-channel accumulators),
+/// contiguous row quantization, then a u64 combine of the 8/b token rows
+/// that share each packed row — 8 output bytes per word operation.
+pub fn fold_k_group(
+    kg: &[f32],
+    g: usize,
+    dh: usize,
+    bits: u8,
+    packed: &mut [u8],
+    params: &mut [GroupParams],
+) {
+    let vpb = (8 / bits) as usize;
+    let qmax = ((1u32 << bits) - 1) as f32;
+    let mut lo = vec![f32::INFINITY; dh];
+    let mut hi = vec![f32::NEG_INFINITY; dh];
+    for t in 0..g {
+        let row = &kg[t * dh..(t + 1) * dh];
+        for d in 0..dh {
+            let x = row[d];
+            lo[d] = if x < lo[d] { x } else { lo[d] };
+            hi[d] = if x > hi[d] { x } else { hi[d] };
+        }
+    }
+    let mut scale = vec![0f32; dh];
+    for d in 0..dh {
+        let span = hi[d] - lo[d];
+        scale[d] = if span > 0.0 { span / qmax } else { 1.0 };
+        params[d] = GroupParams { scale: scale[d], zero: lo[d] };
+    }
+    let mut codes = vec![0u8; g * dh];
+    for t in 0..g {
+        let row = &kg[t * dh..(t + 1) * dh];
+        let crow = &mut codes[t * dh..(t + 1) * dh];
+        for d in 0..dh {
+            crow[d] = code_of(rte((row[d] - lo[d]) / scale[d]), qmax);
+        }
+    }
+    for bp in 0..g / vpb {
+        let base = bp * vpb * dh;
+        let out_row = &mut packed[bp * dh..(bp + 1) * dh];
+        let mut d = 0;
+        while d + 8 <= dh {
+            let mut acc = 0u64;
+            for j in 0..vpb {
+                // code < 2^b and j·b + b <= 8 keep every lane's shifted
+                // code inside its own byte, so a whole-word shift is a
+                // lane-wise shift here
+                acc |= load8(&codes[base + j * dh + d..]) << (j as u32 * bits as u32);
+            }
+            out_row[d..d + 8].copy_from_slice(&acc.to_le_bytes());
+            d += 8;
+        }
+        while d < dh {
+            let mut b = 0u8;
+            for j in 0..vpb {
+                b |= codes[base + j * dh + d] << (j as u8 * bits);
+            }
+            out_row[d] = b;
+            d += 1;
+        }
+    }
+}
+
+/// Dequantize a packed K region back to [G, Dh] floats.
+///
+/// Two phases: a word-parallel unpack into token-major code rows, then a
+/// contiguous dequant sweep per row against the per-channel params — with
+/// the codes pre-biased into the mantissa of 2^23 so the sweep is pure
+/// float arithmetic (see [`MAGIC_BITS`]).
+pub fn unfold_k_group(
+    packed: &[u8],
+    g: usize,
+    dh: usize,
+    bits: u8,
+    params: &[GroupParams],
+    out: &mut [f32],
+) {
+    let vpb = (8 / bits) as usize;
+    let lm = lane_mask(bits);
+    let mask = ((1u16 << bits) - 1) as u8;
+    let mut codes = vec![0u8; g * dh];
+    let mut scale = vec![0f32; dh];
+    let mut zero = vec![0f32; dh];
+    for d in 0..dh {
+        scale[d] = params[d].scale;
+        zero[d] = params[d].zero;
+    }
+    for bp in 0..g / vpb {
+        let prow = &packed[bp * dh..(bp + 1) * dh];
+        let mut d = 0;
+        while d + 8 <= dh {
+            let w = load8(&prow[d..]);
+            for j in 0..vpb {
+                let cw = (w >> (j as u32 * bits as u32)) & lm;
+                codes[(bp * vpb + j) * dh + d..][..8]
+                    .copy_from_slice(&cw.to_le_bytes());
+            }
+            d += 8;
+        }
+        while d < dh {
+            let byte = prow[d];
+            for j in 0..vpb {
+                codes[(bp * vpb + j) * dh + d] = (byte >> (j as u8 * bits)) & mask;
+            }
+            d += 1;
+        }
+    }
+    let mut wide = vec![0u32; dh];
+    for t in 0..g {
+        let crow = &codes[t * dh..(t + 1) * dh];
+        for d in 0..dh {
+            wide[d] = crow[d] as u32 | MAGIC_BITS;
+        }
+        let orow = &mut out[t * dh..(t + 1) * dh];
+        for d in 0..dh {
+            orow[d] = (f32::from_bits(wide[d]) - MAGIC) * scale[d] + zero[d];
+        }
+    }
+}
+
+/// Quantize + pack a [G, Dh] V group *per token* (groups of g2 channels).
+///
+/// Rows are contiguous on the V side, so each token is one min/max +
+/// quantize sweep per channel group and one word-parallel [`pack_bits`]
+/// over the full row (channel groups pack back-to-back, so packing the
+/// whole row at once is byte-identical to the per-group reference).
+pub fn fold_v_group(
+    vg: &[f32],
+    g: usize,
+    dh: usize,
+    g2: usize,
+    bits: u8,
+    packed: &mut [u8],
+    params: &mut [GroupParams],
+) {
+    let dg = dh / g2;
+    let bytes_per_tok = dh * bits as usize / 8;
+    let qmax = ((1u32 << bits) - 1) as f32;
+    let mut codes = vec![0u8; dh];
+    for t in 0..g {
+        let row = &vg[t * dh..(t + 1) * dh];
+        for gi in 0..dg {
+            let seg = &row[gi * g2..(gi + 1) * g2];
+            let (lo, hi) = minmax(seg);
+            let span = hi - lo;
+            let scale = if span > 0.0 { span / qmax } else { 1.0 };
+            params[t * dg + gi] = GroupParams { scale, zero: lo };
+            quantize_run(seg, lo, scale, qmax, &mut codes[gi * g2..(gi + 1) * g2]);
+        }
+        pack_bits(&codes, bits, &mut packed[t * bytes_per_tok..(t + 1) * bytes_per_tok]);
+    }
+}
+
+/// Dequantize a packed V region back to [G, Dh] floats: word-parallel
+/// row unpack, mantissa-biased widen, then per-group float-only sweeps
+/// with the group's (scale, zero) broadcast.
+pub fn unfold_v_group(
+    packed: &[u8],
+    g: usize,
+    dh: usize,
+    g2: usize,
+    bits: u8,
+    params: &[GroupParams],
+    out: &mut [f32],
+) {
+    let dg = dh / g2;
+    let bytes_per_tok = dh * bits as usize / 8;
+    let mut codes = vec![0u8; dh];
+    let mut wide = vec![0u32; dh];
+    for t in 0..g {
+        unpack_bits(&packed[t * bytes_per_tok..(t + 1) * bytes_per_tok], bits, &mut codes);
+        for d in 0..dh {
+            wide[d] = codes[d] as u32 | MAGIC_BITS;
+        }
+        let orow = &mut out[t * dh..(t + 1) * dh];
+        for gi in 0..dg {
+            let p = params[t * dg + gi];
+            for (o, &w) in orow[gi * g2..(gi + 1) * g2].iter_mut().zip(&wide[gi * g2..]) {
+                *o = (f32::from_bits(w) - MAGIC) * p.scale + p.zero;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::scalar;
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    #[test]
+    fn rte_matches_round_ties_even() {
+        // exhaustive over the quantizer's reachable grid: halves in [0, 256]
+        for i in 0..=512u32 {
+            let x = i as f32 * 0.5;
+            assert_eq!(rte(x), x.round_ties_even(), "x={x}");
+        }
+        // plus a random sweep of the continuous domain
+        check("rte", 500, |g: &mut Gen| {
+            let x = g.f32_in(0.0, 255.0);
+            if rte(x) != x.round_ties_even() {
+                return Err(format!("rte({x}) = {} != {}", rte(x), x.round_ties_even()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn compress_spread_roundtrip_prop() {
+        check("compress_spread", 2000, |g: &mut Gen| {
+            let bits = *g.pick(&[1u8, 2, 4, 8]);
+            // 8 random codes, one per byte lane
+            let mut w = 0u64;
+            for lane in 0..8 {
+                w |= (g.usize_in(0, (1usize << bits) - 1) as u64) << (lane * 8);
+            }
+            let c = compress8(w, bits);
+            if spread8(c, bits) != w {
+                return Err(format!(
+                    "spread8(compress8({w:#018x})) != identity at bits={bits} (c={c:#x})"
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pack_matches_scalar_prop() {
+        check("wordpack_pack_eq", 300, |g: &mut Gen| {
+            let bits = *g.pick(&[1u8, 2, 4, 8]);
+            let vpb = (8 / bits) as usize;
+            let n = g.usize_in(1, 40) * vpb;
+            let codes: Vec<u8> = (0..n)
+                .map(|_| g.usize_in(0, (1usize << bits) - 1) as u8)
+                .collect();
+            let nbytes = n / vpb;
+            let mut a = vec![0u8; nbytes];
+            let mut b = vec![0u8; nbytes];
+            let ra = scalar::pack_bits(&codes, bits, &mut a);
+            let rb = pack_bits(&codes, bits, &mut b);
+            if ra != rb || a != b {
+                return Err(format!("pack diverges bits={bits} n={n}"));
+            }
+            let mut ua = vec![0u8; n];
+            let mut ub = vec![0u8; n];
+            scalar::unpack_bits(&a, bits, &mut ua);
+            unpack_bits(&b, bits, &mut ub);
+            if ua != codes || ub != codes {
+                return Err(format!("unpack diverges bits={bits} n={n}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn quantize_matches_scalar_prop() {
+        check("wordpack_quant_eq", 200, |g: &mut Gen| {
+            let bits = *g.pick(&[1u8, 2, 4, 8]);
+            let n = g.usize_in(1, 96);
+            let xs = g.vec_normal(n, 4.0);
+            let mut ca = vec![0u8; n];
+            let mut cb = vec![0u8; n];
+            let pa = scalar::quantize_group(&xs, bits, &mut ca);
+            let pb = quantize_group(&xs, bits, &mut cb);
+            if pa != pb || ca != cb {
+                return Err(format!("quantize diverges bits={bits} n={n}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fold_k_matches_scalar_prop() {
+        check("wordpack_fold_k_eq", 120, |g: &mut Gen| {
+            let bits = *g.pick(&[1u8, 2, 4, 8]);
+            let vpb = (8 / bits) as usize;
+            let gg = g.usize_in(1, 6) * vpb.max(8); // multiple of vpb
+            // dh off the 8-lane grid exercises the scalar tail
+            let dh = *g.pick(&[8usize, 12, 32, 33, 64]);
+            let kg = g.vec_normal(gg * dh, 2.0);
+            let rows_pk = gg * bits as usize / 8;
+            let mut pa = vec![0u8; rows_pk * dh];
+            let mut pb = vec![0u8; rows_pk * dh];
+            let zero = GroupParams { scale: 0.0, zero: 0.0 };
+            let mut qa = vec![zero; dh];
+            let mut qb = vec![zero; dh];
+            scalar::fold_k_group(&kg, gg, dh, bits, &mut pa, &mut qa);
+            fold_k_group(&kg, gg, dh, bits, &mut pb, &mut qb);
+            if pa != pb {
+                return Err(format!("K packed bytes diverge bits={bits} g={gg} dh={dh}"));
+            }
+            if qa != qb {
+                return Err(format!("K params diverge bits={bits} g={gg} dh={dh}"));
+            }
+            let mut oa = vec![0f32; gg * dh];
+            let mut ob = vec![0f32; gg * dh];
+            scalar::unfold_k_group(&pa, gg, dh, bits, &qa, &mut oa);
+            unfold_k_group(&pb, gg, dh, bits, &qb, &mut ob);
+            if oa != ob {
+                return Err(format!("K unfold diverges bits={bits} g={gg} dh={dh}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fold_v_matches_scalar_prop() {
+        check("wordpack_fold_v_eq", 120, |g: &mut Gen| {
+            let bits = *g.pick(&[1u8, 2, 4, 8]);
+            let gg = g.usize_in(1, 8);
+            let (dh, g2) = *g.pick(&[(32usize, 32usize), (64, 32), (16, 8), (48, 16)]);
+            let vg = g.vec_normal(gg * dh, 2.0);
+            let bpt = dh * bits as usize / 8;
+            let dg = dh / g2;
+            let mut pa = vec![0u8; gg * bpt];
+            let mut pb = vec![0u8; gg * bpt];
+            let zero = GroupParams { scale: 0.0, zero: 0.0 };
+            let mut qa = vec![zero; gg * dg];
+            let mut qb = vec![zero; gg * dg];
+            scalar::fold_v_group(&vg, gg, dh, g2, bits, &mut pa, &mut qa);
+            fold_v_group(&vg, gg, dh, g2, bits, &mut pb, &mut qb);
+            if pa != pb {
+                return Err(format!("V packed bytes diverge bits={bits} g={gg} dh={dh} g2={g2}"));
+            }
+            if qa != qb {
+                return Err(format!("V params diverge bits={bits} g={gg} dh={dh} g2={g2}"));
+            }
+            let mut oa = vec![0f32; gg * dh];
+            let mut ob = vec![0f32; gg * dh];
+            scalar::unfold_v_group(&pa, gg, dh, g2, bits, &qa, &mut oa);
+            unfold_v_group(&pb, gg, dh, g2, bits, &qb, &mut ob);
+            if oa != ob {
+                return Err(format!("V unfold diverges bits={bits} g={gg}"));
+            }
+            Ok(())
+        });
+    }
+}

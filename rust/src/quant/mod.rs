@@ -1,7 +1,8 @@
-//! Quantization substrate: the RTN kernel mirror and AsymKV policies.
+//! Quantization substrate: the RTN kernel subsystem and AsymKV policies.
 
+pub mod kernels;
 pub mod policy;
 pub mod rtn;
 
+pub use kernels::{GroupParams, KernelMode};
 pub use policy::{Bits, QuantPolicy};
-pub use rtn::GroupParams;

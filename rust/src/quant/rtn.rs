@@ -1,350 +1,14 @@
-//! Pure-Rust RTN quantize / pack / unpack / dequantize.
+//! Back-compat facade over the [`super::kernels`] subsystem.
 //!
-//! Bit-exact mirror of `python/compile/kernels/ref.py` (golden vectors from
-//! `golden.json` are asserted in `rust/tests/golden.rs`). Used for cache
-//! bookkeeping, the analysis tools and tests — the request-path quantization
-//! itself runs inside the AOT fold artifacts.
-//!
-//! Scheme (paper Equ. 4-6, with the standard fix of the printed typo):
-//!   z = min(group), s = (max - min) / (2^b - 1)  [guarded: s=1 if span=0]
-//!   q = clip(round_ties_even((x - z) / s), 0, 2^b - 1)
-//!   x* = q * s + z
-//!
-//! Packing: value i of each run of 8/b values occupies bits [i·b, (i+1)·b)
-//! of its byte (little-endian within the byte).
+//! The RTN implementation moved to `quant/kernels/` (a `scalar` bit-exact
+//! reference plus a `wordpack` fast path behind a dispatch layer). Existing
+//! call sites that import `quant::rtn` keep compiling and transparently get
+//! the dispatched fast path; new code should use `quant::kernels` directly
+//! (and the `*_with(KernelMode, …)` variants to pin an implementation).
 
-/// Quantization parameters for one group.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub struct GroupParams {
-    pub scale: f32,
-    pub zero: f32,
-}
-
-/// Quantize one group of values; returns codes (as u8 values, unpacked).
-pub fn quantize_group(xs: &[f32], bits: u8, out: &mut [u8]) -> GroupParams {
-    debug_assert_eq!(xs.len(), out.len());
-    let qmax = ((1u32 << bits) - 1) as f32;
-    let mut lo = f32::INFINITY;
-    let mut hi = f32::NEG_INFINITY;
-    for &x in xs {
-        lo = lo.min(x);
-        hi = hi.max(x);
-    }
-    let span = hi - lo;
-    let scale = if span > 0.0 { span / qmax } else { 1.0 };
-    for (o, &x) in out.iter_mut().zip(xs) {
-        // round-half-to-even matches jnp.round
-        let q = ((x - lo) / scale).round_ties_even().clamp(0.0, qmax);
-        *o = q as u8;
-    }
-    GroupParams { scale, zero: lo }
-}
-
-/// Dequantize codes with group params: x* = q·s + z.
-pub fn dequantize_group(codes: &[u8], p: GroupParams, out: &mut [f32]) {
-    for (o, &q) in out.iter_mut().zip(codes) {
-        *o = q as f32 * p.scale + p.zero;
-    }
-}
-
-/// Pack `codes` (< 2^bits each) into bytes; `codes.len() * bits` must be a
-/// multiple of 8. Returns number of bytes written.
-pub fn pack_bits(codes: &[u8], bits: u8, out: &mut [u8]) -> usize {
-    let vpb = (8 / bits) as usize;
-    debug_assert_eq!(codes.len() % vpb, 0);
-    let nbytes = codes.len() / vpb;
-    debug_assert!(out.len() >= nbytes);
-    for (i, byte) in out.iter_mut().take(nbytes).enumerate() {
-        let mut b = 0u8;
-        for j in 0..vpb {
-            b |= codes[i * vpb + j] << (j as u8 * bits);
-        }
-        *byte = b;
-    }
-    nbytes
-}
-
-/// Unpack bytes into codes; inverse of [`pack_bits`].
-pub fn unpack_bits(packed: &[u8], bits: u8, out: &mut [u8]) {
-    let vpb = (8 / bits) as usize;
-    let mask = ((1u16 << bits) - 1) as u8;
-    debug_assert!(out.len() >= packed.len() * vpb);
-    for (i, &byte) in packed.iter().enumerate() {
-        for j in 0..vpb {
-            out[i * vpb + j] = (byte >> (j as u8 * bits)) & mask;
-        }
-    }
-}
-
-/// Number of packed bytes for `n` values at `bits`.
-pub fn packed_len(n: usize, bits: u8) -> usize {
-    n * bits as usize / 8
-}
-
-/// Quantize + pack a [G, Dh] row-major K group *per channel* (one scale/zero
-/// per channel d across the G tokens). Outputs: packed [G·bits/8, Dh]
-/// row-major, params[d] per channel.
-pub fn fold_k_group(
-    kg: &[f32],          // G * dh, row-major [G, Dh]
-    g: usize,
-    dh: usize,
-    bits: u8,
-    packed: &mut [u8],   // (g*bits/8) * dh
-    params: &mut [GroupParams], // dh
-) {
-    debug_assert_eq!(kg.len(), g * dh);
-    let vpb = (8 / bits) as usize;
-    let rows_pk = g / vpb;
-    debug_assert_eq!(packed.len(), rows_pk * dh);
-    let qmax = ((1u32 << bits) - 1) as f32;
-    for d in 0..dh {
-        let mut lo = f32::INFINITY;
-        let mut hi = f32::NEG_INFINITY;
-        for t in 0..g {
-            let x = kg[t * dh + d];
-            lo = lo.min(x);
-            hi = hi.max(x);
-        }
-        let span = hi - lo;
-        let scale = if span > 0.0 { span / qmax } else { 1.0 };
-        params[d] = GroupParams { scale, zero: lo };
-        // pack along tokens: token t sits at byte t/vpb, bit (t%vpb)*bits
-        for bp in 0..rows_pk {
-            let mut byte = 0u8;
-            for j in 0..vpb {
-                let t = bp * vpb + j;
-                let q = ((kg[t * dh + d] - lo) / scale)
-                    .round_ties_even()
-                    .clamp(0.0, qmax) as u8;
-                byte |= q << (j as u8 * bits);
-            }
-            packed[bp * dh + d] = byte;
-        }
-    }
-}
-
-/// Dequantize a packed K region back to [G, Dh] floats.
-pub fn unfold_k_group(
-    packed: &[u8],
-    g: usize,
-    dh: usize,
-    bits: u8,
-    params: &[GroupParams],
-    out: &mut [f32],
-) {
-    let vpb = (8 / bits) as usize;
-    let mask = ((1u16 << bits) - 1) as u8;
-    for d in 0..dh {
-        let p = params[d];
-        for bp in 0..g / vpb {
-            let byte = packed[bp * dh + d];
-            for j in 0..vpb {
-                let t = bp * vpb + j;
-                let q = (byte >> (j as u8 * bits)) & mask;
-                out[t * dh + d] = q as f32 * p.scale + p.zero;
-            }
-        }
-    }
-}
-
-/// Quantize + pack a [G, Dh] V group *per token* (groups of g2 channels per
-/// token). Outputs packed [G, Dh·bits/8] row-major, params[t * dg + gi].
-pub fn fold_v_group(
-    vg: &[f32],
-    g: usize,
-    dh: usize,
-    g2: usize,           // channel group size (min(group, dh))
-    bits: u8,
-    packed: &mut [u8],   // g * (dh*bits/8)
-    params: &mut [GroupParams], // g * (dh / g2)
-) {
-    debug_assert_eq!(vg.len(), g * dh);
-    let dg = dh / g2;
-    let bytes_per_tok = packed_len(dh, bits);
-    let vpb = (8 / bits) as usize;
-    let qmax = ((1u32 << bits) - 1) as f32;
-    for t in 0..g {
-        let row = &vg[t * dh..(t + 1) * dh];
-        for gi in 0..dg {
-            let seg = &row[gi * g2..(gi + 1) * g2];
-            let mut lo = f32::INFINITY;
-            let mut hi = f32::NEG_INFINITY;
-            for &x in seg {
-                lo = lo.min(x);
-                hi = hi.max(x);
-            }
-            let span = hi - lo;
-            let scale = if span > 0.0 { span / qmax } else { 1.0 };
-            params[t * dg + gi] = GroupParams { scale, zero: lo };
-            for bp in 0..g2 / vpb {
-                let mut byte = 0u8;
-                for j in 0..vpb {
-                    let q = ((seg[bp * vpb + j] - lo) / scale)
-                        .round_ties_even()
-                        .clamp(0.0, qmax) as u8;
-                    byte |= q << (j as u8 * bits);
-                }
-                packed[t * bytes_per_tok + gi * (g2 / vpb) + bp] = byte;
-            }
-        }
-    }
-}
-
-/// Dequantize a packed V region back to [G, Dh] floats.
-pub fn unfold_v_group(
-    packed: &[u8],
-    g: usize,
-    dh: usize,
-    g2: usize,
-    bits: u8,
-    params: &[GroupParams],
-    out: &mut [f32],
-) {
-    let dg = dh / g2;
-    let bytes_per_tok = packed_len(dh, bits);
-    let vpb = (8 / bits) as usize;
-    let mask = ((1u16 << bits) - 1) as u8;
-    for t in 0..g {
-        for gi in 0..dg {
-            let p = params[t * dg + gi];
-            for bp in 0..g2 / vpb {
-                let byte = packed[t * bytes_per_tok + gi * (g2 / vpb) + bp];
-                for j in 0..vpb {
-                    let q = (byte >> (j as u8 * bits)) & mask;
-                    out[t * dh + gi * g2 + bp * vpb + j] =
-                        q as f32 * p.scale + p.zero;
-                }
-            }
-        }
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::util::prop::{check, Gen};
-
-    #[test]
-    fn pack_layout_little_endian() {
-        // 1-bit: [1,0,1,0,1,1,0,1] -> 0b10110101 (mirrors the python test)
-        let codes = [1u8, 0, 1, 0, 1, 1, 0, 1];
-        let mut out = [0u8; 1];
-        assert_eq!(pack_bits(&codes, 1, &mut out), 1);
-        assert_eq!(out[0], 0b1011_0101);
-        // 2-bit: [3,0,2,1] -> 0b01_10_00_11
-        let mut out2 = [0u8; 1];
-        pack_bits(&[3, 0, 2, 1], 2, &mut out2);
-        assert_eq!(out2[0], 0b0110_0011);
-    }
-
-    #[test]
-    fn pack_unpack_roundtrip_prop() {
-        check("pack_unpack", 200, |g: &mut Gen| {
-            let bits = *g.pick(&[1u8, 2, 4, 8]);
-            let vpb = (8 / bits) as usize;
-            let n = g.usize_in(1, 16) * vpb;
-            let codes: Vec<u8> = (0..n)
-                .map(|_| g.usize_in(0, (1usize << bits) - 1) as u8)
-                .collect();
-            let mut packed = vec![0u8; packed_len(n, bits)];
-            pack_bits(&codes, bits, &mut packed);
-            let mut un = vec![0u8; n];
-            unpack_bits(&packed, bits, &mut un);
-            if un != codes {
-                return Err(format!("roundtrip mismatch bits={bits} n={n}"));
-            }
-            Ok(())
-        });
-    }
-
-    #[test]
-    fn quantize_error_bound_prop() {
-        check("rtn_bound", 200, |g: &mut Gen| {
-            let bits = *g.pick(&[1u8, 2, 4]);
-            let n = g.usize_in(2, 64);
-            let xs = g.vec_normal(n, 3.0);
-            let mut codes = vec![0u8; n];
-            let p = quantize_group(&xs, bits, &mut codes);
-            let mut deq = vec![0f32; n];
-            dequantize_group(&codes, p, &mut deq);
-            for (x, d) in xs.iter().zip(&deq) {
-                if (x - d).abs() > p.scale * 0.5 + 1e-5 {
-                    return Err(format!("|{x} - {d}| > s/2 = {}", p.scale * 0.5));
-                }
-            }
-            Ok(())
-        });
-    }
-
-    #[test]
-    fn constant_group_exact() {
-        let xs = [0.73f32; 32];
-        let mut codes = [0u8; 32];
-        let p = quantize_group(&xs, 2, &mut codes);
-        assert!(codes.iter().all(|&c| c == 0));
-        assert_eq!(p.scale, 1.0);
-        let mut deq = [0f32; 32];
-        dequantize_group(&codes, p, &mut deq);
-        assert!(deq.iter().all(|&d| (d - 0.73).abs() < 1e-6));
-    }
-
-    #[test]
-    fn fold_unfold_k_roundtrip_prop() {
-        check("fold_k", 60, |g: &mut Gen| {
-            let bits = *g.pick(&[1u8, 2, 4]);
-            let (gg, dh) = (32usize, 32usize);
-            let kg = g.vec_normal(gg * dh, 2.0);
-            let mut packed = vec![0u8; packed_len(gg, bits) * dh];
-            let mut params = vec![GroupParams { scale: 0.0, zero: 0.0 }; dh];
-            fold_k_group(&kg, gg, dh, bits, &mut packed, &mut params);
-            let mut out = vec![0f32; gg * dh];
-            unfold_k_group(&packed, gg, dh, bits, &params, &mut out);
-            for d in 0..dh {
-                for t in 0..gg {
-                    let (x, y) = (kg[t * dh + d], out[t * dh + d]);
-                    if (x - y).abs() > params[d].scale * 0.5 + 1e-5 {
-                        return Err(format!("k fold err d={d} t={t}: {x} vs {y}"));
-                    }
-                }
-            }
-            Ok(())
-        });
-    }
-
-    #[test]
-    fn fold_unfold_v_roundtrip_prop() {
-        check("fold_v", 60, |g: &mut Gen| {
-            let bits = *g.pick(&[1u8, 2, 4]);
-            let (gg, dh, g2) = (32usize, 32usize, 32usize);
-            let vg = g.vec_normal(gg * dh, 2.0);
-            let mut packed = vec![0u8; gg * packed_len(dh, bits)];
-            let mut params =
-                vec![GroupParams { scale: 0.0, zero: 0.0 }; gg * (dh / g2)];
-            fold_v_group(&vg, gg, dh, g2, bits, &mut packed, &mut params);
-            let mut out = vec![0f32; gg * dh];
-            unfold_v_group(&packed, gg, dh, g2, bits, &params, &mut out);
-            for i in 0..gg * dh {
-                let s = params[i / dh].scale;
-                if (vg[i] - out[i]).abs() > s * 0.5 + 1e-5 {
-                    return Err(format!("v fold err at {i}"));
-                }
-            }
-            Ok(())
-        });
-    }
-
-    #[test]
-    fn more_bits_less_error() {
-        let mut g = Gen { rng: crate::util::rng::SplitMix::new(5) };
-        let xs = g.vec_normal(64, 1.0);
-        let mut errs = vec![];
-        for bits in [1u8, 2, 4, 8] {
-            let mut codes = vec![0u8; 64];
-            let p = quantize_group(&xs, bits, &mut codes);
-            let mut deq = vec![0f32; 64];
-            dequantize_group(&codes, p, &mut deq);
-            errs.push(crate::util::stats::mse(&xs, &deq));
-        }
-        assert!(errs[0] > errs[1] && errs[1] > errs[2] && errs[2] > errs[3]);
-    }
-}
+pub use super::kernels::{
+    active_mode, dequantize_group, dequantize_group_with, fold_k_group, fold_k_group_with,
+    fold_v_group, fold_v_group_with, pack_bits, pack_bits_with, packed_len, quantize_group,
+    quantize_group_with, unfold_k_group, unfold_k_group_with, unfold_v_group,
+    unfold_v_group_with, unpack_bits, unpack_bits_with, GroupParams, KernelMode,
+};

@@ -2,12 +2,46 @@
 //!
 //! Every `rust/benches/*.rs` target is a `harness = false` binary built on
 //! this module: it times closures with warmup + repeated samples, prints
-//! aligned tables mirroring the paper's tables/figures, and appends results
-//! to `bench_out/<name>.txt` so EXPERIMENTS.md can quote them.
+//! aligned tables mirroring the paper's tables/figures, writes them to
+//! `bench_out/<name>.txt` (truncated once per run, so trajectories don't
+//! accumulate stale results), and serializes machine-readable records into
+//! a JSON report at the repo root (see [`JsonReport`] and docs/BENCH.md).
+//!
+//! `BENCH_SMOKE=1` switches every target to tiny sample counts and lets
+//! artifact-dependent benches skip gracefully — the mode CI's bench-smoke
+//! job runs to prove the targets execute and emit valid JSON.
 
+use std::collections::{BTreeMap, HashSet};
+use std::path::{Path, PathBuf};
+use std::sync::{Mutex, OnceLock};
 use std::time::Instant;
 
+use super::json::Value;
 use super::stats::percentile;
+
+/// True when `BENCH_SMOKE=1`: tiny sample counts, CI-friendly run.
+pub fn smoke() -> bool {
+    static S: OnceLock<bool> = OnceLock::new();
+    *S.get_or_init(|| std::env::var("BENCH_SMOKE").map(|v| v == "1").unwrap_or(false))
+}
+
+/// Scale a measured-sample count for the active mode (always >= 1).
+pub fn samples(full: usize) -> usize {
+    if smoke() {
+        full.clamp(1, 3)
+    } else {
+        full.max(1)
+    }
+}
+
+/// Scale a warmup count for the active mode.
+pub fn warmup(full: usize) -> usize {
+    if smoke() {
+        full.min(1)
+    } else {
+        full
+    }
+}
 
 /// Timing result over n samples (seconds).
 #[derive(Debug, Clone)]
@@ -54,6 +88,91 @@ pub fn fmt_duration(secs: f64) -> String {
     } else {
         format!("{:.2} s", secs)
     }
+}
+
+pub fn fmt_throughput(bytes_per_s: f64) -> String {
+    if bytes_per_s >= 1e9 {
+        format!("{:.2} GB/s", bytes_per_s / 1e9)
+    } else if bytes_per_s >= 1e6 {
+        format!("{:.1} MB/s", bytes_per_s / 1e6)
+    } else {
+        format!("{:.0} KB/s", bytes_per_s / 1e3)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// repo / run identity
+// ---------------------------------------------------------------------------
+
+/// Nearest ancestor of the working directory that looks like the repo root
+/// (has `.git` or `ROADMAP.md`); the working directory itself otherwise.
+/// Bench targets run from `rust/`, so root-level artifacts resolve here.
+pub fn repo_root() -> PathBuf {
+    let cwd = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    let mut dir = cwd.clone();
+    loop {
+        if dir.join(".git").exists() || dir.join("ROADMAP.md").exists() {
+            return dir;
+        }
+        if !dir.pop() {
+            return cwd;
+        }
+    }
+}
+
+/// Current git commit, read straight from `.git` (no subprocess); the
+/// string "unknown" outside a checkout.
+pub fn git_sha() -> String {
+    let git = repo_root().join(".git");
+    let Ok(head) = std::fs::read_to_string(git.join("HEAD")) else {
+        return "unknown".into();
+    };
+    let head = head.trim();
+    let Some(ref_name) = head.strip_prefix("ref: ") else {
+        return head.to_string(); // detached HEAD
+    };
+    if let Ok(sha) = std::fs::read_to_string(git.join(ref_name)) {
+        return sha.trim().to_string();
+    }
+    if let Ok(packed) = std::fs::read_to_string(git.join("packed-refs")) {
+        for line in packed.lines() {
+            if let Some(sha) = line.strip_suffix(ref_name) {
+                return sha.trim().to_string();
+            }
+        }
+    }
+    "unknown".into()
+}
+
+// ---------------------------------------------------------------------------
+// text output (bench_out/<name>.txt, truncated once per run)
+// ---------------------------------------------------------------------------
+
+/// Open `bench_out/<file>.txt` for this run: the first write of the process
+/// truncates (stale results from earlier runs never accumulate — the old
+/// behavior appended forever) and stamps the run's git SHA; later writes
+/// within the same run append.
+fn out_file(file: &str) -> Option<std::fs::File> {
+    static STARTED: OnceLock<Mutex<HashSet<String>>> = OnceLock::new();
+    let dir = Path::new("bench_out");
+    std::fs::create_dir_all(dir).ok()?;
+    let first = STARTED
+        .get_or_init(|| Mutex::new(HashSet::new()))
+        .lock()
+        .unwrap()
+        .insert(file.to_string());
+    let mut opts = std::fs::OpenOptions::new();
+    if first {
+        opts.write(true).create(true).truncate(true);
+    } else {
+        opts.append(true).create(true);
+    }
+    let mut f = opts.open(dir.join(format!("{file}.txt"))).ok()?;
+    if first {
+        use std::io::Write;
+        writeln!(f, "# bench run  sha={}  smoke={}", git_sha(), smoke() as u8).ok()?;
+    }
+    Some(f)
 }
 
 /// An aligned text table; also serializes to the bench_out file.
@@ -104,18 +223,12 @@ impl Table {
         s
     }
 
-    /// Print to stdout and append to `bench_out/<file>.txt`.
+    /// Print to stdout and write to `bench_out/<file>.txt`.
     pub fn emit(&self, file: &str) {
         let text = self.render();
         println!("{text}");
-        let dir = std::path::Path::new("bench_out");
-        let _ = std::fs::create_dir_all(dir);
         use std::io::Write;
-        if let Ok(mut f) = std::fs::OpenOptions::new()
-            .create(true)
-            .append(true)
-            .open(dir.join(format!("{file}.txt")))
-        {
+        if let Some(mut f) = out_file(file) {
             let _ = writeln!(f, "{text}");
         }
     }
@@ -124,15 +237,93 @@ impl Table {
 /// Free-form note accompanying a bench table (assumptions, workload params).
 pub fn note(file: &str, text: &str) {
     println!("{text}");
-    let dir = std::path::Path::new("bench_out");
-    let _ = std::fs::create_dir_all(dir);
     use std::io::Write;
-    if let Ok(mut f) = std::fs::OpenOptions::new()
-        .create(true)
-        .append(true)
-        .open(dir.join(format!("{file}.txt")))
-    {
+    if let Some(mut f) = out_file(file) {
         let _ = writeln!(f, "{text}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// machine-readable JSON report (docs/BENCH.md)
+// ---------------------------------------------------------------------------
+
+/// Machine-readable bench results, written to one JSON file at the repo
+/// root. Schema: `bench name -> {mean_s, p50_s, p95_s, bytes_per_s,
+/// config}` plus a `_meta` record carrying the run's git SHA and mode.
+///
+/// Writes are merge-writes keyed by bench name, so the separate bench
+/// targets (`bench_rtn`, `bench_fold`, `bench_gather`, …) can share one
+/// trajectory file: a rerun replaces its own records and leaves the rest.
+pub struct JsonReport {
+    path: PathBuf,
+    records: BTreeMap<String, Value>,
+}
+
+impl JsonReport {
+    /// Report writing to `<repo root>/<file>` (e.g. `BENCH_kernels.json`).
+    pub fn at_root(file: &str) -> Self {
+        Self::at_path(repo_root().join(file))
+    }
+
+    /// Report writing to an explicit path (tests).
+    pub fn at_path(path: impl Into<PathBuf>) -> Self {
+        Self { path: path.into(), records: BTreeMap::new() }
+    }
+
+    /// Record one bench: timing stats, throughput (`bytes` processed per
+    /// sample), and a free-form config object describing the workload.
+    /// Smoke-mode records are tagged per record (`"smoke": true`), so a
+    /// partial smoke rerun merged into a real trajectory file can never
+    /// masquerade as measured data.
+    pub fn add(&mut self, name: &str, t: &Timing, bytes: usize, config: Value) {
+        let mean = t.mean();
+        let bps = if mean > 0.0 { bytes as f64 / mean } else { 0.0 };
+        let mut fields = vec![
+            ("mean_s", Value::num(mean)),
+            ("p50_s", Value::num(t.p50())),
+            ("p95_s", Value::num(t.p95())),
+            ("bytes_per_s", Value::num(bps)),
+            ("config", config),
+        ];
+        if smoke() {
+            fields.push(("smoke", Value::Bool(true)));
+        }
+        self.records.insert(name.to_string(), Value::obj(fields));
+    }
+
+    /// Convenience: a config object from string key/value pairs.
+    pub fn config(pairs: &[(&str, &str)]) -> Value {
+        Value::obj(pairs.iter().map(|(k, v)| (*k, Value::str_of(*v))).collect())
+    }
+
+    /// Merge this run's records into the file (atomic replace). Existing
+    /// records from other targets survive; same-name records are replaced;
+    /// `_meta` is restamped with this run's git SHA + mode.
+    pub fn write(&self) -> std::io::Result<()> {
+        let mut all: BTreeMap<String, Value> = std::fs::read_to_string(&self.path)
+            .ok()
+            .and_then(|s| super::json::parse(&s).ok())
+            .and_then(|v| v.as_obj().cloned())
+            .unwrap_or_default();
+        for (k, v) in &self.records {
+            all.insert(k.clone(), v.clone());
+        }
+        all.insert(
+            "_meta".to_string(),
+            Value::obj(vec![
+                ("git_sha", Value::str_of(git_sha())),
+                ("smoke", Value::Bool(smoke())),
+                (
+                    "schema",
+                    Value::str_of(
+                        "bench name -> {mean_s, p50_s, p95_s, bytes_per_s, config}",
+                    ),
+                ),
+            ]),
+        );
+        let tmp = self.path.with_extension("json.tmp");
+        std::fs::write(&tmp, format!("{}\n", Value::Obj(all)))?;
+        std::fs::rename(&tmp, &self.path)
     }
 }
 
@@ -171,5 +362,45 @@ mod tests {
         assert!(fmt_duration(2e-6).ends_with("µs"));
         assert!(fmt_duration(2e-3).ends_with("ms"));
         assert!(fmt_duration(2.0).ends_with(" s"));
+    }
+
+    #[test]
+    fn sample_scaling_bounds() {
+        // not smoke in the test env unless set; both branches stay >= 1
+        assert!(samples(200) >= 1);
+        assert_eq!(samples(0), 1);
+        assert!(warmup(5) <= 5);
+    }
+
+    #[test]
+    fn json_report_roundtrip_and_merge() {
+        let dir = std::env::temp_dir().join(format!("asymkv_bench_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("report.json");
+        let t = Timing { samples: vec![0.5, 1.5] };
+
+        let mut r1 = JsonReport::at_path(&path);
+        r1.add("alpha", &t, 1000, JsonReport::config(&[("bits", "2")]));
+        r1.write().unwrap();
+
+        // second report merges: keeps alpha, adds beta
+        let mut r2 = JsonReport::at_path(&path);
+        r2.add("beta", &t, 2000, Value::Null);
+        r2.write().unwrap();
+
+        let v = super::super::json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(v.get("alpha").get("mean_s").as_f64(), Some(1.0));
+        assert_eq!(v.get("alpha").get("bytes_per_s").as_f64(), Some(1000.0));
+        assert_eq!(v.get("alpha").get("config").get("bits").as_str(), Some("2"));
+        assert_eq!(v.get("beta").get("bytes_per_s").as_f64(), Some(2000.0));
+        assert!(v.get("_meta").get("git_sha").as_str().is_some());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn repo_root_contains_roadmap_or_git() {
+        let root = repo_root();
+        // inside the repo this finds the checkout; degenerate fallback is cwd
+        assert!(root.exists());
     }
 }

@@ -3,10 +3,14 @@
 
 mod common;
 
-use asymkv::quant::rtn;
+use asymkv::quant::kernels::{self, KernelMode};
 use asymkv::util::json::{base64_decode, Value};
 use asymkv::util::rng::SplitMix;
 use asymkv::workload;
+
+/// Both kernel implementations must match the Python reference — the
+/// golden vectors go through the dispatch layer with each mode pinned.
+const MODES: [KernelMode; 2] = [KernelMode::Scalar, KernelMode::Wordpack];
 
 fn f32s(v: &Value) -> Vec<f32> {
     v.f32_vec().expect("float array")
@@ -15,68 +19,74 @@ fn f32s(v: &Value) -> Vec<f32> {
 #[test]
 fn fold_k_matches_python_bit_exact() {
     let Some(g) = common::golden("tiny") else { return };
-    for bits in [1u8, 2, 4] {
-        let case = g.get(&format!("fold_k_bits{bits}"));
-        let input = f32s(case.get("input"));
-        let shape = case.get("shape").usize_vec().unwrap(); // [1, 2, G, Dh]
-        let (b, h, gg, dh) = (shape[0], shape[1], shape[2], shape[3]);
-        let want_packed = base64_decode(case.get("packed").as_str().unwrap()).unwrap();
-        let want_scale = f32s(case.get("scale"));
-        let want_zero = f32s(case.get("zero"));
-        let rows_pk = rtn::packed_len(gg, bits);
-        let mut got_packed = vec![0u8; b * h * rows_pk * dh];
-        let mut got_scale = vec![0f32; b * h * dh];
-        let mut got_zero = vec![0f32; b * h * dh];
-        for bh in 0..b * h {
-            let kg = &input[bh * gg * dh..(bh + 1) * gg * dh];
-            let mut params =
-                vec![rtn::GroupParams { scale: 0.0, zero: 0.0 }; dh];
-            rtn::fold_k_group(
-                kg, gg, dh, bits,
-                &mut got_packed[bh * rows_pk * dh..(bh + 1) * rows_pk * dh],
-                &mut params,
-            );
-            for d in 0..dh {
-                got_scale[bh * dh + d] = params[d].scale;
-                got_zero[bh * dh + d] = params[d].zero;
+    for mode in MODES {
+        for bits in [1u8, 2, 4] {
+            let case = g.get(&format!("fold_k_bits{bits}"));
+            let input = f32s(case.get("input"));
+            let shape = case.get("shape").usize_vec().unwrap(); // [1, 2, G, Dh]
+            let (b, h, gg, dh) = (shape[0], shape[1], shape[2], shape[3]);
+            let want_packed = base64_decode(case.get("packed").as_str().unwrap()).unwrap();
+            let want_scale = f32s(case.get("scale"));
+            let want_zero = f32s(case.get("zero"));
+            let rows_pk = kernels::packed_len(gg, bits);
+            let mut got_packed = vec![0u8; b * h * rows_pk * dh];
+            let mut got_scale = vec![0f32; b * h * dh];
+            let mut got_zero = vec![0f32; b * h * dh];
+            for bh in 0..b * h {
+                let kg = &input[bh * gg * dh..(bh + 1) * gg * dh];
+                let mut params =
+                    vec![kernels::GroupParams { scale: 0.0, zero: 0.0 }; dh];
+                kernels::fold_k_group_with(
+                    mode, kg, gg, dh, bits,
+                    &mut got_packed[bh * rows_pk * dh..(bh + 1) * rows_pk * dh],
+                    &mut params,
+                );
+                for d in 0..dh {
+                    got_scale[bh * dh + d] = params[d].scale;
+                    got_zero[bh * dh + d] = params[d].zero;
+                }
             }
+            assert_eq!(got_packed, want_packed,
+                       "K packed bytes diverge at {bits}b ({mode:?})");
+            assert_eq!(got_scale, want_scale, "K scales diverge at {bits}b ({mode:?})");
+            assert_eq!(got_zero, want_zero, "K zeros diverge at {bits}b ({mode:?})");
         }
-        assert_eq!(got_packed, want_packed, "K packed bytes diverge at {bits}b");
-        assert_eq!(got_scale, want_scale, "K scales diverge at {bits}b");
-        assert_eq!(got_zero, want_zero, "K zeros diverge at {bits}b");
     }
 }
 
 #[test]
 fn fold_v_matches_python_bit_exact() {
     let Some(g) = common::golden("tiny") else { return };
-    for bits in [1u8, 2, 4] {
-        let case = g.get(&format!("fold_v_bits{bits}"));
-        let input = f32s(case.get("input"));
-        let shape = case.get("shape").usize_vec().unwrap();
-        let (b, h, gg, dh) = (shape[0], shape[1], shape[2], shape[3]);
-        let g2 = 32usize.min(dh);
-        let dg = dh / g2;
-        let want_packed = base64_decode(case.get("packed").as_str().unwrap()).unwrap();
-        let want_scale = f32s(case.get("scale"));
-        let bpt = rtn::packed_len(dh, bits);
-        let mut got_packed = vec![0u8; b * h * gg * bpt];
-        let mut got_scale = vec![0f32; b * h * gg * dg];
-        for bh in 0..b * h {
-            let vg = &input[bh * gg * dh..(bh + 1) * gg * dh];
-            let mut params =
-                vec![rtn::GroupParams { scale: 0.0, zero: 0.0 }; gg * dg];
-            rtn::fold_v_group(
-                vg, gg, dh, g2, bits,
-                &mut got_packed[bh * gg * bpt..(bh + 1) * gg * bpt],
-                &mut params,
-            );
-            for i in 0..gg * dg {
-                got_scale[bh * gg * dg + i] = params[i].scale;
+    for mode in MODES {
+        for bits in [1u8, 2, 4] {
+            let case = g.get(&format!("fold_v_bits{bits}"));
+            let input = f32s(case.get("input"));
+            let shape = case.get("shape").usize_vec().unwrap();
+            let (b, h, gg, dh) = (shape[0], shape[1], shape[2], shape[3]);
+            let g2 = 32usize.min(dh);
+            let dg = dh / g2;
+            let want_packed = base64_decode(case.get("packed").as_str().unwrap()).unwrap();
+            let want_scale = f32s(case.get("scale"));
+            let bpt = kernels::packed_len(dh, bits);
+            let mut got_packed = vec![0u8; b * h * gg * bpt];
+            let mut got_scale = vec![0f32; b * h * gg * dg];
+            for bh in 0..b * h {
+                let vg = &input[bh * gg * dh..(bh + 1) * gg * dh];
+                let mut params =
+                    vec![kernels::GroupParams { scale: 0.0, zero: 0.0 }; gg * dg];
+                kernels::fold_v_group_with(
+                    mode, vg, gg, dh, g2, bits,
+                    &mut got_packed[bh * gg * bpt..(bh + 1) * gg * bpt],
+                    &mut params,
+                );
+                for i in 0..gg * dg {
+                    got_scale[bh * gg * dg + i] = params[i].scale;
+                }
             }
+            assert_eq!(got_packed, want_packed,
+                       "V packed bytes diverge at {bits}b ({mode:?})");
+            assert_eq!(got_scale, want_scale, "V scales diverge at {bits}b ({mode:?})");
         }
-        assert_eq!(got_packed, want_packed, "V packed bytes diverge at {bits}b");
-        assert_eq!(got_scale, want_scale, "V scales diverge at {bits}b");
     }
 }
 
