@@ -21,11 +21,11 @@ fn main() -> anyhow::Result<()> {
     let n = engine.manifest().n_layers;
     let suite = tasks::recall_suite(0xEE, 16, 12);
 
+    // full-context footprint per sequence (a fresh sequence allocates
+    // ~nothing under the demand-paged pool)
     let cache_bytes = |p: &QuantPolicy| -> anyhow::Result<usize> {
-        let id = engine.create_seq(p)?;
-        let b = engine.with_seq(id, |s| s.capacity_bytes())?;
-        engine.free_seq(id)?;
-        Ok(b)
+        let m = engine.manifest();
+        Ok(engine.pool.estimate_bytes(p, m.max_ctx + m.residual - 1))
     };
 
     let float_acc = evals::recall_accuracy(&engine, &QuantPolicy::float32(n),

@@ -33,10 +33,12 @@ fn main() -> anyhow::Result<()> {
     let n = m.n_layers;
     let suite = tasks::recall_suite(0xAB17, 20, 12);
 
+    // full-context footprint: a FRESH sequence allocates ~nothing under
+    // demand paging, so project the fully grown resident size instead
     let cache_kib = |p: &QuantPolicy| -> anyhow::Result<f64> {
-        let id = engine.create_seq(p)?;
-        let b = engine.with_seq(id, |s| s.capacity_bytes())?;
-        engine.free_seq(id)?;
+        let b = engine
+            .pool
+            .estimate_bytes(p, m.max_ctx + m.residual - 1);
         Ok(b as f64 / 1024.0)
     };
 

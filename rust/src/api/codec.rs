@@ -519,6 +519,7 @@ fn session_turn_value(t: &SessionTurn, proto: Proto) -> Value {
         o.insert("session".to_string(), Value::num(t.session as f64));
         o.insert("turn".to_string(), Value::num(t.turn as f64));
         o.insert("pos".to_string(), Value::num(t.pos as f64));
+        o.insert("cache_bytes".to_string(), Value::num(t.cache_bytes as f64));
     }
     v
 }
@@ -533,6 +534,9 @@ fn pool_value(r: &PoolReport) -> Value {
         ("used_bytes", Value::num(s.used_bytes as f64)),
         ("peak_bytes", Value::num(s.peak_bytes as f64)),
         ("budget_bytes", Value::num(s.budget_bytes as f64)),
+        ("page_allocs", Value::num(s.page_allocs as f64)),
+        ("page_alloc_bytes", Value::num(s.page_alloc_bytes as f64)),
+        ("page_free_bytes", Value::num(s.page_free_bytes as f64)),
     ];
     if let Some(ps) = &r.prefix {
         fields.push(("prefix_entries", Value::num(ps.entries as f64)));

@@ -47,6 +47,9 @@ struct SessionState {
     /// A turn is in flight; concurrent appends are rejected and the
     /// eviction sweep must not free the sequence under the scheduler.
     busy: bool,
+    /// Resident cache bytes after the last completed turn (demand-paged:
+    /// grows page-by-page with the retained history).
+    cache_bytes: usize,
 }
 
 pub struct SessionManager {
@@ -110,6 +113,7 @@ impl SessionManager {
                     turns: 0,
                     last_used: Instant::now(),
                     busy: false,
+                    cache_bytes: 0,
                 },
             );
             session
@@ -167,6 +171,9 @@ impl SessionManager {
             )));
         }
         let pos = self.coord.engine().seq_pos(seq_id).unwrap_or(0);
+        // growth accounting: the turn's prompt + generation grew the pinned
+        // cache by whole pages; record the new resident footprint
+        let cache_bytes = self.coord.engine().seq_bytes(seq_id).unwrap_or(0);
 
         let turn = {
             let mut m = self.inner.lock().unwrap();
@@ -175,6 +182,7 @@ impl SessionManager {
                     st.busy = false;
                     st.turns += 1;
                     st.last_used = Instant::now();
+                    st.cache_bytes = cache_bytes;
                     st.turns
                 }
                 // unreachable: busy sessions are never evicted/closed
@@ -185,8 +193,17 @@ impl SessionManager {
             session,
             turn,
             pos,
+            cache_bytes,
             result: GenerationResult::from_response(resp),
         })
+    }
+
+    /// Resident cache bytes pinned by a session (after its last turn).
+    pub fn session_bytes(&self, session: u64) -> Result<usize, ApiError> {
+        let m = self.inner.lock().unwrap();
+        m.get(&session)
+            .map(|st| st.cache_bytes)
+            .ok_or_else(|| ApiError::unknown_session(session))
     }
 
     /// Close a session, unpinning and freeing its sequence.

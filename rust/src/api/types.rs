@@ -142,6 +142,10 @@ pub struct SessionTurn {
     pub turn: usize,
     /// Tokens held in the session's KV cache after this turn.
     pub pos: usize,
+    /// Resident cache bytes (allocated pages) after this turn — the pool
+    /// charges sessions page-by-page as their history grows, so clients
+    /// can watch a conversation's real footprint.
+    pub cache_bytes: usize,
     pub result: GenerationResult,
 }
 

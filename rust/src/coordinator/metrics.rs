@@ -12,6 +12,7 @@ struct Inner {
     started: Option<Instant>,
     requests_completed: u64,
     requests_failed: u64,
+    preemptions: u64,
     tokens_generated: u64,
     prefill_tokens: u64,
     batch_requests: u64,
@@ -52,6 +53,12 @@ impl Metrics {
         self.inner.lock().unwrap().requests_failed += 1;
     }
 
+    /// A mid-decode page-budget collision evicted a victim back to the
+    /// queue (requeue, not failure).
+    pub fn record_preemption(&self) {
+        self.inner.lock().unwrap().preemptions += 1;
+    }
+
     pub fn record_prefill(&self, tokens: usize) {
         self.inner.lock().unwrap().prefill_tokens += tokens as u64;
     }
@@ -88,6 +95,7 @@ impl Metrics {
             elapsed_s: elapsed,
             requests_completed: m.requests_completed,
             requests_failed: m.requests_failed,
+            preemptions: m.preemptions,
             tokens_generated: m.tokens_generated,
             prefill_tokens: m.prefill_tokens,
             batch_requests: m.batch_requests,
@@ -116,6 +124,8 @@ pub struct MetricsSnapshot {
     pub elapsed_s: f64,
     pub requests_completed: u64,
     pub requests_failed: u64,
+    /// Requests preempted (freed + requeued) on page-budget collisions.
+    pub preemptions: u64,
     pub tokens_generated: u64,
     pub prefill_tokens: u64,
     pub batch_requests: u64,
@@ -139,6 +149,7 @@ impl MetricsSnapshot {
             ("elapsed_s", Value::num(self.elapsed_s)),
             ("requests_completed", Value::num(self.requests_completed as f64)),
             ("requests_failed", Value::num(self.requests_failed as f64)),
+            ("preemptions", Value::num(self.preemptions as f64)),
             ("tokens_generated", Value::num(self.tokens_generated as f64)),
             ("prefill_tokens", Value::num(self.prefill_tokens as f64)),
             ("batch_requests", Value::num(self.batch_requests as f64)),
@@ -176,6 +187,7 @@ mod tests {
             3,
         );
         m.record_failure();
+        m.record_preemption();
         m.record_decode_step(4, 0.01);
         m.record_batch_submit(3);
         m.record_session_opened();
@@ -185,6 +197,7 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.requests_completed, 2);
         assert_eq!(s.requests_failed, 1);
+        assert_eq!(s.preemptions, 1);
         assert_eq!(s.tokens_generated, 6);
         assert_eq!((s.batch_requests, s.batch_items), (1, 3));
         assert_eq!(s.sessions_opened, 2);

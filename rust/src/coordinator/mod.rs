@@ -114,6 +114,8 @@ impl Coordinator {
     pub fn shutdown(&self) {
         self.shared.shutdown.store(true, Ordering::SeqCst);
         self.shared.cv.notify_all();
+        // the scheduler may be blocked on pool capacity, not the queue
+        self.shared.engine.pool.notify_free();
         if let Some(h) = self.worker.lock().unwrap().take() {
             let _ = h.join();
         }

@@ -108,6 +108,13 @@ impl ResponseHandle {
     pub fn try_get(&self) -> Option<Response> {
         self.inner.0.lock().unwrap().clone()
     }
+
+    /// Whether the response has been fulfilled, WITHOUT deep-cloning it
+    /// (`try_get` clones the whole token vector; the scheduler polls this
+    /// per active request per decode step).
+    pub fn is_fulfilled(&self) -> bool {
+        self.inner.0.lock().unwrap().is_some()
+    }
 }
 
 impl Default for ResponseHandle {
@@ -127,6 +134,9 @@ pub struct InFlight {
     /// next token to feed (set after prefill / each decode step)
     pub cur_token: Option<i32>,
     pub first_token_at: Option<Instant>,
+    /// when the scheduler (most recently) admitted this request — the
+    /// boundary between queue wait and service time in `Timing`
+    pub admitted_at: Option<Instant>,
     pub rng: crate::util::rng::SplitMix,
 }
 
@@ -141,8 +151,23 @@ impl InFlight {
             generated: Vec::new(),
             cur_token: None,
             first_token_at: None,
+            admitted_at: None,
             rng: crate::util::rng::SplitMix::new(seed),
         }
+    }
+
+    /// Rewind to the just-submitted state for a requeue (preemption or a
+    /// prefill bounce): the retry re-prefills from scratch with a reset
+    /// RNG, so under greedy (or any seeded) sampling it reproduces exactly
+    /// the output an uninterrupted run would have produced. `submitted`
+    /// stays, so timing metrics keep charging the full client wait.
+    pub fn reset_for_retry(&mut self) {
+        self.seq_id = None;
+        self.generated.clear();
+        self.cur_token = None;
+        self.first_token_at = None;
+        self.admitted_at = None;
+        self.rng = crate::util::rng::SplitMix::new(self.req.seed);
     }
 
     pub fn done(&self) -> bool {

@@ -1,8 +1,22 @@
 //! The continuous-batching scheduler: admits requests from the priority
-//! queue (policy-homogeneous prefill batches), interleaves one decode step
-//! per iteration across all active sequences (grouped by policy, since the
-//! layer artifacts are compiled per bit-variant), retires finished requests
-//! and applies cache-pool backpressure.
+//! queue (policy-homogeneous prefill batches) under an expected-pages
+//! estimate, interleaves one decode step per iteration across all active
+//! sequences (grouped by policy, since the layer artifacts are compiled
+//! per bit-variant), retires finished requests and applies cache-pool
+//! backpressure.
+//!
+//! The pool is demand-paged (see `kvcache/pool.rs`), so admission is
+//! optimistic: a request is admitted when its *projected* footprint
+//! (prompt + n_gen, page-rounded) fits next to the currently resident
+//! pages. Previously admitted sequences keep growing, so concurrent
+//! long generations can collide mid-decode; the engine then bounces the
+//! step with `BudgetExceeded` BEFORE touching any cache, and the
+//! scheduler **preempts** — the lowest-priority, youngest non-session
+//! request is freed and requeued (its retry re-prefills with a reset RNG,
+//! reproducing the uninterrupted output) instead of anything panicking or
+//! failing. All waiting is notification-driven: the queue condvar covers
+//! submissions and shutdown, and the pool's free-epoch condvar covers
+//! capacity releases, so the scheduler never sleep-polls.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -22,7 +36,8 @@ pub struct CoordinatorConfig {
     /// cap on sequences stepped per decode call per policy group
     pub max_batch: usize,
     /// linger before prefilling a lone arrival, to give the batcher a
-    /// chance to group requests (ablated in the perf bench)
+    /// chance to group requests (ablated in the perf bench); skipped when
+    /// the queue already holds a full batch or shutdown is flagged
     pub batch_window: Duration,
     /// byte budget for the KV prefix cache (0 disables prefix reuse)
     pub prefix_cache_bytes: usize,
@@ -39,6 +54,11 @@ impl Default for CoordinatorConfig {
     }
 }
 
+/// Backstop for the pool-capacity wait: releases and shutdown notify the
+/// condvar (and bump the free epoch), so this only bounds the damage of a
+/// hypothetical missed signal — it is not a poll interval.
+const CAPACITY_WAIT_BACKSTOP: Duration = Duration::from_millis(250);
+
 pub(super) struct Shared {
     pub engine: Arc<Engine>,
     pub queue: Mutex<RequestQueue>,
@@ -52,25 +72,33 @@ pub(super) struct Shared {
 pub(super) fn run_scheduler(shared: Arc<Shared>) {
     let mut active: Vec<InFlight> = Vec::new();
     loop {
-        // ---- wait for work ----
+        // ---- wait for work (notification-driven: submit() and shutdown()
+        // both signal the queue condvar, so no timeout is needed) ----
         if active.is_empty() {
             let mut q = shared.queue.lock().unwrap();
             while q.is_empty() && !shared.shutdown.load(Ordering::SeqCst) {
-                let (guard, _) = shared
-                    .cv
-                    .wait_timeout(q, Duration::from_millis(50))
-                    .unwrap();
-                q = guard;
+                q = shared.cv.wait(q).unwrap();
             }
             if q.is_empty() && shared.shutdown.load(Ordering::SeqCst) {
                 return;
             }
+            let backlog = q.len();
             drop(q);
-            // batching window: let near-simultaneous arrivals pile up
-            if !shared.cfg.batch_window.is_zero() {
+            // batching window: let near-simultaneous arrivals pile up —
+            // pointless when a full batch is already queued or we are
+            // shutting down
+            if !shared.cfg.batch_window.is_zero()
+                && backlog < shared.cfg.max_batch
+                && !shared.shutdown.load(Ordering::SeqCst)
+            {
                 std::thread::sleep(shared.cfg.batch_window);
             }
         }
+
+        // Capture the pool's free epoch BEFORE attempting admission: a
+        // release between a bounce below and the capacity wait would
+        // otherwise be lost and cost a full backstop interval.
+        let pool_epoch = shared.engine.pool.free_epoch();
 
         // ---- admit + prefill (policy-homogeneous groups) ----
         loop {
@@ -103,7 +131,7 @@ pub(super) fn run_scheduler(shared: Arc<Shared>) {
         }
 
         // nothing running but work is queued (all bounced by backpressure):
-        // don't busy-spin against the pool
+        // block until the pool actually releases capacity
         if active.is_empty() {
             if shared.shutdown.load(Ordering::SeqCst) {
                 // shutting down and nothing can be admitted: fail the rest
@@ -112,7 +140,10 @@ pub(super) fn run_scheduler(shared: Arc<Shared>) {
                 }
                 return;
             }
-            std::thread::sleep(Duration::from_millis(2));
+            shared
+                .engine
+                .pool
+                .wait_for_free(pool_epoch, CAPACITY_WAIT_BACKSTOP);
             continue;
         }
 
@@ -127,7 +158,7 @@ pub(super) fn run_scheduler(shared: Arc<Shared>) {
                 None => groups.push(vec![i]),
             }
         }
-        for group in groups {
+        'groups: for group in groups {
             let ids: Vec<u64> =
                 group.iter().map(|&i| active[i].seq_id.unwrap()).collect();
             let toks: Vec<i32> =
@@ -150,6 +181,43 @@ pub(super) fn run_scheduler(shared: Arc<Shared>) {
                     }
                 }
                 Err(e) => {
+                    // A page-budget bounce happens BEFORE any cache
+                    // mutation (the engine reserves first), so every
+                    // sequence is intact: preempt a victim back to the
+                    // queue and retry the survivors next iteration. When
+                    // no victim is requeue-eligible (sessions, streams),
+                    // shed ONE member of the colliding group — the rest
+                    // are untouched and retry — rather than failing the
+                    // whole batch.
+                    let budget = matches!(
+                        e.downcast_ref::<PoolError>(),
+                        Some(PoolError::BudgetExceeded { .. })
+                    );
+                    if budget {
+                        if !preempt_one(&shared, &mut active) {
+                            let victim = group
+                                .iter()
+                                .copied()
+                                .filter(|&i| !active[i].handle.is_fulfilled())
+                                .min_by_key(|&i| {
+                                    (
+                                        active[i].req.priority,
+                                        std::cmp::Reverse(active[i].submitted),
+                                    )
+                                });
+                            if let Some(vi) = victim {
+                                fail(
+                                    &shared,
+                                    &mut active[vi],
+                                    "page budget exhausted with no preemptable victim",
+                                );
+                                active[vi].generated = vec![];
+                            }
+                        }
+                        // indices into `active` may be stale after a
+                        // preemption; rebuild groups next loop iteration
+                        break 'groups;
+                    }
                     for &i in &group {
                         fail(&shared, &mut active[i], &format!("decode failed: {e}"));
                         active[i].generated = vec![]; // mark failed via handle
@@ -161,9 +229,10 @@ pub(super) fn run_scheduler(shared: Arc<Shared>) {
         // ---- retire ----
         let mut i = 0;
         while i < active.len() {
-            if active[i].done() || active[i].handle.try_get().is_some() {
+            let fulfilled = active[i].handle.is_fulfilled();
+            if active[i].done() || fulfilled {
                 let inf = active.swap_remove(i);
-                if inf.handle.try_get().is_none() {
+                if !fulfilled {
                     complete(&shared, inf);
                 } else if let Some(id) = inf.seq_id {
                     if inf.req.session_seq.is_none() {
@@ -184,6 +253,46 @@ pub(super) fn run_scheduler(shared: Arc<Shared>) {
     }
 }
 
+/// Evict one active request back to the queue to relieve a page-budget
+/// collision: the lowest-priority, youngest non-session, non-streaming
+/// request (sessions hold pinned state that must not be freed; a stream
+/// has already emitted tokens that a retry would duplicate). Returns
+/// false when no eligible victim exists (the caller then fails the
+/// stalled group instead — with a single active request a self-preempt
+/// would just retry into the same wall).
+fn preempt_one(shared: &Arc<Shared>, active: &mut Vec<InFlight>) -> bool {
+    if active.len() <= 1 {
+        return false;
+    }
+    let mut victim: Option<usize> = None;
+    for (i, inf) in active.iter().enumerate() {
+        if inf.req.session_seq.is_some()
+            || inf.req.on_token.is_some()
+            || inf.handle.is_fulfilled()
+        {
+            continue;
+        }
+        victim = match victim {
+            None => Some(i),
+            Some(v) => {
+                let lower = inf.req.priority < active[v].req.priority
+                    || (inf.req.priority == active[v].req.priority
+                        && inf.submitted > active[v].submitted);
+                if lower { Some(i) } else { Some(v) }
+            }
+        };
+    }
+    let Some(i) = victim else { return false };
+    let mut inf = active.swap_remove(i);
+    if let Some(id) = inf.seq_id.take() {
+        let _ = shared.engine.free_seq(id); // wakes capacity waiters
+    }
+    inf.reset_for_retry();
+    shared.metrics.record_preemption();
+    shared.queue.lock().unwrap().push(inf);
+    true
+}
+
 /// Prefill a policy-homogeneous group. Returns `(active, requeue)`: requests
 /// that were admitted + prefilled, and requests bounced by pool
 /// backpressure (to be requeued by the caller).
@@ -202,7 +311,7 @@ fn prefill_group(
         // Context-budget admission check for EVERY request: a request
         // appends prompt + n_gen tokens (prefill + one per decode step)
         // and the engine has no decode-time bound — admitting an
-        // over-budget request would panic the scheduler on "quantized
+        // over-budget request would stall the scheduler on "quantized
         // region full" mid-decode. Sessions make this routine (history
         // accumulates across turns); huge n_gen makes it reachable even
         // on a fresh sequence.
@@ -232,16 +341,51 @@ fn prefill_group(
             );
             continue;
         }
+        // Expected-pages admission (demand-paged pool): allocation alone
+        // charges almost nothing, so gate on the page-rounded footprint
+        // this request will grow to. Optimistic — already-active
+        // sequences keep growing too; mid-decode collisions preempt.
+        let verdict = match inf.req.session_seq {
+            Some(id) => shared.engine.pool.admit_growth(id, need),
+            None => shared.engine.pool.admit(&inf.req.policy, need),
+        };
+        if let Err(e) = verdict {
+            // A bounce is transient only if waiting can EVER free enough:
+            // a session's own resident pages are pinned and will never be
+            // reclaimed by waiting, so they count against the budget the
+            // growth must fit into (otherwise a grown session's next turn
+            // would requeue forever and hang its client).
+            let own = inf
+                .req
+                .session_seq
+                .and_then(|id| shared.engine.seq_bytes(id).ok())
+                .unwrap_or(0);
+            match e {
+                // transient: waiting will free capacity
+                PoolError::BudgetExceeded { requested, budget, .. }
+                    if requested + own <= budget =>
+                {
+                    requeue.push(inf);
+                }
+                // permanent: this request can never fit — fail it (for a
+                // session turn this also evicts the session, releasing
+                // its pinned pages)
+                _ => fail(shared, &mut inf, &format!("admission failed: {e}")),
+            }
+            continue;
+        }
         // session turns ride on a pre-allocated pinned sequence: no
-        // allocation, no backpressure, and never freed by the scheduler
+        // allocation and never freed by the scheduler
         if let Some(id) = inf.req.session_seq {
             inf.seq_id = Some(id);
+            inf.admitted_at = Some(Instant::now());
             admitted.push(inf);
             continue;
         }
         match shared.engine.create_seq(&inf.req.policy) {
             Ok(id) => {
                 inf.seq_id = Some(id);
+                inf.admitted_at = Some(Instant::now());
                 admitted.push(inf);
             }
             Err(e) => {
@@ -277,49 +421,78 @@ fn prefill_group(
         let (sess_group, other_group): (Vec<InFlight>, Vec<InFlight>) = admitted
             .into_iter()
             .partition(|i| i.req.session_seq.is_some());
-        let mut done = prefill_subset(shared, sess_group, false);
-        done.extend(prefill_subset(shared, other_group, true));
+        let (mut done, mut bounced) = prefill_subset(shared, sess_group, false);
+        let (done2, bounced2) = prefill_subset(shared, other_group, true);
+        done.extend(done2);
+        bounced.extend(bounced2);
+        requeue.extend(bounced);
         return (done, requeue);
     }
     let use_cache = !any_session;
-    (prefill_subset(shared, admitted, use_cache), requeue)
+    let (done, bounced) = prefill_subset(shared, admitted, use_cache);
+    requeue.extend(bounced);
+    (done, requeue)
 }
 
 /// Prefill one policy-homogeneous group with a single engine call,
-/// assigning each request its first token. On engine error only THIS
-/// group's requests are failed. Returns the survivors.
+/// assigning each request its first token. A page-budget bounce (raised by
+/// the engine's reservation BEFORE any cache mutation) sheds the group's
+/// tail member back to the queue and retries the rest — bounded by the
+/// group size, and guaranteed to make progress whenever any single
+/// member's prompt fits. On any other engine error only THIS group's
+/// requests are failed. Returns `(survivors, bounced)`.
 fn prefill_subset(
     shared: &Arc<Shared>,
     mut group: Vec<InFlight>,
     use_cache: bool,
-) -> Vec<InFlight> {
-    if group.is_empty() {
-        return group;
-    }
-    let ids: Vec<u64> = group.iter().map(|i| i.seq_id.unwrap()).collect();
-    let prompts: Vec<Vec<i32>> =
-        group.iter().map(|i| i.req.prompt.clone()).collect();
-    let n_prompt: usize = prompts.iter().map(|p| p.len()).sum();
-    let result = match &shared.prefix_cache {
-        Some(pc) if use_cache => shared.engine.prefill_cached(&ids, &prompts, pc),
-        _ => shared.engine.prefill(&ids, &prompts),
-    };
-    match result {
-        Ok(logits) => {
-            shared.metrics.record_prefill(n_prompt);
-            let now = Instant::now();
-            for (inf, l) in group.iter_mut().zip(&logits) {
-                let tok = sample(l, &inf.req.sampling, &mut inf.rng);
-                inf.cur_token = Some(tok);
-                inf.first_token_at = Some(now);
-            }
-            group
+) -> (Vec<InFlight>, Vec<InFlight>) {
+    let mut bounced: Vec<InFlight> = Vec::new();
+    loop {
+        if group.is_empty() {
+            return (group, bounced);
         }
-        Err(e) => {
-            for mut inf in group {
-                fail(shared, &mut inf, &format!("prefill failed: {e}"));
+        let ids: Vec<u64> = group.iter().map(|i| i.seq_id.unwrap()).collect();
+        let prompts: Vec<Vec<i32>> =
+            group.iter().map(|i| i.req.prompt.clone()).collect();
+        let n_prompt: usize = prompts.iter().map(|p| p.len()).sum();
+        let result = match &shared.prefix_cache {
+            Some(pc) if use_cache => shared.engine.prefill_cached(&ids, &prompts, pc),
+            _ => shared.engine.prefill(&ids, &prompts),
+        };
+        match result {
+            Ok(logits) => {
+                shared.metrics.record_prefill(n_prompt);
+                let now = Instant::now();
+                for (inf, l) in group.iter_mut().zip(&logits) {
+                    let tok = sample(l, &inf.req.sampling, &mut inf.rng);
+                    inf.cur_token = Some(tok);
+                    inf.first_token_at = Some(now);
+                }
+                return (group, bounced);
             }
-            Vec::new()
+            Err(e) => {
+                if matches!(
+                    e.downcast_ref::<PoolError>(),
+                    Some(PoolError::BudgetExceeded { .. })
+                ) {
+                    // the reservation bounced before any prompt token
+                    // became resident: shed the youngest member (release
+                    // its sequence, requeue) and retry the smaller group
+                    let mut inf = group.pop().unwrap();
+                    if inf.req.session_seq.is_none() {
+                        if let Some(id) = inf.seq_id.take() {
+                            let _ = shared.engine.free_seq(id);
+                        }
+                    }
+                    inf.reset_for_retry();
+                    bounced.push(inf);
+                } else {
+                    for mut inf in group {
+                        fail(shared, &mut inf, &format!("prefill failed: {e}"));
+                    }
+                    return (Vec::new(), bounced);
+                }
+            }
         }
     }
 }
@@ -330,8 +503,14 @@ fn complete(shared: &Arc<Shared>, inf: InFlight) {
         .first_token_at
         .map(|t| t.duration_since(inf.submitted).as_secs_f64())
         .unwrap_or(total);
+    // queue wait ends at (the final) admission; TTFT additionally includes
+    // prefill, so the two are separable in metrics (docs/API.md)
+    let queue_s = inf
+        .admitted_at
+        .map(|t| t.duration_since(inf.submitted).as_secs_f64())
+        .unwrap_or(ttft);
     let timing = Timing {
-        queue_s: ttft, // queueing dominates TTFT in this single-device setup
+        queue_s,
         ttft_s: ttft,
         total_s: total,
         decode_steps: inf.generated.len(),

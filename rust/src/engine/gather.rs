@@ -97,6 +97,24 @@ pub fn gather_layer_args(
         a.v_zeros = vec![0.0; b * h];
     }
 
+    // Per-head scatter of a paged source row ([H, cap·stride] bytes) into
+    // the full-context slot layout ([H, full·stride]); collapses to one
+    // contiguous memcpy per tensor when the cache is fully grown.
+    fn scatter<T: Copy>(dst: &mut [T], src: &[T], slot: usize, h: usize,
+                        cap_row: usize, full_row: usize) {
+        debug_assert!(cap_row <= full_row);
+        debug_assert_eq!(src.len(), h * cap_row);
+        if cap_row == full_row {
+            let n = h * full_row;
+            dst[slot * n..(slot + 1) * n].copy_from_slice(src);
+            return;
+        }
+        for head in 0..h {
+            let d = (slot * h + head) * full_row;
+            dst[d..d + cap_row].copy_from_slice(&src[head * cap_row..(head + 1) * cap_row]);
+        }
+    }
+
     for (slot, seq) in seqs.iter().enumerate() {
         let lc = &seq.layers[layer_idx];
         // a mixed-policy batch would scatter into wrongly-sized packed
@@ -104,26 +122,26 @@ pub fn gather_layer_args(
         // must hold in release builds too
         assert_eq!(lc.k_bits, k_bits, "mixed-policy batch");
         assert_eq!(lc.v_bits, v_bits, "mixed-policy batch");
-        // main cache region: contiguous per-slot copy
+        let cap = lc.q_capacity(); // allocated tokens (≤ t under paging)
+        // main cache region: per-head rows from the paged buffers into the
+        // artifact's full-context strides (padding stays zero + masked)
         if k_bits > 0 {
-            let n = lc.k_pk.len();
-            a.k_main[slot * n..(slot + 1) * n].copy_from_slice(&lc.k_pk);
-            let np = lc.k_scales.len();
-            a.k_scales[slot * np..(slot + 1) * np].copy_from_slice(&lc.k_scales);
-            a.k_zeros[slot * np..(slot + 1) * np].copy_from_slice(&lc.k_zeros);
+            scatter(&mut a.k_main, &lc.k_pk, slot, h,
+                    kernels::packed_len(cap, k_bits) * dh,
+                    kernels::packed_len(t, k_bits) * dh);
+            scatter(&mut a.k_scales, &lc.k_scales, slot, h, (cap / g) * dh, (t / g) * dh);
+            scatter(&mut a.k_zeros, &lc.k_zeros, slot, h, (cap / g) * dh, (t / g) * dh);
         } else {
-            let n = lc.k_f32.len();
-            a.k_main_f32[slot * n..(slot + 1) * n].copy_from_slice(&lc.k_f32);
+            scatter(&mut a.k_main_f32, &lc.k_f32, slot, h, cap * dh, t * dh);
         }
         if v_bits > 0 {
-            let n = lc.v_pk.len();
-            a.v_main[slot * n..(slot + 1) * n].copy_from_slice(&lc.v_pk);
-            let np = lc.v_scales.len();
-            a.v_scales[slot * np..(slot + 1) * np].copy_from_slice(&lc.v_scales);
-            a.v_zeros[slot * np..(slot + 1) * np].copy_from_slice(&lc.v_zeros);
+            let dh_pk = kernels::packed_len(dh, v_bits);
+            scatter(&mut a.v_main, &lc.v_pk, slot, h, cap * dh_pk, t * dh_pk);
+            let dg = dh / g2;
+            scatter(&mut a.v_scales, &lc.v_scales, slot, h, cap * dg, t * dg);
+            scatter(&mut a.v_zeros, &lc.v_zeros, slot, h, cap * dg, t * dg);
         } else {
-            let n = lc.v_f32.len();
-            a.v_main_f32[slot * n..(slot + 1) * n].copy_from_slice(&lc.v_f32);
+            scatter(&mut a.v_main_f32, &lc.v_f32, slot, h, cap * dh, t * dh);
         }
         // residual ring (compacted)
         let hrd = h * r * dh;

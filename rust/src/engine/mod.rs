@@ -138,6 +138,11 @@ impl Engine {
         Ok(self.pool.with_seq(id, |s| s.pos)?)
     }
 
+    /// Resident cache bytes (allocated pages) of a live sequence.
+    pub fn seq_bytes(&self, id: u64) -> Result<usize> {
+        Ok(self.pool.with_seq(id, |s| s.capacity_bytes())?)
+    }
+
     // -----------------------------------------------------------------
     // forward passes
     // -----------------------------------------------------------------
@@ -146,6 +151,11 @@ impl Engine {
     /// Returns next-token logits per sequence.
     pub fn decode(&self, ids: &[u64], tokens: &[i32]) -> Result<Vec<Vec<f32>>> {
         assert_eq!(ids.len(), tokens.len());
+        // Reserve the step's cache pages BEFORE any mutation: a budget
+        // bounce here leaves every sequence's state untouched, so the
+        // scheduler can preempt a victim and retry instead of inheriting
+        // half-advanced caches (or panicking mid-decode).
+        self.pool.reserve_growth(ids, &vec![1; ids.len()])?;
         let mut out = Vec::with_capacity(ids.len());
         let max_b = *self.rt.manifest.batch_sizes.iter().max().unwrap();
         for (idc, tkc) in ids.chunks(max_b).zip(tokens.chunks(max_b)) {
@@ -190,6 +200,10 @@ impl Engine {
                 );
             }
         }
+        // Reserve every chunk's cache pages up front (prefill mutates per
+        // chunk; a mid-prompt bounce would strand half-resident prompts).
+        let counts: Vec<usize> = prompts.iter().map(|p| p.len()).collect();
+        self.pool.reserve_growth(ids, &counts)?;
         let max_b = *m.batch_sizes.iter().max().unwrap();
         let mut results: Vec<Vec<Vec<f32>>> = prompts.iter().map(|_| vec![]).collect();
         for (ci, idc) in ids.chunks(max_b).enumerate() {
@@ -240,13 +254,25 @@ impl Engine {
                     .collect::<Vec<_>>()
                     .join(",")
             })?;
-            match pcache.lookup(&pname, prompt) {
+            // A snapshot only stores its allocated pages, but restoring
+            // still charges them to this sequence: gate on pool headroom
+            // and degrade to a miss when the restore would not fit (the
+            // hit counter stays bumped; rare and harmless).
+            let hit = pcache.lookup(&pname, prompt).filter(|hit| {
+                let cur = self
+                    .pool
+                    .with_seq(id, |s| s.capacity_bytes())
+                    .unwrap_or(0);
+                self.pool
+                    .has_headroom(hit.cache.capacity_bytes().saturating_sub(cur))
+            });
+            match hit {
                 Some(hit) => {
                     self.pool.with_seq(id, |s| {
                         debug_assert_eq!(
-                            s.capacity_bytes(),
-                            hit.cache.capacity_bytes(),
-                            "snapshot/policy geometry mismatch"
+                            s.layers.len(),
+                            hit.cache.layers.len(),
+                            "snapshot/policy layer-count mismatch"
                         );
                         *s = hit.cache.clone();
                     })?;
@@ -427,8 +453,15 @@ impl Engine {
                 // PERF (zero-copy single-sequence path): with one sequence
                 // and no padding, the per-seq cache buffers ARE the
                 // artifact's slot layout — build literals straight from
-                // them instead of gathering into scratch.
-                if !naive && ids.len() == 1 && b_art == 1 {
+                // them instead of gathering into scratch. Under demand
+                // paging that only holds once the packed region has grown
+                // to the full context; partial caches go through the
+                // (stride-translating) gather.
+                if !naive
+                    && ids.len() == 1
+                    && b_art == 1
+                    && seqs[0].layers[layer].q_capacity() == t_ctx
+                {
                     None
                 } else {
                     Some(gather_layer_args(&geo, seqs, layer))

@@ -2,11 +2,25 @@
 //! ring, in exactly the memory layout the AOT layer artifacts consume, so
 //! batch assembly is a straight memcpy per tensor.
 //!
-//! Layouts (row-major):
-//!   packed K   [H, T·kb/8, Dh] u8      scales/zeros [H, T/G, Dh] f32
-//!   packed V   [H, T, Dh·vb/8] u8      scales/zeros [H, T, Dh/G2] f32
-//!   residual   [R, H, Dh] f32 ring (token-major so an append is one
+//! Layouts (row-major; `Tc` = allocated quantized capacity in tokens,
+//! `Rc` = allocated residual capacity in tokens — see *Paged allocation*):
+//!   packed K   [H, Tc·kb/8, Dh] u8     scales/zeros [H, Tc/G, Dh] f32
+//!   packed V   [H, Tc, Dh·vb/8] u8     scales/zeros [H, Tc, Dh/G2] f32
+//!   residual   [Rc, H, Dh] f32 ring (token-major so an append is one
 //!              contiguous row write); materialized to [H, R, Dh] on gather
+//!
+//! Paged allocation: storage is **demand-paged** in group-aligned pages of
+//! `G` tokens instead of being pre-allocated for the full context. A fresh
+//! cache holds no token storage at all; `append_token`/`append_tokens`/
+//! `fold_oldest_group` grow the packed region and the residual ring to the
+//! exact page-rounded need (`q_capacity()` ≤ T, `res_capacity()` ≤ R).
+//! Growth is deterministic — the same token stream always produces the
+//! same capacities, whatever the append granularity — so
+//! [`LayerCache::growth_bytes_for`] predicts the byte delta of an append
+//! *exactly*, which is what [`super::pool::CachePool`] charges and gates
+//! on. Every per-head stride of the packed buffers derives from the
+//! current capacity, not from T; growth restrides with one memcpy per head
+//! per tensor.
 //!
 //! Fold policy (ABI shared with python/compile/engine_sim.py): before
 //! appending C tokens, fold the OLDEST group of G residual tokens into the
@@ -33,6 +47,11 @@ impl CacheGeometry {
     }
 }
 
+/// Round a token count up to whole `g`-token pages, capped at `limit`.
+fn page_target(need: usize, g: usize, limit: usize) -> usize {
+    (need.div_ceil(g) * g).min(limit)
+}
+
 #[derive(Debug, Clone)]
 pub struct LayerCache {
     pub geo: CacheGeometry,
@@ -40,6 +59,9 @@ pub struct LayerCache {
     pub v_bits: Bits,
     /// quantized token count (multiple of G)
     pub n_q: usize,
+    /// allocated quantized-region capacity in tokens (page-aligned, ≤ T);
+    /// every packed/scale/zero stride derives from this
+    q_cap: usize,
     // --- K side (packed when k_bits > 0, fp32 otherwise) ---
     pub k_pk: Vec<u8>,
     pub k_f32: Vec<f32>,
@@ -50,52 +72,47 @@ pub struct LayerCache {
     pub v_f32: Vec<f32>,
     pub v_scales: Vec<f32>,
     pub v_zeros: Vec<f32>,
-    // --- fp32 residual ring, [R, H, Dh] token-major ---
+    // --- fp32 residual ring, [Rc, H, Dh] token-major ---
     res_k: Vec<f32>,
     res_v: Vec<f32>,
+    /// allocated ring capacity in tokens (page-aligned, ≤ R)
+    res_cap: usize,
     res_start: usize,
     res_len: usize,
 }
 
 impl LayerCache {
+    /// A fresh cache allocates NO token storage (demand paging); only the
+    /// fp32 paths carry their fixed dummy scale/zero rows (artifact ABI).
     pub fn new(geo: CacheGeometry, k_bits: Bits, v_bits: Bits) -> Self {
-        let (h, t, dh, g) = (geo.n_heads, geo.max_ctx, geo.d_head, geo.group);
-        let g2 = geo.g2();
-        let (k_pk, k_f32, k_scales, k_zeros) = if k_bits > 0 {
-            (
-                vec![0u8; h * rtn::packed_len(t, k_bits) * dh],
-                vec![],
-                vec![0f32; h * (t / g) * dh],
-                vec![0f32; h * (t / g) * dh],
-            )
+        let h = geo.n_heads;
+        let (k_scales, k_zeros) = if k_bits > 0 {
+            (vec![], vec![])
         } else {
-            (vec![], vec![0f32; h * t * dh], vec![0f32; h], vec![0f32; h])
+            (vec![0f32; h], vec![0f32; h])
         };
-        let (v_pk, v_f32, v_scales, v_zeros) = if v_bits > 0 {
-            (
-                vec![0u8; h * t * rtn::packed_len(dh, v_bits)],
-                vec![],
-                vec![0f32; h * t * (dh / g2)],
-                vec![0f32; h * t * (dh / g2)],
-            )
+        let (v_scales, v_zeros) = if v_bits > 0 {
+            (vec![], vec![])
         } else {
-            (vec![], vec![0f32; h * t * dh], vec![0f32; h], vec![0f32; h])
+            (vec![0f32; h], vec![0f32; h])
         };
         Self {
             geo,
             k_bits,
             v_bits,
             n_q: 0,
-            k_pk,
-            k_f32,
+            q_cap: 0,
+            k_pk: vec![],
+            k_f32: vec![],
             k_scales,
             k_zeros,
-            v_pk,
-            v_f32,
+            v_pk: vec![],
+            v_f32: vec![],
             v_scales,
             v_zeros,
-            res_k: vec![0f32; geo.residual * h * dh],
-            res_v: vec![0f32; geo.residual * h * dh],
+            res_k: vec![],
+            res_v: vec![],
+            res_cap: 0,
             res_start: 0,
             res_len: 0,
         }
@@ -110,6 +127,142 @@ impl LayerCache {
         self.n_q + self.res_len
     }
 
+    /// Allocated quantized-region capacity in tokens (page-aligned, ≤ T).
+    pub fn q_capacity(&self) -> usize {
+        self.q_cap
+    }
+
+    /// Allocated residual-ring capacity in tokens (page-aligned, ≤ R).
+    pub fn res_capacity(&self) -> usize {
+        self.res_cap
+    }
+
+    // -----------------------------------------------------------------
+    // paged growth
+    // -----------------------------------------------------------------
+
+    /// Capacities after appending `count` tokens: exact page-rounded need,
+    /// shared by the growth paths AND [`LayerCache::growth_bytes_for`] so
+    /// prediction and allocation can never diverge.
+    fn caps_for_append(&self, count: usize) -> (usize, usize) {
+        let (g, r, t) = (self.geo.group, self.geo.residual, self.geo.max_ctx);
+        // appends fold as late as possible: ceil(overflow / G) groups
+        let folds = (self.res_len + count).saturating_sub(r).div_ceil(g);
+        let n_q2 = self.n_q + folds * g;
+        let res2 = (self.res_len + count).saturating_sub(folds * g);
+        let q_t = if n_q2 > self.q_cap {
+            page_target(n_q2, g, t)
+        } else {
+            self.q_cap
+        };
+        // ring occupancy peaks at max(now, after): folds only shrink it and
+        // the appended tokens land after the folds
+        let res_need = self.res_len.max(res2);
+        let r_t = if res_need > self.res_cap {
+            page_target(res_need, g, r)
+        } else {
+            self.res_cap
+        };
+        (q_t, r_t)
+    }
+
+    /// Allocation footprint at the given capacities (the closed form of
+    /// [`LayerCache::capacity_bytes`]).
+    fn bytes_at_caps(&self, q_cap: usize, res_cap: usize) -> usize {
+        let geo = self.geo;
+        let (h, dh, g) = (geo.n_heads, geo.d_head, geo.group);
+        let g2 = geo.g2();
+        let mut total = 2 * res_cap * h * dh * 4; // fp32 ring, K and V
+        if self.k_bits > 0 {
+            total += h * rtn::packed_len(q_cap, self.k_bits) * dh;
+            total += 2 * h * (q_cap / g) * dh * 4;
+        } else {
+            total += h * q_cap * dh * 4 + 2 * h * 4;
+        }
+        if self.v_bits > 0 {
+            total += h * q_cap * rtn::packed_len(dh, self.v_bits);
+            total += 2 * h * q_cap * (dh / g2) * 4;
+        } else {
+            total += h * q_cap * dh * 4 + 2 * h * 4;
+        }
+        total
+    }
+
+    /// Bytes this cache will newly allocate to absorb `count` appended
+    /// tokens — exact, because growth is deterministic page-rounding.
+    pub fn growth_bytes_for(&self, count: usize) -> usize {
+        let (q_t, r_t) = self.caps_for_append(count);
+        self.bytes_at_caps(q_t, r_t) - self.bytes_at_caps(self.q_cap, self.res_cap)
+    }
+
+    /// Grow the packed region (and its scale/zero params) to hold at least
+    /// `need` tokens, restriding each head's rows into the new buffers.
+    fn ensure_q_cap(&mut self, need: usize) {
+        if need <= self.q_cap {
+            return;
+        }
+        let geo = self.geo;
+        let (h, dh, g) = (geo.n_heads, geo.d_head, geo.group);
+        let g2 = geo.g2();
+        let new_cap = page_target(need, g, geo.max_ctx);
+        assert!(new_cap >= need, "quantized region full (need {need} > T={})", geo.max_ctx);
+        let old = self.q_cap;
+        // per-head restride: copy each head's old row into the wider layout
+        fn restride<T: Copy + Default>(buf: &mut Vec<T>, h: usize, ob: usize, nb: usize) {
+            let mut v = vec![T::default(); h * nb];
+            for head in 0..h {
+                v[head * nb..head * nb + ob].copy_from_slice(&buf[head * ob..(head + 1) * ob]);
+            }
+            *buf = v;
+        }
+        if self.k_bits > 0 {
+            restride(&mut self.k_pk, h, rtn::packed_len(old, self.k_bits) * dh,
+                     rtn::packed_len(new_cap, self.k_bits) * dh);
+            let (op, np) = ((old / g) * dh, (new_cap / g) * dh);
+            restride(&mut self.k_scales, h, op, np);
+            restride(&mut self.k_zeros, h, op, np);
+        } else {
+            restride(&mut self.k_f32, h, old * dh, new_cap * dh);
+        }
+        if self.v_bits > 0 {
+            let bpt = rtn::packed_len(dh, self.v_bits);
+            restride(&mut self.v_pk, h, old * bpt, new_cap * bpt);
+            let dg = dh / g2;
+            restride(&mut self.v_scales, h, old * dg, new_cap * dg);
+            restride(&mut self.v_zeros, h, old * dg, new_cap * dg);
+        } else {
+            restride(&mut self.v_f32, h, old * dh, new_cap * dh);
+        }
+        self.q_cap = new_cap;
+    }
+
+    /// Grow the residual ring to hold at least `need` tokens, compacting
+    /// the occupied slots to the front of the new buffer.
+    fn ensure_res_cap(&mut self, need: usize) {
+        if need <= self.res_cap {
+            return;
+        }
+        let geo = self.geo;
+        let hd = geo.n_heads * geo.d_head;
+        let new_cap = page_target(need, geo.group, geo.residual);
+        assert!(new_cap >= need, "residual ring full (need {need} > R={})", geo.residual);
+        let mut nk = vec![0f32; new_cap * hd];
+        let mut nv = vec![0f32; new_cap * hd];
+        for i in 0..self.res_len {
+            let src = ((self.res_start + i) % self.res_cap) * hd;
+            nk[i * hd..(i + 1) * hd].copy_from_slice(&self.res_k[src..src + hd]);
+            nv[i * hd..(i + 1) * hd].copy_from_slice(&self.res_v[src..src + hd]);
+        }
+        self.res_k = nk;
+        self.res_v = nv;
+        self.res_start = 0;
+        self.res_cap = new_cap;
+    }
+
+    // -----------------------------------------------------------------
+    // appends + folds
+    // -----------------------------------------------------------------
+
     /// Append one token's K/V ([H, Dh] row-major each), folding if needed.
     /// Returns the number of folds performed (engine metrics).
     pub fn append_token(&mut self, k: &[f32], v: &[f32]) -> usize {
@@ -121,7 +274,8 @@ impl LayerCache {
             self.fold_oldest_group();
             folds += 1;
         }
-        let slot = (self.res_start + self.res_len) % self.geo.residual;
+        self.ensure_res_cap(self.res_len + 1);
+        let slot = (self.res_start + self.res_len) % self.res_cap;
         self.res_k[slot * hd..(slot + 1) * hd].copy_from_slice(k);
         self.res_v[slot * hd..(slot + 1) * hd].copy_from_slice(v);
         self.res_len += 1;
@@ -134,6 +288,7 @@ impl LayerCache {
         let (h, dh, g) = (geo.n_heads, geo.d_head, geo.group);
         assert!(self.res_len >= g, "fold needs at least one full group");
         assert!(self.n_q + g <= geo.max_ctx, "quantized region full");
+        self.ensure_q_cap(self.n_q + g);
         let hd = h * dh;
 
         // gather oldest G tokens per head into [G, Dh] scratch
@@ -142,7 +297,7 @@ impl LayerCache {
         let gi = self.n_q / g; // destination group index
         for head in 0..h {
             for t in 0..g {
-                let slot = (self.res_start + t) % geo.residual;
+                let slot = (self.res_start + t) % self.res_cap;
                 let src = slot * hd + head * dh;
                 kg[t * dh..(t + 1) * dh]
                     .copy_from_slice(&self.res_k[src..src + dh]);
@@ -152,7 +307,7 @@ impl LayerCache {
             self.fold_k_head(head, gi, &kg);
             self.fold_v_head(head, gi, &vg);
         }
-        self.res_start = (self.res_start + g) % geo.residual;
+        self.res_start = (self.res_start + g) % self.res_cap;
         self.res_len -= g;
         self.n_q += g;
     }
@@ -174,6 +329,7 @@ impl LayerCache {
         // sequential appends fold as late as possible: ceil(overflow / G)
         let folds = (self.res_len + count).saturating_sub(r).div_ceil(g);
         assert!(self.n_q + folds * g <= geo.max_ctx, "quantized region full");
+        self.ensure_q_cap(self.n_q + folds * g);
         let mut consumed = 0; // batch tokens already folded
         for _ in 0..folds {
             if self.res_len >= g {
@@ -185,7 +341,7 @@ impl LayerCache {
                 let mut kt = vec![0f32; g * hd];
                 let mut vt = vec![0f32; g * hd];
                 for t in 0..from_ring {
-                    let slot = (self.res_start + t) % r;
+                    let slot = (self.res_start + t) % self.res_cap;
                     kt[t * hd..(t + 1) * hd]
                         .copy_from_slice(&self.res_k[slot * hd..(slot + 1) * hd]);
                     vt[t * hd..(t + 1) * hd]
@@ -194,17 +350,23 @@ impl LayerCache {
                 kt[from_ring * hd..].copy_from_slice(&ks[consumed * hd..(consumed + take) * hd]);
                 vt[from_ring * hd..].copy_from_slice(&vs[consumed * hd..(consumed + take) * hd]);
                 self.fold_group_rows(&kt, &vt);
-                self.res_start = (self.res_start + from_ring) % r;
+                // ring fully drained: its origin is free to reset (safe even
+                // when the ring has never been allocated, res_cap == 0)
+                self.res_start = 0;
                 self.res_len = 0;
                 consumed += take;
             }
         }
         // bulk-append the remaining batch tokens into the ring, in
         // contiguous runs up to the wrap point
+        if consumed < count {
+            self.ensure_res_cap(self.res_len + (count - consumed));
+        }
+        let rc = self.res_cap;
         let mut t = consumed;
         while t < count {
-            let slot = (self.res_start + self.res_len + (t - consumed)) % r;
-            let run = (count - t).min(r - slot);
+            let slot = (self.res_start + self.res_len + (t - consumed)) % rc;
+            let run = (count - t).min(rc - slot);
             self.res_k[slot * hd..(slot + run) * hd]
                 .copy_from_slice(&ks[t * hd..(t + run) * hd]);
             self.res_v[slot * hd..(slot + run) * hd]
@@ -222,6 +384,7 @@ impl LayerCache {
         let geo = self.geo;
         let (h, dh, g) = (geo.n_heads, geo.d_head, geo.group);
         assert!(self.n_q + g <= geo.max_ctx, "quantized region full");
+        self.ensure_q_cap(self.n_q + g);
         let hd = h * dh;
         let gi = self.n_q / g;
         let mut kg = vec![0f32; g * dh];
@@ -240,20 +403,21 @@ impl LayerCache {
 
     fn fold_k_head(&mut self, head: usize, gi: usize, kg: &[f32]) {
         let geo = self.geo;
-        let (t, dh, g) = (geo.max_ctx, geo.d_head, geo.group);
+        let (dh, g) = (geo.d_head, geo.group);
+        let tc = self.q_cap; // allocated token capacity drives all strides
         if self.k_bits == 0 {
-            let base = head * t * dh + self.n_q * dh;
+            let base = head * tc * dh + self.n_q * dh;
             self.k_f32[base..base + g * dh].copy_from_slice(kg);
             return;
         }
         let bits = self.k_bits;
         let rows_pk = rtn::packed_len(g, bits); // bytes along token axis
-        let t_pk = rtn::packed_len(t, bits);
+        let t_pk = rtn::packed_len(tc, bits);
         let mut params = vec![GroupParams { scale: 0.0, zero: 0.0 }; dh];
         let dst = head * t_pk * dh + gi * rows_pk * dh;
         rtn::fold_k_group(kg, g, dh, bits,
                           &mut self.k_pk[dst..dst + rows_pk * dh], &mut params);
-        let ng = t / g;
+        let ng = tc / g;
         let pbase = head * ng * dh + gi * dh;
         for d in 0..dh {
             self.k_scales[pbase + d] = params[d].scale;
@@ -263,10 +427,11 @@ impl LayerCache {
 
     fn fold_v_head(&mut self, head: usize, _gi: usize, vg: &[f32]) {
         let geo = self.geo;
-        let (t, dh, g) = (geo.max_ctx, geo.d_head, geo.group);
+        let (dh, g) = (geo.d_head, geo.group);
         let g2 = geo.g2();
+        let tc = self.q_cap;
         if self.v_bits == 0 {
-            let base = head * t * dh + self.n_q * dh;
+            let base = head * tc * dh + self.n_q * dh;
             self.v_f32[base..base + g * dh].copy_from_slice(vg);
             return;
         }
@@ -274,10 +439,10 @@ impl LayerCache {
         let bpt = rtn::packed_len(dh, bits); // bytes per token
         let dg = dh / g2;
         let mut params = vec![GroupParams { scale: 0.0, zero: 0.0 }; g * dg];
-        let dst = head * t * bpt + self.n_q * bpt;
+        let dst = head * tc * bpt + self.n_q * bpt;
         rtn::fold_v_group(vg, g, dh, g2, bits,
                           &mut self.v_pk[dst..dst + g * bpt], &mut params);
-        let pbase = head * t * dg + self.n_q * dg;
+        let pbase = head * tc * dg + self.n_q * dg;
         for i in 0..g * dg {
             self.v_scales[pbase + i] = params[i].scale;
             self.v_zeros[pbase + i] = params[i].zero;
@@ -292,7 +457,7 @@ impl LayerCache {
         let hd = h * dh;
         debug_assert_eq!(out_k.len(), h * r * dh);
         for slot in 0..self.res_len {
-            let src_row = ((self.res_start + slot) % r) * hd;
+            let src_row = ((self.res_start + slot) % self.res_cap) * hd;
             for head in 0..h {
                 let src = src_row + head * dh;
                 let dst = head * r * dh + slot * dh;
@@ -316,8 +481,9 @@ impl LayerCache {
 
     fn dequant_full(&self, is_k: bool) -> Vec<f32> {
         let geo = self.geo;
-        let (h, t, dh, g) = (geo.n_heads, geo.max_ctx, geo.d_head, geo.group);
+        let (h, dh, g) = (geo.n_heads, geo.d_head, geo.group);
         let g2 = geo.g2();
+        let tc = self.q_cap;
         let n = self.n_tokens();
         let mut out = vec![0f32; h * n * dh];
         let bits = if is_k { self.k_bits } else { self.v_bits };
@@ -326,14 +492,14 @@ impl LayerCache {
             for gi in 0..self.n_q / g {
                 let mut buf = vec![0f32; g * dh];
                 if bits == 0 {
-                    let src = head * t * dh + gi * g * dh;
+                    let src = head * tc * dh + gi * g * dh;
                     let f32s = if is_k { &self.k_f32 } else { &self.v_f32 };
                     buf.copy_from_slice(&f32s[src..src + g * dh]);
                 } else if is_k {
                     let rows_pk = rtn::packed_len(g, bits);
-                    let t_pk = rtn::packed_len(t, bits);
+                    let t_pk = rtn::packed_len(tc, bits);
                     let src = head * t_pk * dh + gi * rows_pk * dh;
-                    let ng = t / g;
+                    let ng = tc / g;
                     let pbase = head * ng * dh + gi * dh;
                     let params: Vec<GroupParams> = (0..dh)
                         .map(|d| GroupParams {
@@ -346,8 +512,8 @@ impl LayerCache {
                 } else {
                     let bpt = rtn::packed_len(dh, bits);
                     let dg = dh / g2;
-                    let src = head * t * bpt + gi * g * bpt;
-                    let pbase = head * t * dg + gi * g * dg;
+                    let src = head * tc * bpt + gi * g * bpt;
+                    let pbase = head * tc * dg + gi * g * dg;
                     let params: Vec<GroupParams> = (0..g * dg)
                         .map(|i| GroupParams {
                             scale: self.v_scales[pbase + i],
@@ -363,7 +529,7 @@ impl LayerCache {
             // residual region
             let hd = h * dh;
             for slot in 0..self.res_len {
-                let src_row = ((self.res_start + slot) % geo.residual) * hd;
+                let src_row = ((self.res_start + slot) % self.res_cap) * hd;
                 let res = if is_k { &self.res_k } else { &self.res_v };
                 let dst = head * n * dh + (self.n_q + slot) * dh;
                 out[dst..dst + dh]
@@ -398,9 +564,11 @@ impl LayerCache {
         total
     }
 
-    /// Full allocation footprint (static shapes; what the artifacts see).
+    /// Resident allocation footprint: the pages actually allocated so far
+    /// (grows with the sequence; at full growth this equals the old static
+    /// full-context footprint).
     pub fn capacity_bytes(&self) -> usize {
-        self.k_pk.len()
+        let total = self.k_pk.len()
             + self.v_pk.len()
             + 4 * (self.k_f32.len()
                 + self.v_f32.len()
@@ -409,7 +577,15 @@ impl LayerCache {
                 + self.v_scales.len()
                 + self.v_zeros.len()
                 + self.res_k.len()
-                + self.res_v.len())
+                + self.res_v.len());
+        debug_assert_eq!(total, self.bytes_at_caps(self.q_cap, self.res_cap));
+        total
+    }
+
+    /// Footprint when fully grown (the pre-paging static allocation): what
+    /// a worst-case full-context sequence will eventually be charged.
+    pub fn full_capacity_bytes(&self) -> usize {
+        self.bytes_at_caps(self.geo.max_ctx, self.geo.residual)
     }
 }
 
@@ -592,6 +768,16 @@ mod tests {
                     seq.n_q, bat.n_q, seq.n_res(), bat.n_res()
                 ));
             }
+            // paged growth must be deterministic regardless of granularity
+            if seq.q_capacity() != bat.q_capacity()
+                || seq.res_capacity() != bat.res_capacity()
+            {
+                return Err(format!(
+                    "capacity diverges: q {} vs {}, res {} vs {}",
+                    seq.q_capacity(), bat.q_capacity(),
+                    seq.res_capacity(), bat.res_capacity()
+                ));
+            }
             if seq.k_pk != bat.k_pk || seq.v_pk != bat.v_pk {
                 return Err("packed bytes diverge".into());
             }
@@ -648,5 +834,97 @@ mod tests {
             assert_eq!(out_k[slot * dh], (32 + slot) as f32, "slot {slot}");
             assert_eq!(out_v[slot * dh], -((32 + slot) as f32));
         }
+    }
+
+    // ---------------- paged allocation ----------------
+
+    #[test]
+    fn fresh_cache_allocates_nothing() {
+        for bits in [0u8, 1, 2, 4] {
+            let c = LayerCache::new(geo(), bits, bits);
+            assert_eq!(c.q_capacity(), 0);
+            assert_eq!(c.res_capacity(), 0);
+            // fp32 paths keep their fixed dummy scale rows; that is all
+            let dummy = if bits == 0 { 4 * 2 * 2 * 2 } else { 0 };
+            assert_eq!(c.capacity_bytes(), dummy, "bits={bits}");
+            assert!(c.capacity_bytes() < c.full_capacity_bytes());
+        }
+    }
+
+    #[test]
+    fn growth_is_page_aligned_and_lazy() {
+        let mut c = LayerCache::new(geo(), 2, 2);
+        let mut g = Gen { rng: crate::util::rng::SplitMix::new(11) };
+        let hd = 2 * 32;
+        let mut prev_cap = 0usize;
+        for i in 0..128 {
+            let (k, v) = tok(&mut g, hd);
+            c.append_token(&k, &v);
+            assert_eq!(c.res_capacity() % 32, 0, "ring pages are G-aligned");
+            assert_eq!(c.q_capacity() % 32, 0, "packed pages are G-aligned");
+            assert!(c.res_capacity() >= c.n_res());
+            assert!(c.q_capacity() >= c.n_q);
+            // lazy: never allocate a ring beyond one page over the need
+            assert!(c.res_capacity() <= (c.n_res().div_ceil(32)) * 32);
+            assert!(c.capacity_bytes() >= prev_cap, "capacity never shrinks at {i}");
+            prev_cap = c.capacity_bytes();
+        }
+        // fully grown at max context
+        assert_eq!(c.q_capacity(), 64);
+        assert_eq!(c.res_capacity(), 64);
+        assert!(c.capacity_bytes() < c.full_capacity_bytes());
+    }
+
+    #[test]
+    fn growth_bytes_prediction_is_exact_prop() {
+        check("paged_growth_exact", 30, |g: &mut Gen| {
+            let bits = *g.pick(&[0u8, 1, 2, 4]);
+            let mut c = LayerCache::new(geo(), bits, bits);
+            let hd = 2 * 32;
+            let mut total = 0usize;
+            for _ in 0..g.usize_in(1, 4) {
+                let count = g.usize_in(0, 70);
+                if total + count > 128 {
+                    break;
+                }
+                total += count;
+                let predicted = c.growth_bytes_for(count);
+                let before = c.capacity_bytes();
+                let ks = g.vec_normal(count * hd, 1.0);
+                let vs = g.vec_normal(count * hd, 1.0);
+                c.append_tokens(count, &ks, &vs);
+                let grown = c.capacity_bytes() - before;
+                if grown != predicted {
+                    return Err(format!(
+                        "predicted {predicted}B but grew {grown}B at n={} count={count}",
+                        c.n_tokens() - count
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn restride_preserves_packed_contents() {
+        // identical token stream into a paged cache vs one pre-grown to
+        // full capacity: byte-identical packed state after growth
+        let mut g = Gen { rng: crate::util::rng::SplitMix::new(12) };
+        let hd = 2 * 32;
+        let toks: Vec<(Vec<f32>, Vec<f32>)> = (0..128).map(|_| tok(&mut g, hd)).collect();
+        let mut paged = LayerCache::new(geo(), 1, 2);
+        let mut grown = LayerCache::new(geo(), 1, 2);
+        grown.ensure_q_cap(128);
+        grown.ensure_res_cap(64);
+        for (k, v) in &toks {
+            paged.append_token(k, v);
+            grown.append_token(k, v);
+        }
+        // capacities differ (64 vs pre-grown 128 tokens) but the cached
+        // contents must be identical through every restride
+        assert!(paged.q_capacity() < grown.q_capacity());
+        assert_eq!(paged.n_q, grown.n_q);
+        assert_eq!(paged.dequant_k_full(), grown.dequant_k_full());
+        assert_eq!(paged.dequant_v_full(), grown.dequant_v_full());
     }
 }

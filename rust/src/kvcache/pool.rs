@@ -1,9 +1,30 @@
 //! Cache pool: owns every sequence's per-layer caches, enforces a byte
 //! budget, and tracks peak usage — the measurement substrate behind the
 //! paper's Fig. 4 (peak GPU memory vs quantization configuration).
+//!
+//! Accounting is **demand-paged** (see `layer.rs`): a sequence is charged
+//! only the pages its cache has actually allocated, so a short prompt costs
+//! a few group pages instead of a full-context reservation and the
+//! quantization win reaches the scheduler as real batch headroom. Charges
+//! settle on every `with_seq`/`with_seqs` access (growth inside the closure
+//! is metered by recomputing the resident footprint), which keeps the
+//! invariant `in_use_bytes == Σ capacity_bytes` — "pages charged == pages
+//! resident" — at all times; a proptest drives random interleavings
+//! against it. Budget *gating* happens before mutation via
+//! [`CachePool::reserve_growth`] (the engine calls it before every
+//! prefill/decode append) and the scheduler's admission estimates
+//! ([`CachePool::admit`] / [`CachePool::admit_growth`]); a failed
+//! reservation surfaces as [`PoolError::BudgetExceeded`] *before* any
+//! cache state changes, which is what lets the scheduler preempt instead
+//! of panicking mid-decode.
+//!
+//! Every byte released (free, preemption, shrink) bumps a generation
+//! counter and signals a condvar, so the scheduler blocks on
+//! [`CachePool::wait_for_free`] instead of sleep-polling for capacity.
 
 use std::collections::{BTreeMap, BTreeSet};
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use super::layer::{CacheGeometry, LayerCache};
 use crate::quant::QuantPolicy;
@@ -28,8 +49,19 @@ impl SeqCache {
         self.layers.iter().map(|l| l.used_bytes()).sum()
     }
 
+    /// Resident allocation footprint (pages allocated so far).
     pub fn capacity_bytes(&self) -> usize {
         self.layers.iter().map(|l| l.capacity_bytes()).sum()
+    }
+
+    /// Footprint when fully grown (the pre-paging static allocation).
+    pub fn full_capacity_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.full_capacity_bytes()).sum()
+    }
+
+    /// Exact bytes of new pages appending `count` tokens will allocate.
+    pub fn growth_bytes_for(&self, count: usize) -> usize {
+        self.layers.iter().map(|l| l.growth_bytes_for(count)).sum()
     }
 }
 
@@ -58,15 +90,14 @@ impl std::fmt::Display for PoolError {
 }
 impl std::error::Error for PoolError {}
 
-/// Thread-safe cache pool with capacity accounting.
-///
-/// Accounting uses *capacity* bytes (the full static allocation of a
-/// sequence's cache) for admission — that is what a real deployment must
-/// budget for — while `stats()` additionally reports live `used` bytes.
+/// Thread-safe cache pool with demand-paged capacity accounting.
 pub struct CachePool {
     geo: CacheGeometry,
     budget_bytes: usize,
     inner: Mutex<PoolInner>,
+    /// Signalled on every capacity release (free / preempt / shrink) and by
+    /// [`CachePool::notify_free`]; pairs with `inner`.
+    free_cv: Condvar,
 }
 
 struct PoolInner {
@@ -74,22 +105,65 @@ struct PoolInner {
     /// Sequences that refuse `free` until unpinned (session retention).
     pinned: BTreeSet<u64>,
     next_id: u64,
+    /// Σ capacity_bytes over live sequences (resident pages).
     in_use: usize,
+    /// True peak of resident bytes.
     peak: usize,
     total_allocs: u64,
     total_frees: u64,
+    /// Page-grant events (initial allocations + every growth settle).
+    page_allocs: u64,
+    /// Cumulative bytes granted as pages.
+    page_alloc_bytes: u64,
+    /// Cumulative bytes released (frees, preemptions, shrinks).
+    page_free_bytes: u64,
+    /// Bumped on every release and by `notify_free`; lets a waiter detect
+    /// frees that happened between observing the pool and blocking.
+    free_epoch: u64,
+}
+
+impl PoolInner {
+    /// Meter a capacity change observed across a `with_seq*` closure.
+    /// Returns true when capacity was released (waiters should be woken).
+    fn settle(&mut self, before: usize, after: usize) -> bool {
+        if after > before {
+            let d = after - before;
+            self.in_use += d;
+            self.peak = self.peak.max(self.in_use);
+            self.page_allocs += 1;
+            self.page_alloc_bytes += d as u64;
+            false
+        } else if after < before {
+            let d = before - after;
+            self.in_use -= d;
+            self.page_free_bytes += d as u64;
+            self.free_epoch += 1;
+            true
+        } else {
+            false
+        }
+    }
 }
 
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PoolStats {
     pub n_seqs: usize,
     pub pinned_seqs: usize,
+    /// Resident page bytes (== Σ per-sequence `capacity_bytes`).
     pub in_use_bytes: usize,
     pub used_bytes: usize,
+    /// True peak of resident bytes (bytes actually allocated, not
+    /// worst-case reservations).
     pub peak_bytes: usize,
     pub budget_bytes: usize,
     pub total_allocs: u64,
     pub total_frees: u64,
+    /// Page-grant events (allocations + growths).
+    pub page_allocs: u64,
+    /// Cumulative bytes granted as pages.
+    pub page_alloc_bytes: u64,
+    /// Cumulative bytes released.
+    pub page_free_bytes: u64,
 }
 
 impl CachePool {
@@ -105,7 +179,12 @@ impl CachePool {
                 peak: 0,
                 total_allocs: 0,
                 total_frees: 0,
+                page_allocs: 0,
+                page_alloc_bytes: 0,
+                page_free_bytes: 0,
+                free_epoch: 0,
             }),
+            free_cv: Condvar::new(),
         }
     }
 
@@ -113,7 +192,9 @@ impl CachePool {
         self.geo
     }
 
-    /// Allocate a cache for a new sequence under `policy`.
+    /// Allocate a cache for a new sequence under `policy`. Charges only the
+    /// initial (near-empty) footprint — pages are charged as the sequence
+    /// grows; use [`CachePool::admit`] to gate on the projected footprint.
     pub fn allocate(&self, policy: &QuantPolicy) -> Result<u64, PoolError> {
         let cache = SeqCache::new(self.geo, policy);
         let cap = cache.capacity_bytes();
@@ -130,11 +211,16 @@ impl CachePool {
         inner.in_use += cap;
         inner.peak = inner.peak.max(inner.in_use);
         inner.total_allocs += 1;
+        if cap > 0 {
+            inner.page_allocs += 1;
+            inner.page_alloc_bytes += cap as u64;
+        }
         inner.seqs.insert(id, cache);
         Ok(id)
     }
 
     /// Free a sequence's cache. Pinned sequences are refused — unpin first.
+    /// Wakes capacity waiters.
     pub fn free(&self, id: u64) -> Result<(), PoolError> {
         let mut inner = self.inner.lock().unwrap();
         if !inner.seqs.contains_key(&id) {
@@ -144,8 +230,17 @@ impl CachePool {
             return Err(PoolError::Pinned(id));
         }
         let cache = inner.seqs.remove(&id).unwrap();
-        inner.in_use -= cache.capacity_bytes();
+        let cap = cache.capacity_bytes();
+        inner.in_use -= cap;
+        inner.page_free_bytes += cap as u64;
         inner.total_frees += 1;
+        // only a real byte release advances the epoch — freeing an empty
+        // cache changes nothing a capacity waiter could use
+        if cap > 0 {
+            inner.free_epoch += 1;
+            drop(inner);
+            self.free_cv.notify_all();
+        }
         Ok(())
     }
 
@@ -169,15 +264,27 @@ impl CachePool {
         Ok(())
     }
 
-    /// Run `f` with mutable access to one sequence's cache.
+    /// Run `f` with mutable access to one sequence's cache. Page growth (or
+    /// shrink) performed inside `f` is settled into the pool accounting.
     pub fn with_seq<R>(
         &self,
         id: u64,
         f: impl FnOnce(&mut SeqCache) -> R,
     ) -> Result<R, PoolError> {
         let mut inner = self.inner.lock().unwrap();
-        let cache = inner.seqs.get_mut(&id).ok_or(PoolError::UnknownSeq(id))?;
-        Ok(f(cache))
+        let (r, before, after) = {
+            let cache = inner.seqs.get_mut(&id).ok_or(PoolError::UnknownSeq(id))?;
+            let before = cache.capacity_bytes();
+            let r = f(cache);
+            let after = cache.capacity_bytes();
+            (r, before, after)
+        };
+        let released = inner.settle(before, after);
+        drop(inner);
+        if released {
+            self.free_cv.notify_all();
+        }
+        Ok(r)
     }
 
     /// Run `f` with mutable access to several sequences at once (batch
@@ -189,10 +296,10 @@ impl CachePool {
     ) -> Result<R, PoolError> {
         let mut inner = self.inner.lock().unwrap();
         // split the map into disjoint mutable borrows
-        let inner = &mut *inner;
+        let inner_ref = &mut *inner;
         let mut refs: Vec<*mut SeqCache> = Vec::with_capacity(ids.len());
         for &id in ids {
-            let c = inner.seqs.get_mut(&id).ok_or(PoolError::UnknownSeq(id))?;
+            let c = inner_ref.seqs.get_mut(&id).ok_or(PoolError::UnknownSeq(id))?;
             let p = c as *mut SeqCache;
             if refs.contains(&p) {
                 panic!("duplicate sequence id {id} in batch");
@@ -203,7 +310,117 @@ impl CachePool {
         // the map is locked for the duration of `f`.
         let mut borrows: Vec<&mut SeqCache> =
             refs.into_iter().map(|p| unsafe { &mut *p }).collect();
-        Ok(f(&mut borrows))
+        let before: usize = borrows.iter().map(|c| c.capacity_bytes()).sum();
+        let r = f(&mut borrows);
+        let after: usize = borrows.iter().map(|c| c.capacity_bytes()).sum();
+        drop(borrows);
+        let released = inner_ref.settle(before, after);
+        drop(inner);
+        if released {
+            self.free_cv.notify_all();
+        }
+        Ok(r)
+    }
+
+    // -----------------------------------------------------------------
+    // budget gating (checks BEFORE mutation — the preemption trigger)
+    // -----------------------------------------------------------------
+
+    /// Check that appending `counts[i]` tokens to `ids[i]` fits the budget.
+    /// Pure gate: allocates nothing; the growth itself happens (and is
+    /// settled) inside the subsequent `with_seqs` appends. Exact because
+    /// paged growth is deterministic (`LayerCache::growth_bytes_for`).
+    pub fn reserve_growth(&self, ids: &[u64], counts: &[usize]) -> Result<(), PoolError> {
+        assert_eq!(ids.len(), counts.len());
+        let inner = self.inner.lock().unwrap();
+        let mut needed = 0usize;
+        for (&id, &count) in ids.iter().zip(counts) {
+            let seq = inner.seqs.get(&id).ok_or(PoolError::UnknownSeq(id))?;
+            needed += seq.growth_bytes_for(count);
+        }
+        if inner.in_use + needed > self.budget_bytes {
+            return Err(PoolError::BudgetExceeded {
+                requested: needed,
+                in_use: inner.in_use,
+                budget: self.budget_bytes,
+            });
+        }
+        Ok(())
+    }
+
+    /// Resident bytes a fresh sequence under `policy` will have allocated
+    /// once it holds `n_tokens` tokens (page-rounded, per layer).
+    pub fn estimate_bytes(&self, policy: &QuantPolicy, n_tokens: usize) -> usize {
+        let c = SeqCache::new(self.geo, policy); // allocates nothing (paged)
+        c.capacity_bytes() + c.growth_bytes_for(n_tokens)
+    }
+
+    /// Expected-pages admission gate for a NEW sequence: would a fresh
+    /// cache grown to `n_tokens` fit next to the current residents?
+    /// Advisory — growth is re-gated at every append, and the scheduler
+    /// preempts when optimistically admitted sequences later collide.
+    pub fn admit(&self, policy: &QuantPolicy, n_tokens: usize) -> Result<(), PoolError> {
+        let est = self.estimate_bytes(policy, n_tokens);
+        let inner = self.inner.lock().unwrap();
+        if inner.in_use + est > self.budget_bytes {
+            return Err(PoolError::BudgetExceeded {
+                requested: est,
+                in_use: inner.in_use,
+                budget: self.budget_bytes,
+            });
+        }
+        Ok(())
+    }
+
+    /// Admission gate for growing an EXISTING (e.g. session) sequence by
+    /// `count` tokens.
+    pub fn admit_growth(&self, id: u64, count: usize) -> Result<(), PoolError> {
+        self.reserve_growth(&[id], &[count])
+    }
+
+    /// Whether `bytes` additional resident bytes fit the budget right now
+    /// (prefix-cache restore gate).
+    pub fn has_headroom(&self, bytes: usize) -> bool {
+        let inner = self.inner.lock().unwrap();
+        inner.in_use + bytes <= self.budget_bytes
+    }
+
+    // -----------------------------------------------------------------
+    // capacity waiting (replaces scheduler sleep-polling)
+    // -----------------------------------------------------------------
+
+    /// Current free-generation counter. Capture it BEFORE an admission
+    /// attempt; a release between the bounce and [`CachePool::wait_for_free`]
+    /// then returns immediately instead of being lost.
+    pub fn free_epoch(&self) -> u64 {
+        self.inner.lock().unwrap().free_epoch
+    }
+
+    /// Block until capacity is released after `seen_epoch` (or `timeout`, a
+    /// backstop — every release path and `notify_free` signal the condvar,
+    /// so waiters do not poll).
+    pub fn wait_for_free(&self, seen_epoch: u64, timeout: Duration) {
+        let deadline = Instant::now() + timeout;
+        let mut inner = self.inner.lock().unwrap();
+        while inner.free_epoch == seen_epoch {
+            let now = Instant::now();
+            if now >= deadline {
+                return;
+            }
+            let (guard, _) = self
+                .free_cv
+                .wait_timeout(inner, deadline - now)
+                .unwrap();
+            inner = guard;
+        }
+    }
+
+    /// Wake capacity waiters without freeing anything (shutdown path).
+    pub fn notify_free(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.free_epoch += 1;
+        drop(inner);
+        self.free_cv.notify_all();
     }
 
     pub fn stats(&self) -> PoolStats {
@@ -217,6 +434,9 @@ impl CachePool {
             budget_bytes: self.budget_bytes,
             total_allocs: inner.total_allocs,
             total_frees: inner.total_frees,
+            page_allocs: inner.page_allocs,
+            page_alloc_bytes: inner.page_alloc_bytes,
+            page_free_bytes: inner.page_free_bytes,
         }
     }
 }
@@ -229,16 +449,37 @@ mod tests {
         CacheGeometry { n_heads: 2, max_ctx: 128, d_head: 32, group: 32, residual: 64 }
     }
 
+    fn append_n(pool: &CachePool, id: u64, n: usize) {
+        let hd = 2 * 32;
+        pool.with_seq(id, |s| {
+            for layer in &mut s.layers {
+                for _ in 0..n {
+                    layer.append_token(&vec![1.0; hd], &vec![1.0; hd]);
+                }
+            }
+            s.pos += n;
+        })
+        .unwrap();
+    }
+
     #[test]
     fn alloc_free_accounting() {
         let pool = CachePool::new(geo(), usize::MAX);
         let p = QuantPolicy::kivi(2, 2);
         let a = pool.allocate(&p).unwrap();
         let b = pool.allocate(&p).unwrap();
+        // paged: fresh sequences are charged (near) nothing
+        let s0 = pool.stats();
+        assert_eq!(s0.n_seqs, 2);
+        assert_eq!(s0.in_use_bytes, 0, "fresh quantized caches hold no pages");
+        // growth charges pages; both sequences grow identically
+        append_n(&pool, a, 40);
+        append_n(&pool, b, 40);
         let s = pool.stats();
-        assert_eq!(s.n_seqs, 2);
         assert!(s.in_use_bytes > 0);
         assert_eq!(s.in_use_bytes, s.peak_bytes);
+        assert!(s.page_allocs >= 2);
+        assert_eq!(s.page_alloc_bytes - s.page_free_bytes, s.in_use_bytes as u64);
         pool.free(a).unwrap();
         let s2 = pool.stats();
         assert_eq!(s2.n_seqs, 1);
@@ -250,29 +491,74 @@ mod tests {
     }
 
     #[test]
-    fn budget_backpressure() {
+    fn admission_estimate_backpressure() {
         let p = QuantPolicy::kivi(2, 2);
-        let one = SeqCache::new(geo(), &p).capacity_bytes();
-        let pool = CachePool::new(geo(), one * 2 + 1);
-        let _a = pool.allocate(&p).unwrap();
-        let _b = pool.allocate(&p).unwrap();
-        match pool.allocate(&p) {
-            Err(PoolError::BudgetExceeded { .. }) => {}
+        let probe = CachePool::new(geo(), usize::MAX);
+        let full = probe.estimate_bytes(&p, 128 + 63);
+        assert!(full > 0);
+        // budget for ~2 fully grown sequences
+        let pool = CachePool::new(geo(), full * 2 + 1);
+        let a = pool.allocate(&p).unwrap();
+        let b = pool.allocate(&p).unwrap();
+        assert!(pool.admit(&p, 128 + 63).is_ok(), "nothing resident yet");
+        append_n(&pool, a, 128 + 63);
+        append_n(&pool, b, 128 + 63);
+        match pool.admit(&p, 128 + 63) {
+            Err(PoolError::BudgetExceeded { requested, budget, .. }) => {
+                assert!(requested <= budget, "transient: waiting will free capacity");
+            }
             other => panic!("expected backpressure, got {other:?}"),
         }
+        // a short sequence still fits in the remaining slack? No — the two
+        // residents consumed the budget; growth reservation must refuse too.
+        let c = pool.allocate(&p).unwrap();
+        assert!(pool.reserve_growth(&[c], &[64]).is_err());
+        pool.free(a).unwrap();
+        assert!(pool.admit(&p, 64).is_ok());
+    }
+
+    #[test]
+    fn reserve_growth_is_exact_gate() {
+        let p = QuantPolicy::kivi(2, 2);
+        let probe = CachePool::new(geo(), usize::MAX);
+        let need_40 = {
+            let id = probe.allocate(&p).unwrap();
+            let b = probe
+                .with_seq(id, |s| s.growth_bytes_for(40))
+                .unwrap();
+            probe.free(id).unwrap();
+            b
+        };
+        let pool = CachePool::new(geo(), need_40);
+        let id = pool.allocate(&p).unwrap();
+        assert!(pool.reserve_growth(&[id], &[40]).is_ok());
+        append_n(&pool, id, 40);
+        assert_eq!(pool.stats().in_use_bytes, need_40, "charge == reservation");
+        // one more page cannot fit
+        assert!(pool.reserve_growth(&[id], &[64]).is_err());
     }
 
     #[test]
     fn policy_changes_capacity() {
+        // paged: FRESH caches all cost ~nothing; the projected footprints
+        // (and the grown footprints) must still order by bits
         let pool = CachePool::new(geo(), usize::MAX);
-        let id_f = pool.allocate(&QuantPolicy::float32(4)).unwrap();
-        let cap_f = pool.with_seq(id_f, |c| c.capacity_bytes()).unwrap();
-        let id_1 = pool.allocate(&QuantPolicy::kivi(4, 1)).unwrap();
-        let cap_1 = pool.with_seq(id_1, |c| c.capacity_bytes()).unwrap();
+        let n = 128 + 63;
+        let est_f = pool.estimate_bytes(&QuantPolicy::float32(4), n);
+        let est_1 = pool.estimate_bytes(&QuantPolicy::kivi(4, 1), n);
         // capacity includes the fixed fp32 residual window (R=64 vs
         // T=128 here), so the full 16x data ratio is diluted at this
         // tiny geometry; at the bench geometry (T>>R) the gap widens.
-        assert!(cap_1 < cap_f / 2, "1-bit cache should be well below fp32");
+        assert!(est_1 < est_f / 2, "1-bit cache should be well below fp32");
+        let id_f = pool.allocate(&QuantPolicy::float32(4)).unwrap();
+        let id_1 = pool.allocate(&QuantPolicy::kivi(4, 1)).unwrap();
+        append_n(&pool, id_f, n);
+        append_n(&pool, id_1, n);
+        let cap_f = pool.with_seq(id_f, |c| c.capacity_bytes()).unwrap();
+        let cap_1 = pool.with_seq(id_1, |c| c.capacity_bytes()).unwrap();
+        assert!(cap_1 < cap_f / 2);
+        assert_eq!(cap_f, est_f, "estimate matches grown footprint");
+        assert_eq!(cap_1, est_1);
     }
 
     #[test]
@@ -310,5 +596,109 @@ mod tests {
         .unwrap();
         assert_eq!(pool.with_seq(a, |c| c.layers[0].n_res()).unwrap(), 1);
         assert!(pool.with_seqs(&[a, 999], |_| ()).is_err());
+    }
+
+    #[test]
+    fn free_bumps_epoch_and_wakes_waiter() {
+        let pool = std::sync::Arc::new(CachePool::new(geo(), usize::MAX));
+        let p = QuantPolicy::kivi(2, 2);
+        let id = pool.allocate(&p).unwrap();
+        append_n(&pool, id, 10); // resident pages: the free releases bytes
+        let epoch = pool.free_epoch();
+        let waiter = {
+            let pool = pool.clone();
+            std::thread::spawn(move || {
+                let t0 = Instant::now();
+                pool.wait_for_free(epoch, Duration::from_secs(5));
+                t0.elapsed()
+            })
+        };
+        std::thread::sleep(Duration::from_millis(20));
+        pool.free(id).unwrap();
+        let waited = waiter.join().unwrap();
+        assert!(waited < Duration::from_secs(4), "woken by the free, not the backstop");
+        assert!(pool.free_epoch() > epoch);
+        // a release that already happened is seen without blocking
+        let t0 = Instant::now();
+        pool.wait_for_free(epoch, Duration::from_secs(5));
+        assert!(t0.elapsed() < Duration::from_millis(100));
+    }
+
+    #[test]
+    fn pages_charged_equals_pages_resident_prop() {
+        // random interleavings of allocate / append (growth) / fold /
+        // free (≈ preemption): the pool's charge must equal the summed
+        // resident footprint after EVERY operation, and the cumulative
+        // page ledger must reconcile.
+        use crate::util::prop::{check, Gen};
+        check("pool_paged_invariant", 15, |g: &mut Gen| {
+            let pool = CachePool::new(geo(), usize::MAX);
+            let policies =
+                [QuantPolicy::kivi(2, 1), QuantPolicy::kivi(2, 2), QuantPolicy::float32(2)];
+            let mut live: Vec<u64> = Vec::new();
+            let hd = 2 * 32;
+            for _ in 0..g.usize_in(5, 25) {
+                match g.usize_in(0, 3) {
+                    0 => {
+                        let p = g.pick(&policies).clone();
+                        live.push(pool.allocate(&p).unwrap());
+                    }
+                    1 | 2 if !live.is_empty() => {
+                        // grow a random live sequence by a random stretch
+                        // (driving appends AND folds past R)
+                        let id = *g.pick(&live);
+                        let count = g.usize_in(1, 50);
+                        let fits = pool
+                            .with_seq(id, |s| {
+                                s.pos + count <= 128 + 64
+                            })
+                            .unwrap();
+                        if !fits {
+                            continue;
+                        }
+                        if pool.reserve_growth(&[id], &[count]).is_err() {
+                            continue;
+                        }
+                        pool.with_seq(id, |s| {
+                            for layer in &mut s.layers {
+                                for _ in 0..count {
+                                    layer.append_token(&vec![1.0; hd], &vec![1.0; hd]);
+                                }
+                            }
+                            s.pos += count;
+                        })
+                        .unwrap();
+                    }
+                    _ if !live.is_empty() => {
+                        // preemption-style release of a random victim
+                        let i = g.usize_in(0, live.len() - 1);
+                        let id = live.swap_remove(i);
+                        pool.free(id).unwrap();
+                    }
+                    _ => {}
+                }
+                let s = pool.stats();
+                let resident: usize = live
+                    .iter()
+                    .map(|&id| pool.with_seq(id, |c| c.capacity_bytes()).unwrap())
+                    .sum();
+                if s.in_use_bytes != resident {
+                    return Err(format!(
+                        "charged {} != resident {resident}",
+                        s.in_use_bytes
+                    ));
+                }
+                if s.page_alloc_bytes - s.page_free_bytes != s.in_use_bytes as u64 {
+                    return Err(format!(
+                        "page ledger off: +{} -{} vs in_use {}",
+                        s.page_alloc_bytes, s.page_free_bytes, s.in_use_bytes
+                    ));
+                }
+                if s.peak_bytes < s.in_use_bytes {
+                    return Err("peak below in_use".into());
+                }
+            }
+            Ok(())
+        });
     }
 }

@@ -22,6 +22,14 @@ pub struct PrefixEntry {
     pub last_logits: Vec<f32>,
 }
 
+/// Resident bytes one entry pins: the snapshot's allocated pages (demand
+/// paging means a snapshot stores exactly the pages its prompt grew), the
+/// key tokens, AND the vocab-sized logits row — omitting the logits used
+/// to let the cache blow past its byte budget by `4·vocab` per entry.
+fn entry_bytes(e: &PrefixEntry) -> usize {
+    e.cache.capacity_bytes() + e.tokens.len() * 4 + e.last_logits.len() * 4
+}
+
 struct Inner {
     /// most-recently-used last
     entries: Vec<Arc<PrefixEntry>>,
@@ -86,7 +94,7 @@ impl PrefixCache {
     /// Store a snapshot (evicting LRU entries to honour the byte budget).
     /// Duplicate (policy, tokens) keys replace the old entry.
     pub fn insert(&self, entry: PrefixEntry) {
-        let bytes = entry.cache.used_bytes() + entry.tokens.len() * 4;
+        let bytes = entry_bytes(&entry);
         if bytes > self.budget_bytes {
             return; // would never fit
         }
@@ -97,11 +105,11 @@ impl PrefixCache {
             .position(|e| e.policy == entry.policy && e.tokens == entry.tokens)
         {
             let old = inner.entries.remove(i);
-            inner.used_bytes -= old.cache.used_bytes() + old.tokens.len() * 4;
+            inner.used_bytes -= entry_bytes(&old);
         }
         while inner.used_bytes + bytes > self.budget_bytes && !inner.entries.is_empty() {
             let old = inner.entries.remove(0);
-            inner.used_bytes -= old.cache.used_bytes() + old.tokens.len() * 4;
+            inner.used_bytes -= entry_bytes(&old);
         }
         inner.used_bytes += bytes;
         inner.entries.push(Arc::new(entry));
@@ -155,7 +163,7 @@ mod tests {
 
     #[test]
     fn lru_eviction_respects_budget() {
-        let one = entry("p", vec![1]).cache.used_bytes() + 4;
+        let one = entry_bytes(&entry("p", vec![1]));
         let pc = PrefixCache::new(one * 2 + one / 2);
         pc.insert(entry("p", vec![1]));
         pc.insert(entry("p", vec![2]));
@@ -166,6 +174,49 @@ mod tests {
         assert!(pc.lookup("p", &[2, 5]).is_none(), "LRU entry evicted");
         assert!(pc.lookup("p", &[1, 5]).is_some());
         assert!(pc.lookup("p", &[3, 5]).is_some());
+    }
+
+    #[test]
+    fn entry_size_includes_logits_regression() {
+        // the old accounting omitted `last_logits` (vocab-sized, 4 B per
+        // entry here 4 floats; in a real model 4·vocab), so entries whose
+        // weight is dominated by logits blew past the budget unbounded
+        let mut big = entry("p", vec![1]);
+        big.last_logits = vec![0.5; 256];
+        let one = entry_bytes(&big);
+        assert!(one >= 256 * 4, "logits must dominate this entry's size");
+        let pc = PrefixCache::new(one * 2); // room for exactly two
+        for t in 0..5 {
+            let mut e = entry("p", vec![t]);
+            e.last_logits = vec![0.5; 256];
+            pc.insert(e);
+        }
+        let s = pc.stats();
+        assert_eq!(s.entries, 2, "logits-aware eviction must kick in");
+        assert!(s.used_bytes <= one * 2, "cannot exceed the byte budget");
+    }
+
+    #[test]
+    fn snapshot_stores_only_allocated_pages() {
+        // a snapshot of a short prompt pins only its grown pages, not the
+        // full-context footprint it would eventually reach
+        let mut e = entry("p", vec![1, 2, 3]);
+        let hd = 32; // 1 head × Dh=32
+        for _ in 0..3 {
+            e.cache.layers[0].append_token(&vec![1.0; hd], &vec![1.0; hd]);
+        }
+        let snap = e.cache.capacity_bytes();
+        assert!(snap > 0);
+        // only one ring page is resident; the packed region (the part that
+        // scales with T) is entirely unallocated at this depth
+        assert!(
+            snap < e.cache.full_capacity_bytes(),
+            "short snapshot must cost less than the full-context footprint"
+        );
+        assert_eq!(e.cache.layers[0].q_capacity(), 0);
+        let pc = PrefixCache::new(1 << 20);
+        pc.insert(e);
+        assert_eq!(pc.stats().entries, 1);
     }
 
     #[test]
@@ -181,8 +232,8 @@ mod tests {
 
     #[test]
     fn oversized_entry_ignored() {
-        // an empty snapshot still costs tokens.len()·4 bytes; a budget of
-        // 2 bytes cannot hold even that
+        // an empty snapshot still costs tokens.len()·4 + logits bytes; a
+        // budget of 2 bytes cannot hold even that
         let pc = PrefixCache::new(2);
         pc.insert(entry("p", vec![1]));
         assert_eq!(pc.stats().entries, 0);

@@ -154,7 +154,12 @@ fn batched_prefill_matches_single() {
 #[test]
 fn memory_accounting_tracks_policy() {
     let Some(engine) = common::engine_for("tiny") else { return };
-    let n = engine.manifest().n_layers;
+    let m = engine.manifest();
+    let n = m.n_layers;
+    let (h, dh) = (m.n_heads, m.d_head);
+    // grow past the residual window so the bit-dependent packed region
+    // (not just the shared fp32 ring) is resident
+    let fill = m.residual + m.group + 1;
     let mut caps = Vec::new();
     for policy in [
         QuantPolicy::kivi(n, 1),
@@ -162,7 +167,22 @@ fn memory_accounting_tracks_policy() {
         QuantPolicy::float32(n),
     ] {
         let id = engine.create_seq(&policy).unwrap();
-        caps.push(engine.with_seq(id, |s| s.capacity_bytes()).unwrap());
+        // demand paging: a fresh sequence is charged (almost) nothing —
+        // the policy's footprint materializes as the cache grows
+        let fresh = engine.with_seq(id, |s| s.capacity_bytes()).unwrap();
+        engine
+            .with_seq(id, |s| {
+                let row = vec![0.5f32; h * dh];
+                for layer in &mut s.layers {
+                    for _ in 0..fill {
+                        layer.append_token(&row, &row);
+                    }
+                }
+            })
+            .unwrap();
+        let grown = engine.with_seq(id, |s| s.capacity_bytes()).unwrap();
+        assert!(fresh < grown, "pages must be charged on growth");
+        caps.push(grown);
         engine.free_seq(id).unwrap();
     }
     assert!(caps[0] < caps[1] && caps[1] < caps[2], "{caps:?}");
