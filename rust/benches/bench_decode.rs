@@ -1,0 +1,399 @@
+//! Steady-state decode host-overhead bench: the incremental assembly path
+//! (persistent staged literals + tail patches + step arena) vs the naive
+//! `ASYMKV_NAIVE=1` baseline (full per-step gather + full rebuild).
+//!
+//! Two parts:
+//!
+//! 1. **Pure-Rust host model** (runs everywhere, emits the CI-asserted
+//!    records): drives single-token decode steps against real
+//!    `LayerCache`s at a serving-shaped geometry and measures, per step,
+//!    the host assembly (gather/patch) plus an upload *proxy* — a memcpy
+//!    of every buffer a literal build would copy (clean steps re-upload
+//!    only residual + masks; fold steps additionally re-upload the packed
+//!    set; naive steps rebuild and re-upload everything). A counting
+//!    global allocator proves the steady-state gather path performs zero
+//!    heap allocations.
+//! 2. **End-to-end engine decode** (needs AOT artifacts; skips cleanly in
+//!    smoke mode without them): times `Engine::decode` in both modes via
+//!    `Engine::set_naive` and records real per-step literal-build bytes
+//!    from `EngineStats`.
+//!
+//! Records: `decode_host_naive`, `decode_host_incremental`,
+//! `decode_host_incremental_clean`, `decode_e2e_{incremental,naive}`
+//! (see docs/BENCH.md). CI's bench-smoke job asserts
+//! `decode_host_incremental.config.ratio_vs_naive >= 3` and
+//! `gather_allocs_steady == 0`.
+
+use asymkv::engine::gather::{
+    gather_layer_args, GatherGeo, StagedLayer, StepArena,
+};
+use asymkv::kvcache::{CacheGeometry, SeqCache};
+use asymkv::quant::QuantPolicy;
+use asymkv::util::bench::{
+    self, alloc_events, fmt_duration, time_fn, CountingAlloc, JsonReport, Table,
+};
+use asymkv::util::json::Value;
+use asymkv::util::rng::SplitMix;
+
+#[global_allocator]
+static A: CountingAlloc = CountingAlloc;
+
+const H: usize = 8;
+const T: usize = 4096;
+const DH: usize = 64;
+const G: usize = 32;
+const R: usize = 64;
+const LAYERS: usize = 4;
+const FILL: usize = 2048;
+
+/// Preallocated destination buffers standing in for literal construction:
+/// a literal build is a copy of the full host buffer, so the proxy copies
+/// exactly what the engine would upload. Returns bytes copied.
+#[derive(Default)]
+struct Upload {
+    u8s: Vec<u8>,
+    f32s: Vec<f32>,
+}
+
+impl Upload {
+    fn fit(&mut self, u8_cap: usize, f32_cap: usize) {
+        self.u8s.resize(u8_cap, 0);
+        self.f32s.resize(f32_cap, 0.0);
+    }
+    fn copy_u8(&mut self, src: &[u8]) -> usize {
+        self.u8s[..src.len()].copy_from_slice(src);
+        src.len()
+    }
+    fn copy_f32(&mut self, src: &[f32]) -> usize {
+        self.f32s[..src.len()].copy_from_slice(src);
+        src.len() * 4
+    }
+}
+
+fn fill_seq(policy: &QuantPolicy, rng: &mut SplitMix) -> SeqCache {
+    let geo = CacheGeometry {
+        n_heads: H, max_ctx: T, d_head: DH, group: G, residual: R,
+    };
+    let mut s = SeqCache::new(geo, policy);
+    let hd = H * DH;
+    for layer in &mut s.layers {
+        let ks = rng.normal_f32_vec(FILL * hd);
+        let vs = rng.normal_f32_vec(FILL * hd);
+        layer.append_tokens(FILL, &ks, &vs);
+        // drain the ring so the clean-step window below fits without folds
+        while layer.n_res() >= G {
+            layer.fold_oldest_group();
+        }
+    }
+    s
+}
+
+fn main() {
+    let ggeo = GatherGeo {
+        b_art: 1, n_heads: H, max_ctx: T, d_head: DH, group: G, residual: R,
+    };
+    let policy = QuantPolicy::kivi(LAYERS, 1); // 1-bit K and V (KIVI-style)
+    let hd = H * DH;
+    let mut rng = SplitMix::new(0xDECD);
+    let mut report = JsonReport::at_root("BENCH_kernels.json");
+    let mut table = Table::new(
+        "decode-step host overhead (gather + literal-build proxy, per step)",
+        &["path", "per-step p50", "bytes/step", "note"],
+    );
+    bench::note(
+        "bench_decode",
+        &format!(
+            "\nIncremental vs naive decode host overhead — B=1, H={H}, T={T}, \
+             Dh={DH}, G={G}, R={R}, L={LAYERS}, policy {}, {FILL} cached tokens",
+            policy.name
+        ),
+    );
+
+    // ---- naive baseline: full gather + full upload every step ----------
+    let mut naive_seq = fill_seq(&policy, &mut rng);
+    let mut up = Upload::default();
+    up.fit(
+        H * T / 8 * DH + H * T * DH / 8 + 16,
+        2 * (H * (T / G) * DH + H * T * (DH / G.min(DH))) + 2 * H * R * DH + T + R,
+    );
+    let naive_window = bench::samples(10);
+    let naive_warm = bench::warmup(2);
+    let mut naive_bytes = 0usize;
+    let mut naive_steps = 0usize;
+    let tm_naive = time_fn(naive_warm, naive_window, || {
+        for _ in 0..G {
+            let k = rng.normal_f32_vec(hd);
+            for layer in &mut naive_seq.layers {
+                layer.append_token(&k, &k);
+            }
+            let mut step_bytes = 0usize;
+            for li in 0..LAYERS {
+                let seqs = [&naive_seq];
+                let args = gather_layer_args(&ggeo, &seqs, li);
+                step_bytes += up.copy_u8(&args.k_main)
+                    + up.copy_u8(&args.v_main)
+                    + up.copy_f32(&args.k_main_f32)
+                    + up.copy_f32(&args.v_main_f32)
+                    + up.copy_f32(&args.k_scales)
+                    + up.copy_f32(&args.k_zeros)
+                    + up.copy_f32(&args.v_scales)
+                    + up.copy_f32(&args.v_zeros)
+                    + up.copy_f32(&args.k_res)
+                    + up.copy_f32(&args.v_res)
+                    + up.copy_f32(&args.mask_q)
+                    + up.copy_f32(&args.mask_r);
+                std::hint::black_box(&args);
+            }
+            naive_bytes += step_bytes;
+            naive_steps += 1;
+        }
+    });
+    let naive_step_s = tm_naive.mean() / G as f64;
+    let naive_bps = naive_bytes / naive_steps.max(1);
+
+    // ---- incremental: staged sync + tail patches + arena ----------------
+    let mut seq = fill_seq(&policy, &mut rng);
+    let mut staged: Vec<StagedLayer> =
+        (0..LAYERS).map(|_| StagedLayer::new()).collect();
+    let mut arena = StepArena::default();
+    let ids = [1u64];
+    // build the staging once (outside all measurements)
+    {
+        let seqs = [&seq];
+        arena.begin_step(&ggeo, 1, 8);
+        for (li, st) in staged.iter_mut().enumerate() {
+            st.sync(&ggeo, &ids, &seqs, li);
+        }
+    }
+
+    // one incremental step: arena + masks + per-layer sync + upload proxy
+    // (clean step: residual + masks only; fold step: plus the packed set —
+    // exactly what the engine rebuilds as literals). Returns (bytes, allocs).
+    let mut step_incremental = |seq: &mut SeqCache,
+                                staged: &mut [StagedLayer],
+                                arena: &mut StepArena,
+                                up: &mut Upload|
+     -> (usize, u64) {
+        let k = rng.normal_f32_vec(hd);
+        for layer in &mut seq.layers {
+            layer.append_token(&k, &k);
+        }
+        let a0 = alloc_events();
+        let mut bytes = 0usize;
+        let seqs = [&*seq];
+        arena.begin_step(&ggeo, 1, 8);
+        let lc0_q = seqs[0].layers[0].n_q;
+        let lc0_res = seqs[0].layers[0].n_res();
+        for i in 0..lc0_q {
+            arena.mask_q[i] = 0.0;
+        }
+        for i in 0..lc0_res {
+            arena.mask_r[i] = 0.0;
+        }
+        for (li, st) in staged.iter_mut().enumerate() {
+            let rep = st.sync(&ggeo, &ids, &seqs, li);
+            // upload proxy: what the engine rebuilds as literals
+            bytes += up.copy_f32(&st.k_res) + up.copy_f32(&st.v_res);
+            if !rep.packed_clean {
+                bytes += up.copy_u8(&st.k_main)
+                    + up.copy_u8(&st.v_main)
+                    + up.copy_f32(&st.k_main_f32)
+                    + up.copy_f32(&st.v_main_f32)
+                    + up.copy_f32(&st.k_scales)
+                    + up.copy_f32(&st.k_zeros)
+                    + up.copy_f32(&st.v_scales)
+                    + up.copy_f32(&st.v_zeros);
+            }
+        }
+        bytes += up.copy_f32(&arena.mask_q) + up.copy_f32(&arena.mask_r);
+        let allocs = alloc_events() - a0;
+        (bytes, allocs)
+    };
+
+    // (a) pure clean steps: the ring was drained below one group, so a
+    // window of at most R-G steps can never fold
+    let clean_samples = bench::samples(26);
+    let clean_warm = bench::warmup(3);
+    assert!(clean_warm + clean_samples <= R - G, "clean window must not fold");
+    let mut clean_bytes = 0usize;
+    let mut clean_steps = 0usize;
+    let mut gather_allocs = 0u64;
+    let tm_clean = time_fn(clean_warm, clean_samples, || {
+        let (b, a) = step_incremental(&mut seq, &mut staged, &mut arena, &mut up);
+        clean_bytes += b;
+        gather_allocs += a;
+        clean_steps += 1;
+    });
+
+    // (b) blended steady state: windows of G steps, each naturally
+    // containing its fold/tail-patch step
+    let win_samples = bench::samples(10);
+    let win_warm = bench::warmup(2);
+    let mut win_bytes = 0usize;
+    let mut win_steps = 0usize;
+    let tm_win = time_fn(win_warm, win_samples, || {
+        for _ in 0..G {
+            let (b, _) = step_incremental(&mut seq, &mut staged, &mut arena, &mut up);
+            win_bytes += b;
+            win_steps += 1;
+        }
+    });
+    let incr_step_s = tm_win.mean() / G as f64;
+    let incr_bps = win_bytes / win_steps.max(1);
+    let ratio = naive_step_s / incr_step_s.max(1e-12);
+    let bytes_ratio = naive_bps as f64 / incr_bps.max(1) as f64;
+
+    table.row(vec![
+        "naive (ASYMKV_NAIVE=1)".into(),
+        fmt_duration(naive_step_s),
+        format!("{naive_bps}"),
+        "full gather + full upload".into(),
+    ]);
+    table.row(vec![
+        "incremental (blended)".into(),
+        fmt_duration(incr_step_s),
+        format!("{incr_bps}"),
+        format!("{ratio:.1}x less host time, {bytes_ratio:.1}x fewer bytes"),
+    ]);
+    table.row(vec![
+        "incremental (clean step)".into(),
+        fmt_duration(tm_clean.mean()),
+        format!("{}", clean_bytes / clean_steps.max(1)),
+        format!("{gather_allocs} gather-path allocs"),
+    ]);
+    assert_eq!(gather_allocs, 0, "steady-state gather path must not allocate");
+    assert!(
+        ratio >= 3.0,
+        "incremental decode host overhead must be >= 3x below naive, got {ratio:.2}x"
+    );
+
+    let cfg = |extra: Vec<(&str, Value)>| -> Value {
+        let mut v = vec![
+            ("b", Value::num(1.0)),
+            ("heads", Value::num(H as f64)),
+            ("max_ctx", Value::num(T as f64)),
+            ("dh", Value::num(DH as f64)),
+            ("group", Value::num(G as f64)),
+            ("residual", Value::num(R as f64)),
+            ("layers", Value::num(LAYERS as f64)),
+            ("policy", Value::str_of(policy.name.clone())),
+            ("note", Value::str_of(
+                "per-step host assembly + literal-build (upload) proxy; \
+                 timing samples are G-step windows divided by G",
+            )),
+        ];
+        v.extend(extra);
+        Value::obj(v)
+    };
+    // per-step timings: synthesize per-step sample sets from the windows
+    let per_step = |t: &bench::Timing| bench::Timing {
+        samples: t.samples.iter().map(|s| s / G as f64).collect(),
+    };
+    report.add(
+        "decode_host_naive",
+        &per_step(&tm_naive),
+        naive_bps,
+        cfg(vec![("bytes_per_step", Value::num(naive_bps as f64))]),
+    );
+    report.add(
+        "decode_host_incremental",
+        &per_step(&tm_win),
+        incr_bps,
+        cfg(vec![
+            ("ratio_vs_naive", Value::num(ratio)),
+            ("bytes_ratio_vs_naive", Value::num(bytes_ratio)),
+            ("bytes_per_step", Value::num(incr_bps as f64)),
+            ("bytes_per_step_naive", Value::num(naive_bps as f64)),
+            ("gather_allocs_steady", Value::num(gather_allocs as f64)),
+        ]),
+    );
+    report.add(
+        "decode_host_incremental_clean",
+        &tm_clean,
+        clean_bytes / clean_steps.max(1),
+        cfg(vec![(
+            "bytes_per_step",
+            Value::num((clean_bytes / clean_steps.max(1)) as f64),
+        )]),
+    );
+
+    // ---- end-to-end engine decode (artifact-gated) ----------------------
+    e2e(&mut report, &mut table);
+
+    table.emit("bench_decode");
+    report.write().expect("write BENCH_kernels.json");
+    println!("wrote BENCH_kernels.json (decode_host_*/decode_e2e_* records)");
+}
+
+/// Real `Engine::decode` A/B via `set_naive` when artifacts are present.
+fn e2e(report: &mut JsonReport, table: &mut Table) {
+    use asymkv::engine::Engine;
+    use asymkv::model::ByteTokenizer;
+    use asymkv::runtime::Runtime;
+    use std::sync::Arc;
+
+    let dir = std::env::var("ASYMKV_ARTIFACTS").unwrap_or("artifacts/small".into());
+    let rt = match Runtime::load(&dir) {
+        Ok(rt) => Arc::new(rt),
+        Err(e) => {
+            println!("[bench_decode] artifacts unavailable ({e}); skipping e2e A/B");
+            return;
+        }
+    };
+    let engine = match Engine::new(rt, 1 << 30) {
+        Ok(e) => e,
+        Err(e) => {
+            println!("[bench_decode] engine unavailable ({e}); skipping e2e A/B");
+            return;
+        }
+    };
+    let m = engine.manifest();
+    let n = m.n_layers;
+    let policy = QuantPolicy::kivi(n, 1);
+    let tok = ByteTokenizer;
+    let mut rng = SplitMix::new(42);
+    let doc = asymkv::workload::gen_document(&mut rng, 100);
+    let samples = bench::samples(24);
+    let warm = bench::warmup(3);
+
+    let mut run = |naive: bool, name: &str| -> Option<()> {
+        engine.set_naive(naive);
+        let id = engine.create_seq(&policy).ok()?;
+        engine.prefill(&[id], &[tok.encode(&doc)]).ok()?;
+        let s0 = engine.stats();
+        let tm = time_fn(warm, samples, || {
+            engine.decode(&[id], &[65]).unwrap();
+        });
+        let s1 = engine.stats();
+        let steps = (s1.decode_steps - s0.decode_steps).max(1);
+        let bytes_per_step =
+            (s1.literal_bytes_built - s0.literal_bytes_built) / steps;
+        engine.free_seq(id).ok()?;
+        table.row(vec![
+            format!("e2e decode ({name})"),
+            fmt_duration(tm.p50()),
+            format!("{bytes_per_step}"),
+            format!(
+                "gather {:.1}ms build {:.1}ms exec {:.1}ms over run",
+                (s1.gather_s - s0.gather_s) * 1e3,
+                (s1.literal_build_s - s0.literal_build_s) * 1e3,
+                (s1.exec_s - s0.exec_s) * 1e3
+            ),
+        ]);
+        report.add(
+            &format!("decode_e2e_{name}"),
+            &tm,
+            bytes_per_step as usize,
+            Value::obj(vec![
+                ("model", Value::str_of(m.name.clone())),
+                ("policy", Value::str_of(policy.name.clone())),
+                ("bytes_built_per_step", Value::num(bytes_per_step as f64)),
+                ("naive", Value::Bool(naive)),
+            ]),
+        );
+        Some(())
+    };
+    let _ = run(false, "incremental");
+    let _ = run(true, "naive");
+    engine.set_naive(false);
+}

@@ -62,8 +62,8 @@ fn main() {
         let bytes: usize = seqs.iter().map(|s| s.layers[0].used_bytes()).sum();
 
         let tm = time_fn(warm, reps, || {
-            let mut refs: Vec<&mut SeqCache> = seqs.iter_mut().collect();
-            let args = gather_layer_args(&ggeo, refs.as_mut_slice(), 0);
+            let refs: Vec<&SeqCache> = seqs.iter().collect();
+            let args = gather_layer_args(&ggeo, &refs, 0);
             std::hint::black_box(&args);
         });
         t.row(vec![

@@ -81,8 +81,8 @@ fn main() -> anyhow::Result<()> {
         residual: m.residual,
     };
     let tm = time_fn(5, 100, || {
-        let mut refs: Vec<&mut SeqCache> = seqs.iter_mut().collect();
-        let args = asymkv::engine::gather::gather_layer_args(&ggeo, &refs.as_mut_slice(), 0);
+        let refs: Vec<&SeqCache> = seqs.iter().collect();
+        let args = asymkv::engine::gather::gather_layer_args(&ggeo, &refs, 0);
         std::hint::black_box(&args);
     });
     t.row(vec!["gather_layer_args (B=4, 2-bit)".into(),

@@ -92,6 +92,7 @@ impl Metrics {
         let m = self.inner.lock().unwrap();
         let elapsed = m.started.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
         MetricsSnapshot {
+            engine: Default::default(),
             elapsed_s: elapsed,
             requests_completed: m.requests_completed,
             requests_failed: m.requests_failed,
@@ -121,6 +122,11 @@ impl Metrics {
 
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct MetricsSnapshot {
+    /// Engine-level forward-path counters (decode fast path): host gather /
+    /// literal-build / artifact-exec seconds, literal upload bytes and the
+    /// staged-literal reuse split. Filled by `Coordinator::metrics` from
+    /// `Engine::stats`; see docs/API.md `stats`.
+    pub engine: crate::engine::EngineStats,
     pub elapsed_s: f64,
     pub requests_completed: u64,
     pub requests_failed: u64,
@@ -165,6 +171,18 @@ impl MetricsSnapshot {
             ("total_p50_s", Value::num(self.total_p50_s)),
             ("total_p95_s", Value::num(self.total_p95_s)),
             ("decode_step_p50_s", Value::num(self.decode_step_p50_s)),
+            // engine forward-path split (docs/API.md `stats`)
+            ("gather_s", Value::num(self.engine.gather_s)),
+            ("literal_build_s", Value::num(self.engine.literal_build_s)),
+            ("exec_s", Value::num(self.engine.exec_s)),
+            (
+                "literal_bytes_built",
+                Value::num(self.engine.literal_bytes_built as f64),
+            ),
+            ("lit_reused", Value::num(self.engine.lit_reused as f64)),
+            ("lit_patched", Value::num(self.engine.lit_patched as f64)),
+            ("lit_rebuilt", Value::num(self.engine.lit_rebuilt as f64)),
+            ("engine_folds", Value::num(self.engine.folds as f64)),
         ])
     }
 }

@@ -75,7 +75,9 @@ impl Coordinator {
     }
 
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.shared.metrics.snapshot()
+        let mut snap = self.shared.metrics.snapshot();
+        snap.engine = self.shared.engine.stats();
+        snap
     }
 
     // Serving-layer counters (recorded by the api subsystem, which owns

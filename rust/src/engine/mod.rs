@@ -2,12 +2,25 @@
 //! bit-packed KV caches under a layer-wise AsymKV policy.
 //!
 //! A forward step for a batch is: embed (host table lookup) → for each
-//! layer, gather that layer's packed cache + residual + masks into flat
+//! layer, assemble that layer's packed cache + residual + masks into flat
 //! buffers, execute the `layer_b{B}_c{C}_k{kb}_v{vb}` artifact, thread the
 //! hidden-state literal straight into the next layer (no host round-trip),
 //! and append the returned per-token K/V to the residual window (folding
 //! the oldest group through the RTN kernels whenever the window would
 //! overflow) → head artifact → logits.
+//!
+//! **Incremental decode fast path.** Steady-state decode is append-mostly:
+//! between two steps only one token's worth of state changed. The engine
+//! therefore keeps, per layer, persistent artifact-layout staging plus the
+//! last-built packed-region literals ([`gather::StagedLayer`] +
+//! [`SharedLit`]), validated against the caches' version counters: a clean
+//! step reuses the packed literals outright (zero gather, zero upload), a
+//! fold step patches only the appended tail group, and only composition /
+//! restore / stride changes re-scatter from scratch. All remaining
+//! per-step scratch (embed row, positions, masks, K/V transpose) lives in
+//! a reusable [`gather::StepArena`], so the steady-state gather path
+//! performs no heap allocation. While layer L executes, a prefetch worker
+//! assembles layer L+1's inputs (double-buffered pipelining).
 //!
 //! Batches must be policy-homogeneous (the artifact grid is static); the
 //! coordinator groups requests accordingly. Prompts of unequal length are
@@ -16,7 +29,9 @@
 pub mod gather;
 pub mod sampling;
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use anyhow::{bail, Result};
 use xla::Literal;
@@ -24,14 +39,67 @@ use xla::Literal;
 use crate::kvcache::{CachePool, SeqCache};
 use crate::model::Weights;
 use crate::quant::QuantPolicy;
-use crate::runtime::{lit_f32, lit_i32, lit_u8, to_f32_vec, Runtime};
+use crate::runtime::{lit_f32, lit_i32, lit_u8, to_f32_vec, Runtime, SharedLit};
 use crate::util::rng::SplitMix;
-use gather::{gather_layer_args, GatherGeo};
+use gather::{gather_layer_args, GatherGeo, PackedTensors, StagedLayer, StepArena};
 pub use sampling::{argmax, sample, SamplingParams};
 
+/// Build the six packed-region literals (k_main, k_scales, k_zeros,
+/// v_main, v_scales, v_zeros) in artifact-ABI order from assembled host
+/// buffers. The single definition of the cache literal layout, shared by
+/// the incremental and naive paths — keeping them byte-compatible is what
+/// the A/B equivalence property test relies on. Returns the literals and
+/// the bytes copied into them.
+fn build_packed_lits(
+    geo: &GatherGeo,
+    kb: u8,
+    vb: u8,
+    ts: PackedTensors<'_>,
+) -> Result<(Vec<Literal>, u64)> {
+    let (b, h, t, dh) = (geo.b_art, geo.n_heads, geo.max_ctx, geo.d_head);
+    let g2 = geo.group.min(dh);
+    let t_pk = crate::quant::kernels::packed_len(t, kb);
+    let dh_pk = crate::quant::kernels::packed_len(dh, vb);
+    let ks_dims: Vec<usize> =
+        if kb > 0 { vec![b, h, t / geo.group, dh] } else { vec![b, h, 1, 1] };
+    let vs_dims: Vec<usize> =
+        if vb > 0 { vec![b, h, t, dh / g2] } else { vec![b, h, 1, 1] };
+    let k_main = if kb > 0 {
+        lit_u8(&[b, h, t_pk, dh], ts.k_main)?
+    } else {
+        lit_f32(&[b, h, t, dh], ts.k_main_f32)?
+    };
+    let v_main = if vb > 0 {
+        lit_u8(&[b, h, t, dh_pk], ts.v_main)?
+    } else {
+        lit_f32(&[b, h, t, dh], ts.v_main_f32)?
+    };
+    let bytes = (ts.k_main.len() + ts.v_main.len()) as u64
+        + 4 * (ts.k_main_f32.len()
+            + ts.v_main_f32.len()
+            + ts.k_scales.len()
+            + ts.k_zeros.len()
+            + ts.v_scales.len()
+            + ts.v_zeros.len()) as u64;
+    Ok((
+        vec![
+            k_main,
+            lit_f32(&ks_dims, ts.k_scales)?,
+            lit_f32(&ks_dims, ts.k_zeros)?,
+            v_main,
+            lit_f32(&vs_dims, ts.v_scales)?,
+            lit_f32(&vs_dims, ts.v_zeros)?,
+        ],
+        bytes,
+    ))
+}
+
 /// `ASYMKV_NAIVE=1` switches the decode hot path back to the
-/// pre-optimization implementation (per-layer folds + mask rebuilds, no
-/// zero-copy single-sequence path) — the A/B lever for EXPERIMENTS.md §Perf.
+/// pre-optimization implementation (per-layer folds + mask rebuilds, full
+/// per-step gathers and literal rebuilds, no staging/pipelining) — the A/B
+/// lever for EXPERIMENTS.md §Perf and the equivalence property tests.
+/// This reads the process default; [`Engine::set_naive`] overrides per
+/// engine (benches and tests A/B both modes in one process).
 pub fn naive_mode() -> bool {
     static NAIVE: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
     *NAIVE.get_or_init(|| {
@@ -40,12 +108,52 @@ pub fn naive_mode() -> bool {
 }
 
 /// Engine statistics (exposed through the server /stats endpoint).
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct EngineStats {
     pub decode_steps: u64,
     pub prefill_chunks: u64,
     pub folds: u64,
     pub tokens_generated: u64,
+    /// Host seconds assembling cache/mask/embed inputs (gather, staging
+    /// sync, fold hoisting — including time on the prefetch worker).
+    pub gather_s: f64,
+    /// Host seconds constructing XLA literals (the upload copies).
+    pub literal_build_s: f64,
+    /// Seconds executing layer + head artifacts.
+    pub exec_s: f64,
+    /// Bytes copied into freshly built literals (the upload traffic the
+    /// incremental path exists to avoid).
+    pub literal_bytes_built: u64,
+    /// Per-layer staging outcomes: packed literal set reused outright.
+    pub lit_reused: u64,
+    /// Packed staging tail-patched (fold) and literals rebuilt from it.
+    pub lit_patched: u64,
+    /// Full re-scatter (composition / restore / structural change).
+    pub lit_rebuilt: u64,
+}
+
+/// One layer's persistent staging plus the literals built from it.
+#[derive(Default)]
+struct LayerLits {
+    staged: StagedLayer,
+    /// k_main, k_scales, k_zeros, v_main, v_scales, v_zeros — valid while
+    /// the staging's packed region is clean.
+    packed: Vec<Arc<SharedLit>>,
+}
+
+/// Fully assembled inputs for one layer call (cache tensors in ABI order).
+struct PreparedLayer {
+    lits: Vec<Arc<SharedLit>>, // 6 packed + k_res + v_res
+    k_bits: u8,
+    v_bits: u8,
+}
+
+/// Which logits a forward chunk must materialize: every valid position
+/// (perplexity evals) or one position per sequence (None = none — when no
+/// slot wants logits the head artifact is skipped entirely).
+enum Extract<'a> {
+    All,
+    At(&'a [Option<usize>]),
 }
 
 pub struct Engine {
@@ -57,6 +165,12 @@ pub struct Engine {
     head_lits: [Literal; 2], // rms_f, wout
     embed: Vec<f32>,         // [V, d] host copy for the embed lookup
     stats: Mutex<EngineStats>,
+    naive: AtomicBool,
+    /// Per-layer persistent staging + cached packed literals (lock order:
+    /// arena → staged → pool; the prefetch worker takes staged → pool).
+    staged: Mutex<Vec<LayerLits>>,
+    /// Reusable per-step scratch (embed, positions, masks, K/V transpose).
+    arena: Mutex<StepArena>,
 }
 
 // SAFETY: Literals are host-side buffers only read (never mutated) after
@@ -84,6 +198,7 @@ impl Engine {
                          lit_f32(&wout.shape, &wout.data)?];
         let embed = weights.get("embed")?.data.clone();
         let pool = Arc::new(CachePool::new(m.geometry(), pool_budget_bytes));
+        let staged = (0..m.n_layers).map(|_| LayerLits::default()).collect();
         Ok(Self {
             rt,
             pool,
@@ -92,6 +207,9 @@ impl Engine {
             head_lits,
             embed,
             stats: Mutex::new(EngineStats::default()),
+            naive: AtomicBool::new(naive_mode()),
+            staged: Mutex::new(staged),
+            arena: Mutex::new(StepArena::default()),
         })
     }
 
@@ -105,6 +223,18 @@ impl Engine {
 
     pub fn stats(&self) -> EngineStats {
         *self.stats.lock().unwrap()
+    }
+
+    /// Whether this engine runs the naive (pre-optimization) forward path.
+    pub fn is_naive(&self) -> bool {
+        self.naive.load(Ordering::Relaxed)
+    }
+
+    /// Override the forward-path mode for THIS engine (the process default
+    /// comes from `ASYMKV_NAIVE=1`). The A/B lever used by `bench_decode`
+    /// and the incremental-equivalence property tests.
+    pub fn set_naive(&self, on: bool) {
+        self.naive.store(on, Ordering::Relaxed);
     }
 
     /// Create a sequence under `policy` (validated against the artifact grid).
@@ -160,19 +290,22 @@ impl Engine {
         let max_b = *self.rt.manifest.batch_sizes.iter().max().unwrap();
         for (idc, tkc) in ids.chunks(max_b).zip(tokens.chunks(max_b)) {
             let toks: Vec<Vec<i32>> = tkc.iter().map(|&t| vec![t]).collect();
-            let logits = self.forward_chunk(idc, &toks, 1)?;
+            let at: Vec<Option<usize>> = vec![Some(0); idc.len()];
+            let logits = self.forward_chunk(idc, &toks, 1, Extract::At(&at))?;
             out.extend(logits.into_iter().map(|mut l| l.pop().unwrap()));
         }
         self.stats.lock().unwrap().decode_steps += 1;
         Ok(out)
     }
 
-    /// Prefill prompts (chunked); returns last-position logits per sequence.
+    /// Prefill prompts (chunked); returns last-position logits per
+    /// sequence. Only each sequence's final position is extracted, and
+    /// chunks in which no sequence ends skip the head artifact entirely.
     pub fn prefill(&self, ids: &[u64], prompts: &[Vec<i32>]) -> Result<Vec<Vec<f32>>> {
         Ok(self
-            .prefill_all_logits(ids, prompts)?
+            .prefill_impl(ids, prompts, false)?
             .into_iter()
-            .map(|mut per_pos| per_pos.pop().unwrap())
+            .map(|mut per_pos| per_pos.pop().expect("last-position logits"))
             .collect())
     }
 
@@ -181,6 +314,15 @@ impl Engine {
         &self,
         ids: &[u64],
         prompts: &[Vec<i32>],
+    ) -> Result<Vec<Vec<Vec<f32>>>> {
+        self.prefill_impl(ids, prompts, true)
+    }
+
+    fn prefill_impl(
+        &self,
+        ids: &[u64],
+        prompts: &[Vec<i32>],
+        all_logits: bool,
     ) -> Result<Vec<Vec<Vec<f32>>>> {
         assert_eq!(ids.len(), prompts.len());
         let m = &self.rt.manifest;
@@ -219,7 +361,23 @@ impl Engine {
                 if toks.iter().all(|t| t.is_empty()) {
                     break;
                 }
-                let logits = self.forward_chunk(idc, &toks, chunk)?;
+                let logits = if all_logits {
+                    self.forward_chunk(idc, &toks, chunk, Extract::All)?
+                } else {
+                    // last-logits-only: extract just the position where a
+                    // sequence ends within this chunk (usually none — the
+                    // head artifact is skipped for every earlier chunk)
+                    let at: Vec<Option<usize>> = pbatch
+                        .iter()
+                        .map(|p| {
+                            (!p.is_empty()
+                                && offset <= p.len() - 1
+                                && p.len() - 1 < offset + chunk)
+                                .then(|| p.len() - 1 - offset)
+                        })
+                        .collect();
+                    self.forward_chunk(idc, &toks, chunk, Extract::At(&at))?
+                };
                 for (i, l) in logits.into_iter().enumerate() {
                     results[ci * max_b + i].extend(l);
                 }
@@ -232,7 +390,9 @@ impl Engine {
 
     /// Prefill with KV-prefix reuse: sequences whose prompt starts with a
     /// snapshotted prefix restore the packed cache state and only prefill
-    /// the remainder; full prompts are snapshotted afterwards.
+    /// the remainder; full prompts are snapshotted afterwards. (Restores
+    /// re-stamp the caches' version counters via `Clone`, so the staged
+    /// literal cache can never confuse restored state with live history.)
     pub fn prefill_cached(
         &self,
         ids: &[u64],
@@ -312,8 +472,17 @@ impl Engine {
             }
         }
 
-        // snapshot full prompts for future reuse
-        for (&id, prompt) in ids.iter().zip(prompts) {
+        // snapshot full prompts for future reuse — indexed by enumeration,
+        // NOT by an id search: `position(|&x| x == id)` was O(n²) and
+        // silently attributed the FIRST duplicate's logits to every
+        // duplicate id. Exact hits are skipped outright: their entry (the
+        // one that produced the hit) already holds these tokens + logits,
+        // and re-snapshotting a sequence that several batch slots share
+        // would file one slot's cache under another slot's prompt.
+        for (idx, (&id, prompt)) in ids.iter().zip(prompts).enumerate() {
+            if remainders[idx].is_empty() {
+                continue;
+            }
             let (pname, cache) = self.pool.with_seq(id, |s| {
                 (
                     s.layers
@@ -324,7 +493,6 @@ impl Engine {
                     s.clone(),
                 )
             })?;
-            let idx = ids.iter().position(|&x| x == id).unwrap();
             pcache.insert(PrefixEntry {
                 policy: pname,
                 tokens: prompt.clone(),
@@ -362,28 +530,99 @@ impl Engine {
     }
 
     // -----------------------------------------------------------------
+    // per-layer input assembly (the incremental fast path)
+    // -----------------------------------------------------------------
+
+    /// Bring layer `layer`'s staging up to date with the live caches and
+    /// return its 8 cache literals, reusing the packed set when the staging
+    /// is clean. Runs on the caller's thread for layer 0 and on the
+    /// prefetch worker for layers 1.. (lock order: staged → pool).
+    fn prepare_layer(
+        &self,
+        ids: &[u64],
+        layer: usize,
+        geo: &GatherGeo,
+    ) -> Result<PreparedLayer> {
+        let t0 = Instant::now();
+        let mut all = self.staged.lock().unwrap();
+        let slot = &mut all[layer];
+        let report = self
+            .pool
+            .with_seqs_ref(ids, |seqs| slot.staged.sync(geo, ids, seqs, layer))?;
+        let gather_t = t0.elapsed().as_secs_f64();
+
+        let t1 = Instant::now();
+        let st = &slot.staged;
+        let (kb, vb) = (st.k_bits, st.v_bits);
+        let (b, h, dh, r) = (geo.b_art, geo.n_heads, geo.d_head, geo.residual);
+        let mut bytes = 0u64;
+        let rebuild_lits = !report.packed_clean || slot.packed.is_empty();
+        if rebuild_lits {
+            let (lits, built) =
+                build_packed_lits(geo, kb, vb, st.packed_tensors())?;
+            bytes += built;
+            slot.packed =
+                lits.into_iter().map(|l| Arc::new(SharedLit(l))).collect();
+        }
+        // the residual window changes every step → always rebuilt (small)
+        let k_res = Arc::new(SharedLit(lit_f32(&[b, h, r, dh], &st.k_res)?));
+        let v_res = Arc::new(SharedLit(lit_f32(&[b, h, r, dh], &st.v_res)?));
+        bytes += 2 * 4 * st.k_res.len() as u64;
+        let mut lits = slot.packed.clone();
+        lits.push(k_res);
+        lits.push(v_res);
+        let build_t = t1.elapsed().as_secs_f64();
+
+        let mut s = self.stats.lock().unwrap();
+        s.gather_s += gather_t;
+        s.literal_build_s += build_t;
+        s.literal_bytes_built += bytes;
+        if !rebuild_lits {
+            s.lit_reused += 1;
+        } else if report.rebuilt || report.rescattered {
+            s.lit_rebuilt += 1;
+        } else {
+            s.lit_patched += 1;
+        }
+        drop(s);
+        Ok(PreparedLayer { lits, k_bits: kb, v_bits: vb })
+    }
+
+    // -----------------------------------------------------------------
     // core: one padded chunk through all layers
     // -----------------------------------------------------------------
 
     /// `tokens[i]` = the valid tokens of sequence i for this chunk
     /// (possibly empty → the slot rides along fully padded).
-    /// Returns per-sequence logits at each of its valid positions.
+    /// Returns per-sequence logits at the positions `extract` selects.
     fn forward_chunk(
         &self,
         ids: &[u64],
         tokens: &[Vec<i32>],
         c: usize,
+        extract: Extract<'_>,
     ) -> Result<Vec<Vec<Vec<f32>>>> {
         let m = &self.rt.manifest;
         let b_art = m.pick_batch(ids.len());
         let (h, t_ctx, dh, d, r) =
             (m.n_heads, m.max_ctx, m.d_head, m.d_model, m.residual);
         let n_valid: Vec<usize> = tokens.iter().map(|t| t.len()).collect();
+        let naive = self.is_naive();
+        let geo = GatherGeo {
+            b_art,
+            n_heads: h,
+            max_ctx: t_ctx,
+            d_head: dh,
+            group: m.group,
+            residual: r,
+        };
 
-        // --- embed (host lookup) + positions ---
-        let mut x = vec![0f32; b_art * c * d];
-        let mut pos = vec![0i32; b_art];
-        self.pool.with_seqs(ids, |seqs| {
+        // --- embed (host lookup) + positions, arena-backed ---
+        let t_gather0 = Instant::now();
+        let mut arena = self.arena.lock().unwrap();
+        arena.begin_step(&geo, c, d);
+        let StepArena { x, pos, mask_q, mask_r, k_rows, v_rows } = &mut *arena;
+        self.pool.with_seqs_ref(ids, |seqs| {
             for (slot, seq) in seqs.iter().enumerate() {
                 pos[slot] = seq.pos as i32;
                 for (j, &tok) in tokens[slot].iter().enumerate() {
@@ -393,26 +632,14 @@ impl Engine {
                 }
             }
         })?;
-        let mut x_lit = lit_f32(&[b_art, c, d], &x)?;
-        let pos_lit = lit_i32(&[b_art], &pos)?;
-
-        let geo = GatherGeo {
-            b_art,
-            n_heads: h,
-            max_ctx: t_ctx,
-            d_head: dh,
-            group: m.group,
-            residual: r,
-        };
-        let naive = naive_mode();
 
         // PERF (hoisted folds + masks): fold counts depend only on
         // (n_res, n_valid), which evolve identically across layers, so we
         // fold ALL layers up front and build the masks/residual-count state
         // once per step instead of once per layer.
         let mut fold_count = 0u64;
-        let (mask_q, mask_r) = self.pool.with_seqs(ids, |seqs| {
-            if !naive {
+        if !naive {
+            self.pool.with_seqs(ids, |seqs| {
                 for (slot, seq) in seqs.iter_mut().enumerate() {
                     for lc in &mut seq.layers {
                         while lc.n_res() + n_valid[slot] > r {
@@ -421,27 +648,88 @@ impl Engine {
                         }
                     }
                 }
-            }
-            let mut mask_q = vec![gather::NEG; b_art * t_ctx];
-            let mut mask_r = vec![gather::NEG; b_art * r];
-            for (slot, seq) in seqs.iter().enumerate() {
-                let lc = &seq.layers[0];
-                for i in 0..lc.n_q {
-                    mask_q[slot * t_ctx + i] = 0.0;
+                for (slot, seq) in seqs.iter().enumerate() {
+                    let lc = &seq.layers[0];
+                    for i in 0..lc.n_q {
+                        mask_q[slot * t_ctx + i] = 0.0;
+                    }
+                    for i in 0..lc.n_res() {
+                        mask_r[slot * r + i] = 0.0;
+                    }
                 }
-                for i in 0..lc.n_res() {
-                    mask_r[slot * r + i] = 0.0;
-                }
-            }
-            (mask_q, mask_r)
-        })?;
-        let mask_q_lit = lit_f32(&[b_art, t_ctx], &mask_q)?;
-        let mask_r_lit = lit_f32(&[b_art, r], &mask_r)?;
+            })?;
+        }
+        let gather_prelude = t_gather0.elapsed().as_secs_f64();
 
-        for layer in 0..m.n_layers {
-            // (naive mode folds per layer, as the first implementation did)
-            let args = self.pool.with_seqs(ids, |seqs| {
-                if naive {
+        let t_build0 = Instant::now();
+        let mut x_lit = lit_f32(&[b_art, c, d], x)?;
+        let pos_lit = lit_i32(&[b_art], pos)?;
+        let (mask_q_lit, mask_r_lit) = if !naive {
+            (Some(lit_f32(&[b_art, t_ctx], mask_q)?),
+             Some(lit_f32(&[b_art, r], mask_r)?))
+        } else {
+            (None, None)
+        };
+        {
+            let mut s = self.stats.lock().unwrap();
+            s.gather_s += gather_prelude;
+            s.literal_build_s += t_build0.elapsed().as_secs_f64();
+            s.literal_bytes_built +=
+                4 * (x.len() + pos.len()) as u64
+                    + if naive { 0 } else { 4 * (mask_q.len() + mask_r.len()) as u64 };
+        }
+
+        if !naive {
+            // ---- incremental path: staged literals + pipelined prefetch
+            let prepared0 = self.prepare_layer(ids, 0, &geo)?;
+            let geo_ref = &geo;
+            x_lit = std::thread::scope(|scope| -> Result<Literal> {
+                let mut x_lit = x_lit;
+                let mut prepared = prepared0;
+                for layer in 0..m.n_layers {
+                    // assemble layer L+1's inputs while layer L executes
+                    let next = (layer + 1 < m.n_layers).then(|| {
+                        scope.spawn(move || {
+                            self.prepare_layer(ids, layer + 1, geo_ref)
+                        })
+                    });
+                    let art =
+                        m.layer_artifact_name(b_art, c, prepared.k_bits, prepared.v_bits);
+                    let exe = self.rt.executable(&art)?;
+                    let mut call: Vec<&Literal> = Vec::with_capacity(21);
+                    call.extend(self.layer_lits[layer].iter());
+                    call.push(&x_lit);
+                    call.push(&pos_lit);
+                    for l in &prepared.lits {
+                        call.push(&l.0);
+                    }
+                    call.push(mask_q_lit.as_ref().unwrap());
+                    call.push(mask_r_lit.as_ref().unwrap());
+                    let t_exec = Instant::now();
+                    let outs = exe.run(&call)?;
+                    self.stats.lock().unwrap().exec_s +=
+                        t_exec.elapsed().as_secs_f64();
+                    let [x_out, k_chunk, v_chunk]: [Literal; 3] = outs
+                        .try_into()
+                        .map_err(|_| anyhow::anyhow!("bad outs"))?;
+                    if let Some(handle) = next {
+                        prepared = handle
+                            .join()
+                            .map_err(|_| anyhow::anyhow!("gather prefetch panicked"))??;
+                    }
+                    self.append_chunk_kv(
+                        ids, layer, c, &n_valid, &k_chunk, &v_chunk, k_rows, v_rows,
+                    )?;
+                    x_lit = x_out;
+                }
+                Ok(x_lit)
+            })?;
+        } else {
+            // ---- naive baseline: per-layer folds, fresh full gathers,
+            // every literal rebuilt per layer per step
+            for layer in 0..m.n_layers {
+                let t_gather = Instant::now();
+                self.pool.with_seqs(ids, |seqs| {
                     for (slot, seq) in seqs.iter_mut().enumerate() {
                         let lc = &mut seq.layers[layer];
                         while lc.n_res() + n_valid[slot] > r {
@@ -449,171 +737,147 @@ impl Engine {
                             fold_count += 1;
                         }
                     }
-                }
-                // PERF (zero-copy single-sequence path): with one sequence
-                // and no padding, the per-seq cache buffers ARE the
-                // artifact's slot layout — build literals straight from
-                // them instead of gathering into scratch. Under demand
-                // paging that only holds once the packed region has grown
-                // to the full context; partial caches go through the
-                // (stride-translating) gather.
-                if !naive
-                    && ids.len() == 1
-                    && b_art == 1
-                    && seqs[0].layers[layer].q_capacity() == t_ctx
+                })?;
+                let args = self
+                    .pool
+                    .with_seqs_ref(ids, |seqs| gather_layer_args(&geo, seqs, layer))?;
+                self.stats.lock().unwrap().gather_s +=
+                    t_gather.elapsed().as_secs_f64();
+                let t_build = Instant::now();
+                let (kb, vb) = (args.k_bits, args.v_bits);
+                let art = m.layer_artifact_name(b_art, c, kb, vb);
+                let exe = self.rt.executable(&art)?;
+                let (mut lits, packed_bytes) =
+                    build_packed_lits(&geo, kb, vb, args.packed_tensors())?;
+                lits.push(lit_f32(&[b_art, h, r, dh], &args.k_res)?);
+                lits.push(lit_f32(&[b_art, h, r, dh], &args.v_res)?);
+                // naive mode folds per layer, so the masks must be
+                // rebuilt per layer from the gathered state
+                lits.push(lit_f32(&[b_art, t_ctx], &args.mask_q)?);
+                lits.push(lit_f32(&[b_art, r], &args.mask_r)?);
                 {
-                    None
-                } else {
-                    Some(gather_layer_args(&geo, seqs, layer))
+                    let mut s = self.stats.lock().unwrap();
+                    s.literal_build_s += t_build.elapsed().as_secs_f64();
+                    s.literal_bytes_built += packed_bytes
+                        + 4 * (args.k_res.len()
+                            + args.v_res.len()
+                            + args.mask_q.len()
+                            + args.mask_r.len()) as u64;
                 }
-            })?;
-
-            let (kb, vb) = match &args {
-                Some(a) => (a.k_bits, a.v_bits),
-                None => self.pool.with_seq(ids[0], |s| {
-                    (s.layers[layer].k_bits, s.layers[layer].v_bits)
-                })?,
-            };
-            let art = m.layer_artifact_name(b_art, c, kb, vb);
-            let exe = self.rt.executable(&art)?;
-
-            // cache literals in ABI order
-            let t_pk = crate::quant::kernels::packed_len(t_ctx, kb);
-            let dh_pk = crate::quant::kernels::packed_len(dh, vb);
-            let g2 = m.group.min(dh);
-            let ks_dims: Vec<usize> =
-                if kb > 0 { vec![b_art, h, t_ctx / m.group, dh] } else { vec![b_art, h, 1, 1] };
-            let vs_dims: Vec<usize> =
-                if vb > 0 { vec![b_art, h, t_ctx, dh / g2] } else { vec![b_art, h, 1, 1] };
-            let lits: Vec<Literal> = match &args {
-                Some(args) => {
-                    let k_main = if kb > 0 {
-                        lit_u8(&[b_art, h, t_pk, dh], &args.k_main)?
-                    } else {
-                        lit_f32(&[b_art, h, t_ctx, dh], &args.k_main_f32)?
-                    };
-                    let v_main = if vb > 0 {
-                        lit_u8(&[b_art, h, t_ctx, dh_pk], &args.v_main)?
-                    } else {
-                        lit_f32(&[b_art, h, t_ctx, dh], &args.v_main_f32)?
-                    };
-                    let mut ls = vec![
-                        k_main,
-                        lit_f32(&ks_dims, &args.k_scales)?,
-                        lit_f32(&ks_dims, &args.k_zeros)?,
-                        v_main,
-                        lit_f32(&vs_dims, &args.v_scales)?,
-                        lit_f32(&vs_dims, &args.v_zeros)?,
-                        lit_f32(&[b_art, h, r, dh], &args.k_res)?,
-                        lit_f32(&[b_art, h, r, dh], &args.v_res)?,
-                    ];
-                    if naive {
-                        // naive mode folds per layer, so the masks must be
-                        // rebuilt per layer from the gathered state
-                        ls.push(lit_f32(&[b_art, t_ctx], &args.mask_q)?);
-                        ls.push(lit_f32(&[b_art, r], &args.mask_r)?);
-                    }
-                    ls
-                }
-                None => self.pool.with_seq(ids[0], |seq| -> Result<Vec<Literal>> {
-                    let lc = &seq.layers[layer];
-                    let k_main = if kb > 0 {
-                        lit_u8(&[1, h, t_pk, dh], &lc.k_pk)?
-                    } else {
-                        lit_f32(&[1, h, t_ctx, dh], &lc.k_f32)?
-                    };
-                    let v_main = if vb > 0 {
-                        lit_u8(&[1, h, t_ctx, dh_pk], &lc.v_pk)?
-                    } else {
-                        lit_f32(&[1, h, t_ctx, dh], &lc.v_f32)?
-                    };
-                    // scales/zeros buffers already hold the dummy [H] shape
-                    // (size h) on the float path — see LayerCache::new
-                    let hrd = h * r * dh;
-                    let mut k_res = vec![0f32; hrd];
-                    let mut v_res = vec![0f32; hrd];
-                    lc.gather_residual(&mut k_res, &mut v_res);
-                    Ok(vec![
-                        k_main,
-                        lit_f32(&ks_dims, &lc.k_scales)?,
-                        lit_f32(&ks_dims, &lc.k_zeros)?,
-                        v_main,
-                        lit_f32(&vs_dims, &lc.v_scales)?,
-                        lit_f32(&vs_dims, &lc.v_zeros)?,
-                        lit_f32(&[1, h, r, dh], &k_res)?,
-                        lit_f32(&[1, h, r, dh], &v_res)?,
-                    ])
-                })??,
-            };
-            let mut call: Vec<&Literal> = Vec::with_capacity(21);
-            call.extend(self.layer_lits[layer].iter());
-            call.push(&x_lit);
-            call.push(&pos_lit);
-            call.extend(lits.iter());
-            if !naive || args.is_none() {
-                call.push(&mask_q_lit);
-                call.push(&mask_r_lit);
+                let mut call: Vec<&Literal> = Vec::with_capacity(21);
+                call.extend(self.layer_lits[layer].iter());
+                call.push(&x_lit);
+                call.push(&pos_lit);
+                call.extend(lits.iter());
+                let t_exec = Instant::now();
+                let outs = exe.run(&call)?;
+                self.stats.lock().unwrap().exec_s += t_exec.elapsed().as_secs_f64();
+                let [x_out, k_chunk, v_chunk]: [Literal; 3] =
+                    outs.try_into().map_err(|_| anyhow::anyhow!("bad outs"))?;
+                self.append_chunk_kv(
+                    ids, layer, c, &n_valid, &k_chunk, &v_chunk, k_rows, v_rows,
+                )?;
+                x_lit = x_out;
             }
-            let outs = exe.run(&call)?;
-            let [x_out, k_chunk, v_chunk]: [Literal; 3] =
-                outs.try_into().map_err(|_| anyhow::anyhow!("bad outs"))?;
-
-            // append new K/V (only the valid tokens of each slot): transpose
-            // [H, C, Dh] → token-major [C, H, Dh] rows and hand the whole
-            // chunk to the batched append, which folds group-at-a-time
-            // through the kernels instead of churning the ring per token
-            let k_host = to_f32_vec(&k_chunk)?; // [B, H, C, Dh]
-            let v_host = to_f32_vec(&v_chunk)?;
-            self.pool.with_seqs(ids, |seqs| {
-                let mut k_rows = vec![0f32; c * h * dh];
-                let mut v_rows = vec![0f32; c * h * dh];
-                for (slot, seq) in seqs.iter_mut().enumerate() {
-                    let nv = n_valid[slot];
-                    if nv == 0 {
-                        continue;
-                    }
-                    for j in 0..nv {
-                        for head in 0..h {
-                            let src = ((slot * h + head) * c + j) * dh;
-                            k_rows[(j * h + head) * dh..(j * h + head + 1) * dh]
-                                .copy_from_slice(&k_host[src..src + dh]);
-                            v_rows[(j * h + head) * dh..(j * h + head + 1) * dh]
-                                .copy_from_slice(&v_host[src..src + dh]);
-                        }
-                    }
-                    seq.layers[layer].append_tokens(
-                        nv,
-                        &k_rows[..nv * h * dh],
-                        &v_rows[..nv * h * dh],
-                    );
-                }
-            })?;
-            x_lit = x_out;
         }
         self.stats.lock().unwrap().folds += fold_count;
 
-        // --- head ---
-        let head = self.rt.executable(&format!("head_b{b_art}_c{c}"))?;
-        let outs = head.run(&[&self.head_lits[0], &self.head_lits[1], &x_lit])?;
-        let logits = to_f32_vec(&outs[0])?; // [B, C, V]
+        // --- head (skipped outright when no slot wants logits) ---
         let v = m.vocab;
+        let want_any = match &extract {
+            Extract::All => true,
+            Extract::At(at) => at.iter().any(|o| o.is_some()),
+        };
+        let out: Vec<Vec<Vec<f32>>> = if !want_any {
+            ids.iter().map(|_| Vec::new()).collect()
+        } else {
+            let head = self.rt.executable(&format!("head_b{b_art}_c{c}"))?;
+            let t_exec = Instant::now();
+            let outs = head.run(&[&self.head_lits[0], &self.head_lits[1], &x_lit])?;
+            self.stats.lock().unwrap().exec_s += t_exec.elapsed().as_secs_f64();
+            let logits = to_f32_vec(&outs[0])?; // [B, C, V]
+            match &extract {
+                Extract::All => (0..ids.len())
+                    .map(|slot| {
+                        (0..n_valid[slot])
+                            .map(|j| {
+                                logits[(slot * c + j) * v..(slot * c + j + 1) * v]
+                                    .to_vec()
+                            })
+                            .collect()
+                    })
+                    .collect(),
+                Extract::At(at) => (0..ids.len())
+                    .map(|slot| match at[slot] {
+                        Some(j) => {
+                            assert!(j < n_valid[slot], "extract past valid tokens");
+                            vec![logits[(slot * c + j) * v..(slot * c + j + 1) * v]
+                                .to_vec()]
+                        }
+                        None => Vec::new(),
+                    })
+                    .collect(),
+            }
+        };
 
-        // advance positions + extract per-sequence valid logits
+        // advance positions
         self.pool.with_seqs(ids, |seqs| {
             for (slot, seq) in seqs.iter_mut().enumerate() {
                 seq.pos += n_valid[slot];
             }
         })?;
-        Ok((0..ids.len())
-            .map(|slot| {
-                (0..n_valid[slot])
-                    .map(|j| logits[(slot * c + j) * v..(slot * c + j + 1) * v].to_vec())
-                    .collect()
-            })
-            .collect())
+        Ok(out)
     }
 
-    /// Direct cache access for analysis tooling.
+    /// Append the chunk's returned K/V (only the valid tokens of each
+    /// slot): transpose [H, C, Dh] → token-major [C, H, Dh] rows in the
+    /// arena scratch and hand the whole chunk to the batched append, which
+    /// folds group-at-a-time through the kernels instead of churning the
+    /// ring per token.
+    #[allow(clippy::too_many_arguments)]
+    fn append_chunk_kv(
+        &self,
+        ids: &[u64],
+        layer: usize,
+        c: usize,
+        n_valid: &[usize],
+        k_chunk: &Literal,
+        v_chunk: &Literal,
+        k_rows: &mut [f32],
+        v_rows: &mut [f32],
+    ) -> Result<()> {
+        let m = &self.rt.manifest;
+        let (h, dh) = (m.n_heads, m.d_head);
+        let k_host = to_f32_vec(k_chunk)?; // [B, H, C, Dh]
+        let v_host = to_f32_vec(v_chunk)?;
+        self.pool.with_seqs(ids, |seqs| {
+            for (slot, seq) in seqs.iter_mut().enumerate() {
+                let nv = n_valid[slot];
+                if nv == 0 {
+                    continue;
+                }
+                for j in 0..nv {
+                    for head in 0..h {
+                        let src = ((slot * h + head) * c + j) * dh;
+                        k_rows[(j * h + head) * dh..(j * h + head + 1) * dh]
+                            .copy_from_slice(&k_host[src..src + dh]);
+                        v_rows[(j * h + head) * dh..(j * h + head + 1) * dh]
+                            .copy_from_slice(&v_host[src..src + dh]);
+                    }
+                }
+                seq.layers[layer].append_tokens(
+                    nv,
+                    &k_rows[..nv * h * dh],
+                    &v_rows[..nv * h * dh],
+                );
+            }
+        })?;
+        Ok(())
+    }
+
+    /// Direct cache access for analysis tooling. Mutating cache buffers
+    /// through this without the append/fold API requires
+    /// [`crate::kvcache::LayerCache::invalidate`].
     pub fn with_seq<R>(&self, id: u64, f: impl FnOnce(&mut SeqCache) -> R) -> Result<R> {
         Ok(self.pool.with_seq(id, f)?)
     }

@@ -26,10 +26,39 @@
 //! appending C tokens, fold the OLDEST group of G residual tokens into the
 //! packed region while n_res + C > R. Folding runs the same RTN math as the
 //! fold artifacts (bit-exact; asserted against golden.json).
+//!
+//! Change tracking: every cache carries a **monotonically bumped version**
+//! plus a dirty descriptor split by region — `layout_version` (strides
+//! changed: restride on page growth, wholesale replacement),
+//! `packed_version` (a fold appended groups to the packed region) and
+//! `res_base_version` (the residual ring's origin moved: fold consumed the
+//! oldest group, the ring grew/compacted, or the cache was replaced).
+//! Version values are drawn from one process-global counter, so **equal
+//! versions imply byte-identical state**: a value is assigned exactly once,
+//! and the only way two caches share it is a clone lineage — and `Clone`
+//! deliberately re-stamps every version (including the `ident_version`
+//! object-identity stamp), so a restored snapshot (prefix cache, session
+//! replay) can never alias a live cache's history. While `ident_version`
+//! is stable a cache's history is linear and append-only, which is what
+//! lets the engine's literal cache patch *only the appended tail*: same
+//! ident + newer `packed_version` ⟹ folds appended groups
+//! `[seen_n_q/G, n_q/G)` and touched nothing below; same
+//! `res_base_version` ⟹ residual rows `[0, seen_len)` are untouched.
+//! Code that mutates the (public) buffers directly without going through
+//! the append/fold API must call [`LayerCache::invalidate`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::quant::kernels as rtn;
 use crate::quant::kernels::GroupParams;
 use crate::quant::Bits;
+
+/// Process-global version source: each bump is globally unique, so version
+/// equality across ANY two caches proves byte-identical region state.
+fn next_version() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
 
 /// Geometry shared by every layer cache of a model.
 #[derive(Debug, Clone, Copy)]
@@ -52,11 +81,25 @@ fn page_target(need: usize, g: usize, limit: usize) -> usize {
     (need.div_ceil(g) * g).min(limit)
 }
 
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct LayerCache {
     pub geo: CacheGeometry,
     pub k_bits: Bits,
     pub v_bits: Bits,
+    // --- change tracking (see module docs; all values from next_version) ---
+    /// object identity: stamped at construction, clone and invalidate ONLY
+    /// — while unchanged, the cache's history is linear (append-only folds,
+    /// tail-only ring appends), which is what makes tail patches sound
+    ident_version: u64,
+    /// bumped on every mutation
+    version: u64,
+    /// bumped when packed-region strides change (restride / replacement)
+    layout_version: u64,
+    /// bumped when a fold appends groups to the packed region
+    packed_version: u64,
+    /// bumped when the residual ring's origin moves (fold / growth /
+    /// replacement) — appends leave it alone, enabling tail patches
+    res_base_version: u64,
     /// quantized token count (multiple of G)
     pub n_q: usize,
     /// allocated quantized-region capacity in tokens (page-aligned, ≤ T);
@@ -81,6 +124,40 @@ pub struct LayerCache {
     res_len: usize,
 }
 
+/// Cloning re-stamps every version: a clone is a *different* cache whose
+/// future diverges from the source's, so it must never be patch-compatible
+/// with literals built from the source (or vice versa). This is what makes
+/// prefix-restore / snapshot-replay a guaranteed full invalidation.
+impl Clone for LayerCache {
+    fn clone(&self) -> Self {
+        Self {
+            geo: self.geo,
+            k_bits: self.k_bits,
+            v_bits: self.v_bits,
+            ident_version: next_version(),
+            version: next_version(),
+            layout_version: next_version(),
+            packed_version: next_version(),
+            res_base_version: next_version(),
+            n_q: self.n_q,
+            q_cap: self.q_cap,
+            k_pk: self.k_pk.clone(),
+            k_f32: self.k_f32.clone(),
+            k_scales: self.k_scales.clone(),
+            k_zeros: self.k_zeros.clone(),
+            v_pk: self.v_pk.clone(),
+            v_f32: self.v_f32.clone(),
+            v_scales: self.v_scales.clone(),
+            v_zeros: self.v_zeros.clone(),
+            res_k: self.res_k.clone(),
+            res_v: self.res_v.clone(),
+            res_cap: self.res_cap,
+            res_start: self.res_start,
+            res_len: self.res_len,
+        }
+    }
+}
+
 impl LayerCache {
     /// A fresh cache allocates NO token storage (demand paging); only the
     /// fp32 paths carry their fixed dummy scale/zero rows (artifact ABI).
@@ -100,6 +177,11 @@ impl LayerCache {
             geo,
             k_bits,
             v_bits,
+            ident_version: next_version(),
+            version: next_version(),
+            layout_version: next_version(),
+            packed_version: next_version(),
+            res_base_version: next_version(),
             n_q: 0,
             q_cap: 0,
             k_pk: vec![],
@@ -120,6 +202,52 @@ impl LayerCache {
 
     pub fn n_res(&self) -> usize {
         self.res_len
+    }
+
+    // -----------------------------------------------------------------
+    // change tracking (module docs: equal version ⟹ identical state)
+    // -----------------------------------------------------------------
+
+    /// Monotonically bumped on every mutation.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Object identity: changes ONLY at construction, clone (snapshot
+    /// restore) and [`LayerCache::invalidate`]. While it is stable the
+    /// cache's history is linear — packed groups and residual rows are
+    /// append-only — so a consumer that recorded (`packed_version`, `n_q`)
+    /// may patch just the appended tail.
+    pub fn ident_version(&self) -> u64 {
+        self.ident_version
+    }
+
+    /// Packed-region stride identity (restride / replacement invalidates).
+    pub fn layout_version(&self) -> u64 {
+        self.layout_version
+    }
+
+    /// Packed-region content identity; with an unchanged `layout_version`,
+    /// a newer value means folds appended groups `[seen_n_q/G, n_q/G)` and
+    /// touched nothing below.
+    pub fn packed_version(&self) -> u64 {
+        self.packed_version
+    }
+
+    /// Residual-ring origin identity; while unchanged, the ring only grew
+    /// at the tail, so rows `[0, seen_len)` are exactly as last observed.
+    pub fn res_base_version(&self) -> u64 {
+        self.res_base_version
+    }
+
+    /// Mark every region dirty. For code that mutates the public buffers
+    /// directly instead of going through the append/fold API.
+    pub fn invalidate(&mut self) {
+        self.ident_version = next_version();
+        self.version = next_version();
+        self.layout_version = next_version();
+        self.packed_version = next_version();
+        self.res_base_version = next_version();
     }
 
     /// Total cached tokens (quantized + residual).
@@ -234,6 +362,9 @@ impl LayerCache {
             restride(&mut self.v_f32, h, old * dh, new_cap * dh);
         }
         self.q_cap = new_cap;
+        // strides changed: literals built against the old layout are dead
+        self.version = next_version();
+        self.layout_version = next_version();
     }
 
     /// Grow the residual ring to hold at least `need` tokens, compacting
@@ -257,6 +388,9 @@ impl LayerCache {
         self.res_v = nv;
         self.res_start = 0;
         self.res_cap = new_cap;
+        // compaction re-based the ring: previously observed rows moved
+        self.version = next_version();
+        self.res_base_version = next_version();
     }
 
     // -----------------------------------------------------------------
@@ -279,6 +413,7 @@ impl LayerCache {
         self.res_k[slot * hd..(slot + 1) * hd].copy_from_slice(k);
         self.res_v[slot * hd..(slot + 1) * hd].copy_from_slice(v);
         self.res_len += 1;
+        self.version = next_version(); // tail append: base versions keep
         folds
     }
 
@@ -310,6 +445,10 @@ impl LayerCache {
         self.res_start = (self.res_start + g) % self.res_cap;
         self.res_len -= g;
         self.n_q += g;
+        // packed region gained a tail group AND the ring origin advanced
+        self.version = next_version();
+        self.packed_version = next_version();
+        self.res_base_version = next_version();
     }
 
     /// Append `count` tokens in one call (`ks`/`vs` are token-major
@@ -354,6 +493,7 @@ impl LayerCache {
                 // when the ring has never been allocated, res_cap == 0)
                 self.res_start = 0;
                 self.res_len = 0;
+                self.res_base_version = next_version();
                 consumed += take;
             }
         }
@@ -375,6 +515,7 @@ impl LayerCache {
         }
         self.res_len += count - consumed;
         debug_assert!(self.res_len <= r);
+        self.version = next_version();
         folds
     }
 
@@ -399,6 +540,8 @@ impl LayerCache {
             self.fold_v_head(head, gi, &vg);
         }
         self.n_q += g;
+        self.version = next_version();
+        self.packed_version = next_version();
     }
 
     fn fold_k_head(&mut self, head: usize, gi: usize, kg: &[f32]) {
@@ -452,11 +595,27 @@ impl LayerCache {
     /// Write the residual window into `out` laid out [H, R, Dh] (artifact
     /// layout), compacting the ring so occupied slots are [0, n_res).
     pub fn gather_residual(&self, out_k: &mut [f32], out_v: &mut [f32]) {
+        self.copy_residual_rows(0, self.res_len, out_k, out_v);
+    }
+
+    /// Write only logical residual rows `[lo, hi)` into the [H, R, Dh]
+    /// artifact layout — the tail-patch primitive: while
+    /// [`LayerCache::res_base_version`] is unchanged, rows below a
+    /// previously observed length are untouched, so an incremental gather
+    /// copies just the newly appended rows.
+    pub fn copy_residual_rows(
+        &self,
+        lo: usize,
+        hi: usize,
+        out_k: &mut [f32],
+        out_v: &mut [f32],
+    ) {
         let geo = self.geo;
         let (h, dh, r) = (geo.n_heads, geo.d_head, geo.residual);
         let hd = h * dh;
+        debug_assert!(hi <= self.res_len);
         debug_assert_eq!(out_k.len(), h * r * dh);
-        for slot in 0..self.res_len {
+        for slot in lo..hi {
             let src_row = ((self.res_start + slot) % self.res_cap) * hd;
             for head in 0..h {
                 let src = src_row + head * dh;
@@ -903,6 +1062,114 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    // ---------------- change tracking ----------------
+
+    #[test]
+    fn versions_track_regions_precisely() {
+        let mut c = LayerCache::new(geo(), 2, 2); // R=64, G=32
+        let mut g = Gen { rng: crate::util::rng::SplitMix::new(21) };
+        let hd = 2 * 32;
+        let (v0, l0, p0, b0) = (
+            c.version(), c.layout_version(), c.packed_version(), c.res_base_version(),
+        );
+        let id0 = c.ident_version();
+        // a plain append bumps version + res base only when the ring GROWS
+        // a page; within an allocated page it is a pure tail write
+        let (k, v) = tok(&mut g, hd);
+        c.append_token(&k, &v);
+        assert_ne!(c.version(), v0);
+        assert_eq!(c.layout_version(), l0, "append must not invalidate layout");
+        assert_eq!(c.packed_version(), p0, "append must not touch packed region");
+        // first append allocated the first ring page (origin compacted)
+        assert_ne!(c.res_base_version(), b0);
+        let b1 = c.res_base_version();
+        let p1 = c.packed_version();
+        for _ in 0..31 {
+            let (k, v) = tok(&mut g, hd);
+            c.append_token(&k, &v);
+        }
+        assert_eq!(c.res_base_version(), b1, "in-page appends keep the ring base");
+        assert_eq!(c.packed_version(), p1);
+        // force a fold: packed content AND ring base change
+        for _ in 0..33 {
+            let (k, v) = tok(&mut g, hd);
+            c.append_token(&k, &v);
+        }
+        assert!(c.n_q > 0, "fold must have happened");
+        assert_ne!(c.packed_version(), p1);
+        assert_ne!(c.res_base_version(), b1);
+        // the fold's ensure_q_cap allocated the first packed page
+        assert_ne!(c.layout_version(), l0);
+
+        // a fold WITHIN already-allocated capacity (the fully-grown steady
+        // state) bumps packed but keeps the stride layout
+        let mut c2 = LayerCache::new(geo(), 2, 2);
+        c2.ensure_q_cap(128);
+        c2.ensure_res_cap(64);
+        for _ in 0..64 {
+            let (k, v) = tok(&mut g, hd);
+            c2.append_token(&k, &v);
+        }
+        let (l2, p2) = (c2.layout_version(), c2.packed_version());
+        let (k, v) = tok(&mut g, hd);
+        c2.append_token(&k, &v); // folds (ring full), capacity pre-grown
+        assert!(c2.n_q > 0);
+        assert_ne!(c2.packed_version(), p2);
+        assert_eq!(c2.layout_version(), l2, "in-capacity fold keeps strides");
+        // object identity survives every append / fold / growth...
+        assert_eq!(c.ident_version(), id0, "mutations keep object identity");
+        // ...and only invalidate (or clone) re-stamps it, with everything else
+        let before = (c.layout_version(), c.packed_version(), c.res_base_version());
+        c.invalidate();
+        assert_ne!(c.ident_version(), id0);
+        assert_ne!(c.layout_version(), before.0);
+        assert_ne!(c.packed_version(), before.1);
+        assert_ne!(c.res_base_version(), before.2);
+    }
+
+    #[test]
+    fn clone_restamps_every_version() {
+        // a snapshot restore must never be patch-compatible with literals
+        // built from the live cache (or any other cache): clones get fresh
+        // globally-unique versions even though their bytes are identical
+        let mut c = LayerCache::new(geo(), 1, 2);
+        let mut g = Gen { rng: crate::util::rng::SplitMix::new(22) };
+        let hd = 2 * 32;
+        for _ in 0..40 {
+            let (k, v) = tok(&mut g, hd);
+            c.append_token(&k, &v);
+        }
+        let snap = c.clone();
+        assert_ne!(snap.ident_version(), c.ident_version());
+        assert_ne!(snap.version(), c.version());
+        assert_ne!(snap.layout_version(), c.layout_version());
+        assert_ne!(snap.packed_version(), c.packed_version());
+        assert_ne!(snap.res_base_version(), c.res_base_version());
+        // ...while the contents are byte-identical
+        assert_eq!(snap.dequant_k_full(), c.dequant_k_full());
+        assert_eq!(snap.dequant_v_full(), c.dequant_v_full());
+    }
+
+    #[test]
+    fn copy_residual_rows_patches_tail() {
+        let mut c = LayerCache::new(geo(), 2, 2);
+        let hd = 2 * 32;
+        for i in 0..10 {
+            c.append_token(&vec![i as f32; hd], &vec![-(i as f32); hd]);
+        }
+        let (h, r, dh) = (2, 64, 32);
+        let mut full_k = vec![0f32; h * r * dh];
+        let mut full_v = vec![0f32; h * r * dh];
+        c.gather_residual(&mut full_k, &mut full_v);
+        // rebuild the same buffer from two partial copies
+        let mut part_k = vec![0f32; h * r * dh];
+        let mut part_v = vec![0f32; h * r * dh];
+        c.copy_residual_rows(0, 6, &mut part_k, &mut part_v);
+        c.copy_residual_rows(6, 10, &mut part_k, &mut part_v);
+        assert_eq!(part_k, full_k);
+        assert_eq!(part_v, full_v);
     }
 
     #[test]

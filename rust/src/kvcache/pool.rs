@@ -322,6 +322,44 @@ impl CachePool {
         Ok(r)
     }
 
+    /// Run `f` with SHARED access to several sequences at once (batch
+    /// gather / the pipelined prefetch worker). Unlike
+    /// [`CachePool::with_seqs`] this neither requires exclusive access nor
+    /// settles capacity (nothing can mutate), and duplicate ids are
+    /// permitted. Small batches borrow through a stack-inline pointer
+    /// array, so the steady-state decode gather path stays allocation-free.
+    pub fn with_seqs_ref<R>(
+        &self,
+        ids: &[u64],
+        f: impl FnOnce(&[&SeqCache]) -> R,
+    ) -> Result<R, PoolError> {
+        const INLINE: usize = 16;
+        let inner = self.inner.lock().unwrap();
+        if ids.len() <= INLINE {
+            let mut arr: [std::mem::MaybeUninit<&SeqCache>; INLINE] =
+                [const { std::mem::MaybeUninit::uninit() }; INLINE];
+            for (i, &id) in ids.iter().enumerate() {
+                arr[i].write(
+                    inner.seqs.get(&id).ok_or(PoolError::UnknownSeq(id))?,
+                );
+            }
+            // SAFETY: the first ids.len() elements were just initialized.
+            let refs: &[&SeqCache] = unsafe {
+                std::slice::from_raw_parts(
+                    arr.as_ptr() as *const &SeqCache,
+                    ids.len(),
+                )
+            };
+            Ok(f(refs))
+        } else {
+            let mut refs: Vec<&SeqCache> = Vec::with_capacity(ids.len());
+            for &id in ids {
+                refs.push(inner.seqs.get(&id).ok_or(PoolError::UnknownSeq(id))?);
+            }
+            Ok(f(&refs))
+        }
+    }
+
     // -----------------------------------------------------------------
     // budget gating (checks BEFORE mutation — the preemption trigger)
     // -----------------------------------------------------------------
@@ -596,6 +634,38 @@ mod tests {
         .unwrap();
         assert_eq!(pool.with_seq(a, |c| c.layers[0].n_res()).unwrap(), 1);
         assert!(pool.with_seqs(&[a, 999], |_| ()).is_err());
+    }
+
+    #[test]
+    fn with_seqs_ref_shared_access() {
+        let pool = CachePool::new(geo(), usize::MAX);
+        let p = QuantPolicy::float32(1);
+        let a = pool.allocate(&p).unwrap();
+        let b = pool.allocate(&p).unwrap();
+        let hd = 2 * 32;
+        pool.with_seq(a, |s| {
+            s.layers[0].append_token(&vec![3.0; hd], &vec![3.0; hd]);
+        })
+        .unwrap();
+        let (na, nb) = pool
+            .with_seqs_ref(&[a, b], |seqs| {
+                (seqs[0].layers[0].n_res(), seqs[1].layers[0].n_res())
+            })
+            .unwrap();
+        assert_eq!((na, nb), (1, 0));
+        // duplicate ids are fine on the shared path (read-only)
+        let n = pool
+            .with_seqs_ref(&[a, a], |seqs| {
+                seqs[0].layers[0].n_res() + seqs[1].layers[0].n_res()
+            })
+            .unwrap();
+        assert_eq!(n, 2);
+        assert!(pool.with_seqs_ref(&[a, 999], |_| ()).is_err());
+        // > inline capacity falls back to the heap path
+        let many: Vec<u64> =
+            (0..20).map(|_| pool.allocate(&p).unwrap()).collect();
+        let count = pool.with_seqs_ref(&many, |seqs| seqs.len()).unwrap();
+        assert_eq!(count, 20);
     }
 
     #[test]

@@ -220,6 +220,31 @@ mod tests {
     }
 
     #[test]
+    fn restored_snapshot_never_aliases_live_versions() {
+        // the engine's staged literal cache validates against LayerCache
+        // version stamps; a snapshot restore goes through Clone, which
+        // re-stamps every version — so restored state can never be
+        // mistaken for the live cache's linear history (full invalidation
+        // on prefix-restore, by construction)
+        let mut e = entry("p", vec![1, 2]);
+        let hd = 32;
+        for _ in 0..5 {
+            e.cache.layers[0].append_token(&vec![1.0; hd], &vec![2.0; hd]);
+        }
+        let live = &e.cache.layers[0];
+        let pc = PrefixCache::new(1 << 20);
+        let (ident, packed, res_base) = (
+            live.ident_version(), live.packed_version(), live.res_base_version(),
+        );
+        pc.insert(e);
+        let restored = pc.lookup("p", &[1, 2]).unwrap().cache.clone();
+        let rl = &restored.layers[0];
+        assert_ne!(rl.ident_version(), ident);
+        assert_ne!(rl.packed_version(), packed);
+        assert_ne!(rl.res_base_version(), res_base);
+    }
+
+    #[test]
     fn duplicate_key_replaces() {
         let pc = PrefixCache::new(1 << 20);
         pc.insert(entry("p", vec![1, 2]));

@@ -34,6 +34,16 @@ pub fn lit_u8(dims: &[usize], data: &[u8]) -> Result<Literal> {
         .context("creating u8 literal")
 }
 
+/// A [`Literal`] that may be retained across steps and handed between the
+/// gather-prefetch worker and the execution thread. Host-side buffer, only
+/// read (never mutated) after construction — the same argument as the
+/// `unsafe impl Send/Sync for Engine` in `engine/mod.rs`; the `xla` crate
+/// merely forgets to mark its opaque pointers.
+pub struct SharedLit(pub Literal);
+
+unsafe impl Send for SharedLit {}
+unsafe impl Sync for SharedLit {}
+
 pub fn to_f32_vec(lit: &Literal) -> Result<Vec<f32>> {
     lit.to_vec::<f32>().context("extracting f32 data")
 }

@@ -16,7 +16,7 @@ use xla::{Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
 use crate::model::{ArtifactSpec, DType, Manifest};
 
-pub use literal::{lit_f32, lit_i32, lit_u8, to_f32_vec, to_u8_vec};
+pub use literal::{lit_f32, lit_i32, lit_u8, to_f32_vec, to_u8_vec, SharedLit};
 
 /// A compiled artifact plus its ABI spec.
 pub struct Executable {

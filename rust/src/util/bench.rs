@@ -11,13 +11,49 @@
 //! artifact-dependent benches skip gracefully — the mode CI's bench-smoke
 //! job runs to prove the targets execute and emit valid JSON.
 
+use std::alloc::{GlobalAlloc, Layout, System};
 use std::collections::{BTreeMap, HashSet};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, OnceLock};
 use std::time::Instant;
 
 use super::json::Value;
 use super::stats::percentile;
+
+/// Allocation-counting wrapper around the system allocator, for
+/// zero-allocation proofs (the steady-state gather path). A binary opts in
+/// with
+/// `#[global_allocator] static A: CountingAlloc = CountingAlloc;`
+/// and reads the event counter via [`alloc_events`] — deallocations are
+/// not counted (freeing is not an allocation).
+pub struct CountingAlloc;
+
+static ALLOC_EVENTS: AtomicU64 = AtomicU64::new(0);
+
+/// Allocation events (alloc / realloc / alloc_zeroed) observed so far by
+/// a registered [`CountingAlloc`].
+pub fn alloc_events() -> u64 {
+    ALLOC_EVENTS.load(Ordering::Relaxed)
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(l)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, n: usize) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(p, l, n)
+    }
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(l)
+    }
+}
 
 /// True when `BENCH_SMOKE=1`: tiny sample counts, CI-friendly run.
 pub fn smoke() -> bool {

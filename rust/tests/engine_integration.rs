@@ -332,3 +332,49 @@ fn prefix_cache_reuse_matches_cold_prefill() {
     engine.free_seq(id4).unwrap();
     assert!(pcache.stats().hits > hits_before);
 }
+
+/// Regression: the snapshot loop used `ids.iter().position(|&x| x == id)`
+/// to find each sequence's logits — O(n²), and under duplicate ids it
+/// attributed the FIRST duplicate's logits (and cache) to every duplicate.
+/// Duplicate ids reach prefill_cached when several batch slots share one
+/// sequence and all hit exactly (no batched prefill happens, so the
+/// engine's duplicate-id batch panic never fires).
+#[test]
+fn prefix_cache_duplicate_ids_keep_per_prompt_state() {
+    let Some(engine) = common::engine_for("tiny") else { return };
+    let n = engine.manifest().n_layers;
+    let tok = ByteTokenizer;
+    let policy = QuantPolicy::kivi(n, 2);
+    let pcache = asymkv::kvcache::PrefixCache::new(64 << 20);
+    let pa = tok.encode_str("## ABC:1234 ## ABC:");
+    let pb = tok.encode_str("## XYZ:9876 ## XYZ:");
+
+    // seed exact-hit entries for both prompts
+    for p in [&pa, &pb] {
+        let id = engine.create_seq(&policy).unwrap();
+        engine.prefill_cached(&[id], &[p.clone()], &pcache).unwrap();
+        engine.free_seq(id).unwrap();
+    }
+    let ha = pcache.stats().hits;
+
+    // the same sequence id rides in two slots with different prompts
+    let id = engine.create_seq(&policy).unwrap();
+    let out = engine
+        .prefill_cached(&[id, id], &[pa.clone(), pb.clone()], &pcache)
+        .unwrap();
+    engine.free_seq(id).unwrap();
+    assert!(pcache.stats().hits >= ha + 2, "both slots must hit");
+    assert_ne!(out[0], out[1], "each slot must carry its own logits");
+
+    // the stored entries must be untouched: replaying each prompt alone
+    // returns exactly the logits the duplicate-id call reported for it
+    for (p, want) in [(&pa, &out[0]), (&pb, &out[1])] {
+        let id = engine.create_seq(&policy).unwrap();
+        let got = engine
+            .prefill_cached(&[id], &[p.clone()], &pcache)
+            .unwrap()
+            .remove(0);
+        engine.free_seq(id).unwrap();
+        assert_eq!(&got, want, "entry state poisoned by duplicate-id batch");
+    }
+}

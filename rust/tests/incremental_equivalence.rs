@@ -1,0 +1,120 @@
+//! Property: the incremental decode fast path (persistent staged literals,
+//! tail patches, pipelined gather) produces BYTE-IDENTICAL logits to the
+//! `ASYMKV_NAIVE=1` baseline across random interleavings of prefill,
+//! decode bursts (crossing fold boundaries), incremental prompt extension
+//! (page growth, chunk boundaries) and preemption-requeue (free + replay),
+//! for 1-bit KIVI and mixed layer-wise AsymKV policies.
+//!
+//! Two engines over the same artifacts run the identical op sequence; one
+//! is pinned to the naive path via [`Engine::set_naive`]. Every logits row
+//! is compared at the f32 bit level — not within a tolerance — because the
+//! incremental path is a pure host-assembly optimization: the artifact
+//! must receive the exact same bytes.
+
+mod common;
+
+use asymkv::quant::QuantPolicy;
+use asymkv::util::prop::{check, Gen};
+
+fn bits(l: &[f32]) -> Vec<u32> {
+    l.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn incremental_logits_match_naive_prop() {
+    let Some(fast) = common::engine_for("tiny") else { return };
+    let Some(naive) = common::engine_for("tiny") else { return };
+    naive.set_naive(true);
+    assert!(!fast.is_naive(), "fast engine must run the incremental path");
+
+    let n = fast.manifest().n_layers;
+    let budget = fast.manifest().max_ctx + fast.manifest().residual - 2;
+    let policies = [
+        QuantPolicy::kivi(n, 1),              // the 1-bit flagship
+        QuantPolicy::kivi(n, 2),
+        QuantPolicy::asymkv21(n, n / 2, 0),   // mixed layer-wise bits
+        QuantPolicy::float32(n),
+    ];
+
+    check("incremental_vs_naive", 4, |g: &mut Gen| {
+        let policy = g.pick(&policies).clone();
+        let tokens = |g: &mut Gen, len: usize| -> Vec<i32> {
+            (0..len).map(|_| g.usize_in(32, 126) as i32).collect()
+        };
+        let mut fid = fast.create_seq(&policy).map_err(|e| e.to_string())?;
+        let mut nid = naive.create_seq(&policy).map_err(|e| e.to_string())?;
+        let mut history: Vec<i32> = tokens(g, g.usize_in(3, 80));
+
+        let compare = |ctx: &str, lf: &[f32], ln: &[f32]| -> Result<(), String> {
+            if bits(lf) != bits(ln) {
+                return Err(format!(
+                    "{ctx}: incremental logits diverge from naive ({policy})"
+                ));
+            }
+            Ok(())
+        };
+
+        let lf = fast
+            .prefill(&[fid], &[history.clone()])
+            .map_err(|e| e.to_string())?;
+        let ln = naive
+            .prefill(&[nid], &[history.clone()])
+            .map_err(|e| e.to_string())?;
+        compare("prefill", &lf[0], &ln[0])?;
+
+        for op in 0..g.usize_in(2, 5) {
+            match g.usize_in(0, 3) {
+                0 | 1 => {
+                    // decode burst: long enough to cross fold boundaries
+                    for step in 0..g.usize_in(1, 40) {
+                        if history.len() + 1 > budget {
+                            break;
+                        }
+                        let t = g.usize_in(32, 126) as i32;
+                        let lf = fast.decode(&[fid], &[t]).map_err(|e| e.to_string())?;
+                        let ln = naive.decode(&[nid], &[t]).map_err(|e| e.to_string())?;
+                        compare(&format!("op {op} decode {step}"), &lf[0], &ln[0])?;
+                        history.push(t);
+                    }
+                }
+                2 => {
+                    // extend the prompt mid-stream: chunked prefill on a
+                    // non-empty cache (page growth + chunk boundaries)
+                    let len = g.usize_in(1, 50);
+                    if history.len() + len > budget {
+                        continue;
+                    }
+                    let p = tokens(g, len);
+                    let lf = fast
+                        .prefill(&[fid], &[p.clone()])
+                        .map_err(|e| e.to_string())?;
+                    let ln = naive
+                        .prefill(&[nid], &[p.clone()])
+                        .map_err(|e| e.to_string())?;
+                    compare(&format!("op {op} extend"), &lf[0], &ln[0])?;
+                    history.extend(p);
+                }
+                _ => {
+                    // preemption-requeue: free the sequence and replay its
+                    // full history on a fresh one (what the scheduler does
+                    // after a page-budget collision) — the fast engine's
+                    // staged slots must invalidate, not serve stale bytes
+                    fast.free_seq(fid).map_err(|e| e.to_string())?;
+                    naive.free_seq(nid).map_err(|e| e.to_string())?;
+                    fid = fast.create_seq(&policy).map_err(|e| e.to_string())?;
+                    nid = naive.create_seq(&policy).map_err(|e| e.to_string())?;
+                    let lf = fast
+                        .prefill(&[fid], &[history.clone()])
+                        .map_err(|e| e.to_string())?;
+                    let ln = naive
+                        .prefill(&[nid], &[history.clone()])
+                        .map_err(|e| e.to_string())?;
+                    compare(&format!("op {op} requeue"), &lf[0], &ln[0])?;
+                }
+            }
+        }
+        fast.free_seq(fid).map_err(|e| e.to_string())?;
+        naive.free_seq(nid).map_err(|e| e.to_string())?;
+        Ok(())
+    });
+}
