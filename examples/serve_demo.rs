@@ -1,7 +1,13 @@
 //! Serving demo: boots the full stack (engine → coordinator → TCP server)
-//! in-process and exercises the typed v2 API: a burst of concurrent
-//! generates with mixed policies, a one-line batch submit, a multi-turn
-//! session (KV reuse across turns), policy listing and the metrics ops.
+//! in-process and exercises both protocol generations:
+//!
+//! * **v3 multiplexed** — ONE socket carrying many tagged requests at
+//!   once (out-of-order replies, an interleaved token stream, a
+//!   mid-flight `cancel`, a `deadline_ms` expiry), via [`MuxClient`].
+//! * **v2** — the classic one-line-in/one-line-out surface: concurrent
+//!   generates over separate sockets, a one-line batch submit, a
+//!   multi-turn session (KV reuse across turns), policy listing and the
+//!   metrics ops.
 //!
 //!   cargo run --release --example serve_demo [artifacts/small]
 
@@ -12,7 +18,7 @@ use asymkv::coordinator::{Coordinator, CoordinatorConfig};
 use asymkv::engine::Engine;
 use asymkv::quant::QuantPolicy;
 use asymkv::runtime::Runtime;
-use asymkv::server::{Client, Server};
+use asymkv::server::{Client, MuxClient, Server};
 use asymkv::util::rng::SplitMix;
 use asymkv::workload::tasks;
 
@@ -28,8 +34,72 @@ fn main() -> anyhow::Result<()> {
         let srv = server.clone();
         std::thread::spawn(move || srv.serve());
     }
-    println!("server on {addr} (typed v2 protocol + v1 compat; see docs/API.md)\n");
+    println!("server on {addr} (v3 multiplexed + v2 + v1 compat; see docs/API.md)\n");
 
+    // ---- v3: one socket, many tagged requests in flight at once ----
+    println!("== v3 multiplexed (one socket) ==");
+    let mux = MuxClient::connect(&addr)?;
+    // six concurrent generates submitted before reading a single reply
+    let pendings: Vec<_> = (0..6u64)
+        .map(|i| {
+            let ep = tasks::recall_episode(&mut SplitMix::new(900 + i), 10);
+            mux.submit(&ApiRequest::Generate(GenerateSpec {
+                prompt: String::from_utf8_lossy(&ep.prompt).into_owned(),
+                n_gen: 4 + i as usize,
+                ..Default::default()
+            }))
+        })
+        .collect::<anyhow::Result<_>>()?;
+    // plus a token stream, a doomed deadline, and a victim to cancel
+    let streamed = mux.submit(&ApiRequest::Generate(GenerateSpec {
+        prompt: "## AAB:1290 ## AAB:".into(),
+        n_gen: 6,
+        stream: true,
+        ..Default::default()
+    }))?;
+    let doomed = mux.submit(&ApiRequest::Generate(GenerateSpec {
+        prompt: "the ox runs. ".into(),
+        n_gen: 48,
+        deadline_ms: Some(1),
+        ..Default::default()
+    }))?;
+    let victim = mux.submit(&ApiRequest::Generate(GenerateSpec {
+        prompt: "the fox hides. ".into(),
+        n_gen: 64,
+        ..Default::default()
+    }))?;
+    let cancel_reply = mux.cancel(victim.tag)?.wait_done()?;
+    println!("  cancel tag {} -> {cancel_reply}", victim.tag);
+    print!("  stream tag {}:", streamed.tag);
+    loop {
+        let f = streamed.recv()?;
+        if f.get("done").as_bool() == Some(true) {
+            println!("  (done, {} tokens)", f.get("tokens").as_arr().map_or(0, |a| a.len()));
+            break;
+        }
+        print!(" {:?}", f.get("piece").as_str().unwrap_or("?"));
+    }
+    for p in &pendings {
+        let v = p.wait_done()?;
+        println!(
+            "  tag {} -> {} tokens (out-of-order ok)",
+            p.tag,
+            v.get("tokens").as_arr().map_or(0, |a| a.len())
+        );
+    }
+    println!(
+        "  deadline tag {} -> {}",
+        doomed.tag,
+        doomed.wait_done()?.get("error").get("code")
+    );
+    println!(
+        "  cancelled tag {} -> {}\n",
+        victim.tag,
+        victim.wait_done()?.get("error").get("code")
+    );
+
+    // ---- v2: the classic serialized surface ----
+    println!("== v2 (one socket per client, serialized) ==");
     // 8 concurrent clients, alternating policies
     let mut joins = Vec::new();
     for i in 0..8u64 {

@@ -1,0 +1,352 @@
+//! Single-connection serving throughput: **multiplexed** (v3 tagged
+//! concurrent requests) vs **serialized** (v2 one-line-in/one-line-out)
+//! submission over ONE socket — the measurement behind the v3 wire
+//! protocol's existence.
+//!
+//! Two parts:
+//!
+//! 1. **Pure-Rust transport harness** (runs everywhere, emits the
+//!    CI-asserted records): a loopback line server speaking the REAL
+//!    `asymkv::api` codec whose backend is a fixed per-request service
+//!    time — the stand-in for a batch-friendly engine, where concurrent
+//!    requests overlap their service exactly the way policy-homogeneous
+//!    decode batches do. The serialized client pays N × (service + rtt)
+//!    because each request must fully round-trip before the next line is
+//!    even sent; the multiplexed client submits all N tagged requests up
+//!    front on the same socket and pays ~service + N × frame overhead.
+//! 2. **End-to-end** (needs AOT artifacts; skips cleanly without them):
+//!    the real Server/Engine — N concurrent generates through
+//!    [`MuxClient`] vs the same N through the blocking [`Client`].
+//!
+//! Records: `server_mux_single_conn`, `server_serialized_single_conn`
+//! (+ `server_e2e_{mux,serialized}` with artifacts); CI's bench-smoke job
+//! asserts `server_mux_single_conn.config.ratio_mux_vs_serialized >= 2`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use asymkv::api::{
+    self, ApiRequest, ApiResponse, Frame, GenerateSpec, GenerationResult,
+    Proto,
+};
+use asymkv::server::{Client, MuxClient};
+use asymkv::util::bench::{self, fmt_duration, time_fn, JsonReport, Table};
+use asymkv::util::json::Value;
+
+/// Requests per measured run (one socket).
+const N_REQ: usize = 32;
+/// Simulated per-request service time for the transport harness. Large
+/// enough that per-request thread-spawn cost (the mock's, like the real
+/// server's, worker-per-request model) stays a small fraction of it.
+const SERVICE: Duration = Duration::from_millis(5);
+/// Layer count handed to the codec (no policies are sent; any value works).
+const N_LAYERS: usize = 4;
+
+fn fake_result(id: u64) -> GenerationResult {
+    GenerationResult {
+        id,
+        text: "ok".into(),
+        tokens: vec![111, 107],
+        ttft_s: 0.001,
+        total_s: 0.002,
+        error: None,
+    }
+}
+
+/// Loopback mock server: real codec, simulated engine. v3 generation
+/// lines get a worker thread each (service times overlap — the
+/// batch-friendly regime); v1/v2 lines are served inline on the reader
+/// thread (strict request→reply serialization, exactly like the real
+/// server). Exits when the process does.
+fn spawn_mock_server(service: Duration) -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            let Ok(stream) = stream else { break };
+            std::thread::spawn(move || mock_conn(stream, service));
+        }
+    });
+    addr
+}
+
+fn mock_conn(stream: TcpStream, service: Duration) {
+    stream.set_nodelay(true).ok();
+    let Ok(rstream) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(rstream);
+    let out = Arc::new(Mutex::new(stream));
+    let mut line = String::new();
+    let mut next_id = 1u64;
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) | Err(_) => return,
+            Ok(_) => {}
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let Ok(frame) = api::decode_frame(trimmed, N_LAYERS) else { continue };
+        let id = next_id;
+        next_id += 1;
+        match frame {
+            Frame { proto: Proto::V3, tag: Some(tag), req } => match req {
+                ApiRequest::Generate(_) => {
+                    // concurrent service: workers sleep in parallel
+                    let out = out.clone();
+                    std::thread::spawn(move || {
+                        std::thread::sleep(service);
+                        let v = api::encode_response_tagged(
+                            &ApiResponse::Generation(fake_result(id)),
+                            tag,
+                        );
+                        let _ =
+                            writeln!(out.lock().unwrap(), "{v}");
+                    });
+                }
+                _ => {
+                    let v = api::encode_response_tagged(&ApiResponse::Pong, tag);
+                    let _ = writeln!(out.lock().unwrap(), "{v}");
+                }
+            },
+            Frame { proto, req, .. } => {
+                // serialized service: the reader thread IS the pipeline
+                let v = match req {
+                    ApiRequest::Generate(_) => {
+                        std::thread::sleep(service);
+                        api::encode_response(
+                            &ApiResponse::Generation(fake_result(id)),
+                            proto,
+                        )
+                    }
+                    _ => api::encode_response(&ApiResponse::Pong, proto),
+                };
+                let _ = writeln!(out.lock().unwrap(), "{v}");
+            }
+        }
+    }
+}
+
+fn gen_spec(i: usize) -> GenerateSpec {
+    GenerateSpec {
+        prompt: format!("## REQ:{i} ## REQ:"),
+        n_gen: 4,
+        ..Default::default()
+    }
+}
+
+/// Serialized: one request fully round-trips before the next is sent.
+fn run_serialized(addr: &str, n: usize) {
+    let mut client = Client::connect(addr).expect("connect");
+    for i in 0..n {
+        let v = client
+            .send(&ApiRequest::Generate(gen_spec(i)))
+            .expect("serialized reply");
+        // v2 errors are objects, not strings — compare against Null so a
+        // failed request can never masquerade as throughput
+        assert_eq!(v.get("error"), &Value::Null, "{v}");
+    }
+}
+
+/// Multiplexed: all requests in flight at once on the same socket.
+fn run_mux(addr: &str, n: usize) {
+    let mux = MuxClient::connect(addr).expect("connect");
+    let pendings: Vec<_> = (0..n)
+        .map(|i| {
+            mux.submit(&ApiRequest::Generate(gen_spec(i))).expect("submit")
+        })
+        .collect();
+    for p in pendings {
+        let v = p.wait_done().expect("mux reply");
+        assert_eq!(v.get("error"), &Value::Null, "{v}");
+    }
+}
+
+fn main() {
+    let addr = spawn_mock_server(SERVICE);
+    let reps = bench::samples(10);
+    let warm = bench::warmup(2);
+
+    // approximate single-request wire traffic (request line + reply line)
+    let wire_bytes = {
+        let req = api::encode_request_tagged(
+            &ApiRequest::Generate(gen_spec(0)),
+            1,
+        )
+        .to_string()
+        .len();
+        let reply = api::encode_response_tagged(
+            &ApiResponse::Generation(fake_result(1)),
+            1,
+        )
+        .to_string()
+        .len();
+        (req + reply + 2) * N_REQ
+    };
+
+    let t_ser = time_fn(warm, reps, || run_serialized(&addr, N_REQ));
+    let t_mux = time_fn(warm, reps, || run_mux(&addr, N_REQ));
+    // min-over-samples: the structural ratio. Serialized wall time is
+    // bounded below by N × service no matter how lucky a sample gets,
+    // while descheduling stalls (thread-spawn storms on small CI boxes)
+    // only ever inflate samples — so min/min measures the architecture,
+    // not the box's scheduler noise.
+    let ratio = t_ser.min() / t_mux.min();
+    let rps_ser = N_REQ as f64 / t_ser.p50();
+    let rps_mux = N_REQ as f64 / t_mux.p50();
+
+    let mut t = Table::new(
+        "single-connection throughput: multiplexed (v3) vs serialized (v2)",
+        &["mode", "requests", "wall (p50)", "req/s", "vs serialized"],
+    );
+    t.row(vec![
+        "serialized (v2)".into(),
+        N_REQ.to_string(),
+        fmt_duration(t_ser.p50()),
+        format!("{rps_ser:.0}"),
+        "1.0x".into(),
+    ]);
+    t.row(vec![
+        "multiplexed (v3)".into(),
+        N_REQ.to_string(),
+        fmt_duration(t_mux.p50()),
+        format!("{rps_mux:.0}"),
+        format!("{ratio:.1}x"),
+    ]);
+
+    assert!(
+        ratio >= 2.0,
+        "multiplexed submission must be >= 2x serialized on one socket \
+         (got {ratio:.2}x: serialized min {:.4}s vs mux min {:.4}s)",
+        t_ser.min(),
+        t_mux.min()
+    );
+
+    let mut report = JsonReport::at_root("BENCH_kernels.json");
+    let cfg_common = |mode: &str| {
+        vec![
+            ("mode", Value::str_of(mode)),
+            ("requests", Value::num(N_REQ as f64)),
+            ("service_ms", Value::num(SERVICE.as_secs_f64() * 1e3)),
+            (
+                "note",
+                Value::str_of(
+                    "loopback transport harness: real api codec, \
+                     fixed-service backend (concurrent service = the \
+                     batch-friendly engine regime)",
+                ),
+            ),
+        ]
+    };
+    report.add(
+        "server_serialized_single_conn",
+        &t_ser,
+        wire_bytes,
+        Value::obj({
+            let mut c = cfg_common("serialized-v2");
+            c.push(("requests_per_s", Value::num(rps_ser)));
+            c
+        }),
+    );
+    report.add(
+        "server_mux_single_conn",
+        &t_mux,
+        wire_bytes,
+        Value::obj({
+            let mut c = cfg_common("multiplexed-v3");
+            c.push(("requests_per_s", Value::num(rps_mux)));
+            c.push(("ratio_mux_vs_serialized", Value::num(ratio)));
+            c.push(("ratio_basis", Value::str_of("min")));
+            c
+        }),
+    );
+
+    // ---- end-to-end over the real engine (artifact-gated) -------------
+    e2e(&mut t, &mut report);
+
+    t.emit("bench_server");
+    bench::note(
+        "bench_server",
+        &format!(
+            "\nOne socket, {N_REQ} requests, {}ms simulated service: \
+             serialized {} vs multiplexed {} p50 ({ratio:.1}x).",
+            SERVICE.as_millis(),
+            fmt_duration(t_ser.p50()),
+            fmt_duration(t_mux.p50()),
+        ),
+    );
+    report.write().expect("write BENCH_kernels.json");
+    println!("wrote BENCH_kernels.json (server_* records)");
+}
+
+/// Real Server/Engine A/B when artifacts are present: the multiplexed
+/// client keeps the continuous-batching scheduler's decode batches full
+/// from ONE socket; the serialized client starves them.
+fn e2e(t: &mut Table, report: &mut JsonReport) {
+    use asymkv::coordinator::{Coordinator, CoordinatorConfig};
+    use asymkv::engine::Engine;
+    use asymkv::runtime::Runtime;
+    use asymkv::server::Server;
+
+    let dir =
+        std::env::var("ASYMKV_ARTIFACTS").unwrap_or("artifacts/small".into());
+    let rt = match Runtime::load(&dir) {
+        Ok(rt) => Arc::new(rt),
+        Err(e) => {
+            println!("[bench_server] artifacts unavailable ({e}); skipping e2e A/B");
+            return;
+        }
+    };
+    let engine = match Engine::new(rt, 1 << 30) {
+        Ok(e) => Arc::new(e),
+        Err(e) => {
+            println!("[bench_server] engine unavailable ({e}); skipping e2e A/B");
+            return;
+        }
+    };
+    let coord = Coordinator::start(engine, CoordinatorConfig::default());
+    let server = Arc::new(Server::bind(coord, "127.0.0.1:0").unwrap());
+    let addr = server.local_addr();
+    {
+        let srv = server.clone();
+        std::thread::spawn(move || srv.serve());
+    }
+    let n = 8usize;
+    let reps = bench::samples(5);
+    let warm = bench::warmup(1);
+    let t_ser = time_fn(warm, reps, || run_serialized(&addr, n));
+    let t_mux = time_fn(warm, reps, || run_mux(&addr, n));
+    let ratio = t_ser.min() / t_mux.min();
+    t.row(vec![
+        "e2e serialized".into(),
+        n.to_string(),
+        fmt_duration(t_ser.p50()),
+        format!("{:.0}", n as f64 / t_ser.mean()),
+        "1.0x".into(),
+    ]);
+    t.row(vec![
+        "e2e multiplexed".into(),
+        n.to_string(),
+        fmt_duration(t_mux.p50()),
+        format!("{:.0}", n as f64 / t_mux.mean()),
+        format!("{ratio:.1}x"),
+    ]);
+    let cfg = |mode: &str, extra: Option<f64>| {
+        let mut c = vec![
+            ("mode", Value::str_of(mode)),
+            ("requests", Value::num(n as f64)),
+            ("n_gen", Value::num(4.0)),
+            ("artifacts", Value::str_of(dir.clone())),
+        ];
+        if let Some(r) = extra {
+            c.push(("ratio_mux_vs_serialized", Value::num(r)));
+        }
+        Value::obj(c)
+    };
+    report.add("server_e2e_serialized", &t_ser, 0, cfg("serialized-v2", None));
+    report.add("server_e2e_mux", &t_mux, 0, cfg("multiplexed-v3", Some(ratio)));
+    server.request_stop();
+}

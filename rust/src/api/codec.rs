@@ -1,12 +1,19 @@
 //! Wire codecs for the typed protocol: hand-rolled `from_value`/`to_value`
 //! over `util::json` (the offline vendor set has no serde).
 //!
-//! Two framings share the type layer:
+//! Three framings share the type layer:
 //!
+//! * **v3** (`"v":3`) — the multiplexed framing: strict like v2, plus a
+//!   required client-assigned `tag` echoed on every reply frame, so many
+//!   requests can be in flight per connection with out-of-order replies.
+//!   Adds the `cancel` op, per-request `deadline_ms`, and streaming on
+//!   every generation op (`generate`, `session_append`, `batch_generate`
+//!   items). Every v3 line that COMPLETES a request carries
+//!   `"done":true`; stream token frames don't.
 //! * **v2** (`"v":2` on every line) — strict: `op` is required, unknown
 //!   fields are rejected, numbers must be integral where an integer is
 //!   expected, and every failure carries a stable [`ErrorCode`]. All ops
-//!   are available.
+//!   except `cancel` are available; one line in, one reply out, in order.
 //! * **v1** (no `v` field, or `"v":1`) — the legacy lenient framing kept as
 //!   a compat shim: a missing `op` falls through to `generate`, unknown
 //!   fields are ignored, and errors flatten to `{"error":"<message>"}`
@@ -35,37 +42,58 @@ use super::types::{
 pub enum Proto {
     V1,
     V2,
+    V3,
 }
 
 /// Wire protocol version advertised by v2 lines.
 pub const PROTOCOL_VERSION: u64 = 2;
+/// The multiplexed framing's version number.
+pub const PROTOCOL_VERSION_V3: u64 = 3;
 
 // ---------------------------------------------------------------------------
 // request decoding
 // ---------------------------------------------------------------------------
 
 /// A rejected line: the framing the error reply must use, the typed error,
-/// and whether the line asked for streaming (so the transport can
-/// `"done"`-tag the error reply and streaming clients reading until the
-/// terminator never hang).
+/// the tag to echo (when the v3 line's tag itself decoded), and whether
+/// the line asked for streaming (so the transport can `"done"`-tag the
+/// error reply and streaming clients reading until the terminator never
+/// hang).
 #[derive(Debug, Clone, PartialEq)]
 pub struct DecodeError {
     pub proto: Proto,
+    pub tag: Option<u64>,
     pub error: ApiError,
     pub wants_stream: bool,
 }
 
-/// Decode one protocol line into a typed request. Errors carry the framing
-/// the reply must use (v1 lines get v1-shaped errors).
+/// One decoded protocol line: the framing, the v3 tag (None on v1/v2
+/// lines), and the typed request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    pub proto: Proto,
+    pub tag: Option<u64>,
+    pub req: ApiRequest,
+}
+
+/// Decode one protocol line into a typed request, discarding the v3 tag.
+/// Transports that multiplex must use [`decode_frame`] instead.
 pub fn decode_request(
     line: &str,
     n_layers: usize,
 ) -> Result<(Proto, ApiRequest), DecodeError> {
+    decode_frame(line, n_layers).map(|f| (f.proto, f.req))
+}
+
+/// Decode one protocol line into a typed [`Frame`]. Errors carry the
+/// framing (and, for v3, the tag when it parsed) the reply must use.
+pub fn decode_frame(line: &str, n_layers: usize) -> Result<Frame, DecodeError> {
     let msg = match json::parse(line) {
         Ok(m) => m,
         Err(e) => {
             return Err(DecodeError {
                 proto: Proto::V1,
+                tag: None,
                 error: ApiError::bad_json(format!("bad json: {e}")),
                 wants_stream: false,
             })
@@ -79,24 +107,52 @@ pub fn decode_request(
         Value::Null => Proto::V1,
         Value::Num(f) if *f == 1.0 => Proto::V1,
         Value::Num(f) if *f == 2.0 => Proto::V2,
+        Value::Num(f) if *f == 3.0 => Proto::V3,
         other => {
             return Err(DecodeError {
                 proto: Proto::V2,
+                tag: None,
                 error: ApiError::new(
                     ErrorCode::BadVersion,
-                    format!("unsupported protocol version {other} (this server speaks v1 and v2)"),
+                    format!("unsupported protocol version {other} (this server speaks v1, v2 and v3)"),
                 ),
                 wants_stream,
             })
         }
     };
+    // v3 requires a client-assigned tag on every line; it is decoded
+    // FIRST so even op/field errors can echo it back for demultiplexing
+    let tag = if proto == Proto::V3 {
+        let o = msg.as_obj().ok_or_else(|| DecodeError {
+            proto,
+            tag: None,
+            error: ApiError::bad_json("protocol line must be a JSON object"),
+            wants_stream,
+        })?;
+        match uint_field(o, "tag") {
+            Ok(Some(t)) => Some(t),
+            Ok(None) => {
+                return Err(DecodeError {
+                    proto,
+                    tag: None,
+                    error: ApiError::missing_field("tag"),
+                    wants_stream,
+                })
+            }
+            Err(error) => {
+                return Err(DecodeError { proto, tag: None, error, wants_stream })
+            }
+        }
+    } else {
+        None
+    };
     let req = match proto {
         Proto::V1 => decode_v1(&msg, n_layers),
-        Proto::V2 => decode_v2(&msg, n_layers),
+        Proto::V2 | Proto::V3 => decode_strict(&msg, n_layers, proto),
     };
     match req {
-        Ok(r) => Ok((proto, r)),
-        Err(error) => Err(DecodeError { proto, error, wants_stream }),
+        Ok(req) => Ok(Frame { proto, tag, req }),
+        Err(error) => Err(DecodeError { proto, tag, error, wants_stream }),
     }
 }
 
@@ -139,21 +195,30 @@ fn decode_v1(msg: &Value, n_layers: usize) -> Result<ApiRequest, ApiError> {
                 stop,
                 priority: msg.get("priority").as_i64().unwrap_or(0) as i32,
                 stream: msg.get("stream").as_bool().unwrap_or(false),
+                deadline_ms: None, // v3-only field; v1 has no deadlines
             }))
         }
         other => Err(ApiError::unknown_op(other)),
     }
 }
 
-/// Strict v2 decode: required `op`, typed fields, no unknown fields.
-fn decode_v2(msg: &Value, n_layers: usize) -> Result<ApiRequest, ApiError> {
+/// Strict decode shared by v2 and v3: required `op`, typed fields, no
+/// unknown fields. v3 additionally allows `tag` everywhere, `deadline_ms`
+/// on the generation ops, `stream` on every generation op (v2: `generate`
+/// only), and the `cancel` op.
+fn decode_strict(
+    msg: &Value,
+    n_layers: usize,
+    proto: Proto,
+) -> Result<ApiRequest, ApiError> {
+    let v3 = proto == Proto::V3;
     let o = msg
         .as_obj()
         .ok_or_else(|| ApiError::bad_json("protocol line must be a JSON object"))?;
     let op = str_field(o, "op")?.ok_or_else(|| ApiError::missing_field("op"))?;
     match op {
         "ping" | "stats" | "pool" => {
-            check_fields(o, &["v", "op"])?;
+            check_fields(o, &["v", "op"], v3, false)?;
             Ok(match op {
                 "ping" => ApiRequest::Ping,
                 "stats" => ApiRequest::Stats,
@@ -161,17 +226,17 @@ fn decode_v2(msg: &Value, n_layers: usize) -> Result<ApiRequest, ApiError> {
             })
         }
         "policies" => {
-            check_fields(o, &["v", "op", "policy"])?;
+            check_fields(o, &["v", "op", "policy"], v3, false)?;
             Ok(ApiRequest::Policies {
                 policy: str_field(o, "policy")?.map(str::to_string),
             })
         }
         "generate" => {
-            check_fields(o, &GENERATE_FIELDS)?;
-            Ok(ApiRequest::Generate(decode_spec(o, n_layers, true, true)?))
+            check_fields(o, &GENERATE_FIELDS, v3, v3)?;
+            Ok(ApiRequest::Generate(decode_spec(o, n_layers, true, true, v3)?))
         }
         "batch_generate" => {
-            check_fields(o, &["v", "op", "items"])?;
+            check_fields(o, &["v", "op", "items"], v3, false)?;
             let items = match o.get("items") {
                 Some(Value::Arr(a)) if !a.is_empty() => a,
                 Some(Value::Arr(_)) => {
@@ -188,17 +253,19 @@ fn decode_v2(msg: &Value, n_layers: usize) -> Result<ApiRequest, ApiError> {
                 let io = item.as_obj().ok_or_else(|| {
                     ApiError::bad_field("items", "entries must be objects")
                 })?;
-                check_fields(io, &BATCH_ITEM_FIELDS).map_err(|e| {
+                check_fields(io, &BATCH_ITEM_FIELDS, false, v3).map_err(|e| {
                     ApiError::new(e.code, format!("items[{i}]: {}", e.message))
                 })?;
-                specs.push(decode_spec(io, n_layers, true, false).map_err(|e| {
+                // v3 items may stream: per-item token frames carry the
+                // batch line's tag plus the item index
+                specs.push(decode_spec(io, n_layers, true, v3, v3).map_err(|e| {
                     ApiError::new(e.code, format!("items[{i}]: {}", e.message))
                 })?);
             }
             Ok(ApiRequest::BatchGenerate { items: specs })
         }
         "session_open" => {
-            check_fields(o, &["v", "op", "policy"])?;
+            check_fields(o, &["v", "op", "policy"], v3, false)?;
             let policy = match str_field(o, "policy")? {
                 Some(s) => Some(
                     QuantPolicy::parse(s, n_layers)
@@ -209,20 +276,32 @@ fn decode_v2(msg: &Value, n_layers: usize) -> Result<ApiRequest, ApiError> {
             Ok(ApiRequest::SessionOpen { policy })
         }
         "session_append" => {
-            check_fields(o, &SESSION_APPEND_FIELDS)?;
+            check_fields(o, &SESSION_APPEND_FIELDS, v3, v3)?;
             let session = uint_field(o, "session")?
                 .ok_or_else(|| ApiError::missing_field("session"))?;
             Ok(ApiRequest::SessionAppend {
                 session,
-                spec: decode_spec(o, n_layers, false, false)?,
+                // v3 turns may stream (tag-correlated frames make the
+                // multi-line reply unambiguous on a multiplexed socket)
+                spec: decode_spec(o, n_layers, false, v3, v3)?,
             })
         }
         "session_close" => {
-            check_fields(o, &["v", "op", "session"])?;
+            check_fields(o, &["v", "op", "session"], v3, false)?;
             let session = uint_field(o, "session")?
                 .ok_or_else(|| ApiError::missing_field("session"))?;
             Ok(ApiRequest::SessionClose { session })
         }
+        "cancel" if v3 => {
+            check_fields(o, &["v", "op", "target"], v3, false)?;
+            let target = uint_field(o, "target")?
+                .ok_or_else(|| ApiError::missing_field("target"))?;
+            Ok(ApiRequest::Cancel { target })
+        }
+        "cancel" => Err(ApiError::new(
+            ErrorCode::UnknownOp,
+            "'cancel' requires the v3 framing (tagged requests)",
+        )),
         other => Err(ApiError::unknown_op(other)),
     }
 }
@@ -249,6 +328,7 @@ fn decode_spec(
     n_layers: usize,
     allow_policy: bool,
     allow_stream: bool,
+    allow_deadline: bool,
 ) -> Result<GenerateSpec, ApiError> {
     let prompt = str_field(o, "prompt")?
         .ok_or_else(|| ApiError::missing_field("prompt"))?;
@@ -285,9 +365,18 @@ fn decode_spec(
     if stream && !allow_stream {
         return Err(ApiError::bad_field(
             "stream",
-            "only supported on 'generate'",
+            "only supported on 'generate' (v3 streams every generation op)",
         ));
     }
+    let deadline_ms = if allow_deadline {
+        let d = uint_field(o, "deadline_ms")?;
+        if d == Some(0) {
+            return Err(ApiError::bad_field("deadline_ms", "must be >= 1"));
+        }
+        d
+    } else {
+        None // v2: check_fields already rejected the field as unknown
+    };
     Ok(GenerateSpec {
         prompt: prompt.to_string(),
         n_gen,
@@ -299,17 +388,26 @@ fn decode_spec(
         stop,
         priority: int_field(o, "priority")?.unwrap_or(0) as i32,
         stream,
+        deadline_ms,
     })
 }
 
 // --- strict field accessors (missing = Ok(None); wrong type = BadField) ---
 
+/// Strict unknown-field check. `tag` additionally allows the v3 envelope
+/// tag (top-level lines only — batch items carry no tag) and `deadline`
+/// the v3 per-request deadline.
 fn check_fields(
     o: &BTreeMap<String, Value>,
     allowed: &[&str],
+    tag: bool,
+    deadline: bool,
 ) -> Result<(), ApiError> {
     for k in o.keys() {
-        if !allowed.contains(&k.as_str()) {
+        let known = allowed.contains(&k.as_str())
+            || (tag && k == "tag")
+            || (deadline && k == "deadline_ms");
+        if !known {
             return Err(ApiError::bad_field(k, "unknown field"));
         }
     }
@@ -365,10 +463,29 @@ fn bool_field(o: &BTreeMap<String, Value>, key: &str) -> Result<Option<bool>, Ap
 // request encoding (typed clients emit canonical v2 lines)
 // ---------------------------------------------------------------------------
 
-/// Encode a typed request as a canonical v2 wire line.
+/// Encode a typed request as a canonical v2 wire line. `Cancel` is
+/// v3-only and encodes as a v3 line with tag 0 — multiplexing clients
+/// use [`encode_request_tagged`] with a real tag instead.
 pub fn encode_request(req: &ApiRequest) -> Value {
+    if matches!(req, ApiRequest::Cancel { .. }) {
+        return encode_request_tagged(req, 0);
+    }
+    encode_request_with(req, false)
+}
+
+/// Encode a typed request as a canonical v3 wire line carrying `tag`.
+pub fn encode_request_tagged(req: &ApiRequest, tag: u64) -> Value {
+    let mut v = encode_request_with(req, true);
+    if let Value::Obj(o) = &mut v {
+        o.insert("tag".to_string(), Value::num(tag as f64));
+    }
+    v
+}
+
+fn encode_request_with(req: &ApiRequest, v3: bool) -> Value {
+    let ver = if v3 { PROTOCOL_VERSION_V3 } else { PROTOCOL_VERSION };
     let mut fields: Vec<(&str, Value)> = vec![
-        ("v", Value::num(PROTOCOL_VERSION as f64)),
+        ("v", Value::num(ver as f64)),
         ("op", Value::str_of(req.op())),
     ];
     match req {
@@ -379,14 +496,15 @@ pub fn encode_request(req: &ApiRequest) -> Value {
             }
         }
         ApiRequest::Generate(spec) => {
-            push_spec_fields(&mut fields, spec, true, true)
+            push_spec_fields(&mut fields, spec, true, true, v3)
         }
         ApiRequest::BatchGenerate { items } => {
             let arr = items
                 .iter()
                 .map(|spec| {
                     let mut f: Vec<(&str, Value)> = Vec::new();
-                    push_spec_fields(&mut f, spec, true, false);
+                    // item streaming + deadlines exist only on v3
+                    push_spec_fields(&mut f, spec, true, v3, v3);
                     Value::obj(f)
                 })
                 .collect();
@@ -399,11 +517,15 @@ pub fn encode_request(req: &ApiRequest) -> Value {
         }
         ApiRequest::SessionAppend { session, spec } => {
             fields.push(("session", Value::num(*session as f64)));
-            // policy/stream are rejected on appends — never emit them
-            push_spec_fields(&mut fields, spec, false, false);
+            // policy is fixed at open — never emit it; stream/deadline
+            // only exist on v3 appends
+            push_spec_fields(&mut fields, spec, false, v3, v3);
         }
         ApiRequest::SessionClose { session } => {
             fields.push(("session", Value::num(*session as f64)));
+        }
+        ApiRequest::Cancel { target } => {
+            fields.push(("target", Value::num(*target as f64)));
         }
     }
     Value::obj(fields)
@@ -414,6 +536,7 @@ fn push_spec_fields(
     spec: &GenerateSpec,
     with_policy: bool,
     with_stream: bool,
+    with_deadline: bool,
 ) {
     fields.push(("prompt", Value::str_of(spec.prompt.clone())));
     fields.push(("n_gen", Value::num(spec.n_gen as f64)));
@@ -437,6 +560,11 @@ fn push_spec_fields(
     }
     if with_stream && spec.stream {
         fields.push(("stream", Value::Bool(true)));
+    }
+    if with_deadline {
+        if let Some(ms) = spec.deadline_ms {
+            fields.push(("deadline_ms", Value::num(ms as f64)));
+        }
     }
 }
 
@@ -470,16 +598,58 @@ pub fn encode_response(resp: &ApiResponse, proto: Proto) -> Value {
             ("pos", Value::num(*pos as f64)),
             ("closed", Value::Bool(true)),
         ]),
+        ApiResponse::CancelResult { target, cancelled } => Value::obj(vec![
+            ("target", Value::num(*target as f64)),
+            ("cancelled", Value::Bool(*cancelled)),
+        ]),
         ApiResponse::Error(e) => Value::obj(vec![("error", error_value(e, proto))]),
     };
     with_version(v, proto)
 }
 
+/// Encode a v3 reply frame: the response body plus `"v":3`, the echoed
+/// `tag`, and `"done":true` (every v3 line that completes a request is
+/// done-tagged so multiplexing clients can demux without op knowledge).
+pub fn encode_response_tagged(resp: &ApiResponse, tag: u64) -> Value {
+    let mut v = encode_response(resp, Proto::V3);
+    if let Value::Obj(o) = &mut v {
+        o.insert("tag".to_string(), Value::num(tag as f64));
+        o.insert("done".to_string(), Value::Bool(true));
+    }
+    v
+}
+
+/// One streamed token line. v1/v2 (`tag` None): the historical
+/// `{"token":…,"piece":…}` shape, byte-compatible. v3: adds `"v":3` and
+/// the request's `tag` (plus the batch `item` index when streaming a
+/// `batch_generate` item), and never `done`.
+pub fn stream_frame(
+    tag: Option<u64>,
+    item: Option<usize>,
+    token: i32,
+    piece: &str,
+) -> Value {
+    let mut fields: Vec<(&str, Value)> = Vec::with_capacity(5);
+    if let Some(t) = tag {
+        fields.push(("v", Value::num(PROTOCOL_VERSION_V3 as f64)));
+        fields.push(("tag", Value::num(t as f64)));
+    }
+    if let Some(i) = item {
+        fields.push(("item", Value::num(i as f64)));
+    }
+    fields.push(("token", Value::num(token as f64)));
+    fields.push(("piece", Value::str_of(piece)));
+    Value::obj(fields)
+}
+
 fn with_version(mut v: Value, proto: Proto) -> Value {
-    if proto == Proto::V2 {
-        if let Value::Obj(o) = &mut v {
-            o.insert("v".to_string(), Value::num(PROTOCOL_VERSION as f64));
-        }
+    let ver = match proto {
+        Proto::V1 => return v,
+        Proto::V2 => PROTOCOL_VERSION,
+        Proto::V3 => PROTOCOL_VERSION_V3,
+    };
+    if let Value::Obj(o) = &mut v {
+        o.insert("v".to_string(), Value::num(ver as f64));
     }
     v
 }
@@ -488,7 +658,7 @@ fn error_value(e: &ApiError, proto: Proto) -> Value {
     match proto {
         // legacy framing: errors are plain strings
         Proto::V1 => Value::str_of(e.message.clone()),
-        Proto::V2 => Value::obj(vec![
+        Proto::V2 | Proto::V3 => Value::obj(vec![
             ("code", Value::str_of(e.code.as_str())),
             ("message", Value::str_of(e.message.clone())),
         ]),
@@ -643,7 +813,7 @@ mod tests {
         assert_eq!(e.code, ErrorCode::BadField);
         let (_, e) = decode_err(r#"{"v":2}"#);
         assert_eq!(e.code, ErrorCode::MissingField);
-        let (_, e) = decode_err(r#"{"v":3,"op":"ping"}"#);
+        let (_, e) = decode_err(r#"{"v":4,"op":"ping"}"#);
         assert_eq!(e.code, ErrorCode::BadVersion);
         let (_, e) = decode_err("not json at all");
         assert_eq!(e.code, ErrorCode::BadJson);
@@ -697,6 +867,185 @@ mod tests {
     }
 
     #[test]
+    fn v2_rejects_v3_only_surface() {
+        // tag / deadline_ms / cancel / stream-on-append exist only on v3
+        let (_, e) = decode_err(r#"{"v":2,"op":"ping","tag":1}"#);
+        assert_eq!(e.code, ErrorCode::BadField);
+        let (_, e) =
+            decode_err(r#"{"v":2,"op":"generate","prompt":"x","deadline_ms":50}"#);
+        assert_eq!(e.code, ErrorCode::BadField);
+        let (_, e) = decode_err(r#"{"v":2,"op":"cancel","target":1}"#);
+        assert_eq!(e.code, ErrorCode::UnknownOp);
+        let (_, e) = decode_err(
+            r#"{"v":2,"op":"session_append","session":1,"prompt":"x","stream":true}"#,
+        );
+        assert_eq!(e.code, ErrorCode::BadField);
+    }
+
+    #[test]
+    fn v3_tag_required_and_echoed_on_errors() {
+        // tag missing → missing_field, no tag to echo
+        let de = decode_frame(r#"{"v":3,"op":"ping"}"#, N).unwrap_err();
+        assert_eq!(de.error.code, ErrorCode::MissingField);
+        assert_eq!(de.tag, None);
+        // tag malformed → bad_field
+        let de = decode_frame(r#"{"v":3,"op":"ping","tag":1.5}"#, N).unwrap_err();
+        assert_eq!(de.error.code, ErrorCode::BadField);
+        // op errors still carry the decoded tag for demultiplexing
+        let de = decode_frame(r#"{"v":3,"tag":9,"op":"frobnicate"}"#, N).unwrap_err();
+        assert_eq!(de.error.code, ErrorCode::UnknownOp);
+        assert_eq!(de.tag, Some(9));
+        assert_eq!(de.proto, Proto::V3);
+    }
+
+    #[test]
+    fn v3_decodes_tagged_ops_with_deadlines_and_streams() {
+        let f = decode_frame(
+            r#"{"v":3,"tag":7,"op":"generate","prompt":"x","n_gen":2,
+               "deadline_ms":250,"stream":true}"#,
+            N,
+        )
+        .unwrap();
+        assert_eq!((f.proto, f.tag), (Proto::V3, Some(7)));
+        match f.req {
+            ApiRequest::Generate(spec) => {
+                assert_eq!(spec.deadline_ms, Some(250));
+                assert!(spec.stream);
+            }
+            other => panic!("{other:?}"),
+        }
+        // zero deadline is rejected
+        let de = decode_frame(
+            r#"{"v":3,"tag":1,"op":"generate","prompt":"x","deadline_ms":0}"#,
+            N,
+        )
+        .unwrap_err();
+        assert_eq!(de.error.code, ErrorCode::BadField);
+        // session_append may stream on v3
+        let f = decode_frame(
+            r#"{"v":3,"tag":2,"op":"session_append","session":4,"prompt":"x",
+               "stream":true,"deadline_ms":100}"#,
+            N,
+        )
+        .unwrap();
+        match f.req {
+            ApiRequest::SessionAppend { session: 4, spec } => {
+                assert!(spec.stream);
+                assert_eq!(spec.deadline_ms, Some(100));
+            }
+            other => panic!("{other:?}"),
+        }
+        // batch items may stream and carry per-item deadlines on v3
+        let f = decode_frame(
+            r#"{"v":3,"tag":3,"op":"batch_generate","items":[
+                {"prompt":"a","stream":true,"deadline_ms":80},
+                {"prompt":"b"}]}"#,
+            N,
+        )
+        .unwrap();
+        match f.req {
+            ApiRequest::BatchGenerate { items } => {
+                assert!(items[0].stream);
+                assert_eq!(items[0].deadline_ms, Some(80));
+                assert!(!items[1].stream);
+            }
+            other => panic!("{other:?}"),
+        }
+        // cancel
+        let f = decode_frame(r#"{"v":3,"tag":8,"op":"cancel","target":5}"#, N)
+            .unwrap();
+        assert_eq!(f.req, ApiRequest::Cancel { target: 5 });
+        // ...but a batch ITEM must not carry a tag (envelope field only)
+        let de = decode_frame(
+            r#"{"v":3,"tag":3,"op":"batch_generate","items":[{"prompt":"a","tag":4}]}"#,
+            N,
+        )
+        .unwrap_err();
+        assert_eq!(de.error.code, ErrorCode::BadField);
+    }
+
+    #[test]
+    fn v3_encode_decode_roundtrip() {
+        let reqs = vec![
+            ApiRequest::Ping,
+            ApiRequest::Generate(GenerateSpec {
+                prompt: "hello".into(),
+                n_gen: 8,
+                stream: true,
+                deadline_ms: Some(500),
+                ..Default::default()
+            }),
+            ApiRequest::BatchGenerate {
+                items: vec![
+                    GenerateSpec {
+                        prompt: "a".into(),
+                        stream: true,
+                        deadline_ms: Some(80),
+                        ..Default::default()
+                    },
+                    GenerateSpec { prompt: "b".into(), ..Default::default() },
+                ],
+            },
+            ApiRequest::SessionAppend {
+                session: 42,
+                spec: GenerateSpec {
+                    prompt: "turn".into(),
+                    stream: true,
+                    ..Default::default()
+                },
+            },
+            ApiRequest::Cancel { target: 17 },
+        ];
+        for (i, req) in reqs.into_iter().enumerate() {
+            let tag = 100 + i as u64;
+            let wire = encode_request_tagged(&req, tag).to_string();
+            let f = decode_frame(&wire, N)
+                .unwrap_or_else(|de| panic!("{wire}: {}", de.error));
+            assert_eq!(f.proto, Proto::V3, "{wire}");
+            assert_eq!(f.tag, Some(tag), "{wire}");
+            assert_eq!(f.req, req, "{wire}");
+        }
+    }
+
+    #[test]
+    fn v3_reply_framing_tagged_and_done() {
+        let g = GenerationResult {
+            id: 3,
+            text: "ab".into(),
+            tokens: vec![97, 98],
+            ttft_s: 0.1,
+            total_s: 0.2,
+            error: None,
+        };
+        let v = encode_response_tagged(&ApiResponse::Generation(g), 42);
+        assert_eq!(v.get("v").as_i64(), Some(3));
+        assert_eq!(v.get("tag").as_i64(), Some(42));
+        assert_eq!(v.get("done").as_bool(), Some(true));
+        // typed abort errors
+        let e = ApiError::new(ErrorCode::Cancelled, "request cancelled");
+        let v = encode_response_tagged(&ApiResponse::Error(e), 7);
+        assert_eq!(v.get("error").get("code").as_str(), Some("cancelled"));
+        assert_eq!(v.get("done").as_bool(), Some(true));
+        // cancel result
+        let v = encode_response_tagged(
+            &ApiResponse::CancelResult { target: 5, cancelled: true },
+            8,
+        );
+        assert_eq!(v.get("target").as_i64(), Some(5));
+        assert_eq!(v.get("cancelled").as_bool(), Some(true));
+        // stream frames: v2 shape unchanged, v3 shape tagged, no done
+        let f2 = stream_frame(None, None, 65, "A");
+        assert_eq!(f2.get("token").as_i64(), Some(65));
+        assert!(f2.get("v").as_f64().is_none());
+        assert!(f2.get("tag").as_f64().is_none());
+        let f3 = stream_frame(Some(4), Some(1), 66, "B");
+        assert_eq!(f3.get("v").as_i64(), Some(3));
+        assert_eq!(f3.get("tag").as_i64(), Some(4));
+        assert_eq!(f3.get("item").as_i64(), Some(1));
+        assert!(f3.get("done").as_bool().is_none());
+    }
+
+    #[test]
     fn encode_decode_roundtrip() {
         let reqs = vec![
             ApiRequest::Ping,
@@ -711,6 +1060,7 @@ mod tests {
                 stop: Some(". ".into()),
                 priority: -2,
                 stream: true,
+                deadline_ms: None,
             }),
             ApiRequest::BatchGenerate {
                 items: vec![

@@ -34,6 +34,14 @@ pub enum ErrorCode {
     SessionBusy,
     /// A server-side capacity limit (session table, cache pool) was hit.
     Capacity,
+    /// The request was cancelled (`cancel` op, or the connection dropped
+    /// with the request still in flight).
+    Cancelled,
+    /// The request's `deadline_ms` expired before it completed.
+    DeadlineExceeded,
+    /// The connection already has the maximum number of tagged requests
+    /// in flight (v3 multiplexing cap).
+    TooManyInflight,
     /// The engine/coordinator failed while executing the request.
     Engine,
     /// Anything that should not happen.
@@ -55,6 +63,9 @@ impl ErrorCode {
             ErrorCode::UnknownSession => "unknown_session",
             ErrorCode::SessionBusy => "session_busy",
             ErrorCode::Capacity => "capacity",
+            ErrorCode::Cancelled => "cancelled",
+            ErrorCode::DeadlineExceeded => "deadline_exceeded",
+            ErrorCode::TooManyInflight => "too_many_inflight",
             ErrorCode::Engine => "engine",
             ErrorCode::Internal => "internal",
         }
@@ -112,6 +123,13 @@ impl ApiError {
 
     pub fn engine(message: impl Into<String>) -> Self {
         Self::new(ErrorCode::Engine, message)
+    }
+
+    pub fn too_many_inflight(max: usize) -> Self {
+        Self::new(
+            ErrorCode::TooManyInflight,
+            format!("connection already has {max} requests in flight"),
+        )
     }
 }
 

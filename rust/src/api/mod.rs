@@ -8,8 +8,10 @@
 //! * [`error`] — the [`ApiError`] taxonomy with stable [`ErrorCode`]s
 //!   (unknown op, missing prompt, bad policy, … are distinct codes, never
 //!   silent defaults).
-//! * [`codec`] — strict v2 decode/encode plus the lenient v1 compat shim;
-//!   hand-rolled over `util::json` (no serde in the vendor set).
+//! * [`codec`] — the multiplexed v3 framing (tagged concurrent requests,
+//!   `cancel`, `deadline_ms`, universal streaming), the strict v2
+//!   decode/encode, and the lenient v1 compat shim; hand-rolled over
+//!   `util::json` (no serde in the vendor set).
 //! * [`session`] — multi-turn sessions holding a pinned `SeqCache` across
 //!   requests (KV reuse instead of re-prefill, with idle eviction).
 //!
@@ -22,11 +24,12 @@ pub mod session;
 pub mod types;
 
 pub use codec::{
-    decode_request, encode_request, encode_response, DecodeError, Proto,
-    PROTOCOL_VERSION,
+    decode_frame, decode_request, encode_request, encode_request_tagged,
+    encode_response, encode_response_tagged, stream_frame, DecodeError, Frame,
+    Proto, PROTOCOL_VERSION, PROTOCOL_VERSION_V3,
 };
 pub use error::{ApiError, ErrorCode};
-pub use session::{SessionConfig, SessionManager};
+pub use session::{SessionConfig, SessionManager, TurnOpts};
 pub use types::{
     ApiRequest, ApiResponse, GenerateSpec, GenerationResult, PolicyInfo,
     PolicyReport, PoolReport, SessionTurn,

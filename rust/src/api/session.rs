@@ -6,23 +6,36 @@
 //! A session owns one pinned pool sequence for its whole life. Each
 //! `session_append` submits a normal coordinator request that *reuses* that
 //! sequence (`Request::session_seq`), so turns batch with ordinary traffic
-//! under the policy-homogeneous scheduler. Idle sessions are evicted
-//! lazily — the server sweeps the table on EVERY request, session or not —
-//! so an abandoned conversation cannot pin cache budget forever as long as
-//! any traffic flows. A failed turn evicts its session: the retained KV
-//! state is indeterminate after a mid-turn engine error, and a retry
-//! against it would condition later turns on duplicated history.
+//! under the policy-homogeneous scheduler. Idle sessions are evicted by
+//! the server's housekeeping tick (a quiet server still sweeps; in-process
+//! users of the manager call [`SessionManager::sweep_idle`] on their own
+//! cadence). A failed turn evicts its session: the retained KV state is
+//! indeterminate after a mid-turn engine error, and a retry against it
+//! would condition later turns on duplicated history. Cancelled and
+//! deadline-expired turns are failed turns too — the turn's prompt may be
+//! half-resident — so they also evict (which is what releases the pinned
+//! pages immediately).
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::coordinator::Coordinator;
+use crate::coordinator::request::TokenSink;
+use crate::coordinator::{AbortHandle, AbortKind, Coordinator};
 use crate::quant::QuantPolicy;
 
 use super::error::{ApiError, ErrorCode};
 use super::types::{GenerateSpec, GenerationResult, SessionTurn};
+
+/// Transport-level options for one turn (v3 surface): a streaming sink
+/// and a shared abort flag. (The turn's deadline travels inside
+/// [`GenerateSpec::deadline_ms`], not here.)
+#[derive(Default)]
+pub struct TurnOpts {
+    pub on_token: Option<TokenSink>,
+    pub abort: Option<AbortHandle>,
+}
 
 #[derive(Debug, Clone)]
 pub struct SessionConfig {
@@ -72,6 +85,18 @@ impl SessionManager {
     /// Live session count.
     pub fn len(&self) -> usize {
         self.inner.lock().unwrap().len()
+    }
+
+    /// Recommended housekeeping cadence for [`SessionManager::sweep_idle`]:
+    /// a quarter of the idle timeout, clamped to [10 ms, 500 ms] so
+    /// short-timeout tests sweep promptly and long timeouts don't leave
+    /// shutdown waiting on a stale tick.
+    pub fn sweep_tick(&self) -> Duration {
+        let ttl = self.cfg.idle_timeout;
+        if ttl.is_zero() {
+            return Duration::from_millis(500);
+        }
+        (ttl / 4).clamp(Duration::from_millis(10), Duration::from_millis(500))
     }
 
     pub fn is_empty(&self) -> bool {
@@ -130,6 +155,21 @@ impl SessionManager {
         req_id: u64,
         spec: &GenerateSpec,
     ) -> Result<SessionTurn, ApiError> {
+        self.append_with(session, req_id, spec, TurnOpts::default())
+    }
+
+    /// [`SessionManager::append`] with transport options: a streaming
+    /// token sink and/or a shared abort flag (the v3 surface). A
+    /// cancelled or deadline-expired turn fails with the matching typed
+    /// error AND evicts the session (its retained KV state is
+    /// indeterminate mid-turn), releasing the pinned pages.
+    pub fn append_with(
+        &self,
+        session: u64,
+        req_id: u64,
+        spec: &GenerateSpec,
+        opts: TurnOpts,
+    ) -> Result<SessionTurn, ApiError> {
         // validate before taking the busy flag: in-process callers can
         // bypass the wire codec's own empty-stop rejection
         if spec.stop.as_deref() == Some("") {
@@ -151,6 +191,10 @@ impl SessionManager {
         // policy was grid-validated at session_open; no re-check needed
         let mut req = spec.to_request(req_id, policy);
         req.session_seq = Some(seq_id);
+        req.on_token = opts.on_token;
+        if let Some(abort) = opts.abort {
+            req.abort = abort;
+        }
         let resp = self.coord.submit_wait(req);
 
         if let Some(msg) = &resp.error {
@@ -166,9 +210,16 @@ impl SessionManager {
                 let _ = self.coord.engine().release_session_seq(seq);
                 self.coord.note_session_evicted();
             }
-            return Err(ApiError::engine(format!(
-                "turn failed (session {session} closed): {msg}"
-            )));
+            // aborts keep their typed codes; everything else is `engine`
+            let code = match resp.abort {
+                Some(AbortKind::Cancelled) => ErrorCode::Cancelled,
+                Some(AbortKind::DeadlineExceeded) => ErrorCode::DeadlineExceeded,
+                None => ErrorCode::Engine,
+            };
+            return Err(ApiError::new(
+                code,
+                format!("turn failed (session {session} closed): {msg}"),
+            ));
         }
         let pos = self.coord.engine().seq_pos(seq_id).unwrap_or(0);
         // growth accounting: the turn's prompt + generation grew the pinned
@@ -223,11 +274,12 @@ impl SessionManager {
         Ok((st.turns, pos))
     }
 
-    /// Evict sessions idle past the configured timeout. Lazy: the server
-    /// invokes this once per request it handles (the single sweep point —
-    /// open/append don't re-sweep), so any traffic reclaims abandoned
-    /// sessions without a background thread. In-process users driving the
-    /// manager directly should call it themselves on their own cadence.
+    /// Evict sessions idle past the configured timeout. The server's
+    /// housekeeping tick invokes this on a fixed cadence, so abandoned
+    /// sessions are reclaimed (and their pinned pages freed) even when no
+    /// traffic arrives — the old request-path sweep never ran on a quiet
+    /// server. In-process users driving the manager directly should call
+    /// it themselves on their own cadence.
     pub fn sweep_idle(&self) {
         let ttl = self.cfg.idle_timeout;
         if ttl.is_zero() {

@@ -5,7 +5,7 @@
 //! lives entirely in [`super::codec`]. Nothing outside `api` should poke at
 //! raw `util::json::Value` fields of a protocol line.
 
-use crate::coordinator::{MetricsSnapshot, Request, Response};
+use crate::coordinator::{AbortKind, MetricsSnapshot, Request, Response};
 use crate::engine::SamplingParams;
 use crate::kvcache::{PoolStats, PrefixStats};
 use crate::model::ByteTokenizer;
@@ -25,8 +25,14 @@ pub struct GenerateSpec {
     /// Multi-byte stop sequence (validated non-empty by the codec).
     pub stop: Option<String>,
     pub priority: i32,
-    /// Stream one token line per produced token (only on `generate`).
+    /// Stream one token line per produced token (`generate` on v1/v2;
+    /// any generation op — including `session_append` and
+    /// `batch_generate` items — on v3).
     pub stream: bool,
+    /// Completion deadline in milliseconds from server receipt (v3 only).
+    /// Expiry — queued or mid-decode — aborts the request with a typed
+    /// `deadline_exceeded` error and frees its pool pages.
+    pub deadline_ms: Option<u64>,
 }
 
 impl Default for GenerateSpec {
@@ -39,6 +45,7 @@ impl Default for GenerateSpec {
             stop: None,
             priority: 0,
             stream: false,
+            deadline_ms: None,
         }
     }
 }
@@ -57,6 +64,11 @@ impl GenerateSpec {
         if let Some(s) = &self.stop {
             req.stop_seq = tok.encode_str(s);
         }
+        if let Some(ms) = self.deadline_ms {
+            req.deadline = Some(
+                std::time::Instant::now() + std::time::Duration::from_millis(ms),
+            );
+        }
         req
     }
 }
@@ -74,6 +86,9 @@ pub enum ApiRequest {
     SessionOpen { policy: Option<QuantPolicy> },
     SessionAppend { session: u64, spec: GenerateSpec },
     SessionClose { session: u64 },
+    /// Cancel the in-flight request whose tag is `target` on this
+    /// connection (v3 only).
+    Cancel { target: u64 },
 }
 
 impl ApiRequest {
@@ -89,6 +104,7 @@ impl ApiRequest {
             ApiRequest::SessionOpen { .. } => "session_open",
             ApiRequest::SessionAppend { .. } => "session_append",
             ApiRequest::SessionClose { .. } => "session_close",
+            ApiRequest::Cancel { .. } => "cancel",
         }
     }
 }
@@ -117,10 +133,19 @@ impl GenerationResult {
         }
     }
 
-    /// Lift a coordinator [`Response`] into the API result type.
+    /// Lift a coordinator [`Response`] into the API result type. Aborted
+    /// requests map to the typed `cancelled` / `deadline_exceeded` codes;
+    /// other failures stay `engine` errors.
     pub fn from_response(resp: Response) -> Self {
         if let Some(msg) = resp.error {
-            return Self::failed(resp.id, ApiError::engine(msg));
+            let code = match resp.abort {
+                Some(AbortKind::Cancelled) => super::error::ErrorCode::Cancelled,
+                Some(AbortKind::DeadlineExceeded) => {
+                    super::error::ErrorCode::DeadlineExceeded
+                }
+                None => super::error::ErrorCode::Engine,
+            };
+            return Self::failed(resp.id, ApiError::new(code, msg));
         }
         let tok = ByteTokenizer;
         Self {
@@ -191,5 +216,8 @@ pub enum ApiResponse {
     SessionOpened { session: u64, policy: String },
     SessionResult(SessionTurn),
     SessionClosed { session: u64, turns: usize, pos: usize },
+    /// Outcome of a `cancel` op: whether `target` named a request that
+    /// was still in flight (false = unknown tag or already completed).
+    CancelResult { target: u64, cancelled: bool },
     Error(ApiError),
 }

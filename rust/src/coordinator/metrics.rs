@@ -13,6 +13,13 @@ struct Inner {
     requests_completed: u64,
     requests_failed: u64,
     preemptions: u64,
+    cancelled: u64,
+    deadline_expired: u64,
+    /// Tagged requests currently in flight across all connections
+    /// (registered by the server when a request starts, released when its
+    /// final frame is queued).
+    inflight_now: u64,
+    inflight_peak: u64,
     tokens_generated: u64,
     prefill_tokens: u64,
     batch_requests: u64,
@@ -59,6 +66,31 @@ impl Metrics {
         self.inner.lock().unwrap().preemptions += 1;
     }
 
+    /// A request was aborted by an explicit cancel (op or dropped
+    /// connection). Counted separately from `requests_failed`: the work
+    /// was abandoned, not broken.
+    pub fn record_cancelled(&self) {
+        self.inner.lock().unwrap().cancelled += 1;
+    }
+
+    /// A request's `deadline_ms` expired (queued or mid-decode).
+    pub fn record_deadline_expired(&self) {
+        self.inner.lock().unwrap().deadline_expired += 1;
+    }
+
+    /// A tagged request entered flight (server-side registration).
+    pub fn record_inflight_start(&self) {
+        let mut m = self.inner.lock().unwrap();
+        m.inflight_now += 1;
+        m.inflight_peak = m.inflight_peak.max(m.inflight_now);
+    }
+
+    /// A tagged request's final frame was queued.
+    pub fn record_inflight_end(&self) {
+        let mut m = self.inner.lock().unwrap();
+        m.inflight_now = m.inflight_now.saturating_sub(1);
+    }
+
     pub fn record_prefill(&self, tokens: usize) {
         self.inner.lock().unwrap().prefill_tokens += tokens as u64;
     }
@@ -97,6 +129,10 @@ impl Metrics {
             requests_completed: m.requests_completed,
             requests_failed: m.requests_failed,
             preemptions: m.preemptions,
+            cancelled: m.cancelled,
+            deadline_expired: m.deadline_expired,
+            inflight: m.inflight_now,
+            inflight_peak: m.inflight_peak,
             tokens_generated: m.tokens_generated,
             prefill_tokens: m.prefill_tokens,
             batch_requests: m.batch_requests,
@@ -132,6 +168,14 @@ pub struct MetricsSnapshot {
     pub requests_failed: u64,
     /// Requests preempted (freed + requeued) on page-budget collisions.
     pub preemptions: u64,
+    /// Requests aborted by an explicit cancel (op / dropped connection).
+    pub cancelled: u64,
+    /// Requests whose `deadline_ms` expired before completion.
+    pub deadline_expired: u64,
+    /// Tagged requests in flight right now (v3 multiplexing).
+    pub inflight: u64,
+    /// Peak concurrent tagged in-flight requests since start.
+    pub inflight_peak: u64,
     pub tokens_generated: u64,
     pub prefill_tokens: u64,
     pub batch_requests: u64,
@@ -156,6 +200,10 @@ impl MetricsSnapshot {
             ("requests_completed", Value::num(self.requests_completed as f64)),
             ("requests_failed", Value::num(self.requests_failed as f64)),
             ("preemptions", Value::num(self.preemptions as f64)),
+            ("cancelled", Value::num(self.cancelled as f64)),
+            ("deadline_expired", Value::num(self.deadline_expired as f64)),
+            ("inflight", Value::num(self.inflight as f64)),
+            ("inflight_peak", Value::num(self.inflight_peak as f64)),
             ("tokens_generated", Value::num(self.tokens_generated as f64)),
             ("prefill_tokens", Value::num(self.prefill_tokens as f64)),
             ("batch_requests", Value::num(self.batch_requests as f64)),
@@ -206,6 +254,12 @@ mod tests {
         );
         m.record_failure();
         m.record_preemption();
+        m.record_cancelled();
+        m.record_deadline_expired();
+        m.record_inflight_start();
+        m.record_inflight_start();
+        m.record_inflight_end();
+        m.record_inflight_start();
         m.record_decode_step(4, 0.01);
         m.record_batch_submit(3);
         m.record_session_opened();
@@ -216,6 +270,9 @@ mod tests {
         assert_eq!(s.requests_completed, 2);
         assert_eq!(s.requests_failed, 1);
         assert_eq!(s.preemptions, 1);
+        assert_eq!(s.cancelled, 1);
+        assert_eq!(s.deadline_expired, 1);
+        assert_eq!((s.inflight, s.inflight_peak), (2, 2));
         assert_eq!(s.tokens_generated, 6);
         assert_eq!((s.batch_requests, s.batch_items), (1, 3));
         assert_eq!(s.sessions_opened, 2);

@@ -23,7 +23,7 @@ use std::thread::JoinHandle;
 use crate::engine::Engine;
 
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use request::{Request, Response, ResponseHandle, Timing};
+pub use request::{AbortHandle, AbortKind, Request, Response, ResponseHandle, Timing};
 pub use scheduler::CoordinatorConfig;
 
 use queue::RequestQueue;
@@ -74,6 +74,14 @@ impl Coordinator {
         self.submit(req).wait()
     }
 
+    /// Wake the scheduler without submitting work. Call after setting a
+    /// request's abort flag so a sleeping (or capacity-blocked) scheduler
+    /// runs its abort sweep promptly instead of on the next natural wake.
+    pub fn kick(&self) {
+        self.shared.cv.notify_all();
+        self.shared.engine.pool.notify_free();
+    }
+
     pub fn metrics(&self) -> MetricsSnapshot {
         let mut snap = self.shared.metrics.snapshot();
         snap.engine = self.shared.engine.stats();
@@ -97,6 +105,16 @@ impl Coordinator {
 
     pub fn note_session_evicted(&self) {
         self.shared.metrics.record_session_evicted();
+    }
+
+    /// A tagged (v3) request entered flight at the serving front end.
+    pub fn note_inflight_start(&self) {
+        self.shared.metrics.record_inflight_start();
+    }
+
+    /// A tagged (v3) request's final frame was queued.
+    pub fn note_inflight_end(&self) {
+        self.shared.metrics.record_inflight_end();
     }
 
     pub fn engine(&self) -> &Arc<Engine> {

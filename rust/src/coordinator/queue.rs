@@ -61,6 +61,30 @@ impl RequestQueue {
         out
     }
 
+    /// Remove every queued request whose abort flag is set or whose
+    /// deadline has passed `now` (regardless of priority bucket or policy
+    /// — cancelled work must leave the queue even when the scheduler is
+    /// busy with a different policy group). Returned entries have their
+    /// abort kind latched; the scheduler fails them with typed errors.
+    pub fn remove_aborted(
+        &mut self,
+        now: std::time::Instant,
+    ) -> Vec<InFlight> {
+        let mut out = Vec::new();
+        for (_, q) in self.buckets.iter_mut() {
+            let mut i = 0;
+            while i < q.len() {
+                if q[i].abort_status(now).is_some() {
+                    out.push(q.remove(i).unwrap());
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        self.len -= out.len();
+        out
+    }
+
     /// Drain everything (shutdown path).
     pub fn drain(&mut self) -> Vec<InFlight> {
         let mut out = Vec::new();
@@ -107,6 +131,33 @@ mod tests {
         assert_eq!(got.len(), 2);
         assert_eq!(q.len(), 1);
         assert_eq!(q.front_policy().unwrap().name, "KIVI-2bit");
+    }
+
+    #[test]
+    fn remove_aborted_sweeps_all_buckets() {
+        let mut q = RequestQueue::default();
+        let p = QuantPolicy::float32(2);
+        let a = inf(1, 0, p.clone());
+        let b = inf(2, 5, p.clone());
+        let c = inf(3, 5, p.clone());
+        b.req.abort.cancel();
+        q.push(a);
+        q.push(b);
+        q.push(c);
+        // a deadline in the past expires regardless of bucket
+        let mut d = inf(4, -3, p.clone());
+        d.req.deadline =
+            Some(std::time::Instant::now() - std::time::Duration::from_millis(1));
+        q.push(d);
+        let aborted = q.remove_aborted(std::time::Instant::now());
+        let ids: Vec<u64> = aborted.iter().map(|i| i.req.id).collect();
+        assert_eq!(aborted.len(), 2, "{ids:?}");
+        assert!(ids.contains(&2) && ids.contains(&4));
+        assert_eq!(q.len(), 2);
+        // survivors still pop normally
+        let got = q.pop_matching("float", 10);
+        let ids: Vec<u64> = got.iter().map(|i| i.req.id).collect();
+        assert_eq!(ids, vec![3, 1]);
     }
 
     #[test]

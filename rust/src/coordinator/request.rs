@@ -1,5 +1,7 @@
-//! Request/response types and the completion handle.
+//! Request/response types, the completion handle, and the per-request
+//! abort flag (first-class cancellation + deadlines).
 
+use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
@@ -8,6 +10,58 @@ use crate::quant::QuantPolicy;
 
 /// Callback invoked as each token is produced (streaming transports).
 pub type TokenSink = Arc<dyn Fn(u64, i32) + Send + Sync>;
+
+/// Why a request was aborted (distinct typed errors on the wire).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AbortKind {
+    /// Explicitly cancelled (`cancel` op, or the client connection died).
+    Cancelled,
+    /// The request's deadline passed before it completed.
+    DeadlineExceeded,
+}
+
+/// Shared per-request abort flag. Cloned into the transport (which sets
+/// it) and carried by the [`Request`] through the scheduler (which checks
+/// it at decode-step granularity and frees the sequence's pool pages on
+/// abort). First writer wins: a request cancelled and expired reports
+/// whichever happened first.
+#[derive(Clone, Debug, Default)]
+pub struct AbortHandle {
+    state: Arc<AtomicU8>, // 0 = live, 1 = cancelled, 2 = deadline expired
+}
+
+impl AbortHandle {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Request cancellation. Returns true if this call aborted the request
+    /// (false when it was already aborted).
+    pub fn cancel(&self) -> bool {
+        self.state
+            .compare_exchange(0, 1, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+    }
+
+    /// Mark the deadline as expired (scheduler-side).
+    pub fn expire(&self) -> bool {
+        self.state
+            .compare_exchange(0, 2, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+    }
+
+    pub fn status(&self) -> Option<AbortKind> {
+        match self.state.load(Ordering::Acquire) {
+            1 => Some(AbortKind::Cancelled),
+            2 => Some(AbortKind::DeadlineExceeded),
+            _ => None,
+        }
+    }
+
+    pub fn is_aborted(&self) -> bool {
+        self.status().is_some()
+    }
+}
 
 #[derive(Clone)]
 pub struct Request {
@@ -30,6 +84,13 @@ pub struct Request {
     pub session_seq: Option<u64>,
     /// per-token streaming callback (None = only the final response)
     pub on_token: Option<TokenSink>,
+    /// shared abort flag: the transport cancels through it, the scheduler
+    /// checks it before every decode step (and at admission)
+    pub abort: AbortHandle,
+    /// absolute completion deadline (from the request's `deadline_ms`);
+    /// the scheduler expires the request — queued or mid-decode — once
+    /// this instant passes
+    pub deadline: Option<Instant>,
 }
 
 impl std::fmt::Debug for Request {
@@ -57,6 +118,8 @@ impl Request {
             seed: id,
             session_seq: None,
             on_token: None,
+            abort: AbortHandle::new(),
+            deadline: None,
         }
     }
 }
@@ -77,6 +140,10 @@ pub struct Response {
     pub tokens: Vec<i32>,
     pub timing: Timing,
     pub error: Option<String>,
+    /// Set when the failure was an abort (cancel / deadline) rather than
+    /// an engine error — the API layer maps this to the typed
+    /// `cancelled` / `deadline_exceeded` wire codes.
+    pub abort: Option<AbortKind>,
 }
 
 /// Blocking completion handle.
@@ -175,6 +242,25 @@ impl InFlight {
             || (!self.req.stop_seq.is_empty()
                 && self.generated.ends_with(&self.req.stop_seq))
     }
+
+    /// Whether this request has been aborted: an explicit cancel (the
+    /// shared flag), or its own deadline passing `now`. Deliberately does
+    /// NOT write the deadline back into the shared handle — batch items
+    /// share one handle for tag-level cancel but expire individually, so
+    /// one item's deadline must not abort its siblings. The scheduler
+    /// calls this per queued request per sweep and per active request per
+    /// decode step.
+    pub fn abort_status(&self, now: Instant) -> Option<AbortKind> {
+        if let Some(kind) = self.req.abort.status() {
+            return Some(kind);
+        }
+        match self.req.deadline {
+            Some(deadline) if now >= deadline => {
+                Some(AbortKind::DeadlineExceeded)
+            }
+            _ => None,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -192,12 +278,41 @@ mod tests {
                 tokens: vec![1, 2],
                 timing: Timing::default(),
                 error: None,
+                abort: None,
             });
         });
         let r = h.wait();
         assert_eq!(r.id, 7);
         assert_eq!(r.tokens, vec![1, 2]);
         assert!(h.try_get().is_some());
+    }
+
+    #[test]
+    fn abort_flag_first_writer_wins_and_deadline_is_local() {
+        let h = AbortHandle::new();
+        assert_eq!(h.status(), None);
+        assert!(h.cancel());
+        assert!(!h.expire(), "cancel already latched");
+        assert_eq!(h.status(), Some(AbortKind::Cancelled));
+
+        // deadline path through InFlight::abort_status
+        let mut req = Request::greedy(9, vec![65], 4, QuantPolicy::float32(1));
+        req.deadline = Some(Instant::now() - std::time::Duration::from_millis(1));
+        let inf = InFlight::new(req, ResponseHandle::new());
+        assert_eq!(
+            inf.abort_status(Instant::now()),
+            Some(AbortKind::DeadlineExceeded)
+        );
+        // the deadline is NOT written into the shared handle: a sibling
+        // request sharing this handle (batch items under one tag) must
+        // not see its brother's expiry
+        assert_eq!(inf.req.abort.status(), None);
+        // an explicit cancel takes precedence in the report
+        assert!(inf.req.abort.cancel());
+        assert_eq!(
+            inf.abort_status(Instant::now()),
+            Some(AbortKind::Cancelled)
+        );
     }
 
     #[test]

@@ -27,7 +27,7 @@ use crate::kvcache::PoolError;
 
 use super::metrics::Metrics;
 use super::queue::RequestQueue;
-use super::request::{InFlight, Response, Timing};
+use super::request::{AbortKind, InFlight, Response, Timing};
 
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
@@ -95,6 +95,14 @@ pub(super) fn run_scheduler(shared: Arc<Shared>) {
             }
         }
 
+        // ---- abort sweep (cancel / deadline expiry) ----
+        // Runs once per scheduler iteration, i.e. at decode-step
+        // granularity: cancelled/expired queued requests leave the queue
+        // wherever they sit (any bucket, any policy), and aborted ACTIVE
+        // requests are retired before the next decode step — freeing
+        // their pool pages immediately so waiting admissions unblock.
+        sweep_aborted(&shared, &mut active);
+
         // Capture the pool's free epoch BEFORE attempting admission: a
         // release between a bounce below and the capacity wait would
         // otherwise be lost and cost a full backstop interval.
@@ -139,6 +147,12 @@ pub(super) fn run_scheduler(shared: Arc<Shared>) {
                     fail(&shared, &mut inf, "shutdown with backpressure");
                 }
                 return;
+            }
+            // the abort sweep may have emptied the queue (everything
+            // pending was cancelled): go straight back to the idle wait
+            // instead of burning a capacity-backstop interval
+            if shared.queue.lock().unwrap().is_empty() {
+                continue;
             }
             shared
                 .engine
@@ -253,6 +267,32 @@ pub(super) fn run_scheduler(shared: Arc<Shared>) {
     }
 }
 
+/// Retire cancelled / deadline-expired requests: queued ones leave the
+/// queue (wherever they sit), active ones are removed and their sequence's
+/// pool pages freed before the next decode step. Each gets a typed
+/// `cancelled` / `deadline_exceeded` response. Requests whose handle is
+/// already fulfilled are left for the ordinary retire loop.
+fn sweep_aborted(shared: &Arc<Shared>, active: &mut Vec<InFlight>) {
+    let now = Instant::now();
+    let aborted_queued = shared.queue.lock().unwrap().remove_aborted(now);
+    for mut inf in aborted_queued {
+        // recompute with the same `now` the removal used: a deadline that
+        // was past then is still past (the fallback is unreachable)
+        let kind = inf.abort_status(now).unwrap_or(AbortKind::Cancelled);
+        fail_aborted(shared, &mut inf, kind);
+    }
+    let mut i = 0;
+    while i < active.len() {
+        match active[i].abort_status(now) {
+            Some(kind) if !active[i].handle.is_fulfilled() => {
+                let mut inf = active.swap_remove(i);
+                fail_aborted(shared, &mut inf, kind);
+            }
+            _ => i += 1,
+        }
+    }
+}
+
 /// Evict one active request back to the queue to relieve a page-budget
 /// collision: the lowest-priority, youngest non-session, non-streaming
 /// request (sessions hold pinned state that must not be freed; a stream
@@ -304,6 +344,12 @@ fn prefill_group(
     let mut admitted: Vec<InFlight> = Vec::new();
     let mut requeue: Vec<InFlight> = Vec::new();
     for mut inf in group {
+        // a cancel/deadline can land between the sweep and this pop —
+        // don't spend a prefill on work nobody wants
+        if let Some(kind) = inf.abort_status(Instant::now()) {
+            fail_aborted(shared, &mut inf, kind);
+            continue;
+        }
         if !requeue.is_empty() {
             requeue.push(inf); // preserve order behind the first bounce
             continue;
@@ -527,12 +573,42 @@ fn complete(shared: &Arc<Shared>, inf: InFlight) {
         tokens: inf.generated.clone(),
         timing,
         error: None,
+        abort: None,
     });
 }
 
 fn fail(shared: &Arc<Shared>, inf: &mut InFlight, msg: &str) {
     shared.metrics.record_failure();
+    finish_failed(shared, inf, msg, None);
+}
+
+/// Typed abort completion: counts into the `cancelled` /
+/// `deadline_expired` metrics (NOT `requests_failed` — the work was
+/// abandoned or timed out, not broken) and carries the kind so the API
+/// layer emits the matching wire error code.
+fn fail_aborted(shared: &Arc<Shared>, inf: &mut InFlight, kind: AbortKind) {
+    let msg = match kind {
+        AbortKind::Cancelled => {
+            shared.metrics.record_cancelled();
+            "request cancelled"
+        }
+        AbortKind::DeadlineExceeded => {
+            shared.metrics.record_deadline_expired();
+            "deadline exceeded"
+        }
+    };
+    finish_failed(shared, inf, msg, Some(kind));
+}
+
+fn finish_failed(
+    shared: &Arc<Shared>,
+    inf: &mut InFlight,
+    msg: &str,
+    abort: Option<AbortKind>,
+) {
     if let Some(id) = inf.seq_id.take() {
+        // session sequences stay pinned: a failed/cancelled turn is the
+        // session manager's cue to evict (which releases the pages)
         if inf.req.session_seq.is_none() {
             let _ = shared.engine.free_seq(id);
         }
@@ -542,5 +618,6 @@ fn fail(shared: &Arc<Shared>, inf: &mut InFlight, msg: &str) {
         tokens: inf.generated.clone(),
         timing: Timing::default(),
         error: Some(msg.to_string()),
+        abort,
     });
 }

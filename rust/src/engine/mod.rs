@@ -279,6 +279,16 @@ impl Engine {
 
     /// One decode step: `tokens[i]` is the current token of `ids[i]`.
     /// Returns next-token logits per sequence.
+    ///
+    /// Decode-step granularity is also the engine's **abort boundary**:
+    /// the scheduler checks every request's abort flag (cancel /
+    /// deadline) between steps and may free a member's sequence before
+    /// the next call. That is safe here for the same reason preemption
+    /// is — each step reserves its pages BEFORE mutating any cache, and
+    /// the staged-literal layer treats a changed batch composition as a
+    /// full re-scatter — so a sequence can vanish between two decode
+    /// calls without leaving stale staging behind. Keep both properties
+    /// when touching this path.
     pub fn decode(&self, ids: &[u64], tokens: &[i32]) -> Result<Vec<Vec<f32>>> {
         assert_eq!(ids.len(), tokens.len());
         // Reserve the step's cache pages BEFORE any mutation: a budget

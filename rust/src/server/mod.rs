@@ -5,45 +5,110 @@
 //! The server is a thin transport over the typed [`crate::api`] subsystem:
 //! every line is decoded into an [`ApiRequest`], handled, and the
 //! [`ApiResponse`] encoded back — there is no raw `Value` field-poking
-//! here. Two framings are accepted (see `docs/API.md` for the full wire
-//! specification):
+//! here. Three framings are accepted on the same socket, decided per line
+//! (see `docs/API.md` for the full wire specification):
 //!
-//!   v2 (strict, `"v":2`):
-//!   → {"v":2,"op":"generate","prompt":"## ABC:1234 ## ABC:","n_gen":8,
-//!      "policy":"asymkv-6/0"}
-//!   ← {"v":2,"id":1,"text":"1234 . …","tokens":[…],"ttft_s":…,"total_s":…}
-//!   → {"v":2,"op":"batch_generate","items":[{"prompt":"a"},{"prompt":"b"}]}
-//!   → {"v":2,"op":"session_open","policy":"kivi-2"}   ← {"v":2,"session":1,…}
-//!   → {"v":2,"op":"session_append","session":1,"prompt":"turn text"}
-//!   → {"v":2,"op":"session_close","session":1}
-//!   → {"v":2,"op":"policies"} | {"op":"stats"} | {"op":"pool"} | {"op":"ping"}
+//!   v3 (multiplexed, `"v":3` + client-assigned `tag` on every line):
+//!   → {"v":3,"tag":1,"op":"generate","prompt":"…","n_gen":64,
+//!      "stream":true,"deadline_ms":2000}
+//!   → {"v":3,"tag":2,"op":"ping"}              (while tag 1 still runs)
+//!   ← {"v":3,"tag":2,"ok":true,"done":true}    (out of order, tagged)
+//!   ← {"v":3,"tag":1,"token":52,"piece":"4"}   (interleaved stream frame)
+//!   → {"v":3,"tag":3,"op":"cancel","target":1}
+//!   ← {"v":3,"tag":3,"target":1,"cancelled":true,"done":true}
+//!   ← {"v":3,"tag":1,"error":{"code":"cancelled",…},"done":true}
+//!
+//!   v2 (strict, `"v":2`): one line in, one reply out, in submission
+//!   order — the pre-v3 surface, byte-compatible.
 //!
 //!   v1 (legacy compat, no `"v"` field): the original lenient
 //!   ping/stats/pool/generate surface, answered in the original shapes.
+//!
+//! **Connection architecture.** Each connection splits into a reader
+//! thread (this module's `handle_conn` loop) and a writer thread joined
+//! by an unbounded outbound frame channel. v1/v2 lines are handled inline
+//! on the reader thread — preserving their strict request→reply
+//! serialization exactly. v3 generation ops spawn a worker thread per
+//! request, so many tagged requests are in flight concurrently on one
+//! socket with out-of-order, tag-correlated replies; instant ops (ping,
+//! stats, pool, policies, session open/close, cancel) are answered inline
+//! without occupying a worker. All frames — token streams included — are
+//! produced into the channel, never directly onto the socket, so a
+//! slow-reading client buffers server-side instead of stalling the
+//! scheduler or sibling requests.
+//!
+//! **Cancellation.** `cancel` flips the target request's shared
+//! [`AbortHandle`]; the scheduler observes it at decode-step granularity,
+//! frees the sequence's pool pages immediately and completes the request
+//! with a typed `cancelled` error. A dropped connection cancels
+//! everything it still had in flight — an abandoned client stops
+//! consuming decode steps and cache pages within one step. `deadline_ms`
+//! rides the same path with `deadline_exceeded`.
+//!
+//! **Housekeeping.** A per-server housekeeping thread sweeps idle
+//! sessions on a fixed tick, so abandoned sessions are evicted (pinned
+//! pages freed) even when no traffic arrives — the old request-path
+//! sweep never ran on a quiet server.
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{mpsc, Arc, Mutex};
 
 use anyhow::{Context, Result};
 
 use crate::api::{
-    self, ApiError, ApiRequest, ApiResponse, ErrorCode, GenerateSpec,
+    self, ApiError, ApiRequest, ApiResponse, ErrorCode, Frame, GenerateSpec,
     GenerationResult, PolicyInfo, PolicyReport, PoolReport, Proto,
-    SessionConfig, SessionManager,
+    SessionConfig, SessionManager, TurnOpts,
 };
-use crate::coordinator::{Coordinator, Request};
+use crate::coordinator::request::TokenSink;
+use crate::coordinator::{AbortHandle, Coordinator, Request};
 use crate::model::ByteTokenizer;
 use crate::quant::QuantPolicy;
 use crate::util::json::Value;
 
+/// Default cap on concurrently in-flight tagged requests per connection.
+pub const DEFAULT_MAX_INFLIGHT: usize = 64;
+
 pub struct Server {
     pub coord: Arc<Coordinator>,
+    /// Cap on concurrently in-flight tagged (v3) generation requests per
+    /// connection; the excess is refused with `too_many_inflight`. Set
+    /// before sharing the server across threads.
+    pub max_inflight: usize,
     listener: TcpListener,
     next_id: AtomicU64,
     stop: Arc<AtomicBool>,
     sessions: SessionManager,
+    housekeeping_started: AtomicBool,
+}
+
+/// Clonable handle on a connection's outbound frame channel. Everything
+/// written to the socket goes through here (writer-thread FIFO), so
+/// producers — the reader thread, v3 workers, the scheduler's token
+/// sinks — never block on a slow client.
+#[derive(Clone)]
+struct Outbound {
+    tx: Sender<String>,
+}
+
+impl Outbound {
+    /// Queue one frame. Send failures (client gone, writer exited) are
+    /// deliberately ignored: the request lifecycle is torn down by the
+    /// reader thread's EOF cleanup, not by writers noticing.
+    fn line(&self, v: &Value) {
+        let _ = self.tx.send(format!("{v}\n"));
+    }
+}
+
+/// Per-connection multiplexing state: the tags currently in flight and
+/// their abort handles (the `cancel` op's lookup table).
+#[derive(Default)]
+struct ConnState {
+    inflight: Mutex<HashMap<u64, AbortHandle>>,
 }
 
 impl Server {
@@ -61,10 +126,12 @@ impl Server {
         let sessions = SessionManager::new(coord.clone(), sessions);
         Ok(Self {
             coord,
+            max_inflight: DEFAULT_MAX_INFLIGHT,
             listener,
             next_id: AtomicU64::new(1),
             stop: Arc::new(AtomicBool::new(false)),
             sessions,
+            housekeeping_started: AtomicBool::new(false),
         })
     }
 
@@ -76,7 +143,9 @@ impl Server {
     }
 
     /// Ask the accept loop to exit. Safe from any thread: sets the stop
-    /// flag, then self-connects to wake the blocking `accept`.
+    /// flag, then self-connects to wake the blocking `accept`. The
+    /// housekeeping thread observes the same flag and exits within one
+    /// tick.
     pub fn request_stop(&self) {
         use std::net::{IpAddr, Ipv4Addr, Ipv6Addr};
         self.stop.store(true, Ordering::SeqCst);
@@ -101,10 +170,12 @@ impl Server {
         }
     }
 
-    /// Accept loop (blocks). One thread per connection. The listener stays
-    /// in blocking mode — no poll/sleep cycle burning idle CPU; shutdown is
-    /// a self-connect from [`Server::request_stop`].
+    /// Accept loop (blocks). One reader thread per connection. The
+    /// listener stays in blocking mode — no poll/sleep cycle burning idle
+    /// CPU; shutdown is a self-connect from [`Server::request_stop`].
+    /// Also starts the housekeeping tick (idle-session eviction).
     pub fn serve(self: &Arc<Self>) -> Result<()> {
+        self.start_housekeeping();
         loop {
             match self.listener.accept() {
                 Ok((stream, _)) => {
@@ -126,66 +197,326 @@ impl Server {
         }
     }
 
-    fn handle_conn(&self, stream: TcpStream) -> Result<()> {
+    /// Sweep idle sessions now (evicting them frees their pinned pool
+    /// pages). `serve()`'s housekeeping thread calls this on a tick;
+    /// non-socket embedders driving [`Server::dispatch`] /
+    /// [`Server::handle`] directly should call it on their own cadence
+    /// (or call [`Server::start_housekeeping`] once).
+    pub fn sweep_idle_sessions(&self) {
+        self.sessions.sweep_idle();
+    }
+
+    /// Spawn the housekeeping thread (once): sweeps idle sessions every
+    /// tick so a QUIET server still evicts — the old design swept only on
+    /// the request path, so abandoned sessions pinned their pages until
+    /// the next unrelated request happened to arrive. Started
+    /// automatically by [`Server::serve`]; public so dispatch-only
+    /// embedders (no accept loop) can opt in too.
+    pub fn start_housekeeping(self: &Arc<Self>) {
+        if self.housekeeping_started.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        let srv = self.clone();
+        let _ = std::thread::Builder::new()
+            .name("asymkv-housekeeping".into())
+            .spawn(move || {
+                let tick = srv.sessions.sweep_tick();
+                while !srv.stop.load(Ordering::SeqCst) {
+                    std::thread::sleep(tick);
+                    srv.sessions.sweep_idle();
+                }
+            });
+    }
+
+    /// Connection reader loop: decodes lines, answers v1/v2 inline (their
+    /// strict in-order semantics), fans v3 generation ops out to worker
+    /// threads. Returning (EOF, IO error, or a connection-fatal protocol
+    /// violation) cancels everything the connection still has in flight.
+    fn handle_conn(self: &Arc<Self>, stream: TcpStream) -> Result<()> {
         stream.set_nodelay(true).ok();
         let mut reader = BufReader::new(stream.try_clone()?);
-        let mut out = stream;
+        let (tx, rx) = mpsc::channel::<String>();
+        let out = Outbound { tx };
+        let mut wstream = stream;
+        std::thread::Builder::new()
+            .name("asymkv-conn-writer".into())
+            .spawn(move || {
+                // exits when every sender is dropped (reader + workers
+                // done) or the client stops reading for good
+                for line in rx {
+                    if wstream.write_all(line.as_bytes()).is_err() {
+                        return;
+                    }
+                }
+            })?;
+        let conn = Arc::new(ConnState::default());
+
         let mut line = String::new();
-        loop {
+        let result: Result<()> = loop {
             line.clear();
-            if reader.read_line(&mut line)? == 0 {
-                return Ok(()); // EOF
+            match reader.read_line(&mut line) {
+                Ok(0) => break Ok(()), // EOF
+                Err(e) => break Err(e.into()),
+                Ok(_) => {}
             }
             let trimmed = line.trim();
             if trimmed.is_empty() {
                 continue;
             }
             let n_layers = self.coord.engine().manifest().n_layers;
-            match api::decode_request(trimmed, n_layers) {
-                // streaming generate writes multiple lines; everything else
-                // is strict one-line-in / one-line-out
-                Ok((proto, ApiRequest::Generate(spec))) if spec.stream => {
-                    self.generate_streaming(proto, spec, &mut out)?;
+            match api::decode_frame(trimmed, n_layers) {
+                Ok(Frame { proto: Proto::V3, tag: Some(tag), req }) => {
+                    if let Err(e) = self.handle_v3(tag, req, &conn, &out) {
+                        break Err(e); // connection-fatal protocol violation
+                    }
                 }
-                Ok((proto, req)) => {
+                // decode_frame guarantees v3 frames carry a tag
+                Ok(Frame { proto: Proto::V3, tag: None, .. }) => unreachable!(),
+                // v2 streaming generate writes multiple lines; every other
+                // v1/v2 op is strict one-line-in / one-line-out, inline
+                Ok(Frame { proto, req: ApiRequest::Generate(spec), .. })
+                    if spec.stream =>
+                {
+                    self.generate_streaming(proto, spec, &out);
+                }
+                Ok(Frame { proto, req, .. }) => {
                     let resp = self.handle(req);
-                    writeln!(out, "{}", api::encode_response(&resp, proto))?;
+                    out.line(&api::encode_response(&resp, proto));
                 }
                 Err(de) => {
-                    let mut v = api::encode_response(
-                        &ApiResponse::Error(de.error),
-                        de.proto,
-                    );
-                    // a request that asked for streaming gets its error
-                    // done-tagged so clients reading until "done" never hang
-                    if de.wants_stream {
-                        v = mark_done(v);
-                    }
-                    writeln!(out, "{v}")?;
+                    let v = match (de.proto, de.tag) {
+                        // tagged error: routable, completes the request —
+                        // unless the tag is live, where a done-tagged
+                        // error would falsely complete the running
+                        // request (connection-fatal, like any tag reuse)
+                        (Proto::V3, Some(tag)) => {
+                            if let Err(e) =
+                                duplicate_tag_violation(tag, &conn, &out)
+                            {
+                                break Err(e);
+                            }
+                            api::encode_response_tagged(
+                                &ApiResponse::Error(de.error),
+                                tag,
+                            )
+                        }
+                        // v3 line whose tag itself failed to decode:
+                        // protocol-level error, no tag to echo
+                        (Proto::V3, None) => api::encode_response(
+                            &ApiResponse::Error(de.error),
+                            Proto::V3,
+                        ),
+                        _ => {
+                            let mut v = api::encode_response(
+                                &ApiResponse::Error(de.error),
+                                de.proto,
+                            );
+                            // a request that asked for streaming gets its
+                            // error done-tagged so clients reading until
+                            // "done" never hang
+                            if de.wants_stream {
+                                v = mark_done(v);
+                            }
+                            v
+                        }
+                    };
+                    out.line(&v);
                 }
             }
+        };
+
+        // The connection is gone (or violated the protocol): cancel every
+        // request it still has in flight so abandoned work stops consuming
+        // decode steps and its pool pages are freed within one step. The
+        // workers themselves unregister their tags as they finish.
+        let had_inflight = {
+            let inflight = conn.inflight.lock().unwrap();
+            for handle in inflight.values() {
+                handle.cancel();
+            }
+            !inflight.is_empty()
+        };
+        if had_inflight {
+            self.coord.kick();
+        }
+        result
+    }
+
+    /// Handle one v3 line. Instant ops (cancel, ping, stats, pool,
+    /// policies, session open/close) are answered inline; generation ops
+    /// register their tag and run on a worker thread. Returns Err only
+    /// for connection-fatal protocol violations (duplicate tag).
+    fn handle_v3(
+        self: &Arc<Self>,
+        tag: u64,
+        req: ApiRequest,
+        conn: &Arc<ConnState>,
+        out: &Outbound,
+    ) -> Result<()> {
+        // EVERY v3 line — instant ops and errors included — must use a
+        // fresh tag: its reply carries `done`, and a done-tagged frame on
+        // a live tag would falsely complete the in-flight request at the
+        // client's demultiplexer
+        duplicate_tag_violation(tag, conn, out)?;
+        match req {
+            ApiRequest::Cancel { target } => {
+                let cancelled = {
+                    let inflight = conn.inflight.lock().unwrap();
+                    match inflight.get(&target) {
+                        Some(handle) => handle.cancel(),
+                        None => false,
+                    }
+                };
+                if cancelled {
+                    // wake the scheduler so the abort sweep runs NOW, not
+                    // on the next natural wakeup
+                    self.coord.kick();
+                }
+                out.line(&api::encode_response_tagged(
+                    &ApiResponse::CancelResult { target, cancelled },
+                    tag,
+                ));
+                Ok(())
+            }
+            ApiRequest::Generate(_)
+            | ApiRequest::BatchGenerate { .. }
+            | ApiRequest::SessionAppend { .. } => {
+                // (the duplicate-tag check already ran above; the reader
+                // thread is the only registrar, so the tag cannot become
+                // live between that check and this insert)
+                let abort = AbortHandle::new();
+                {
+                    let mut inflight = conn.inflight.lock().unwrap();
+                    if inflight.len() >= self.max_inflight {
+                        drop(inflight);
+                        out.line(&api::encode_response_tagged(
+                            &ApiResponse::Error(ApiError::too_many_inflight(
+                                self.max_inflight,
+                            )),
+                            tag,
+                        ));
+                        return Ok(());
+                    }
+                    inflight.insert(tag, abort.clone());
+                }
+                self.coord.note_inflight_start();
+                let srv = self.clone();
+                let wconn = conn.clone();
+                let wout = out.clone();
+                let spawned = std::thread::Builder::new()
+                    .name("asymkv-v3-worker".into())
+                    .spawn(move || {
+                        let resp = srv.run_v3(tag, req, &abort, &wout);
+                        // unregister and decrement BEFORE queueing the
+                        // final frame: a cancel racing the completion then
+                        // reports false instead of "cancelling" a finished
+                        // request, and a client that reads the final and
+                        // immediately asks for stats never sees a stale
+                        // inflight gauge
+                        wconn.inflight.lock().unwrap().remove(&tag);
+                        srv.coord.note_inflight_end();
+                        wout.line(&api::encode_response_tagged(&resp, tag));
+                    });
+                if let Err(e) = spawned {
+                    // thread exhaustion: roll the registration back so the
+                    // inflight gauge and the tag table stay truthful, and
+                    // answer with a typed capacity error instead of
+                    // silently dropping the request
+                    conn.inflight.lock().unwrap().remove(&tag);
+                    self.coord.note_inflight_end();
+                    out.line(&api::encode_response_tagged(
+                        &ApiResponse::Error(ApiError::new(
+                            ErrorCode::Capacity,
+                            format!("cannot spawn request worker: {e}"),
+                        )),
+                        tag,
+                    ));
+                }
+                Ok(())
+            }
+            // instant ops: no engine work, answered on the reader thread
+            req => {
+                let resp = self.handle(req);
+                out.line(&api::encode_response_tagged(&resp, tag));
+                Ok(())
+            }
+        }
+    }
+
+    /// Execute one v3 generation op on a worker thread (blocking), with
+    /// tag-correlated streaming and the shared abort flag threaded
+    /// through to the scheduler.
+    fn run_v3(
+        &self,
+        tag: u64,
+        req: ApiRequest,
+        abort: &AbortHandle,
+        out: &Outbound,
+    ) -> ApiResponse {
+        match req {
+            ApiRequest::Generate(spec) => {
+                let sink = spec.stream.then(|| sink_for(out, Some(tag), None));
+                ApiResponse::Generation(self.run_generate(
+                    &spec,
+                    sink,
+                    Some(abort.clone()),
+                ))
+            }
+            ApiRequest::BatchGenerate { items } => {
+                self.run_batch(items, Some((tag, abort, out)))
+            }
+            ApiRequest::SessionAppend { session, spec } => {
+                let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+                let sink = spec.stream.then(|| sink_for(out, Some(tag), None));
+                let opts =
+                    TurnOpts { on_token: sink, abort: Some(abort.clone()) };
+                match self.sessions.append_with(session, id, &spec, opts) {
+                    Ok(turn) => ApiResponse::SessionResult(turn),
+                    Err(e) => ApiResponse::Error(e),
+                }
+            }
+            // handle_v3 routes only generation ops here
+            _ => ApiResponse::Error(ApiError::new(
+                ErrorCode::Internal,
+                "non-generation op on worker thread",
+            )),
         }
     }
 
     /// Handle one protocol line; always returns an encoded JSON value.
-    /// (Single-line entry point for tests and non-socket callers; streaming
-    /// requests are answered with their final response only.)
+    /// (Single-line entry point for tests and non-socket callers;
+    /// streaming requests are answered with their final response only,
+    /// and `cancel` — which needs a live connection's tag table — always
+    /// reports `cancelled:false`. Idle-session eviction runs on
+    /// `serve()`'s housekeeping tick; dispatch-only embedders call
+    /// [`Server::start_housekeeping`] or [`Server::sweep_idle_sessions`]
+    /// themselves.)
     pub fn dispatch(&self, line: &str) -> Value {
         let n_layers = self.coord.engine().manifest().n_layers;
-        match api::decode_request(line, n_layers) {
-            Ok((proto, req)) => api::encode_response(&self.handle(req), proto),
-            Err(de) => {
-                api::encode_response(&ApiResponse::Error(de.error), de.proto)
+        match api::decode_frame(line, n_layers) {
+            Ok(Frame { proto: Proto::V3, tag: Some(tag), req }) => {
+                api::encode_response_tagged(&self.handle(req), tag)
             }
+            Ok(Frame { proto, req, .. }) => {
+                api::encode_response(&self.handle(req), proto)
+            }
+            Err(de) => match (de.proto, de.tag) {
+                (Proto::V3, Some(tag)) => api::encode_response_tagged(
+                    &ApiResponse::Error(de.error),
+                    tag,
+                ),
+                _ => api::encode_response(
+                    &ApiResponse::Error(de.error),
+                    de.proto,
+                ),
+            },
         }
     }
 
-    /// Execute a typed request. Pure protocol logic — no wire concerns.
+    /// Execute a typed request. Pure protocol logic — no wire concerns,
+    /// no connection state (which is why `cancel` resolves to false here;
+    /// the connection reader intercepts it when a tag table exists).
     pub fn handle(&self, req: ApiRequest) -> ApiResponse {
-        // idle-session eviction piggybacks on ALL traffic (not just
-        // session ops), so abandoned sessions can't pin cache budget
-        // forever under generate-only load
-        self.sessions.sweep_idle();
         match req {
             ApiRequest::Ping => ApiResponse::Pong,
             ApiRequest::Stats => ApiResponse::Stats(self.coord.metrics()),
@@ -196,9 +527,12 @@ impl Server {
             }),
             ApiRequest::Policies { policy } => self.policies(policy),
             ApiRequest::Generate(spec) => {
-                ApiResponse::Generation(self.run_generate(&spec, None))
+                ApiResponse::Generation(self.run_generate(&spec, None, None))
             }
-            ApiRequest::BatchGenerate { items } => self.run_batch(items),
+            ApiRequest::BatchGenerate { items } => {
+                // non-socket path: no tag/stream context
+                self.run_batch(items, None)
+            }
             ApiRequest::SessionOpen { policy } => {
                 match self.sessions.open(policy) {
                     Ok((session, policy)) => {
@@ -222,6 +556,9 @@ impl Server {
                     Err(e) => ApiResponse::Error(e),
                 }
             }
+            ApiRequest::Cancel { target } => {
+                ApiResponse::CancelResult { target, cancelled: false }
+            }
         }
     }
 
@@ -232,7 +569,8 @@ impl Server {
         &self,
         id: u64,
         spec: &GenerateSpec,
-        on_token: Option<crate::coordinator::request::TokenSink>,
+        on_token: Option<TokenSink>,
+        abort: Option<AbortHandle>,
     ) -> Result<Request, ApiError> {
         let m = self.coord.engine().manifest();
         let policy = match &spec.policy {
@@ -247,16 +585,20 @@ impl Server {
         }
         let mut req = spec.to_request(id, policy);
         req.on_token = on_token;
+        if let Some(abort) = abort {
+            req.abort = abort;
+        }
         Ok(req)
     }
 
     fn run_generate(
         &self,
         spec: &GenerateSpec,
-        on_token: Option<crate::coordinator::request::TokenSink>,
+        on_token: Option<TokenSink>,
+        abort: Option<AbortHandle>,
     ) -> GenerationResult {
         let id = self.next_id.fetch_add(1, Ordering::SeqCst);
-        match self.build_request(id, spec, on_token) {
+        match self.build_request(id, spec, on_token, abort) {
             Ok(req) => GenerationResult::from_response(self.coord.submit_wait(req)),
             Err(e) => GenerationResult::failed(id, e),
         }
@@ -264,13 +606,33 @@ impl Server {
 
     /// Submit every batch item up front (the coordinator groups
     /// policy-homogeneous prefill/decode batches), then collect in order.
-    fn run_batch(&self, items: Vec<GenerateSpec>) -> ApiResponse {
+    /// In multiplexed mode (`mux` = the batch line's tag, the shared
+    /// abort handle and the connection's outbound channel) items may
+    /// stream — their token frames carry the tag plus the item index —
+    /// and a `cancel` of the tag aborts every item still running
+    /// (per-item `deadline_ms` expires items individually). `mux: None`
+    /// is the non-socket path: no streaming, no cancellation surface.
+    fn run_batch(
+        &self,
+        items: Vec<GenerateSpec>,
+        mux: Option<(u64, &AbortHandle, &Outbound)>,
+    ) -> ApiResponse {
         self.coord.note_batch_submit(items.len());
         let pending: Vec<_> = items
             .iter()
-            .map(|spec| {
+            .enumerate()
+            .map(|(i, spec)| {
                 let id = self.next_id.fetch_add(1, Ordering::SeqCst);
-                (id, self.build_request(id, spec, None).map(|r| self.coord.submit(r)))
+                let sink = match mux {
+                    Some((tag, _, out)) if spec.stream => {
+                        Some(sink_for(out, Some(tag), Some(i)))
+                    }
+                    _ => None,
+                };
+                let abort = mux.map(|(_, a, _)| a.clone());
+                (id, self
+                    .build_request(id, spec, sink, abort)
+                    .map(|r| self.coord.submit(r)))
             })
             .collect();
         ApiResponse::Batch(
@@ -346,65 +708,64 @@ impl Server {
         })
     }
 
-    /// Streaming generation: one `{"token":…,"piece":…}` line per produced
-    /// token, terminated by the standard final response object with
-    /// `"done":true`.
+    /// v1/v2 streaming generation (inline on the reader thread): one
+    /// `{"token":…,"piece":…}` line per produced token — emitted straight
+    /// from the scheduler's token sink into the outbound channel — then
+    /// the standard final response object tagged `"done":true`. Channel
+    /// causality guarantees every token frame precedes the final line.
     fn generate_streaming(
         &self,
         proto: Proto,
         spec: GenerateSpec,
-        out: &mut TcpStream,
-    ) -> Result<()> {
-        let (tx, rx) = std::sync::mpsc::channel::<i32>();
-        let sink: crate::coordinator::request::TokenSink =
-            Arc::new(move |_id, tok| {
-                let _ = tx.send(tok);
-            });
+        out: &Outbound,
+    ) {
         let id = self.next_id.fetch_add(1, Ordering::SeqCst);
-        let handle = match self.build_request(id, &spec, Some(sink)) {
-            Ok(req) => self.coord.submit(req),
-            Err(e) => {
-                let v = api::encode_response(&ApiResponse::Error(e), proto);
-                writeln!(out, "{}", mark_done(v))?;
-                return Ok(());
+        let sink = sink_for(out, None, None);
+        let v = match self.build_request(id, &spec, Some(sink), None) {
+            Ok(req) => {
+                let g =
+                    GenerationResult::from_response(self.coord.submit(req).wait());
+                api::encode_response(&ApiResponse::Generation(g), proto)
             }
+            Err(e) => api::encode_response(&ApiResponse::Error(e), proto),
         };
-        let tok = ByteTokenizer;
-        let emit = |out: &mut TcpStream, t: i32| -> Result<()> {
-            writeln!(out, "{}", Value::obj(vec![
-                ("token", Value::num(t as f64)),
-                ("piece", Value::str_of(tok.decode_lossy(&[t]))),
-            ]))?;
-            Ok(())
-        };
-        loop {
-            match rx.recv_timeout(std::time::Duration::from_millis(20)) {
-                Ok(t) => emit(out, t)?,
-                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
-                    if let Some(resp) = handle.try_get() {
-                        // drain any raced tokens first
-                        while let Ok(t) = rx.try_recv() {
-                            emit(out, t)?;
-                        }
-                        let g = GenerationResult::from_response(resp);
-                        let v = api::encode_response(
-                            &ApiResponse::Generation(g),
-                            proto,
-                        );
-                        writeln!(out, "{}", mark_done(v))?;
-                        return Ok(());
-                    }
-                }
-                Err(_) => {
-                    let g = GenerationResult::from_response(handle.wait());
-                    let v =
-                        api::encode_response(&ApiResponse::Generation(g), proto);
-                    writeln!(out, "{}", mark_done(v))?;
-                    return Ok(());
-                }
-            }
-        }
+        out.line(&mark_done(v));
     }
+}
+
+/// Enforce tag freshness for a v3 line: if `tag` is currently in flight
+/// on this connection, emit an (deliberately untagged — a done-tagged
+/// reply would falsely complete the original request) protocol error and
+/// return Err, which the reader treats as connection-fatal, like HTTP/2
+/// stream-id reuse. Ok when the tag is free.
+fn duplicate_tag_violation(
+    tag: u64,
+    conn: &ConnState,
+    out: &Outbound,
+) -> Result<()> {
+    if conn.inflight.lock().unwrap().contains_key(&tag) {
+        out.line(&api::encode_response(
+            &ApiResponse::Error(ApiError::bad_field(
+                "tag",
+                "already in flight on this connection",
+            )),
+            Proto::V3,
+        ));
+        anyhow::bail!("duplicate in-flight tag {tag}");
+    }
+    Ok(())
+}
+
+/// Streaming token sink writing frames into a connection's outbound
+/// channel: v1/v2 shape when `tag` is None, v3 tagged frames otherwise
+/// (`item` = batch item index). Runs on the scheduler thread — the
+/// unbounded channel means a slow-reading client never blocks decode.
+fn sink_for(out: &Outbound, tag: Option<u64>, item: Option<usize>) -> TokenSink {
+    let out = out.clone();
+    Arc::new(move |_id, t| {
+        let tok = ByteTokenizer;
+        out.line(&api::stream_frame(tag, item, t, &tok.decode_lossy(&[t])));
+    })
 }
 
 /// Tag a streaming final line with `"done":true`.
@@ -415,9 +776,11 @@ fn mark_done(mut v: Value) -> Value {
     v
 }
 
-/// Minimal blocking client for tests/examples. Requests go out through the
-/// typed [`ApiRequest`] codec ([`Client::send`]); `call` remains for raw
-/// lines (v1 compat tests).
+/// Minimal blocking client for tests/examples: strict one-request-at-a-
+/// time over the v2 framing. Requests go out through the typed
+/// [`ApiRequest`] codec ([`Client::send`]); `call` remains for raw lines
+/// (v1 compat tests). For concurrent tagged requests on one socket use
+/// [`MuxClient`].
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
@@ -445,6 +808,142 @@ impl Client {
     }
 }
 
+/// Multiplexed v3 client: submits tagged requests concurrently on ONE
+/// socket and demultiplexes the out-of-order replies by tag. A background
+/// reader thread routes each frame to its request's channel; stream
+/// frames and the final (`"done":true`) line arrive on the same
+/// [`MuxPending`].
+pub struct MuxClient {
+    writer: Mutex<TcpStream>,
+    next_tag: AtomicU64,
+    pending: Arc<Mutex<HashMap<u64, Sender<Value>>>>,
+    /// Set by the reader thread (before it clears the pending map) once
+    /// the connection dies, so a later `submit` fails fast instead of
+    /// returning a pending nobody will ever answer.
+    closed: Arc<AtomicBool>,
+}
+
+/// One in-flight tagged request: a receiver for its frames.
+pub struct MuxPending {
+    pub tag: u64,
+    rx: Receiver<Value>,
+}
+
+impl MuxClient {
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        let pending: Arc<Mutex<HashMap<u64, Sender<Value>>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+        let closed = Arc::new(AtomicBool::new(false));
+        let map = pending.clone();
+        let closed_flag = closed.clone();
+        let rstream = stream.try_clone()?;
+        std::thread::Builder::new()
+            .name("asymkv-mux-reader".into())
+            .spawn(move || {
+                let mut reader = BufReader::new(rstream);
+                let mut line = String::new();
+                loop {
+                    line.clear();
+                    match reader.read_line(&mut line) {
+                        Ok(0) | Err(_) => break,
+                        Ok(_) => {}
+                    }
+                    let Ok(v) = crate::util::json::parse(line.trim()) else {
+                        continue;
+                    };
+                    let Some(tag) = v.get("tag").as_i64() else {
+                        continue; // untagged protocol-level error line
+                    };
+                    let tag = tag as u64;
+                    let done = v.get("done").as_bool() == Some(true);
+                    let mut map = map.lock().unwrap();
+                    if let Some(tx) = map.get(&tag) {
+                        let _ = tx.send(v);
+                        if done {
+                            map.remove(&tag);
+                        }
+                    }
+                }
+                // connection gone: flag it FIRST (so new submits fail
+                // fast), then drop the senders so every pending receiver
+                // errors instead of hanging
+                closed_flag.store(true, Ordering::SeqCst);
+                map.lock().unwrap().clear();
+            })?;
+        Ok(Self {
+            writer: Mutex::new(stream),
+            next_tag: AtomicU64::new(1),
+            pending,
+            closed,
+        })
+    }
+
+    /// Submit a request under a fresh tag; returns immediately with the
+    /// pending handle. Many submissions may be outstanding at once.
+    pub fn submit(&self, req: &ApiRequest) -> Result<MuxPending> {
+        let tag = self.next_tag.fetch_add(1, Ordering::SeqCst);
+        let (tx, rx) = mpsc::channel();
+        // register BEFORE sending: the reply can arrive arbitrarily fast
+        self.pending.lock().unwrap().insert(tag, tx);
+        let line = api::encode_request_tagged(req, tag);
+        let sent = writeln!(self.writer.lock().unwrap(), "{line}");
+        if let Err(e) = sent {
+            self.pending.lock().unwrap().remove(&tag);
+            return Err(e.into());
+        }
+        // A write into a half-closed TCP socket can still succeed (EPIPE
+        // only surfaces on a LATER write), so also consult the reader's
+        // flag: either it was set before this check (fail fast here), or
+        // the reader's subsequent map-clear drops our sender and recv()
+        // errors — never a silent forever-hang.
+        if self.closed.load(Ordering::SeqCst) {
+            self.pending.lock().unwrap().remove(&tag);
+            anyhow::bail!("connection closed");
+        }
+        Ok(MuxPending { tag, rx })
+    }
+
+    /// Cancel the request behind `pending` (by its tag). Returns the
+    /// cancel op's own pending reply (`{"target":…,"cancelled":…}`).
+    pub fn cancel(&self, target: u64) -> Result<MuxPending> {
+        self.submit(&ApiRequest::Cancel { target })
+    }
+}
+
+impl Drop for MuxClient {
+    /// Shut the socket down on both halves: the background reader thread
+    /// holds a clone of the stream, so without an explicit shutdown the
+    /// OS socket (and therefore the server's view of the connection, and
+    /// every request it still has in flight) would outlive the client.
+    fn drop(&mut self) {
+        if let Ok(stream) = self.writer.lock() {
+            let _ = stream.shutdown(std::net::Shutdown::Both);
+        }
+    }
+}
+
+impl MuxPending {
+    /// Next frame for this request (stream token lines, then the final
+    /// `"done":true` object). Errors if the connection closed first.
+    pub fn recv(&self) -> Result<Value> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("connection closed mid-request"))
+    }
+
+    /// Drain frames until the final (`"done":true`) line and return it.
+    pub fn wait_done(&self) -> Result<Value> {
+        loop {
+            let v = self.recv()?;
+            if v.get("done").as_bool() == Some(true) {
+                return Ok(v);
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -461,6 +960,21 @@ mod tests {
         let (proto, back) = api::decode_request(&wire, 4).unwrap();
         assert_eq!(proto, Proto::V2);
         assert_eq!(back, req);
+    }
+
+    #[test]
+    fn mux_client_lines_are_canonical_v3() {
+        let req = ApiRequest::Generate(GenerateSpec {
+            prompt: "hi".into(),
+            n_gen: 4,
+            stream: true,
+            deadline_ms: Some(750),
+            ..Default::default()
+        });
+        let wire = api::encode_request_tagged(&req, 11).to_string();
+        let f = api::decode_frame(&wire, 4).unwrap();
+        assert_eq!((f.proto, f.tag), (Proto::V3, Some(11)));
+        assert_eq!(f.req, req);
     }
 
     #[test]

@@ -1,22 +1,35 @@
 //! Full-stack test: TCP server → typed api → coordinator → engine →
-//! artifacts. Covers the v2 protocol (typed errors, batch submit,
-//! sessions, policy management) and the v1 compat shim.
+//! artifacts. Covers the multiplexed v3 protocol (tagged concurrent
+//! requests, cancellation, deadlines, universal streaming), the v2
+//! protocol (typed errors, batch submit, sessions, policy management)
+//! and the v1 compat shim.
 
 mod common;
 
 use std::sync::Arc;
 
-use asymkv::api::{ApiRequest, GenerateSpec};
+use asymkv::api::{ApiRequest, GenerateSpec, SessionConfig};
 use asymkv::coordinator::{Coordinator, CoordinatorConfig, Request};
 use asymkv::model::ByteTokenizer;
 use asymkv::quant::QuantPolicy;
-use asymkv::server::{Client, Server};
+use asymkv::server::{Client, MuxClient, Server};
 use asymkv::util::json::Value;
 
 /// Boot a server over `coord`; returns (server, addr). The accept loop
 /// thread exits on `server.request_stop()`.
 fn boot(coord: Arc<Coordinator>) -> (Arc<Server>, String) {
-    let server = Arc::new(Server::bind(coord, "127.0.0.1:0").unwrap());
+    boot_with(coord, |_| {})
+}
+
+/// Boot with a hook to adjust the server (inflight cap, session config is
+/// set via `Server::bind_with` callers) before the accept loop starts.
+fn boot_with(
+    coord: Arc<Coordinator>,
+    tweak: impl FnOnce(&mut Server),
+) -> (Arc<Server>, String) {
+    let mut server = Server::bind(coord, "127.0.0.1:0").unwrap();
+    tweak(&mut server);
+    let server = Arc::new(server);
     let addr = server.local_addr();
     {
         let srv = server.clone();
@@ -665,4 +678,433 @@ fn preemption_requeues_and_preserves_output() {
         "expected mid-decode preemptions under a {} byte budget",
         one + one / 2
     );
+}
+
+// ---------------------------------------------------------------------------
+// v3: multiplexed tagged requests, cancellation, deadlines, streaming
+// ---------------------------------------------------------------------------
+
+#[test]
+fn v3_eight_concurrent_tagged_requests_one_socket() {
+    let Some(engine) = common::engine_for("tiny") else { return };
+    let coord = Coordinator::start(engine, CoordinatorConfig::default());
+    let (server, addr) = boot(coord);
+    let mux = MuxClient::connect(&addr).unwrap();
+
+    // 8 generates with DISTINCT n_gen submitted before reading a single
+    // reply: each reply must come back on its own tag with its own token
+    // count — a cross-tag mixup cannot produce 8 distinct correct counts
+    let pendings: Vec<_> = (0..8usize)
+        .map(|i| {
+            mux.submit(&ApiRequest::Generate(GenerateSpec {
+                prompt: "the ox runs. the".into(),
+                n_gen: 16 + i,
+                ..Default::default()
+            }))
+            .unwrap()
+        })
+        .collect();
+    // all 8 are registered long before the first finishes 16+ decode
+    // steps — the peak gauge must have seen the full fan-in
+    for (i, p) in pendings.iter().enumerate() {
+        let v = p.wait_done().unwrap();
+        assert_eq!(v.get("v").as_i64(), Some(3), "{v}");
+        assert_eq!(v.get("tag").as_i64(), Some(p.tag as i64), "{v}");
+        assert_eq!(v.get("error"), &Value::Null, "{v}");
+        assert_eq!(
+            v.get("tokens").as_arr().unwrap().len(),
+            16 + i,
+            "tag {} got the wrong generation",
+            p.tag
+        );
+    }
+    let stats = mux.submit(&ApiRequest::Stats).unwrap().wait_done().unwrap();
+    assert!(
+        stats.get("inflight_peak").as_i64().unwrap() >= 8,
+        "one socket must sustain 8 concurrent in-flight requests: {stats}"
+    );
+    assert_eq!(stats.get("inflight").as_i64(), Some(0), "{stats}");
+    server.request_stop();
+}
+
+#[test]
+fn v3_instant_ops_overtake_inflight_generation() {
+    let Some(engine) = common::engine_for("tiny") else { return };
+    let coord = Coordinator::start(engine, CoordinatorConfig::default());
+    let (server, addr) = boot(coord);
+    let mux = MuxClient::connect(&addr).unwrap();
+
+    // a long generation is submitted FIRST...
+    let slow = mux
+        .submit(&ApiRequest::Generate(GenerateSpec {
+            prompt: "the ox runs. the".into(),
+            n_gen: 48,
+            ..Default::default()
+        }))
+        .unwrap();
+    // ...yet stats (submitted second) replies first, and observes the
+    // generation still in flight — out-of-order, tag-correlated replies
+    let stats = mux.submit(&ApiRequest::Stats).unwrap().wait_done().unwrap();
+    assert!(
+        stats.get("inflight").as_i64().unwrap() >= 1,
+        "the generation must still be running when stats answers: {stats}"
+    );
+    let done = slow.wait_done().unwrap();
+    assert_eq!(done.get("tokens").as_arr().unwrap().len(), 48, "{done}");
+    server.request_stop();
+}
+
+#[test]
+fn v3_cancel_mid_stream_frees_pool_pages() {
+    let Some(engine) = common::engine_for("tiny") else { return };
+    let baseline = engine.pool.stats().in_use_bytes;
+    let coord = Coordinator::start(engine, CoordinatorConfig::default());
+    let (server, addr) = boot(coord);
+    let mux = MuxClient::connect(&addr).unwrap();
+
+    // a long streaming generation (100 decode steps at tiny geometry)
+    let gen = mux
+        .submit(&ApiRequest::Generate(GenerateSpec {
+            prompt: "the ox runs. ".into(),
+            n_gen: 100,
+            stream: true,
+            ..Default::default()
+        }))
+        .unwrap();
+    // read a few streamed tokens to prove it is mid-decode...
+    for _ in 0..3 {
+        let f = gen.recv().unwrap();
+        assert!(f.get("token").as_i64().is_some(), "{f}");
+        assert_eq!(f.get("tag").as_i64(), Some(gen.tag as i64), "{f}");
+    }
+    // ...then cancel it
+    let cr = mux.cancel(gen.tag).unwrap().wait_done().unwrap();
+    assert_eq!(cr.get("cancelled").as_bool(), Some(true), "{cr}");
+    assert_eq!(cr.get("target").as_i64(), Some(gen.tag as i64), "{cr}");
+    // the request completes with the typed cancelled error (after at most
+    // a handful of frames that raced the cancel)
+    let done = gen.wait_done().unwrap();
+    assert_eq!(
+        done.get("error").get("code").as_str(),
+        Some("cancelled"),
+        "{done}"
+    );
+    // the sequence's pool pages were freed BEFORE the final frame was
+    // fulfilled — resident bytes are already back at baseline
+    let ps = server.coord.engine().pool.stats();
+    assert_eq!(ps.in_use_bytes, baseline, "cancel must free pages: {ps:?}");
+    assert_eq!(ps.n_seqs, 0);
+    // the abort is counted as a cancel, not a failure
+    let stats = mux.submit(&ApiRequest::Stats).unwrap().wait_done().unwrap();
+    assert_eq!(stats.get("cancelled").as_i64(), Some(1), "{stats}");
+    assert_eq!(stats.get("requests_failed").as_i64(), Some(0), "{stats}");
+    // cancelling a finished (or unknown) tag reports false
+    let cr = mux.cancel(gen.tag).unwrap().wait_done().unwrap();
+    assert_eq!(cr.get("cancelled").as_bool(), Some(false), "{cr}");
+    server.request_stop();
+}
+
+#[test]
+fn v3_deadline_expires_queued_request() {
+    let Some(engine) = common::engine_for("tiny") else { return };
+    // single-slot coordinator: the second request stays QUEUED while the
+    // first runs its 150 decode steps
+    let coord = Coordinator::start(
+        engine,
+        CoordinatorConfig {
+            max_active: 1,
+            max_batch: 2,
+            batch_window: std::time::Duration::from_millis(1),
+            prefix_cache_bytes: 0,
+        },
+    );
+    let (server, addr) = boot(coord);
+    let mux = MuxClient::connect(&addr).unwrap();
+    let slow = mux
+        .submit(&ApiRequest::Generate(GenerateSpec {
+            prompt: "the ox runs. ".into(),
+            n_gen: 150,
+            stream: true,
+            ..Default::default()
+        }))
+        .unwrap();
+    // wait for the first streamed token: the slow request now owns the
+    // single active slot with ~149 decode steps to go, so the doomed one
+    // below is deterministically QUEUED when its 5 ms deadline passes
+    let first = slow.recv().unwrap();
+    assert!(first.get("token").as_i64().is_some(), "{first}");
+    let doomed = mux
+        .submit(&ApiRequest::Generate(GenerateSpec {
+            prompt: "the fox hides. ".into(),
+            n_gen: 4,
+            deadline_ms: Some(5),
+            ..Default::default()
+        }))
+        .unwrap();
+    let v = doomed.wait_done().unwrap();
+    assert_eq!(
+        v.get("error").get("code").as_str(),
+        Some("deadline_exceeded"),
+        "{v}"
+    );
+    let fin = slow.wait_done().unwrap();
+    assert_eq!(fin.get("tokens").as_arr().unwrap().len(), 150, "{fin}");
+    let stats = mux.submit(&ApiRequest::Stats).unwrap().wait_done().unwrap();
+    assert_eq!(stats.get("deadline_expired").as_i64(), Some(1), "{stats}");
+    server.request_stop();
+}
+
+#[test]
+fn v3_slow_reader_stream_does_not_stall_other_requests() {
+    let Some(engine) = common::engine_for("tiny") else { return };
+    let coord = Coordinator::start(engine, CoordinatorConfig::default());
+    let (server, addr) = boot(coord);
+
+    // raw socket: submit a long STREAM plus three quick generates, then
+    // read NOTHING for a while (slow client). The server must keep all
+    // four advancing into its outbound buffer; the quick finals must
+    // arrive BEFORE the stream's final even though the stream was
+    // submitted first.
+    use std::io::{BufRead, BufReader, Write};
+    let stream = std::net::TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut w = stream;
+    writeln!(
+        w,
+        r#"{{"v":3,"tag":1,"op":"generate","prompt":"the ox runs. ","n_gen":40,"stream":true}}"#
+    )
+    .unwrap();
+    for tag in 2..=4 {
+        writeln!(
+            w,
+            r#"{{"v":3,"tag":{tag},"op":"generate","prompt":"the fox hides. ","n_gen":2}}"#
+        )
+        .unwrap();
+    }
+    std::thread::sleep(std::time::Duration::from_millis(300));
+    let mut final_order = Vec::new();
+    let mut stream_frames = 0usize;
+    while final_order.len() < 4 {
+        let mut line = String::new();
+        assert!(reader.read_line(&mut line).unwrap() > 0, "early EOF");
+        let v = asymkv::util::json::parse(line.trim()).unwrap();
+        let tag = v.get("tag").as_i64().unwrap();
+        if v.get("done").as_bool() == Some(true) {
+            final_order.push(tag);
+        } else {
+            assert_eq!(tag, 1, "only tag 1 streams: {v}");
+            stream_frames += 1;
+        }
+    }
+    assert_eq!(stream_frames, 40, "one frame per streamed token");
+    assert_eq!(
+        final_order.last(),
+        Some(&1),
+        "quick requests must finish ahead of the long stream: {final_order:?}"
+    );
+    assert_eq!(final_order.len(), 4);
+    server.request_stop();
+}
+
+#[test]
+fn v3_too_many_inflight_is_typed_error() {
+    let Some(engine) = common::engine_for("tiny") else { return };
+    let coord = Coordinator::start(engine, CoordinatorConfig::default());
+    let (server, addr) = boot_with(coord, |s| s.max_inflight = 2);
+    let mux = MuxClient::connect(&addr).unwrap();
+    let a = mux
+        .submit(&ApiRequest::Generate(GenerateSpec {
+            prompt: "the ox runs. ".into(),
+            n_gen: 32,
+            ..Default::default()
+        }))
+        .unwrap();
+    let b = mux
+        .submit(&ApiRequest::Generate(GenerateSpec {
+            prompt: "the fox hides. ".into(),
+            n_gen: 32,
+            ..Default::default()
+        }))
+        .unwrap();
+    // third concurrent submit exceeds the connection's cap
+    let c = mux
+        .submit(&ApiRequest::Generate(GenerateSpec {
+            prompt: "the hen sleeps. ".into(),
+            n_gen: 2,
+            ..Default::default()
+        }))
+        .unwrap();
+    let v = c.wait_done().unwrap();
+    assert_eq!(
+        v.get("error").get("code").as_str(),
+        Some("too_many_inflight"),
+        "{v}"
+    );
+    // the two admitted requests are unaffected
+    assert_eq!(a.wait_done().unwrap().get("tokens").as_arr().unwrap().len(), 32);
+    assert_eq!(b.wait_done().unwrap().get("tokens").as_arr().unwrap().len(), 32);
+    server.request_stop();
+}
+
+#[test]
+fn v3_session_append_and_batch_items_stream() {
+    let Some(engine) = common::engine_for("tiny") else { return };
+    let n = engine.manifest().n_layers;
+    let coord = Coordinator::start(engine, CoordinatorConfig::default());
+    let (server, addr) = boot(coord);
+    let mux = MuxClient::connect(&addr).unwrap();
+
+    // streaming session turn (v3-only surface)
+    let opened = mux
+        .submit(&ApiRequest::SessionOpen {
+            policy: Some(QuantPolicy::float32(n)),
+        })
+        .unwrap()
+        .wait_done()
+        .unwrap();
+    let session = opened.get("session").as_i64().unwrap() as u64;
+    let turn = mux
+        .submit(&ApiRequest::SessionAppend {
+            session,
+            spec: GenerateSpec {
+                prompt: "the ox runs. ".into(),
+                n_gen: 4,
+                stream: true,
+                ..Default::default()
+            },
+        })
+        .unwrap();
+    let mut tokens = 0;
+    let fin = loop {
+        let f = turn.recv().unwrap();
+        if f.get("done").as_bool() == Some(true) {
+            break f;
+        }
+        assert!(f.get("token").as_i64().is_some(), "{f}");
+        tokens += 1;
+    };
+    assert_eq!(tokens, 4, "one frame per turn token");
+    assert_eq!(fin.get("turn").as_i64(), Some(1), "{fin}");
+    assert_eq!(fin.get("tokens").as_arr().unwrap().len(), 4);
+    mux.submit(&ApiRequest::SessionClose { session })
+        .unwrap()
+        .wait_done()
+        .unwrap();
+
+    // batch with one streaming item: its frames carry the item index
+    let batch = mux
+        .submit(&ApiRequest::BatchGenerate {
+            items: vec![
+                GenerateSpec {
+                    prompt: "the ox runs. ".into(),
+                    n_gen: 2,
+                    ..Default::default()
+                },
+                GenerateSpec {
+                    prompt: "the fox hides. ".into(),
+                    n_gen: 3,
+                    stream: true,
+                    ..Default::default()
+                },
+            ],
+        })
+        .unwrap();
+    let mut item_frames = 0;
+    let fin = loop {
+        let f = batch.recv().unwrap();
+        if f.get("done").as_bool() == Some(true) {
+            break f;
+        }
+        assert_eq!(f.get("item").as_i64(), Some(1), "{f}");
+        item_frames += 1;
+    };
+    assert_eq!(item_frames, 3, "one frame per streamed item token");
+    let results = fin.get("results").as_arr().unwrap();
+    assert_eq!(results[0].get("tokens").as_arr().unwrap().len(), 2);
+    assert_eq!(results[1].get("tokens").as_arr().unwrap().len(), 3);
+    server.request_stop();
+}
+
+#[test]
+fn dropped_connection_cancels_inflight_work() {
+    let Some(engine) = common::engine_for("tiny") else { return };
+    let baseline = engine.pool.stats().in_use_bytes;
+    let coord = Coordinator::start(engine, CoordinatorConfig::default());
+    let (server, addr) = boot(coord);
+    {
+        let mux = MuxClient::connect(&addr).unwrap();
+        let _abandoned = mux
+            .submit(&ApiRequest::Generate(GenerateSpec {
+                prompt: "the ox runs. ".into(),
+                n_gen: 120,
+                ..Default::default()
+            }))
+            .unwrap();
+        // give the server a moment to admit it mid-decode
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        drop(mux); // client walks away without cancelling
+    }
+    // the reader thread's EOF cleanup cancels the orphan; its pages come
+    // back within a decode step or two
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+    loop {
+        let ps = server.coord.engine().pool.stats();
+        if ps.in_use_bytes == baseline && ps.n_seqs == 0 {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "orphaned request still resident: {ps:?}"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    assert!(server.coord.metrics().cancelled >= 1);
+    server.request_stop();
+}
+
+#[test]
+fn housekeeping_tick_evicts_idle_sessions_without_traffic() {
+    let Some(engine) = common::engine_for("tiny") else { return };
+    let n = engine.manifest().n_layers;
+    let coord = Coordinator::start(engine, CoordinatorConfig::default());
+    let server = Arc::new(
+        Server::bind_with(
+            coord,
+            "127.0.0.1:0",
+            SessionConfig {
+                idle_timeout: std::time::Duration::from_millis(100),
+                max_sessions: 4,
+            },
+        )
+        .unwrap(),
+    );
+    let addr = server.local_addr();
+    {
+        let srv = server.clone();
+        std::thread::spawn(move || srv.serve());
+    }
+    let mut client = Client::connect(&addr).unwrap();
+    let opened = client
+        .send(&ApiRequest::SessionOpen { policy: Some(QuantPolicy::float32(n)) })
+        .unwrap();
+    assert!(opened.get("session").as_i64().is_some(), "{opened}");
+    assert_eq!(server.coord.engine().pool.stats().pinned_seqs, 1);
+
+    // NO further traffic: the housekeeping tick alone must evict the idle
+    // session and release its pinned sequence (the old request-path sweep
+    // would have left it resident forever on a quiet server)
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+    loop {
+        let ps = server.coord.engine().pool.stats();
+        if ps.pinned_seqs == 0 && ps.n_seqs == 0 {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "idle session not evicted by housekeeping: {ps:?}"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+    assert_eq!(server.coord.metrics().sessions_evicted, 1);
+    server.request_stop();
 }
