@@ -1,0 +1,274 @@
+//! Calibration-subsystem benches, pure-Rust (no artifacts needed), so they
+//! run everywhere including CI's bench-smoke job.
+//!
+//! 1. In-place code-domain requant (the pressure downshift's kernel) vs
+//!    the golden refold-from-float path it replaces byte-identically
+//!    (scalar `unfold_*`@high → `fold_*`@low). Emits
+//!    `requant_inplace_{k,v}_<high>to<low>` records whose
+//!    `ratio_vs_refold` uses min-over-samples (structural,
+//!    scheduler-noise robust); CI gates the (2→1) pairs at ≥ 2×.
+//! 2. The budget solver's frontier: solve time across a budget sweep on a
+//!    synthetic 32-layer profile over the full 4×4 grid, with a
+//!    monotonicity audit of the predicted-damage frontier (more budget
+//!    must never predict more damage).
+
+use asymkv::calib::{profile_synthetic, solve_budget};
+use asymkv::quant::kernels::requant::{requant_k_group, requant_v_group};
+use asymkv::quant::kernels::{
+    fold_k_group_with, fold_v_group_with, packed_len, unfold_k_group_with,
+    unfold_v_group_with, GroupParams, KernelMode,
+};
+use asymkv::quant::QuantPolicy;
+use asymkv::util::bench::{self, fmt_duration, time_fn, JsonReport, Table};
+use asymkv::util::json::Value;
+use asymkv::util::rng::SplitMix;
+
+const PAIRS: [(u8, u8); 3] = [(2, 1), (4, 1), (8, 2)];
+
+fn zeroed(n: usize) -> Vec<GroupParams> {
+    vec![GroupParams { scale: 0.0, zero: 0.0 }; n]
+}
+
+fn main() {
+    let (g, dh, g2) = (32usize, 128usize, 32usize);
+    let n_groups: usize = if bench::smoke() { 4 } else { 64 };
+    let reps = bench::samples(200);
+    let warm = bench::warmup(10);
+    let mut rng = SplitMix::new(0xCA11B);
+    let xs: Vec<f32> = rng.normal_f32_vec(n_groups * g * dh);
+
+    bench::note(
+        "bench_calib",
+        &format!(
+            "\nIn-place requant vs refold-from-float — {n_groups} cold groups \
+             of [{g}, {dh}] (g2={g2}), {reps} samples"
+        ),
+    );
+    let mut t = Table::new(
+        "downshift kernel: requant in place vs golden refold (per region)",
+        &["side", "pair", "refold p50", "requant p50", "ratio (min/min)"],
+    );
+    let mut report = JsonReport::at_root("BENCH_kernels.json");
+    let float_bytes = n_groups * g * dh * 4;
+
+    for (high, low) in PAIRS {
+        let kernel_cfg = |ratio: f64, refold_p50: f64| {
+            Value::obj(vec![
+                ("g", Value::num(g as f64)),
+                ("dh", Value::num(dh as f64)),
+                ("g2", Value::num(g2 as f64)),
+                ("n_groups", Value::num(n_groups as f64)),
+                ("high", Value::num(high as f64)),
+                ("low", Value::num(low as f64)),
+                ("baseline", Value::str_of("scalar unfold@high + fold@low (golden)")),
+                ("refold_p50_s", Value::num(refold_p50)),
+                ("ratio_vs_refold", Value::num(ratio)),
+            ])
+        };
+
+        // ---- K side: [G·bits/8, Dh] per-channel layout -----------------
+        let rows_h = packed_len(g, high);
+        let rows_l = packed_len(g, low);
+        let mut k_hi = vec![0u8; n_groups * rows_h * dh];
+        let mut kp_hi = zeroed(n_groups * dh);
+        for gi in 0..n_groups {
+            fold_k_group_with(
+                KernelMode::Scalar,
+                &xs[gi * g * dh..(gi + 1) * g * dh],
+                g,
+                dh,
+                high,
+                &mut k_hi[gi * rows_h * dh..(gi + 1) * rows_h * dh],
+                &mut kp_hi[gi * dh..(gi + 1) * dh],
+            );
+        }
+        let mut floats = vec![0f32; g * dh];
+        let mut out_pk = vec![0u8; rows_l * dh];
+        let mut out_p = zeroed(dh);
+        let t_refold = time_fn(warm, reps, || {
+            for gi in 0..n_groups {
+                unfold_k_group_with(
+                    KernelMode::Scalar,
+                    &k_hi[gi * rows_h * dh..(gi + 1) * rows_h * dh],
+                    g,
+                    dh,
+                    high,
+                    &kp_hi[gi * dh..(gi + 1) * dh],
+                    &mut floats,
+                );
+                fold_k_group_with(
+                    KernelMode::Scalar, &floats, g, dh, low, &mut out_pk, &mut out_p,
+                );
+                std::hint::black_box(&out_pk);
+            }
+        });
+        let t_requant = time_fn(warm, reps, || {
+            for gi in 0..n_groups {
+                requant_k_group(
+                    &k_hi[gi * rows_h * dh..(gi + 1) * rows_h * dh],
+                    &kp_hi[gi * dh..(gi + 1) * dh],
+                    g,
+                    dh,
+                    high,
+                    low,
+                    &mut out_pk,
+                    &mut out_p,
+                );
+                std::hint::black_box(&out_pk);
+            }
+        });
+        let ratio = t_refold.min() / t_requant.min();
+        t.row(vec![
+            "K".into(),
+            format!("{high}->{low}"),
+            fmt_duration(t_refold.p50()),
+            fmt_duration(t_requant.p50()),
+            format!("{ratio:.2}x"),
+        ]);
+        report.add(
+            &format!("requant_inplace_k_{high}to{low}"),
+            &t_requant,
+            float_bytes,
+            kernel_cfg(ratio, t_refold.p50()),
+        );
+
+        // ---- V side: [G, Dh·bits/8] per-token layout -------------------
+        let bpt_h = packed_len(dh, high);
+        let bpt_l = packed_len(dh, low);
+        let dg = dh / g2;
+        let mut v_hi = vec![0u8; n_groups * g * bpt_h];
+        let mut vp_hi = zeroed(n_groups * g * dg);
+        for gi in 0..n_groups {
+            fold_v_group_with(
+                KernelMode::Scalar,
+                &xs[gi * g * dh..(gi + 1) * g * dh],
+                g,
+                dh,
+                g2,
+                high,
+                &mut v_hi[gi * g * bpt_h..(gi + 1) * g * bpt_h],
+                &mut vp_hi[gi * g * dg..(gi + 1) * g * dg],
+            );
+        }
+        let mut out_vpk = vec![0u8; g * bpt_l];
+        let mut out_vp = zeroed(g * dg);
+        let t_refold_v = time_fn(warm, reps, || {
+            for gi in 0..n_groups {
+                unfold_v_group_with(
+                    KernelMode::Scalar,
+                    &v_hi[gi * g * bpt_h..(gi + 1) * g * bpt_h],
+                    g,
+                    dh,
+                    g2,
+                    high,
+                    &vp_hi[gi * g * dg..(gi + 1) * g * dg],
+                    &mut floats,
+                );
+                fold_v_group_with(
+                    KernelMode::Scalar, &floats, g, dh, g2, low, &mut out_vpk, &mut out_vp,
+                );
+                std::hint::black_box(&out_vpk);
+            }
+        });
+        let t_requant_v = time_fn(warm, reps, || {
+            for gi in 0..n_groups {
+                requant_v_group(
+                    &v_hi[gi * g * bpt_h..(gi + 1) * g * bpt_h],
+                    &vp_hi[gi * g * dg..(gi + 1) * g * dg],
+                    g,
+                    dh,
+                    g2,
+                    high,
+                    low,
+                    &mut out_vpk,
+                    &mut out_vp,
+                );
+                std::hint::black_box(&out_vpk);
+            }
+        });
+        let ratio_v = t_refold_v.min() / t_requant_v.min();
+        t.row(vec![
+            "V".into(),
+            format!("{high}->{low}"),
+            fmt_duration(t_refold_v.p50()),
+            fmt_duration(t_requant_v.p50()),
+            format!("{ratio_v:.2}x"),
+        ]);
+        report.add(
+            &format!("requant_inplace_v_{high}to{low}"),
+            &t_requant_v,
+            float_bytes,
+            kernel_cfg(ratio_v, t_refold_v.p50()),
+        );
+    }
+    t.emit("bench_calib");
+
+    // ---- budget solver frontier ---------------------------------------
+    let (n_layers, n_heads, d_head, group) = (32usize, 8usize, 64usize, 32usize);
+    let bits = [1u8, 2, 4];
+    let n_tokens = if bench::smoke() { 64 } else { 160 };
+    let profile =
+        profile_synthetic(n_layers, n_heads, d_head, group, n_tokens, 0xC0FFEE, &bits);
+    let mut grid: Vec<(u8, u8)> = Vec::new();
+    for k in [0u8, 1, 2, 4] {
+        for v in [0u8, 1, 2, 4] {
+            grid.push((k, v));
+        }
+    }
+    let floor = QuantPolicy::kivi(n_layers, 1).bytes_per_token(n_heads, d_head, group);
+    let budgets: Vec<usize> = [100, 105, 110, 125, 150, 200, 400, 1600]
+        .iter()
+        .map(|pct| floor * pct / 100)
+        .collect();
+
+    let mut ft = Table::new(
+        "solver frontier (32 layers, full 4x4 grid)",
+        &["budget B/tok", "spent B/tok", "damage", "upgrades", "solve p50"],
+    );
+    let mut last_damage = f64::INFINITY;
+    let mut monotone = true;
+    let mut total = asymkv::util::bench::Timing { samples: Vec::new() };
+    for &budget in &budgets {
+        let tm = time_fn(warm, reps, || {
+            let s = solve_budget(&profile, &grid, n_heads, d_head, group, budget)
+                .expect("budget >= floor must be solvable");
+            std::hint::black_box(&s);
+        });
+        let s = solve_budget(&profile, &grid, n_heads, d_head, group, budget).unwrap();
+        if s.predicted_damage > last_damage + 1e-12 {
+            monotone = false;
+        }
+        last_damage = s.predicted_damage;
+        ft.row(vec![
+            budget.to_string(),
+            s.bytes_per_token.to_string(),
+            format!("{:.4}", s.predicted_damage),
+            s.steps.len().to_string(),
+            fmt_duration(tm.p50()),
+        ]);
+        total.samples.extend(tm.samples);
+    }
+    assert!(monotone, "predicted-damage frontier must be monotone in budget");
+    ft.emit("bench_calib");
+    report.add(
+        "calib_solver_frontier",
+        &total,
+        n_layers * grid.len(),
+        Value::obj(vec![
+            ("n_layers", Value::num(n_layers as f64)),
+            ("grid_pairs", Value::num(grid.len() as f64)),
+            ("budgets", Value::num(budgets.len() as f64)),
+            ("floor_bytes_per_token", Value::num(floor as f64)),
+            ("monotone", Value::Bool(monotone)),
+            (
+                "note",
+                Value::str_of(
+                    "per-solve timing pooled over the budget sweep; damage \
+                     frontier asserted monotone in budget",
+                ),
+            ),
+        ]),
+    );
+
+    report.write().expect("writing BENCH_kernels.json");
+}

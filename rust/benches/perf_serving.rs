@@ -115,6 +115,7 @@ fn main() -> anyhow::Result<()> {
             max_batch,
             batch_window: std::time::Duration::from_millis(2),
             prefix_cache_bytes: 0,
+            downshift: true,
         };
         let (tput, ttft, p95) = run_trace(engine.clone(), cfg, &policy, n_req);
         t2.row(vec![

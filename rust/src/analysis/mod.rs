@@ -196,6 +196,7 @@ pub fn attention_flip_rate(
     let mut flips = 0usize;
     let mut total = 0usize;
     let mut margin_sum = 0.0f64;
+    let mut margin_n = 0usize;
     for a in acts {
         let n = a.n_tokens;
         let nq = (n / group) * group; // quantizable region (rest = residual)
@@ -220,7 +221,13 @@ pub fn attention_flip_rate(
                     second = s;
                 }
             }
-            margin_sum += (best_s - second) as f64;
+            // a head with a single scored token has no runner-up: `second`
+            // is still -inf and would drive the whole margin average to
+            // -inf — such heads have no margin to measure, so skip them
+            if n >= 2 {
+                margin_sum += (best_s - second) as f64;
+                margin_n += 1;
+            }
             // quantize K per-channel over full groups (runtime layout)
             let mut kq = k.to_vec();
             for gi in 0..nq / group {
@@ -256,5 +263,58 @@ pub fn attention_flip_rate(
             total += 1;
         }
     }
-    (flips as f64 / total.max(1) as f64, margin_sum / total.max(1) as f64)
+    (flips as f64 / total.max(1) as f64, margin_sum / margin_n.max(1) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Gen;
+    use crate::util::rng::SplitMix;
+
+    fn acts_with(n_tokens: usize, n_heads: usize, d_head: usize, seed: u64) -> LayerActs {
+        let mut g = Gen { rng: SplitMix::new(seed) };
+        LayerActs {
+            layer: 0,
+            xq: g.vec_normal(n_heads * d_head, 1.0),
+            k: g.vec_normal(n_heads * n_tokens * d_head, 1.0),
+            v: g.vec_normal(n_heads * n_tokens * d_head, 1.0),
+            n_tokens,
+        }
+    }
+
+    #[test]
+    fn flip_rate_single_token_head_keeps_margin_finite() {
+        // regression: a head with one scored token has no runner-up score;
+        // the margin average must stay finite (it used to collapse to -inf)
+        let acts = vec![acts_with(1, 2, 16, 7)];
+        let (flips, margin) = attention_flip_rate(&acts, 2, 16, 32, 2);
+        assert!(margin.is_finite(), "margin must be finite, got {margin}");
+        assert_eq!(margin, 0.0, "no multi-token head ⟹ zero margin mass");
+        assert!((0.0..=1.0).contains(&flips));
+    }
+
+    #[test]
+    fn flip_rate_mixed_lengths_averages_only_real_margins() {
+        // one single-token layer plus one long layer: the margin must equal
+        // the long layer's own average, unpolluted by the -inf heads
+        let long = vec![acts_with(64, 2, 16, 8)];
+        let (_, margin_long) = attention_flip_rate(&long, 2, 16, 32, 2);
+        let mixed = vec![acts_with(1, 2, 16, 7), acts_with(64, 2, 16, 8)];
+        let (flips, margin_mixed) = attention_flip_rate(&mixed, 2, 16, 32, 2);
+        assert!(margin_mixed.is_finite());
+        assert!((margin_mixed - margin_long).abs() < 1e-12);
+        assert!((0.0..=1.0).contains(&flips));
+    }
+
+    #[test]
+    fn flip_rate_more_bits_flip_less() {
+        let acts = vec![acts_with(96, 4, 16, 9), acts_with(96, 4, 16, 10)];
+        let (f1, m1) = attention_flip_rate(&acts, 4, 16, 32, 1);
+        let (f8, m8) = attention_flip_rate(&acts, 4, 16, 32, 8);
+        assert!(f8 <= f1, "8-bit flips ({f8}) must not exceed 1-bit ({f1})");
+        assert!(m1.is_finite() && m8.is_finite());
+        // the float margin is measured on unquantized scores: identical
+        assert_eq!(m1, m8);
+    }
 }

@@ -302,6 +302,28 @@ fn decode_strict(
             ErrorCode::UnknownOp,
             "'cancel' requires the v3 framing (tagged requests)",
         )),
+        "calibrate" if v3 => {
+            check_fields(o, &["v", "op", "budget", "seed", "episodes", "gate"], v3, false)?;
+            let budget = uint_field(o, "budget")?
+                .ok_or_else(|| ApiError::missing_field("budget"))?;
+            if budget == 0 {
+                return Err(ApiError::bad_field("budget", "must be >= 1"));
+            }
+            let episodes = uint_field(o, "episodes")?.unwrap_or(2) as usize;
+            if episodes == 0 {
+                return Err(ApiError::bad_field("episodes", "must be >= 1"));
+            }
+            Ok(ApiRequest::Calibrate {
+                budget,
+                seed: uint_field(o, "seed")?.unwrap_or(0),
+                episodes,
+                gate: bool_field(o, "gate")?.unwrap_or(true),
+            })
+        }
+        "calibrate" => Err(ApiError::new(
+            ErrorCode::UnknownOp,
+            "'calibrate' requires the v3 framing (tagged requests)",
+        )),
         other => Err(ApiError::unknown_op(other)),
     }
 }
@@ -467,7 +489,7 @@ fn bool_field(o: &BTreeMap<String, Value>, key: &str) -> Result<Option<bool>, Ap
 /// v3-only and encodes as a v3 line with tag 0 — multiplexing clients
 /// use [`encode_request_tagged`] with a real tag instead.
 pub fn encode_request(req: &ApiRequest) -> Value {
-    if matches!(req, ApiRequest::Cancel { .. }) {
+    if matches!(req, ApiRequest::Cancel { .. } | ApiRequest::Calibrate { .. }) {
         return encode_request_tagged(req, 0);
     }
     encode_request_with(req, false)
@@ -526,6 +548,12 @@ fn encode_request_with(req: &ApiRequest, v3: bool) -> Value {
         }
         ApiRequest::Cancel { target } => {
             fields.push(("target", Value::num(*target as f64)));
+        }
+        ApiRequest::Calibrate { budget, seed, episodes, gate } => {
+            fields.push(("budget", Value::num(*budget as f64)));
+            fields.push(("seed", Value::num(*seed as f64)));
+            fields.push(("episodes", Value::num(*episodes as f64)));
+            fields.push(("gate", Value::Bool(*gate)));
         }
     }
     Value::obj(fields)
@@ -602,6 +630,7 @@ pub fn encode_response(resp: &ApiResponse, proto: Proto) -> Value {
             ("target", Value::num(*target as f64)),
             ("cancelled", Value::Bool(*cancelled)),
         ]),
+        ApiResponse::Calibration(r) => calibration_value(r),
         ApiResponse::Error(e) => Value::obj(vec![("error", error_value(e, proto))]),
     };
     with_version(v, proto)
@@ -717,6 +746,33 @@ fn pool_value(r: &PoolReport) -> Value {
     Value::obj(fields)
 }
 
+fn policy_info_value(p: &super::types::PolicyInfo) -> Value {
+    Value::obj(vec![
+        ("name", Value::str_of(p.name.clone())),
+        (
+            "k_bits",
+            Value::arr(p.k_bits.iter().map(|&b| Value::num(b as f64)).collect()),
+        ),
+        (
+            "v_bits",
+            Value::arr(p.v_bits.iter().map(|&b| Value::num(b as f64)).collect()),
+        ),
+        ("bytes_per_token", Value::num(p.bytes_per_token as f64)),
+    ])
+}
+
+fn calibration_value(r: &super::types::CalibrationReport) -> Value {
+    let opt = |x: Option<f64>| x.map(|f| Value::num(f)).unwrap_or(Value::Null);
+    Value::obj(vec![
+        ("policy", policy_info_value(&r.policy)),
+        ("budget", Value::num(r.budget as f64)),
+        ("predicted_damage", Value::num(r.predicted_damage)),
+        ("ppl_float", opt(r.ppl_float)),
+        ("ppl_policy", opt(r.ppl_policy)),
+        ("gate_ok", Value::Bool(r.gate_ok)),
+    ])
+}
+
 fn policies_value(r: &PolicyReport) -> Value {
     let grid = r
         .grid
@@ -725,24 +781,7 @@ fn policies_value(r: &PolicyReport) -> Value {
             Value::arr(vec![Value::num(k as f64), Value::num(v as f64)])
         })
         .collect();
-    let policies = r
-        .policies
-        .iter()
-        .map(|p| {
-            Value::obj(vec![
-                ("name", Value::str_of(p.name.clone())),
-                (
-                    "k_bits",
-                    Value::arr(p.k_bits.iter().map(|&b| Value::num(b as f64)).collect()),
-                ),
-                (
-                    "v_bits",
-                    Value::arr(p.v_bits.iter().map(|&b| Value::num(b as f64)).collect()),
-                ),
-                ("bytes_per_token", Value::num(p.bytes_per_token as f64)),
-            ])
-        })
-        .collect();
+    let policies = r.policies.iter().map(policy_info_value).collect();
     Value::obj(vec![
         ("n_layers", Value::num(r.n_layers as f64)),
         ("grid", Value::Arr(grid)),
@@ -876,6 +915,8 @@ mod tests {
         assert_eq!(e.code, ErrorCode::BadField);
         let (_, e) = decode_err(r#"{"v":2,"op":"cancel","target":1}"#);
         assert_eq!(e.code, ErrorCode::UnknownOp);
+        let (_, e) = decode_err(r#"{"v":2,"op":"calibrate","budget":64}"#);
+        assert_eq!(e.code, ErrorCode::UnknownOp);
         let (_, e) = decode_err(
             r#"{"v":2,"op":"session_append","session":1,"prompt":"x","stream":true}"#,
         );
@@ -955,6 +996,24 @@ mod tests {
         let f = decode_frame(r#"{"v":3,"tag":8,"op":"cancel","target":5}"#, N)
             .unwrap();
         assert_eq!(f.req, ApiRequest::Cancel { target: 5 });
+        // calibrate: budget required, optional knobs defaulted
+        let f = decode_frame(r#"{"v":3,"tag":9,"op":"calibrate","budget":96}"#, N)
+            .unwrap();
+        assert_eq!(
+            f.req,
+            ApiRequest::Calibrate { budget: 96, seed: 0, episodes: 2, gate: true }
+        );
+        let de = decode_frame(r#"{"v":3,"tag":9,"op":"calibrate"}"#, N).unwrap_err();
+        assert_eq!(de.error.code, ErrorCode::MissingField);
+        let de = decode_frame(r#"{"v":3,"tag":9,"op":"calibrate","budget":0}"#, N)
+            .unwrap_err();
+        assert_eq!(de.error.code, ErrorCode::BadField);
+        let de = decode_frame(
+            r#"{"v":3,"tag":9,"op":"calibrate","budget":8,"episodes":0}"#,
+            N,
+        )
+        .unwrap_err();
+        assert_eq!(de.error.code, ErrorCode::BadField);
         // ...but a batch ITEM must not carry a tag (envelope field only)
         let de = decode_frame(
             r#"{"v":3,"tag":3,"op":"batch_generate","items":[{"prompt":"a","tag":4}]}"#,
@@ -995,6 +1054,7 @@ mod tests {
                 },
             },
             ApiRequest::Cancel { target: 17 },
+            ApiRequest::Calibrate { budget: 72, seed: 5, episodes: 3, gate: false },
         ];
         for (i, req) in reqs.into_iter().enumerate() {
             let tag = 100 + i as u64;
@@ -1033,6 +1093,29 @@ mod tests {
         );
         assert_eq!(v.get("target").as_i64(), Some(5));
         assert_eq!(v.get("cancelled").as_bool(), Some(true));
+        // calibration report
+        let v = encode_response_tagged(
+            &ApiResponse::Calibration(crate::api::types::CalibrationReport {
+                policy: crate::api::types::PolicyInfo {
+                    name: "AsymKV-auto@21/11".into(),
+                    k_bits: vec![2, 1],
+                    v_bits: vec![1, 1],
+                    bytes_per_token: 68,
+                },
+                budget: 72,
+                predicted_damage: 0.25,
+                ppl_float: Some(3.5),
+                ppl_policy: None,
+                gate_ok: false,
+            }),
+            9,
+        );
+        assert_eq!(v.get("policy").get("name").as_str(), Some("AsymKV-auto@21/11"));
+        assert_eq!(v.get("budget").as_i64(), Some(72));
+        assert_eq!(v.get("ppl_float").as_f64(), Some(3.5));
+        assert_eq!(v.get("ppl_policy"), &Value::Null);
+        assert_eq!(v.get("gate_ok").as_bool(), Some(false));
+        assert_eq!(v.get("done").as_bool(), Some(true));
         // stream frames: v2 shape unchanged, v3 shape tagged, no done
         let f2 = stream_frame(None, None, 65, "A");
         assert_eq!(f2.get("token").as_i64(), Some(65));

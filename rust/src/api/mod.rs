@@ -31,6 +31,6 @@ pub use codec::{
 pub use error::{ApiError, ErrorCode};
 pub use session::{SessionConfig, SessionManager, TurnOpts};
 pub use types::{
-    ApiRequest, ApiResponse, GenerateSpec, GenerationResult, PolicyInfo,
-    PolicyReport, PoolReport, SessionTurn,
+    ApiRequest, ApiResponse, CalibrationReport, GenerateSpec, GenerationResult,
+    PolicyInfo, PolicyReport, PoolReport, SessionTurn,
 };

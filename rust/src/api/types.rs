@@ -89,6 +89,12 @@ pub enum ApiRequest {
     /// Cancel the in-flight request whose tag is `target` on this
     /// connection (v3 only).
     Cancel { target: u64 },
+    /// Run the calibration pipeline server-side (v3 only): profile layer
+    /// sensitivity on a seeded trace, solve for the best grid allocation
+    /// under `budget` KV bytes/token, register the derived
+    /// `AsymKV-auto@…` policy, and (unless `gate` is off) check its
+    /// perplexity against the float baseline.
+    Calibrate { budget: u64, seed: u64, episodes: usize, gate: bool },
 }
 
 impl ApiRequest {
@@ -105,6 +111,7 @@ impl ApiRequest {
             ApiRequest::SessionAppend { .. } => "session_append",
             ApiRequest::SessionClose { .. } => "session_close",
             ApiRequest::Cancel { .. } => "cancel",
+            ApiRequest::Calibrate { .. } => "calibrate",
         }
     }
 }
@@ -204,6 +211,26 @@ pub struct PolicyReport {
     pub policies: Vec<PolicyInfo>,
 }
 
+/// Outcome of a server-side calibration run (the `calibrate` op).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CalibrationReport {
+    /// The derived allocation, expanded like a `policies` row. Registered
+    /// server-wide, so subsequent `policies` listings include it and
+    /// requests can use it by name.
+    pub policy: PolicyInfo,
+    /// The budget the solver was asked to fit (bytes/token).
+    pub budget: u64,
+    /// Profile damage the solver predicts for the allocation.
+    pub predicted_damage: f64,
+    /// Perplexity gate (None when `gate:false`): float baseline vs the
+    /// derived policy on the calibration documents.
+    pub ppl_float: Option<f64>,
+    pub ppl_policy: Option<f64>,
+    /// True when ungated, or when the derived policy's perplexity is
+    /// within the acceptance band of the float baseline.
+    pub gate_ok: bool,
+}
+
 /// Every reply the server can emit (one JSON line each, see the codec).
 #[derive(Debug, Clone, PartialEq)]
 pub enum ApiResponse {
@@ -219,5 +246,6 @@ pub enum ApiResponse {
     /// Outcome of a `cancel` op: whether `target` named a request that
     /// was still in flight (false = unknown tag or already completed).
     CancelResult { target: u64, cancelled: bool },
+    Calibration(CalibrationReport),
     Error(ApiError),
 }

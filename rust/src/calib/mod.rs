@@ -1,0 +1,29 @@
+//! Calibration subsystem: measure per-layer K/V quantization sensitivity,
+//! then solve for the best bit allocation under a memory budget.
+//!
+//! Replaces the paper's hand-tuned `l_k`/`l_v` prefix knobs (§4) with a
+//! measured pipeline:
+//!
+//! 1. **Profile** ([`profile`]): run a calibration trace and score, per
+//!    layer per cache side per candidate bit-width, how much the attention
+//!    output degrades when that side is quantized — score corruption and
+//!    argmax flips for K, output blur for V (§3's asymmetry, measured).
+//!    Profiles serialize to JSON so the trace is paid once per model.
+//! 2. **Solve** ([`solve`]): greedy marginal-cost ascent over the model's
+//!    lowered artifact grid under a bytes-per-token budget, emitting a
+//!    parseable `AsymKV-auto@…` policy (Algorithm 1 generalized from
+//!    prefix splits to arbitrary per-layer grid allocations).
+//! 3. **Serve** ([`registry`]): calibrated policies register by name so the
+//!    server lists them (`policies` op) and requests can use them.
+//!
+//! The runtime counterpart — the scheduler downshifting a live cache to a
+//! lower-bit allocation under page pressure — lives in
+//! `coordinator::scheduler` on top of `kvcache::layer::downshift_groups`.
+
+pub mod profile;
+pub mod registry;
+pub mod solve;
+
+pub use profile::{load_or_build, profile_engine, profile_synthetic, SensitivityProfile};
+pub use registry::PolicyRegistry;
+pub use solve::{solve_budget, solve_for_manifest, BudgetSolution, UpgradeStep};

@@ -1,0 +1,480 @@
+//! Sensitivity profiler: how much attention output degrades when one
+//! layer's K (resp. V) cache is quantized at each candidate bit-width.
+//!
+//! The paper's §3 analysis is qualitative (K damage ≫ V damage, early
+//! layers matter more); the profiler makes it quantitative per model so the
+//! budget solver (`calib::solve`) can replace the hand-tuned `l_k`/`l_v`
+//! prefix knobs with a measured allocation. Scoring is pure CPU — only the
+//! `quant::rtn` fold/unfold kernels — so a profile can be built (and unit
+//! tested) without any compiled artifacts; capturing *real* activations via
+//! [`profile_engine`] does need the `probe_b1` artifact that
+//! `analysis::collect_activations` drives.
+//!
+//! Profiles are cached to JSON ([`SensitivityProfile::save`] /
+//! [`SensitivityProfile::load`]): the calibration trace is paid once per
+//! model, then every budget query replays against the artifact.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::analysis::LayerActs;
+use crate::engine::Engine;
+use crate::model::ByteTokenizer;
+use crate::quant::rtn;
+use crate::util::json::{self, Value};
+use crate::util::prop::Gen;
+use crate::util::rng::SplitMix;
+use crate::workload::tasks::recall_suite;
+
+/// Measured damage of quantizing each layer's K / V cache side at each
+/// candidate bit-width, on one calibration trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SensitivityProfile {
+    /// Model the trace was captured on (manifest name, or "synthetic").
+    pub model: String,
+    /// Seed of the calibration workload (reproducibility stamp).
+    pub seed: u64,
+    pub n_layers: usize,
+    /// Candidate bit-widths, ascending; fp32 (0) is implicit with damage 0.
+    pub bits: Vec<u8>,
+    /// `k[bi][layer]`: K-side damage of layer `layer` at `bits[bi]`.
+    pub k: Vec<Vec<f64>>,
+    /// `v[bi][layer]`: V-side damage.
+    pub v: Vec<Vec<f64>>,
+}
+
+impl SensitivityProfile {
+    /// Damage of running `layer`'s K (`is_key`) or V side at `bits`.
+    /// fp32 is exact by definition; other widths must have been profiled.
+    pub fn damage(&self, layer: usize, is_key: bool, bits: u8) -> f64 {
+        if bits == 0 {
+            return 0.0;
+        }
+        let bi = self
+            .bits
+            .iter()
+            .position(|&b| b == bits)
+            .unwrap_or_else(|| panic!("bit-width {bits} not in profile {:?}", self.bits));
+        if is_key {
+            self.k[bi][layer]
+        } else {
+            self.v[bi][layer]
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mat = |m: &[Vec<f64>]| {
+            Value::arr(
+                m.iter()
+                    .map(|row| Value::arr(row.iter().map(|&x| Value::num(x)).collect()))
+                    .collect(),
+            )
+        };
+        Value::obj(vec![
+            ("format_version", Value::num(1.0)),
+            ("model", Value::str_of(self.model.clone())),
+            ("seed", Value::num(self.seed as f64)),
+            ("n_layers", Value::num(self.n_layers as f64)),
+            (
+                "bits",
+                Value::arr(self.bits.iter().map(|&b| Value::num(b as f64)).collect()),
+            ),
+            ("k", mat(&self.k)),
+            ("v", mat(&self.v)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let mat = |key: &str| -> Result<Vec<Vec<f64>>> {
+            v.get(key)
+                .as_arr()
+                .ok_or_else(|| anyhow!("profile: '{key}' is not an array"))?
+                .iter()
+                .map(|row| {
+                    row.as_arr()
+                        .ok_or_else(|| anyhow!("profile: '{key}' row is not an array"))?
+                        .iter()
+                        .map(|x| {
+                            x.as_f64().ok_or_else(|| anyhow!("profile: non-numeric damage"))
+                        })
+                        .collect()
+                })
+                .collect()
+        };
+        let p = Self {
+            model: v
+                .get("model")
+                .as_str()
+                .ok_or_else(|| anyhow!("profile: missing 'model'"))?
+                .to_string(),
+            seed: v.get("seed").as_i64().unwrap_or(0) as u64,
+            n_layers: v
+                .get("n_layers")
+                .as_usize()
+                .ok_or_else(|| anyhow!("profile: missing 'n_layers'"))?,
+            bits: v
+                .get("bits")
+                .usize_vec()
+                .ok_or_else(|| anyhow!("profile: missing 'bits'"))?
+                .into_iter()
+                .map(|b| b as u8)
+                .collect(),
+            k: mat("k")?,
+            v: mat("v")?,
+        };
+        for (name, m) in [("k", &p.k), ("v", &p.v)] {
+            if m.len() != p.bits.len() || m.iter().any(|row| row.len() != p.n_layers) {
+                bail!(
+                    "profile: '{name}' is not [{} bits x {} layers]",
+                    p.bits.len(),
+                    p.n_layers
+                );
+            }
+        }
+        Ok(p)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+            .map_err(|e| anyhow!("write profile {}: {e}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("read profile {}: {e}", path.display()))?;
+        Self::from_json(&json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?)
+    }
+}
+
+/// Pay-once caching: load the profile at `path` if it exists, otherwise
+/// build one and persist it there for the next caller.
+pub fn load_or_build(
+    path: &Path,
+    build: impl FnOnce() -> Result<SensitivityProfile>,
+) -> Result<SensitivityProfile> {
+    if path.exists() {
+        return SensitivityProfile::load(path);
+    }
+    let p = build()?;
+    p.save(path)?;
+    Ok(p)
+}
+
+/// One layer-side's accumulated damage over a trace.
+#[derive(Default, Clone, Copy)]
+struct Acc {
+    k_mse: f64,
+    v_mse: f64,
+    flips: usize,
+    energy: f64,
+    heads: usize,
+}
+
+/// Score quantization damage per layer at `bits` over captured activations.
+/// Returns `(k_damage, v_damage)`, each `[n_layers]`.
+///
+/// Per head: float attention scores `s = xq·K/√Dh`, softmax `p`, output
+/// `o = p·V`. K damage is the output MSE after re-quantizing K (per-channel
+/// token groups, full groups only — the residual stays float exactly as at
+/// runtime) *plus* the argmax flip rate weighted by the float output energy:
+/// a flipped retrieval rewires the head even when the raw MSE looks small
+/// (§3's peaked-attention failure mode). V damage is the output MSE with
+/// quantized V under the float attention weights — V cannot move the
+/// addressing, which is the asymmetry the whole allocation exploits.
+pub fn score_damage(
+    acts: &[LayerActs],
+    n_layers: usize,
+    n_heads: usize,
+    d_head: usize,
+    group: usize,
+    bits: u8,
+) -> (Vec<f64>, Vec<f64>) {
+    let g2 = group.min(d_head);
+    let mut accs = vec![Acc::default(); n_layers];
+    for a in acts {
+        let n = a.n_tokens;
+        if n == 0 {
+            continue;
+        }
+        let nq = (n / group) * group;
+        let acc = &mut accs[a.layer];
+        for head in 0..n_heads {
+            let xq = &a.xq[head * d_head..(head + 1) * d_head];
+            let k = &a.k[head * n * d_head..(head + 1) * n * d_head];
+            let v = &a.v[head * n * d_head..(head + 1) * n * d_head];
+            let kq = requant_k(k, nq, d_head, group, bits);
+            let vq = requant_v(v, nq, d_head, group, g2, bits);
+            let (p, argmax) = attn_weights(xq, k, n, d_head);
+            let (pq, argmax_q) = attn_weights(xq, &kq, n, d_head);
+            let out = weighted_sum(&p, v, n, d_head);
+            let out_k = weighted_sum(&pq, v, n, d_head);
+            let out_v = weighted_sum(&p, &vq, n, d_head);
+            acc.k_mse += crate::util::stats::mse(&out_k, &out);
+            acc.v_mse += crate::util::stats::mse(&out_v, &out);
+            acc.energy +=
+                out.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>() / d_head as f64;
+            if argmax_q != argmax {
+                acc.flips += 1;
+            }
+            acc.heads += 1;
+        }
+    }
+    let k_dam = accs
+        .iter()
+        .map(|a| {
+            let h = a.heads.max(1) as f64;
+            a.k_mse / h + (a.flips as f64 / h) * (a.energy / h)
+        })
+        .collect();
+    let v_dam = accs.iter().map(|a| a.v_mse / a.heads.max(1) as f64).collect();
+    (k_dam, v_dam)
+}
+
+/// Softmax attention weights + argmax of the float scores for one head.
+fn attn_weights(xq: &[f32], k: &[f32], n: usize, d_head: usize) -> (Vec<f32>, usize) {
+    let scale = (d_head as f32).sqrt();
+    let mut s = vec![0f32; n];
+    let mut best = 0usize;
+    for t in 0..n {
+        s[t] = xq
+            .iter()
+            .zip(&k[t * d_head..(t + 1) * d_head])
+            .map(|(a, b)| a * b)
+            .sum::<f32>()
+            / scale;
+        if s[t] > s[best] {
+            best = t;
+        }
+    }
+    let m = s[best];
+    let mut z = 0f32;
+    for x in s.iter_mut() {
+        *x = (*x - m).exp();
+        z += *x;
+    }
+    for x in s.iter_mut() {
+        *x /= z;
+    }
+    (s, best)
+}
+
+fn weighted_sum(p: &[f32], v: &[f32], n: usize, d_head: usize) -> Vec<f32> {
+    let mut out = vec![0f32; d_head];
+    for t in 0..n {
+        let w = p[t];
+        for (o, x) in out.iter_mut().zip(&v[t * d_head..(t + 1) * d_head]) {
+            *o += w * x;
+        }
+    }
+    out
+}
+
+/// Round-trip the quantizable region of one head's K through the runtime
+/// fold/unfold kernels (per-channel groups of `group` tokens).
+fn requant_k(k: &[f32], nq: usize, d_head: usize, group: usize, bits: u8) -> Vec<f32> {
+    let mut kq = k.to_vec();
+    for gi in 0..nq / group {
+        let rows = &k[gi * group * d_head..(gi + 1) * group * d_head];
+        let mut packed = vec![0u8; rtn::packed_len(group, bits) * d_head];
+        let mut params = vec![rtn::GroupParams { scale: 0.0, zero: 0.0 }; d_head];
+        rtn::fold_k_group(rows, group, d_head, bits, &mut packed, &mut params);
+        let mut back = vec![0f32; group * d_head];
+        rtn::unfold_k_group(&packed, group, d_head, bits, &params, &mut back);
+        kq[gi * group * d_head..(gi + 1) * group * d_head].copy_from_slice(&back);
+    }
+    kq
+}
+
+/// Same for V (per-token channel groups of `g2`).
+fn requant_v(
+    v: &[f32],
+    nq: usize,
+    d_head: usize,
+    group: usize,
+    g2: usize,
+    bits: u8,
+) -> Vec<f32> {
+    let mut vq = v.to_vec();
+    for gi in 0..nq / group {
+        let rows = &v[gi * group * d_head..(gi + 1) * group * d_head];
+        let mut packed = vec![0u8; group * rtn::packed_len(d_head, bits)];
+        let mut params =
+            vec![rtn::GroupParams { scale: 0.0, zero: 0.0 }; group * (d_head / g2)];
+        rtn::fold_v_group(rows, group, d_head, g2, bits, &mut packed, &mut params);
+        let mut back = vec![0f32; group * d_head];
+        rtn::unfold_v_group(&packed, group, d_head, g2, bits, &params, &mut back);
+        vq[gi * group * d_head..(gi + 1) * group * d_head].copy_from_slice(&back);
+    }
+    vq
+}
+
+/// Build a profile from synthetic layer-graded activations: early layers
+/// carry larger-magnitude activations, so their quantization damage is
+/// higher — the same monotone surface `search`'s tests model, and the
+/// direction the paper's prefix-`l_k` scheme assumes. Fully deterministic
+/// in `seed` and artifact-free (unit tests, fixtures, the solver bench).
+pub fn profile_synthetic(
+    n_layers: usize,
+    n_heads: usize,
+    d_head: usize,
+    group: usize,
+    n_tokens: usize,
+    seed: u64,
+    bits: &[u8],
+) -> SensitivityProfile {
+    let acts: Vec<LayerActs> = (0..n_layers)
+        .map(|layer| {
+            let mut g = Gen {
+                rng: SplitMix::new(seed.wrapping_add(layer as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+            };
+            let amp = 2.0f32 * 0.8f32.powi(layer as i32);
+            LayerActs {
+                layer,
+                xq: g.vec_normal(n_heads * d_head, amp),
+                k: g.vec_normal(n_heads * n_tokens * d_head, amp),
+                v: g.vec_normal(n_heads * n_tokens * d_head, amp),
+                n_tokens,
+            }
+        })
+        .collect();
+    profile_acts("synthetic", seed, &acts, n_layers, n_heads, d_head, group, bits)
+}
+
+/// Capture real activations on a recall-task calibration trace (float
+/// policy, `probe_b1` artifact) and score every candidate bit-width.
+pub fn profile_engine(
+    engine: &Engine,
+    seed: u64,
+    n_episodes: usize,
+    bits: &[u8],
+) -> Result<SensitivityProfile> {
+    let m = engine.manifest();
+    if n_episodes == 0 {
+        bail!("profile_engine: empty calibration trace");
+    }
+    let tok = ByteTokenizer;
+    let mut acts = Vec::new();
+    for ep in recall_suite(seed, n_episodes, 4) {
+        acts.extend(crate::analysis::collect_activations(engine, &tok.encode(&ep.prompt))?);
+    }
+    Ok(profile_acts(
+        &m.name, seed, &acts, m.n_layers, m.n_heads, m.d_head, m.group, bits,
+    ))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn profile_acts(
+    model: &str,
+    seed: u64,
+    acts: &[LayerActs],
+    n_layers: usize,
+    n_heads: usize,
+    d_head: usize,
+    group: usize,
+    bits: &[u8],
+) -> SensitivityProfile {
+    let mut k = Vec::with_capacity(bits.len());
+    let mut v = Vec::with_capacity(bits.len());
+    for &b in bits {
+        let (kd, vd) = score_damage(acts, n_layers, n_heads, d_head, group, b);
+        k.push(kd);
+        v.push(vd);
+    }
+    SensitivityProfile {
+        model: model.to_string(),
+        seed,
+        n_layers,
+        bits: bits.to_vec(),
+        k,
+        v,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_profile(seed: u64) -> SensitivityProfile {
+        profile_synthetic(4, 2, 16, 32, 96, seed, &[1, 2, 4])
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        assert_eq!(tiny_profile(11), tiny_profile(11));
+        assert_ne!(tiny_profile(11), tiny_profile(12));
+    }
+
+    #[test]
+    fn keys_hurt_more_than_values() {
+        // §3's asymmetry must fall out of the measurement: at 1 bit the
+        // K-side damage (score corruption + flips) dominates the V-side
+        // output blur, summed over layers
+        let p = tiny_profile(3);
+        let ks: f64 = p.k[0].iter().sum();
+        let vs: f64 = p.v[0].iter().sum();
+        assert!(ks > vs, "1-bit K damage {ks} must exceed V damage {vs}");
+    }
+
+    #[test]
+    fn more_bits_less_damage() {
+        let p = tiny_profile(5);
+        for layer in 0..p.n_layers {
+            // compare the 1-bit row against the 4-bit row (adjacent rows can
+            // tie on easy layers; the extremes must separate)
+            assert!(
+                p.k[0][layer] >= p.k[2][layer] && p.v[0][layer] >= p.v[2][layer],
+                "layer {layer}: damage must not grow with bits"
+            );
+        }
+        let d1: f64 = p.k[0].iter().chain(&p.v[0]).sum();
+        let d4: f64 = p.k[2].iter().chain(&p.v[2]).sum();
+        assert!(d1 > d4, "1-bit total damage {d1} must exceed 4-bit {d4}");
+    }
+
+    #[test]
+    fn early_layers_more_sensitive() {
+        // the synthetic trace grades amplitude by depth; the profiler must
+        // recover that ordering (it is what the solver spends budget on)
+        let p = tiny_profile(7);
+        assert!(p.k[0][0] > p.k[0][p.n_layers - 1]);
+        assert!(p.v[0][0] > p.v[0][p.n_layers - 1]);
+    }
+
+    #[test]
+    fn fp32_damage_is_zero_and_unprofiled_bits_panic() {
+        let p = tiny_profile(1);
+        assert_eq!(p.damage(0, true, 0), 0.0);
+        assert!(p.damage(0, true, 1) > 0.0);
+        let r = std::panic::catch_unwind(|| p.damage(0, true, 8));
+        assert!(r.is_err(), "bits outside the profile must panic, not guess");
+    }
+
+    #[test]
+    fn json_roundtrip_and_cache() {
+        let p = tiny_profile(9);
+        let back = SensitivityProfile::from_json(&p.to_json()).unwrap();
+        assert_eq!(p, back);
+
+        let dir = std::env::temp_dir().join(format!("asymkv_calib_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("profile.json");
+        let _ = std::fs::remove_file(&path);
+        let built = load_or_build(&path, || Ok(p.clone())).unwrap();
+        assert_eq!(built, p);
+        // second call must hit the cache, not the builder
+        let cached =
+            load_or_build(&path, || panic!("builder re-ran despite cached profile")).unwrap();
+        assert_eq!(cached, p);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn from_json_rejects_shape_mismatch() {
+        let mut j = tiny_profile(2).to_json();
+        if let Value::Obj(o) = &mut j {
+            o.insert("n_layers".into(), Value::num(7.0));
+        }
+        assert!(SensitivityProfile::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,83 @@
+//! Named-policy registry: calibrated `AsymKV-auto@…` policies registered at
+//! runtime so the server's `policies` op can list them next to the built-in
+//! grid rows and `generate` requests can refer to them by name.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::quant::QuantPolicy;
+
+/// Thread-safe name → policy map (server-wide; one per listener).
+#[derive(Default)]
+pub struct PolicyRegistry {
+    inner: Mutex<BTreeMap<String, QuantPolicy>>,
+}
+
+impl PolicyRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register `policy` under its own name. Returns `false` when the name
+    /// was already present (the entry is replaced either way: the newest
+    /// calibration wins).
+    pub fn register(&self, policy: QuantPolicy) -> bool {
+        self.inner.lock().unwrap().insert(policy.name.clone(), policy).is_none()
+    }
+
+    pub fn get(&self, name: &str) -> Option<QuantPolicy> {
+        self.inner.lock().unwrap().get(name).cloned()
+    }
+
+    /// Registered names, sorted (BTreeMap order).
+    pub fn list(&self) -> Vec<String> {
+        self.inner.lock().unwrap().keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Resolve a policy string: registry entries take precedence (they are
+    /// exact, calibrated allocations), then the standard grammar via
+    /// [`QuantPolicy::parse`].
+    pub fn resolve(&self, s: &str, n_layers: usize) -> Result<QuantPolicy, String> {
+        if let Some(p) = self.get(s) {
+            if p.n_layers() != n_layers {
+                return Err(format!(
+                    "registered policy '{s}' covers {} layers, model has {n_layers}",
+                    p.n_layers()
+                ));
+            }
+            return Ok(p);
+        }
+        QuantPolicy::parse(s, n_layers)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_get_list_resolve() {
+        let reg = PolicyRegistry::new();
+        assert!(reg.is_empty());
+        let p = QuantPolicy::asymkv_auto(vec![2, 1], vec![1, 1]);
+        assert!(reg.register(p.clone()));
+        assert!(!reg.register(p.clone()), "re-register reports replacement");
+        assert_eq!(reg.len(), 1);
+        assert_eq!(reg.list(), vec![p.name.clone()]);
+        assert_eq!(reg.get(&p.name), Some(p.clone()));
+        assert_eq!(reg.get("nope"), None);
+        // resolve: registry hit, grammar fallback, and layer-count guard
+        assert_eq!(reg.resolve(&p.name, 2).unwrap(), p);
+        assert!(reg.resolve(&p.name, 3).is_err());
+        assert_eq!(reg.resolve("kivi-2", 2).unwrap(), QuantPolicy::kivi(2, 2));
+        assert!(reg.resolve("bogus", 2).is_err());
+    }
+}

@@ -1,0 +1,262 @@
+//! Budget solver: turn a [`SensitivityProfile`] into a per-layer bit
+//! allocation under a KV-cache bytes-per-token budget.
+//!
+//! Greedy marginal-cost ascent in the style of the paper's Algorithm 1:
+//! start every layer at the *cheapest* grid pair, then repeatedly buy the
+//! upgrade (one layer moving to a more expensive grid pair) with the best
+//! damage-reduction-per-byte rate that still fits the budget, until no
+//! affordable improving move remains. All moves are restricted to the
+//! model's lowered artifact grid — the solver can only emit policies the
+//! engine can actually execute — and every tie is broken deterministically
+//! (rate, then absolute gain, then layer index, then grid order), so a
+//! given profile + budget always yields the same policy.
+
+use crate::model::Manifest;
+use crate::quant::{side_bytes_per_token, Bits, QuantPolicy};
+
+use super::profile::SensitivityProfile;
+
+/// One accepted upgrade, in application order (audit trail / frontier
+/// plots).
+#[derive(Debug, Clone, PartialEq)]
+pub struct UpgradeStep {
+    pub layer: usize,
+    pub from: (Bits, Bits),
+    pub to: (Bits, Bits),
+    /// Damage removed by this step.
+    pub gain: f64,
+    /// Bytes/token it cost.
+    pub cost: usize,
+}
+
+/// A solved allocation: the policy plus the numbers that justified it.
+#[derive(Debug, Clone)]
+pub struct BudgetSolution {
+    /// `AsymKV-auto@…` policy (parseable, grid-supported).
+    pub policy: QuantPolicy,
+    /// Exact KV bytes/token of the allocation (≤ the budget).
+    pub bytes_per_token: usize,
+    /// Profile damage summed over every (layer, side) slot.
+    pub predicted_damage: f64,
+    pub steps: Vec<UpgradeStep>,
+}
+
+/// Solve for the best grid allocation under `budget` bytes/token.
+///
+/// Errors when the grid's cheapest pair already overflows the budget
+/// (nothing executable fits) or when the grid is empty.
+pub fn solve_budget(
+    profile: &SensitivityProfile,
+    grid: &[(Bits, Bits)],
+    n_heads: usize,
+    d_head: usize,
+    group: usize,
+    budget: usize,
+) -> Result<BudgetSolution, String> {
+    if grid.is_empty() {
+        return Err("solve_budget: empty quantization grid".into());
+    }
+    let n_layers = profile.n_layers;
+    let pair_cost = |&(k, v): &(Bits, Bits)| -> usize {
+        side_bytes_per_token(k, n_heads, d_head, group, true)
+            + side_bytes_per_token(v, n_heads, d_head, group, false)
+    };
+    let pair_damage = |layer: usize, &(k, v): &(Bits, Bits)| -> f64 {
+        profile.damage(layer, true, k) + profile.damage(layer, false, v)
+    };
+
+    // floor: the cheapest pair everywhere (ties → less damage summed over
+    // layers, then grid order, keeping the start deterministic)
+    let floor_gi = (0..grid.len())
+        .min_by(|&a, &b| {
+            let (ca, cb) = (pair_cost(&grid[a]), pair_cost(&grid[b]));
+            ca.cmp(&cb).then_with(|| {
+                let da: f64 = (0..n_layers).map(|l| pair_damage(l, &grid[a])).sum();
+                let db: f64 = (0..n_layers).map(|l| pair_damage(l, &grid[b])).sum();
+                da.partial_cmp(&db).unwrap().then(a.cmp(&b))
+            })
+        })
+        .unwrap();
+    let mut alloc = vec![floor_gi; n_layers];
+    let mut total = pair_cost(&grid[floor_gi]) * n_layers;
+    if total > budget {
+        return Err(format!(
+            "budget {budget} B/token < {total} B/token floor ({n_layers} layers at \
+             the grid's cheapest pair {:?})",
+            grid[floor_gi]
+        ));
+    }
+
+    let mut steps = Vec::new();
+    loop {
+        // best affordable strict improvement across (layer, pair)
+        let mut best: Option<(f64, f64, usize, usize)> = None; // (rate, gain, layer, gi)
+        for layer in 0..n_layers {
+            let cur = &grid[alloc[layer]];
+            let (cur_cost, cur_dam) = (pair_cost(cur), pair_damage(layer, cur));
+            for (gi, pair) in grid.iter().enumerate() {
+                let (cost, dam) = (pair_cost(pair), pair_damage(layer, pair));
+                if cost <= cur_cost || dam >= cur_dam {
+                    continue; // not an upgrade: must pay bytes, must help
+                }
+                if total - cur_cost + cost > budget {
+                    continue;
+                }
+                let gain = cur_dam - dam;
+                let rate = gain / (cost - cur_cost) as f64;
+                let better = match &best {
+                    None => true,
+                    Some(&(br, bg, bl, bgi)) => {
+                        (rate, gain, std::cmp::Reverse(layer), std::cmp::Reverse(gi))
+                            > (br, bg, std::cmp::Reverse(bl), std::cmp::Reverse(bgi))
+                    }
+                };
+                if better {
+                    best = Some((rate, gain, layer, gi));
+                }
+            }
+        }
+        let Some((_, gain, layer, gi)) = best else { break };
+        let from = grid[alloc[layer]];
+        let cost = pair_cost(&grid[gi]) - pair_cost(&from);
+        total = total - pair_cost(&from) + pair_cost(&grid[gi]);
+        alloc[layer] = gi;
+        steps.push(UpgradeStep { layer, from, to: grid[gi], gain, cost });
+    }
+
+    let k_bits: Vec<Bits> = alloc.iter().map(|&gi| grid[gi].0).collect();
+    let v_bits: Vec<Bits> = alloc.iter().map(|&gi| grid[gi].1).collect();
+    let predicted_damage =
+        (0..n_layers).map(|l| pair_damage(l, &grid[alloc[l]])).sum();
+    Ok(BudgetSolution {
+        policy: QuantPolicy::asymkv_auto(k_bits, v_bits),
+        bytes_per_token: total,
+        predicted_damage,
+        steps,
+    })
+}
+
+/// Convenience wrapper: solve against a model manifest's own grid and head
+/// geometry.
+pub fn solve_for_manifest(
+    profile: &SensitivityProfile,
+    m: &Manifest,
+    budget: usize,
+) -> Result<BudgetSolution, String> {
+    if profile.n_layers != m.n_layers {
+        return Err(format!(
+            "profile covers {} layers, manifest '{}' has {}",
+            profile.n_layers, m.name, m.n_layers
+        ));
+    }
+    solve_budget(profile, &m.grid, m.n_heads, m.d_head, m.group, budget)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calib::profile::profile_synthetic;
+
+    /// The compiled DEFAULT_GRID: every (k, v) pair over {0, 1, 2}.
+    fn default_grid() -> Vec<(Bits, Bits)> {
+        let mut g = Vec::new();
+        for k in [0u8, 1, 2] {
+            for v in [0u8, 1, 2] {
+                g.push((k, v));
+            }
+        }
+        g
+    }
+
+    fn prof() -> SensitivityProfile {
+        profile_synthetic(4, 2, 16, 32, 96, 42, &[1, 2])
+    }
+
+    #[test]
+    fn respects_budget_and_is_deterministic() {
+        let p = prof();
+        let grid = default_grid();
+        let lavish = solve_budget(&p, &grid, 2, 16, 32, usize::MAX).unwrap();
+        // generous budget: every layer lands on the best pair (fp32/fp32)
+        assert_eq!(lavish.predicted_damage, 0.0);
+        let floor = QuantPolicy::kivi(4, 1).bytes_per_token(2, 16, 32);
+        for budget in [floor, floor + 8, floor + 24, floor * 2, floor * 8] {
+            let a = solve_budget(&p, &grid, 2, 16, 32, budget).unwrap();
+            let b = solve_budget(&p, &grid, 2, 16, 32, budget).unwrap();
+            assert!(a.bytes_per_token <= budget);
+            assert_eq!(a.policy, b.policy, "same inputs must resolve identically");
+            assert_eq!(
+                a.policy.bytes_per_token(2, 16, 32),
+                a.bytes_per_token,
+                "reported cost must match the policy's exact accounting"
+            );
+        }
+    }
+
+    #[test]
+    fn frontier_is_monotone() {
+        // more budget can never predict more damage (greedy only adds
+        // strict improvements, and a superset of affordable moves is
+        // available at every step)
+        let p = prof();
+        let grid = default_grid();
+        let mut last = f64::INFINITY;
+        let mut spent = 0usize;
+        let floor = QuantPolicy::kivi(4, 1).bytes_per_token(2, 16, 32);
+        for budget in [floor, floor + 4, floor + 8, floor + 16, floor + 32, floor * 2, floor * 16] {
+            let s = solve_budget(&p, &grid, 2, 16, 32, budget).unwrap();
+            assert!(s.predicted_damage <= last + 1e-12, "damage rose with budget");
+            assert!(s.bytes_per_token >= spent, "spend shrank with budget");
+            last = s.predicted_damage;
+            spent = s.bytes_per_token;
+        }
+    }
+
+    #[test]
+    fn tight_budget_stays_low_bit_and_infeasible_errors() {
+        let p = prof();
+        let grid = default_grid();
+        // floor = 4 layers * (1,1); give it exactly that
+        let floor_cost = QuantPolicy::kivi(4, 1).bytes_per_token(2, 16, 32);
+        let s = solve_budget(&p, &grid, 2, 16, 32, floor_cost).unwrap();
+        assert_eq!(s.policy.k_bits, vec![1, 1, 1, 1]);
+        assert_eq!(s.policy.v_bits, vec![1, 1, 1, 1]);
+        assert!(s.steps.is_empty());
+        assert!(solve_budget(&p, &grid, 2, 16, 32, floor_cost - 1).is_err());
+        assert!(solve_budget(&p, &[], 2, 16, 32, 1 << 20).is_err());
+    }
+
+    #[test]
+    fn spends_on_sensitive_layers_first() {
+        // synthetic damage decays with depth, so a budget that affords a
+        // couple of upgrades must spend them on the earliest layers, and
+        // the emitted name must round-trip through the parser
+        let p = prof();
+        let grid = default_grid();
+        let floor = QuantPolicy::kivi(4, 1).bytes_per_token(2, 16, 32);
+        let one_up = solve_budget(&p, &grid, 2, 16, 32, floor + 12).unwrap();
+        assert!(!one_up.steps.is_empty(), "slack must be spent");
+        assert_eq!(one_up.steps[0].layer, 0, "first upgrade goes to layer 0");
+        let parsed = QuantPolicy::parse(&one_up.policy.name, 4).unwrap();
+        assert_eq!(parsed, one_up.policy);
+        // K over V: with K and V upgrades priced equally, the K side (flip
+        // penalty + score damage) wins the first marginal dollar
+        let (k0, v0) = (one_up.policy.k_bits[0], one_up.policy.v_bits[0]);
+        assert!(k0 >= v0, "expected K-favoring allocation, got k={k0} v={v0}");
+    }
+
+    #[test]
+    fn steps_audit_reconciles() {
+        let p = prof();
+        let grid = default_grid();
+        let floor = QuantPolicy::kivi(4, 1).bytes_per_token(2, 16, 32);
+        let s = solve_budget(&p, &grid, 2, 16, 32, floor + 40).unwrap();
+        let step_cost: usize = s.steps.iter().map(|st| st.cost).sum();
+        assert_eq!(floor + step_cost, s.bytes_per_token);
+        let full_damage: f64 = (0..4)
+            .map(|l| p.damage(l, true, 1) + p.damage(l, false, 1))
+            .sum();
+        let gains: f64 = s.steps.iter().map(|st| st.gain).sum();
+        assert!((full_damage - gains - s.predicted_damage).abs() < 1e-9);
+    }
+}

@@ -13,6 +13,8 @@ struct Inner {
     requests_completed: u64,
     requests_failed: u64,
     preemptions: u64,
+    downshifts: u64,
+    downshift_bytes_freed: u64,
     cancelled: u64,
     deadline_expired: u64,
     /// Tagged requests currently in flight across all connections
@@ -64,6 +66,15 @@ impl Metrics {
     /// queue (requeue, not failure).
     pub fn record_preemption(&self) {
         self.inner.lock().unwrap().preemptions += 1;
+    }
+
+    /// A page-budget collision was resolved by re-quantizing a victim's
+    /// cold cache groups in place instead of evicting it (`bytes` freed
+    /// back to the pool).
+    pub fn record_downshift(&self, bytes: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.downshifts += 1;
+        m.downshift_bytes_freed += bytes as u64;
     }
 
     /// A request was aborted by an explicit cancel (op or dropped
@@ -129,6 +140,8 @@ impl Metrics {
             requests_completed: m.requests_completed,
             requests_failed: m.requests_failed,
             preemptions: m.preemptions,
+            downshifts: m.downshifts,
+            downshift_bytes_freed: m.downshift_bytes_freed,
             cancelled: m.cancelled,
             deadline_expired: m.deadline_expired,
             inflight: m.inflight_now,
@@ -168,6 +181,11 @@ pub struct MetricsSnapshot {
     pub requests_failed: u64,
     /// Requests preempted (freed + requeued) on page-budget collisions.
     pub preemptions: u64,
+    /// Page-budget collisions resolved by an in-place cache downshift
+    /// (victim kept decoding at lower bits) instead of preemption.
+    pub downshifts: u64,
+    /// Pool bytes returned by those in-place downshifts.
+    pub downshift_bytes_freed: u64,
     /// Requests aborted by an explicit cancel (op / dropped connection).
     pub cancelled: u64,
     /// Requests whose `deadline_ms` expired before completion.
@@ -200,6 +218,11 @@ impl MetricsSnapshot {
             ("requests_completed", Value::num(self.requests_completed as f64)),
             ("requests_failed", Value::num(self.requests_failed as f64)),
             ("preemptions", Value::num(self.preemptions as f64)),
+            ("downshifts", Value::num(self.downshifts as f64)),
+            (
+                "downshift_bytes_freed",
+                Value::num(self.downshift_bytes_freed as f64),
+            ),
             ("cancelled", Value::num(self.cancelled as f64)),
             ("deadline_expired", Value::num(self.deadline_expired as f64)),
             ("inflight", Value::num(self.inflight as f64)),
@@ -254,6 +277,8 @@ mod tests {
         );
         m.record_failure();
         m.record_preemption();
+        m.record_downshift(4096);
+        m.record_downshift(1024);
         m.record_cancelled();
         m.record_deadline_expired();
         m.record_inflight_start();
@@ -270,6 +295,7 @@ mod tests {
         assert_eq!(s.requests_completed, 2);
         assert_eq!(s.requests_failed, 1);
         assert_eq!(s.preemptions, 1);
+        assert_eq!((s.downshifts, s.downshift_bytes_freed), (2, 5120));
         assert_eq!(s.cancelled, 1);
         assert_eq!(s.deadline_expired, 1);
         assert_eq!((s.inflight, s.inflight_peak), (2, 2));

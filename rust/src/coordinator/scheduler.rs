@@ -11,12 +11,16 @@
 //! pages. Previously admitted sequences keep growing, so concurrent
 //! long generations can collide mid-decode; the engine then bounces the
 //! step with `BudgetExceeded` BEFORE touching any cache, and the
-//! scheduler **preempts** — the lowest-priority, youngest non-session
-//! request is freed and requeued (its retry re-prefills with a reset RNG,
-//! reproducing the uninterrupted output) instead of anything panicking or
-//! failing. All waiting is notification-driven: the queue condvar covers
-//! submissions and shutdown, and the pool's free-epoch condvar covers
-//! capacity releases, so the scheduler never sleep-polls.
+//! scheduler first tries a **downshift** — re-quantizing one victim's
+//! already-folded cache groups in place at the next lower grid-supported
+//! bit-width (`LayerCache::downshift_groups`), which frees pages while
+//! every sequence keeps decoding — and only **preempts** when nobody can
+//! shift down: the lowest-priority, youngest non-session request is freed
+//! and requeued (its retry re-prefills with a reset RNG, reproducing the
+//! uninterrupted output) instead of anything panicking or failing. All
+//! waiting is notification-driven: the queue condvar covers submissions
+//! and shutdown, and the pool's free-epoch condvar covers capacity
+//! releases, so the scheduler never sleep-polls.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -24,6 +28,7 @@ use std::time::{Duration, Instant};
 
 use crate::engine::{sample, Engine};
 use crate::kvcache::PoolError;
+use crate::quant::{Bits, QuantPolicy};
 
 use super::metrics::Metrics;
 use super::queue::RequestQueue;
@@ -41,6 +46,12 @@ pub struct CoordinatorConfig {
     pub batch_window: Duration,
     /// byte budget for the KV prefix cache (0 disables prefix reuse)
     pub prefix_cache_bytes: usize,
+    /// On a mid-decode page-budget collision, try re-quantizing one
+    /// victim's cold cache groups in place (freeing pages, keeping every
+    /// sequence running at reduced precision) before falling back to
+    /// preemption. Disable to pin the strict evict-and-replay behaviour,
+    /// whose retries reproduce the uncontended output byte-for-byte.
+    pub downshift: bool,
 }
 
 impl Default for CoordinatorConfig {
@@ -50,6 +61,7 @@ impl Default for CoordinatorConfig {
             max_batch: 8,
             batch_window: Duration::from_millis(2),
             prefix_cache_bytes: 0,
+            downshift: true,
         }
     }
 }
@@ -197,17 +209,23 @@ pub(super) fn run_scheduler(shared: Arc<Shared>) {
                 Err(e) => {
                     // A page-budget bounce happens BEFORE any cache
                     // mutation (the engine reserves first), so every
-                    // sequence is intact: preempt a victim back to the
-                    // queue and retry the survivors next iteration. When
-                    // no victim is requeue-eligible (sessions, streams),
-                    // shed ONE member of the colliding group — the rest
-                    // are untouched and retry — rather than failing the
-                    // whole batch.
+                    // sequence is intact. First choice: downshift a
+                    // victim's cold cache groups in place — pages come
+                    // back without evicting anyone. Otherwise preempt a
+                    // victim back to the queue and retry the survivors
+                    // next iteration. When no victim is requeue-eligible
+                    // (sessions, streams), shed ONE member of the
+                    // colliding group — the rest are untouched and retry
+                    // — rather than failing the whole batch.
                     let budget = matches!(
                         e.downcast_ref::<PoolError>(),
                         Some(PoolError::BudgetExceeded { .. })
                     );
                     if budget {
+                        if shared.cfg.downshift && downshift_one(&shared, &mut active)
+                        {
+                            break 'groups;
+                        }
                         if !preempt_one(&shared, &mut active) {
                             let victim = group
                                 .iter()
@@ -291,6 +309,129 @@ fn sweep_aborted(shared: &Arc<Shared>, active: &mut Vec<InFlight>) {
             _ => i += 1,
         }
     }
+}
+
+/// Bit-width rungs in decreasing footprint order; 0 (fp32) sits on top.
+const BIT_LADDER: [Bits; 5] = [0, 8, 4, 2, 1];
+
+/// Every rung strictly below `b` on the footprint ladder, widest first.
+fn lower_rungs(b: Bits) -> &'static [Bits] {
+    let pos = BIT_LADDER
+        .iter()
+        .position(|&x| x == b)
+        .unwrap_or(BIT_LADDER.len() - 1);
+    &BIT_LADDER[pos + 1..]
+}
+
+/// The gentlest downshift of one layer's `(k, v)` pair that the model's
+/// lowered artifact grid actually supports: prefer dropping both sides
+/// (to the widest usable rungs), then K alone, then V alone. Returns
+/// `None` when the pair is already at the grid's floor.
+fn step_down_pair(k: Bits, v: Bits, grid: &[(u8, u8)]) -> Option<(Bits, Bits)> {
+    for &nk in lower_rungs(k) {
+        for &nv in lower_rungs(v) {
+            if grid.contains(&(nk, nv)) {
+                return Some((nk, nv));
+            }
+        }
+    }
+    for &nk in lower_rungs(k) {
+        if grid.contains(&(nk, v)) {
+            return Some((nk, v));
+        }
+    }
+    for &nv in lower_rungs(v) {
+        if grid.contains(&(k, nv)) {
+            return Some((k, nv));
+        }
+    }
+    None
+}
+
+/// Relieve a page-budget collision WITHOUT evicting anyone: pick one
+/// victim (lowest priority, then youngest — the same ordering as
+/// [`preempt_one`]) and re-quantize its already-folded cache groups in
+/// place one grid-supported bit rung down
+/// (`LayerCache::downshift_groups`). The shrink settles through the
+/// pool, so the freed pages are visible to the retried decode step
+/// immediately. Sessions are excluded — a session's policy is fixed when
+/// it opens and later turns must keep resolving the same artifacts — but
+/// streams ARE eligible: nothing is evicted, so no emitted token is ever
+/// replayed. Unlike preemption this also works with a single active
+/// sequence (it shrinks itself out of its own collision). Returns false
+/// when no candidate has a lower rung to move to or the chosen victim
+/// held nothing cold enough to shrink; the caller then falls back to
+/// preemption.
+fn downshift_one(shared: &Arc<Shared>, active: &mut [InFlight]) -> bool {
+    let grid = &shared.engine.manifest().grid;
+    let mut victim: Option<usize> = None;
+    for (i, inf) in active.iter().enumerate() {
+        if inf.seq_id.is_none()
+            || inf.req.session_seq.is_some()
+            || inf.handle.is_fulfilled()
+        {
+            continue;
+        }
+        let p = &inf.req.policy;
+        // eligible = some layer has both a lower grid rung to move to AND
+        // cold (already-folded) tokens whose repack returns real pages —
+        // without cold data a downshift would spend the victim's rung for
+        // nothing, so such candidates are left to the preemption fallback
+        let eligible = shared
+            .engine
+            .pool
+            .with_seq(inf.seq_id.unwrap(), |s| {
+                s.layers
+                    .iter()
+                    .zip(p.k_bits.iter().zip(&p.v_bits))
+                    .any(|(l, (&k, &v))| {
+                        l.n_tokens() > l.n_res()
+                            && step_down_pair(k, v, grid).is_some()
+                    })
+            })
+            .unwrap_or(false);
+        if !eligible {
+            continue;
+        }
+        victim = match victim {
+            None => Some(i),
+            Some(v) => {
+                let lower = inf.req.priority < active[v].req.priority
+                    || (inf.req.priority == active[v].req.priority
+                        && inf.submitted > active[v].submitted);
+                if lower { Some(i) } else { Some(v) }
+            }
+        };
+    }
+    let Some(vi) = victim else { return false };
+    let inf = &mut active[vi];
+    let seq_id = inf.seq_id.unwrap();
+    let mut new_k = inf.req.policy.k_bits.clone();
+    let mut new_v = inf.req.policy.v_bits.clone();
+    let mut plan: Vec<(usize, Bits, Bits)> = Vec::new();
+    for l in 0..new_k.len() {
+        if let Some((nk, nv)) = step_down_pair(new_k[l], new_v[l], grid) {
+            plan.push((l, nk, nv));
+            new_k[l] = nk;
+            new_v[l] = nv;
+        }
+    }
+    let Ok(freed) = shared.engine.pool.with_seq(seq_id, |s| {
+        plan.iter()
+            .map(|&(l, nk, nv)| s.layers[l].downshift_groups(nk, nv))
+            .sum::<usize>()
+    }) else {
+        return false;
+    };
+    // the cache's bit-widths changed even if nothing was resident to
+    // repack, so the request's policy must follow: decode regrouping and
+    // the engine's artifact selection both key on the live bits
+    inf.req.policy = QuantPolicy::asymkv_auto(new_k, new_v);
+    if freed == 0 {
+        return false;
+    }
+    shared.metrics.record_downshift(freed);
+    true
 }
 
 /// Evict one active request back to the queue to relieve a page-budget

@@ -2,7 +2,7 @@
 //! auto-tuner: task accuracy and perplexity of a policy on the synthetic
 //! benchmark suites (the paper's Tables 1-4 metrics, DESIGN.md §1).
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::engine::{Engine, SamplingParams};
 use crate::model::ByteTokenizer;
@@ -16,6 +16,9 @@ pub fn recall_accuracy(
     policy: &QuantPolicy,
     episodes: &[Episode],
 ) -> Result<f64> {
+    if episodes.is_empty() {
+        bail!("recall_accuracy: no episodes (an empty suite would score NaN)");
+    }
     let tok = ByteTokenizer;
     let max_b = *engine.manifest().batch_sizes.iter().max().unwrap();
     let mut total = 0.0;
@@ -70,6 +73,13 @@ pub fn perplexity(
             nll += lse - logits[target] as f64;
             count += 1;
         }
+    }
+    if count == 0 {
+        bail!(
+            "perplexity: no scorable positions ({} docs, all shorter than 2 \
+             tokens) — refusing to return NaN",
+            docs.len()
+        );
     }
     Ok((nll / count as f64).exp())
 }

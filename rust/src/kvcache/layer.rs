@@ -592,6 +592,173 @@ impl LayerCache {
         }
     }
 
+    // -----------------------------------------------------------------
+    // in-place downshift (pressure-adaptive re-quantization)
+    // -----------------------------------------------------------------
+
+    /// Re-quantize the cold packed region to lower bit-widths **in place**
+    /// and trim `q_capacity` to the page-rounded quantized length. The
+    /// packed codes are re-quantized group-wise in the code domain
+    /// ([`rtn::requant`]) — the cache is never rebuilt as floats. Residual
+    /// ring rows are untouched: they are still fp32 and simply fold at the
+    /// new widths from now on. Per side the transition must not add bits:
+    /// `new == old` (no-op), `old == 0` (the fp32 region folds into a
+    /// fresh packed region), or `0 < new < old`. Returns the allocation
+    /// bytes freed; when called inside `CachePool::with_seq` the pool
+    /// settles its accounting from the capacity delta automatically.
+    pub fn downshift_groups(&mut self, new_kb: Bits, new_vb: Bits) -> usize {
+        let geo = self.geo;
+        let (h, dh, g) = (geo.n_heads, geo.d_head, geo.group);
+        let g2 = geo.g2();
+        let (old_kb, old_vb) = (self.k_bits, self.v_bits);
+        assert!(
+            new_kb == old_kb || old_kb == 0 || (new_kb > 0 && new_kb < old_kb),
+            "downshift_groups: K transition {old_kb} -> {new_kb} adds bits"
+        );
+        assert!(
+            new_vb == old_vb || old_vb == 0 || (new_vb > 0 && new_vb < old_vb),
+            "downshift_groups: V transition {old_vb} -> {new_vb} adds bits"
+        );
+        let before = self.capacity_bytes();
+        let new_cap = page_target(self.n_q, g, geo.max_ctx);
+        debug_assert!(new_cap <= self.q_cap, "q_cap below page-rounded n_q");
+        if new_kb == old_kb && new_vb == old_vb && new_cap == self.q_cap {
+            return 0;
+        }
+        let n_groups = self.n_q / g;
+
+        // --- K side: [H, Tc·kb/8, Dh] packed + per-channel params ---
+        if new_kb != old_kb || new_cap != self.q_cap {
+            if new_kb > 0 {
+                let rows_new = rtn::packed_len(g, new_kb);
+                let t_pk_new = rtn::packed_len(new_cap, new_kb);
+                let ngn = new_cap / g;
+                let mut pk = vec![0u8; h * t_pk_new * dh];
+                let mut scales = vec![0f32; h * ngn * dh];
+                let mut zeros = vec![0f32; h * ngn * dh];
+                let mut params = vec![GroupParams { scale: 0.0, zero: 0.0 }; dh];
+                for head in 0..h {
+                    for gi in 0..n_groups {
+                        let dst = head * t_pk_new * dh + gi * rows_new * dh;
+                        let out = &mut pk[dst..dst + rows_new * dh];
+                        if old_kb == 0 {
+                            let src = head * self.q_cap * dh + gi * g * dh;
+                            rtn::fold_k_group(
+                                &self.k_f32[src..src + g * dh],
+                                g, dh, new_kb, out, &mut params,
+                            );
+                        } else {
+                            let rows_old = rtn::packed_len(g, old_kb);
+                            let t_pk_old = rtn::packed_len(self.q_cap, old_kb);
+                            let src = head * t_pk_old * dh + gi * rows_old * dh;
+                            let pb = head * (self.q_cap / g) * dh + gi * dh;
+                            let old_params: Vec<GroupParams> = (0..dh)
+                                .map(|d| GroupParams {
+                                    scale: self.k_scales[pb + d],
+                                    zero: self.k_zeros[pb + d],
+                                })
+                                .collect();
+                            rtn::requant::requant_k_group(
+                                &self.k_pk[src..src + rows_old * dh],
+                                &old_params,
+                                g, dh, old_kb, new_kb, out, &mut params,
+                            );
+                        }
+                        let pb = head * ngn * dh + gi * dh;
+                        for d in 0..dh {
+                            scales[pb + d] = params[d].scale;
+                            zeros[pb + d] = params[d].zero;
+                        }
+                    }
+                }
+                self.k_pk = pk;
+                self.k_scales = scales;
+                self.k_zeros = zeros;
+                self.k_f32 = vec![];
+            } else {
+                // fp32 -> fp32 with a pure capacity trim
+                let mut f = vec![0f32; h * new_cap * dh];
+                for head in 0..h {
+                    let src = head * self.q_cap * dh;
+                    let dst = head * new_cap * dh;
+                    f[dst..dst + self.n_q * dh]
+                        .copy_from_slice(&self.k_f32[src..src + self.n_q * dh]);
+                }
+                self.k_f32 = f;
+            }
+        }
+
+        // --- V side: [H, Tc, Dh·vb/8] packed + per-token params ---
+        if new_vb != old_vb || new_cap != self.q_cap {
+            if new_vb > 0 {
+                let bpt_new = rtn::packed_len(dh, new_vb);
+                let dg = dh / g2;
+                let mut pk = vec![0u8; h * new_cap * bpt_new];
+                let mut scales = vec![0f32; h * new_cap * dg];
+                let mut zeros = vec![0f32; h * new_cap * dg];
+                let mut params =
+                    vec![GroupParams { scale: 0.0, zero: 0.0 }; g * dg];
+                for head in 0..h {
+                    for gi in 0..n_groups {
+                        let dst = head * new_cap * bpt_new + gi * g * bpt_new;
+                        let out = &mut pk[dst..dst + g * bpt_new];
+                        if old_vb == 0 {
+                            let src = head * self.q_cap * dh + gi * g * dh;
+                            rtn::fold_v_group(
+                                &self.v_f32[src..src + g * dh],
+                                g, dh, g2, new_vb, out, &mut params,
+                            );
+                        } else {
+                            let bpt_old = rtn::packed_len(dh, old_vb);
+                            let src = head * self.q_cap * bpt_old + gi * g * bpt_old;
+                            let pb = head * self.q_cap * dg + gi * g * dg;
+                            let old_params: Vec<GroupParams> = (0..g * dg)
+                                .map(|i| GroupParams {
+                                    scale: self.v_scales[pb + i],
+                                    zero: self.v_zeros[pb + i],
+                                })
+                                .collect();
+                            rtn::requant::requant_v_group(
+                                &self.v_pk[src..src + g * bpt_old],
+                                &old_params,
+                                g, dh, g2, old_vb, new_vb, out, &mut params,
+                            );
+                        }
+                        let pb = head * new_cap * dg + gi * g * dg;
+                        for i in 0..g * dg {
+                            scales[pb + i] = params[i].scale;
+                            zeros[pb + i] = params[i].zero;
+                        }
+                    }
+                }
+                self.v_pk = pk;
+                self.v_scales = scales;
+                self.v_zeros = zeros;
+                self.v_f32 = vec![];
+            } else {
+                let mut f = vec![0f32; h * new_cap * dh];
+                for head in 0..h {
+                    let src = head * self.q_cap * dh;
+                    let dst = head * new_cap * dh;
+                    f[dst..dst + self.n_q * dh]
+                        .copy_from_slice(&self.v_f32[src..src + self.n_q * dh]);
+                }
+                self.v_f32 = f;
+            }
+        }
+
+        self.q_cap = new_cap;
+        self.k_bits = new_kb;
+        self.v_bits = new_vb;
+        // a downshift rewrites packed groups BELOW n_q — not an append —
+        // so the linear-history promise behind ident_version is void:
+        // re-stamp everything (full re-scatter on the next gather sync)
+        self.invalidate();
+        let after = self.capacity_bytes();
+        debug_assert!(after <= before, "downshift must never grow the cache");
+        before - after
+    }
+
     /// Write the residual window into `out` laid out [H, R, Dh] (artifact
     /// layout), compacting the ring so occupied slots are [0, n_res).
     pub fn gather_residual(&self, out_k: &mut [f32], out_v: &mut [f32]) {
@@ -1170,6 +1337,160 @@ mod tests {
         c.copy_residual_rows(6, 10, &mut part_k, &mut part_v);
         assert_eq!(part_k, full_k);
         assert_eq!(part_v, full_v);
+    }
+
+    // ---------------- in-place downshift ----------------
+
+    #[test]
+    fn downshift_matches_refold_and_frees_bytes() {
+        let mut c = LayerCache::new(geo(), 4, 4);
+        let mut g = Gen { rng: crate::util::rng::SplitMix::new(31) };
+        let hd = 2 * 32;
+        for _ in 0..100 {
+            let (k, v) = tok(&mut g, hd);
+            c.append_token(&k, &v);
+        }
+        assert_eq!(c.n_q, 64);
+        let n = c.n_tokens();
+        let before_cap = c.capacity_bytes();
+        let before_k = c.dequant_k_full();
+        let before_v = c.dequant_v_full();
+        let id0 = c.ident_version();
+
+        let freed = c.downshift_groups(2, 1);
+        assert!(freed > 0, "4->2/1 downshift must free packed bytes");
+        assert_eq!(c.capacity_bytes(), before_cap - freed);
+        assert_eq!((c.k_bits, c.v_bits), (2, 1));
+        assert_eq!((c.n_q, c.q_capacity()), (64, 64));
+        assert_ne!(c.ident_version(), id0, "non-append mutation re-stamps identity");
+
+        let after_k = c.dequant_k_full();
+        let after_v = c.dequant_v_full();
+        let (gg, dh, g2) = (32usize, 32usize, 32usize);
+        // residual rows are untouched — bitwise equal
+        for head in 0..2 {
+            for t in c.n_q..n {
+                assert_eq!(
+                    &after_k[head * n * dh + t * dh..][..dh],
+                    &before_k[head * n * dh + t * dh..][..dh],
+                    "residual K must be untouched"
+                );
+                assert_eq!(
+                    &after_v[head * n * dh + t * dh..][..dh],
+                    &before_v[head * n * dh + t * dh..][..dh],
+                    "residual V must be untouched"
+                );
+            }
+        }
+        // quantized region: exactly the refold of the old reconstruction
+        // at the new widths (the in-place requant is byte-equivalent to
+        // unfold@old + fold@new)
+        for head in 0..2 {
+            for gi in 0..c.n_q / gg {
+                let mut kg = vec![0f32; gg * dh];
+                let mut vg = vec![0f32; gg * dh];
+                for t in 0..gg {
+                    let src = head * n * dh + (gi * gg + t) * dh;
+                    kg[t * dh..(t + 1) * dh].copy_from_slice(&before_k[src..src + dh]);
+                    vg[t * dh..(t + 1) * dh].copy_from_slice(&before_v[src..src + dh]);
+                }
+                let mut pk = vec![0u8; rtn::packed_len(gg, 2) * dh];
+                let mut params = vec![GroupParams { scale: 0.0, zero: 0.0 }; dh];
+                rtn::fold_k_group(&kg, gg, dh, 2, &mut pk, &mut params);
+                let mut want = vec![0f32; gg * dh];
+                rtn::unfold_k_group(&pk, gg, dh, 2, &params, &mut want);
+                for t in 0..gg {
+                    for d in 0..dh {
+                        assert_eq!(
+                            after_k[head * n * dh + (gi * gg + t) * dh + d],
+                            want[t * dh + d],
+                            "K refold equivalence head={head} gi={gi} t={t} d={d}"
+                        );
+                    }
+                }
+                let mut pv = vec![0u8; gg * rtn::packed_len(dh, 1)];
+                let mut vparams =
+                    vec![GroupParams { scale: 0.0, zero: 0.0 }; gg * (dh / g2)];
+                rtn::fold_v_group(&vg, gg, dh, g2, 1, &mut pv, &mut vparams);
+                rtn::unfold_v_group(&pv, gg, dh, g2, 1, &vparams, &mut want);
+                for t in 0..gg {
+                    for d in 0..dh {
+                        assert_eq!(
+                            after_v[head * n * dh + (gi * gg + t) * dh + d],
+                            want[t * dh + d],
+                            "V refold equivalence head={head} gi={gi} t={t} d={d}"
+                        );
+                    }
+                }
+            }
+        }
+        // the cache stays fully functional at the new widths
+        for _ in 0..40 {
+            let (k, v) = tok(&mut g, hd);
+            c.append_token(&k, &v);
+        }
+        assert_eq!(c.n_tokens(), 140);
+        assert_eq!(c.n_q, 96);
+        assert!(c.capacity_bytes() > 0); // internal bytes_at_caps consistency
+    }
+
+    #[test]
+    fn downshift_from_fp32_quantizes_cold_region() {
+        let mut c = LayerCache::new(geo(), 0, 0);
+        let mut g = Gen { rng: crate::util::rng::SplitMix::new(32) };
+        let hd = 2 * 32;
+        let mut ks = vec![];
+        for _ in 0..100 {
+            let (k, v) = tok(&mut g, hd);
+            ks.push(k.clone());
+            c.append_token(&k, &v);
+        }
+        assert_eq!(c.n_q, 64);
+        let freed = c.downshift_groups(2, 2);
+        assert!(freed > 0, "fp32 -> 2-bit must free most of the cold region");
+        assert_eq!((c.k_bits, c.v_bits), (2, 2));
+        // dummy fp32 param rows were replaced by real per-group params
+        assert_eq!(c.k_scales.len(), 2 * (64 / 32) * 32);
+        assert!(c.k_f32.is_empty());
+        // quantized region error bounded by the new scales; residual exact
+        let n = c.n_tokens();
+        let full = c.dequant_k_full();
+        let max_scale = c.k_scales.iter().fold(0f32, |a, &b| a.max(b));
+        for head in 0..2 {
+            for (t, k) in ks.iter().enumerate() {
+                for d in 0..32 {
+                    let got = full[head * n * 32 + t * 32 + d];
+                    let want = k[head * 32 + d];
+                    let tol = if t < c.n_q { max_scale * 0.5 + 1e-4 } else { 0.0 };
+                    assert!(
+                        (got - want).abs() <= tol,
+                        "t={t} head={head} d={d}: {got} vs {want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn downshift_same_bits_trims_pregrown_capacity() {
+        let mut c = LayerCache::new(geo(), 2, 2);
+        c.ensure_q_cap(128);
+        assert!(c.capacity_bytes() > 0);
+        let freed = c.downshift_groups(2, 2);
+        assert!(freed > 0);
+        assert_eq!(c.q_capacity(), 0);
+        assert_eq!(c.capacity_bytes(), 0);
+        // and a no-op downshift reports zero without touching versions
+        let v0 = c.version();
+        assert_eq!(c.downshift_groups(2, 2), 0);
+        assert_eq!(c.version(), v0);
+    }
+
+    #[test]
+    #[should_panic(expected = "adds bits")]
+    fn downshift_rejects_upshift() {
+        let mut c = LayerCache::new(geo(), 2, 2);
+        c.downshift_groups(4, 2);
     }
 
     #[test]

@@ -20,6 +20,7 @@
 
 pub mod analysis;
 pub mod api;
+pub mod calib;
 pub mod coordinator;
 pub mod engine;
 pub mod evals;

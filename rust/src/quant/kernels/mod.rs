@@ -28,6 +28,7 @@
 //! (the old `debug_assert!`/`take(n)` behavior) could corrupt live cache
 //! memory instead of failing fast.
 
+pub mod requant;
 pub mod scalar;
 pub mod wordpack;
 

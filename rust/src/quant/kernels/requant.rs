@@ -1,0 +1,376 @@
+//! In-place re-quantization ("downshift") kernels: re-quantize already
+//! packed groups from `high` to `low` bits directly in the code domain,
+//! without rebuilding a float image of the cache.
+//!
+//! Correctness rests on the dequantized values being an affine, weakly
+//! monotone function of the stored codes (x* = q·s + z with s > 0): the
+//! min/max of a dequantized group is exactly the dequantized min/max code,
+//! so the low-bit group parameters — and every re-quantized code — can be
+//! computed from the packed codes alone. A property test asserts the
+//! output byte-identical to the golden path (scalar `unfold_*` at `high`
+//! followed by scalar `fold_*` at `low`); the fused path just never
+//! materializes the [G, Dh] float group, and at `high` ≤ 4 maps codes
+//! through a ≤16-entry lookup table instead of per-element float math —
+//! which is where the in-place downshift's speed over a refold-from-float
+//! comes from (`benches/bench_calib.rs` tracks the ratio).
+
+use super::{check_bits, check_v_shape, packed_len, GroupParams};
+
+/// Shared per-channel(-group) requant: given the `high`-bit params and the
+/// observed code min/max, derive the `low`-bit params exactly as
+/// `fold_*_group` would from the dequantized floats.
+#[inline]
+fn derive_params(p: GroupParams, qlo: u8, qhi: u8, qmax_low: f32) -> GroupParams {
+    let lo = qlo as f32 * p.scale + p.zero;
+    let hi = qhi as f32 * p.scale + p.zero;
+    let span = hi - lo;
+    let scale = if span > 0.0 { span / qmax_low } else { 1.0 };
+    GroupParams { scale, zero: lo }
+}
+
+/// Re-map one high-bit code to its low-bit code — the exact float
+/// expression the scalar fold applies to the dequantized value.
+#[inline]
+fn remap(q: u8, p: GroupParams, np: GroupParams, qmax_low: f32) -> u8 {
+    let x = q as f32 * p.scale + p.zero;
+    ((x - np.zero) / np.scale).round_ties_even().clamp(0.0, qmax_low) as u8
+}
+
+/// Re-map a run of codes in place; LUT path at `high` ≤ 4 (≤ 16 codes).
+#[inline]
+fn remap_codes(codes: &mut [u8], high: u8, p: GroupParams, np: GroupParams, qmax_low: f32) {
+    if high <= 4 {
+        let n_codes = 1usize << high;
+        let mut lut = [0u8; 16];
+        for (q, e) in lut.iter_mut().enumerate().take(n_codes) {
+            *e = remap(q as u8, p, np, qmax_low);
+        }
+        for c in codes.iter_mut() {
+            *c = lut[*c as usize];
+        }
+    } else {
+        for c in codes.iter_mut() {
+            *c = remap(*c, p, np, qmax_low);
+        }
+    }
+}
+
+/// Re-quantize one packed K group ([G·high/8, Dh] per-channel layout) to
+/// `low` bits. `out_packed` is [G·low/8, Dh]; params are per channel.
+/// Byte-identical to scalar `unfold_k_group`@high + `fold_k_group`@low.
+#[allow(clippy::too_many_arguments)]
+pub fn requant_k_group(
+    packed: &[u8],
+    params: &[GroupParams],
+    g: usize,
+    dh: usize,
+    high: u8,
+    low: u8,
+    out_packed: &mut [u8],
+    out_params: &mut [GroupParams],
+) {
+    check_bits(high);
+    check_bits(low);
+    assert!(low <= high, "requant_k_group: cannot upshift {high} -> {low} bits");
+    let vpb_h = (8 / high) as usize;
+    let vpb_l = (8 / low) as usize;
+    assert_eq!(g % vpb_h, 0, "requant_k_group: G={g} not a multiple of {vpb_h} at {high}-bit");
+    assert_eq!(g % vpb_l, 0, "requant_k_group: G={g} not a multiple of {vpb_l} at {low}-bit");
+    assert_eq!(
+        packed.len(),
+        packed_len(g, high) * dh,
+        "requant_k_group: source packed region size mismatch"
+    );
+    assert_eq!(
+        out_packed.len(),
+        packed_len(g, low) * dh,
+        "requant_k_group: destination packed region size mismatch"
+    );
+    assert_eq!(params.len(), dh, "requant_k_group: params length != Dh");
+    assert_eq!(out_params.len(), dh, "requant_k_group: out params length != Dh");
+
+    let mask_h = ((1u16 << high) - 1) as u8;
+    let qmax_l = ((1u32 << low) - 1) as f32;
+    let rows_h = g / vpb_h;
+    let rows_l = g / vpb_l;
+    let mut codes = vec![0u8; g]; // one channel's column, reused across Dh
+    for d in 0..dh {
+        // unpack the channel's token column + min/max scan in one pass
+        let (mut qlo, mut qhi) = (mask_h, 0u8);
+        for bp in 0..rows_h {
+            let byte = packed[bp * dh + d];
+            for j in 0..vpb_h {
+                let q = (byte >> (j as u8 * high)) & mask_h;
+                codes[bp * vpb_h + j] = q;
+                qlo = qlo.min(q);
+                qhi = qhi.max(q);
+            }
+        }
+        let p = params[d];
+        let np = derive_params(p, qlo, qhi, qmax_l);
+        out_params[d] = np;
+        remap_codes(&mut codes, high, p, np, qmax_l);
+        // pack along tokens at `low` bits
+        for bp in 0..rows_l {
+            let mut byte = 0u8;
+            for j in 0..vpb_l {
+                byte |= codes[bp * vpb_l + j] << (j as u8 * low);
+            }
+            out_packed[bp * dh + d] = byte;
+        }
+    }
+}
+
+/// Re-quantize one packed V group ([G, Dh·high/8] per-token layout) to
+/// `low` bits. `out_packed` is [G, Dh·low/8]; params are [G·Dh/g2].
+/// Byte-identical to scalar `unfold_v_group`@high + `fold_v_group`@low.
+#[allow(clippy::too_many_arguments)]
+pub fn requant_v_group(
+    packed: &[u8],
+    params: &[GroupParams],
+    g: usize,
+    dh: usize,
+    g2: usize,
+    high: u8,
+    low: u8,
+    out_packed: &mut [u8],
+    out_params: &mut [GroupParams],
+) {
+    check_v_shape(dh, g2, high);
+    check_v_shape(dh, g2, low);
+    assert!(low <= high, "requant_v_group: cannot upshift {high} -> {low} bits");
+    assert_eq!(
+        packed.len(),
+        g * packed_len(dh, high),
+        "requant_v_group: source packed region size mismatch"
+    );
+    assert_eq!(
+        out_packed.len(),
+        g * packed_len(dh, low),
+        "requant_v_group: destination packed region size mismatch"
+    );
+    let dg = dh / g2;
+    assert_eq!(params.len(), g * dg, "requant_v_group: params length != G*Dh/g2");
+    assert_eq!(out_params.len(), g * dg, "requant_v_group: out params length != G*Dh/g2");
+
+    let vpb_h = (8 / high) as usize;
+    let vpb_l = (8 / low) as usize;
+    let mask_h = ((1u16 << high) - 1) as u8;
+    let qmax_l = ((1u32 << low) - 1) as f32;
+    let bpt_h = packed_len(dh, high);
+    let bpt_l = packed_len(dh, low);
+    let seg_h = g2 / vpb_h;
+    let seg_l = g2 / vpb_l;
+    let mut codes = vec![0u8; g2]; // one channel segment, reused
+    for t in 0..g {
+        for gi in 0..dg {
+            let src = &packed[t * bpt_h + gi * seg_h..t * bpt_h + (gi + 1) * seg_h];
+            let (mut qlo, mut qhi) = (mask_h, 0u8);
+            for (bp, &byte) in src.iter().enumerate() {
+                for j in 0..vpb_h {
+                    let q = (byte >> (j as u8 * high)) & mask_h;
+                    codes[bp * vpb_h + j] = q;
+                    qlo = qlo.min(q);
+                    qhi = qhi.max(q);
+                }
+            }
+            let p = params[t * dg + gi];
+            let np = derive_params(p, qlo, qhi, qmax_l);
+            out_params[t * dg + gi] = np;
+            remap_codes(&mut codes, high, p, np, qmax_l);
+            let dst =
+                &mut out_packed[t * bpt_l + gi * seg_l..t * bpt_l + (gi + 1) * seg_l];
+            for (bp, byte) in dst.iter_mut().enumerate() {
+                let mut b = 0u8;
+                for j in 0..vpb_l {
+                    b |= codes[bp * vpb_l + j] << (j as u8 * low);
+                }
+                *byte = b;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{
+        fold_k_group_with, fold_v_group_with, packed_len, unfold_k_group_with,
+        unfold_v_group_with, GroupParams, KernelMode,
+    };
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    const BIT_PAIRS: [(u8, u8); 6] = [(8, 4), (8, 2), (8, 1), (4, 2), (4, 1), (2, 1)];
+
+    fn zeroed(n: usize) -> Vec<GroupParams> {
+        vec![GroupParams { scale: 0.0, zero: 0.0 }; n]
+    }
+
+    /// Satellite: requant(high→low) on packed codes must be byte-identical
+    /// to dequantizing at `high` and refolding at `low` via the golden
+    /// scalar path — across bit pairs, BOTH layouts, and partial
+    /// (cold-tail) group ranges of a multi-group region.
+    #[test]
+    fn requant_matches_golden_unfold_fold_prop() {
+        check("requant_golden", 120, |g: &mut Gen| {
+            let (high, low) = *g.pick(&BIT_PAIRS);
+            let (gg, dh) = (32usize, g.usize_in(1, 4) * 8);
+            // both the g2 == Dh (single channel-group) and g2 < Dh shapes
+            let g2 = if g.bool() { dh } else { 8 };
+            let dg = dh / g2;
+            let n_groups = g.usize_in(1, 4);
+            // partial range: requant only groups [start, start+len)
+            let start = g.usize_in(0, n_groups - 1);
+            let len = g.usize_in(1, n_groups - start);
+            // mix structured channels in: constant columns hit span == 0
+            let mut xs = g.vec_normal(n_groups * gg * dh, 2.0);
+            if g.bool() {
+                let d = g.usize_in(0, dh - 1);
+                for t in 0..n_groups * gg {
+                    xs[t * dh + d] = 0.25;
+                }
+            }
+
+            // source region folded at `high` bits (scalar golden)
+            let rows_h = packed_len(gg, high);
+            let rows_l = packed_len(gg, low);
+            let bpt_h = packed_len(dh, high);
+            let bpt_l = packed_len(dh, low);
+            let mut k_hi = vec![0u8; n_groups * rows_h * dh];
+            let mut kp_hi = zeroed(n_groups * dh);
+            let mut v_hi = vec![0u8; n_groups * gg * bpt_h];
+            let mut vp_hi = zeroed(n_groups * gg * dg);
+            for gi in 0..n_groups {
+                let xg = &xs[gi * gg * dh..(gi + 1) * gg * dh];
+                fold_k_group_with(
+                    KernelMode::Scalar,
+                    xg,
+                    gg,
+                    dh,
+                    high,
+                    &mut k_hi[gi * rows_h * dh..(gi + 1) * rows_h * dh],
+                    &mut kp_hi[gi * dh..(gi + 1) * dh],
+                );
+                fold_v_group_with(
+                    KernelMode::Scalar,
+                    xg,
+                    gg,
+                    dh,
+                    g2,
+                    high,
+                    &mut v_hi[gi * gg * bpt_h..(gi + 1) * gg * bpt_h],
+                    &mut vp_hi[gi * gg * dg..(gi + 1) * gg * dg],
+                );
+            }
+
+            for gi in start..start + len {
+                // golden: unfold at high, fold at low (scalar both ways)
+                let mut floats = vec![0f32; gg * dh];
+                let mut want_k = vec![0u8; rows_l * dh];
+                let mut want_kp = zeroed(dh);
+                unfold_k_group_with(
+                    KernelMode::Scalar,
+                    &k_hi[gi * rows_h * dh..(gi + 1) * rows_h * dh],
+                    gg,
+                    dh,
+                    high,
+                    &kp_hi[gi * dh..(gi + 1) * dh],
+                    &mut floats,
+                );
+                fold_k_group_with(
+                    KernelMode::Scalar,
+                    &floats,
+                    gg,
+                    dh,
+                    low,
+                    &mut want_k,
+                    &mut want_kp,
+                );
+                let mut got_k = vec![0u8; rows_l * dh];
+                let mut got_kp = zeroed(dh);
+                requant_k_group(
+                    &k_hi[gi * rows_h * dh..(gi + 1) * rows_h * dh],
+                    &kp_hi[gi * dh..(gi + 1) * dh],
+                    gg,
+                    dh,
+                    high,
+                    low,
+                    &mut got_k,
+                    &mut got_kp,
+                );
+                if got_k != want_k || got_kp != want_kp {
+                    return Err(format!(
+                        "K requant diverged from golden at group {gi} ({high}->{low} bits)"
+                    ));
+                }
+
+                let mut want_v = vec![0u8; gg * bpt_l];
+                let mut want_vp = zeroed(gg * dg);
+                unfold_v_group_with(
+                    KernelMode::Scalar,
+                    &v_hi[gi * gg * bpt_h..(gi + 1) * gg * bpt_h],
+                    gg,
+                    dh,
+                    g2,
+                    high,
+                    &vp_hi[gi * gg * dg..(gi + 1) * gg * dg],
+                    &mut floats,
+                );
+                fold_v_group_with(
+                    KernelMode::Scalar,
+                    &floats,
+                    gg,
+                    dh,
+                    g2,
+                    low,
+                    &mut want_v,
+                    &mut want_vp,
+                );
+                let mut got_v = vec![0u8; gg * bpt_l];
+                let mut got_vp = zeroed(gg * dg);
+                requant_v_group(
+                    &v_hi[gi * gg * bpt_h..(gi + 1) * gg * bpt_h],
+                    &vp_hi[gi * gg * dg..(gi + 1) * gg * dg],
+                    gg,
+                    dh,
+                    g2,
+                    high,
+                    low,
+                    &mut got_v,
+                    &mut got_vp,
+                );
+                if got_v != want_v || got_vp != want_vp {
+                    return Err(format!(
+                        "V requant diverged from golden at group {gi} ({high}->{low} bits)"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn constant_group_downshifts_to_zero_codes() {
+        let (g, dh) = (8usize, 8usize);
+        let xs = vec![1.5f32; g * dh];
+        let mut packed = vec![0u8; packed_len(g, 8) * dh];
+        let mut params = zeroed(dh);
+        fold_k_group_with(KernelMode::Scalar, &xs, g, dh, 8, &mut packed, &mut params);
+        let mut out = vec![0xFFu8; packed_len(g, 1) * dh];
+        let mut outp = zeroed(dh);
+        requant_k_group(&packed, &params, g, dh, 8, 1, &mut out, &mut outp);
+        assert!(out.iter().all(|&b| b == 0), "constant group must map to code 0");
+        for p in &outp {
+            assert_eq!(p.scale, 1.0, "span-0 group keeps the unit-scale guard");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot upshift")]
+    fn upshift_rejected() {
+        let mut out = vec![0u8; packed_len(8, 4) * 8];
+        let mut outp = zeroed(8);
+        let packed = vec![0u8; packed_len(8, 1) * 8];
+        requant_k_group(&packed, &zeroed(8), 8, 8, 1, 4, &mut out, &mut outp);
+    }
+}

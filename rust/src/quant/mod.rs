@@ -5,4 +5,4 @@ pub mod policy;
 pub mod rtn;
 
 pub use kernels::{GroupParams, KernelMode};
-pub use policy::{Bits, QuantPolicy};
+pub use policy::{side_bytes_per_token, Bits, QuantPolicy};

@@ -88,6 +88,24 @@ impl QuantPolicy {
         Self { k_bits, v_bits, name: name.into() }
     }
 
+    /// Calibrated per-layer assignment (the `calib` budget solver's
+    /// output, and the scheduler's post-downshift policies): the name
+    /// encodes every layer's K and V bits as one digit each
+    /// (`AsymKV-auto@<kdigits>/<vdigits>`, digits ∈ {0, 1, 2, 4, 8} with
+    /// 0 = fp32), so ANY per-layer allocation round-trips through
+    /// [`QuantPolicy::parse`] like the named grid policies do.
+    pub fn asymkv_auto(k_bits: Vec<Bits>, v_bits: Vec<Bits>) -> Self {
+        assert_eq!(k_bits.len(), v_bits.len());
+        assert!(
+            k_bits.iter().chain(&v_bits).all(|&b| matches!(b, 0 | 1 | 2 | 4 | 8)),
+            "asymkv_auto: bits must be one of 0 (fp32), 1, 2, 4, 8"
+        );
+        let digits =
+            |bs: &[Bits]| bs.iter().map(|&b| char::from(b'0' + b)).collect::<String>();
+        let name = format!("AsymKV-auto@{}/{}", digits(&k_bits), digits(&v_bits));
+        Self { k_bits, v_bits, name }
+    }
+
     /// Number of (layer, side) slots at `high` bits — the memory knob the
     /// sweeps vary; two policies with equal counts use equal cache bytes.
     pub fn high_slots(&self, high: Bits) -> usize {
@@ -125,6 +143,27 @@ impl QuantPolicy {
                 .map_err(|_| format!("bad vonly bits in '{s}'"))?;
             return Ok(Self::v_only(n_layers, bits));
         }
+        // must match before the generic "asymkv-" prefix below
+        if let Some(rest) = low.strip_prefix("asymkv-auto@") {
+            let (ks, vs) = rest.split_once('/').ok_or_else(|| {
+                format!("expected asymkv-auto@<kdigits>/<vdigits> in '{s}'")
+            })?;
+            let side = |ds: &str, which: &str| -> Result<Vec<Bits>, String> {
+                if ds.len() != n_layers {
+                    return Err(format!(
+                        "{which} digits in '{s}' cover {} layers, model has {n_layers}",
+                        ds.len()
+                    ));
+                }
+                ds.chars()
+                    .map(|c| match c {
+                        '0' | '1' | '2' | '4' | '8' => Ok(c as Bits - b'0'),
+                        _ => Err(format!("bad {which} bit digit '{c}' in '{s}'")),
+                    })
+                    .collect()
+            };
+            return Ok(Self::asymkv_auto(side(ks, "K")?, side(vs, "V")?));
+        }
         if let Some(rest) = low.strip_prefix("asymkv-") {
             let (lkv, hl) = match rest.split_once('@') {
                 Some((a, b)) => (a, Some(b)),
@@ -153,7 +192,8 @@ impl QuantPolicy {
             return Ok(Self::asymkv(n_layers, l_k, l_v, high, low_b));
         }
         Err(format!(
-            "unknown policy '{s}' (float | kivi-N | konly-N | vonly-N | asymkv-LK/LV[@H:L])"
+            "unknown policy '{s}' (float | kivi-N | konly-N | vonly-N | \
+             asymkv-LK/LV[@H:L] | asymkv-auto@KDIGITS/VDIGITS)"
         ))
     }
 
@@ -235,6 +275,18 @@ mod tests {
     }
 
     #[test]
+    fn asymkv_auto_roundtrip_and_rejections() {
+        let p = QuantPolicy::asymkv_auto(vec![2, 2, 1, 0], vec![8, 4, 1, 1]);
+        assert_eq!(p.name, "AsymKV-auto@2210/8411");
+        assert_eq!(QuantPolicy::parse(&p.name, 4).unwrap(), p);
+        assert_eq!(QuantPolicy::parse("ASYMKV-AUTO@2210/8411", 4).unwrap(), p);
+        assert!(QuantPolicy::parse("asymkv-auto@2210/8411", 5).is_err());
+        assert!(QuantPolicy::parse("asymkv-auto@2210/841", 4).is_err());
+        assert!(QuantPolicy::parse("asymkv-auto@2310/8411", 4).is_err()); // 3-bit digit
+        assert!(QuantPolicy::parse("asymkv-auto@2210", 4).is_err());
+    }
+
+    #[test]
     fn memory_ordering_asym_below_kivi2() {
         // the headline memory claim: AsymKV-l/0 << KIVI-2bit << float
         let n = 32;
@@ -281,17 +333,23 @@ mod prop_tests {
     fn constructor_names_reparse_to_equal_policy() {
         check("policy_name_roundtrip", 400, |g| {
             let n = g.usize_in(1, 16);
-            let p = match g.usize_in(0, 4) {
+            let p = match g.usize_in(0, 5) {
                 0 => QuantPolicy::float32(n),
                 1 => QuantPolicy::kivi(n, *g.pick(&BITS)),
                 2 => QuantPolicy::k_only(n, *g.pick(&BITS)),
                 3 => QuantPolicy::v_only(n, *g.pick(&BITS)),
-                _ => {
+                4 => {
                     let l_k = g.usize_in(0, n);
                     let l_v = g.usize_in(0, n);
                     let (high, low) =
                         *g.pick(&[(2u8, 1u8), (4, 2), (4, 1), (8, 4), (3, 2)]);
                     QuantPolicy::asymkv(n, l_k, l_v, high, low)
+                }
+                _ => {
+                    const AUTO: [Bits; 5] = [0, 1, 2, 4, 8];
+                    let k = (0..n).map(|_| *g.pick(&AUTO)).collect();
+                    let v = (0..n).map(|_| *g.pick(&AUTO)).collect();
+                    QuantPolicy::asymkv_auto(k, v)
                 }
             };
             match QuantPolicy::parse(&p.name, n) {

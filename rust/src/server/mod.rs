@@ -60,10 +60,11 @@ use std::sync::{mpsc, Arc, Mutex};
 use anyhow::{Context, Result};
 
 use crate::api::{
-    self, ApiError, ApiRequest, ApiResponse, ErrorCode, Frame, GenerateSpec,
-    GenerationResult, PolicyInfo, PolicyReport, PoolReport, Proto,
-    SessionConfig, SessionManager, TurnOpts,
+    self, ApiError, ApiRequest, ApiResponse, CalibrationReport, ErrorCode,
+    Frame, GenerateSpec, GenerationResult, PolicyInfo, PolicyReport,
+    PoolReport, Proto, SessionConfig, SessionManager, TurnOpts,
 };
+use crate::calib::PolicyRegistry;
 use crate::coordinator::request::TokenSink;
 use crate::coordinator::{AbortHandle, Coordinator, Request};
 use crate::model::ByteTokenizer;
@@ -72,6 +73,11 @@ use crate::util::json::Value;
 
 /// Default cap on concurrently in-flight tagged requests per connection.
 pub const DEFAULT_MAX_INFLIGHT: usize = 64;
+
+/// Perplexity acceptance band of the `calibrate` op's gate: the derived
+/// policy must stay within this factor of the float baseline on the
+/// calibration documents, or the policy is not registered.
+pub const CALIBRATE_PPL_FACTOR: f64 = 1.5;
 
 pub struct Server {
     pub coord: Arc<Coordinator>,
@@ -84,6 +90,10 @@ pub struct Server {
     stop: Arc<AtomicBool>,
     sessions: SessionManager,
     housekeeping_started: AtomicBool,
+    /// Policies derived by the `calibrate` op, listed by `policies` and
+    /// addressable by name (their `AsymKV-auto@…` names also re-parse
+    /// through the standard grammar, so plain `generate` lines work too).
+    calib_policies: PolicyRegistry,
 }
 
 /// Clonable handle on a connection's outbound frame channel. Everything
@@ -132,6 +142,7 @@ impl Server {
             stop: Arc::new(AtomicBool::new(false)),
             sessions,
             housekeeping_started: AtomicBool::new(false),
+            calib_policies: PolicyRegistry::new(),
         })
     }
 
@@ -344,8 +355,9 @@ impl Server {
 
     /// Handle one v3 line. Instant ops (cancel, ping, stats, pool,
     /// policies, session open/close) are answered inline; generation ops
-    /// register their tag and run on a worker thread. Returns Err only
-    /// for connection-fatal protocol violations (duplicate tag).
+    /// and `calibrate` (which drives real engine work) register their tag
+    /// and run on a worker thread. Returns Err only for connection-fatal
+    /// protocol violations (duplicate tag).
     fn handle_v3(
         self: &Arc<Self>,
         tag: u64,
@@ -380,7 +392,8 @@ impl Server {
             }
             ApiRequest::Generate(_)
             | ApiRequest::BatchGenerate { .. }
-            | ApiRequest::SessionAppend { .. } => {
+            | ApiRequest::SessionAppend { .. }
+            | ApiRequest::Calibrate { .. } => {
                 // (the duplicate-tag check already ran above; the reader
                 // thread is the only registrar, so the tag cannot become
                 // live between that check and this insert)
@@ -475,7 +488,10 @@ impl Server {
                     Err(e) => ApiResponse::Error(e),
                 }
             }
-            // handle_v3 routes only generation ops here
+            ApiRequest::Calibrate { budget, seed, episodes, gate } => {
+                self.run_calibrate(budget, seed, episodes, gate, Some(abort))
+            }
+            // handle_v3 routes only the ops above here
             _ => ApiResponse::Error(ApiError::new(
                 ErrorCode::Internal,
                 "non-generation op on worker thread",
@@ -558,6 +574,9 @@ impl Server {
             }
             ApiRequest::Cancel { target } => {
                 ApiResponse::CancelResult { target, cancelled: false }
+            }
+            ApiRequest::Calibrate { budget, seed, episodes, gate } => {
+                self.run_calibrate(budget, seed, episodes, gate, None)
             }
         }
     }
@@ -646,8 +665,107 @@ impl Server {
         )
     }
 
-    /// The `policies` op: list the supported policy surface, or expand and
-    /// grid-validate a single probed spec server-side.
+    /// The `calibrate` op: profile layer sensitivity on a seeded recall
+    /// trace, solve for the best grid allocation under `budget` KV
+    /// bytes/token, and — unless `gate` is off — verify the derived
+    /// policy's perplexity stays within [`CALIBRATE_PPL_FACTOR`] of the
+    /// float baseline on the same documents. The policy is registered
+    /// (listed by `policies`, usable by name) only when the gate passes
+    /// (or is skipped); a failed gate still returns the full report so the
+    /// client can retry with a bigger budget.
+    fn run_calibrate(
+        &self,
+        budget: u64,
+        seed: u64,
+        episodes: usize,
+        gate: bool,
+        abort: Option<&AbortHandle>,
+    ) -> ApiResponse {
+        let cancelled = || {
+            ApiResponse::Error(ApiError::new(
+                ErrorCode::Cancelled,
+                "calibration cancelled",
+            ))
+        };
+        let engine = self.coord.engine();
+        let m = engine.manifest();
+        // candidate widths = every nonzero bit the artifact grid can run
+        let mut bits: Vec<u8> =
+            m.grid.iter().flat_map(|&(k, v)| [k, v]).filter(|&b| b != 0).collect();
+        bits.sort_unstable();
+        bits.dedup();
+        let profile =
+            match crate::calib::profile_engine(engine, seed, episodes, &bits) {
+                Ok(p) => p,
+                Err(e) => {
+                    return ApiResponse::Error(ApiError::engine(format!(
+                        "calibration profiling failed: {e:#}"
+                    )))
+                }
+            };
+        if abort.is_some_and(|a| a.is_aborted()) {
+            return cancelled();
+        }
+        let solved =
+            match crate::calib::solve_for_manifest(&profile, m, budget as usize) {
+                Ok(s) => s,
+                Err(e) => {
+                    return ApiResponse::Error(ApiError::bad_field("budget", &e))
+                }
+            };
+        let (ppl_float, ppl_policy, gate_ok) = if gate {
+            let docs: Vec<Vec<u8>> =
+                crate::workload::tasks::recall_suite(seed, episodes, 4)
+                    .into_iter()
+                    .map(|ep| ep.prompt)
+                    .collect();
+            let float = QuantPolicy::float32(m.n_layers);
+            let pf = match crate::evals::perplexity(engine, &float, &docs) {
+                Ok(x) => x,
+                Err(e) => {
+                    return ApiResponse::Error(ApiError::engine(format!(
+                        "calibration gate (float baseline) failed: {e:#}"
+                    )))
+                }
+            };
+            if abort.is_some_and(|a| a.is_aborted()) {
+                return cancelled();
+            }
+            let pp = match crate::evals::perplexity(engine, &solved.policy, &docs)
+            {
+                Ok(x) => x,
+                Err(e) => {
+                    return ApiResponse::Error(ApiError::engine(format!(
+                        "calibration gate (derived policy) failed: {e:#}"
+                    )))
+                }
+            };
+            (Some(pf), Some(pp), pp <= pf * CALIBRATE_PPL_FACTOR)
+        } else {
+            (None, None, true)
+        };
+        if gate_ok {
+            self.calib_policies.register(solved.policy.clone());
+        }
+        ApiResponse::Calibration(CalibrationReport {
+            policy: PolicyInfo {
+                name: solved.policy.name.clone(),
+                k_bits: solved.policy.k_bits.clone(),
+                v_bits: solved.policy.v_bits.clone(),
+                bytes_per_token: solved.bytes_per_token,
+            },
+            budget,
+            predicted_damage: solved.predicted_damage,
+            ppl_float,
+            ppl_policy,
+            gate_ok,
+        })
+    }
+
+    /// The `policies` op: list the supported policy surface — built-in
+    /// grid examples plus any `calibrate`-registered allocations — or
+    /// expand and grid-validate a single probed spec server-side
+    /// (registered names resolve before the grammar).
     fn policies(&self, probe: Option<String>) -> ApiResponse {
         let m = self.coord.engine().manifest();
         let specs = vec![
@@ -656,6 +774,7 @@ impl Server {
             "asymkv-<l_k>/<l_v>[@<high>:<low>]".to_string(),
             "konly-<bits>".to_string(),
             "vonly-<bits>".to_string(),
+            "AsymKV-auto@<k_digits>/<v_digits>".to_string(),
         ];
         let expand = |p: &QuantPolicy| PolicyInfo {
             name: p.name.clone(),
@@ -665,7 +784,7 @@ impl Server {
         };
         let policies = match &probe {
             Some(s) => {
-                let p = match QuantPolicy::parse(s, m.n_layers) {
+                let p = match self.calib_policies.resolve(s, m.n_layers) {
                     Ok(p) => p,
                     Err(e) => {
                         return ApiResponse::Error(ApiError::new(
@@ -693,6 +812,11 @@ impl Server {
                 }
                 candidates.push(QuantPolicy::asymkv21(n, n * 3 / 4, 0));
                 candidates.push(QuantPolicy::asymkv21(n, n / 2, n / 2));
+                for name in self.calib_policies.list() {
+                    if let Some(p) = self.calib_policies.get(&name) {
+                        candidates.push(p);
+                    }
+                }
                 candidates
                     .iter()
                     .filter(|p| m.supports_policy(p).is_ok())

@@ -1,0 +1,113 @@
+//! End-to-end calibration pipeline, artifact-free and deterministic: a
+//! seeded synthetic sensitivity profile drives the budget solver against a
+//! real manifest fixture (loaded through `Manifest::load`, grid and all),
+//! the derived `AsymKV-auto@…` policy round-trips through the policy
+//! grammar and the registry, and a live `LayerCache` downshifts in place
+//! to the solved widths. This is the whole profile → solve → serve →
+//! downshift chain with no compiled artifacts — the server-level
+//! `calibrate` op is the same pipeline behind the wire protocol.
+
+use std::path::PathBuf;
+
+use asymkv::calib::{profile_synthetic, solve_for_manifest, PolicyRegistry};
+use asymkv::kvcache::LayerCache;
+use asymkv::model::Manifest;
+use asymkv::quant::QuantPolicy;
+use asymkv::util::prop::Gen;
+use asymkv::util::rng::SplitMix;
+
+fn fixture_manifest() -> Manifest {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("fixtures")
+        .join("calib_tiny");
+    Manifest::load(dir).expect("loading calib_tiny fixture manifest")
+}
+
+/// Candidate widths exactly as the server derives them: every nonzero bit
+/// the manifest's grid can execute.
+fn grid_bits(m: &Manifest) -> Vec<u8> {
+    let mut bits: Vec<u8> =
+        m.grid.iter().flat_map(|&(k, v)| [k, v]).filter(|&b| b != 0).collect();
+    bits.sort_unstable();
+    bits.dedup();
+    bits
+}
+
+fn fixture_profile(m: &Manifest, seed: u64) -> asymkv::calib::SensitivityProfile {
+    profile_synthetic(m.n_layers, m.n_heads, m.d_head, m.group, 96, seed, &grid_bits(m))
+}
+
+#[test]
+fn solved_policy_fits_budget_and_round_trips() {
+    let m = fixture_manifest();
+    assert_eq!(grid_bits(&m), vec![1, 2]);
+    let profile = fixture_profile(&m, 7);
+    let floor =
+        QuantPolicy::kivi(m.n_layers, 1).bytes_per_token(m.n_heads, m.d_head, m.group);
+    let budget = floor + 16;
+    let s = solve_for_manifest(&profile, &m, budget).unwrap();
+
+    assert!(s.bytes_per_token <= budget, "{} > budget {budget}", s.bytes_per_token);
+    assert!(
+        s.policy.name.starts_with("AsymKV-auto@"),
+        "unexpected policy name '{}'",
+        s.policy.name
+    );
+    // grid-supported and grammar-round-trippable: a client can paste the
+    // reported name into any generate line
+    m.supports_policy(&s.policy).unwrap();
+    let parsed = QuantPolicy::parse(&s.policy.name, m.n_layers).unwrap();
+    assert_eq!(parsed, s.policy);
+
+    // same profile seed + budget → byte-identical policy
+    let again = solve_for_manifest(&fixture_profile(&m, 7), &m, budget).unwrap();
+    assert_eq!(again.policy, s.policy);
+
+    // serve step: registered policies list and resolve by exact name
+    let reg = PolicyRegistry::new();
+    reg.register(s.policy.clone());
+    assert_eq!(reg.list(), vec![s.policy.name.clone()]);
+    assert_eq!(reg.resolve(&s.policy.name, m.n_layers).unwrap(), s.policy);
+}
+
+#[test]
+fn lavish_budget_solves_to_float_and_tight_budget_to_one_bit() {
+    let m = fixture_manifest();
+    let profile = fixture_profile(&m, 11);
+    let lavish = solve_for_manifest(&profile, &m, usize::MAX).unwrap();
+    assert_eq!(lavish.predicted_damage, 0.0);
+    assert!(lavish.policy.k_bits.iter().chain(&lavish.policy.v_bits).all(|&b| b == 0));
+
+    let floor =
+        QuantPolicy::kivi(m.n_layers, 1).bytes_per_token(m.n_heads, m.d_head, m.group);
+    let tight = solve_for_manifest(&profile, &m, floor).unwrap();
+    assert!(tight.policy.k_bits.iter().chain(&tight.policy.v_bits).all(|&b| b == 1));
+    assert!(solve_for_manifest(&profile, &m, floor - 1).is_err(), "sub-floor budget");
+}
+
+#[test]
+fn live_cache_downshifts_in_place_to_solved_widths() {
+    let m = fixture_manifest();
+    let profile = fixture_profile(&m, 5);
+    let floor =
+        QuantPolicy::kivi(m.n_layers, 1).bytes_per_token(m.n_heads, m.d_head, m.group);
+    let s = solve_for_manifest(&profile, &m, floor).unwrap();
+
+    // a cache running the grid's widest quantized pair, filled far enough
+    // that cold folded groups exist (the region the downshift re-packs)
+    let geo = m.geometry();
+    let hd = geo.n_heads * geo.d_head;
+    let n = geo.max_ctx; // 128 tokens: 64 fold, 64 stay in the residual ring
+    let mut g = Gen { rng: SplitMix::new(3) };
+    let ks = g.vec_normal(n * hd, 1.0);
+    let vs = g.vec_normal(n * hd, 1.0);
+    let mut lc = LayerCache::new(geo, 2, 2);
+    lc.append_tokens(n, &ks, &vs);
+
+    let before = lc.capacity_bytes();
+    let freed = lc.downshift_groups(s.policy.k_bits[0], s.policy.v_bits[0]);
+    assert!(freed > 0, "2-bit → 1-bit downshift must shrink the packed region");
+    assert_eq!(before - lc.capacity_bytes(), freed, "freed must match the delta");
+    assert_eq!(lc.n_tokens(), n, "downshift must not drop tokens");
+}

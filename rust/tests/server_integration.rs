@@ -49,6 +49,7 @@ fn coordinator_roundtrip_and_batching() {
             max_batch: 4,
             batch_window: std::time::Duration::from_millis(5),
             prefix_cache_bytes: 0,
+            downshift: true,
         },
     );
     let tok = ByteTokenizer;
@@ -423,6 +424,7 @@ fn backpressure_under_tiny_pool_budget() {
             max_batch: 4,
             batch_window: std::time::Duration::from_millis(1),
             prefix_cache_bytes: 0,
+            downshift: true,
         },
     );
     let tok = ByteTokenizer;
@@ -464,6 +466,7 @@ fn priority_ordering_respected() {
             max_batch: 2,
             batch_window: std::time::Duration::from_millis(30),
             prefix_cache_bytes: 0,
+            downshift: true,
         },
     );
     let tok = ByteTokenizer;
@@ -607,7 +610,10 @@ fn preemption_requeues_and_preserves_output() {
     // Over-subscribed pool: optimistic paged admission lets several long
     // generations start, their page growth collides mid-decode, and the
     // scheduler must preempt + requeue (never panic, never fail) with
-    // byte-identical greedy output to an uncontended run.
+    // byte-identical greedy output to an uncontended run. `downshift` is
+    // off here to pin the strict evict-and-replay path — the in-place
+    // downshift alternative is covered by
+    // `downshift_frees_pages_before_preemption` below.
     let Some(dir) = common::artifact_dir("tiny") else { return };
     let rt = Arc::new(asymkv::runtime::Runtime::load(dir).unwrap());
     let tok = ByteTokenizer;
@@ -627,6 +633,7 @@ fn preemption_requeues_and_preserves_output() {
                 max_batch: 4,
                 batch_window: std::time::Duration::from_millis(1),
                 prefix_cache_bytes: 0,
+                downshift: false,
             },
         );
         let handles: Vec<_> = prompts
@@ -648,10 +655,11 @@ fn preemption_requeues_and_preserves_output() {
             assert_eq!(r.tokens.len(), n_gen);
             outs.push(r.tokens);
         }
-        let preemptions = coord.metrics().preemptions;
+        let m = coord.metrics();
+        assert_eq!(m.downshifts, 0, "downshift disabled by config");
         assert_eq!(coord.engine().pool.stats().n_seqs, 0, "caches released");
         coord.shutdown();
-        (outs, preemptions)
+        (outs, m.preemptions)
     };
 
     // reference: unconstrained pool, no preemption possible
@@ -678,6 +686,83 @@ fn preemption_requeues_and_preserves_output() {
         "expected mid-decode preemptions under a {} byte budget",
         one + one / 2
     );
+}
+
+#[test]
+fn downshift_frees_pages_before_preemption() {
+    // Over-subscribed pool with the pressure-adaptive path ON: when page
+    // growth collides mid-decode, the scheduler re-quantizes a victim's
+    // cold (already-folded) groups in place one grid rung down instead of
+    // evicting it. Victims keep decoding at lower precision, the repack
+    // returns pages to the pool (`downshift_bytes_freed`), and preemption
+    // remains only as the fallback once everyone sits at the grid floor.
+    let Some(dir) = common::artifact_dir("tiny") else { return };
+    let rt = Arc::new(asymkv::runtime::Runtime::load(dir).unwrap());
+    let tok = ByteTokenizer;
+    // Prompts longer than half the residual window pre-page the whole
+    // fp32 ring at prefill; the long generated tail then folds groups
+    // into the quantized region, whose pages the budget runs out of —
+    // exactly the bytes a downshift can shrink.
+    let n_gen = 140usize;
+    let prompts: Vec<Vec<i32>> = (0..4)
+        .map(|i| {
+            tok.encode_str(&format!(
+                "the ox {i} runs over the lazy dog and the dog naps. the"
+            ))
+        })
+        .collect();
+    let probe = asymkv::engine::Engine::new(rt.clone(), usize::MAX).unwrap();
+    let n = probe.manifest().n_layers;
+    // every layer at (2, 2): one grid rung above the (1, 1) floor
+    let policy = QuantPolicy::kivi(n, 2);
+    let longest = prompts.iter().map(|p| p.len()).max().unwrap();
+    let at_prefill = probe.pool.estimate_bytes(&policy, longest);
+    let full = probe.pool.estimate_bytes(&policy, longest + n_gen);
+    drop(probe);
+    // two prefill footprints fit, but only HALF the pair's subsequent
+    // quantized-region growth does: the collision is guaranteed to land
+    // mid-decode, after both sequences hold cold folded groups
+    let budget = 2 * at_prefill + (full - at_prefill);
+    let engine = Arc::new(asymkv::engine::Engine::new(rt.clone(), budget).unwrap());
+    let coord = Coordinator::start(
+        engine,
+        CoordinatorConfig {
+            max_active: 4,
+            max_batch: 4,
+            batch_window: std::time::Duration::from_millis(1),
+            prefix_cache_bytes: 0,
+            downshift: true,
+        },
+    );
+    let handles: Vec<_> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            coord.submit(Request::greedy(i as u64, p.clone(), n_gen, policy.clone()))
+        })
+        .collect();
+    for h in handles {
+        let r = h.wait();
+        assert!(r.error.is_none(), "request failed: {:?}", r.error);
+        assert_eq!(r.tokens.len(), n_gen, "downshifted victims still finish");
+    }
+    let m = coord.metrics();
+    assert!(
+        m.downshifts >= 1,
+        "expected an in-place downshift under a {budget} byte budget \
+         (preemptions: {})",
+        m.preemptions
+    );
+    assert!(m.downshift_bytes_freed > 0, "a downshift must return pages");
+    let ps = coord.engine().pool.stats();
+    assert_eq!(ps.n_seqs, 0, "caches released");
+    assert_eq!(ps.in_use_bytes, 0);
+    assert_eq!(
+        ps.page_alloc_bytes, ps.page_free_bytes,
+        "page ledger reconciles: every byte granted by a downshifted run \
+         was returned"
+    );
+    coord.shutdown();
 }
 
 // ---------------------------------------------------------------------------
@@ -816,6 +901,7 @@ fn v3_deadline_expires_queued_request() {
             max_batch: 2,
             batch_window: std::time::Duration::from_millis(1),
             prefix_cache_bytes: 0,
+            downshift: true,
         },
     );
     let (server, addr) = boot(coord);
