@@ -98,6 +98,32 @@ fn main() -> anyhow::Result<()> {
         victim.wait_done()?.get("error").get("code")
     );
 
+    // ---- v3: shared-prefix CoW — register once, attach many ----
+    // One prefill pays for the system prompt; every generate naming the
+    // prefix_id attaches to the shared node read-only (copy-on-write at
+    // its own divergence) and skips the prefix prefill entirely.
+    println!("== v3 shared prefixes (register once, attach many) ==");
+    let sys_prompt = "## AAB:1290 ZZT:4456 QQF:7812 ## ";
+    let registered = mux.register_prefix("sys", sys_prompt, None)?.wait_done()?;
+    println!("  prefix_register -> {registered}");
+    let continuations: Vec<_> = ["AAB:", "ZZT:", "QQF:"]
+        .iter()
+        .map(|suffix| mux.generate_with_prefix("sys", suffix, 4))
+        .collect::<anyhow::Result<_>>()?;
+    for p in &continuations {
+        let v = p.wait_done()?;
+        println!(
+            "  tag {} -> {} tokens off the shared prefix (ttft {:.1}ms)",
+            p.tag,
+            v.get("tokens").as_arr().map_or(0, |a| a.len()),
+            v.get("ttft_s").as_f64().unwrap_or(0.0) * 1e3,
+        );
+    }
+    let listed = mux.prefixes()?.wait_done()?;
+    println!("  prefixes -> {listed}");
+    let released = mux.release_prefix("sys")?.wait_done()?;
+    println!("  prefix_release -> {released}\n");
+
     // ---- v2: the classic serialized surface ----
     println!("== v2 (one socket per client, serialized) ==");
     // 8 concurrent clients, alternating policies
@@ -150,6 +176,7 @@ fn main() -> anyhow::Result<()> {
     // re-prefill of the history)
     let opened = client.send(&ApiRequest::SessionOpen {
         policy: Some(QuantPolicy::kivi(n, 2)),
+        prefix_id: None,
     })?;
     println!("\nsession opened: {opened}");
     let session = opened.get("session").as_i64().unwrap_or(0) as u64;

@@ -196,6 +196,7 @@ fn decode_v1(msg: &Value, n_layers: usize) -> Result<ApiRequest, ApiError> {
                 priority: msg.get("priority").as_i64().unwrap_or(0) as i32,
                 stream: msg.get("stream").as_bool().unwrap_or(false),
                 deadline_ms: None, // v3-only field; v1 has no deadlines
+                prefix_id: None,   // v3-only field; v1 has no shared prefixes
             }))
         }
         other => Err(ApiError::unknown_op(other)),
@@ -204,8 +205,9 @@ fn decode_v1(msg: &Value, n_layers: usize) -> Result<ApiRequest, ApiError> {
 
 /// Strict decode shared by v2 and v3: required `op`, typed fields, no
 /// unknown fields. v3 additionally allows `tag` everywhere, `deadline_ms`
-/// on the generation ops, `stream` on every generation op (v2: `generate`
-/// only), and the `cancel` op.
+/// and `prefix_id` on the generation ops, `stream` on every generation op
+/// (v2: `generate` only), and the `cancel` / `calibrate` /
+/// `prefix_register` / `prefix_release` / `prefixes` ops.
 fn decode_strict(
     msg: &Value,
     n_layers: usize,
@@ -233,7 +235,7 @@ fn decode_strict(
         }
         "generate" => {
             check_fields(o, &GENERATE_FIELDS, v3, v3)?;
-            Ok(ApiRequest::Generate(decode_spec(o, n_layers, true, true, v3)?))
+            Ok(ApiRequest::Generate(decode_spec(o, n_layers, true, true, v3, v3)?))
         }
         "batch_generate" => {
             check_fields(o, &["v", "op", "items"], v3, false)?;
@@ -257,15 +259,19 @@ fn decode_strict(
                     ApiError::new(e.code, format!("items[{i}]: {}", e.message))
                 })?;
                 // v3 items may stream: per-item token frames carry the
-                // batch line's tag plus the item index
-                specs.push(decode_spec(io, n_layers, true, v3, v3).map_err(|e| {
+                // batch line's tag plus the item index (and may attach a
+                // shared prefix each)
+                specs.push(decode_spec(io, n_layers, true, v3, v3, v3).map_err(|e| {
                     ApiError::new(e.code, format!("items[{i}]: {}", e.message))
                 })?);
             }
             Ok(ApiRequest::BatchGenerate { items: specs })
         }
         "session_open" => {
-            check_fields(o, &["v", "op", "policy"], v3, false)?;
+            // v3 sessions may open pre-attached to a registered prefix
+            let allowed: &[&str] =
+                if v3 { &["v", "op", "policy", "prefix_id"] } else { &["v", "op", "policy"] };
+            check_fields(o, allowed, v3, false)?;
             let policy = match str_field(o, "policy")? {
                 Some(s) => Some(
                     QuantPolicy::parse(s, n_layers)
@@ -273,7 +279,14 @@ fn decode_strict(
                 ),
                 None => None,
             };
-            Ok(ApiRequest::SessionOpen { policy })
+            let prefix_id = match str_field(o, "prefix_id")? {
+                Some("") => {
+                    return Err(ApiError::bad_field("prefix_id", "must be non-empty"))
+                }
+                Some(s) => Some(s.to_string()),
+                None => None,
+            };
+            Ok(ApiRequest::SessionOpen { policy, prefix_id })
         }
         "session_append" => {
             check_fields(o, &SESSION_APPEND_FIELDS, v3, v3)?;
@@ -282,8 +295,9 @@ fn decode_strict(
             Ok(ApiRequest::SessionAppend {
                 session,
                 // v3 turns may stream (tag-correlated frames make the
-                // multi-line reply unambiguous on a multiplexed socket)
-                spec: decode_spec(o, n_layers, false, v3, v3)?,
+                // multi-line reply unambiguous on a multiplexed socket);
+                // prefixes attach at session_open, never per turn
+                spec: decode_spec(o, n_layers, false, v3, v3, false)?,
             })
         }
         "session_close" => {
@@ -324,6 +338,50 @@ fn decode_strict(
             ErrorCode::UnknownOp,
             "'calibrate' requires the v3 framing (tagged requests)",
         )),
+        "prefix_register" if v3 => {
+            check_fields(o, &["v", "op", "name", "prompt", "policy"], v3, false)?;
+            let name = str_field(o, "name")?
+                .ok_or_else(|| ApiError::missing_field("name"))?;
+            if name.is_empty() {
+                return Err(ApiError::bad_field("name", "must be non-empty"));
+            }
+            let prompt = str_field(o, "prompt")?
+                .ok_or_else(|| ApiError::missing_field("prompt"))?;
+            if prompt.is_empty() {
+                return Err(ApiError::bad_field("prompt", "must be non-empty"));
+            }
+            let policy = match str_field(o, "policy")? {
+                Some(s) => Some(
+                    QuantPolicy::parse(s, n_layers)
+                        .map_err(|e| ApiError::new(ErrorCode::BadPolicy, e))?,
+                ),
+                None => None,
+            };
+            Ok(ApiRequest::PrefixRegister {
+                name: name.to_string(),
+                prompt: prompt.to_string(),
+                policy,
+            })
+        }
+        "prefix_release" if v3 => {
+            check_fields(o, &["v", "op", "name"], v3, false)?;
+            let name = str_field(o, "name")?
+                .ok_or_else(|| ApiError::missing_field("name"))?;
+            if name.is_empty() {
+                return Err(ApiError::bad_field("name", "must be non-empty"));
+            }
+            Ok(ApiRequest::PrefixRelease { name: name.to_string() })
+        }
+        "prefixes" if v3 => {
+            check_fields(o, &["v", "op"], v3, false)?;
+            Ok(ApiRequest::Prefixes)
+        }
+        op @ ("prefix_register" | "prefix_release" | "prefixes") => {
+            Err(ApiError::new(
+                ErrorCode::UnknownOp,
+                format!("'{op}' requires the v3 framing (tagged requests)"),
+            ))
+        }
         other => Err(ApiError::unknown_op(other)),
     }
 }
@@ -351,12 +409,37 @@ fn decode_spec(
     allow_policy: bool,
     allow_stream: bool,
     allow_deadline: bool,
+    allow_prefix: bool,
 ) -> Result<GenerateSpec, ApiError> {
-    let prompt = str_field(o, "prompt")?
-        .ok_or_else(|| ApiError::missing_field("prompt"))?;
-    if prompt.is_empty() {
-        return Err(ApiError::bad_field("prompt", "must be non-empty"));
-    }
+    let prefix_id = if allow_prefix {
+        match str_field(o, "prefix_id")? {
+            Some("") => {
+                return Err(ApiError::bad_field("prefix_id", "must be non-empty"))
+            }
+            Some(s) => Some(s.to_string()),
+            None => None,
+        }
+    } else {
+        // session turns ride the session's own cache; a prefix attaches
+        // at session_open (v2 already rejected the field as unknown)
+        if o.contains_key("prefix_id") {
+            return Err(ApiError::bad_field(
+                "prefix_id",
+                "only supported on 'generate', batch items and 'session_open'",
+            ));
+        }
+        None
+    };
+    let prompt = match str_field(o, "prompt")? {
+        Some(s) if !s.is_empty() => s,
+        // an empty (or absent) prompt is only meaningful when riding a
+        // shared prefix: the request then starts at the node's position
+        // with no suffix and the first token samples from the node's
+        // stored last-position logits
+        _ if prefix_id.is_some() => "",
+        Some(_) => return Err(ApiError::bad_field("prompt", "must be non-empty")),
+        None => return Err(ApiError::missing_field("prompt")),
+    };
     let n_gen = uint_field(o, "n_gen")?.unwrap_or(16) as usize;
     if n_gen == 0 {
         return Err(ApiError::bad_field("n_gen", "must be >= 1"));
@@ -411,6 +494,7 @@ fn decode_spec(
         priority: int_field(o, "priority")?.unwrap_or(0) as i32,
         stream,
         deadline_ms,
+        prefix_id,
     })
 }
 
@@ -418,7 +502,10 @@ fn decode_spec(
 
 /// Strict unknown-field check. `tag` additionally allows the v3 envelope
 /// tag (top-level lines only — batch items carry no tag) and `deadline`
-/// the v3 per-request deadline.
+/// the v3 per-request extras on generation specs (`deadline_ms` and
+/// `prefix_id` — `decode_spec` rejects `prefix_id` with a targeted
+/// message where it is syntactically allowed but semantically not, e.g.
+/// session turns).
 fn check_fields(
     o: &BTreeMap<String, Value>,
     allowed: &[&str],
@@ -428,7 +515,7 @@ fn check_fields(
     for k in o.keys() {
         let known = allowed.contains(&k.as_str())
             || (tag && k == "tag")
-            || (deadline && k == "deadline_ms");
+            || (deadline && (k == "deadline_ms" || k == "prefix_id"));
         if !known {
             return Err(ApiError::bad_field(k, "unknown field"));
         }
@@ -485,11 +572,19 @@ fn bool_field(o: &BTreeMap<String, Value>, key: &str) -> Result<Option<bool>, Ap
 // request encoding (typed clients emit canonical v2 lines)
 // ---------------------------------------------------------------------------
 
-/// Encode a typed request as a canonical v2 wire line. `Cancel` is
-/// v3-only and encodes as a v3 line with tag 0 — multiplexing clients
-/// use [`encode_request_tagged`] with a real tag instead.
+/// Encode a typed request as a canonical v2 wire line. The v3-only ops
+/// (`cancel`, `calibrate`, the prefix ops) encode as v3 lines with tag 0
+/// — multiplexing clients use [`encode_request_tagged`] with a real tag
+/// instead.
 pub fn encode_request(req: &ApiRequest) -> Value {
-    if matches!(req, ApiRequest::Cancel { .. } | ApiRequest::Calibrate { .. }) {
+    if matches!(
+        req,
+        ApiRequest::Cancel { .. }
+            | ApiRequest::Calibrate { .. }
+            | ApiRequest::PrefixRegister { .. }
+            | ApiRequest::PrefixRelease { .. }
+            | ApiRequest::Prefixes
+    ) {
         return encode_request_tagged(req, 0);
     }
     encode_request_with(req, false)
@@ -532,9 +627,14 @@ fn encode_request_with(req: &ApiRequest, v3: bool) -> Value {
                 .collect();
             fields.push(("items", Value::Arr(arr)));
         }
-        ApiRequest::SessionOpen { policy } => {
+        ApiRequest::SessionOpen { policy, prefix_id } => {
             if let Some(p) = policy {
                 fields.push(("policy", Value::str_of(p.name.clone())));
+            }
+            if v3 {
+                if let Some(pid) = prefix_id {
+                    fields.push(("prefix_id", Value::str_of(pid.clone())));
+                }
             }
         }
         ApiRequest::SessionAppend { session, spec } => {
@@ -555,6 +655,17 @@ fn encode_request_with(req: &ApiRequest, v3: bool) -> Value {
             fields.push(("episodes", Value::num(*episodes as f64)));
             fields.push(("gate", Value::Bool(*gate)));
         }
+        ApiRequest::PrefixRegister { name, prompt, policy } => {
+            fields.push(("name", Value::str_of(name.clone())));
+            fields.push(("prompt", Value::str_of(prompt.clone())));
+            if let Some(p) = policy {
+                fields.push(("policy", Value::str_of(p.name.clone())));
+            }
+        }
+        ApiRequest::PrefixRelease { name } => {
+            fields.push(("name", Value::str_of(name.clone())));
+        }
+        ApiRequest::Prefixes => {}
     }
     Value::obj(fields)
 }
@@ -566,6 +677,13 @@ fn push_spec_fields(
     with_stream: bool,
     with_deadline: bool,
 ) {
+    // `with_deadline` doubles as the v3-extras gate (deadline_ms and
+    // prefix_id travel together: both exist only on v3 generation specs)
+    if with_deadline {
+        if let Some(pid) = &spec.prefix_id {
+            fields.push(("prefix_id", Value::str_of(pid.clone())));
+        }
+    }
     fields.push(("prompt", Value::str_of(spec.prompt.clone())));
     fields.push(("n_gen", Value::num(spec.n_gen as f64)));
     match &spec.policy {
@@ -604,7 +722,17 @@ fn push_spec_fields(
 pub fn encode_response(resp: &ApiResponse, proto: Proto) -> Value {
     let v = match resp {
         ApiResponse::Pong => Value::obj(vec![("ok", Value::Bool(true))]),
-        ApiResponse::Stats(snap) => snap.to_json(),
+        ApiResponse::Stats(snap, prefix) => {
+            let mut v = snap.to_json();
+            // the namespaced prefix section is a v3 addition; v1/v2
+            // `stats` replies stay byte-compatible
+            if proto == Proto::V3 {
+                if let (Some(p), Value::Obj(o)) = (prefix, &mut v) {
+                    o.insert("prefix".to_string(), prefix_report_value(p));
+                }
+            }
+            v
+        }
         ApiResponse::Pool(report) => pool_value(report),
         ApiResponse::Policies(report) => policies_value(report),
         ApiResponse::Generation(g) => generation_value(g, proto),
@@ -631,9 +759,57 @@ pub fn encode_response(resp: &ApiResponse, proto: Proto) -> Value {
             ("cancelled", Value::Bool(*cancelled)),
         ]),
         ApiResponse::Calibration(r) => calibration_value(r),
+        ApiResponse::PrefixRegistered(info) => {
+            let mut v = prefix_info_value(info);
+            if let Value::Obj(o) = &mut v {
+                o.insert("registered".to_string(), Value::Bool(true));
+            }
+            v
+        }
+        ApiResponse::PrefixReleased(info) => {
+            let mut v = prefix_info_value(info);
+            if let Value::Obj(o) = &mut v {
+                o.insert("released".to_string(), Value::Bool(true));
+            }
+            v
+        }
+        ApiResponse::Prefixes(list) => Value::obj(vec![
+            ("n", Value::num(list.len() as f64)),
+            (
+                "prefixes",
+                Value::arr(list.iter().map(prefix_info_value).collect()),
+            ),
+        ]),
         ApiResponse::Error(e) => Value::obj(vec![("error", error_value(e, proto))]),
     };
     with_version(v, proto)
+}
+
+/// One registered prefix on the wire (`prefix_register` / `prefix_release`
+/// replies and `prefixes` listing rows).
+fn prefix_info_value(p: &crate::coordinator::PrefixInfo) -> Value {
+    Value::obj(vec![
+        ("name", Value::str_of(p.name.clone())),
+        ("n_tokens", Value::num(p.n_tokens as f64)),
+        ("policy", Value::str_of(p.policy.clone())),
+        ("refcount", Value::num(p.refcount as f64)),
+        ("shared_bytes", Value::num(p.shared_bytes as f64)),
+        ("hits", Value::num(p.hits as f64)),
+    ])
+}
+
+/// The namespaced `prefix` section of a v3 `stats` reply.
+fn prefix_report_value(p: &super::types::PrefixReport) -> Value {
+    Value::obj(vec![
+        ("shared_pages", Value::num(p.shared_pages as f64)),
+        ("shared_bytes", Value::num(p.shared_bytes as f64)),
+        ("shared_bytes_saved", Value::num(p.shared_bytes_saved as f64)),
+        ("cow_breaks", Value::num(p.cow_breaks as f64)),
+        ("hits", Value::num(p.hits as f64)),
+        ("misses", Value::num(p.misses as f64)),
+        ("entries", Value::num(p.entries as f64)),
+        ("named", Value::num(p.named as f64)),
+    ])
 }
 
 /// Encode a v3 reply frame: the response body plus `"v":3`, the echoed
@@ -890,8 +1066,9 @@ mod tests {
     fn v2_session_ops_decode() {
         let (_, req) = decode_ok(r#"{"v":2,"op":"session_open","policy":"kivi-2"}"#);
         match req {
-            ApiRequest::SessionOpen { policy } => {
-                assert_eq!(policy.unwrap().name, "KIVI-2bit")
+            ApiRequest::SessionOpen { policy, prefix_id } => {
+                assert_eq!(policy.unwrap().name, "KIVI-2bit");
+                assert_eq!(prefix_id, None);
             }
             other => panic!("{other:?}"),
         }
@@ -921,6 +1098,128 @@ mod tests {
             r#"{"v":2,"op":"session_append","session":1,"prompt":"x","stream":true}"#,
         );
         assert_eq!(e.code, ErrorCode::BadField);
+        // the shared-prefix surface is v3-only: prefix_id is an unknown
+        // field on v2 lines, the prefix ops unknown ops
+        let (_, e) =
+            decode_err(r#"{"v":2,"op":"generate","prompt":"x","prefix_id":"sys"}"#);
+        assert_eq!(e.code, ErrorCode::BadField);
+        let (_, e) = decode_err(r#"{"v":2,"op":"session_open","prefix_id":"sys"}"#);
+        assert_eq!(e.code, ErrorCode::BadField);
+        let (_, e) = decode_err(
+            r#"{"v":2,"op":"prefix_register","name":"sys","prompt":"x"}"#,
+        );
+        assert_eq!(e.code, ErrorCode::UnknownOp);
+        let (_, e) = decode_err(r#"{"v":2,"op":"prefix_release","name":"sys"}"#);
+        assert_eq!(e.code, ErrorCode::UnknownOp);
+        let (_, e) = decode_err(r#"{"v":2,"op":"prefixes"}"#);
+        assert_eq!(e.code, ErrorCode::UnknownOp);
+    }
+
+    #[test]
+    fn v3_prefix_surface_decodes() {
+        // register: name + prompt required, optional policy
+        let f = decode_frame(
+            r#"{"v":3,"tag":1,"op":"prefix_register","name":"sys","prompt":"You are terse.","policy":"kivi-2"}"#,
+            N,
+        )
+        .unwrap();
+        match f.req {
+            ApiRequest::PrefixRegister { name, prompt, policy } => {
+                assert_eq!(name, "sys");
+                assert_eq!(prompt, "You are terse.");
+                assert_eq!(policy.unwrap().name, "KIVI-2bit");
+            }
+            other => panic!("{other:?}"),
+        }
+        let de = decode_frame(
+            r#"{"v":3,"tag":1,"op":"prefix_register","name":"","prompt":"x"}"#,
+            N,
+        )
+        .unwrap_err();
+        assert_eq!(de.error.code, ErrorCode::BadField);
+        let de = decode_frame(
+            r#"{"v":3,"tag":1,"op":"prefix_register","name":"sys"}"#,
+            N,
+        )
+        .unwrap_err();
+        assert_eq!(de.error.code, ErrorCode::MissingField);
+        // release + listing
+        let f = decode_frame(
+            r#"{"v":3,"tag":2,"op":"prefix_release","name":"sys"}"#,
+            N,
+        )
+        .unwrap();
+        assert_eq!(f.req, ApiRequest::PrefixRelease { name: "sys".into() });
+        let f = decode_frame(r#"{"v":3,"tag":3,"op":"prefixes"}"#, N).unwrap();
+        assert_eq!(f.req, ApiRequest::Prefixes);
+        // generate may attach a prefix, and the prompt (the SUFFIX) may
+        // then be empty or absent entirely
+        let f = decode_frame(
+            r#"{"v":3,"tag":4,"op":"generate","prefix_id":"sys","n_gen":4}"#,
+            N,
+        )
+        .unwrap();
+        match f.req {
+            ApiRequest::Generate(spec) => {
+                assert_eq!(spec.prefix_id.as_deref(), Some("sys"));
+                assert_eq!(spec.prompt, "");
+            }
+            other => panic!("{other:?}"),
+        }
+        // ...but an empty prompt WITHOUT a prefix is still rejected
+        let de = decode_frame(
+            r#"{"v":3,"tag":5,"op":"generate","prompt":""}"#,
+            N,
+        )
+        .unwrap_err();
+        assert_eq!(de.error.code, ErrorCode::BadField);
+        let de =
+            decode_frame(r#"{"v":3,"tag":5,"op":"generate","n_gen":2}"#, N)
+                .unwrap_err();
+        assert_eq!(de.error.code, ErrorCode::MissingField);
+        // an empty prefix_id is malformed, not "no prefix"
+        let de = decode_frame(
+            r#"{"v":3,"tag":5,"op":"generate","prompt":"x","prefix_id":""}"#,
+            N,
+        )
+        .unwrap_err();
+        assert_eq!(de.error.code, ErrorCode::BadField);
+        // batch items may attach prefixes individually
+        let f = decode_frame(
+            r#"{"v":3,"tag":6,"op":"batch_generate","items":[
+                {"prefix_id":"sys"},{"prompt":"b"}]}"#,
+            N,
+        )
+        .unwrap();
+        match f.req {
+            ApiRequest::BatchGenerate { items } => {
+                assert_eq!(items[0].prefix_id.as_deref(), Some("sys"));
+                assert_eq!(items[1].prefix_id, None);
+            }
+            other => panic!("{other:?}"),
+        }
+        // session_open may pre-attach; session turns may NOT (the prefix
+        // is part of the session's cache from open)
+        let f = decode_frame(
+            r#"{"v":3,"tag":7,"op":"session_open","prefix_id":"sys"}"#,
+            N,
+        )
+        .unwrap();
+        assert_eq!(
+            f.req,
+            ApiRequest::SessionOpen { policy: None, prefix_id: Some("sys".into()) }
+        );
+        let de = decode_frame(
+            r#"{"v":3,"tag":8,"op":"session_append","session":1,"prompt":"x","prefix_id":"sys"}"#,
+            N,
+        )
+        .unwrap_err();
+        assert_eq!(de.error.code, ErrorCode::BadField);
+        assert!(
+            de.error.message.contains("session_open"),
+            "targeted message, got: {}",
+            de.error.message
+        );
     }
 
     #[test]
@@ -1055,6 +1354,23 @@ mod tests {
             },
             ApiRequest::Cancel { target: 17 },
             ApiRequest::Calibrate { budget: 72, seed: 5, episodes: 3, gate: false },
+            ApiRequest::Generate(GenerateSpec {
+                prompt: String::new(), // empty suffix: prefix-only request
+                n_gen: 4,
+                prefix_id: Some("sys".into()),
+                ..Default::default()
+            }),
+            ApiRequest::SessionOpen {
+                policy: Some(QuantPolicy::kivi(N, 2)),
+                prefix_id: Some("sys".into()),
+            },
+            ApiRequest::PrefixRegister {
+                name: "sys".into(),
+                prompt: "You are terse.".into(),
+                policy: Some(QuantPolicy::kivi(N, 2)),
+            },
+            ApiRequest::PrefixRelease { name: "sys".into() },
+            ApiRequest::Prefixes,
         ];
         for (i, req) in reqs.into_iter().enumerate() {
             let tag = 100 + i as u64;
@@ -1129,6 +1445,63 @@ mod tests {
     }
 
     #[test]
+    fn prefix_reply_framing() {
+        let info = crate::coordinator::PrefixInfo {
+            name: "sys".into(),
+            n_tokens: 1024,
+            policy: "1:1,1:1,1:1,1:1".into(),
+            refcount: 3,
+            shared_bytes: 150_000,
+            hits: 9,
+        };
+        let v = encode_response_tagged(&ApiResponse::PrefixRegistered(info.clone()), 4);
+        assert_eq!(v.get("name").as_str(), Some("sys"));
+        assert_eq!(v.get("n_tokens").as_i64(), Some(1024));
+        assert_eq!(v.get("refcount").as_i64(), Some(3));
+        assert_eq!(v.get("registered").as_bool(), Some(true));
+        assert_eq!(v.get("done").as_bool(), Some(true));
+        let v = encode_response_tagged(&ApiResponse::Prefixes(vec![info]), 5);
+        assert_eq!(v.get("n").as_i64(), Some(1));
+        let rows = v.get("prefixes").as_arr().unwrap();
+        assert_eq!(rows[0].get("shared_bytes").as_i64(), Some(150_000));
+        assert_eq!(rows[0].get("hits").as_i64(), Some(9));
+    }
+
+    #[test]
+    fn stats_prefix_section_is_v3_only() {
+        use crate::api::types::PrefixReport;
+        let snap = crate::coordinator::MetricsSnapshot::default();
+        let report = PrefixReport {
+            shared_pages: 2,
+            shared_bytes: 300_000,
+            shared_bytes_saved: 900_000,
+            cow_breaks: 1,
+            hits: 7,
+            misses: 3,
+            entries: 4,
+            named: 2,
+        };
+        let resp = ApiResponse::Stats(snap, Some(report));
+        // v1/v2 stats replies stay byte-compatible: no prefix section
+        let v1 = encode_response(&resp, Proto::V1);
+        assert_eq!(v1.get("prefix"), &Value::Null);
+        let v2 = encode_response(&resp, Proto::V2);
+        assert_eq!(v2.get("prefix"), &Value::Null);
+        // v3 carries the namespaced section
+        let v3 = encode_response(&resp, Proto::V3);
+        let p = v3.get("prefix");
+        assert_eq!(p.get("shared_pages").as_i64(), Some(2));
+        assert_eq!(p.get("shared_bytes_saved").as_i64(), Some(900_000));
+        assert_eq!(p.get("cow_breaks").as_i64(), Some(1));
+        assert_eq!(p.get("hits").as_i64(), Some(7));
+        assert_eq!(p.get("misses").as_i64(), Some(3));
+        assert_eq!(p.get("named").as_i64(), Some(2));
+        // a disabled prefix cache simply omits the section on v3 too
+        let v3 = encode_response(&ApiResponse::Stats(snap, None), Proto::V3);
+        assert_eq!(v3.get("prefix"), &Value::Null);
+    }
+
+    #[test]
     fn encode_decode_roundtrip() {
         let reqs = vec![
             ApiRequest::Ping,
@@ -1144,6 +1517,7 @@ mod tests {
                 priority: -2,
                 stream: true,
                 deadline_ms: None,
+                prefix_id: None,
             }),
             ApiRequest::BatchGenerate {
                 items: vec![
@@ -1155,7 +1529,10 @@ mod tests {
                     },
                 ],
             },
-            ApiRequest::SessionOpen { policy: Some(QuantPolicy::asymkv21(N, 3, 1)) },
+            ApiRequest::SessionOpen {
+                policy: Some(QuantPolicy::asymkv21(N, 3, 1)),
+                prefix_id: None,
+            },
             ApiRequest::SessionAppend {
                 session: 42,
                 spec: GenerateSpec { prompt: "turn".into(), ..Default::default() },

@@ -42,6 +42,12 @@ pub enum ErrorCode {
     /// The connection already has the maximum number of tagged requests
     /// in flight (v3 multiplexing cap).
     TooManyInflight,
+    /// A `prefix_id` (or `prefix_release`) named no registered prefix.
+    UnknownPrefix,
+    /// The request's policy resolves to different per-layer bits than the
+    /// named prefix was registered under (attaching would mis-decode the
+    /// packed shared pages).
+    PrefixPolicyMismatch,
     /// The engine/coordinator failed while executing the request.
     Engine,
     /// Anything that should not happen.
@@ -66,6 +72,8 @@ impl ErrorCode {
             ErrorCode::Cancelled => "cancelled",
             ErrorCode::DeadlineExceeded => "deadline_exceeded",
             ErrorCode::TooManyInflight => "too_many_inflight",
+            ErrorCode::UnknownPrefix => "unknown_prefix",
+            ErrorCode::PrefixPolicyMismatch => "prefix_policy_mismatch",
             ErrorCode::Engine => "engine",
             ErrorCode::Internal => "internal",
         }
@@ -131,6 +139,26 @@ impl ApiError {
             format!("connection already has {max} requests in flight"),
         )
     }
+
+    pub fn unknown_prefix(name: &str) -> Self {
+        Self::new(ErrorCode::UnknownPrefix, format!("unknown prefix '{name}'"))
+    }
+}
+
+/// Coordinator-level prefix failures lifted onto stable wire codes.
+impl From<crate::coordinator::PrefixOpError> for ApiError {
+    fn from(e: crate::coordinator::PrefixOpError) -> Self {
+        use crate::coordinator::PrefixOpError;
+        let code = match &e {
+            PrefixOpError::Unknown(_) => ErrorCode::UnknownPrefix,
+            PrefixOpError::PolicyMismatch { .. } => ErrorCode::PrefixPolicyMismatch,
+            // the prefix subsystem is sized by `prefix_cache_bytes`; a
+            // zero budget is a server-side capacity configuration
+            PrefixOpError::Disabled => ErrorCode::Capacity,
+            PrefixOpError::Failed(_) => ErrorCode::Engine,
+        };
+        Self::new(code, e.to_string())
+    }
 }
 
 impl fmt::Display for ApiError {
@@ -149,9 +177,33 @@ mod tests {
     fn codes_are_stable_strings() {
         assert_eq!(ErrorCode::BadJson.as_str(), "bad_json");
         assert_eq!(ErrorCode::UnknownSession.as_str(), "unknown_session");
+        assert_eq!(ErrorCode::UnknownPrefix.as_str(), "unknown_prefix");
+        assert_eq!(
+            ErrorCode::PrefixPolicyMismatch.as_str(),
+            "prefix_policy_mismatch"
+        );
         assert_eq!(
             ApiError::missing_field("prompt").to_string(),
             "missing_field: missing 'prompt'"
         );
+    }
+
+    #[test]
+    fn prefix_op_errors_map_to_typed_codes() {
+        use crate::coordinator::PrefixOpError;
+        let e: ApiError = PrefixOpError::Unknown("sys".into()).into();
+        assert_eq!(e.code, ErrorCode::UnknownPrefix);
+        let e: ApiError = PrefixOpError::PolicyMismatch {
+            name: "sys".into(),
+            registered: "1:1".into(),
+            requested: "2:2".into(),
+        }
+        .into();
+        assert_eq!(e.code, ErrorCode::PrefixPolicyMismatch);
+        assert!(e.message.contains("sys"), "message names the prefix");
+        let e: ApiError = PrefixOpError::Disabled.into();
+        assert_eq!(e.code, ErrorCode::Capacity);
+        let e: ApiError = PrefixOpError::Failed("boom".into()).into();
+        assert_eq!(e.code, ErrorCode::Engine);
     }
 }

@@ -32,5 +32,5 @@ pub use error::{ApiError, ErrorCode};
 pub use session::{SessionConfig, SessionManager, TurnOpts};
 pub use types::{
     ApiRequest, ApiResponse, CalibrationReport, GenerateSpec, GenerationResult,
-    PolicyInfo, PolicyReport, PoolReport, SessionTurn,
+    PolicyInfo, PolicyReport, PoolReport, PrefixReport, SessionTurn,
 };

@@ -104,8 +104,16 @@ impl SessionManager {
     }
 
     /// Open a session under `policy` (default float), allocating + pinning
-    /// its pool sequence. Returns (session id, resolved policy name).
-    pub fn open(&self, policy: Option<QuantPolicy>) -> Result<(u64, String), ApiError> {
+    /// its pool sequence. With `prefix` set (resolved by the caller — the
+    /// entry's bits must match `policy`), the session opens ATTACHED to
+    /// the shared node: it starts at the node's position with its tokens
+    /// already resident, zero bytes copied, and diverges copy-on-write as
+    /// turns append. Returns (session id, resolved policy name).
+    pub fn open(
+        &self,
+        policy: Option<QuantPolicy>,
+        prefix: Option<Arc<crate::kvcache::PrefixEntry>>,
+    ) -> Result<(u64, String), ApiError> {
         let engine = self.coord.engine();
         let policy = policy.unwrap_or_else(|| {
             QuantPolicy::float32(engine.manifest().n_layers)
@@ -114,9 +122,11 @@ impl SessionManager {
             .manifest()
             .supports_policy(&policy)
             .map_err(|e| ApiError::new(ErrorCode::UnsupportedPolicy, format!("{e:#}")))?;
-        let seq_id = engine
-            .create_session_seq(&policy)
-            .map_err(|e| ApiError::new(ErrorCode::Capacity, format!("{e:#}")))?;
+        let seq_id = match &prefix {
+            Some(entry) => engine.create_session_seq_attached(&entry.base),
+            None => engine.create_session_seq(&policy),
+        }
+        .map_err(|e| ApiError::new(ErrorCode::Capacity, format!("{e:#}")))?;
         // cap check and insert under ONE lock acquisition: a check-then-
         // insert race would let concurrent opens exceed the hard cap
         let session = {

@@ -33,6 +33,12 @@ pub struct GenerateSpec {
     /// Expiry — queued or mid-decode — aborts the request with a typed
     /// `deadline_exceeded` error and frees its pool pages.
     pub deadline_ms: Option<u64>,
+    /// Named shared prefix to attach (v3 only): the request's sequence
+    /// starts at the registered node's position with zero bytes copied and
+    /// `prompt` becomes the SUFFIX after it — and may then be empty, in
+    /// which case prefill is skipped entirely (first token sampled from
+    /// the node's stored last-position logits).
+    pub prefix_id: Option<String>,
 }
 
 impl Default for GenerateSpec {
@@ -46,6 +52,7 @@ impl Default for GenerateSpec {
             priority: 0,
             stream: false,
             deadline_ms: None,
+            prefix_id: None,
         }
     }
 }
@@ -83,7 +90,13 @@ pub enum ApiRequest {
     Policies { policy: Option<String> },
     Generate(GenerateSpec),
     BatchGenerate { items: Vec<GenerateSpec> },
-    SessionOpen { policy: Option<QuantPolicy> },
+    SessionOpen {
+        policy: Option<QuantPolicy>,
+        /// Open the session pre-attached to a registered shared prefix
+        /// (v3 only): the conversation starts at the node's position with
+        /// its tokens already resident, zero bytes copied.
+        prefix_id: Option<String>,
+    },
     SessionAppend { session: u64, spec: GenerateSpec },
     SessionClose { session: u64 },
     /// Cancel the in-flight request whose tag is `target` on this
@@ -95,6 +108,15 @@ pub enum ApiRequest {
     /// `AsymKV-auto@…` policy, and (unless `gate` is off) check its
     /// perplexity against the float baseline.
     Calibrate { budget: u64, seed: u64, episodes: usize, gate: bool },
+    /// Prefill `prompt` once under `policy` and pin the frozen result as
+    /// the named shared prefix (v3 only). Subsequent requests attach it
+    /// by name (`prefix_id`) without re-sending or re-prefilling it.
+    PrefixRegister { name: String, prompt: String, policy: Option<QuantPolicy> },
+    /// Drop a named prefix registration (v3 only). Already-attached
+    /// sequences keep the pages alive until they finish.
+    PrefixRelease { name: String },
+    /// List registered prefixes (v3 only).
+    Prefixes,
 }
 
 impl ApiRequest {
@@ -112,6 +134,9 @@ impl ApiRequest {
             ApiRequest::SessionClose { .. } => "session_close",
             ApiRequest::Cancel { .. } => "cancel",
             ApiRequest::Calibrate { .. } => "calibrate",
+            ApiRequest::PrefixRegister { .. } => "prefix_register",
+            ApiRequest::PrefixRelease { .. } => "prefix_release",
+            ApiRequest::Prefixes => "prefixes",
         }
     }
 }
@@ -190,6 +215,30 @@ pub struct PoolReport {
     pub sessions: usize,
 }
 
+/// The namespaced `prefix` section of the v3 `stats` reply: pool-side
+/// sharing counters joined with prefix-cache hit statistics. Omitted from
+/// v1/v2 replies (kept byte-compatible) and None when the prefix cache is
+/// disabled.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PrefixReport {
+    /// Distinct shared snapshots currently resident in the pool.
+    pub shared_pages: usize,
+    /// Bytes those snapshots hold — charged once each, however many
+    /// sequences map them.
+    pub shared_bytes: usize,
+    /// Cumulative bytes borrowers did NOT copy thanks to sharing.
+    pub shared_bytes_saved: u64,
+    /// Times a borrower diverged and broke copy-on-write.
+    pub cow_breaks: u64,
+    /// Prefix-cache lookups that found a reusable node.
+    pub hits: u64,
+    pub misses: u64,
+    /// Entries resident in the prefix cache (anonymous + named).
+    pub entries: usize,
+    /// Named (pinned) registrations among them.
+    pub named: usize,
+}
+
 /// One supported policy, expanded server-side (the `policies` op).
 #[derive(Debug, Clone, PartialEq)]
 pub struct PolicyInfo {
@@ -235,7 +284,9 @@ pub struct CalibrationReport {
 #[derive(Debug, Clone, PartialEq)]
 pub enum ApiResponse {
     Pong,
-    Stats(MetricsSnapshot),
+    /// Serving metrics, plus the `prefix` section (encoded on v3 replies
+    /// only, keeping v1/v2 `stats` byte-compatible).
+    Stats(MetricsSnapshot, Option<PrefixReport>),
     Pool(PoolReport),
     Policies(PolicyReport),
     Generation(GenerationResult),
@@ -247,5 +298,11 @@ pub enum ApiResponse {
     /// was still in flight (false = unknown tag or already completed).
     CancelResult { target: u64, cancelled: bool },
     Calibration(CalibrationReport),
+    /// Reply to `prefix_register`: the freshly pinned node's descriptor.
+    PrefixRegistered(crate::coordinator::PrefixInfo),
+    /// Reply to `prefix_release`: the dropped node's final descriptor.
+    PrefixReleased(crate::coordinator::PrefixInfo),
+    /// Reply to `prefixes`: all registrations, name-sorted.
+    Prefixes(Vec<crate::coordinator::PrefixInfo>),
     Error(ApiError),
 }

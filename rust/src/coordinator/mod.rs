@@ -21,6 +21,8 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 use crate::engine::Engine;
+use crate::kvcache::PrefixEntry;
+use crate::quant::QuantPolicy;
 
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use request::{AbortHandle, AbortKind, Request, Response, ResponseHandle, Timing};
@@ -29,6 +31,60 @@ pub use scheduler::CoordinatorConfig;
 use queue::RequestQueue;
 use request::InFlight;
 use scheduler::{run_scheduler, Shared};
+
+/// Descriptor of one registered (named, pinned) shared prefix — the
+/// `prefixes` listing op and the `prefix_register` reply.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrefixInfo {
+    pub name: String,
+    /// Tokens the shared node covers (an attached request starts here).
+    pub n_tokens: usize,
+    /// Per-layer bits fingerprint (`"k:v,k:v,…"`) attachers must match.
+    pub policy: String,
+    /// Live pool references: the registration's own standalone reference
+    /// plus one per currently attached sequence.
+    pub refcount: usize,
+    /// Snapshot bytes — charged ONCE however many sequences map the node.
+    pub shared_bytes: usize,
+    /// Times this node was handed out (lookups + `prefix_id` resolutions).
+    pub hits: u64,
+}
+
+/// Typed failures of the first-class prefix ops; the API layer maps these
+/// onto stable wire error codes (`unknown_prefix`,
+/// `prefix_policy_mismatch`, …).
+#[derive(Debug, Clone, PartialEq)]
+pub enum PrefixOpError {
+    /// The prefix cache is disabled (`prefix_cache_bytes == 0`).
+    Disabled,
+    /// No registration under that name.
+    Unknown(String),
+    /// The request's policy does not match the registered node's bits.
+    PolicyMismatch { name: String, registered: String, requested: String },
+    /// Engine/pool failure while prefilling or pinning the node.
+    Failed(String),
+}
+
+impl std::fmt::Display for PrefixOpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PrefixOpError::Disabled => {
+                write!(f, "prefix cache disabled (prefix_cache_bytes = 0)")
+            }
+            PrefixOpError::Unknown(name) => write!(f, "unknown prefix '{name}'"),
+            PrefixOpError::PolicyMismatch { name, registered, requested } => {
+                write!(
+                    f,
+                    "prefix '{name}' is registered under policy bits \
+                     [{registered}] but the request resolves to [{requested}]"
+                )
+            }
+            PrefixOpError::Failed(msg) => write!(f, "prefix op failed: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for PrefixOpError {}
 
 pub struct Coordinator {
     shared: Arc<Shared>,
@@ -128,6 +184,126 @@ impl Coordinator {
     /// Prefix-cache statistics (None when disabled).
     pub fn prefix_stats(&self) -> Option<crate::kvcache::PrefixStats> {
         self.shared.prefix_cache.as_ref().map(|p| p.stats())
+    }
+
+    // -----------------------------------------------------------------
+    // first-class shared prefixes (prefix_register / prefix_release /
+    // prefixes, and prefix_id resolution for generate / session_open)
+    // -----------------------------------------------------------------
+
+    /// Prefill `tokens` once under `policy` and pin the frozen result as a
+    /// named shared node: its pages stay resident (one standalone pool
+    /// reference, exempt from prefix-cache eviction) until released, and
+    /// every request naming it attaches read-only with zero bytes copied.
+    /// Re-registering a name replaces the old node and drops its pin.
+    pub fn register_prefix(
+        &self,
+        name: &str,
+        tokens: Vec<i32>,
+        policy: &QuantPolicy,
+    ) -> Result<PrefixInfo, PrefixOpError> {
+        let pc = self
+            .shared
+            .prefix_cache
+            .as_ref()
+            .ok_or(PrefixOpError::Disabled)?;
+        let fingerprint = crate::engine::policy_fingerprint(policy);
+        let (base, logits) = self
+            .shared
+            .engine
+            .prefill_shared_base(policy, &tokens)
+            .map_err(|e| PrefixOpError::Failed(e.to_string()))?;
+        let entry = PrefixEntry::named(
+            name.to_string(),
+            fingerprint,
+            tokens,
+            base,
+            logits,
+        );
+        let (entry, displaced) = pc.register(entry);
+        if let Some(old) = displaced {
+            // the replaced registration held its own standalone reference
+            let _ = self.shared.engine.pool.release_shared(old.base.id);
+        }
+        Ok(self.prefix_info(&entry))
+    }
+
+    /// Drop a registration: the node disappears from the listing and its
+    /// standalone pool reference is released. Pages stay resident while
+    /// already-attached sequences still map them (refcount > 0) and are
+    /// freed exactly once when the last reference drops.
+    pub fn release_prefix(&self, name: &str) -> Result<PrefixInfo, PrefixOpError> {
+        let pc = self
+            .shared
+            .prefix_cache
+            .as_ref()
+            .ok_or(PrefixOpError::Disabled)?;
+        let entry = pc
+            .release(name)
+            .ok_or_else(|| PrefixOpError::Unknown(name.to_string()))?;
+        let info = self.prefix_info(&entry);
+        let _ = self.shared.engine.pool.release_shared(entry.base.id);
+        Ok(info)
+    }
+
+    /// All registered prefixes, name-sorted.
+    pub fn list_prefixes(&self) -> Vec<PrefixInfo> {
+        self.shared.prefix_cache.as_ref().map_or_else(Vec::new, |pc| {
+            pc.list_named().iter().map(|e| self.prefix_info(e)).collect()
+        })
+    }
+
+    /// Resolve a `prefix_id` WITHOUT a policy check: used when the request
+    /// names no policy and simply adopts the node's per-layer bits.
+    pub fn lookup_prefix(
+        &self,
+        name: &str,
+    ) -> Result<Arc<PrefixEntry>, PrefixOpError> {
+        let pc = self
+            .shared
+            .prefix_cache
+            .as_ref()
+            .ok_or(PrefixOpError::Disabled)?;
+        pc.get_named(name)
+            .ok_or_else(|| PrefixOpError::Unknown(name.to_string()))
+    }
+
+    /// Resolve a `prefix_id` to its shared node, checking the request's
+    /// policy against the node's per-layer bits (attaching under different
+    /// bits would mis-decode the packed pages).
+    pub fn resolve_prefix(
+        &self,
+        name: &str,
+        policy: &QuantPolicy,
+    ) -> Result<Arc<PrefixEntry>, PrefixOpError> {
+        let pc = self
+            .shared
+            .prefix_cache
+            .as_ref()
+            .ok_or(PrefixOpError::Disabled)?;
+        let entry = pc
+            .get_named(name)
+            .ok_or_else(|| PrefixOpError::Unknown(name.to_string()))?;
+        let requested = crate::engine::policy_fingerprint(policy);
+        if entry.policy != requested {
+            return Err(PrefixOpError::PolicyMismatch {
+                name: name.to_string(),
+                registered: entry.policy.clone(),
+                requested,
+            });
+        }
+        Ok(entry)
+    }
+
+    fn prefix_info(&self, e: &Arc<PrefixEntry>) -> PrefixInfo {
+        PrefixInfo {
+            name: e.name.clone().unwrap_or_default(),
+            n_tokens: e.tokens.len(),
+            policy: e.policy.clone(),
+            refcount: self.shared.engine.pool.shared_refs(e.base.id),
+            shared_bytes: e.base.bytes(),
+            hits: e.uses(),
+        }
     }
 
     /// Graceful shutdown: finish in-flight work, then join the scheduler.

@@ -82,6 +82,13 @@ pub struct Request {
     /// request's prompt on top of the retained KV state, and does NOT free
     /// the sequence on completion.
     pub session_seq: Option<u64>,
+    /// resolved shared prefix (`prefix_id`): the scheduler allocates an
+    /// ATTACHED sequence starting at the node's position (zero bytes
+    /// copied, shared pages charged once) and prefills only `prompt` —
+    /// the suffix, which may be empty (the first token then samples
+    /// straight from the node's stored last-position logits, skipping
+    /// prefill entirely)
+    pub prefix: Option<Arc<crate::kvcache::PrefixEntry>>,
     /// per-token streaming callback (None = only the final response)
     pub on_token: Option<TokenSink>,
     /// shared abort flag: the transport cancels through it, the scheduler
@@ -117,6 +124,7 @@ impl Request {
             priority: 0,
             seed: id,
             session_seq: None,
+            prefix: None,
             on_token: None,
             abort: AbortHandle::new(),
             deadline: None,

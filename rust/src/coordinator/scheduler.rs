@@ -381,13 +381,18 @@ fn downshift_one(shared: &Arc<Shared>, active: &mut [InFlight]) -> bool {
             .engine
             .pool
             .with_seq(inf.seq_id.unwrap(), |s| {
-                s.layers
-                    .iter()
-                    .zip(p.k_bits.iter().zip(&p.v_bits))
-                    .any(|(l, (&k, &v))| {
-                        l.n_tokens() > l.n_res()
-                            && step_down_pair(k, v, grid).is_some()
-                    })
+                // attached sequences are excluded: their packed region
+                // aliases an immutable shared base that an in-place
+                // repack must never rewrite (downshift_groups asserts
+                // the sequence owns its pages)
+                s.base.is_none()
+                    && s.layers
+                        .iter()
+                        .zip(p.k_bits.iter().zip(&p.v_bits))
+                        .any(|(l, (&k, &v))| {
+                            l.n_tokens() > l.n_res()
+                                && step_down_pair(k, v, grid).is_some()
+                        })
             })
             .unwrap_or(false);
         if !eligible {
@@ -510,7 +515,10 @@ fn prefill_group(
                     continue;
                 }
             },
-            None => 0,
+            // a prefix-attached request starts at the shared node's
+            // position: its resident prefix counts against the context
+            // budget exactly like retained session history does
+            None => inf.req.prefix.as_ref().map_or(0, |e| e.base.pos),
         };
         let m = shared.engine.manifest();
         // max(1) keeps this at least as strict as the engine's own
@@ -532,9 +540,15 @@ fn prefill_group(
         // charges almost nothing, so gate on the page-rounded footprint
         // this request will grow to. Optimistic — already-active
         // sequences keep growing too; mid-decode collisions preempt.
-        let verdict = match inf.req.session_seq {
-            Some(id) => shared.engine.pool.admit_growth(id, need),
-            None => shared.engine.pool.admit(&inf.req.policy, need),
+        let verdict = match (inf.req.session_seq, &inf.req.prefix) {
+            (Some(id), _) => shared.engine.pool.admit_growth(id, need),
+            // attached sequences are charged NET of the shared node:
+            // only the private tail, plus the node's bytes when (and
+            // only when) it is not already resident
+            (None, Some(entry)) => {
+                shared.engine.pool.admit_attached(&entry.base, need)
+            }
+            (None, None) => shared.engine.pool.admit(&inf.req.policy, need),
         };
         if let Err(e) = verdict {
             // A bounce is transient only if waiting can EVER free enough:
@@ -569,7 +583,13 @@ fn prefill_group(
             admitted.push(inf);
             continue;
         }
-        match shared.engine.create_seq(&inf.req.policy) {
+        let created = match &inf.req.prefix {
+            // prefix_id fast path: the sequence ATTACHES the shared node
+            // read-only (zero bytes copied) instead of starting empty
+            Some(entry) => shared.engine.create_seq_attached(&entry.base),
+            None => shared.engine.create_seq(&inf.req.policy),
+        };
+        match created {
             Ok(id) => {
                 inf.seq_id = Some(id);
                 inf.admitted_at = Some(Instant::now());
@@ -593,29 +613,31 @@ fn prefill_group(
         return (Vec::new(), requeue);
     }
 
-    // Session turns are isolated from ordinary requests: (a) the prefix
-    // cache must never see them — a turn's prompt is only the delta text,
-    // so a restore would clobber the retained KV history and a snapshot
-    // would poison the cache — and (b) the engine fails a prefill batch
-    // as a whole, so one oversized ordinary prompt must not sink (and
-    // thereby evict) an innocent session. Mixed groups therefore always
-    // prefill in two engine calls, cache or no cache. Session-vs-session
-    // interference within the session half is pre-empted by the context
-    // check at admission above.
-    let any_session = admitted.iter().any(|i| i.req.session_seq.is_some());
-    let all_session = admitted.iter().all(|i| i.req.session_seq.is_some());
-    if any_session && !all_session {
-        let (sess_group, other_group): (Vec<InFlight>, Vec<InFlight>) = admitted
-            .into_iter()
-            .partition(|i| i.req.session_seq.is_some());
-        let (mut done, mut bounced) = prefill_subset(shared, sess_group, false);
+    // Session turns AND prefix-attached requests are isolated from
+    // ordinary requests: (a) the prefix cache must never see them — a
+    // turn's (or attached request's) prompt is only the delta text, so a
+    // restore would clobber the retained KV state and a snapshot would
+    // file the suffix under the wrong key — and (b) the engine fails a
+    // prefill batch as a whole, so one oversized ordinary prompt must not
+    // sink (and thereby evict) an innocent session. Mixed groups
+    // therefore always prefill in two engine calls, cache or no cache.
+    // Session-vs-session interference within the isolated half is
+    // pre-empted by the context check at admission above.
+    let isolated =
+        |i: &InFlight| i.req.session_seq.is_some() || i.req.prefix.is_some();
+    let any_iso = admitted.iter().any(isolated);
+    let all_iso = admitted.iter().all(isolated);
+    if any_iso && !all_iso {
+        let (iso_group, other_group): (Vec<InFlight>, Vec<InFlight>) =
+            admitted.into_iter().partition(isolated);
+        let (mut done, mut bounced) = prefill_subset(shared, iso_group, false);
         let (done2, bounced2) = prefill_subset(shared, other_group, true);
         done.extend(done2);
         bounced.extend(bounced2);
         requeue.extend(bounced);
         return (done, requeue);
     }
-    let use_cache = !any_session;
+    let use_cache = !any_iso;
     let (done, bounced) = prefill_subset(shared, admitted, use_cache);
     requeue.extend(bounced);
     (done, requeue)
@@ -630,21 +652,46 @@ fn prefill_group(
 /// requests are failed. Returns `(survivors, bounced)`.
 fn prefill_subset(
     shared: &Arc<Shared>,
-    mut group: Vec<InFlight>,
+    group: Vec<InFlight>,
     use_cache: bool,
 ) -> (Vec<InFlight>, Vec<InFlight>) {
+    // Prefix fast path: an attached request with an EMPTY suffix skips
+    // prefill entirely — its first token samples straight from the shared
+    // node's stored last-position logits (the prefix_id TTFT win: no
+    // prompt bytes re-sent, no prefill pass re-run). The engine rejects
+    // empty prompts, so these must never reach the batched call below.
+    let mut ready: Vec<InFlight> = Vec::new();
+    let mut rest: Vec<InFlight> = Vec::new();
+    for mut inf in group {
+        match inf.req.prefix.clone() {
+            Some(entry) if inf.req.prompt.is_empty() => {
+                let tok =
+                    sample(&entry.last_logits, &inf.req.sampling, &mut inf.rng);
+                inf.cur_token = Some(tok);
+                inf.first_token_at = Some(Instant::now());
+                ready.push(inf);
+            }
+            _ => rest.push(inf),
+        }
+    }
+    let mut group = rest;
     let mut bounced: Vec<InFlight> = Vec::new();
     loop {
         if group.is_empty() {
-            return (group, bounced);
+            return (ready, bounced);
         }
         let ids: Vec<u64> = group.iter().map(|i| i.seq_id.unwrap()).collect();
         let prompts: Vec<Vec<i32>> =
             group.iter().map(|i| i.req.prompt.clone()).collect();
         let n_prompt: usize = prompts.iter().map(|p| p.len()).sum();
+        // both branches yield Arc-shared logits: `prefill_cached` hands
+        // out the stored Arc on exact hits, the plain path wraps its own
         let result = match &shared.prefix_cache {
             Some(pc) if use_cache => shared.engine.prefill_cached(&ids, &prompts, pc),
-            _ => shared.engine.prefill(&ids, &prompts),
+            _ => shared
+                .engine
+                .prefill(&ids, &prompts)
+                .map(|ls| ls.into_iter().map(std::sync::Arc::new).collect()),
         };
         match result {
             Ok(logits) => {
@@ -655,7 +702,8 @@ fn prefill_subset(
                     inf.cur_token = Some(tok);
                     inf.first_token_at = Some(now);
                 }
-                return (group, bounced);
+                ready.extend(group);
+                return (ready, bounced);
             }
             Err(e) => {
                 if matches!(
@@ -677,7 +725,7 @@ fn prefill_subset(
                     for mut inf in group {
                         fail(shared, &mut inf, &format!("prefill failed: {e}"));
                     }
-                    return (Vec::new(), bounced);
+                    return (ready, bounced);
                 }
             }
         }

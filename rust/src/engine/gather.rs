@@ -97,35 +97,145 @@ fn resize_zero<T: Copy + Default>(buf: &mut Vec<T>, n: usize) {
     buf.resize(n, T::default());
 }
 
-// Per-head scatter of a paged source row ([H, cap·stride] bytes) into
-// the full-context slot layout ([H, full·stride]); collapses to one
-// contiguous memcpy per tensor when the cache is fully grown.
-fn scatter<T: Copy>(dst: &mut [T], src: &[T], slot: usize, h: usize,
-                    cap_row: usize, full_row: usize) {
-    debug_assert!(cap_row <= full_row);
-    debug_assert_eq!(src.len(), h * cap_row);
-    if cap_row == full_row {
+/// Per-head copy of `len` elements from `src[head·src_row + src_lo ..]`
+/// into `dst[(slot·h + head)·full_row + dst_lo ..]` — the shared-base
+/// generalization of a range scatter: an attached cache's private buffers
+/// are base-relative, so the source and destination offsets decouple.
+fn scatter_at<T: Copy>(dst: &mut [T], src: &[T], slot: usize, h: usize,
+                       src_row: usize, full_row: usize,
+                       src_lo: usize, dst_lo: usize, len: usize) {
+    debug_assert!(src_lo + len <= src_row || len == 0);
+    debug_assert!(dst_lo + len <= full_row);
+    if src_lo == 0 && dst_lo == 0 && len == src_row && src_row == full_row {
+        // fully-grown unshared cache: one contiguous memcpy across heads
         let n = h * full_row;
-        dst[slot * n..(slot + 1) * n].copy_from_slice(src);
+        dst[slot * n..(slot + 1) * n].copy_from_slice(&src[..n]);
         return;
     }
     for head in 0..h {
-        let d = (slot * h + head) * full_row;
-        dst[d..d + cap_row].copy_from_slice(&src[head * cap_row..(head + 1) * cap_row]);
+        let s = head * src_row + src_lo;
+        let d = (slot * h + head) * full_row + dst_lo;
+        dst[d..d + len].copy_from_slice(&src[s..s + len]);
     }
 }
 
-/// Per-head copy of element range `[lo, lo+len)` of each head row — the
-/// tail-group patch primitive (same layouts as [`scatter`]).
-fn scatter_range<T: Copy>(dst: &mut [T], src: &[T], slot: usize, h: usize,
-                          cap_row: usize, full_row: usize,
-                          lo: usize, len: usize) {
-    debug_assert!(lo + len <= cap_row && cap_row <= full_row);
+/// Zero one slot-chunk's per-head tail `[lo, full_row)` — the re-scatter
+/// zero primitive; `lo > 0` preserves a known-current shared-base region.
+fn zero_tail<T: Copy + Default>(dst: &mut [T], h: usize, full_row: usize, lo: usize) {
     for head in 0..h {
-        let s = head * cap_row + lo;
-        let d = (slot * h + head) * full_row + lo;
-        dst[d..d + len].copy_from_slice(&src[s..s + len]);
+        dst[head * full_row + lo..(head + 1) * full_row].fill(T::default());
     }
+}
+
+/// Scatter one cache's full packed region into batch slot `slot`: the
+/// shared base region first (read through the `Arc` at its exact frozen
+/// strides), then the private tail at its base-relative group offset.
+/// `skip_base` elides the base copy when the destination slot is known to
+/// already hold this base's bytes — bases are immutable, so an equal
+/// `LayerBase::id` proves the staged region is current. This is what lets
+/// every sequence mapping one shared prefix reuse the staged bytes
+/// process-wide instead of re-gathering them per sequence. Buffers are
+/// passed as `Option`s so the packed and fp32 paths share one call shape;
+/// the helper consults the cache's own bit-widths. Returns bytes copied.
+#[allow(clippy::too_many_arguments)]
+fn scatter_cache_packed(
+    geo: &GatherGeo,
+    lc: &LayerCache,
+    slot: usize,
+    skip_base: bool,
+    k_main: Option<&mut [u8]>,
+    k_main_f32: Option<&mut [f32]>,
+    k_scales: Option<&mut [f32]>,
+    k_zeros: Option<&mut [f32]>,
+    v_main: Option<&mut [u8]>,
+    v_main_f32: Option<&mut [f32]>,
+    v_scales: Option<&mut [f32]>,
+    v_zeros: Option<&mut [f32]>,
+) -> usize {
+    let (h, t, dh) = (geo.n_heads, geo.max_ctx, geo.d_head);
+    let g = geo.group;
+    let g2 = geo.g2();
+    let cap = lc.q_capacity();
+    let nb = lc.n_base();
+    let base = lc.base().map(|b| b.as_ref());
+    let (kb, vb) = (lc.k_bits, lc.v_bits);
+    let mut bytes = 0usize;
+
+    if kb > 0 {
+        let full = kernels::packed_len(t, kb) * dh;
+        if let Some(dst) = k_main {
+            let blen = kernels::packed_len(nb, kb) * dh;
+            if let (Some(b), false) = (base, skip_base) {
+                scatter_at(dst, &b.k_pk, slot, h, blen, full, 0, 0, blen);
+                bytes += b.k_pk.len();
+            }
+            let own = kernels::packed_len(cap, kb) * dh;
+            scatter_at(dst, &lc.k_pk, slot, h, own, full, 0, blen, own);
+            bytes += lc.k_pk.len();
+        }
+        let full_p = (t / g) * dh;
+        let (base_p, own_p) = ((nb / g) * dh, (cap / g) * dh);
+        if let Some(dst) = k_scales {
+            if let (Some(b), false) = (base, skip_base) {
+                scatter_at(dst, &b.k_scales, slot, h, base_p, full_p, 0, 0, base_p);
+                bytes += b.k_scales.len() * 4;
+            }
+            scatter_at(dst, &lc.k_scales, slot, h, own_p, full_p, 0, base_p, own_p);
+            bytes += lc.k_scales.len() * 4;
+        }
+        if let Some(dst) = k_zeros {
+            if let (Some(b), false) = (base, skip_base) {
+                scatter_at(dst, &b.k_zeros, slot, h, base_p, full_p, 0, 0, base_p);
+                bytes += b.k_zeros.len() * 4;
+            }
+            scatter_at(dst, &lc.k_zeros, slot, h, own_p, full_p, 0, base_p, own_p);
+            bytes += lc.k_zeros.len() * 4;
+        }
+    } else if let Some(dst) = k_main_f32 {
+        if let (Some(b), false) = (base, skip_base) {
+            scatter_at(dst, &b.k_f32, slot, h, nb * dh, t * dh, 0, 0, nb * dh);
+            bytes += b.k_f32.len() * 4;
+        }
+        scatter_at(dst, &lc.k_f32, slot, h, cap * dh, t * dh, 0, nb * dh, cap * dh);
+        bytes += lc.k_f32.len() * 4;
+    }
+
+    if vb > 0 {
+        let bpt = kernels::packed_len(dh, vb);
+        if let Some(dst) = v_main {
+            if let (Some(b), false) = (base, skip_base) {
+                scatter_at(dst, &b.v_pk, slot, h, nb * bpt, t * bpt, 0, 0, nb * bpt);
+                bytes += b.v_pk.len();
+            }
+            scatter_at(dst, &lc.v_pk, slot, h, cap * bpt, t * bpt, 0, nb * bpt, cap * bpt);
+            bytes += lc.v_pk.len();
+        }
+        let dg = dh / g2;
+        if let Some(dst) = v_scales {
+            if let (Some(b), false) = (base, skip_base) {
+                scatter_at(dst, &b.v_scales, slot, h, nb * dg, t * dg, 0, 0, nb * dg);
+                bytes += b.v_scales.len() * 4;
+            }
+            scatter_at(dst, &lc.v_scales, slot, h, cap * dg, t * dg, 0, nb * dg, cap * dg);
+            bytes += lc.v_scales.len() * 4;
+        }
+        if let Some(dst) = v_zeros {
+            if let (Some(b), false) = (base, skip_base) {
+                scatter_at(dst, &b.v_zeros, slot, h, nb * dg, t * dg, 0, 0, nb * dg);
+                bytes += b.v_zeros.len() * 4;
+            }
+            scatter_at(dst, &lc.v_zeros, slot, h, cap * dg, t * dg, 0, nb * dg, cap * dg);
+            bytes += lc.v_zeros.len() * 4;
+        }
+    } else if let Some(dst) = v_main_f32 {
+        if let (Some(b), false) = (base, skip_base) {
+            scatter_at(dst, &b.v_f32, slot, h, nb * dh, t * dh, 0, 0, nb * dh);
+            bytes += b.v_f32.len() * 4;
+        }
+        scatter_at(dst, &lc.v_f32, slot, h, cap * dh, t * dh, 0, nb * dh, cap * dh);
+        bytes += lc.v_f32.len() * 4;
+    }
+    bytes
 }
 
 /// Assemble the 10 cache/mask args of layer `layer_idx` for the given
@@ -198,27 +308,20 @@ pub fn gather_layer_args_into(
         // must hold in release builds too
         assert_eq!(lc.k_bits, k_bits, "mixed-policy batch");
         assert_eq!(lc.v_bits, v_bits, "mixed-policy batch");
-        let cap = lc.q_capacity(); // allocated tokens (≤ t under paging)
-        // main cache region: per-head rows from the paged buffers into the
-        // artifact's full-context strides (padding stays zero + masked)
-        if k_bits > 0 {
-            scatter(&mut a.k_main, &lc.k_pk, slot, h,
-                    kernels::packed_len(cap, k_bits) * dh,
-                    kernels::packed_len(t, k_bits) * dh);
-            scatter(&mut a.k_scales, &lc.k_scales, slot, h, (cap / g) * dh, (t / g) * dh);
-            scatter(&mut a.k_zeros, &lc.k_zeros, slot, h, (cap / g) * dh, (t / g) * dh);
-        } else {
-            scatter(&mut a.k_main_f32, &lc.k_f32, slot, h, cap * dh, t * dh);
-        }
-        if v_bits > 0 {
-            let dh_pk = kernels::packed_len(dh, v_bits);
-            scatter(&mut a.v_main, &lc.v_pk, slot, h, cap * dh_pk, t * dh_pk);
-            let dg = dh / g2;
-            scatter(&mut a.v_scales, &lc.v_scales, slot, h, cap * dg, t * dg);
-            scatter(&mut a.v_zeros, &lc.v_zeros, slot, h, cap * dg, t * dg);
-        } else {
-            scatter(&mut a.v_main_f32, &lc.v_f32, slot, h, cap * dh, t * dh);
-        }
+        // main cache region: shared base (if attached) + private tail from
+        // the paged buffers into the artifact's full-context strides
+        // (padding stays zero + masked)
+        scatter_cache_packed(
+            geo, lc, slot, false,
+            (k_bits > 0).then_some(&mut a.k_main[..]),
+            (k_bits == 0).then_some(&mut a.k_main_f32[..]),
+            (k_bits > 0).then_some(&mut a.k_scales[..]),
+            (k_bits > 0).then_some(&mut a.k_zeros[..]),
+            (v_bits > 0).then_some(&mut a.v_main[..]),
+            (v_bits == 0).then_some(&mut a.v_main_f32[..]),
+            (v_bits > 0).then_some(&mut a.v_scales[..]),
+            (v_bits > 0).then_some(&mut a.v_zeros[..]),
+        );
         // residual ring (compacted)
         let hrd = h * r * dh;
         lc.gather_residual(
@@ -290,6 +393,12 @@ pub struct SyncReport {
     /// Host bytes written into staging by this sync (the incremental
     /// analogue of a full gather's buffer traffic).
     pub bytes_gathered: usize,
+    /// Slots whose re-scatter skipped the shared-base region because the
+    /// previous occupant mapped the same immutable [`LayerBase`] — the
+    /// process-wide staged-literal reuse across sequences sharing a prefix.
+    ///
+    /// [`LayerBase`]: crate::kvcache::LayerBase
+    pub base_reused: usize,
 }
 
 /// Per-slot identity + dirty cursor from the last sync. Version fields are
@@ -303,6 +412,10 @@ struct SlotState {
     n_q: usize,
     res_base: u64,
     res_len: usize,
+    /// `LayerBase::id` of the shared base staged in this slot (0 = none).
+    /// Bases are immutable, so an id match proves the staged base region
+    /// is still byte-current even across a slot-occupant change.
+    base_id: u64,
 }
 
 impl SlotState {
@@ -314,6 +427,7 @@ impl SlotState {
         n_q: 0,
         res_base: 0,
         res_len: 0,
+        base_id: 0,
     };
 }
 
@@ -439,11 +553,21 @@ impl StagedLayer {
         }
 
         let rescattered = !rescatter.is_empty();
+        let mut base_reused = 0usize;
         if rescattered {
             packed_clean = false;
-            bytes += self.rescatter_slots(geo, ids, seqs, layer_idx, &rescatter);
+            let (b2, reused) =
+                self.rescatter_slots(geo, ids, seqs, layer_idx, &rescatter);
+            bytes += b2;
+            base_reused = reused;
         }
-        SyncReport { packed_clean, rebuilt, rescattered, bytes_gathered: bytes }
+        SyncReport {
+            packed_clean,
+            rebuilt,
+            rescattered,
+            bytes_gathered: bytes,
+            base_reused,
+        }
     }
 
     pub fn packed_tensors(&self) -> PackedTensors<'_> {
@@ -467,6 +591,7 @@ impl StagedLayer {
             n_q: lc.n_q,
             res_base: lc.res_base_version(),
             res_len: lc.n_res(),
+            base_id: lc.base().map_or(0, |b| b.id),
         }
     }
 
@@ -525,40 +650,58 @@ impl StagedLayer {
         let g = geo.group;
         let g2 = geo.g2();
         let cap = lc.q_capacity();
-        let (g_lo, g_hi) = (n_q_lo / g, n_q_hi / g);
-        debug_assert!(g_lo < g_hi && n_q_hi <= cap);
+        // folds only ever append PRIVATE groups (the shared base region is
+        // immutable), so source group indices are base-relative while the
+        // destination keeps absolute token positions
+        let nb = lc.n_base();
+        let (g_lo, g_hi) = ((n_q_lo - nb) / g, (n_q_hi - nb) / g);
+        let goff = nb / g;
+        debug_assert!(g_lo < g_hi && n_q_hi - nb <= cap && n_q_lo >= nb);
         let mut bytes = 0usize;
         if self.k_bits > 0 {
             let bits = self.k_bits;
             let rows_pk = kernels::packed_len(g, bits);
-            let (cap_row, full_row) =
+            let (src_row, full_row) =
                 (kernels::packed_len(cap, bits) * dh, kernels::packed_len(t, bits) * dh);
-            let (lo, len) = (g_lo * rows_pk * dh, (g_hi - g_lo) * rows_pk * dh);
-            scatter_range(&mut self.k_main, &lc.k_pk, slot, h, cap_row, full_row, lo, len);
+            let unit = rows_pk * dh;
+            let len = (g_hi - g_lo) * unit;
+            scatter_at(&mut self.k_main, &lc.k_pk, slot, h, src_row, full_row,
+                       g_lo * unit, (g_lo + goff) * unit, len);
             bytes += h * len;
-            let (cap_row, full_row) = ((cap / g) * dh, (t / g) * dh);
-            let (lo, len) = (g_lo * dh, (g_hi - g_lo) * dh);
-            scatter_range(&mut self.k_scales, &lc.k_scales, slot, h, cap_row, full_row, lo, len);
-            scatter_range(&mut self.k_zeros, &lc.k_zeros, slot, h, cap_row, full_row, lo, len);
+            let (src_row, full_row) = ((cap / g) * dh, (t / g) * dh);
+            let len = (g_hi - g_lo) * dh;
+            scatter_at(&mut self.k_scales, &lc.k_scales, slot, h, src_row, full_row,
+                       g_lo * dh, (g_lo + goff) * dh, len);
+            scatter_at(&mut self.k_zeros, &lc.k_zeros, slot, h, src_row, full_row,
+                       g_lo * dh, (g_lo + goff) * dh, len);
             bytes += 2 * h * len * 4;
         } else {
-            let (lo, len) = (g_lo * g * dh, (g_hi - g_lo) * g * dh);
-            scatter_range(&mut self.k_main_f32, &lc.k_f32, slot, h, cap * dh, t * dh, lo, len);
+            let unit = g * dh;
+            let len = (g_hi - g_lo) * unit;
+            scatter_at(&mut self.k_main_f32, &lc.k_f32, slot, h, cap * dh, t * dh,
+                       g_lo * unit, (g_lo + goff) * unit, len);
             bytes += h * len * 4;
         }
         if self.v_bits > 0 {
             let bpt = kernels::packed_len(dh, self.v_bits);
-            let (lo, len) = (g_lo * g * bpt, (g_hi - g_lo) * g * bpt);
-            scatter_range(&mut self.v_main, &lc.v_pk, slot, h, cap * bpt, t * bpt, lo, len);
+            let unit = g * bpt;
+            let len = (g_hi - g_lo) * unit;
+            scatter_at(&mut self.v_main, &lc.v_pk, slot, h, cap * bpt, t * bpt,
+                       g_lo * unit, (g_lo + goff) * unit, len);
             bytes += h * len;
             let dg = dh / g2;
-            let (lo, len) = (g_lo * g * dg, (g_hi - g_lo) * g * dg);
-            scatter_range(&mut self.v_scales, &lc.v_scales, slot, h, cap * dg, t * dg, lo, len);
-            scatter_range(&mut self.v_zeros, &lc.v_zeros, slot, h, cap * dg, t * dg, lo, len);
+            let unit = g * dg;
+            let len = (g_hi - g_lo) * unit;
+            scatter_at(&mut self.v_scales, &lc.v_scales, slot, h, cap * dg, t * dg,
+                       g_lo * unit, (g_lo + goff) * unit, len);
+            scatter_at(&mut self.v_zeros, &lc.v_zeros, slot, h, cap * dg, t * dg,
+                       g_lo * unit, (g_lo + goff) * unit, len);
             bytes += 2 * h * len * 4;
         } else {
-            let (lo, len) = (g_lo * g * dh, (g_hi - g_lo) * g * dh);
-            scatter_range(&mut self.v_main_f32, &lc.v_f32, slot, h, cap * dh, t * dh, lo, len);
+            let unit = g * dh;
+            let len = (g_hi - g_lo) * unit;
+            scatter_at(&mut self.v_main_f32, &lc.v_f32, slot, h, cap * dh, t * dh,
+                       g_lo * unit, (g_lo + goff) * unit, len);
             bytes += h * len * 4;
         }
         bytes
@@ -566,7 +709,11 @@ impl StagedLayer {
 
     /// Full re-scatter of the given slots, fanned out over a small scoped
     /// worker pool when there is more than one (batched prefill). Each
-    /// slot's regions are disjoint slices of the staging buffers.
+    /// slot's regions are disjoint slices of the staging buffers. When a
+    /// slot's previous occupant mapped the same immutable shared base, the
+    /// staged base region is provably current and is NOT re-copied — only
+    /// the private tail is zeroed and re-scattered. Returns
+    /// `(bytes_written, base_regions_reused)`.
     fn rescatter_slots(
         &mut self,
         geo: &GatherGeo,
@@ -574,7 +721,7 @@ impl StagedLayer {
         seqs: &[&SeqCache],
         layer_idx: usize,
         which: &[usize],
-    ) -> usize {
+    ) -> (usize, usize) {
         let (h, t, dh, r) = (geo.n_heads, geo.max_ctx, geo.d_head, geo.residual);
         let g = geo.group;
         let g2 = geo.g2();
@@ -617,56 +764,58 @@ impl StagedLayer {
         let mut kr = self.k_res.chunks_mut(hrd);
         let mut vr = self.v_res.chunks_mut(hrd);
 
-        // the per-slot scatter body (zero + copy), independent per slot
-        let scatter_one = |bufs: &mut SlotBufs, lc: &LayerCache| -> usize {
-            let cap = lc.q_capacity();
+        // the per-slot scatter body (zero + copy), independent per slot;
+        // `skip_base` preserves the staged base region when it is provably
+        // current (same immutable base as the previous occupant)
+        let scatter_one = |bufs: &mut SlotBufs, lc: &LayerCache, skip_base: bool| -> usize {
+            let nb = lc.n_base();
             let mut bytes = 0usize;
             if let Some(dst) = bufs.k_main.as_deref_mut() {
-                dst.fill(0);
-                scatter(dst, &lc.k_pk, 0, h,
-                        kernels::packed_len(cap, kb) * dh, t_pk * dh);
-                bytes += lc.k_pk.len();
+                let lo = if skip_base { kernels::packed_len(nb, kb) * dh } else { 0 };
+                zero_tail(dst, h, t_pk * dh, lo);
             }
             if let Some(dst) = bufs.k_main_f32.as_deref_mut() {
-                dst.fill(0.0);
-                scatter(dst, &lc.k_f32, 0, h, cap * dh, t * dh);
-                bytes += lc.k_f32.len() * 4;
+                let lo = if skip_base { nb * dh } else { 0 };
+                zero_tail(dst, h, t * dh, lo);
             }
             if kb > 0 {
-                let (cr, fr) = ((cap / g) * dh, (t / g) * dh);
+                let lo = if skip_base { (nb / g) * dh } else { 0 };
                 if let Some(dst) = bufs.k_scales.as_deref_mut() {
-                    dst.fill(0.0);
-                    scatter(dst, &lc.k_scales, 0, h, cr, fr);
+                    zero_tail(dst, h, (t / g) * dh, lo);
                 }
                 if let Some(dst) = bufs.k_zeros.as_deref_mut() {
-                    dst.fill(0.0);
-                    scatter(dst, &lc.k_zeros, 0, h, cr, fr);
+                    zero_tail(dst, h, (t / g) * dh, lo);
                 }
-                bytes += 2 * lc.k_scales.len() * 4;
             }
             if let Some(dst) = bufs.v_main.as_deref_mut() {
-                dst.fill(0);
-                scatter(dst, &lc.v_pk, 0, h, cap * dh_pk, t * dh_pk);
-                bytes += lc.v_pk.len();
+                let lo = if skip_base { nb * dh_pk } else { 0 };
+                zero_tail(dst, h, t * dh_pk, lo);
             }
             if let Some(dst) = bufs.v_main_f32.as_deref_mut() {
-                dst.fill(0.0);
-                scatter(dst, &lc.v_f32, 0, h, cap * dh, t * dh);
-                bytes += lc.v_f32.len() * 4;
+                let lo = if skip_base { nb * dh } else { 0 };
+                zero_tail(dst, h, t * dh, lo);
             }
             if vb > 0 {
                 let dg = dh / g2;
-                let (cr, fr) = (cap * dg, t * dg);
+                let lo = if skip_base { nb * dg } else { 0 };
                 if let Some(dst) = bufs.v_scales.as_deref_mut() {
-                    dst.fill(0.0);
-                    scatter(dst, &lc.v_scales, 0, h, cr, fr);
+                    zero_tail(dst, h, t * dg, lo);
                 }
                 if let Some(dst) = bufs.v_zeros.as_deref_mut() {
-                    dst.fill(0.0);
-                    scatter(dst, &lc.v_zeros, 0, h, cr, fr);
+                    zero_tail(dst, h, t * dg, lo);
                 }
-                bytes += 2 * lc.v_scales.len() * 4;
             }
+            bytes += scatter_cache_packed(
+                geo, lc, 0, skip_base,
+                bufs.k_main.as_deref_mut(),
+                bufs.k_main_f32.as_deref_mut(),
+                bufs.k_scales.as_deref_mut(),
+                bufs.k_zeros.as_deref_mut(),
+                bufs.v_main.as_deref_mut(),
+                bufs.v_main_f32.as_deref_mut(),
+                bufs.v_scales.as_deref_mut(),
+                bufs.v_zeros.as_deref_mut(),
+            );
             bufs.k_res.fill(0.0);
             bufs.v_res.fill(0.0);
             lc.gather_residual(bufs.k_res, bufs.v_res);
@@ -676,7 +825,8 @@ impl StagedLayer {
 
         // walk slots in order, pulling each slot's views; only the selected
         // slots become tasks
-        let mut tasks: Vec<(usize, SlotBufs, &LayerCache)> = Vec::new();
+        let mut reused = 0usize;
+        let mut tasks: Vec<(usize, SlotBufs, &LayerCache, bool)> = Vec::new();
         for slot in 0..self.slots.len() {
             let bufs = SlotBufs {
                 k_main: km.next().unwrap(),
@@ -691,7 +841,15 @@ impl StagedLayer {
                 v_res: vr.next().unwrap(),
             };
             if which.contains(&slot) {
-                tasks.push((slot, bufs, &seqs[slot].layers[layer_idx]));
+                let lc = &seqs[slot].layers[layer_idx];
+                let cur_base = lc.base().map_or(0, |b| b.id);
+                // rebuilt buffers reset slots to INVALID (base_id 0), so a
+                // match here also proves the staging was not resized
+                let skip = cur_base != 0 && self.slots[slot].base_id == cur_base;
+                if skip {
+                    reused += 1;
+                }
+                tasks.push((slot, bufs, lc, skip));
             }
         }
 
@@ -701,8 +859,8 @@ impl StagedLayer {
             std::thread::scope(|scope| {
                 let handles: Vec<_> = tasks
                     .into_iter()
-                    .map(|(_, mut bufs, lc)| {
-                        scope.spawn(move || scatter_one(&mut bufs, lc))
+                    .map(|(_, mut bufs, lc, skip)| {
+                        scope.spawn(move || scatter_one(&mut bufs, lc, skip))
                     })
                     .collect();
                 handles.into_iter().map(|t| t.join().unwrap()).sum()
@@ -710,7 +868,7 @@ impl StagedLayer {
         } else {
             tasks
                 .into_iter()
-                .map(|(_, mut bufs, lc)| scatter_one(&mut bufs, lc))
+                .map(|(_, mut bufs, lc, skip)| scatter_one(&mut bufs, lc, skip))
                 .sum()
         };
 
@@ -718,7 +876,7 @@ impl StagedLayer {
             self.slots[slot] =
                 Self::observe(ids[slot], &seqs[slot].layers[layer_idx]);
         }
-        bytes
+        (bytes, reused)
     }
 }
 
@@ -889,5 +1047,99 @@ mod tests {
         let want = gather_layer_args(&gg, &[&s1, &restored], 0);
         assert_eq!(staged.k_main, want.k_main);
         assert_eq!(staged.k_res, want.k_res);
+    }
+
+    /// Attached (shared-base) caches must stage byte-identically to a full
+    /// gather, fold via tail patches (not re-scatters), and reuse the
+    /// staged base region across slot turnover between borrowers of the
+    /// same immutable base.
+    #[test]
+    fn staged_sync_shared_base_matches_and_reuses() {
+        let (cg, gg) = mk_geo();
+        let hd = 2 * 32;
+        for policy in [QuantPolicy::kivi(1, 2), QuantPolicy::float32(1)] {
+            let mut rng = SplitMix::new(41);
+            let mut donor = SeqCache::new(cg, &policy);
+            for _ in 0..40 {
+                let k = rng.normal_f32_vec(hd);
+                let v = rng.normal_f32_vec(hd);
+                donor.layers[0].append_token(&k, &v);
+            }
+            let base = std::sync::Arc::new(donor.layers[0].freeze_base());
+            let mk = |b: &std::sync::Arc<crate::kvcache::LayerBase>| {
+                let mut s = SeqCache::new(cg, &policy);
+                s.layers[0] = LayerCache::attach(b.clone());
+                s.pos = 40;
+                s
+            };
+            let mut s0 = mk(&base);
+            let mut s1 = mk(&base);
+            let mut staged = StagedLayer::new();
+            let mut saw_patch = false;
+            for step in 0..40 {
+                let k = rng.normal_f32_vec(hd);
+                let v = rng.normal_f32_vec(hd);
+                s0.layers[0].append_token(&k, &v);
+                if step % 3 == 0 {
+                    s1.layers[0].append_token(&v, &k);
+                }
+                let seqs = [&s0, &s1];
+                let rep = staged.sync(&gg, &[1, 2], &seqs, 0);
+                if !rep.rebuilt && !rep.rescattered && !rep.packed_clean {
+                    saw_patch = true;
+                }
+                let want = gather_layer_args(&gg, &seqs, 0);
+                assert_eq!(staged.k_main, want.k_main, "{policy} step {step}");
+                assert_eq!(staged.k_main_f32, want.k_main_f32);
+                assert_eq!(staged.k_scales, want.k_scales);
+                assert_eq!(staged.k_zeros, want.k_zeros);
+                assert_eq!(staged.v_main, want.v_main);
+                assert_eq!(staged.v_main_f32, want.v_main_f32);
+                assert_eq!(staged.v_scales, want.v_scales);
+                assert_eq!(staged.v_zeros, want.v_zeros);
+                assert_eq!(staged.k_res, want.k_res, "{policy} step {step}");
+                assert_eq!(staged.v_res, want.v_res);
+            }
+            assert!(saw_patch, "{policy}: attached fold must tail-patch");
+            // slot turnover between borrowers of the SAME immutable base:
+            // the staged base region is reused, not re-copied
+            let s2 = mk(&base);
+            let seqs = [&s0, &s2];
+            let rep = staged.sync(&gg, &[1, 3], &seqs, 0);
+            assert!(rep.rescattered);
+            assert_eq!(rep.base_reused, 1, "{policy}");
+            let want = gather_layer_args(&gg, &seqs, 0);
+            assert_eq!(staged.k_main, want.k_main, "{policy} turnover");
+            assert_eq!(staged.k_main_f32, want.k_main_f32);
+            assert_eq!(staged.v_main, want.v_main);
+            assert_eq!(staged.v_scales, want.v_scales);
+            assert_eq!(staged.k_res, want.k_res);
+            assert_eq!(staged.v_res, want.v_res);
+            // an unshared replacement must NOT claim base reuse
+            let mut plain = SeqCache::new(cg, &policy);
+            let k = rng.normal_f32_vec(hd);
+            plain.layers[0].append_token(&k, &k);
+            let seqs = [&s0, &plain];
+            let rep = staged.sync(&gg, &[1, 4], &seqs, 0);
+            assert!(rep.rescattered);
+            assert_eq!(rep.base_reused, 0, "{policy}");
+            let want = gather_layer_args(&gg, &seqs, 0);
+            assert_eq!(staged.k_main, want.k_main);
+            assert_eq!(staged.v_main, want.v_main);
+            assert_eq!(staged.k_res, want.k_res);
+            // turnover on a slot whose previous occupant grew PRIVATE groups
+            // past the base: the private tail must be zeroed, base kept
+            let s3 = mk(&base);
+            let seqs = [&s3, &plain];
+            let rep = staged.sync(&gg, &[5, 4], &seqs, 0);
+            assert_eq!(rep.base_reused, 1, "{policy}");
+            let want = gather_layer_args(&gg, &seqs, 0);
+            assert_eq!(staged.k_main, want.k_main, "{policy} tail zeroing");
+            assert_eq!(staged.k_main_f32, want.k_main_f32);
+            assert_eq!(staged.k_scales, want.k_scales);
+            assert_eq!(staged.v_main, want.v_main);
+            assert_eq!(staged.v_scales, want.v_scales);
+            assert_eq!(staged.k_res, want.k_res);
+        }
     }
 }

@@ -94,6 +94,16 @@ fn build_packed_lits(
     ))
 }
 
+/// Policy identity used for prefix matching: per-layer (k,v) bits joined —
+/// policies with different NAMES but identical bit layouts share prefix
+/// state (the caches are byte-compatible).
+pub fn policy_fingerprint(p: &QuantPolicy) -> String {
+    (0..p.n_layers())
+        .map(|i| format!("{}:{}", p.k_bits[i], p.v_bits[i]))
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
 /// `ASYMKV_NAIVE=1` switches the decode hot path back to the
 /// pre-optimization implementation (per-layer folds + mask rebuilds, full
 /// per-step gathers and literal rebuilds, no staging/pipelining) — the A/B
@@ -399,22 +409,28 @@ impl Engine {
     }
 
     /// Prefill with KV-prefix reuse: sequences whose prompt starts with a
-    /// snapshotted prefix restore the packed cache state and only prefill
-    /// the remainder; full prompts are snapshotted afterwards. (Restores
-    /// re-stamp the caches' version counters via `Clone`, so the staged
-    /// literal cache can never confuse restored state with live history.)
+    /// stored prefix ATTACH the frozen base read-only (zero bytes copied;
+    /// shared pages charged once in the pool) and only prefill the
+    /// remainder; full prompts are frozen into shared bases afterwards, the
+    /// just-prefilled sequence becoming the first borrower of its own
+    /// snapshot. Attaches build fresh `LayerCache`s with fresh version
+    /// stamps, so the staged literal cache can never confuse restored state
+    /// with live history. Exact hits hand out the stored `Arc` logits
+    /// without a vocab-sized copy.
     pub fn prefill_cached(
         &self,
         ids: &[u64],
         prompts: &[Vec<i32>],
         pcache: &crate::kvcache::PrefixCache,
-    ) -> Result<Vec<Vec<f32>>> {
-        use crate::kvcache::PrefixEntry;
+    ) -> Result<Vec<Arc<Vec<f32>>>> {
+        use crate::kvcache::{PoolError, PrefixEntry};
         assert_eq!(ids.len(), prompts.len());
 
-        // restore hits + compute remainders
+        // attach hits + compute remainders
         let mut remainders: Vec<Vec<i32>> = Vec::with_capacity(ids.len());
-        let mut cached_logits: Vec<Option<Vec<f32>>> = Vec::with_capacity(ids.len());
+        let mut cached_logits: Vec<Option<Arc<Vec<f32>>>> =
+            Vec::with_capacity(ids.len());
+        let mut pnames: Vec<String> = Vec::with_capacity(ids.len());
         for (&id, prompt) in ids.iter().zip(prompts) {
             let pname = self.pool.with_seq(id, |s| {
                 // policy identity = per-layer bits (names may differ)
@@ -424,33 +440,23 @@ impl Engine {
                     .collect::<Vec<_>>()
                     .join(",")
             })?;
-            // A snapshot only stores its allocated pages, but restoring
-            // still charges them to this sequence: gate on pool headroom
-            // and degrade to a miss when the restore would not fit (the
-            // hit counter stays bumped; rare and harmless).
-            let hit = pcache.lookup(&pname, prompt).filter(|hit| {
-                let cur = self
-                    .pool
-                    .with_seq(id, |s| s.capacity_bytes())
-                    .unwrap_or(0);
-                self.pool
-                    .has_headroom(hit.cache.capacity_bytes().saturating_sub(cur))
-            });
-            match hit {
+            // Attaching a non-resident base charges its bytes once: degrade
+            // to a miss when the budget refuses (the hit counter stays
+            // bumped; rare and harmless).
+            let mut attached = None;
+            if let Some(hit) = pcache.lookup(&pname, prompt) {
+                match self.pool.attach_base(id, &hit.base) {
+                    Ok(()) => attached = Some(hit),
+                    Err(PoolError::BudgetExceeded { .. }) => {}
+                    Err(e) => return Err(e.into()),
+                }
+            }
+            match attached {
                 Some(hit) => {
-                    self.pool.with_seq(id, |s| {
-                        debug_assert_eq!(
-                            s.layers.len(),
-                            hit.cache.layers.len(),
-                            "snapshot/policy layer-count mismatch"
-                        );
-                        *s = hit.cache.clone();
-                    })?;
-                    cached_logits.push(if hit.tokens.len() == prompt.len() {
-                        Some(hit.last_logits.clone())
-                    } else {
-                        None
-                    });
+                    cached_logits.push(
+                        (hit.tokens.len() == prompt.len())
+                            .then(|| hit.last_logits.clone()),
+                    );
                     remainders.push(prompt[hit.tokens.len()..].to_vec());
                 }
                 None => {
@@ -458,10 +464,12 @@ impl Engine {
                     remainders.push(prompt.clone());
                 }
             }
+            pnames.push(pname);
         }
 
         // batched prefill of the remainders (exact hits ride along empty)
-        let mut out: Vec<Vec<f32>> = vec![Vec::new(); ids.len()];
+        let mut out: Vec<Arc<Vec<f32>>> =
+            vec![Arc::new(Vec::new()); ids.len()];
         let need: Vec<usize> = (0..ids.len())
             .filter(|&i| !remainders[i].is_empty())
             .collect();
@@ -471,46 +479,92 @@ impl Engine {
                 need.iter().map(|&i| remainders[i].clone()).collect();
             let logits = self.prefill(&sub_ids, &sub_prompts)?;
             for (&i, l) in need.iter().zip(logits) {
-                out[i] = l;
+                out[i] = Arc::new(l);
             }
         }
         for i in 0..ids.len() {
-            if out[i].is_empty() {
+            if remainders[i].is_empty() {
                 out[i] = cached_logits[i]
                     .clone()
                     .expect("exact hit must carry logits");
             }
         }
 
-        // snapshot full prompts for future reuse — indexed by enumeration,
-        // NOT by an id search: `position(|&x| x == id)` was O(n²) and
-        // silently attributed the FIRST duplicate's logits to every
-        // duplicate id. Exact hits are skipped outright: their entry (the
-        // one that produced the hit) already holds these tokens + logits,
-        // and re-snapshotting a sequence that several batch slots share
+        // freeze full prompts into shared bases for future reuse — indexed
+        // by enumeration, NOT by an id search (a `position(|&x| x == id)`
+        // here was O(n²) and attributed the FIRST duplicate's logits to
+        // every duplicate id). Exact hits are skipped outright: their entry
+        // (the one that produced the hit) already holds these tokens +
+        // logits, and re-freezing a sequence that several batch slots share
         // would file one slot's cache under another slot's prompt.
         for (idx, (&id, prompt)) in ids.iter().zip(prompts).enumerate() {
             if remainders[idx].is_empty() {
                 continue;
             }
-            let (pname, cache) = self.pool.with_seq(id, |s| {
-                (
-                    s.layers
-                        .iter()
-                        .map(|l| format!("{}:{}", l.k_bits, l.v_bits))
-                        .collect::<Vec<_>>()
-                        .join(","),
-                    s.clone(),
-                )
-            })?;
-            pcache.insert(PrefixEntry {
-                policy: pname,
-                tokens: prompt.clone(),
-                cache,
-                last_logits: out[idx].clone(),
-            });
+            let base = match self.pool.share_seq(id) {
+                Ok(b) => b,
+                // degrade: serve the request without a reusable snapshot
+                Err(PoolError::BudgetExceeded { .. }) => continue,
+                Err(e) => return Err(e.into()),
+            };
+            pcache.insert(PrefixEntry::new(
+                pnames[idx].clone(),
+                prompt.clone(),
+                base,
+                out[idx].clone(),
+            ));
         }
         Ok(out)
+    }
+
+    // -----------------------------------------------------------------
+    // first-class shared prefixes (the v3 prefix_register / prefix_id ops)
+    // -----------------------------------------------------------------
+
+    /// Create a sequence ATTACHED to a shared prefix base: it starts at the
+    /// base's position with zero private pages and zero bytes copied — the
+    /// `prefix_id` fast path that skips re-sending and re-prefilling the
+    /// prompt entirely.
+    pub fn create_seq_attached(
+        &self,
+        base: &Arc<crate::kvcache::SeqBase>,
+    ) -> Result<u64> {
+        Ok(self.pool.allocate_attached(base)?)
+    }
+
+    /// Attached variant of [`Engine::create_session_seq`] (pinned against
+    /// per-request frees; the session substrate for `session_open` with a
+    /// `prefix_id`).
+    pub fn create_session_seq_attached(
+        &self,
+        base: &Arc<crate::kvcache::SeqBase>,
+    ) -> Result<u64> {
+        let id = self.create_seq_attached(base)?;
+        self.pool.pin(id)?;
+        Ok(id)
+    }
+
+    /// Prefill `tokens` once under `policy` and freeze the result into a
+    /// shared base holding one standalone pool reference (the
+    /// `prefix_register` op: the pages stay resident with zero attached
+    /// sequences until the registration is released). Returns the base and
+    /// the last-position logits.
+    pub fn prefill_shared_base(
+        &self,
+        policy: &QuantPolicy,
+        tokens: &[i32],
+    ) -> Result<(Arc<crate::kvcache::SeqBase>, Arc<Vec<f32>>)> {
+        let id = self.create_seq(policy)?;
+        let res = (|| {
+            let mut logits = self.prefill(&[id], &[tokens.to_vec()])?;
+            let base = self.pool.share_seq(id)?;
+            self.pool.retain_shared(&base)?;
+            Ok((base, Arc::new(logits.pop().expect("one prompt"))))
+        })();
+        // the donor sequence is transient either way (its base reference
+        // drops here; the standalone reference keeps the pages resident)
+        let _ = self.pool.free(id);
+        res
     }
 
     /// Greedy/sampled generation: prefill + n_gen decode steps.

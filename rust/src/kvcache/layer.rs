@@ -46,8 +46,19 @@
 //! `res_base_version` ⟹ residual rows `[0, seen_len)` are untouched.
 //! Code that mutates the (public) buffers directly without going through
 //! the append/fold API must call [`LayerCache::invalidate`].
+//!
+//! Shared prefixes: a cache may be **attached** to an immutable, refcounted
+//! [`LayerBase`] ([`LayerCache::attach`]) holding a frozen prefix — its
+//! packed groups AND its residual rows at snapshot time. Attached caches
+//! read the base through `Arc` (zero copy, charged once pool-wide) and
+//! write only a private tail: appends land in the private ring, folds pack
+//! into private buffers past `n_base`, and fold reads *consume* base
+//! residual rows without ever writing them — copy-on-write where the only
+//! bytes ever copied are the divergent ones. `capacity_bytes` counts the
+//! private tail only; the pool charges the base once per unique prefix.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use crate::quant::kernels as rtn;
 use crate::quant::kernels::GroupParams;
@@ -79,6 +90,57 @@ impl CacheGeometry {
 /// Round a token count up to whole `g`-token pages, capped at `limit`.
 fn page_target(need: usize, g: usize, limit: usize) -> usize {
     (need.div_ceil(g) * g).min(limit)
+}
+
+/// An immutable frozen prefix: the packed quantized region at **exact**
+/// strides (capacity == `n_base`) plus the residual rows at snapshot time,
+/// compacted token-major. Shared read-only by every attached [`LayerCache`]
+/// through an `Arc` — never mutated after construction, so equal `id` means
+/// identical bytes forever (the process-wide literal cache keys on it).
+#[derive(Debug)]
+pub struct LayerBase {
+    /// process-unique identity (same version source as cache stamps)
+    pub id: u64,
+    pub geo: CacheGeometry,
+    pub k_bits: Bits,
+    pub v_bits: Bits,
+    /// frozen quantized token count (multiple of G; drives every stride)
+    pub n_base: usize,
+    // --- packed region, capacity == n_base ---
+    pub k_pk: Vec<u8>,
+    pub k_f32: Vec<f32>,
+    pub k_scales: Vec<f32>,
+    pub k_zeros: Vec<f32>,
+    pub v_pk: Vec<u8>,
+    pub v_f32: Vec<f32>,
+    pub v_scales: Vec<f32>,
+    pub v_zeros: Vec<f32>,
+    /// residual rows at snapshot time, `[res_rows, H, Dh]` token-major
+    pub res_rows: usize,
+    pub res_k: Vec<f32>,
+    pub res_v: Vec<f32>,
+}
+
+impl LayerBase {
+    /// Total frozen tokens (quantized + residual snapshot rows).
+    pub fn n_tokens(&self) -> usize {
+        self.n_base + self.res_rows
+    }
+
+    /// Allocation footprint of the shared buffers — what the pool charges
+    /// ONCE per unique base, however many sequences attach.
+    pub fn bytes(&self) -> usize {
+        self.k_pk.len()
+            + self.v_pk.len()
+            + 4 * (self.k_f32.len()
+                + self.v_f32.len()
+                + self.k_scales.len()
+                + self.k_zeros.len()
+                + self.v_scales.len()
+                + self.v_zeros.len()
+                + self.res_k.len()
+                + self.res_v.len())
+    }
 }
 
 #[derive(Debug)]
@@ -122,6 +184,12 @@ pub struct LayerCache {
     res_cap: usize,
     res_start: usize,
     res_len: usize,
+    // --- shared frozen prefix (None for root caches) ---
+    base: Option<Arc<LayerBase>>,
+    /// base residual rows already consumed by folds: logical rows
+    /// `[0, base_res_off)` of the snapshot were folded into OUR private
+    /// packed region; the base itself is never written
+    base_res_off: usize,
 }
 
 /// Cloning re-stamps every version: a clone is a *different* cache whose
@@ -154,6 +222,8 @@ impl Clone for LayerCache {
             res_cap: self.res_cap,
             res_start: self.res_start,
             res_len: self.res_len,
+            base: self.base.clone(),
+            base_res_off: self.base_res_off,
         }
     }
 }
@@ -197,11 +267,102 @@ impl LayerCache {
             res_cap: 0,
             res_start: 0,
             res_len: 0,
+            base: None,
+            base_res_off: 0,
+        }
+    }
+
+    /// Attach to a frozen shared prefix: the new cache starts AT the
+    /// snapshot (same `n_q`, same residual rows, so every future fold
+    /// lands exactly where a from-scratch prefill would put it — folding
+    /// is lossy, so matching the fold schedule is what makes attached
+    /// decode bit-identical) while allocating **zero** token storage of
+    /// its own. All private strides are relative to the base: packed
+    /// buffers hold only groups past `n_base`, the ring holds only tokens
+    /// appended after the snapshot.
+    pub fn attach(base: Arc<LayerBase>) -> Self {
+        let geo = base.geo;
+        assert_eq!(base.n_base % geo.group, 0, "attach: base not group-aligned");
+        assert!(base.n_base <= geo.max_ctx && base.res_rows <= geo.residual,
+                "attach: base exceeds geometry");
+        let h = geo.n_heads;
+        let (k_scales, k_zeros) = if base.k_bits > 0 {
+            (vec![], vec![])
+        } else {
+            (vec![0f32; h], vec![0f32; h])
+        };
+        let (v_scales, v_zeros) = if base.v_bits > 0 {
+            (vec![], vec![])
+        } else {
+            (vec![0f32; h], vec![0f32; h])
+        };
+        Self {
+            geo,
+            k_bits: base.k_bits,
+            v_bits: base.v_bits,
+            ident_version: next_version(),
+            version: next_version(),
+            layout_version: next_version(),
+            packed_version: next_version(),
+            res_base_version: next_version(),
+            n_q: base.n_base,
+            q_cap: 0,
+            k_pk: vec![],
+            k_f32: vec![],
+            k_scales,
+            k_zeros,
+            v_pk: vec![],
+            v_f32: vec![],
+            v_scales,
+            v_zeros,
+            res_k: vec![],
+            res_v: vec![],
+            res_cap: 0,
+            res_start: 0,
+            res_len: 0,
+            base: Some(base),
+            base_res_off: 0,
+        }
+    }
+
+    /// The frozen shared prefix this cache reads through, if any.
+    pub fn base(&self) -> Option<&Arc<LayerBase>> {
+        self.base.as_ref()
+    }
+
+    /// Quantized tokens supplied by the shared base (0 for root caches).
+    pub fn n_base(&self) -> usize {
+        self.base.as_deref().map_or(0, |b| b.n_base)
+    }
+
+    /// Base snapshot residual rows not yet consumed by folds.
+    fn base_res_rem(&self) -> usize {
+        self.base.as_deref().map_or(0, |b| b.res_rows - self.base_res_off)
+    }
+
+    /// Quantized tokens folded privately, past the shared base. Private
+    /// packed strides and destination group indices are relative to this.
+    fn own_q(&self) -> usize {
+        self.n_q - self.n_base()
+    }
+
+    /// Logical residual row `i` (of [`LayerCache::n_res`]): unconsumed base
+    /// snapshot rows come first, then the private ring.
+    fn res_row(&self, i: usize) -> (&[f32], &[f32]) {
+        let hd = self.geo.n_heads * self.geo.d_head;
+        let brem = self.base_res_rem();
+        if i < brem {
+            let b = self.base.as_deref().unwrap();
+            let src = (self.base_res_off + i) * hd;
+            (&b.res_k[src..src + hd], &b.res_v[src..src + hd])
+        } else {
+            let src = ((self.res_start + (i - brem)) % self.res_cap) * hd;
+            (&self.res_k[src..src + hd], &self.res_v[src..src + hd])
         }
     }
 
     pub fn n_res(&self) -> usize {
-        self.res_len
+        self.base_res_rem() + self.res_len
     }
 
     // -----------------------------------------------------------------
@@ -252,7 +413,7 @@ impl LayerCache {
 
     /// Total cached tokens (quantized + residual).
     pub fn n_tokens(&self) -> usize {
-        self.n_q + self.res_len
+        self.n_q + self.n_res()
     }
 
     /// Allocated quantized-region capacity in tokens (page-aligned, ≤ T).
@@ -275,16 +436,21 @@ impl LayerCache {
     fn caps_for_append(&self, count: usize) -> (usize, usize) {
         let (g, r, t) = (self.geo.group, self.geo.residual, self.geo.max_ctx);
         // appends fold as late as possible: ceil(overflow / G) groups
-        let folds = (self.res_len + count).saturating_sub(r).div_ceil(g);
-        let n_q2 = self.n_q + folds * g;
-        let res2 = (self.res_len + count).saturating_sub(folds * g);
-        let q_t = if n_q2 > self.q_cap {
-            page_target(n_q2, g, t)
+        let folds = (self.n_res() + count).saturating_sub(r).div_ceil(g);
+        // only privately folded groups need private packed pages
+        let own_q2 = self.own_q() + folds * g;
+        let q_t = if own_q2 > self.q_cap {
+            page_target(own_q2, g, t - self.n_base())
         } else {
             self.q_cap
         };
-        // ring occupancy peaks at max(now, after): folds only shrink it and
-        // the appended tokens land after the folds
+        // private-ring occupancy: folds consume base snapshot rows first,
+        // then the private ring, then batch tokens; appended tokens land
+        // after the folds, so occupancy peaks at max(now, after)
+        let from_base = (folds * g).min(self.base_res_rem());
+        let from_own = (folds * g - from_base).min(self.res_len);
+        let from_batch = folds * g - from_base - from_own;
+        let res2 = self.res_len - from_own + (count - from_batch);
         let res_need = self.res_len.max(res2);
         let r_t = if res_need > self.res_cap {
             page_target(res_need, g, r)
@@ -324,7 +490,8 @@ impl LayerCache {
     }
 
     /// Grow the packed region (and its scale/zero params) to hold at least
-    /// `need` tokens, restriding each head's rows into the new buffers.
+    /// `need` **private** tokens (past any shared base), restriding each
+    /// head's rows into the new buffers.
     fn ensure_q_cap(&mut self, need: usize) {
         if need <= self.q_cap {
             return;
@@ -332,8 +499,9 @@ impl LayerCache {
         let geo = self.geo;
         let (h, dh, g) = (geo.n_heads, geo.d_head, geo.group);
         let g2 = geo.g2();
-        let new_cap = page_target(need, g, geo.max_ctx);
-        assert!(new_cap >= need, "quantized region full (need {need} > T={})", geo.max_ctx);
+        let limit = geo.max_ctx - self.n_base();
+        let new_cap = page_target(need, g, limit);
+        assert!(new_cap >= need, "quantized region full (need {need} > T={limit})");
         let old = self.q_cap;
         // per-head restride: copy each head's old row into the wider layout
         fn restride<T: Copy + Default>(buf: &mut Vec<T>, h: usize, ob: usize, nb: usize) {
@@ -404,7 +572,7 @@ impl LayerCache {
         assert_eq!(k.len(), hd, "append_token: K row is not [H, Dh]");
         assert_eq!(v.len(), hd, "append_token: V row is not [H, Dh]");
         let mut folds = 0;
-        while self.res_len + 1 > self.geo.residual {
+        while self.n_res() + 1 > self.geo.residual {
             self.fold_oldest_group();
             folds += 1;
         }
@@ -418,32 +586,39 @@ impl LayerCache {
     }
 
     /// Fold the oldest G residual tokens into the packed/quantized region.
+    /// With a shared base attached, the oldest rows are the base snapshot's
+    /// — they are *read* into the private packed tail and consumed by
+    /// advancing `base_res_off`; the base itself is never written
+    /// (copy-on-write: the only bytes materialized are the divergent ones).
     pub fn fold_oldest_group(&mut self) {
         let geo = self.geo;
         let (h, dh, g) = (geo.n_heads, geo.d_head, geo.group);
-        assert!(self.res_len >= g, "fold needs at least one full group");
+        assert!(self.n_res() >= g, "fold needs at least one full group");
         assert!(self.n_q + g <= geo.max_ctx, "quantized region full");
-        self.ensure_q_cap(self.n_q + g);
-        let hd = h * dh;
+        self.ensure_q_cap(self.own_q() + g);
 
-        // gather oldest G tokens per head into [G, Dh] scratch
+        // gather oldest G logical rows per head into [G, Dh] scratch
         let mut kg = vec![0f32; g * dh];
         let mut vg = vec![0f32; g * dh];
-        let gi = self.n_q / g; // destination group index
+        let gi = self.own_q() / g; // destination group index (own-relative)
         for head in 0..h {
             for t in 0..g {
-                let slot = (self.res_start + t) % self.res_cap;
-                let src = slot * hd + head * dh;
+                let (rk, rv) = self.res_row(t);
                 kg[t * dh..(t + 1) * dh]
-                    .copy_from_slice(&self.res_k[src..src + dh]);
+                    .copy_from_slice(&rk[head * dh..(head + 1) * dh]);
                 vg[t * dh..(t + 1) * dh]
-                    .copy_from_slice(&self.res_v[src..src + dh]);
+                    .copy_from_slice(&rv[head * dh..(head + 1) * dh]);
             }
             self.fold_k_head(head, gi, &kg);
             self.fold_v_head(head, gi, &vg);
         }
-        self.res_start = (self.res_start + g) % self.res_cap;
-        self.res_len -= g;
+        let from_base = g.min(self.base_res_rem());
+        self.base_res_off += from_base;
+        let from_own = g - from_base;
+        if from_own > 0 {
+            self.res_start = (self.res_start + from_own) % self.res_cap;
+            self.res_len -= from_own;
+        }
         self.n_q += g;
         // packed region gained a tail group AND the ring origin advanced
         self.version = next_version();
@@ -466,31 +641,33 @@ impl LayerCache {
         assert_eq!(ks.len(), count * hd, "append_tokens: K rows are not [count, H, Dh]");
         assert_eq!(vs.len(), count * hd, "append_tokens: V rows are not [count, H, Dh]");
         // sequential appends fold as late as possible: ceil(overflow / G)
-        let folds = (self.res_len + count).saturating_sub(r).div_ceil(g);
+        let folds = (self.n_res() + count).saturating_sub(r).div_ceil(g);
         assert!(self.n_q + folds * g <= geo.max_ctx, "quantized region full");
-        self.ensure_q_cap(self.n_q + folds * g);
+        self.ensure_q_cap(self.own_q() + folds * g);
         let mut consumed = 0; // batch tokens already folded
         for _ in 0..folds {
-            if self.res_len >= g {
+            if self.n_res() >= g {
                 self.fold_oldest_group();
             } else {
-                // the group spans the ring remainder plus the batch head
-                let from_ring = self.res_len;
-                let take = g - from_ring;
+                // the group spans the residual remainder (base snapshot
+                // rows + private ring) plus the batch head
+                let from_cache = self.n_res();
+                let take = g - from_cache;
                 let mut kt = vec![0f32; g * hd];
                 let mut vt = vec![0f32; g * hd];
-                for t in 0..from_ring {
-                    let slot = (self.res_start + t) % self.res_cap;
-                    kt[t * hd..(t + 1) * hd]
-                        .copy_from_slice(&self.res_k[slot * hd..(slot + 1) * hd]);
-                    vt[t * hd..(t + 1) * hd]
-                        .copy_from_slice(&self.res_v[slot * hd..(slot + 1) * hd]);
+                for t in 0..from_cache {
+                    let (rk, rv) = self.res_row(t);
+                    kt[t * hd..(t + 1) * hd].copy_from_slice(rk);
+                    vt[t * hd..(t + 1) * hd].copy_from_slice(rv);
                 }
-                kt[from_ring * hd..].copy_from_slice(&ks[consumed * hd..(consumed + take) * hd]);
-                vt[from_ring * hd..].copy_from_slice(&vs[consumed * hd..(consumed + take) * hd]);
+                kt[from_cache * hd..].copy_from_slice(&ks[consumed * hd..(consumed + take) * hd]);
+                vt[from_cache * hd..].copy_from_slice(&vs[consumed * hd..(consumed + take) * hd]);
                 self.fold_group_rows(&kt, &vt);
-                // ring fully drained: its origin is free to reset (safe even
-                // when the ring has never been allocated, res_cap == 0)
+                // residual fully drained: base rows are all consumed and the
+                // ring origin is free to reset (safe even when the ring has
+                // never been allocated, res_cap == 0)
+                let base_rows = self.base.as_deref().map_or(0, |b| b.res_rows);
+                self.base_res_off = base_rows;
                 self.res_start = 0;
                 self.res_len = 0;
                 self.res_base_version = next_version();
@@ -525,9 +702,9 @@ impl LayerCache {
         let geo = self.geo;
         let (h, dh, g) = (geo.n_heads, geo.d_head, geo.group);
         assert!(self.n_q + g <= geo.max_ctx, "quantized region full");
-        self.ensure_q_cap(self.n_q + g);
+        self.ensure_q_cap(self.own_q() + g);
         let hd = h * dh;
-        let gi = self.n_q / g;
+        let gi = self.own_q() / g;
         let mut kg = vec![0f32; g * dh];
         let mut vg = vec![0f32; g * dh];
         for head in 0..h {
@@ -544,12 +721,14 @@ impl LayerCache {
         self.packed_version = next_version();
     }
 
+    /// `gi` is the destination group index **relative to the private packed
+    /// region** (groups past any shared base).
     fn fold_k_head(&mut self, head: usize, gi: usize, kg: &[f32]) {
         let geo = self.geo;
         let (dh, g) = (geo.d_head, geo.group);
-        let tc = self.q_cap; // allocated token capacity drives all strides
+        let tc = self.q_cap; // allocated private capacity drives all strides
         if self.k_bits == 0 {
-            let base = head * tc * dh + self.n_q * dh;
+            let base = head * tc * dh + gi * g * dh;
             self.k_f32[base..base + g * dh].copy_from_slice(kg);
             return;
         }
@@ -568,13 +747,15 @@ impl LayerCache {
         }
     }
 
-    fn fold_v_head(&mut self, head: usize, _gi: usize, vg: &[f32]) {
+    /// `gi` is the destination group index relative to the private region.
+    fn fold_v_head(&mut self, head: usize, gi: usize, vg: &[f32]) {
         let geo = self.geo;
         let (dh, g) = (geo.d_head, geo.group);
         let g2 = geo.g2();
         let tc = self.q_cap;
+        let oq = gi * g; // own-relative token offset of this group
         if self.v_bits == 0 {
-            let base = head * tc * dh + self.n_q * dh;
+            let base = head * tc * dh + oq * dh;
             self.v_f32[base..base + g * dh].copy_from_slice(vg);
             return;
         }
@@ -582,10 +763,10 @@ impl LayerCache {
         let bpt = rtn::packed_len(dh, bits); // bytes per token
         let dg = dh / g2;
         let mut params = vec![GroupParams { scale: 0.0, zero: 0.0 }; g * dg];
-        let dst = head * tc * bpt + self.n_q * bpt;
+        let dst = head * tc * bpt + oq * bpt;
         rtn::fold_v_group(vg, g, dh, g2, bits,
                           &mut self.v_pk[dst..dst + g * bpt], &mut params);
-        let pbase = head * tc * dg + self.n_q * dg;
+        let pbase = head * tc * dg + oq * dg;
         for i in 0..g * dg {
             self.v_scales[pbase + i] = params[i].scale;
             self.v_zeros[pbase + i] = params[i].zero;
@@ -607,6 +788,11 @@ impl LayerCache {
     /// bytes freed; when called inside `CachePool::with_seq` the pool
     /// settles its accounting from the capacity delta automatically.
     pub fn downshift_groups(&mut self, new_kb: Bits, new_vb: Bits) -> usize {
+        assert!(
+            self.base.is_none(),
+            "downshift_groups: attached caches share a read-only base; \
+             the scheduler must pick an unattached victim"
+        );
         let geo = self.geo;
         let (h, dh, g) = (geo.n_heads, geo.d_head, geo.group);
         let g2 = geo.g2();
@@ -762,7 +948,7 @@ impl LayerCache {
     /// Write the residual window into `out` laid out [H, R, Dh] (artifact
     /// layout), compacting the ring so occupied slots are [0, n_res).
     pub fn gather_residual(&self, out_k: &mut [f32], out_v: &mut [f32]) {
-        self.copy_residual_rows(0, self.res_len, out_k, out_v);
+        self.copy_residual_rows(0, self.n_res(), out_k, out_v);
     }
 
     /// Write only logical residual rows `[lo, hi)` into the [H, R, Dh]
@@ -779,18 +965,15 @@ impl LayerCache {
     ) {
         let geo = self.geo;
         let (h, dh, r) = (geo.n_heads, geo.d_head, geo.residual);
-        let hd = h * dh;
-        debug_assert!(hi <= self.res_len);
+        debug_assert!(hi <= self.n_res());
         debug_assert_eq!(out_k.len(), h * r * dh);
         for slot in lo..hi {
-            let src_row = ((self.res_start + slot) % self.res_cap) * hd;
+            let (rk, rv) = self.res_row(slot);
             for head in 0..h {
-                let src = src_row + head * dh;
+                let src = head * dh;
                 let dst = head * r * dh + slot * dh;
-                out_k[dst..dst + dh]
-                    .copy_from_slice(&self.res_k[src..src + dh]);
-                out_v[dst..dst + dh]
-                    .copy_from_slice(&self.res_v[src..src + dh]);
+                out_k[dst..dst + dh].copy_from_slice(&rk[src..src + dh]);
+                out_v[dst..dst + dh].copy_from_slice(&rv[src..src + dh]);
             }
         }
     }
@@ -809,81 +992,102 @@ impl LayerCache {
         let geo = self.geo;
         let (h, dh, g) = (geo.n_heads, geo.d_head, geo.group);
         let g2 = geo.g2();
-        let tc = self.q_cap;
         let n = self.n_tokens();
+        let n_base = self.n_base();
         let mut out = vec![0f32; h * n * dh];
         let bits = if is_k { self.k_bits } else { self.v_bits };
         for head in 0..h {
-            // quantized region
+            // quantized region: groups below n_base read the shared base at
+            // its exact strides, the rest read the private tail at q_cap
             for gi in 0..self.n_q / g {
                 let mut buf = vec![0f32; g * dh];
+                let in_base = gi * g < n_base;
+                let b = self.base.as_deref();
+                let (pk, f32s, scales, zeros, tc, lgi) = if in_base {
+                    let b = b.unwrap();
+                    if is_k {
+                        (&b.k_pk, &b.k_f32, &b.k_scales, &b.k_zeros, b.n_base, gi)
+                    } else {
+                        (&b.v_pk, &b.v_f32, &b.v_scales, &b.v_zeros, b.n_base, gi)
+                    }
+                } else {
+                    let lgi = gi - n_base / g;
+                    if is_k {
+                        (&self.k_pk, &self.k_f32, &self.k_scales, &self.k_zeros,
+                         self.q_cap, lgi)
+                    } else {
+                        (&self.v_pk, &self.v_f32, &self.v_scales, &self.v_zeros,
+                         self.q_cap, lgi)
+                    }
+                };
                 if bits == 0 {
-                    let src = head * tc * dh + gi * g * dh;
-                    let f32s = if is_k { &self.k_f32 } else { &self.v_f32 };
+                    let src = head * tc * dh + lgi * g * dh;
                     buf.copy_from_slice(&f32s[src..src + g * dh]);
                 } else if is_k {
                     let rows_pk = rtn::packed_len(g, bits);
                     let t_pk = rtn::packed_len(tc, bits);
-                    let src = head * t_pk * dh + gi * rows_pk * dh;
+                    let src = head * t_pk * dh + lgi * rows_pk * dh;
                     let ng = tc / g;
-                    let pbase = head * ng * dh + gi * dh;
+                    let pbase = head * ng * dh + lgi * dh;
                     let params: Vec<GroupParams> = (0..dh)
                         .map(|d| GroupParams {
-                            scale: self.k_scales[pbase + d],
-                            zero: self.k_zeros[pbase + d],
+                            scale: scales[pbase + d],
+                            zero: zeros[pbase + d],
                         })
                         .collect();
-                    rtn::unfold_k_group(&self.k_pk[src..src + rows_pk * dh],
+                    rtn::unfold_k_group(&pk[src..src + rows_pk * dh],
                                         g, dh, bits, &params, &mut buf);
                 } else {
                     let bpt = rtn::packed_len(dh, bits);
                     let dg = dh / g2;
-                    let src = head * tc * bpt + gi * g * bpt;
-                    let pbase = head * tc * dg + gi * g * dg;
+                    let src = head * tc * bpt + lgi * g * bpt;
+                    let pbase = head * tc * dg + lgi * g * dg;
                     let params: Vec<GroupParams> = (0..g * dg)
                         .map(|i| GroupParams {
-                            scale: self.v_scales[pbase + i],
-                            zero: self.v_zeros[pbase + i],
+                            scale: scales[pbase + i],
+                            zero: zeros[pbase + i],
                         })
                         .collect();
-                    rtn::unfold_v_group(&self.v_pk[src..src + g * bpt],
+                    rtn::unfold_v_group(&pk[src..src + g * bpt],
                                         g, dh, g2, bits, &params, &mut buf);
                 }
                 let dst = head * n * dh + gi * g * dh;
                 out[dst..dst + g * dh].copy_from_slice(&buf);
             }
-            // residual region
-            let hd = h * dh;
-            for slot in 0..self.res_len {
-                let src_row = ((self.res_start + slot) % self.res_cap) * hd;
-                let res = if is_k { &self.res_k } else { &self.res_v };
+            // residual region (base snapshot rows first, then the ring)
+            for slot in 0..self.n_res() {
+                let (rk, rv) = self.res_row(slot);
+                let res = if is_k { rk } else { rv };
                 let dst = head * n * dh + (self.n_q + slot) * dh;
                 out[dst..dst + dh]
-                    .copy_from_slice(&res[src_row + head * dh..src_row + head * dh + dh]);
+                    .copy_from_slice(&res[head * dh..(head + 1) * dh]);
             }
         }
         out
     }
 
-    /// Bytes actually used by cached tokens (packed data + params + residual).
+    /// Bytes actually used by **privately held** cached tokens (packed data
+    /// + params + residual ring). Shared-base bytes are excluded: the pool
+    /// charges them once per unique base, not per attached sequence.
     pub fn used_bytes(&self) -> usize {
         let geo = self.geo;
         let (h, dh, g) = (geo.n_heads, geo.d_head, geo.group);
         let g2 = geo.g2();
+        let oq = self.own_q();
         let mut total = 0usize;
         // K side
         if self.k_bits > 0 {
-            total += h * rtn::packed_len(self.n_q, self.k_bits) * dh;
-            total += 2 * h * (self.n_q / g) * dh * 4;
+            total += h * rtn::packed_len(oq, self.k_bits) * dh;
+            total += 2 * h * (oq / g) * dh * 4;
         } else {
-            total += h * self.n_q * dh * 4;
+            total += h * oq * dh * 4;
         }
         // V side
         if self.v_bits > 0 {
-            total += h * self.n_q * rtn::packed_len(dh, self.v_bits);
-            total += 2 * h * self.n_q * (dh / g2) * 4;
+            total += h * oq * rtn::packed_len(dh, self.v_bits);
+            total += 2 * h * oq * (dh / g2) * 4;
         } else {
-            total += h * self.n_q * dh * 4;
+            total += h * oq * dh * 4;
         }
         // residual fp32 (both K and V)
         total += 2 * self.res_len * h * dh * 4;
@@ -909,9 +1113,154 @@ impl LayerCache {
     }
 
     /// Footprint when fully grown (the pre-paging static allocation): what
-    /// a worst-case full-context sequence will eventually be charged.
+    /// a worst-case full-context sequence will eventually be charged. For
+    /// attached caches only the private tail can grow — the base region is
+    /// never re-materialized privately.
     pub fn full_capacity_bytes(&self) -> usize {
-        self.bytes_at_caps(self.geo.max_ctx, self.geo.residual)
+        self.bytes_at_caps(self.geo.max_ctx - self.n_base(), self.geo.residual)
+    }
+
+    /// Freeze this cache's full state into a self-contained immutable
+    /// [`LayerBase`]: the packed region re-strided to exact capacity
+    /// (`cap == n_q`) and the residual window compacted, stitching through
+    /// any base this cache is itself attached to — so extending a shared
+    /// prefix and re-freezing yields a **chained** node (the radix-tree
+    /// growth step) without borrowers ever knowing the provenance. The
+    /// snapshot preserves the donor's exact fold state: an attached cache
+    /// starts with identical `(n_q, n_res)` and therefore an identical
+    /// future fold schedule, which (folds being lossy) is what makes
+    /// attached decode bit-identical to an unshared replay.
+    pub fn freeze_base(&self) -> LayerBase {
+        let geo = self.geo;
+        let (h, dh, g) = (geo.n_heads, geo.d_head, geo.group);
+        let g2 = geo.g2();
+        let hd = h * dh;
+        let n_base = self.n_q;
+        debug_assert_eq!(n_base % g, 0);
+        let nb0 = self.n_base(); // groups below this come from our own base
+        let n_res = self.n_res();
+
+        // compacted residual snapshot, token-major like the live ring
+        let mut res_k = vec![0f32; n_res * hd];
+        let mut res_v = vec![0f32; n_res * hd];
+        for i in 0..n_res {
+            let (rk, rv) = self.res_row(i);
+            res_k[i * hd..(i + 1) * hd].copy_from_slice(rk);
+            res_v[i * hd..(i + 1) * hd].copy_from_slice(rv);
+        }
+
+        let ng = n_base / g;
+        let base = self.base.as_deref();
+
+        // K side at exact strides
+        let (k_pk, k_f32, k_scales, k_zeros) = if self.k_bits > 0 {
+            let bits = self.k_bits;
+            let rows_pk = rtn::packed_len(g, bits);
+            let t_pk = rtn::packed_len(n_base, bits);
+            let mut pk = vec![0u8; h * t_pk * dh];
+            let mut sc = vec![0f32; h * ng * dh];
+            let mut zr = vec![0f32; h * ng * dh];
+            for head in 0..h {
+                for gi in 0..ng {
+                    let (src_pk, src_sc, src_zr, tc, lgi) = if gi * g < nb0 {
+                        let b = base.unwrap();
+                        (&b.k_pk, &b.k_scales, &b.k_zeros, b.n_base, gi)
+                    } else {
+                        (&self.k_pk, &self.k_scales, &self.k_zeros,
+                         self.q_cap, gi - nb0 / g)
+                    };
+                    let s_tpk = rtn::packed_len(tc, bits);
+                    let src = head * s_tpk * dh + lgi * rows_pk * dh;
+                    let dst = head * t_pk * dh + gi * rows_pk * dh;
+                    pk[dst..dst + rows_pk * dh]
+                        .copy_from_slice(&src_pk[src..src + rows_pk * dh]);
+                    let spb = head * (tc / g) * dh + lgi * dh;
+                    let dpb = head * ng * dh + gi * dh;
+                    sc[dpb..dpb + dh].copy_from_slice(&src_sc[spb..spb + dh]);
+                    zr[dpb..dpb + dh].copy_from_slice(&src_zr[spb..spb + dh]);
+                }
+            }
+            (pk, vec![], sc, zr)
+        } else {
+            let mut f = vec![0f32; h * n_base * dh];
+            for head in 0..h {
+                for gi in 0..ng {
+                    let (src_f, tc, lgi) = if gi * g < nb0 {
+                        (&base.unwrap().k_f32, base.unwrap().n_base, gi)
+                    } else {
+                        (&self.k_f32, self.q_cap, gi - nb0 / g)
+                    };
+                    let src = head * tc * dh + lgi * g * dh;
+                    let dst = head * n_base * dh + gi * g * dh;
+                    f[dst..dst + g * dh].copy_from_slice(&src_f[src..src + g * dh]);
+                }
+            }
+            (vec![], f, vec![0f32; h], vec![0f32; h])
+        };
+
+        // V side at exact strides
+        let (v_pk, v_f32, v_scales, v_zeros) = if self.v_bits > 0 {
+            let bits = self.v_bits;
+            let bpt = rtn::packed_len(dh, bits);
+            let dg = dh / g2;
+            let mut pk = vec![0u8; h * n_base * bpt];
+            let mut sc = vec![0f32; h * n_base * dg];
+            let mut zr = vec![0f32; h * n_base * dg];
+            for head in 0..h {
+                for gi in 0..ng {
+                    let (src_pk, src_sc, src_zr, tc, lgi) = if gi * g < nb0 {
+                        let b = base.unwrap();
+                        (&b.v_pk, &b.v_scales, &b.v_zeros, b.n_base, gi)
+                    } else {
+                        (&self.v_pk, &self.v_scales, &self.v_zeros,
+                         self.q_cap, gi - nb0 / g)
+                    };
+                    let src = head * tc * bpt + lgi * g * bpt;
+                    let dst = head * n_base * bpt + gi * g * bpt;
+                    pk[dst..dst + g * bpt]
+                        .copy_from_slice(&src_pk[src..src + g * bpt]);
+                    let spb = head * tc * dg + lgi * g * dg;
+                    let dpb = head * n_base * dg + gi * g * dg;
+                    sc[dpb..dpb + g * dg].copy_from_slice(&src_sc[spb..spb + g * dg]);
+                    zr[dpb..dpb + g * dg].copy_from_slice(&src_zr[spb..spb + g * dg]);
+                }
+            }
+            (pk, vec![], sc, zr)
+        } else {
+            let mut f = vec![0f32; h * n_base * dh];
+            for head in 0..h {
+                for gi in 0..ng {
+                    let (src_f, tc, lgi) = if gi * g < nb0 {
+                        (&base.unwrap().v_f32, base.unwrap().n_base, gi)
+                    } else {
+                        (&self.v_f32, self.q_cap, gi - nb0 / g)
+                    };
+                    let src = head * tc * dh + lgi * g * dh;
+                    let dst = head * n_base * dh + gi * g * dh;
+                    f[dst..dst + g * dh].copy_from_slice(&src_f[src..src + g * dh]);
+                }
+            }
+            (vec![], f, vec![0f32; h], vec![0f32; h])
+        };
+
+        LayerBase {
+            id: next_version(),
+            geo,
+            k_bits: self.k_bits,
+            v_bits: self.v_bits,
+            n_base,
+            k_pk,
+            k_f32,
+            k_scales,
+            k_zeros,
+            v_pk,
+            v_f32,
+            v_scales,
+            v_zeros,
+            res_rows: n_res,
+            res_k,
+            res_v,
+        }
     }
 }
 
@@ -1514,5 +1863,132 @@ mod tests {
         assert_eq!(paged.n_q, grown.n_q);
         assert_eq!(paged.dequant_k_full(), grown.dequant_k_full());
         assert_eq!(paged.dequant_v_full(), grown.dequant_v_full());
+    }
+
+    // ---------------- shared base (copy-on-write prefix) ----------------
+
+    #[test]
+    fn attach_is_zero_copy() {
+        let mut donor = LayerCache::new(geo(), 1, 1);
+        let mut g = Gen { rng: crate::util::rng::SplitMix::new(41) };
+        let hd = 2 * 32;
+        let ks = g.vec_normal(70 * hd, 1.0);
+        let vs = g.vec_normal(70 * hd, 1.0);
+        donor.append_tokens(70, &ks, &vs);
+        let base = Arc::new(donor.freeze_base());
+        assert_eq!(base.n_tokens(), 70);
+        assert!(base.bytes() > 0);
+        let mut att = LayerCache::attach(base.clone());
+        assert_eq!(att.n_tokens(), 70);
+        assert_eq!(att.n_q, donor.n_q);
+        assert_eq!(att.n_res(), donor.n_res());
+        // attaching allocates nothing: the entire prefix is read through
+        // the Arc; only post-divergence appends grow private pages
+        assert_eq!(att.capacity_bytes(), 0);
+        assert_eq!(att.used_bytes(), 0);
+        for _ in 0..40 {
+            let (k, v) = tok(&mut g, hd);
+            att.append_token(&k, &v);
+        }
+        assert!(att.capacity_bytes() > 0);
+        assert_eq!(att.n_tokens(), 110);
+    }
+
+    #[test]
+    fn attached_matches_unshared_replay_prop() {
+        check("base_attach_eq", 12, |g: &mut Gen| {
+            let bits = *g.pick(&[0u8, 1, 2, 4]);
+            let hd = 2 * 32;
+            let n0 = g.usize_in(1, 90);
+            let mut donor = LayerCache::new(geo(), bits, bits);
+            let pk = g.vec_normal(n0 * hd, 1.0);
+            let pv = g.vec_normal(n0 * hd, 1.0);
+            donor.append_tokens(n0, &pk, &pv);
+            let base = Arc::new(donor.freeze_base());
+            let mut att = LayerCache::attach(base);
+            if att.n_tokens() != donor.n_tokens() || att.n_res() != donor.n_res() {
+                return Err("attach does not reproduce donor occupancy".into());
+            }
+            // replay an identical suffix into the donor (the unshared
+            // baseline) and the attached borrower; growth prediction must
+            // stay exact for the attached cache (pool gating depends on it)
+            let n1 = g.usize_in(0, 192 - n0);
+            for _ in 0..n1 {
+                let (k, v) = tok(g, hd);
+                let predicted = att.growth_bytes_for(1);
+                let before = att.capacity_bytes();
+                let fd = donor.append_token(&k, &v);
+                let fa = att.append_token(&k, &v);
+                if fd != fa {
+                    return Err(format!("fold schedule diverges: {fd} vs {fa}"));
+                }
+                if att.capacity_bytes() - before != predicted {
+                    return Err("growth prediction inexact for attached cache".into());
+                }
+            }
+            // and a batched tail through the mixed ring+batch fold path
+            let n2 = g.usize_in(0, 192 - n0 - n1);
+            let ks = g.vec_normal(n2 * hd, 1.0);
+            let vs = g.vec_normal(n2 * hd, 1.0);
+            let predicted = att.growth_bytes_for(n2);
+            let before = att.capacity_bytes();
+            let fd = donor.append_tokens(n2, &ks, &vs);
+            let fa = att.append_tokens(n2, &ks, &vs);
+            if fd != fa {
+                return Err(format!("batch fold schedule diverges: {fd} vs {fa}"));
+            }
+            if att.capacity_bytes() - before != predicted {
+                return Err("batch growth prediction inexact".into());
+            }
+            if att.n_q != donor.n_q || att.n_res() != donor.n_res() {
+                return Err("occupancy diverges after suffix".into());
+            }
+            // bit-identical reconstruction: folds are lossy, so this only
+            // holds if the shared path reproduces the exact fold inputs
+            if att.dequant_k_full() != donor.dequant_k_full()
+                || att.dequant_v_full() != donor.dequant_v_full()
+            {
+                return Err("attached reconstruction diverges from unshared".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn refreeze_extended_base_chains() {
+        // extend an attached cache past its base and freeze THAT: the new
+        // node stitches base + private tail into one self-contained
+        // snapshot (radix-style chaining), and a borrower of the chained
+        // node reconstructs the full stream bit-identically
+        let mut g = Gen { rng: crate::util::rng::SplitMix::new(43) };
+        let hd = 2 * 32;
+        let mut root = LayerCache::new(geo(), 2, 1);
+        let ks = g.vec_normal(50 * hd, 1.0);
+        let vs = g.vec_normal(50 * hd, 1.0);
+        root.append_tokens(50, &ks, &vs);
+        let b0 = Arc::new(root.freeze_base());
+        let mut mid = LayerCache::attach(b0);
+        let ks2 = g.vec_normal(60 * hd, 1.0);
+        let vs2 = g.vec_normal(60 * hd, 1.0);
+        mid.append_tokens(60, &ks2, &vs2);
+        root.append_tokens(60, &ks2, &vs2);
+        let b1 = Arc::new(mid.freeze_base());
+        assert_eq!(b1.n_tokens(), 110);
+        let leaf = LayerCache::attach(b1);
+        assert_eq!(leaf.dequant_k_full(), root.dequant_k_full());
+        assert_eq!(leaf.dequant_v_full(), root.dequant_v_full());
+    }
+
+    #[test]
+    #[should_panic(expected = "read-only base")]
+    fn downshift_rejects_attached_cache() {
+        let mut donor = LayerCache::new(geo(), 2, 2);
+        let mut g = Gen { rng: crate::util::rng::SplitMix::new(44) };
+        let hd = 2 * 32;
+        let ks = g.vec_normal(40 * hd, 1.0);
+        let vs = g.vec_normal(40 * hd, 1.0);
+        donor.append_tokens(40, &ks, &vs);
+        let mut att = LayerCache::attach(Arc::new(donor.freeze_base()));
+        att.downshift_groups(1, 1);
     }
 }

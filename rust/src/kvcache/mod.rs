@@ -5,6 +5,6 @@ pub mod layer;
 pub mod pool;
 pub mod prefix;
 
-pub use layer::{CacheGeometry, LayerCache};
-pub use pool::{CachePool, PoolError, PoolStats, SeqCache};
+pub use layer::{CacheGeometry, LayerBase, LayerCache};
+pub use pool::{CachePool, PoolError, PoolStats, SeqBase, SeqCache};
 pub use prefix::{PrefixCache, PrefixEntry, PrefixStats};

@@ -8,9 +8,17 @@
 //! quantization win reaches the scheduler as real batch headroom. Charges
 //! settle on every `with_seq`/`with_seqs` access (growth inside the closure
 //! is metered by recomputing the resident footprint), which keeps the
-//! invariant `in_use_bytes == Σ capacity_bytes` — "pages charged == pages
-//! resident" — at all times; a proptest drives random interleavings
-//! against it. Budget *gating* happens before mutation via
+//! invariant `in_use_bytes == Σ private capacity_bytes + Σ unique shared
+//! bytes` — "pages charged == pages resident, shared pages charged once" —
+//! at all times; a proptest drives random interleavings against it.
+//!
+//! **Shared prefixes** ([`SeqBase`]): a frozen all-layer snapshot is a
+//! refcounted ledger entry charged to the budget exactly once no matter
+//! how many sequences attach it ([`CachePool::allocate_attached`] /
+//! [`CachePool::retain_shared`]); the last release frees its bytes exactly
+//! once and wakes capacity waiters. Attached sequences allocate nothing
+//! until they diverge — the first private page is the copy-on-write break,
+//! counted in `cow_breaks`. Budget *gating* happens before mutation via
 //! [`CachePool::reserve_growth`] (the engine calls it before every
 //! prefill/decode append) and the scheduler's admission estimates
 //! ([`CachePool::admit`] / [`CachePool::admit_growth`]); a failed
@@ -23,11 +31,49 @@
 //! [`CachePool::wait_for_free`] instead of sleep-polling for capacity.
 
 use std::collections::{BTreeMap, BTreeSet};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use super::layer::{CacheGeometry, LayerCache};
+use super::layer::{CacheGeometry, LayerBase, LayerCache};
 use crate::quant::QuantPolicy;
+
+/// Immutable all-layer snapshot of a shared prefix: one refcounted
+/// [`LayerBase`] per layer plus the absolute position it covers. Many
+/// sequences attach one `SeqBase` read-only; the pool charges its bytes
+/// ONCE per process regardless of how many sequences map it.
+#[derive(Debug)]
+pub struct SeqBase {
+    /// Pool-ledger identity (layer 0's `LayerBase::id` — process-unique).
+    pub id: u64,
+    pub layers: Vec<Arc<LayerBase>>,
+    /// Tokens covered (the position an attached sequence starts at).
+    pub pos: usize,
+}
+
+impl SeqBase {
+    /// Freeze `seq`'s full current state into a shareable snapshot.
+    pub fn freeze(seq: &SeqCache) -> Self {
+        assert!(!seq.layers.is_empty());
+        let layers: Vec<_> =
+            seq.layers.iter().map(|l| Arc::new(l.freeze_base())).collect();
+        Self { id: layers[0].id, layers, pos: seq.pos }
+    }
+
+    /// Total snapshot bytes (what the pool charges once).
+    pub fn bytes(&self) -> usize {
+        self.layers.iter().map(|b| b.bytes()).sum()
+    }
+
+    pub fn n_tokens(&self) -> usize {
+        self.layers.first().map_or(0, |b| b.n_tokens())
+    }
+
+    /// Per-layer (k_bits, v_bits) — the policy fingerprint an attaching
+    /// sequence must match exactly.
+    pub fn bits_key(&self) -> Vec<(u8, u8)> {
+        self.layers.iter().map(|b| (b.k_bits, b.v_bits)).collect()
+    }
+}
 
 /// All layers of one sequence's KV cache.
 #[derive(Debug, Clone)]
@@ -35,6 +81,12 @@ pub struct SeqCache {
     pub layers: Vec<LayerCache>,
     /// absolute position of the next token (tokens seen so far)
     pub pos: usize,
+    /// Shared prefix this sequence is attached to (refcounted in the pool
+    /// ledger while the sequence lives there).
+    pub base: Option<Arc<SeqBase>>,
+    /// Whether this sequence's copy-on-write break (first private page
+    /// after attach) has been counted.
+    pub cow_noted: bool,
 }
 
 impl SeqCache {
@@ -42,14 +94,26 @@ impl SeqCache {
         let layers = (0..policy.n_layers())
             .map(|i| LayerCache::new(geo, policy.k_bits[i], policy.v_bits[i]))
             .collect();
-        Self { layers, pos: 0 }
+        Self { layers, pos: 0, base: None, cow_noted: false }
+    }
+
+    /// Build a sequence mapping `base` read-only: zero bytes are copied
+    /// and zero private pages allocated until the sequence diverges.
+    pub fn attach(base: &Arc<SeqBase>) -> Self {
+        let layers = base
+            .layers
+            .iter()
+            .map(|b| LayerCache::attach(b.clone()))
+            .collect();
+        Self { layers, pos: base.pos, base: Some(base.clone()), cow_noted: false }
     }
 
     pub fn used_bytes(&self) -> usize {
         self.layers.iter().map(|l| l.used_bytes()).sum()
     }
 
-    /// Resident allocation footprint (pages allocated so far).
+    /// Resident PRIVATE allocation footprint (pages this sequence owns;
+    /// an attached shared base is charged separately, once, by the pool).
     pub fn capacity_bytes(&self) -> usize {
         self.layers.iter().map(|l| l.capacity_bytes()).sum()
     }
@@ -120,6 +184,18 @@ struct PoolInner {
     /// Bumped on every release and by `notify_free`; lets a waiter detect
     /// frees that happened between observing the pool and blocking.
     free_epoch: u64,
+    /// Shared-segment ledger: base id → (refcount, bytes). Bytes enter
+    /// `in_use` exactly once on the 0→1 retain and leave exactly once on
+    /// the →0 release, independent of how many sequences map the base.
+    shared: BTreeMap<u64, (usize, usize)>,
+    /// Σ unique shared bytes currently charged (subset of `in_use`).
+    shared_bytes: usize,
+    /// Cumulative bytes NOT charged because a retain found the base
+    /// already resident (the density win of sharing).
+    shared_bytes_saved: u64,
+    /// Copy-on-write breaks: attached sequences that allocated their
+    /// first private page (diverged from the shared prefix).
+    cow_breaks: u64,
 }
 
 impl PoolInner {
@@ -143,6 +219,60 @@ impl PoolInner {
             false
         }
     }
+
+    /// Take one reference on shared base `id` (`bytes` = its charge).
+    /// The 0→1 transition is budget-gated and charges `in_use`.
+    fn retain_shared(
+        &mut self,
+        id: u64,
+        bytes: usize,
+        budget: usize,
+    ) -> Result<(), PoolError> {
+        match self.shared.get_mut(&id) {
+            Some(e) => {
+                e.0 += 1;
+                self.shared_bytes_saved += bytes as u64;
+            }
+            None => {
+                if self.in_use + bytes > budget {
+                    return Err(PoolError::BudgetExceeded {
+                        requested: bytes,
+                        in_use: self.in_use,
+                        budget,
+                    });
+                }
+                self.in_use += bytes;
+                self.peak = self.peak.max(self.in_use);
+                self.shared_bytes += bytes;
+                if bytes > 0 {
+                    self.page_allocs += 1;
+                    self.page_alloc_bytes += bytes as u64;
+                }
+                self.shared.insert(id, (1, bytes));
+            }
+        }
+        Ok(())
+    }
+
+    /// Drop one reference on shared base `id`; on →0 the entry's bytes are
+    /// released exactly once. Returns the bytes released (0 while other
+    /// references remain).
+    fn release_shared(&mut self, id: u64) -> usize {
+        let e = self.shared.get_mut(&id).expect("release of unknown shared base");
+        e.0 -= 1;
+        if e.0 > 0 {
+            return 0;
+        }
+        let bytes = e.1;
+        self.shared.remove(&id);
+        self.in_use -= bytes;
+        self.shared_bytes -= bytes;
+        if bytes > 0 {
+            self.page_free_bytes += bytes as u64;
+            self.free_epoch += 1;
+        }
+        bytes
+    }
 }
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -164,6 +294,14 @@ pub struct PoolStats {
     pub page_alloc_bytes: u64,
     /// Cumulative bytes released.
     pub page_free_bytes: u64,
+    /// Live shared prefix segments (unique bases in the ledger).
+    pub shared_segs: usize,
+    /// Unique shared bytes currently charged (subset of `in_use_bytes`).
+    pub shared_bytes: usize,
+    /// Cumulative bytes avoided by attaching already-resident bases.
+    pub shared_bytes_saved: u64,
+    /// Attached sequences that diverged (allocated a first private page).
+    pub cow_breaks: u64,
 }
 
 impl CachePool {
@@ -183,6 +321,10 @@ impl CachePool {
                 page_alloc_bytes: 0,
                 page_free_bytes: 0,
                 free_epoch: 0,
+                shared: BTreeMap::new(),
+                shared_bytes: 0,
+                shared_bytes_saved: 0,
+                cow_breaks: 0,
             }),
             free_cv: Condvar::new(),
         }
@@ -219,8 +361,142 @@ impl CachePool {
         Ok(id)
     }
 
+    /// Allocate a sequence ATTACHED to a shared base: the base takes one
+    /// ledger reference (charged once, on its first retain anywhere) and
+    /// the sequence itself starts with zero private pages — it is charged
+    /// only as it diverges (copy-on-write).
+    pub fn allocate_attached(&self, base: &Arc<SeqBase>) -> Result<u64, PoolError> {
+        let cache = SeqCache::attach(base);
+        let cap = cache.capacity_bytes();
+        debug_assert_eq!(cap, 0, "attach must allocate no private pages");
+        let mut inner = self.inner.lock().unwrap();
+        inner.retain_shared(base.id, base.bytes(), self.budget_bytes)?;
+        let id = inner.next_id;
+        inner.next_id += 1;
+        inner.in_use += cap;
+        inner.total_allocs += 1;
+        inner.seqs.insert(id, cache);
+        Ok(id)
+    }
+
+    /// Re-point an EXISTING sequence at a shared base (the prefix-cache
+    /// restore path): its private pages are released, its previous base
+    /// reference (if any) dropped, and one reference taken on `base` — all
+    /// atomically, gated on the NET budget change (a non-resident base is
+    /// charged, minus the pages this restore frees).
+    pub fn attach_base(&self, id: u64, base: &Arc<SeqBase>) -> Result<(), PoolError> {
+        let mut inner = self.inner.lock().unwrap();
+        let cache = inner.seqs.get(&id).ok_or(PoolError::UnknownSeq(id))?;
+        let cap = cache.capacity_bytes();
+        let old_base = cache.base.clone();
+        if !inner.shared.contains_key(&base.id)
+            && inner.in_use + base.bytes() > self.budget_bytes + cap
+        {
+            return Err(PoolError::BudgetExceeded {
+                requested: base.bytes().saturating_sub(cap),
+                in_use: inner.in_use,
+                budget: self.budget_bytes,
+            });
+        }
+        inner
+            .retain_shared(base.id, base.bytes(), usize::MAX)
+            .expect("gated above");
+        inner.seqs.insert(id, SeqCache::attach(base));
+        inner.in_use -= cap;
+        let mut released = cap;
+        if cap > 0 {
+            inner.page_free_bytes += cap as u64;
+        }
+        if let Some(ob) = old_base {
+            released += inner.release_shared(ob.id);
+        }
+        if released > 0 {
+            inner.free_epoch += 1;
+            drop(inner);
+            self.free_cv.notify_all();
+        }
+        Ok(())
+    }
+
+    /// Freeze a live sequence's full state into a shared base and re-point
+    /// the sequence at it: its private pages convert into the (compacted)
+    /// shared charge, its logical state is unchanged, and the returned base
+    /// can be attached by any number of new sequences. An undiverged
+    /// attached sequence short-circuits to its existing base (no copy).
+    pub fn share_seq(&self, id: u64) -> Result<Arc<SeqBase>, PoolError> {
+        let mut inner = self.inner.lock().unwrap();
+        let cache = inner.seqs.get(&id).ok_or(PoolError::UnknownSeq(id))?;
+        if cache.capacity_bytes() == 0 {
+            if let Some(b) = cache.base.clone() {
+                return Ok(b);
+            }
+        }
+        let base = Arc::new(SeqBase::freeze(cache));
+        let bb = base.bytes();
+        let cap = cache.capacity_bytes();
+        let old_base = cache.base.clone();
+        // net gate: the private pages convert into the shared charge
+        if inner.in_use + bb > self.budget_bytes + cap {
+            return Err(PoolError::BudgetExceeded {
+                requested: bb.saturating_sub(cap),
+                in_use: inner.in_use,
+                budget: self.budget_bytes,
+            });
+        }
+        inner
+            .retain_shared(base.id, bb, usize::MAX)
+            .expect("gated above");
+        inner.seqs.insert(id, SeqCache::attach(&base));
+        inner.in_use -= cap;
+        let mut released = cap;
+        if cap > 0 {
+            inner.page_free_bytes += cap as u64;
+        }
+        if let Some(ob) = old_base {
+            released += inner.release_shared(ob.id);
+        }
+        if released > 0 {
+            inner.free_epoch += 1;
+            drop(inner);
+            self.free_cv.notify_all();
+        }
+        Ok(base)
+    }
+
+    /// Take a standalone reference on a shared base (a registered/pinned
+    /// prefix holds one so its pages survive with no sequences attached).
+    /// The first retain anywhere is budget-gated and charges the pool.
+    pub fn retain_shared(&self, base: &Arc<SeqBase>) -> Result<(), PoolError> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.retain_shared(base.id, base.bytes(), self.budget_bytes)
+    }
+
+    /// Drop a standalone shared-base reference. The last release (counting
+    /// attached sequences) frees the base's bytes exactly once and wakes
+    /// capacity waiters.
+    pub fn release_shared(&self, base_id: u64) -> Result<(), PoolError> {
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.shared.contains_key(&base_id) {
+            return Err(PoolError::UnknownSeq(base_id));
+        }
+        let released = inner.release_shared(base_id);
+        if released > 0 {
+            drop(inner);
+            self.free_cv.notify_all();
+        }
+        Ok(())
+    }
+
+    /// Current ledger refcount of a shared base (0 = not resident).
+    pub fn shared_refs(&self, base_id: u64) -> usize {
+        let inner = self.inner.lock().unwrap();
+        inner.shared.get(&base_id).map_or(0, |e| e.0)
+    }
+
     /// Free a sequence's cache. Pinned sequences are refused — unpin first.
-    /// Wakes capacity waiters.
+    /// An attached sequence drops its shared-base reference (the base's
+    /// bytes are freed only when the LAST reference goes). Wakes capacity
+    /// waiters.
     pub fn free(&self, id: u64) -> Result<(), PoolError> {
         let mut inner = self.inner.lock().unwrap();
         if !inner.seqs.contains_key(&id) {
@@ -234,9 +510,13 @@ impl CachePool {
         inner.in_use -= cap;
         inner.page_free_bytes += cap as u64;
         inner.total_frees += 1;
+        let mut released = cap;
+        if let Some(base) = cache.base.as_ref() {
+            released += inner.release_shared(base.id);
+        }
         // only a real byte release advances the epoch — freeing an empty
         // cache changes nothing a capacity waiter could use
-        if cap > 0 {
+        if released > 0 {
             inner.free_epoch += 1;
             drop(inner);
             self.free_cv.notify_all();
@@ -272,13 +552,20 @@ impl CachePool {
         f: impl FnOnce(&mut SeqCache) -> R,
     ) -> Result<R, PoolError> {
         let mut inner = self.inner.lock().unwrap();
-        let (r, before, after) = {
+        let (r, before, after, cow) = {
             let cache = inner.seqs.get_mut(&id).ok_or(PoolError::UnknownSeq(id))?;
             let before = cache.capacity_bytes();
             let r = f(cache);
             let after = cache.capacity_bytes();
-            (r, before, after)
+            let cow = cache.base.is_some() && !cache.cow_noted && after > 0;
+            if cow {
+                cache.cow_noted = true;
+            }
+            (r, before, after, cow)
         };
+        if cow {
+            inner.cow_breaks += 1;
+        }
         let released = inner.settle(before, after);
         drop(inner);
         if released {
@@ -313,7 +600,15 @@ impl CachePool {
         let before: usize = borrows.iter().map(|c| c.capacity_bytes()).sum();
         let r = f(&mut borrows);
         let after: usize = borrows.iter().map(|c| c.capacity_bytes()).sum();
+        let mut cows = 0u64;
+        for c in borrows.iter_mut() {
+            if c.base.is_some() && !c.cow_noted && c.capacity_bytes() > 0 {
+                c.cow_noted = true;
+                cows += 1;
+            }
+        }
         drop(borrows);
+        inner_ref.cow_breaks += cows;
         let released = inner_ref.settle(before, after);
         drop(inner);
         if released {
@@ -416,6 +711,33 @@ impl CachePool {
         self.reserve_growth(&[id], &[count])
     }
 
+    /// Admission gate for a sequence that will ATTACH `base` and then grow
+    /// by `new_tokens` private tokens: the projected footprint is NET of
+    /// the shared pages — only the private tail, plus the base's bytes
+    /// when (and only when) the base is not already resident.
+    pub fn admit_attached(
+        &self,
+        base: &Arc<SeqBase>,
+        new_tokens: usize,
+    ) -> Result<(), PoolError> {
+        let probe = SeqCache::attach(base); // copies nothing (Arc views)
+        let grow = probe.growth_bytes_for(new_tokens);
+        let inner = self.inner.lock().unwrap();
+        let base_charge = if inner.shared.contains_key(&base.id) {
+            0
+        } else {
+            base.bytes()
+        };
+        if inner.in_use + base_charge + grow > self.budget_bytes {
+            return Err(PoolError::BudgetExceeded {
+                requested: base_charge + grow,
+                in_use: inner.in_use,
+                budget: self.budget_bytes,
+            });
+        }
+        Ok(())
+    }
+
     /// Whether `bytes` additional resident bytes fit the budget right now
     /// (prefix-cache restore gate).
     pub fn has_headroom(&self, bytes: usize) -> bool {
@@ -475,6 +797,10 @@ impl CachePool {
             page_allocs: inner.page_allocs,
             page_alloc_bytes: inner.page_alloc_bytes,
             page_free_bytes: inner.page_free_bytes,
+            shared_segs: inner.shared.len(),
+            shared_bytes: inner.shared_bytes,
+            shared_bytes_saved: inner.shared_bytes_saved,
+            cow_breaks: inner.cow_breaks,
         }
     }
 }
@@ -766,6 +1092,194 @@ mod tests {
                 }
                 if s.peak_bytes < s.in_use_bytes {
                     return Err("peak below in_use".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Build a frozen shared base with `n` tokens under `p`.
+    fn mk_base(p: &QuantPolicy, n: usize) -> Arc<SeqBase> {
+        let mut donor = SeqCache::new(geo(), p);
+        let hd = 2 * 32;
+        for layer in &mut donor.layers {
+            for _ in 0..n {
+                layer.append_token(&vec![1.0; hd], &vec![1.0; hd]);
+            }
+        }
+        donor.pos = n;
+        Arc::new(SeqBase::freeze(&donor))
+    }
+
+    #[test]
+    fn shared_base_charged_once_and_freed_once() {
+        let pool = CachePool::new(geo(), usize::MAX);
+        let p = QuantPolicy::kivi(2, 1);
+        let base = mk_base(&p, 70);
+        let bb = base.bytes();
+        assert!(bb > 0);
+        // three borrowers: the base is charged exactly once
+        let a = pool.allocate_attached(&base).unwrap();
+        let b = pool.allocate_attached(&base).unwrap();
+        let c = pool.allocate_attached(&base).unwrap();
+        let s = pool.stats();
+        assert_eq!(s.in_use_bytes, bb, "3 borrowers, one charge");
+        assert_eq!(s.shared_segs, 1);
+        assert_eq!(s.shared_bytes, bb);
+        assert_eq!(s.shared_bytes_saved, 2 * bb as u64, "2nd+3rd retains saved");
+        assert_eq!(pool.shared_refs(base.id), 3);
+        assert_eq!(s.cow_breaks, 0);
+        // divergence: borrower `a` grows a private tail → CoW break + only
+        // private pages charged on top of the single shared charge
+        append_n(&pool, a, 10);
+        let priv_a = pool.with_seq(a, |s| s.capacity_bytes()).unwrap();
+        assert!(priv_a > 0);
+        let s = pool.stats();
+        assert_eq!(s.in_use_bytes, bb + priv_a);
+        assert_eq!(s.cow_breaks, 1);
+        append_n(&pool, a, 5); // still one break per sequence
+        assert_eq!(pool.stats().cow_breaks, 1);
+        // frees: the base's bytes leave exactly once, on the LAST release
+        pool.free(a).unwrap();
+        pool.free(b).unwrap();
+        let s = pool.stats();
+        assert_eq!(s.shared_segs, 1, "still referenced by c");
+        assert_eq!(pool.shared_refs(base.id), 1);
+        pool.free(c).unwrap();
+        let s = pool.stats();
+        assert_eq!(s.in_use_bytes, 0);
+        assert_eq!(s.shared_segs, 0);
+        assert_eq!(s.shared_bytes, 0);
+        assert_eq!(pool.shared_refs(base.id), 0);
+        assert_eq!(s.page_alloc_bytes - s.page_free_bytes, 0);
+    }
+
+    #[test]
+    fn attached_admission_is_net_of_resident_base() {
+        let p = QuantPolicy::kivi(2, 1);
+        let base = mk_base(&p, 70);
+        let bb = base.bytes();
+        // budget: exactly one base + a little private headroom
+        let probe = SeqCache::attach(&base);
+        let grow_10 = probe.growth_bytes_for(10);
+        let pool = CachePool::new(geo(), bb + 2 * grow_10);
+        // not resident yet: admission must charge the base
+        assert!(pool.admit_attached(&base, 10).is_ok());
+        let a = pool.allocate_attached(&base).unwrap();
+        append_n(&pool, a, 10);
+        // resident now: a second borrower is admitted NET of the base even
+        // though a fresh unshared sequence of the same length would not fit
+        assert!(pool.admit(&p, base.n_tokens() + 10).is_err());
+        assert!(pool.admit_attached(&base, 10).is_ok());
+        let b = pool.allocate_attached(&base).unwrap();
+        append_n(&pool, b, 10);
+        assert_eq!(pool.stats().in_use_bytes, bb + 2 * grow_10);
+        // a standalone (registered-prefix) reference keeps pages resident
+        // after all sequences leave
+        pool.retain_shared(&base).unwrap();
+        pool.free(a).unwrap();
+        pool.free(b).unwrap();
+        assert_eq!(pool.stats().shared_bytes, bb);
+        pool.release_shared(base.id).unwrap();
+        assert_eq!(pool.stats().in_use_bytes, 0);
+        assert!(pool.release_shared(base.id).is_err(), "double release refused");
+    }
+
+    #[test]
+    fn shared_refcount_invariants_prop() {
+        // random interleavings of attach / grow / standalone retain /
+        // release / free over several bases: after EVERY op the pool charge
+        // must equal Σ private capacity + Σ unique resident base bytes, and
+        // drop-to-zero must free a base's bytes exactly once.
+        use crate::util::prop::{check, Gen};
+        check("pool_shared_refcounts", 15, |g: &mut Gen| {
+            let pool = CachePool::new(geo(), usize::MAX);
+            let bases = [
+                mk_base(&QuantPolicy::kivi(2, 1), 40),
+                mk_base(&QuantPolicy::kivi(2, 2), 70),
+                mk_base(&QuantPolicy::float32(2), 33),
+            ];
+            let mut live: Vec<(u64, usize)> = Vec::new(); // (seq id, base idx)
+            let mut standalone: Vec<usize> = Vec::new(); // base idx per retain
+            for _ in 0..g.usize_in(8, 30) {
+                match g.usize_in(0, 4) {
+                    0 => {
+                        let bi = g.usize_in(0, bases.len() - 1);
+                        let id = pool.allocate_attached(&bases[bi]).unwrap();
+                        live.push((id, bi));
+                    }
+                    1 if !live.is_empty() => {
+                        // diverge a random borrower by a small private tail
+                        let (id, _) = *g.pick(&live);
+                        let n = g.usize_in(1, 20);
+                        let fits = pool
+                            .with_seq(id, |s| s.pos + n <= 128 + 64)
+                            .unwrap();
+                        if fits {
+                            append_n(&pool, id, n);
+                        }
+                    }
+                    2 => {
+                        let bi = g.usize_in(0, bases.len() - 1);
+                        pool.retain_shared(&bases[bi]).unwrap();
+                        standalone.push(bi);
+                    }
+                    3 if !standalone.is_empty() => {
+                        let i = g.usize_in(0, standalone.len() - 1);
+                        let bi = standalone.swap_remove(i);
+                        pool.release_shared(bases[bi].id).unwrap();
+                    }
+                    _ if !live.is_empty() => {
+                        let i = g.usize_in(0, live.len() - 1);
+                        let (id, _) = live.swap_remove(i);
+                        pool.free(id).unwrap();
+                    }
+                    _ => {}
+                }
+                let s = pool.stats();
+                let private: usize = live
+                    .iter()
+                    .map(|&(id, _)| pool.with_seq(id, |c| c.capacity_bytes()).unwrap())
+                    .sum();
+                // unique resident bases = referenced by a live seq OR a
+                // standalone retain
+                let resident_shared: usize = bases
+                    .iter()
+                    .enumerate()
+                    .filter(|(bi, _)| {
+                        live.iter().any(|&(_, b)| b == *bi)
+                            || standalone.contains(bi)
+                    })
+                    .map(|(_, b)| b.bytes())
+                    .sum();
+                if s.in_use_bytes != private + resident_shared {
+                    return Err(format!(
+                        "charged {} != private {private} + shared {resident_shared}",
+                        s.in_use_bytes
+                    ));
+                }
+                if s.shared_bytes != resident_shared {
+                    return Err(format!(
+                        "shared_bytes {} != resident {resident_shared}",
+                        s.shared_bytes
+                    ));
+                }
+                if s.page_alloc_bytes - s.page_free_bytes != s.in_use_bytes as u64 {
+                    return Err(format!(
+                        "page ledger off: +{} -{} vs in_use {}",
+                        s.page_alloc_bytes, s.page_free_bytes, s.in_use_bytes
+                    ));
+                }
+                // expected refcounts per base
+                for (bi, b) in bases.iter().enumerate() {
+                    let want = live.iter().filter(|&&(_, x)| x == bi).count()
+                        + standalone.iter().filter(|&&x| x == bi).count();
+                    if pool.shared_refs(b.id) != want {
+                        return Err(format!(
+                            "base {bi}: refs {} != expected {want}",
+                            pool.shared_refs(b.id)
+                        ));
+                    }
                 }
             }
             Ok(())

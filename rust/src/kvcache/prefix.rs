@@ -1,41 +1,163 @@
 //! Prefix cache: reuse prefilled (possibly quantized) KV state across
 //! requests that share a prompt prefix — the KV-cache-reuse optimization
-//! every production server ships (vLLM "automatic prefix caching"),
-//! here operating directly on AsymKV's bit-packed caches: a snapshot stores
-//! the packed groups + scales/zeros + fp residual ring as-is, so restoring
-//! costs one memcpy per tensor and no requantization.
+//! every production server ships (vLLM "automatic prefix caching"), here
+//! operating directly on AsymKV's bit-packed caches.
 //!
-//! Snapshots are keyed by (policy name, full prompt tokens); a lookup
-//! returns the LONGEST entry whose tokens are a prefix of the new prompt.
-//! Entries carry the last-position logits so an exact-match request skips
-//! prefill entirely. Byte-budgeted with LRU eviction.
+//! Entries hold a frozen [`SeqBase`] (an `Arc`-shared all-layer snapshot):
+//! a hit ATTACHES the snapshot read-only instead of memcpy'ing it into the
+//! borrower, so restore costs zero bytes and N concurrent borrowers pin
+//! one copy of the prefix pages (see `pool.rs` for the refcounted charge
+//! and copy-on-write accounting). Last-position logits ride along behind
+//! an `Arc` so exact-hit requests skip prefill without a vocab-sized copy.
+//!
+//! Lookups are keyed by (policy fingerprint, token path) and indexed by a
+//! **first-group hash**: an entry is bucketed under the hash of its first
+//! `FG` tokens (its whole path when shorter), so a lookup probes one
+//! bucket for every long candidate plus at most `FG` short buckets,
+//! instead of linearly rescanning every entry's full token vector. The
+//! longest stored prefix of the prompt wins.
+//!
+//! Anonymous entries (auto-snapshotted after prefill) are byte-budgeted
+//! with LRU eviction. **Named** entries — registered through the v3
+//! `prefix_register` op — are pinned: exempt from the budget and from
+//! eviction (their pages are charged to the POOL via a standalone shared
+//! reference their owner holds), released only by `prefix_release`.
 
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-use super::pool::SeqCache;
+use super::pool::SeqBase;
+
+/// First-group width of the lookup index: entries are bucketed by the hash
+/// of their first `FG` tokens (matches the packed-group size the caches
+/// quantize at, so "same first group" ≈ "same first packed page").
+const FG: usize = 32;
+
+fn fg_hash(policy: &str, toks: &[i32]) -> u64 {
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    policy.hash(&mut h);
+    toks.hash(&mut h);
+    h.finish()
+}
 
 pub struct PrefixEntry {
     pub policy: String,
     pub tokens: Vec<i32>,
-    pub cache: SeqCache,
-    /// logits at the last prompt position (exact-hit fast path)
-    pub last_logits: Vec<f32>,
+    /// Frozen, immutable KV snapshot; borrowers attach it zero-copy.
+    pub base: Arc<SeqBase>,
+    /// Logits at the last prompt position (exact-hit fast path) — shared,
+    /// never deep-copied per hit.
+    pub last_logits: Arc<Vec<f32>>,
+    /// Pin name (`prefix_register`); `Some` exempts the entry from LRU
+    /// eviction and the byte budget.
+    pub name: Option<String>,
+    /// Times this entry seeded a request (lookup hits + named attaches).
+    uses: AtomicU64,
+    /// LRU recency stamp (cache-internal tick).
+    last_used: AtomicU64,
 }
 
-/// Resident bytes one entry pins: the snapshot's allocated pages (demand
-/// paging means a snapshot stores exactly the pages its prompt grew), the
-/// key tokens, AND the vocab-sized logits row — omitting the logits used
-/// to let the cache blow past its byte budget by `4·vocab` per entry.
+impl PrefixEntry {
+    pub fn new(
+        policy: String,
+        tokens: Vec<i32>,
+        base: Arc<SeqBase>,
+        last_logits: Arc<Vec<f32>>,
+    ) -> Self {
+        Self {
+            policy,
+            tokens,
+            base,
+            last_logits,
+            name: None,
+            uses: AtomicU64::new(0),
+            last_used: AtomicU64::new(0),
+        }
+    }
+
+    pub fn named(
+        name: String,
+        policy: String,
+        tokens: Vec<i32>,
+        base: Arc<SeqBase>,
+        last_logits: Arc<Vec<f32>>,
+    ) -> Self {
+        Self { name: Some(name), ..Self::new(policy, tokens, base, last_logits) }
+    }
+
+    pub fn is_pinned(&self) -> bool {
+        self.name.is_some()
+    }
+
+    pub fn uses(&self) -> u64 {
+        self.uses.load(Ordering::Relaxed)
+    }
+
+    fn bucket_key(&self) -> u64 {
+        fg_hash(&self.policy, &self.tokens[..self.tokens.len().min(FG)])
+    }
+}
+
+/// Resident bytes one anonymous entry pins: the snapshot's buffers (frozen
+/// snapshots store exactly the state their prompt grew), the key tokens,
+/// AND the vocab-sized logits row — omitting the logits used to let the
+/// cache blow past its byte budget by `4·vocab` per entry.
 fn entry_bytes(e: &PrefixEntry) -> usize {
-    e.cache.capacity_bytes() + e.tokens.len() * 4 + e.last_logits.len() * 4
+    e.base.bytes() + e.tokens.len() * 4 + e.last_logits.len() * 4
 }
 
 struct Inner {
-    /// most-recently-used last
-    entries: Vec<Arc<PrefixEntry>>,
+    /// first-group hash → entries sharing that leading token group
+    buckets: HashMap<u64, Vec<Arc<PrefixEntry>>>,
+    /// registered (pinned) entries by name; each is also in `buckets` so
+    /// anonymous prefix lookups hit it too
+    named: HashMap<String, Arc<PrefixEntry>>,
+    /// Σ entry_bytes over UNPINNED entries (the budgeted population)
     used_bytes: usize,
     hits: u64,
     misses: u64,
+    tick: u64,
+}
+
+impl Inner {
+    fn touch(&mut self, e: &Arc<PrefixEntry>) {
+        self.tick += 1;
+        e.last_used.store(self.tick, Ordering::Relaxed);
+        e.uses.fetch_add(1, Ordering::Relaxed);
+        self.hits += 1;
+    }
+
+    fn remove_entry(&mut self, victim: &Arc<PrefixEntry>) {
+        let key = victim.bucket_key();
+        if let Some(bucket) = self.buckets.get_mut(&key) {
+            bucket.retain(|e| !Arc::ptr_eq(e, victim));
+            if bucket.is_empty() {
+                self.buckets.remove(&key);
+            }
+        }
+    }
+
+    /// Evict the least-recently-used UNPINNED entry. False when none left.
+    fn evict_lru(&mut self) -> bool {
+        let mut victim: Option<(Arc<PrefixEntry>, u64)> = None;
+        for bucket in self.buckets.values() {
+            for e in bucket {
+                if e.is_pinned() {
+                    continue;
+                }
+                let lu = e.last_used.load(Ordering::Relaxed);
+                if victim.as_ref().is_none_or(|(_, v)| lu < *v) {
+                    victim = Some((e.clone(), lu));
+                }
+            }
+        }
+        let Some((victim, _)) = victim else { return false };
+        self.used_bytes -= entry_bytes(&victim);
+        self.remove_entry(&victim);
+        true
+    }
 }
 
 pub struct PrefixCache {
@@ -46,6 +168,8 @@ pub struct PrefixCache {
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PrefixStats {
     pub entries: usize,
+    /// Registered (pinned) entries — subset of `entries`.
+    pub named: usize,
     pub used_bytes: usize,
     pub hits: u64,
     pub misses: u64,
@@ -56,32 +180,58 @@ impl PrefixCache {
         Self {
             budget_bytes,
             inner: Mutex::new(Inner {
-                entries: Vec::new(),
+                buckets: HashMap::new(),
+                named: HashMap::new(),
                 used_bytes: 0,
                 hits: 0,
                 misses: 0,
+                tick: 0,
             }),
         }
     }
 
-    /// Longest stored prefix of `prompt` under `policy` (and bumps LRU).
+    /// Longest stored prefix of `prompt` under `policy` (bumps LRU + use
+    /// counts). Probes the full-first-group bucket for long candidates,
+    /// then (only if none matched) the at-most-`FG` short buckets, longest
+    /// first — any long match beats every possible short one.
     pub fn lookup(&self, policy: &str, prompt: &[i32]) -> Option<Arc<PrefixEntry>> {
         let mut inner = self.inner.lock().unwrap();
-        let mut best: Option<usize> = None;
-        for (i, e) in inner.entries.iter().enumerate() {
-            if e.policy == policy
-                && e.tokens.len() <= prompt.len()
-                && prompt[..e.tokens.len()] == e.tokens[..]
-                && best.is_none_or(|b| inner.entries[b].tokens.len() < e.tokens.len())
-            {
-                best = Some(i);
+        let mut best: Option<Arc<PrefixEntry>> = None;
+        if prompt.len() >= FG {
+            if let Some(bucket) = inner.buckets.get(&fg_hash(policy, &prompt[..FG])) {
+                for e in bucket {
+                    if e.policy == policy
+                        && e.tokens.len() <= prompt.len()
+                        && prompt[..e.tokens.len()] == e.tokens[..]
+                        && best
+                            .as_ref()
+                            .is_none_or(|b| b.tokens.len() < e.tokens.len())
+                    {
+                        best = Some(e.clone());
+                    }
+                }
+            }
+        }
+        if best.is_none() {
+            let kmax = prompt.len().min(FG - 1);
+            for k in (0..=kmax).rev() {
+                let Some(bucket) = inner.buckets.get(&fg_hash(policy, &prompt[..k]))
+                else {
+                    continue;
+                };
+                if let Some(e) = bucket.iter().find(|e| {
+                    e.policy == policy
+                        && e.tokens.len() == k
+                        && e.tokens[..] == prompt[..k]
+                }) {
+                    best = Some(e.clone());
+                    break;
+                }
             }
         }
         match best {
-            Some(i) => {
-                let e = inner.entries.remove(i);
-                inner.entries.push(e.clone()); // MRU
-                inner.hits += 1;
+            Some(e) => {
+                inner.touch(&e);
                 Some(e)
             }
             None => {
@@ -91,34 +241,103 @@ impl PrefixCache {
         }
     }
 
-    /// Store a snapshot (evicting LRU entries to honour the byte budget).
-    /// Duplicate (policy, tokens) keys replace the old entry.
+    /// Store an anonymous snapshot (evicting LRU unpinned entries to honour
+    /// the byte budget). Duplicate (policy, tokens) keys replace the old
+    /// entry — unless the incumbent is pinned, which already serves the key.
     pub fn insert(&self, entry: PrefixEntry) {
+        debug_assert!(entry.name.is_none(), "use register() for named prefixes");
         let bytes = entry_bytes(&entry);
         if bytes > self.budget_bytes {
             return; // would never fit
         }
         let mut inner = self.inner.lock().unwrap();
-        if let Some(i) = inner
-            .entries
-            .iter()
-            .position(|e| e.policy == entry.policy && e.tokens == entry.tokens)
-        {
-            let old = inner.entries.remove(i);
-            inner.used_bytes -= entry_bytes(&old);
+        let key = entry.bucket_key();
+        if let Some(bucket) = inner.buckets.get_mut(&key) {
+            if let Some(i) = bucket
+                .iter()
+                .position(|e| e.policy == entry.policy && e.tokens == entry.tokens)
+            {
+                if bucket[i].is_pinned() {
+                    return;
+                }
+                let old = bucket.remove(i);
+                inner.used_bytes -= entry_bytes(&old);
+            }
         }
-        while inner.used_bytes + bytes > self.budget_bytes && !inner.entries.is_empty() {
-            let old = inner.entries.remove(0);
-            inner.used_bytes -= entry_bytes(&old);
+        while inner.used_bytes + bytes > self.budget_bytes {
+            if !inner.evict_lru() {
+                break;
+            }
         }
+        inner.tick += 1;
+        let e = Arc::new(entry);
+        e.last_used.store(inner.tick, Ordering::Relaxed);
         inner.used_bytes += bytes;
-        inner.entries.push(Arc::new(entry));
+        inner.buckets.entry(key).or_default().push(e);
+    }
+
+    /// Register a pinned, named prefix. Replaces any existing registration
+    /// of the same name and subsumes an anonymous duplicate of its (policy,
+    /// tokens). Returns the stored entry plus the displaced registration
+    /// (whose owner must drop its pool reference).
+    pub fn register(
+        &self,
+        entry: PrefixEntry,
+    ) -> (Arc<PrefixEntry>, Option<Arc<PrefixEntry>>) {
+        let name = entry.name.clone().expect("register() needs a named entry");
+        let mut inner = self.inner.lock().unwrap();
+        let displaced = inner.named.remove(&name);
+        if let Some(old) = displaced.as_ref() {
+            inner.remove_entry(old);
+        }
+        let key = entry.bucket_key();
+        if let Some(bucket) = inner.buckets.get_mut(&key) {
+            if let Some(i) = bucket.iter().position(|e| {
+                !e.is_pinned() && e.policy == entry.policy && e.tokens == entry.tokens
+            }) {
+                let old = bucket.remove(i);
+                inner.used_bytes -= entry_bytes(&old);
+            }
+        }
+        inner.tick += 1;
+        let e = Arc::new(entry);
+        e.last_used.store(inner.tick, Ordering::Relaxed);
+        inner.buckets.entry(key).or_default().push(e.clone());
+        inner.named.insert(name, e.clone());
+        (e, displaced)
+    }
+
+    /// Drop a registration; the caller releases the pool reference it holds
+    /// for the returned entry. `None` if the name is unknown.
+    pub fn release(&self, name: &str) -> Option<Arc<PrefixEntry>> {
+        let mut inner = self.inner.lock().unwrap();
+        let old = inner.named.remove(name)?;
+        inner.remove_entry(&old);
+        Some(old)
+    }
+
+    /// Resolve a registered prefix by name (bumps use counts — callers
+    /// attach the result).
+    pub fn get_named(&self, name: &str) -> Option<Arc<PrefixEntry>> {
+        let mut inner = self.inner.lock().unwrap();
+        let e = inner.named.get(name)?.clone();
+        inner.touch(&e);
+        Some(e)
+    }
+
+    /// Registered prefixes, name-sorted (the `prefixes` listing op).
+    pub fn list_named(&self) -> Vec<Arc<PrefixEntry>> {
+        let inner = self.inner.lock().unwrap();
+        let mut v: Vec<_> = inner.named.values().cloned().collect();
+        v.sort_by(|a, b| a.name.cmp(&b.name));
+        v
     }
 
     pub fn stats(&self) -> PrefixStats {
         let inner = self.inner.lock().unwrap();
         PrefixStats {
-            entries: inner.entries.len(),
+            entries: inner.buckets.values().map(|b| b.len()).sum(),
+            named: inner.named.len(),
             used_bytes: inner.used_bytes,
             hits: inner.hits,
             misses: inner.misses,
@@ -130,19 +349,28 @@ impl PrefixCache {
 mod tests {
     use super::*;
     use crate::kvcache::layer::CacheGeometry;
+    use crate::kvcache::pool::SeqCache;
     use crate::quant::QuantPolicy;
 
     fn geo() -> CacheGeometry {
         CacheGeometry { n_heads: 1, max_ctx: 64, d_head: 32, group: 32, residual: 32 }
     }
 
-    fn entry(policy: &str, tokens: Vec<i32>) -> PrefixEntry {
-        PrefixEntry {
-            policy: policy.into(),
-            tokens,
-            cache: SeqCache::new(geo(), &QuantPolicy::kivi(1, 2)),
-            last_logits: vec![0.0; 4],
+    /// Frozen n-token base under the 1-layer kivi(1,2) test policy.
+    fn base_n(n: usize) -> Arc<SeqBase> {
+        let mut donor = SeqCache::new(geo(), &QuantPolicy::kivi(1, 2));
+        for layer in &mut donor.layers {
+            for _ in 0..n {
+                layer.append_token(&vec![1.0; 32], &vec![1.0; 32]);
+            }
         }
+        donor.pos = n;
+        Arc::new(SeqBase::freeze(&donor))
+    }
+
+    fn entry(policy: &str, tokens: Vec<i32>) -> PrefixEntry {
+        let base = base_n(tokens.len());
+        PrefixEntry::new(policy.into(), tokens, base, Arc::new(vec![0.0; 4]))
     }
 
     #[test]
@@ -159,6 +387,39 @@ mod tests {
         let s = pc.stats();
         assert_eq!(s.hits, 2);
         assert_eq!(s.misses, 1);
+    }
+
+    #[test]
+    fn lookup_spans_first_group_boundary() {
+        // entries longer than FG live in the full-first-group bucket;
+        // shorter ones in exact-path buckets — both must be found, and a
+        // long match must beat every short one
+        let long: Vec<i32> = (0..40).collect();
+        let short: Vec<i32> = (0..5).collect();
+        let pc = PrefixCache::new(1 << 20);
+        pc.insert(entry("p", short.clone()));
+        pc.insert(entry("p", long.clone()));
+        let prompt: Vec<i32> = (0..64).collect();
+        assert_eq!(pc.lookup("p", &prompt).unwrap().tokens.len(), 40);
+        // a prompt diverging inside the first group falls back to the
+        // short-bucket probe
+        let mut diverged = prompt.clone();
+        diverged[20] = 999;
+        assert_eq!(pc.lookup("p", &diverged).unwrap().tokens.len(), 5);
+        // FG-boundary exactness: prompt shorter than the long entry
+        assert_eq!(pc.lookup("p", &prompt[..33]).unwrap().tokens.len(), 5);
+    }
+
+    #[test]
+    fn exact_hit_shares_logits_arc() {
+        let pc = PrefixCache::new(1 << 20);
+        pc.insert(entry("p", vec![1, 2, 3]));
+        let a = pc.lookup("p", &[1, 2, 3]).unwrap();
+        let b = pc.lookup("p", &[1, 2, 3]).unwrap();
+        // the logits row is handed out Arc-shared, never deep-copied
+        assert!(Arc::ptr_eq(&a.last_logits, &b.last_logits));
+        assert!(Arc::ptr_eq(&a.base, &b.base));
+        assert_eq!(a.uses(), 2);
     }
 
     #[test]
@@ -182,13 +443,13 @@ mod tests {
         // entry here 4 floats; in a real model 4·vocab), so entries whose
         // weight is dominated by logits blew past the budget unbounded
         let mut big = entry("p", vec![1]);
-        big.last_logits = vec![0.5; 256];
+        big.last_logits = Arc::new(vec![0.5; 256]);
         let one = entry_bytes(&big);
         assert!(one >= 256 * 4, "logits must dominate this entry's size");
         let pc = PrefixCache::new(one * 2); // room for exactly two
         for t in 0..5 {
             let mut e = entry("p", vec![t]);
-            e.last_logits = vec![0.5; 256];
+            e.last_logits = Arc::new(vec![0.5; 256]);
             pc.insert(e);
         }
         let s = pc.stats();
@@ -197,23 +458,66 @@ mod tests {
     }
 
     #[test]
+    fn named_entries_pinned_against_eviction() {
+        let one = entry_bytes(&entry("p", vec![1]));
+        let pc = PrefixCache::new(one + one / 2); // room for ONE anonymous
+        let mut sys = entry("p", vec![7, 8]);
+        sys.name = Some("sys".into());
+        pc.register(sys);
+        // anonymous churn cannot evict the pinned entry
+        pc.insert(entry("p", vec![1]));
+        pc.insert(entry("p", vec![2]));
+        let s = pc.stats();
+        assert_eq!(s.named, 1);
+        assert_eq!(s.entries, 2, "pinned + one surviving anonymous");
+        assert!(s.used_bytes <= one, "pinned entry not budget-counted");
+        // the pinned entry serves anonymous lookups too
+        assert_eq!(pc.lookup("p", &[7, 8, 9]).unwrap().tokens, vec![7, 8]);
+        assert!(pc.get_named("sys").is_some());
+        assert_eq!(pc.list_named().len(), 1);
+        // release drops it from both the name map and the lookup index
+        let released = pc.release("sys").unwrap();
+        assert_eq!(released.tokens, vec![7, 8]);
+        assert!(pc.get_named("sys").is_none());
+        assert!(pc.release("sys").is_none(), "double release is None");
+        assert!(pc.lookup("p", &[7, 8, 9]).is_none());
+    }
+
+    #[test]
+    fn register_replaces_same_name_and_subsumes_anonymous() {
+        let pc = PrefixCache::new(1 << 20);
+        pc.insert(entry("p", vec![1, 2])); // anonymous duplicate key
+        let mut a = entry("p", vec![1, 2]);
+        a.name = Some("sys".into());
+        let (_, displaced) = pc.register(a);
+        assert!(displaced.is_none());
+        assert_eq!(pc.stats().entries, 1, "anonymous duplicate subsumed");
+        assert_eq!(pc.stats().used_bytes, 0);
+        // re-registering the same name hands back the displaced entry
+        let mut b = entry("p", vec![3, 4]);
+        b.name = Some("sys".into());
+        let (_, displaced) = pc.register(b);
+        assert_eq!(displaced.unwrap().tokens, vec![1, 2]);
+        assert_eq!(pc.get_named("sys").unwrap().tokens, vec![3, 4]);
+        assert_eq!(pc.stats().entries, 1);
+        // an anonymous insert under a pinned key is a no-op
+        pc.insert(entry("p", vec![3, 4]));
+        assert_eq!(pc.stats().entries, 1);
+        assert_eq!(pc.stats().used_bytes, 0);
+    }
+
+    #[test]
     fn snapshot_stores_only_allocated_pages() {
-        // a snapshot of a short prompt pins only its grown pages, not the
-        // full-context footprint it would eventually reach
-        let mut e = entry("p", vec![1, 2, 3]);
-        let hd = 32; // 1 head × Dh=32
-        for _ in 0..3 {
-            e.cache.layers[0].append_token(&vec![1.0; hd], &vec![1.0; hd]);
-        }
-        let snap = e.cache.capacity_bytes();
-        assert!(snap > 0);
-        // only one ring page is resident; the packed region (the part that
-        // scales with T) is entirely unallocated at this depth
+        // a frozen base stores exactly the state its prompt grew — far less
+        // than the full-context footprint a fully-grown cache would pin
+        let e = entry("p", vec![1, 2, 3]);
+        assert!(e.base.bytes() > 0);
         assert!(
-            snap < e.cache.full_capacity_bytes(),
+            e.base.bytes()
+                < SeqCache::new(geo(), &QuantPolicy::kivi(1, 2)).full_capacity_bytes(),
             "short snapshot must cost less than the full-context footprint"
         );
-        assert_eq!(e.cache.layers[0].q_capacity(), 0);
+        assert_eq!(e.base.n_tokens(), 3);
         let pc = PrefixCache::new(1 << 20);
         pc.insert(e);
         assert_eq!(pc.stats().entries, 1);
@@ -222,26 +526,26 @@ mod tests {
     #[test]
     fn restored_snapshot_never_aliases_live_versions() {
         // the engine's staged literal cache validates against LayerCache
-        // version stamps; a snapshot restore goes through Clone, which
-        // re-stamps every version — so restored state can never be
-        // mistaken for the live cache's linear history (full invalidation
-        // on prefix-restore, by construction)
-        let mut e = entry("p", vec![1, 2]);
-        let hd = 32;
+        // version stamps; attaching a base builds a FRESH LayerCache with
+        // fresh stamps — so restored state can never be mistaken for any
+        // other sequence's linear history
+        let mut donor = SeqCache::new(geo(), &QuantPolicy::kivi(1, 2));
         for _ in 0..5 {
-            e.cache.layers[0].append_token(&vec![1.0; hd], &vec![2.0; hd]);
+            donor.layers[0].append_token(&vec![1.0; 32], &vec![2.0; 32]);
         }
-        let live = &e.cache.layers[0];
+        donor.pos = 5;
+        let live = &donor.layers[0];
+        let (ident, packed, res_base) =
+            (live.ident_version(), live.packed_version(), live.res_base_version());
+        let base = Arc::new(SeqBase::freeze(&donor));
         let pc = PrefixCache::new(1 << 20);
-        let (ident, packed, res_base) = (
-            live.ident_version(), live.packed_version(), live.res_base_version(),
-        );
-        pc.insert(e);
-        let restored = pc.lookup("p", &[1, 2]).unwrap().cache.clone();
+        pc.insert(PrefixEntry::new("p".into(), vec![1, 2], base, Arc::new(vec![])));
+        let restored = SeqCache::attach(&pc.lookup("p", &[1, 2]).unwrap().base);
         let rl = &restored.layers[0];
         assert_ne!(rl.ident_version(), ident);
         assert_ne!(rl.packed_version(), packed);
         assert_ne!(rl.res_base_version(), res_base);
+        assert_eq!(restored.pos, 5);
     }
 
     #[test]
@@ -249,7 +553,7 @@ mod tests {
         let pc = PrefixCache::new(1 << 20);
         pc.insert(entry("p", vec![1, 2]));
         let mut e = entry("p", vec![1, 2]);
-        e.last_logits = vec![9.0; 4];
+        e.last_logits = Arc::new(vec![9.0; 4]);
         pc.insert(e);
         assert_eq!(pc.stats().entries, 1);
         assert_eq!(pc.lookup("p", &[1, 2]).unwrap().last_logits[0], 9.0);

@@ -62,7 +62,7 @@ use anyhow::{Context, Result};
 use crate::api::{
     self, ApiError, ApiRequest, ApiResponse, CalibrationReport, ErrorCode,
     Frame, GenerateSpec, GenerationResult, PolicyInfo, PolicyReport,
-    PoolReport, Proto, SessionConfig, SessionManager, TurnOpts,
+    PoolReport, PrefixReport, Proto, SessionConfig, SessionManager, TurnOpts,
 };
 use crate::calib::PolicyRegistry;
 use crate::coordinator::request::TokenSink;
@@ -354,10 +354,11 @@ impl Server {
     }
 
     /// Handle one v3 line. Instant ops (cancel, ping, stats, pool,
-    /// policies, session open/close) are answered inline; generation ops
-    /// and `calibrate` (which drives real engine work) register their tag
-    /// and run on a worker thread. Returns Err only for connection-fatal
-    /// protocol violations (duplicate tag).
+    /// policies, session open/close, prefix release/listing) are answered
+    /// inline; generation ops, `calibrate` and `prefix_register` (which
+    /// drive real engine work) register their tag and run on a worker
+    /// thread. Returns Err only for connection-fatal protocol violations
+    /// (duplicate tag).
     fn handle_v3(
         self: &Arc<Self>,
         tag: u64,
@@ -393,7 +394,8 @@ impl Server {
             ApiRequest::Generate(_)
             | ApiRequest::BatchGenerate { .. }
             | ApiRequest::SessionAppend { .. }
-            | ApiRequest::Calibrate { .. } => {
+            | ApiRequest::Calibrate { .. }
+            | ApiRequest::PrefixRegister { .. } => {
                 // (the duplicate-tag check already ran above; the reader
                 // thread is the only registrar, so the tag cannot become
                 // live between that check and this insert)
@@ -491,6 +493,9 @@ impl Server {
             ApiRequest::Calibrate { budget, seed, episodes, gate } => {
                 self.run_calibrate(budget, seed, episodes, gate, Some(abort))
             }
+            // registration drives a real prefill (engine forward passes
+            // serialize internally), so it rides a worker like calibrate
+            req @ ApiRequest::PrefixRegister { .. } => self.handle(req),
             // handle_v3 routes only the ops above here
             _ => ApiResponse::Error(ApiError::new(
                 ErrorCode::Internal,
@@ -535,7 +540,9 @@ impl Server {
     pub fn handle(&self, req: ApiRequest) -> ApiResponse {
         match req {
             ApiRequest::Ping => ApiResponse::Pong,
-            ApiRequest::Stats => ApiResponse::Stats(self.coord.metrics()),
+            ApiRequest::Stats => {
+                ApiResponse::Stats(self.coord.metrics(), self.prefix_report())
+            }
             ApiRequest::Pool => ApiResponse::Pool(PoolReport {
                 pool: self.coord.engine().pool.stats(),
                 prefix: self.coord.prefix_stats(),
@@ -549,8 +556,8 @@ impl Server {
                 // non-socket path: no tag/stream context
                 self.run_batch(items, None)
             }
-            ApiRequest::SessionOpen { policy } => {
-                match self.sessions.open(policy) {
+            ApiRequest::SessionOpen { policy, prefix_id } => {
+                match self.open_session(policy, prefix_id) {
                     Ok((session, policy)) => {
                         ApiResponse::SessionOpened { session, policy }
                     }
@@ -578,12 +585,112 @@ impl Server {
             ApiRequest::Calibrate { budget, seed, episodes, gate } => {
                 self.run_calibrate(budget, seed, episodes, gate, None)
             }
+            ApiRequest::PrefixRegister { name, prompt, policy } => {
+                let m = self.coord.engine().manifest();
+                let policy = policy
+                    .unwrap_or_else(|| QuantPolicy::float32(m.n_layers));
+                if let Err(e) = m.supports_policy(&policy) {
+                    return ApiResponse::Error(ApiError::new(
+                        ErrorCode::UnsupportedPolicy,
+                        format!("{e:#}"),
+                    ));
+                }
+                let tok = ByteTokenizer;
+                match self.coord.register_prefix(
+                    &name,
+                    tok.encode_str(&prompt),
+                    &policy,
+                ) {
+                    Ok(info) => ApiResponse::PrefixRegistered(info),
+                    Err(e) => ApiResponse::Error(e.into()),
+                }
+            }
+            ApiRequest::PrefixRelease { name } => {
+                match self.coord.release_prefix(&name) {
+                    Ok(info) => ApiResponse::PrefixReleased(info),
+                    Err(e) => ApiResponse::Error(e.into()),
+                }
+            }
+            ApiRequest::Prefixes => {
+                ApiResponse::Prefixes(self.coord.list_prefixes())
+            }
         }
     }
 
+    /// The v3 `stats` reply's namespaced `prefix` section: pool sharing
+    /// counters joined with prefix-cache hit statistics (None when the
+    /// prefix cache is disabled).
+    fn prefix_report(&self) -> Option<PrefixReport> {
+        let ps = self.coord.prefix_stats()?;
+        let pool = self.coord.engine().pool.stats();
+        Some(PrefixReport {
+            shared_pages: pool.shared_segs,
+            shared_bytes: pool.shared_bytes,
+            shared_bytes_saved: pool.shared_bytes_saved,
+            cow_breaks: pool.cow_breaks,
+            hits: ps.hits,
+            misses: ps.misses,
+            entries: ps.entries,
+            named: ps.named,
+        })
+    }
+
+    /// Resolve an optional `prefix_id` against an optional explicit
+    /// policy. With a policy named, the node's per-layer bits must match
+    /// it exactly (`prefix_policy_mismatch` otherwise); with no policy,
+    /// the request ADOPTS the node's bits — naming a prefix is already a
+    /// complete description of the cache it runs on. Without a prefix the
+    /// policy defaults to float as everywhere else.
+    fn resolve_prefix_and_policy(
+        &self,
+        prefix_id: Option<&str>,
+        policy: Option<&QuantPolicy>,
+    ) -> Result<
+        (Option<Arc<crate::kvcache::PrefixEntry>>, QuantPolicy),
+        ApiError,
+    > {
+        match prefix_id {
+            None => {
+                let n = self.coord.engine().manifest().n_layers;
+                Ok((
+                    None,
+                    policy.cloned().unwrap_or_else(|| QuantPolicy::float32(n)),
+                ))
+            }
+            Some(name) => match policy {
+                Some(p) => {
+                    let entry = self.coord.resolve_prefix(name, p)?;
+                    Ok((Some(entry), p.clone()))
+                }
+                None => {
+                    let entry = self.coord.lookup_prefix(name)?;
+                    let adopted = policy_for_base(&entry.base);
+                    Ok((Some(entry), adopted))
+                }
+            },
+        }
+    }
+
+    /// `session_open`, with the optional `prefix_id` resolved first: the
+    /// session then opens ATTACHED to the shared node (its tokens already
+    /// resident, zero bytes copied).
+    fn open_session(
+        &self,
+        policy: Option<QuantPolicy>,
+        prefix_id: Option<String>,
+    ) -> Result<(u64, String), ApiError> {
+        let (prefix, policy) = self
+            .resolve_prefix_and_policy(prefix_id.as_deref(), policy.as_ref())?;
+        self.sessions.open(Some(policy), prefix)
+    }
+
     /// Build a coordinator [`Request`] from a validated spec. The policy is
-    /// resolved (default float) and checked against the artifact grid here,
-    /// so unsupported policies fail with a typed error before submission.
+    /// resolved (default float; adopted from the named prefix when one is
+    /// attached without an explicit policy) and checked against the
+    /// artifact grid here, so unsupported policies fail with a typed error
+    /// before submission. A `prefix_id` resolves to its shared node and
+    /// rides the request: the scheduler attaches the sequence to it
+    /// (prompt becomes the suffix; empty suffix skips prefill entirely).
     fn build_request(
         &self,
         id: u64,
@@ -591,11 +698,11 @@ impl Server {
         on_token: Option<TokenSink>,
         abort: Option<AbortHandle>,
     ) -> Result<Request, ApiError> {
+        let (prefix, policy) = self.resolve_prefix_and_policy(
+            spec.prefix_id.as_deref(),
+            spec.policy.as_ref(),
+        )?;
         let m = self.coord.engine().manifest();
-        let policy = match &spec.policy {
-            Some(p) => p.clone(),
-            None => QuantPolicy::float32(m.n_layers),
-        };
         m.supports_policy(&policy).map_err(|e| {
             ApiError::new(ErrorCode::UnsupportedPolicy, format!("{e:#}"))
         })?;
@@ -603,6 +710,7 @@ impl Server {
             return Err(ApiError::empty_stop()); // codec enforces; belt-and-braces
         }
         let mut req = spec.to_request(id, policy);
+        req.prefix = prefix;
         req.on_token = on_token;
         if let Some(abort) = abort {
             req.abort = abort;
@@ -892,6 +1000,23 @@ fn sink_for(out: &Outbound, tag: Option<u64>, item: Option<usize>) -> TokenSink 
     })
 }
 
+/// Reconstruct the quantization policy a shared node was frozen under
+/// from its per-layer bits, for requests that attach a prefix WITHOUT
+/// naming a policy (they adopt the node's). All-(0,0) bits is the float
+/// snapshot; any quantized layer round-trips through `asymkv_auto`,
+/// whose name encodes the exact per-layer assignment.
+fn policy_for_base(base: &crate::kvcache::SeqBase) -> QuantPolicy {
+    let bits = base.bits_key();
+    if bits.iter().all(|&(k, v)| k == 0 && v == 0) {
+        QuantPolicy::float32(bits.len())
+    } else {
+        QuantPolicy::asymkv_auto(
+            bits.iter().map(|b| b.0).collect(),
+            bits.iter().map(|b| b.1).collect(),
+        )
+    }
+}
+
 /// Tag a streaming final line with `"done":true`.
 fn mark_done(mut v: Value) -> Value {
     if let Value::Obj(o) = &mut v {
@@ -1033,6 +1158,49 @@ impl MuxClient {
     /// cancel op's own pending reply (`{"target":…,"cancelled":…}`).
     pub fn cancel(&self, target: u64) -> Result<MuxPending> {
         self.submit(&ApiRequest::Cancel { target })
+    }
+
+    /// Register `prompt` as a named shared prefix: prefilled once
+    /// server-side, pinned until released, attachable by any later
+    /// request via `prefix_id`.
+    pub fn register_prefix(
+        &self,
+        name: &str,
+        prompt: &str,
+        policy: Option<QuantPolicy>,
+    ) -> Result<MuxPending> {
+        self.submit(&ApiRequest::PrefixRegister {
+            name: name.into(),
+            prompt: prompt.into(),
+            policy,
+        })
+    }
+
+    /// Generate `n_gen` tokens on top of a registered prefix: `suffix` is
+    /// the per-request continuation (may be empty — the shared node's
+    /// cached logits then seed decode with NO prefill at all).
+    pub fn generate_with_prefix(
+        &self,
+        prefix_id: &str,
+        suffix: &str,
+        n_gen: usize,
+    ) -> Result<MuxPending> {
+        self.submit(&ApiRequest::Generate(GenerateSpec {
+            prompt: suffix.into(),
+            n_gen,
+            prefix_id: Some(prefix_id.into()),
+            ..Default::default()
+        }))
+    }
+
+    /// Drop a prefix registration (resident sequences keep their pages).
+    pub fn release_prefix(&self, name: &str) -> Result<MuxPending> {
+        self.submit(&ApiRequest::PrefixRelease { name: name.into() })
+    }
+
+    /// List registered prefixes (name, tokens, policy, refcount, bytes).
+    pub fn prefixes(&self) -> Result<MuxPending> {
+        self.submit(&ApiRequest::Prefixes)
     }
 }
 

@@ -118,3 +118,134 @@ fn incremental_logits_match_naive_prop() {
         Ok(())
     });
 }
+
+/// Property: sequences ATTACHED to a shared prefix node (copy-on-write
+/// pages, process-wide staged literals, refcounted pool charge) produce
+/// BYTE-IDENTICAL logits to plain unshared sequences that prefilled the
+/// same history privately, across random interleavings of fork (attach),
+/// decode bursts (first decode breaks CoW on the residual ring), suffix
+/// prefill (divergence at group boundaries → page-level CoW) and mid-
+/// flight release (shared pages must survive for the remaining forks).
+/// Both sides run on ONE engine so shared and private sequences co-reside
+/// in the same pool and staging, which is exactly the production shape.
+#[test]
+fn shared_prefix_cow_logits_match_unshared_prop() {
+    let Some(eng) = common::engine_for("tiny") else { return };
+    let n = eng.manifest().n_layers;
+    let budget = eng.manifest().max_ctx + eng.manifest().residual - 2;
+    let policies = [
+        QuantPolicy::kivi(n, 1),
+        QuantPolicy::kivi(n, 2),
+        QuantPolicy::asymkv21(n, n / 2, 0),
+        QuantPolicy::float32(n),
+    ];
+
+    check("shared_prefix_cow_vs_unshared", 4, |g: &mut Gen| {
+        let policy = g.pick(&policies).clone();
+        let tokens = |g: &mut Gen, len: usize| -> Vec<i32> {
+            (0..len).map(|_| g.usize_in(32, 126) as i32).collect()
+        };
+        let compare = |ctx: &str, ls: &[f32], lp: &[f32]| -> Result<(), String> {
+            if bits(ls) != bits(lp) {
+                return Err(format!(
+                    "{ctx}: shared-prefix logits diverge from unshared ({policy})"
+                ));
+            }
+            Ok(())
+        };
+
+        // register the shared node (the prefix_register path): one prefill,
+        // frozen + retained so the pages outlive every fork
+        let prefix = tokens(g, g.usize_in(8, 64));
+        let (base, base_logits) = eng
+            .prefill_shared_base(&policy, &prefix)
+            .map_err(|e| e.to_string())?;
+
+        // (attached seq, plain twin, common history) triples
+        let mut forks: Vec<(u64, u64, Vec<i32>)> = Vec::new();
+        let result = (|| -> Result<(), String> {
+            for op in 0..g.usize_in(4, 10) {
+                match g.usize_in(0, 4) {
+                    0 => {
+                        // fork: attach the shared node (zero bytes copied)
+                        // vs a private prefill of the same prefix — the
+                        // node's stored logits must equal a fresh prefill's
+                        if forks.len() >= 4 {
+                            continue;
+                        }
+                        let s =
+                            eng.create_seq_attached(&base).map_err(|e| e.to_string())?;
+                        let p = eng.create_seq(&policy).map_err(|e| e.to_string())?;
+                        let lp = eng
+                            .prefill(&[p], &[prefix.clone()])
+                            .map_err(|e| e.to_string())?;
+                        compare(&format!("op {op} fork"), &base_logits, &lp[0])?;
+                        forks.push((s, p, prefix.clone()));
+                    }
+                    1 | 2 => {
+                        // decode burst: the fork's FIRST decode lands on the
+                        // shared residual ring and must break copy-on-write,
+                        // not write through into its siblings
+                        if forks.is_empty() {
+                            continue;
+                        }
+                        let f = g.usize_in(0, forks.len() - 1);
+                        for step in 0..g.usize_in(1, 24) {
+                            let (s, p, history) = &mut forks[f];
+                            if history.len() + 1 > budget {
+                                break;
+                            }
+                            let t = g.usize_in(32, 126) as i32;
+                            let ls = eng.decode(&[*s], &[t]).map_err(|e| e.to_string())?;
+                            let lp = eng.decode(&[*p], &[t]).map_err(|e| e.to_string())?;
+                            compare(&format!("op {op} decode {step}"), &ls[0], &lp[0])?;
+                            history.push(t);
+                        }
+                    }
+                    3 => {
+                        // suffix prefill: chunked divergence past the shared
+                        // position (page growth off a CoW boundary)
+                        if forks.is_empty() {
+                            continue;
+                        }
+                        let f = g.usize_in(0, forks.len() - 1);
+                        let len = g.usize_in(1, 40);
+                        let (s, p, history) = &mut forks[f];
+                        if history.len() + len > budget {
+                            continue;
+                        }
+                        let suffix = tokens(g, len);
+                        let ls = eng
+                            .prefill(&[*s], &[suffix.clone()])
+                            .map_err(|e| e.to_string())?;
+                        let lp = eng
+                            .prefill(&[*p], &[suffix.clone()])
+                            .map_err(|e| e.to_string())?;
+                        compare(&format!("op {op} suffix"), &ls[0], &lp[0])?;
+                        history.extend(suffix);
+                    }
+                    _ => {
+                        // release a fork mid-flight: the shared pages must
+                        // survive (refcount) for every fork still attached
+                        if forks.is_empty() {
+                            continue;
+                        }
+                        let f = g.usize_in(0, forks.len() - 1);
+                        let (s, p, _) = forks.swap_remove(f);
+                        eng.free_seq(s).map_err(|e| e.to_string())?;
+                        eng.free_seq(p).map_err(|e| e.to_string())?;
+                    }
+                }
+            }
+            Ok(())
+        })();
+        for (s, p, _) in forks {
+            eng.free_seq(s).map_err(|e| e.to_string())?;
+            eng.free_seq(p).map_err(|e| e.to_string())?;
+        }
+        // drop the registration's standalone reference: with every fork
+        // gone this must free the shared bytes exactly once
+        eng.pool.release_shared(base.id).map_err(|e| e.to_string())?;
+        result
+    });
+}

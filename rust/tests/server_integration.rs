@@ -292,6 +292,7 @@ fn session_reuses_kv_across_turns_without_reprefill() {
     let opened = client
         .send(&ApiRequest::SessionOpen {
             policy: Some(QuantPolicy::float32(n)),
+            prefix_id: None,
         })
         .unwrap();
     assert_eq!(opened.get("v").as_i64(), Some(2), "{opened}");
@@ -1044,6 +1045,7 @@ fn v3_session_append_and_batch_items_stream() {
     let opened = mux
         .submit(&ApiRequest::SessionOpen {
             policy: Some(QuantPolicy::float32(n)),
+            prefix_id: None,
         })
         .unwrap()
         .wait_done()
@@ -1171,7 +1173,7 @@ fn housekeeping_tick_evicts_idle_sessions_without_traffic() {
     }
     let mut client = Client::connect(&addr).unwrap();
     let opened = client
-        .send(&ApiRequest::SessionOpen { policy: Some(QuantPolicy::float32(n)) })
+        .send(&ApiRequest::SessionOpen { policy: Some(QuantPolicy::float32(n)), prefix_id: None })
         .unwrap();
     assert!(opened.get("session").as_i64().is_some(), "{opened}");
     assert_eq!(server.coord.engine().pool.stats().pinned_seqs, 1);
