@@ -8,6 +8,11 @@
 //!   generates over separate sockets, a one-line batch submit, a
 //!   multi-turn session (KV reuse across turns), policy listing and the
 //!   metrics ops.
+//! * **HTTP gateway** — a second replica is booted over the same
+//!   runtime, a [`Gateway`] fronts both, a shared prefix is registered
+//!   once fleet-wide over HTTP, concurrent SSE streams fan out across
+//!   the replicas, and replica 2 is drained mid-demo (in-flight streams
+//!   finish; the fleet keeps serving on one replica).
 //!
 //!   cargo run --release --example serve_demo [artifacts/small]
 
@@ -16,16 +21,19 @@ use std::sync::Arc;
 use asymkv::api::{ApiRequest, GenerateSpec};
 use asymkv::coordinator::{Coordinator, CoordinatorConfig};
 use asymkv::engine::Engine;
+use asymkv::gateway::testing::{http_json, http_sse};
+use asymkv::gateway::{Gateway, GatewayConfig};
 use asymkv::quant::QuantPolicy;
 use asymkv::runtime::Runtime;
 use asymkv::server::{Client, MuxClient, Server};
+use asymkv::util::json::Value;
 use asymkv::util::rng::SplitMix;
 use asymkv::workload::tasks;
 
 fn main() -> anyhow::Result<()> {
     let dir = std::env::args().nth(1).unwrap_or("artifacts/small".into());
     let rt = Arc::new(Runtime::load(&dir)?);
-    let engine = Arc::new(Engine::new(rt, 1 << 30)?);
+    let engine = Arc::new(Engine::new(rt.clone(), 1 << 30)?);
     let n = engine.manifest().n_layers;
     let coord = Coordinator::start(engine, CoordinatorConfig::default());
     let server = Arc::new(Server::bind(coord, "127.0.0.1:0")?);
@@ -197,6 +205,103 @@ fn main() -> anyhow::Result<()> {
     let pool = client.send(&ApiRequest::Pool)?;
     println!("cache pool    : {pool}");
 
+    // ---- HTTP gateway: one front door over a two-replica fleet ----
+    // A second replica shares the runtime (weights loaded once) but owns
+    // its own engine, KV pool, coordinator and socket — exactly what a
+    // second process on another port would look like to the gateway.
+    println!("\n== HTTP gateway (2 replicas: routing, shared prefixes, drain) ==");
+    let engine2 = Arc::new(Engine::new(rt, 1 << 30)?);
+    let coord2 = Coordinator::start(engine2, CoordinatorConfig::default());
+    let server2 = Arc::new(Server::bind(coord2, "127.0.0.1:0")?);
+    let addr2 = server2.local_addr();
+    {
+        let srv = server2.clone();
+        std::thread::spawn(move || srv.serve());
+    }
+    let gateway = Arc::new(Gateway::bind(
+        "127.0.0.1:0",
+        &[addr.clone(), addr2.clone()],
+        GatewayConfig { log_requests: true, ..Default::default() },
+    )?);
+    let gw = gateway.local_addr();
+    {
+        let g = gateway.clone();
+        std::thread::spawn(move || g.serve());
+    }
+    println!("gateway on http://{gw} -> replicas [{addr}, {addr2}]");
+
+    // register the shared prefix ONCE over HTTP — the gateway fans the
+    // registration out so every replica holds the pages
+    let (status, reg) = http_json(
+        &gw,
+        "POST",
+        "/v1/prefixes",
+        Some(&Value::obj(vec![
+            ("name", Value::str_of("sys")),
+            ("prompt", Value::str_of(sys_prompt)),
+        ])),
+    )?;
+    println!("POST /v1/prefixes [{status}] -> {reg}");
+
+    // concurrent SSE continuations of that prefix, spread by the router
+    let mut streams = Vec::new();
+    for (i, suffix) in ["AAB:", "ZZT:", "QQF:", "AAB:", "ZZT:", "QQF:"]
+        .iter()
+        .enumerate()
+    {
+        let gw = gw.clone();
+        let body = Value::obj(vec![
+            ("prompt", Value::str_of(*suffix)),
+            ("n_gen", Value::num(4.0)),
+            ("stream", Value::Bool(true)),
+            ("prefix_id", Value::str_of("sys")),
+        ]);
+        streams.push(std::thread::spawn(move || -> anyhow::Result<String> {
+            let (status, events) = http_sse(&gw, "POST", "/v1/generate", Some(&body))?;
+            let tokens = events.iter().filter(|e| e.event == "token").count();
+            let last = events.last().map(|e| e.event.clone()).unwrap_or_default();
+            Ok(format!(
+                "stream {i} [{status}]: {tokens} token events, terminal `{last}`"
+            ))
+        }));
+    }
+
+    // drain replica 2 mid-demo: admission closes instantly, in-flight
+    // streams finish, prefixes release, the replica leaves the fleet.
+    // (The short sleep lets every stream get ADMITTED first, so the demo
+    // shows drain finishing victims rather than refusing latecomers.)
+    std::thread::sleep(std::time::Duration::from_millis(150));
+    let (status, drained) = http_json(
+        &gw,
+        "POST",
+        "/v1/admin/drain",
+        Some(&Value::obj(vec![("replica", Value::str_of(addr2.clone()))])),
+    )?;
+    println!("POST /v1/admin/drain [{status}] -> {drained}");
+    for s in streams {
+        println!("  {}", s.join().unwrap()?);
+    }
+
+    // the fleet keeps serving on the survivor
+    let (status, one_more) = http_json(
+        &gw,
+        "POST",
+        "/v1/generate",
+        Some(&Value::obj(vec![
+            ("prompt", Value::str_of("the ox runs. ")),
+            ("n_gen", Value::num(4.0)),
+        ])),
+    )?;
+    println!(
+        "post-drain generate [{status}] -> {} tokens on the survivor",
+        one_more.get("tokens").as_arr().map_or(0, |a| a.len())
+    );
+    let (_, fleet) = http_json(&gw, "GET", "/v1/stats", None)?;
+    println!("GET /v1/stats -> fleet {}", fleet.get("fleet"));
+    println!("                 gateway {}", fleet.get("gateway"));
+
+    gateway.request_stop();
     server.request_stop();
+    server2.request_stop();
     Ok(())
 }

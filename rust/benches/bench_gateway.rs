@@ -1,0 +1,248 @@
+//! Gateway fleet benchmarks — the measurements behind the HTTP/SSE
+//! gateway's existence:
+//!
+//! 1. **Fan-out throughput** (`gateway_fanout_throughput`): N concurrent
+//!    HTTP generates through a gateway over TWO replicas vs the same N
+//!    through a gateway over ONE replica. Each mock replica serves
+//!    generation strictly sequentially (one worker), so wall time is
+//!    bounded below by (requests x service) / replicas — the ratio
+//!    measures the router actually spreading load, not scheduler luck.
+//!    CI asserts `config.ratio_2_vs_1 >= 1.6`.
+//! 2. **Session affinity** (`gateway_affinity_hit_rate`): interleaved
+//!    turns across many sessions pinned over two replicas. The mock
+//!    replicas use replica-LOCAL session ids, so ANY mis-routed turn
+//!    fails loudly — the hit rate is (affinity-routed turns) / (turns).
+//!    CI asserts `config.hit_rate >= 0.9`.
+//!
+//! Pure loopback: real gateway + real v3 codec + mock replicas (fixed
+//! per-token service time). Runs everywhere, no artifacts needed.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use asymkv::gateway::testing::{http_json, MockReplica, MockReplicaConfig};
+use asymkv::gateway::{Gateway, GatewayConfig};
+use asymkv::util::bench::{self, fmt_duration, time_fn, JsonReport, Table};
+use asymkv::util::json::Value;
+
+/// Concurrent HTTP requests per measured fan-out run.
+const N_REQ: usize = 16;
+/// Tokens per generate; service per request = N_GEN x TOKEN_TIME.
+const N_GEN: usize = 4;
+const TOKEN_TIME: Duration = Duration::from_millis(2);
+/// Sessions (and turns per measured round) for the affinity benchmark.
+const N_SESSIONS: usize = 8;
+
+struct Fleet {
+    replicas: Vec<MockReplica>,
+    gateway: Arc<Gateway>,
+    addr: String,
+}
+
+fn boot_fleet(n: usize) -> Fleet {
+    let replicas: Vec<MockReplica> = (0..n)
+        .map(|_| {
+            MockReplica::spawn(MockReplicaConfig {
+                n_layers: 4,
+                token_time: TOKEN_TIME,
+            })
+            .expect("spawn mock replica")
+        })
+        .collect();
+    let addrs: Vec<String> =
+        replicas.iter().map(|r| r.addr().to_string()).collect();
+    let gateway = Arc::new(
+        Gateway::bind("127.0.0.1:0", &addrs, GatewayConfig::default())
+            .expect("bind gateway"),
+    );
+    let addr = gateway.local_addr();
+    let serve = gateway.clone();
+    std::thread::spawn(move || {
+        let _ = serve.serve();
+    });
+    Fleet { replicas, gateway, addr }
+}
+
+fn gen_body(i: usize) -> Value {
+    Value::obj(vec![
+        ("prompt", Value::str_of(format!("req {i}"))),
+        ("n_gen", Value::num(N_GEN as f64)),
+    ])
+}
+
+/// N concurrent HTTP generates; every reply must be a 200.
+fn run_fanout(addr: &str, n_req: usize) {
+    let handles: Vec<_> = (0..n_req)
+        .map(|i| {
+            let addr = addr.to_string();
+            std::thread::spawn(move || {
+                let (status, body) =
+                    http_json(&addr, "POST", "/v1/generate", Some(&gen_body(i)))
+                        .expect("http generate");
+                assert_eq!(status, 200, "{body}");
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("fanout worker");
+    }
+}
+
+/// One interleaved round: a turn on every session, in rotation.
+fn run_turns(addr: &str, sessions: &[u64]) {
+    for &id in sessions {
+        let (status, body) = http_json(
+            addr,
+            "POST",
+            &format!("/v1/sessions/{id}/turns"),
+            Some(&Value::obj(vec![
+                ("prompt", Value::str_of("turn")),
+                ("n_gen", Value::num(1.0)),
+            ])),
+        )
+        .expect("http turn");
+        assert_eq!(status, 200, "mis-routed or refused turn: {body}");
+    }
+}
+
+fn main() {
+    let reps = bench::samples(8);
+    let warm = bench::warmup(1);
+
+    // ---- fan-out: 2 replicas vs 1 ------------------------------------
+    let one = boot_fleet(1);
+    let two = boot_fleet(2);
+    let t_one = time_fn(warm, reps, || run_fanout(&one.addr, N_REQ));
+    let t_two = time_fn(warm, reps, || run_fanout(&two.addr, N_REQ));
+    // min-over-samples: a single sequential replica's wall time is
+    // bounded below by N x service regardless of sample luck, while
+    // stalls only inflate samples — min/min measures the architecture.
+    let ratio = t_one.min() / t_two.min();
+    let served: Vec<u64> = two.replicas.iter().map(|r| r.served()).collect();
+    assert!(
+        served.iter().all(|&s| s > 0),
+        "the router never spread load: served per replica = {served:?}"
+    );
+    assert!(
+        ratio >= 1.6,
+        "2-replica fan-out must be >= 1.6x one replica \
+         (got {ratio:.2}x: 1-replica min {:.4}s vs 2-replica min {:.4}s)",
+        t_one.min(),
+        t_two.min()
+    );
+
+    // ---- session affinity under interleaved traffic ------------------
+    let mut sessions = Vec::new();
+    for _ in 0..N_SESSIONS {
+        let (status, body) = http_json(
+            &two.addr,
+            "POST",
+            "/v1/sessions",
+            Some(&Value::obj(vec![])),
+        )
+        .expect("open session");
+        assert_eq!(status, 200, "{body}");
+        sessions.push(body.get("session").as_i64().unwrap() as u64);
+    }
+    let (_, before) =
+        http_json(&two.addr, "GET", "/v1/replicas", None).expect("replicas");
+    let affinity_before =
+        before.get("router").get("affinity_routes").as_f64().unwrap();
+    let t_aff = time_fn(warm, reps, || run_turns(&two.addr, &sessions));
+    let (_, after) =
+        http_json(&two.addr, "GET", "/v1/replicas", None).expect("replicas");
+    let affinity_after =
+        after.get("router").get("affinity_routes").as_f64().unwrap();
+    let turns = ((warm + reps) * N_SESSIONS) as f64;
+    // every turn either routed to its pin (affinity_routes ticked and the
+    // replica accepted the session id) or the 200-assert above fired
+    let hit_rate = (affinity_after - affinity_before) / turns;
+    assert!(
+        hit_rate >= 0.9,
+        "session affinity hit rate {hit_rate:.3} < 0.9 \
+         ({affinity_before} -> {affinity_after} over {turns} turns)"
+    );
+
+    // ---- report -------------------------------------------------------
+    let mut t = Table::new(
+        "gateway fleet: fan-out throughput and session affinity",
+        &["measure", "wall (p50)", "detail"],
+    );
+    t.row(vec![
+        format!("{N_REQ} generates, 1 replica"),
+        fmt_duration(t_one.p50()),
+        format!("{:.0} req/s", N_REQ as f64 / t_one.p50()),
+    ]);
+    t.row(vec![
+        format!("{N_REQ} generates, 2 replicas"),
+        fmt_duration(t_two.p50()),
+        format!("{ratio:.2}x one replica"),
+    ]);
+    t.row(vec![
+        format!("{N_SESSIONS} interleaved turns"),
+        fmt_duration(t_aff.p50()),
+        format!("affinity hit rate {hit_rate:.3}"),
+    ]);
+    t.emit("bench_gateway");
+
+    let mut report = JsonReport::at_root("BENCH_kernels.json");
+    let common = vec![
+        ("requests", Value::num(N_REQ as f64)),
+        ("n_gen", Value::num(N_GEN as f64)),
+        (
+            "token_time_ms",
+            Value::num(TOKEN_TIME.as_secs_f64() * 1e3),
+        ),
+        (
+            "note",
+            Value::str_of(
+                "real gateway + v3 codec over mock replicas (one \
+                 sequential worker each); HTTP loopback end to end",
+            ),
+        ),
+    ];
+    report.add(
+        "gateway_fanout_throughput",
+        &t_two,
+        0,
+        Value::obj({
+            let mut c = common.clone();
+            c.push(("replicas", Value::num(2.0)));
+            c.push(("ratio_2_vs_1", Value::num(ratio)));
+            c.push(("ratio_basis", Value::str_of("min")));
+            c.push((
+                "requests_per_s",
+                Value::num(N_REQ as f64 / t_two.p50()),
+            ));
+            c
+        }),
+    );
+    report.add(
+        "gateway_affinity_hit_rate",
+        &t_aff,
+        0,
+        Value::obj({
+            let mut c = common;
+            c.push(("replicas", Value::num(2.0)));
+            c.push(("sessions", Value::num(N_SESSIONS as f64)));
+            c.push(("turns", Value::num(turns)));
+            c.push(("hit_rate", Value::num(hit_rate)));
+            c
+        }),
+    );
+    report.write().expect("write BENCH_kernels.json");
+    bench::note(
+        "bench_gateway",
+        &format!(
+            "\n{N_REQ} concurrent generates: 1 replica {} vs 2 replicas {} \
+             ({ratio:.2}x). Affinity hit rate over {turns} turns: \
+             {hit_rate:.3}.",
+            fmt_duration(t_one.p50()),
+            fmt_duration(t_two.p50()),
+        ),
+    );
+    println!("wrote BENCH_kernels.json (gateway_* records)");
+
+    one.gateway.request_stop();
+    two.gateway.request_stop();
+}

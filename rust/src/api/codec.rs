@@ -382,6 +382,18 @@ fn decode_strict(
                 format!("'{op}' requires the v3 framing (tagged requests)"),
             ))
         }
+        "drain" if v3 => {
+            check_fields(o, &["v", "op", "deadline_ms"], v3, false)?;
+            let deadline_ms = uint_field(o, "deadline_ms")?;
+            if deadline_ms == Some(0) {
+                return Err(ApiError::bad_field("deadline_ms", "must be >= 1"));
+            }
+            Ok(ApiRequest::Drain { deadline_ms })
+        }
+        "drain" => Err(ApiError::new(
+            ErrorCode::UnknownOp,
+            "'drain' requires the v3 framing (tagged requests)",
+        )),
         other => Err(ApiError::unknown_op(other)),
     }
 }
@@ -584,6 +596,7 @@ pub fn encode_request(req: &ApiRequest) -> Value {
             | ApiRequest::PrefixRegister { .. }
             | ApiRequest::PrefixRelease { .. }
             | ApiRequest::Prefixes
+            | ApiRequest::Drain { .. }
     ) {
         return encode_request_tagged(req, 0);
     }
@@ -666,6 +679,11 @@ fn encode_request_with(req: &ApiRequest, v3: bool) -> Value {
             fields.push(("name", Value::str_of(name.clone())));
         }
         ApiRequest::Prefixes => {}
+        ApiRequest::Drain { deadline_ms } => {
+            if let Some(ms) = deadline_ms {
+                fields.push(("deadline_ms", Value::num(*ms as f64)));
+            }
+        }
     }
     Value::obj(fields)
 }
@@ -779,6 +797,12 @@ pub fn encode_response(resp: &ApiResponse, proto: Proto) -> Value {
                 "prefixes",
                 Value::arr(list.iter().map(prefix_info_value).collect()),
             ),
+        ]),
+        ApiResponse::Drained(r) => Value::obj(vec![
+            ("drained", Value::Bool(r.drained)),
+            ("waited_ms", Value::num(r.waited_ms as f64)),
+            ("inflight", Value::num(r.inflight as f64)),
+            ("released_prefixes", Value::num(r.released_prefixes as f64)),
         ]),
         ApiResponse::Error(e) => Value::obj(vec![("error", error_value(e, proto))]),
     };
@@ -1113,6 +1137,34 @@ mod tests {
         assert_eq!(e.code, ErrorCode::UnknownOp);
         let (_, e) = decode_err(r#"{"v":2,"op":"prefixes"}"#);
         assert_eq!(e.code, ErrorCode::UnknownOp);
+        // drain is a v3-only admin op
+        let (_, e) = decode_err(r#"{"v":2,"op":"drain"}"#);
+        assert_eq!(e.code, ErrorCode::UnknownOp);
+        assert!(e.message.contains("v3"), "{e}");
+    }
+
+    #[test]
+    fn v3_drain_decodes() {
+        let f = decode_frame(r#"{"v":3,"tag":9,"op":"drain"}"#, N).unwrap();
+        assert_eq!(f.req, ApiRequest::Drain { deadline_ms: None });
+        let f = decode_frame(
+            r#"{"v":3,"tag":9,"op":"drain","deadline_ms":250}"#,
+            N,
+        )
+        .unwrap();
+        assert_eq!(f.req, ApiRequest::Drain { deadline_ms: Some(250) });
+        let de = decode_frame(
+            r#"{"v":3,"tag":9,"op":"drain","deadline_ms":0}"#,
+            N,
+        )
+        .unwrap_err();
+        assert_eq!(de.error.code, ErrorCode::BadField);
+        let de = decode_frame(
+            r#"{"v":3,"tag":9,"op":"drain","session":1}"#,
+            N,
+        )
+        .unwrap_err();
+        assert_eq!(de.error.code, ErrorCode::BadField);
     }
 
     #[test]
@@ -1371,6 +1423,8 @@ mod tests {
             },
             ApiRequest::PrefixRelease { name: "sys".into() },
             ApiRequest::Prefixes,
+            ApiRequest::Drain { deadline_ms: None },
+            ApiRequest::Drain { deadline_ms: Some(500) },
         ];
         for (i, req) in reqs.into_iter().enumerate() {
             let tag = 100 + i as u64;
@@ -1465,6 +1519,24 @@ mod tests {
         let rows = v.get("prefixes").as_arr().unwrap();
         assert_eq!(rows[0].get("shared_bytes").as_i64(), Some(150_000));
         assert_eq!(rows[0].get("hits").as_i64(), Some(9));
+    }
+
+    #[test]
+    fn drain_reply_framing() {
+        let v = encode_response_tagged(
+            &ApiResponse::Drained(crate::api::types::DrainReport {
+                drained: true,
+                waited_ms: 120,
+                inflight: 0,
+                released_prefixes: 2,
+            }),
+            6,
+        );
+        assert_eq!(v.get("drained").as_bool(), Some(true));
+        assert_eq!(v.get("waited_ms").as_i64(), Some(120));
+        assert_eq!(v.get("inflight").as_i64(), Some(0));
+        assert_eq!(v.get("released_prefixes").as_i64(), Some(2));
+        assert_eq!(v.get("done").as_bool(), Some(true));
     }
 
     #[test]

@@ -48,6 +48,12 @@ pub enum ErrorCode {
     /// named prefix was registered under (attaching would mis-decode the
     /// packed shared pages).
     PrefixPolicyMismatch,
+    /// The replica is draining: it finishes in-flight work but admits no
+    /// new generation/session/prefix work (rolling-restart support).
+    Draining,
+    /// The replica behind this request died or was removed from the fleet
+    /// (transport EOF/socket error, or gateway-side eviction).
+    ReplicaUnavailable,
     /// The engine/coordinator failed while executing the request.
     Engine,
     /// Anything that should not happen.
@@ -74,6 +80,8 @@ impl ErrorCode {
             ErrorCode::TooManyInflight => "too_many_inflight",
             ErrorCode::UnknownPrefix => "unknown_prefix",
             ErrorCode::PrefixPolicyMismatch => "prefix_policy_mismatch",
+            ErrorCode::Draining => "draining",
+            ErrorCode::ReplicaUnavailable => "replica_unavailable",
             ErrorCode::Engine => "engine",
             ErrorCode::Internal => "internal",
         }
@@ -143,6 +151,17 @@ impl ApiError {
     pub fn unknown_prefix(name: &str) -> Self {
         Self::new(ErrorCode::UnknownPrefix, format!("unknown prefix '{name}'"))
     }
+
+    pub fn draining() -> Self {
+        Self::new(
+            ErrorCode::Draining,
+            "replica is draining: in-flight work finishes, new work is refused",
+        )
+    }
+
+    pub fn replica_unavailable(why: impl Into<String>) -> Self {
+        Self::new(ErrorCode::ReplicaUnavailable, why)
+    }
 }
 
 /// Coordinator-level prefix failures lifted onto stable wire codes.
@@ -181,6 +200,13 @@ mod tests {
         assert_eq!(
             ErrorCode::PrefixPolicyMismatch.as_str(),
             "prefix_policy_mismatch"
+        );
+        assert_eq!(ErrorCode::Draining.as_str(), "draining");
+        assert_eq!(ErrorCode::ReplicaUnavailable.as_str(), "replica_unavailable");
+        assert_eq!(ApiError::draining().code, ErrorCode::Draining);
+        assert_eq!(
+            ApiError::replica_unavailable("gone").to_string(),
+            "replica_unavailable: gone"
         );
         assert_eq!(
             ApiError::missing_field("prompt").to_string(),

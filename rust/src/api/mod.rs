@@ -31,6 +31,7 @@ pub use codec::{
 pub use error::{ApiError, ErrorCode};
 pub use session::{SessionConfig, SessionManager, TurnOpts};
 pub use types::{
-    ApiRequest, ApiResponse, CalibrationReport, GenerateSpec, GenerationResult,
-    PolicyInfo, PolicyReport, PoolReport, PrefixReport, SessionTurn,
+    ApiRequest, ApiResponse, CalibrationReport, DrainReport, GenerateSpec,
+    GenerationResult, PolicyInfo, PolicyReport, PoolReport, PrefixReport,
+    SessionTurn,
 };

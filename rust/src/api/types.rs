@@ -117,6 +117,13 @@ pub enum ApiRequest {
     PrefixRelease { name: String },
     /// List registered prefixes (v3 only).
     Prefixes,
+    /// Drain this replica for a rolling restart (v3 only): stop admitting
+    /// new generation/session/prefix work (typed `draining` errors),
+    /// finish every in-flight stream, release shared prefixes, reply, and
+    /// stop accepting connections. `deadline_ms` bounds the quiesce wait;
+    /// on expiry the reply reports `drained:false` and the replica stays
+    /// in the draining state (admission remains closed).
+    Drain { deadline_ms: Option<u64> },
 }
 
 impl ApiRequest {
@@ -137,8 +144,24 @@ impl ApiRequest {
             ApiRequest::PrefixRegister { .. } => "prefix_register",
             ApiRequest::PrefixRelease { .. } => "prefix_release",
             ApiRequest::Prefixes => "prefixes",
+            ApiRequest::Drain { .. } => "drain",
         }
     }
+}
+
+/// Outcome of a `drain` op.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DrainReport {
+    /// True when the replica fully quiesced (no queued or in-flight work)
+    /// before the deadline; false means the deadline expired first — the
+    /// replica keeps refusing new work but has not exited.
+    pub drained: bool,
+    /// Milliseconds spent waiting for in-flight work to finish.
+    pub waited_ms: u64,
+    /// Requests still in flight when the reply was sent (0 on success).
+    pub inflight: u64,
+    /// Shared prefixes released as part of the drain.
+    pub released_prefixes: usize,
 }
 
 /// Outcome of one generation (also the per-item shape of a batch reply).
@@ -304,5 +327,9 @@ pub enum ApiResponse {
     PrefixReleased(crate::coordinator::PrefixInfo),
     /// Reply to `prefixes`: all registrations, name-sorted.
     Prefixes(Vec<crate::coordinator::PrefixInfo>),
+    /// Reply to `drain`: sent after in-flight work finished (or the
+    /// drain deadline expired), immediately before the replica stops
+    /// accepting connections.
+    Drained(DrainReport),
     Error(ApiError),
 }

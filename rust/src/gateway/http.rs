@@ -1,0 +1,327 @@
+//! Hand-rolled HTTP/1.1 over `std::net` — request parsing and response
+//! writing for the gateway. Deliberately minimal: JSON-lines semantics
+//! with HTTP framing. Supported: `Content-Length` bodies, keep-alive
+//! (the 1.1 default), case-insensitive headers, path + query split.
+//! Unsupported (typed 4xx/5xx, never silent): chunked request bodies,
+//! HTTP/0.9/2, multipart.
+
+use std::io::{self, BufRead, Read, Write};
+
+use crate::util::json::{self, Value};
+
+/// Request bodies above this are refused with 413 before buffering.
+pub const MAX_BODY_BYTES: usize = 4 << 20;
+/// A request line / header section above this is malformed.
+pub const MAX_HEADER_BYTES: usize = 64 << 10;
+
+/// One parsed request. `path` excludes the query string.
+#[derive(Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub query: String,
+    /// Header names lowercased at parse time.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+/// Why a request could not be parsed.
+#[derive(Debug)]
+pub enum HttpParseError {
+    /// Clean close / socket error: no response owed.
+    Io(io::Error),
+    /// Syntactically broken request: answer 400 and close.
+    Malformed(String),
+    /// Body over [`MAX_BODY_BYTES`]: answer 413 and close.
+    BodyTooLarge(usize),
+}
+
+impl HttpRequest {
+    /// Case-insensitive single-valued header lookup.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// HTTP/1.1 keeps the connection unless the client says otherwise.
+    pub fn keep_alive(&self) -> bool {
+        !self
+            .header("connection")
+            .is_some_and(|v| v.eq_ignore_ascii_case("close"))
+    }
+
+    /// The body as a JSON object ({} when empty — every route with a
+    /// body treats all fields as optional-or-validated downstream).
+    pub fn body_object(&self) -> Result<Value, String> {
+        if self.body.is_empty() {
+            return Ok(Value::obj(vec![]));
+        }
+        let text = std::str::from_utf8(&self.body)
+            .map_err(|_| "request body is not UTF-8".to_string())?;
+        let v = json::parse(text.trim())
+            .map_err(|e| format!("request body is not valid JSON: {e}"))?;
+        match v {
+            Value::Obj(_) => Ok(v),
+            _ => Err("request body must be a JSON object".into()),
+        }
+    }
+}
+
+/// Read one request off the connection. `Ok(None)` is a clean EOF
+/// between requests (keep-alive close).
+pub fn read_request(
+    reader: &mut impl BufRead,
+) -> Result<Option<HttpRequest>, HttpParseError> {
+    let Some(request_line) = read_header_line(reader)? else {
+        return Ok(None);
+    };
+    let mut parts = request_line.split_ascii_whitespace();
+    let (method, target, version) =
+        match (parts.next(), parts.next(), parts.next(), parts.next()) {
+            (Some(m), Some(t), Some(v), None) => (m, t, v),
+            _ => {
+                return Err(HttpParseError::Malformed(format!(
+                    "bad request line: {request_line:?}"
+                )))
+            }
+        };
+    if !version.starts_with("HTTP/1.") {
+        return Err(HttpParseError::Malformed(format!(
+            "unsupported protocol version {version:?}"
+        )));
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target.to_string(), String::new()),
+    };
+
+    let mut headers = Vec::new();
+    let mut header_bytes = 0usize;
+    loop {
+        let Some(line) = read_header_line(reader)? else {
+            return Err(HttpParseError::Malformed(
+                "connection closed inside the header section".into(),
+            ));
+        };
+        if line.is_empty() {
+            break;
+        }
+        header_bytes += line.len();
+        if header_bytes > MAX_HEADER_BYTES {
+            return Err(HttpParseError::Malformed(
+                "header section too large".into(),
+            ));
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(HttpParseError::Malformed(format!(
+                "bad header line: {line:?}"
+            )));
+        };
+        headers.push((
+            name.trim().to_ascii_lowercase(),
+            value.trim().to_string(),
+        ));
+    }
+
+    let mut req = HttpRequest {
+        method: method.to_ascii_uppercase(),
+        path,
+        query,
+        headers,
+        body: Vec::new(),
+    };
+    if req
+        .header("transfer-encoding")
+        .is_some_and(|v| !v.eq_ignore_ascii_case("identity"))
+    {
+        return Err(HttpParseError::Malformed(
+            "chunked request bodies are not supported; send Content-Length"
+                .into(),
+        ));
+    }
+    if let Some(len) = req.header("content-length") {
+        let len: usize = len.trim().parse().map_err(|_| {
+            HttpParseError::Malformed(format!("bad content-length {len:?}"))
+        })?;
+        if len > MAX_BODY_BYTES {
+            return Err(HttpParseError::BodyTooLarge(len));
+        }
+        let mut body = vec![0u8; len];
+        reader.read_exact(&mut body).map_err(HttpParseError::Io)?;
+        req.body = body;
+    }
+    Ok(Some(req))
+}
+
+/// One CRLF (or bare-LF) terminated line; `None` on EOF before any byte.
+fn read_header_line(
+    reader: &mut impl BufRead,
+) -> Result<Option<String>, HttpParseError> {
+    let mut line = String::new();
+    match reader.read_line(&mut line) {
+        Ok(0) => Ok(None),
+        Ok(_) => Ok(Some(
+            line.trim_end_matches('\n').trim_end_matches('\r').to_string(),
+        )),
+        Err(e) => Err(HttpParseError::Io(e)),
+    }
+}
+
+pub fn status_text(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        499 => "Client Closed Request",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+/// Write a JSON response (buffered into one syscall-friendly write).
+pub fn write_json(
+    w: &mut impl Write,
+    status: u16,
+    body: &Value,
+    keep_alive: bool,
+) -> io::Result<()> {
+    let payload = format!("{body}\n");
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\ncontent-type: application/json\r\n\
+         content-length: {}\r\nconnection: {}\r\n\r\n",
+        status_text(status),
+        payload.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    w.write_all(head.as_bytes())?;
+    w.write_all(payload.as_bytes())?;
+    w.flush()
+}
+
+/// Start an SSE response: headers only, unbounded body, connection
+/// closes when the stream ends (no content-length by design).
+pub fn write_sse_header(w: &mut impl Write) -> io::Result<()> {
+    w.write_all(
+        b"HTTP/1.1 200 OK\r\ncontent-type: text/event-stream\r\n\
+          cache-control: no-store\r\nconnection: close\r\n\r\n",
+    )?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    fn parse(raw: &str) -> Result<Option<HttpRequest>, HttpParseError> {
+        read_request(&mut BufReader::new(raw.as_bytes()))
+    }
+
+    #[test]
+    fn parses_request_with_body_and_query() {
+        let req = parse(
+            "POST /v1/generate?verbose=1 HTTP/1.1\r\nHost: x\r\n\
+             Content-Type: application/json\r\nContent-Length: 13\r\n\r\n\
+             {\"prompt\":\"y\"}",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/generate");
+        assert_eq!(req.query, "verbose=1");
+        assert_eq!(req.header("content-type"), Some("application/json"));
+        assert_eq!(req.header("HOST"), Some("x"));
+        assert!(req.keep_alive());
+        let body = req.body_object().unwrap();
+        assert_eq!(body.get("prompt").as_str(), Some("y"));
+    }
+
+    #[test]
+    fn empty_body_is_empty_object_and_close_is_honoured() {
+        let req = parse(
+            "GET /v1/health HTTP/1.1\r\nConnection: close\r\n\r\n",
+        )
+        .unwrap()
+        .unwrap();
+        assert!(!req.keep_alive());
+        assert_eq!(req.body_object().unwrap(), Value::obj(vec![]));
+    }
+
+    #[test]
+    fn eof_and_malformed_inputs_are_distinguished() {
+        assert!(parse("").unwrap().is_none(), "clean EOF");
+        assert!(matches!(
+            parse("GARBAGE\r\n\r\n"),
+            Err(HttpParseError::Malformed(_))
+        ));
+        assert!(matches!(
+            parse("GET / SPDY/3\r\n\r\n"),
+            Err(HttpParseError::Malformed(_))
+        ));
+        assert!(matches!(
+            parse("GET / HTTP/1.1\r\nno-colon-here\r\n\r\n"),
+            Err(HttpParseError::Malformed(_))
+        ));
+        assert!(matches!(
+            parse("POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n"),
+            Err(HttpParseError::Malformed(_))
+        ));
+        assert!(matches!(
+            parse(&format!(
+                "POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+                MAX_BODY_BYTES + 1
+            )),
+            Err(HttpParseError::BodyTooLarge(_))
+        ));
+        // truncated mid-headers: the line reader sees EOF, not a request
+        assert!(matches!(
+            parse("GET / HTTP/1.1\r\nHost: x\r\n"),
+            Err(HttpParseError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn bad_body_json_is_reported() {
+        let req = parse(
+            "POST / HTTP/1.1\r\nContent-Length: 4\r\n\r\nnope",
+        )
+        .unwrap()
+        .unwrap();
+        assert!(req.body_object().is_err());
+        let req = parse(
+            "POST / HTTP/1.1\r\nContent-Length: 2\r\n\r\n[]",
+        )
+        .unwrap()
+        .unwrap();
+        assert!(req.body_object().unwrap_err().contains("object"));
+    }
+
+    #[test]
+    fn responses_render_status_lines() {
+        let mut buf = Vec::new();
+        write_json(
+            &mut buf,
+            429,
+            &Value::obj(vec![("ok", Value::Bool(false))]),
+            true,
+        )
+        .unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
+        assert!(text.contains("connection: keep-alive"));
+        assert!(text.ends_with("{\"ok\":false}\n"));
+        let mut buf = Vec::new();
+        write_sse_header(&mut buf).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.contains("text/event-stream"));
+    }
+}

@@ -1,0 +1,1369 @@
+//! HTTP/SSE gateway over a replica fleet — one engine becomes a
+//! horizontally scalable service.
+//!
+//! The gateway is a dependency-free HTTP/1.1 front end (hand-rolled
+//! parsing over `std::net`, [`routes`] typed route table, JSON via
+//! `util::json`) that speaks the v3 multiplexed wire protocol to N
+//! engine replicas through [`crate::server::MuxClient`]. It owns the
+//! fleet-level concerns the per-process server cannot:
+//!
+//! * **Routing** ([`router::ReplicaRegistry`]): session affinity (a
+//!   session is pinned to the replica that opened it, forever),
+//!   shared-prefix-aware placement (requests naming a `prefix_id` go to
+//!   a replica where that prefix is resident), least-inflight fallback,
+//!   and load shedding with typed 429s once a replica's in-flight count
+//!   hits the configured cap.
+//! * **Streaming**: every streaming operation is exposed as one SSE
+//!   stream (`token` events, then a terminal `done`/`error` event — see
+//!   [`sse`]). A client hang-up mid-stream propagates a `cancel` to the
+//!   replica so fleet capacity is reclaimed.
+//! * **Drain** (`POST /v1/admin/drain`): takes one replica out of
+//!   rotation — new work is refused with typed `draining` errors while
+//!   every in-flight stream runs to completion, then the replica
+//!   releases its shared prefixes and stops accepting. Pinned sessions
+//!   are never migrated (their KV state lives in the replica's pools);
+//!   their next turn gets the typed error instead.
+//! * **Fleet stats** (`GET /v1/stats`): per-replica `stats` replies
+//!   merged into one fleet view (counters summed, watermarks maxed)
+//!   with the raw per-replica breakdown alongside.
+//!
+//! Replica failure is typed end to end: a dead connection surfaces as
+//! `replica_unavailable` (never a hang), the replica is evicted from
+//! rotation, and placement-routed requests retry on a survivor.
+
+pub mod http;
+pub mod router;
+pub mod routes;
+pub mod sse;
+pub mod testing;
+
+use std::io::BufReader;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::api::{self, ApiError, ApiRequest, ErrorCode};
+use crate::server::{MuxClient, MuxPending};
+use crate::util::json::Value;
+
+use http::HttpRequest;
+use router::{ReplicaRegistry, RouteHint};
+use routes::{Route, RouteFailure};
+
+/// Gateway tunables. `Default` suits tests and small fleets.
+#[derive(Debug, Clone)]
+pub struct GatewayConfig {
+    /// Per-replica in-flight cap before the router sheds with a typed
+    /// 429 (`capacity`). 0 disables shedding.
+    pub shed_inflight: u64,
+    /// Deadline injected into generation ops whose body sets none.
+    pub default_deadline_ms: Option<u64>,
+    /// Emit one structured JSON log line per request to stderr.
+    pub log_requests: bool,
+    /// Model depth for request validation (layer-wise policy strings).
+    /// 0 = probe it from the first replica's `policies` reply at bind.
+    pub n_layers: usize,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        Self {
+            shed_inflight: 256,
+            default_deadline_ms: None,
+            log_requests: false,
+            n_layers: 0,
+        }
+    }
+}
+
+/// The HTTP front end. Bind with [`Gateway::bind`], run with
+/// [`Gateway::serve`] (blocking accept loop; spawn a thread to run it
+/// alongside other work), stop with [`Gateway::request_stop`].
+pub struct Gateway {
+    listener: TcpListener,
+    stop: AtomicBool,
+    registry: ReplicaRegistry,
+    /// Connection slots, parallel to the registry's replica indices.
+    /// `None` once evicted. In-flight handlers hold their own `Arc`
+    /// clone, so dropping a slot never severs a stream mid-flight —
+    /// the socket shuts down when the last handler finishes.
+    clients: Mutex<Vec<Option<Arc<MuxClient>>>>,
+    n_layers: usize,
+    default_deadline_ms: Option<u64>,
+    log_requests: bool,
+}
+
+/// Result of one handled HTTP request, for logging and keep-alive.
+struct Outcome {
+    status: u16,
+    /// Typed error code, when the reply (or terminal SSE event) was one.
+    code: Option<String>,
+    /// Replica that served the request, when exactly one did.
+    replica: Option<String>,
+    /// False once this connection cannot carry another request (SSE
+    /// always closes; so do write failures).
+    open: bool,
+}
+
+/// `{"error":{"code":…,"message":…}}` — the HTTP error body shape.
+fn error_body(e: &ApiError) -> Value {
+    Value::obj(vec![(
+        "error",
+        Value::obj(vec![
+            ("code", Value::str_of(e.code.as_str())),
+            ("message", Value::str_of(e.message.clone())),
+        ]),
+    )])
+}
+
+/// The typed code inside an error reply, if the value is one.
+fn error_code_of(v: &Value) -> Option<String> {
+    v.get("error").get("code").as_str().map(str::to_string)
+}
+
+/// Map a typed error-code string to its HTTP status. The full table
+/// lives in docs/API.md; everything unlisted is a 400-class validation
+/// failure (`bad_json`, `bad_field`, `missing_field`, …).
+pub fn status_for_code(code: &str) -> u16 {
+    match code {
+        "unknown_session" | "unknown_prefix" | "unknown_op" => 404,
+        "session_busy" | "prefix_policy_mismatch" => 409,
+        "capacity" | "too_many_inflight" => 429,
+        "cancelled" => 499,
+        "draining" | "replica_unavailable" => 503,
+        "deadline_exceeded" => 504,
+        "engine" | "internal" => 500,
+        _ => 400,
+    }
+}
+
+/// Drop the wire-framing fields (`v`, `tag`, `done`) from a reply frame
+/// so HTTP bodies and SSE event data carry only the operation schema.
+fn strip_wire(mut v: Value) -> Value {
+    if let Value::Obj(o) = &mut v {
+        o.remove("v");
+        o.remove("tag");
+        o.remove("done");
+    }
+    v
+}
+
+/// Fleet-stats merge: keys where the fleet value is the per-replica
+/// maximum (watermarks, clocks, latency percentiles) rather than a sum.
+fn merged_as_max(key: &str) -> bool {
+    matches!(key, "elapsed_s" | "inflight_peak" | "mean_batch")
+        || key.ends_with("_p50_s")
+        || key.ends_with("_p95_s")
+}
+
+/// Merge per-replica stats objects into one fleet object: numeric
+/// fields sum (counters, throughput, accumulated seconds) except the
+/// [`merged_as_max`] watermark keys; nested objects merge recursively.
+fn merge_stats(values: &[Value]) -> Value {
+    let mut keys: Vec<String> = Vec::new();
+    for v in values {
+        if let Value::Obj(o) = v {
+            for k in o.keys() {
+                if !keys.contains(k) {
+                    keys.push(k.clone());
+                }
+            }
+        }
+    }
+    let mut out = Vec::new();
+    for key in keys {
+        let present: Vec<&Value> = values
+            .iter()
+            .map(|v| v.get(&key))
+            .filter(|v| !matches!(v, Value::Null))
+            .collect();
+        let Some(first) = present.first() else { continue };
+        let merged = match first {
+            Value::Obj(_) => {
+                let children: Vec<Value> =
+                    present.iter().map(|v| (*v).clone()).collect();
+                merge_stats(&children)
+            }
+            Value::Num(_) => {
+                let nums = present.iter().filter_map(|v| v.as_f64());
+                if merged_as_max(&key) {
+                    Value::num(nums.fold(f64::NEG_INFINITY, f64::max))
+                } else {
+                    Value::num(nums.sum())
+                }
+            }
+            other => (*other).clone(),
+        };
+        out.push((key, merged));
+    }
+    Value::Obj(out.into_iter().collect())
+}
+
+impl Gateway {
+    /// Connect to every replica, probe the model depth (unless given),
+    /// and bind the HTTP listener. Fails if any replica is unreachable —
+    /// a fleet that starts degraded is a misconfiguration, not a state
+    /// to route around silently.
+    pub fn bind(
+        addr: &str,
+        replicas: &[String],
+        cfg: GatewayConfig,
+    ) -> Result<Self> {
+        anyhow::ensure!(
+            !replicas.is_empty(),
+            "a gateway needs at least one replica address"
+        );
+        let registry = ReplicaRegistry::new(cfg.shed_inflight);
+        let mut clients = Vec::new();
+        for r in replicas {
+            let c = MuxClient::connect(r)
+                .with_context(|| format!("connecting to replica {r}"))?;
+            registry.add(r);
+            clients.push(Some(Arc::new(c)));
+        }
+        let n_layers = if cfg.n_layers > 0 {
+            cfg.n_layers
+        } else {
+            let first = clients[0].as_ref().expect("slot just filled");
+            let reply = first
+                .submit(&ApiRequest::Policies { policy: None })?
+                .wait_done()
+                .context("probing n_layers via the policies op")?;
+            reply.get("n_layers").as_usize().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "replica {} policies reply carries no n_layers: {reply}",
+                    replicas[0]
+                )
+            })?
+        };
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding gateway on {addr}"))?;
+        Ok(Self {
+            listener,
+            stop: AtomicBool::new(false),
+            registry,
+            clients: Mutex::new(clients),
+            n_layers,
+            default_deadline_ms: cfg.default_deadline_ms,
+            log_requests: cfg.log_requests,
+        })
+    }
+
+    pub fn local_addr(&self) -> String {
+        self.listener
+            .local_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_default()
+    }
+
+    /// The routing table (used by tests and the `/v1/replicas` route).
+    pub fn registry(&self) -> &ReplicaRegistry {
+        &self.registry
+    }
+
+    /// Ask the accept loop to exit (same self-connect wakeup as
+    /// `Server::request_stop`). Open connections finish their current
+    /// request; no new connections are accepted.
+    pub fn request_stop(&self) {
+        use std::net::{IpAddr, Ipv4Addr, Ipv6Addr};
+        self.stop.store(true, Ordering::SeqCst);
+        if let Ok(mut addr) = self.listener.local_addr() {
+            if addr.ip().is_unspecified() {
+                addr.set_ip(match addr.ip() {
+                    IpAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
+                    IpAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
+                });
+            }
+            let _ = TcpStream::connect(addr);
+        }
+    }
+
+    /// Accept loop (blocks): one handler thread per connection.
+    pub fn serve(self: &Arc<Self>) -> Result<()> {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    if self.stop.load(Ordering::SeqCst) {
+                        return Ok(()); // wakeup connection; drop it
+                    }
+                    let gw = self.clone();
+                    std::thread::spawn(move || gw.handle_conn(stream));
+                }
+                Err(e) => {
+                    if self.stop.load(Ordering::SeqCst) {
+                        return Ok(());
+                    }
+                    return Err(e.into());
+                }
+            }
+        }
+    }
+
+    fn client(&self, idx: usize) -> Option<Arc<MuxClient>> {
+        self.clients.lock().unwrap().get(idx).cloned().flatten()
+    }
+
+    /// Take a replica out of rotation: the registry forgets its
+    /// residency and the connection slot is dropped. Handlers that are
+    /// mid-stream keep their own `Arc`, so their frames still deliver.
+    fn evict(&self, idx: usize) {
+        self.registry.evict(idx);
+        if let Some(slot) = self.clients.lock().unwrap().get_mut(idx) {
+            *slot = None;
+        }
+    }
+
+    fn log(&self, req: &HttpRequest, out: &Outcome, started: Instant) {
+        if !self.log_requests {
+            return;
+        }
+        let mut fields = vec![
+            ("at", Value::str_of("gateway")),
+            ("method", Value::str_of(req.method.clone())),
+            ("path", Value::str_of(req.path.clone())),
+            ("status", Value::num(out.status as f64)),
+            (
+                "ms",
+                Value::num(
+                    (started.elapsed().as_secs_f64() * 1e4).round() / 10.0,
+                ),
+            ),
+        ];
+        if let Some(c) = &out.code {
+            fields.push(("code", Value::str_of(c.clone())));
+        }
+        if let Some(r) = &out.replica {
+            fields.push(("replica", Value::str_of(r.clone())));
+        }
+        eprintln!("{}", Value::obj(fields));
+    }
+
+    fn handle_conn(self: Arc<Self>, stream: TcpStream) {
+        let Ok(rstream) = stream.try_clone() else { return };
+        let mut reader = BufReader::new(rstream);
+        let mut w = stream;
+        loop {
+            let started = Instant::now();
+            let req = match http::read_request(&mut reader) {
+                Ok(Some(r)) => r,
+                Ok(None) | Err(http::HttpParseError::Io(_)) => return,
+                Err(http::HttpParseError::Malformed(m)) => {
+                    let _ = http::write_json(
+                        &mut w,
+                        400,
+                        &error_body(&ApiError::bad_json(m)),
+                        false,
+                    );
+                    return;
+                }
+                Err(http::HttpParseError::BodyTooLarge(n)) => {
+                    let e = ApiError::new(
+                        ErrorCode::Capacity,
+                        format!(
+                            "request body of {n} bytes exceeds the \
+                             {}-byte limit",
+                            http::MAX_BODY_BYTES
+                        ),
+                    );
+                    let _ =
+                        http::write_json(&mut w, 413, &error_body(&e), false);
+                    return;
+                }
+            };
+            let keep = req.keep_alive() && !self.stop.load(Ordering::SeqCst);
+            let out = self.handle_request(&req, &mut w, keep);
+            self.log(&req, &out, started);
+            if !out.open {
+                return;
+            }
+        }
+    }
+
+    /// Write a JSON reply and fold it into an [`Outcome`].
+    fn reply_json(
+        &self,
+        w: &mut TcpStream,
+        status: u16,
+        body: &Value,
+        keep: bool,
+        replica: Option<String>,
+    ) -> Outcome {
+        let wrote = http::write_json(w, status, body, keep).is_ok();
+        Outcome {
+            status,
+            code: error_code_of(body),
+            replica,
+            open: keep && wrote,
+        }
+    }
+
+    fn reply_error(
+        &self,
+        w: &mut TcpStream,
+        status: u16,
+        e: &ApiError,
+        keep: bool,
+    ) -> Outcome {
+        self.reply_json(w, status, &error_body(e), keep, None)
+    }
+
+    fn handle_request(
+        &self,
+        req: &HttpRequest,
+        w: &mut TcpStream,
+        keep: bool,
+    ) -> Outcome {
+        let m = match routes::resolve(&req.method, &req.path) {
+            Ok(m) => m,
+            Err(RouteFailure::NotFound) => {
+                let e = ApiError::new(
+                    ErrorCode::UnknownOp,
+                    format!("no route for {} {}", req.method, req.path),
+                );
+                return self.reply_error(w, 404, &e, keep);
+            }
+            Err(RouteFailure::MethodNotAllowed(allow)) => {
+                let e = ApiError::new(
+                    ErrorCode::UnknownOp,
+                    format!(
+                        "{} does not support {}; allowed: {allow}",
+                        req.path, req.method
+                    ),
+                );
+                return self.reply_error(w, 405, &e, keep);
+            }
+        };
+        match m.route {
+            Route::Health => self.handle_health(w, keep),
+            Route::Stats => self.handle_stats(w, keep),
+            Route::Replicas => self.handle_replicas(w, keep),
+            Route::Policies => self.handle_policies(w, keep),
+            Route::Generate => self.handle_generate(req, w, keep),
+            Route::SessionOpen => self.handle_session_open(req, w, keep),
+            Route::SessionTurn => {
+                self.handle_session_turn(req, &m.params[0], w, keep)
+            }
+            Route::SessionClose => {
+                self.handle_session_close(&m.params[0], w, keep)
+            }
+            Route::PrefixList => self.handle_prefix_list(w, keep),
+            Route::PrefixRegister => {
+                self.handle_prefix_register(req, w, keep)
+            }
+            Route::PrefixRelease => {
+                self.handle_prefix_release(&m.params[0], w, keep)
+            }
+            Route::Drain => self.handle_drain(req, w, keep),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // request synthesis + routed submission
+    // ------------------------------------------------------------------
+
+    /// Build a typed [`ApiRequest`] from an HTTP body: the body is the
+    /// operation's v3 object minus the wire framing, which the gateway
+    /// injects before running the line through the SAME strict decoder
+    /// the replicas use — HTTP clients get byte-identical validation
+    /// (typed `bad_field`/`missing_field`/… errors) to socket clients.
+    fn decode_body_op(
+        &self,
+        req: &HttpRequest,
+        op: &str,
+        extra: &[(&str, Value)],
+        inject_deadline: bool,
+    ) -> Result<ApiRequest, (u16, ApiError)> {
+        let body = req
+            .body_object()
+            .map_err(|m| (400, ApiError::bad_json(m)))?;
+        let Value::Obj(mut o) = body else { unreachable!() };
+        for k in ["v", "op", "tag", "done"] {
+            if o.contains_key(k) {
+                return Err((
+                    400,
+                    ApiError::bad_field(
+                        k,
+                        "wire-framing field; not allowed in an HTTP body",
+                    ),
+                ));
+            }
+        }
+        for (k, v) in extra {
+            if o.contains_key(*k) {
+                return Err((
+                    400,
+                    ApiError::bad_field(
+                        k,
+                        "set by the route path; not allowed in the body",
+                    ),
+                ));
+            }
+            o.insert((*k).to_string(), v.clone());
+        }
+        o.insert("v".to_string(), Value::num(3.0));
+        o.insert("op".to_string(), Value::str_of(op));
+        o.insert("tag".to_string(), Value::num(0.0));
+        if inject_deadline {
+            if let Some(ms) = self.default_deadline_ms {
+                o.entry("deadline_ms".to_string())
+                    .or_insert(Value::num(ms as f64));
+            }
+        }
+        let line = Value::Obj(o).to_string();
+        match api::decode_frame(&line, self.n_layers) {
+            Ok(f) => Ok(f.req),
+            Err(de) => {
+                Err((status_for_code(de.error.code.as_str()), de.error))
+            }
+        }
+    }
+
+    /// Route + submit with replica-failure recovery: a dead connection
+    /// evicts the replica and (for `Any`/`Prefix` placement) retries on
+    /// a survivor. Session-pinned requests never retry elsewhere — the
+    /// session's KV state died with its replica.
+    /// On success the registry's in-flight count for the chosen replica
+    /// is held; every exit path must pair it with `end_request`.
+    fn submit_routed(
+        &self,
+        hint: RouteHint<'_>,
+        req: &ApiRequest,
+    ) -> Result<(usize, Arc<MuxClient>, MuxPending), (u16, ApiError)> {
+        let attempts =
+            if matches!(hint, RouteHint::Session(_)) { 1 } else { 3 };
+        for _ in 0..attempts {
+            let idx = self.registry.route(hint).map_err(|e| {
+                let api = e.to_api_error();
+                (status_for_code(api.code.as_str()), api)
+            })?;
+            let client = match self.client(idx) {
+                Some(c) if !c.is_closed() => c,
+                _ => {
+                    self.registry.end_request(idx);
+                    self.evict(idx);
+                    continue;
+                }
+            };
+            match client.submit(req) {
+                Ok(p) => return Ok((idx, client, p)),
+                Err(_) => {
+                    self.registry.end_request(idx);
+                    self.evict(idx);
+                    continue;
+                }
+            }
+        }
+        Err((
+            503,
+            ApiError::replica_unavailable(
+                "replica connection failed and no retry succeeded",
+            ),
+        ))
+    }
+
+    /// Wait for a unary (non-streaming) reply. `counted` releases the
+    /// in-flight hold taken by `submit_routed`.
+    fn wait_unary(
+        &self,
+        idx: usize,
+        pending: &MuxPending,
+        counted: bool,
+    ) -> (u16, Value) {
+        let result = pending.wait_done();
+        if counted {
+            self.registry.end_request(idx);
+        }
+        match result {
+            Ok(frame) => {
+                let body = strip_wire(frame);
+                match error_code_of(&body) {
+                    Some(code) => {
+                        if code == "replica_unavailable" {
+                            self.evict(idx);
+                        }
+                        (status_for_code(&code), body)
+                    }
+                    None => (200, body),
+                }
+            }
+            Err(_) => {
+                self.evict(idx);
+                (
+                    503,
+                    error_body(&ApiError::replica_unavailable(
+                        "replica connection closed mid-request",
+                    )),
+                )
+            }
+        }
+    }
+
+    /// Relay a streaming reply as one SSE stream: `token` events, then
+    /// a terminal `done` or `error` event. A client hang-up propagates
+    /// a cancel to the replica. SSE connections never keep-alive.
+    fn stream_reply(
+        &self,
+        idx: usize,
+        client: &Arc<MuxClient>,
+        pending: &MuxPending,
+        w: &mut TcpStream,
+    ) -> Outcome {
+        let replica = Some(self.registry.name_of(idx));
+        if http::write_sse_header(w).is_err() {
+            let _ = client.cancel(pending.tag);
+            self.registry.end_request(idx);
+            return Outcome {
+                status: 200,
+                code: Some("client_gone".into()),
+                replica,
+                open: false,
+            };
+        }
+        loop {
+            let Ok(frame) = pending.recv() else {
+                // the reader thread now always fails pendings with a
+                // typed frame; a raw channel error means it is gone too
+                let e = ApiError::replica_unavailable(
+                    "replica connection closed mid-stream",
+                );
+                let _ = sse::write_event(w, sse::EVENT_ERROR, &error_body(&e));
+                self.registry.end_request(idx);
+                self.evict(idx);
+                return Outcome {
+                    status: 200,
+                    code: Some("replica_unavailable".into()),
+                    replica,
+                    open: false,
+                };
+            };
+            let done = frame.get("done").as_bool() == Some(true);
+            let body = strip_wire(frame);
+            if !done {
+                if sse::write_event(w, sse::EVENT_TOKEN, &body).is_err() {
+                    // client hung up: reclaim the replica's capacity
+                    let _ = client.cancel(pending.tag);
+                    self.registry.end_request(idx);
+                    return Outcome {
+                        status: 499,
+                        code: Some("client_gone".into()),
+                        replica,
+                        open: false,
+                    };
+                }
+                continue;
+            }
+            let code = error_code_of(&body);
+            let event = if code.is_some() {
+                sse::EVENT_ERROR
+            } else {
+                sse::EVENT_DONE
+            };
+            let _ = sse::write_event(w, event, &body);
+            self.registry.end_request(idx);
+            if code.as_deref() == Some("replica_unavailable") {
+                self.evict(idx);
+            }
+            return Outcome { status: 200, code, replica, open: false };
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // route handlers
+    // ------------------------------------------------------------------
+
+    fn handle_health(&self, w: &mut TcpStream, keep: bool) -> Outcome {
+        let views = self.registry.views();
+        let ok = views.iter().any(|v| v.live && !v.draining);
+        let replicas = views
+            .iter()
+            .map(|v| {
+                Value::obj(vec![
+                    ("name", Value::str_of(v.name.clone())),
+                    ("live", Value::Bool(v.live)),
+                    ("draining", Value::Bool(v.draining)),
+                    ("inflight", Value::num(v.inflight as f64)),
+                    ("sessions", Value::num(v.sessions as f64)),
+                ])
+            })
+            .collect();
+        let body = Value::obj(vec![
+            ("ok", Value::Bool(ok)),
+            ("replicas", Value::Arr(replicas)),
+        ]);
+        self.reply_json(w, if ok { 200 } else { 503 }, &body, keep, None)
+    }
+
+    fn handle_replicas(&self, w: &mut TcpStream, keep: bool) -> Outcome {
+        let replicas = self
+            .registry
+            .views()
+            .into_iter()
+            .map(|v| {
+                Value::obj(vec![
+                    ("name", Value::str_of(v.name)),
+                    ("live", Value::Bool(v.live)),
+                    ("draining", Value::Bool(v.draining)),
+                    ("inflight", Value::num(v.inflight as f64)),
+                    ("sessions", Value::num(v.sessions as f64)),
+                    (
+                        "prefixes",
+                        Value::arr(
+                            v.prefixes.into_iter().map(Value::str_of).collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect();
+        let s = self.registry.stats();
+        let body = Value::obj(vec![
+            ("replicas", Value::Arr(replicas)),
+            (
+                "router",
+                Value::obj(vec![
+                    ("routed", Value::num(s.routed as f64)),
+                    ("affinity_routes", Value::num(s.affinity_routes as f64)),
+                    ("prefix_local", Value::num(s.prefix_local as f64)),
+                    ("prefix_fallback", Value::num(s.prefix_fallback as f64)),
+                    ("shed", Value::num(s.shed as f64)),
+                    (
+                        "refused_unavailable",
+                        Value::num(s.refused_unavailable as f64),
+                    ),
+                ]),
+            ),
+        ]);
+        self.reply_json(w, 200, &body, keep, None)
+    }
+
+    fn handle_policies(&self, w: &mut TcpStream, keep: bool) -> Outcome {
+        let req = ApiRequest::Policies { policy: None };
+        let (idx, _client, pending) =
+            match self.submit_routed(RouteHint::Any, &req) {
+                Ok(t) => t,
+                Err((status, e)) => return self.reply_error(w, status, &e, keep),
+            };
+        let (status, body) = self.wait_unary(idx, &pending, true);
+        self.reply_json(w, status, &body, keep, Some(self.registry.name_of(idx)))
+    }
+
+    fn handle_generate(
+        &self,
+        req: &HttpRequest,
+        w: &mut TcpStream,
+        keep: bool,
+    ) -> Outcome {
+        let typed = match self.decode_body_op(req, "generate", &[], true) {
+            Ok(t) => t,
+            Err((status, e)) => return self.reply_error(w, status, &e, keep),
+        };
+        let ApiRequest::Generate(spec) = &typed else { unreachable!() };
+        let stream = spec.stream;
+        let hint = match &spec.prefix_id {
+            Some(p) => RouteHint::Prefix(p),
+            None => RouteHint::Any,
+        };
+        let (idx, client, pending) = match self.submit_routed(hint, &typed) {
+            Ok(t) => t,
+            Err((status, e)) => return self.reply_error(w, status, &e, keep),
+        };
+        if stream {
+            self.stream_reply(idx, &client, &pending, w)
+        } else {
+            let (status, body) = self.wait_unary(idx, &pending, true);
+            self.reply_json(
+                w,
+                status,
+                &body,
+                keep,
+                Some(self.registry.name_of(idx)),
+            )
+        }
+    }
+
+    fn handle_session_open(
+        &self,
+        req: &HttpRequest,
+        w: &mut TcpStream,
+        keep: bool,
+    ) -> Outcome {
+        let typed = match self.decode_body_op(req, "session_open", &[], false)
+        {
+            Ok(t) => t,
+            Err((status, e)) => return self.reply_error(w, status, &e, keep),
+        };
+        let ApiRequest::SessionOpen { prefix_id, .. } = &typed else {
+            unreachable!()
+        };
+        let hint = match prefix_id {
+            Some(p) => RouteHint::Prefix(p),
+            None => RouteHint::Any,
+        };
+        let (idx, _client, pending) = match self.submit_routed(hint, &typed) {
+            Ok(t) => t,
+            Err((status, e)) => return self.reply_error(w, status, &e, keep),
+        };
+        let (status, mut body) = self.wait_unary(idx, &pending, true);
+        let name = self.registry.name_of(idx);
+        if status == 200 {
+            let Some(remote) = body.get("session").as_i64() else {
+                let e = ApiError::new(
+                    ErrorCode::Internal,
+                    format!("replica session_open reply has no id: {body}"),
+                );
+                return self.reply_error(w, 500, &e, keep);
+            };
+            // hand the client a GATEWAY-namespaced id: replica-local ids
+            // collide across the fleet
+            let gw_id = self.registry.pin_session(idx, remote as u64);
+            if let Value::Obj(o) = &mut body {
+                o.insert("session".into(), Value::num(gw_id as f64));
+                o.insert("replica".into(), Value::str_of(name.clone()));
+            }
+        }
+        self.reply_json(w, status, &body, keep, Some(name))
+    }
+
+    fn handle_session_turn(
+        &self,
+        req: &HttpRequest,
+        id_param: &str,
+        w: &mut TcpStream,
+        keep: bool,
+    ) -> Outcome {
+        let Ok(gw_id) = id_param.parse::<u64>() else {
+            let e = ApiError::bad_field("session", "path id must be a u64");
+            return self.reply_error(w, 400, &e, keep);
+        };
+        let Some(pin) = self.registry.session_pin(gw_id) else {
+            return self.reply_error(
+                w,
+                404,
+                &ApiError::unknown_session(gw_id),
+                keep,
+            );
+        };
+        let extra = [("session", Value::num(pin.remote as f64))];
+        let typed =
+            match self.decode_body_op(req, "session_append", &extra, true) {
+                Ok(t) => t,
+                Err((status, e)) => {
+                    return self.reply_error(w, status, &e, keep)
+                }
+            };
+        let stream = matches!(
+            &typed,
+            ApiRequest::SessionAppend { spec, .. } if spec.stream
+        );
+        let (idx, client, pending) =
+            match self.submit_routed(RouteHint::Session(gw_id), &typed) {
+                Ok(t) => t,
+                Err((status, e)) => {
+                    return self.reply_error(w, status, &e, keep)
+                }
+            };
+        if stream {
+            self.stream_reply(idx, &client, &pending, w)
+        } else {
+            let (status, mut body) = self.wait_unary(idx, &pending, true);
+            if let Value::Obj(o) = &mut body {
+                // replies echo the replica-local id; restore ours
+                if o.contains_key("session") {
+                    o.insert("session".into(), Value::num(gw_id as f64));
+                }
+            }
+            self.reply_json(
+                w,
+                status,
+                &body,
+                keep,
+                Some(self.registry.name_of(idx)),
+            )
+        }
+    }
+
+    fn handle_session_close(
+        &self,
+        id_param: &str,
+        w: &mut TcpStream,
+        keep: bool,
+    ) -> Outcome {
+        let Ok(gw_id) = id_param.parse::<u64>() else {
+            let e = ApiError::bad_field("session", "path id must be a u64");
+            return self.reply_error(w, 400, &e, keep);
+        };
+        let Some(pin) = self.registry.session_pin(gw_id) else {
+            return self.reply_error(
+                w,
+                404,
+                &ApiError::unknown_session(gw_id),
+                keep,
+            );
+        };
+        let name = self.registry.name_of(pin.replica);
+        let gone = |this: &Self| {
+            this.registry.unpin_session(gw_id);
+            Value::obj(vec![
+                ("session", Value::num(gw_id as f64)),
+                ("closed", Value::Bool(true)),
+                ("replica_gone", Value::Bool(true)),
+            ])
+        };
+        // closes stay admissible on a DRAINING replica (clients must be
+        // able to wind down), so bypass route() and talk to the pin
+        let client = match self.client(pin.replica) {
+            Some(c) if self.registry.is_live(pin.replica) && !c.is_closed() => {
+                c
+            }
+            _ => {
+                // the replica (and the session's KV state) is gone;
+                // report it closed rather than erroring a no-op
+                let body = gone(self);
+                return self.reply_json(w, 200, &body, keep, Some(name));
+            }
+        };
+        let req = ApiRequest::SessionClose { session: pin.remote };
+        let pending = match client.submit(&req) {
+            Ok(p) => p,
+            Err(_) => {
+                self.evict(pin.replica);
+                let body = gone(self);
+                return self.reply_json(w, 200, &body, keep, Some(name));
+            }
+        };
+        let (status, mut body) = self.wait_unary(pin.replica, &pending, false);
+        match error_code_of(&body).as_deref() {
+            None => {
+                self.registry.unpin_session(gw_id);
+                if let Value::Obj(o) = &mut body {
+                    o.insert("session".into(), Value::num(gw_id as f64));
+                    o.insert("replica".into(), Value::str_of(name.clone()));
+                }
+                self.reply_json(w, status, &body, keep, Some(name))
+            }
+            Some("unknown_session") => {
+                // stale pin (replica evicted it, e.g. idle sweep)
+                self.registry.unpin_session(gw_id);
+                self.reply_json(w, status, &body, keep, Some(name))
+            }
+            Some("replica_unavailable") => {
+                let body = gone(self);
+                self.reply_json(w, 200, &body, keep, Some(name))
+            }
+            Some(_) => self.reply_json(w, status, &body, keep, Some(name)),
+        }
+    }
+
+    fn handle_prefix_list(&self, w: &mut TcpStream, keep: bool) -> Outcome {
+        let mut pendings = Vec::new();
+        for idx in self.registry.live_indices() {
+            let Some(client) = self.client(idx) else { continue };
+            match client.submit(&ApiRequest::Prefixes) {
+                Ok(p) => pendings.push((idx, p)),
+                Err(_) => self.evict(idx),
+            }
+        }
+        let mut rows = Vec::new();
+        for (idx, p) in pendings {
+            let (status, body) = self.wait_unary(idx, &p, false);
+            if status != 200 {
+                continue;
+            }
+            let name = self.registry.name_of(idx);
+            if let Some(list) = body.get("prefixes").as_arr() {
+                for row in list {
+                    let mut row = row.clone();
+                    if let Value::Obj(o) = &mut row {
+                        o.insert("replica".into(), Value::str_of(name.clone()));
+                        // keep the registry's residency map honest even
+                        // if a prefix was registered out of band
+                        if let Some(n) = o.get("name").and_then(|v| v.as_str())
+                        {
+                            self.registry.note_prefix(idx, n);
+                        }
+                    }
+                    rows.push(row);
+                }
+            }
+        }
+        let body = Value::obj(vec![
+            ("n", Value::num(rows.len() as f64)),
+            ("prefixes", Value::Arr(rows)),
+        ]);
+        self.reply_json(w, 200, &body, keep, None)
+    }
+
+    fn handle_prefix_register(
+        &self,
+        req: &HttpRequest,
+        w: &mut TcpStream,
+        keep: bool,
+    ) -> Outcome {
+        let typed =
+            match self.decode_body_op(req, "prefix_register", &[], false) {
+                Ok(t) => t,
+                Err((status, e)) => {
+                    return self.reply_error(w, status, &e, keep)
+                }
+            };
+        let ApiRequest::PrefixRegister { name, .. } = &typed else {
+            unreachable!()
+        };
+        let targets = self.registry.admissible_indices();
+        if targets.is_empty() {
+            let e = if self.registry.live_indices().is_empty() {
+                ApiError::replica_unavailable("no live replicas")
+            } else {
+                ApiError::draining()
+            };
+            return self.reply_error(w, 503, &e, keep);
+        }
+        // fan out: submit everywhere first (prefill runs on every
+        // replica concurrently), then collect
+        let mut pendings = Vec::new();
+        let mut failed = Vec::new();
+        for idx in targets {
+            match self.client(idx) {
+                Some(client) => match client.submit(&typed) {
+                    Ok(p) => pendings.push((idx, p)),
+                    Err(_) => {
+                        self.evict(idx);
+                        failed.push((idx, None));
+                    }
+                },
+                None => failed.push((idx, None)),
+            }
+        }
+        let mut registered = Vec::new();
+        let mut first_ok: Option<Value> = None;
+        let mut first_err: Option<(u16, Value)> = None;
+        for (idx, p) in pendings {
+            let (status, body) = self.wait_unary(idx, &p, false);
+            if status == 200 {
+                self.registry.note_prefix(idx, name);
+                registered.push(self.registry.name_of(idx));
+                first_ok.get_or_insert(body);
+            } else {
+                if first_err.is_none() {
+                    first_err = Some((status, body.clone()));
+                }
+                failed.push((idx, error_code_of(&body)));
+            }
+        }
+        if registered.is_empty() {
+            let (status, body) = first_err.unwrap_or((
+                503,
+                error_body(&ApiError::replica_unavailable(
+                    "every replica connection failed during registration",
+                )),
+            ));
+            return self.reply_json(w, status, &body, keep, None);
+        }
+        let mut body = first_ok.expect("at least one success");
+        if let Value::Obj(o) = &mut body {
+            o.insert(
+                "replicas".into(),
+                Value::arr(
+                    registered.iter().cloned().map(Value::str_of).collect(),
+                ),
+            );
+            o.insert(
+                "failed".into(),
+                Value::arr(
+                    failed
+                        .iter()
+                        .map(|(idx, code)| {
+                            Value::obj(vec![
+                                (
+                                    "replica",
+                                    Value::str_of(self.registry.name_of(*idx)),
+                                ),
+                                (
+                                    "code",
+                                    code.clone()
+                                        .map(Value::str_of)
+                                        .unwrap_or(Value::str_of(
+                                            "replica_unavailable",
+                                        )),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            );
+        }
+        self.reply_json(w, 200, &body, keep, None)
+    }
+
+    fn handle_prefix_release(
+        &self,
+        name: &str,
+        w: &mut TcpStream,
+        keep: bool,
+    ) -> Outcome {
+        let holders = self.registry.prefix_holders(name);
+        let targets = if holders.is_empty() {
+            // residency map may be stale (out-of-band registration);
+            // try everywhere still live
+            self.registry.live_indices()
+        } else {
+            holders
+        };
+        let mut pendings = Vec::new();
+        for idx in targets {
+            let Some(client) = self.client(idx) else { continue };
+            match client
+                .submit(&ApiRequest::PrefixRelease { name: name.into() })
+            {
+                Ok(p) => pendings.push((idx, p)),
+                Err(_) => self.evict(idx),
+            }
+        }
+        let mut released = Vec::new();
+        let mut missing = 0usize;
+        let mut other_err: Option<(u16, Value)> = None;
+        for (idx, p) in pendings {
+            let (status, body) = self.wait_unary(idx, &p, false);
+            match error_code_of(&body).as_deref() {
+                None => released.push(self.registry.name_of(idx)),
+                Some("unknown_prefix") => missing += 1,
+                Some(_) => {
+                    if other_err.is_none() {
+                        other_err = Some((status, body));
+                    }
+                }
+            }
+        }
+        self.registry.forget_prefix(name);
+        if released.is_empty() {
+            if let Some((status, body)) = other_err {
+                return self.reply_json(w, status, &body, keep, None);
+            }
+            let e = ApiError::new(
+                ErrorCode::UnknownPrefix,
+                format!("prefix '{name}' is not registered on any replica"),
+            );
+            return self.reply_error(w, 404, &e, keep);
+        }
+        let body = Value::obj(vec![
+            ("name", Value::str_of(name)),
+            (
+                "released",
+                Value::arr(released.into_iter().map(Value::str_of).collect()),
+            ),
+            ("missing", Value::num(missing as f64)),
+        ]);
+        self.reply_json(w, 200, &body, keep, None)
+    }
+
+    fn handle_stats(&self, w: &mut TcpStream, keep: bool) -> Outcome {
+        let mut pendings = Vec::new();
+        for idx in self.registry.live_indices() {
+            let Some(client) = self.client(idx) else { continue };
+            match client.submit(&ApiRequest::Stats) {
+                Ok(p) => pendings.push((idx, p)),
+                Err(_) => self.evict(idx),
+            }
+        }
+        let mut per = Vec::new();
+        for (idx, p) in pendings {
+            let (status, body) = self.wait_unary(idx, &p, false);
+            if status != 200 {
+                continue;
+            }
+            per.push((
+                self.registry.name_of(idx),
+                self.registry.is_draining(idx),
+                body,
+            ));
+        }
+        let fleet =
+            merge_stats(&per.iter().map(|(_, _, v)| v.clone()).collect::<Vec<_>>());
+        let s = self.registry.stats();
+        let body = Value::obj(vec![
+            ("fleet", fleet),
+            (
+                "replicas",
+                Value::arr(
+                    per.into_iter()
+                        .map(|(name, draining, stats)| {
+                            Value::obj(vec![
+                                ("name", Value::str_of(name)),
+                                ("draining", Value::Bool(draining)),
+                                ("stats", stats),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "gateway",
+                Value::obj(vec![
+                    ("routed", Value::num(s.routed as f64)),
+                    ("affinity_routes", Value::num(s.affinity_routes as f64)),
+                    ("prefix_local", Value::num(s.prefix_local as f64)),
+                    ("prefix_fallback", Value::num(s.prefix_fallback as f64)),
+                    ("shed", Value::num(s.shed as f64)),
+                    (
+                        "refused_unavailable",
+                        Value::num(s.refused_unavailable as f64),
+                    ),
+                ]),
+            ),
+        ]);
+        self.reply_json(w, 200, &body, keep, None)
+    }
+
+    fn handle_drain(
+        &self,
+        req: &HttpRequest,
+        w: &mut TcpStream,
+        keep: bool,
+    ) -> Outcome {
+        let body = match req.body_object() {
+            Ok(b) => b,
+            Err(m) => return self.reply_error(w, 400, &ApiError::bad_json(m), keep),
+        };
+        let Some(name) = body.get("replica").as_str().map(str::to_string)
+        else {
+            let e = ApiError::bad_field(
+                "replica",
+                "required: the replica name to drain",
+            );
+            return self.reply_error(w, 400, &e, keep);
+        };
+        let deadline_ms = match body.get("deadline_ms") {
+            Value::Null => None,
+            v => match v.as_i64() {
+                Some(n) if n >= 1 => Some(n as u64),
+                _ => {
+                    let e = ApiError::bad_field(
+                        "deadline_ms",
+                        "must be an integer >= 1",
+                    );
+                    return self.reply_error(w, 400, &e, keep);
+                }
+            },
+        };
+        let Some(idx) = self.registry.find(&name) else {
+            let e = ApiError::replica_unavailable(format!(
+                "no replica named '{name}' in this fleet"
+            ));
+            return self.reply_error(w, 404, &e, keep);
+        };
+        if !self.registry.is_live(idx) {
+            let e = ApiError::replica_unavailable(format!(
+                "replica '{name}' was already evicted"
+            ));
+            return self.reply_error(w, 503, &e, keep);
+        }
+        // stop routing to it FIRST: in-flight work finishes, new work
+        // goes elsewhere (or gets a typed `draining` if pinned here)
+        self.registry.set_draining(idx);
+        let Some(client) = self.client(idx) else {
+            self.evict(idx);
+            let e = ApiError::replica_unavailable(format!(
+                "replica '{name}' has no live connection"
+            ));
+            return self.reply_error(w, 503, &e, keep);
+        };
+        let pending = match client.drain(deadline_ms) {
+            Ok(p) => p,
+            Err(_) => {
+                self.evict(idx);
+                let e = ApiError::replica_unavailable(format!(
+                    "replica '{name}' connection failed submitting drain"
+                ));
+                return self.reply_error(w, 503, &e, keep);
+            }
+        };
+        let (status, mut body) = self.wait_unary(idx, &pending, false);
+        let code = error_code_of(&body);
+        match code.as_deref() {
+            Some("replica_unavailable") => {
+                // it died mid-drain; eviction already happened in
+                // wait_unary — report the typed failure
+                self.reply_json(w, status, &body, keep, Some(name))
+            }
+            Some(_) => self.reply_json(w, status, &body, keep, Some(name)),
+            None => {
+                let drained = body.get("drained").as_bool() == Some(true);
+                if drained {
+                    // quiesced: out of the fleet for good. The replica
+                    // stops accepting on its own; dropping our slot
+                    // closes the mux connection once the last in-flight
+                    // handler's Arc goes away.
+                    self.evict(idx);
+                }
+                if let Value::Obj(o) = &mut body {
+                    o.insert("replica".into(), Value::str_of(name.clone()));
+                }
+                self.reply_json(w, 200, &body, keep, Some(name))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn status_mapping_covers_the_taxonomy() {
+        assert_eq!(status_for_code("bad_json"), 400);
+        assert_eq!(status_for_code("bad_field"), 400);
+        assert_eq!(status_for_code("unknown_session"), 404);
+        assert_eq!(status_for_code("unknown_prefix"), 404);
+        assert_eq!(status_for_code("session_busy"), 409);
+        assert_eq!(status_for_code("prefix_policy_mismatch"), 409);
+        assert_eq!(status_for_code("capacity"), 429);
+        assert_eq!(status_for_code("too_many_inflight"), 429);
+        assert_eq!(status_for_code("cancelled"), 499);
+        assert_eq!(status_for_code("draining"), 503);
+        assert_eq!(status_for_code("replica_unavailable"), 503);
+        assert_eq!(status_for_code("deadline_exceeded"), 504);
+        assert_eq!(status_for_code("engine"), 500);
+        assert_eq!(status_for_code("internal"), 500);
+    }
+
+    #[test]
+    fn wire_fields_are_stripped_and_codes_extracted() {
+        let v = crate::util::json::parse(
+            "{\"v\":3,\"tag\":7,\"done\":true,\"tokens\":[1]}",
+        )
+        .unwrap();
+        let s = strip_wire(v);
+        assert_eq!(s.get("v"), &Value::Null);
+        assert_eq!(s.get("tag"), &Value::Null);
+        assert_eq!(s.get("done"), &Value::Null);
+        assert!(s.get("tokens").as_arr().is_some());
+        let e = error_body(&ApiError::draining());
+        assert_eq!(error_code_of(&e).as_deref(), Some("draining"));
+        assert_eq!(error_code_of(&s), None);
+    }
+
+    #[test]
+    fn stats_merge_sums_counters_and_maxes_watermarks() {
+        let a = crate::util::json::parse(
+            "{\"requests_completed\":3,\"elapsed_s\":10.0,\
+             \"inflight_peak\":4,\"ttft_p95_s\":0.5,\
+             \"throughput_tok_s\":100.0,\"nested\":{\"x\":1}}",
+        )
+        .unwrap();
+        let b = crate::util::json::parse(
+            "{\"requests_completed\":5,\"elapsed_s\":8.0,\
+             \"inflight_peak\":9,\"ttft_p95_s\":0.25,\
+             \"throughput_tok_s\":50.0,\"nested\":{\"x\":2}}",
+        )
+        .unwrap();
+        let m = merge_stats(&[a, b]);
+        assert_eq!(m.get("requests_completed").as_f64(), Some(8.0));
+        assert_eq!(m.get("elapsed_s").as_f64(), Some(10.0));
+        assert_eq!(m.get("inflight_peak").as_f64(), Some(9.0));
+        assert_eq!(m.get("ttft_p95_s").as_f64(), Some(0.5));
+        assert_eq!(m.get("throughput_tok_s").as_f64(), Some(150.0));
+        assert_eq!(m.get("nested").get("x").as_f64(), Some(3.0));
+    }
+}

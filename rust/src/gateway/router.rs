@@ -1,0 +1,552 @@
+//! Fleet routing policy: which replica serves which request.
+//!
+//! [`ReplicaRegistry`] is pure bookkeeping — no sockets, no I/O — so the
+//! routing rules are unit-testable in isolation and the gateway's
+//! transport layer (one [`crate::server::MuxClient`] per slot) stays a
+//! parallel concern. The rules, in order:
+//!
+//! * **Session affinity** — a session's `SeqCache` lives on exactly one
+//!   replica; every turn of a pinned session MUST go there. A draining
+//!   pin is refused with the typed `draining` code (no migration: the KV
+//!   state cannot move), a dead pin with `replica_unavailable`.
+//! * **Prefix placement** — requests naming a `prefix_id` prefer the
+//!   replicas already holding the node's pages (registration fans out,
+//!   but a replica added later, or one that failed registration, holds
+//!   nothing); among holders, least-inflight wins.
+//! * **Least-inflight fallback** — everything else goes to the live,
+//!   non-draining replica with the fewest requests in flight (ties break
+//!   toward fewer pinned sessions, then lower slot index, which also
+//!   spreads fresh session opens across the fleet).
+//! * **Load shedding** — a routed slot already at `shed_inflight`
+//!   requests in flight refuses with a typed 429-mapped `capacity` error
+//!   instead of queueing unboundedly.
+
+use std::collections::{BTreeSet, HashMap};
+use std::sync::Mutex;
+
+use crate::api::{ApiError, ErrorCode};
+
+/// Where a request wants to land.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouteHint<'a> {
+    /// No placement constraint: least-inflight live replica.
+    Any,
+    /// A turn of the gateway session with this id: its pinned replica or
+    /// a typed refusal, never a different replica.
+    Session(u64),
+    /// A request attaching this shared prefix: prefer page residency.
+    Prefix(&'a str),
+}
+
+/// Why a request could not be routed; maps 1:1 onto typed wire errors.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RouteError {
+    /// No live replica at all.
+    NoReplicas,
+    /// Every admissible replica (or the session's pin) is draining.
+    Draining,
+    /// The session id was never opened here (or already closed).
+    UnknownSession(u64),
+    /// The session's pinned replica died; its KV state died with it.
+    ReplicaGone(String),
+    /// The routed replica is at its in-flight cap (load shed).
+    Overloaded { replica: String, inflight: u64, cap: u64 },
+}
+
+impl RouteError {
+    pub fn to_api_error(&self) -> ApiError {
+        match self {
+            RouteError::NoReplicas => ApiError::replica_unavailable(
+                "no live replica in the fleet",
+            ),
+            RouteError::Draining => ApiError::draining(),
+            RouteError::UnknownSession(id) => ApiError::unknown_session(*id),
+            RouteError::ReplicaGone(name) => ApiError::replica_unavailable(
+                format!("replica '{name}' holding this session is gone"),
+            ),
+            RouteError::Overloaded { replica, inflight, cap } => ApiError::new(
+                ErrorCode::Capacity,
+                format!(
+                    "replica '{replica}' is at capacity \
+                     ({inflight}/{cap} requests in flight)"
+                ),
+            ),
+        }
+    }
+}
+
+/// A session's placement: the slot index plus the replica-local id the
+/// gateway translates its own session id to on every turn.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SessionPin {
+    pub replica: usize,
+    pub remote: u64,
+}
+
+/// Point-in-time view of one slot (health/stats endpoints).
+#[derive(Debug, Clone)]
+pub struct ReplicaView {
+    pub name: String,
+    pub live: bool,
+    pub draining: bool,
+    pub inflight: u64,
+    pub sessions: usize,
+    pub prefixes: Vec<String>,
+}
+
+/// Cumulative routing counters (the fleet `stats` gateway section).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RouterStats {
+    /// Requests successfully routed to a replica.
+    pub routed: u64,
+    /// Routed via a session pin.
+    pub affinity_routes: u64,
+    /// Routed via a prefix hint that found the pages resident.
+    pub prefix_local: u64,
+    /// Prefix hint routed with NO resident replica (placement fallback;
+    /// the replica will answer `unknown_prefix` unless it since gained it).
+    pub prefix_fallback: u64,
+    /// Refused with `capacity` (load shed).
+    pub shed: u64,
+    /// Refused with `draining` / `replica_unavailable`.
+    pub refused_unavailable: u64,
+}
+
+struct Slot {
+    name: String,
+    live: bool,
+    draining: bool,
+    inflight: u64,
+    prefixes: BTreeSet<String>,
+}
+
+#[derive(Default)]
+struct Inner {
+    slots: Vec<Slot>,
+    sessions: HashMap<u64, SessionPin>,
+    next_session: u64,
+    stats: RouterStats,
+}
+
+/// The fleet's routing state. Interior-mutable: one registry shared by
+/// every gateway connection thread.
+pub struct ReplicaRegistry {
+    inner: Mutex<Inner>,
+    shed_inflight: u64,
+}
+
+impl ReplicaRegistry {
+    /// `shed_inflight` is the per-replica in-flight cap before requests
+    /// shed with `capacity` (0 = never shed).
+    pub fn new(shed_inflight: u64) -> Self {
+        Self {
+            inner: Mutex::new(Inner { next_session: 1, ..Inner::default() }),
+            shed_inflight,
+        }
+    }
+
+    /// Register a replica slot; returns its index.
+    pub fn add(&self, name: &str) -> usize {
+        let mut g = self.inner.lock().unwrap();
+        g.slots.push(Slot {
+            name: name.to_string(),
+            live: true,
+            draining: false,
+            inflight: 0,
+            prefixes: BTreeSet::new(),
+        });
+        g.slots.len() - 1
+    }
+
+    pub fn find(&self, name: &str) -> Option<usize> {
+        self.inner.lock().unwrap().slots.iter().position(|s| s.name == name)
+    }
+
+    pub fn name_of(&self, idx: usize) -> String {
+        self.inner.lock().unwrap().slots[idx].name.clone()
+    }
+
+    /// Take a replica out of rotation for good (transport death or a
+    /// completed drain). Its prefix residency is forgotten; session pins
+    /// stay so their turns fail with the truthful `replica_unavailable`
+    /// rather than a misleading `unknown_session`.
+    pub fn evict(&self, idx: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.slots[idx].live = false;
+        g.slots[idx].prefixes.clear();
+    }
+
+    /// Mark a replica draining: pinned sessions and new placements refuse
+    /// with `draining` while its in-flight work finishes.
+    pub fn set_draining(&self, idx: usize) {
+        self.inner.lock().unwrap().slots[idx].draining = true;
+    }
+
+    pub fn is_draining(&self, idx: usize) -> bool {
+        self.inner.lock().unwrap().slots[idx].draining
+    }
+
+    pub fn is_live(&self, idx: usize) -> bool {
+        self.inner.lock().unwrap().slots[idx].live
+    }
+
+    /// Route one request. On success the chosen slot's in-flight count is
+    /// already incremented — callers MUST pair with [`Self::end_request`].
+    pub fn route(&self, hint: RouteHint<'_>) -> Result<usize, RouteError> {
+        let mut g = self.inner.lock().unwrap();
+        let picked = match hint {
+            RouteHint::Session(id) => {
+                let pin = g
+                    .sessions
+                    .get(&id)
+                    .copied()
+                    .ok_or(RouteError::UnknownSession(id))?;
+                let slot = &g.slots[pin.replica];
+                if !slot.live {
+                    g.stats.refused_unavailable += 1;
+                    return Err(RouteError::ReplicaGone(slot.name.clone()));
+                }
+                if slot.draining {
+                    g.stats.refused_unavailable += 1;
+                    return Err(RouteError::Draining);
+                }
+                g.stats.affinity_routes += 1;
+                pin.replica
+            }
+            RouteHint::Prefix(name) => {
+                let holders: Vec<usize> = admissible(&g.slots)
+                    .filter(|&i| g.slots[i].prefixes.contains(name))
+                    .collect();
+                if holders.is_empty() {
+                    // no resident replica: place like Any — the chosen
+                    // replica answers `unknown_prefix` itself if the
+                    // registration truly never reached it
+                    let idx = least_loaded(&g, admissible(&g.slots))
+                        .ok_or_else(|| no_candidates(&mut g))?;
+                    g.stats.prefix_fallback += 1;
+                    idx
+                } else {
+                    let idx = least_loaded(&g, holders.into_iter())
+                        .expect("non-empty holder set");
+                    g.stats.prefix_local += 1;
+                    idx
+                }
+            }
+            RouteHint::Any => least_loaded(&g, admissible(&g.slots))
+                .ok_or_else(|| no_candidates(&mut g))?,
+        };
+        let slot = &g.slots[picked];
+        if self.shed_inflight > 0 && slot.inflight >= self.shed_inflight {
+            let err = RouteError::Overloaded {
+                replica: slot.name.clone(),
+                inflight: slot.inflight,
+                cap: self.shed_inflight,
+            };
+            g.stats.shed += 1;
+            return Err(err);
+        }
+        g.slots[picked].inflight += 1;
+        g.stats.routed += 1;
+        Ok(picked)
+    }
+
+    /// Pair of a successful [`Self::route`]: the request finished (final
+    /// frame read or transport failure surfaced).
+    pub fn end_request(&self, idx: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.slots[idx].inflight = g.slots[idx].inflight.saturating_sub(1);
+    }
+
+    /// Pin a freshly opened session; returns the GATEWAY session id the
+    /// client uses from now on (replica-local ids collide across the
+    /// fleet, so the gateway namespaces them).
+    pub fn pin_session(&self, replica: usize, remote: u64) -> u64 {
+        let mut g = self.inner.lock().unwrap();
+        let id = g.next_session;
+        g.next_session += 1;
+        g.sessions.insert(id, SessionPin { replica, remote });
+        id
+    }
+
+    pub fn session_pin(&self, id: u64) -> Option<SessionPin> {
+        self.inner.lock().unwrap().sessions.get(&id).copied()
+    }
+
+    /// Forget a closed session's pin; returns it for the close fan-in.
+    pub fn unpin_session(&self, id: u64) -> Option<SessionPin> {
+        self.inner.lock().unwrap().sessions.remove(&id)
+    }
+
+    /// Record prefix residency after a successful replica registration.
+    pub fn note_prefix(&self, idx: usize, name: &str) {
+        self.inner.lock().unwrap().slots[idx].prefixes.insert(name.into());
+    }
+
+    /// Forget residency after a release (all replicas).
+    pub fn forget_prefix(&self, name: &str) {
+        let mut g = self.inner.lock().unwrap();
+        for s in &mut g.slots {
+            s.prefixes.remove(name);
+        }
+    }
+
+    /// Slots currently holding the named prefix's pages.
+    pub fn prefix_holders(&self, name: &str) -> Vec<usize> {
+        let g = self.inner.lock().unwrap();
+        (0..g.slots.len())
+            .filter(|&i| g.slots[i].live && g.slots[i].prefixes.contains(name))
+            .collect()
+    }
+
+    /// Live, non-draining slots (fan-out targets for registration/stats).
+    pub fn admissible_indices(&self) -> Vec<usize> {
+        let g = self.inner.lock().unwrap();
+        admissible(&g.slots).collect()
+    }
+
+    /// Live slots including draining ones (observability fan-out).
+    pub fn live_indices(&self) -> Vec<usize> {
+        let g = self.inner.lock().unwrap();
+        (0..g.slots.len()).filter(|&i| g.slots[i].live).collect()
+    }
+
+    pub fn views(&self) -> Vec<ReplicaView> {
+        let g = self.inner.lock().unwrap();
+        g.slots
+            .iter()
+            .enumerate()
+            .map(|(i, s)| ReplicaView {
+                name: s.name.clone(),
+                live: s.live,
+                draining: s.draining,
+                inflight: s.inflight,
+                sessions: g
+                    .sessions
+                    .values()
+                    .filter(|p| p.replica == i)
+                    .count(),
+                prefixes: s.prefixes.iter().cloned().collect(),
+            })
+            .collect()
+    }
+
+    pub fn stats(&self) -> RouterStats {
+        self.inner.lock().unwrap().stats
+    }
+}
+
+/// Indices admissible for NEW work: live and not draining.
+fn admissible(slots: &[Slot]) -> impl Iterator<Item = usize> + '_ {
+    (0..slots.len()).filter(|&i| slots[i].live && !slots[i].draining)
+}
+
+/// Least-inflight pick; ties break toward fewer pinned sessions, then
+/// lower index. The session tiebreak spreads fresh opens (instant ops
+/// never overlap long enough for inflight to differentiate slots).
+fn least_loaded(g: &Inner, candidates: impl Iterator<Item = usize>) -> Option<usize> {
+    candidates.min_by_key(|&i| {
+        let pinned = g.sessions.values().filter(|p| p.replica == i).count();
+        (g.slots[i].inflight, pinned, i)
+    })
+}
+
+/// No admissible slot: distinguish "fleet is gone" from "fleet is
+/// draining" (clients retry the latter elsewhere/later).
+fn no_candidates(g: &mut Inner) -> RouteError {
+    g.stats.refused_unavailable += 1;
+    if g.slots.iter().any(|s| s.live) {
+        RouteError::Draining
+    } else {
+        RouteError::NoReplicas
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fleet(n: usize) -> ReplicaRegistry {
+        let reg = ReplicaRegistry::new(0);
+        for i in 0..n {
+            reg.add(&format!("replica-{i}"));
+        }
+        reg
+    }
+
+    #[test]
+    fn session_affinity_survives_interleaved_traffic() {
+        let reg = fleet(3);
+        // open six sessions; the tiebreak spreads them across the fleet
+        let mut pins = Vec::new();
+        for remote in 0..6u64 {
+            let idx = reg.route(RouteHint::Any).unwrap();
+            reg.end_request(idx);
+            pins.push((reg.pin_session(idx, 100 + remote), idx));
+        }
+        let homes: BTreeSet<usize> = pins.iter().map(|&(_, i)| i).collect();
+        assert_eq!(homes.len(), 3, "opens spread across all replicas");
+        // interleave: anonymous generates churn the inflight counts while
+        // session turns keep landing exactly on their pinned replica
+        let mut anon_inflight = Vec::new();
+        for round in 0..40 {
+            let (gw_id, home) = pins[round % pins.len()];
+            let idx = reg.route(RouteHint::Session(gw_id)).unwrap();
+            assert_eq!(idx, home, "turn {round} must hit the pinned replica");
+            let a = reg.route(RouteHint::Any).unwrap();
+            anon_inflight.push(a); // held open: skews least-inflight away
+            reg.end_request(idx);
+            if round % 3 == 0 {
+                for a in anon_inflight.drain(..) {
+                    reg.end_request(a);
+                }
+            }
+        }
+        assert_eq!(reg.stats().affinity_routes, 40);
+        // remote translation survives alongside
+        let pin = reg.session_pin(pins[0].0).unwrap();
+        assert_eq!(pin.remote, 100);
+    }
+
+    #[test]
+    fn prefix_placement_beats_round_robin_on_residency() {
+        let reg = fleet(3);
+        // the prefix is resident on replica 1 only (late-joining replicas
+        // 0 and 2 missed the registration fan-out)
+        reg.note_prefix(1, "sys");
+        let n = 30;
+        let mut resident_hits = 0;
+        for _ in 0..n {
+            let idx = reg.route(RouteHint::Prefix("sys")).unwrap();
+            reg.end_request(idx);
+            if idx == 1 {
+                resident_hits += 1;
+            }
+        }
+        assert_eq!(resident_hits, n, "placement always finds the pages");
+        // round-robin would have hit residency 1/3 of the time
+        let round_robin_hits = n / 3;
+        assert!(resident_hits > round_robin_hits);
+        assert_eq!(reg.stats().prefix_local, n as u64);
+        // with several holders, least-inflight picks among THEM
+        reg.note_prefix(2, "sys");
+        let busy = reg.route(RouteHint::Prefix("sys")).unwrap();
+        let other = reg.route(RouteHint::Prefix("sys")).unwrap();
+        assert_ne!(busy, other, "second request avoids the busy holder");
+        assert!(busy == 1 || busy == 2);
+        assert!(other == 1 || other == 2);
+        // no resident replica at all: falls back to Any-placement and
+        // counts the miss (the replica itself answers unknown_prefix)
+        let idx = reg.route(RouteHint::Prefix("nope")).unwrap();
+        assert_eq!(idx, 0, "fallback is plain least-loaded");
+        assert_eq!(reg.stats().prefix_fallback, 1);
+    }
+
+    #[test]
+    fn drain_errors_victims_and_migrates_nothing() {
+        let reg = fleet(2);
+        let s0 = {
+            let idx = reg.route(RouteHint::Any).unwrap();
+            reg.end_request(idx);
+            assert_eq!(idx, 0);
+            reg.pin_session(idx, 7)
+        };
+        let s1 = {
+            let idx = reg.route(RouteHint::Any).unwrap();
+            reg.end_request(idx);
+            assert_eq!(idx, 1, "session tiebreak spreads the second open");
+            reg.pin_session(idx, 7)
+        };
+        reg.note_prefix(0, "sys");
+        reg.note_prefix(1, "sys");
+        reg.set_draining(0);
+        // the victim's turns are refused with the typed draining code —
+        // NOT silently migrated to replica 1 (its KV state is not there)
+        let err = reg.route(RouteHint::Session(s0)).unwrap_err();
+        assert_eq!(err, RouteError::Draining);
+        assert_eq!(
+            err.to_api_error().code,
+            crate::api::ErrorCode::Draining
+        );
+        // the survivor's session is untouched
+        assert_eq!(reg.route(RouteHint::Session(s1)).unwrap(), 1);
+        reg.end_request(1);
+        // new work and prefix placement avoid the draining replica
+        for _ in 0..5 {
+            let idx = reg.route(RouteHint::Any).unwrap();
+            assert_eq!(idx, 1);
+            reg.end_request(idx);
+            let idx = reg.route(RouteHint::Prefix("sys")).unwrap();
+            assert_eq!(idx, 1);
+            reg.end_request(idx);
+        }
+        // after eviction the pin reports the replica gone — a truthful
+        // transport-level error, not unknown_session
+        reg.evict(0);
+        let err = reg.route(RouteHint::Session(s0)).unwrap_err();
+        assert!(matches!(err, RouteError::ReplicaGone(_)), "{err:?}");
+        assert_eq!(
+            err.to_api_error().code,
+            crate::api::ErrorCode::ReplicaUnavailable
+        );
+        // close of the survivor unpins normally
+        assert_eq!(reg.unpin_session(s1).unwrap().remote, 7);
+        assert_eq!(reg.session_pin(s1), None);
+    }
+
+    #[test]
+    fn whole_fleet_down_vs_draining_is_distinguished() {
+        let reg = fleet(2);
+        reg.set_draining(0);
+        reg.set_draining(1);
+        assert_eq!(reg.route(RouteHint::Any).unwrap_err(), RouteError::Draining);
+        reg.evict(0);
+        reg.evict(1);
+        assert_eq!(
+            reg.route(RouteHint::Any).unwrap_err(),
+            RouteError::NoReplicas
+        );
+        assert_eq!(
+            reg.route(RouteHint::Any).unwrap_err().to_api_error().code,
+            crate::api::ErrorCode::ReplicaUnavailable
+        );
+    }
+
+    #[test]
+    fn shedding_caps_per_replica_inflight() {
+        let reg = ReplicaRegistry::new(2);
+        reg.add("only");
+        let a = reg.route(RouteHint::Any).unwrap();
+        let b = reg.route(RouteHint::Any).unwrap();
+        let err = reg.route(RouteHint::Any).unwrap_err();
+        assert!(
+            matches!(err, RouteError::Overloaded { inflight: 2, cap: 2, .. }),
+            "{err:?}"
+        );
+        assert_eq!(err.to_api_error().code, crate::api::ErrorCode::Capacity);
+        assert_eq!(reg.stats().shed, 1);
+        reg.end_request(a);
+        reg.end_request(b);
+        assert!(reg.route(RouteHint::Any).is_ok(), "capacity freed");
+        // sessions shed too: pinned work still queues decode steps
+        let s = reg.pin_session(0, 1);
+        assert!(reg.route(RouteHint::Session(s)).is_ok(), "one slot free");
+        let err = reg.route(RouteHint::Session(s)).unwrap_err();
+        assert!(matches!(err, RouteError::Overloaded { .. }), "{err:?}");
+    }
+
+    #[test]
+    fn views_report_fleet_shape() {
+        let reg = fleet(2);
+        reg.note_prefix(0, "sys");
+        reg.pin_session(1, 9);
+        reg.set_draining(1);
+        let views = reg.views();
+        assert_eq!(views.len(), 2);
+        assert_eq!(views[0].prefixes, vec!["sys".to_string()]);
+        assert!(!views[0].draining);
+        assert!(views[1].draining);
+        assert_eq!(views[1].sessions, 1);
+        assert_eq!(reg.find("replica-1"), Some(1));
+        assert_eq!(reg.name_of(0), "replica-0");
+    }
+}

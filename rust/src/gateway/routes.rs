@@ -1,0 +1,168 @@
+//! Typed route table: (method, path pattern) → [`Route`].
+//!
+//! Patterns are segment-wise with `:param` captures — no regex, no
+//! allocation beyond the captured params. Unknown paths are 404; a known
+//! path with the wrong method is 405 naming the allowed methods.
+
+/// Every HTTP operation the gateway exposes (see docs/API.md).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Route {
+    /// GET /v1/health — gateway + per-replica liveness.
+    Health,
+    /// GET /v1/stats — fleet-merged metrics with per-replica breakdown.
+    Stats,
+    /// GET /v1/replicas — routing table: residency, pins, inflight.
+    Replicas,
+    /// GET /v1/policies — supported policy surface (any replica).
+    Policies,
+    /// POST /v1/generate — one generation; SSE when `"stream":true`.
+    Generate,
+    /// POST /v1/sessions — open a session (optionally onto a prefix).
+    SessionOpen,
+    /// POST /v1/sessions/:id/turns — one turn; SSE when `"stream":true`.
+    SessionTurn,
+    /// DELETE /v1/sessions/:id — close.
+    SessionClose,
+    /// GET /v1/prefixes — fleet-wide residency listing.
+    PrefixList,
+    /// POST /v1/prefixes — register on every admissible replica.
+    PrefixRegister,
+    /// DELETE /v1/prefixes/:name — release everywhere it is resident.
+    PrefixRelease,
+    /// POST /v1/admin/drain — drain one replica out of the fleet.
+    Drain,
+}
+
+/// A resolved route plus its captured `:param` segments, in path order.
+#[derive(Debug, PartialEq, Eq)]
+pub struct RouteMatch {
+    pub route: Route,
+    pub params: Vec<String>,
+}
+
+/// Resolution failure, mapped to 404/405 by the gateway.
+#[derive(Debug, PartialEq, Eq)]
+pub enum RouteFailure {
+    NotFound,
+    /// The path exists under other methods (the `Allow` header value).
+    MethodNotAllowed(&'static str),
+}
+
+const TABLE: &[(&str, &str, Route)] = &[
+    ("GET", "/v1/health", Route::Health),
+    ("GET", "/v1/stats", Route::Stats),
+    ("GET", "/v1/replicas", Route::Replicas),
+    ("GET", "/v1/policies", Route::Policies),
+    ("POST", "/v1/generate", Route::Generate),
+    ("POST", "/v1/sessions", Route::SessionOpen),
+    ("POST", "/v1/sessions/:id/turns", Route::SessionTurn),
+    ("DELETE", "/v1/sessions/:id", Route::SessionClose),
+    ("GET", "/v1/prefixes", Route::PrefixList),
+    ("POST", "/v1/prefixes", Route::PrefixRegister),
+    ("DELETE", "/v1/prefixes/:name", Route::PrefixRelease),
+    ("POST", "/v1/admin/drain", Route::Drain),
+];
+
+/// Match `path` segment-wise against a pattern, collecting `:captures`.
+fn match_pattern(pattern: &str, path: &str) -> Option<Vec<String>> {
+    let mut params = Vec::new();
+    let mut pat = pattern.split('/').filter(|s| !s.is_empty());
+    let mut seg = path.split('/').filter(|s| !s.is_empty());
+    loop {
+        match (pat.next(), seg.next()) {
+            (None, None) => return Some(params),
+            (Some(p), Some(s)) if p.starts_with(':') => {
+                params.push(s.to_string())
+            }
+            (Some(p), Some(s)) if p == s => {}
+            _ => return None,
+        }
+    }
+}
+
+/// Resolve a request target. 405 replies name every method the path
+/// supports so clients can self-correct.
+pub fn resolve(method: &str, path: &str) -> Result<RouteMatch, RouteFailure> {
+    let mut allowed: Vec<&'static str> = Vec::new();
+    for (m, pattern, route) in TABLE {
+        if let Some(params) = match_pattern(pattern, path) {
+            if method.eq_ignore_ascii_case(m) {
+                return Ok(RouteMatch { route: *route, params });
+            }
+            if !allowed.contains(m) {
+                allowed.push(m);
+            }
+        }
+    }
+    allowed.sort_unstable();
+    match allowed.as_slice() {
+        [] => Err(RouteFailure::NotFound),
+        // the table's method sets are small and static; name them exactly
+        ["GET"] => Err(RouteFailure::MethodNotAllowed("GET")),
+        ["POST"] => Err(RouteFailure::MethodNotAllowed("POST")),
+        ["DELETE"] => Err(RouteFailure::MethodNotAllowed("DELETE")),
+        ["GET", "POST"] => Err(RouteFailure::MethodNotAllowed("GET, POST")),
+        _ => Err(RouteFailure::MethodNotAllowed("GET, POST, DELETE")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_routes_resolve() {
+        let m = resolve("GET", "/v1/health").unwrap();
+        assert_eq!(m.route, Route::Health);
+        assert!(m.params.is_empty());
+        assert_eq!(resolve("get", "/v1/stats").unwrap().route, Route::Stats);
+        assert_eq!(
+            resolve("POST", "/v1/generate").unwrap().route,
+            Route::Generate
+        );
+        assert_eq!(
+            resolve("POST", "/v1/admin/drain").unwrap().route,
+            Route::Drain
+        );
+        // trailing slash is the same resource
+        assert_eq!(
+            resolve("GET", "/v1/health/").unwrap().route,
+            Route::Health
+        );
+    }
+
+    #[test]
+    fn params_are_captured_in_order() {
+        let m = resolve("POST", "/v1/sessions/42/turns").unwrap();
+        assert_eq!(m.route, Route::SessionTurn);
+        assert_eq!(m.params, vec!["42".to_string()]);
+        let m = resolve("DELETE", "/v1/sessions/7").unwrap();
+        assert_eq!(m.route, Route::SessionClose);
+        assert_eq!(m.params, vec!["7".to_string()]);
+        let m = resolve("DELETE", "/v1/prefixes/sys-v2").unwrap();
+        assert_eq!(m.route, Route::PrefixRelease);
+        assert_eq!(m.params, vec!["sys-v2".to_string()]);
+    }
+
+    #[test]
+    fn not_found_vs_method_not_allowed() {
+        assert_eq!(resolve("GET", "/nope").unwrap_err(), RouteFailure::NotFound);
+        assert_eq!(
+            resolve("GET", "/v1/sessions/1/turns/extra").unwrap_err(),
+            RouteFailure::NotFound
+        );
+        assert_eq!(
+            resolve("DELETE", "/v1/generate").unwrap_err(),
+            RouteFailure::MethodNotAllowed("POST")
+        );
+        // /v1/prefixes supports GET and POST
+        assert_eq!(
+            resolve("DELETE", "/v1/prefixes").unwrap_err(),
+            RouteFailure::MethodNotAllowed("GET, POST")
+        );
+        assert_eq!(
+            resolve("POST", "/v1/health").unwrap_err(),
+            RouteFailure::MethodNotAllowed("GET")
+        );
+    }
+}

@@ -1,0 +1,111 @@
+//! Server-Sent Events framing for the gateway's streaming responses.
+//!
+//! Every streaming HTTP operation emits one SSE stream: `token` events
+//! while the replica streams, then exactly one terminal `done` (success)
+//! or `error` (typed failure) event, after which the connection closes.
+//! Event data is always a single-line JSON object — the same shape as
+//! the v3 wire frame with the transport fields (`v`, `tag`, `done`)
+//! stripped, so SSE consumers and raw-socket consumers read one schema.
+
+use std::io::{self, Write};
+
+use crate::util::json::Value;
+
+/// Terminal event names (data = the final reply / typed error object).
+pub const EVENT_DONE: &str = "done";
+pub const EVENT_ERROR: &str = "error";
+/// Per-token event name (data = `{"token":…,"piece":…}`).
+pub const EVENT_TOKEN: &str = "token";
+
+/// Write one SSE event. JSON never contains raw newlines (the codec
+/// escapes them), so a single `data:` line always suffices.
+pub fn write_event(
+    w: &mut impl Write,
+    event: &str,
+    data: &Value,
+) -> io::Result<()> {
+    w.write_all(format!("event: {event}\ndata: {data}\n\n").as_bytes())?;
+    w.flush()
+}
+
+/// One parsed client-side event (tests, demo, bench).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SseEvent {
+    pub event: String,
+    pub data: Value,
+}
+
+impl SseEvent {
+    /// True for the stream-terminating events.
+    pub fn is_terminal(&self) -> bool {
+        self.event == EVENT_DONE || self.event == EVENT_ERROR
+    }
+}
+
+/// Parse a full SSE body (blank-line separated events). Lenient client:
+/// unknown field lines are skipped, missing `data` yields Null.
+pub fn parse_events(body: &str) -> Vec<SseEvent> {
+    let mut events = Vec::new();
+    let mut name = String::new();
+    let mut data: Option<Value> = None;
+    for line in body.lines() {
+        if line.is_empty() {
+            if !name.is_empty() || data.is_some() {
+                events.push(SseEvent {
+                    event: std::mem::take(&mut name),
+                    data: data.take().unwrap_or(Value::Null),
+                });
+            }
+            continue;
+        }
+        if let Some(v) = line.strip_prefix("event:") {
+            name = v.trim().to_string();
+        } else if let Some(v) = line.strip_prefix("data:") {
+            data = crate::util::json::parse(v.trim()).ok();
+        }
+    }
+    if !name.is_empty() || data.is_some() {
+        events.push(SseEvent {
+            event: name,
+            data: data.unwrap_or(Value::Null),
+        });
+    }
+    events
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_round_trip() {
+        let mut buf = Vec::new();
+        write_event(
+            &mut buf,
+            EVENT_TOKEN,
+            &Value::obj(vec![
+                ("token", Value::num(65.0)),
+                ("piece", Value::str_of("A")),
+            ]),
+        )
+        .unwrap();
+        write_event(
+            &mut buf,
+            EVENT_DONE,
+            &Value::obj(vec![("tokens", Value::arr(vec![Value::num(65.0)]))]),
+        )
+        .unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.starts_with("event: token\ndata: {"));
+        let events = parse_events(&text);
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].event, "token");
+        assert_eq!(events[0].data.get("piece").as_str(), Some("A"));
+        assert!(!events[0].is_terminal());
+        assert_eq!(events[1].event, "done");
+        assert!(events[1].is_terminal());
+        // error events are terminal too
+        let errs = parse_events("event: error\ndata: {\"error\":{}}\n\n");
+        assert!(errs[0].is_terminal());
+    }
+}

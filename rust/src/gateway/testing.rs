@@ -1,0 +1,808 @@
+//! Test doubles and client helpers for the gateway.
+//!
+//! Real engines need compiled XLA artifacts to boot, so gateway tests
+//! and benches run against [`MockReplica`]: a TCP server that speaks
+//! the REAL v3 wire protocol (every line goes through
+//! `api::decode_frame`, replies through `api::encode_response_tagged`
+//! or hand-built tagged frames) with a fake model behind it. Fidelity
+//! points that matter to the gateway:
+//!
+//! * one sequential worker per replica — capacity scales with replica
+//!   count, so fan-out throughput is measurable;
+//! * replica-LOCAL session ids — mis-routed turns fail loudly with
+//!   `unknown_session` instead of silently succeeding;
+//! * faithful drain: admission closes, in-flight work finishes and
+//!   streams every frame, prefixes release, then the listener stops
+//!   while existing connections stay open;
+//! * [`MockReplica::kill`] for transport-failure paths (typed
+//!   `replica_unavailable`, gateway eviction).
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::api::{self, ApiError, ApiRequest, ApiResponse, GenerateSpec};
+use crate::util::json::{self, Value};
+
+use super::sse::{self, SseEvent};
+
+/// Behaviour knobs for one mock replica.
+#[derive(Debug, Clone)]
+pub struct MockReplicaConfig {
+    /// Depth reported by `policies` (must match the gateway's).
+    pub n_layers: usize,
+    /// Simulated decode time per generated token.
+    pub token_time: Duration,
+}
+
+impl Default for MockReplicaConfig {
+    fn default() -> Self {
+        Self { n_layers: 4, token_time: Duration::from_millis(1) }
+    }
+}
+
+type Job = Box<dyn FnOnce() + Send>;
+
+struct Shared {
+    cfg: MockReplicaConfig,
+    draining: AtomicBool,
+    stopped: AtomicBool,
+    /// Generation jobs admitted but not yet finished (drain quiesces on
+    /// this).
+    inflight: AtomicU64,
+    /// Generation requests fully served (placement assertions).
+    served: AtomicU64,
+    next_session: AtomicU64,
+    sessions: Mutex<BTreeMap<u64, usize>>, // id -> turns taken
+    prefixes: Mutex<BTreeMap<String, usize>>, // name -> n_tokens
+    conns: Mutex<Vec<TcpStream>>,
+    jobs: Mutex<mpsc::Sender<Job>>,
+}
+
+/// Handle to one running mock replica.
+pub struct MockReplica {
+    addr: String,
+    listener_addr: std::net::SocketAddr,
+    shared: Arc<Shared>,
+}
+
+impl MockReplica {
+    /// Bind on an ephemeral port and start serving.
+    pub fn spawn(cfg: MockReplicaConfig) -> Result<Self> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let listener_addr = listener.local_addr()?;
+        let (tx, rx) = mpsc::channel::<Job>();
+        let shared = Arc::new(Shared {
+            cfg,
+            draining: AtomicBool::new(false),
+            stopped: AtomicBool::new(false),
+            inflight: AtomicU64::new(0),
+            served: AtomicU64::new(0),
+            next_session: AtomicU64::new(1),
+            sessions: Mutex::new(BTreeMap::new()),
+            prefixes: Mutex::new(BTreeMap::new()),
+            conns: Mutex::new(Vec::new()),
+            jobs: Mutex::new(tx),
+        });
+        // THE capacity model: one worker, strictly sequential
+        std::thread::spawn(move || {
+            while let Ok(job) = rx.recv() {
+                job();
+            }
+        });
+        let accept_shared = shared.clone();
+        std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                let Ok(stream) = stream else { break };
+                if accept_shared.stopped.load(Ordering::SeqCst) {
+                    break; // wakeup connection; stop accepting
+                }
+                stream.set_nodelay(true).ok();
+                if let Ok(clone) = stream.try_clone() {
+                    accept_shared.conns.lock().unwrap().push(clone);
+                }
+                let s = accept_shared.clone();
+                std::thread::spawn(move || serve_conn(s, stream));
+            }
+        });
+        Ok(Self {
+            addr: listener_addr.to_string(),
+            listener_addr,
+            shared,
+        })
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Generation requests this replica finished (fan-out assertions).
+    pub fn served(&self) -> u64 {
+        self.shared.served.load(Ordering::SeqCst)
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.shared.draining.load(Ordering::SeqCst)
+    }
+
+    /// True once the accept loop has stopped (post-drain).
+    pub fn is_stopped(&self) -> bool {
+        self.shared.stopped.load(Ordering::SeqCst)
+    }
+
+    pub fn prefix_names(&self) -> Vec<String> {
+        self.shared.prefixes.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// Hard-kill every connection AND the listener — simulates a crash.
+    /// Clients observe EOF mid-request (typed `replica_unavailable`).
+    pub fn kill(&self) {
+        self.shared.stopped.store(true, Ordering::SeqCst);
+        for c in self.shared.conns.lock().unwrap().iter() {
+            let _ = c.shutdown(std::net::Shutdown::Both);
+        }
+        let _ = TcpStream::connect(self.listener_addr); // wake accept
+    }
+}
+
+impl Drop for MockReplica {
+    fn drop(&mut self) {
+        self.kill();
+    }
+}
+
+fn tagged_err(e: ApiError, tag: u64) -> Value {
+    api::encode_response_tagged(&ApiResponse::Error(e), tag)
+}
+
+/// Per-connection reader: decode with the REAL codec, answer each op.
+fn serve_conn(shared: Arc<Shared>, stream: TcpStream) {
+    let Ok(rstream) = stream.try_clone() else { return };
+    let writer = Arc::new(Mutex::new(stream));
+    let mut reader = BufReader::new(rstream);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) | Err(_) => return,
+            Ok(_) => {}
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        let frame = match api::decode_frame(line.trim(), shared.cfg.n_layers)
+        {
+            Ok(f) => f,
+            Err(de) => {
+                let reply = tagged_err(de.error, de.tag.unwrap_or(0));
+                write_line(&writer, &reply);
+                continue;
+            }
+        };
+        let tag = frame.tag.unwrap_or(0);
+        handle_op(&shared, &writer, tag, frame.req);
+    }
+}
+
+fn write_line(w: &Arc<Mutex<TcpStream>>, v: &Value) {
+    let mut w = w.lock().unwrap();
+    let _ = writeln!(w, "{v}");
+    let _ = w.flush();
+}
+
+fn frame(tag: u64, done: bool, fields: Vec<(&str, Value)>) -> Value {
+    let mut all = vec![
+        ("v", Value::num(3.0)),
+        ("tag", Value::num(tag as f64)),
+    ];
+    all.extend(fields);
+    if done {
+        all.push(("done", Value::Bool(true)));
+    }
+    Value::obj(all)
+}
+
+fn refuses_while_draining(req: &ApiRequest) -> bool {
+    matches!(
+        req,
+        ApiRequest::Generate(_)
+            | ApiRequest::BatchGenerate { .. }
+            | ApiRequest::SessionOpen { .. }
+            | ApiRequest::SessionAppend { .. }
+            | ApiRequest::PrefixRegister { .. }
+    )
+}
+
+fn handle_op(
+    shared: &Arc<Shared>,
+    writer: &Arc<Mutex<TcpStream>>,
+    tag: u64,
+    req: ApiRequest,
+) {
+    if shared.draining.load(Ordering::SeqCst) && refuses_while_draining(&req)
+    {
+        write_line(writer, &tagged_err(ApiError::draining(), tag));
+        return;
+    }
+    match req {
+        ApiRequest::Ping => {
+            write_line(writer, &frame(tag, true, vec![("ok", Value::Bool(true))]));
+        }
+        ApiRequest::Policies { .. } => {
+            write_line(
+                writer,
+                &frame(
+                    tag,
+                    true,
+                    vec![
+                        (
+                            "n_layers",
+                            Value::num(shared.cfg.n_layers as f64),
+                        ),
+                        ("grid", Value::arr(vec![])),
+                        ("specs", Value::arr(vec![])),
+                        ("policies", Value::arr(vec![])),
+                    ],
+                ),
+            );
+        }
+        ApiRequest::Stats => {
+            write_line(
+                writer,
+                &frame(
+                    tag,
+                    true,
+                    vec![
+                        (
+                            "requests_completed",
+                            Value::num(
+                                shared.served.load(Ordering::SeqCst) as f64,
+                            ),
+                        ),
+                        (
+                            "inflight",
+                            Value::num(
+                                shared.inflight.load(Ordering::SeqCst) as f64,
+                            ),
+                        ),
+                        (
+                            "tokens_generated",
+                            Value::num(
+                                (shared.served.load(Ordering::SeqCst) * 4)
+                                    as f64,
+                            ),
+                        ),
+                        ("elapsed_s", Value::num(1.0)),
+                        (
+                            "sessions_opened",
+                            Value::num(
+                                shared.sessions.lock().unwrap().len() as f64,
+                            ),
+                        ),
+                    ],
+                ),
+            );
+        }
+        ApiRequest::Generate(spec) => {
+            enqueue_generation(shared, writer, tag, spec, None);
+        }
+        ApiRequest::SessionOpen { prefix_id, .. } => {
+            if let Some(p) = &prefix_id {
+                if !shared.prefixes.lock().unwrap().contains_key(p) {
+                    write_line(
+                        writer,
+                        &tagged_err(
+                            ApiError::new(
+                                crate::api::ErrorCode::UnknownPrefix,
+                                format!("unknown prefix '{p}'"),
+                            ),
+                            tag,
+                        ),
+                    );
+                    return;
+                }
+            }
+            let id = shared.next_session.fetch_add(1, Ordering::SeqCst);
+            shared.sessions.lock().unwrap().insert(id, 0);
+            write_line(
+                writer,
+                &frame(
+                    tag,
+                    true,
+                    vec![
+                        ("session", Value::num(id as f64)),
+                        ("policy", Value::str_of("float")),
+                    ],
+                ),
+            );
+        }
+        ApiRequest::SessionAppend { session, spec } => {
+            {
+                let mut sessions = shared.sessions.lock().unwrap();
+                let Some(turns) = sessions.get_mut(&session) else {
+                    write_line(
+                        writer,
+                        &tagged_err(ApiError::unknown_session(session), tag),
+                    );
+                    return;
+                };
+                *turns += 1;
+            }
+            enqueue_generation(shared, writer, tag, spec, Some(session));
+        }
+        ApiRequest::SessionClose { session } => {
+            if shared.sessions.lock().unwrap().remove(&session).is_none() {
+                write_line(
+                    writer,
+                    &tagged_err(ApiError::unknown_session(session), tag),
+                );
+                return;
+            }
+            write_line(
+                writer,
+                &frame(
+                    tag,
+                    true,
+                    vec![
+                        ("session", Value::num(session as f64)),
+                        ("closed", Value::Bool(true)),
+                    ],
+                ),
+            );
+        }
+        ApiRequest::Cancel { target } => {
+            write_line(
+                writer,
+                &frame(
+                    tag,
+                    true,
+                    vec![
+                        ("target", Value::num(target as f64)),
+                        ("cancelled", Value::Bool(false)),
+                    ],
+                ),
+            );
+        }
+        ApiRequest::PrefixRegister { name, prompt, .. } => {
+            let n_tokens = prompt.split_whitespace().count().max(1);
+            shared.prefixes.lock().unwrap().insert(name.clone(), n_tokens);
+            write_line(
+                writer,
+                &frame(
+                    tag,
+                    true,
+                    vec![
+                        ("name", Value::str_of(name)),
+                        ("n_tokens", Value::num(n_tokens as f64)),
+                        ("policy", Value::str_of("float")),
+                    ],
+                ),
+            );
+        }
+        ApiRequest::PrefixRelease { name } => {
+            if shared.prefixes.lock().unwrap().remove(&name).is_none() {
+                write_line(
+                    writer,
+                    &tagged_err(
+                        ApiError::new(
+                            crate::api::ErrorCode::UnknownPrefix,
+                            format!("unknown prefix '{name}'"),
+                        ),
+                        tag,
+                    ),
+                );
+                return;
+            }
+            write_line(
+                writer,
+                &frame(
+                    tag,
+                    true,
+                    vec![
+                        ("name", Value::str_of(name)),
+                        ("released", Value::Bool(true)),
+                    ],
+                ),
+            );
+        }
+        ApiRequest::Prefixes => {
+            let rows = shared
+                .prefixes
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(name, n)| {
+                    Value::obj(vec![
+                        ("name", Value::str_of(name.clone())),
+                        ("n_tokens", Value::num(*n as f64)),
+                        ("policy", Value::str_of("float")),
+                        ("refcount", Value::num(0.0)),
+                    ])
+                })
+                .collect::<Vec<_>>();
+            write_line(
+                writer,
+                &frame(
+                    tag,
+                    true,
+                    vec![
+                        ("n", Value::num(rows.len() as f64)),
+                        ("prefixes", Value::Arr(rows)),
+                    ],
+                ),
+            );
+        }
+        ApiRequest::Drain { deadline_ms } => {
+            let shared = shared.clone();
+            let writer = writer.clone();
+            std::thread::spawn(move || {
+                run_drain(&shared, &writer, tag, deadline_ms);
+            });
+        }
+        other => {
+            write_line(
+                writer,
+                &tagged_err(
+                    ApiError::new(
+                        crate::api::ErrorCode::UnknownOp,
+                        format!(
+                            "mock replica does not implement '{}'",
+                            other.op()
+                        ),
+                    ),
+                    tag,
+                ),
+            );
+        }
+    }
+}
+
+/// Admit a generation: count it in flight, queue it on the single
+/// worker. The worker streams (or batches) the tokens with the
+/// configured per-token service time.
+fn enqueue_generation(
+    shared: &Arc<Shared>,
+    writer: &Arc<Mutex<TcpStream>>,
+    tag: u64,
+    spec: GenerateSpec,
+    session: Option<u64>,
+) {
+    if let Some(p) = &spec.prefix_id {
+        if !shared.prefixes.lock().unwrap().contains_key(p) {
+            write_line(
+                writer,
+                &tagged_err(
+                    ApiError::new(
+                        crate::api::ErrorCode::UnknownPrefix,
+                        format!("unknown prefix '{p}'"),
+                    ),
+                    tag,
+                ),
+            );
+            return;
+        }
+    }
+    shared.inflight.fetch_add(1, Ordering::SeqCst);
+    let job_shared = shared.clone();
+    let writer = writer.clone();
+    let job: Job = Box::new(move || {
+        let n = spec.n_gen.max(1);
+        let mut tokens = Vec::with_capacity(n);
+        for i in 0..n {
+            std::thread::sleep(job_shared.cfg.token_time);
+            let tok = (i % 50) as f64;
+            tokens.push(Value::num(tok));
+            if spec.stream {
+                write_line(
+                    &writer,
+                    &frame(
+                        tag,
+                        false,
+                        vec![
+                            ("token", Value::num(tok)),
+                            ("piece", Value::str_of("x")),
+                        ],
+                    ),
+                );
+            }
+        }
+        let mut fields = vec![
+            ("tokens", Value::Arr(tokens)),
+            ("text", Value::str_of("x".repeat(n))),
+            ("n_gen", Value::num(n as f64)),
+        ];
+        if let Some(s) = session {
+            fields.push(("session", Value::num(s as f64)));
+        }
+        write_line(&writer, &frame(tag, true, fields));
+        job_shared.served.fetch_add(1, Ordering::SeqCst);
+        job_shared.inflight.fetch_sub(1, Ordering::SeqCst);
+    });
+    let sent = shared.jobs.lock().unwrap().send(job);
+    if sent.is_err() {
+        shared.inflight.fetch_sub(1, Ordering::SeqCst);
+        write_line(
+            writer,
+            &tagged_err(
+                ApiError::new(
+                    crate::api::ErrorCode::Internal,
+                    "mock worker is gone",
+                ),
+                tag,
+            ),
+        );
+    }
+}
+
+/// Faithful drain: close admission, wait for the worker to go idle,
+/// release prefixes, reply, then stop accepting NEW connections while
+/// existing ones stay open (their final frames must remain deliverable).
+fn run_drain(
+    shared: &Arc<Shared>,
+    writer: &Arc<Mutex<TcpStream>>,
+    tag: u64,
+    deadline_ms: Option<u64>,
+) {
+    let start = Instant::now();
+    shared.draining.store(true, Ordering::SeqCst);
+    loop {
+        if shared.inflight.load(Ordering::SeqCst) == 0 {
+            break;
+        }
+        if deadline_ms
+            .is_some_and(|ms| start.elapsed() >= Duration::from_millis(ms))
+        {
+            write_line(
+                writer,
+                &frame(
+                    tag,
+                    true,
+                    vec![
+                        ("drained", Value::Bool(false)),
+                        (
+                            "waited_ms",
+                            Value::num(start.elapsed().as_millis() as f64),
+                        ),
+                        (
+                            "inflight",
+                            Value::num(
+                                shared.inflight.load(Ordering::SeqCst) as f64,
+                            ),
+                        ),
+                        ("released_prefixes", Value::num(0.0)),
+                    ],
+                ),
+            );
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let released = {
+        let mut p = shared.prefixes.lock().unwrap();
+        let n = p.len();
+        p.clear();
+        n
+    };
+    write_line(
+        writer,
+        &frame(
+            tag,
+            true,
+            vec![
+                ("drained", Value::Bool(true)),
+                (
+                    "waited_ms",
+                    Value::num(start.elapsed().as_millis() as f64),
+                ),
+                ("inflight", Value::num(0.0)),
+                ("released_prefixes", Value::num(released as f64)),
+            ],
+        ),
+    );
+    shared.stopped.store(true, Ordering::SeqCst);
+}
+
+// ----------------------------------------------------------------------
+// minimal HTTP client (tests, benches, demo)
+// ----------------------------------------------------------------------
+
+/// One-shot HTTP request; returns `(status, parsed JSON body)`.
+pub fn http_json(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&Value>,
+) -> Result<(u16, Value)> {
+    let (status, raw) = http_raw(addr, method, path, body)?;
+    let v = json::parse(raw.trim())
+        .with_context(|| format!("non-JSON body: {raw:?}"))?;
+    Ok((status, v))
+}
+
+/// One-shot streaming request; returns `(status, parsed SSE events)`.
+/// Blocks until the stream's terminal event (the server closes).
+pub fn http_sse(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&Value>,
+) -> Result<(u16, Vec<SseEvent>)> {
+    let (status, raw) = http_raw(addr, method, path, body)?;
+    Ok((status, sse::parse_events(&raw)))
+}
+
+/// Send one `connection: close` request, read the full response.
+fn http_raw(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&Value>,
+) -> Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)
+        .with_context(|| format!("connecting gateway {addr}"))?;
+    stream.set_nodelay(true).ok();
+    let payload = body.map(|b| b.to_string()).unwrap_or_default();
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nhost: gateway\r\nconnection: close\r\n\
+         content-length: {}\r\n\r\n",
+        payload.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(payload.as_bytes())?;
+    stream.flush()?;
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    let status: u16 = status_line
+        .split_ascii_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .with_context(|| format!("bad status line {status_line:?}"))?;
+    let mut content_length: Option<usize> = None;
+    loop {
+        let mut line = String::new();
+        if reader.read_line(&mut line)? == 0 {
+            anyhow::bail!("EOF inside response headers");
+        }
+        let line = line.trim();
+        if line.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = line.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().ok();
+            }
+        }
+    }
+    let body = match content_length {
+        Some(n) => {
+            let mut buf = vec![0u8; n];
+            reader.read_exact(&mut buf)?;
+            String::from_utf8(buf)?
+        }
+        None => {
+            // SSE: no length, server closes when the stream ends
+            let mut buf = String::new();
+            reader.read_to_string(&mut buf)?;
+            buf
+        }
+    };
+    Ok((status, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::MuxClient;
+
+    #[test]
+    fn mock_replica_speaks_v3() {
+        let replica = MockReplica::spawn(MockReplicaConfig {
+            n_layers: 4,
+            token_time: Duration::from_micros(100),
+        })
+        .unwrap();
+        let client = MuxClient::connect(replica.addr()).unwrap();
+        // policies carries the probe field
+        let reply = client
+            .submit(&ApiRequest::Policies { policy: None })
+            .unwrap()
+            .wait_done()
+            .unwrap();
+        assert_eq!(reply.get("n_layers").as_usize(), Some(4));
+        // a streaming generate emits token frames then the final frame
+        let pending = client
+            .submit(&ApiRequest::Generate(GenerateSpec {
+                prompt: "hi".into(),
+                n_gen: 3,
+                stream: true,
+                ..Default::default()
+            }))
+            .unwrap();
+        let mut frames = Vec::new();
+        loop {
+            let f = pending.recv().unwrap();
+            let done = f.get("done").as_bool() == Some(true);
+            frames.push(f);
+            if done {
+                break;
+            }
+        }
+        assert_eq!(frames.len(), 4, "3 token frames + 1 final");
+        assert_eq!(
+            frames.last().unwrap().get("tokens").as_arr().unwrap().len(),
+            3
+        );
+        assert_eq!(replica.served(), 1);
+        // sessions are replica-local and validated
+        let open = client
+            .submit(&ApiRequest::SessionOpen {
+                policy: None,
+                prefix_id: None,
+            })
+            .unwrap()
+            .wait_done()
+            .unwrap();
+        let sid = open.get("session").as_i64().unwrap() as u64;
+        let bad = client
+            .submit(&ApiRequest::SessionClose { session: sid + 999 })
+            .unwrap()
+            .wait_done()
+            .unwrap();
+        assert_eq!(
+            bad.get("error").get("code").as_str(),
+            Some("unknown_session")
+        );
+        let ok = client
+            .submit(&ApiRequest::SessionClose { session: sid })
+            .unwrap()
+            .wait_done()
+            .unwrap();
+        assert_eq!(ok.get("closed").as_bool(), Some(true));
+    }
+
+    #[test]
+    fn mock_drain_quiesces_and_refuses() {
+        let replica =
+            MockReplica::spawn(MockReplicaConfig::default()).unwrap();
+        let client = MuxClient::connect(replica.addr()).unwrap();
+        // park one slow generation, then drain mid-flight
+        let gen = client
+            .submit(&ApiRequest::Generate(GenerateSpec {
+                prompt: "hi".into(),
+                n_gen: 30,
+                stream: true,
+                ..Default::default()
+            }))
+            .unwrap();
+        // wait until the stream is demonstrably in flight
+        let first = gen.recv().unwrap();
+        assert!(first.get("token").as_i64().is_some());
+        let drain = client.drain(None).unwrap();
+        let report = drain.wait_done().unwrap();
+        assert_eq!(report.get("drained").as_bool(), Some(true));
+        // the in-flight stream completed fully first
+        let fin = gen.wait_done().unwrap();
+        assert_eq!(fin.get("tokens").as_arr().unwrap().len(), 30);
+        // admission is closed with the typed code
+        let refused = client
+            .submit(&ApiRequest::Generate(GenerateSpec {
+                prompt: "more".into(),
+                n_gen: 1,
+                ..Default::default()
+            }))
+            .unwrap()
+            .wait_done()
+            .unwrap();
+        assert_eq!(
+            refused.get("error").get("code").as_str(),
+            Some("draining")
+        );
+        assert!(replica.is_stopped());
+    }
+}

@@ -24,6 +24,7 @@ pub mod calib;
 pub mod coordinator;
 pub mod engine;
 pub mod evals;
+pub mod gateway;
 pub mod kvcache;
 pub mod model;
 pub mod quant;

@@ -60,9 +60,10 @@ use std::sync::{mpsc, Arc, Mutex};
 use anyhow::{Context, Result};
 
 use crate::api::{
-    self, ApiError, ApiRequest, ApiResponse, CalibrationReport, ErrorCode,
-    Frame, GenerateSpec, GenerationResult, PolicyInfo, PolicyReport,
-    PoolReport, PrefixReport, Proto, SessionConfig, SessionManager, TurnOpts,
+    self, ApiError, ApiRequest, ApiResponse, CalibrationReport, DrainReport,
+    ErrorCode, Frame, GenerateSpec, GenerationResult, PolicyInfo,
+    PolicyReport, PoolReport, PrefixReport, Proto, SessionConfig,
+    SessionManager, TurnOpts,
 };
 use crate::calib::PolicyRegistry;
 use crate::coordinator::request::TokenSink;
@@ -89,6 +90,12 @@ pub struct Server {
     next_id: AtomicU64,
     stop: Arc<AtomicBool>,
     sessions: SessionManager,
+    /// Admission gate for rolling restarts: once the `drain` op flips
+    /// this, new generation/session-opening/prefix-registering work is
+    /// refused with a typed `draining` error while in-flight work (and
+    /// introspection ops) proceed normally. Never reset — a drained
+    /// server is on its way out.
+    draining: AtomicBool,
     housekeeping_started: AtomicBool,
     /// Policies derived by the `calibrate` op, listed by `policies` and
     /// addressable by name (their `AsymKV-auto@…` names also re-parse
@@ -141,6 +148,7 @@ impl Server {
             next_id: AtomicU64::new(1),
             stop: Arc::new(AtomicBool::new(false)),
             sessions,
+            draining: AtomicBool::new(false),
             housekeeping_started: AtomicBool::new(false),
             calib_policies: PolicyRegistry::new(),
         })
@@ -371,6 +379,42 @@ impl Server {
         // a live tag would falsely complete the in-flight request at the
         // client's demultiplexer
         duplicate_tag_violation(tag, conn, out)?;
+        if let Some(e) = self.refuse_if_draining(&req) {
+            out.line(&api::encode_response_tagged(&ApiResponse::Error(e), tag));
+            return Ok(());
+        }
+        if let ApiRequest::Drain { deadline_ms } = req {
+            // dedicated thread: the quiesce wait can take arbitrarily long
+            // and must not block the reader (cancel lines still need to be
+            // decoded while the drain waits on the work they target)
+            let srv = self.clone();
+            let wout = out.clone();
+            let spawned = std::thread::Builder::new()
+                .name("asymkv-drain".into())
+                .spawn(move || {
+                    let resp = srv.run_drain(deadline_ms);
+                    let quiesced =
+                        matches!(&resp, ApiResponse::Drained(r) if r.drained);
+                    wout.line(&api::encode_response_tagged(&resp, tag));
+                    // the reply is queued ahead of the stop: the writer
+                    // thread flushes FIFO and open connections outlive
+                    // `request_stop` (it only ends the accept loop), so
+                    // the client always reads the drain outcome
+                    if quiesced {
+                        srv.request_stop();
+                    }
+                });
+            if let Err(e) = spawned {
+                out.line(&api::encode_response_tagged(
+                    &ApiResponse::Error(ApiError::new(
+                        ErrorCode::Capacity,
+                        format!("cannot spawn drain worker: {e}"),
+                    )),
+                    tag,
+                ));
+            }
+            return Ok(());
+        }
         match req {
             ApiRequest::Cancel { target } => {
                 let cancelled = {
@@ -538,6 +582,9 @@ impl Server {
     /// no connection state (which is why `cancel` resolves to false here;
     /// the connection reader intercepts it when a tag table exists).
     pub fn handle(&self, req: ApiRequest) -> ApiResponse {
+        if let Some(e) = self.refuse_if_draining(&req) {
+            return ApiResponse::Error(e);
+        }
         match req {
             ApiRequest::Ping => ApiResponse::Pong,
             ApiRequest::Stats => {
@@ -614,7 +661,77 @@ impl Server {
             ApiRequest::Prefixes => {
                 ApiResponse::Prefixes(self.coord.list_prefixes())
             }
+            // non-socket path (dispatch-only embedders): quiesce and
+            // report, but leave the accept loop alone — the v3 socket
+            // path layers `request_stop` on top
+            ApiRequest::Drain { deadline_ms } => self.run_drain(deadline_ms),
         }
+    }
+
+    /// True once a `drain` has been requested (admission closed).
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
+    /// The admission gate: while draining, ops that would START new
+    /// engine work (generation, session opening/turns, calibration,
+    /// prefix registration) are refused with the typed `draining` code.
+    /// Introspection, cancellation, closes/releases and the drain op
+    /// itself stay admissible so clients can wind down cleanly.
+    fn refuse_if_draining(&self, req: &ApiRequest) -> Option<ApiError> {
+        if !self.is_draining() {
+            return None;
+        }
+        match req {
+            ApiRequest::Generate(_)
+            | ApiRequest::BatchGenerate { .. }
+            | ApiRequest::SessionOpen { .. }
+            | ApiRequest::SessionAppend { .. }
+            | ApiRequest::Calibrate { .. }
+            | ApiRequest::PrefixRegister { .. } => Some(ApiError::draining()),
+            _ => None,
+        }
+    }
+
+    /// The `drain` op body: close admission, wait for the in-flight
+    /// gauge and the queue to empty (in-flight streams run to their
+    /// natural completion — nothing is aborted), then release the shared
+    /// prefixes so the fleet's registry stays truthful and the pinned
+    /// pages free now rather than at process exit. On deadline expiry the
+    /// report says `drained:false` and admission STAYS closed: the
+    /// operator retries or escalates, but no new work sneaks in.
+    fn run_drain(&self, deadline_ms: Option<u64>) -> ApiResponse {
+        let start = std::time::Instant::now();
+        let deadline = deadline_ms
+            .map(|ms| start + std::time::Duration::from_millis(ms));
+        self.draining.store(true, Ordering::SeqCst);
+        loop {
+            let m = self.coord.metrics();
+            if m.inflight == 0 && self.coord.queue_depth() == 0 {
+                break;
+            }
+            if deadline.is_some_and(|d| std::time::Instant::now() >= d) {
+                return ApiResponse::Drained(DrainReport {
+                    drained: false,
+                    waited_ms: start.elapsed().as_millis() as u64,
+                    inflight: m.inflight,
+                    released_prefixes: 0,
+                });
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        let mut released = 0usize;
+        for info in self.coord.list_prefixes() {
+            if self.coord.release_prefix(&info.name).is_ok() {
+                released += 1;
+            }
+        }
+        ApiResponse::Drained(DrainReport {
+            drained: true,
+            waited_ms: start.elapsed().as_millis() as u64,
+            inflight: 0,
+            released_prefixes: released,
+        })
     }
 
     /// The v3 `stats` reply's namespaced `prefix` section: pool sharing
@@ -951,6 +1068,16 @@ impl Server {
         spec: GenerateSpec,
         out: &Outbound,
     ) {
+        // the v1/v2 streaming path bypasses `handle`, so the drain
+        // admission gate applies here explicitly (done-tagged so clients
+        // reading until "done" never hang)
+        if self.is_draining() {
+            out.line(&mark_done(api::encode_response(
+                &ApiResponse::Error(ApiError::draining()),
+                proto,
+            )));
+            return;
+        }
         let id = self.next_id.fetch_add(1, Ordering::SeqCst);
         let sink = sink_for(out, None, None);
         let v = match self.build_request(id, &spec, Some(sink), None) {
@@ -1116,10 +1243,23 @@ impl MuxClient {
                     }
                 }
                 // connection gone: flag it FIRST (so new submits fail
-                // fast), then drop the senders so every pending receiver
-                // errors instead of hanging
+                // fast), then fail every pending request with a TYPED
+                // transport error frame — a done-tagged
+                // `replica_unavailable` line exactly as if the server had
+                // sent it — so `wait_done` returns a routable error
+                // instead of an opaque channel failure, and fleet routers
+                // can map the code to replica eviction
                 closed_flag.store(true, Ordering::SeqCst);
-                map.lock().unwrap().clear();
+                let orphans: Vec<(u64, Sender<Value>)> =
+                    map.lock().unwrap().drain().collect();
+                for (tag, tx) in orphans {
+                    let _ = tx.send(api::encode_response_tagged(
+                        &ApiResponse::Error(ApiError::replica_unavailable(
+                            "connection to replica closed mid-request",
+                        )),
+                        tag,
+                    ));
+                }
             })?;
         Ok(Self {
             writer: Mutex::new(stream),
@@ -1201,6 +1341,22 @@ impl MuxClient {
     /// List registered prefixes (name, tokens, policy, refcount, bytes).
     pub fn prefixes(&self) -> Result<MuxPending> {
         self.submit(&ApiRequest::Prefixes)
+    }
+
+    /// Ask the replica to drain: finish in-flight work, refuse new work
+    /// with typed `draining` errors, release shared prefixes, then stop
+    /// accepting connections. The pending's final frame is the drain
+    /// report (`drained`, `waited_ms`, `released_prefixes`).
+    pub fn drain(&self, deadline_ms: Option<u64>) -> Result<MuxPending> {
+        self.submit(&ApiRequest::Drain { deadline_ms })
+    }
+
+    /// True once the connection's reader observed EOF or a socket error.
+    /// Every request pending at that point has already been failed with a
+    /// typed `replica_unavailable` frame; new submits fail fast. Fleet
+    /// routers use this to evict the replica from rotation.
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::SeqCst)
     }
 }
 

@@ -1,0 +1,510 @@
+//! Gateway integration tests over a mock replica fleet.
+//!
+//! Real engines need compiled artifacts, so these tests run the REAL
+//! gateway (HTTP parsing, routing, SSE relay, drain orchestration,
+//! MuxClient transport) against `gateway::testing::MockReplica` — a TCP
+//! server speaking the genuine v3 codec with a fake model behind it.
+//! What is mocked is token generation; every wire byte is production
+//! code.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use asymkv::gateway::testing::{
+    http_json, http_sse, MockReplica, MockReplicaConfig,
+};
+use asymkv::gateway::{Gateway, GatewayConfig};
+use asymkv::util::json::Value;
+
+/// Boot `n` mock replicas and a gateway over them; returns the fleet,
+/// the gateway handle, and its HTTP address.
+fn boot_fleet(
+    n: usize,
+    token_time: Duration,
+) -> (Vec<MockReplica>, Arc<Gateway>, String) {
+    let replicas: Vec<MockReplica> = (0..n)
+        .map(|_| {
+            MockReplica::spawn(MockReplicaConfig { n_layers: 4, token_time })
+                .unwrap()
+        })
+        .collect();
+    let addrs: Vec<String> =
+        replicas.iter().map(|r| r.addr().to_string()).collect();
+    let gw = Arc::new(
+        Gateway::bind("127.0.0.1:0", &addrs, GatewayConfig::default())
+            .unwrap(),
+    );
+    let addr = gw.local_addr();
+    let serve = gw.clone();
+    std::thread::spawn(move || {
+        let _ = serve.serve();
+    });
+    (replicas, gw, addr)
+}
+
+fn gen_body(prompt: &str, n_gen: usize, stream: bool) -> Value {
+    Value::obj(vec![
+        ("prompt", Value::str_of(prompt)),
+        ("n_gen", Value::num(n_gen as f64)),
+        ("stream", Value::Bool(stream)),
+    ])
+}
+
+fn code_of(v: &Value) -> Option<&str> {
+    v.get("error").get("code").as_str()
+}
+
+#[test]
+fn routes_validation_and_sse_streaming() {
+    let (_replicas, gw, addr) =
+        boot_fleet(2, Duration::from_micros(200));
+
+    // health reports the whole fleet live
+    let (status, body) = http_json(&addr, "GET", "/v1/health", None).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(body.get("ok").as_bool(), Some(true));
+    assert_eq!(body.get("replicas").as_arr().unwrap().len(), 2);
+
+    // unary generate: plain JSON reply, wire fields stripped
+    let (status, body) = http_json(
+        &addr,
+        "POST",
+        "/v1/generate",
+        Some(&gen_body("hello", 4, false)),
+    )
+    .unwrap();
+    assert_eq!(status, 200, "{body}");
+    assert_eq!(body.get("tokens").as_arr().unwrap().len(), 4);
+    assert_eq!(body.get("v"), &Value::Null);
+    assert_eq!(body.get("tag"), &Value::Null);
+    assert_eq!(body.get("done"), &Value::Null);
+
+    // streaming generate: token events then exactly one terminal done
+    let (status, events) = http_sse(
+        &addr,
+        "POST",
+        "/v1/generate",
+        Some(&gen_body("hello", 6, true)),
+    )
+    .unwrap();
+    assert_eq!(status, 200);
+    let tokens = events.iter().filter(|e| e.event == "token").count();
+    assert_eq!(tokens, 6);
+    let last = events.last().unwrap();
+    assert_eq!(last.event, "done");
+    assert_eq!(last.data.get("tokens").as_arr().unwrap().len(), 6);
+
+    // validation is the replicas' own strict decoder: typed, 400-class
+    let (status, body) = http_json(
+        &addr,
+        "POST",
+        "/v1/generate",
+        Some(&Value::obj(vec![
+            ("prompt", Value::str_of("x")),
+            ("n_gen", Value::num(1.0)),
+            ("bogus_field", Value::num(1.0)),
+        ])),
+    )
+    .unwrap();
+    assert_eq!(status, 400);
+    assert_eq!(code_of(&body), Some("bad_field"));
+
+    // wire-framing fields are refused, not silently overwritten
+    let (status, body) = http_json(
+        &addr,
+        "POST",
+        "/v1/generate",
+        Some(&Value::obj(vec![
+            ("prompt", Value::str_of("x")),
+            ("n_gen", Value::num(1.0)),
+            ("tag", Value::num(7.0)),
+        ])),
+    )
+    .unwrap();
+    assert_eq!(status, 400);
+    assert_eq!(code_of(&body), Some("bad_field"));
+
+    // unknown path → 404; known path, wrong method → 405
+    let (status, body) = http_json(&addr, "GET", "/nope", None).unwrap();
+    assert_eq!(status, 404);
+    assert_eq!(code_of(&body), Some("unknown_op"));
+    let (status, _body) =
+        http_json(&addr, "DELETE", "/v1/generate", None).unwrap();
+    assert_eq!(status, 405);
+
+    // fleet stats: merged view + per-replica breakdown + router counters
+    let (status, body) = http_json(&addr, "GET", "/v1/stats", None).unwrap();
+    assert_eq!(status, 200);
+    assert!(
+        body.get("fleet").get("requests_completed").as_f64().unwrap() >= 2.0
+    );
+    assert_eq!(body.get("replicas").as_arr().unwrap().len(), 2);
+    assert!(body.get("gateway").get("routed").as_f64().unwrap() >= 2.0);
+
+    gw.request_stop();
+}
+
+#[test]
+fn session_affinity_and_gateway_namespaced_ids() {
+    let (replicas, gw, addr) = boot_fleet(2, Duration::from_micros(200));
+
+    // open four sessions; the router spreads them across the fleet
+    let mut ids = Vec::new();
+    for _ in 0..4 {
+        let (status, body) =
+            http_json(&addr, "POST", "/v1/sessions", Some(&Value::obj(vec![])))
+                .unwrap();
+        assert_eq!(status, 200, "{body}");
+        ids.push(body.get("session").as_i64().unwrap() as u64);
+        assert!(body.get("replica").as_str().is_some());
+    }
+    // gateway ids are namespaced and unique even though each replica
+    // numbers its own sessions from 1
+    let mut sorted = ids.clone();
+    sorted.sort_unstable();
+    sorted.dedup();
+    assert_eq!(sorted.len(), 4, "gateway session ids collide: {ids:?}");
+
+    // interleave turns across all sessions, repeatedly: every turn must
+    // land on the session's pinned replica. The mock replicas enforce
+    // this for us — a mis-routed turn answers `unknown_session`.
+    for round in 0..3 {
+        for &id in &ids {
+            let (status, body) = http_json(
+                &addr,
+                "POST",
+                &format!("/v1/sessions/{id}/turns"),
+                Some(&gen_body("turn", 2, false)),
+            )
+            .unwrap();
+            assert_eq!(status, 200, "round {round}: {body}");
+            // the reply echoes the GATEWAY id, not the replica-local one
+            assert_eq!(body.get("session").as_i64(), Some(id as i64));
+        }
+    }
+    let (_, body) = http_json(&addr, "GET", "/v1/replicas", None).unwrap();
+    let affinity =
+        body.get("router").get("affinity_routes").as_f64().unwrap();
+    assert_eq!(affinity, 12.0, "every turn routed by affinity");
+    // both replicas actually served turns (sessions were spread)
+    assert!(replicas.iter().all(|r| r.served() > 0));
+
+    // close, then a turn on the closed id is a typed 404
+    let (status, body) = http_json(
+        &addr,
+        "DELETE",
+        &format!("/v1/sessions/{}", ids[0]),
+        None,
+    )
+    .unwrap();
+    assert_eq!(status, 200, "{body}");
+    assert_eq!(body.get("session").as_i64(), Some(ids[0] as i64));
+    let (status, body) = http_json(
+        &addr,
+        "POST",
+        &format!("/v1/sessions/{}/turns", ids[0]),
+        Some(&gen_body("turn", 1, false)),
+    )
+    .unwrap();
+    assert_eq!(status, 404);
+    assert_eq!(code_of(&body), Some("unknown_session"));
+
+    gw.request_stop();
+}
+
+#[test]
+fn prefix_registration_fans_out_and_routes_by_residency() {
+    let (replicas, gw, addr) = boot_fleet(2, Duration::from_micros(200));
+
+    // register once at the gateway → resident on EVERY replica
+    let (status, body) = http_json(
+        &addr,
+        "POST",
+        "/v1/prefixes",
+        Some(&Value::obj(vec![
+            ("name", Value::str_of("sys")),
+            ("prompt", Value::str_of("you are a helpful assistant")),
+        ])),
+    )
+    .unwrap();
+    assert_eq!(status, 200, "{body}");
+    assert_eq!(body.get("replicas").as_arr().unwrap().len(), 2);
+    assert!(replicas
+        .iter()
+        .all(|r| r.prefix_names() == vec!["sys".to_string()]));
+
+    // the fleet listing shows it per replica
+    let (_, body) = http_json(&addr, "GET", "/v1/prefixes", None).unwrap();
+    assert_eq!(body.get("n").as_usize(), Some(2));
+
+    // prefix-hinted generates route to holders (both replicas hold it;
+    // concurrency forces the least-inflight split to use both)
+    let handles: Vec<_> = (0..6)
+        .map(|_| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                http_sse(
+                    &addr,
+                    "POST",
+                    "/v1/generate",
+                    Some(&Value::obj(vec![
+                        ("prompt", Value::str_of("q")),
+                        ("n_gen", Value::num(8.0)),
+                        ("stream", Value::Bool(true)),
+                        ("prefix_id", Value::str_of("sys")),
+                    ])),
+                )
+                .unwrap()
+            })
+        })
+        .collect();
+    for h in handles {
+        let (status, events) = h.join().unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(events.last().unwrap().event, "done");
+    }
+    let (_, body) = http_json(&addr, "GET", "/v1/replicas", None).unwrap();
+    assert_eq!(
+        body.get("router").get("prefix_local").as_f64(),
+        Some(6.0),
+        "every prefix generate hit a resident replica"
+    );
+    assert!(
+        replicas.iter().all(|r| r.served() > 0),
+        "concurrent prefix traffic used both holders: {:?}",
+        replicas.iter().map(|r| r.served()).collect::<Vec<_>>()
+    );
+
+    // a generate naming an unknown prefix is a typed 404
+    let (status, body) = http_json(
+        &addr,
+        "POST",
+        "/v1/generate",
+        Some(&Value::obj(vec![
+            ("prompt", Value::str_of("q")),
+            ("n_gen", Value::num(1.0)),
+            ("prefix_id", Value::str_of("nope")),
+        ])),
+    )
+    .unwrap();
+    assert_eq!(status, 404, "{body}");
+    assert_eq!(code_of(&body), Some("unknown_prefix"));
+
+    // release everywhere; a second release is a typed 404
+    let (status, body) =
+        http_json(&addr, "DELETE", "/v1/prefixes/sys", None).unwrap();
+    assert_eq!(status, 200, "{body}");
+    assert_eq!(body.get("released").as_arr().unwrap().len(), 2);
+    assert!(replicas.iter().all(|r| r.prefix_names().is_empty()));
+    let (status, body) =
+        http_json(&addr, "DELETE", "/v1/prefixes/sys", None).unwrap();
+    assert_eq!(status, 404);
+    assert_eq!(code_of(&body), Some("unknown_prefix"));
+
+    gw.request_stop();
+}
+
+/// The drain acceptance scenario end to end: a replica drains while one
+/// of its streams is mid-flight. The stream must deliver EVERY frame
+/// (zero dropped), new work on the victim's sessions gets the typed
+/// `draining` error while the drain is pending, unpinned work routes to
+/// the survivor, and afterwards the drained replica has stopped with
+/// its prefixes released.
+#[test]
+fn drain_mid_stream_finishes_victims_and_sheds_new_work() {
+    let (replicas, gw, addr) = boot_fleet(2, Duration::from_millis(4));
+
+    // a prefix resident everywhere (the drain must release it)
+    let (status, _) = http_json(
+        &addr,
+        "POST",
+        "/v1/prefixes",
+        Some(&Value::obj(vec![
+            ("name", Value::str_of("sys")),
+            ("prompt", Value::str_of("shared context")),
+        ])),
+    )
+    .unwrap();
+    assert_eq!(status, 200);
+
+    // a session; its pin is the drain victim
+    let (_, body) =
+        http_json(&addr, "POST", "/v1/sessions", Some(&Value::obj(vec![])))
+            .unwrap();
+    let sid = body.get("session").as_i64().unwrap();
+    let victim = body.get("replica").as_str().unwrap().to_string();
+    let victim_idx = replicas
+        .iter()
+        .position(|r| r.addr() == victim)
+        .expect("replica name is its address");
+
+    // start a LONG streaming turn on the pinned replica (~160ms)
+    let stream_addr = addr.clone();
+    let streamer = std::thread::spawn(move || {
+        http_sse(
+            &stream_addr,
+            "POST",
+            &format!("/v1/sessions/{sid}/turns"),
+            Some(&gen_body("long turn", 40, true)),
+        )
+        .unwrap()
+    });
+    std::thread::sleep(Duration::from_millis(30)); // stream is in flight
+
+    // drain the victim in the background (it blocks on the stream)
+    let drain_addr = addr.clone();
+    let victim_name = victim.clone();
+    let drainer = std::thread::spawn(move || {
+        http_json(
+            &drain_addr,
+            "POST",
+            "/v1/admin/drain",
+            Some(&Value::obj(vec![(
+                "replica",
+                Value::str_of(victim_name),
+            )])),
+        )
+        .unwrap()
+    });
+    std::thread::sleep(Duration::from_millis(30)); // drain is pending
+
+    // the victim's sessions are refused with the TYPED code while the
+    // in-flight stream keeps running — nothing is migrated
+    let (status, body) = http_json(
+        &addr,
+        "POST",
+        &format!("/v1/sessions/{sid}/turns"),
+        Some(&gen_body("rejected", 1, false)),
+    )
+    .unwrap();
+    assert_eq!(status, 503, "{body}");
+    assert_eq!(code_of(&body), Some("draining"));
+
+    // unpinned work routes to the survivor and succeeds mid-drain
+    let (status, body) = http_json(
+        &addr,
+        "POST",
+        "/v1/generate",
+        Some(&gen_body("elsewhere", 2, false)),
+    )
+    .unwrap();
+    assert_eq!(status, 200, "{body}");
+
+    // the drain completes only after the stream quiesces, successfully
+    let (status, report) = drainer.join().unwrap();
+    assert_eq!(status, 200, "{report}");
+    assert_eq!(report.get("drained").as_bool(), Some(true));
+    assert_eq!(report.get("replica").as_str(), Some(victim.as_str()));
+    assert!(report.get("released_prefixes").as_usize().unwrap() >= 1);
+
+    // ZERO dropped frames: all 40 tokens and the terminal done arrived
+    let (status, events) = streamer.join().unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(
+        events.iter().filter(|e| e.event == "token").count(),
+        40,
+        "the drained replica dropped in-flight stream frames"
+    );
+    assert_eq!(events.last().unwrap().event, "done");
+
+    // the drained replica stopped accepting and released its prefixes
+    assert!(replicas[victim_idx].is_stopped());
+    assert!(replicas[victim_idx].prefix_names().is_empty());
+
+    // it is out of the fleet: health shows one live replica, the dead
+    // session pin is a typed replica_unavailable now
+    let (_, body) = http_json(&addr, "GET", "/v1/health", None).unwrap();
+    let live = body
+        .get("replicas")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .filter(|r| r.get("live").as_bool() == Some(true))
+        .count();
+    assert_eq!(live, 1);
+    let (status, body) = http_json(
+        &addr,
+        "POST",
+        &format!("/v1/sessions/{sid}/turns"),
+        Some(&gen_body("gone", 1, false)),
+    )
+    .unwrap();
+    assert_eq!(status, 503);
+    assert_eq!(code_of(&body), Some("replica_unavailable"));
+
+    // the survivor still takes fleet traffic
+    let (status, _) = http_json(
+        &addr,
+        "POST",
+        "/v1/generate",
+        Some(&gen_body("after", 2, false)),
+    )
+    .unwrap();
+    assert_eq!(status, 200);
+
+    gw.request_stop();
+}
+
+/// Transport-failure robustness (MuxClient satellite): a crashed
+/// replica surfaces as typed `replica_unavailable` — mid-stream as a
+/// terminal SSE error event, and placement-routed requests fail over to
+/// a survivor after eviction.
+#[test]
+fn replica_crash_is_typed_and_evicts() {
+    // single replica: a mid-stream crash must end the SSE stream with
+    // the typed error, not a hang or a silent close
+    let (replicas, gw, addr) = boot_fleet(1, Duration::from_millis(4));
+    let stream_addr = addr.clone();
+    let streamer = std::thread::spawn(move || {
+        http_sse(
+            &stream_addr,
+            "POST",
+            "/v1/generate",
+            Some(&gen_body("doomed", 50, true)),
+        )
+        .unwrap()
+    });
+    std::thread::sleep(Duration::from_millis(40));
+    replicas[0].kill();
+    let (status, events) = streamer.join().unwrap();
+    assert_eq!(status, 200); // SSE headers were already sent
+    let last = events.last().unwrap();
+    assert_eq!(last.event, "error", "events: {events:?}");
+    assert_eq!(code_of(&last.data), Some("replica_unavailable"));
+    // the fleet is empty now — typed 503, not a connect hang
+    let (status, body) = http_json(
+        &addr,
+        "POST",
+        "/v1/generate",
+        Some(&gen_body("x", 1, false)),
+    )
+    .unwrap();
+    assert_eq!(status, 503, "{body}");
+    assert_eq!(code_of(&body), Some("replica_unavailable"));
+    gw.request_stop();
+
+    // two replicas: kill one while idle; unpinned traffic fails over
+    let (replicas, gw, addr) = boot_fleet(2, Duration::from_micros(200));
+    replicas[0].kill();
+    for _ in 0..3 {
+        let (status, body) = http_json(
+            &addr,
+            "POST",
+            "/v1/generate",
+            Some(&gen_body("failover", 2, false)),
+        )
+        .unwrap();
+        assert_eq!(status, 200, "{body}");
+    }
+    assert_eq!(replicas[1].served(), 3);
+    let (_, body) = http_json(&addr, "GET", "/v1/health", None).unwrap();
+    let live = body
+        .get("replicas")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .filter(|r| r.get("live").as_bool() == Some(true))
+        .count();
+    assert_eq!(live, 1);
+    gw.request_stop();
+}

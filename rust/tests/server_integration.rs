@@ -1196,3 +1196,104 @@ fn housekeeping_tick_evicts_idle_sessions_without_traffic() {
     assert_eq!(server.coord.metrics().sessions_evicted, 1);
     server.request_stop();
 }
+
+#[test]
+fn v3_drain_completes_inflight_streams_then_refuses_new_work() {
+    let Some(engine) = common::engine_for("tiny") else { return };
+    let coord = Coordinator::start(engine, CoordinatorConfig::default());
+    let (server, addr) = boot(coord);
+    let mux = MuxClient::connect(&addr).unwrap();
+
+    // park a long streaming generate, provably in flight before draining
+    let gen = mux
+        .submit(&ApiRequest::Generate(GenerateSpec {
+            prompt: "the ox runs. the".into(),
+            n_gen: 32,
+            stream: true,
+            ..Default::default()
+        }))
+        .unwrap();
+    let first = gen.recv().unwrap();
+    assert_ne!(first.get("done").as_bool(), Some(true), "{first}");
+
+    // a drain with an unmeetable deadline reports drained:false (there
+    // are ~31 decode steps left) but admission stays closed
+    let report = mux.drain(Some(1)).unwrap().wait_done().unwrap();
+    assert_eq!(report.get("error"), &Value::Null, "{report}");
+    assert_eq!(report.get("drained").as_bool(), Some(false), "{report}");
+    assert!(report.get("inflight").as_i64().unwrap() >= 1, "{report}");
+    let refused = mux
+        .submit(&ApiRequest::Generate(GenerateSpec {
+            prompt: "more".into(),
+            n_gen: 2,
+            ..Default::default()
+        }))
+        .unwrap()
+        .wait_done()
+        .unwrap();
+    assert_eq!(
+        refused.get("error").get("code").as_str(),
+        Some("draining"),
+        "{refused}"
+    );
+
+    // an open-ended drain quiesces: it must block until the in-flight
+    // stream finishes, then report success
+    let report = mux.drain(None).unwrap().wait_done().unwrap();
+    assert_eq!(report.get("error"), &Value::Null, "{report}");
+    assert_eq!(report.get("drained").as_bool(), Some(true), "{report}");
+    assert_eq!(report.get("inflight").as_i64(), Some(0), "{report}");
+
+    // ZERO dropped frames: the victim stream delivered every token and
+    // its final frame even though the drain completed around it
+    let fin = gen.wait_done().unwrap();
+    assert_eq!(fin.get("error"), &Value::Null, "{fin}");
+    assert_eq!(fin.get("tokens").as_arr().unwrap().len(), 32, "{fin}");
+
+    // instant ops stay admissible on the drained server (clients need
+    // stats/close to wind down); generation stays refused
+    let stats = mux.submit(&ApiRequest::Stats).unwrap().wait_done().unwrap();
+    assert_eq!(stats.get("error"), &Value::Null, "{stats}");
+    assert_eq!(stats.get("inflight").as_i64(), Some(0), "{stats}");
+    let refused = mux
+        .submit(&ApiRequest::Generate(GenerateSpec {
+            prompt: "still refused".into(),
+            n_gen: 2,
+            ..Default::default()
+        }))
+        .unwrap()
+        .wait_done()
+        .unwrap();
+    assert_eq!(
+        refused.get("error").get("code").as_str(),
+        Some("draining"),
+        "{refused}"
+    );
+
+    // the successful drain already stopped the accept loop; this must
+    // stay a harmless no-op
+    server.request_stop();
+}
+
+#[test]
+fn strict_v2_rejects_drain_op() {
+    let Some(engine) = common::engine_for("tiny") else { return };
+    let coord = Coordinator::start(engine, CoordinatorConfig::default());
+    let (server, addr) = boot(coord);
+    let mut client = Client::connect(&addr).unwrap();
+    let v = client
+        .call(&Value::obj(vec![
+            ("v", Value::num(2.0)),
+            ("op", Value::str_of("drain")),
+        ]))
+        .unwrap();
+    assert_eq!(v.get("error").get("code").as_str(), Some("unknown_op"), "{v}");
+    assert!(
+        v.get("error").get("message").as_str().unwrap().contains("v3"),
+        "the rejection must point at the v3 framing: {v}"
+    );
+    // and the v2 connection is still healthy afterwards
+    let pong = client.send(&ApiRequest::Ping).unwrap();
+    assert_eq!(pong.get("error"), &Value::Null, "{pong}");
+    server.request_stop();
+}
