@@ -1,9 +1,12 @@
 //! Fold/unfold hot-path bench: per-channel K and per-token V group
-//! quantize+pack (and the inverse), scalar vs wordpack, plus the batched
-//! `append_tokens` prefill path vs per-token appends. Pure-Rust (no
-//! artifacts), runs everywhere. Emits the `fold_*`, `unfold_*` and
-//! `append_*` records of `BENCH_kernels.json` — the scalar-vs-wordpack
-//! speedup trajectory the CI bench-smoke job publishes.
+//! quantize+pack (and the inverse), scalar vs wordpack vs simd, plus the
+//! batched `append_tokens` prefill path vs per-token appends. Pure-Rust
+//! (no artifacts), runs everywhere. Emits the `fold_*`, `unfold_*` and
+//! `append_*` records of `BENCH_kernels.json` — the kernel-tier speedup
+//! trajectory the CI bench-smoke job publishes. In full (non-smoke) runs
+//! the simd V-path must clear 2x over wordpack at 1–2 bit; the committed
+//! JSON carries `ratio_vs_wordpack` so CI can re-assert the floor without
+//! re-measuring.
 
 use asymkv::kvcache::{CacheGeometry, LayerCache};
 use asymkv::quant::kernels::{self, GroupParams, KernelMode};
@@ -11,8 +14,11 @@ use asymkv::util::bench::{self, fmt_duration, fmt_throughput, time_fn, JsonRepor
 use asymkv::util::json::Value;
 use asymkv::util::rng::SplitMix;
 
-const MODES: [(KernelMode, &str); 2] =
-    [(KernelMode::Scalar, "scalar"), (KernelMode::Wordpack, "wordpack")];
+const MODES: [(KernelMode, &str); 3] = [
+    (KernelMode::Scalar, "scalar"),
+    (KernelMode::Wordpack, "wordpack"),
+    (KernelMode::Simd, "simd"),
+];
 
 // One iteration folds/unfolds HEADS groups of [G, DH] — a full layer's
 // fold work for one group boundary at an 8-head model.
@@ -50,6 +56,8 @@ fn main() {
         &["op", "bits", "impl", "p50", "throughput", "speedup"],
     );
     let mut report = JsonReport::at_root("BENCH_kernels.json");
+    // (record name, simd-over-wordpack ratio) for the V-path floor check
+    let mut v_floors: Vec<(String, f64)> = Vec::new();
 
     for bits in [1u8, 2, 4, 8] {
         let rows_pk = kernels::packed_len(G, bits);
@@ -62,7 +70,8 @@ fn main() {
         let mut out = vec![0f32; HEADS * G * DH];
 
         // fold_k, unfold_k, fold_v, unfold_v, fold_unfold_k, fold_unfold_v
-        let mut scalar_mean = [0f64; 6];
+        // [op][0] = scalar mean, [op][1] = wordpack mean
+        let mut base_means = [[0f64; 2]; 6];
         for (mode, name) in MODES {
             // fold K
             let tm = time_fn(warm, reps, || {
@@ -79,7 +88,7 @@ fn main() {
                 }
                 std::hint::black_box(&packed_k);
             });
-            emit(&mut t, &mut report, "fold_k", bits, name, &tm, bytes, &mut scalar_mean[0]);
+            emit(&mut t, &mut report, "fold_k", bits, name, &tm, bytes, &mut base_means[0]);
 
             // unfold K
             let tm = time_fn(warm, reps, || {
@@ -96,7 +105,7 @@ fn main() {
                 }
                 std::hint::black_box(&out);
             });
-            emit(&mut t, &mut report, "unfold_k", bits, name, &tm, bytes, &mut scalar_mean[1]);
+            emit(&mut t, &mut report, "unfold_k", bits, name, &tm, bytes, &mut base_means[1]);
 
             // fold V
             let tm = time_fn(warm, reps, || {
@@ -114,7 +123,13 @@ fn main() {
                 }
                 std::hint::black_box(&packed_v);
             });
-            emit(&mut t, &mut report, "fold_v", bits, name, &tm, bytes, &mut scalar_mean[2]);
+            if let Some(r) =
+                emit(&mut t, &mut report, "fold_v", bits, name, &tm, bytes, &mut base_means[2])
+            {
+                if bits <= 2 {
+                    v_floors.push((format!("fold_v_{bits}bit_simd"), r));
+                }
+            }
 
             // unfold V
             let tm = time_fn(warm, reps, || {
@@ -132,7 +147,13 @@ fn main() {
                 }
                 std::hint::black_box(&out);
             });
-            emit(&mut t, &mut report, "unfold_v", bits, name, &tm, bytes, &mut scalar_mean[3]);
+            if let Some(r) =
+                emit(&mut t, &mut report, "unfold_v", bits, name, &tm, bytes, &mut base_means[3])
+            {
+                if bits <= 2 {
+                    v_floors.push((format!("unfold_v_{bits}bit_simd"), r));
+                }
+            }
 
             // the fold/unfold PATH: quantize+pack then unpack+dequantize —
             // the roundtrip every cached token pays, and the headline
@@ -161,7 +182,7 @@ fn main() {
                 std::hint::black_box(&out);
             });
             emit(&mut t, &mut report, "fold_unfold_k", bits, name, &tm, bytes * 2,
-                 &mut scalar_mean[4]);
+                 &mut base_means[4]);
 
             let tm = time_fn(warm, reps, || {
                 for h in 0..HEADS {
@@ -189,7 +210,19 @@ fn main() {
                 std::hint::black_box(&out);
             });
             emit(&mut t, &mut report, "fold_unfold_v", bits, name, &tm, bytes * 2,
-                 &mut scalar_mean[5]);
+                 &mut base_means[5]);
+        }
+    }
+
+    // simd V-path floor: >= 2x over wordpack at the 1–2 bit tiers the
+    // paper's flagship configs live at. Smoke runs take too few samples
+    // for a stable ratio, so only full runs enforce it.
+    if !bench::smoke() {
+        for (name, ratio) in &v_floors {
+            assert!(
+                *ratio >= 2.0,
+                "{name}: simd-over-wordpack ratio {ratio:.2} below the 2x floor"
+            );
         }
     }
 
@@ -249,8 +282,9 @@ fn main() {
     println!("wrote BENCH_kernels.json (fold_*/unfold_*/append_* records)");
 }
 
-/// Table row + JSON record; stashes the scalar mean so the wordpack row of
-/// the same op can print and record its speedup.
+/// Table row + JSON record; stashes the scalar/wordpack means so later
+/// tiers of the same op can print and record their speedups. Returns the
+/// simd-over-wordpack ratio (the CI floor metric) on simd rows.
 #[allow(clippy::too_many_arguments)]
 fn emit(
     t: &mut Table,
@@ -260,13 +294,16 @@ fn emit(
     imp: &str,
     tm: &asymkv::util::bench::Timing,
     bytes: usize,
-    scalar_mean: &mut f64,
-) {
+    means: &mut [f64; 2],
+) -> Option<f64> {
     let speedup = if imp == "scalar" {
-        *scalar_mean = tm.mean();
+        means[0] = tm.mean();
         String::new()
     } else {
-        format!("{:.2}x", *scalar_mean / tm.mean())
+        if imp == "wordpack" {
+            means[1] = tm.mean();
+        }
+        format!("{:.2}x", means[0] / tm.mean())
     };
     t.row(vec![
         op.into(),
@@ -277,10 +314,15 @@ fn emit(
         speedup,
     ]);
     let mut config = cfg(bits, imp);
-    if imp != "scalar" {
-        if let asymkv::util::json::Value::Obj(o) = &mut config {
-            o.insert("speedup_vs_scalar".into(), Value::num(*scalar_mean / tm.mean()));
+    let ratio_vs_wordpack = (imp == "simd").then(|| means[1] / tm.mean());
+    if let asymkv::util::json::Value::Obj(o) = &mut config {
+        if imp != "scalar" {
+            o.insert("speedup_vs_scalar".into(), Value::num(means[0] / tm.mean()));
+        }
+        if let Some(r) = ratio_vs_wordpack {
+            o.insert("ratio_vs_wordpack".into(), Value::num(r));
         }
     }
     report.add(&format!("{op}_{bits}bit_{imp}"), tm, bytes, config);
+    ratio_vs_wordpack
 }

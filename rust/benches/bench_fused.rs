@@ -1,0 +1,281 @@
+//! Fused dequant-attention decode bench: one query row attending over a
+//! packed cache, computed two ways per bit-width —
+//!
+//!   unfold_attn_*: the pre-fused shipping path. Per group, wordpack
+//!     `unfold_k_group` into an f32 scratch then [`dot8`] per token row;
+//!     softmax; wordpack `unfold_v_group` then [`weighted_acc`].
+//!   fused_attn_*:  `attn_scores_k_group` / `attn_weighted_v_group`
+//!     straight from packed codes + GroupParams, no materialized f32 tile.
+//!
+//! Both sides share the softmax and the canonical summation orders, so the
+//! bench first asserts the two paths are BIT-IDENTICAL on scores and
+//! output, then times them. Pure-Rust (no artifacts), runs everywhere.
+//! Emits the `fused_attn_*` / `unfold_attn_*` records of
+//! `BENCH_kernels.json`; the fused config carries `ratio_vs_unfold`, and
+//! full (non-smoke) runs enforce the >= 1.5x floor at 1–2 bit.
+
+use asymkv::quant::kernels::{self, GroupParams, KernelMode};
+use asymkv::util::bench::{self, fmt_duration, fmt_throughput, time_fn, JsonReport, Table};
+use asymkv::util::json::Value;
+use asymkv::util::rng::SplitMix;
+
+// Decode-attention shape: one query over N cached tokens, the per-head
+// work of every decode step at a 4k-ish context after one GQA head.
+const N: usize = 1024;
+const G: usize = 32;
+const DH: usize = 128;
+const G2: usize = 32;
+const NG: usize = N / G;
+
+fn cfg(bits: u8, imp: &str) -> Value {
+    Value::obj(vec![
+        ("bits", Value::num(bits as f64)),
+        ("impl", Value::str_of(imp)),
+        ("n", Value::num(N as f64)),
+        ("g", Value::num(G as f64)),
+        ("dh", Value::num(DH as f64)),
+        ("g2", Value::num(G2 as f64)),
+    ])
+}
+
+/// The shared epilogue: scale by 1/sqrt(Dh), subtract max, exp, normalize.
+fn softmax_inplace(s: &mut [f32]) {
+    let inv = 1.0 / (DH as f32).sqrt();
+    let mut max = f32::NEG_INFINITY;
+    for w in s.iter_mut() {
+        *w *= inv;
+        if *w > max {
+            max = *w;
+        }
+    }
+    let mut denom = 0f32;
+    for w in s.iter_mut() {
+        *w = (*w - max).exp();
+        denom += *w;
+    }
+    let inv_d = 1.0 / denom;
+    for w in s.iter_mut() {
+        *w *= inv_d;
+    }
+}
+
+struct PackedCache {
+    bits: u8,
+    packed_k: Vec<u8>,   // [NG, rows_pk, DH]
+    params_k: Vec<GroupParams>, // [NG, DH]
+    packed_v: Vec<u8>,   // [NG, G, bpt]
+    params_v: Vec<GroupParams>, // [NG, G, dg]
+    rows_pk: usize,
+    bpt: usize,
+    dg: usize,
+}
+
+fn fold_cache(bits: u8, k: &[f32], v: &[f32]) -> PackedCache {
+    let rows_pk = kernels::packed_len(G, bits);
+    let bpt = kernels::packed_len(DH, bits);
+    let dg = DH / G2;
+    let mut c = PackedCache {
+        bits,
+        packed_k: vec![0u8; NG * rows_pk * DH],
+        params_k: vec![GroupParams { scale: 0.0, zero: 0.0 }; NG * DH],
+        packed_v: vec![0u8; NG * G * bpt],
+        params_v: vec![GroupParams { scale: 0.0, zero: 0.0 }; NG * G * dg],
+        rows_pk,
+        bpt,
+        dg,
+    };
+    for gi in 0..NG {
+        kernels::fold_k_group(
+            &k[gi * G * DH..(gi + 1) * G * DH],
+            G,
+            DH,
+            bits,
+            &mut c.packed_k[gi * rows_pk * DH..(gi + 1) * rows_pk * DH],
+            &mut c.params_k[gi * DH..(gi + 1) * DH],
+        );
+        kernels::fold_v_group(
+            &v[gi * G * DH..(gi + 1) * G * DH],
+            G,
+            DH,
+            G2,
+            bits,
+            &mut c.packed_v[gi * G * bpt..(gi + 1) * G * bpt],
+            &mut c.params_v[gi * G * dg..(gi + 1) * G * dg],
+        );
+    }
+    c
+}
+
+/// Fused path: scores and weighted V straight from packed codes.
+fn attn_fused(c: &PackedCache, q: &[f32], scores: &mut [f32], out: &mut [f32]) {
+    for gi in 0..NG {
+        kernels::attn_scores_k_group_with(
+            KernelMode::Fused,
+            &c.packed_k[gi * c.rows_pk * DH..(gi + 1) * c.rows_pk * DH],
+            G,
+            DH,
+            c.bits,
+            &c.params_k[gi * DH..(gi + 1) * DH],
+            q,
+            &mut scores[gi * G..(gi + 1) * G],
+        );
+    }
+    softmax_inplace(scores);
+    out[..DH].fill(0.0);
+    for gi in 0..NG {
+        kernels::attn_weighted_v_group_with(
+            KernelMode::Fused,
+            &c.packed_v[gi * G * c.bpt..(gi + 1) * G * c.bpt],
+            G,
+            DH,
+            G2,
+            c.bits,
+            &c.params_v[gi * G * c.dg..(gi + 1) * G * c.dg],
+            &scores[gi * G..(gi + 1) * G],
+            out,
+        );
+    }
+}
+
+/// Pre-fused path: wordpack unfold into a group-sized f32 scratch, then
+/// the same dot8 / weighted_acc the fused kernels replicate in-register.
+fn attn_unfold(
+    c: &PackedCache,
+    q: &[f32],
+    scratch: &mut [f32],
+    scores: &mut [f32],
+    out: &mut [f32],
+) {
+    for gi in 0..NG {
+        kernels::unfold_k_group_with(
+            KernelMode::Wordpack,
+            &c.packed_k[gi * c.rows_pk * DH..(gi + 1) * c.rows_pk * DH],
+            G,
+            DH,
+            c.bits,
+            &c.params_k[gi * DH..(gi + 1) * DH],
+            scratch,
+        );
+        for t in 0..G {
+            scores[gi * G + t] = kernels::dot8(q, &scratch[t * DH..(t + 1) * DH]);
+        }
+    }
+    softmax_inplace(scores);
+    out[..DH].fill(0.0);
+    for gi in 0..NG {
+        kernels::unfold_v_group_with(
+            KernelMode::Wordpack,
+            &c.packed_v[gi * G * c.bpt..(gi + 1) * G * c.bpt],
+            G,
+            DH,
+            G2,
+            c.bits,
+            &c.params_v[gi * G * c.dg..(gi + 1) * G * c.dg],
+            scratch,
+        );
+        kernels::weighted_acc(&scores[gi * G..(gi + 1) * G], scratch, G, DH, out);
+    }
+}
+
+fn main() {
+    let reps = bench::samples(200);
+    let warm = bench::warmup(10);
+    let mut rng = SplitMix::new(0xF05E);
+    let k: Vec<f32> = rng.normal_f32_vec(N * DH);
+    let v: Vec<f32> = rng.normal_f32_vec(N * DH);
+    let q: Vec<f32> = rng.normal_f32_vec(DH);
+    // fp32-equivalent attention traffic: K read + V read per decode step
+    let bytes = N * DH * 4 * 2;
+
+    bench::note(
+        "bench_fused",
+        &format!(
+            "\nFused dequant-attention decode — 1 query over N={N} tokens, \
+             Dh={DH}, G={G}, g2={G2}, {reps} samples"
+        ),
+    );
+    let mut t = Table::new(
+        "decode attention (per query row)",
+        &["bits", "impl", "p50", "throughput", "vs unfold"],
+    );
+    let mut report = JsonReport::at_root("BENCH_kernels.json");
+    let mut floors: Vec<(u8, f64)> = Vec::new();
+
+    let mut scratch = vec![0f32; G * DH];
+    let mut scores = vec![0f32; N];
+    let mut scores_ref = vec![0f32; N];
+    let mut out = vec![0f32; DH];
+    let mut out_ref = vec![0f32; DH];
+
+    for bits in [1u8, 2, 4, 8] {
+        let c = fold_cache(bits, &k, &v);
+
+        // the fused kernels must be a pure layout fusion: bit-identical
+        // scores and output, not merely close
+        attn_fused(&c, &q, &mut scores, &mut out);
+        attn_unfold(&c, &q, &mut scratch, &mut scores_ref, &mut out_ref);
+        assert!(
+            scores.iter().zip(&scores_ref).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "fused scores diverge from unfold-then-dot8 at {bits}b"
+        );
+        assert!(
+            out.iter().zip(&out_ref).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "fused weighted V diverges from unfold-then-weighted_acc at {bits}b"
+        );
+
+        let tm = time_fn(warm, reps, || {
+            attn_unfold(&c, &q, &mut scratch, &mut scores, &mut out);
+            std::hint::black_box(&out);
+        });
+        let unfold_mean = tm.mean();
+        t.row(vec![
+            bits.to_string(),
+            "wordpack+dot8".into(),
+            fmt_duration(tm.p50()),
+            fmt_throughput(bytes as f64 / tm.mean()),
+            String::new(),
+        ]);
+        report.add(
+            &format!("unfold_attn_{bits}bit"),
+            &tm,
+            bytes,
+            cfg(bits, "wordpack+dot8"),
+        );
+
+        let tm = time_fn(warm, reps, || {
+            attn_fused(&c, &q, &mut scores, &mut out);
+            std::hint::black_box(&out);
+        });
+        let ratio = unfold_mean / tm.mean();
+        t.row(vec![
+            bits.to_string(),
+            "fused".into(),
+            fmt_duration(tm.p50()),
+            fmt_throughput(bytes as f64 / tm.mean()),
+            format!("{ratio:.2}x"),
+        ]);
+        let mut config = cfg(bits, "fused");
+        if let Value::Obj(o) = &mut config {
+            o.insert("ratio_vs_unfold".into(), Value::num(ratio));
+        }
+        report.add(&format!("fused_attn_{bits}bit"), &tm, bytes, config);
+        if bits <= 2 {
+            floors.push((bits, ratio));
+        }
+    }
+
+    // fused floor: >= 1.5x over unfold-then-matmul at the 1–2 bit tiers.
+    // Smoke runs take too few samples for a stable ratio.
+    if !bench::smoke() {
+        for (bits, ratio) in &floors {
+            assert!(
+                *ratio >= 1.5,
+                "fused_attn_{bits}bit: ratio {ratio:.2} below the 1.5x floor vs unfold"
+            );
+        }
+    }
+
+    t.emit("bench_fused");
+    report.write().expect("write BENCH_kernels.json");
+    println!("wrote BENCH_kernels.json (fused_attn_*/unfold_attn_* records)");
+}

@@ -203,11 +203,10 @@ pub fn attention_flip_rate(
         for head in 0..n_heads {
             let xq = &a.xq[head * d_head..(head + 1) * d_head];
             let k = &a.k[head * n * d_head..(head + 1) * n * d_head];
-            // float scores + argmax
-            let score = |krow: &[f32]| -> f32 {
-                xq.iter().zip(krow).map(|(a, b)| a * b).sum::<f32>()
-                    / (d_head as f32).sqrt()
-            };
+            // float scores + argmax (canonical dot8 order, shared with the
+            // packed-code path below)
+            let score =
+                |krow: &[f32]| -> f32 { rtn::dot8(xq, krow) / (d_head as f32).sqrt() };
             let mut best = 0usize;
             let mut best_s = f32::NEG_INFINITY;
             let mut second = f32::NEG_INFINITY;
@@ -228,30 +227,27 @@ pub fn attention_flip_rate(
                 margin_sum += (best_s - second) as f64;
                 margin_n += 1;
             }
-            // quantize K per-channel over full groups (runtime layout)
-            let mut kq = k.to_vec();
+            // quantized scores straight from packed codes (runtime layout:
+            // per-channel full-group K fold, then the fused-attention
+            // dispatch) — the dequantized K copy is never materialized
+            let mut qs = vec![0f32; n];
+            let mut packed = vec![0u8; rtn::packed_len(group, bits) * d_head];
+            let mut params = vec![rtn::GroupParams { scale: 0.0, zero: 0.0 }; d_head];
             for gi in 0..nq / group {
-                let mut kg = vec![0f32; group * d_head];
-                for t in 0..group {
-                    kg[t * d_head..(t + 1) * d_head].copy_from_slice(
-                        &k[(gi * group + t) * d_head..(gi * group + t + 1) * d_head],
-                    );
-                }
-                let mut packed = vec![0u8; rtn::packed_len(group, bits) * d_head];
-                let mut params =
-                    vec![rtn::GroupParams { scale: 0.0, zero: 0.0 }; d_head];
-                rtn::fold_k_group(&kg, group, d_head, bits, &mut packed, &mut params);
-                let mut back = vec![0f32; group * d_head];
-                rtn::unfold_k_group(&packed, group, d_head, bits, &params, &mut back);
-                for t in 0..group {
-                    kq[(gi * group + t) * d_head..(gi * group + t + 1) * d_head]
-                        .copy_from_slice(&back[t * d_head..(t + 1) * d_head]);
-                }
+                let rows = &k[gi * group * d_head..(gi + 1) * group * d_head];
+                rtn::fold_k_group(rows, group, d_head, bits, &mut packed, &mut params);
+                rtn::attn_scores_k_group(
+                    &packed, group, d_head, bits, &params, xq,
+                    &mut qs[gi * group..(gi + 1) * group],
+                );
+            }
+            for t in nq..n {
+                qs[t] = rtn::dot8(xq, &k[t * d_head..(t + 1) * d_head]);
             }
             let mut qbest = 0usize;
             let mut qbest_s = f32::NEG_INFINITY;
-            for t in 0..n {
-                let s = score(&kq[t * d_head..(t + 1) * d_head]);
+            for (t, &raw) in qs.iter().enumerate() {
+                let s = raw / (d_head as f32).sqrt();
                 if s > qbest_s {
                     qbest_s = s;
                     qbest = t;

@@ -5,7 +5,9 @@
 //! layers matter more); the profiler makes it quantitative per model so the
 //! budget solver (`calib::solve`) can replace the hand-tuned `l_k`/`l_v`
 //! prefix knobs with a measured allocation. Scoring is pure CPU — only the
-//! `quant::rtn` fold/unfold kernels — so a profile can be built (and unit
+//! `quant::rtn` fold and fused-attention kernels (quantized scores and
+//! weighted sums come straight from packed codes) — so a profile can be
+//! built (and unit
 //! tested) without any compiled artifacts; capturing *real* activations via
 //! [`profile_engine`] does need the `probe_b1` artifact that
 //! `analysis::collect_activations` drives.
@@ -203,13 +205,11 @@ pub fn score_damage(
             let xq = &a.xq[head * d_head..(head + 1) * d_head];
             let k = &a.k[head * n * d_head..(head + 1) * n * d_head];
             let v = &a.v[head * n * d_head..(head + 1) * n * d_head];
-            let kq = requant_k(k, nq, d_head, group, bits);
-            let vq = requant_v(v, nq, d_head, group, g2, bits);
             let (p, argmax) = attn_weights(xq, k, n, d_head);
-            let (pq, argmax_q) = attn_weights(xq, &kq, n, d_head);
+            let (pq, argmax_q) = attn_weights_packed_k(xq, k, n, nq, d_head, group, bits);
             let out = weighted_sum(&p, v, n, d_head);
             let out_k = weighted_sum(&pq, v, n, d_head);
-            let out_v = weighted_sum(&p, &vq, n, d_head);
+            let out_v = weighted_sum_packed_v(&p, v, n, nq, d_head, group, g2, bits);
             acc.k_mse += crate::util::stats::mse(&out_k, &out);
             acc.v_mse += crate::util::stats::mse(&out_v, &out);
             acc.energy +=
@@ -232,17 +232,53 @@ pub fn score_damage(
 }
 
 /// Softmax attention weights + argmax of the float scores for one head.
+/// Scores use the canonical [`rtn::dot8`] order so the float and packed
+/// score paths sum identically.
 fn attn_weights(xq: &[f32], k: &[f32], n: usize, d_head: usize) -> (Vec<f32>, usize) {
-    let scale = (d_head as f32).sqrt();
     let mut s = vec![0f32; n];
+    for (t, st) in s.iter_mut().enumerate() {
+        *st = rtn::dot8(xq, &k[t * d_head..(t + 1) * d_head]);
+    }
+    finish_weights(s, d_head)
+}
+
+/// Attention weights with the quantizable K region (`nq` tokens, full
+/// groups) scored **straight from packed codes** through the
+/// [`rtn::attn_scores_k_group`] dispatch — the dequantized K copy the old
+/// requant round-trip materialized is never built. The residual tail
+/// `nq..n` stays float, exactly as at runtime.
+fn attn_weights_packed_k(
+    xq: &[f32],
+    k: &[f32],
+    n: usize,
+    nq: usize,
+    d_head: usize,
+    group: usize,
+    bits: u8,
+) -> (Vec<f32>, usize) {
+    let mut s = vec![0f32; n];
+    let mut packed = vec![0u8; rtn::packed_len(group, bits) * d_head];
+    let mut params = vec![rtn::GroupParams { scale: 0.0, zero: 0.0 }; d_head];
+    for gi in 0..nq / group {
+        let rows = &k[gi * group * d_head..(gi + 1) * group * d_head];
+        rtn::fold_k_group(rows, group, d_head, bits, &mut packed, &mut params);
+        rtn::attn_scores_k_group(
+            &packed, group, d_head, bits, &params, xq,
+            &mut s[gi * group..(gi + 1) * group],
+        );
+    }
+    for t in nq..n {
+        s[t] = rtn::dot8(xq, &k[t * d_head..(t + 1) * d_head]);
+    }
+    finish_weights(s, d_head)
+}
+
+/// Scale raw scores by `1/√Dh`, record the argmax, softmax in place.
+fn finish_weights(mut s: Vec<f32>, d_head: usize) -> (Vec<f32>, usize) {
+    let scale = (d_head as f32).sqrt();
     let mut best = 0usize;
-    for t in 0..n {
-        s[t] = xq
-            .iter()
-            .zip(&k[t * d_head..(t + 1) * d_head])
-            .map(|(a, b)| a * b)
-            .sum::<f32>()
-            / scale;
+    for t in 0..s.len() {
+        s[t] /= scale;
         if s[t] > s[best] {
             best = t;
         }
@@ -261,52 +297,39 @@ fn attn_weights(xq: &[f32], k: &[f32], n: usize, d_head: usize) -> (Vec<f32>, us
 
 fn weighted_sum(p: &[f32], v: &[f32], n: usize, d_head: usize) -> Vec<f32> {
     let mut out = vec![0f32; d_head];
-    for t in 0..n {
-        let w = p[t];
-        for (o, x) in out.iter_mut().zip(&v[t * d_head..(t + 1) * d_head]) {
-            *o += w * x;
-        }
-    }
+    rtn::weighted_acc(p, v, n, d_head, &mut out);
     out
 }
 
-/// Round-trip the quantizable region of one head's K through the runtime
-/// fold/unfold kernels (per-channel groups of `group` tokens).
-fn requant_k(k: &[f32], nq: usize, d_head: usize, group: usize, bits: u8) -> Vec<f32> {
-    let mut kq = k.to_vec();
-    for gi in 0..nq / group {
-        let rows = &k[gi * group * d_head..(gi + 1) * group * d_head];
-        let mut packed = vec![0u8; rtn::packed_len(group, bits) * d_head];
-        let mut params = vec![rtn::GroupParams { scale: 0.0, zero: 0.0 }; d_head];
-        rtn::fold_k_group(rows, group, d_head, bits, &mut packed, &mut params);
-        let mut back = vec![0f32; group * d_head];
-        rtn::unfold_k_group(&packed, group, d_head, bits, &params, &mut back);
-        kq[gi * group * d_head..(gi + 1) * group * d_head].copy_from_slice(&back);
-    }
-    kq
-}
-
-/// Same for V (per-token channel groups of `g2`).
-fn requant_v(
+/// Weighted V output with the quantizable region accumulated straight from
+/// packed codes ([`rtn::attn_weighted_v_group`] dispatch); the float
+/// residual tail chains after in token order — bit-identical to unfolding
+/// the whole region first, without the dequantized V copy.
+#[allow(clippy::too_many_arguments)]
+fn weighted_sum_packed_v(
+    p: &[f32],
     v: &[f32],
+    n: usize,
     nq: usize,
     d_head: usize,
     group: usize,
     g2: usize,
     bits: u8,
 ) -> Vec<f32> {
-    let mut vq = v.to_vec();
+    let mut out = vec![0f32; d_head];
+    let dg = d_head / g2;
+    let mut packed = vec![0u8; group * rtn::packed_len(d_head, bits)];
+    let mut params = vec![rtn::GroupParams { scale: 0.0, zero: 0.0 }; group * dg];
     for gi in 0..nq / group {
         let rows = &v[gi * group * d_head..(gi + 1) * group * d_head];
-        let mut packed = vec![0u8; group * rtn::packed_len(d_head, bits)];
-        let mut params =
-            vec![rtn::GroupParams { scale: 0.0, zero: 0.0 }; group * (d_head / g2)];
         rtn::fold_v_group(rows, group, d_head, g2, bits, &mut packed, &mut params);
-        let mut back = vec![0f32; group * d_head];
-        rtn::unfold_v_group(&packed, group, d_head, g2, bits, &params, &mut back);
-        vq[gi * group * d_head..(gi + 1) * group * d_head].copy_from_slice(&back);
+        rtn::attn_weighted_v_group(
+            &packed, group, d_head, g2, bits, &params,
+            &p[gi * group..(gi + 1) * group], &mut out,
+        );
     }
-    vq
+    rtn::weighted_acc(&p[nq..n], &v[nq * d_head..n * d_head], n - nq, d_head, &mut out);
+    out
 }
 
 /// Build a profile from synthetic layer-graded activations: early layers

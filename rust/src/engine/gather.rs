@@ -826,7 +826,7 @@ impl StagedLayer {
         // walk slots in order, pulling each slot's views; only the selected
         // slots become tasks
         let mut reused = 0usize;
-        let mut tasks: Vec<(usize, SlotBufs, &LayerCache, bool)> = Vec::new();
+        let mut tasks: Vec<(SlotBufs, &LayerCache, bool)> = Vec::new();
         for slot in 0..self.slots.len() {
             let bufs = SlotBufs {
                 k_main: km.next().unwrap(),
@@ -849,28 +849,18 @@ impl StagedLayer {
                 if skip {
                     reused += 1;
                 }
-                tasks.push((slot, bufs, lc, skip));
+                tasks.push((bufs, lc, skip));
             }
         }
 
-        let bytes: usize = if tasks.len() >= 2 {
-            // small worker pool: one scoped thread per slot (b_art is small)
-            let scatter_one = &scatter_one;
-            std::thread::scope(|scope| {
-                let handles: Vec<_> = tasks
-                    .into_iter()
-                    .map(|(_, mut bufs, lc, skip)| {
-                        scope.spawn(move || scatter_one(&mut bufs, lc, skip))
-                    })
-                    .collect();
-                handles.into_iter().map(|t| t.join().unwrap()).sum()
+        // fan out over the shared scoped worker pool (one thread per slot;
+        // b_art is small, and scoped_map runs a lone slot inline)
+        let bytes: usize =
+            crate::util::par::scoped_map(tasks, |(mut bufs, lc, skip)| {
+                scatter_one(&mut bufs, lc, skip)
             })
-        } else {
-            tasks
-                .into_iter()
-                .map(|(_, mut bufs, lc, skip)| scatter_one(&mut bufs, lc, skip))
-                .sum()
-        };
+            .into_iter()
+            .sum();
 
         for &slot in which {
             self.slots[slot] =

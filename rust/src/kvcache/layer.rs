@@ -87,6 +87,97 @@ impl CacheGeometry {
     }
 }
 
+/// Fold one [G, Dh] K group into a single head's buffers, passed as
+/// head-relative views (strides inside a head derive only from `g`/`dh`;
+/// the caller slices per head). Exactly one representation is active per
+/// bit mode: `k_f32` for fp32 (`bits == 0`), `k_pk` + params otherwise —
+/// the inactive views may be empty. A free function (not a method) so the
+/// multi-head prefill fold can run heads on scoped worker threads holding
+/// disjoint `&mut` head views.
+#[allow(clippy::too_many_arguments)]
+fn fold_k_into(
+    kg: &[f32],
+    gi: usize,
+    g: usize,
+    dh: usize,
+    bits: Bits,
+    k_pk: &mut [u8],
+    k_f32: &mut [f32],
+    k_scales: &mut [f32],
+    k_zeros: &mut [f32],
+) {
+    if bits == 0 {
+        let base = gi * g * dh;
+        k_f32[base..base + g * dh].copy_from_slice(kg);
+        return;
+    }
+    let rows_pk = rtn::packed_len(g, bits); // bytes along token axis
+    let mut params = vec![GroupParams { scale: 0.0, zero: 0.0 }; dh];
+    let dst = gi * rows_pk * dh;
+    rtn::fold_k_group(kg, g, dh, bits, &mut k_pk[dst..dst + rows_pk * dh], &mut params);
+    let pbase = gi * dh;
+    for d in 0..dh {
+        k_scales[pbase + d] = params[d].scale;
+        k_zeros[pbase + d] = params[d].zero;
+    }
+}
+
+/// V-side counterpart of [`fold_k_into`]: fold one [G, Dh] group per token
+/// into a single head's views.
+#[allow(clippy::too_many_arguments)]
+fn fold_v_into(
+    vg: &[f32],
+    gi: usize,
+    g: usize,
+    dh: usize,
+    g2: usize,
+    bits: Bits,
+    v_pk: &mut [u8],
+    v_f32: &mut [f32],
+    v_scales: &mut [f32],
+    v_zeros: &mut [f32],
+) {
+    let oq = gi * g; // own-relative token offset of this group
+    if bits == 0 {
+        let base = oq * dh;
+        v_f32[base..base + g * dh].copy_from_slice(vg);
+        return;
+    }
+    let bpt = rtn::packed_len(dh, bits); // bytes per token
+    let dg = dh / g2;
+    let mut params = vec![GroupParams { scale: 0.0, zero: 0.0 }; g * dg];
+    let dst = oq * bpt;
+    rtn::fold_v_group(vg, g, dh, g2, bits, &mut v_pk[dst..dst + g * bpt], &mut params);
+    let pbase = oq * dg;
+    for i in 0..g * dg {
+        v_scales[pbase + i] = params[i].scale;
+        v_zeros[pbase + i] = params[i].zero;
+    }
+}
+
+/// One head's destination views for the parallel batch fold.
+struct HeadFoldDst<'a> {
+    head: usize,
+    k_pk: &'a mut [u8],
+    k_f32: &'a mut [f32],
+    k_scales: &'a mut [f32],
+    k_zeros: &'a mut [f32],
+    v_pk: &'a mut [u8],
+    v_f32: &'a mut [f32],
+    v_scales: &'a mut [f32],
+    v_zeros: &'a mut [f32],
+}
+
+/// Split `buf` into `h` per-head views of `per` elements (empty views when
+/// the representation is inactive for the current bit mode).
+fn head_views<T>(buf: &mut [T], per: usize, h: usize, active: bool) -> Vec<&mut [T]> {
+    if !active || per == 0 {
+        (0..h).map(|_| Default::default()).collect()
+    } else {
+        buf.chunks_mut(per).take(h).collect()
+    }
+}
+
 /// Round a token count up to whole `g`-token pages, capped at `limit`.
 fn page_target(need: usize, g: usize, limit: usize) -> usize {
     (need.div_ceil(g) * g).min(limit)
@@ -645,9 +736,32 @@ impl LayerCache {
         assert!(self.n_q + folds * g <= geo.max_ctx, "quantized region full");
         self.ensure_q_cap(self.own_q() + folds * g);
         let mut consumed = 0; // batch tokens already folded
-        for _ in 0..folds {
+        let mut f = 0;
+        while f < folds {
             if self.n_res() >= g {
                 self.fold_oldest_group();
+                f += 1;
+            } else if self.n_res() == 0 {
+                // residual fully drained: every remaining group comes
+                // straight from the batch — fold them all in one
+                // multi-head parallel pass (byte-identical to folding them
+                // one by one; heads write disjoint buffer views)
+                let nb = folds - f;
+                self.fold_groups_batch(
+                    nb,
+                    &ks[consumed * hd..(consumed + nb * g) * hd],
+                    &vs[consumed * hd..(consumed + nb * g) * hd],
+                );
+                // base rows were already consumed (n_res == 0) and the
+                // ring is empty, so its origin is free to reset (safe even
+                // when the ring has never been allocated, res_cap == 0)
+                let base_rows = self.base.as_deref().map_or(0, |b| b.res_rows);
+                self.base_res_off = base_rows;
+                self.res_start = 0;
+                self.res_len = 0;
+                self.res_base_version = next_version();
+                consumed += nb * g;
+                f += nb;
             } else {
                 // the group spans the residual remainder (base snapshot
                 // rows + private ring) plus the batch head
@@ -664,14 +778,14 @@ impl LayerCache {
                 vt[from_cache * hd..].copy_from_slice(&vs[consumed * hd..(consumed + take) * hd]);
                 self.fold_group_rows(&kt, &vt);
                 // residual fully drained: base rows are all consumed and the
-                // ring origin is free to reset (safe even when the ring has
-                // never been allocated, res_cap == 0)
+                // ring origin is free to reset
                 let base_rows = self.base.as_deref().map_or(0, |b| b.res_rows);
                 self.base_res_off = base_rows;
                 self.res_start = 0;
                 self.res_len = 0;
                 self.res_base_version = next_version();
                 consumed += take;
+                f += 1;
             }
         }
         // bulk-append the remaining batch tokens into the ring, in
@@ -727,24 +841,23 @@ impl LayerCache {
         let geo = self.geo;
         let (dh, g) = (geo.d_head, geo.group);
         let tc = self.q_cap; // allocated private capacity drives all strides
-        if self.k_bits == 0 {
-            let base = head * tc * dh + gi * g * dh;
-            self.k_f32[base..base + g * dh].copy_from_slice(kg);
-            return;
-        }
         let bits = self.k_bits;
-        let rows_pk = rtn::packed_len(g, bits); // bytes along token axis
         let t_pk = rtn::packed_len(tc, bits);
-        let mut params = vec![GroupParams { scale: 0.0, zero: 0.0 }; dh];
-        let dst = head * t_pk * dh + gi * rows_pk * dh;
-        rtn::fold_k_group(kg, g, dh, bits,
-                          &mut self.k_pk[dst..dst + rows_pk * dh], &mut params);
         let ng = tc / g;
-        let pbase = head * ng * dh + gi * dh;
-        for d in 0..dh {
-            self.k_scales[pbase + d] = params[d].scale;
-            self.k_zeros[pbase + d] = params[d].zero;
-        }
+        // head-relative views (the unused representation stays unsliced:
+        // its buffer is empty or dummy-sized in the other bit mode)
+        let (pk, f32s, scales, zeros): (&mut [u8], &mut [f32], &mut [f32], &mut [f32]) =
+            if bits == 0 {
+                (&mut [], &mut self.k_f32[head * tc * dh..(head + 1) * tc * dh], &mut [], &mut [])
+            } else {
+                (
+                    &mut self.k_pk[head * t_pk * dh..(head + 1) * t_pk * dh],
+                    &mut [],
+                    &mut self.k_scales[head * ng * dh..(head + 1) * ng * dh],
+                    &mut self.k_zeros[head * ng * dh..(head + 1) * ng * dh],
+                )
+            };
+        fold_k_into(kg, gi, g, dh, bits, pk, f32s, scales, zeros);
     }
 
     /// `gi` is the destination group index relative to the private region.
@@ -753,24 +866,123 @@ impl LayerCache {
         let (dh, g) = (geo.d_head, geo.group);
         let g2 = geo.g2();
         let tc = self.q_cap;
-        let oq = gi * g; // own-relative token offset of this group
-        if self.v_bits == 0 {
-            let base = head * tc * dh + oq * dh;
-            self.v_f32[base..base + g * dh].copy_from_slice(vg);
-            return;
-        }
         let bits = self.v_bits;
-        let bpt = rtn::packed_len(dh, bits); // bytes per token
+        let bpt = rtn::packed_len(dh, bits);
         let dg = dh / g2;
-        let mut params = vec![GroupParams { scale: 0.0, zero: 0.0 }; g * dg];
-        let dst = head * tc * bpt + oq * bpt;
-        rtn::fold_v_group(vg, g, dh, g2, bits,
-                          &mut self.v_pk[dst..dst + g * bpt], &mut params);
-        let pbase = head * tc * dg + oq * dg;
-        for i in 0..g * dg {
-            self.v_scales[pbase + i] = params[i].scale;
-            self.v_zeros[pbase + i] = params[i].zero;
+        let (pk, f32s, scales, zeros): (&mut [u8], &mut [f32], &mut [f32], &mut [f32]) =
+            if bits == 0 {
+                (&mut [], &mut self.v_f32[head * tc * dh..(head + 1) * tc * dh], &mut [], &mut [])
+            } else {
+                (
+                    &mut self.v_pk[head * tc * bpt..(head + 1) * tc * bpt],
+                    &mut [],
+                    &mut self.v_scales[head * tc * dg..(head + 1) * tc * dg],
+                    &mut self.v_zeros[head * tc * dg..(head + 1) * tc * dg],
+                )
+            };
+        fold_v_into(vg, gi, g, dh, g2, bits, pk, f32s, scales, zeros);
+    }
+
+    /// Fold `nfolds` consecutive groups straight from token-major
+    /// [nfolds·G, H, Dh] batch rows, parallelized **across heads** on
+    /// scoped worker threads ([`crate::util::par::scoped_map`]). Each head
+    /// owns disjoint `&mut` views of the packed/param buffers
+    /// ([`HeadFoldDst`]) and folds its `nfolds` groups sequentially with
+    /// the exact same [`fold_k_into`]/[`fold_v_into`] calls the sequential
+    /// path makes, so the resulting bytes are identical regardless of
+    /// thread count. Precondition: the residual is empty (`n_res() == 0`)
+    /// — the caller's fold budget then comes entirely from the batch.
+    fn fold_groups_batch(&mut self, nfolds: usize, kt: &[f32], vt: &[f32]) {
+        let geo = self.geo;
+        let (h, dh, g) = (geo.n_heads, geo.d_head, geo.group);
+        let g2 = geo.g2();
+        let hd = h * dh;
+        debug_assert_eq!(self.n_res(), 0, "batch fold requires a drained residual");
+        debug_assert_eq!(kt.len(), nfolds * g * hd);
+        debug_assert_eq!(vt.len(), nfolds * g * hd);
+        assert!(self.n_q + nfolds * g <= geo.max_ctx, "quantized region full");
+        self.ensure_q_cap(self.own_q() + nfolds * g);
+        let gi0 = self.own_q() / g; // first destination group (own-relative)
+        let tc = self.q_cap;
+        let (kb, vb) = (self.k_bits, self.v_bits);
+        let t_pk = rtn::packed_len(tc, kb);
+        let ng = tc / g;
+        let bpt = rtn::packed_len(dh, vb);
+        let dg = dh / g2;
+        // carve every buffer into per-head views up front (inactive
+        // representations become empty views), then bundle them per head
+        let k_pk = head_views(&mut self.k_pk, t_pk * dh, h, kb > 0);
+        let k_f32 = head_views(&mut self.k_f32, tc * dh, h, kb == 0);
+        let k_scales = head_views(&mut self.k_scales, ng * dh, h, kb > 0);
+        let k_zeros = head_views(&mut self.k_zeros, ng * dh, h, kb > 0);
+        let v_pk = head_views(&mut self.v_pk, tc * bpt, h, vb > 0);
+        let v_f32 = head_views(&mut self.v_f32, tc * dh, h, vb == 0);
+        let v_scales = head_views(&mut self.v_scales, tc * dg, h, vb > 0);
+        let v_zeros = head_views(&mut self.v_zeros, tc * dg, h, vb > 0);
+        let mut tasks: Vec<HeadFoldDst> = Vec::with_capacity(h);
+        for (head, views) in k_pk
+            .into_iter()
+            .zip(k_f32)
+            .zip(k_scales)
+            .zip(k_zeros)
+            .zip(v_pk)
+            .zip(v_f32)
+            .zip(v_scales)
+            .zip(v_zeros)
+            .enumerate()
+        {
+            let (((((((k_pk, k_f32), k_scales), k_zeros), v_pk), v_f32), v_scales), v_zeros) =
+                views;
+            tasks.push(HeadFoldDst {
+                head,
+                k_pk,
+                k_f32,
+                k_scales,
+                k_zeros,
+                v_pk,
+                v_f32,
+                v_scales,
+                v_zeros,
+            });
         }
+        crate::util::par::scoped_map(tasks, |mut dst: HeadFoldDst| {
+            let head = dst.head;
+            let mut kg = vec![0f32; g * dh];
+            let mut vg = vec![0f32; g * dh];
+            for f in 0..nfolds {
+                for t in 0..g {
+                    let src = (f * g + t) * hd + head * dh;
+                    kg[t * dh..(t + 1) * dh].copy_from_slice(&kt[src..src + dh]);
+                    vg[t * dh..(t + 1) * dh].copy_from_slice(&vt[src..src + dh]);
+                }
+                fold_k_into(
+                    &kg,
+                    gi0 + f,
+                    g,
+                    dh,
+                    kb,
+                    &mut dst.k_pk,
+                    &mut dst.k_f32,
+                    &mut dst.k_scales,
+                    &mut dst.k_zeros,
+                );
+                fold_v_into(
+                    &vg,
+                    gi0 + f,
+                    g,
+                    dh,
+                    g2,
+                    vb,
+                    &mut dst.v_pk,
+                    &mut dst.v_f32,
+                    &mut dst.v_scales,
+                    &mut dst.v_zeros,
+                );
+            }
+        });
+        self.n_q += nfolds * g;
+        self.version = next_version();
+        self.packed_version = next_version();
     }
 
     // -----------------------------------------------------------------
@@ -988,38 +1200,46 @@ impl LayerCache {
         self.dequant_full(false)
     }
 
+    /// Select the buffers holding quantized group `gi` of the K (`is_k`) or
+    /// V side: groups below `n_base` read the shared base at its exact
+    /// strides, the rest read the private tail at `q_cap` strides. Returns
+    /// `(packed, f32s, scales, zeros, stride_cap, local_group_index)` —
+    /// shared by full dequantization and the packed attention path.
+    #[allow(clippy::type_complexity)]
+    fn packed_region(
+        &self,
+        is_k: bool,
+        gi: usize,
+    ) -> (&[u8], &[f32], &[f32], &[f32], usize, usize) {
+        let n_base = self.n_base();
+        if gi * self.geo.group < n_base {
+            let b = self.base.as_deref().unwrap();
+            if is_k {
+                (&b.k_pk, &b.k_f32, &b.k_scales, &b.k_zeros, b.n_base, gi)
+            } else {
+                (&b.v_pk, &b.v_f32, &b.v_scales, &b.v_zeros, b.n_base, gi)
+            }
+        } else {
+            let lgi = gi - n_base / self.geo.group;
+            if is_k {
+                (&self.k_pk, &self.k_f32, &self.k_scales, &self.k_zeros, self.q_cap, lgi)
+            } else {
+                (&self.v_pk, &self.v_f32, &self.v_scales, &self.v_zeros, self.q_cap, lgi)
+            }
+        }
+    }
+
     fn dequant_full(&self, is_k: bool) -> Vec<f32> {
         let geo = self.geo;
         let (h, dh, g) = (geo.n_heads, geo.d_head, geo.group);
         let g2 = geo.g2();
         let n = self.n_tokens();
-        let n_base = self.n_base();
         let mut out = vec![0f32; h * n * dh];
         let bits = if is_k { self.k_bits } else { self.v_bits };
         for head in 0..h {
-            // quantized region: groups below n_base read the shared base at
-            // its exact strides, the rest read the private tail at q_cap
             for gi in 0..self.n_q / g {
                 let mut buf = vec![0f32; g * dh];
-                let in_base = gi * g < n_base;
-                let b = self.base.as_deref();
-                let (pk, f32s, scales, zeros, tc, lgi) = if in_base {
-                    let b = b.unwrap();
-                    if is_k {
-                        (&b.k_pk, &b.k_f32, &b.k_scales, &b.k_zeros, b.n_base, gi)
-                    } else {
-                        (&b.v_pk, &b.v_f32, &b.v_scales, &b.v_zeros, b.n_base, gi)
-                    }
-                } else {
-                    let lgi = gi - n_base / g;
-                    if is_k {
-                        (&self.k_pk, &self.k_f32, &self.k_scales, &self.k_zeros,
-                         self.q_cap, lgi)
-                    } else {
-                        (&self.v_pk, &self.v_f32, &self.v_scales, &self.v_zeros,
-                         self.q_cap, lgi)
-                    }
-                };
+                let (pk, f32s, scales, zeros, tc, lgi) = self.packed_region(is_k, gi);
                 if bits == 0 {
                     let src = head * tc * dh + lgi * g * dh;
                     buf.copy_from_slice(&f32s[src..src + g * dh]);
@@ -1064,6 +1284,105 @@ impl LayerCache {
             }
         }
         out
+    }
+
+    /// Single-head decode attention straight from the cache: scores
+    /// `q·K^T/√Dh`, softmax, and the `p·V` output — without ever
+    /// materializing a dequantized K/V region. Quantized groups go through
+    /// the [`rtn::attn_scores_k_group`] / [`rtn::attn_weighted_v_group`]
+    /// dispatch (register-resident fused dequant under
+    /// `ASYMKV_KERNELS=fused`, unfold-then-matmul otherwise — bit-identical
+    /// either way); fp32 regions and the residual ring use the same
+    /// canonical [`rtn::dot8`] / [`rtn::weighted_acc`] orders, so the
+    /// result is bit-identical to attending over
+    /// [`LayerCache::dequant_k_full`] / [`LayerCache::dequant_v_full`]
+    /// rows (prop-tested below). Returns `(weights, output)`:
+    /// the `n_tokens` softmax weights and the `Dh` output row.
+    pub fn attend_head(&self, head: usize, q: &[f32]) -> (Vec<f32>, Vec<f32>) {
+        let geo = self.geo;
+        let (dh, g) = (geo.d_head, geo.group);
+        let g2 = geo.g2();
+        assert!(head < geo.n_heads, "attend_head: head {head} out of range");
+        assert_eq!(q.len(), dh, "attend_head: query row is not [Dh]");
+        let n = self.n_tokens();
+        let mut weights = vec![0f32; n];
+        let mut out = vec![0f32; dh];
+        if n == 0 {
+            return (weights, out);
+        }
+        let (kb, vb) = (self.k_bits, self.v_bits);
+        let mut params: Vec<GroupParams> = Vec::new(); // reused across groups
+        // scores: quantized groups from packed codes, residual from fp32
+        for gi in 0..self.n_q / g {
+            let (pk, f32s, scales, zeros, tc, lgi) = self.packed_region(true, gi);
+            let sc = &mut weights[gi * g..(gi + 1) * g];
+            if kb == 0 {
+                let src = head * tc * dh + lgi * g * dh;
+                for (t, s) in sc.iter_mut().enumerate() {
+                    *s = rtn::dot8(q, &f32s[src + t * dh..src + (t + 1) * dh]);
+                }
+            } else {
+                let rows_pk = rtn::packed_len(g, kb);
+                let t_pk = rtn::packed_len(tc, kb);
+                let src = head * t_pk * dh + lgi * rows_pk * dh;
+                let pbase = head * (tc / g) * dh + lgi * dh;
+                params.clear();
+                params.extend((0..dh).map(|d| GroupParams {
+                    scale: scales[pbase + d],
+                    zero: zeros[pbase + d],
+                }));
+                rtn::attn_scores_k_group(&pk[src..src + rows_pk * dh], g, dh, kb,
+                                         &params, q, sc);
+            }
+        }
+        for slot in 0..self.n_res() {
+            let (rk, _) = self.res_row(slot);
+            weights[self.n_q + slot] = rtn::dot8(q, &rk[head * dh..(head + 1) * dh]);
+        }
+        // scaled softmax (in place; max-subtracted for stability)
+        let inv = 1.0 / (dh as f32).sqrt();
+        let mut m = f32::NEG_INFINITY;
+        for w in weights.iter_mut() {
+            *w *= inv;
+            if *w > m {
+                m = *w;
+            }
+        }
+        let mut denom = 0f32;
+        for w in weights.iter_mut() {
+            *w = (*w - m).exp();
+            denom += *w;
+        }
+        for w in weights.iter_mut() {
+            *w /= denom;
+        }
+        // output: groups accumulate in token order, then the residual tail
+        for gi in 0..self.n_q / g {
+            let (pk, f32s, scales, zeros, tc, lgi) = self.packed_region(false, gi);
+            let p = &weights[gi * g..(gi + 1) * g];
+            if vb == 0 {
+                let src = head * tc * dh + lgi * g * dh;
+                rtn::weighted_acc(p, &f32s[src..src + g * dh], g, dh, &mut out);
+            } else {
+                let bpt = rtn::packed_len(dh, vb);
+                let dg = dh / g2;
+                let src = head * tc * bpt + lgi * g * bpt;
+                let pbase = head * tc * dg + lgi * g * dg;
+                params.clear();
+                params.extend((0..g * dg).map(|i| GroupParams {
+                    scale: scales[pbase + i],
+                    zero: zeros[pbase + i],
+                }));
+                rtn::attn_weighted_v_group(&pk[src..src + g * bpt], g, dh, g2, vb,
+                                           &params, p, &mut out);
+            }
+        }
+        for slot in 0..self.n_res() {
+            let (_, rv) = self.res_row(slot);
+            let w = weights[self.n_q + slot];
+            rtn::weighted_acc(&[w], &rv[head * dh..(head + 1) * dh], 1, dh, &mut out);
+        }
+        (weights, out)
     }
 
     /// Bytes actually used by **privately held** cached tokens (packed data
@@ -1486,6 +1805,72 @@ mod tests {
         assert_eq!(c.n_q, 64);
         assert_eq!(c.n_res(), 64);
         assert_eq!(c.n_tokens(), 128);
+    }
+
+    #[test]
+    fn attend_head_matches_dequant_reference_prop() {
+        // packed attention must be bit-identical to the same canonical
+        // dot8/softmax/weighted_acc sequence over the dequantized rows, for
+        // every bit mode (incl. fp32 sides) and in whatever kernel mode the
+        // env selects (the dispatch tiers are byte/bit-identical)
+        check("attend_head_eq", 10, |g: &mut Gen| {
+            let kb = *g.pick(&[1u8, 2, 4, 8, 0]);
+            let vb = *g.pick(&[1u8, 2, 4, 8, 0]);
+            let mut c = LayerCache::new(geo(), kb, vb);
+            let (hd, dh) = (2 * 32, 32);
+            let n = g.usize_in(1, 120);
+            let ks = g.vec_normal(n * hd, 1.0);
+            let vs = g.vec_normal(n * hd, 1.0);
+            c.append_tokens(n, &ks, &vs);
+            let nt = c.n_tokens();
+            let kf = c.dequant_k_full(); // [H, nt, Dh]
+            let vf = c.dequant_v_full();
+            for head in 0..2 {
+                let q = g.vec_normal(dh, 1.0);
+                let mut want_w = vec![0f32; nt];
+                for (t, w) in want_w.iter_mut().enumerate() {
+                    *w = rtn::dot8(&q, &kf[head * nt * dh + t * dh..][..dh]);
+                }
+                let inv = 1.0 / (dh as f32).sqrt();
+                let mut m = f32::NEG_INFINITY;
+                for w in want_w.iter_mut() {
+                    *w *= inv;
+                    if *w > m {
+                        m = *w;
+                    }
+                }
+                let mut denom = 0f32;
+                for w in want_w.iter_mut() {
+                    *w = (*w - m).exp();
+                    denom += *w;
+                }
+                for w in want_w.iter_mut() {
+                    *w /= denom;
+                }
+                let mut want_o = vec![0f32; dh];
+                rtn::weighted_acc(
+                    &want_w, &vf[head * nt * dh..(head + 1) * nt * dh], nt, dh, &mut want_o,
+                );
+                let (got_w, got_o) = c.attend_head(head, &q);
+                for t in 0..nt {
+                    if got_w[t].to_bits() != want_w[t].to_bits() {
+                        return Err(format!(
+                            "weight t={t} head={head} kb={kb} vb={vb} n={n}: {} vs {}",
+                            got_w[t], want_w[t]
+                        ));
+                    }
+                }
+                for d in 0..dh {
+                    if got_o[d].to_bits() != want_o[d].to_bits() {
+                        return Err(format!(
+                            "out d={d} head={head} kb={kb} vb={vb} n={n}: {} vs {}",
+                            got_o[d], want_o[d]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -1,0 +1,273 @@
+//! Fused dequant-attention kernels: `q·K^T` scores and `softmax·V`
+//! accumulation computed straight from packed codes + [`GroupParams`],
+//! never materializing a dequantized K/V region. This is the
+//! `ASYMKV_KERNELS=fused` tier the attention consumers (`kvcache/layer.rs`
+//! packed attention, `calib/profile.rs` sensitivity sweeps, `analysis/`
+//! flip-rate scans) dispatch to.
+//!
+//! ## The summation-order contract
+//!
+//! Float addition is not associative, so "bit-identical to
+//! unfold-then-dot" is only meaningful relative to a fixed summation
+//! order. The repo-wide canonical orders are defined HERE and exported for
+//! both sides of every comparison:
+//!
+//! * **Scores** use [`dot8`]: 8 partial accumulator lanes over aligned
+//!   8-element chunks (chunk `c` adds `a[8c+l]·b[8c+l]` into lane `l`),
+//!   reduced pairwise as `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))`, then a
+//!   sequential tail for `len % 8`. The lane form is what keeps the fused
+//!   kernel ahead of unfold-then-dot — a single sequential accumulator
+//!   would serialize on add latency and cap the fusion win well below the
+//!   committed ≥ 1.5× floor.
+//! * **Weighted V** uses [`weighted_acc`]: token-outer, channel-inner
+//!   `out[d] += p[t]·v[t·Dh+d]` in ascending `t` — exactly the order the
+//!   pre-existing consumers already used, so the fused form slots in
+//!   bit-identically.
+//!
+//! Within those orders the fused kernels apply the *identical* per-element
+//! dequant expression the unfold kernels use
+//! (`(f32::from_bits(MAGIC_BITS | q) - MAGIC) · scale + zero`, which is
+//! exactly `q as f32 · scale + zero`). We deliberately do NOT hoist
+//! scale/zero algebraically out of the inner product (`s·Σq·c + z·Σc`):
+//! that reassociates the arithmetic itself, not just the order, and breaks
+//! bit-identity with every other tier. The fusion win comes from never
+//! writing/re-reading a dequantized buffer and from the lane-parallel
+//! order — both of which preserve exact bitwise agreement with
+//! `unfold_*_group` + [`dot8`]/[`weighted_acc`], as the property tests
+//! below and in `kvcache/layer.rs` prove.
+
+use super::wordpack::{lane_mask, load8, spread8, MAGIC, MAGIC_BITS};
+use super::GroupParams;
+
+/// Canonical lane-parallel dot product (see the module docs for the exact
+/// order). Both the fused score kernel and every float-side score in the
+/// host consumers use this, so quantized and fp32 rows sum identically.
+#[inline]
+pub fn dot8(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0f32; 8];
+    let ca = a.chunks_exact(8);
+    let cb = b.chunks_exact(8);
+    let (ta, tb) = (ca.remainder(), cb.remainder());
+    for (x8, y8) in ca.zip(cb) {
+        for l in 0..8 {
+            acc[l] += x8[l] * y8[l];
+        }
+    }
+    let mut s = ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    for (x, y) in ta.iter().zip(tb) {
+        s += x * y;
+    }
+    s
+}
+
+/// Canonical weighted accumulation `out[d] += Σ_t p[t]·v[t·Dh+d]`,
+/// token-outer / channel-inner in ascending `t`. Accumulates (does not
+/// overwrite), so multiple groups and a float residual tail can be chained
+/// in token order.
+#[inline]
+pub fn weighted_acc(p: &[f32], v: &[f32], n: usize, dh: usize, out: &mut [f32]) {
+    for t in 0..n {
+        let w = p[t];
+        for (o, &x) in out[..dh].iter_mut().zip(&v[t * dh..(t + 1) * dh]) {
+            *o += w * x;
+        }
+    }
+}
+
+/// Attention scores for one packed K group: `scores[t] = dot8(q, k̂_t)`
+/// with `k̂` dequantized in-register per 8-channel block. Bit-identical to
+/// `unfold_k_group` followed by [`dot8`] per token row (prop-tested).
+///
+/// `packed` is one group's `[G·b/8, Dh]` region, `params` its `Dh`
+/// per-channel pairs, `q` the query row (`Dh`), `scores` the group's `G`
+/// output slots.
+pub fn attn_scores_k_group(
+    packed: &[u8],
+    g: usize,
+    dh: usize,
+    bits: u8,
+    params: &[GroupParams],
+    q: &[f32],
+    scores: &mut [f32],
+) {
+    let vpb = (8 / bits) as usize;
+    let lm = lane_mask(bits);
+    let mask = ((1u16 << bits) - 1) as u8;
+    for bp in 0..g / vpb {
+        let prow = &packed[bp * dh..(bp + 1) * dh];
+        for j in 0..vpb {
+            let shift = j as u32 * bits as u32;
+            let mut acc = [0f32; 8];
+            let mut d = 0;
+            while d + 8 <= dh {
+                let cb = ((load8(&prow[d..]) >> shift) & lm).to_le_bytes();
+                for l in 0..8 {
+                    let kv = (f32::from_bits(cb[l] as u32 | MAGIC_BITS) - MAGIC)
+                        * params[d + l].scale
+                        + params[d + l].zero;
+                    acc[l] += q[d + l] * kv;
+                }
+                d += 8;
+            }
+            let mut s = ((acc[0] + acc[1]) + (acc[2] + acc[3]))
+                + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+            while d < dh {
+                let c = (prow[d] >> (j as u8 * bits)) & mask;
+                s += q[d] * (c as f32 * params[d].scale + params[d].zero);
+                d += 1;
+            }
+            scores[bp * vpb + j] = s;
+        }
+    }
+}
+
+/// Weighted-V accumulation for one packed V group:
+/// `out[d] += Σ_t p[t]·v̂_t[d]` with `v̂` dequantized in-register, tokens
+/// ascending. Bit-identical to `unfold_v_group` followed by
+/// [`weighted_acc`] (prop-tested); like `weighted_acc` it accumulates, so
+/// groups and the float residual chain in token order.
+pub fn attn_weighted_v_group(
+    packed: &[u8],
+    g: usize,
+    dh: usize,
+    g2: usize,
+    bits: u8,
+    params: &[GroupParams],
+    p: &[f32],
+    out: &mut [f32],
+) {
+    let dg = dh / g2;
+    let bpt = dh * bits as usize / 8;
+    let ib = bits as usize;
+    for t in 0..g {
+        let w = p[t];
+        let prow = &packed[t * bpt..(t + 1) * bpt];
+        let tpar = &params[t * dg..(t + 1) * dg];
+        if g2 % 8 == 0 {
+            for (gi, par) in tpar.iter().enumerate() {
+                let (scale, zero) = (par.scale, par.zero);
+                let pseg = &prow[gi * g2 * ib / 8..][..g2 * ib / 8];
+                let oseg = &mut out[gi * g2..(gi + 1) * g2];
+                for (pc, oc) in pseg.chunks_exact(ib).zip(oseg.chunks_exact_mut(8)) {
+                    let mut buf = [0u8; 8];
+                    buf[..ib].copy_from_slice(pc);
+                    let cb = spread8(u64::from_le_bytes(buf), bits).to_le_bytes();
+                    for l in 0..8 {
+                        let v = (f32::from_bits(cb[l] as u32 | MAGIC_BITS) - MAGIC) * scale
+                            + zero;
+                        oc[l] += w * v;
+                    }
+                }
+            }
+        } else {
+            let vpb = (8 / bits) as usize;
+            let mask = ((1u16 << bits) - 1) as u8;
+            for (bi, &byte) in prow.iter().enumerate() {
+                let base = bi * vpb;
+                let par = tpar[base / g2];
+                for (j, o) in out[base..base + vpb].iter_mut().enumerate() {
+                    let q = (byte >> (j as u8 * bits)) & mask;
+                    *o += w * (q as f32 * par.scale + par.zero);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{scalar, simd};
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    #[test]
+    fn dot8_order_is_the_documented_one() {
+        // 19 elements: two full 8-chunks + a 3-element tail; recompute the
+        // documented order by hand and demand bit equality
+        let a: Vec<f32> = (0..19).map(|i| (i as f32) * 0.37 - 3.0).collect();
+        let b: Vec<f32> = (0..19).map(|i| 2.5 - (i as f32) * 0.61).collect();
+        let mut acc = [0f32; 8];
+        for c in 0..2 {
+            for l in 0..8 {
+                acc[l] += a[c * 8 + l] * b[c * 8 + l];
+            }
+        }
+        let mut want =
+            ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+        for i in 16..19 {
+            want += a[i] * b[i];
+        }
+        assert_eq!(dot8(&a, &b).to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn fused_scores_match_unfold_then_dot_prop() {
+        check("fused_scores_eq", 150, |g: &mut Gen| {
+            let bits = *g.pick(&[1u8, 2, 4, 8]);
+            let vpb = (8 / bits) as usize;
+            let gg = g.usize_in(1, 6) * vpb;
+            let dh = *g.pick(&[8usize, 12, 32, 33, 64]);
+            let kg = g.vec_normal(gg * dh, 2.0);
+            let q = g.vec_normal(dh, 1.0);
+            let rows_pk = gg * bits as usize / 8;
+            let mut packed = vec![0u8; rows_pk * dh];
+            let zero = GroupParams { scale: 0.0, zero: 0.0 };
+            let mut pars = vec![zero; dh];
+            scalar::fold_k_group(&kg, gg, dh, bits, &mut packed, &mut pars);
+            // reference: unfold (any tier — byte-identical), then dot8
+            let mut kq = vec![0f32; gg * dh];
+            simd::unfold_k_group(&packed, gg, dh, bits, &pars, &mut kq);
+            let want: Vec<f32> =
+                (0..gg).map(|t| dot8(&q, &kq[t * dh..(t + 1) * dh])).collect();
+            let mut got = vec![0f32; gg];
+            attn_scores_k_group(&packed, gg, dh, bits, &pars, &q, &mut got);
+            for t in 0..gg {
+                if want[t].to_bits() != got[t].to_bits() {
+                    return Err(format!(
+                        "score t={t} diverges bits={bits} g={gg} dh={dh}: {} vs {}",
+                        want[t], got[t]
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fused_weighted_v_matches_unfold_then_acc_prop() {
+        check("fused_weighted_v_eq", 150, |g: &mut Gen| {
+            let bits = *g.pick(&[1u8, 2, 4, 8]);
+            let vpb = (8 / bits) as usize;
+            let gg = g.usize_in(1, 8);
+            let g2 = vpb * g.usize_in(1, 5);
+            let dh = g2 * g.usize_in(1, 5);
+            let vg = g.vec_normal(gg * dh, 2.0);
+            let p = g.vec_normal(gg, 0.5);
+            let bpt = dh * bits as usize / 8;
+            let dg = dh / g2;
+            let mut packed = vec![0u8; gg * bpt];
+            let zero = GroupParams { scale: 0.0, zero: 0.0 };
+            let mut pars = vec![zero; gg * dg];
+            scalar::fold_v_group(&vg, gg, dh, g2, bits, &mut packed, &mut pars);
+            let mut vq = vec![0f32; gg * dh];
+            simd::unfold_v_group(&packed, gg, dh, g2, bits, &pars, &mut vq);
+            // seed both accumulators identically to prove accumulate (not
+            // overwrite) semantics match
+            let seed = g.vec_normal(dh, 1.0);
+            let mut want = seed.clone();
+            weighted_acc(&p, &vq, gg, dh, &mut want);
+            let mut got = seed;
+            attn_weighted_v_group(&packed, gg, dh, g2, bits, &pars, &p, &mut got);
+            for d in 0..dh {
+                if want[d].to_bits() != got[d].to_bits() {
+                    return Err(format!(
+                        "out[{d}] diverges bits={bits} g={gg} dh={dh} g2={g2}: {} vs {}",
+                        want[d], got[d]
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+}

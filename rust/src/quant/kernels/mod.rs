@@ -1,19 +1,32 @@
 //! RTN quantize / pack / unpack / dequantize kernel subsystem.
 //!
-//! Two interchangeable implementations behind one dispatching API:
+//! Four tiers behind one dispatching API, each strictly adding to the
+//! previous:
 //!
 //! * [`scalar`] — the bit-exact reference (one value per operation; the
 //!   original `quant/rtn.rs` code, asserted against `golden.json`).
-//! * [`wordpack`] — the fast path: 64 bits of packed codes per `u64`
-//!   operation (8–64 values per word at bits ∈ {1, 2, 4, 8}), contiguous
-//!   strip processing, and a single-pass vectorizable min-max scan.
+//! * [`wordpack`] — 64 bits of packed codes per `u64` operation (8–64
+//!   values per word at bits ∈ {1, 2, 4, 8}), contiguous strip processing,
+//!   and a single-pass vectorizable min-max scan.
+//! * [`simd`] — explicit 8-wide lane blocks for the V path and the K
+//!   unfold: register-resident quantize→pack (no intermediate code
+//!   buffers), lane-parallel min/max, hoisted per-block dequant params.
+//!   K folds stay on `wordpack` (already memory-bound there).
+//! * [`fused`] — dequant-attention: `q·K^T` scores and `softmax·V`
+//!   accumulation computed straight from packed codes + [`GroupParams`]
+//!   with no dequantized intermediate region. Fold/unfold entry points
+//!   dispatch like `simd`; the [`attn_scores_k_group`] /
+//!   [`attn_weighted_v_group`] wrappers additionally take the fused path.
 //!
-//! The two are prop-tested to produce **byte-identical** packed output and
-//! identical `GroupParams`, so dispatch is purely a performance choice.
-//! Every public entry point takes the mode from [`active_mode`] (wordpack
-//! unless overridden) or explicitly via the `*_with` variants; the
-//! force-scalar escape hatch for debugging is `ASYMKV_KERNELS=scalar` (or
-//! the shorthand `ASYMKV_FORCE_SCALAR=1`).
+//! All tiers are prop-tested to produce **byte-identical** packed output
+//! and identical `GroupParams` (and the fused kernels bit-identical
+//! attention outputs under the canonical summation orders defined in
+//! [`fused`]), so dispatch is purely a performance choice. Every public
+//! entry point takes the mode from [`active_mode`]
+//! (`ASYMKV_KERNELS=scalar|wordpack|simd|fused`, default `fused`; the
+//! debugging shorthand `ASYMKV_FORCE_SCALAR=1` forces scalar) or
+//! explicitly via the `*_with` variants; tests and benches can pin the
+//! process default with [`set_active_mode`].
 //!
 //! Scheme (paper Equ. 4-6, with the standard fix of the printed typo):
 //!   z = min(group), s = (max - min) / (2^b - 1)  [guarded: s=1 if span=0]
@@ -28,9 +41,56 @@
 //! (the old `debug_assert!`/`take(n)` behavior) could corrupt live cache
 //! memory instead of failing fast.
 
+pub mod fused;
 pub mod requant;
 pub mod scalar;
+pub mod simd;
 pub mod wordpack;
+
+pub use fused::{dot8, weighted_acc};
+
+/// Thread-local scratch shared by the kernels that need a row of code /
+/// widened-code workspace (`wordpack` V loops, `requant`). Keeps the hot
+/// loops zero-allocation in steady state (the buffers grow to the largest
+/// row seen per thread, then are reused) without threading scratch through
+/// every caller. The closures never re-enter the kernels, so the
+/// `RefCell` borrows cannot nest.
+pub(crate) mod scratch {
+    use std::cell::RefCell;
+
+    thread_local! {
+        static CODES: RefCell<Vec<u8>> = const { RefCell::new(Vec::new()) };
+        static WIDE: RefCell<Vec<u32>> = const { RefCell::new(Vec::new()) };
+    }
+
+    /// Run `f` with an `n`-byte code scratch row (contents unspecified on
+    /// entry; callers fully overwrite before reading).
+    pub fn with_codes<R>(n: usize, f: impl FnOnce(&mut [u8]) -> R) -> R {
+        CODES.with(|c| {
+            let mut c = c.borrow_mut();
+            if c.len() < n {
+                c.resize(n, 0);
+            }
+            f(&mut c[..n])
+        })
+    }
+
+    /// Like [`with_codes`] plus an `n`-slot u32 widening row.
+    pub fn with_codes_wide<R>(n: usize, f: impl FnOnce(&mut [u8], &mut [u32]) -> R) -> R {
+        CODES.with(|c| {
+            WIDE.with(|w| {
+                let (mut c, mut w) = (c.borrow_mut(), w.borrow_mut());
+                if c.len() < n {
+                    c.resize(n, 0);
+                }
+                if w.len() < n {
+                    w.resize(n, 0);
+                }
+                f(&mut c[..n], &mut w[..n])
+            })
+        })
+    }
+}
 
 /// Quantization parameters for one group.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -42,28 +102,72 @@ pub struct GroupParams {
 /// Which kernel implementation a call should use.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum KernelMode {
-    /// Process-default: [`active_mode`] (wordpack unless overridden by env).
+    /// Process-default: [`active_mode`] (fused unless overridden).
     Auto,
     /// Bit-exact scalar reference.
     Scalar,
     /// Word-parallel fast path.
     Wordpack,
+    /// Lane-parallel V-path / K-unfold tier (attention still unfolds).
+    Simd,
+    /// Simd fold/unfold plus packed-code fused attention.
+    Fused,
 }
 
-/// Process-wide kernel selection: `ASYMKV_KERNELS=scalar|wordpack`, or
-/// `ASYMKV_FORCE_SCALAR=1` as the debugging escape hatch; wordpack
-/// otherwise. Read once.
+/// Mode register: 0 = uninitialized (read env on first use), otherwise the
+/// encoded mode. Relaxed ordering is enough — every encoded value is a
+/// full valid mode and all tiers agree byte-for-byte, so a racing reader
+/// seeing the old mode is indistinguishable from having called earlier.
+static MODE: std::sync::atomic::AtomicU8 = std::sync::atomic::AtomicU8::new(0);
+
+fn encode_mode(mode: KernelMode) -> u8 {
+    match mode {
+        KernelMode::Auto => 0,
+        KernelMode::Scalar => 1,
+        KernelMode::Wordpack => 2,
+        KernelMode::Simd => 3,
+        KernelMode::Fused => 4,
+    }
+}
+
+/// Process-wide kernel selection:
+/// `ASYMKV_KERNELS=scalar|wordpack|simd|fused` (or `ASYMKV_FORCE_SCALAR=1`
+/// as the debugging escape hatch); **fused** otherwise — the full fast
+/// path is safe as the default because every tier is prop-tested
+/// byte-identical. Read from env once, unless overridden by
+/// [`set_active_mode`].
 pub fn active_mode() -> KernelMode {
-    static MODE: std::sync::OnceLock<KernelMode> = std::sync::OnceLock::new();
-    *MODE.get_or_init(|| {
-        if std::env::var("ASYMKV_FORCE_SCALAR").map(|v| v == "1").unwrap_or(false) {
-            return KernelMode::Scalar;
+    use std::sync::atomic::Ordering;
+    match MODE.load(Ordering::Relaxed) {
+        1 => KernelMode::Scalar,
+        2 => KernelMode::Wordpack,
+        3 => KernelMode::Simd,
+        4 => KernelMode::Fused,
+        _ => {
+            let m = mode_from_env();
+            MODE.store(encode_mode(m), Ordering::Relaxed);
+            m
         }
-        match std::env::var("ASYMKV_KERNELS").as_deref() {
-            Ok("scalar") => KernelMode::Scalar,
-            _ => KernelMode::Wordpack,
-        }
-    })
+    }
+}
+
+fn mode_from_env() -> KernelMode {
+    if std::env::var("ASYMKV_FORCE_SCALAR").map(|v| v == "1").unwrap_or(false) {
+        return KernelMode::Scalar;
+    }
+    match std::env::var("ASYMKV_KERNELS").as_deref() {
+        Ok("scalar") => KernelMode::Scalar,
+        Ok("wordpack") => KernelMode::Wordpack,
+        Ok("simd") => KernelMode::Simd,
+        _ => KernelMode::Fused,
+    }
+}
+
+/// Override the process-wide default that `Auto` calls resolve to (all
+/// threads, effective immediately). Meant for tests and benches sweeping
+/// backends in one process; `Auto` resets to the env-derived default.
+pub fn set_active_mode(mode: KernelMode) {
+    MODE.store(encode_mode(mode), std::sync::atomic::Ordering::Relaxed);
 }
 
 #[inline]
@@ -202,6 +306,7 @@ pub fn fold_k_group_with(
     assert_eq!(params.len(), dh, "fold_k_group: params length != Dh");
     match resolve(mode) {
         KernelMode::Scalar => scalar::fold_k_group(kg, g, dh, bits, packed, params),
+        // simd/fused: K folds stay on wordpack (see `simd` module docs)
         _ => wordpack::fold_k_group(kg, g, dh, bits, packed, params),
     }
 }
@@ -239,7 +344,8 @@ pub fn unfold_k_group_with(
     assert_eq!(out.len(), g * dh, "unfold_k_group: output is not [G={g}, Dh={dh}]");
     match resolve(mode) {
         KernelMode::Scalar => scalar::unfold_k_group(packed, g, dh, bits, params, out),
-        _ => wordpack::unfold_k_group(packed, g, dh, bits, params, out),
+        KernelMode::Wordpack => wordpack::unfold_k_group(packed, g, dh, bits, params, out),
+        _ => simd::unfold_k_group(packed, g, dh, bits, params, out),
     }
 }
 
@@ -278,7 +384,8 @@ pub fn fold_v_group_with(
     assert_eq!(params.len(), g * (dh / g2), "fold_v_group: params length != G*Dh/g2");
     match resolve(mode) {
         KernelMode::Scalar => scalar::fold_v_group(vg, g, dh, g2, bits, packed, params),
-        _ => wordpack::fold_v_group(vg, g, dh, g2, bits, packed, params),
+        KernelMode::Wordpack => wordpack::fold_v_group(vg, g, dh, g2, bits, packed, params),
+        _ => simd::fold_v_group(vg, g, dh, g2, bits, packed, params),
     }
 }
 
@@ -316,7 +423,8 @@ pub fn unfold_v_group_with(
     assert_eq!(out.len(), g * dh, "unfold_v_group: output is not [G={g}, Dh={dh}]");
     match resolve(mode) {
         KernelMode::Scalar => scalar::unfold_v_group(packed, g, dh, g2, bits, params, out),
-        _ => wordpack::unfold_v_group(packed, g, dh, g2, bits, params, out),
+        KernelMode::Wordpack => wordpack::unfold_v_group(packed, g, dh, g2, bits, params, out),
+        _ => simd::unfold_v_group(packed, g, dh, g2, bits, params, out),
     }
 }
 
@@ -328,16 +436,120 @@ fn check_v_shape(dh: usize, g2: usize, bits: u8) {
     assert_eq!(g2 % vpb, 0, "V kernel: g2={g2} not a multiple of {vpb} at {bits}-bit");
 }
 
+/// Attention scores over one packed K group: `scores[t] = dot8(q, k̂_t)`.
+///
+/// `Fused` (and the `Auto` default) consumes the packed codes directly;
+/// the other tiers unfold through their own kernels and reduce with
+/// [`dot8`]. All routes are bit-identical (the canonical summation order
+/// lives in [`fused`]), so mode is purely a performance choice here too.
+pub fn attn_scores_k_group(
+    packed: &[u8],
+    g: usize,
+    dh: usize,
+    bits: u8,
+    params: &[GroupParams],
+    q: &[f32],
+    scores: &mut [f32],
+) {
+    attn_scores_k_group_with(KernelMode::Auto, packed, g, dh, bits, params, q, scores)
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn attn_scores_k_group_with(
+    mode: KernelMode,
+    packed: &[u8],
+    g: usize,
+    dh: usize,
+    bits: u8,
+    params: &[GroupParams],
+    q: &[f32],
+    scores: &mut [f32],
+) {
+    check_bits(bits);
+    assert_eq!(
+        packed.len(),
+        packed_len(g, bits) * dh,
+        "attn_scores_k_group: packed region size mismatch"
+    );
+    assert_eq!(params.len(), dh, "attn_scores_k_group: params length != Dh");
+    assert_eq!(q.len(), dh, "attn_scores_k_group: query length != Dh");
+    assert_eq!(scores.len(), g, "attn_scores_k_group: scores length != G");
+    match resolve(mode) {
+        KernelMode::Fused => fused::attn_scores_k_group(packed, g, dh, bits, params, q, scores),
+        m => {
+            let mut kq = vec![0f32; g * dh];
+            unfold_k_group_with(m, packed, g, dh, bits, params, &mut kq);
+            for (t, s) in scores.iter_mut().enumerate() {
+                *s = dot8(q, &kq[t * dh..(t + 1) * dh]);
+            }
+        }
+    }
+}
+
+/// Weighted-V accumulation over one packed V group:
+/// `out[d] += Σ_t p[t]·v̂_t[d]` (tokens ascending; accumulates so groups
+/// and a float residual tail chain in token order). Same dispatch contract
+/// as [`attn_scores_k_group`], with [`weighted_acc`] as the canonical
+/// reference order.
+pub fn attn_weighted_v_group(
+    packed: &[u8],
+    g: usize,
+    dh: usize,
+    g2: usize,
+    bits: u8,
+    params: &[GroupParams],
+    p: &[f32],
+    out: &mut [f32],
+) {
+    attn_weighted_v_group_with(KernelMode::Auto, packed, g, dh, g2, bits, params, p, out)
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn attn_weighted_v_group_with(
+    mode: KernelMode,
+    packed: &[u8],
+    g: usize,
+    dh: usize,
+    g2: usize,
+    bits: u8,
+    params: &[GroupParams],
+    p: &[f32],
+    out: &mut [f32],
+) {
+    check_v_shape(dh, g2, bits);
+    assert_eq!(
+        packed.len(),
+        g * packed_len(dh, bits),
+        "attn_weighted_v_group: packed region size mismatch"
+    );
+    assert_eq!(params.len(), g * (dh / g2), "attn_weighted_v_group: params length != G*Dh/g2");
+    assert_eq!(p.len(), g, "attn_weighted_v_group: weights length != G");
+    assert_eq!(out.len(), dh, "attn_weighted_v_group: output length != Dh");
+    match resolve(mode) {
+        KernelMode::Fused => {
+            fused::attn_weighted_v_group(packed, g, dh, g2, bits, params, p, out)
+        }
+        m => {
+            let mut vq = vec![0f32; g * dh];
+            unfold_v_group_with(m, packed, g, dh, g2, bits, params, &mut vq);
+            weighted_acc(p, &vq, g, dh, out);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::util::prop::{check, Gen};
 
+    const ALL_MODES: [KernelMode; 4] =
+        [KernelMode::Scalar, KernelMode::Wordpack, KernelMode::Simd, KernelMode::Fused];
+
     #[test]
     fn pack_layout_little_endian() {
         // 1-bit: [1,0,1,0,1,1,0,1] -> 0b10110101 (mirrors the python test)
         let codes = [1u8, 0, 1, 0, 1, 1, 0, 1];
-        for mode in [KernelMode::Scalar, KernelMode::Wordpack] {
+        for mode in ALL_MODES {
             let mut out = [0u8; 1];
             assert_eq!(pack_bits_with(mode, &codes, 1, &mut out), 1);
             assert_eq!(out[0], 0b1011_0101);
@@ -352,7 +564,7 @@ mod tests {
     fn pack_unpack_roundtrip_prop() {
         check("pack_unpack", 200, |g: &mut Gen| {
             let bits = *g.pick(&[1u8, 2, 4, 8]);
-            let mode = *g.pick(&[KernelMode::Scalar, KernelMode::Wordpack]);
+            let mode = *g.pick(&ALL_MODES);
             let vpb = (8 / bits) as usize;
             let n = g.usize_in(1, 16) * vpb;
             let codes: Vec<u8> = (0..n)
@@ -404,7 +616,7 @@ mod tests {
     fn fold_unfold_k_roundtrip_prop() {
         check("fold_k", 60, |g: &mut Gen| {
             let bits = *g.pick(&[1u8, 2, 4]);
-            let mode = *g.pick(&[KernelMode::Scalar, KernelMode::Wordpack]);
+            let mode = *g.pick(&ALL_MODES);
             let (gg, dh) = (32usize, 32usize);
             let kg = g.vec_normal(gg * dh, 2.0);
             let mut packed = vec![0u8; packed_len(gg, bits) * dh];
@@ -428,7 +640,7 @@ mod tests {
     fn fold_unfold_v_roundtrip_prop() {
         check("fold_v", 60, |g: &mut Gen| {
             let bits = *g.pick(&[1u8, 2, 4]);
-            let mode = *g.pick(&[KernelMode::Scalar, KernelMode::Wordpack]);
+            let mode = *g.pick(&ALL_MODES);
             let (gg, dh, g2) = (32usize, 32usize, 32usize);
             let vg = g.vec_normal(gg * dh, 2.0);
             let mut packed = vec![0u8; gg * packed_len(dh, bits)];
@@ -460,6 +672,108 @@ mod tests {
             errs.push(crate::util::stats::mse(&xs, &deq));
         }
         assert!(errs[0] > errs[1] && errs[1] > errs[2] && errs[2] > errs[3]);
+    }
+
+    #[test]
+    fn all_modes_byte_identical_through_dispatch_prop() {
+        check("modes_byte_identical", 80, |g: &mut Gen| {
+            let bits = *g.pick(&[1u8, 2, 4, 8]);
+            let vpb = (8 / bits) as usize;
+            let gg = g.usize_in(1, 4) * vpb.max(8);
+            let dh = *g.pick(&[16usize, 32, 64]);
+            let g2 = *g.pick(&[8usize, 16]);
+            let kg = g.vec_normal(gg * dh, 2.0);
+            let vg = g.vec_normal(gg * dh, 2.0);
+            let zero = GroupParams { scale: 0.0, zero: 0.0 };
+            let mut want: Option<(Vec<u8>, Vec<GroupParams>, Vec<u8>, Vec<GroupParams>)> = None;
+            for mode in ALL_MODES {
+                let mut kp = vec![0u8; packed_len(gg, bits) * dh];
+                let mut kq = vec![zero; dh];
+                fold_k_group_with(mode, &kg, gg, dh, bits, &mut kp, &mut kq);
+                let mut vp = vec![0u8; gg * packed_len(dh, bits)];
+                let mut vq = vec![zero; gg * (dh / g2)];
+                fold_v_group_with(mode, &vg, gg, dh, g2, bits, &mut vp, &mut vq);
+                match &want {
+                    None => want = Some((kp, kq, vp, vq)),
+                    Some((wkp, wkq, wvp, wvq)) => {
+                        if *wkp != kp || *wkq != kq || *wvp != vp || *wvq != vq {
+                            return Err(format!(
+                                "{mode:?} diverges from scalar bits={bits} g={gg} dh={dh} g2={g2}"
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn attn_wrappers_bit_identical_across_modes_prop() {
+        check("attn_modes_eq", 80, |g: &mut Gen| {
+            let bits = *g.pick(&[1u8, 2, 4, 8]);
+            let vpb = (8 / bits) as usize;
+            let gg = g.usize_in(1, 4) * vpb.max(8);
+            let dh = *g.pick(&[16usize, 32, 33, 64]);
+            let g2v = 8usize; // V geometry needs dh % g2 == 0
+            let dhv = *g.pick(&[16usize, 32, 64]);
+            let kg = g.vec_normal(gg * dh, 2.0);
+            let vg = g.vec_normal(gg * dhv, 2.0);
+            let q = g.vec_normal(dh, 1.0);
+            let p = g.vec_normal(gg, 0.5);
+            let zero = GroupParams { scale: 0.0, zero: 0.0 };
+            let mut kp = vec![0u8; packed_len(gg, bits) * dh];
+            let mut kq = vec![zero; dh];
+            fold_k_group(&kg, gg, dh, bits, &mut kp, &mut kq);
+            let mut vp = vec![0u8; gg * packed_len(dhv, bits)];
+            let mut vq = vec![zero; gg * (dhv / g2v)];
+            fold_v_group(&vg, gg, dhv, g2v, bits, &mut vp, &mut vq);
+            let mut want_s: Option<Vec<f32>> = None;
+            let mut want_o: Option<Vec<f32>> = None;
+            for mode in ALL_MODES {
+                let mut scores = vec![0f32; gg];
+                attn_scores_k_group_with(mode, &kp, gg, dh, bits, &kq, &q, &mut scores);
+                let mut out = vec![0f32; dhv];
+                attn_weighted_v_group_with(mode, &vp, gg, dhv, g2v, bits, &vq, &p, &mut out);
+                let (sb, ob): (Vec<u32>, Vec<u32>) = (
+                    scores.iter().map(|x| x.to_bits()).collect(),
+                    out.iter().map(|x| x.to_bits()).collect(),
+                );
+                match (&want_s, &want_o) {
+                    (None, _) => {
+                        want_s = Some(scores);
+                        want_o = Some(out);
+                    }
+                    (Some(ws), Some(wo)) => {
+                        let wsb: Vec<u32> = ws.iter().map(|x| x.to_bits()).collect();
+                        let wob: Vec<u32> = wo.iter().map(|x| x.to_bits()).collect();
+                        if wsb != sb || wob != ob {
+                            return Err(format!(
+                                "attn {mode:?} diverges bits={bits} g={gg} dh={dh}"
+                            ));
+                        }
+                    }
+                    _ => unreachable!(),
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn set_active_mode_overrides_and_auto_resets() {
+        // serialize with any future env-sensitive siblings via the mode
+        // register itself: save, override, restore
+        let before = active_mode();
+        set_active_mode(KernelMode::Scalar);
+        assert_eq!(active_mode(), KernelMode::Scalar);
+        set_active_mode(KernelMode::Fused);
+        assert_eq!(active_mode(), KernelMode::Fused);
+        set_active_mode(KernelMode::Auto);
+        // Auto resets to the env-derived default, whatever it is here
+        let env_default = active_mode();
+        assert_ne!(env_default, KernelMode::Auto);
+        set_active_mode(before);
     }
 
     #[test]

@@ -93,32 +93,35 @@ pub fn requant_k_group(
     let qmax_l = ((1u32 << low) - 1) as f32;
     let rows_h = g / vpb_h;
     let rows_l = g / vpb_l;
-    let mut codes = vec![0u8; g]; // one channel's column, reused across Dh
-    for d in 0..dh {
-        // unpack the channel's token column + min/max scan in one pass
-        let (mut qlo, mut qhi) = (mask_h, 0u8);
-        for bp in 0..rows_h {
-            let byte = packed[bp * dh + d];
-            for j in 0..vpb_h {
-                let q = (byte >> (j as u8 * high)) & mask_h;
-                codes[bp * vpb_h + j] = q;
-                qlo = qlo.min(q);
-                qhi = qhi.max(q);
+    // one channel's token column, reused across Dh (thread-local: the
+    // scheduler calls this per group under pressure — zero per-call allocs)
+    super::scratch::with_codes(g, |codes| {
+        for d in 0..dh {
+            // unpack the channel's token column + min/max scan in one pass
+            let (mut qlo, mut qhi) = (mask_h, 0u8);
+            for bp in 0..rows_h {
+                let byte = packed[bp * dh + d];
+                for j in 0..vpb_h {
+                    let q = (byte >> (j as u8 * high)) & mask_h;
+                    codes[bp * vpb_h + j] = q;
+                    qlo = qlo.min(q);
+                    qhi = qhi.max(q);
+                }
+            }
+            let p = params[d];
+            let np = derive_params(p, qlo, qhi, qmax_l);
+            out_params[d] = np;
+            remap_codes(codes, high, p, np, qmax_l);
+            // pack along tokens at `low` bits
+            for bp in 0..rows_l {
+                let mut byte = 0u8;
+                for j in 0..vpb_l {
+                    byte |= codes[bp * vpb_l + j] << (j as u8 * low);
+                }
+                out_packed[bp * dh + d] = byte;
             }
         }
-        let p = params[d];
-        let np = derive_params(p, qlo, qhi, qmax_l);
-        out_params[d] = np;
-        remap_codes(&mut codes, high, p, np, qmax_l);
-        // pack along tokens at `low` bits
-        for bp in 0..rows_l {
-            let mut byte = 0u8;
-            for j in 0..vpb_l {
-                byte |= codes[bp * vpb_l + j] << (j as u8 * low);
-            }
-            out_packed[bp * dh + d] = byte;
-        }
-    }
+    })
 }
 
 /// Re-quantize one packed V group ([G, Dh·high/8] per-token layout) to
@@ -161,34 +164,36 @@ pub fn requant_v_group(
     let bpt_l = packed_len(dh, low);
     let seg_h = g2 / vpb_h;
     let seg_l = g2 / vpb_l;
-    let mut codes = vec![0u8; g2]; // one channel segment, reused
-    for t in 0..g {
-        for gi in 0..dg {
-            let src = &packed[t * bpt_h + gi * seg_h..t * bpt_h + (gi + 1) * seg_h];
-            let (mut qlo, mut qhi) = (mask_h, 0u8);
-            for (bp, &byte) in src.iter().enumerate() {
-                for j in 0..vpb_h {
-                    let q = (byte >> (j as u8 * high)) & mask_h;
-                    codes[bp * vpb_h + j] = q;
-                    qlo = qlo.min(q);
-                    qhi = qhi.max(q);
+    // one channel segment, reused (thread-local, zero per-call allocs)
+    super::scratch::with_codes(g2, |codes| {
+        for t in 0..g {
+            for gi in 0..dg {
+                let src = &packed[t * bpt_h + gi * seg_h..t * bpt_h + (gi + 1) * seg_h];
+                let (mut qlo, mut qhi) = (mask_h, 0u8);
+                for (bp, &byte) in src.iter().enumerate() {
+                    for j in 0..vpb_h {
+                        let q = (byte >> (j as u8 * high)) & mask_h;
+                        codes[bp * vpb_h + j] = q;
+                        qlo = qlo.min(q);
+                        qhi = qhi.max(q);
+                    }
                 }
-            }
-            let p = params[t * dg + gi];
-            let np = derive_params(p, qlo, qhi, qmax_l);
-            out_params[t * dg + gi] = np;
-            remap_codes(&mut codes, high, p, np, qmax_l);
-            let dst =
-                &mut out_packed[t * bpt_l + gi * seg_l..t * bpt_l + (gi + 1) * seg_l];
-            for (bp, byte) in dst.iter_mut().enumerate() {
-                let mut b = 0u8;
-                for j in 0..vpb_l {
-                    b |= codes[bp * vpb_l + j] << (j as u8 * low);
+                let p = params[t * dg + gi];
+                let np = derive_params(p, qlo, qhi, qmax_l);
+                out_params[t * dg + gi] = np;
+                remap_codes(codes, high, p, np, qmax_l);
+                let dst =
+                    &mut out_packed[t * bpt_l + gi * seg_l..t * bpt_l + (gi + 1) * seg_l];
+                for (bp, byte) in dst.iter_mut().enumerate() {
+                    let mut b = 0u8;
+                    for j in 0..vpb_l {
+                        b |= codes[bp * vpb_l + j] << (j as u8 * low);
+                    }
+                    *byte = b;
                 }
-                *byte = b;
             }
         }
-    }
+    })
 }
 
 #[cfg(test)]

@@ -1,0 +1,325 @@
+//! Lane-parallel kernels for the V path (and the K unfold): explicit
+//! 8-wide f32/u32 lane blocks that every SIMD target vectorizes.
+//!
+//! This is the portable-lane tier `ASYMKV_KERNELS=simd` selects. CI pins
+//! stable Rust, where `std::simd` is unavailable, so the lanes are spelled
+//! as fixed-width array blocks (`[f32; 8]`, `u64` byte lanes) — the exact
+//! shapes `std::simd::f32x8` would lower to, and a drop-in upgrade once
+//! portable SIMD stabilizes. What distinguishes this tier from `wordpack`
+//! is *structure*, not instruction selection:
+//!
+//! 1. **One pass, register-resident.** `wordpack`'s V loops quantize into a
+//!    row-sized `codes` buffer and then re-read it to pack (and unpack into
+//!    `codes`/`wide` buffers before dequantizing). Here each 8-value chunk
+//!    is quantized into a stack `[u8; 8]`, compressed with the u64 lane
+//!    fold and stored — codes never round-trip through memory, which is
+//!    what closes the V-path gap against `fold_k`.
+//! 2. **Lane-parallel min/max.** The per-token-group reduction runs 8
+//!    comparison-select accumulator lanes. Only the *order* of comparisons
+//!    changes, never the arithmetic: min/max over a set is value-unique up
+//!    to the sign of zero, and a `-0.0`/`+0.0` zero-point is invisible to
+//!    both the packed codes (`(x - ±0.0)/s` differs only at `x = ±0.0`,
+//!    where `rte` gives `±0.0` and `code_of` gives 0 either way) and the
+//!    dequant result (`q·s + ±0.0` only differs when `q·s = +0.0`, where
+//!    both signs produce `+0.0`). Byte-identity with scalar is prop-tested
+//!    below and through the dispatch layer.
+//! 3. **Hoisted K-unfold params.** `unfold_k_group` walks 8-channel column
+//!    blocks with the block's scale/zero pairs hoisted into stack arrays,
+//!    widening codes through the mantissa-bias trick lane-by-lane — single
+//!    pass, no `codes`/`wide`/`scale` heap buffers at all.
+//!
+//! `fold_k_group` already runs at memory speed in `wordpack` (the K layout
+//! is the one the u64 trick was built for), so this module re-exports it
+//! unchanged; the dispatch layer routes `Simd`/`Fused` K folds there.
+
+use super::wordpack::{
+    code_of, compress8, lane_mask, load8, minmax, rte, spread8, MAGIC, MAGIC_BITS,
+};
+use super::GroupParams;
+
+pub use super::wordpack::fold_k_group;
+
+/// Lane-parallel min/max: 8 comparison-select accumulator lanes combined
+/// at the end (plus a sequential tail). See the module docs for why the
+/// changed reduction order is still byte-identical to [`minmax`].
+#[inline]
+fn minmax8(xs: &[f32]) -> (f32, f32) {
+    if xs.len() < 16 {
+        return minmax(xs);
+    }
+    let mut lo = [f32::INFINITY; 8];
+    let mut hi = [f32::NEG_INFINITY; 8];
+    let chunks = xs.chunks_exact(8);
+    let tail = chunks.remainder();
+    for c in chunks {
+        for l in 0..8 {
+            let x = c[l];
+            lo[l] = if x < lo[l] { x } else { lo[l] };
+            hi[l] = if x > hi[l] { x } else { hi[l] };
+        }
+    }
+    let (mut l, mut h) = (f32::INFINITY, f32::NEG_INFINITY);
+    for lane in 0..8 {
+        l = if lo[lane] < l { lo[lane] } else { l };
+        h = if hi[lane] > h { hi[lane] } else { h };
+    }
+    for &x in tail {
+        l = if x < l { x } else { l };
+        h = if x > h { x } else { h };
+    }
+    (l, h)
+}
+
+/// Quantize + pack a [G, Dh] V group *per token*: lane-parallel min/max
+/// per channel group, then a fused quantize→compress sweep that packs each
+/// 8-code chunk out of registers (no intermediate code buffer).
+pub fn fold_v_group(
+    vg: &[f32],
+    g: usize,
+    dh: usize,
+    g2: usize,
+    bits: u8,
+    packed: &mut [u8],
+    params: &mut [GroupParams],
+) {
+    let dg = dh / g2;
+    let bpt = dh * bits as usize / 8;
+    let ob = bits as usize; // packed bytes produced per 8 codes
+    let qmax = ((1u32 << bits) - 1) as f32;
+    for t in 0..g {
+        let row = &vg[t * dh..(t + 1) * dh];
+        let tpar = &mut params[t * dg..(t + 1) * dg];
+        let prow = &mut packed[t * bpt..(t + 1) * bpt];
+        for (gi, par) in tpar.iter_mut().enumerate() {
+            let seg = &row[gi * g2..(gi + 1) * g2];
+            let (lo, hi) = minmax8(seg);
+            let span = hi - lo;
+            let scale = if span > 0.0 { span / qmax } else { 1.0 };
+            *par = GroupParams { scale, zero: lo };
+        }
+        if g2 % 8 == 0 {
+            // every 8-code chunk lies inside one channel group: quantize
+            // straight into a stack block, compress, store `bits` bytes
+            for (gi, par) in tpar.iter().enumerate() {
+                let (zero, scale) = (par.zero, par.scale);
+                let seg = &row[gi * g2..(gi + 1) * g2];
+                let pseg = &mut prow[gi * g2 * ob / 8..][..g2 * ob / 8];
+                for (c8, pout) in seg.chunks_exact(8).zip(pseg.chunks_exact_mut(ob)) {
+                    let mut codes = [0u8; 8];
+                    for l in 0..8 {
+                        codes[l] = code_of(rte((c8[l] - zero) / scale), qmax);
+                    }
+                    let w = compress8(u64::from_le_bytes(codes), bits);
+                    pout.copy_from_slice(&w.to_le_bytes()[..ob]);
+                }
+            }
+        } else {
+            // tiny channel groups (g2 < 8): byte-granular packing — each
+            // output byte's vpb codes still share one group (g2 % vpb == 0)
+            let vpb = (8 / bits) as usize;
+            for (bi, byte) in prow.iter_mut().enumerate() {
+                let base = bi * vpb;
+                let par = tpar[base / g2];
+                let mut b = 0u8;
+                for (j, &x) in row[base..base + vpb].iter().enumerate() {
+                    b |= code_of(rte((x - par.zero) / par.scale), qmax) << (j as u8 * bits);
+                }
+                *byte = b;
+            }
+        }
+    }
+}
+
+/// Dequantize a packed V region back to [G, Dh] floats: each 8-code chunk
+/// is spread out of its `bits` packed bytes and widened through the
+/// mantissa-bias trick with the group's (scale, zero) broadcast — single
+/// pass, codes never touch memory.
+pub fn unfold_v_group(
+    packed: &[u8],
+    g: usize,
+    dh: usize,
+    g2: usize,
+    bits: u8,
+    params: &[GroupParams],
+    out: &mut [f32],
+) {
+    let dg = dh / g2;
+    let bpt = dh * bits as usize / 8;
+    let ib = bits as usize; // packed bytes consumed per 8 codes
+    for t in 0..g {
+        let prow = &packed[t * bpt..(t + 1) * bpt];
+        let orow = &mut out[t * dh..(t + 1) * dh];
+        let tpar = &params[t * dg..(t + 1) * dg];
+        if g2 % 8 == 0 {
+            for (gi, par) in tpar.iter().enumerate() {
+                let (scale, zero) = (par.scale, par.zero);
+                let pseg = &prow[gi * g2 * ib / 8..][..g2 * ib / 8];
+                let oseg = &mut orow[gi * g2..(gi + 1) * g2];
+                for (pc, oc) in pseg.chunks_exact(ib).zip(oseg.chunks_exact_mut(8)) {
+                    let mut buf = [0u8; 8];
+                    buf[..ib].copy_from_slice(pc);
+                    let cb = spread8(u64::from_le_bytes(buf), bits).to_le_bytes();
+                    for l in 0..8 {
+                        oc[l] =
+                            (f32::from_bits(cb[l] as u32 | MAGIC_BITS) - MAGIC) * scale + zero;
+                    }
+                }
+            }
+        } else {
+            let vpb = (8 / bits) as usize;
+            let mask = ((1u16 << bits) - 1) as u8;
+            for (bi, &byte) in prow.iter().enumerate() {
+                let base = bi * vpb;
+                let par = tpar[base / g2];
+                for (j, o) in orow[base..base + vpb].iter_mut().enumerate() {
+                    let q = (byte >> (j as u8 * bits)) & mask;
+                    *o = q as f32 * par.scale + par.zero;
+                }
+            }
+        }
+    }
+}
+
+/// Dequantize a packed K region back to [G, Dh] floats in one pass:
+/// 8-channel column blocks with the block's scale/zero hoisted into stack
+/// lanes, codes widened straight from the packed word (no intermediate
+/// code/param buffers, unlike the two-phase `wordpack` unfold).
+pub fn unfold_k_group(
+    packed: &[u8],
+    g: usize,
+    dh: usize,
+    bits: u8,
+    params: &[GroupParams],
+    out: &mut [f32],
+) {
+    let vpb = (8 / bits) as usize;
+    let lm = lane_mask(bits);
+    let mask = ((1u16 << bits) - 1) as u8;
+    let rows = g / vpb;
+    let mut d = 0;
+    while d + 8 <= dh {
+        let mut scale = [0f32; 8];
+        let mut zero = [0f32; 8];
+        for l in 0..8 {
+            scale[l] = params[d + l].scale;
+            zero[l] = params[d + l].zero;
+        }
+        for bp in 0..rows {
+            let w = load8(&packed[bp * dh + d..]);
+            for j in 0..vpb {
+                let cb = ((w >> (j as u32 * bits as u32)) & lm).to_le_bytes();
+                let ochunk = &mut out[(bp * vpb + j) * dh + d..][..8];
+                for l in 0..8 {
+                    ochunk[l] = (f32::from_bits(cb[l] as u32 | MAGIC_BITS) - MAGIC) * scale[l]
+                        + zero[l];
+                }
+            }
+        }
+        d += 8;
+    }
+    // channel tail for dh off the 8-lane grid
+    while d < dh {
+        let p = params[d];
+        for bp in 0..rows {
+            let byte = packed[bp * dh + d];
+            for j in 0..vpb {
+                let q = (byte >> (j as u8 * bits)) & mask;
+                out[(bp * vpb + j) * dh + d] = q as f32 * p.scale + p.zero;
+            }
+        }
+        d += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{scalar, wordpack};
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    #[test]
+    fn minmax8_matches_sequential_prop() {
+        // value equality (`==`), not bit equality: the lane reduction may
+        // pick the other sign of zero when ±0.0 tie for the extremum, and
+        // the module docs show that sign is invisible to every consumer
+        check("simd_minmax8_eq", 400, |g: &mut Gen| {
+            let n = g.usize_in(1, 80);
+            let xs = g.vec_normal(n, 3.0);
+            let (la, ha) = minmax(&xs);
+            let (lb, hb) = minmax8(&xs);
+            if la != lb || ha != hb {
+                return Err(format!("minmax diverges n={n}: ({la},{ha}) vs ({lb},{hb})"));
+            }
+            Ok(())
+        });
+        // the ±0.0 tie in question: both reductions agree up to zero sign
+        let mut xs = vec![0.0f32; 24];
+        xs[3] = -0.0;
+        xs[17] = -0.0;
+        assert_eq!(minmax8(&xs), minmax(&xs));
+    }
+
+    #[test]
+    fn fold_v_matches_scalar_prop() {
+        check("simd_fold_v_eq", 150, |g: &mut Gen| {
+            let bits = *g.pick(&[1u8, 2, 4, 8]);
+            let vpb = (8 / bits) as usize;
+            let gg = g.usize_in(1, 8);
+            // g2 = vpb·m covers tiny groups (g2 < 8, byte-granular path)
+            // and wide ones (lane path), incl. odd multiples like 24/40
+            let g2 = vpb * g.usize_in(1, 5);
+            let dh = g2 * g.usize_in(1, 5);
+            let vg = g.vec_normal(gg * dh, 2.0);
+            let bpt = dh * bits as usize / 8;
+            let dg = dh / g2;
+            let mut pa = vec![0u8; gg * bpt];
+            let mut pb = vec![0u8; gg * bpt];
+            let zero = GroupParams { scale: 0.0, zero: 0.0 };
+            let mut qa = vec![zero; gg * dg];
+            let mut qb = vec![zero; gg * dg];
+            scalar::fold_v_group(&vg, gg, dh, g2, bits, &mut pa, &mut qa);
+            fold_v_group(&vg, gg, dh, g2, bits, &mut pb, &mut qb);
+            if pa != pb {
+                return Err(format!("V packed bytes diverge bits={bits} g={gg} dh={dh} g2={g2}"));
+            }
+            if qa != qb {
+                return Err(format!("V params diverge bits={bits} g={gg} dh={dh} g2={g2}"));
+            }
+            let mut oa = vec![0f32; gg * dh];
+            let mut ob = vec![0f32; gg * dh];
+            scalar::unfold_v_group(&pa, gg, dh, g2, bits, &qa, &mut oa);
+            unfold_v_group(&pb, gg, dh, g2, bits, &qb, &mut ob);
+            if oa != ob {
+                return Err(format!("V unfold diverges bits={bits} g={gg} dh={dh} g2={g2}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn unfold_k_matches_scalar_prop() {
+        check("simd_unfold_k_eq", 150, |g: &mut Gen| {
+            let bits = *g.pick(&[1u8, 2, 4, 8]);
+            let vpb = (8 / bits) as usize;
+            let gg = g.usize_in(1, 6) * vpb;
+            // dh off the 8-lane grid exercises the channel tail
+            let dh = *g.pick(&[8usize, 12, 32, 33, 64]);
+            let kg = g.vec_normal(gg * dh, 2.0);
+            let rows_pk = gg * bits as usize / 8;
+            let mut packed = vec![0u8; rows_pk * dh];
+            let zero = GroupParams { scale: 0.0, zero: 0.0 };
+            let mut q = vec![zero; dh];
+            scalar::fold_k_group(&kg, gg, dh, bits, &mut packed, &mut q);
+            let mut oa = vec![0f32; gg * dh];
+            let mut ob = vec![0f32; gg * dh];
+            let mut oc = vec![0f32; gg * dh];
+            scalar::unfold_k_group(&packed, gg, dh, bits, &q, &mut oa);
+            unfold_k_group(&packed, gg, dh, bits, &q, &mut ob);
+            wordpack::unfold_k_group(&packed, gg, dh, bits, &q, &mut oc);
+            if oa != ob || oa != oc {
+                return Err(format!("K unfold diverges bits={bits} g={gg} dh={dh}"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -21,17 +21,17 @@ use super::GroupParams;
 
 /// 2^23: f32 spacing is 1.0 in [2^23, 2^24), so `(x + MAGIC) - MAGIC`
 /// performs IEEE round-to-nearest-even of `x` for 0 <= x < 2^23.
-const MAGIC: f32 = 8_388_608.0;
+pub(super) const MAGIC: f32 = 8_388_608.0;
 
 /// `0x4B000000 | q` is the bit pattern of `2^23 + q` for 0 <= q < 2^23:
 /// subtracting [`MAGIC`] recovers `q as f32` with float ops only, so the
 /// dequant sweep carries no int→float conversion instruction.
-const MAGIC_BITS: u32 = 0x4B00_0000;
+pub(super) const MAGIC_BITS: u32 = 0x4B00_0000;
 
 /// Exact round-half-to-even on the quantizer domain [0, qmax] (NaN
 /// propagates, matching `f32::round_ties_even`).
 #[inline(always)]
-fn rte(x: f32) -> f32 {
+pub(super) fn rte(x: f32) -> f32 {
     (x + MAGIC) - MAGIC
 }
 
@@ -41,7 +41,7 @@ fn rte(x: f32) -> f32 {
 /// select turns NaN into 0, exactly like the saturating cast), but unlike
 /// `f32::clamp` it compiles to min/max selects the autovectorizer handles.
 #[inline(always)]
-fn code_of(q: f32, qmax: f32) -> u8 {
+pub(super) fn code_of(q: f32, qmax: f32) -> u8 {
     let q = if q > qmax { qmax } else { q };
     let q = if q > 0.0 { q } else { 0.0 };
     q as u8
@@ -49,7 +49,7 @@ fn code_of(q: f32, qmax: f32) -> u8 {
 
 /// Low `bits` of every byte lane set (the per-lane code mask).
 #[inline(always)]
-fn lane_mask(bits: u8) -> u64 {
+pub(super) fn lane_mask(bits: u8) -> u64 {
     match bits {
         1 => 0x0101_0101_0101_0101,
         2 => 0x0303_0303_0303_0303,
@@ -65,7 +65,7 @@ fn lane_mask(bits: u8) -> u64 {
 /// byte boundaries (code < 2^b and j·b + b <= 8), so one fold halves the
 /// number of partially-packed lanes.
 #[inline(always)]
-fn compress8(w: u64, bits: u8) -> u64 {
+pub(super) fn compress8(w: u64, bits: u8) -> u64 {
     match bits {
         1 => {
             let w = w | (w >> 7);
@@ -91,7 +91,7 @@ fn compress8(w: u64, bits: u8) -> u64 {
 /// Inverse of [`compress8`]: spread `bits` packed bytes (low lanes of `p`)
 /// into 8 code bytes, one per lane.
 #[inline(always)]
-fn spread8(p: u64, bits: u8) -> u64 {
+pub(super) fn spread8(p: u64, bits: u8) -> u64 {
     match bits {
         1 => {
             let w = (p | (p << 28)) & 0x0000_000f_0000_000f;
@@ -115,7 +115,7 @@ fn spread8(p: u64, bits: u8) -> u64 {
 }
 
 #[inline(always)]
-fn load8(bytes: &[u8]) -> u64 {
+pub(super) fn load8(bytes: &[u8]) -> u64 {
     u64::from_le_bytes(bytes[..8].try_into().unwrap())
 }
 
@@ -124,7 +124,7 @@ fn load8(bytes: &[u8]) -> u64 {
 /// NaN), but selects vectorize on the baseline target where the
 /// NaN-symmetric builtins do not.
 #[inline]
-fn minmax(xs: &[f32]) -> (f32, f32) {
+pub(super) fn minmax(xs: &[f32]) -> (f32, f32) {
     let mut lo = f32::INFINITY;
     let mut hi = f32::NEG_INFINITY;
     for &x in xs {
@@ -136,7 +136,7 @@ fn minmax(xs: &[f32]) -> (f32, f32) {
 
 /// Quantize a contiguous run against one (zero, scale) pair.
 #[inline]
-fn quantize_run(xs: &[f32], lo: f32, scale: f32, qmax: f32, out: &mut [u8]) {
+pub(super) fn quantize_run(xs: &[f32], lo: f32, scale: f32, qmax: f32, out: &mut [u8]) {
     for (o, &x) in out.iter_mut().zip(xs) {
         *o = code_of(rte((x - lo) / scale), qmax);
     }
@@ -354,19 +354,20 @@ pub fn fold_v_group(
     let dg = dh / g2;
     let bytes_per_tok = dh * bits as usize / 8;
     let qmax = ((1u32 << bits) - 1) as f32;
-    let mut codes = vec![0u8; dh];
-    for t in 0..g {
-        let row = &vg[t * dh..(t + 1) * dh];
-        for gi in 0..dg {
-            let seg = &row[gi * g2..(gi + 1) * g2];
-            let (lo, hi) = minmax(seg);
-            let span = hi - lo;
-            let scale = if span > 0.0 { span / qmax } else { 1.0 };
-            params[t * dg + gi] = GroupParams { scale, zero: lo };
-            quantize_run(seg, lo, scale, qmax, &mut codes[gi * g2..(gi + 1) * g2]);
+    super::scratch::with_codes(dh, |codes| {
+        for t in 0..g {
+            let row = &vg[t * dh..(t + 1) * dh];
+            for gi in 0..dg {
+                let seg = &row[gi * g2..(gi + 1) * g2];
+                let (lo, hi) = minmax(seg);
+                let span = hi - lo;
+                let scale = if span > 0.0 { span / qmax } else { 1.0 };
+                params[t * dg + gi] = GroupParams { scale, zero: lo };
+                quantize_run(seg, lo, scale, qmax, &mut codes[gi * g2..(gi + 1) * g2]);
+            }
+            pack_bits(codes, bits, &mut packed[t * bytes_per_tok..(t + 1) * bytes_per_tok]);
         }
-        pack_bits(&codes, bits, &mut packed[t * bytes_per_tok..(t + 1) * bytes_per_tok]);
-    }
+    })
 }
 
 /// Dequantize a packed V region back to [G, Dh] floats: word-parallel
@@ -383,21 +384,21 @@ pub fn unfold_v_group(
 ) {
     let dg = dh / g2;
     let bytes_per_tok = dh * bits as usize / 8;
-    let mut codes = vec![0u8; dh];
-    let mut wide = vec![0u32; dh];
-    for t in 0..g {
-        unpack_bits(&packed[t * bytes_per_tok..(t + 1) * bytes_per_tok], bits, &mut codes);
-        for d in 0..dh {
-            wide[d] = codes[d] as u32 | MAGIC_BITS;
-        }
-        let orow = &mut out[t * dh..(t + 1) * dh];
-        for gi in 0..dg {
-            let p = params[t * dg + gi];
-            for (o, &w) in orow[gi * g2..(gi + 1) * g2].iter_mut().zip(&wide[gi * g2..]) {
-                *o = (f32::from_bits(w) - MAGIC) * p.scale + p.zero;
+    super::scratch::with_codes_wide(dh, |codes, wide| {
+        for t in 0..g {
+            unpack_bits(&packed[t * bytes_per_tok..(t + 1) * bytes_per_tok], bits, codes);
+            for d in 0..dh {
+                wide[d] = codes[d] as u32 | MAGIC_BITS;
+            }
+            let orow = &mut out[t * dh..(t + 1) * dh];
+            for gi in 0..dg {
+                let p = params[t * dg + gi];
+                for (o, &w) in orow[gi * g2..(gi + 1) * g2].iter_mut().zip(&wide[gi * g2..]) {
+                    *o = (f32::from_bits(w) - MAGIC) * p.scale + p.zero;
+                }
             }
         }
-    }
+    })
 }
 
 #[cfg(test)]

@@ -7,8 +7,10 @@
 //! (and the `*_with(KernelMode, …)` variants to pin an implementation).
 
 pub use super::kernels::{
-    active_mode, dequantize_group, dequantize_group_with, fold_k_group, fold_k_group_with,
-    fold_v_group, fold_v_group_with, pack_bits, pack_bits_with, packed_len, quantize_group,
-    quantize_group_with, unfold_k_group, unfold_k_group_with, unfold_v_group,
-    unfold_v_group_with, unpack_bits, unpack_bits_with, GroupParams, KernelMode,
+    active_mode, attn_scores_k_group, attn_scores_k_group_with, attn_weighted_v_group,
+    attn_weighted_v_group_with, dequantize_group, dequantize_group_with, dot8, fold_k_group,
+    fold_k_group_with, fold_v_group, fold_v_group_with, pack_bits, pack_bits_with, packed_len,
+    quantize_group, quantize_group_with, set_active_mode, unfold_k_group, unfold_k_group_with,
+    unfold_v_group, unfold_v_group_with, unpack_bits, unpack_bits_with, weighted_acc,
+    GroupParams, KernelMode,
 };

@@ -5,6 +5,7 @@
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod par;
 pub mod prop;
 pub mod rng;
 pub mod stats;

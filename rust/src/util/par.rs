@@ -1,0 +1,61 @@
+//! Tiny scoped worker-pool helper shared by the gather scatter path and
+//! the multi-head fold path: one scoped thread per task when there are at
+//! least two, inline execution otherwise (a single task never pays a spawn).
+//!
+//! Scoped threads let tasks borrow disjoint `&mut` views of the caller's
+//! buffers (`chunks_mut` per slot/head), so the pattern adds parallelism
+//! without any `Arc`/locking — the borrow checker proves disjointness and
+//! the scope proves completion before the caller resumes.
+
+/// Run `f` over `tasks`, one scoped thread per task when `tasks.len() >= 2`
+/// (inline otherwise). Returns the outputs in task order. Panics in a task
+/// propagate to the caller, matching inline execution.
+pub fn scoped_map<T, R, F>(tasks: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    if tasks.len() < 2 {
+        return tasks.into_iter().map(f).collect();
+    }
+    std::thread::scope(|scope| {
+        let f = &f;
+        let handles: Vec<_> =
+            tasks.into_iter().map(|t| scope.spawn(move || f(t))).collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_and_single_run_inline() {
+        let none: Vec<i32> = scoped_map(Vec::new(), |x: i32| x * 2);
+        assert!(none.is_empty());
+        assert_eq!(scoped_map(vec![21], |x| x * 2), vec![42]);
+    }
+
+    #[test]
+    fn preserves_task_order() {
+        let out = scoped_map((0..16).collect(), |x: usize| x * x);
+        assert_eq!(out, (0..16).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn tasks_borrow_disjoint_chunks() {
+        let mut buf = vec![0u32; 64];
+        let tasks: Vec<(usize, &mut [u32])> =
+            buf.chunks_mut(16).enumerate().collect();
+        scoped_map(tasks, |(i, chunk)| {
+            for c in chunk.iter_mut() {
+                *c = i as u32 + 1;
+            }
+        });
+        for (i, c) in buf.iter().enumerate() {
+            assert_eq!(*c, (i / 16) as u32 + 1);
+        }
+    }
+}

@@ -8,9 +8,17 @@ use asymkv::util::json::{base64_decode, Value};
 use asymkv::util::rng::SplitMix;
 use asymkv::workload;
 
-/// Both kernel implementations must match the Python reference — the
-/// golden vectors go through the dispatch layer with each mode pinned.
-const MODES: [KernelMode; 2] = [KernelMode::Scalar, KernelMode::Wordpack];
+/// Every kernel tier must match the Python reference — the golden vectors
+/// go through the dispatch layer with each mode pinned. The simd/fused
+/// tiers share fold routes with wordpack on the K side and use the
+/// vectorized sweeps on the V side; all are byte-identical by property
+/// test, and the goldens pin that against the independent Python reference.
+const MODES: [KernelMode; 4] = [
+    KernelMode::Scalar,
+    KernelMode::Wordpack,
+    KernelMode::Simd,
+    KernelMode::Fused,
+];
 
 fn f32s(v: &Value) -> Vec<f32> {
     v.f32_vec().expect("float array")

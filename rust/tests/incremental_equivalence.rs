@@ -20,8 +20,7 @@ fn bits(l: &[f32]) -> Vec<u32> {
     l.iter().map(|x| x.to_bits()).collect()
 }
 
-#[test]
-fn incremental_logits_match_naive_prop() {
+fn run_interleaving_prop(label: &'static str) {
     let Some(fast) = common::engine_for("tiny") else { return };
     let Some(naive) = common::engine_for("tiny") else { return };
     naive.set_naive(true);
@@ -36,7 +35,7 @@ fn incremental_logits_match_naive_prop() {
         QuantPolicy::float32(n),
     ];
 
-    check("incremental_vs_naive", 4, |g: &mut Gen| {
+    check(label, 4, |g: &mut Gen| {
         let policy = g.pick(&policies).clone();
         let tokens = |g: &mut Gen, len: usize| -> Vec<i32> {
             (0..len).map(|_| g.usize_in(32, 126) as i32).collect()
@@ -117,6 +116,27 @@ fn incremental_logits_match_naive_prop() {
         naive.free_seq(nid).map_err(|e| e.to_string())?;
         Ok(())
     });
+}
+
+#[test]
+fn incremental_logits_match_naive_prop() {
+    run_interleaving_prop("incremental_vs_naive");
+}
+
+/// The same interleaving property with each fast kernel tier pinned
+/// process-wide: forcing `simd` or `fused` must leave every logits row
+/// bit-identical, because the tiers are byte-identical on packed output
+/// and the fused attention kernels are bit-identical to unfold-then-matmul
+/// under the canonical summation orders. Safe to flip mid-process for the
+/// same reason — concurrently running tests cannot observe a difference.
+#[test]
+fn incremental_logits_match_naive_with_simd_and_fused_kernels() {
+    use asymkv::quant::kernels::{set_active_mode, KernelMode};
+    set_active_mode(KernelMode::Simd);
+    run_interleaving_prop("incremental_vs_naive_simd");
+    set_active_mode(KernelMode::Fused);
+    run_interleaving_prop("incremental_vs_naive_fused");
+    set_active_mode(KernelMode::Auto); // back to the env-derived default
 }
 
 /// Property: sequences ATTACHED to a shared prefix node (copy-on-write
