@@ -1,0 +1,189 @@
+//! Session hibernation bench: the PR's restore-vs-re-prefill argument
+//! made measurable. When the idle sweep destroys a session, the
+//! conversation's next turn pays a full prefill of the retained history
+//! through the quantized fold kernels. Hibernation spills the frozen
+//! 1-bit image to disk instead; the next turn's cost is read + decode +
+//! pool re-admission. At AsymKV's 1-bit flagship the image is tiny, so
+//! restore must beat re-prefill by a wide margin — the CI floor is 3x —
+//! while producing the EXACT bytes the donor held (asserted here and
+//! proved decode-bit-identical by `tests/hibernate_equivalence.rs`).
+//! Pure-Rust (no artifacts), runs everywhere. Emits the `hibernate_*`
+//! records of `BENCH_kernels.json`.
+
+use asymkv::kvcache::{
+    CacheGeometry, CachePool, HibernateConfig, HibernateStore,
+};
+use asymkv::quant::QuantPolicy;
+use asymkv::util::bench::{self, fmt_duration, time_fn, JsonReport, Table};
+use asymkv::util::json::Value;
+use asymkv::util::rng::SplitMix;
+
+const GEO: CacheGeometry = CacheGeometry {
+    n_heads: 8,
+    max_ctx: 4096,
+    d_head: 64,
+    group: 32,
+    residual: 64,
+};
+const LAYERS: usize = 4;
+
+fn policy() -> QuantPolicy {
+    QuantPolicy::kivi(LAYERS, 1) // the 1-bit flagship
+}
+
+/// Append `count` synthetic tokens through the real quantized fold path.
+fn grow(pool: &CachePool, id: u64, count: usize, seed: u64) {
+    let hd = GEO.n_heads * GEO.d_head;
+    let mut rng = SplitMix::new(seed);
+    pool.with_seq(id, |s| {
+        for _ in 0..count {
+            for layer in &mut s.layers {
+                let k = rng.normal_f32_vec(hd);
+                let v = rng.normal_f32_vec(hd);
+                layer.append_token(&k, &v);
+            }
+            s.pos += 1;
+        }
+    })
+    .unwrap();
+}
+
+fn main() {
+    let p = policy();
+    // smoke keeps CI fast; the full run measures a realistic conversation
+    let tokens: usize = if bench::smoke() { 256 } else { 1024 };
+    let reps = bench::samples(30);
+    let warm = bench::warmup(3);
+
+    let dir = std::env::temp_dir()
+        .join(format!("asymkv-bench-hib-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = HibernateStore::new(HibernateConfig {
+        dir: dir.clone(),
+        budget_bytes: 1 << 30,
+    })
+    .expect("spill dir");
+
+    // donor session: `tokens` of history resident at 1-bit
+    let pool = CachePool::new(GEO, usize::MAX);
+    let donor = pool.allocate(&p).unwrap();
+    grow(&pool, donor, tokens, 0xD0);
+    let frozen = pool
+        .with_seq(donor, |s| asymkv::kvcache::SeqBase::freeze(s))
+        .unwrap();
+    let image_bytes = store.spill(1, &frozen, "1:1,1:1,1:1,1:1").unwrap();
+
+    // ---- A: the eviction path — next turn re-prefills the history ----
+    let tm_reprefill = time_fn(warm, reps, || {
+        let id = pool.allocate(&p).unwrap();
+        grow(&pool, id, tokens, 0xD0);
+        pool.free(id).unwrap();
+        std::hint::black_box(id);
+    });
+
+    // ---- B: the hibernation path — read + decode + re-admit ----
+    let tm_restore = time_fn(warm, reps, || {
+        let img = store.restore(1).expect("image resident");
+        let id = pool.adopt(img.into_seq()).expect("budget is unbounded");
+        pool.free(id).unwrap();
+        std::hint::black_box(id);
+    });
+
+    // ---- spill cost (encode + temp-rename write), for the sweeper ----
+    let tm_spill = time_fn(warm, reps, || {
+        let n = store.spill(2, &frozen, "1:1,1:1,1:1,1:1").unwrap();
+        std::hint::black_box(n);
+    });
+    store.discard(2);
+
+    // restored bytes must equal the donor's exactly
+    let img = store.restore(1).unwrap();
+    let restored = img.into_seq();
+    let bit_identical = pool
+        .with_seq(donor, |d| {
+            d.pos == restored.pos
+                && d.layers.iter().zip(restored.layers.iter()).all(|(a, b)| {
+                    a.dequant_k_full() == b.dequant_k_full()
+                        && a.dequant_v_full() == b.dequant_v_full()
+                })
+        })
+        .unwrap();
+    assert!(bit_identical, "restore must reproduce the donor bytes");
+
+    let ratio = tm_reprefill.p50() / tm_restore.p50();
+    assert!(
+        ratio >= 3.0,
+        "restore must beat re-prefill >= 3x at 1-bit \
+         (got {:.1}x: reprefill {} vs restore {})",
+        ratio,
+        fmt_duration(tm_reprefill.p50()),
+        fmt_duration(tm_restore.p50()),
+    );
+
+    let mut t = Table::new(
+        "session hibernation: next-turn readiness after the idle sweep",
+        &["path", "p50", "p95", "vs re-prefill"],
+    );
+    t.row(vec![
+        format!("re-prefill {tokens} tokens"),
+        fmt_duration(tm_reprefill.p50()),
+        fmt_duration(tm_reprefill.p95()),
+        "1.0x".into(),
+    ]);
+    t.row(vec![
+        format!("restore {image_bytes}B image"),
+        fmt_duration(tm_restore.p50()),
+        fmt_duration(tm_restore.p95()),
+        format!("{ratio:.1}x"),
+    ]);
+    t.row(vec![
+        "spill (freeze already held)".into(),
+        fmt_duration(tm_spill.p50()),
+        fmt_duration(tm_spill.p95()),
+        "-".into(),
+    ]);
+    t.emit("bench_hibernate");
+
+    let mut report = JsonReport::at_root("BENCH_kernels.json");
+    report.add(
+        "hibernate_restore_ttft",
+        &tm_restore,
+        image_bytes,
+        Value::obj(vec![
+            ("session_tokens", Value::num(tokens as f64)),
+            ("layers", Value::num(LAYERS as f64)),
+            ("policy", Value::str_of(p.name.clone())),
+            ("image_bytes", Value::num(image_bytes as f64)),
+            ("reprefill_p50_s", Value::num(tm_reprefill.p50())),
+            ("restore_p50_s", Value::num(tm_restore.p50())),
+            ("ratio_vs_reprefill", Value::num(ratio)),
+            ("bit_identical", Value::Bool(bit_identical)),
+        ]),
+    );
+    report.add(
+        "hibernate_spill_roundtrip",
+        &tm_spill,
+        image_bytes,
+        Value::obj(vec![
+            ("session_tokens", Value::num(tokens as f64)),
+            ("image_bytes", Value::num(image_bytes as f64)),
+            ("spill_p50_s", Value::num(tm_spill.p50())),
+            ("restore_p50_s", Value::num(tm_restore.p50())),
+            ("policy", Value::str_of(p.name.clone())),
+        ]),
+    );
+    report.write().expect("write BENCH_kernels.json");
+
+    bench::note(
+        "bench_hibernate",
+        &format!(
+            "\n{tokens}-token 1-bit session: {image_bytes}-byte image; \
+             restore {} vs re-prefill {} ({ratio:.1}x); bytes verified \
+             identical to the donor.",
+            fmt_duration(tm_restore.p50()),
+            fmt_duration(tm_reprefill.p50()),
+        ),
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+    println!("wrote BENCH_kernels.json (hibernate_* records)");
+}

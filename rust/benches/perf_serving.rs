@@ -21,13 +21,10 @@ fn run_trace(
 ) -> (f64, f64, f64) {
     let coord = Coordinator::start(engine, cfg);
     let tok = ByteTokenizer;
-    let trace = generate_trace(&TraceConfig {
-        n_requests,
-        rate: 0.0, // offline: all arrive at once (throughput measurement)
-        n_pairs: 12,
-        n_gen: 8,
-        seed: 0xBEEF,
-    });
+    // offline preset: all arrive at once (throughput measurement)
+    let trace = generate_trace(&TraceConfig::recall_preset(
+        0xBEEF, n_requests, 0.0, 12, 8,
+    ));
     let t0 = std::time::Instant::now();
     let handles: Vec<_> = trace
         .iter()

@@ -740,13 +740,19 @@ fn push_spec_fields(
 pub fn encode_response(resp: &ApiResponse, proto: Proto) -> Value {
     let v = match resp {
         ApiResponse::Pong => Value::obj(vec![("ok", Value::Bool(true))]),
-        ApiResponse::Stats(snap, prefix) => {
+        ApiResponse::Stats(snap, prefix, hibernate) => {
             let mut v = snap.to_json();
-            // the namespaced prefix section is a v3 addition; v1/v2
-            // `stats` replies stay byte-compatible
+            // the namespaced prefix/hibernate sections are v3 additions;
+            // v1/v2 `stats` replies stay byte-compatible
             if proto == Proto::V3 {
                 if let (Some(p), Value::Obj(o)) = (prefix, &mut v) {
                     o.insert("prefix".to_string(), prefix_report_value(p));
+                }
+                if let (Some(h), Value::Obj(o)) = (hibernate, &mut v) {
+                    o.insert(
+                        "hibernate".to_string(),
+                        hibernate_report_value(h),
+                    );
                 }
             }
             v
@@ -833,6 +839,20 @@ fn prefix_report_value(p: &super::types::PrefixReport) -> Value {
         ("misses", Value::num(p.misses as f64)),
         ("entries", Value::num(p.entries as f64)),
         ("named", Value::num(p.named as f64)),
+    ])
+}
+
+/// The namespaced `hibernate` section of a v3 `stats` reply.
+fn hibernate_report_value(h: &super::types::HibernateReport) -> Value {
+    Value::obj(vec![
+        ("spills", Value::num(h.spills as f64)),
+        ("restores", Value::num(h.restores as f64)),
+        ("spill_failures", Value::num(h.spill_failures as f64)),
+        ("reclaims", Value::num(h.reclaims as f64)),
+        ("corrupt", Value::num(h.corrupt as f64)),
+        ("entries", Value::num(h.entries as f64)),
+        ("spill_bytes", Value::num(h.spill_bytes as f64)),
+        ("restore_p95_s", Value::num(h.restore_p95_s)),
     ])
 }
 
@@ -1541,7 +1561,7 @@ mod tests {
 
     #[test]
     fn stats_prefix_section_is_v3_only() {
-        use crate::api::types::PrefixReport;
+        use crate::api::types::{HibernateReport, PrefixReport};
         let snap = crate::coordinator::MetricsSnapshot::default();
         let report = PrefixReport {
             shared_pages: 2,
@@ -1553,13 +1573,25 @@ mod tests {
             entries: 4,
             named: 2,
         };
-        let resp = ApiResponse::Stats(snap, Some(report));
-        // v1/v2 stats replies stay byte-compatible: no prefix section
+        let hib = HibernateReport {
+            spills: 11,
+            restores: 8,
+            spill_failures: 1,
+            reclaims: 2,
+            corrupt: 0,
+            entries: 3,
+            spill_bytes: 42_000,
+            restore_p95_s: 0.004,
+        };
+        let resp = ApiResponse::Stats(snap, Some(report), Some(hib));
+        // v1/v2 stats replies stay byte-compatible: no namespaced sections
         let v1 = encode_response(&resp, Proto::V1);
         assert_eq!(v1.get("prefix"), &Value::Null);
+        assert_eq!(v1.get("hibernate"), &Value::Null);
         let v2 = encode_response(&resp, Proto::V2);
         assert_eq!(v2.get("prefix"), &Value::Null);
-        // v3 carries the namespaced section
+        assert_eq!(v2.get("hibernate"), &Value::Null);
+        // v3 carries the namespaced sections
         let v3 = encode_response(&resp, Proto::V3);
         let p = v3.get("prefix");
         assert_eq!(p.get("shared_pages").as_i64(), Some(2));
@@ -1568,9 +1600,19 @@ mod tests {
         assert_eq!(p.get("hits").as_i64(), Some(7));
         assert_eq!(p.get("misses").as_i64(), Some(3));
         assert_eq!(p.get("named").as_i64(), Some(2));
-        // a disabled prefix cache simply omits the section on v3 too
-        let v3 = encode_response(&ApiResponse::Stats(snap, None), Proto::V3);
+        let h = v3.get("hibernate");
+        assert_eq!(h.get("spills").as_i64(), Some(11));
+        assert_eq!(h.get("restores").as_i64(), Some(8));
+        assert_eq!(h.get("spill_failures").as_i64(), Some(1));
+        assert_eq!(h.get("reclaims").as_i64(), Some(2));
+        assert_eq!(h.get("entries").as_i64(), Some(3));
+        assert_eq!(h.get("spill_bytes").as_i64(), Some(42_000));
+        assert!(h.get("restore_p95_s").as_f64().unwrap() > 0.0);
+        // disabled subsystems simply omit their sections on v3 too
+        let v3 =
+            encode_response(&ApiResponse::Stats(snap, None, None), Proto::V3);
         assert_eq!(v3.get("prefix"), &Value::Null);
+        assert_eq!(v3.get("hibernate"), &Value::Null);
     }
 
     #[test]

@@ -54,6 +54,13 @@ pub enum ErrorCode {
     /// The replica behind this request died or was removed from the fleet
     /// (transport EOF/socket error, or gateway-side eviction).
     ReplicaUnavailable,
+    /// A hibernated session's spilled image failed validation on restore
+    /// (torn write, disk corruption, or a policy fingerprint mismatch);
+    /// the session was evicted and must re-prefill.
+    HibernateCorrupt,
+    /// A hibernated session's image was reclaimed under the spill-bytes
+    /// budget (LRU) before the session came back; re-prefill required.
+    SpillBudgetExceeded,
     /// The engine/coordinator failed while executing the request.
     Engine,
     /// Anything that should not happen.
@@ -82,6 +89,8 @@ impl ErrorCode {
             ErrorCode::PrefixPolicyMismatch => "prefix_policy_mismatch",
             ErrorCode::Draining => "draining",
             ErrorCode::ReplicaUnavailable => "replica_unavailable",
+            ErrorCode::HibernateCorrupt => "hibernate_corrupt",
+            ErrorCode::SpillBudgetExceeded => "spill_budget_exceeded",
             ErrorCode::Engine => "engine",
             ErrorCode::Internal => "internal",
         }
@@ -203,6 +212,11 @@ mod tests {
         );
         assert_eq!(ErrorCode::Draining.as_str(), "draining");
         assert_eq!(ErrorCode::ReplicaUnavailable.as_str(), "replica_unavailable");
+        assert_eq!(ErrorCode::HibernateCorrupt.as_str(), "hibernate_corrupt");
+        assert_eq!(
+            ErrorCode::SpillBudgetExceeded.as_str(),
+            "spill_budget_exceeded"
+        );
         assert_eq!(ApiError::draining().code, ErrorCode::Draining);
         assert_eq!(
             ApiError::replica_unavailable("gone").to_string(),

@@ -32,6 +32,6 @@ pub use error::{ApiError, ErrorCode};
 pub use session::{SessionConfig, SessionManager, TurnOpts};
 pub use types::{
     ApiRequest, ApiResponse, CalibrationReport, DrainReport, GenerateSpec,
-    GenerationResult, PolicyInfo, PolicyReport, PoolReport, PrefixReport,
-    SessionTurn,
+    GenerationResult, HibernateReport, PolicyInfo, PolicyReport, PoolReport,
+    PrefixReport, SessionTurn,
 };

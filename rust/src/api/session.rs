@@ -6,15 +6,20 @@
 //! A session owns one pinned pool sequence for its whole life. Each
 //! `session_append` submits a normal coordinator request that *reuses* that
 //! sequence (`Request::session_seq`), so turns batch with ordinary traffic
-//! under the policy-homogeneous scheduler. Idle sessions are evicted by
+//! under the policy-homogeneous scheduler. Idle sessions are swept by
 //! the server's housekeeping tick (a quiet server still sweeps; in-process
 //! users of the manager call [`SessionManager::sweep_idle`] on their own
-//! cadence). A failed turn evicts its session: the retained KV state is
-//! indeterminate after a mid-turn engine error, and a retry against it
-//! would condition later turns on duplicated history. Cancelled and
-//! deadline-expired turns are failed turns too — the turn's prompt may be
-//! half-resident — so they also evict (which is what releases the pinned
-//! pages immediately).
+//! cadence). With a [`HibernateConfig`] the sweep SPILLS the frozen cache
+//! to disk instead of destroying it — the session stays open with zero
+//! resident bytes and the next turn restores it (re-admission to the pool,
+//! fresh version stamps, bit-identical decode) instead of failing with
+//! `unknown_session` and re-prefilling the whole conversation. Without one,
+//! sweeps hard-evict as before. A failed turn still evicts its session:
+//! the retained KV state is indeterminate after a mid-turn engine error,
+//! and a retry against it would condition later turns on duplicated
+//! history. Cancelled and deadline-expired turns are failed turns too —
+//! the turn's prompt may be half-resident — so they also evict (which is
+//! what releases the pinned pages immediately).
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -23,10 +28,14 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::request::TokenSink;
 use crate::coordinator::{AbortHandle, AbortKind, Coordinator};
+use crate::engine::policy_fingerprint;
+use crate::kvcache::{HibernateConfig, HibernateError, HibernateStore};
 use crate::quant::QuantPolicy;
 
 use super::error::{ApiError, ErrorCode};
-use super::types::{GenerateSpec, GenerationResult, SessionTurn};
+use super::types::{
+    GenerateSpec, GenerationResult, HibernateReport, SessionTurn,
+};
 
 /// Transport-level options for one turn (v3 surface): a streaming sink
 /// and a shared abort flag. (The turn's deadline travels inside
@@ -39,50 +48,92 @@ pub struct TurnOpts {
 
 #[derive(Debug, Clone)]
 pub struct SessionConfig {
-    /// Sessions idle this long are evicted (their cache freed). Zero
-    /// disables eviction.
+    /// Sessions idle this long are swept — spilled to disk when
+    /// `hibernate` is configured, hard-evicted otherwise. Zero disables
+    /// the sweep.
     pub idle_timeout: Duration,
-    /// Hard cap on concurrently open sessions.
+    /// Hard cap on concurrently open sessions (live + hibernated — a
+    /// hibernated session keeps its table slot and identity).
     pub max_sessions: usize,
+    /// Spill idle sessions to this directory/budget instead of evicting
+    /// them. `None` keeps the legacy destroy-on-sweep behavior. The
+    /// default reads `ASYMKV_SPILL_DIR` / `ASYMKV_SPILL_BUDGET`, so
+    /// hibernation is an environment-level opt-in at every call site.
+    pub hibernate: Option<HibernateConfig>,
 }
 
 impl Default for SessionConfig {
     fn default() -> Self {
-        Self { idle_timeout: Duration::from_secs(300), max_sessions: 64 }
+        Self {
+            idle_timeout: Duration::from_secs(300),
+            max_sessions: 64,
+            hibernate: HibernateConfig::from_env(),
+        }
     }
 }
 
+/// Where a session's KV state lives right now.
+#[derive(Clone, Copy)]
+enum Slot {
+    /// Pinned pool sequence, ready for the next turn.
+    Live(u64),
+    /// Spilled to the hibernate store; the next turn restores it.
+    Hibernated,
+}
+
 struct SessionState {
-    seq_id: u64,
+    slot: Slot,
     policy: QuantPolicy,
+    /// Per-layer bits fingerprint captured at open; a restored image whose
+    /// stored fingerprint differs is refused as corrupt.
+    fingerprint: String,
     turns: usize,
     last_used: Instant,
-    /// A turn is in flight; concurrent appends are rejected and the
-    /// eviction sweep must not free the sequence under the scheduler.
+    /// A turn is in flight (or the sweep is mid-spill); concurrent appends
+    /// are rejected and the eviction sweep must not touch the sequence.
     busy: bool,
     /// Resident cache bytes after the last completed turn (demand-paged:
-    /// grows page-by-page with the retained history).
+    /// grows page-by-page with the retained history; zero while
+    /// hibernated).
     cache_bytes: usize,
+    /// Position after the last completed turn (still reportable while
+    /// hibernated, when the pool no longer knows the sequence).
+    pos: usize,
 }
 
 pub struct SessionManager {
     coord: Arc<Coordinator>,
     cfg: SessionConfig,
+    /// Present iff hibernation is configured AND its spill directory was
+    /// creatable; otherwise sweeps hard-evict.
+    hib: Option<Arc<HibernateStore>>,
     next_id: AtomicU64,
     inner: Mutex<BTreeMap<u64, SessionState>>,
 }
 
 impl SessionManager {
     pub fn new(coord: Arc<Coordinator>, cfg: SessionConfig) -> Self {
+        let hib = cfg.hibernate.clone().and_then(|hc| {
+            match HibernateStore::new(hc) {
+                Ok(store) => Some(Arc::new(store)),
+                Err(e) => {
+                    // an unusable spill dir downgrades to legacy eviction
+                    // rather than failing server startup
+                    eprintln!("hibernation disabled: {e}");
+                    None
+                }
+            }
+        });
         Self {
             coord,
             cfg,
+            hib,
             next_id: AtomicU64::new(1),
             inner: Mutex::new(BTreeMap::new()),
         }
     }
 
-    /// Live session count.
+    /// Open session count (live + hibernated).
     pub fn len(&self) -> usize {
         self.inner.lock().unwrap().len()
     }
@@ -101,6 +152,24 @@ impl SessionManager {
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Hibernate-store counters for the `stats` op, `None` when
+    /// hibernation is off (the wire section is omitted).
+    pub fn hibernate_report(&self) -> Option<HibernateReport> {
+        self.hib.as_ref().map(|store| {
+            let s = store.stats();
+            HibernateReport {
+                spills: s.spills,
+                restores: s.restores,
+                spill_failures: s.spill_failures,
+                reclaims: s.reclaims,
+                corrupt: s.corrupt,
+                entries: s.entries,
+                spill_bytes: s.spill_bytes,
+                restore_p95_s: s.restore_p95_s,
+            }
+        })
     }
 
     /// Open a session under `policy` (default float), allocating + pinning
@@ -143,12 +212,14 @@ impl SessionManager {
             m.insert(
                 session,
                 SessionState {
-                    seq_id,
+                    slot: Slot::Live(seq_id),
+                    fingerprint: policy_fingerprint(&policy),
                     policy: policy.clone(),
                     turns: 0,
                     last_used: Instant::now(),
                     busy: false,
                     cache_bytes: 0,
+                    pos: 0,
                 },
             );
             session
@@ -169,7 +240,10 @@ impl SessionManager {
     }
 
     /// [`SessionManager::append`] with transport options: a streaming
-    /// token sink and/or a shared abort flag (the v3 surface). A
+    /// token sink and/or a shared abort flag (the v3 surface). A turn on a
+    /// hibernated session first restores its spilled image (typed
+    /// `hibernate_corrupt` / `spill_budget_exceeded` failures evict; a
+    /// transient pool-capacity refusal leaves it hibernated for retry). A
     /// cancelled or deadline-expired turn fails with the matching typed
     /// error AND evicts the session (its retained KV state is
     /// indeterminate mid-turn), releasing the pinned pages.
@@ -185,7 +259,7 @@ impl SessionManager {
         if spec.stop.as_deref() == Some("") {
             return Err(ApiError::empty_stop());
         }
-        let (seq_id, policy) = {
+        let (slot_seq, policy, fingerprint) = {
             let mut m = self.inner.lock().unwrap();
             let st = m
                 .get_mut(&session)
@@ -195,7 +269,16 @@ impl SessionManager {
             }
             st.busy = true;
             st.last_used = Instant::now();
-            (st.seq_id, st.policy.clone())
+            let slot_seq = match st.slot {
+                Slot::Live(id) => Some(id),
+                Slot::Hibernated => None,
+            };
+            (slot_seq, st.policy.clone(), st.fingerprint.clone())
+        };
+        let seq_id = match slot_seq {
+            Some(id) => id,
+            // busy flag is held: the restore races with nothing
+            None => self.restore_hibernated(session, &fingerprint)?,
         };
 
         // policy was grid-validated at session_open; no re-check needed
@@ -212,12 +295,12 @@ impl SessionManager {
             // (the prompt may be partially resident), so the session
             // cannot safely continue — evict it rather than let retries
             // condition later turns on duplicated history
-            let seq = {
+            let removed = {
                 let mut m = self.inner.lock().unwrap();
-                m.remove(&session).map(|st| st.seq_id)
+                m.remove(&session).is_some()
             };
-            if let Some(seq) = seq {
-                let _ = self.coord.engine().release_session_seq(seq);
+            if removed {
+                let _ = self.coord.engine().release_session_seq(seq_id);
                 self.coord.note_session_evicted();
             }
             // aborts keep their typed codes; everything else is `engine`
@@ -244,6 +327,7 @@ impl SessionManager {
                     st.turns += 1;
                     st.last_used = Instant::now();
                     st.cache_bytes = cache_bytes;
+                    st.pos = pos;
                     st.turns
                 }
                 // unreachable: busy sessions are never evicted/closed
@@ -259,7 +343,124 @@ impl SessionManager {
         })
     }
 
-    /// Resident cache bytes pinned by a session (after its last turn).
+    /// Rebuild a hibernated session's sequence from its spilled image and
+    /// re-admit it to the pool. Caller holds the session's busy flag.
+    fn restore_hibernated(
+        &self,
+        session: u64,
+        fingerprint: &str,
+    ) -> Result<u64, ApiError> {
+        let engine = self.coord.engine();
+        let store = match &self.hib {
+            Some(s) => Arc::clone(s),
+            // a session can only be Hibernated via the store; losing it
+            // mid-flight should not happen
+            None => {
+                self.evict_hibernated(session);
+                return Err(ApiError::new(
+                    ErrorCode::Internal,
+                    format!("session {session} hibernated with no store"),
+                ));
+            }
+        };
+        let img = match store.restore(session) {
+            Ok(img) => img,
+            Err(HibernateError::Reclaimed(_)) => {
+                self.evict_hibernated(session);
+                store.discard(session);
+                return Err(ApiError::new(
+                    ErrorCode::SpillBudgetExceeded,
+                    format!(
+                        "session {session}'s spilled cache was reclaimed \
+                         under the spill budget (session closed); \
+                         reopen and re-prefill"
+                    ),
+                ));
+            }
+            Err(e) => {
+                // Corrupt, Missing, Io: the image is unusable — the
+                // session cannot continue
+                self.evict_hibernated(session);
+                store.discard(session);
+                return Err(ApiError::new(
+                    ErrorCode::HibernateCorrupt,
+                    format!(
+                        "session {session} failed to restore \
+                         (session closed): {e}"
+                    ),
+                ));
+            }
+        };
+        // an image from a different pool geometry or policy would
+        // mis-decode the packed regions: refuse it as corrupt
+        if img.geo != engine.pool.geometry() || img.fingerprint != fingerprint
+        {
+            self.evict_hibernated(session);
+            store.discard(session);
+            return Err(ApiError::new(
+                ErrorCode::HibernateCorrupt,
+                format!(
+                    "session {session}'s spilled cache does not match the \
+                     live server (geometry/policy changed); session closed"
+                ),
+            ));
+        }
+        let mut cache = img.into_seq();
+        // pool re-admission is budget-gated; give frees a brief window
+        // before giving up so a restore racing a release usually lands
+        let mut attempts = 0;
+        let seq_id = loop {
+            let epoch = engine.pool.free_epoch();
+            match engine.adopt_session_seq(cache) {
+                Ok(id) => break id,
+                Err((c, e)) => {
+                    if attempts >= 2 {
+                        // transient: leave the session hibernated so the
+                        // client can retry once the pool drains
+                        let mut m = self.inner.lock().unwrap();
+                        if let Some(st) = m.get_mut(&session) {
+                            st.busy = false;
+                        }
+                        return Err(ApiError::new(
+                            ErrorCode::Capacity,
+                            format!(
+                                "restore of session {session} refused by \
+                                 the pool (retryable): {e}"
+                            ),
+                        ));
+                    }
+                    cache = c;
+                    attempts += 1;
+                    engine
+                        .pool
+                        .wait_for_free(epoch, Duration::from_millis(100));
+                }
+            }
+        };
+        store.discard(session);
+        {
+            let mut m = self.inner.lock().unwrap();
+            if let Some(st) = m.get_mut(&session) {
+                st.slot = Slot::Live(seq_id);
+            }
+        }
+        Ok(seq_id)
+    }
+
+    /// Remove a hibernated session from the table (no pool sequence to
+    /// release).
+    fn evict_hibernated(&self, session: u64) {
+        let removed = {
+            let mut m = self.inner.lock().unwrap();
+            m.remove(&session).is_some()
+        };
+        if removed {
+            self.coord.note_session_evicted();
+        }
+    }
+
+    /// Resident cache bytes pinned by a session (after its last turn;
+    /// zero while hibernated).
     pub fn session_bytes(&self, session: u64) -> Result<usize, ApiError> {
         let m = self.inner.lock().unwrap();
         m.get(&session)
@@ -267,8 +468,8 @@ impl SessionManager {
             .ok_or_else(|| ApiError::unknown_session(session))
     }
 
-    /// Close a session, unpinning and freeing its sequence.
-    /// Returns (turns served, final cache position).
+    /// Close a session, unpinning and freeing its sequence (or discarding
+    /// its spilled image). Returns (turns served, final cache position).
     pub fn close(&self, session: u64) -> Result<(usize, usize), ApiError> {
         let st = {
             let mut m = self.inner.lock().unwrap();
@@ -278,37 +479,121 @@ impl SessionManager {
                 Some(_) => m.remove(&session).unwrap(),
             }
         };
-        let pos = self.coord.engine().seq_pos(st.seq_id).unwrap_or(0);
-        let _ = self.coord.engine().release_session_seq(st.seq_id);
+        let pos = match st.slot {
+            Slot::Live(seq_id) => {
+                let pos = self.coord.engine().seq_pos(seq_id).unwrap_or(0);
+                let _ = self.coord.engine().release_session_seq(seq_id);
+                pos
+            }
+            Slot::Hibernated => {
+                if let Some(store) = &self.hib {
+                    store.discard(session);
+                }
+                st.pos
+            }
+        };
         self.coord.note_session_closed();
         Ok((st.turns, pos))
     }
 
-    /// Evict sessions idle past the configured timeout. The server's
+    /// Sweep sessions idle past the configured timeout. With hibernation
+    /// configured, live victims are frozen and spilled to disk (the
+    /// session stays open at zero resident bytes; a spill failure falls
+    /// back to hard eviction); without it they are evicted. The server's
     /// housekeeping tick invokes this on a fixed cadence, so abandoned
-    /// sessions are reclaimed (and their pinned pages freed) even when no
-    /// traffic arrives — the old request-path sweep never ran on a quiet
-    /// server. In-process users driving the manager directly should call
-    /// it themselves on their own cadence.
+    /// sessions release their pinned pages even when no traffic arrives.
+    /// In-process users driving the manager directly should call it
+    /// themselves on their own cadence. NOTE: a session opened attached to
+    /// a shared prefix spills FLATTENED — the restore is a root sequence
+    /// with the prefix tokens materialized, no longer sharing pages.
     pub fn sweep_idle(&self) {
         let ttl = self.cfg.idle_timeout;
         if ttl.is_zero() {
             return;
         }
-        let victims: Vec<u64> = {
+        let victims: Vec<(u64, u64)> = {
             let mut m = self.inner.lock().unwrap();
-            let dead: Vec<u64> = m
+            let dead: Vec<(u64, u64)> = m
                 .iter()
-                .filter(|(_, s)| !s.busy && s.last_used.elapsed() >= ttl)
-                .map(|(&id, _)| id)
+                .filter_map(|(&id, s)| match s.slot {
+                    // hibernated sessions hold no pool pages; they wait on
+                    // disk (or LRU reclaim) indefinitely
+                    Slot::Live(seq_id)
+                        if !s.busy && s.last_used.elapsed() >= ttl =>
+                    {
+                        Some((id, seq_id))
+                    }
+                    _ => None,
+                })
                 .collect();
-            dead.into_iter()
-                .map(|id| m.remove(&id).unwrap().seq_id)
-                .collect()
+            if self.hib.is_some() {
+                // hold the busy flag across the spill so a late append
+                // gets a retryable `session_busy` instead of racing the
+                // freeze
+                for (id, _) in &dead {
+                    m.get_mut(id).unwrap().busy = true;
+                }
+            } else {
+                for (id, _) in &dead {
+                    m.remove(id);
+                }
+            }
+            dead
         };
-        for seq_id in victims {
-            let _ = self.coord.engine().release_session_seq(seq_id);
-            self.coord.note_session_evicted();
+        let store = match &self.hib {
+            None => {
+                for (_, seq_id) in victims {
+                    let _ = self.coord.engine().release_session_seq(seq_id);
+                    self.coord.note_session_evicted();
+                }
+                return;
+            }
+            Some(s) => Arc::clone(s),
+        };
+        let engine = self.coord.engine();
+        for (session, seq_id) in victims {
+            let spilled = engine
+                .freeze_session_seq(seq_id)
+                .map_err(|e| {
+                    // freeze failures happen outside the store; count them
+                    // so `spill_failures` covers every fallback eviction
+                    store.note_spill_failure();
+                    HibernateError::Io(format!("{e:#}"))
+                })
+                .and_then(|frozen| {
+                    let fp = {
+                        let m = self.inner.lock().unwrap();
+                        match m.get(&session) {
+                            Some(st) => st.fingerprint.clone(),
+                            None => {
+                                return Err(HibernateError::Missing(session))
+                            }
+                        }
+                    };
+                    store.spill(session, &frozen, &fp)
+                });
+            match spilled {
+                Ok(_) => {
+                    let _ = engine.release_session_seq(seq_id);
+                    let mut m = self.inner.lock().unwrap();
+                    if let Some(st) = m.get_mut(&session) {
+                        st.slot = Slot::Hibernated;
+                        st.busy = false;
+                        st.cache_bytes = 0;
+                    }
+                }
+                Err(_) => {
+                    // fall back to the legacy hard eviction
+                    let removed = {
+                        let mut m = self.inner.lock().unwrap();
+                        m.remove(&session).is_some()
+                    };
+                    let _ = engine.release_session_seq(seq_id);
+                    if removed {
+                        self.coord.note_session_evicted();
+                    }
+                }
+            }
         }
     }
 }

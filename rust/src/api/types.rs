@@ -262,6 +262,32 @@ pub struct PrefixReport {
     pub named: usize,
 }
 
+/// The namespaced `hibernate` section of the v3 `stats` reply: idle-sweep
+/// spill/restore counters from the session manager's [`HibernateStore`].
+/// Omitted from v1/v2 replies and None when hibernation is not configured
+/// (no spill directory).
+///
+/// [`HibernateStore`]: crate::kvcache::HibernateStore
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HibernateReport {
+    /// Idle sessions spilled to disk instead of evicted.
+    pub spills: u64,
+    /// Hibernated sessions rebuilt on a later turn.
+    pub restores: u64,
+    /// Spills that failed (the session fell back to hard eviction).
+    pub spill_failures: u64,
+    /// Images LRU-reclaimed under the spill-bytes budget.
+    pub reclaims: u64,
+    /// Restores refused by image validation (`hibernate_corrupt`).
+    pub corrupt: u64,
+    /// Images currently on disk.
+    pub entries: usize,
+    /// Bytes currently on disk.
+    pub spill_bytes: usize,
+    /// p95 restore wall time (read + decode + rebuild), seconds.
+    pub restore_p95_s: f64,
+}
+
 /// One supported policy, expanded server-side (the `policies` op).
 #[derive(Debug, Clone, PartialEq)]
 pub struct PolicyInfo {
@@ -307,9 +333,10 @@ pub struct CalibrationReport {
 #[derive(Debug, Clone, PartialEq)]
 pub enum ApiResponse {
     Pong,
-    /// Serving metrics, plus the `prefix` section (encoded on v3 replies
-    /// only, keeping v1/v2 `stats` byte-compatible).
-    Stats(MetricsSnapshot, Option<PrefixReport>),
+    /// Serving metrics, plus the `prefix` and `hibernate` sections
+    /// (encoded on v3 replies only, keeping v1/v2 `stats`
+    /// byte-compatible).
+    Stats(MetricsSnapshot, Option<PrefixReport>, Option<HibernateReport>),
     Pool(PoolReport),
     Policies(PolicyReport),
     Generation(GenerationResult),

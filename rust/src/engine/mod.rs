@@ -273,6 +273,30 @@ impl Engine {
         Ok(self.pool.free(id)?)
     }
 
+    /// Freeze a session sequence's full state into a self-contained
+    /// snapshot (the hibernation spill form). The sequence itself is
+    /// untouched; the caller releases it after the snapshot is safely on
+    /// disk.
+    pub fn freeze_session_seq(
+        &self,
+        id: u64,
+    ) -> Result<crate::kvcache::SeqBase> {
+        Ok(self.pool.with_seq(id, |s| crate::kvcache::SeqBase::freeze(s))?)
+    }
+
+    /// Re-admit a hibernation-restored sequence as a *pinned* session
+    /// sequence. Budget-gated exactly like a fresh allocation; on refusal
+    /// the rebuilt cache is handed back so the caller can wait for pool
+    /// capacity and retry without re-reading the image.
+    pub fn adopt_session_seq(
+        &self,
+        cache: SeqCache,
+    ) -> std::result::Result<u64, (SeqCache, crate::kvcache::PoolError)> {
+        let id = self.pool.adopt(cache)?;
+        self.pool.pin(id).expect("freshly adopted sequence exists");
+        Ok(id)
+    }
+
     /// Absolute position (tokens held) of a live sequence.
     pub fn seq_pos(&self, id: u64) -> Result<usize> {
         Ok(self.pool.with_seq(id, |s| s.pos)?)

@@ -1,0 +1,785 @@
+//! Session hibernation: spill an idle session's frozen KV snapshot to disk
+//! and restore it on the next turn.
+//!
+//! At 1-bit (AsymKV's headline configuration) a resident session's cache is
+//! small enough that serializing it is far cheaper than re-prefilling the
+//! conversation next turn — so the idle sweep can trade pool pages for disk
+//! bytes instead of destroying state. The on-disk image is the
+//! [`SeqBase`] freeze form (exact-stride packed regions, per-group
+//! scales/zeros, compacted residual rows, position) plus the session's
+//! policy fingerprint, length-prefixed little-endian with a trailing
+//! FNV-1a checksum. Restore rebuilds a ROOT [`SeqCache`] via
+//! [`SeqCache::from_frozen`] with fresh version stamps; the restored fold
+//! schedule depends only on the logical `(n_q, n_res)` counts, so decode
+//! after restore is bit-identical to a never-hibernated session (proved by
+//! `tests/hibernate_equivalence.rs`).
+//!
+//! [`HibernateStore`] owns a spill directory under a byte budget: spills
+//! that would exceed it reclaim the least-recently-touched entries first
+//! (their sessions then fail restore with a typed
+//! [`HibernateError::Reclaimed`] → `spill_budget_exceeded` on the wire);
+//! a single oversized image is refused outright. Files are written
+//! temp-then-rename so a crash mid-spill never leaves a torn image — and a
+//! torn or tampered image fails the checksum into a typed
+//! [`HibernateError::Corrupt`] (`hibernate_corrupt`), never a panic.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fs;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::layer::{fresh_base_id, CacheGeometry, LayerBase};
+use super::pool::{SeqBase, SeqCache};
+use crate::quant::kernels::packed_len;
+use crate::util::stats::percentile;
+
+const MAGIC: &[u8; 4] = b"AKVH";
+const VERSION: u32 = 1;
+
+// ---------------------------------------------------------------------
+// errors
+// ---------------------------------------------------------------------
+
+/// Why a spill or restore failed (typed through to the API error codes).
+#[derive(Debug, Clone, PartialEq)]
+pub enum HibernateError {
+    /// The image failed validation (bad magic/version/checksum, geometry
+    /// mismatch, or inconsistent buffer lengths). Wire: `hibernate_corrupt`.
+    Corrupt(String),
+    /// The image alone exceeds the spill budget. Wire:
+    /// `spill_budget_exceeded`.
+    BudgetExceeded { requested: usize, in_use: usize, budget: usize },
+    /// The session's image was LRU-reclaimed to make room for newer
+    /// spills. Wire: `spill_budget_exceeded`.
+    Reclaimed(u64),
+    /// No image for this session (never spilled here, or discarded).
+    Missing(u64),
+    /// Filesystem failure reading or writing the spill directory.
+    Io(String),
+}
+
+impl std::fmt::Display for HibernateError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HibernateError::Corrupt(why) => {
+                write!(f, "hibernated image is corrupt: {why}")
+            }
+            HibernateError::BudgetExceeded { requested, in_use, budget } => {
+                write!(
+                    f,
+                    "spill budget exceeded: image {requested}B, \
+                     spilled {in_use}B, budget {budget}B"
+                )
+            }
+            HibernateError::Reclaimed(s) => write!(
+                f,
+                "session {s}'s spill was reclaimed under budget pressure"
+            ),
+            HibernateError::Missing(s) => {
+                write!(f, "no hibernated image for session {s}")
+            }
+            HibernateError::Io(e) => write!(f, "spill directory I/O: {e}"),
+        }
+    }
+}
+impl std::error::Error for HibernateError {}
+
+fn io_err(e: std::io::Error) -> HibernateError {
+    HibernateError::Io(e.to_string())
+}
+
+// ---------------------------------------------------------------------
+// binary codec
+// ---------------------------------------------------------------------
+
+/// A decoded hibernation image: everything needed to rebuild the session's
+/// sequence and validate it against the live server.
+#[derive(Debug)]
+pub struct HibernateImage {
+    pub geo: CacheGeometry,
+    /// Absolute position (tokens seen) at spill time.
+    pub pos: usize,
+    /// The session's policy fingerprint at spill time; restore must refuse
+    /// an image whose fingerprint no longer matches the session policy.
+    pub fingerprint: String,
+    pub layers: Vec<Arc<LayerBase>>,
+}
+
+impl HibernateImage {
+    /// Rebuild a ROOT sequence, page-rounded, fresh version stamps.
+    pub fn into_seq(self) -> SeqCache {
+        SeqCache::from_frozen(&self.layers, self.pos)
+    }
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_bytes(out: &mut Vec<u8>, xs: &[u8]) {
+    put_u64(out, xs.len() as u64);
+    out.extend_from_slice(xs);
+}
+
+fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    put_u64(out, xs.len() as u64);
+    out.reserve(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Serialize a frozen sequence. Layers must share one geometry (they do by
+/// construction: every layer of a model uses the model's geometry).
+pub fn encode(seq: &SeqBase, fingerprint: &str) -> Vec<u8> {
+    assert!(!seq.layers.is_empty(), "encode: empty snapshot");
+    let geo = seq.layers[0].geo;
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    put_u32(&mut out, VERSION);
+    for dim in [geo.n_heads, geo.max_ctx, geo.d_head, geo.group, geo.residual]
+    {
+        put_u32(&mut out, dim as u32);
+    }
+    put_u64(&mut out, seq.pos as u64);
+    put_bytes(&mut out, fingerprint.as_bytes());
+    put_u32(&mut out, seq.layers.len() as u32);
+    for layer in &seq.layers {
+        out.push(layer.k_bits);
+        out.push(layer.v_bits);
+        put_u64(&mut out, layer.n_base as u64);
+        put_u64(&mut out, layer.res_rows as u64);
+        put_bytes(&mut out, &layer.k_pk);
+        put_f32s(&mut out, &layer.k_f32);
+        put_f32s(&mut out, &layer.k_scales);
+        put_f32s(&mut out, &layer.k_zeros);
+        put_bytes(&mut out, &layer.v_pk);
+        put_f32s(&mut out, &layer.v_f32);
+        put_f32s(&mut out, &layer.v_scales);
+        put_f32s(&mut out, &layer.v_zeros);
+        put_f32s(&mut out, &layer.res_k);
+        put_f32s(&mut out, &layer.res_v);
+    }
+    let sum = fnv1a(&out);
+    put_u64(&mut out, sum);
+    out
+}
+
+struct Cur<'a> {
+    b: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], HibernateError> {
+        if self.off + n > self.b.len() {
+            return Err(HibernateError::Corrupt(format!(
+                "truncated: need {} bytes at offset {}, have {}",
+                n,
+                self.off,
+                self.b.len()
+            )));
+        }
+        let s = &self.b[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, HibernateError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, HibernateError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, HibernateError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Length-prefixed byte buffer, validated against an expected length.
+    fn bytes(&mut self, what: &str, expect: usize) -> Result<Vec<u8>, HibernateError> {
+        let n = self.u64()? as usize;
+        if n != expect {
+            return Err(HibernateError::Corrupt(format!(
+                "{what}: length {n} != expected {expect}"
+            )));
+        }
+        Ok(self.take(n)?.to_vec())
+    }
+
+    /// Length-prefixed f32 buffer, validated against an expected length.
+    fn f32s(&mut self, what: &str, expect: usize) -> Result<Vec<f32>, HibernateError> {
+        let n = self.u64()? as usize;
+        if n != expect {
+            return Err(HibernateError::Corrupt(format!(
+                "{what}: length {n} != expected {expect}"
+            )));
+        }
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+/// Parse and validate an image. Every structural invariant is checked —
+/// magic, format version, checksum, group alignment, geometry bounds, and
+/// each buffer's length against the freeze-form stride formulas — so a torn
+/// or tampered file becomes a typed [`HibernateError::Corrupt`], never a
+/// panic downstream.
+pub fn decode(bytes: &[u8]) -> Result<HibernateImage, HibernateError> {
+    if bytes.len() < MAGIC.len() + 8 {
+        return Err(HibernateError::Corrupt("image too short".into()));
+    }
+    let (body, sum_bytes) = bytes.split_at(bytes.len() - 8);
+    let sum = u64::from_le_bytes(sum_bytes.try_into().unwrap());
+    if fnv1a(body) != sum {
+        return Err(HibernateError::Corrupt("checksum mismatch".into()));
+    }
+    let mut cur = Cur { b: body, off: 0 };
+    if cur.take(4)? != MAGIC {
+        return Err(HibernateError::Corrupt("bad magic".into()));
+    }
+    let ver = cur.u32()?;
+    if ver != VERSION {
+        return Err(HibernateError::Corrupt(format!(
+            "unsupported image version {ver}"
+        )));
+    }
+    let geo = CacheGeometry {
+        n_heads: cur.u32()? as usize,
+        max_ctx: cur.u32()? as usize,
+        d_head: cur.u32()? as usize,
+        group: cur.u32()? as usize,
+        residual: cur.u32()? as usize,
+    };
+    if geo.n_heads == 0 || geo.d_head == 0 || geo.group == 0 {
+        return Err(HibernateError::Corrupt(format!("bad geometry {geo:?}")));
+    }
+    let pos = cur.u64()? as usize;
+    let fp_len = cur.u64()? as usize;
+    if fp_len > 4096 {
+        return Err(HibernateError::Corrupt(format!(
+            "fingerprint length {fp_len} implausible"
+        )));
+    }
+    let fingerprint = String::from_utf8(cur.take(fp_len)?.to_vec())
+        .map_err(|_| HibernateError::Corrupt("fingerprint not UTF-8".into()))?;
+    let n_layers = cur.u32()? as usize;
+    if n_layers == 0 || n_layers > 4096 {
+        return Err(HibernateError::Corrupt(format!(
+            "layer count {n_layers} implausible"
+        )));
+    }
+    let (h, dh, g) = (geo.n_heads, geo.d_head, geo.group);
+    let g2 = geo.g2();
+    let hd = h * dh;
+    let mut layers = Vec::with_capacity(n_layers);
+    for li in 0..n_layers {
+        let k_bits = cur.u8()?;
+        let v_bits = cur.u8()?;
+        let n_base = cur.u64()? as usize;
+        let res_rows = cur.u64()? as usize;
+        if n_base % g != 0 || n_base > geo.max_ctx || res_rows > geo.residual
+        {
+            return Err(HibernateError::Corrupt(format!(
+                "layer {li}: n_base {n_base} / res_rows {res_rows} \
+                 outside geometry"
+            )));
+        }
+        let ng = n_base / g;
+        let t = |w: &str| format!("layer {li} {w}");
+        let (k_pk, k_f32, k_scales, k_zeros) = if k_bits > 0 {
+            (
+                cur.bytes(&t("k_pk"), h * packed_len(n_base, k_bits) * dh)?,
+                cur.f32s(&t("k_f32"), 0)?,
+                cur.f32s(&t("k_scales"), h * ng * dh)?,
+                cur.f32s(&t("k_zeros"), h * ng * dh)?,
+            )
+        } else {
+            (
+                cur.bytes(&t("k_pk"), 0)?,
+                cur.f32s(&t("k_f32"), h * n_base * dh)?,
+                cur.f32s(&t("k_scales"), h)?,
+                cur.f32s(&t("k_zeros"), h)?,
+            )
+        };
+        let (v_pk, v_f32, v_scales, v_zeros) = if v_bits > 0 {
+            let bpt = packed_len(dh, v_bits);
+            let dg = dh / g2;
+            (
+                cur.bytes(&t("v_pk"), h * n_base * bpt)?,
+                cur.f32s(&t("v_f32"), 0)?,
+                cur.f32s(&t("v_scales"), h * n_base * dg)?,
+                cur.f32s(&t("v_zeros"), h * n_base * dg)?,
+            )
+        } else {
+            (
+                cur.bytes(&t("v_pk"), 0)?,
+                cur.f32s(&t("v_f32"), h * n_base * dh)?,
+                cur.f32s(&t("v_scales"), h)?,
+                cur.f32s(&t("v_zeros"), h)?,
+            )
+        };
+        let res_k = cur.f32s(&t("res_k"), res_rows * hd)?;
+        let res_v = cur.f32s(&t("res_v"), res_rows * hd)?;
+        layers.push(Arc::new(LayerBase {
+            id: fresh_base_id(),
+            geo,
+            k_bits,
+            v_bits,
+            n_base,
+            k_pk,
+            k_f32,
+            k_scales,
+            k_zeros,
+            v_pk,
+            v_f32,
+            v_scales,
+            v_zeros,
+            res_rows,
+            res_k,
+            res_v,
+        }));
+    }
+    if cur.off != body.len() {
+        return Err(HibernateError::Corrupt(format!(
+            "{} trailing bytes after last layer",
+            body.len() - cur.off
+        )));
+    }
+    Ok(HibernateImage { geo, pos, fingerprint, layers })
+}
+
+// ---------------------------------------------------------------------
+// spill store
+// ---------------------------------------------------------------------
+
+/// Where and how much to spill.
+#[derive(Debug, Clone)]
+pub struct HibernateConfig {
+    /// Spill directory (created on store construction).
+    pub dir: PathBuf,
+    /// Total on-disk byte budget; spills past it LRU-reclaim older images.
+    pub budget_bytes: usize,
+}
+
+impl HibernateConfig {
+    /// Environment-driven opt-in: `ASYMKV_SPILL_DIR` names the directory
+    /// (unset = hibernation off, sessions evict as before) and
+    /// `ASYMKV_SPILL_BUDGET` bounds it in bytes (default 256 MiB).
+    pub fn from_env() -> Option<Self> {
+        let dir = std::env::var_os("ASYMKV_SPILL_DIR")?;
+        if dir.is_empty() {
+            return None;
+        }
+        let budget_bytes = std::env::var("ASYMKV_SPILL_BUDGET")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(256 << 20);
+        Some(Self { dir: PathBuf::from(dir), budget_bytes })
+    }
+}
+
+/// Counters + restore latency for the `stats.hibernate` section.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct HibernateStats {
+    /// Sessions spilled to disk by the idle sweep.
+    pub spills: u64,
+    /// Hibernated sessions successfully rebuilt on a later turn.
+    pub restores: u64,
+    /// Spills refused (write failure or an oversized image) — those
+    /// sessions fell back to hard eviction.
+    pub spill_failures: u64,
+    /// Images deleted by LRU reclaim under the spill budget.
+    pub reclaims: u64,
+    /// Restores that failed image validation.
+    pub corrupt: u64,
+    /// Images currently on disk.
+    pub entries: usize,
+    /// Bytes currently on disk.
+    pub spill_bytes: usize,
+    /// p95 of restore wall time (read + decode), seconds.
+    pub restore_p95_s: f64,
+}
+
+struct Entry {
+    bytes: usize,
+    /// LRU stamp: monotone per-store clock, bumped on spill and restore.
+    stamp: u64,
+}
+
+struct StoreInner {
+    entries: BTreeMap<u64, Entry>,
+    /// Sessions whose image was reclaimed (typed error instead of a bare
+    /// "missing" when they come back).
+    reclaimed: BTreeSet<u64>,
+    lru_clock: u64,
+    spill_bytes: usize,
+    spills: u64,
+    restores: u64,
+    spill_failures: u64,
+    reclaims: u64,
+    corrupt: u64,
+    /// Recent restore wall times (bounded reservoir).
+    restore_s: Vec<f64>,
+}
+
+/// A spill directory under a byte budget with LRU reclaim. Thread-safe;
+/// one per `SessionManager`.
+pub struct HibernateStore {
+    cfg: HibernateConfig,
+    inner: Mutex<StoreInner>,
+}
+
+impl HibernateStore {
+    pub fn new(cfg: HibernateConfig) -> Result<Self, HibernateError> {
+        fs::create_dir_all(&cfg.dir).map_err(io_err)?;
+        Ok(Self {
+            cfg,
+            inner: Mutex::new(StoreInner {
+                entries: BTreeMap::new(),
+                reclaimed: BTreeSet::new(),
+                lru_clock: 0,
+                spill_bytes: 0,
+                spills: 0,
+                restores: 0,
+                spill_failures: 0,
+                reclaims: 0,
+                corrupt: 0,
+                restore_s: Vec::new(),
+            }),
+        })
+    }
+
+    fn path(&self, session: u64) -> PathBuf {
+        self.cfg.dir.join(format!("session-{session}.akvh"))
+    }
+
+    /// Record a spill failure that happened outside the store (freeze or
+    /// encode path) so `spill_failures` counts every fallback eviction.
+    pub fn note_spill_failure(&self) {
+        self.inner.lock().unwrap().spill_failures += 1;
+    }
+
+    /// Serialize and persist `seq` as `session`'s image, reclaiming
+    /// least-recently-touched entries until it fits the budget. Returns the
+    /// image size. Atomic on disk (temp + rename).
+    pub fn spill(
+        &self,
+        session: u64,
+        seq: &SeqBase,
+        fingerprint: &str,
+    ) -> Result<usize, HibernateError> {
+        let payload = encode(seq, fingerprint);
+        let mut inner = self.inner.lock().unwrap();
+        // replacing an existing image: release its charge first
+        if let Some(old) = inner.entries.remove(&session) {
+            inner.spill_bytes -= old.bytes;
+        }
+        if payload.len() > self.cfg.budget_bytes {
+            inner.spill_failures += 1;
+            return Err(HibernateError::BudgetExceeded {
+                requested: payload.len(),
+                in_use: inner.spill_bytes,
+                budget: self.cfg.budget_bytes,
+            });
+        }
+        while inner.spill_bytes + payload.len() > self.cfg.budget_bytes {
+            // payload fits the whole budget, so entries is non-empty here
+            let victim = *inner
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(id, _)| id)
+                .expect("over budget with no entries");
+            let e = inner.entries.remove(&victim).unwrap();
+            inner.spill_bytes -= e.bytes;
+            inner.reclaims += 1;
+            inner.reclaimed.insert(victim);
+            let _ = fs::remove_file(self.path(victim));
+        }
+        let path = self.path(session);
+        let tmp = self.cfg.dir.join(format!("session-{session}.tmp"));
+        let write = fs::write(&tmp, &payload)
+            .and_then(|()| fs::rename(&tmp, &path));
+        if let Err(e) = write {
+            inner.spill_failures += 1;
+            let _ = fs::remove_file(&tmp);
+            return Err(io_err(e));
+        }
+        inner.lru_clock += 1;
+        let stamp = inner.lru_clock;
+        inner
+            .entries
+            .insert(session, Entry { bytes: payload.len(), stamp });
+        inner.spill_bytes += payload.len();
+        inner.spills += 1;
+        inner.reclaimed.remove(&session);
+        Ok(payload.len())
+    }
+
+    /// Read and decode `session`'s image. Does NOT delete it — call
+    /// [`HibernateStore::discard`] once the rebuilt sequence has actually
+    /// been re-admitted to the pool, so a failed admission can retry.
+    pub fn restore(
+        &self,
+        session: u64,
+    ) -> Result<HibernateImage, HibernateError> {
+        let t0 = Instant::now();
+        let bytes = match fs::read(self.path(session)) {
+            Ok(b) => b,
+            Err(_) => {
+                let inner = self.inner.lock().unwrap();
+                if inner.reclaimed.contains(&session) {
+                    return Err(HibernateError::Reclaimed(session));
+                }
+                return Err(HibernateError::Missing(session));
+            }
+        };
+        let img = match decode(&bytes) {
+            Ok(img) => img,
+            Err(e) => {
+                self.inner.lock().unwrap().corrupt += 1;
+                return Err(e);
+            }
+        };
+        let mut inner = self.inner.lock().unwrap();
+        inner.restores += 1;
+        inner.restore_s.push(t0.elapsed().as_secs_f64());
+        if inner.restore_s.len() > 4096 {
+            inner.restore_s.drain(..2048);
+        }
+        inner.lru_clock += 1;
+        let stamp = inner.lru_clock;
+        if let Some(e) = inner.entries.get_mut(&session) {
+            e.stamp = stamp;
+        }
+        Ok(img)
+    }
+
+    /// Drop a session's image (after a successful re-admission, or when a
+    /// hibernated session closes). Idempotent.
+    pub fn discard(&self, session: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(e) = inner.entries.remove(&session) {
+            inner.spill_bytes -= e.bytes;
+        }
+        inner.reclaimed.remove(&session);
+        drop(inner);
+        let _ = fs::remove_file(self.path(session));
+    }
+
+    pub fn stats(&self) -> HibernateStats {
+        let inner = self.inner.lock().unwrap();
+        HibernateStats {
+            spills: inner.spills,
+            restores: inner.restores,
+            spill_failures: inner.spill_failures,
+            reclaims: inner.reclaims,
+            corrupt: inner.corrupt,
+            entries: inner.entries.len(),
+            spill_bytes: inner.spill_bytes,
+            restore_p95_s: percentile(&inner.restore_s, 95.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::layer::LayerCache;
+    use crate::util::rng::SplitMix;
+
+    fn geo() -> CacheGeometry {
+        CacheGeometry {
+            n_heads: 2,
+            max_ctx: 128,
+            d_head: 32,
+            group: 32,
+            residual: 64,
+        }
+    }
+
+    /// A sequence with `n` appended tokens under per-layer (k, v) bits.
+    fn seq_with(bits: &[(u8, u8)], n: usize, seed: u64) -> SeqCache {
+        let g = geo();
+        let mut rng = SplitMix::new(seed);
+        let hd = g.n_heads * g.d_head;
+        let layers = bits
+            .iter()
+            .map(|&(kb, vb)| LayerCache::new(g, kb, vb))
+            .collect();
+        let mut seq = SeqCache { layers, pos: 0, base: None, cow_noted: false };
+        for _ in 0..n {
+            for l in seq.layers.iter_mut() {
+                let k = rng.normal_f32_vec(hd);
+                let v = rng.normal_f32_vec(hd);
+                l.append_token(&k, &v);
+            }
+            seq.pos += 1;
+        }
+        seq
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "asymkv-hib-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn codec_roundtrip_preserves_frozen_state() {
+        for n in [0usize, 5, 40, 100] {
+            let seq = seq_with(&[(1, 1), (2, 1), (0, 0), (1, 0)], n, 7 + n as u64);
+            let frozen = SeqBase::freeze(&seq);
+            let img = decode(&encode(&frozen, "k1v1,k2v1,k0v0,k1v0"))
+                .expect("roundtrip decodes");
+            assert_eq!(img.pos, seq.pos);
+            assert_eq!(img.fingerprint, "k1v1,k2v1,k0v0,k1v0");
+            assert_eq!(img.layers.len(), frozen.layers.len());
+            for (a, b) in img.layers.iter().zip(frozen.layers.iter()) {
+                assert_eq!(a.n_base, b.n_base);
+                assert_eq!(a.res_rows, b.res_rows);
+                assert_eq!(a.k_pk, b.k_pk);
+                assert_eq!(a.k_f32, b.k_f32);
+                assert_eq!(a.k_scales, b.k_scales);
+                assert_eq!(a.k_zeros, b.k_zeros);
+                assert_eq!(a.v_pk, b.v_pk);
+                assert_eq!(a.v_f32, b.v_f32);
+                assert_eq!(a.v_scales, b.v_scales);
+                assert_eq!(a.v_zeros, b.v_zeros);
+                assert_eq!(a.res_k, b.res_k);
+                assert_eq!(a.res_v, b.res_v);
+            }
+        }
+    }
+
+    #[test]
+    fn restored_sequence_matches_donor_reads() {
+        let seq = seq_with(&[(1, 1), (1, 2)], 90, 42);
+        let frozen = SeqBase::freeze(&seq);
+        let img = decode(&encode(&frozen, "fp")).unwrap();
+        let restored = img.into_seq();
+        assert_eq!(restored.pos, seq.pos);
+        for (a, b) in restored.layers.iter().zip(seq.layers.iter()) {
+            assert_eq!(a.n_tokens(), b.n_tokens());
+            assert_eq!(a.dequant_k_full(), b.dequant_k_full());
+            assert_eq!(a.dequant_v_full(), b.dequant_v_full());
+        }
+        // capacity accounting stays exact on the restored object (the
+        // debug_assert inside capacity_bytes cross-checks the closed form)
+        assert!(restored.capacity_bytes() >= restored.used_bytes());
+    }
+
+    #[test]
+    fn every_corruption_is_typed_not_a_panic() {
+        let seq = seq_with(&[(1, 1)], 50, 3);
+        let frozen = SeqBase::freeze(&seq);
+        let good = encode(&frozen, "fp");
+        // flip one byte at a spread of offsets: always Corrupt, never panic
+        for off in (0..good.len()).step_by(good.len() / 23 + 1) {
+            let mut bad = good.clone();
+            bad[off] ^= 0x5A;
+            match decode(&bad) {
+                Err(HibernateError::Corrupt(_)) => {}
+                other => panic!("flip at {off}: expected Corrupt, got {other:?}"),
+            }
+        }
+        // truncations too
+        for cut in [0, 3, 11, good.len() / 2, good.len() - 1] {
+            assert!(matches!(
+                decode(&good[..cut]),
+                Err(HibernateError::Corrupt(_))
+            ));
+        }
+    }
+
+    #[test]
+    fn store_spills_restores_and_reclaims_lru() {
+        let dir = tmp_dir("lru");
+        let seq = seq_with(&[(1, 1)], 64, 9);
+        let frozen = SeqBase::freeze(&seq);
+        let image_len = encode(&frozen, "fp").len();
+        // budget fits exactly two images
+        let store = HibernateStore::new(HibernateConfig {
+            dir: dir.clone(),
+            budget_bytes: 2 * image_len,
+        })
+        .unwrap();
+        store.spill(1, &frozen, "fp").unwrap();
+        store.spill(2, &frozen, "fp").unwrap();
+        // touching 1 makes 2 the LRU victim of the next spill
+        store.restore(1).unwrap();
+        store.spill(3, &frozen, "fp").unwrap();
+        let s = store.stats();
+        assert_eq!((s.spills, s.reclaims, s.entries), (3, 1, 2));
+        assert_eq!(s.spill_bytes, 2 * image_len);
+        assert!(matches!(
+            store.restore(2),
+            Err(HibernateError::Reclaimed(2))
+        ));
+        store.restore(1).unwrap();
+        store.restore(3).unwrap();
+        // an image alone over budget is refused outright
+        let tiny = HibernateStore::new(HibernateConfig {
+            dir: dir.clone(),
+            budget_bytes: image_len - 1,
+        })
+        .unwrap();
+        assert!(matches!(
+            tiny.spill(9, &frozen, "fp"),
+            Err(HibernateError::BudgetExceeded { .. })
+        ));
+        // discard is idempotent and frees the charge
+        store.discard(1);
+        store.discard(1);
+        assert!(matches!(store.restore(1), Err(HibernateError::Missing(1))));
+        assert_eq!(store.stats().entries, 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn on_disk_corruption_surfaces_typed() {
+        let dir = tmp_dir("corrupt");
+        let store = HibernateStore::new(HibernateConfig {
+            dir: dir.clone(),
+            budget_bytes: 64 << 20,
+        })
+        .unwrap();
+        let seq = seq_with(&[(1, 1)], 40, 5);
+        let frozen = SeqBase::freeze(&seq);
+        store.spill(7, &frozen, "fp").unwrap();
+        // scribble over the stored image
+        let path = dir.join("session-7.akvh");
+        let mut bytes = fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        fs::write(&path, &bytes).unwrap();
+        assert!(matches!(
+            store.restore(7),
+            Err(HibernateError::Corrupt(_))
+        ));
+        assert_eq!(store.stats().corrupt, 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -71,8 +71,15 @@ fn next_version() -> u64 {
     NEXT.fetch_add(1, Ordering::Relaxed)
 }
 
+/// Process-unique id for externally rebuilt [`LayerBase`]s (the hibernation
+/// decode path) — same stamp source as live caches, so ids never collide
+/// with frozen-from-live bases.
+pub(crate) fn fresh_base_id() -> u64 {
+    next_version()
+}
+
 /// Geometry shared by every layer cache of a model.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct CacheGeometry {
     pub n_heads: usize,
     pub max_ctx: usize,   // T
@@ -1579,6 +1586,130 @@ impl LayerCache {
             res_rows: n_res,
             res_k,
             res_v,
+        }
+    }
+
+    /// Rebuild a ROOT cache (no `base` link) from a frozen snapshot — the
+    /// hibernation restore path, the inverse of [`LayerCache::freeze_base`].
+    /// The snapshot's exact-stride packed region (capacity == `n_base`) is
+    /// re-strided per head out to the page-rounded live capacity, and the
+    /// compacted residual rows become the front of a fresh ring. The
+    /// restored cache starts with identical `(n_q, n_res)`, and folds
+    /// depend only on those logical counts — so its future fold schedule
+    /// (and therefore its decode output, folds being lossy) is
+    /// bit-identical to the donor's. Fresh version stamps: consumers that
+    /// cached literals against the donor must not alias the restoree.
+    pub fn from_frozen(base: &LayerBase) -> Self {
+        let geo = base.geo;
+        let (h, dh, g) = (geo.n_heads, geo.d_head, geo.group);
+        let g2 = geo.g2();
+        let hd = h * dh;
+        let n_base = base.n_base;
+        assert_eq!(n_base % g, 0, "from_frozen: snapshot not group-aligned");
+        assert!(
+            n_base <= geo.max_ctx && base.res_rows <= geo.residual,
+            "from_frozen: snapshot exceeds geometry"
+        );
+        let q_cap = page_target(n_base, g, geo.max_ctx);
+        let ng = n_base / g;
+
+        // K side: exact snapshot strides → page-rounded live strides
+        let (k_pk, k_f32, k_scales, k_zeros) = if base.k_bits > 0 {
+            let bits = base.k_bits;
+            let s_tpk = rtn::packed_len(n_base, bits);
+            let d_tpk = rtn::packed_len(q_cap, bits);
+            let ngc = q_cap / g;
+            let mut pk = vec![0u8; h * d_tpk * dh];
+            let mut sc = vec![0f32; h * ngc * dh];
+            let mut zr = vec![0f32; h * ngc * dh];
+            for head in 0..h {
+                let dst = head * d_tpk * dh;
+                pk[dst..dst + s_tpk * dh].copy_from_slice(
+                    &base.k_pk[head * s_tpk * dh..(head + 1) * s_tpk * dh],
+                );
+                let (src, dst) = (head * ng * dh, head * ngc * dh);
+                sc[dst..dst + ng * dh]
+                    .copy_from_slice(&base.k_scales[src..src + ng * dh]);
+                zr[dst..dst + ng * dh]
+                    .copy_from_slice(&base.k_zeros[src..src + ng * dh]);
+            }
+            (pk, vec![], sc, zr)
+        } else {
+            let mut f = vec![0f32; h * q_cap * dh];
+            for head in 0..h {
+                let dst = head * q_cap * dh;
+                f[dst..dst + n_base * dh].copy_from_slice(
+                    &base.k_f32[head * n_base * dh..(head + 1) * n_base * dh],
+                );
+            }
+            (vec![], f, vec![0f32; h], vec![0f32; h])
+        };
+
+        // V side: token-major per head, same re-stride
+        let (v_pk, v_f32, v_scales, v_zeros) = if base.v_bits > 0 {
+            let bpt = rtn::packed_len(dh, base.v_bits);
+            let dg = dh / g2;
+            let mut pk = vec![0u8; h * q_cap * bpt];
+            let mut sc = vec![0f32; h * q_cap * dg];
+            let mut zr = vec![0f32; h * q_cap * dg];
+            for head in 0..h {
+                let dst = head * q_cap * bpt;
+                pk[dst..dst + n_base * bpt].copy_from_slice(
+                    &base.v_pk[head * n_base * bpt..(head + 1) * n_base * bpt],
+                );
+                let (src, dst) = (head * n_base * dg, head * q_cap * dg);
+                sc[dst..dst + n_base * dg]
+                    .copy_from_slice(&base.v_scales[src..src + n_base * dg]);
+                zr[dst..dst + n_base * dg]
+                    .copy_from_slice(&base.v_zeros[src..src + n_base * dg]);
+            }
+            (pk, vec![], sc, zr)
+        } else {
+            let mut f = vec![0f32; h * q_cap * dh];
+            for head in 0..h {
+                let dst = head * q_cap * dh;
+                f[dst..dst + n_base * dh].copy_from_slice(
+                    &base.v_f32[head * n_base * dh..(head + 1) * n_base * dh],
+                );
+            }
+            (vec![], f, vec![0f32; h], vec![0f32; h])
+        };
+
+        // residual: compacted snapshot rows → front of a fresh ring
+        let res_cap = page_target(base.res_rows, g, geo.residual);
+        let mut res_k = vec![0f32; res_cap * hd];
+        let mut res_v = vec![0f32; res_cap * hd];
+        res_k[..base.res_rows * hd]
+            .copy_from_slice(&base.res_k[..base.res_rows * hd]);
+        res_v[..base.res_rows * hd]
+            .copy_from_slice(&base.res_v[..base.res_rows * hd]);
+
+        Self {
+            geo,
+            k_bits: base.k_bits,
+            v_bits: base.v_bits,
+            ident_version: next_version(),
+            version: next_version(),
+            layout_version: next_version(),
+            packed_version: next_version(),
+            res_base_version: next_version(),
+            n_q: n_base,
+            q_cap,
+            k_pk,
+            k_f32,
+            k_scales,
+            k_zeros,
+            v_pk,
+            v_f32,
+            v_scales,
+            v_zeros,
+            res_k,
+            res_v,
+            res_cap,
+            res_start: 0,
+            res_len: base.res_rows,
+            base: None,
+            base_res_off: 0,
         }
     }
 }

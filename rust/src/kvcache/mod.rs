@@ -1,10 +1,15 @@
 //! KV-cache memory substrate: bit-packed per-layer caches with fp32
 //! residual windows (KIVI layout) and a budgeted pool with peak tracking.
 
+pub mod hibernate;
 pub mod layer;
 pub mod pool;
 pub mod prefix;
 
+pub use hibernate::{
+    HibernateConfig, HibernateError, HibernateImage, HibernateStats,
+    HibernateStore,
+};
 pub use layer::{CacheGeometry, LayerBase, LayerCache};
 pub use pool::{CachePool, PoolError, PoolStats, SeqBase, SeqCache};
 pub use prefix::{PrefixCache, PrefixEntry, PrefixStats};

@@ -108,6 +108,19 @@ impl SeqCache {
         Self { layers, pos: base.pos, base: Some(base.clone()), cow_noted: false }
     }
 
+    /// Rebuild a ROOT sequence (no base link) from frozen per-layer
+    /// snapshots — the hibernation restore path. Every layer's packed
+    /// region and residual ring is rematerialized at page-rounded
+    /// capacities with fresh version stamps; the restored sequence's fold
+    /// schedule (and therefore its decode output) is bit-identical to the
+    /// donor's. See [`LayerCache::from_frozen`].
+    pub fn from_frozen(layers: &[Arc<LayerBase>], pos: usize) -> Self {
+        assert!(!layers.is_empty(), "from_frozen: empty snapshot");
+        let layers =
+            layers.iter().map(|b| LayerCache::from_frozen(b)).collect();
+        Self { layers, pos, base: None, cow_noted: false }
+    }
+
     pub fn used_bytes(&self) -> usize {
         self.layers.iter().map(|l| l.used_bytes()).sum()
     }
@@ -347,6 +360,37 @@ impl CachePool {
                 in_use: inner.in_use,
                 budget: self.budget_bytes,
             });
+        }
+        let id = inner.next_id;
+        inner.next_id += 1;
+        inner.in_use += cap;
+        inner.peak = inner.peak.max(inner.in_use);
+        inner.total_allocs += 1;
+        if cap > 0 {
+            inner.page_allocs += 1;
+            inner.page_alloc_bytes += cap as u64;
+        }
+        inner.seqs.insert(id, cache);
+        Ok(id)
+    }
+
+    /// Admit an externally built ROOT sequence into the pool (the
+    /// hibernation restore path: a [`SeqCache::from_frozen`] rebuild).
+    /// Budget-gated on the sequence's already-materialized resident
+    /// footprint exactly like [`CachePool::allocate`]; on refusal the
+    /// cache is handed back so the caller can retry after a
+    /// [`CachePool::wait_for_free`].
+    pub fn adopt(&self, cache: SeqCache) -> Result<u64, (SeqCache, PoolError)> {
+        assert!(cache.base.is_none(), "adopt: only root sequences");
+        let cap = cache.capacity_bytes();
+        let mut inner = self.inner.lock().unwrap();
+        if inner.in_use + cap > self.budget_bytes {
+            let err = PoolError::BudgetExceeded {
+                requested: cap,
+                in_use: inner.in_use,
+                budget: self.budget_bytes,
+            };
+            return Err((cache, err));
         }
         let id = inner.next_id;
         inner.next_id += 1;

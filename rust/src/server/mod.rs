@@ -587,9 +587,11 @@ impl Server {
         }
         match req {
             ApiRequest::Ping => ApiResponse::Pong,
-            ApiRequest::Stats => {
-                ApiResponse::Stats(self.coord.metrics(), self.prefix_report())
-            }
+            ApiRequest::Stats => ApiResponse::Stats(
+                self.coord.metrics(),
+                self.prefix_report(),
+                self.sessions.hibernate_report(),
+            ),
             ApiRequest::Pool => ApiResponse::Pool(PoolReport {
                 pool: self.coord.engine().pool.stats(),
                 prefix: self.coord.prefix_stats(),

@@ -1,11 +1,14 @@
 //! Workload generation: byte-exact Rust mirror of the Python corpus
 //! (`python/compile/data.py`) plus evaluation-task and request-trace
-//! generators used by the benches.
+//! generators used by the benches, and the trace replay harness
+//! ([`replay`]) with its artifact-free simulated serving target ([`sim`]).
 //!
 //! The generators must match Python exactly (same SplitMix64 stream, same
 //! grammar constants) so that the benches evaluate the model on the same
 //! distribution it was trained on; `golden.json` pins this in `cargo test`.
 
+pub mod replay;
+pub mod sim;
 pub mod tasks;
 pub mod trace;
 

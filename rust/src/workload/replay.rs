@@ -1,0 +1,411 @@
+//! Trace replayer: drive a [`ReplayTarget`] with a generated
+//! [`TraceRequest`] schedule on real (scaled) wall-clock time and report
+//! serving-grade metrics — TTFT/TPOT percentiles, goodput under an SLO,
+//! stuck-request detection, and the target's own pressure counters
+//! (preemptions, downshifts, hibernation spills/restores).
+//!
+//! Scheduling: one-shot requests each replay on their own thread, woken
+//! at `arrival_s * time_scale`. A session's turns replay sequentially on
+//! one thread — turn `k+1` waits for BOTH its think-time arrival and turn
+//! `k`'s completion, like a real client that cannot type before reading
+//! the previous answer. The replayer never skips a request; a target that
+//! hangs hangs the harness (and the bench job's timeout), which is
+//! exactly the signal "stuck" must not hide.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::util::json::Value;
+use crate::util::stats::percentile;
+
+use super::trace::TraceRequest;
+
+/// What happened to one replayed request.
+#[derive(Debug, Clone, Default)]
+pub struct RequestOutcome {
+    pub ok: bool,
+    /// Stable error code when `!ok` (e.g. `replica_unavailable`).
+    pub error: Option<String>,
+    /// The request was cancelled by the client (per the trace) — counted
+    /// separately from failures.
+    pub cancelled: bool,
+    pub ttft_s: f64,
+    pub total_s: f64,
+    pub tokens: usize,
+    /// This turn restored a hibernated session before running.
+    pub restored: bool,
+}
+
+/// Pressure counters a target exposes; the replayer reports the delta
+/// across the run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TargetStats {
+    pub preemptions: u64,
+    pub downshifts: u64,
+    pub downshift_bytes_freed: u64,
+    pub spills: u64,
+    pub restores: u64,
+}
+
+impl TargetStats {
+    fn delta(after: TargetStats, before: TargetStats) -> TargetStats {
+        TargetStats {
+            preemptions: after.preemptions.saturating_sub(before.preemptions),
+            downshifts: after.downshifts.saturating_sub(before.downshifts),
+            downshift_bytes_freed: after
+                .downshift_bytes_freed
+                .saturating_sub(before.downshift_bytes_freed),
+            spills: after.spills.saturating_sub(before.spills),
+            restores: after.restores.saturating_sub(before.restores),
+        }
+    }
+}
+
+/// Anything the harness can replay a trace against: the in-process
+/// simulator, a live engine/server, or a gateway fleet. `run` blocks for
+/// the request's full lifetime and must honor the trace's session, turn,
+/// cancel, and slow-reader fields.
+pub trait ReplayTarget: Sync {
+    fn run(&self, req: &TraceRequest) -> RequestOutcome;
+    fn stats(&self) -> TargetStats;
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct ReplayConfig {
+    /// Multiplier on trace arrival times (shrink a long trace into a
+    /// smoke-sized run without regenerating it).
+    pub time_scale: f64,
+    /// A completed request within this total latency counts toward
+    /// goodput.
+    pub slo_total_s: f64,
+    /// A request whose lifetime reaches this is counted `stuck` (the CI
+    /// floor asserts zero).
+    pub stuck_after_s: f64,
+}
+
+impl Default for ReplayConfig {
+    fn default() -> Self {
+        Self { time_scale: 1.0, slo_total_s: 2.0, stuck_after_s: 30.0 }
+    }
+}
+
+/// The replayer's run summary (serialized into `BENCH_kernels.json`
+/// record configs by the trace benches).
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub n_requests: usize,
+    pub completed: usize,
+    pub failed: usize,
+    pub cancelled: usize,
+    pub stuck: usize,
+    /// Turns that restored a hibernated session.
+    pub restored: usize,
+    pub wall_s: f64,
+    pub tokens: usize,
+    pub throughput_tok_s: f64,
+    /// Completed-within-SLO requests per wall second.
+    pub goodput_rps: f64,
+    pub ttft_p50_s: f64,
+    pub ttft_p95_s: f64,
+    pub ttft_p99_s: f64,
+    pub tpot_p50_s: f64,
+    pub tpot_p95_s: f64,
+    pub tpot_p99_s: f64,
+    pub total_p50_s: f64,
+    pub total_p95_s: f64,
+    /// Error-code histogram over failed requests.
+    pub errors: BTreeMap<String, usize>,
+    /// Target counter deltas across the run.
+    pub stats: TargetStats,
+}
+
+impl RunReport {
+    pub fn to_json(&self) -> Value {
+        let mut errs: Vec<(&str, Value)> = Vec::new();
+        for (code, n) in &self.errors {
+            errs.push((code.as_str(), Value::num(*n as f64)));
+        }
+        Value::obj(vec![
+            ("n_requests", Value::num(self.n_requests as f64)),
+            ("completed", Value::num(self.completed as f64)),
+            ("failed", Value::num(self.failed as f64)),
+            ("cancelled", Value::num(self.cancelled as f64)),
+            ("stuck", Value::num(self.stuck as f64)),
+            ("restored", Value::num(self.restored as f64)),
+            ("wall_s", Value::num(self.wall_s)),
+            ("tokens", Value::num(self.tokens as f64)),
+            ("throughput_tok_s", Value::num(self.throughput_tok_s)),
+            ("goodput_rps", Value::num(self.goodput_rps)),
+            ("ttft_p50_s", Value::num(self.ttft_p50_s)),
+            ("ttft_p95_s", Value::num(self.ttft_p95_s)),
+            ("ttft_p99_s", Value::num(self.ttft_p99_s)),
+            ("tpot_p50_s", Value::num(self.tpot_p50_s)),
+            ("tpot_p95_s", Value::num(self.tpot_p95_s)),
+            ("tpot_p99_s", Value::num(self.tpot_p99_s)),
+            ("total_p50_s", Value::num(self.total_p50_s)),
+            ("total_p95_s", Value::num(self.total_p95_s)),
+            ("errors", Value::obj(errs)),
+            ("preemptions", Value::num(self.stats.preemptions as f64)),
+            ("downshifts", Value::num(self.stats.downshifts as f64)),
+            (
+                "downshift_bytes_freed",
+                Value::num(self.stats.downshift_bytes_freed as f64),
+            ),
+            ("spills", Value::num(self.stats.spills as f64)),
+            ("restores", Value::num(self.stats.restores as f64)),
+        ])
+    }
+}
+
+/// Group a trace into replay units: each session's turns in order, each
+/// one-shot request alone. Unit order follows first arrival.
+fn units(trace: &[TraceRequest]) -> Vec<Vec<&TraceRequest>> {
+    let mut out: Vec<Vec<&TraceRequest>> = Vec::new();
+    let mut by_session: BTreeMap<u64, usize> = BTreeMap::new();
+    for req in trace {
+        match req.session {
+            None => out.push(vec![req]),
+            Some(sid) => match by_session.get(&sid) {
+                Some(&i) => out[i].push(req),
+                None => {
+                    by_session.insert(sid, out.len());
+                    out.push(vec![req]);
+                }
+            },
+        }
+    }
+    out
+}
+
+/// Replay `trace` against `target` and summarize. Blocks until every
+/// request completes.
+pub fn replay(
+    target: &dyn ReplayTarget,
+    trace: &[TraceRequest],
+    cfg: &ReplayConfig,
+) -> RunReport {
+    let before = target.stats();
+    let units = units(trace);
+    let outcomes: Mutex<Vec<RequestOutcome>> =
+        Mutex::new(Vec::with_capacity(trace.len()));
+    let scale = cfg.time_scale;
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        let outcomes = &outcomes;
+        for unit in &units {
+            s.spawn(move || {
+                for req in unit {
+                    let due =
+                        Duration::from_secs_f64(req.arrival_s.max(0.0) * scale);
+                    let now = t0.elapsed();
+                    if due > now {
+                        std::thread::sleep(due - now);
+                    }
+                    let out = target.run(req);
+                    outcomes.lock().unwrap().push(out);
+                }
+            });
+        }
+    });
+    let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+    let after = target.stats();
+    let outcomes = outcomes.into_inner().unwrap();
+
+    let mut report = RunReport {
+        n_requests: outcomes.len(),
+        completed: 0,
+        failed: 0,
+        cancelled: 0,
+        stuck: 0,
+        restored: 0,
+        wall_s,
+        tokens: 0,
+        throughput_tok_s: 0.0,
+        goodput_rps: 0.0,
+        ttft_p50_s: 0.0,
+        ttft_p95_s: 0.0,
+        ttft_p99_s: 0.0,
+        tpot_p50_s: 0.0,
+        tpot_p95_s: 0.0,
+        tpot_p99_s: 0.0,
+        total_p50_s: 0.0,
+        total_p95_s: 0.0,
+        errors: BTreeMap::new(),
+        stats: TargetStats::delta(after, before),
+    };
+    let mut ttft = Vec::new();
+    let mut tpot = Vec::new();
+    let mut total = Vec::new();
+    let mut good = 0usize;
+    for o in &outcomes {
+        if o.total_s >= cfg.stuck_after_s {
+            report.stuck += 1;
+        }
+        if o.restored {
+            report.restored += 1;
+        }
+        report.tokens += o.tokens;
+        if o.cancelled {
+            report.cancelled += 1;
+            continue;
+        }
+        if !o.ok {
+            report.failed += 1;
+            let code =
+                o.error.clone().unwrap_or_else(|| "unknown".to_string());
+            *report.errors.entry(code).or_insert(0) += 1;
+            continue;
+        }
+        report.completed += 1;
+        ttft.push(o.ttft_s);
+        total.push(o.total_s);
+        if o.tokens > 1 {
+            tpot.push((o.total_s - o.ttft_s) / (o.tokens - 1) as f64);
+        }
+        if o.total_s <= cfg.slo_total_s {
+            good += 1;
+        }
+    }
+    report.throughput_tok_s = report.tokens as f64 / wall_s;
+    report.goodput_rps = good as f64 / wall_s;
+    report.ttft_p50_s = percentile(&ttft, 50.0);
+    report.ttft_p95_s = percentile(&ttft, 95.0);
+    report.ttft_p99_s = percentile(&ttft, 99.0);
+    report.tpot_p50_s = percentile(&tpot, 50.0);
+    report.tpot_p95_s = percentile(&tpot, 95.0);
+    report.tpot_p99_s = percentile(&tpot, 99.0);
+    report.total_p50_s = percentile(&total, 50.0);
+    report.total_p95_s = percentile(&total, 95.0);
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::trace::{
+        generate_trace, Arrivals, LenDist, SessionProfile, TraceConfig,
+    };
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    /// A target that "serves" by sleeping: deterministic latencies, typed
+    /// failures on demand.
+    struct FakeTarget {
+        per_token_s: f64,
+        fail_every: usize,
+        served: AtomicU64,
+        restores: AtomicU64,
+    }
+
+    impl ReplayTarget for FakeTarget {
+        fn run(&self, req: &TraceRequest) -> RequestOutcome {
+            let n = self.served.fetch_add(1, Ordering::SeqCst) as usize;
+            if self.fail_every > 0 && (n + 1) % self.fail_every == 0 {
+                return RequestOutcome {
+                    error: Some("replica_unavailable".into()),
+                    ..Default::default()
+                };
+            }
+            if req.cancel_after_s.is_some() {
+                return RequestOutcome {
+                    cancelled: true,
+                    tokens: 1,
+                    ..Default::default()
+                };
+            }
+            if req.turn > 0 {
+                self.restores.fetch_add(1, Ordering::SeqCst);
+            }
+            let ttft = self.per_token_s;
+            let total = self.per_token_s * req.n_gen as f64;
+            std::thread::sleep(Duration::from_secs_f64(total));
+            RequestOutcome {
+                ok: true,
+                ttft_s: ttft,
+                total_s: total,
+                tokens: req.n_gen,
+                restored: req.turn > 0,
+                ..Default::default()
+            }
+        }
+
+        fn stats(&self) -> TargetStats {
+            TargetStats {
+                restores: self.restores.load(Ordering::SeqCst),
+                ..Default::default()
+            }
+        }
+    }
+
+    fn fake(fail_every: usize) -> FakeTarget {
+        FakeTarget {
+            per_token_s: 0.001,
+            fail_every,
+            served: AtomicU64::new(0),
+            restores: AtomicU64::new(0),
+        }
+    }
+
+    #[test]
+    fn replays_every_request_and_buckets_outcomes() {
+        let cfg = TraceConfig {
+            n_requests: 20,
+            arrivals: Arrivals::Poisson { rate: 500.0 },
+            cancel_frac: 0.3,
+            cancel_after_s: 0.001,
+            ..TraceConfig::default()
+        };
+        let trace = generate_trace(&cfg);
+        let target = fake(0);
+        let report = replay(&target, &trace, &ReplayConfig::default());
+        assert_eq!(report.n_requests, trace.len());
+        assert_eq!(
+            report.completed + report.failed + report.cancelled,
+            report.n_requests
+        );
+        assert!(report.cancelled > 0, "cancel fraction produced cancels");
+        assert_eq!(report.stuck, 0);
+        assert!(report.ttft_p95_s >= report.ttft_p50_s);
+    }
+
+    #[test]
+    fn session_turns_run_in_order_and_count_restores() {
+        let cfg = TraceConfig {
+            n_requests: 10,
+            arrivals: Arrivals::Poisson { rate: 200.0 },
+            sessions: Some(SessionProfile {
+                fraction: 1.0,
+                turns: LenDist::Fixed(3),
+                think_s: (0.001, 0.002),
+            }),
+            ..TraceConfig::default()
+        };
+        let trace = generate_trace(&cfg);
+        assert_eq!(trace.len(), 30);
+        let target = fake(0);
+        let report = replay(&target, &trace, &ReplayConfig::default());
+        assert_eq!(report.n_requests, 30);
+        assert_eq!(report.completed, 30);
+        // turns 1 and 2 of every session report restored
+        assert_eq!(report.restored, 20);
+        assert_eq!(report.stats.restores, 20);
+    }
+
+    #[test]
+    fn typed_errors_reach_the_histogram() {
+        let trace = generate_trace(&TraceConfig {
+            n_requests: 12,
+            ..TraceConfig::default()
+        });
+        let target = fake(4); // every 4th request dies
+        let report = replay(&target, &trace, &ReplayConfig::default());
+        assert_eq!(report.failed, 3);
+        assert_eq!(report.errors.get("replica_unavailable"), Some(&3));
+        let json = report.to_json();
+        assert_eq!(
+            json.get("errors").get("replica_unavailable").as_usize(),
+            Some(3)
+        );
+        assert_eq!(json.get("stuck").as_usize(), Some(0));
+    }
+}

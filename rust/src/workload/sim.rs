@@ -1,0 +1,587 @@
+//! An artifact-free replay target: a miniature serving loop over the REAL
+//! memory subsystem — budgeted [`CachePool`] pages, real quantized
+//! append/fold kernels, real [`HibernateStore`] spills — with model
+//! compute replaced by a fixed per-token pacing delay.
+//!
+//! This is what lets the trace harness (and CI's bench-smoke job) exercise
+//! admission, pressure downshift, idle hibernation, restore, cancellation,
+//! and slow readers end-to-end on a box with no compiled model artifacts.
+//! Every cache byte it touches is the production code path; only the
+//! transformer forward pass is simulated.
+//!
+//! Pressure ladder, mirroring the coordinator's own escalation: when an
+//! allocation or growth is refused by the pool budget, the sim first
+//! DOWNSHIFTS idle sessions' packed regions in place
+//! ([`LayerCache::downshift_groups`] to 1:1), then spills idle sessions to
+//! disk early (when hibernation is on), and finally PREEMPTS the
+//! least-recently-used idle session outright. Each rung increments the
+//! matching [`TargetStats`] counter.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::kvcache::{
+    CacheGeometry, CachePool, HibernateConfig, HibernateError,
+    HibernateStore, SeqBase,
+};
+use crate::quant::QuantPolicy;
+use crate::util::rng::SplitMix;
+
+use super::replay::{ReplayTarget, RequestOutcome, TargetStats};
+use super::trace::TraceRequest;
+
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub geo: CacheGeometry,
+    pub policy: QuantPolicy,
+    /// Pool budget in bytes — size it tight to provoke the pressure
+    /// ladder, generous to measure clean latencies.
+    pub pool_budget: usize,
+    /// Simulated decode step time (per generated token).
+    pub token_time: Duration,
+    /// Sessions idle this long hibernate (or evict without a store).
+    pub idle_timeout: Duration,
+    /// Spill directory/budget; `None` = sweeps hard-evict.
+    pub hibernate: Option<HibernateConfig>,
+}
+
+enum SimSlot {
+    Live { seq_id: u64, last_used: Instant, busy: bool },
+    Hibernated,
+}
+
+/// The in-process simulated server. Construct with [`SimServer::start`]
+/// (spawns the idle sweeper) and stop with [`SimServer::shutdown`].
+pub struct SimServer {
+    pool: Arc<CachePool>,
+    cfg: SimConfig,
+    fingerprint: String,
+    hib: Option<Arc<HibernateStore>>,
+    sessions: Mutex<BTreeMap<u64, SimSlot>>,
+    preemptions: AtomicU64,
+    downshifts: AtomicU64,
+    downshift_bytes: AtomicU64,
+    stop: AtomicBool,
+    sweeper: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl SimServer {
+    pub fn start(cfg: SimConfig) -> Arc<Self> {
+        let pool = Arc::new(CachePool::new(cfg.geo, cfg.pool_budget));
+        let hib = cfg.hibernate.clone().map(|hc| {
+            Arc::new(HibernateStore::new(hc).expect("sim spill dir"))
+        });
+        let fingerprint = crate::engine::policy_fingerprint(&cfg.policy);
+        let server = Arc::new(Self {
+            pool,
+            cfg,
+            fingerprint,
+            hib,
+            sessions: Mutex::new(BTreeMap::new()),
+            preemptions: AtomicU64::new(0),
+            downshifts: AtomicU64::new(0),
+            downshift_bytes: AtomicU64::new(0),
+            stop: AtomicBool::new(false),
+            sweeper: Mutex::new(None),
+        });
+        let tick = (server.cfg.idle_timeout / 4)
+            .clamp(Duration::from_millis(2), Duration::from_millis(200));
+        let s = Arc::clone(&server);
+        let handle = std::thread::spawn(move || {
+            while !s.stop.load(Ordering::SeqCst) {
+                s.sweep_idle();
+                std::thread::sleep(tick);
+            }
+        });
+        *server.sweeper.lock().unwrap() = Some(handle);
+        server
+    }
+
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.sweeper.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+
+    pub fn pool(&self) -> &CachePool {
+        &self.pool
+    }
+
+    pub fn hibernate_stats(&self) -> Option<crate::kvcache::HibernateStats> {
+        self.hib.as_ref().map(|h| h.stats())
+    }
+
+    /// Spill (or evict) sessions idle past the timeout — the sim's
+    /// housekeeping tick, also callable directly from tests.
+    pub fn sweep_idle(&self) {
+        let ttl = self.cfg.idle_timeout;
+        if ttl.is_zero() {
+            return;
+        }
+        let mut m = self.sessions.lock().unwrap();
+        let victims: Vec<(u64, u64)> = m
+            .iter()
+            .filter_map(|(&sid, slot)| match slot {
+                SimSlot::Live { seq_id, last_used, busy }
+                    if !busy && last_used.elapsed() >= ttl =>
+                {
+                    Some((sid, *seq_id))
+                }
+                _ => None,
+            })
+            .collect();
+        for (sid, seq_id) in victims {
+            self.spill_or_evict_locked(&mut m, sid, seq_id);
+        }
+    }
+
+    /// With a store: freeze + spill + free, leaving the slot Hibernated.
+    /// Without (or on spill failure): hard-evict. Caller holds the table
+    /// lock — the victim is not busy, so no turn can be touching its seq.
+    fn spill_or_evict_locked(
+        &self,
+        m: &mut BTreeMap<u64, SimSlot>,
+        sid: u64,
+        seq_id: u64,
+    ) {
+        if let Some(store) = &self.hib {
+            let frozen =
+                self.pool.with_seq(seq_id, |s| SeqBase::freeze(s));
+            if let Ok(frozen) = frozen {
+                if store.spill(sid, &frozen, &self.fingerprint).is_ok() {
+                    let _ = self.pool.unpin(seq_id);
+                    let _ = self.pool.free(seq_id);
+                    m.insert(sid, SimSlot::Hibernated);
+                    return;
+                }
+            } else {
+                store.note_spill_failure();
+            }
+        }
+        let _ = self.pool.unpin(seq_id);
+        let _ = self.pool.free(seq_id);
+        m.remove(&sid);
+    }
+
+    /// One rung of the pressure ladder. Returns false when there was
+    /// nothing left to reclaim (the caller then fails with `capacity`).
+    fn relieve_pressure(&self) -> bool {
+        let mut m = self.sessions.lock().unwrap();
+        // rung 1: downshift the packed regions of idle live sessions
+        let mut freed = 0usize;
+        for slot in m.values() {
+            if let SimSlot::Live { seq_id, busy: false, .. } = slot {
+                let got = self.pool.with_seq(*seq_id, |s| {
+                    s.layers
+                        .iter_mut()
+                        .map(|l| l.downshift_groups(1, 1))
+                        .sum::<usize>()
+                });
+                if let Ok(b) = got {
+                    if b > 0 {
+                        self.downshifts.fetch_add(1, Ordering::SeqCst);
+                        self.downshift_bytes
+                            .fetch_add(b as u64, Ordering::SeqCst);
+                        freed += b;
+                    }
+                }
+            }
+        }
+        if freed > 0 {
+            return true;
+        }
+        // rung 2/3: push the least-recently-used idle session out — to
+        // disk when hibernation is on, destroyed otherwise
+        let victim = m
+            .iter()
+            .filter_map(|(&sid, slot)| match slot {
+                SimSlot::Live { seq_id, last_used, busy: false } => {
+                    Some((*last_used, sid, *seq_id))
+                }
+                _ => None,
+            })
+            .min_by_key(|&(t, _, _)| t);
+        match victim {
+            Some((_, sid, seq_id)) => {
+                self.spill_or_evict_locked(&mut m, sid, seq_id);
+                self.preemptions.fetch_add(1, Ordering::SeqCst);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Allocate a fresh pinned root sequence, walking the pressure ladder
+    /// on budget refusal.
+    fn alloc_seq(&self) -> Result<u64, String> {
+        for _ in 0..8 {
+            match self.pool.allocate(&self.cfg.policy) {
+                Ok(id) => {
+                    self.pool.pin(id).expect("fresh seq exists");
+                    return Ok(id);
+                }
+                Err(_) => {
+                    if !self.relieve_pressure() {
+                        return Err("capacity".into());
+                    }
+                }
+            }
+        }
+        Err("capacity".into())
+    }
+
+    /// Append `count` synthetic tokens through the real quantized fold
+    /// path, budget-gated like a production prefill.
+    fn grow(
+        &self,
+        seq_id: u64,
+        count: usize,
+        rng: &mut SplitMix,
+    ) -> Result<(), String> {
+        if count == 0 {
+            return Ok(());
+        }
+        loop {
+            match self.pool.admit_growth(seq_id, count) {
+                Ok(()) => break,
+                Err(_) => {
+                    if !self.relieve_pressure() {
+                        return Err("capacity".into());
+                    }
+                }
+            }
+        }
+        let geo = self.cfg.geo;
+        let hd = geo.n_heads * geo.d_head;
+        self.pool
+            .with_seq(seq_id, |s| {
+                let room = geo.max_ctx.saturating_sub(s.pos);
+                for _ in 0..count.min(room) {
+                    for l in s.layers.iter_mut() {
+                        let k = rng.normal_f32_vec(hd);
+                        let v = rng.normal_f32_vec(hd);
+                        l.append_token(&k, &v);
+                    }
+                    s.pos += 1;
+                }
+            })
+            .map_err(|e| format!("pool: {e:?}"))
+    }
+
+    /// Rebuild a hibernated session from disk and re-admit it.
+    fn restore(&self, sid: u64) -> Result<u64, String> {
+        let store = self.hib.as_ref().ok_or("hibernate_corrupt")?;
+        let img = match store.restore(sid) {
+            Ok(img) => img,
+            Err(HibernateError::Reclaimed(_)) => {
+                self.sessions.lock().unwrap().remove(&sid);
+                return Err("spill_budget_exceeded".into());
+            }
+            Err(_) => {
+                self.sessions.lock().unwrap().remove(&sid);
+                return Err("hibernate_corrupt".into());
+            }
+        };
+        let mut cache = img.into_seq();
+        loop {
+            match self.pool.adopt(cache) {
+                Ok(id) => {
+                    self.pool.pin(id).expect("adopted seq exists");
+                    store.discard(sid);
+                    return Ok(id);
+                }
+                Err((c, _)) => {
+                    if !self.relieve_pressure() {
+                        // stays hibernated: a later turn may fit
+                        return Err("capacity".into());
+                    }
+                    cache = c;
+                }
+            }
+        }
+    }
+
+    fn fail(code: &str) -> RequestOutcome {
+        RequestOutcome {
+            error: Some(code.to_string()),
+            ..Default::default()
+        }
+    }
+}
+
+impl ReplayTarget for SimServer {
+    fn run(&self, req: &TraceRequest) -> RequestOutcome {
+        let t0 = Instant::now();
+        let mut rng = SplitMix::new(
+            (req.session.unwrap_or(0) << 20)
+                ^ ((req.turn as u64) << 12)
+                ^ (req.episode.prompt.len() as u64),
+        );
+        let n_prompt = req.episode.prompt.len();
+        let mut restored = false;
+
+        // acquire this request's sequence
+        let seq_id = match req.session {
+            None => match self.alloc_seq() {
+                Ok(id) => id,
+                Err(code) => return Self::fail(&code),
+            },
+            Some(sid) if req.turn == 0 => match self.alloc_seq() {
+                Ok(id) => {
+                    self.sessions.lock().unwrap().insert(
+                        sid,
+                        SimSlot::Live {
+                            seq_id: id,
+                            last_used: Instant::now(),
+                            busy: true,
+                        },
+                    );
+                    id
+                }
+                Err(code) => return Self::fail(&code),
+            },
+            Some(sid) => {
+                let prior = {
+                    let mut m = self.sessions.lock().unwrap();
+                    match m.get_mut(&sid) {
+                        Some(SimSlot::Live {
+                            seq_id, busy, last_used,
+                        }) => {
+                            *busy = true;
+                            *last_used = Instant::now();
+                            Some(*seq_id)
+                        }
+                        Some(SimSlot::Hibernated) => None,
+                        None => return Self::fail("unknown_session"),
+                    }
+                };
+                match prior {
+                    Some(id) => id,
+                    None => match self.restore(sid) {
+                        Ok(id) => {
+                            restored = true;
+                            self.sessions.lock().unwrap().insert(
+                                sid,
+                                SimSlot::Live {
+                                    seq_id: id,
+                                    last_used: Instant::now(),
+                                    busy: true,
+                                },
+                            );
+                            id
+                        }
+                        Err(code) => return Self::fail(&code),
+                    },
+                }
+            }
+        };
+
+        let finish = |seq_id: u64, evict: bool| {
+            match req.session {
+                None => {
+                    let _ = self.pool.unpin(seq_id);
+                    let _ = self.pool.free(seq_id);
+                }
+                Some(sid) => {
+                    let mut m = self.sessions.lock().unwrap();
+                    if evict {
+                        m.remove(&sid);
+                        let _ = self.pool.unpin(seq_id);
+                        let _ = self.pool.free(seq_id);
+                    } else if let Some(SimSlot::Live {
+                        busy, last_used, ..
+                    }) = m.get_mut(&sid)
+                    {
+                        *busy = false;
+                        *last_used = Instant::now();
+                    }
+                }
+            }
+        };
+
+        // prefill the turn's prompt through the real fold kernels
+        if let Err(code) = self.grow(seq_id, n_prompt, &mut rng) {
+            finish(seq_id, true);
+            return Self::fail(&code);
+        }
+        let step = self.cfg.token_time;
+        let pace = if req.slow_reader { step * 5 } else { step };
+        let mut tokens = 0usize;
+        let mut ttft_s = 0.0;
+        let mut cancelled = false;
+        for i in 0..req.n_gen {
+            if let Err(code) = self.grow(seq_id, 1, &mut rng) {
+                finish(seq_id, true);
+                return Self::fail(&code);
+            }
+            std::thread::sleep(pace);
+            tokens += 1;
+            if i == 0 {
+                ttft_s = t0.elapsed().as_secs_f64();
+            }
+            if let Some(limit) = req.cancel_after_s {
+                if t0.elapsed().as_secs_f64() >= limit {
+                    cancelled = true;
+                    break;
+                }
+            }
+        }
+        // a cancelled turn leaves the cache indeterminate → evict, like
+        // the real SessionManager
+        finish(seq_id, cancelled);
+        RequestOutcome {
+            ok: !cancelled,
+            error: None,
+            cancelled,
+            ttft_s,
+            total_s: t0.elapsed().as_secs_f64(),
+            tokens,
+            restored,
+        }
+    }
+
+    fn stats(&self) -> TargetStats {
+        let (spills, restores) = self
+            .hib
+            .as_ref()
+            .map(|h| {
+                let s = h.stats();
+                (s.spills, s.restores)
+            })
+            .unwrap_or((0, 0));
+        TargetStats {
+            preemptions: self.preemptions.load(Ordering::SeqCst),
+            downshifts: self.downshifts.load(Ordering::SeqCst),
+            downshift_bytes_freed: self.downshift_bytes.load(Ordering::SeqCst),
+            spills,
+            restores,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::replay::{replay, ReplayConfig};
+    use crate::workload::trace::{
+        generate_trace, Arrivals, LenDist, SessionProfile, TraceConfig,
+    };
+
+    fn geo() -> CacheGeometry {
+        CacheGeometry {
+            n_heads: 2,
+            max_ctx: 2048,
+            d_head: 32,
+            group: 32,
+            residual: 64,
+        }
+    }
+
+    fn tmp_dir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("asymkv-sim-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn sim(tag: &str, budget: usize, idle_ms: u64) -> Arc<SimServer> {
+        SimServer::start(SimConfig {
+            geo: geo(),
+            policy: QuantPolicy::kivi(4, 1),
+            pool_budget: budget,
+            token_time: Duration::from_micros(200),
+            idle_timeout: Duration::from_millis(idle_ms),
+            hibernate: Some(HibernateConfig {
+                dir: tmp_dir(tag),
+                budget_bytes: 64 << 20,
+            }),
+        })
+    }
+
+    #[test]
+    fn steady_trace_completes_cleanly() {
+        let server = sim("steady", 256 << 20, 60_000);
+        let trace = generate_trace(&TraceConfig {
+            n_requests: 8,
+            arrivals: Arrivals::Poisson { rate: 400.0 },
+            n_gen: LenDist::Fixed(4),
+            ..TraceConfig::default()
+        });
+        let report =
+            replay(server.as_ref(), &trace, &ReplayConfig::default());
+        server.shutdown();
+        assert_eq!(report.completed, 8);
+        assert_eq!(report.failed, 0);
+        assert_eq!(report.stuck, 0);
+        assert!(report.ttft_p50_s > 0.0);
+        // everything was freed on completion
+        assert_eq!(server.pool().stats().n_seqs, 0);
+    }
+
+    #[test]
+    fn think_time_past_idle_timeout_hibernates_then_restores() {
+        let server = sim("hib", 256 << 20, 20);
+        let trace = generate_trace(&TraceConfig {
+            n_requests: 3,
+            arrivals: Arrivals::Offline,
+            n_gen: LenDist::Fixed(2),
+            sessions: Some(SessionProfile {
+                fraction: 1.0,
+                turns: LenDist::Fixed(2),
+                // think >> idle_timeout: the sweeper must spill between
+                // turns, and turn 1 must restore
+                think_s: (0.15, 0.2),
+            }),
+            ..TraceConfig::default()
+        });
+        let report =
+            replay(server.as_ref(), &trace, &ReplayConfig::default());
+        let hs = server.hibernate_stats().unwrap();
+        server.shutdown();
+        assert_eq!(report.failed, 0, "errors: {:?}", report.errors);
+        assert!(hs.spills >= 3, "sessions spilled: {hs:?}");
+        assert!(hs.restores >= 3, "sessions restored: {hs:?}");
+        assert_eq!(report.restored, 3, "turn 1 of each session restored");
+    }
+
+    #[test]
+    fn tight_budget_walks_the_pressure_ladder() {
+        // budget fits ~2 float32 sessions: concurrent opens must
+        // downshift/spill/preempt instead of deadlocking
+        let server = SimServer::start(SimConfig {
+            geo: geo(),
+            policy: QuantPolicy::float32(4),
+            pool_budget: 3 << 20,
+            token_time: Duration::from_micros(100),
+            idle_timeout: Duration::from_millis(50),
+            hibernate: Some(HibernateConfig {
+                dir: tmp_dir("pressure"),
+                budget_bytes: 64 << 20,
+            }),
+        });
+        let trace = generate_trace(&TraceConfig {
+            n_requests: 10,
+            arrivals: Arrivals::Poisson { rate: 300.0 },
+            n_gen: LenDist::Fixed(3),
+            sessions: Some(SessionProfile {
+                fraction: 0.8,
+                turns: LenDist::Fixed(1),
+                think_s: (0.0, 0.0),
+            }),
+            ..TraceConfig::default()
+        });
+        let report =
+            replay(server.as_ref(), &trace, &ReplayConfig::default());
+        let stats = report.stats;
+        server.shutdown();
+        assert_eq!(report.stuck, 0);
+        // the ladder fired at least once under this budget
+        assert!(
+            stats.downshifts + stats.preemptions + stats.spills > 0,
+            "pressure ladder never fired: {stats:?}"
+        );
+    }
+}

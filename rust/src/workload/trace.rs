@@ -1,9 +1,62 @@
-//! Request traces for the serving benches: Poisson arrivals with
-//! configurable prompt/generation length distributions.
+//! Request traces for the serving benches and the replay harness:
+//! configurable arrival processes (offline / Poisson / bursty on-off),
+//! per-request sampled prompt and generation length distributions,
+//! multi-turn sessions with think-time gaps, and client-behavior flags
+//! (shared-prefix attach, mid-stream cancel, slow SSE reader).
+//!
+//! Stream compatibility: [`TraceConfig::recall_preset`] reproduces the
+//! original fixed-length generator BYTE-IDENTICALLY — every new knob
+//! draws from the PRNG only when enabled (a [`LenDist::Fixed`] draws
+//! nothing, `sessions: None` draws nothing, a zero fraction draws
+//! nothing), so existing benches keep their exact request sequences.
 
 use crate::util::rng::SplitMix;
 
 use super::tasks::{recall_episode, Episode};
+
+/// A sampled length: `Fixed` consumes NO randomness (preset
+/// compatibility), `Uniform` draws inclusively from `[lo, hi]`.
+#[derive(Debug, Clone, Copy)]
+pub enum LenDist {
+    Fixed(usize),
+    Uniform(usize, usize),
+}
+
+impl LenDist {
+    pub fn sample(&self, rng: &mut SplitMix) -> usize {
+        match *self {
+            LenDist::Fixed(n) => n,
+            LenDist::Uniform(lo, hi) => lo + rng.below(hi - lo + 1),
+        }
+    }
+}
+
+/// The arrival process for root requests.
+#[derive(Debug, Clone, Copy)]
+pub enum Arrivals {
+    /// Everything arrives at t=0 (throughput measurement).
+    Offline,
+    /// Poisson with mean `rate` requests/second.
+    Poisson { rate: f64 },
+    /// On-off modulated Poisson: `burst_rate` during the first `on_s`
+    /// seconds of every `on_s + off_s` period, `base_rate` otherwise —
+    /// the bursty shape that exercises admission, preemption, and
+    /// pressure downshift together.
+    Bursty { base_rate: f64, burst_rate: f64, on_s: f64, off_s: f64 },
+}
+
+/// Multi-turn behavior: a fraction of root requests open a session and
+/// come back for more turns after a think-time gap — sized against the
+/// server's idle timeout, this is what drives hibernate/restore traffic.
+#[derive(Debug, Clone, Copy)]
+pub struct SessionProfile {
+    /// Fraction of root requests that open a session.
+    pub fraction: f64,
+    /// Total turns per session (min 1).
+    pub turns: LenDist,
+    /// Think time between turns, uniform in `[lo, hi]` seconds.
+    pub think_s: (f64, f64),
+}
 
 #[derive(Debug, Clone)]
 pub struct TraceRequest {
@@ -11,39 +64,155 @@ pub struct TraceRequest {
     pub arrival_s: f64,
     pub episode: Episode,
     pub n_gen: usize,
+    /// Trace-local session id (stable across this session's turns);
+    /// `None` for one-shot requests.
+    pub session: Option<u64>,
+    /// Turn index within the session (0 = the opening turn).
+    pub turn: usize,
+    /// Attach to the harness's registered shared prefix.
+    pub use_prefix: bool,
+    /// Cancel this request mid-stream after this many seconds.
+    pub cancel_after_s: Option<f64>,
+    /// Simulate a slow SSE consumer (per-token client-side delay).
+    pub slow_reader: bool,
 }
 
 #[derive(Debug, Clone)]
 pub struct TraceConfig {
     pub seed: u64,
+    /// Number of ROOT requests. Session follow-up turns are generated on
+    /// top, so a trace with sessions enabled replays more than
+    /// `n_requests` requests.
     pub n_requests: usize,
-    /// mean arrival rate (requests/second); 0 = all arrive at t=0 (offline)
-    pub rate: f64,
-    pub n_pairs: usize,
-    pub n_gen: usize,
+    pub arrivals: Arrivals,
+    /// Recall-episode size (KEY:VALUE pairs) per request.
+    pub prompt_pairs: LenDist,
+    pub n_gen: LenDist,
+    pub sessions: Option<SessionProfile>,
+    /// Fraction of root requests attaching to the shared prefix.
+    pub prefix_frac: f64,
+    /// Fraction of root requests cancelled mid-stream ...
+    pub cancel_frac: f64,
+    /// ... after this many seconds in flight.
+    pub cancel_after_s: f64,
+    /// Fraction of root requests consumed by a slow reader.
+    pub slow_reader_frac: f64,
+}
+
+impl TraceConfig {
+    /// The original fixed-shape generator as a named preset: `rate == 0`
+    /// is offline, otherwise Poisson. Draws the exact PRNG stream of the
+    /// pre-distribution `TraceConfig`, so benches pinned to a seed keep
+    /// their request sequences.
+    pub fn recall_preset(
+        seed: u64,
+        n_requests: usize,
+        rate: f64,
+        n_pairs: usize,
+        n_gen: usize,
+    ) -> Self {
+        Self {
+            seed,
+            n_requests,
+            arrivals: if rate > 0.0 {
+                Arrivals::Poisson { rate }
+            } else {
+                Arrivals::Offline
+            },
+            prompt_pairs: LenDist::Fixed(n_pairs),
+            n_gen: LenDist::Fixed(n_gen),
+            sessions: None,
+            prefix_frac: 0.0,
+            cancel_frac: 0.0,
+            cancel_after_s: 0.0,
+            slow_reader_frac: 0.0,
+        }
+    }
 }
 
 impl Default for TraceConfig {
     fn default() -> Self {
-        Self { seed: 0xC0FFEE, n_requests: 32, rate: 0.0, n_pairs: 12, n_gen: 8 }
+        Self::recall_preset(0xC0FFEE, 32, 0.0, 12, 8)
     }
 }
 
 pub fn generate_trace(cfg: &TraceConfig) -> Vec<TraceRequest> {
     let mut rng = SplitMix::new(cfg.seed);
+    let mut out: Vec<TraceRequest> = Vec::with_capacity(cfg.n_requests);
     let mut t = 0.0f64;
-    (0..cfg.n_requests)
-        .map(|_| {
-            if cfg.rate > 0.0 {
-                t += rng.exp(cfg.rate);
+    let mut next_session: u64 = 1;
+    for _ in 0..cfg.n_requests {
+        match cfg.arrivals {
+            Arrivals::Offline => {}
+            Arrivals::Poisson { rate } => t += rng.exp(rate),
+            Arrivals::Bursty { base_rate, burst_rate, on_s, off_s } => {
+                let rate = if t % (on_s + off_s) < on_s {
+                    burst_rate
+                } else {
+                    base_rate
+                };
+                t += rng.exp(rate);
             }
-            TraceRequest {
-                arrival_s: t,
-                episode: recall_episode(&mut rng, cfg.n_pairs),
-                n_gen: cfg.n_gen,
+        }
+        let pairs = cfg.prompt_pairs.sample(&mut rng);
+        let episode = recall_episode(&mut rng, pairs);
+        let n_gen = cfg.n_gen.sample(&mut rng);
+        // every draw below is gated so disabled knobs consume nothing
+        let profile = match &cfg.sessions {
+            Some(p) if rng.f64() < p.fraction => Some(p),
+            _ => None,
+        };
+        let use_prefix = cfg.prefix_frac > 0.0 && rng.f64() < cfg.prefix_frac;
+        let cancel_after_s =
+            if cfg.cancel_frac > 0.0 && rng.f64() < cfg.cancel_frac {
+                Some(cfg.cancel_after_s)
+            } else {
+                None
+            };
+        let slow_reader =
+            cfg.slow_reader_frac > 0.0 && rng.f64() < cfg.slow_reader_frac;
+        let session = profile.map(|_| {
+            let id = next_session;
+            next_session += 1;
+            id
+        });
+        out.push(TraceRequest {
+            arrival_s: t,
+            episode,
+            n_gen,
+            session,
+            turn: 0,
+            use_prefix,
+            cancel_after_s,
+            slow_reader,
+        });
+        if let (Some(p), Some(sid)) = (profile, session) {
+            let n_turns = p.turns.sample(&mut rng).max(1);
+            let mut turn_t = t;
+            for turn in 1..n_turns {
+                let think =
+                    p.think_s.0 + rng.f64() * (p.think_s.1 - p.think_s.0);
+                turn_t += think;
+                let pairs = cfg.prompt_pairs.sample(&mut rng);
+                let episode = recall_episode(&mut rng, pairs);
+                let n_gen = cfg.n_gen.sample(&mut rng);
+                out.push(TraceRequest {
+                    arrival_s: turn_t,
+                    episode,
+                    n_gen,
+                    session: Some(sid),
+                    turn,
+                    use_prefix: false,
+                    cancel_after_s: None,
+                    slow_reader: false,
+                });
             }
-        })
-        .collect()
+        }
+    }
+    // a session's turns have non-decreasing arrivals, and the sort is
+    // stable, so per-session turn order survives the global merge
+    out.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+    out
 }
 
 #[cfg(test)]
@@ -52,18 +221,20 @@ mod tests {
 
     #[test]
     fn offline_trace_all_at_zero() {
-        let tr = generate_trace(&TraceConfig { rate: 0.0, ..Default::default() });
+        let tr = generate_trace(&TraceConfig::default());
         assert!(tr.iter().all(|r| r.arrival_s == 0.0));
+        assert!(tr.iter().all(|r| r.session.is_none()
+            && !r.use_prefix
+            && r.cancel_after_s.is_none()
+            && !r.slow_reader));
         assert_eq!(tr.len(), 32);
     }
 
     #[test]
     fn online_trace_monotone_arrivals() {
-        let tr = generate_trace(&TraceConfig {
-            rate: 10.0,
-            n_requests: 50,
-            ..Default::default()
-        });
+        let tr = generate_trace(&TraceConfig::recall_preset(
+            0xC0FFEE, 50, 10.0, 12, 8,
+        ));
         for w in tr.windows(2) {
             assert!(w[1].arrival_s >= w[0].arrival_s);
         }
@@ -76,5 +247,125 @@ mod tests {
         let a = generate_trace(&TraceConfig::default());
         let b = generate_trace(&TraceConfig::default());
         assert_eq!(a[5].episode.prompt, b[5].episode.prompt);
+    }
+
+    #[test]
+    fn preset_reproduces_legacy_stream() {
+        // the pre-distribution generator, inlined: exp gap (when online)
+        // then recall_episode, per request
+        let legacy = |seed: u64, n: usize, rate: f64| -> Vec<Episode> {
+            let mut rng = SplitMix::new(seed);
+            (0..n)
+                .map(|_| {
+                    if rate > 0.0 {
+                        let _ = rng.exp(rate);
+                    }
+                    recall_episode(&mut rng, 12)
+                })
+                .collect()
+        };
+        for rate in [0.0, 25.0] {
+            let now = generate_trace(&TraceConfig::recall_preset(
+                0xBEEF, 20, rate, 12, 8,
+            ));
+            let old = legacy(0xBEEF, 20, rate);
+            assert_eq!(now.len(), old.len());
+            for (a, b) in now.iter().zip(&old) {
+                assert_eq!(a.episode.prompt, b.prompt, "stream diverged");
+                assert_eq!(a.n_gen, 8);
+            }
+        }
+    }
+
+    #[test]
+    fn sampled_lengths_stay_in_bounds() {
+        let cfg = TraceConfig {
+            prompt_pairs: LenDist::Uniform(4, 16),
+            n_gen: LenDist::Uniform(2, 6),
+            ..TraceConfig::default()
+        };
+        let tr = generate_trace(&cfg);
+        for r in &tr {
+            assert!((2..=6).contains(&r.n_gen), "n_gen {}", r.n_gen);
+            // a recall episode with p pairs is ~9 bytes/pair plus framing
+            assert!(r.episode.prompt.len() >= 4 * 9);
+        }
+        // uniform sampling actually varies
+        assert!(tr.iter().any(|r| r.n_gen != tr[0].n_gen));
+    }
+
+    #[test]
+    fn session_turns_ordered_with_think_gaps() {
+        let cfg = TraceConfig {
+            n_requests: 24,
+            arrivals: Arrivals::Poisson { rate: 20.0 },
+            sessions: Some(SessionProfile {
+                fraction: 0.5,
+                turns: LenDist::Uniform(2, 4),
+                think_s: (0.5, 1.0),
+            }),
+            ..TraceConfig::default()
+        };
+        let tr = generate_trace(&cfg);
+        assert!(tr.len() > 24, "follow-up turns generated");
+        let mut last: std::collections::BTreeMap<u64, (usize, f64)> =
+            Default::default();
+        let mut multi = 0;
+        for r in &tr {
+            if let Some(sid) = r.session {
+                if let Some(&(prev_turn, prev_t)) = last.get(&sid) {
+                    assert_eq!(r.turn, prev_turn + 1, "turn order");
+                    let gap = r.arrival_s - prev_t;
+                    assert!(gap >= 0.5 - 1e-9, "think gap {gap}");
+                    multi += 1;
+                }
+                last.insert(sid, (r.turn, r.arrival_s));
+            }
+        }
+        assert!(multi > 0, "at least one multi-turn session");
+    }
+
+    #[test]
+    fn bursty_arrivals_alternate_density() {
+        let cfg = TraceConfig {
+            n_requests: 400,
+            arrivals: Arrivals::Bursty {
+                base_rate: 5.0,
+                burst_rate: 200.0,
+                on_s: 1.0,
+                off_s: 1.0,
+            },
+            ..TraceConfig::default()
+        };
+        let tr = generate_trace(&cfg);
+        let (mut on, mut off) = (0usize, 0usize);
+        for r in &tr {
+            if r.arrival_s % 2.0 < 1.0 {
+                on += 1;
+            } else {
+                off += 1;
+            }
+        }
+        assert!(
+            on > off * 4,
+            "burst windows should dominate: on={on} off={off}"
+        );
+    }
+
+    #[test]
+    fn behavior_flags_respect_fractions() {
+        let cfg = TraceConfig {
+            n_requests: 40,
+            cancel_frac: 1.0,
+            cancel_after_s: 0.25,
+            slow_reader_frac: 1.0,
+            prefix_frac: 1.0,
+            ..TraceConfig::default()
+        };
+        let tr = generate_trace(&cfg);
+        assert!(tr
+            .iter()
+            .all(|r| r.cancel_after_s == Some(0.25) && r.slow_reader
+                && r.use_prefix));
     }
 }

@@ -508,3 +508,68 @@ fn replica_crash_is_typed_and_evicts() {
     assert_eq!(live, 1);
     gw.request_stop();
 }
+
+/// Chaos under load (the trace harness's replica-kill scenario, pinned
+/// as a deterministic test): with many streams in flight across a
+/// 2-replica fleet, hard-killing one replica must (a) end every stream
+/// it was carrying with the typed `replica_unavailable` terminal event —
+/// no hangs, no silent closes — (b) leave the survivor's streams intact,
+/// and (c) route all subsequent traffic to the survivor.
+#[test]
+fn replica_kill_under_load_types_failures_and_survivor_serves() {
+    let (replicas, gw, addr) = boot_fleet(2, Duration::from_millis(4));
+
+    // 8 concurrent 40-token streams: ~160 ms of sequential work per
+    // replica, so the kill at 60 ms lands mid-flight with queued work
+    let streamers: Vec<_> = (0..8)
+        .map(|i| {
+            let a = addr.clone();
+            std::thread::spawn(move || {
+                http_sse(
+                    &a,
+                    "POST",
+                    "/v1/generate",
+                    Some(&gen_body(&format!("load {i}"), 40, true)),
+                )
+            })
+        })
+        .collect();
+    std::thread::sleep(Duration::from_millis(60));
+    replicas[0].kill();
+
+    let mut completed = 0usize;
+    let mut unavailable = 0usize;
+    for s in streamers {
+        // every stream terminates — a hang here fails the test timeout
+        let (_, events) = s.join().unwrap().unwrap();
+        match events.last() {
+            Some(e) if e.event == "done" => completed += 1,
+            Some(e) if e.event == "error" => {
+                assert_eq!(
+                    code_of(&e.data),
+                    Some("replica_unavailable"),
+                    "mid-kill stream must fail typed: {events:?}"
+                );
+                unavailable += 1;
+            }
+            other => panic!("stream ended without a terminal event: {other:?}"),
+        }
+    }
+    assert!(unavailable >= 1, "the kill hit no in-flight stream");
+    assert!(completed >= 1, "the survivor completed nothing under load");
+
+    // the dead replica is out of rotation: new work lands on the survivor
+    let before = replicas[1].served();
+    for _ in 0..3 {
+        let (status, body) = http_json(
+            &addr,
+            "POST",
+            "/v1/generate",
+            Some(&gen_body("after the kill", 2, false)),
+        )
+        .unwrap();
+        assert_eq!(status, 200, "{body}");
+    }
+    assert_eq!(replicas[1].served(), before + 3);
+    gw.request_stop();
+}

@@ -1,0 +1,319 @@
+//! Hibernate → restore → decode must be bit-identical to never having
+//! hibernated.
+//!
+//! The restored fold schedule depends only on the logical `(n_q, n_res)`
+//! counts, so a spilled-and-restored session's cache reads — full
+//! dequantization AND the fused decode-attention path — must equal the
+//! donor's exactly, and must KEEP equaling it as further turns append
+//! (the interleaved-turns half of the property). Random per-layer bit
+//! policies (the 1-bit flagship, mixed asymmetric configs, fp32 layers)
+//! and random residual-ring fills, via `util::prop`.
+//!
+//! The first properties are artifact-free (raw codec + store on
+//! synthetic caches). The final test drives the REAL `SessionManager`
+//! over a live engine — turn, idle sweep (spill), turn (restore) — and
+//! asserts the greedy continuation equals a never-hibernated session's;
+//! it self-skips when `artifacts/tiny` is not built.
+
+mod common;
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use asymkv::api::{GenerateSpec, SessionConfig, SessionManager};
+use asymkv::coordinator::{Coordinator, CoordinatorConfig};
+use asymkv::kvcache::hibernate::{decode, encode};
+use asymkv::kvcache::{
+    CacheGeometry, HibernateConfig, HibernateError, HibernateStore,
+    LayerCache, SeqBase, SeqCache,
+};
+use asymkv::quant::QuantPolicy;
+use asymkv::util::prop::{check, Gen};
+
+const GEO: CacheGeometry = CacheGeometry {
+    n_heads: 2,
+    max_ctx: 512,
+    d_head: 32,
+    group: 32,
+    residual: 64,
+};
+
+/// The policy space: flagship 1-bit, asymmetric mixes, and fp32 layers.
+const BITS: &[(u8, u8)] = &[
+    (0, 0),
+    (0, 1),
+    (1, 0),
+    (1, 1),
+    (1, 2),
+    (2, 1),
+    (2, 2),
+    (4, 4),
+];
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("asymkv-hibeq-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// A donor cache with `layer_bits` layers and `n` appended random tokens.
+fn donor(g: &mut Gen, layer_bits: &[(u8, u8)], n: usize) -> SeqCache {
+    let hd = GEO.n_heads * GEO.d_head;
+    let layers = layer_bits
+        .iter()
+        .map(|&(kb, vb)| LayerCache::new(GEO, kb, vb))
+        .collect();
+    let mut seq = SeqCache { layers, pos: 0, base: None, cow_noted: false };
+    for _ in 0..n {
+        for l in seq.layers.iter_mut() {
+            let k = g.vec_normal(hd, 1.0);
+            let v = g.vec_normal(hd, 1.0);
+            l.append_token(&k, &v);
+        }
+        seq.pos += 1;
+    }
+    seq
+}
+
+/// Every cache read the decode path performs must match exactly.
+fn caches_equal(
+    a: &SeqCache,
+    b: &SeqCache,
+    queries: &[Vec<f32>],
+    when: &str,
+) -> Result<(), String> {
+    if a.pos != b.pos {
+        return Err(format!("{when}: pos {} != {}", a.pos, b.pos));
+    }
+    for (li, (la, lb)) in a.layers.iter().zip(b.layers.iter()).enumerate() {
+        if la.n_tokens() != lb.n_tokens() {
+            return Err(format!(
+                "{when}: layer {li} n_tokens {} != {}",
+                la.n_tokens(),
+                lb.n_tokens()
+            ));
+        }
+        if la.dequant_k_full() != lb.dequant_k_full() {
+            return Err(format!("{when}: layer {li} K dequant differs"));
+        }
+        if la.dequant_v_full() != lb.dequant_v_full() {
+            return Err(format!("{when}: layer {li} V dequant differs"));
+        }
+        // the fused decode-attention path (scores + weighted output) —
+        // this is what "decode-bit-identical" means at the kernel level
+        for (h, q) in queries.iter().enumerate() {
+            if la.attend_head(h, q) != lb.attend_head(h, q) {
+                return Err(format!(
+                    "{when}: layer {li} head {h} attention differs"
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn restore_then_decode_is_bit_identical_across_policies() {
+    check("hibernate_restore_bit_identical", 48, |g| {
+        let n_layers = g.usize_in(1, 4);
+        let layer_bits: Vec<(u8, u8)> =
+            (0..n_layers).map(|_| *g.pick(BITS)).collect();
+        // random residual-ring fill: spans empty, partial, fold-boundary
+        // and multi-fold token counts (group 32, residual 64)
+        let n = g.usize_in(0, 120);
+        let mut live = donor(g, &layer_bits, n);
+
+        let frozen = SeqBase::freeze(&live);
+        let img = decode(&encode(&frozen, "fp")).map_err(|e| e.to_string())?;
+        let mut restored = img.into_seq();
+
+        let queries: Vec<Vec<f32>> = (0..GEO.n_heads)
+            .map(|_| g.vec_normal(GEO.d_head, 1.0))
+            .collect();
+        caches_equal(&live, &restored, &queries, "after restore")?;
+
+        // interleaved turns: the SAME continuation appended to both must
+        // keep them identical through folds and ring wraps
+        let hd = GEO.n_heads * GEO.d_head;
+        let extra = g.usize_in(1, 40);
+        for _ in 0..extra {
+            let toks: Vec<(Vec<f32>, Vec<f32>)> = (0..n_layers)
+                .map(|_| (g.vec_normal(hd, 1.0), g.vec_normal(hd, 1.0)))
+                .collect();
+            for seq in [&mut live, &mut restored] {
+                for (l, (k, v)) in seq.layers.iter_mut().zip(toks.iter()) {
+                    l.append_token(k, v);
+                }
+                seq.pos += 1;
+            }
+        }
+        caches_equal(&live, &restored, &queries, "after interleaved turns")
+    });
+}
+
+#[test]
+fn random_corruption_is_always_typed_never_a_panic() {
+    check("hibernate_corruption_typed", 40, |g| {
+        let layer_bits: Vec<(u8, u8)> =
+            (0..g.usize_in(1, 3)).map(|_| *g.pick(BITS)).collect();
+        let seq = donor(g, &layer_bits, g.usize_in(1, 80));
+        let good = encode(&SeqBase::freeze(&seq), "fp");
+        let mode = g.usize_in(0, 2);
+        let bad = match mode {
+            0 => {
+                // flip one random byte anywhere (checksum bytes included)
+                let mut b = good.clone();
+                let off = g.usize_in(0, b.len() - 1);
+                b[off] ^= 1 << g.usize_in(0, 7);
+                b
+            }
+            1 => {
+                // truncate at a random point
+                good[..g.usize_in(0, good.len() - 1)].to_vec()
+            }
+            _ => {
+                // append trailing garbage
+                let mut b = good.clone();
+                b.extend_from_slice(&[0xAA; 7]);
+                b
+            }
+        };
+        match decode(&bad) {
+            Err(HibernateError::Corrupt(_)) => Ok(()),
+            Ok(_) => Err(format!("mode {mode}: corrupt image decoded")),
+            Err(e) => Err(format!("mode {mode}: wrong error {e:?}")),
+        }
+    });
+}
+
+#[test]
+fn store_roundtrip_through_files_preserves_equivalence() {
+    let dir = tmp_dir("store");
+    let store = HibernateStore::new(HibernateConfig {
+        dir: dir.clone(),
+        budget_bytes: 256 << 20,
+    })
+    .unwrap();
+    check("hibernate_store_roundtrip", 12, |g| {
+        let n_layers = g.usize_in(1, 3);
+        let layer_bits: Vec<(u8, u8)> =
+            (0..n_layers).map(|_| *g.pick(BITS)).collect();
+        let live = donor(g, &layer_bits, g.usize_in(0, 100));
+        let sid = g.usize_in(1, 1 << 20) as u64;
+        store
+            .spill(sid, &SeqBase::freeze(&live), "fp")
+            .map_err(|e| e.to_string())?;
+        let img = store.restore(sid).map_err(|e| e.to_string())?;
+        if img.fingerprint != "fp" {
+            return Err("fingerprint lost through the file".into());
+        }
+        let restored = img.into_seq();
+        let queries: Vec<Vec<f32>> = (0..GEO.n_heads)
+            .map(|_| g.vec_normal(GEO.d_head, 1.0))
+            .collect();
+        let res = caches_equal(&live, &restored, &queries, "via store");
+        store.discard(sid);
+        res
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn budget_reclaim_surfaces_typed_on_restore() {
+    let dir = tmp_dir("reclaim");
+    let mut g = Gen { rng: asymkv::util::rng::SplitMix::new(0x5EC7) };
+    let live = donor(&mut g, &[(1, 1), (1, 1)], 96);
+    let frozen = SeqBase::freeze(&live);
+    let image_len = encode(&frozen, "fp").len();
+    // budget holds exactly two images: the third spill reclaims the LRU
+    let store = HibernateStore::new(HibernateConfig {
+        dir: dir.clone(),
+        budget_bytes: 2 * image_len,
+    })
+    .unwrap();
+    store.spill(1, &frozen, "fp").unwrap();
+    store.spill(2, &frozen, "fp").unwrap();
+    store.spill(3, &frozen, "fp").unwrap();
+    assert!(
+        matches!(store.restore(1), Err(HibernateError::Reclaimed(1))),
+        "LRU victim must fail restore with the typed Reclaimed error"
+    );
+    // survivors restore to full equivalence
+    for sid in [2u64, 3] {
+        let restored = store.restore(sid).unwrap().into_seq();
+        let queries: Vec<Vec<f32>> = (0..GEO.n_heads)
+            .map(|_| g.vec_normal(GEO.d_head, 1.0))
+            .collect();
+        caches_equal(&live, &restored, &queries, "survivor").unwrap();
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// End-to-end over a real engine: session → turn → idle sweep (spill) →
+/// turn (restore) must produce the same greedy continuation as a session
+/// that never hibernated. Skips without artifacts.
+#[test]
+fn hibernated_session_continues_greedy_identical() {
+    let Some(engine) = common::engine_for("tiny") else { return };
+    let n = engine.manifest().n_layers;
+    let coord = Coordinator::start(engine, CoordinatorConfig::default());
+    let dir = tmp_dir("session");
+    let mgr = SessionManager::new(
+        coord.clone(),
+        SessionConfig {
+            idle_timeout: Duration::from_millis(30),
+            max_sessions: 8,
+            hibernate: Some(HibernateConfig {
+                dir: dir.clone(),
+                budget_bytes: 256 << 20,
+            }),
+        },
+    );
+    let policy = QuantPolicy::kivi(n, 1); // the 1-bit flagship
+    let turn1 = GenerateSpec {
+        prompt: "## ABC:1234 QRS:5678 ## ".into(),
+        n_gen: 8,
+        ..Default::default()
+    };
+    let turn2 = GenerateSpec {
+        prompt: "ABC:".into(),
+        n_gen: 8,
+        ..Default::default()
+    };
+
+    // path A: turn, idle past the sweep threshold, spill, restore, turn
+    let (sa, _) = mgr.open(Some(policy.clone()), None).unwrap();
+    let a1 = mgr.append(sa, 1, &turn1).unwrap();
+    assert!(a1.result.error.is_none(), "{:?}", a1.result.error);
+    std::thread::sleep(Duration::from_millis(60));
+    mgr.sweep_idle();
+    let rep = mgr.hibernate_report().expect("hibernation is configured");
+    assert!(rep.spills >= 1, "idle sweep did not spill: {rep:?}");
+    assert_eq!(mgr.len(), 1, "hibernated session must stay open");
+    let a2 = mgr.append(sa, 2, &turn2).unwrap();
+    assert!(a2.result.error.is_none(), "{:?}", a2.result.error);
+    let rep = mgr.hibernate_report().unwrap();
+    assert!(rep.restores >= 1, "turn 2 did not restore: {rep:?}");
+
+    // path B: the same two turns back-to-back, never hibernated
+    let (sb, _) = mgr.open(Some(policy), None).unwrap();
+    let b1 = mgr.append(sb, 3, &turn1).unwrap();
+    let b2 = mgr.append(sb, 4, &turn2).unwrap();
+
+    assert_eq!(
+        a1.result.tokens, b1.result.tokens,
+        "turn 1 must not depend on hibernation at all"
+    );
+    assert_eq!(
+        a2.result.tokens, b2.result.tokens,
+        "greedy continuation after restore must be bit-identical \
+         to the never-hibernated session"
+    );
+    assert_eq!(a2.pos, b2.pos, "restored position drifted");
+
+    mgr.close(sa).unwrap();
+    mgr.close(sb).unwrap();
+    coord.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}

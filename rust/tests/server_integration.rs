@@ -1162,6 +1162,8 @@ fn housekeeping_tick_evicts_idle_sessions_without_traffic() {
             SessionConfig {
                 idle_timeout: std::time::Duration::from_millis(100),
                 max_sessions: 4,
+                // this test asserts the legacy hard eviction
+                hibernate: None,
             },
         )
         .unwrap(),
